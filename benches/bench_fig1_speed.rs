@@ -1,0 +1,128 @@
+//! Figure 1 (a: forward, b: forward+backward): single-layer speedup over
+//! FlashAttention for HyperAttention and the pre-scored variants, as a
+//! function of sequence length.
+//!
+//! Paper shape to reproduce: all Hyper-based methods overtake FlashAttention
+//! at long n (speedup grows with n); pre-scored variants track plain
+//! HyperAttention with a small overhead gap (the O(n·d) pre-scoring cost),
+//! with Lev+Hyper scaling best among the pre-scored ones.
+
+use prescored::attention::backward::{exact_attention_backward, sparse_attention_backward};
+use prescored::attention::{
+    flash_attention, hyper_attention, prescored_hyper_attention, AttentionInputs, Coupling,
+    HyperConfig, PreScoredConfig,
+};
+use prescored::linalg::Matrix;
+use prescored::prescore::{Method, PreScoreConfig};
+use prescored::util::bench::{black_box, f, Bencher, Table};
+use prescored::util::rng::Rng;
+
+fn qkv(n: usize, d: usize, seed: u64) -> (Matrix, Matrix, Matrix) {
+    let mut rng = Rng::new(seed);
+    (
+        Matrix::randn(n, d, 1.0, &mut rng),
+        Matrix::randn(n, d, 1.0, &mut rng),
+        Matrix::randn(n, d, 1.0, &mut rng),
+    )
+}
+
+fn prescored_cfg(method: Method, n: usize) -> PreScoredConfig {
+    PreScoredConfig {
+        prescore: PreScoreConfig { method, top_k: n / 4, max_iters: 3, ..Default::default() },
+        hyper: HyperConfig { block_size: 64, sample_size: 16, ..Default::default() },
+        fallback_delta: 0.0,
+        coupling: Coupling::Glm3Corrected,
+    }
+}
+
+fn main() {
+    let d = 64;
+    let sizes = [512usize, 1024, 2048, 4096];
+    let b = Bencher { min_samples: 3, max_samples: 6, target_time: 2.0, warmup: 1 };
+
+    let mut fwd = Table::new(
+        "Figure 1a — forward speedup over FlashAttention (×)",
+        &["n", "hyper", "lev+hyper", "kmeans+hyper", "kmedian+hyper"],
+    );
+    let mut bwd = Table::new(
+        "Figure 1b — forward+backward speedup over FlashAttention (×)",
+        &["n", "hyper", "lev+hyper", "kmeans+hyper", "kmedian+hyper"],
+    );
+
+    for &n in &sizes {
+        let (q, k, v) = qkv(n, d, n as u64);
+        let inp = AttentionInputs::new(&q, &k, &v);
+        let hyper_cfg = HyperConfig { block_size: 64, sample_size: 16, ..Default::default() };
+
+        let t_flash = b.time("flash", || black_box(flash_attention(&inp))).median();
+        let t_hyper =
+            b.time("hyper", || black_box(hyper_attention(&inp, &hyper_cfg, None))).median();
+        let t_lev = b
+            .time("lev", || {
+                black_box(prescored_hyper_attention(
+                    &inp,
+                    &prescored_cfg(Method::Leverage { exact: false }, n),
+                ))
+            })
+            .median();
+        let t_km = b
+            .time("kmeans", || {
+                black_box(prescored_hyper_attention(&inp, &prescored_cfg(Method::KMeans, n)))
+            })
+            .median();
+        let t_kmed = b
+            .time("kmedian", || {
+                black_box(prescored_hyper_attention(&inp, &prescored_cfg(Method::KMedian, n)))
+            })
+            .median();
+        fwd.row(vec![
+            n.to_string(),
+            f(t_flash / t_hyper, 2),
+            f(t_flash / t_lev, 2),
+            f(t_flash / t_km, 2),
+            f(t_flash / t_kmed, 2),
+        ]);
+
+        // Forward+backward: flash fwd + exact backward vs hyper fwd +
+        // sparse backward over the blockwise support (the "standard
+        // HyperAttention pipeline" for the backward pass).
+        let mut rng = Rng::new(n as u64 + 9);
+        let dout = Matrix::randn(n, d, 1.0, &mut rng);
+        let support: Vec<Vec<usize>> = {
+            // blockwise support: 64 keys per query (its own block)
+            (0..n).map(|i| ((i / 64) * 64..((i / 64) * 64 + 64).min(n)).collect()).collect()
+        };
+        let t_flash_fb = b
+            .time("flash-fb", || {
+                let o = flash_attention(&inp);
+                black_box(exact_attention_backward(&inp, &dout));
+                black_box(o)
+            })
+            .median();
+        let fb = |fwd_fn: &dyn Fn() -> Matrix| -> f64 {
+            b.time("x-fb", || {
+                let o = fwd_fn();
+                black_box(sparse_attention_backward(&inp, &dout, &support));
+                black_box(o)
+            })
+            .median()
+        };
+        let t_hyper_fb = fb(&|| hyper_attention(&inp, &hyper_cfg, None));
+        let t_lev_fb = fb(&|| {
+            prescored_hyper_attention(&inp, &prescored_cfg(Method::Leverage { exact: false }, n)).0
+        });
+        let t_km_fb = fb(&|| prescored_hyper_attention(&inp, &prescored_cfg(Method::KMeans, n)).0);
+        let t_kmed_fb =
+            fb(&|| prescored_hyper_attention(&inp, &prescored_cfg(Method::KMedian, n)).0);
+        bwd.row(vec![
+            n.to_string(),
+            f(t_flash_fb / t_hyper_fb, 2),
+            f(t_flash_fb / t_lev_fb, 2),
+            f(t_flash_fb / t_km_fb, 2),
+            f(t_flash_fb / t_kmed_fb, 2),
+        ]);
+    }
+    fwd.print();
+    bwd.print();
+    println!("\npaper shape: speedups grow with n; hyper >= lev+hyper >= kmeans/kmedian+hyper.");
+}

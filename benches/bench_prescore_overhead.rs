@@ -1,0 +1,50 @@
+//! §5.1 complexity ablation — pre-scoring overhead scaling.
+//!
+//! The paper argues the pre-scoring overhead is ≈ O(n·d) (clustering:
+//! O(n·d·k·I) with k ≪ n; leverage: O(n·d·log d)). This bench measures the
+//! standalone selection cost vs n and reports the empirical scaling
+//! exponent, plus the mini-batch variant (Appendix H future work).
+
+use prescored::linalg::Matrix;
+use prescored::prescore::{prescore, Method, PreScoreConfig};
+use prescored::util::bench::{black_box, f, Bencher, Table};
+use prescored::util::rng::Rng;
+
+fn main() {
+    let d = 64;
+    let sizes = [512usize, 1024, 2048, 4096, 8192];
+    let b = Bencher { min_samples: 3, max_samples: 6, target_time: 1.0, warmup: 1 };
+    let methods: Vec<(&str, Method)> = vec![
+        ("kmeans", Method::KMeans),
+        ("kmedian", Method::KMedian),
+        ("leverage", Method::Leverage { exact: false }),
+        ("minibatch", Method::MiniBatch { batch: 256 }),
+    ];
+
+    let mut t = Table::new(
+        "Pre-scoring overhead vs n (ms) — paper: ≈O(n·d)",
+        &["n", "kmeans", "kmedian", "leverage", "minibatch"],
+    );
+    let mut times: Vec<Vec<f64>> = vec![Vec::new(); methods.len()];
+    for &n in &sizes {
+        let mut rng = Rng::new(n as u64);
+        let k = Matrix::randn(n, d, 1.0, &mut rng);
+        let mut row = vec![n.to_string()];
+        for (mi, (_, m)) in methods.iter().enumerate() {
+            let cfg = PreScoreConfig { method: *m, top_k: n / 4, max_iters: 5, ..Default::default() };
+            let tm = b.time("ps", || black_box(prescore(&k, &cfg))).median();
+            times[mi].push(tm);
+            row.push(f(tm * 1e3, 2));
+        }
+        t.row(row);
+    }
+    t.print();
+
+    println!("\nempirical scaling exponent (log-slope of time vs n; 1.0 = linear):");
+    for (mi, (name, _)) in methods.iter().enumerate() {
+        let first = times[mi][0];
+        let last = *times[mi].last().unwrap();
+        let slope = (last / first).log2() / ((sizes[sizes.len() - 1] as f64 / sizes[0] as f64).log2());
+        println!("  {name:<10} {:.2}", slope);
+    }
+}

@@ -1,0 +1,126 @@
+//! §4 structural guarantees: Theorem 4.4 (leverage separation), Theorem 4.5
+//! (k-means recovery), Corollary 4.6 (singleton case), Claim 4.7 (ℓp), the
+//! Appendix-B counterexample, and the LevAttention universal-set property
+//! under polynomial attention.
+
+use prescored::attention::polynomial::{key_max_weights, polynomial_attention_matrix};
+use prescored::attention::AttentionInputs;
+use prescored::clustering::{kmeans_best_of, minkowski_kmeans, partitions_match};
+use prescored::data::planted::{appendix_b_counterexample, generate, PlantedConfig};
+use prescored::prescore::leverage::{leverage_scores_exact, universal_set};
+use prescored::util::bench::{f, Table};
+use prescored::util::rng::Rng;
+
+fn main() {
+    let trials = 10;
+
+    // Thm 4.4 + Thm 4.5 + Claim 4.7 across trials.
+    let mut t = Table::new(
+        "Theorems 4.4/4.5, Claim 4.7 — recovery rates over trials (planted model)",
+        &["d", "eps", "lev-gap (min)", "kmeans rec.", "l1 rec.", "l3 rec."],
+    );
+    for &(d, eps) in &[(4usize, 0.25f64), (6, 0.25), (8, 0.5)] {
+        let mut gap_min = f64::INFINITY;
+        let (mut km, mut l1, mut l3) = (0, 0, 0);
+        for trial in 0..trials {
+            let cfg = PlantedConfig { n: 400, d, epsilon: eps, seed: trial as u64, ..Default::default() };
+            let inst = generate(&cfg);
+            let h = leverage_scores_exact(&inst.matrix);
+            let min_sig =
+                inst.signal_rows.iter().map(|&i| h[i]).fold(f32::INFINITY, f32::min) as f64;
+            let max_noise = (0..cfg.n)
+                .filter(|&i| inst.labels[i] == 0)
+                .map(|i| h[i] as f64)
+                .fold(0.0, f64::max);
+            gap_min = gap_min.min(min_sig / max_noise.max(1e-12));
+            let mut rng = Rng::new(trial as u64 + 100);
+            if partitions_match(
+                &kmeans_best_of(&inst.matrix, d + 1, 20, 5, &mut rng).assignment,
+                &inst.labels,
+            ) {
+                km += 1;
+            }
+            if partitions_match(
+                &minkowski_kmeans(&inst.matrix, d + 1, 1.0, 20, &mut rng).assignment,
+                &inst.labels,
+            ) {
+                l1 += 1;
+            }
+            if partitions_match(
+                &minkowski_kmeans(&inst.matrix, d + 1, 3.0, 20, &mut rng).assignment,
+                &inst.labels,
+            ) {
+                l3 += 1;
+            }
+        }
+        t.row(vec![
+            d.to_string(),
+            eps.to_string(),
+            f(gap_min, 1),
+            format!("{km}/{trials}"),
+            format!("{l1}/{trials}"),
+            format!("{l3}/{trials}"),
+        ]);
+    }
+    t.print();
+
+    // Corollary 4.6: singleton case m = 1.
+    let mut singles_total = 0;
+    let mut sig_total = 0;
+    for trial in 0..trials {
+        let cfg = PlantedConfig {
+            n: 300,
+            d: 5,
+            epsilon: 1.0,
+            c_s: 0.002,
+            seed: 50 + trial as u64,
+            ..Default::default()
+        };
+        let inst = generate(&cfg);
+        let mut rng = Rng::new(trial as u64);
+        let c = kmeans_best_of(&inst.matrix, cfg.d + 1, 20, 5, &mut rng);
+        let sizes = c.sizes();
+        singles_total +=
+            inst.signal_rows.iter().filter(|&&i| sizes[c.assignment[i]] == 1).count();
+        sig_total += inst.signal_rows.len();
+    }
+    println!("\nCorollary 4.6 — singleton signal clusters: {singles_total}/{sig_total}");
+
+    // LevAttention universal set under polynomial attention: U = {h >= eps}
+    // must contain every key receiving a heavy polynomial-attention weight.
+    let cfg = PlantedConfig { n: 400, d: 6, epsilon: 0.25, ..Default::default() };
+    let inst = generate(&cfg);
+    let h = leverage_scores_exact(&inst.matrix);
+    let u = universal_set(&h, 0.1);
+    let attn = polynomial_attention_matrix(
+        &AttentionInputs::new(&inst.matrix, &inst.matrix, &inst.matrix),
+        4,
+    );
+    let heavy = key_max_weights(&attn);
+    let missed = (0..cfg.n)
+        .filter(|&j| heavy[j] >= 0.25 && !u.contains(&j))
+        .count();
+    println!(
+        "Universal set: |U| = {} of {}; ε-heavy keys missed by U: {missed} (must be 0)",
+        u.len(),
+        cfg.n
+    );
+
+    // Appendix B.
+    let mut raw_iso = 0;
+    let mut norm_iso = 0;
+    for trial in 0..trials {
+        let (a, sig) = appendix_b_counterexample(64, 8, 50.0, trial as u64);
+        let mut rng = Rng::new(trial as u64 + 7);
+        let raw = kmeans_best_of(&a, sig + 1, 20, 10, &mut rng);
+        raw_iso += (0..sig).map(|i| raw.assignment[i]).collect::<std::collections::HashSet<_>>().len();
+        let mut an = a.clone();
+        an.l2_normalize_rows(1e-12);
+        let nm = kmeans_best_of(&an, sig + 1, 20, 10, &mut rng);
+        norm_iso += (0..sig).map(|i| nm.assignment[i]).collect::<std::collections::HashSet<_>>().len();
+    }
+    println!(
+        "Appendix B — distinct signal clusters (of {} possible): unnormalized {raw_iso}, ℓ2-normalized {norm_iso}",
+        4 * trials
+    );
+}

@@ -1,0 +1,67 @@
+//! Quickstart: pre-scored attention on random data, compared against exact.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use prescored::attention::{
+    exact_attention, prescored_hyper_attention, rel_error, AttentionInputs, Coupling, HyperConfig,
+    PreScoredConfig,
+};
+use prescored::linalg::Matrix;
+use prescored::prescore::{Method, PreScoreConfig};
+use prescored::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(0);
+    let (n, d) = (1024, 64);
+
+    // Keys with a handful of globally-informative directions over a bulk
+    // cloud — the geometry pre-scoring exploits.
+    let mut k = Matrix::zeros(n, d);
+    let base = 1.0 / (d as f32).sqrt();
+    for i in 0..n {
+        if i < 64 {
+            let dir = i % 16;
+            for j in 0..d {
+                k[(i, j)] = rng.gauss32(if j == dir { 3.0 } else { 0.0 }, 0.02);
+            }
+        } else {
+            for j in 0..d {
+                k[(i, j)] = rng.gauss32(base, 0.05);
+            }
+        }
+    }
+    let mut q = Matrix::randn(n, d, 0.05, &mut rng);
+    for i in 0..n {
+        q[(i, i % 16)] += 4.0;
+    }
+    let v = Matrix::randn(n, d, 1.0, &mut rng);
+    let inp = AttentionInputs::new(&q, &k, &v);
+
+    let exact = exact_attention(&inp);
+    println!("{:<28} {:>12} {:>10}", "method", "rel-error", "keys");
+    for (name, top_k, method) in [
+        ("kmeans+hyper (k=64)", 64usize, Method::KMeans),
+        ("kmeans+hyper (k=128)", 128, Method::KMeans),
+        ("leverage+hyper (k=64)", 64, Method::Leverage { exact: false }),
+        ("kmedian+hyper (k=64)", 64, Method::KMedian),
+        ("unfiltered hyper", 0, Method::KMeans),
+    ] {
+        let cfg = PreScoredConfig {
+            prescore: PreScoreConfig { method, top_k, seed: 1, ..Default::default() },
+            hyper: HyperConfig { block_size: 64, sample_size: 32, seed: 1, ..Default::default() },
+            fallback_delta: 0.0,
+            coupling: Coupling::Glm3Corrected,
+        };
+        let (out, stats) = prescored_hyper_attention(&inp, &cfg);
+        println!(
+            "{:<28} {:>12.4} {:>7}/{}",
+            name,
+            rel_error(&out, &exact),
+            stats.selected,
+            stats.total_keys
+        );
+    }
+    println!("\n(lower rel-error at the same key budget = better prioritization)");
+}

@@ -1,0 +1,74 @@
+//! END-TO-END DRIVER: the full three-layer stack on a real small workload.
+//!
+//! Loads the build-time-trained tiny LM (JAX → HLO text → PJRT), starts the
+//! serving coordinator (router + dynamic batcher + executor thread), replays
+//! a Poisson workload trace of long-context scoring requests against both
+//! the exact and the pre-scored artifact, and reports
+//! latency / throughput / perplexity. Results are recorded in
+//! EXPERIMENTS.md §E2E.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example serve_longcontext
+//! ```
+
+use prescored::config::ServingConfig;
+use prescored::coordinator::Request;
+use prescored::data::{corpus, workload};
+use prescored::metrics::PplAccum;
+use prescored::server::ScoringServer;
+
+fn run_variant(variant: &str, n_req: usize) -> anyhow::Result<()> {
+    let cfg = ServingConfig {
+        variant: variant.to_string(),
+        artifacts_dir: "artifacts".into(),
+        ..Default::default()
+    };
+    let max_seq = cfg.max_seq;
+    let server = ScoringServer::start(cfg)?;
+    let trace = workload::generate_trace(&workload::WorkloadConfig {
+        rate: 100.0,
+        count: n_req,
+        max_len: max_seq,
+        long_frac: 0.3,
+        seed: 42,
+    });
+    let t0 = std::time::Instant::now();
+    let mut pending = Vec::new();
+    for req in &trace {
+        let target = req.arrival_s / 5.0; // 5× compressed replay
+        let now = t0.elapsed().as_secs_f64();
+        if target > now {
+            std::thread::sleep(std::time::Duration::from_secs_f64(target - now));
+        }
+        let tokens = corpus::generate(512, req.context_len, req.corpus_seed);
+        pending.push(server.submit(Request::scoring(req.id, tokens)));
+    }
+    let mut ppl = PplAccum::default();
+    for rx in pending {
+        ppl.add(&rx.recv()?.nll);
+    }
+    let stats = server.shutdown();
+    println!(
+        "{variant:<16} | {} req, {} batches | ppl {:8.3} | p50 {:7.1}ms  p99 {:7.1}ms | {:6.1} req/s | {:8.0} tok/s",
+        stats.completed,
+        stats.batches,
+        ppl.ppl(),
+        stats.latency_p50_ms,
+        stats.latency_p99_ms,
+        stats.throughput_rps,
+        stats.tokens_per_s,
+    );
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("== E2E: serving long-context scoring requests through PJRT artifacts ==");
+    let n_req = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(32);
+    run_variant("exact", n_req)?;
+    run_variant("prescored_k64", n_req)?;
+    println!("\n(prescored_k64 restricts every attention layer to 64 pre-scored keys)");
+    Ok(())
+}

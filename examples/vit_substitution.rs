@@ -1,0 +1,47 @@
+//! Zero-shot attention substitution in a trained ViT (§5.3 demo).
+//!
+//! Loads the build-time-trained ViT (artifacts/vit_weights.bin) and replaces
+//! its softmax attention with K-means-sampled restricted attention at a few
+//! budgets, reporting retained accuracy.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example vit_substitution
+//! ```
+
+use prescored::data::images::ImageConfig;
+use prescored::exp::{vit_accuracy, vit_eval_data};
+use prescored::model::{Vit, VitAttnMode, VitConfig, WeightStore};
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    let weights = Path::new("artifacts/vit_weights.bin");
+    if !weights.exists() {
+        eprintln!("vit_weights.bin missing — run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let ws = WeightStore::load(weights)?;
+    let vit = Vit::from_weights(&ws, VitConfig::default());
+    let img_cfg = ImageConfig::default();
+    let data = vit_eval_data(&img_cfg, 200, 9);
+
+    println!("{:<40} {:>10}", "configuration", "top-1 acc");
+    let base = vit_accuracy(&vit, &data, &VitAttnMode::Exact);
+    println!("{:<40} {:>9.2}%", "base model (softmax attention)", base * 100.0);
+    for (clusters, samples) in [(4usize, 8usize), (4, 16), (4, 32), (6, 32)] {
+        let acc = vit_accuracy(
+            &vit,
+            &data,
+            &VitAttnMode::KMeansSampled { num_clusters: clusters, num_samples: samples, seed: 1 },
+        );
+        println!(
+            "{:<40} {:>9.2}%",
+            format!("kmeans num_cluster={clusters}, num_sample={samples}"),
+            acc * 100.0
+        );
+    }
+    for k in [16usize, 32] {
+        let acc = vit_accuracy(&vit, &data, &VitAttnMode::LeverageTopK { k, exact: true });
+        println!("{:<40} {:>9.2}%", format!("leverage top-{k}"), acc * 100.0);
+    }
+    Ok(())
+}

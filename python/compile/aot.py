@@ -1,0 +1,95 @@
+"""AOT lowering: JAX model → HLO **text** artifacts + weights.bin.
+
+Interchange format is HLO text, NOT ``.serialize()``: jax ≥ 0.5 emits protos
+with 64-bit instruction ids which the image's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Artifacts written (all consumed by ``rust/src/runtime``):
+  artifacts/model_exact_b{B}_n{N}.hlo.txt
+  artifacts/model_prescored_b{B}_n{N}_k{K}.hlo.txt
+  artifacts/weights.bin      — ordered f32 tensors (see export.py)
+  artifacts/manifest.txt     — model config + per-artifact entry signature
+
+Usage: python -m compile.aot [--out ../artifacts] [--steps 300]
+(trains first if weights.npz is missing).
+"""
+
+import argparse
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .export import write_weights_bin
+from .model import ModelConfig, make_serve_jit, param_names
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (ids reassigned by the parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(cfg: ModelConfig, params, batch: int, out_dir: str, tag: str) -> str:
+    """Lower one serving graph and write its HLO text. Returns filename."""
+    fn, names = make_serve_jit(cfg)
+    example = [jax.ShapeDtypeStruct(np.asarray(params[n]).shape, jnp.float32) for n in names]
+    tokens_spec = jax.ShapeDtypeStruct((batch, cfg.max_seq), jnp.int32)
+    lowered = fn.lower(*example, tokens_spec)
+    text = to_hlo_text(lowered)
+    fname = f"model_{tag}_b{batch}_n{cfg.max_seq}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    print(f"wrote {fname} ({len(text)/1e6:.1f} MB)", flush=True)
+    return fname
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--out", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    )
+    ap.add_argument("--steps", type=int, default=300, help="training steps if weights missing")
+    ap.add_argument("--batches", type=int, nargs="+", default=[1, 4])
+    ap.add_argument("--top-k", type=int, default=64)
+    args = ap.parse_args()
+    out = os.path.abspath(args.out)
+    os.makedirs(out, exist_ok=True)
+
+    weights_npz = os.path.join(out, "weights.npz")
+    if not os.path.exists(weights_npz):
+        print("weights.npz missing — training first...", flush=True)
+        subprocess.check_call(
+            [sys.executable, "-m", "compile.train", "--steps", str(args.steps), "--out", out],
+            cwd=os.path.dirname(os.path.dirname(__file__)),
+        )
+    params = dict(np.load(weights_npz))
+
+    base = ModelConfig()
+    names = param_names(base)
+    write_weights_bin(os.path.join(out, "weights.bin"), params, names)
+
+    manifest = [f"# prescored-attention artifacts", f"config {base.to_dict()}"]
+    for b in args.batches:
+        exact_cfg = ModelConfig(attention="exact")
+        f1 = lower_variant(exact_cfg, params, b, out, "exact")
+        pres_cfg = ModelConfig(attention="prescored", top_k=args.top_k)
+        f2 = lower_variant(pres_cfg, params, b, out, f"prescored_k{args.top_k}")
+        manifest.append(f"artifact {f1} entry=(params...,tokens[i32 {b}x{base.max_seq}]) -> (nll,last_logits)")
+        manifest.append(f"artifact {f2} entry=(params...,tokens[i32 {b}x{base.max_seq}]) -> (nll,last_logits)")
+    manifest.append("params_order " + " ".join(names))
+    with open(os.path.join(out, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print("manifest written; AOT complete.", flush=True)
+
+
+if __name__ == "__main__":
+    main()

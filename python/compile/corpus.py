@@ -1,0 +1,76 @@
+"""Synthetic long-range corpus (build-time mirror of rust/src/data/corpus.rs).
+
+The LongBench/ChatGLM substitution (DESIGN.md): a token stream with
+*anchored long-range structure* so that a handful of keys per context are
+globally informative — the property pre-scoring exploits:
+
+* background tokens follow a Zipf-weighted order-1 Markov chain (local
+  syntax);
+* periodically an ANCHOR token introduces an "entity" token; much later a
+  RECALL token is followed by the most recent entity (long-range copy);
+* a small set of delimiter tokens recurs (attention-sink-like).
+
+A model must attend to the (distant) anchor positions to predict the token
+after RECALL, so heavy keys genuinely exist.
+
+The generator is deterministic given (seed) via a PCG-compatible xorshift so
+Python (training data) and Rust (serving workload) produce the same
+distributions. Token map: 0 = BOS, 1 = ANCHOR, 2 = RECALL, 3..10 = delimiters,
+11..vocab-1 = ordinary tokens / entities.
+"""
+
+import numpy as np
+
+BOS, ANCHOR, RECALL = 0, 1, 2
+DELIMS = list(range(3, 11))
+FIRST_WORD = 11
+
+
+def generate(vocab: int, length: int, seed: int) -> np.ndarray:
+    """One document of `length` tokens."""
+    rng = np.random.default_rng(seed)
+    n_words = vocab - FIRST_WORD
+    # Zipf weights over ordinary words.
+    ranks = np.arange(1, n_words + 1, dtype=np.float64)
+    zipf = 1.0 / ranks**1.1
+    zipf /= zipf.sum()
+    # Order-1 Markov: each word prefers a small successor set.
+    succ = rng.integers(0, n_words, size=(n_words, 4))
+
+    out = np.empty(length, dtype=np.int32)
+    out[0] = BOS
+    entity = FIRST_WORD + int(rng.integers(0, n_words))
+    prev_word = 0
+    i = 1
+    while i < length:
+        r = rng.random()
+        if r < 0.02:
+            out[i] = ANCHOR
+            i += 1
+            if i < length:
+                entity = FIRST_WORD + int(rng.integers(0, n_words))
+                out[i] = entity
+                i += 1
+        elif r < 0.05:
+            out[i] = RECALL
+            i += 1
+            if i < length:
+                out[i] = entity  # long-range copy of the latest entity
+                i += 1
+        elif r < 0.12:
+            out[i] = DELIMS[int(rng.integers(0, len(DELIMS)))]
+            i += 1
+        else:
+            if rng.random() < 0.7:
+                w = int(succ[prev_word, int(rng.integers(0, 4))])
+            else:
+                w = int(rng.choice(n_words, p=zipf))
+            out[i] = FIRST_WORD + w
+            prev_word = w
+            i += 1
+    return out
+
+
+def batch(vocab: int, batch_size: int, length: int, seed: int) -> np.ndarray:
+    """[batch_size, length] int32 batch of independent documents."""
+    return np.stack([generate(vocab, length, seed * 10_007 + b) for b in range(batch_size)])

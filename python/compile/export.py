@@ -1,0 +1,49 @@
+"""weights.bin writer — the binary format shared with rust/src/model/weights.rs.
+
+Layout (little-endian):
+  magic   u32 = 0x50524557  ("PREW")
+  version u32 = 1
+  count   u32 = number of tensors
+  per tensor, in the exact order given (sorted param names — the same order
+  the AOT entry point takes its positional arguments):
+    name_len u32, name bytes (utf-8)
+    ndim     u32, dims u32 × ndim
+    data     f32 × prod(dims)
+"""
+
+import struct
+
+import numpy as np
+
+MAGIC = 0x50524557
+VERSION = 1
+
+
+def write_weights_bin(path: str, params: dict, names: list) -> None:
+    with open(path, "wb") as f:
+        f.write(struct.pack("<III", MAGIC, VERSION, len(names)))
+        for name in names:
+            arr = np.ascontiguousarray(np.asarray(params[name], dtype=np.float32))
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<I", arr.ndim))
+            f.write(struct.pack(f"<{arr.ndim}I", *arr.shape))
+            f.write(arr.tobytes())
+
+
+def read_weights_bin(path: str) -> dict:
+    """Reader (used by tests to verify the round-trip)."""
+    out = {}
+    with open(path, "rb") as f:
+        magic, version, count = struct.unpack("<III", f.read(12))
+        assert magic == MAGIC and version == VERSION, "bad weights.bin header"
+        for _ in range(count):
+            (nlen,) = struct.unpack("<I", f.read(4))
+            name = f.read(nlen).decode("utf-8")
+            (ndim,) = struct.unpack("<I", f.read(4))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim))
+            n = int(np.prod(dims)) if ndim else 1
+            data = np.frombuffer(f.read(4 * n), dtype="<f4").reshape(dims)
+            out[name] = data
+    return out

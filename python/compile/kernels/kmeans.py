@@ -1,0 +1,79 @@
+"""Layer-1 Pallas kernel: the k-means distance hot loop of pre-scoring.
+
+Pre-scoring's clustering route costs O(n·d·k·I) (§3.1), dominated by the
+pairwise squared-distance computation between n keys and k centroids. This
+kernel tiles the keys into ``(block_n, d)`` VMEM blocks while the full
+centroid matrix (k = d+1 ≪ n rows) stays resident in VMEM, expressing the
+distances through a single MXU matmul per tile via the expansion
+``||x−c||² = ||x||² − 2·x·cᵀ + ||c||²``.
+
+Lloyd's update step (segment mean) is cheap and stays in jnp; only the
+distance computation is a kernel. ``interpret=True`` for CPU correctness —
+see prescored_attn.py for the rationale.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dist_kernel(x_ref, c_ref, o_ref):
+    """One key tile: o = ||x||² − 2 x cᵀ + ||c||²  ([bn, k])."""
+    x = x_ref[...]  # [bn, d]
+    c = c_ref[...]  # [k, d]
+    xx = (x * x).sum(axis=-1, keepdims=True)  # [bn, 1]
+    cc = (c * c).sum(axis=-1)[None, :]  # [1, k]
+    xc = jax.lax.dot_general(
+        x, c, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # [bn, k]
+    o_ref[...] = xx - 2.0 * xc + cc
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def pairwise_sq_dists_pallas(x, centroids, *, block_n=256, interpret=True):
+    """Squared euclidean distances. x: [n, d], centroids: [k, d] -> [n, k]."""
+    n, d = x.shape
+    k = centroids.shape[0]
+    bn = min(block_n, n)
+    pad = (bn - n % bn) % bn
+    xp = jnp.pad(x, ((0, pad), (0, 0)))
+    out = pl.pallas_call(
+        _dist_kernel,
+        grid=((n + pad) // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i: (i, 0)),
+            pl.BlockSpec((k, d), lambda i: (0, 0)),  # centroids resident
+        ],
+        out_specs=pl.BlockSpec((bn, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n + pad, k), jnp.float32),
+        interpret=interpret,
+    )(xp, centroids)
+    return out[:n]
+
+
+def kmeans_lloyd(x, k, iters, *, interpret=True):
+    """Fixed-iteration Lloyd's k-means, fully jittable (static shapes).
+
+    Deterministic initialization from evenly-spaced rows (the AOT graph must
+    be reproducible; k-means++ randomness lives in the Rust substrate where
+    sweeps need it). Returns (centroids [k, d], assignment [n], d2 [n]).
+    """
+    n = x.shape[0]
+    init_idx = jnp.linspace(0, n - 1, k).astype(jnp.int32)
+    centroids = x[init_idx]
+
+    def step(c, _):
+        d2 = pairwise_sq_dists_pallas(x, c, interpret=interpret)
+        assign = jnp.argmin(d2, axis=-1)
+        one_hot = (assign[:, None] == jnp.arange(k)[None, :]).astype(x.dtype)
+        counts = one_hot.sum(0)
+        sums = one_hot.T @ x
+        new = jnp.where(counts[:, None] > 0, sums / jnp.maximum(counts[:, None], 1.0), c)
+        return new, None
+
+    centroids, _ = jax.lax.scan(step, centroids, None, length=iters)
+    d2 = pairwise_sq_dists_pallas(x, centroids, interpret=interpret)
+    assign = jnp.argmin(d2, axis=-1)
+    return centroids, assign, d2[jnp.arange(n), assign]

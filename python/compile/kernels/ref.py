@@ -1,0 +1,67 @@
+"""Pure-jnp correctness oracles for the Layer-1 Pallas kernels.
+
+Every kernel in this package has a reference implementation here; pytest
+(``python/tests/test_kernel.py``) asserts allclose between kernel and oracle
+under hypothesis-swept shapes. These functions are also used directly by the
+L2 model for the *exact*-attention variants.
+"""
+
+import jax.numpy as jnp
+
+
+def exact_attention(q, k, v, *, causal=False, scale=None):
+    """Standard softmax attention. q: [n, d], k/v: [s, d] -> [n, d]."""
+    n, d = q.shape
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.asarray(d, q.dtype))
+    scores = (q @ k.T) * scale
+    if causal:
+        i = jnp.arange(n)[:, None]
+        j = jnp.arange(k.shape[0])[None, :]
+        scores = jnp.where(j > i, -jnp.inf, scores)
+    p = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return p @ v
+
+
+def selected_attention(q, k_sel, v_sel, kpos, *, causal=True, scale=None):
+    """Attention restricted to a gathered key subset (Algorithm 2 line 5).
+
+    q: [n, d]; k_sel/v_sel: [s, d] gathered keys/values; kpos: [s] original
+    positions of the gathered keys (for causal masking). Queries are at
+    positions 0..n-1.
+    """
+    n, d = q.shape
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.asarray(d, q.dtype))
+    scores = (q @ k_sel.T) * scale
+    if causal:
+        qpos = jnp.arange(n)[:, None]
+        scores = jnp.where(kpos[None, :] > qpos, -jnp.inf, scores)
+    m = scores.max(axis=-1, keepdims=True)
+    # Fully-masked rows: make them zeros rather than NaN.
+    m = jnp.where(jnp.isfinite(m), m, 0.0)
+    p = jnp.exp(scores - m)
+    denom = p.sum(axis=-1, keepdims=True)
+    return jnp.where(denom > 0, (p @ v_sel) / jnp.maximum(denom, 1e-30), 0.0)
+
+
+def kmeans_assign(x, centroids):
+    """Nearest-centroid assignment. x: [n, d], centroids: [k, d] -> ([n], [n,k])."""
+    d2 = (
+        (x * x).sum(-1)[:, None]
+        - 2.0 * x @ centroids.T
+        + (centroids * centroids).sum(-1)[None, :]
+    )
+    return jnp.argmin(d2, axis=-1), d2
+
+
+def kmeans_step(x, centroids):
+    """One Lloyd iteration. Returns (new_centroids, assignment)."""
+    assign, _ = kmeans_assign(x, centroids)
+    k = centroids.shape[0]
+    one_hot = (assign[:, None] == jnp.arange(k)[None, :]).astype(x.dtype)
+    counts = one_hot.sum(0)  # [k]
+    sums = one_hot.T @ x  # [k, d]
+    new = jnp.where(counts[:, None] > 0, sums / jnp.maximum(counts[:, None], 1.0), centroids)
+    return new, assign

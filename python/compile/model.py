@@ -1,0 +1,227 @@
+"""Layer 2: the JAX transformer LM (build-time only).
+
+A small pre-LN causal transformer whose attention layer is pluggable:
+
+* ``attention="exact"``     — full softmax attention (training + the exact
+  baseline artifact);
+* ``attention="prescored"`` — Algorithm 2 inside the graph: per-head k-means
+  pre-scoring of the keys (fixed-iteration Lloyd via the Pallas distance
+  kernel), top-k selection with a forced attention-sink anchor at position 0,
+  and the Pallas selected-attention kernel over the gathered keys.
+
+Everything here is lowered ONCE by ``aot.py`` to HLO text; Python never runs
+on the request path.
+"""
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.kmeans import kmeans_lloyd
+from .kernels.prescored_attn import selected_attention_heads
+
+Params = Dict[str, Any]
+
+
+# --------------------------------------------------------------------------
+# Configuration
+# --------------------------------------------------------------------------
+
+
+class ModelConfig:
+    """Static model hyper-parameters (baked into the lowered graph)."""
+
+    def __init__(
+        self,
+        vocab=512,
+        d_model=128,
+        n_layers=4,
+        n_heads=4,
+        max_seq=256,
+        mlp_mult=4,
+        attention="exact",
+        top_k=64,
+        kmeans_iters=4,
+        interpret=True,
+    ):
+        assert d_model % n_heads == 0
+        self.vocab = vocab
+        self.d_model = d_model
+        self.n_layers = n_layers
+        self.n_heads = n_heads
+        self.max_seq = max_seq
+        self.mlp_mult = mlp_mult
+        self.attention = attention
+        self.top_k = top_k
+        self.kmeans_iters = kmeans_iters
+        self.interpret = interpret
+
+    @property
+    def d_head(self):
+        return self.d_model // self.n_heads
+
+    def to_dict(self):
+        return dict(
+            vocab=self.vocab,
+            d_model=self.d_model,
+            n_layers=self.n_layers,
+            n_heads=self.n_heads,
+            max_seq=self.max_seq,
+            mlp_mult=self.mlp_mult,
+            attention=self.attention,
+            top_k=self.top_k,
+            kmeans_iters=self.kmeans_iters,
+        )
+
+
+# --------------------------------------------------------------------------
+# Parameters
+# --------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    """Initialize parameters (scaled-normal init)."""
+    d, v, h = cfg.d_model, cfg.vocab, cfg.mlp_mult * cfg.d_model
+    keys = jax.random.split(key, 4 + cfg.n_layers * 6)
+    params: Params = {
+        "embed": jax.random.normal(keys[0], (v, d), jnp.float32) * 0.02,
+        "pos": jax.random.normal(keys[1], (cfg.max_seq, d), jnp.float32) * 0.02,
+        "ln_f.g": jnp.ones((d,), jnp.float32),
+        "ln_f.b": jnp.zeros((d,), jnp.float32),
+        "head": jax.random.normal(keys[2], (d, v), jnp.float32) * 0.02,
+    }
+    for l in range(cfg.n_layers):
+        kk = keys[4 + l * 6 : 4 + (l + 1) * 6]
+        params[f"l{l}.ln1.g"] = jnp.ones((d,), jnp.float32)
+        params[f"l{l}.ln1.b"] = jnp.zeros((d,), jnp.float32)
+        params[f"l{l}.wq"] = jax.random.normal(kk[0], (d, d), jnp.float32) * (d**-0.5)
+        params[f"l{l}.wk"] = jax.random.normal(kk[1], (d, d), jnp.float32) * (d**-0.5)
+        params[f"l{l}.wv"] = jax.random.normal(kk[2], (d, d), jnp.float32) * (d**-0.5)
+        params[f"l{l}.wo"] = jax.random.normal(kk[3], (d, d), jnp.float32) * (d**-0.5)
+        params[f"l{l}.ln2.g"] = jnp.ones((d,), jnp.float32)
+        params[f"l{l}.ln2.b"] = jnp.zeros((d,), jnp.float32)
+        params[f"l{l}.w1"] = jax.random.normal(kk[4], (d, h), jnp.float32) * (d**-0.5)
+        params[f"l{l}.b1"] = jnp.zeros((h,), jnp.float32)
+        params[f"l{l}.w2"] = jax.random.normal(kk[5], (h, d), jnp.float32) * (h**-0.5)
+        params[f"l{l}.b2"] = jnp.zeros((d,), jnp.float32)
+    return params
+
+
+def param_names(cfg: ModelConfig):
+    """Deterministic parameter ordering shared with the Rust weights loader."""
+    key = jax.random.PRNGKey(0)
+    return sorted(init_params(cfg, key).keys())
+
+
+# --------------------------------------------------------------------------
+# Model
+# --------------------------------------------------------------------------
+
+
+def _layernorm(x, g, b, eps=1e-5):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def _prescored_head_attention(q, k, v, cfg: ModelConfig):
+    """Algorithm 2 for one layer: per-head k-means pre-scoring + Pallas
+    selected-key attention. q/k/v: [H, n, dh]."""
+    H, n, dh = q.shape
+    s = min(cfg.top_k, n)
+
+    def per_head(kh, vh):
+        # ℓ2-normalize keys before clustering (Assumption 4.1 / Appendix B).
+        norms = jnp.linalg.norm(kh, axis=-1, keepdims=True)
+        kn = kh / jnp.maximum(norms, 1e-6)
+        _, _, dist = kmeans_lloyd(
+            kn, k=dh + 1, iters=cfg.kmeans_iters, interpret=cfg.interpret
+        )
+        # Score = closeness to centroid; force-include position 0 as an
+        # attention-sink anchor so every causal query has a valid key.
+        # NOTE: selection via argsort, not lax.top_k — the image's XLA 0.5.1
+        # HLO parser predates TopK's "largest" attribute (see DESIGN.md).
+        score = -dist
+        score = score.at[0].set(jnp.inf)
+        order = jnp.argsort(-score)  # descending
+        sel = jnp.sort(order[:s])
+        return kh[sel], vh[sel], sel.astype(jnp.int32)
+
+    k_sel, v_sel, kpos = jax.vmap(per_head)(k, v)  # keys drive the selection
+    return selected_attention_heads(
+        q, k_sel, v_sel, kpos, causal=True, interpret=cfg.interpret
+    )
+
+
+def forward(params: Params, tokens, cfg: ModelConfig):
+    """Causal LM forward for one sequence. tokens: [n] int32 -> logits [n, V]."""
+    n = tokens.shape[0]
+    d, H, dh = cfg.d_model, cfg.n_heads, cfg.d_head
+    x = params["embed"][tokens] + params["pos"][:n]
+    for l in range(cfg.n_layers):
+        h = _layernorm(x, params[f"l{l}.ln1.g"], params[f"l{l}.ln1.b"])
+        q = (h @ params[f"l{l}.wq"]).reshape(n, H, dh).transpose(1, 0, 2)
+        k = (h @ params[f"l{l}.wk"]).reshape(n, H, dh).transpose(1, 0, 2)
+        v = (h @ params[f"l{l}.wv"]).reshape(n, H, dh).transpose(1, 0, 2)
+        if cfg.attention == "prescored":
+            att = _prescored_head_attention(q, k, v, cfg)
+        else:
+            att = jax.vmap(lambda qq, kk, vv: ref.exact_attention(qq, kk, vv, causal=True))(
+                q, k, v
+            )
+        att = att.transpose(1, 0, 2).reshape(n, d)
+        x = x + att @ params[f"l{l}.wo"]
+        h2 = _layernorm(x, params[f"l{l}.ln2.g"], params[f"l{l}.ln2.b"])
+        x = x + (jax.nn.gelu(h2 @ params[f"l{l}.w1"] + params[f"l{l}.b1"])) @ params[
+            f"l{l}.w2"
+        ] + params[f"l{l}.b2"]
+    x = _layernorm(x, params["ln_f.g"], params["ln_f.b"])
+    return x @ params["head"]
+
+
+def forward_batch(params: Params, tokens, cfg: ModelConfig):
+    """tokens: [B, n] -> logits [B, n, V]."""
+    return jax.vmap(lambda t: forward(params, t, cfg))(tokens)
+
+
+def nll_per_token(params: Params, tokens, cfg: ModelConfig):
+    """Per-token next-token negative log-likelihood. tokens: [B, n] ->
+    nll [B, n-1] (position t predicts token t+1)."""
+    logits = forward_batch(params, tokens, cfg)  # [B, n, V]
+    logp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    tgt = tokens[:, 1:]
+    return -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+
+
+def loss_fn(params: Params, tokens, cfg: ModelConfig):
+    """Mean next-token cross-entropy over a batch."""
+    return nll_per_token(params, tokens, cfg).mean()
+
+
+def serve_fn(params_list, tokens, cfg: ModelConfig, names):
+    """Serving entry point (lowered to HLO): positional params + tokens.
+
+    Returns (nll [B, n-1], last_logits [B, V]) — everything the Rust scoring
+    server needs for perplexity reporting and greedy continuation.
+    """
+    params = dict(zip(names, params_list))
+    logits = forward_batch(params, tokens, cfg)
+    logp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    tgt = tokens[:, 1:]
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return nll, logits[:, -1, :]
+
+
+def make_serve_jit(cfg: ModelConfig):
+    """A jittable positional-arg closure for AOT lowering."""
+    names = param_names(cfg)
+
+    @jax.jit
+    def fn(*args):
+        *params_list, tokens = args
+        return serve_fn(params_list, tokens, cfg, names)
+
+    return fn, names

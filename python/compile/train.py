@@ -1,0 +1,91 @@
+"""Build-time training of the tiny LM on the synthetic corpus.
+
+Trains with exact attention (full-layer replacement happens only at serving
+time, matching the paper's zero-shot substitution protocol), with a
+hand-rolled Adam (optax is not in the image). Saves weights to
+``artifacts/weights.npz`` plus a loss log for EXPERIMENTS.md.
+
+Usage: python -m compile.train [--steps 300] [--out ../artifacts]
+"""
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import corpus
+from .model import ModelConfig, init_params, loss_fn
+
+
+def adam_init(params):
+    return {
+        "m": jax.tree.map(jnp.zeros_like, params),
+        "v": jax.tree.map(jnp.zeros_like, params),
+        "t": jnp.zeros((), jnp.int32),
+    }
+
+
+def adam_update(params, grads, state, lr=3e-4, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mhat_scale = 1.0 / (1 - b1 ** t.astype(jnp.float32))
+    vhat_scale = 1.0 / (1 - b2 ** t.astype(jnp.float32))
+    new_params = jax.tree.map(
+        lambda p, mm, vv: p - lr * (mm * mhat_scale) / (jnp.sqrt(vv * vhat_scale) + eps),
+        params,
+        m,
+        v,
+    )
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+def train(cfg: ModelConfig, steps: int, batch_size: int, seed: int, log_every=25):
+    params = init_params(cfg, jax.random.PRNGKey(seed))
+    opt = adam_init(params)
+
+    @jax.jit
+    def step_fn(params, opt, tokens):
+        loss, grads = jax.value_and_grad(lambda p: loss_fn(p, tokens, cfg))(params)
+        params, opt = adam_update(params, grads, opt, lr=1e-3)
+        return params, opt, loss
+
+    log = []
+    t0 = time.time()
+    for step in range(steps):
+        tokens = jnp.asarray(corpus.batch(cfg.vocab, batch_size, cfg.max_seq, seed=step))
+        params, opt, loss = step_fn(params, opt, tokens)
+        if step % log_every == 0 or step == steps - 1:
+            loss_v = float(loss)
+            log.append({"step": step, "loss": loss_v, "elapsed_s": time.time() - t0})
+            print(f"step {step:4d}  loss {loss_v:.4f}  ({time.time()-t0:.1f}s)", flush=True)
+    return params, log
+
+
+def save_weights_npz(path, params):
+    np.savez(path, **{k: np.asarray(v) for k, v in params.items()})
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    args = ap.parse_args()
+
+    cfg = ModelConfig()  # training always uses exact attention
+    os.makedirs(args.out, exist_ok=True)
+    params, log = train(cfg, args.steps, args.batch, args.seed)
+    save_weights_npz(os.path.join(args.out, "weights.npz"), params)
+    with open(os.path.join(args.out, "train_log.json"), "w") as f:
+        json.dump({"config": cfg.to_dict(), "steps": args.steps, "log": log}, f, indent=2)
+    print(f"saved weights + log to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

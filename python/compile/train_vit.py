@@ -1,0 +1,69 @@
+"""Build-time ViT training on the synthetic image dataset.
+
+Saves ``artifacts/vit_weights.bin`` (+ npz + log). The Rust substrate then
+runs the §5.3 zero-shot substitution sweeps on these weights.
+
+Usage: python -m compile.train_vit [--steps 400] [--out ../artifacts]
+"""
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import vit_data
+from .export import write_weights_bin
+from .train import adam_init, adam_update
+from .vit_model import ViTConfig, accuracy, init_params, loss_fn, param_names
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=400)
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--train-size", type=int, default=2000)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    args = ap.parse_args()
+
+    cfg = ViTConfig()
+    os.makedirs(args.out, exist_ok=True)
+    xs, ys = vit_data.dataset(args.train_size, num_classes=cfg.num_classes, seed=args.seed)
+    xs_val, ys_val = vit_data.dataset(500, num_classes=cfg.num_classes, seed=args.seed + 777)
+    xs, ys = jnp.asarray(xs), jnp.asarray(ys)
+    xs_val, ys_val = jnp.asarray(xs_val), jnp.asarray(ys_val)
+
+    params = init_params(cfg, jax.random.PRNGKey(args.seed))
+    opt = adam_init(params)
+
+    @jax.jit
+    def step_fn(params, opt, xb, yb):
+        loss, grads = jax.value_and_grad(lambda p: loss_fn(p, xb, yb, cfg))(params)
+        params, opt = adam_update(params, grads, opt, lr=1e-3)
+        return params, opt, loss
+
+    rng = np.random.default_rng(args.seed)
+    log = []
+    t0 = time.time()
+    for step in range(args.steps):
+        idx = rng.choice(len(ys), args.batch, replace=False)
+        params, opt, loss = step_fn(params, opt, xs[idx], ys[idx])
+        if step % 50 == 0 or step == args.steps - 1:
+            acc = float(accuracy(params, xs_val, ys_val, cfg))
+            log.append({"step": step, "loss": float(loss), "val_acc": acc, "s": time.time() - t0})
+            print(f"step {step:4d} loss {float(loss):.4f} val_acc {acc:.4f}", flush=True)
+
+    names = param_names(cfg)
+    np.savez(os.path.join(args.out, "vit_weights.npz"), **{k: np.asarray(v) for k, v in params.items()})
+    write_weights_bin(os.path.join(args.out, "vit_weights.bin"), params, names)
+    with open(os.path.join(args.out, "vit_train_log.json"), "w") as f:
+        json.dump({"config": cfg.to_dict(), "log": log}, f, indent=2)
+    print("ViT weights exported.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""Synthetic structured-image dataset — Python mirror of rust/src/data/images.rs.
+
+The class structure (anchor cells + pattern kind) is a closed-form function
+of the label shared with the Rust generator, so a ViT trained here transfers
+to Rust-generated evaluation images; only the background noise is sampled
+per-image.
+"""
+
+import numpy as np
+
+
+def class_anchors(label: int, g: int):
+    a1 = ((label * 7 + 3) % g, (label * 3 + 1) % g)
+    a2 = ((label * 5 + 2) % g, (label * 11 + 5) % g)
+    if a2 == a1:
+        a2 = ((a1[0] + 1) % g, a1[1])
+    return a1, a2
+
+
+def _pattern(kind: int, p: int):
+    di = np.arange(p)[:, None]
+    dj = np.arange(p)[None, :]
+    if kind == 0:  # diagonal bar
+        return (np.abs(di - dj) <= 1).astype(np.float32)
+    if kind == 1:  # centered blob
+        cx = p / 2 - 0.5
+        r2 = (di - cx) ** 2 + (dj - cx) ** 2
+        return np.exp(-(r2 / p)).astype(np.float32)
+    return (((di // 2 + dj // 2) % 2) == 0).astype(np.float32)  # checker
+
+
+def sample_image(label: int, rng, size=64, patch=8):
+    """One size×size image of class `label` in [0,1]."""
+    fx = 0.1 + 0.2 * rng.random()
+    fy = 0.1 + 0.2 * rng.random()
+    ii = np.arange(size)[:, None]
+    jj = np.arange(size)[None, :]
+    px = 0.35 + 0.08 * np.sin(ii * fx) * np.cos(jj * fy) + rng.normal(0, 0.05, (size, size))
+    g = size // patch
+    a1, a2 = class_anchors(label, g)
+    kind = label % 3
+    for gi, gj in (a1, a2):
+        pat = _pattern(kind, patch)
+        r0, c0 = gi * patch, gj * patch
+        blk = px[r0 : r0 + patch, c0 : c0 + patch]
+        px[r0 : r0 + patch, c0 : c0 + patch] = (
+            blk * (1 - 0.9) + 0.9 * pat + rng.normal(0, 0.01, (patch, patch))
+        )
+    # distractor: next class's pattern, lower contrast, random cell
+    dk = (label + 1) % 3
+    gi, gj = rng.integers(0, g), rng.integers(0, g)
+    pat = _pattern(dk, patch)
+    r0, c0 = gi * patch, gj * patch
+    blk = px[r0 : r0 + patch, c0 : c0 + patch]
+    px[r0 : r0 + patch, c0 : c0 + patch] = (
+        blk * (1 - 0.4) + 0.4 * pat + rng.normal(0, 0.01, (patch, patch))
+    )
+    return np.clip(px, 0.0, 1.0).astype(np.float32)
+
+
+def to_patches(px: np.ndarray, patch=8):
+    """[size,size] -> [g*g, patch*patch]."""
+    size = px.shape[0]
+    g = size // patch
+    out = np.empty((g * g, patch * patch), np.float32)
+    for gi in range(g):
+        for gj in range(g):
+            out[gi * g + gj] = px[
+                gi * patch : (gi + 1) * patch, gj * patch : (gj + 1) * patch
+            ].reshape(-1)
+    return out
+
+
+def dataset(n: int, num_classes=10, size=64, patch=8, seed=0):
+    """Returns (patches [n, g*g, p*p], labels [n])."""
+    rng = np.random.default_rng(seed)
+    xs, ys = [], []
+    for i in range(n):
+        label = i % num_classes
+        xs.append(to_patches(sample_image(label, rng, size, patch), patch))
+        ys.append(label)
+    return np.stack(xs), np.asarray(ys, np.int32)

@@ -1,0 +1,114 @@
+"""Tiny ViT (build-time Python) for the zero-shot substitution experiments.
+
+Patch embedding + class token + pre-LN encoder blocks with full softmax
+attention + linear head. Trained here with exact attention; the *substituted*
+attention variants (k-means / leverage restricted) are evaluated in the Rust
+substrate (rust/src/model/vit.rs) on the exported weights, matching the
+paper's "replace self-attention in a pretrained ViT" protocol (§5.3).
+
+Parameter naming mirrors the LM so weights.bin export is shared.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+
+
+class ViTConfig:
+    def __init__(self, patch_dim=64, num_patches=64, d_model=64, n_layers=3, n_heads=4, num_classes=10):
+        assert d_model % n_heads == 0
+        self.patch_dim = patch_dim
+        self.num_patches = num_patches
+        self.d_model = d_model
+        self.n_layers = n_layers
+        self.n_heads = n_heads
+        self.num_classes = num_classes
+
+    @property
+    def d_head(self):
+        return self.d_model // self.n_heads
+
+    @property
+    def seq(self):
+        return self.num_patches + 1  # + class token
+
+    def to_dict(self):
+        return dict(
+            patch_dim=self.patch_dim,
+            num_patches=self.num_patches,
+            d_model=self.d_model,
+            n_layers=self.n_layers,
+            n_heads=self.n_heads,
+            num_classes=self.num_classes,
+        )
+
+
+def init_params(cfg: ViTConfig, key):
+    d = cfg.d_model
+    keys = jax.random.split(key, 4 + cfg.n_layers * 6)
+    p = {
+        "patch_w": jax.random.normal(keys[0], (cfg.patch_dim, d), jnp.float32) * (cfg.patch_dim**-0.5),
+        "patch_b": jnp.zeros((d,), jnp.float32),
+        "cls": jax.random.normal(keys[1], (d,), jnp.float32) * 0.02,
+        "pos": jax.random.normal(keys[2], (cfg.seq, d), jnp.float32) * 0.02,
+        "ln_f.g": jnp.ones((d,), jnp.float32),
+        "ln_f.b": jnp.zeros((d,), jnp.float32),
+        "head": jax.random.normal(keys[3], (d, cfg.num_classes), jnp.float32) * 0.02,
+    }
+    h = 4 * d
+    for l in range(cfg.n_layers):
+        kk = keys[4 + l * 6 : 4 + (l + 1) * 6]
+        p[f"l{l}.ln1.g"] = jnp.ones((d,), jnp.float32)
+        p[f"l{l}.ln1.b"] = jnp.zeros((d,), jnp.float32)
+        p[f"l{l}.wq"] = jax.random.normal(kk[0], (d, d), jnp.float32) * (d**-0.5)
+        p[f"l{l}.wk"] = jax.random.normal(kk[1], (d, d), jnp.float32) * (d**-0.5)
+        p[f"l{l}.wv"] = jax.random.normal(kk[2], (d, d), jnp.float32) * (d**-0.5)
+        p[f"l{l}.wo"] = jax.random.normal(kk[3], (d, d), jnp.float32) * (d**-0.5)
+        p[f"l{l}.ln2.g"] = jnp.ones((d,), jnp.float32)
+        p[f"l{l}.ln2.b"] = jnp.zeros((d,), jnp.float32)
+        p[f"l{l}.w1"] = jax.random.normal(kk[4], (d, h), jnp.float32) * (d**-0.5)
+        p[f"l{l}.b1"] = jnp.zeros((h,), jnp.float32)
+        p[f"l{l}.w2"] = jax.random.normal(kk[5], (h, d), jnp.float32) * (h**-0.5)
+        p[f"l{l}.b2"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def param_names(cfg: ViTConfig):
+    return sorted(init_params(cfg, jax.random.PRNGKey(0)).keys())
+
+
+def _ln(x, g, b, eps=1e-5):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def forward(params, patches, cfg: ViTConfig):
+    """patches: [num_patches, patch_dim] -> logits [num_classes]."""
+    d, H, dh = cfg.d_model, cfg.n_heads, cfg.d_head
+    x = patches @ params["patch_w"] + params["patch_b"]
+    x = jnp.concatenate([params["cls"][None, :], x], axis=0) + params["pos"]
+    n = x.shape[0]
+    for l in range(cfg.n_layers):
+        h = _ln(x, params[f"l{l}.ln1.g"], params[f"l{l}.ln1.b"])
+        q = (h @ params[f"l{l}.wq"]).reshape(n, H, dh).transpose(1, 0, 2)
+        k = (h @ params[f"l{l}.wk"]).reshape(n, H, dh).transpose(1, 0, 2)
+        v = (h @ params[f"l{l}.wv"]).reshape(n, H, dh).transpose(1, 0, 2)
+        att = jax.vmap(lambda qq, kk, vv: ref.exact_attention(qq, kk, vv, causal=False))(q, k, v)
+        x = x + att.transpose(1, 0, 2).reshape(n, d) @ params[f"l{l}.wo"]
+        h2 = _ln(x, params[f"l{l}.ln2.g"], params[f"l{l}.ln2.b"])
+        x = x + jax.nn.gelu(h2 @ params[f"l{l}.w1"] + params[f"l{l}.b1"]) @ params[f"l{l}.w2"] + params[f"l{l}.b2"]
+    x = _ln(x, params["ln_f.g"], params["ln_f.b"])
+    return x[0] @ params["head"]  # class token readout
+
+
+def loss_fn(params, patches, labels, cfg: ViTConfig):
+    logits = jax.vmap(lambda p: forward(params, p, cfg))(patches)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.take_along_axis(logp, labels[:, None].astype(jnp.int32), axis=-1).mean()
+
+
+def accuracy(params, patches, labels, cfg: ViTConfig):
+    logits = jax.vmap(lambda p: forward(params, p, cfg))(patches)
+    return (logits.argmax(-1) == labels).mean()

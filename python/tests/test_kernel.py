@@ -1,0 +1,123 @@
+"""Pallas kernel vs pure-jnp oracle — the CORE Layer-1 correctness signal.
+
+hypothesis sweeps shapes/blocks; fixed cases cover the masking edge cases
+(fully-masked rows, padding tiles, singleton keys).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.kmeans import kmeans_lloyd, pairwise_sq_dists_pallas
+from compile.kernels.prescored_attn import (
+    selected_attention_heads,
+    selected_attention_pallas,
+)
+
+RNG = np.random.default_rng(0)
+
+
+def _mk(n, s, d, seed=0):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(s, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(s, d)), jnp.float32)
+    kpos = jnp.sort(jnp.asarray(rng.choice(max(n, s), size=s, replace=False), jnp.int32))
+    return q, k, v, kpos
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 96),
+    s=st.integers(1, 64),
+    d=st.sampled_from([4, 8, 16, 32]),
+    bq=st.sampled_from([4, 16, 128]),
+    bk=st.sampled_from([2, 8, 128]),
+    causal=st.booleans(),
+    seed=st.integers(0, 10_000),
+)
+def test_selected_attention_matches_ref_hypothesis(n, s, d, bq, bk, causal, seed):
+    q, k, v, kpos = _mk(n, s, d, seed)
+    out = selected_attention_pallas(q, k, v, kpos, causal=causal, block_q=bq, block_k=bk)
+    want = ref.selected_attention(q, k, v, kpos, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("n,s,d", [(1, 1, 4), (7, 3, 8), (128, 128, 32), (33, 17, 8)])
+def test_selected_attention_fixed_cases(n, s, d, causal):
+    q, k, v, kpos = _mk(n, s, d, seed=n * 100 + s)
+    out = selected_attention_pallas(q, k, v, kpos, causal=causal, block_q=16, block_k=8)
+    want = ref.selected_attention(q, k, v, kpos, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5, rtol=2e-5)
+
+
+def test_fully_masked_rows_are_zero():
+    # All selected keys at positions AFTER every query → causal masks all.
+    n, s, d = 6, 4, 8
+    q, k, v, _ = _mk(n, s, d, seed=5)
+    kpos = jnp.asarray([10, 11, 12, 13], jnp.int32)
+    out = selected_attention_pallas(q, k, v, kpos, causal=True, block_q=4, block_k=2)
+    np.testing.assert_allclose(np.asarray(out), 0.0, atol=1e-6)
+
+
+def test_anchor_position_zero_always_attended():
+    n, s, d = 16, 3, 8
+    q, k, v, _ = _mk(n, s, d, seed=6)
+    kpos = jnp.asarray([0, 9, 12], jnp.int32)
+    out = selected_attention_pallas(q, k, v, kpos, causal=True, block_q=8, block_k=2)
+    # Query 0 can only see key at position 0 → output = v[0].
+    np.testing.assert_allclose(np.asarray(out[0]), np.asarray(v[0]), atol=1e-5)
+
+
+def test_heads_vmap_matches_per_head():
+    H, n, s, d = 3, 24, 9, 8
+    rng = np.random.default_rng(7)
+    q = jnp.asarray(rng.normal(size=(H, n, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(H, s, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(H, s, d)), jnp.float32)
+    kpos = jnp.stack(
+        [jnp.sort(jnp.asarray(rng.choice(n, s, replace=False), jnp.int32)) for _ in range(H)]
+    )
+    out = selected_attention_heads(q, k, v, kpos, causal=True)
+    want = jnp.stack([ref.selected_attention(q[h], k[h], v[h], kpos[h]) for h in range(H)])
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(2, 200),
+    d=st.sampled_from([2, 8, 16]),
+    k=st.integers(1, 9),
+    bn=st.sampled_from([8, 64, 256]),
+    seed=st.integers(0, 1000),
+)
+def test_pairwise_dists_kernel_hypothesis(n, d, k, bn, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    c = jnp.asarray(rng.normal(size=(k, d)), jnp.float32)
+    got = pairwise_sq_dists_pallas(x, c, block_n=bn)
+    _, want = ref.kmeans_assign(x, c)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-3, rtol=1e-4)
+
+
+def test_kmeans_lloyd_recovers_blobs():
+    rng = np.random.default_rng(1)
+    a = rng.normal(size=(40, 4)) * 0.1 + np.array([3, 0, 0, 0])
+    b = rng.normal(size=(40, 4)) * 0.1 - np.array([3, 0, 0, 0])
+    x = jnp.asarray(np.concatenate([a, b]), jnp.float32)
+    _, assign, d2 = kmeans_lloyd(x, k=2, iters=8)
+    assign = np.asarray(assign)
+    assert len(set(assign[:40])) == 1
+    assert len(set(assign[40:])) == 1
+    assert assign[0] != assign[40]
+    assert float(jnp.max(d2)) < 0.5
+
+
+def test_kmeans_lloyd_distances_nonnegative():
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(size=(50, 8)), jnp.float32)
+    _, _, d2 = kmeans_lloyd(x, k=9, iters=4)
+    assert float(jnp.min(d2)) > -1e-4

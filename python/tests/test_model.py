@@ -1,0 +1,156 @@
+"""L2 model tests: shapes, loss behaviour, prescored-vs-exact consistency,
+weights.bin round-trip, corpus structure."""
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import corpus
+from compile.export import read_weights_bin, write_weights_bin
+from compile.model import (
+    ModelConfig,
+    forward,
+    forward_batch,
+    init_params,
+    loss_fn,
+    make_serve_jit,
+    nll_per_token,
+    param_names,
+)
+
+SMALL = dict(vocab=64, d_model=32, n_layers=2, n_heads=2, max_seq=32)
+
+
+def test_forward_shapes():
+    cfg = ModelConfig(**SMALL)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    tokens = jnp.zeros((cfg.max_seq,), jnp.int32)
+    logits = forward(params, tokens, cfg)
+    assert logits.shape == (cfg.max_seq, cfg.vocab)
+    batch = jnp.zeros((3, cfg.max_seq), jnp.int32)
+    assert forward_batch(params, batch, cfg).shape == (3, cfg.max_seq, cfg.vocab)
+
+
+def test_initial_loss_near_uniform():
+    cfg = ModelConfig(**SMALL)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    tokens = jnp.asarray(corpus.batch(cfg.vocab, 2, cfg.max_seq, seed=0))
+    loss = float(loss_fn(params, tokens, cfg))
+    assert abs(loss - np.log(cfg.vocab)) < 0.5, loss
+
+
+def test_loss_decreases_with_one_adam_step():
+    from compile.train import adam_init, adam_update
+
+    cfg = ModelConfig(**SMALL)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt = adam_init(params)
+    tokens = jnp.asarray(corpus.batch(cfg.vocab, 4, cfg.max_seq, seed=1))
+    l0, grads = jax.value_and_grad(lambda p: loss_fn(p, tokens, cfg))(params)
+    for _ in range(5):
+        params, opt = adam_update(params, grads, opt, lr=1e-3)
+        _, grads = jax.value_and_grad(lambda p: loss_fn(p, tokens, cfg))(params)
+    l1 = loss_fn(params, tokens, cfg)
+    assert float(l1) < float(l0)
+
+
+def test_causality_future_tokens_do_not_affect_past_logits():
+    cfg = ModelConfig(**SMALL)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    t1 = jnp.asarray(corpus.generate(cfg.vocab, cfg.max_seq, seed=3))
+    t2 = t1.at[-1].set((t1[-1] + 5) % cfg.vocab)
+    l1 = forward(params, t1, cfg)
+    l2 = forward(params, t2, cfg)
+    np.testing.assert_allclose(np.asarray(l1[:-1]), np.asarray(l2[:-1]), atol=1e-5)
+
+
+def test_prescored_full_budget_matches_exact():
+    # top_k >= n ⇒ pre-scoring selects everything ⇒ identical to exact.
+    cfg_e = ModelConfig(**SMALL, attention="exact")
+    cfg_p = ModelConfig(**SMALL, attention="prescored", top_k=SMALL["max_seq"])
+    params = init_params(cfg_e, jax.random.PRNGKey(0))
+    tokens = jnp.asarray(corpus.generate(cfg_e.vocab, cfg_e.max_seq, seed=4))
+    le = forward(params, tokens, cfg_e)
+    lp = forward(params, tokens, cfg_p)
+    np.testing.assert_allclose(np.asarray(le), np.asarray(lp), atol=5e-4, rtol=1e-4)
+
+
+def test_prescored_restricted_budget_runs_and_differs():
+    cfg_e = ModelConfig(**SMALL, attention="exact")
+    cfg_p = ModelConfig(**SMALL, attention="prescored", top_k=8)
+    params = init_params(cfg_e, jax.random.PRNGKey(0))
+    tokens = jnp.asarray(corpus.batch(cfg_e.vocab, 2, cfg_e.max_seq, seed=5))
+    nll_e = nll_per_token(params, tokens, cfg_e)
+    nll_p = nll_per_token(params, tokens, cfg_p)
+    assert nll_p.shape == nll_e.shape
+    assert np.all(np.isfinite(np.asarray(nll_p)))
+    assert float(jnp.abs(nll_p - nll_e).max()) > 1e-6  # budget actually binds
+
+
+def test_serve_fn_outputs():
+    cfg = ModelConfig(**SMALL)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    fn, names = make_serve_jit(cfg)
+    args = [params[n] for n in names]
+    tokens = jnp.asarray(corpus.batch(cfg.vocab, 2, cfg.max_seq, seed=6))
+    nll, last = fn(*args, tokens)
+    assert nll.shape == (2, cfg.max_seq - 1)
+    assert last.shape == (2, cfg.vocab)
+    # nll consistent with direct computation
+    direct = nll_per_token(params, tokens, cfg)
+    np.testing.assert_allclose(np.asarray(nll), np.asarray(direct), atol=1e-5)
+
+
+def test_param_names_stable_and_sorted():
+    cfg = ModelConfig(**SMALL)
+    names = param_names(cfg)
+    assert names == sorted(names)
+    params = init_params(cfg, jax.random.PRNGKey(1))
+    assert set(names) == set(params.keys())
+
+
+def test_weights_bin_roundtrip():
+    cfg = ModelConfig(**SMALL)
+    params = {k: np.asarray(v) for k, v in init_params(cfg, jax.random.PRNGKey(0)).items()}
+    names = param_names(cfg)
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "w.bin")
+        write_weights_bin(path, params, names)
+        back = read_weights_bin(path)
+    assert set(back.keys()) == set(names)
+    for n in names:
+        np.testing.assert_array_equal(back[n], params[n].astype(np.float32))
+
+
+def test_corpus_structure():
+    toks = corpus.generate(128, 2048, seed=0)
+    assert toks.shape == (2048,)
+    assert toks.min() >= 0 and toks.max() < 128
+    assert toks[0] == corpus.BOS
+    # anchors and recalls occur
+    assert np.sum(toks == corpus.ANCHOR) > 5
+    assert np.sum(toks == corpus.RECALL) > 5
+    # recall is followed by the most recent entity (check a few)
+    anchors = np.where(toks[:-1] == corpus.ANCHOR)[0]
+    recalls = np.where(toks[:-1] == corpus.RECALL)[0]
+    checked = 0
+    for r in recalls:
+        prior = anchors[anchors < r]
+        if len(prior) == 0:
+            continue
+        entity = toks[prior[-1] + 1]
+        if toks[prior[-1] + 1] >= corpus.FIRST_WORD:
+            assert toks[r + 1] == entity
+            checked += 1
+    assert checked > 3
+
+
+def test_corpus_deterministic():
+    a = corpus.generate(64, 256, seed=9)
+    b = corpus.generate(64, 256, seed=9)
+    np.testing.assert_array_equal(a, b)
+    c = corpus.generate(64, 256, seed=10)
+    assert np.any(a != c)

@@ -1,0 +1,288 @@
+//! Backward pass (dQ, dK, dV) for attention.
+//!
+//! Needed by the Fig. 1b (forward + backward) speedup bench. Two paths:
+//!
+//! * [`exact_attention_backward`] — full softmax-attention gradients via the
+//!   standard identities:
+//!     P  = softmax(S),  S = Q Kᵀ · scale
+//!     dV = Pᵀ dO
+//!     dP = dO Vᵀ
+//!     dS = P ∘ (dP − rowsum(dP ∘ P))
+//!     dQ = dS K · scale,   dK = dSᵀ Q · scale
+//! * [`sparse_attention_backward`] — the same identities restricted to an
+//!   explicit per-query support set (the pairs HyperAttention actually
+//!   computed). The paper notes "the backward pass adheres to
+//!   HyperAttention's standard pipeline": gradients flow only through
+//!   computed pairs.
+
+use super::AttentionInputs;
+use crate::linalg::ops::{dot, softmax_inplace};
+use crate::linalg::Matrix;
+
+/// Gradients for exact softmax attention given upstream dO.
+/// Returns (dQ, dK, dV).
+pub fn exact_attention_backward(
+    inp: &AttentionInputs,
+    dout: &Matrix,
+) -> (Matrix, Matrix, Matrix) {
+    let (nq, nk) = (inp.q.rows, inp.k.rows);
+    let dv_dim = inp.v.cols;
+    let d = inp.q.cols;
+    let scale = inp.effective_scale();
+    assert_eq!((dout.rows, dout.cols), (nq, dv_dim));
+
+    let mut dq = Matrix::zeros(nq, d);
+    let mut dk = Matrix::zeros(nk, d);
+    let mut dv = Matrix::zeros(nk, dv_dim);
+
+    let mut p = vec![0.0f32; nk];
+    let mut dp = vec![0.0f32; nk];
+    for i in 0..nq {
+        let qrow = inp.q.row(i);
+        let dorow = dout.row(i);
+        let limit = if inp.causal { (i + 1).min(nk) } else { nk };
+        for j in 0..limit {
+            p[j] = dot(qrow, inp.k.row(j)) * scale;
+        }
+        softmax_inplace(&mut p[..limit]);
+        // dV += pᵀ dO  (per row), dP = dO · Vᵀ
+        for j in 0..limit {
+            let pj = p[j];
+            if pj != 0.0 {
+                let dvrow = dv.row_mut(j);
+                for (dvv, dov) in dvrow.iter_mut().zip(dorow) {
+                    *dvv += pj * dov;
+                }
+            }
+            dp[j] = dot(dorow, inp.v.row(j));
+        }
+        // dS = P ∘ (dP − Σ_j dP_j P_j)
+        let inner: f32 = (0..limit).map(|j| dp[j] * p[j]).sum();
+        // dQ_i += Σ_j dS_ij K_j · scale ;  dK_j += dS_ij Q_i · scale
+        let dqrow = dq.row_mut(i);
+        for j in 0..limit {
+            let ds = p[j] * (dp[j] - inner) * scale;
+            if ds == 0.0 {
+                continue;
+            }
+            let krow = inp.k.row(j);
+            for (dqv, kv) in dqrow.iter_mut().zip(krow) {
+                *dqv += ds * kv;
+            }
+            let dkrow = dk.row_mut(j);
+            for (dkv, qv) in dkrow.iter_mut().zip(qrow) {
+                *dkv += ds * qv;
+            }
+        }
+    }
+    (dq, dk, dv)
+}
+
+/// Backward restricted to per-query support sets: `support[i]` lists the key
+/// indices that query i actually scored (blockwise + residual pairs). The
+/// forward is recomputed on the restricted support (cheap: |support| ≪ n).
+pub fn sparse_attention_backward(
+    inp: &AttentionInputs,
+    dout: &Matrix,
+    support: &[Vec<usize>],
+) -> (Matrix, Matrix, Matrix) {
+    let nq = inp.q.rows;
+    let d = inp.q.cols;
+    let dv_dim = inp.v.cols;
+    let scale = inp.effective_scale();
+    assert_eq!(support.len(), nq);
+
+    let mut dq = Matrix::zeros(nq, d);
+    let mut dk = Matrix::zeros(inp.k.rows, d);
+    let mut dv = Matrix::zeros(inp.v.rows, dv_dim);
+
+    let mut p: Vec<f32> = Vec::new();
+    let mut dp: Vec<f32> = Vec::new();
+    for i in 0..nq {
+        let sup = &support[i];
+        if sup.is_empty() {
+            continue;
+        }
+        let qrow = inp.q.row(i);
+        let dorow = dout.row(i);
+        p.clear();
+        p.extend(sup.iter().map(|&j| dot(qrow, inp.k.row(j)) * scale));
+        softmax_inplace(&mut p);
+        dp.clear();
+        dp.extend(sup.iter().map(|&j| dot(dorow, inp.v.row(j))));
+        let inner: f32 = p.iter().zip(&dp).map(|(a, b)| a * b).sum();
+        let dqrow = dq.row_mut(i);
+        for (t, &j) in sup.iter().enumerate() {
+            let pj = p[t];
+            if pj != 0.0 {
+                let dvrow = dv.row_mut(j);
+                for (dvv, dov) in dvrow.iter_mut().zip(dorow) {
+                    *dvv += pj * dov;
+                }
+            }
+            let ds = pj * (dp[t] - inner) * scale;
+            if ds == 0.0 {
+                continue;
+            }
+            let krow = inp.k.row(j);
+            for (dqv, kv) in dqrow.iter_mut().zip(krow) {
+                *dqv += ds * kv;
+            }
+            let dkrow = dk.row_mut(j);
+            for (dkv, qv) in dkrow.iter_mut().zip(qrow) {
+                *dkv += ds * qv;
+            }
+        }
+    }
+    (dq, dk, dv)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::exact::exact_attention;
+    use crate::util::rng::Rng;
+
+    /// Scalar loss L = Σ (out ∘ W) for a fixed random W, so dO = W.
+    fn loss(out: &Matrix, w: &Matrix) -> f64 {
+        out.data.iter().zip(&w.data).map(|(a, b)| (a * b) as f64).sum()
+    }
+
+    fn finite_diff_check(causal: bool) {
+        let mut rng = Rng::new(1);
+        let (n, d) = (7, 4);
+        let q = Matrix::randn(n, d, 0.7, &mut rng);
+        let k = Matrix::randn(n, d, 0.7, &mut rng);
+        let v = Matrix::randn(n, d, 0.7, &mut rng);
+        let w = Matrix::randn(n, d, 1.0, &mut rng);
+
+        let inp = AttentionInputs::new(&q, &k, &v).causal(causal);
+        let (dq, dk, dv) = exact_attention_backward(&inp, &w);
+
+        let eps = 1e-3f32;
+        // check a sample of entries in each gradient
+        for &(which, i, j) in
+            &[(0usize, 0usize, 1usize), (0, 3, 2), (1, 2, 0), (1, 5, 3), (2, 1, 1), (2, 6, 2)]
+        {
+            let (mut qp, mut kp, mut vp) = (q.clone(), k.clone(), v.clone());
+            let (mut qm, mut km, mut vm) = (q.clone(), k.clone(), v.clone());
+            let analytic = match which {
+                0 => {
+                    qp[(i, j)] += eps;
+                    qm[(i, j)] -= eps;
+                    dq[(i, j)]
+                }
+                1 => {
+                    kp[(i, j)] += eps;
+                    km[(i, j)] -= eps;
+                    dk[(i, j)]
+                }
+                _ => {
+                    vp[(i, j)] += eps;
+                    vm[(i, j)] -= eps;
+                    dv[(i, j)]
+                }
+            };
+            let op = exact_attention(&AttentionInputs::new(&qp, &kp, &vp).causal(causal));
+            let om = exact_attention(&AttentionInputs::new(&qm, &km, &vm).causal(causal));
+            let numeric = ((loss(&op, &w) - loss(&om, &w)) / (2.0 * eps as f64)) as f32;
+            assert!(
+                (analytic - numeric).abs() < 2e-2_f32.max(numeric.abs() * 0.05),
+                "which={which} ({i},{j}): analytic {analytic} vs numeric {numeric} (causal={causal})"
+            );
+        }
+    }
+
+    #[test]
+    fn gradients_match_finite_differences() {
+        finite_diff_check(false);
+    }
+
+    #[test]
+    fn gradients_match_finite_differences_causal() {
+        finite_diff_check(true);
+    }
+
+    #[test]
+    fn sparse_full_support_matches_exact_backward() {
+        let mut rng = Rng::new(2);
+        let (n, d) = (9, 4);
+        let q = Matrix::randn(n, d, 0.5, &mut rng);
+        let k = Matrix::randn(n, d, 0.5, &mut rng);
+        let v = Matrix::randn(n, d, 0.5, &mut rng);
+        let dout = Matrix::randn(n, d, 1.0, &mut rng);
+        let inp = AttentionInputs::new(&q, &k, &v);
+        let full: Vec<Vec<usize>> = (0..n).map(|_| (0..n).collect()).collect();
+        let (dq1, dk1, dv1) = exact_attention_backward(&inp, &dout);
+        let (dq2, dk2, dv2) = sparse_attention_backward(&inp, &dout, &full);
+        assert!(dq1.max_abs_diff(&dq2) < 1e-5);
+        assert!(dk1.max_abs_diff(&dk2) < 1e-5);
+        assert!(dv1.max_abs_diff(&dv2) < 1e-5);
+    }
+
+    #[test]
+    fn sparse_gradients_zero_outside_support() {
+        let mut rng = Rng::new(3);
+        let (n, d) = (8, 3);
+        let q = Matrix::randn(n, d, 0.5, &mut rng);
+        let k = Matrix::randn(n, d, 0.5, &mut rng);
+        let v = Matrix::randn(n, d, 0.5, &mut rng);
+        let dout = Matrix::randn(n, d, 1.0, &mut rng);
+        let inp = AttentionInputs::new(&q, &k, &v);
+        // All queries attend only to keys {0, 1}.
+        let support: Vec<Vec<usize>> = (0..n).map(|_| vec![0, 1]).collect();
+        let (_, dk, dv) = sparse_attention_backward(&inp, &dout, &support);
+        for j in 2..n {
+            assert!(dk.row(j).iter().all(|&x| x == 0.0), "dK row {j} nonzero");
+            assert!(dv.row(j).iter().all(|&x| x == 0.0), "dV row {j} nonzero");
+        }
+    }
+
+    #[test]
+    fn sparse_finite_diff_on_restricted_forward() {
+        // Verify sparse backward against finite differences of the
+        // restricted forward (support = first 3 keys for every query).
+        let mut rng = Rng::new(4);
+        let (n, d) = (5, 3);
+        let q = Matrix::randn(n, d, 0.6, &mut rng);
+        let k = Matrix::randn(n, d, 0.6, &mut rng);
+        let v = Matrix::randn(n, d, 0.6, &mut rng);
+        let w = Matrix::randn(n, d, 1.0, &mut rng);
+        let support: Vec<Vec<usize>> = (0..n).map(|_| vec![0, 1, 2]).collect();
+
+        let restricted_forward = |q: &Matrix, k: &Matrix, v: &Matrix| -> Matrix {
+            let sel = [0usize, 1, 2];
+            let ks = k.gather_rows(&sel);
+            let vs = v.gather_rows(&sel);
+            exact_attention(&AttentionInputs::new(q, &ks, &vs))
+        };
+
+        let inp = AttentionInputs::new(&q, &k, &v);
+        let (dq, dk, _dv) = sparse_attention_backward(&inp, &w, &support);
+        let eps = 1e-3f32;
+        // dQ check
+        {
+            let (i, j) = (2, 1);
+            let mut qp = q.clone();
+            qp[(i, j)] += eps;
+            let mut qm = q.clone();
+            qm[(i, j)] -= eps;
+            let numeric = ((loss(&restricted_forward(&qp, &k, &v), &w)
+                - loss(&restricted_forward(&qm, &k, &v), &w))
+                / (2.0 * eps as f64)) as f32;
+            assert!((dq[(i, j)] - numeric).abs() < 2e-2, "dQ {} vs {}", dq[(i, j)], numeric);
+        }
+        // dK check (within support)
+        {
+            let (i, j) = (1, 2);
+            let mut kp = k.clone();
+            kp[(i, j)] += eps;
+            let mut km = k.clone();
+            km[(i, j)] -= eps;
+            let numeric = ((loss(&restricted_forward(&q, &kp, &v), &w)
+                - loss(&restricted_forward(&q, &km, &v), &w))
+                / (2.0 * eps as f64)) as f32;
+            assert!((dk[(i, j)] - numeric).abs() < 2e-2, "dK {} vs {}", dk[(i, j)], numeric);
+        }
+    }
+}

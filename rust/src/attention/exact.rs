@@ -1,0 +1,277 @@
+//! Exact softmax attention: naive reference and FlashAttention-style blocked
+//! streaming with online softmax.
+//!
+//! `flash_attention` is the exact-attention speed baseline of Fig. 1. On CPU
+//! the FlashAttention *algorithm* (tile K/V, carry running max/denominator,
+//! never materialize the n×n matrix) is the right analogue of the CUDA
+//! kernel: it is IO-aware (tiles fit L1/L2) and O(n) memory.
+
+use super::AttentionInputs;
+use crate::linalg::ops::{dot, softmax_inplace};
+use crate::linalg::Matrix;
+
+/// Naive exact attention. Materializes the full score matrix — O(n²) memory.
+/// Reference implementation for tests; use [`flash_attention`] at scale.
+pub fn exact_attention(inp: &AttentionInputs) -> Matrix {
+    let (nq, nk) = (inp.q.rows, inp.k.rows);
+    let dv = inp.v.cols;
+    let scale = inp.effective_scale();
+    let mut out = Matrix::zeros(nq, dv);
+    let mut scores = vec![0.0f32; nk];
+    for i in 0..nq {
+        let qrow = inp.q.row(i);
+        let limit = if inp.causal { (i + 1).min(nk) } else { nk };
+        for j in 0..limit {
+            scores[j] = dot(qrow, inp.k.row(j)) * scale;
+        }
+        softmax_inplace(&mut scores[..limit]);
+        let orow = out.row_mut(i);
+        for j in 0..limit {
+            let p = scores[j];
+            if p == 0.0 {
+                continue;
+            }
+            let vrow = inp.v.row(j);
+            for (o, vv) in orow.iter_mut().zip(vrow) {
+                *o += p * vv;
+            }
+        }
+    }
+    out
+}
+
+/// Full attention *probability* matrix P = softmax(QKᵀ·scale) — used by the
+/// heavy-coverage analyses (Figs. 4/5, Table 7). O(n²) memory; small inputs.
+pub fn attention_matrix(inp: &AttentionInputs) -> Matrix {
+    let (nq, nk) = (inp.q.rows, inp.k.rows);
+    let scale = inp.effective_scale();
+    let mut p = Matrix::zeros(nq, nk);
+    for i in 0..nq {
+        let qrow = inp.q.row(i);
+        let limit = if inp.causal { (i + 1).min(nk) } else { nk };
+        let row = p.row_mut(i);
+        for j in 0..limit {
+            row[j] = dot(qrow, inp.k.row(j)) * scale;
+        }
+        for v in row[limit..].iter_mut() {
+            *v = f32::NEG_INFINITY;
+        }
+        softmax_inplace(row);
+    }
+    p
+}
+
+/// FlashAttention-style exact attention: blocked K/V streaming with online
+/// softmax accumulators (running max `m`, denominator `l`, output `acc`).
+///
+/// Numerically identical to [`exact_attention`] up to float reassociation.
+pub fn flash_attention(inp: &AttentionInputs) -> Matrix {
+    flash_attention_blocked(inp, 64, 64)
+}
+
+/// Blocked variant with explicit tile sizes (bench knob).
+pub fn flash_attention_blocked(inp: &AttentionInputs, block_q: usize, block_k: usize) -> Matrix {
+    let (nq, nk) = (inp.q.rows, inp.k.rows);
+    let dv = inp.v.cols;
+    let scale = inp.effective_scale();
+    let mut out = Matrix::zeros(nq, dv);
+
+    let bq = block_q.max(1);
+    let bk = block_k.max(1);
+    // Per-query accumulators for the current q-tile.
+    let mut m = vec![f32::NEG_INFINITY; bq];
+    let mut l = vec![0.0f32; bq];
+    let mut acc = vec![0.0f32; bq * dv];
+    let mut s = vec![0.0f32; bq * bk];
+
+    for q0 in (0..nq).step_by(bq) {
+        let q1 = (q0 + bq).min(nq);
+        let qb = q1 - q0;
+        m[..qb].fill(f32::NEG_INFINITY);
+        l[..qb].fill(0.0);
+        acc[..qb * dv].fill(0.0);
+
+        for k0 in (0..nk).step_by(bk) {
+            let k1 = (k0 + bk).min(nk);
+            let kb = k1 - k0;
+            // Causal: skip tiles fully in the future.
+            if inp.causal && k0 > q1 - 1 {
+                break;
+            }
+            // s = Q_tile · K_tileᵀ
+            for qi in 0..qb {
+                let qrow = inp.q.row(q0 + qi);
+                let srow = &mut s[qi * bk..qi * bk + kb];
+                for kj in 0..kb {
+                    srow[kj] = dot(qrow, inp.k.row(k0 + kj)) * scale;
+                }
+                if inp.causal {
+                    let i_abs = q0 + qi;
+                    for kj in 0..kb {
+                        if k0 + kj > i_abs {
+                            srow[kj] = f32::NEG_INFINITY;
+                        }
+                    }
+                }
+            }
+            // Online softmax update per query row.
+            for qi in 0..qb {
+                let srow = &s[qi * bk..qi * bk + kb];
+                let tile_max = srow.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                if tile_max == f32::NEG_INFINITY {
+                    continue;
+                }
+                let new_m = m[qi].max(tile_max);
+                let correction = if m[qi] == f32::NEG_INFINITY { 0.0 } else { (m[qi] - new_m).exp() };
+                l[qi] *= correction;
+                let arow = &mut acc[qi * dv..(qi + 1) * dv];
+                if correction != 1.0 {
+                    for a in arow.iter_mut() {
+                        *a *= correction;
+                    }
+                }
+                for kj in 0..kb {
+                    let sv = srow[kj];
+                    if sv == f32::NEG_INFINITY {
+                        continue;
+                    }
+                    let p = (sv - new_m).exp();
+                    l[qi] += p;
+                    let vrow = inp.v.row(k0 + kj);
+                    for (a, vv) in arow.iter_mut().zip(vrow) {
+                        *a += p * vv;
+                    }
+                }
+                m[qi] = new_m;
+            }
+        }
+        // Normalize and write out.
+        for qi in 0..qb {
+            let inv = if l[qi] > 0.0 { 1.0 / l[qi] } else { 0.0 };
+            let orow = out.row_mut(q0 + qi);
+            let arow = &acc[qi * dv..(qi + 1) * dv];
+            for (o, a) in orow.iter_mut().zip(arow) {
+                *o = a * inv;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::rel_error;
+    use crate::util::rng::Rng;
+
+    fn rand_qkv(n: usize, d: usize, seed: u64) -> (Matrix, Matrix, Matrix) {
+        let mut rng = Rng::new(seed);
+        (
+            Matrix::randn(n, d, 1.0, &mut rng),
+            Matrix::randn(n, d, 1.0, &mut rng),
+            Matrix::randn(n, d, 1.0, &mut rng),
+        )
+    }
+
+    #[test]
+    fn uniform_scores_average_values() {
+        // Q=0 ⇒ all scores equal ⇒ output = mean of V rows.
+        let q = Matrix::zeros(3, 4);
+        let mut rng = Rng::new(1);
+        let k = Matrix::randn(5, 4, 1.0, &mut rng);
+        let v = Matrix::randn(5, 2, 1.0, &mut rng);
+        let out = exact_attention(&AttentionInputs::new(&q, &k, &v));
+        for i in 0..3 {
+            for c in 0..2 {
+                let mean: f32 = (0..5).map(|j| v[(j, c)]).sum::<f32>() / 5.0;
+                assert!((out[(i, c)] - mean).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn one_hot_attention_selects_value() {
+        // One key hugely aligned with q ⇒ output ≈ that value row.
+        let mut q = Matrix::zeros(1, 4);
+        q[(0, 0)] = 10.0;
+        let mut k = Matrix::zeros(3, 4);
+        k[(1, 0)] = 10.0; // key 1 matches
+        let v = Matrix::from_vec(3, 2, vec![1., 1., 7., 8., 2., 2.]);
+        let out = exact_attention(&AttentionInputs::new(&q, &k, &v));
+        assert!((out[(0, 0)] - 7.0).abs() < 1e-2);
+        assert!((out[(0, 1)] - 8.0).abs() < 1e-2);
+    }
+
+    #[test]
+    fn flash_matches_exact_various_shapes() {
+        for &(n, d) in &[(1usize, 4usize), (17, 8), (64, 16), (130, 8)] {
+            let (q, k, v) = rand_qkv(n, d, n as u64);
+            let inp = AttentionInputs::new(&q, &k, &v);
+            let e = exact_attention(&inp);
+            let f = flash_attention(&inp);
+            assert!(rel_error(&f, &e) < 1e-5, "n={n} d={d}");
+        }
+    }
+
+    #[test]
+    fn flash_matches_exact_causal() {
+        let (q, k, v) = rand_qkv(50, 8, 9);
+        let inp = AttentionInputs::new(&q, &k, &v).causal(true);
+        let e = exact_attention(&inp);
+        let f = flash_attention(&inp);
+        assert!(rel_error(&f, &e) < 1e-5);
+    }
+
+    #[test]
+    fn flash_tile_sizes_equivalent() {
+        let (q, k, v) = rand_qkv(37, 8, 10);
+        let inp = AttentionInputs::new(&q, &k, &v);
+        let base = exact_attention(&inp);
+        for &(bq, bk) in &[(1usize, 1usize), (8, 16), (64, 8), (128, 128)] {
+            let f = flash_attention_blocked(&inp, bq, bk);
+            assert!(rel_error(&f, &base) < 1e-5, "tiles {bq}x{bk}");
+        }
+    }
+
+    #[test]
+    fn causal_first_token_attends_only_itself() {
+        let (q, k, v) = rand_qkv(6, 4, 11);
+        let inp = AttentionInputs::new(&q, &k, &v).causal(true);
+        let out = exact_attention(&inp);
+        for c in 0..4 {
+            assert!((out[(0, c)] - v[(0, c)]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn attention_matrix_rows_sum_to_one() {
+        let (q, k, v) = rand_qkv(12, 4, 12);
+        let _ = &v;
+        let p = attention_matrix(&AttentionInputs::new(&q, &k, &v));
+        for i in 0..p.rows {
+            let s: f32 = p.row(i).iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+        }
+        // causal: zero above diagonal
+        let pc = attention_matrix(&AttentionInputs::new(&q, &k, &v).causal(true));
+        for i in 0..pc.rows {
+            for j in i + 1..pc.cols {
+                assert_eq!(pc[(i, j)], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn rectangular_kv() {
+        // n_q != n_k, d_v != d
+        let mut rng = Rng::new(13);
+        let q = Matrix::randn(5, 8, 1.0, &mut rng);
+        let k = Matrix::randn(11, 8, 1.0, &mut rng);
+        let v = Matrix::randn(11, 3, 1.0, &mut rng);
+        let inp = AttentionInputs::new(&q, &k, &v);
+        let e = exact_attention(&inp);
+        let f = flash_attention(&inp);
+        assert_eq!((e.rows, e.cols), (5, 3));
+        assert!(rel_error(&f, &e) < 1e-5);
+    }
+}

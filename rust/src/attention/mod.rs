@@ -1,0 +1,103 @@
+//! Attention implementations.
+//!
+//! * [`exact`] — naive softmax attention and an IO-aware blocked streaming
+//!   variant with online softmax (the FlashAttention algorithm on CPU; the
+//!   exact baseline of Fig. 1 and Table 1).
+//! * [`polynomial`] — degree-r polynomial attention, the kernel for which the
+//!   paper's structural guarantees are stated (§4).
+//! * [`hyper`] — HyperAttention: angular-LSH bucketing, Gray-code bucket
+//!   ordering, block-diagonal attention, and uniform residual sampling.
+//! * [`prescored`] — Algorithm 2 (Pre-Scored HyperAttention) with both the
+//!   corrected GLM3 coupling (attention-bias masking, |S|-scaled residual,
+//!   block-residual exclusion) and the GLM2 artifact modes used by the
+//!   Appendix-F ablation.
+//! * [`backward`] — gradients (dQ, dK, dV) for the exact and blockwise paths
+//!   (Fig. 1b fwd+bwd speedups).
+
+pub mod backward;
+pub mod exact;
+pub mod hyper;
+pub mod polynomial;
+pub mod prescored;
+
+pub use exact::{exact_attention, flash_attention};
+pub use hyper::{hyper_attention, HyperConfig};
+pub use prescored::{prescored_hyper_attention, Coupling, PreScoredConfig};
+
+use crate::linalg::Matrix;
+
+/// Shared attention problem: Q (n_q×d), K (n_k×d), V (n_k×d_v).
+#[derive(Debug, Clone)]
+pub struct AttentionInputs<'a> {
+    pub q: &'a Matrix,
+    pub k: &'a Matrix,
+    pub v: &'a Matrix,
+    /// Causal masking (query i attends to keys j ≤ i; requires n_q == n_k
+    /// or an offset interpretation by the caller).
+    pub causal: bool,
+    /// Softmax temperature scale; `None` = 1/sqrt(d).
+    pub scale: Option<f32>,
+}
+
+impl<'a> AttentionInputs<'a> {
+    pub fn new(q: &'a Matrix, k: &'a Matrix, v: &'a Matrix) -> Self {
+        assert_eq!(q.cols, k.cols, "Q/K dim mismatch");
+        assert_eq!(k.rows, v.rows, "K/V length mismatch");
+        AttentionInputs { q, k, v, causal: false, scale: None }
+    }
+
+    pub fn causal(mut self, causal: bool) -> Self {
+        self.causal = causal;
+        self
+    }
+
+    pub fn effective_scale(&self) -> f32 {
+        self.scale.unwrap_or(1.0 / (self.q.cols as f32).sqrt())
+    }
+}
+
+/// Mean relative ℓ2 error between two attention outputs, row-wise averaged —
+/// the approximation-quality metric used across tests and benches.
+pub fn rel_error(approx: &Matrix, exact: &Matrix) -> f32 {
+    assert_eq!((approx.rows, approx.cols), (exact.rows, exact.cols));
+    let mut total = 0.0f64;
+    for i in 0..exact.rows {
+        let num: f32 = approx
+            .row(i)
+            .iter()
+            .zip(exact.row(i))
+            .map(|(a, e)| (a - e) * (a - e))
+            .sum::<f32>()
+            .sqrt();
+        let den: f32 = exact.row(i).iter().map(|e| e * e).sum::<f32>().sqrt();
+        total += (num / den.max(1e-12)) as f64;
+    }
+    (total / exact.rows as f64) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rel_error_zero_for_identical() {
+        let m = Matrix::from_vec(2, 2, vec![1., 2., 3., 4.]);
+        assert_eq!(rel_error(&m, &m), 0.0);
+    }
+
+    #[test]
+    fn rel_error_scales() {
+        let a = Matrix::from_vec(1, 2, vec![2., 0.]);
+        let b = Matrix::from_vec(1, 2, vec![1., 0.]);
+        assert!((rel_error(&a, &b) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    #[should_panic(expected = "Q/K dim mismatch")]
+    fn inputs_validate_shapes() {
+        let q = Matrix::zeros(2, 3);
+        let k = Matrix::zeros(2, 4);
+        let v = Matrix::zeros(2, 4);
+        AttentionInputs::new(&q, &k, &v);
+    }
+}

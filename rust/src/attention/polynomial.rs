@@ -1,0 +1,151 @@
+//! Polynomial attention.
+//!
+//! The paper's structural guarantees (§4, following LevAttention) are stated
+//! for degree-r *polynomial* attention rather than softmax: the unnormalized
+//! weight of pair (i, j) is (q_i · k_j)^r (even r, or |·|^r), normalized per
+//! row. LevAttention's universal-set property — the set U = {j : h_j ≥ ε}
+//! contains every key whose attention weight exceeds ε for *any* query — is
+//! exact in this kernel, which the theory bench verifies.
+
+use super::AttentionInputs;
+use crate::linalg::ops::dot;
+use crate::linalg::Matrix;
+
+/// Degree-r polynomial attention output: D⁻¹ A V with A_ij = (q_i·k_j)^r
+/// (r even; odd r uses |q·k|^r to keep weights non-negative).
+pub fn polynomial_attention(inp: &AttentionInputs, r: u32) -> Matrix {
+    let p = polynomial_attention_matrix(inp, r);
+    crate::linalg::ops::matmul(&p, inp.v)
+}
+
+/// Row-normalized polynomial attention matrix.
+pub fn polynomial_attention_matrix(inp: &AttentionInputs, r: u32) -> Matrix {
+    let (nq, nk) = (inp.q.rows, inp.k.rows);
+    let mut a = Matrix::zeros(nq, nk);
+    for i in 0..nq {
+        let qrow = inp.q.row(i);
+        let limit = if inp.causal { (i + 1).min(nk) } else { nk };
+        let arow = a.row_mut(i);
+        let mut sum = 0.0f32;
+        for j in 0..limit {
+            let s = dot(qrow, inp.k.row(j));
+            let w = if r % 2 == 0 { s.powi(r as i32) } else { s.abs().powi(r as i32) };
+            arow[j] = w;
+            sum += w;
+        }
+        if sum > 0.0 {
+            let inv = 1.0 / sum;
+            for v in arow[..limit].iter_mut() {
+                *v *= inv;
+            }
+        }
+    }
+    a
+}
+
+/// Maximum attention weight each key receives over all queries — the
+/// "heaviness" of a key under polynomial attention. LevAttention's guarantee:
+/// max-weight ≥ ε ⇒ the key's leverage score is ≥ poly(ε).
+pub fn key_max_weights(attn: &Matrix) -> Vec<f32> {
+    let mut w = vec![0.0f32; attn.cols];
+    for i in 0..attn.rows {
+        for (j, &v) in attn.row(i).iter().enumerate() {
+            if v > w[j] {
+                w[j] = v;
+            }
+        }
+    }
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prescore::leverage::leverage_scores_exact;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn rows_normalized() {
+        let mut rng = Rng::new(1);
+        let q = Matrix::randn(10, 4, 1.0, &mut rng);
+        let k = Matrix::randn(12, 4, 1.0, &mut rng);
+        let v = Matrix::randn(12, 4, 1.0, &mut rng);
+        let a = polynomial_attention_matrix(&AttentionInputs::new(&q, &k, &v), 4);
+        for i in 0..a.rows {
+            let s: f32 = a.row(i).iter().sum();
+            assert!((s - 1.0).abs() < 1e-4, "row {i} sums to {s}");
+            assert!(a.row(i).iter().all(|&x| x >= 0.0));
+        }
+    }
+
+    #[test]
+    fn aligned_key_dominates() {
+        let mut q = Matrix::zeros(1, 4);
+        q[(0, 1)] = 1.0;
+        let mut k = Matrix::zeros(4, 4);
+        k[(0, 1)] = 1.0; // aligned
+        k[(1, 0)] = 0.3;
+        k[(2, 2)] = 0.3;
+        k[(3, 1)] = 0.2; // weakly aligned
+        let v = Matrix::eye(4);
+        let a = polynomial_attention_matrix(&AttentionInputs::new(&q, &k, &v), 4);
+        assert!(a[(0, 0)] > 0.99, "aligned key weight {}", a[(0, 0)]);
+    }
+
+    #[test]
+    fn heavy_keys_have_high_leverage() {
+        // The LevAttention connection: keys that receive heavy polynomial
+        // attention weight from some query must have large leverage scores.
+        let mut rng = Rng::new(2);
+        let d = 6;
+        let n = 120;
+        let mut k = Matrix::randn(n, d, 0.05, &mut rng);
+        for i in 0..d {
+            k[(i, i)] += 1.0; // planted heavy directions
+        }
+        let q = k.clone(); // queries probe the same directions
+        let v = Matrix::randn(n, d, 1.0, &mut rng);
+        let a = polynomial_attention_matrix(&AttentionInputs::new(&q, &k, &v), 4);
+        let heavy = key_max_weights(&a);
+        let lev = leverage_scores_exact(&k);
+        // Every key with max weight >= 0.5 should be in the top leverage set.
+        let eps = 0.5;
+        let lev_threshold = 0.5;
+        for j in 0..n {
+            if heavy[j] >= eps {
+                assert!(
+                    lev[j] >= lev_threshold,
+                    "key {j}: weight {} but leverage {}",
+                    heavy[j],
+                    lev[j]
+                );
+            }
+        }
+        // And at least the planted keys are heavy.
+        assert!((0..d).filter(|&j| heavy[j] > eps).count() >= d - 1);
+    }
+
+    #[test]
+    fn causal_respected() {
+        let mut rng = Rng::new(3);
+        let q = Matrix::randn(5, 3, 1.0, &mut rng);
+        let k = Matrix::randn(5, 3, 1.0, &mut rng);
+        let v = Matrix::randn(5, 3, 1.0, &mut rng);
+        let a = polynomial_attention_matrix(&AttentionInputs::new(&q, &k, &v).causal(true), 2);
+        for i in 0..5 {
+            for j in i + 1..5 {
+                assert_eq!(a[(i, j)], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn odd_degree_uses_abs() {
+        let q = Matrix::from_vec(1, 1, vec![1.0]);
+        let k = Matrix::from_vec(2, 1, vec![-2.0, 1.0]);
+        let v = Matrix::from_vec(2, 1, vec![1.0, 0.0]);
+        let a = polynomial_attention_matrix(&AttentionInputs::new(&q, &k, &v), 3);
+        // |−2|³=8, |1|³=1 ⇒ weights 8/9, 1/9
+        assert!((a[(0, 0)] - 8.0 / 9.0).abs() < 1e-5);
+    }
+}

@@ -1,0 +1,295 @@
+//! Pre-Scored HyperAttention — Algorithm 2 of the paper.
+//!
+//! ```text
+//! Require: Q, K, V; clusters k = d+1; noise σ; fallback threshold δ; method
+//! 1: S ← PreScore(K, k, s, σ, method)
+//! 2: if |S| < δ·n: return HyperAttention(Q, K, V)      (robust fallback)
+//! 3: return HyperAttention(Q, K[S], V[S])
+//! ```
+//!
+//! The *coupling* between pre-scoring and HyperAttention is the subject of
+//! the paper's Appendix F. We implement both:
+//!
+//! * [`Coupling::Glm3Corrected`] (all main-text results):
+//!   (i) selection applied as an attention-bias mask — non-selected keys are
+//!       never scored, preserving the key-space geometry;
+//!   (ii) residual Monte-Carlo samples weighted by the effective retained
+//!        count |S|;
+//!   (iii) blockwise-computed keys excluded from the residual path.
+//! * [`Coupling::Glm2Artifact`] (Appendix-F ablation, Fig. 3):
+//!   non-selected keys/values are physically zeroed (zero vectors collapse
+//!   into shared LSH buckets), residual samples are weighted by the global
+//!   key count n, and the residual path may double-count blockwise keys.
+
+use super::hyper::{hyper_attention, HyperConfig};
+use super::AttentionInputs;
+use crate::linalg::Matrix;
+use crate::prescore::{prescore, PreScoreConfig, PreScoreResult};
+
+/// How pre-scoring couples to the HyperAttention kernel (Appendix F).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Coupling {
+    /// Corrected integration (GLM3; all main-text results).
+    Glm3Corrected,
+    /// Artifact-laden early integration (GLM2; Appendix-F ablation).
+    Glm2Artifact,
+}
+
+/// Algorithm-2 configuration.
+#[derive(Debug, Clone)]
+pub struct PreScoredConfig {
+    pub prescore: PreScoreConfig,
+    pub hyper: HyperConfig,
+    /// Fallback threshold δ: if |S| < δ·n, run unfiltered HyperAttention.
+    pub fallback_delta: f32,
+    pub coupling: Coupling,
+}
+
+impl Default for PreScoredConfig {
+    fn default() -> Self {
+        PreScoredConfig {
+            prescore: PreScoreConfig::default(),
+            hyper: HyperConfig::default(),
+            fallback_delta: 0.0,
+            coupling: Coupling::Glm3Corrected,
+        }
+    }
+}
+
+/// Execution report for observability (used by the coordinator's metrics and
+/// the ablation benches).
+#[derive(Debug, Clone)]
+pub struct PreScoredStats {
+    pub selected: usize,
+    pub total_keys: usize,
+    pub fallback_used: bool,
+}
+
+/// Run Algorithm 2. Returns the attention output and an execution report.
+pub fn prescored_hyper_attention(
+    inp: &AttentionInputs,
+    cfg: &PreScoredConfig,
+) -> (Matrix, PreScoredStats) {
+    let n = inp.k.rows;
+
+    // Line 1: PreScore.
+    let sel: PreScoreResult = prescore(inp.k, &cfg.prescore);
+    let s_len = sel.selected.len();
+
+    // Line 2: robust fallback.
+    if (s_len as f32) < cfg.fallback_delta * n as f32 {
+        let out = hyper_attention(inp, &cfg.hyper, None);
+        return (out, PreScoredStats { selected: n, total_keys: n, fallback_used: true });
+    }
+
+    // No filtering case (top_k = 0): plain HyperAttention.
+    if s_len == n {
+        let out = hyper_attention(inp, &cfg.hyper, None);
+        return (out, PreScoredStats { selected: n, total_keys: n, fallback_used: false });
+    }
+
+    let stats = PreScoredStats { selected: s_len, total_keys: n, fallback_used: false };
+    match cfg.coupling {
+        Coupling::Glm3Corrected => {
+            // Algorithm 2 line 5: HyperAttention(Q, K[S], V[S]) — the LSH
+            // bucketing is computed on the retained subset's geometry, the
+            // restriction enters as masked scores over real key vectors
+            // (i: bias-mask, geometry preserved), residual samples are
+            // weighted by the effective retained count (ii) and exclude
+            // blockwise keys (iii) — the HyperConfig defaults.
+            let hyper_cfg = HyperConfig {
+                residual_count_override: None,
+                exclude_block_from_residual: true,
+                ..cfg.hyper.clone()
+            };
+            (super::hyper::hyper_attention_subset(inp, &hyper_cfg, &sel.selected), stats)
+        }
+        Coupling::Glm2Artifact => {
+            // (1) physically zero non-selected keys AND values. Zero keys
+            // hash to a single LSH bucket (sign pattern of zeros), exactly
+            // the bucket-collapse artifact Appendix F describes.
+            let mut kz = inp.k.clone();
+            let mut vz = inp.v.clone();
+            let mut selected_mask = vec![false; n];
+            for &i in &sel.selected {
+                selected_mask[i] = true;
+            }
+            for i in 0..n {
+                if !selected_mask[i] {
+                    kz.row_mut(i).fill(0.0);
+                    vz.row_mut(i).fill(0.0);
+                }
+            }
+            // (2) residual weighted by global n; (3) no block exclusion.
+            let hyper_cfg = HyperConfig {
+                residual_count_override: Some(n),
+                exclude_block_from_residual: false,
+                ..cfg.hyper.clone()
+            };
+            let zeroed = AttentionInputs {
+                q: inp.q,
+                k: &kz,
+                v: &vz,
+                causal: inp.causal,
+                scale: inp.scale,
+            };
+            (hyper_attention(&zeroed, &hyper_cfg, None), stats)
+        }
+    }
+}
+
+/// Restricted *exact* attention over the selected keys only — the zero-shot
+/// substitution operator used in the ViT experiments (§5.3): queries attend
+/// exactly to K[S], V[S].
+pub fn restricted_exact_attention(inp: &AttentionInputs, selected: &[usize]) -> Matrix {
+    let ks = inp.k.gather_rows(selected);
+    let vs = inp.v.gather_rows(selected);
+    let restricted = AttentionInputs {
+        q: inp.q,
+        k: &ks,
+        v: &vs,
+        causal: false, // gather breaks positional alignment; ViT is non-causal
+        scale: inp.scale,
+    };
+    super::exact::exact_attention(&restricted)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::exact::exact_attention;
+    use crate::attention::rel_error;
+    use crate::prescore::Method;
+    use crate::util::rng::Rng;
+
+    /// Keys with planted heavy groups (m = heavy/d per axis direction) over
+    /// an attention-sink-like bulk cloud, and queries probing the heavy
+    /// directions strongly — the geometry pre-scoring exploits.
+    fn planted_qkv(n: usize, d: usize, heavy: usize, seed: u64) -> (Matrix, Matrix, Matrix) {
+        let mut rng = Rng::new(seed);
+        let base = 1.0 / (d as f32).sqrt();
+        let mut k = Matrix::zeros(n, d);
+        for i in 0..n {
+            if i < heavy {
+                let dir = i % d;
+                for j in 0..d {
+                    k[(i, j)] = rng.gauss32(if j == dir { 4.0 } else { 0.0 }, 0.02);
+                }
+            } else {
+                for j in 0..d {
+                    k[(i, j)] = rng.gauss32(base, 0.08);
+                }
+            }
+        }
+        // queries probe the heavy directions strongly, so attention mass is
+        // concentrated on the heavy keys (the regime pre-scoring targets)
+        let mut q = Matrix::randn(n, d, 0.05, &mut rng);
+        for i in 0..n {
+            q[(i, i % d)] += 6.0;
+        }
+        let v = Matrix::randn(n, d, 1.0, &mut rng);
+        (q, k, v)
+    }
+
+    fn cfg(top_k: usize, sample: usize, coupling: Coupling) -> PreScoredConfig {
+        PreScoredConfig {
+            prescore: PreScoreConfig { method: Method::KMeans, top_k, seed: 7, ..Default::default() },
+            hyper: HyperConfig { block_size: 32, sample_size: sample, seed: 7, ..Default::default() },
+            fallback_delta: 0.0,
+            coupling,
+        }
+    }
+
+    #[test]
+    fn fallback_triggers_below_delta() {
+        let (q, k, v) = planted_qkv(64, 8, 8, 1);
+        let inp = AttentionInputs::new(&q, &k, &v);
+        let mut c = cfg(4, 0, Coupling::Glm3Corrected);
+        c.fallback_delta = 0.5; // |S|=4 < 0.5·64=32 ⇒ fallback
+        let (_, stats) = prescored_hyper_attention(&inp, &c);
+        assert!(stats.fallback_used);
+        assert_eq!(stats.selected, 64);
+        c.fallback_delta = 0.01; // 4 >= 0.64 ⇒ no fallback
+        let (_, stats2) = prescored_hyper_attention(&inp, &c);
+        assert!(!stats2.fallback_used);
+        assert_eq!(stats2.selected, 4);
+    }
+
+    #[test]
+    fn topk_zero_is_plain_hyper() {
+        let (q, k, v) = planted_qkv(64, 8, 4, 2);
+        let inp = AttentionInputs::new(&q, &k, &v);
+        let c = cfg(0, 8, Coupling::Glm3Corrected);
+        let (out, stats) = prescored_hyper_attention(&inp, &c);
+        assert_eq!(stats.selected, 64);
+        let plain = hyper_attention(&inp, &c.hyper, None);
+        assert_eq!(out.data, plain.data);
+    }
+
+    #[test]
+    fn glm3_better_than_glm2_on_planted_data() {
+        // The corrected coupling should approximate exact attention better
+        // than the artifact-laden one at small budgets (Appendix F's claim).
+        let (q, k, v) = planted_qkv(256, 8, 16, 3);
+        let inp = AttentionInputs::new(&q, &k, &v);
+        let e = exact_attention(&inp);
+        let (g3, _) = prescored_hyper_attention(&inp, &cfg(32, 16, Coupling::Glm3Corrected));
+        let (g2, _) = prescored_hyper_attention(&inp, &cfg(32, 16, Coupling::Glm2Artifact));
+        let err3 = rel_error(&g3, &e);
+        let err2 = rel_error(&g2, &e);
+        assert!(err3 < err2, "GLM3 {err3} should beat GLM2 {err2}");
+    }
+
+    #[test]
+    fn bias_mask_only_uses_selected_values() {
+        // Use V marked per row; verify outputs are combinations of selected
+        // rows only (GLM3 path).
+        let (q, k, _) = planted_qkv(64, 8, 16, 4);
+        let mut v = Matrix::zeros(64, 2);
+        for i in 0..64 {
+            v[(i, 0)] = if i < 16 { 1.0 } else { -1.0 }; // heavy rows marked +1
+            v[(i, 1)] = i as f32;
+        }
+        let inp = AttentionInputs::new(&q, &k, &v);
+        let c = cfg(16, 0, Coupling::Glm3Corrected);
+        let (out, stats) = prescored_hyper_attention(&inp, &c);
+        assert_eq!(stats.selected, 16);
+        // If selection found the heavy keys (0..8), marker must be ≈ +1.
+        for i in 0..64 {
+            assert!(out[(i, 0)] > 0.9, "row {i} marker {}", out[(i, 0)]);
+        }
+    }
+
+    #[test]
+    fn restricted_exact_matches_manual_gather() {
+        let (q, k, v) = planted_qkv(32, 4, 4, 5);
+        let inp = AttentionInputs::new(&q, &k, &v);
+        let sel = vec![0usize, 3, 10, 17];
+        let out = restricted_exact_attention(&inp, &sel);
+        let ks = k.gather_rows(&sel);
+        let vs = v.gather_rows(&sel);
+        let manual = exact_attention(&AttentionInputs::new(&q, &ks, &vs));
+        assert_eq!(out.data, manual.data);
+    }
+
+    #[test]
+    fn stats_report_budget() {
+        let (q, k, v) = planted_qkv(128, 8, 8, 6);
+        let inp = AttentionInputs::new(&q, &k, &v);
+        let (_, stats) = prescored_hyper_attention(&inp, &cfg(40, 0, Coupling::Glm3Corrected));
+        assert_eq!(stats.selected, 40);
+        assert_eq!(stats.total_keys, 128);
+        assert!(!stats.fallback_used);
+    }
+
+    #[test]
+    fn leverage_method_works_end_to_end() {
+        let (q, k, v) = planted_qkv(128, 8, 8, 8);
+        let inp = AttentionInputs::new(&q, &k, &v);
+        let mut c = cfg(16, 8, Coupling::Glm3Corrected);
+        c.prescore.method = Method::Leverage { exact: true };
+        let (out, stats) = prescored_hyper_attention(&inp, &c);
+        assert_eq!(stats.selected, 16);
+        assert!(out.data.iter().all(|x| x.is_finite()));
+    }
+}

@@ -1,0 +1,230 @@
+//! Gaussian-kernel k-means (Appendix I of the paper).
+//!
+//! Kernel k-means assigns points to clusters by distance in the RKHS of a
+//! Gaussian kernel k(x,y) = exp(−||x−y||²/(2γ²)). The feature-space distance
+//! to a cluster C is
+//!   ||φ(x) − µ_C||² = k(x,x) − (2/|C|) Σ_{y∈C} k(x,y)
+//!                      + (1/|C|²) Σ_{y,z∈C} k(y,z),
+//! so no explicit feature map is needed. For pre-scoring we also need a
+//! per-point "distance to centroid" ranking, which the feature-space distance
+//! provides directly.
+//!
+//! Cost is O(n²) per iteration from the kernel matrix; the paper uses it
+//! only as a GLM2-era ablation (Table 8), and our benches size it accordingly.
+
+use super::Clustering;
+use crate::linalg::ops::sq_dist;
+use crate::linalg::Matrix;
+use crate::util::rng::Rng;
+
+/// Run Gaussian-kernel k-means.
+///
+/// `gamma` is the kernel bandwidth; if `gamma <= 0` the median pairwise
+/// distance heuristic is used. Returns centroids in *input space* (cluster
+/// means) purely for interoperability — assignment and objective are
+/// feature-space quantities.
+pub fn gaussian_kernel_kmeans(
+    data: &Matrix,
+    k: usize,
+    gamma: f32,
+    max_iters: usize,
+    rng: &mut Rng,
+) -> Clustering {
+    let n = data.rows;
+    let k = k.max(1).min(n);
+
+    // Kernel matrix (symmetric, k(x,x)=1).
+    let gamma = if gamma > 0.0 { gamma } else { median_heuristic(data, rng) };
+    let inv2g2 = 1.0 / (2.0 * gamma * gamma);
+    let mut ker = Matrix::zeros(n, n);
+    for i in 0..n {
+        ker[(i, i)] = 1.0;
+        for j in i + 1..n {
+            let v = (-sq_dist(data.row(i), data.row(j)) * inv2g2).exp();
+            ker[(i, j)] = v;
+            ker[(j, i)] = v;
+        }
+    }
+
+    // Initialize assignment from plain k-means (good seeding, cheap).
+    let mut assignment = super::kmeans::kmeans(data, k, 2, rng).assignment;
+    let mut iterations = 0;
+    let mut objective = 0.0f32;
+
+    for iter in 0..max_iters.max(1) {
+        iterations = iter + 1;
+        // Cluster membership lists + intra-cluster kernel sums.
+        let mut members: Vec<Vec<usize>> = vec![Vec::new(); k];
+        for i in 0..n {
+            members[assignment[i]].push(i);
+        }
+        let mut intra = vec![0.0f64; k]; // Σ_{y,z∈C} k(y,z)
+        for c in 0..k {
+            let m = &members[c];
+            let mut s = 0.0f64;
+            for &y in m {
+                for &z in m {
+                    s += ker[(y, z)] as f64;
+                }
+            }
+            intra[c] = s;
+        }
+
+        let mut changed = false;
+        objective = 0.0;
+        for i in 0..n {
+            let (mut best, mut best_d) = (assignment[i], f32::INFINITY);
+            for c in 0..k {
+                let m = &members[c];
+                if m.is_empty() {
+                    continue;
+                }
+                let size = m.len() as f64;
+                let cross: f64 = m.iter().map(|&y| ker[(i, y)] as f64).sum();
+                let d = 1.0 - 2.0 * cross / size + intra[c] / (size * size);
+                let d = d as f32;
+                if d < best_d {
+                    best_d = d;
+                    best = c;
+                }
+            }
+            objective += best_d.max(0.0);
+            if assignment[i] != best {
+                assignment[i] = best;
+                changed = true;
+            }
+        }
+        if !changed && iter > 0 {
+            break;
+        }
+    }
+
+    // Input-space means for reporting/selection interoperability.
+    let mut centroids = Matrix::zeros(k, data.cols);
+    let mut counts = vec![0usize; k];
+    for i in 0..n {
+        counts[assignment[i]] += 1;
+        let crow = centroids.row_mut(assignment[i]);
+        for (cv, dv) in crow.iter_mut().zip(data.row(i)) {
+            *cv += dv;
+        }
+    }
+    for c in 0..k {
+        if counts[c] > 0 {
+            let inv = 1.0 / counts[c] as f32;
+            for v in centroids.row_mut(c) {
+                *v *= inv;
+            }
+        }
+    }
+
+    Clustering { assignment, centroids, objective, iterations }
+}
+
+/// Feature-space distance of every point to its assigned cluster, for
+/// kernel-k-means-based selection (lower = closer to centroid).
+pub fn kernel_distances(
+    data: &Matrix,
+    assignment: &[usize],
+    k: usize,
+    gamma: f32,
+) -> Vec<f32> {
+    let n = data.rows;
+    let inv2g2 = 1.0 / (2.0 * gamma * gamma);
+    let kerf = |i: usize, j: usize| (-sq_dist(data.row(i), data.row(j)) * inv2g2).exp() as f64;
+    let mut members: Vec<Vec<usize>> = vec![Vec::new(); k];
+    for i in 0..n {
+        members[assignment[i]].push(i);
+    }
+    let mut intra = vec![0.0f64; k];
+    for c in 0..k {
+        let m = &members[c];
+        let mut s = 0.0;
+        for &y in m {
+            for &z in m {
+                s += kerf(y, z);
+            }
+        }
+        intra[c] = s;
+    }
+    (0..n)
+        .map(|i| {
+            let c = assignment[i];
+            let m = &members[c];
+            let size = m.len() as f64;
+            let cross: f64 = m.iter().map(|&y| kerf(i, y)).sum();
+            (1.0 - 2.0 * cross / size + intra[c] / (size * size)).max(0.0) as f32
+        })
+        .collect()
+}
+
+/// Median pairwise distance over a subsample — standard bandwidth heuristic.
+fn median_heuristic(data: &Matrix, rng: &mut Rng) -> f32 {
+    let n = data.rows;
+    let samples = 256.min(n * (n - 1) / 2).max(1);
+    let mut dists: Vec<f32> = (0..samples)
+        .map(|_| {
+            let i = rng.usize(n);
+            let mut j = rng.usize(n);
+            while j == i && n > 1 {
+                j = rng.usize(n);
+            }
+            sq_dist(data.row(i), data.row(j)).sqrt()
+        })
+        .collect();
+    dists.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    dists[dists.len() / 2].max(1e-6)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clustering::partitions_match;
+
+    fn ring_and_center(rng: &mut Rng) -> (Matrix, Vec<usize>) {
+        // A dataset where kernel k-means shines: center blob + surrounding
+        // ring (not linearly separable into compact ℓ2 balls).
+        let n_each = 40;
+        let mut data = Matrix::zeros(n_each * 2, 2);
+        let mut truth = vec![0usize; n_each * 2];
+        for i in 0..n_each {
+            // center blob
+            data[(i, 0)] = rng.gauss32(0.0, 0.15);
+            data[(i, 1)] = rng.gauss32(0.0, 0.15);
+            // ring radius 3
+            let theta = rng.f32() * std::f32::consts::TAU;
+            let r = 3.0 + rng.gauss32(0.0, 0.1);
+            data[(n_each + i, 0)] = r * theta.cos();
+            data[(n_each + i, 1)] = r * theta.sin();
+            truth[n_each + i] = 1;
+        }
+        (data, truth)
+    }
+
+    #[test]
+    fn separates_ring_from_center() {
+        let mut rng = Rng::new(1);
+        let (data, truth) = ring_and_center(&mut rng);
+        let c = gaussian_kernel_kmeans(&data, 2, 0.8, 15, &mut rng);
+        assert!(partitions_match(&c.assignment, &truth));
+    }
+
+    #[test]
+    fn kernel_distance_nonnegative_and_zero_for_singleton() {
+        let data = Matrix::from_vec(3, 1, vec![0.0, 5.0, 10.0]);
+        let assignment = vec![0, 1, 2];
+        let d = kernel_distances(&data, &assignment, 3, 1.0);
+        for v in d {
+            assert!(v >= 0.0 && v < 1e-6);
+        }
+    }
+
+    #[test]
+    fn objective_finite() {
+        let mut rng = Rng::new(2);
+        let data = Matrix::randn(60, 3, 1.0, &mut rng);
+        let c = gaussian_kernel_kmeans(&data, 4, -1.0, 8, &mut rng); // heuristic gamma
+        assert!(c.objective.is_finite());
+        assert_eq!(c.assignment.len(), 60);
+    }
+}

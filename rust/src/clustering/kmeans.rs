@@ -1,0 +1,229 @@
+//! Lloyd's k-means with k-means++ initialization.
+//!
+//! The paper's default pre-scoring route (Algorithm 1, method = KMEANS).
+//! Per §3.1 the per-layer cost is O(n · d · k · I) with a fixed small
+//! iteration cap (I ≤ 10), which we expose as `max_iters`.
+
+use super::Clustering;
+use crate::linalg::ops::sq_dist;
+use crate::linalg::Matrix;
+use crate::util::rng::Rng;
+
+/// Extended result giving access to per-point distances for selection.
+pub type KMeansResult = Clustering;
+
+/// k-means++ seeding: first centroid uniform, then proportional to D².
+pub fn kmeanspp_init(data: &Matrix, k: usize, rng: &mut Rng) -> Matrix {
+    let n = data.rows;
+    assert!(k >= 1 && n >= 1);
+    let mut centroids = Matrix::zeros(k.min(n), data.cols);
+    let first = rng.usize(n);
+    centroids.row_mut(0).copy_from_slice(data.row(first));
+    let mut d2: Vec<f64> = (0..n).map(|i| sq_dist(data.row(i), centroids.row(0)) as f64).collect();
+    for c in 1..k.min(n) {
+        let pick = rng.weighted_choice(&d2).unwrap_or_else(|| rng.usize(n));
+        centroids.row_mut(c).copy_from_slice(data.row(pick));
+        for i in 0..n {
+            let nd = sq_dist(data.row(i), centroids.row(c)) as f64;
+            if nd < d2[i] {
+                d2[i] = nd;
+            }
+        }
+    }
+    centroids
+}
+
+/// Run Lloyd's algorithm. `k` is clamped to the number of points.
+///
+/// Converges when no assignment changes or after `max_iters` iterations
+/// (paper: I ≤ 10). Empty clusters are re-seeded to the point currently
+/// farthest from its centroid, which keeps exactly `k` non-degenerate
+/// clusters — important because pre-scoring selects "keys nearest to their
+/// centroids" and degenerate centroids would distort the ranking.
+pub fn kmeans(data: &Matrix, k: usize, max_iters: usize, rng: &mut Rng) -> Clustering {
+    let n = data.rows;
+    let k = k.max(1).min(n);
+    let mut centroids = kmeanspp_init(data, k, rng);
+    let mut assignment = vec![0usize; n];
+    let mut iterations = 0;
+
+    let mut cent_sq = vec![0.0f32; k];
+    for iter in 0..max_iters.max(1) {
+        iterations = iter + 1;
+        // Assignment step in dot-product form: argmin ‖x−c‖² =
+        // argmin (‖c‖² − 2·x·c). Halves the flops of the subtract-square
+        // loop and keeps the inner loop a pure dot product (§Perf L3-1).
+        for (c, cs) in cent_sq.iter_mut().enumerate() {
+            *cs = crate::linalg::ops::dot(centroids.row(c), centroids.row(c));
+        }
+        let mut changed = false;
+        for i in 0..n {
+            let row = data.row(i);
+            let mut best = 0usize;
+            let mut best_d = f32::INFINITY;
+            for c in 0..k {
+                let d = cent_sq[c] - 2.0 * crate::linalg::ops::dot(row, centroids.row(c));
+                if d < best_d {
+                    best_d = d;
+                    best = c;
+                }
+            }
+            if assignment[i] != best {
+                assignment[i] = best;
+                changed = true;
+            }
+        }
+        // Update step.
+        let mut counts = vec![0usize; k];
+        let mut sums = Matrix::zeros(k, data.cols);
+        for i in 0..n {
+            let a = assignment[i];
+            counts[a] += 1;
+            let srow = sums.row_mut(a);
+            for (s, v) in srow.iter_mut().zip(data.row(i)) {
+                *s += v;
+            }
+        }
+        for c in 0..k {
+            if counts[c] == 0 {
+                // Re-seed to the current farthest point.
+                let far = (0..n)
+                    .max_by(|&a, &b| {
+                        let da = sq_dist(data.row(a), centroids.row(assignment[a]));
+                        let db = sq_dist(data.row(b), centroids.row(assignment[b]));
+                        da.partial_cmp(&db).unwrap()
+                    })
+                    .unwrap();
+                centroids.row_mut(c).copy_from_slice(data.row(far));
+                changed = true;
+            } else {
+                let inv = 1.0 / counts[c] as f32;
+                let crow = centroids.row_mut(c);
+                for (cv, sv) in crow.iter_mut().zip(sums.row(c)) {
+                    *cv = sv * inv;
+                }
+            }
+        }
+        if !changed && iter > 0 {
+            break;
+        }
+    }
+
+    let objective: f32 = (0..n).map(|i| sq_dist(data.row(i), centroids.row(assignment[i]))).sum();
+    Clustering { assignment, centroids, objective, iterations }
+}
+
+/// Best-of-`restarts` k-means: run Lloyd from several k-means++ seedings and
+/// keep the lowest-objective clustering. Pre-scoring uses a small number of
+/// restarts to make heavy-group recovery robust to unlucky seeding.
+pub fn kmeans_best_of(
+    data: &Matrix,
+    k: usize,
+    max_iters: usize,
+    restarts: usize,
+    rng: &mut Rng,
+) -> Clustering {
+    let mut best: Option<Clustering> = None;
+    for _ in 0..restarts.max(1) {
+        let c = kmeans(data, k, max_iters, rng);
+        if best.as_ref().map_or(true, |b| c.objective < b.objective) {
+            best = Some(c);
+        }
+    }
+    best.unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clustering::partitions_match;
+
+    /// Two well-separated Gaussian blobs.
+    fn blobs(n_per: usize, rng: &mut Rng) -> (Matrix, Vec<usize>) {
+        let mut data = Matrix::zeros(n_per * 2, 2);
+        let mut truth = vec![0usize; n_per * 2];
+        for i in 0..n_per {
+            data[(i, 0)] = rng.gauss32(-5.0, 0.3);
+            data[(i, 1)] = rng.gauss32(0.0, 0.3);
+            truth[i] = 0;
+            data[(n_per + i, 0)] = rng.gauss32(5.0, 0.3);
+            data[(n_per + i, 1)] = rng.gauss32(0.0, 0.3);
+            truth[n_per + i] = 1;
+        }
+        (data, truth)
+    }
+
+    #[test]
+    fn recovers_two_blobs() {
+        let mut rng = Rng::new(1);
+        let (data, truth) = blobs(50, &mut rng);
+        let c = kmeans(&data, 2, 10, &mut rng);
+        assert!(partitions_match(&c.assignment, &truth));
+        // centroids near ±5
+        let xs: Vec<f32> = (0..2).map(|i| c.centroids[(i, 0)]).collect();
+        assert!(xs.iter().any(|&x| (x - 5.0).abs() < 0.5));
+        assert!(xs.iter().any(|&x| (x + 5.0).abs() < 0.5));
+    }
+
+    #[test]
+    fn objective_nonincreasing_with_more_iters() {
+        let mut rng = Rng::new(2);
+        let data = Matrix::randn(200, 8, 1.0, &mut rng);
+        let mut r1 = Rng::new(7);
+        let c1 = kmeans(&data, 5, 1, &mut r1);
+        let mut r2 = Rng::new(7);
+        let c10 = kmeans(&data, 5, 10, &mut r2);
+        assert!(c10.objective <= c1.objective * 1.0001, "{} > {}", c10.objective, c1.objective);
+    }
+
+    #[test]
+    fn k_clamped_to_n() {
+        let mut rng = Rng::new(3);
+        let data = Matrix::randn(3, 2, 1.0, &mut rng);
+        let c = kmeans(&data, 10, 5, &mut rng);
+        assert_eq!(c.k(), 3);
+        assert!(c.assignment.iter().all(|&a| a < 3));
+    }
+
+    #[test]
+    fn singleton_points_zero_objective() {
+        let data = Matrix::from_vec(3, 1, vec![0.0, 10.0, 20.0]);
+        let mut rng = Rng::new(4);
+        let c = kmeans(&data, 3, 10, &mut rng);
+        assert!(c.objective < 1e-9);
+        let mut sizes = c.sizes();
+        sizes.sort_unstable();
+        assert_eq!(sizes, vec![1, 1, 1]);
+    }
+
+    #[test]
+    fn deterministic_given_rng_seed() {
+        let mut r = Rng::new(5);
+        let data = Matrix::randn(100, 4, 1.0, &mut r);
+        let mut r1 = Rng::new(9);
+        let mut r2 = Rng::new(9);
+        let c1 = kmeans(&data, 4, 10, &mut r1);
+        let c2 = kmeans(&data, 4, 10, &mut r2);
+        assert_eq!(c1.assignment, c2.assignment);
+        assert_eq!(c1.objective, c2.objective);
+    }
+
+    #[test]
+    fn best_of_never_worse_than_single() {
+        let mut rng = Rng::new(11);
+        let data = Matrix::randn(150, 4, 1.0, &mut rng);
+        let mut r1 = Rng::new(12);
+        let single = kmeans(&data, 6, 10, &mut r1);
+        let mut r2 = Rng::new(12);
+        let multi = kmeans_best_of(&data, 6, 10, 5, &mut r2);
+        assert!(multi.objective <= single.objective + 1e-6);
+    }
+
+    #[test]
+    fn iteration_cap_respected() {
+        let mut rng = Rng::new(6);
+        let data = Matrix::randn(500, 6, 1.0, &mut rng);
+        let c = kmeans(&data, 8, 3, &mut rng);
+        assert!(c.iterations <= 3);
+    }
+}

@@ -1,0 +1,145 @@
+//! k-median clustering (ℓ1 objective, coordinate-wise median update).
+//!
+//! The KMEDIAN route of Algorithm 1. Assignment uses ℓ1 distance; the
+//! centroid update is the coordinate-wise median, which minimizes the ℓ1
+//! objective for fixed assignment.
+
+use super::Clustering;
+use crate::linalg::ops::lp_dist_pow;
+use crate::linalg::Matrix;
+use crate::util::rng::Rng;
+
+/// Median of a mutable scratch slice (averages the two middle elements for
+/// even length, matching numpy's convention).
+fn median_inplace(xs: &mut [f32]) -> f32 {
+    let n = xs.len();
+    assert!(n > 0);
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    if n % 2 == 1 {
+        xs[n / 2]
+    } else {
+        0.5 * (xs[n / 2 - 1] + xs[n / 2])
+    }
+}
+
+/// Run k-median. Initialization reuses k-means++ (distance-squared seeding is
+/// a fine heuristic for ℓ1 as well). Empty clusters are re-seeded to the
+/// point with the largest current ℓ1 distance.
+pub fn kmedian(data: &Matrix, k: usize, max_iters: usize, rng: &mut Rng) -> Clustering {
+    let n = data.rows;
+    let d = data.cols;
+    let k = k.max(1).min(n);
+    let mut centroids = super::kmeans::kmeanspp_init(data, k, rng);
+    let mut assignment = vec![0usize; n];
+    let mut iterations = 0;
+
+    for iter in 0..max_iters.max(1) {
+        iterations = iter + 1;
+        let mut changed = false;
+        for i in 0..n {
+            let row = data.row(i);
+            let (mut best, mut best_d) = (0usize, f32::INFINITY);
+            for c in 0..k {
+                let dist = lp_dist_pow(row, centroids.row(c), 1.0);
+                if dist < best_d {
+                    best_d = dist;
+                    best = c;
+                }
+            }
+            if assignment[i] != best {
+                assignment[i] = best;
+                changed = true;
+            }
+        }
+        // Coordinate-wise median update.
+        let mut members: Vec<Vec<usize>> = vec![Vec::new(); k];
+        for i in 0..n {
+            members[assignment[i]].push(i);
+        }
+        let mut scratch: Vec<f32> = Vec::with_capacity(n);
+        for c in 0..k {
+            if members[c].is_empty() {
+                let far = (0..n)
+                    .max_by(|&a, &b| {
+                        let da = lp_dist_pow(data.row(a), centroids.row(assignment[a]), 1.0);
+                        let db = lp_dist_pow(data.row(b), centroids.row(assignment[b]), 1.0);
+                        da.partial_cmp(&db).unwrap()
+                    })
+                    .unwrap();
+                centroids.row_mut(c).copy_from_slice(data.row(far));
+                changed = true;
+                continue;
+            }
+            for j in 0..d {
+                scratch.clear();
+                scratch.extend(members[c].iter().map(|&i| data[(i, j)]));
+                centroids[(c, j)] = median_inplace(&mut scratch);
+            }
+        }
+        if !changed && iter > 0 {
+            break;
+        }
+    }
+
+    let objective: f32 =
+        (0..n).map(|i| lp_dist_pow(data.row(i), centroids.row(assignment[i]), 1.0)).sum();
+    Clustering { assignment, centroids, objective, iterations }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clustering::partitions_match;
+
+    #[test]
+    fn median_basic() {
+        assert_eq!(median_inplace(&mut [3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median_inplace(&mut [4.0, 1.0, 2.0, 3.0]), 2.5);
+        assert_eq!(median_inplace(&mut [7.0]), 7.0);
+    }
+
+    #[test]
+    fn recovers_separated_blobs() {
+        let mut rng = Rng::new(1);
+        let n_per = 40;
+        let mut data = Matrix::zeros(n_per * 2, 3);
+        let mut truth = vec![0usize; n_per * 2];
+        for i in 0..n_per {
+            for j in 0..3 {
+                data[(i, j)] = rng.gauss32(-4.0, 0.4);
+                data[(n_per + i, j)] = rng.gauss32(4.0, 0.4);
+            }
+            truth[n_per + i] = 1;
+        }
+        let c = kmedian(&data, 2, 10, &mut rng);
+        assert!(partitions_match(&c.assignment, &truth));
+    }
+
+    #[test]
+    fn median_update_robust_to_outlier() {
+        // One extreme outlier in a cluster should barely move the ℓ1 centroid
+        // (vs the mean, which it would drag substantially).
+        let mut data = Matrix::zeros(11, 1);
+        for i in 0..10 {
+            data[(i, 0)] = i as f32 * 0.01; // tight cluster near 0
+        }
+        data[(10, 0)] = 1000.0; // outlier
+        let mut rng = Rng::new(2);
+        let c = kmedian(&data, 2, 10, &mut rng);
+        // With k=2 the outlier should become its own cluster; the other
+        // centroid stays near 0.
+        let mut cents: Vec<f32> = (0..2).map(|i| c.centroids[(i, 0)]).collect();
+        cents.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert!(cents[0].abs() < 0.1, "low centroid {}", cents[0]);
+        assert!((cents[1] - 1000.0).abs() < 1.0, "high centroid {}", cents[1]);
+    }
+
+    #[test]
+    fn objective_finite_and_positive() {
+        let mut rng = Rng::new(3);
+        let data = Matrix::randn(100, 5, 1.0, &mut rng);
+        let c = kmedian(&data, 4, 10, &mut rng);
+        assert!(c.objective.is_finite() && c.objective > 0.0);
+        assert_eq!(c.assignment.len(), 100);
+    }
+}

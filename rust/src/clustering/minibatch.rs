@@ -1,0 +1,116 @@
+//! Mini-batch k-means (Sculley 2010 style).
+//!
+//! The paper's Appendix H names "minibatch/streaming clustering" as the
+//! hardware-friendly future-work variant of pre-scoring; we implement it so
+//! the overhead ablation bench can quantify the trade-off against full Lloyd
+//! iterations at long context lengths.
+
+use super::Clustering;
+use crate::linalg::ops::sq_dist;
+use crate::linalg::Matrix;
+use crate::util::rng::Rng;
+
+/// Run mini-batch k-means with per-centroid learning rates 1/count.
+pub fn minibatch_kmeans(
+    data: &Matrix,
+    k: usize,
+    batch_size: usize,
+    n_batches: usize,
+    rng: &mut Rng,
+) -> Clustering {
+    let n = data.rows;
+    let k = k.max(1).min(n);
+    let batch_size = batch_size.max(1).min(n);
+    let mut centroids = super::kmeans::kmeanspp_init(data, k, rng);
+    let mut counts = vec![1usize; k];
+
+    for _ in 0..n_batches {
+        let batch = rng.sample_indices(n, batch_size);
+        // Assign, then gradient-step centroids toward members.
+        for &i in &batch {
+            let row = data.row(i);
+            let (mut best, mut best_d) = (0usize, f32::INFINITY);
+            for c in 0..k {
+                let d = sq_dist(row, centroids.row(c));
+                if d < best_d {
+                    best_d = d;
+                    best = c;
+                }
+            }
+            counts[best] += 1;
+            let lr = 1.0 / counts[best] as f32;
+            let crow = centroids.row_mut(best);
+            for (cv, dv) in crow.iter_mut().zip(row) {
+                *cv += lr * (dv - *cv);
+            }
+        }
+    }
+
+    // Final full assignment for the returned clustering.
+    let mut assignment = vec![0usize; n];
+    let mut objective = 0.0f32;
+    for i in 0..n {
+        let row = data.row(i);
+        let (mut best, mut best_d) = (0usize, f32::INFINITY);
+        for c in 0..k {
+            let d = sq_dist(row, centroids.row(c));
+            if d < best_d {
+                best_d = d;
+                best = c;
+            }
+        }
+        assignment[i] = best;
+        objective += best_d;
+    }
+
+    Clustering { assignment, centroids, objective, iterations: n_batches }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clustering::kmeans::kmeans;
+    use crate::clustering::partitions_match;
+
+    #[test]
+    fn recovers_well_separated_blobs() {
+        let mut rng = Rng::new(1);
+        let n_per = 60;
+        let mut data = Matrix::zeros(n_per * 2, 2);
+        let mut truth = vec![0usize; n_per * 2];
+        for i in 0..n_per {
+            data[(i, 0)] = rng.gauss32(-6.0, 0.3);
+            data[(i, 1)] = rng.gauss32(0.0, 0.3);
+            data[(n_per + i, 0)] = rng.gauss32(6.0, 0.3);
+            data[(n_per + i, 1)] = rng.gauss32(0.0, 0.3);
+            truth[n_per + i] = 1;
+        }
+        let c = minibatch_kmeans(&data, 2, 32, 30, &mut rng);
+        assert!(partitions_match(&c.assignment, &truth));
+    }
+
+    #[test]
+    fn objective_close_to_full_lloyd() {
+        let mut rng = Rng::new(2);
+        let data = Matrix::randn(400, 6, 1.0, &mut rng);
+        let mut r1 = Rng::new(5);
+        let full = kmeans(&data, 8, 10, &mut r1);
+        let mut r2 = Rng::new(5);
+        let mb = minibatch_kmeans(&data, 8, 64, 50, &mut r2);
+        // Mini-batch should be within 25% of Lloyd's objective on easy data.
+        assert!(
+            mb.objective < full.objective * 1.25,
+            "minibatch {} vs lloyd {}",
+            mb.objective,
+            full.objective
+        );
+    }
+
+    #[test]
+    fn handles_batch_larger_than_n() {
+        let mut rng = Rng::new(3);
+        let data = Matrix::randn(10, 2, 1.0, &mut rng);
+        let c = minibatch_kmeans(&data, 3, 9999, 5, &mut rng);
+        assert_eq!(c.assignment.len(), 10);
+    }
+}

@@ -1,0 +1,180 @@
+//! Minkowski (ℓp) k-means — the Claim 4.7 generalization.
+//!
+//! Minimizes Σ_j min_i ||k_j − µ_i||_p^p. Assignment uses ℓp^p distances;
+//! the update step minimizes the coordinate-separable objective
+//! Σ |x − c|^p per coordinate:
+//!   p = 1  → median,  p = 2 → mean,  general p → 1-D ternary search
+//! (the objective is convex in c for p ≥ 1).
+
+use super::Clustering;
+use crate::linalg::ops::lp_dist_pow;
+use crate::linalg::Matrix;
+use crate::util::rng::Rng;
+
+/// Minimize f(c) = Σ_i |x_i − c|^p over c by ternary search on [min, max].
+fn lp_center(xs: &[f32], p: f32) -> f32 {
+    assert!(!xs.is_empty());
+    if (p - 2.0).abs() < 1e-9 {
+        return xs.iter().sum::<f32>() / xs.len() as f32;
+    }
+    if (p - 1.0).abs() < 1e-9 {
+        let mut v = xs.to_vec();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = v.len();
+        return if n % 2 == 1 { v[n / 2] } else { 0.5 * (v[n / 2 - 1] + v[n / 2]) };
+    }
+    let (mut lo, mut hi) = xs.iter().fold((f32::INFINITY, f32::NEG_INFINITY), |(l, h), &x| {
+        (l.min(x), h.max(x))
+    });
+    let cost = |c: f32| -> f64 { xs.iter().map(|&x| ((x - c).abs() as f64).powf(p as f64)).sum() };
+    for _ in 0..60 {
+        let m1 = lo + (hi - lo) / 3.0;
+        let m2 = hi - (hi - lo) / 3.0;
+        if cost(m1) < cost(m2) {
+            hi = m2;
+        } else {
+            lo = m1;
+        }
+        if hi - lo < 1e-7 {
+            break;
+        }
+    }
+    0.5 * (lo + hi)
+}
+
+/// Run ℓp k-means (p ≥ 1) for `max_iters` iterations.
+pub fn minkowski_kmeans(
+    data: &Matrix,
+    k: usize,
+    p: f32,
+    max_iters: usize,
+    rng: &mut Rng,
+) -> Clustering {
+    assert!(p >= 1.0, "minkowski_kmeans requires p >= 1 (convex centers)");
+    let n = data.rows;
+    let d = data.cols;
+    let k = k.max(1).min(n);
+    let mut centroids = super::kmeans::kmeanspp_init(data, k, rng);
+    let mut assignment = vec![0usize; n];
+    let mut iterations = 0;
+
+    for iter in 0..max_iters.max(1) {
+        iterations = iter + 1;
+        let mut changed = false;
+        for i in 0..n {
+            let row = data.row(i);
+            let (mut best, mut best_d) = (0usize, f32::INFINITY);
+            for c in 0..k {
+                let dist = lp_dist_pow(row, centroids.row(c), p);
+                if dist < best_d {
+                    best_d = dist;
+                    best = c;
+                }
+            }
+            if assignment[i] != best {
+                assignment[i] = best;
+                changed = true;
+            }
+        }
+        let mut members: Vec<Vec<usize>> = vec![Vec::new(); k];
+        for i in 0..n {
+            members[assignment[i]].push(i);
+        }
+        let mut scratch: Vec<f32> = Vec::new();
+        for c in 0..k {
+            if members[c].is_empty() {
+                let far = (0..n)
+                    .max_by(|&a, &b| {
+                        let da = lp_dist_pow(data.row(a), centroids.row(assignment[a]), p);
+                        let db = lp_dist_pow(data.row(b), centroids.row(assignment[b]), p);
+                        da.partial_cmp(&db).unwrap()
+                    })
+                    .unwrap();
+                centroids.row_mut(c).copy_from_slice(data.row(far));
+                changed = true;
+                continue;
+            }
+            for j in 0..d {
+                scratch.clear();
+                scratch.extend(members[c].iter().map(|&i| data[(i, j)]));
+                centroids[(c, j)] = lp_center(&scratch, p);
+            }
+        }
+        if !changed && iter > 0 {
+            break;
+        }
+    }
+
+    let objective: f32 =
+        (0..n).map(|i| lp_dist_pow(data.row(i), centroids.row(assignment[i]), p)).sum();
+    Clustering { assignment, centroids, objective, iterations }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clustering::partitions_match;
+
+    #[test]
+    fn lp_center_matches_mean_and_median() {
+        let xs = [1.0, 2.0, 3.0, 10.0];
+        assert!((lp_center(&xs, 2.0) - 4.0).abs() < 1e-6);
+        assert!((lp_center(&xs, 1.0) - 2.5).abs() < 1e-6);
+        // p=1.5 center lies between median and mean
+        let c = lp_center(&xs, 1.5);
+        assert!(c > 2.4 && c < 4.1, "center {c}");
+    }
+
+    #[test]
+    fn lp_center_convexity_sanity() {
+        // For any p>=1, cost at returned center <= cost at mean and median.
+        let xs = [0.0, 0.1, 0.3, 0.9, 5.0];
+        for &p in &[1.0f32, 1.5, 2.0, 3.0] {
+            let c = lp_center(&xs, p);
+            let cost =
+                |v: f32| xs.iter().map(|&x| ((x - v).abs() as f64).powf(p as f64)).sum::<f64>();
+            assert!(cost(c) <= cost(1.26) + 1e-4);
+            assert!(cost(c) <= cost(0.3) + 1e-4);
+        }
+    }
+
+    #[test]
+    fn recovers_blobs_for_various_p() {
+        let mut rng = Rng::new(1);
+        let n_per = 30;
+        let mut data = Matrix::zeros(n_per * 2, 2);
+        let mut truth = vec![0usize; n_per * 2];
+        for i in 0..n_per {
+            data[(i, 0)] = rng.gauss32(-3.0, 0.2);
+            data[(i, 1)] = rng.gauss32(0.0, 0.2);
+            data[(n_per + i, 0)] = rng.gauss32(3.0, 0.2);
+            data[(n_per + i, 1)] = rng.gauss32(0.0, 0.2);
+            truth[n_per + i] = 1;
+        }
+        for &p in &[1.0f32, 1.5, 2.0, 3.0] {
+            let c = minkowski_kmeans(&data, 2, p, 10, &mut rng);
+            assert!(partitions_match(&c.assignment, &truth), "p = {p}");
+        }
+    }
+
+    #[test]
+    fn p2_matches_kmeans_objective_scale() {
+        let mut rng = Rng::new(2);
+        let data = Matrix::randn(120, 4, 1.0, &mut rng);
+        let mut r1 = Rng::new(3);
+        let mk = minkowski_kmeans(&data, 5, 2.0, 10, &mut r1);
+        let mut r2 = Rng::new(3);
+        let km = super::super::kmeans::kmeans(&data, 5, 10, &mut r2);
+        // Same init stream and same metric ⇒ identical result.
+        assert_eq!(mk.assignment, km.assignment);
+        assert!((mk.objective - km.objective).abs() < 1e-2);
+    }
+
+    #[test]
+    #[should_panic(expected = "p >= 1")]
+    fn rejects_p_below_one() {
+        let data = Matrix::zeros(4, 2);
+        let mut rng = Rng::new(4);
+        minkowski_kmeans(&data, 2, 0.5, 5, &mut rng);
+    }
+}

@@ -1,0 +1,110 @@
+//! Clustering substrate for pre-scoring (Algorithm 1 routes).
+//!
+//! * [`kmeans`] — Lloyd's algorithm with k-means++ initialization (the
+//!   paper's default route; at most `I = 10` iterations per layer, §3.1).
+//! * [`kmedian`] — ℓ1 objective with coordinate-wise median updates.
+//! * [`minkowski`] — generalized ℓp k-means (Claim 4.7 / Oti et al. 2021).
+//! * [`kernel_kmeans`] — Gaussian-kernel k-means (Appendix I).
+//! * [`minibatch`] — mini-batch k-means, the hardware-friendly variant the
+//!   paper's Appendix H lists as future work.
+
+pub mod kernel_kmeans;
+pub mod kmeans;
+pub mod kmedian;
+pub mod minibatch;
+pub mod minkowski;
+
+pub use kernel_kmeans::gaussian_kernel_kmeans;
+pub use kmeans::{kmeans, kmeans_best_of, KMeansResult};
+pub use kmedian::kmedian;
+pub use minibatch::minibatch_kmeans;
+pub use minkowski::minkowski_kmeans;
+
+use crate::linalg::Matrix;
+
+/// A clustering outcome shared by all algorithms: per-point assignment,
+/// centroids, and the final objective value (sum of distances in the
+/// algorithm's own metric).
+#[derive(Debug, Clone)]
+pub struct Clustering {
+    pub assignment: Vec<usize>,
+    pub centroids: Matrix,
+    pub objective: f32,
+    pub iterations: usize,
+}
+
+impl Clustering {
+    /// Number of clusters.
+    pub fn k(&self) -> usize {
+        self.centroids.rows
+    }
+
+    /// Cluster sizes.
+    pub fn sizes(&self) -> Vec<usize> {
+        let mut sizes = vec![0usize; self.k()];
+        for &a in &self.assignment {
+            sizes[a] += 1;
+        }
+        sizes
+    }
+
+    /// Distance of each point to its assigned centroid (squared-ℓ2).
+    pub fn distances_sq(&self, data: &Matrix) -> Vec<f32> {
+        use crate::linalg::ops::sq_dist;
+        (0..data.rows)
+            .map(|i| sq_dist(data.row(i), self.centroids.row(self.assignment[i])))
+            .collect()
+    }
+}
+
+/// Check whether a clustering exactly recovers a reference partition, up to
+/// relabeling (used by the planted-model theory benches for Theorem 4.5).
+pub fn partitions_match(assign: &[usize], truth: &[usize]) -> bool {
+    assert_eq!(assign.len(), truth.len());
+    use std::collections::HashMap;
+    let mut fwd: HashMap<usize, usize> = HashMap::new();
+    let mut bwd: HashMap<usize, usize> = HashMap::new();
+    for (&a, &t) in assign.iter().zip(truth) {
+        match fwd.get(&a) {
+            Some(&mapped) if mapped != t => return false,
+            None => {
+                fwd.insert(a, t);
+            }
+            _ => {}
+        }
+        match bwd.get(&t) {
+            Some(&mapped) if mapped != a => return false,
+            None => {
+                bwd.insert(t, a);
+            }
+            _ => {}
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partitions_match_up_to_relabel() {
+        assert!(partitions_match(&[0, 0, 1, 1], &[1, 1, 0, 0]));
+        assert!(partitions_match(&[2, 2, 0, 1], &[0, 0, 1, 2]));
+        assert!(!partitions_match(&[0, 1, 1, 1], &[0, 0, 1, 1]));
+        // injectivity both ways: merging clusters is not a match
+        assert!(!partitions_match(&[0, 0, 0, 0], &[0, 0, 1, 1]));
+    }
+
+    #[test]
+    fn clustering_sizes() {
+        let c = Clustering {
+            assignment: vec![0, 1, 1, 2],
+            centroids: Matrix::zeros(3, 2),
+            objective: 0.0,
+            iterations: 1,
+        };
+        assert_eq!(c.sizes(), vec![1, 2, 1]);
+        assert_eq!(c.k(), 3);
+    }
+}

@@ -1,0 +1,206 @@
+//! Configuration system: a TOML-subset parser + typed serving configuration.
+//!
+//! The offline image has no `serde`/`toml`, so this module implements the
+//! subset the launcher needs: `[section]` headers, `key = value` pairs with
+//! string / integer / float / boolean values, comments, and typed accessors
+//! with defaults. `ServingConfig::from_file` wires the coordinator, model,
+//! and pre-scoring settings from one file (see `configs/serve.toml`).
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// A parsed config: section → key → raw value string.
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    sections: BTreeMap<String, BTreeMap<String, String>>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Config> {
+        let mut cfg = Config::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') {
+                    bail!("line {}: malformed section header '{raw}'", lineno + 1);
+                }
+                section = line[1..line.len() - 1].trim().to_string();
+                cfg.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let Some((k, v)) = line.split_once('=') else {
+                bail!("line {}: expected key = value, got '{raw}'", lineno + 1);
+            };
+            let key = k.trim().to_string();
+            let mut val = v.trim().to_string();
+            if val.len() >= 2 && val.starts_with('"') && val.ends_with('"') {
+                val = val[1..val.len() - 1].to_string();
+            }
+            cfg.sections.entry(section.clone()).or_default().insert(key, val);
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: &Path) -> Result<Config> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&str> {
+        self.sections.get(section)?.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, section: &str, key: &str, default: &'a str) -> &'a str {
+        self.get(section, key).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, section: &str, key: &str, default: usize) -> Result<usize> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("[{section}] {key} = {v}")),
+        }
+    }
+
+    pub fn f64_or(&self, section: &str, key: &str, default: f64) -> Result<f64> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("[{section}] {key} = {v}")),
+        }
+    }
+
+    pub fn bool_or(&self, section: &str, key: &str, default: bool) -> Result<bool> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some("true") => Ok(true),
+            Some("false") => Ok(false),
+            Some(v) => bail!("[{section}] {key} = {v} is not a boolean"),
+        }
+    }
+
+    pub fn sections(&self) -> impl Iterator<Item = &String> {
+        self.sections.keys()
+    }
+}
+
+/// Typed serving configuration for the launcher and coordinator.
+#[derive(Debug, Clone)]
+pub struct ServingConfig {
+    /// Directory holding the AOT artifacts.
+    pub artifacts_dir: String,
+    /// Which model variant to serve ("exact" or "prescored_k{K}").
+    pub variant: String,
+    pub batch_size: usize,
+    pub max_seq: usize,
+    /// Dynamic batcher flush deadline (ms).
+    pub batch_deadline_ms: f64,
+    /// Token budget per batch.
+    pub max_batch_tokens: usize,
+    /// Pre-score method for the coordinator's prescore manager.
+    pub prescore_method: String,
+    pub prescore_top_k: usize,
+    /// Refresh the cached selection every R decode steps.
+    pub prescore_refresh_every: usize,
+    /// Fallback threshold δ of Algorithm 2.
+    pub fallback_delta: f64,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        ServingConfig {
+            artifacts_dir: "artifacts".into(),
+            variant: "exact".into(),
+            batch_size: 4,
+            max_seq: 256,
+            batch_deadline_ms: 5.0,
+            max_batch_tokens: 4096,
+            prescore_method: "kmeans".into(),
+            prescore_top_k: 64,
+            prescore_refresh_every: 16,
+            fallback_delta: 0.0,
+        }
+    }
+}
+
+impl ServingConfig {
+    pub fn from_config(cfg: &Config) -> Result<ServingConfig> {
+        let d = ServingConfig::default();
+        Ok(ServingConfig {
+            artifacts_dir: cfg.get_or("serving", "artifacts_dir", &d.artifacts_dir).to_string(),
+            variant: cfg.get_or("serving", "variant", &d.variant).to_string(),
+            batch_size: cfg.usize_or("serving", "batch_size", d.batch_size)?,
+            max_seq: cfg.usize_or("serving", "max_seq", d.max_seq)?,
+            batch_deadline_ms: cfg.f64_or("serving", "batch_deadline_ms", d.batch_deadline_ms)?,
+            max_batch_tokens: cfg.usize_or("serving", "max_batch_tokens", d.max_batch_tokens)?,
+            prescore_method: cfg.get_or("prescore", "method", &d.prescore_method).to_string(),
+            prescore_top_k: cfg.usize_or("prescore", "top_k", d.prescore_top_k)?,
+            prescore_refresh_every: cfg
+                .usize_or("prescore", "refresh_every", d.prescore_refresh_every)?,
+            fallback_delta: cfg.f64_or("prescore", "fallback_delta", d.fallback_delta)?,
+        })
+    }
+
+    pub fn from_file(path: &Path) -> Result<ServingConfig> {
+        Self::from_config(&Config::load(path)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# serving config
+[serving]
+artifacts_dir = "artifacts"
+variant = "prescored_k64"
+batch_size = 8
+batch_deadline_ms = 2.5
+
+[prescore]
+method = "kmedian"
+top_k = 128
+fallback_delta = 0.05
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let cfg = Config::parse(SAMPLE).unwrap();
+        assert_eq!(cfg.get("serving", "variant"), Some("prescored_k64"));
+        assert_eq!(cfg.usize_or("serving", "batch_size", 1).unwrap(), 8);
+        assert_eq!(cfg.f64_or("serving", "batch_deadline_ms", 0.0).unwrap(), 2.5);
+        assert_eq!(cfg.usize_or("serving", "missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn serving_config_typed() {
+        let cfg = Config::parse(SAMPLE).unwrap();
+        let sc = ServingConfig::from_config(&cfg).unwrap();
+        assert_eq!(sc.variant, "prescored_k64");
+        assert_eq!(sc.batch_size, 8);
+        assert_eq!(sc.prescore_method, "kmedian");
+        assert_eq!(sc.prescore_top_k, 128);
+        assert!((sc.fallback_delta - 0.05).abs() < 1e-12);
+        // defaults fill unspecified keys
+        assert_eq!(sc.max_seq, 256);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Config::parse("[unclosed\n").is_err());
+        assert!(Config::parse("keyvalue\n").is_err());
+        let cfg = Config::parse("[s]\nb = maybe\n").unwrap();
+        assert!(cfg.bool_or("s", "b", true).is_err());
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let cfg = Config::parse("# top\n\n[a]\nx = 1 # inline\n").unwrap();
+        assert_eq!(cfg.get("a", "x"), Some("1"));
+    }
+}

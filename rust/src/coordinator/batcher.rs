@@ -1,0 +1,256 @@
+//! Dynamic batcher: groups queued requests into fixed-shape batches that
+//! match the compiled PJRT artifacts.
+//!
+//! Policies (all invariant-tested, including by `proptest_lite`):
+//! * a batch never exceeds `max_batch_tokens` (padded accounting: every lane
+//!   costs `max_seq` tokens because the artifact shape is fixed);
+//! * a batch never exceeds the largest available lane count, and lane counts
+//!   are drawn from the compiled bucket list (e.g. {1, 4});
+//! * FIFO admission — a request never overtakes an earlier one into a later
+//!   batch;
+//! * deadline flush: a non-empty batch is emitted once the oldest queued
+//!   request has waited `deadline`.
+
+use super::request::Request;
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+/// Batcher configuration.
+#[derive(Debug, Clone)]
+pub struct BatcherConfig {
+    /// Available artifact lane counts, ascending (e.g. [1, 4]).
+    pub buckets: Vec<usize>,
+    /// Padded token budget per batch.
+    pub max_batch_tokens: usize,
+    /// Artifact sequence length (every lane pads to this).
+    pub max_seq: usize,
+    /// Deadline before a partial batch is flushed.
+    pub deadline: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig {
+            buckets: vec![1, 4],
+            max_batch_tokens: 4096,
+            max_seq: 256,
+            deadline: Duration::from_millis(5),
+        }
+    }
+}
+
+/// An emitted batch: the requests plus the artifact lane count to use
+/// (requests.len() <= lanes; the launcher pads the remainder).
+#[derive(Debug)]
+pub struct Batch {
+    pub requests: Vec<Request>,
+    pub lanes: usize,
+}
+
+/// FIFO dynamic batcher.
+pub struct DynamicBatcher {
+    cfg: BatcherConfig,
+    queue: VecDeque<Request>,
+}
+
+impl DynamicBatcher {
+    pub fn new(cfg: BatcherConfig) -> Self {
+        assert!(!cfg.buckets.is_empty(), "need at least one lane bucket");
+        let mut cfg = cfg;
+        cfg.buckets.sort_unstable();
+        DynamicBatcher { cfg, queue: VecDeque::new() }
+    }
+
+    pub fn push(&mut self, req: Request) {
+        self.queue.push_back(req);
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Max lanes that fit the token budget.
+    fn budget_lanes(&self) -> usize {
+        (self.cfg.max_batch_tokens / self.cfg.max_seq).max(1)
+    }
+
+    /// The largest compiled bucket not exceeding `want` (falls back to the
+    /// smallest bucket so a single oversized request still ships alone).
+    fn pick_bucket(&self, want: usize) -> usize {
+        let mut best = self.cfg.buckets[0];
+        for &b in &self.cfg.buckets {
+            if b <= want {
+                best = b;
+            }
+        }
+        best
+    }
+
+    /// Emit the next batch if the policy says so: either a full bucket is
+    /// ready, or the oldest request exceeded the deadline.
+    pub fn poll(&mut self, now: Instant) -> Option<Batch> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        let cap = self.budget_lanes().min(*self.cfg.buckets.last().unwrap());
+        let deadline_hit =
+            now.duration_since(self.queue.front().unwrap().arrived) >= self.cfg.deadline;
+        if self.queue.len() < cap && !deadline_hit {
+            return None;
+        }
+        let lanes = self.pick_bucket(self.queue.len().min(cap));
+        let take = lanes.min(self.queue.len());
+        let requests: Vec<Request> = self.queue.drain(..take).collect();
+        Some(Batch { requests, lanes })
+    }
+
+    /// Flush everything (shutdown path), respecting bucket shapes.
+    pub fn drain_all(&mut self) -> Vec<Batch> {
+        let mut out = Vec::new();
+        while !self.queue.is_empty() {
+            let cap = self.budget_lanes().min(*self.cfg.buckets.last().unwrap());
+            let lanes = self.pick_bucket(self.queue.len().min(cap));
+            let take = lanes.min(self.queue.len());
+            let requests: Vec<Request> = self.queue.drain(..take).collect();
+            out.push(Batch { requests, lanes });
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::proptest_lite::{run_property_noshrink, Config};
+
+    fn req(id: u64, n: usize) -> Request {
+        Request::scoring(id, vec![0; n])
+    }
+
+    fn cfg() -> BatcherConfig {
+        BatcherConfig {
+            buckets: vec![1, 4],
+            max_batch_tokens: 1024,
+            max_seq: 256,
+            deadline: Duration::from_millis(5),
+        }
+    }
+
+    #[test]
+    fn full_bucket_ships_immediately() {
+        let mut b = DynamicBatcher::new(cfg());
+        for i in 0..4 {
+            b.push(req(i, 100));
+        }
+        let batch = b.poll(Instant::now()).expect("full bucket should ship");
+        assert_eq!(batch.lanes, 4);
+        assert_eq!(batch.requests.len(), 4);
+        assert_eq!(b.queue_len(), 0);
+    }
+
+    #[test]
+    fn partial_waits_for_deadline() {
+        let mut b = DynamicBatcher::new(cfg());
+        b.push(req(0, 100));
+        assert!(b.poll(Instant::now()).is_none(), "should wait for deadline");
+        let later = Instant::now() + Duration::from_millis(50);
+        let batch = b.poll(later).expect("deadline flush");
+        assert_eq!(batch.lanes, 1);
+    }
+
+    #[test]
+    fn deadline_flush_picks_largest_fitting_bucket() {
+        let mut b = DynamicBatcher::new(cfg());
+        b.push(req(0, 10));
+        b.push(req(1, 10));
+        b.push(req(2, 10));
+        let later = Instant::now() + Duration::from_millis(50);
+        let batch = b.poll(later).unwrap();
+        // 3 queued → bucket 1 (largest ≤ 3 among {1,4} is 1)
+        assert_eq!(batch.lanes, 1);
+        assert_eq!(batch.requests.len(), 1);
+        assert_eq!(b.queue_len(), 2);
+    }
+
+    #[test]
+    fn fifo_preserved() {
+        let mut b = DynamicBatcher::new(cfg());
+        for i in 0..8 {
+            b.push(req(i, 10));
+        }
+        let b1 = b.poll(Instant::now()).unwrap();
+        let b2 = b.poll(Instant::now()).unwrap();
+        let ids1: Vec<u64> = b1.requests.iter().map(|r| r.id).collect();
+        let ids2: Vec<u64> = b2.requests.iter().map(|r| r.id).collect();
+        assert_eq!(ids1, vec![0, 1, 2, 3]);
+        assert_eq!(ids2, vec![4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn token_budget_bounds_lanes() {
+        // budget 1024 / seq 256 = 4 lanes max; with seq 512 only 2 lanes.
+        let c = BatcherConfig { max_seq: 512, ..cfg() };
+        let mut b = DynamicBatcher::new(c);
+        for i in 0..4 {
+            b.push(req(i, 100));
+        }
+        let batch = b.poll(Instant::now()).unwrap();
+        assert!(batch.lanes <= 2);
+    }
+
+    #[test]
+    fn drain_all_empties_queue() {
+        let mut b = DynamicBatcher::new(cfg());
+        for i in 0..6 {
+            b.push(req(i, 10));
+        }
+        let batches = b.drain_all();
+        let total: usize = batches.iter().map(|x| x.requests.len()).sum();
+        assert_eq!(total, 6);
+        assert_eq!(b.queue_len(), 0);
+        for batch in &batches {
+            assert!(batch.requests.len() <= batch.lanes);
+        }
+    }
+
+    #[test]
+    fn property_batches_respect_budget_and_fifo() {
+        run_property_noshrink(
+            "batcher-invariants",
+            Config { cases: 50, ..Default::default() },
+            |r| {
+                let n = r.range(1, 40);
+                (0..n).map(|i| (i as u64, r.range(1, 257))).collect::<Vec<_>>()
+            },
+            |reqs| {
+                let mut b = DynamicBatcher::new(cfg());
+                for &(id, len) in reqs {
+                    b.push(req(id, len));
+                }
+                let mut seen: Vec<u64> = Vec::new();
+                let far = Instant::now() + Duration::from_secs(10);
+                while let Some(batch) = b.poll(far) {
+                    prop_assert!(
+                        batch.lanes * 256 <= 1024,
+                        "token budget exceeded: {} lanes",
+                        batch.lanes
+                    );
+                    prop_assert!(
+                        batch.requests.len() <= batch.lanes,
+                        "more requests than lanes"
+                    );
+                    prop_assert!(
+                        [1usize, 4].contains(&batch.lanes),
+                        "lane count {} not a compiled bucket",
+                        batch.lanes
+                    );
+                    seen.extend(batch.requests.iter().map(|r| r.id));
+                }
+                let want: Vec<u64> = reqs.iter().map(|&(id, _)| id).collect();
+                prop_assert!(seen == want, "FIFO violated: {seen:?} vs {want:?}");
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,288 @@
+//! Block-allocated KV-cache manager.
+//!
+//! Pages of `BLOCK_SIZE` token slots are allocated from a fixed pool with
+//! ref-counting (shared prefixes can share pages). The manager also owns the
+//! per-(sequence, layer) *key-selection sets* produced by the pre-score
+//! manager — the paper's cached prefill selection — so eviction of a
+//! sequence releases both its KV pages and its selections atomically.
+
+use std::collections::HashMap;
+
+pub const BLOCK_SIZE: usize = 16;
+
+/// A page of KV storage (identified by index into the pool).
+pub type BlockId = usize;
+
+/// Fixed-pool block allocator with ref counts.
+pub struct BlockAllocator {
+    refcounts: Vec<u32>,
+    free: Vec<BlockId>,
+}
+
+impl BlockAllocator {
+    pub fn new(num_blocks: usize) -> Self {
+        BlockAllocator { refcounts: vec![0; num_blocks], free: (0..num_blocks).rev().collect() }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.refcounts.len()
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Allocate one block (refcount 1).
+    pub fn alloc(&mut self) -> Option<BlockId> {
+        let id = self.free.pop()?;
+        debug_assert_eq!(self.refcounts[id], 0);
+        self.refcounts[id] = 1;
+        Some(id)
+    }
+
+    /// Increment refcount (prefix sharing).
+    pub fn retain(&mut self, id: BlockId) {
+        assert!(self.refcounts[id] > 0, "retain of free block {id}");
+        self.refcounts[id] += 1;
+    }
+
+    /// Decrement refcount; the block returns to the pool at zero.
+    pub fn release(&mut self, id: BlockId) {
+        assert!(self.refcounts[id] > 0, "double free of block {id}");
+        self.refcounts[id] -= 1;
+        if self.refcounts[id] == 0 {
+            self.free.push(id);
+        }
+    }
+
+    pub fn refcount(&self, id: BlockId) -> u32 {
+        self.refcounts[id]
+    }
+}
+
+/// Per-sequence cache state.
+struct SeqEntry {
+    blocks: Vec<BlockId>,
+    tokens: usize,
+    /// Cached key selections per layer (indices into the sequence).
+    selections: Vec<Vec<usize>>,
+    /// Decode steps since the selection was last refreshed.
+    steps_since_refresh: usize,
+}
+
+/// The KV-cache manager: sequence → pages + cached selections.
+pub struct KvCacheManager {
+    alloc: BlockAllocator,
+    seqs: HashMap<u64, SeqEntry>,
+    num_layers: usize,
+}
+
+impl KvCacheManager {
+    pub fn new(num_blocks: usize, num_layers: usize) -> Self {
+        KvCacheManager { alloc: BlockAllocator::new(num_blocks), seqs: HashMap::new(), num_layers }
+    }
+
+    /// Admit a sequence with `tokens` context tokens; allocates
+    /// ceil(tokens/BLOCK_SIZE) pages. Fails (None) if the pool is exhausted,
+    /// leaving no partial allocation behind.
+    pub fn admit(&mut self, seq_id: u64, tokens: usize) -> Option<()> {
+        assert!(!self.seqs.contains_key(&seq_id), "sequence {seq_id} already admitted");
+        let need = tokens.div_ceil(BLOCK_SIZE).max(1);
+        if self.alloc.free_blocks() < need {
+            return None;
+        }
+        let blocks: Vec<BlockId> = (0..need).map(|_| self.alloc.alloc().unwrap()).collect();
+        self.seqs.insert(
+            seq_id,
+            SeqEntry {
+                blocks,
+                tokens,
+                selections: vec![Vec::new(); self.num_layers],
+                steps_since_refresh: 0,
+            },
+        );
+        Some(())
+    }
+
+    /// Append one decoded token, growing by a page when crossing a boundary.
+    pub fn append_token(&mut self, seq_id: u64) -> Option<()> {
+        // Check growth need without holding a borrow across alloc.
+        let needs_block = {
+            let e = self.seqs.get(&seq_id).expect("unknown sequence");
+            e.tokens % BLOCK_SIZE == 0 && e.tokens > 0
+        };
+        if needs_block {
+            let blk = self.alloc.alloc()?;
+            self.seqs.get_mut(&seq_id).unwrap().blocks.push(blk);
+        }
+        let e = self.seqs.get_mut(&seq_id).unwrap();
+        e.tokens += 1;
+        e.steps_since_refresh += 1;
+        Some(())
+    }
+
+    /// Store the per-layer selections computed at prefill (or refresh).
+    pub fn set_selections(&mut self, seq_id: u64, selections: Vec<Vec<usize>>) {
+        let e = self.seqs.get_mut(&seq_id).expect("unknown sequence");
+        assert_eq!(selections.len(), self.num_layers);
+        e.selections = selections;
+        e.steps_since_refresh = 0;
+    }
+
+    pub fn selections(&self, seq_id: u64) -> Option<&[Vec<usize>]> {
+        self.seqs.get(&seq_id).map(|e| e.selections.as_slice())
+    }
+
+    pub fn steps_since_refresh(&self, seq_id: u64) -> usize {
+        self.seqs.get(&seq_id).map(|e| e.steps_since_refresh).unwrap_or(0)
+    }
+
+    /// Release a sequence: frees its pages and selections.
+    pub fn evict(&mut self, seq_id: u64) {
+        if let Some(e) = self.seqs.remove(&seq_id) {
+            for b in e.blocks {
+                self.alloc.release(b);
+            }
+        }
+    }
+
+    pub fn tokens(&self, seq_id: u64) -> usize {
+        self.seqs.get(&seq_id).map(|e| e.tokens).unwrap_or(0)
+    }
+
+    pub fn num_sequences(&self) -> usize {
+        self.seqs.len()
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.alloc.free_blocks()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.alloc.capacity()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::proptest_lite::{run_property_noshrink, Config};
+
+    #[test]
+    fn alloc_release_roundtrip() {
+        let mut a = BlockAllocator::new(4);
+        let b1 = a.alloc().unwrap();
+        let b2 = a.alloc().unwrap();
+        assert_eq!(a.free_blocks(), 2);
+        a.retain(b1);
+        a.release(b1);
+        assert_eq!(a.refcount(b1), 1); // still held
+        a.release(b1);
+        a.release(b2);
+        assert_eq!(a.free_blocks(), 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "double free")]
+    fn double_free_panics() {
+        let mut a = BlockAllocator::new(2);
+        let b = a.alloc().unwrap();
+        a.release(b);
+        a.release(b);
+    }
+
+    #[test]
+    fn admit_allocates_pages() {
+        let mut kv = KvCacheManager::new(8, 2);
+        kv.admit(1, 33).unwrap(); // ceil(33/16) = 3 pages
+        assert_eq!(kv.free_blocks(), 5);
+        assert_eq!(kv.tokens(1), 33);
+        kv.evict(1);
+        assert_eq!(kv.free_blocks(), 8);
+    }
+
+    #[test]
+    fn admit_fails_cleanly_when_full() {
+        let mut kv = KvCacheManager::new(2, 1);
+        assert!(kv.admit(1, 40).is_none()); // needs 3 > 2
+        assert_eq!(kv.free_blocks(), 2); // nothing leaked
+        assert!(kv.admit(2, 20).is_some()); // needs 2
+    }
+
+    #[test]
+    fn append_grows_on_boundary() {
+        let mut kv = KvCacheManager::new(4, 1);
+        kv.admit(1, 16).unwrap(); // exactly one page
+        assert_eq!(kv.free_blocks(), 3);
+        kv.append_token(1).unwrap(); // crosses boundary → new page
+        assert_eq!(kv.free_blocks(), 2);
+        for _ in 0..15 {
+            kv.append_token(1).unwrap(); // fills page, no new alloc
+        }
+        assert_eq!(kv.free_blocks(), 2);
+        kv.append_token(1).unwrap(); // next boundary
+        assert_eq!(kv.free_blocks(), 1);
+    }
+
+    #[test]
+    fn selections_stored_and_refresh_counter() {
+        let mut kv = KvCacheManager::new(8, 2);
+        kv.admit(5, 10).unwrap();
+        kv.set_selections(5, vec![vec![0, 3], vec![1, 2]]);
+        assert_eq!(kv.selections(5).unwrap()[0], vec![0, 3]);
+        assert_eq!(kv.steps_since_refresh(5), 0);
+        kv.append_token(5).unwrap();
+        kv.append_token(5).unwrap();
+        assert_eq!(kv.steps_since_refresh(5), 2);
+        kv.set_selections(5, vec![vec![0], vec![1]]);
+        assert_eq!(kv.steps_since_refresh(5), 0);
+    }
+
+    #[test]
+    fn property_no_leaks_no_double_free() {
+        run_property_noshrink(
+            "kv-cache-conservation",
+            Config { cases: 40, ..Default::default() },
+            |r| {
+                // random op sequence: (admit len) / (append) / (evict)
+                (0..r.range(5, 60))
+                    .map(|_| (r.usize(3), r.range(1, 64), r.usize(6) as u64))
+                    .collect::<Vec<_>>()
+            },
+            |ops| {
+                let mut kv = KvCacheManager::new(32, 2);
+                let mut live: std::collections::HashSet<u64> = Default::default();
+                for &(op, len, id) in ops {
+                    match op {
+                        0 => {
+                            if !live.contains(&id) && kv.admit(id, len).is_some() {
+                                live.insert(id);
+                            }
+                        }
+                        1 => {
+                            if live.contains(&id) {
+                                let _ = kv.append_token(id);
+                            }
+                        }
+                        _ => {
+                            kv.evict(id);
+                            live.remove(&id);
+                        }
+                    }
+                    prop_assert!(kv.free_blocks() <= kv.capacity(), "free > capacity");
+                }
+                for id in live.iter() {
+                    kv.evict(*id);
+                }
+                prop_assert!(
+                    kv.free_blocks() == kv.capacity(),
+                    "leak: {} free of {}",
+                    kv.free_blocks(),
+                    kv.capacity()
+                );
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,27 @@
+//! The L3 serving coordinator — the systems half of the paper's
+//! contribution: pre-scoring as a *first-class feature of the serving
+//! stack*, per §3.1's computational perspective ("pre-scoring is performed
+//! during the prefill stage; during token-by-token decoding we reuse this
+//! selection or update it only periodically").
+//!
+//! Components (vLLM-router-shaped):
+//! * [`request`] — request/response types and lifecycle states;
+//! * [`batcher`] — dynamic batching with token budget, deadline flush, and
+//!   padded-shape buckets matching the compiled artifact batch sizes;
+//! * [`kv_cache`] — block-allocated KV store with ref-counting (page size
+//!   16) that also owns the per-(sequence, layer) key-selection sets;
+//! * [`prescore_manager`] — Algorithm 1 at prefill, cached selection with
+//!   periodic refresh during decode, Algorithm 2's δ-fallback;
+//! * [`scheduler`] — prefill/decode queues with a decode-starvation bound.
+
+pub mod batcher;
+pub mod kv_cache;
+pub mod prescore_manager;
+pub mod request;
+pub mod scheduler;
+
+pub use batcher::{Batch, BatcherConfig, DynamicBatcher};
+pub use kv_cache::{BlockAllocator, KvCacheManager};
+pub use prescore_manager::{PreScoreManager, PreScoreManagerConfig};
+pub use request::{Request, RequestId, RequestState, Response};
+pub use scheduler::{Scheduler, SchedulerConfig, WorkItem};

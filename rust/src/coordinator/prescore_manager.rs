@@ -1,0 +1,147 @@
+//! Pre-score manager: Algorithm 1 at prefill, cached + periodically
+//! refreshed during decode, with Algorithm 2's δ-fallback.
+//!
+//! §3.1: "For autoregressive decoding, pre-scoring is performed during the
+//! prefill stage; during token-by-token decoding we reuse this selection (or
+//! update it only periodically), avoiding an O(n) clustering pass at every
+//! step."
+
+use crate::linalg::Matrix;
+use crate::prescore::{prescore, Method, PreScoreConfig, PreScoreResult};
+
+/// Policy configuration.
+#[derive(Debug, Clone)]
+pub struct PreScoreManagerConfig {
+    pub method: Method,
+    pub top_k: usize,
+    /// Refresh the cached selection every R decode steps (0 = never).
+    pub refresh_every: usize,
+    /// Algorithm 2 fallback threshold δ: selection below δ·n disables
+    /// filtering for that layer.
+    pub fallback_delta: f32,
+    pub seed: u64,
+}
+
+impl Default for PreScoreManagerConfig {
+    fn default() -> Self {
+        PreScoreManagerConfig {
+            method: Method::KMeans,
+            top_k: 64,
+            refresh_every: 16,
+            fallback_delta: 0.0,
+            seed: 0,
+        }
+    }
+}
+
+/// Outcome of a selection decision for one layer.
+#[derive(Debug, Clone)]
+pub struct SelectionDecision {
+    pub selected: Vec<usize>,
+    pub fallback_used: bool,
+}
+
+/// The manager itself is stateless over sequences (state lives in the
+/// KV-cache manager); it encapsulates the policy.
+pub struct PreScoreManager {
+    pub cfg: PreScoreManagerConfig,
+}
+
+impl PreScoreManager {
+    pub fn new(cfg: PreScoreManagerConfig) -> Self {
+        PreScoreManager { cfg }
+    }
+
+    /// Run Algorithm 1 on one layer's key matrix at prefill.
+    pub fn select(&self, keys: &Matrix, layer: usize) -> SelectionDecision {
+        let n = keys.rows;
+        let ps_cfg = PreScoreConfig {
+            method: self.cfg.method,
+            top_k: self.cfg.top_k,
+            seed: self.cfg.seed.wrapping_add(layer as u64),
+            ..Default::default()
+        };
+        let r: PreScoreResult = prescore(keys, &ps_cfg);
+        // Algorithm 2 line 2: fallback when |S| < δ·n.
+        if (r.selected.len() as f32) < self.cfg.fallback_delta * n as f32 {
+            return SelectionDecision { selected: (0..n).collect(), fallback_used: true };
+        }
+        SelectionDecision { selected: r.selected, fallback_used: false }
+    }
+
+    /// Decode-time policy: does the cached selection need a refresh?
+    pub fn needs_refresh(&self, steps_since_refresh: usize) -> bool {
+        self.cfg.refresh_every > 0 && steps_since_refresh >= self.cfg.refresh_every
+    }
+
+    /// Extend a cached selection with a freshly decoded position without
+    /// re-clustering: new tokens are always visible until the next refresh
+    /// (they cannot have been scored yet, and recency is a strong prior).
+    pub fn extend_with_new_token(&self, selected: &mut Vec<usize>, new_pos: usize) {
+        if selected.last() != Some(&new_pos) {
+            selected.push(new_pos);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn keys(n: usize, d: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        Matrix::randn(n, d, 1.0, &mut rng)
+    }
+
+    #[test]
+    fn select_returns_budget() {
+        let m = PreScoreManager::new(PreScoreManagerConfig { top_k: 16, ..Default::default() });
+        let k = keys(128, 8, 1);
+        let d = m.select(&k, 0);
+        assert_eq!(d.selected.len(), 16);
+        assert!(!d.fallback_used);
+    }
+
+    #[test]
+    fn fallback_triggers() {
+        let m = PreScoreManager::new(PreScoreManagerConfig {
+            top_k: 4,
+            fallback_delta: 0.5, // 4 < 0.5·128
+            ..Default::default()
+        });
+        let k = keys(128, 8, 2);
+        let d = m.select(&k, 0);
+        assert!(d.fallback_used);
+        assert_eq!(d.selected.len(), 128);
+    }
+
+    #[test]
+    fn refresh_policy() {
+        let m = PreScoreManager::new(PreScoreManagerConfig { refresh_every: 8, ..Default::default() });
+        assert!(!m.needs_refresh(7));
+        assert!(m.needs_refresh(8));
+        assert!(m.needs_refresh(100));
+        let never = PreScoreManager::new(PreScoreManagerConfig { refresh_every: 0, ..Default::default() });
+        assert!(!never.needs_refresh(10_000));
+    }
+
+    #[test]
+    fn per_layer_seeds_differ() {
+        let m = PreScoreManager::new(PreScoreManagerConfig { top_k: 8, ..Default::default() });
+        let k = keys(256, 8, 3);
+        let d0 = m.select(&k, 0);
+        let d0b = m.select(&k, 0);
+        assert_eq!(d0.selected, d0b.selected, "same layer must be deterministic");
+    }
+
+    #[test]
+    fn extend_appends_new_position() {
+        let m = PreScoreManager::new(Default::default());
+        let mut sel = vec![0, 5, 9];
+        m.extend_with_new_token(&mut sel, 12);
+        assert_eq!(sel, vec![0, 5, 9, 12]);
+        m.extend_with_new_token(&mut sel, 12); // idempotent
+        assert_eq!(sel, vec![0, 5, 9, 12]);
+    }
+}

@@ -1,0 +1,92 @@
+//! Request/response types and lifecycle.
+
+use std::time::Instant;
+
+pub type RequestId = u64;
+
+/// Lifecycle of a request inside the coordinator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RequestState {
+    /// Admitted, waiting in the prefill queue.
+    Queued,
+    /// Selected into a prefill batch (pre-scoring runs here).
+    Prefilling,
+    /// In the decode loop (selection cached, refreshed periodically).
+    Decoding,
+    /// Finished; response delivered.
+    Completed,
+    /// Rejected/failed (e.g., over max_seq).
+    Failed,
+}
+
+/// A scoring/generation request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: RequestId,
+    pub tokens: Vec<u32>,
+    /// Tokens to greedily generate after scoring (0 = scoring only).
+    pub generate: usize,
+    pub arrived: Instant,
+    pub state: RequestState,
+}
+
+impl Request {
+    pub fn scoring(id: RequestId, tokens: Vec<u32>) -> Self {
+        Request { id, tokens, generate: 0, arrived: Instant::now(), state: RequestState::Queued }
+    }
+
+    pub fn num_tokens(&self) -> usize {
+        self.tokens.len()
+    }
+}
+
+/// The response returned to the client.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: RequestId,
+    /// Per-token NLL over the scored context (length = context − 1).
+    pub nll: Vec<f32>,
+    /// Greedily generated continuation (empty for scoring-only).
+    pub generated: Vec<u32>,
+    /// Time-to-first-result in milliseconds.
+    pub latency_ms: f64,
+    /// Number of keys the pre-scorer retained for this request (reporting).
+    pub retained_keys: usize,
+    pub fallback_used: bool,
+}
+
+impl Response {
+    /// Request-level perplexity.
+    pub fn perplexity(&self) -> f64 {
+        if self.nll.is_empty() {
+            return f64::NAN;
+        }
+        (self.nll.iter().map(|&v| v as f64).sum::<f64>() / self.nll.len() as f64).exp()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_construction() {
+        let r = Request::scoring(7, vec![1, 2, 3]);
+        assert_eq!(r.id, 7);
+        assert_eq!(r.num_tokens(), 3);
+        assert_eq!(r.state, RequestState::Queued);
+    }
+
+    #[test]
+    fn response_perplexity() {
+        let resp = Response {
+            id: 0,
+            nll: vec![2f32.ln(); 4],
+            generated: vec![],
+            latency_ms: 1.0,
+            retained_keys: 8,
+            fallback_used: false,
+        };
+        assert!((resp.perplexity() - 2.0).abs() < 1e-5);
+    }
+}

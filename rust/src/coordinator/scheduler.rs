@@ -1,0 +1,186 @@
+//! Prefill/decode scheduler with a decode-starvation bound.
+//!
+//! Prefill work is throughput-critical (it fills lanes), decode work is
+//! latency-critical (it extends live sequences). The policy is
+//! prefill-priority with a starvation bound: after `max_prefill_streak`
+//! consecutive prefill dispatches with decode work pending, a decode round
+//! is forced.
+
+use std::collections::VecDeque;
+
+/// What the scheduler hands to the execution loop.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WorkItem {
+    /// Run prefill for these request ids.
+    Prefill(Vec<u64>),
+    /// Run one decode step for these sequence ids.
+    Decode(Vec<u64>),
+}
+
+/// Scheduler configuration.
+#[derive(Debug, Clone)]
+pub struct SchedulerConfig {
+    /// Force a decode round after this many consecutive prefill rounds
+    /// while decode work is waiting.
+    pub max_prefill_streak: usize,
+    /// Max sequences per decode round.
+    pub decode_width: usize,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig { max_prefill_streak: 4, decode_width: 8 }
+    }
+}
+
+/// The scheduler state.
+pub struct Scheduler {
+    cfg: SchedulerConfig,
+    prefill_q: VecDeque<Vec<u64>>,
+    decode_q: VecDeque<u64>,
+    prefill_streak: usize,
+}
+
+impl Scheduler {
+    pub fn new(cfg: SchedulerConfig) -> Self {
+        Scheduler { cfg, prefill_q: VecDeque::new(), decode_q: VecDeque::new(), prefill_streak: 0 }
+    }
+
+    /// Enqueue a prefill batch (ids grouped by the dynamic batcher).
+    pub fn submit_prefill(&mut self, ids: Vec<u64>) {
+        self.prefill_q.push_back(ids);
+    }
+
+    /// Enqueue a sequence for decoding.
+    pub fn submit_decode(&mut self, seq_id: u64) {
+        self.decode_q.push_back(seq_id);
+    }
+
+    pub fn pending_prefill(&self) -> usize {
+        self.prefill_q.len()
+    }
+
+    pub fn pending_decode(&self) -> usize {
+        self.decode_q.len()
+    }
+
+    /// Next work item under prefill-priority + starvation bound.
+    pub fn next(&mut self) -> Option<WorkItem> {
+        let decode_waiting = !self.decode_q.is_empty();
+        let force_decode = decode_waiting && self.prefill_streak >= self.cfg.max_prefill_streak;
+        if !force_decode {
+            if let Some(ids) = self.prefill_q.pop_front() {
+                self.prefill_streak += 1;
+                return Some(WorkItem::Prefill(ids));
+            }
+        }
+        if decode_waiting {
+            self.prefill_streak = 0;
+            let take = self.cfg.decode_width.min(self.decode_q.len());
+            let ids: Vec<u64> = self.decode_q.drain(..take).collect();
+            return Some(WorkItem::Decode(ids));
+        }
+        // Nothing to do (or forced decode with empty decode queue — cannot
+        // happen given decode_waiting guard).
+        if let Some(ids) = self.prefill_q.pop_front() {
+            self.prefill_streak += 1;
+            return Some(WorkItem::Prefill(ids));
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::proptest_lite::{run_property_noshrink, Config};
+
+    #[test]
+    fn prefill_priority() {
+        let mut s = Scheduler::new(Default::default());
+        s.submit_decode(1);
+        s.submit_prefill(vec![10]);
+        assert_eq!(s.next(), Some(WorkItem::Prefill(vec![10])));
+        assert_eq!(s.next(), Some(WorkItem::Decode(vec![1])));
+        assert_eq!(s.next(), None);
+    }
+
+    #[test]
+    fn starvation_bound_forces_decode() {
+        let cfg = SchedulerConfig { max_prefill_streak: 2, decode_width: 4 };
+        let mut s = Scheduler::new(cfg);
+        s.submit_decode(99);
+        for i in 0..5 {
+            s.submit_prefill(vec![i]);
+        }
+        assert!(matches!(s.next(), Some(WorkItem::Prefill(_))));
+        assert!(matches!(s.next(), Some(WorkItem::Prefill(_))));
+        // streak = 2 ⇒ decode forced even though prefill is pending
+        assert_eq!(s.next(), Some(WorkItem::Decode(vec![99])));
+        assert!(matches!(s.next(), Some(WorkItem::Prefill(_))));
+    }
+
+    #[test]
+    fn decode_width_bounds_round() {
+        let cfg = SchedulerConfig { max_prefill_streak: 1, decode_width: 3 };
+        let mut s = Scheduler::new(cfg);
+        for i in 0..7 {
+            s.submit_decode(i);
+        }
+        assert_eq!(s.next(), Some(WorkItem::Decode(vec![0, 1, 2])));
+        assert_eq!(s.next(), Some(WorkItem::Decode(vec![3, 4, 5])));
+        assert_eq!(s.next(), Some(WorkItem::Decode(vec![6])));
+    }
+
+    #[test]
+    fn property_nothing_lost_and_starvation_bounded() {
+        run_property_noshrink(
+            "scheduler-invariants",
+            Config { cases: 40, ..Default::default() },
+            |r| {
+                (0..r.range(1, 80))
+                    .map(|i| (r.bool(0.5), i as u64))
+                    .collect::<Vec<_>>()
+            },
+            |ops| {
+                let cfg = SchedulerConfig { max_prefill_streak: 3, decode_width: 2 };
+                let mut s = Scheduler::new(cfg);
+                let mut submitted_p = 0usize;
+                let mut submitted_d = 0usize;
+                for &(is_prefill, id) in ops {
+                    if is_prefill {
+                        s.submit_prefill(vec![id]);
+                        submitted_p += 1;
+                    } else {
+                        s.submit_decode(id);
+                        submitted_d += 1;
+                    }
+                }
+                let mut got_p = 0usize;
+                let mut got_d = 0usize;
+                let mut streak = 0usize;
+                while let Some(item) = s.next() {
+                    match item {
+                        WorkItem::Prefill(ids) => {
+                            got_p += ids.len();
+                            streak += 1;
+                            prop_assert!(
+                                streak <= 3 || s.pending_decode() == 0,
+                                "prefill streak {} with decode pending",
+                                streak
+                            );
+                        }
+                        WorkItem::Decode(ids) => {
+                            got_d += ids.len();
+                            streak = 0;
+                        }
+                    }
+                }
+                prop_assert!(got_p == submitted_p, "lost prefill work");
+                prop_assert!(got_d == submitted_d, "lost decode work");
+                Ok(())
+            },
+        );
+    }
+}

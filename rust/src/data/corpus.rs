@@ -1,0 +1,133 @@
+//! Anchored long-range synthetic corpus.
+//!
+//! Rust mirror of `python/compile/corpus.py` (same *distribution*, not
+//! bit-identical streams — python uses numpy's PCG, we use ours). Token map:
+//! `0 = BOS`, `1 = ANCHOR`, `2 = RECALL`, `3..=10` delimiters, `11..vocab`
+//! ordinary words/entities. A RECALL token is followed by the most recent
+//! entity token, so predicting it requires attending to a distant anchor —
+//! the long-range heavy-key structure pre-scoring targets.
+
+use crate::util::rng::Rng;
+
+pub const BOS: u32 = 0;
+pub const ANCHOR: u32 = 1;
+pub const RECALL: u32 = 2;
+pub const FIRST_DELIM: u32 = 3;
+pub const NUM_DELIMS: u32 = 8;
+pub const FIRST_WORD: u32 = 11;
+
+/// Generate one document of `length` tokens over a `vocab`-sized alphabet.
+pub fn generate(vocab: u32, length: usize, seed: u64) -> Vec<u32> {
+    assert!(vocab > FIRST_WORD + 8, "vocab too small");
+    let mut rng = Rng::with_stream(seed, 0xc0de);
+    let n_words = (vocab - FIRST_WORD) as usize;
+    // Order-1 Markov successor table.
+    let succ: Vec<[u32; 4]> = (0..n_words)
+        .map(|_| {
+            [
+                rng.usize(n_words) as u32,
+                rng.usize(n_words) as u32,
+                rng.usize(n_words) as u32,
+                rng.usize(n_words) as u32,
+            ]
+        })
+        .collect();
+
+    let mut out = Vec::with_capacity(length);
+    out.push(BOS);
+    let mut entity = FIRST_WORD + rng.usize(n_words) as u32;
+    let mut prev_word = 0usize;
+    while out.len() < length {
+        let r = rng.f64();
+        if r < 0.02 {
+            out.push(ANCHOR);
+            if out.len() < length {
+                entity = FIRST_WORD + rng.usize(n_words) as u32;
+                out.push(entity);
+            }
+        } else if r < 0.05 {
+            out.push(RECALL);
+            if out.len() < length {
+                out.push(entity);
+            }
+        } else if r < 0.12 {
+            out.push(FIRST_DELIM + rng.usize(NUM_DELIMS as usize) as u32);
+        } else {
+            let w = if rng.bool(0.7) {
+                succ[prev_word][rng.usize(4)] as usize
+            } else {
+                rng.zipf(n_words, 1.1)
+            };
+            out.push(FIRST_WORD + w as u32);
+            prev_word = w;
+        }
+    }
+    out.truncate(length);
+    out
+}
+
+/// A batch of independent documents, `[batch, length]` row-major.
+pub fn batch(vocab: u32, batch_size: usize, length: usize, seed: u64) -> Vec<Vec<u32>> {
+    (0..batch_size)
+        .map(|b| generate(vocab, length, seed.wrapping_mul(10_007).wrapping_add(b as u64)))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tokens_in_range_and_bos_first() {
+        let t = generate(128, 1000, 1);
+        assert_eq!(t.len(), 1000);
+        assert_eq!(t[0], BOS);
+        assert!(t.iter().all(|&x| x < 128));
+    }
+
+    #[test]
+    fn anchors_and_recalls_present() {
+        let t = generate(128, 4096, 2);
+        let anchors = t.iter().filter(|&&x| x == ANCHOR).count();
+        let recalls = t.iter().filter(|&&x| x == RECALL).count();
+        assert!(anchors > 10, "{anchors}");
+        assert!(recalls > 10, "{recalls}");
+    }
+
+    #[test]
+    fn recall_copies_latest_entity() {
+        let t = generate(128, 4096, 3);
+        let mut entity: Option<u32> = None;
+        let mut checked = 0;
+        let mut i = 0;
+        while i + 1 < t.len() {
+            if t[i] == ANCHOR && t[i + 1] >= FIRST_WORD {
+                entity = Some(t[i + 1]);
+                i += 2;
+            } else if t[i] == RECALL {
+                if let Some(e) = entity {
+                    assert_eq!(t[i + 1], e, "recall at {i} mismatched");
+                    checked += 1;
+                }
+                i += 2;
+            } else {
+                i += 1;
+            }
+        }
+        assert!(checked > 5, "only {checked} recalls verified");
+    }
+
+    #[test]
+    fn deterministic_and_seed_sensitive() {
+        assert_eq!(generate(64, 256, 9), generate(64, 256, 9));
+        assert_ne!(generate(64, 256, 9), generate(64, 256, 10));
+    }
+
+    #[test]
+    fn batch_shapes() {
+        let b = batch(64, 3, 128, 0);
+        assert_eq!(b.len(), 3);
+        assert!(b.iter().all(|d| d.len() == 128));
+        assert_ne!(b[0], b[1]);
+    }
+}

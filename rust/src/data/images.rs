@@ -1,0 +1,214 @@
+//! Structured synthetic image dataset — the ImageNet-1k substitution for the
+//! ViT experiments (DESIGN.md §Substitutions).
+//!
+//! Images are `size × size` grayscale, composed of class-dependent structure
+//! so that (a) a patch-based classifier genuinely needs attention across
+//! patches and (b) a few patches are *globally informative* (the object
+//! patches) while the background is textured noise — the heavy-key geometry
+//! of real ViT attention.
+//!
+//! Each class c places a distinctive pattern (oriented bar / blob / checker
+//! pair) at a class-dependent *pair* of anchor locations plus a random
+//! distractor location, over a low-amplitude textured background.
+
+use crate::linalg::Matrix;
+use crate::util::rng::Rng;
+
+/// Dataset configuration.
+#[derive(Debug, Clone)]
+pub struct ImageConfig {
+    pub size: usize,
+    pub patch: usize,
+    pub num_classes: usize,
+    pub seed: u64,
+}
+
+impl Default for ImageConfig {
+    fn default() -> Self {
+        ImageConfig { size: 64, patch: 8, num_classes: 10, seed: 0 }
+    }
+}
+
+impl ImageConfig {
+    /// Patches per side.
+    pub fn grid(&self) -> usize {
+        self.size / self.patch
+    }
+    /// Sequence length seen by the ViT (+1 for the class token).
+    pub fn num_patches(&self) -> usize {
+        self.grid() * self.grid()
+    }
+    /// Patch embedding input dimension.
+    pub fn patch_dim(&self) -> usize {
+        self.patch * self.patch
+    }
+}
+
+/// One labelled image.
+#[derive(Debug, Clone)]
+pub struct LabelledImage {
+    /// size×size pixels in [0, 1].
+    pub pixels: Matrix,
+    pub label: usize,
+}
+
+/// Draw one image of class `label`.
+pub fn sample_image(cfg: &ImageConfig, label: usize, rng: &mut Rng) -> LabelledImage {
+    let s = cfg.size;
+    let mut px = Matrix::zeros(s, s);
+    // Textured background: low-frequency sinusoid + noise.
+    let fx = 0.1 + 0.2 * rng.f32();
+    let fy = 0.1 + 0.2 * rng.f32();
+    for i in 0..s {
+        for j in 0..s {
+            let t = (i as f32 * fx).sin() * (j as f32 * fy).cos();
+            px[(i, j)] = 0.35 + 0.08 * t + rng.gauss32(0.0, 0.05);
+        }
+    }
+    // Class-dependent anchor cells in the patch grid — a *closed-form*
+    // function of the class so the Python training pipeline
+    // (python/compile/vit_data.py) builds bit-compatible class structure.
+    let g = cfg.grid();
+    let (a1, a2) = class_anchors(label, g);
+    let kind = label % 3;
+    for &(gi, gj) in &[a1, a2] {
+        stamp(&mut px, cfg, gi, gj, kind, 0.9, rng);
+    }
+    // Distractor: another class's pattern at a random spot, lower contrast.
+    let dk = (label + 1) % 3;
+    stamp(&mut px, cfg, rng.usize(g), rng.usize(g), dk, 0.4, rng);
+    for v in px.data.iter_mut() {
+        *v = v.clamp(0.0, 1.0);
+    }
+    LabelledImage { pixels: px, label }
+}
+
+/// Closed-form class anchor cells (shared formula with vit_data.py).
+pub fn class_anchors(label: usize, g: usize) -> ((usize, usize), (usize, usize)) {
+    let a1 = ((label * 7 + 3) % g, (label * 3 + 1) % g);
+    let mut a2 = ((label * 5 + 2) % g, (label * 11 + 5) % g);
+    if a2 == a1 {
+        a2 = ((a1.0 + 1) % g, a1.1);
+    }
+    (a1, a2)
+}
+
+/// Stamp a pattern into patch cell (gi, gj).
+fn stamp(px: &mut Matrix, cfg: &ImageConfig, gi: usize, gj: usize, kind: usize, amp: f32, rng: &mut Rng) {
+    let p = cfg.patch;
+    let (r0, c0) = (gi * p, gj * p);
+    for di in 0..p {
+        for dj in 0..p {
+            let v = match kind {
+                0 => {
+                    // oriented bar (diagonal)
+                    if (di as i32 - dj as i32).abs() <= 1 {
+                        1.0
+                    } else {
+                        0.0
+                    }
+                }
+                1 => {
+                    // centered blob
+                    let cx = p as f32 / 2.0 - 0.5;
+                    let r2 = (di as f32 - cx).powi(2) + (dj as f32 - cx).powi(2);
+                    (-(r2 / (p as f32))).exp()
+                }
+                _ => {
+                    // checkerboard
+                    if (di / 2 + dj / 2) % 2 == 0 {
+                        1.0
+                    } else {
+                        0.0
+                    }
+                }
+            };
+            let cell = &mut px[(r0 + di, c0 + dj)];
+            *cell = (*cell) * (1.0 - amp) + amp * v + rng.gauss32(0.0, 0.01);
+        }
+    }
+}
+
+/// A dataset of `n` images with labels round-robin over classes.
+pub fn dataset(cfg: &ImageConfig, n: usize, seed: u64) -> Vec<LabelledImage> {
+    let mut rng = Rng::with_stream(seed, 0x1141);
+    (0..n).map(|i| sample_image(cfg, i % cfg.num_classes, &mut rng)).collect()
+}
+
+/// Flatten an image into its `[num_patches, patch_dim]` patch matrix.
+pub fn to_patches(img: &LabelledImage, cfg: &ImageConfig) -> Matrix {
+    let g = cfg.grid();
+    let p = cfg.patch;
+    let mut out = Matrix::zeros(g * g, p * p);
+    for gi in 0..g {
+        for gj in 0..g {
+            let row = out.row_mut(gi * g + gj);
+            for di in 0..p {
+                for dj in 0..p {
+                    row[di * p + dj] = img.pixels[(gi * p + di, gj * p + dj)];
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn image_shapes_and_range() {
+        let cfg = ImageConfig::default();
+        let mut rng = Rng::new(1);
+        let img = sample_image(&cfg, 3, &mut rng);
+        assert_eq!(img.pixels.rows, 64);
+        assert!(img.pixels.data.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        assert_eq!(img.label, 3);
+    }
+
+    #[test]
+    fn patches_roundtrip_pixels() {
+        let cfg = ImageConfig { size: 16, patch: 4, num_classes: 3, seed: 0 };
+        let mut rng = Rng::new(2);
+        let img = sample_image(&cfg, 0, &mut rng);
+        let patches = to_patches(&img, &cfg);
+        assert_eq!(patches.rows, 16);
+        assert_eq!(patches.cols, 16);
+        // first patch first pixel = image (0,0)
+        assert_eq!(patches[(0, 0)], img.pixels[(0, 0)]);
+        // patch (1,1) top-left = image (4,4)
+        assert_eq!(patches[(5, 0)], img.pixels[(4, 4)]);
+    }
+
+    #[test]
+    fn anchors_are_class_consistent() {
+        // Two images of the same class share anchor locations (high-contrast
+        // cells at the same grid positions); different classes differ.
+        let cfg = ImageConfig { size: 32, patch: 8, num_classes: 5, seed: 7 };
+        let mut rng = Rng::new(3);
+        let energy = |img: &LabelledImage| -> Vec<f32> {
+            let patches = to_patches(img, &cfg);
+            (0..patches.rows)
+                .map(|r| {
+                    let row = patches.row(r);
+                    let m: f32 = row.iter().sum::<f32>() / row.len() as f32;
+                    row.iter().map(|v| (v - m) * (v - m)).sum()
+                })
+                .collect()
+        };
+        let a1 = energy(&sample_image(&cfg, 2, &mut rng));
+        let a2 = energy(&sample_image(&cfg, 2, &mut rng));
+        let top = |e: &[f32]| crate::linalg::ops::top_k_indices(e, 2);
+        assert_eq!(top(&a1), top(&a2), "same class should share anchors");
+    }
+
+    #[test]
+    fn dataset_balanced() {
+        let cfg = ImageConfig { size: 16, patch: 4, num_classes: 4, seed: 0 };
+        let ds = dataset(&cfg, 20, 1);
+        for c in 0..4 {
+            assert_eq!(ds.iter().filter(|x| x.label == c).count(), 5);
+        }
+    }
+}

@@ -1,0 +1,16 @@
+//! Synthetic data substrates.
+//!
+//! * [`corpus`] — the anchored long-range token corpus (mirror of
+//!   `python/compile/corpus.py`) used for perplexity experiments and the
+//!   serving workload.
+//! * [`planted`] — the §4 planted-subspace key-matrix generator, plus the
+//!   Appendix-B counterexample construction (theory benches).
+//! * [`images`] — structured synthetic image dataset for the ViT
+//!   substitution experiments (Tables 2/6, Figs. 4/5).
+//! * [`workload`] — serving request traces (Poisson arrivals, context-length
+//!   mixes) for the coordinator benches and the E2E example.
+
+pub mod corpus;
+pub mod images;
+pub mod planted;
+pub mod workload;

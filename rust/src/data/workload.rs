@@ -1,0 +1,102 @@
+//! Serving workload traces for the coordinator.
+//!
+//! Generates timed request arrivals (Poisson process) with a context-length
+//! mix modeled on long-context serving: a bulk of medium-length scoring
+//! requests plus a heavy tail of near-max-length ones. Used by the E2E
+//! example and the coordinator benches.
+
+use crate::util::rng::Rng;
+
+/// One request in a trace.
+#[derive(Debug, Clone)]
+pub struct TraceRequest {
+    pub id: u64,
+    /// Arrival time in seconds from trace start.
+    pub arrival_s: f64,
+    /// Number of tokens in the context to score.
+    pub context_len: usize,
+    /// Corpus seed for generating the request's tokens.
+    pub corpus_seed: u64,
+}
+
+/// Trace configuration.
+#[derive(Debug, Clone)]
+pub struct WorkloadConfig {
+    /// Mean request rate (req/s).
+    pub rate: f64,
+    /// Number of requests.
+    pub count: usize,
+    /// Maximum context length (compiled artifact size).
+    pub max_len: usize,
+    /// Fraction of requests at (close to) max length.
+    pub long_frac: f64,
+    pub seed: u64,
+}
+
+impl Default for WorkloadConfig {
+    fn default() -> Self {
+        WorkloadConfig { rate: 50.0, count: 200, max_len: 256, long_frac: 0.25, seed: 0 }
+    }
+}
+
+/// Generate a trace sorted by arrival time.
+pub fn generate_trace(cfg: &WorkloadConfig) -> Vec<TraceRequest> {
+    let mut rng = Rng::with_stream(cfg.seed, 0x17ace);
+    let mut t = 0.0f64;
+    (0..cfg.count)
+        .map(|i| {
+            t += rng.exponential(cfg.rate);
+            let context_len = if rng.bool(cfg.long_frac) {
+                // long tail: 87.5%..100% of max
+                cfg.max_len - rng.usize(cfg.max_len / 8 + 1)
+            } else {
+                // bulk: 25%..75% of max
+                cfg.max_len / 4 + rng.usize(cfg.max_len / 2)
+            }
+            .max(8);
+            TraceRequest { id: i as u64, arrival_s: t, context_len, corpus_seed: cfg.seed + i as u64 }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_sorted_and_sized() {
+        let trace = generate_trace(&WorkloadConfig::default());
+        assert_eq!(trace.len(), 200);
+        for w in trace.windows(2) {
+            assert!(w[0].arrival_s <= w[1].arrival_s);
+        }
+        assert!(trace.iter().all(|r| r.context_len >= 8 && r.context_len <= 256));
+    }
+
+    #[test]
+    fn arrival_rate_approximate() {
+        let cfg = WorkloadConfig { rate: 100.0, count: 2000, ..Default::default() };
+        let trace = generate_trace(&cfg);
+        let total_time = trace.last().unwrap().arrival_s;
+        let measured = cfg.count as f64 / total_time;
+        assert!((measured - 100.0).abs() < 15.0, "rate {measured}");
+    }
+
+    #[test]
+    fn long_fraction_respected() {
+        let cfg = WorkloadConfig { long_frac: 0.5, count: 2000, ..Default::default() };
+        let trace = generate_trace(&cfg);
+        let long = trace.iter().filter(|r| r.context_len > 224).count();
+        let frac = long as f64 / trace.len() as f64;
+        assert!((frac - 0.5).abs() < 0.08, "long frac {frac}");
+    }
+
+    #[test]
+    fn deterministic() {
+        let cfg = WorkloadConfig::default();
+        let a = generate_trace(&cfg);
+        let b = generate_trace(&cfg);
+        assert_eq!(a.len(), b.len());
+        assert!(a.iter().zip(&b).all(|(x, y)| x.arrival_s == y.arrival_s));
+    }
+}

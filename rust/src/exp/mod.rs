@@ -1,0 +1,110 @@
+//! Experiment harness shared by the bench targets and examples: the
+//! workload builders and metric loops that regenerate the paper's tables
+//! and figures (see DESIGN.md experiment index).
+
+use crate::attention::{Coupling, HyperConfig, PreScoredConfig};
+use crate::data::corpus;
+use crate::data::images::{dataset, to_patches, ImageConfig};
+use crate::metrics::PplAccum;
+use crate::model::{AttnMode, Transformer, Vit, VitAttnMode};
+use crate::prescore::{Method, PreScoreConfig};
+
+/// Evaluation corpus: a mixed-length set of documents. `long_only`
+/// restricts to full-length sequences — the paper's PPL* column
+/// ("sequences with length ≥ n_query").
+pub fn eval_docs(vocab: u32, max_len: usize, n: usize, long_only: bool, seed: u64) -> Vec<Vec<u32>> {
+    (0..n)
+        .map(|i| {
+            let len = if long_only || i % 2 == 0 {
+                max_len
+            } else {
+                max_len / 2 + (i * 37) % (max_len / 2)
+            };
+            corpus::generate(vocab, len, seed + i as u64)
+        })
+        .collect()
+}
+
+/// Aggregate PPL of a model/mode over documents.
+pub fn ppl_over(model: &Transformer, mode: &AttnMode, docs: &[Vec<u32>]) -> f64 {
+    let mut acc = PplAccum::default();
+    for d in docs {
+        acc.add(&model.nll(d, mode));
+    }
+    acc.ppl()
+}
+
+/// Build the paper's standard mode for "<method>+Hyper" with a key budget
+/// and residual sample size, in the requested coupling.
+pub fn prescored_mode(
+    method: Method,
+    top_k: usize,
+    sample_size: usize,
+    coupling: Coupling,
+    blockwise_sorted: bool,
+) -> AttnMode {
+    let hyper = HyperConfig {
+        block_size: 64,
+        lsh_bits: if blockwise_sorted { 16 } else { 1 },
+        sample_size,
+        seed: 7,
+        ..Default::default()
+    };
+    AttnMode::PreScored(PreScoredConfig {
+        prescore: PreScoreConfig { method, top_k, seed: 7, ..Default::default() },
+        hyper,
+        fallback_delta: 0.0,
+        coupling,
+    })
+}
+
+/// Plain HyperAttention mode. `blockwise_sorted = false` degrades the LSH to
+/// a single hyperplane — effectively unsorted buckets — our mapping of the
+/// paper's "Blockwise Opt. = False" ablation (Table 1).
+pub fn hyper_mode(sample_size: usize, blockwise_sorted: bool) -> AttnMode {
+    AttnMode::Hyper(HyperConfig {
+        block_size: 64,
+        lsh_bits: if blockwise_sorted { 16 } else { 1 },
+        sample_size,
+        seed: 7,
+        ..Default::default()
+    })
+}
+
+/// ViT evaluation data: n labelled (patches, label) pairs.
+pub fn vit_eval_data(img_cfg: &ImageConfig, n: usize, seed: u64) -> Vec<(crate::linalg::Matrix, usize)> {
+    dataset(img_cfg, n, seed)
+        .iter()
+        .map(|img| (to_patches(img, img_cfg), img.label))
+        .collect()
+}
+
+/// Accuracy of a ViT under an attention substitution.
+pub fn vit_accuracy(model: &Vit, data: &[(crate::linalg::Matrix, usize)], mode: &VitAttnMode) -> f64 {
+    model.accuracy(data, mode)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::TransformerConfig;
+
+    #[test]
+    fn eval_docs_lengths() {
+        let docs = eval_docs(64, 128, 6, false, 1);
+        assert_eq!(docs.len(), 6);
+        assert!(docs.iter().any(|d| d.len() == 128));
+        assert!(docs.iter().any(|d| d.len() < 128));
+        let long = eval_docs(64, 128, 4, true, 1);
+        assert!(long.iter().all(|d| d.len() == 128));
+    }
+
+    #[test]
+    fn ppl_over_runs() {
+        let cfg = TransformerConfig { vocab: 64, d_model: 32, n_layers: 1, n_heads: 2, max_seq: 64 };
+        let m = Transformer::random(cfg, 1);
+        let docs = eval_docs(64, 64, 2, true, 2);
+        let p = ppl_over(&m, &AttnMode::Exact, &docs);
+        assert!(p.is_finite() && p > 1.0);
+    }
+}

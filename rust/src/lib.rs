@@ -1,0 +1,37 @@
+//! # prescored-attention
+//!
+//! A production-quality reproduction of *"Efficient Attention via Pre-Scoring:
+//! Prioritizing Informative Keys in Transformers"* (Li, Wang, Bao, Woodruff,
+//! 2025) as a three-layer Rust + JAX + Pallas system:
+//!
+//! * **Layer 1 (Python, build-time)** — Pallas kernels for pre-scored
+//!   blockwise attention (`python/compile/kernels/`), lowered with
+//!   `interpret=True` and checked against a pure-jnp oracle.
+//! * **Layer 2 (Python, build-time)** — a JAX transformer LM that calls those
+//!   kernels, trained on a synthetic corpus and AOT-lowered to HLO text.
+//! * **Layer 3 (this crate)** — a serving coordinator (router, dynamic
+//!   batcher, KV-cache manager, pre-score manager) that loads the AOT
+//!   artifacts via PJRT and never touches Python on the request path, plus a
+//!   numerically-equivalent pure-Rust attention substrate used by the
+//!   experiment benches for configuration sweeps.
+//!
+//! See `DESIGN.md` for the full system inventory and the experiment index
+//! mapping every table and figure of the paper to a bench target.
+
+pub mod attention;
+pub mod clustering;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod exp;
+pub mod linalg;
+pub mod lsh;
+pub mod metrics;
+pub mod model;
+pub mod prescore;
+pub mod runtime;
+pub mod server;
+pub mod util;
+
+/// Crate version string (mirrors Cargo.toml).
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

@@ -1,0 +1,232 @@
+//! Row-major dense matrix type.
+
+use crate::util::rng::Rng;
+
+/// Row-major dense f32 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    /// Zero-filled matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Matrix from an existing buffer (length must be rows*cols).
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "buffer size mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    /// Identity matrix.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// I.i.d. N(0, std^2) entries.
+    pub fn randn(rows: usize, cols: usize, std: f32, rng: &mut Rng) -> Self {
+        let mut m = Matrix::zeros(rows, cols);
+        rng.fill_gauss(&mut m.data, std);
+        m
+    }
+
+    /// I.i.d. U[lo, hi) entries.
+    pub fn rand_uniform(rows: usize, cols: usize, lo: f32, hi: f32, rng: &mut Rng) -> Self {
+        let mut m = Matrix::zeros(rows, cols);
+        rng.fill_uniform(&mut m.data, lo, hi);
+        m
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let c = self.cols;
+        &mut self.data[i * c..(i + 1) * c]
+    }
+
+    /// Gather a subset of rows into a new matrix (the K[S] / V[S] operation
+    /// of Algorithm 2).
+    pub fn gather_rows(&self, idx: &[usize]) -> Matrix {
+        let mut out = Matrix::zeros(idx.len(), self.cols);
+        for (r, &i) in idx.iter().enumerate() {
+            out.row_mut(r).copy_from_slice(self.row(i));
+        }
+        out
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        // Blocked transpose for cache friendliness.
+        const B: usize = 32;
+        for i0 in (0..self.rows).step_by(B) {
+            for j0 in (0..self.cols).step_by(B) {
+                for i in i0..(i0 + B).min(self.rows) {
+                    for j in j0..(j0 + B).min(self.cols) {
+                        out.data[j * self.rows + i] = self.data[i * self.cols + j];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Squared L2 norm of each row.
+    pub fn row_sq_norms(&self) -> Vec<f32> {
+        (0..self.rows)
+            .map(|i| self.row(i).iter().map(|x| x * x).sum())
+            .collect()
+    }
+
+    /// L2-normalize every row in place (rows with norm < eps left unchanged).
+    /// This is the row-norm regularization from Assumption 4.1 of the paper,
+    /// which prevents the Appendix-B outlier-dominated k-means failure mode.
+    pub fn l2_normalize_rows(&mut self, eps: f32) {
+        for i in 0..self.rows {
+            let row = self.row_mut(i);
+            let norm = row.iter().map(|x| x * x).sum::<f32>().sqrt();
+            if norm > eps {
+                let inv = 1.0 / norm;
+                for v in row.iter_mut() {
+                    *v *= inv;
+                }
+            }
+        }
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    /// Max absolute element-wise difference from another matrix.
+    pub fn max_abs_diff(&self, other: &Matrix) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Add i.i.d. Gaussian noise (the optional perturbation of Alg. 1 line 1).
+    pub fn add_noise(&mut self, sigma: f32, rng: &mut Rng) {
+        if sigma == 0.0 {
+            return;
+        }
+        for v in self.data.iter_mut() {
+            *v += rng.gauss32(0.0, sigma);
+        }
+    }
+
+    /// Horizontal slice of columns [c0, c1) as a new matrix.
+    pub fn slice_cols(&self, c0: usize, c1: usize) -> Matrix {
+        assert!(c0 <= c1 && c1 <= self.cols);
+        let mut out = Matrix::zeros(self.rows, c1 - c0);
+        for i in 0..self.rows {
+            out.row_mut(i).copy_from_slice(&self.row(i)[c0..c1]);
+        }
+        out
+    }
+
+    /// Vertical slice of rows [r0, r1) as a new matrix.
+    pub fn slice_rows(&self, r0: usize, r1: usize) -> Matrix {
+        assert!(r0 <= r1 && r1 <= self.rows);
+        Matrix::from_vec(r1 - r0, self.cols, self.data[r0 * self.cols..r1 * self.cols].to_vec())
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Matrix {
+    type Output = f32;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f32 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Matrix {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f32 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn index_roundtrip() {
+        let mut m = Matrix::zeros(3, 4);
+        m[(1, 2)] = 5.0;
+        assert_eq!(m[(1, 2)], 5.0);
+        assert_eq!(m.row(1)[2], 5.0);
+    }
+
+    #[test]
+    fn eye_and_transpose() {
+        let m = Matrix::eye(5);
+        assert_eq!(m.transpose(), m);
+        let mut a = Matrix::zeros(2, 3);
+        a[(0, 1)] = 1.0;
+        a[(1, 2)] = 2.0;
+        let t = a.transpose();
+        assert_eq!(t.rows, 3);
+        assert_eq!(t[(1, 0)], 1.0);
+        assert_eq!(t[(2, 1)], 2.0);
+        // double transpose is identity
+        assert_eq!(t.transpose(), a);
+    }
+
+    #[test]
+    fn gather_rows_selects() {
+        let m = Matrix::from_vec(3, 2, vec![1., 2., 3., 4., 5., 6.]);
+        let g = m.gather_rows(&[2, 0]);
+        assert_eq!(g.data, vec![5., 6., 1., 2.]);
+    }
+
+    #[test]
+    fn l2_normalize_rows_makes_unit_norm() {
+        let mut m = Matrix::from_vec(2, 2, vec![3., 4., 0., 0.]);
+        m.l2_normalize_rows(1e-8);
+        assert!((m.row(0)[0] - 0.6).abs() < 1e-6);
+        assert!((m.row(0)[1] - 0.8).abs() < 1e-6);
+        // zero row untouched
+        assert_eq!(m.row(1), &[0., 0.]);
+    }
+
+    #[test]
+    fn row_sq_norms_correct() {
+        let m = Matrix::from_vec(2, 2, vec![1., 2., 3., 4.]);
+        assert_eq!(m.row_sq_norms(), vec![5.0, 25.0]);
+    }
+
+    #[test]
+    fn slices() {
+        let m = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(m.slice_cols(1, 3).data, vec![2., 3., 5., 6.]);
+        assert_eq!(m.slice_rows(1, 2).data, vec![4., 5., 6.]);
+    }
+
+    #[test]
+    fn randn_moments() {
+        let mut r = Rng::new(1);
+        let m = Matrix::randn(100, 100, 2.0, &mut r);
+        let mean = m.data.iter().sum::<f32>() / m.data.len() as f32;
+        let var = m.data.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / m.data.len() as f32;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+        assert!((var - 4.0).abs() < 0.2, "var {var}");
+    }
+}

@@ -1,0 +1,15 @@
+//! Dense linear algebra substrate.
+//!
+//! A row-major `Matrix<f32>` with the operations the attention stack needs:
+//! blocked matmul, transpose, row norms/normalization, softmax, Householder
+//! QR (for exact leverage scores), Gaussian sketching, and argsort/top-k
+//! selection helpers. Everything is pure Rust, allocation-conscious on the
+//! hot paths, and unit-tested against closed-form cases.
+
+pub mod matrix;
+pub mod ops;
+pub mod qr;
+
+pub use matrix::Matrix;
+pub use ops::*;
+pub use qr::{householder_qr, solve_upper_triangular};

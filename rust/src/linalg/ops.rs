@@ -1,0 +1,279 @@
+//! Matrix operations: blocked matmul, softmax, elementwise helpers,
+//! and selection (argsort / top-k) utilities.
+
+use super::matrix::Matrix;
+
+/// Blocked cache-friendly matmul: C = A · B.
+///
+/// Loop order i-k-j with a micro-kernel over contiguous B rows gives
+/// vectorizable inner loops on row-major data without a transpose.
+pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols, b.rows, "matmul shape mismatch {}x{} · {}x{}", a.rows, a.cols, b.rows, b.cols);
+    let mut c = Matrix::zeros(a.rows, b.cols);
+    matmul_into(a, b, &mut c);
+    c
+}
+
+/// Matmul writing into a preallocated output (hot-path, allocation-free).
+pub fn matmul_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    assert_eq!(a.cols, b.rows);
+    assert_eq!((c.rows, c.cols), (a.rows, b.cols));
+    c.data.fill(0.0);
+    let (n, k, m) = (a.rows, a.cols, b.cols);
+    const BK: usize = 64;
+    for k0 in (0..k).step_by(BK) {
+        let k1 = (k0 + BK).min(k);
+        for i in 0..n {
+            let arow = &a.data[i * k..(i + 1) * k];
+            let crow = &mut c.data[i * m..(i + 1) * m];
+            for kk in k0..k1 {
+                let av = arow[kk];
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &b.data[kk * m..(kk + 1) * m];
+                // contiguous AXPY over the output row — auto-vectorizes
+                for (cv, bv) in crow.iter_mut().zip(brow.iter()) {
+                    *cv += av * bv;
+                }
+            }
+        }
+    }
+}
+
+/// C = A · Bᵀ without materializing the transpose (dot-product form).
+pub fn matmul_nt(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols, b.cols, "matmul_nt inner-dim mismatch");
+    let mut c = Matrix::zeros(a.rows, b.rows);
+    matmul_nt_into(a, b, &mut c);
+    c
+}
+
+/// A · Bᵀ into preallocated output.
+pub fn matmul_nt_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    assert_eq!(a.cols, b.cols);
+    assert_eq!((c.rows, c.cols), (a.rows, b.rows));
+    let d = a.cols;
+    for i in 0..a.rows {
+        let arow = a.row(i);
+        let crow = &mut c.data[i * b.rows..(i + 1) * b.rows];
+        for j in 0..b.rows {
+            crow[j] = dot(arow, &b.data[j * d..(j + 1) * d]);
+        }
+    }
+}
+
+/// Dot product of two equal-length slices (4-way unrolled).
+#[inline]
+pub fn dot(x: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for c in 0..chunks {
+        let i = c * 4;
+        s0 += x[i] * y[i];
+        s1 += x[i + 1] * y[i + 1];
+        s2 += x[i + 2] * y[i + 2];
+        s3 += x[i + 3] * y[i + 3];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for i in chunks * 4..n {
+        s += x[i] * y[i];
+    }
+    s
+}
+
+/// Squared euclidean distance between two slices.
+#[inline]
+pub fn sq_dist(x: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    let mut s = 0.0;
+    for i in 0..x.len() {
+        let d = x[i] - y[i];
+        s += d * d;
+    }
+    s
+}
+
+/// ℓp distance raised to the p-th power: ||x-y||_p^p (Minkowski k-means).
+#[inline]
+pub fn lp_dist_pow(x: &[f32], y: &[f32], p: f32) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    if (p - 2.0).abs() < 1e-9 {
+        return sq_dist(x, y);
+    }
+    if (p - 1.0).abs() < 1e-9 {
+        return x.iter().zip(y).map(|(a, b)| (a - b).abs()).sum();
+    }
+    x.iter().zip(y).map(|(a, b)| (a - b).abs().powf(p)).sum()
+}
+
+/// Numerically stable in-place softmax over a slice.
+pub fn softmax_inplace(x: &mut [f32]) {
+    if x.is_empty() {
+        return;
+    }
+    let m = x.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    if !m.is_finite() {
+        // All -inf (fully masked row): convention = uniform zeros.
+        x.fill(0.0);
+        return;
+    }
+    let mut sum = 0.0;
+    for v in x.iter_mut() {
+        *v = (*v - m).exp();
+        sum += *v;
+    }
+    if sum > 0.0 {
+        let inv = 1.0 / sum;
+        for v in x.iter_mut() {
+            *v *= inv;
+        }
+    }
+}
+
+/// Row-wise softmax of a matrix, in place.
+pub fn softmax_rows(m: &mut Matrix) {
+    for i in 0..m.rows {
+        softmax_inplace(m.row_mut(i));
+    }
+}
+
+/// Indices of the `k` largest values (descending by value, ties by index).
+pub fn top_k_indices(scores: &[f32], k: usize) -> Vec<usize> {
+    let k = k.min(scores.len());
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    // partial selection: sort the whole index list only when small; otherwise
+    // use select_nth_unstable for O(n + k log k).
+    if scores.len() > 2 * k && k > 0 {
+        idx.select_nth_unstable_by(k - 1, |&a, &b| {
+            scores[b].partial_cmp(&scores[a]).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+        });
+        idx.truncate(k);
+    }
+    idx.sort_by(|&a, &b| {
+        scores[b].partial_cmp(&scores[a]).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+    });
+    idx.truncate(k);
+    idx
+}
+
+/// Indices of the `k` smallest values.
+pub fn bottom_k_indices(scores: &[f32], k: usize) -> Vec<usize> {
+    let neg: Vec<f32> = scores.iter().map(|&s| -s).collect();
+    top_k_indices(&neg, k)
+}
+
+/// Argsort descending.
+pub fn argsort_desc(scores: &[f32]) -> Vec<usize> {
+    top_k_indices(scores, scores.len())
+}
+
+/// Mean of a slice.
+pub fn mean(xs: &[f32]) -> f32 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f32>() / xs.len() as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn matmul_known() {
+        let a = Matrix::from_vec(2, 2, vec![1., 2., 3., 4.]);
+        let b = Matrix::from_vec(2, 2, vec![5., 6., 7., 8.]);
+        let c = matmul(&a, &b);
+        assert_eq!(c.data, vec![19., 22., 43., 50.]);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let mut r = Rng::new(1);
+        let a = Matrix::randn(7, 5, 1.0, &mut r);
+        let c = matmul(&a, &Matrix::eye(5));
+        assert!(a.max_abs_diff(&c) < 1e-6);
+    }
+
+    #[test]
+    fn matmul_nt_matches_explicit_transpose() {
+        let mut r = Rng::new(2);
+        let a = Matrix::randn(6, 9, 1.0, &mut r);
+        let b = Matrix::randn(4, 9, 1.0, &mut r);
+        let c1 = matmul_nt(&a, &b);
+        let c2 = matmul(&a, &b.transpose());
+        assert!(c1.max_abs_diff(&c2) < 1e-4);
+    }
+
+    #[test]
+    fn matmul_rectangular_matches_naive() {
+        let mut r = Rng::new(3);
+        let a = Matrix::randn(5, 130, 1.0, &mut r); // exercises BK blocking
+        let b = Matrix::randn(130, 3, 1.0, &mut r);
+        let c = matmul(&a, &b);
+        for i in 0..5 {
+            for j in 0..3 {
+                let mut s = 0.0f32;
+                for k in 0..130 {
+                    s += a[(i, k)] * b[(k, j)];
+                }
+                assert!((c[(i, j)] - s).abs() < 1e-3, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn dot_and_sq_dist() {
+        let x = [1., 2., 3., 4., 5.];
+        let y = [5., 4., 3., 2., 1.];
+        assert_eq!(dot(&x, &y), 35.0);
+        assert_eq!(sq_dist(&x, &y), 16. + 4. + 0. + 4. + 16.);
+    }
+
+    #[test]
+    fn lp_dist_special_cases() {
+        let x = [0., 0.];
+        let y = [3., 4.];
+        assert_eq!(lp_dist_pow(&x, &y, 1.0), 7.0);
+        assert_eq!(lp_dist_pow(&x, &y, 2.0), 25.0);
+        let p3 = lp_dist_pow(&x, &y, 3.0);
+        assert!((p3 - (27.0 + 64.0)).abs() < 1e-4);
+    }
+
+    #[test]
+    fn softmax_sums_to_one_and_stable() {
+        let mut x = vec![1000.0, 1000.0, 1000.0];
+        softmax_inplace(&mut x);
+        assert!(x.iter().all(|v| (v - 1.0 / 3.0).abs() < 1e-6));
+        let mut y = vec![f32::NEG_INFINITY, 0.0];
+        softmax_inplace(&mut y);
+        assert_eq!(y[0], 0.0);
+        assert!((y[1] - 1.0).abs() < 1e-6);
+        let mut z = vec![f32::NEG_INFINITY, f32::NEG_INFINITY];
+        softmax_inplace(&mut z);
+        assert_eq!(z, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn top_k_selects_largest() {
+        let s = [0.1, 5.0, 3.0, 4.0, 2.0];
+        assert_eq!(top_k_indices(&s, 3), vec![1, 3, 2]);
+        assert_eq!(top_k_indices(&s, 0), Vec::<usize>::new());
+        assert_eq!(top_k_indices(&s, 99).len(), 5);
+        assert_eq!(bottom_k_indices(&s, 2), vec![0, 4]);
+    }
+
+    #[test]
+    fn top_k_large_uses_partial_select() {
+        let mut r = Rng::new(4);
+        let scores: Vec<f32> = (0..1000).map(|_| r.f32()).collect();
+        let got = top_k_indices(&scores, 10);
+        let mut all = argsort_desc(&scores);
+        all.truncate(10);
+        assert_eq!(got, all);
+    }
+}

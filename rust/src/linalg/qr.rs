@@ -1,0 +1,174 @@
+//! Householder QR decomposition.
+//!
+//! Used for exact statistical leverage scores: for A = QR with Q having
+//! orthonormal columns, the leverage score of row i is ||Q_i||². This is the
+//! reference implementation against which the sketched approximation in
+//! `prescore::leverage` is validated.
+
+use super::matrix::Matrix;
+
+/// Thin Householder QR: returns (Q, R) with Q: n×d (orthonormal columns),
+/// R: d×d upper-triangular, for an n×d input with n >= d.
+pub fn householder_qr(a: &Matrix) -> (Matrix, Matrix) {
+    let (n, d) = (a.rows, a.cols);
+    assert!(n >= d, "householder_qr requires n >= d (got {n}x{d})");
+    let mut r = a.clone(); // will be reduced in place to upper-triangular
+    // Store Householder vectors to accumulate Q afterwards.
+    let mut vs: Vec<Vec<f32>> = Vec::with_capacity(d);
+
+    for k in 0..d {
+        // Compute the norm of column k below the diagonal.
+        let mut norm2 = 0.0f32;
+        for i in k..n {
+            let v = r[(i, k)];
+            norm2 += v * v;
+        }
+        let norm = norm2.sqrt();
+        let mut v = vec![0.0f32; n - k];
+        if norm <= f32::MIN_POSITIVE {
+            vs.push(v); // zero reflector (column already zero)
+            continue;
+        }
+        let alpha = if r[(k, k)] >= 0.0 { -norm } else { norm };
+        for i in k..n {
+            v[i - k] = r[(i, k)];
+        }
+        v[0] -= alpha;
+        let vnorm2: f32 = v.iter().map(|x| x * x).sum();
+        if vnorm2 <= f32::MIN_POSITIVE {
+            vs.push(vec![0.0; n - k]);
+            continue;
+        }
+        // Apply reflector H = I - 2 v vᵀ / (vᵀv) to R[k.., k..].
+        for j in k..d {
+            let mut dotv = 0.0f32;
+            for i in k..n {
+                dotv += v[i - k] * r[(i, j)];
+            }
+            let scale = 2.0 * dotv / vnorm2;
+            for i in k..n {
+                r[(i, j)] -= scale * v[i - k];
+            }
+        }
+        vs.push(v);
+    }
+
+    // Zero out strictly-lower part of R and truncate to d×d.
+    let mut r_out = Matrix::zeros(d, d);
+    for i in 0..d {
+        for j in i..d {
+            r_out[(i, j)] = r[(i, j)];
+        }
+    }
+
+    // Accumulate Q = H_0 H_1 ... H_{d-1} applied to the first d columns of I.
+    let mut q = Matrix::zeros(n, d);
+    for i in 0..d {
+        q[(i, i)] = 1.0;
+    }
+    for k in (0..d).rev() {
+        let v = &vs[k];
+        let vnorm2: f32 = v.iter().map(|x| x * x).sum();
+        if vnorm2 <= f32::MIN_POSITIVE {
+            continue;
+        }
+        for j in 0..d {
+            let mut dotv = 0.0f32;
+            for i in k..n {
+                dotv += v[i - k] * q[(i, j)];
+            }
+            let scale = 2.0 * dotv / vnorm2;
+            for i in k..n {
+                q[(i, j)] -= scale * v[i - k];
+            }
+        }
+    }
+    (q, r_out)
+}
+
+/// Solve R x = b for upper-triangular R (back substitution). Rows with
+/// near-zero diagonal produce zeros (rank-deficient tolerant).
+pub fn solve_upper_triangular(r: &Matrix, b: &[f32]) -> Vec<f32> {
+    let d = r.rows;
+    assert_eq!(r.cols, d);
+    assert_eq!(b.len(), d);
+    let mut x = vec![0.0f32; d];
+    for i in (0..d).rev() {
+        let mut s = b[i];
+        for j in i + 1..d {
+            s -= r[(i, j)] * x[j];
+        }
+        let diag = r[(i, i)];
+        x[i] = if diag.abs() > 1e-12 { s / diag } else { 0.0 };
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::ops::{matmul, matmul_nt};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn qr_reconstructs_a() {
+        let mut rng = Rng::new(1);
+        for &(n, d) in &[(8usize, 3usize), (20, 7), (5, 5)] {
+            let a = Matrix::randn(n, d, 1.0, &mut rng);
+            let (q, r) = householder_qr(&a);
+            let qr = matmul(&q, &r);
+            assert!(a.max_abs_diff(&qr) < 1e-3, "QR reconstruction {n}x{d}");
+        }
+    }
+
+    #[test]
+    fn q_has_orthonormal_columns() {
+        let mut rng = Rng::new(2);
+        let a = Matrix::randn(30, 6, 1.0, &mut rng);
+        let (q, _) = householder_qr(&a);
+        let qtq = matmul_nt(&q.transpose(), &q.transpose());
+        let eye = Matrix::eye(6);
+        assert!(qtq.max_abs_diff(&eye) < 1e-4, "QᵀQ != I");
+    }
+
+    #[test]
+    fn r_is_upper_triangular() {
+        let mut rng = Rng::new(3);
+        let a = Matrix::randn(10, 4, 1.0, &mut rng);
+        let (_, r) = householder_qr(&a);
+        for i in 0..4 {
+            for j in 0..i {
+                assert_eq!(r[(i, j)], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn leverage_scores_sum_to_rank() {
+        // sum of ||Q_i||^2 = d for full-rank A
+        let mut rng = Rng::new(4);
+        let a = Matrix::randn(50, 8, 1.0, &mut rng);
+        let (q, _) = householder_qr(&a);
+        let total: f32 = q.row_sq_norms().iter().sum();
+        assert!((total - 8.0).abs() < 1e-3, "sum leverage {total}");
+    }
+
+    #[test]
+    fn back_substitution_solves() {
+        let r = Matrix::from_vec(3, 3, vec![2., 1., 0., 0., 3., 1., 0., 0., 4.]);
+        let x = solve_upper_triangular(&r, &[5., 10., 8.]);
+        // x2 = 2, x1 = (10-2)/3 = 8/3, x0 = (5 - 8/3)/2
+        assert!((x[2] - 2.0).abs() < 1e-6);
+        assert!((x[1] - 8.0 / 3.0).abs() < 1e-6);
+        assert!((x[0] - (5.0 - 8.0 / 3.0) / 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rank_deficient_tolerated() {
+        // Second column = first column ⇒ rank 1; QR should not produce NaNs.
+        let a = Matrix::from_vec(4, 2, vec![1., 1., 2., 2., 3., 3., 4., 4.]);
+        let (q, r) = householder_qr(&a);
+        assert!(q.data.iter().all(|v| v.is_finite()));
+        assert!(r.data.iter().all(|v| v.is_finite()));
+    }
+}

@@ -1,0 +1,204 @@
+//! Angular locality-sensitive hashing for HyperAttention.
+//!
+//! HyperAttention (Han et al., 2023) hashes queries and keys with an angular
+//! (SimHash / hyperplane) LSH, then *sorts* the hash buckets so that buckets
+//! whose codes differ by a small Hamming distance are adjacent — a Gray-code
+//! ordering — and computes attention only inside equal-size blocks of the
+//! sorted order. This module provides:
+//!
+//! * [`AngularLsh`] — `bits` random hyperplanes → `u32` codes;
+//! * Gray-code rank ordering so Hamming-adjacent codes sort near each other;
+//! * [`sorted_blocks`] — the (permutation, block boundary) structure that the
+//!   blockwise attention consumes.
+
+use crate::linalg::ops::dot;
+use crate::linalg::Matrix;
+use crate::util::rng::Rng;
+
+/// Angular LSH: `bits` random Gaussian hyperplanes in dimension `dim`.
+#[derive(Clone, Debug)]
+pub struct AngularLsh {
+    pub bits: usize,
+    pub dim: usize,
+    /// bits × dim hyperplane normals.
+    planes: Matrix,
+}
+
+impl AngularLsh {
+    /// Sample `bits` hyperplanes (bits ≤ 32 so codes fit a u32).
+    pub fn new(dim: usize, bits: usize, rng: &mut Rng) -> Self {
+        assert!(bits >= 1 && bits <= 32, "bits must be in 1..=32");
+        AngularLsh { bits, dim, planes: Matrix::randn(bits, dim, 1.0, rng) }
+    }
+
+    /// Hash one vector to its sign-pattern code.
+    pub fn hash(&self, x: &[f32]) -> u32 {
+        debug_assert_eq!(x.len(), self.dim);
+        let mut code = 0u32;
+        for b in 0..self.bits {
+            if dot(self.planes.row(b), x) >= 0.0 {
+                code |= 1 << b;
+            }
+        }
+        code
+    }
+
+    /// Hash every row of a matrix.
+    pub fn hash_rows(&self, m: &Matrix) -> Vec<u32> {
+        (0..m.rows).map(|i| self.hash(m.row(i))).collect()
+    }
+}
+
+/// Binary-reflected Gray-code rank of a code: consecutive ranks differ by
+/// exactly one bit, so sorting by `gray_rank` places Hamming-adjacent codes
+/// next to each other ("ordering buckets so adjacent buckets have small
+/// Hamming distance", HyperAttention §3).
+#[inline]
+pub fn gray_rank(code: u32) -> u32 {
+    // Inverse Gray code: rank r such that gray(r) = code.
+    let mut r = code;
+    let mut shift = 1;
+    while shift < 32 {
+        r ^= r >> shift;
+        shift <<= 1;
+    }
+    r
+}
+
+/// Hamming distance between two codes.
+#[inline]
+pub fn hamming(a: u32, b: u32) -> u32 {
+    (a ^ b).count_ones()
+}
+
+/// Sorted-bucket structure: a permutation of row indices ordered by
+/// `gray_rank(code)` (ties broken by original index for determinism), plus
+/// equal-size block boundaries.
+#[derive(Debug, Clone)]
+pub struct SortedBlocks {
+    /// Row indices in bucket-sorted order.
+    pub order: Vec<usize>,
+    /// Block size used for partitioning.
+    pub block_size: usize,
+}
+
+impl SortedBlocks {
+    /// Number of blocks (last may be ragged).
+    pub fn num_blocks(&self) -> usize {
+        self.order.len().div_ceil(self.block_size)
+    }
+
+    /// The row indices of block `b`.
+    pub fn block(&self, b: usize) -> &[usize] {
+        let lo = b * self.block_size;
+        let hi = ((b + 1) * self.block_size).min(self.order.len());
+        &self.order[lo..hi]
+    }
+}
+
+/// Sort row indices by Gray rank of their LSH codes and partition into
+/// equal-size blocks.
+pub fn sorted_blocks(codes: &[u32], block_size: usize) -> SortedBlocks {
+    assert!(block_size >= 1);
+    let mut order: Vec<usize> = (0..codes.len()).collect();
+    order.sort_by_key(|&i| (gray_rank(codes[i]), i));
+    SortedBlocks { order, block_size }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gray_rank_bijective_on_small_domain() {
+        let mut seen = std::collections::HashSet::new();
+        for code in 0u32..256 {
+            assert!(seen.insert(gray_rank(code)));
+        }
+        assert_eq!(seen.len(), 256);
+    }
+
+    #[test]
+    fn gray_order_neighbors_differ_by_one_bit() {
+        // codes sorted by gray_rank: consecutive codes have hamming dist 1.
+        let mut codes: Vec<u32> = (0..64).collect();
+        codes.sort_by_key(|&c| gray_rank(c));
+        for w in codes.windows(2) {
+            assert_eq!(hamming(w[0], w[1]), 1, "{:b} vs {:b}", w[0], w[1]);
+        }
+    }
+
+    #[test]
+    fn identical_vectors_collide() {
+        let mut rng = Rng::new(1);
+        let lsh = AngularLsh::new(16, 12, &mut rng);
+        let x: Vec<f32> = (0..16).map(|i| (i as f32).sin()).collect();
+        assert_eq!(lsh.hash(&x), lsh.hash(&x));
+        // Scaling does not change the angular hash.
+        let x2: Vec<f32> = x.iter().map(|v| v * 7.5).collect();
+        assert_eq!(lsh.hash(&x), lsh.hash(&x2));
+    }
+
+    #[test]
+    fn antipodal_vectors_get_complementary_codes() {
+        let mut rng = Rng::new(2);
+        let lsh = AngularLsh::new(8, 10, &mut rng);
+        let x: Vec<f32> = (0..8).map(|i| (i as f32 + 1.0).cos()).collect();
+        let neg: Vec<f32> = x.iter().map(|v| -v).collect();
+        let (hx, hn) = (lsh.hash(&x), lsh.hash(&neg));
+        // If no plane passes exactly through x, codes are bitwise complements
+        // within the used bits.
+        let mask = (1u32 << 10) - 1;
+        assert_eq!(hx ^ hn, mask);
+    }
+
+    #[test]
+    fn nearby_vectors_collide_more_than_random() {
+        let mut rng = Rng::new(3);
+        let lsh = AngularLsh::new(32, 16, &mut rng);
+        let trials = 200;
+        let mut near_same_bits = 0u32;
+        let mut far_same_bits = 0u32;
+        for _ in 0..trials {
+            let mut x = vec![0.0f32; 32];
+            rng.fill_gauss(&mut x, 1.0);
+            let mut near = x.clone();
+            for v in near.iter_mut() {
+                *v += rng.gauss32(0.0, 0.05);
+            }
+            let mut far = vec![0.0f32; 32];
+            rng.fill_gauss(&mut far, 1.0);
+            near_same_bits += 16 - hamming(lsh.hash(&x), lsh.hash(&near));
+            far_same_bits += 16 - hamming(lsh.hash(&x), lsh.hash(&far));
+        }
+        assert!(
+            near_same_bits > far_same_bits + trials as u32,
+            "near {near_same_bits} vs far {far_same_bits}"
+        );
+    }
+
+    #[test]
+    fn sorted_blocks_partitions_everything() {
+        let codes: Vec<u32> = (0..37).map(|i| (i * 7) % 32).collect();
+        let sb = sorted_blocks(&codes, 8);
+        assert_eq!(sb.num_blocks(), 5);
+        let mut all: Vec<usize> = (0..sb.num_blocks()).flat_map(|b| sb.block(b).to_vec()).collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..37).collect::<Vec<_>>());
+        // order is sorted by gray rank
+        for w in sb.order.windows(2) {
+            assert!(gray_rank(codes[w[0]]) <= gray_rank(codes[w[1]]));
+        }
+    }
+
+    #[test]
+    fn hash_rows_matches_hash() {
+        let mut rng = Rng::new(4);
+        let lsh = AngularLsh::new(8, 6, &mut rng);
+        let m = Matrix::randn(10, 8, 1.0, &mut rng);
+        let codes = lsh.hash_rows(&m);
+        for i in 0..10 {
+            assert_eq!(codes[i], lsh.hash(m.row(i)));
+        }
+    }
+}

@@ -1,0 +1,161 @@
+//! `prescored` — launcher CLI for the pre-scored attention serving stack.
+//!
+//! Commands:
+//! * `serve` — start the scoring server on a synthetic workload trace and
+//!   report latency/throughput/PPL (the E2E driver behind
+//!   examples/serve_longcontext.rs).
+//! * `ppl` — run a quick perplexity comparison across attention modes on
+//!   the pure-Rust substrate.
+//! * `info` — print artifact/registry information.
+
+use anyhow::Result;
+use prescored::attention::{Coupling, HyperConfig, PreScoredConfig};
+use prescored::config::ServingConfig;
+use prescored::coordinator::Request;
+use prescored::data::{corpus, workload};
+use prescored::metrics::PplAccum;
+use prescored::model::{AttnMode, Transformer, TransformerConfig, WeightStore};
+use prescored::prescore::{Method, PreScoreConfig};
+use prescored::server::ScoringServer;
+use prescored::util::cli::Cli;
+use std::path::Path;
+
+fn cli() -> Cli {
+    Cli::new("prescored", "Pre-Scored HyperAttention serving stack")
+        .command("serve", "serve a synthetic trace through the PJRT artifacts")
+        .command("ppl", "compare attention modes on the pure-rust substrate")
+        .command("info", "print artifact info")
+        .opt("artifacts", "artifacts", "artifacts directory")
+        .opt("variant", "exact", "artifact variant (exact | prescored_k64)")
+        .opt("requests", "64", "number of trace requests (serve)")
+        .opt("rate", "50", "request rate per second (serve)")
+        .opt("method", "kmeans", "prescore method (ppl)")
+        .opt("top-k", "64", "retained keys (ppl)")
+        .opt("seqs", "4", "eval sequences (ppl)")
+        .opt("config", "", "serving config file (TOML subset)")
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let spec = cli();
+    let args = match spec.parse(&argv) {
+        Ok(a) => a,
+        Err(msg) => {
+            eprintln!("{msg}");
+            std::process::exit(2);
+        }
+    };
+    match args.command.as_deref() {
+        Some("serve") => cmd_serve(&args),
+        Some("ppl") => cmd_ppl(&args),
+        Some("info") => cmd_info(&args),
+        _ => {
+            println!("{}", spec.usage());
+            Ok(())
+        }
+    }
+}
+
+fn cmd_serve(args: &prescored::util::cli::Args) -> Result<()> {
+    let mut cfg = match args.get("config") {
+        Some(p) if !p.is_empty() => ServingConfig::from_file(Path::new(p))?,
+        _ => ServingConfig::default(),
+    };
+    cfg.artifacts_dir = args.get("artifacts").unwrap_or("artifacts").to_string();
+    cfg.variant = args.get("variant").unwrap_or("exact").to_string();
+    let n_req = args.get_usize("requests").unwrap_or(64);
+    let rate = args.get_f64("rate").unwrap_or(50.0);
+
+    println!("starting server: variant={} artifacts={}", cfg.variant, cfg.artifacts_dir);
+    let max_seq = cfg.max_seq;
+    let server = ScoringServer::start(cfg)?;
+
+    let trace = workload::generate_trace(&workload::WorkloadConfig {
+        rate,
+        count: n_req,
+        max_len: max_seq,
+        ..Default::default()
+    });
+    let t0 = std::time::Instant::now();
+    let mut pending = Vec::new();
+    for req in &trace {
+        // Respect arrival times (compressed 10× so demos finish quickly).
+        let target = req.arrival_s / 10.0;
+        let now = t0.elapsed().as_secs_f64();
+        if target > now {
+            std::thread::sleep(std::time::Duration::from_secs_f64(target - now));
+        }
+        let tokens = corpus::generate(512, req.context_len, req.corpus_seed);
+        pending.push(server.submit(Request::scoring(req.id, tokens)));
+    }
+    let mut ppl = PplAccum::default();
+    for rx in pending {
+        let resp = rx.recv()?;
+        ppl.add(&resp.nll);
+    }
+    let stats = server.shutdown();
+    println!(
+        "served {} requests in {} batches | ppl {:.3} | p50 {:.1}ms p99 {:.1}ms | {:.1} req/s | {:.0} tok/s",
+        stats.completed,
+        stats.batches,
+        ppl.ppl(),
+        stats.latency_p50_ms,
+        stats.latency_p99_ms,
+        stats.throughput_rps,
+        stats.tokens_per_s
+    );
+    Ok(())
+}
+
+fn cmd_ppl(args: &prescored::util::cli::Args) -> Result<()> {
+    let dir = Path::new(args.get("artifacts").unwrap_or("artifacts"));
+    let ws = WeightStore::load(&dir.join("weights.bin"))?;
+    let model = Transformer::from_weights(&ws, TransformerConfig::default());
+    let method = Method::parse(args.get("method").unwrap_or("kmeans"))
+        .ok_or_else(|| anyhow::anyhow!("unknown method"))?;
+    let top_k = args.get_usize("top-k").unwrap_or(64);
+    let n_seqs = args.get_usize("seqs").unwrap_or(4);
+
+    let modes: Vec<(String, AttnMode)> = vec![
+        ("exact".into(), AttnMode::Exact),
+        ("flash".into(), AttnMode::Flash),
+        (
+            "hyper".into(),
+            AttnMode::Hyper(HyperConfig { block_size: 64, sample_size: 64, ..Default::default() }),
+        ),
+        (
+            format!("{}+hyper k={top_k}", method.name()),
+            AttnMode::PreScored(PreScoredConfig {
+                prescore: PreScoreConfig { method, top_k, ..Default::default() },
+                hyper: HyperConfig { block_size: 64, sample_size: 64, ..Default::default() },
+                fallback_delta: 0.0,
+                coupling: Coupling::Glm3Corrected,
+            }),
+        ),
+    ];
+    for (name, mode) in &modes {
+        let mut acc = PplAccum::default();
+        for s in 0..n_seqs {
+            let toks = corpus::generate(512, 256, 40_000 + s as u64);
+            acc.add(&model.nll(&toks, mode));
+        }
+        println!("{name:<24} ppl {:.4}", acc.ppl());
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &prescored::util::cli::Args) -> Result<()> {
+    let dir = Path::new(args.get("artifacts").unwrap_or("artifacts"));
+    println!("artifacts in {}:", dir.display());
+    if let Ok(rd) = std::fs::read_dir(dir) {
+        for e in rd.flatten() {
+            let md = e.metadata().ok();
+            println!(
+                "  {:<44} {:>10} bytes",
+                e.file_name().to_string_lossy(),
+                md.map(|m| m.len()).unwrap_or(0)
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,166 @@
+//! Metrics: perplexity aggregation, heavy-attention coverage (Figs. 4/5,
+//! Table 7), and serving latency/throughput accounting.
+
+use crate::linalg::Matrix;
+use std::time::Duration;
+
+/// Aggregate perplexity over multiple sequences: exp(total nll / tokens).
+#[derive(Debug, Clone, Default)]
+pub struct PplAccum {
+    total_nll: f64,
+    tokens: usize,
+}
+
+impl PplAccum {
+    pub fn add(&mut self, nll: &[f32]) {
+        self.total_nll += nll.iter().map(|&v| v as f64).sum::<f64>();
+        self.tokens += nll.len();
+    }
+
+    pub fn ppl(&self) -> f64 {
+        if self.tokens == 0 {
+            return f64::NAN;
+        }
+        (self.total_nll / self.tokens as f64).exp()
+    }
+
+    pub fn tokens(&self) -> usize {
+        self.tokens
+    }
+}
+
+/// Fraction of ε-heavy attention entries captured by a key subset: an entry
+/// A_ij is heavy if A_ij > ε; it is captured if j ∈ selected. (Figs. 4/5.)
+pub fn heavy_coverage(attn: &Matrix, selected: &[usize], eps: f32) -> f64 {
+    let mut sel = vec![false; attn.cols];
+    for &j in selected {
+        sel[j] = true;
+    }
+    let mut heavy = 0usize;
+    let mut captured = 0usize;
+    for i in 0..attn.rows {
+        for (j, &v) in attn.row(i).iter().enumerate() {
+            if v > eps {
+                heavy += 1;
+                if sel[j] {
+                    captured += 1;
+                }
+            }
+        }
+    }
+    if heavy == 0 {
+        return 1.0;
+    }
+    captured as f64 / heavy as f64
+}
+
+/// Top-k heavy *columns* coverage (Table 7): the k keys receiving the most
+/// heavy entries vs. the selected subset; returns |topk ∩ selected| / k.
+pub fn heavy_columns_coverage(attn: &Matrix, selected: &[usize], eps: f32, k: usize) -> f64 {
+    let mut counts = vec![0f32; attn.cols];
+    for i in 0..attn.rows {
+        for (j, &v) in attn.row(i).iter().enumerate() {
+            if v > eps {
+                counts[j] += 1.0;
+            }
+        }
+    }
+    let top = crate::linalg::ops::top_k_indices(&counts, k);
+    let sel: std::collections::HashSet<usize> = selected.iter().cloned().collect();
+    let hit = top.iter().filter(|j| sel.contains(j)).count();
+    hit as f64 / k.max(1) as f64
+}
+
+/// Simple latency histogram with percentile queries.
+#[derive(Debug, Clone, Default)]
+pub struct LatencyStats {
+    samples_ms: Vec<f64>,
+}
+
+impl LatencyStats {
+    pub fn record(&mut self, d: Duration) {
+        self.samples_ms.push(d.as_secs_f64() * 1e3);
+    }
+
+    pub fn record_ms(&mut self, ms: f64) {
+        self.samples_ms.push(ms);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples_ms.len()
+    }
+
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples_ms.is_empty() {
+            return f64::NAN;
+        }
+        let mut s = self.samples_ms.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((p / 100.0) * (s.len() - 1) as f64).round() as usize;
+        s[idx.min(s.len() - 1)]
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples_ms.is_empty() {
+            return f64::NAN;
+        }
+        self.samples_ms.iter().sum::<f64>() / self.samples_ms.len() as f64
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={:.2}ms p50={:.2}ms p95={:.2}ms p99={:.2}ms",
+            self.count(),
+            self.mean(),
+            self.percentile(50.0),
+            self.percentile(95.0),
+            self.percentile(99.0)
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ppl_accum_uniform() {
+        let mut acc = PplAccum::default();
+        // nll = ln(8) per token ⇒ ppl = 8
+        acc.add(&[8f32.ln(); 10]);
+        acc.add(&[8f32.ln(); 5]);
+        assert!((acc.ppl() - 8.0).abs() < 1e-6);
+        assert_eq!(acc.tokens(), 15);
+    }
+
+    #[test]
+    fn heavy_coverage_counts() {
+        // 2x4 attention, eps 0.3: heavy at (0,0)=0.5, (1,2)=0.9
+        let attn = Matrix::from_vec(2, 4, vec![0.5, 0.1, 0.2, 0.2, 0.05, 0.02, 0.9, 0.03]);
+        assert_eq!(heavy_coverage(&attn, &[0], 0.3), 0.5);
+        assert_eq!(heavy_coverage(&attn, &[0, 2], 0.3), 1.0);
+        assert_eq!(heavy_coverage(&attn, &[], 0.3), 0.0);
+        assert_eq!(heavy_coverage(&attn, &[1], 0.95), 1.0); // no heavy entries
+    }
+
+    #[test]
+    fn heavy_columns_coverage_counts() {
+        let attn = Matrix::from_vec(2, 4, vec![0.5, 0.1, 0.4, 0.0, 0.6, 0.0, 0.4, 0.0]);
+        // eps=0.3: col0 has 2 heavy, col2 has 2 heavy ⇒ top-2 = {0, 2}
+        assert_eq!(heavy_columns_coverage(&attn, &[0, 2], 0.3, 2), 1.0);
+        assert_eq!(heavy_columns_coverage(&attn, &[0], 0.3, 2), 0.5);
+    }
+
+    #[test]
+    fn latency_percentiles() {
+        let mut l = LatencyStats::default();
+        for i in 1..=100 {
+            l.record_ms(i as f64);
+        }
+        assert_eq!(l.count(), 100);
+        assert!((l.percentile(50.0) - 50.0).abs() <= 1.0);
+        assert!((l.percentile(99.0) - 99.0).abs() <= 1.0);
+        assert!((l.mean() - 50.5).abs() < 1e-9);
+        assert!(l.summary().contains("n=100"));
+    }
+}

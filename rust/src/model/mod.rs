@@ -1,0 +1,18 @@
+//! Rust-side model substrate.
+//!
+//! * [`weights`] — reader for the `weights.bin` format exported by
+//!   `python/compile/export.py` (the build-time training pipeline).
+//! * [`transformer`] — a causal transformer LM numerically mirroring
+//!   `python/compile/model.py`, with *pluggable attention* so the experiment
+//!   benches can sweep every attention variant (exact / flash / hyper /
+//!   pre-scored, both couplings) over the same trained weights.
+//! * [`vit`] — the ViT encoder mirroring `python/compile/vit_model.py` for
+//!   the §5.3 zero-shot attention-substitution experiments.
+
+pub mod transformer;
+pub mod vit;
+pub mod weights;
+
+pub use transformer::{AttnMode, Transformer, TransformerConfig};
+pub use vit::{Vit, VitAttnMode, VitConfig};
+pub use weights::WeightStore;

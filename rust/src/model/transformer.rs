@@ -1,0 +1,361 @@
+//! Causal transformer LM — numerical mirror of `python/compile/model.py`
+//! with *pluggable attention* for the experiment sweeps.
+//!
+//! The Python side trains the weights (build time) and serves via the AOT
+//! artifacts; this Rust implementation runs the *same computation* over the
+//! same `weights.bin` so the benches can sweep attention variants (exact /
+//! flash / HyperAttention ± blockwise-sorting / Pre-Scored HyperAttention in
+//! both couplings) without recompiling a PJRT artifact per configuration.
+//! An integration test validates it against the PJRT-executed artifact.
+
+use super::weights::WeightStore;
+use crate::attention::{
+    exact_attention, flash_attention, hyper_attention, prescored_hyper_attention,
+    AttentionInputs, HyperConfig, PreScoredConfig,
+};
+use crate::linalg::ops::matmul;
+use crate::linalg::Matrix;
+
+/// Static model hyper-parameters (must match the trained weights).
+#[derive(Debug, Clone)]
+pub struct TransformerConfig {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub max_seq: usize,
+}
+
+impl Default for TransformerConfig {
+    fn default() -> Self {
+        // Mirrors python ModelConfig defaults.
+        TransformerConfig { vocab: 512, d_model: 128, n_layers: 4, n_heads: 4, max_seq: 256 }
+    }
+}
+
+impl TransformerConfig {
+    pub fn d_head(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+}
+
+/// Which attention implementation runs inside each layer.
+#[derive(Debug, Clone)]
+pub enum AttnMode {
+    /// Naive exact softmax attention.
+    Exact,
+    /// FlashAttention-style blocked streaming exact attention.
+    Flash,
+    /// HyperAttention (no pre-scoring).
+    Hyper(HyperConfig),
+    /// Pre-Scored HyperAttention (Algorithm 2), either coupling.
+    PreScored(PreScoredConfig),
+}
+
+/// The model: config + loaded weights.
+pub struct Transformer {
+    pub cfg: TransformerConfig,
+    embed: Matrix,
+    pos: Matrix,
+    ln_f: (Vec<f32>, Vec<f32>),
+    head: Matrix,
+    layers: Vec<LayerWeights>,
+}
+
+struct LayerWeights {
+    ln1: (Vec<f32>, Vec<f32>),
+    wq: Matrix,
+    wk: Matrix,
+    wv: Matrix,
+    wo: Matrix,
+    ln2: (Vec<f32>, Vec<f32>),
+    w1: Matrix,
+    b1: Vec<f32>,
+    w2: Matrix,
+    b2: Vec<f32>,
+}
+
+impl Transformer {
+    /// Wire a model from a loaded weight store (panics on missing tensors —
+    /// a config/weights mismatch is a build bug, not a runtime condition).
+    pub fn from_weights(ws: &WeightStore, cfg: TransformerConfig) -> Self {
+        let layers = (0..cfg.n_layers)
+            .map(|l| LayerWeights {
+                ln1: (ws.vector(&format!("l{l}.ln1.g")), ws.vector(&format!("l{l}.ln1.b"))),
+                wq: ws.matrix(&format!("l{l}.wq")),
+                wk: ws.matrix(&format!("l{l}.wk")),
+                wv: ws.matrix(&format!("l{l}.wv")),
+                wo: ws.matrix(&format!("l{l}.wo")),
+                ln2: (ws.vector(&format!("l{l}.ln2.g")), ws.vector(&format!("l{l}.ln2.b"))),
+                w1: ws.matrix(&format!("l{l}.w1")),
+                b1: ws.vector(&format!("l{l}.b1")),
+                w2: ws.matrix(&format!("l{l}.w2")),
+                b2: ws.vector(&format!("l{l}.b2")),
+            })
+            .collect();
+        Transformer {
+            embed: ws.matrix("embed"),
+            pos: ws.matrix("pos"),
+            ln_f: (ws.vector("ln_f.g"), ws.vector("ln_f.b")),
+            head: ws.matrix("head"),
+            layers,
+            cfg,
+        }
+    }
+
+    /// Random-initialized model (unit tests / ablations without artifacts).
+    pub fn random(cfg: TransformerConfig, seed: u64) -> Self {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let d = cfg.d_model;
+        let h = 4 * d;
+        let scale = (d as f32).powf(-0.5);
+        let layers = (0..cfg.n_layers)
+            .map(|_| LayerWeights {
+                ln1: (vec![1.0; d], vec![0.0; d]),
+                wq: Matrix::randn(d, d, scale, &mut rng),
+                wk: Matrix::randn(d, d, scale, &mut rng),
+                wv: Matrix::randn(d, d, scale, &mut rng),
+                wo: Matrix::randn(d, d, scale, &mut rng),
+                ln2: (vec![1.0; d], vec![0.0; d]),
+                w1: Matrix::randn(d, h, scale, &mut rng),
+                b1: vec![0.0; h],
+                w2: Matrix::randn(h, d, (h as f32).powf(-0.5), &mut rng),
+                b2: vec![0.0; d],
+            })
+            .collect();
+        Transformer {
+            embed: Matrix::randn(cfg.vocab, d, 0.02, &mut rng),
+            pos: Matrix::randn(cfg.max_seq, d, 0.02, &mut rng),
+            ln_f: (vec![1.0; d], vec![0.0; d]),
+            head: Matrix::randn(d, cfg.vocab, 0.02, &mut rng),
+            layers,
+            cfg,
+        }
+    }
+
+    /// Forward pass: logits [n, vocab].
+    pub fn forward(&self, tokens: &[u32], mode: &AttnMode) -> Matrix {
+        let n = tokens.len();
+        assert!(n <= self.cfg.max_seq, "sequence longer than max_seq");
+        let d = self.cfg.d_model;
+        let nh = self.cfg.n_heads;
+        let dh = self.cfg.d_head();
+
+        let mut x = Matrix::zeros(n, d);
+        for (i, &t) in tokens.iter().enumerate() {
+            let (erow, prow) = (self.embed.row(t as usize), self.pos.row(i));
+            let xrow = x.row_mut(i);
+            for c in 0..d {
+                xrow[c] = erow[c] + prow[c];
+            }
+        }
+
+        for (li, lw) in self.layers.iter().enumerate() {
+            // Attention block.
+            let h = layernorm(&x, &lw.ln1.0, &lw.ln1.1);
+            let q_all = matmul(&h, &lw.wq);
+            let k_all = matmul(&h, &lw.wk);
+            let v_all = matmul(&h, &lw.wv);
+            let mut att_all = Matrix::zeros(n, d);
+            for head in 0..nh {
+                let (c0, c1) = (head * dh, (head + 1) * dh);
+                let q = q_all.slice_cols(c0, c1);
+                let k = k_all.slice_cols(c0, c1);
+                let v = v_all.slice_cols(c0, c1);
+                let inp = AttentionInputs::new(&q, &k, &v).causal(true);
+                let out = self.run_attention(&inp, mode, (li * nh + head) as u64);
+                for i in 0..n {
+                    att_all.row_mut(i)[c0..c1].copy_from_slice(out.row(i));
+                }
+            }
+            let proj = matmul(&att_all, &lw.wo);
+            for (xv, pv) in x.data.iter_mut().zip(&proj.data) {
+                *xv += pv;
+            }
+            // MLP block.
+            let h2 = layernorm(&x, &lw.ln2.0, &lw.ln2.1);
+            let mut mid = matmul(&h2, &lw.w1);
+            for i in 0..n {
+                let row = mid.row_mut(i);
+                for (c, v) in row.iter_mut().enumerate() {
+                    *v = gelu_tanh(*v + lw.b1[c]);
+                }
+            }
+            let mut out = matmul(&mid, &lw.w2);
+            for i in 0..n {
+                let row = out.row_mut(i);
+                for (c, v) in row.iter_mut().enumerate() {
+                    *v += lw.b2[c];
+                }
+            }
+            for (xv, ov) in x.data.iter_mut().zip(&out.data) {
+                *xv += ov;
+            }
+        }
+        let xf = layernorm(&x, &self.ln_f.0, &self.ln_f.1);
+        matmul(&xf, &self.head)
+    }
+
+    fn run_attention(&self, inp: &AttentionInputs, mode: &AttnMode, salt: u64) -> Matrix {
+        match mode {
+            AttnMode::Exact => exact_attention(inp),
+            AttnMode::Flash => flash_attention(inp),
+            AttnMode::Hyper(cfg) => {
+                let mut c = cfg.clone();
+                c.seed = c.seed.wrapping_add(salt);
+                hyper_attention(inp, &c, None)
+            }
+            AttnMode::PreScored(cfg) => {
+                let mut c = cfg.clone();
+                c.hyper.seed = c.hyper.seed.wrapping_add(salt);
+                c.prescore.seed = c.prescore.seed.wrapping_add(salt);
+                prescored_hyper_attention(inp, &c).0
+            }
+        }
+    }
+
+    /// Per-token next-token negative log-likelihood (length n−1).
+    pub fn nll(&self, tokens: &[u32], mode: &AttnMode) -> Vec<f32> {
+        let logits = self.forward(tokens, mode);
+        let n = tokens.len();
+        let mut out = Vec::with_capacity(n - 1);
+        let mut row = vec![0.0f32; self.cfg.vocab];
+        for i in 0..n - 1 {
+            row.copy_from_slice(logits.row(i));
+            let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let lse = m + row.iter().map(|v| (v - m).exp()).sum::<f32>().ln();
+            out.push(lse - logits[(i, tokens[i + 1] as usize)]);
+        }
+        out
+    }
+
+    /// Perplexity = exp(mean nll).
+    pub fn perplexity(&self, tokens: &[u32], mode: &AttnMode) -> f64 {
+        let nll = self.nll(tokens, mode);
+        (nll.iter().map(|&v| v as f64).sum::<f64>() / nll.len() as f64).exp()
+    }
+}
+
+/// LayerNorm over rows (eps = 1e-5, matching jax).
+pub fn layernorm(x: &Matrix, g: &[f32], b: &[f32]) -> Matrix {
+    let mut out = Matrix::zeros(x.rows, x.cols);
+    for i in 0..x.rows {
+        let row = x.row(i);
+        let mu: f32 = row.iter().sum::<f32>() / row.len() as f32;
+        let var: f32 = row.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / row.len() as f32;
+        let inv = 1.0 / (var + 1e-5).sqrt();
+        let orow = out.row_mut(i);
+        for c in 0..row.len() {
+            orow[c] = (row[c] - mu) * inv * g[c] + b[c];
+        }
+    }
+    out
+}
+
+/// GELU, tanh approximation (jax.nn.gelu's default `approximate=True`).
+#[inline]
+pub fn gelu_tanh(x: f32) -> f32 {
+    const C: f32 = 0.797_884_56; // sqrt(2/pi)
+    0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::Coupling;
+    use crate::data::corpus;
+    use crate::prescore::{Method, PreScoreConfig};
+
+    fn tiny() -> TransformerConfig {
+        TransformerConfig { vocab: 64, d_model: 32, n_layers: 2, n_heads: 2, max_seq: 32 }
+    }
+
+    #[test]
+    fn forward_shapes_and_finite() {
+        let m = Transformer::random(tiny(), 1);
+        let tokens = corpus::generate(64, 32, 0);
+        let logits = m.forward(&tokens, &AttnMode::Exact);
+        assert_eq!((logits.rows, logits.cols), (32, 64));
+        assert!(logits.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn flash_matches_exact_through_model() {
+        let m = Transformer::random(tiny(), 2);
+        let tokens = corpus::generate(64, 32, 1);
+        let a = m.forward(&tokens, &AttnMode::Exact);
+        let b = m.forward(&tokens, &AttnMode::Flash);
+        assert!(a.max_abs_diff(&b) < 1e-3, "diff {}", a.max_abs_diff(&b));
+    }
+
+    #[test]
+    fn causality_future_token_change_does_not_affect_past() {
+        let m = Transformer::random(tiny(), 3);
+        let mut tokens = corpus::generate(64, 32, 2);
+        let l1 = m.forward(&tokens, &AttnMode::Exact);
+        tokens[31] = (tokens[31] + 7) % 64;
+        let l2 = m.forward(&tokens, &AttnMode::Exact);
+        for i in 0..31 {
+            for c in 0..64 {
+                assert!((l1[(i, c)] - l2[(i, c)]).abs() < 1e-4, "pos {i} leaked");
+            }
+        }
+    }
+
+    #[test]
+    fn nll_reasonable_for_random_model() {
+        let m = Transformer::random(tiny(), 4);
+        let tokens = corpus::generate(64, 32, 3);
+        let nll = m.nll(&tokens, &AttnMode::Exact);
+        assert_eq!(nll.len(), 31);
+        let mean: f32 = nll.iter().sum::<f32>() / 31.0;
+        // Untrained model ≈ uniform ⇒ mean nll ≈ ln 64 ≈ 4.16
+        assert!((mean - (64f32).ln()).abs() < 1.5, "mean {mean}");
+        let ppl = m.perplexity(&tokens, &AttnMode::Exact);
+        assert!(ppl > 1.0 && ppl < 500.0);
+    }
+
+    #[test]
+    fn hyper_full_block_matches_exact() {
+        let m = Transformer::random(tiny(), 5);
+        let tokens = corpus::generate(64, 32, 4);
+        let hyper = AttnMode::Hyper(HyperConfig { block_size: 64, sample_size: 0, ..Default::default() });
+        let a = m.forward(&tokens, &AttnMode::Exact);
+        let b = m.forward(&tokens, &hyper);
+        assert!(a.max_abs_diff(&b) < 1e-3);
+    }
+
+    #[test]
+    fn prescored_runs_both_couplings() {
+        let m = Transformer::random(tiny(), 6);
+        let tokens = corpus::generate(64, 32, 5);
+        for coupling in [Coupling::Glm3Corrected, Coupling::Glm2Artifact] {
+            let mode = AttnMode::PreScored(PreScoredConfig {
+                prescore: PreScoreConfig { method: Method::KMeans, top_k: 8, ..Default::default() },
+                hyper: HyperConfig { block_size: 8, sample_size: 4, ..Default::default() },
+                fallback_delta: 0.0,
+                coupling,
+            });
+            let ppl = m.perplexity(&tokens, &mode);
+            assert!(ppl.is_finite() && ppl > 1.0, "{coupling:?} ppl {ppl}");
+        }
+    }
+
+    #[test]
+    fn gelu_tanh_reference_values() {
+        assert!((gelu_tanh(0.0)).abs() < 1e-7);
+        assert!((gelu_tanh(1.0) - 0.841192).abs() < 1e-4);
+        assert!((gelu_tanh(-1.0) + 0.158808).abs() < 1e-4);
+        assert!((gelu_tanh(3.0) - 2.9964).abs() < 1e-3);
+    }
+
+    #[test]
+    fn layernorm_normalizes() {
+        let x = Matrix::from_vec(1, 4, vec![1., 2., 3., 4.]);
+        let out = layernorm(&x, &[1.0; 4], &[0.0; 4]);
+        let mu: f32 = out.row(0).iter().sum::<f32>() / 4.0;
+        let var: f32 = out.row(0).iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / 4.0;
+        assert!(mu.abs() < 1e-5);
+        assert!((var - 1.0).abs() < 1e-3);
+    }
+}

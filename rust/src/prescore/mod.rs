@@ -1,0 +1,480 @@
+//! PreScore — Algorithm 1 of the paper.
+//!
+//! Ranks the n keys in a single pass and returns the indices of the `s`
+//! most informative ones:
+//!
+//! ```text
+//! Require: Keys K ∈ R^{n×d_k}, clusters k = d+1,
+//!          method ∈ {KMEANS, KMEDIAN, LEVERAGE, ...}
+//! 1: K' ← K + N(0, σ² I)            (optional noise)
+//! 2: if clustering method: {C_j, µ_j} ← cluster(K', k)
+//! 3:   S ← indices of the s keys nearest to their centroids
+//! 4: else: h ← ApproxLeverage(K'); S ← top-s indices by h
+//! 5: return S
+//! ```
+//!
+//! Implementation notes mirroring the paper:
+//! * Keys are ℓ2-normalized before clustering (row-norm regularity,
+//!   Assumption 4.1 / Appendix B failure mode).
+//! * Default cluster count is k = d + 1: one centroid per latent direction
+//!   plus a residual bucket (§3.1).
+//! * Clustering runs a fixed small number of Lloyd iterations (I ≤ 10).
+
+pub mod leverage;
+
+use crate::clustering::{
+    gaussian_kernel_kmeans, kernel_kmeans::kernel_distances, kmeans, kmeans_best_of, kmedian,
+    minibatch_kmeans, minkowski_kmeans,
+};
+use crate::linalg::ops::{bottom_k_indices, top_k_indices};
+use crate::linalg::Matrix;
+use crate::util::rng::Rng;
+
+/// Pre-scoring method (Algorithm 1 `method` plus the paper's extensions).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Method {
+    /// Lloyd k-means: rank keys by distance to their assigned centroid.
+    KMeans,
+    /// k-median (ℓ1 metric).
+    KMedian,
+    /// Leverage-score ranking (LevAttention route). `exact` selects the QR
+    /// path instead of the sketched approximation.
+    Leverage { exact: bool },
+    /// Gaussian-kernel k-means (Appendix I). `gamma <= 0` = median heuristic.
+    GaussianKMeans { gamma: f32 },
+    /// Minkowski ℓp k-means (Claim 4.7).
+    Minkowski { p: f32 },
+    /// Mini-batch k-means (Appendix H hardware-friendly variant).
+    MiniBatch { batch: usize },
+    /// ℓ2-row-norm ranking — the weak baseline from LevAttention's ViT table
+    /// (Appendix E rows "ℓ2 norm, top-32").
+    L2Norm,
+}
+
+impl Method {
+    /// Parse from a CLI string.
+    pub fn parse(s: &str) -> Option<Method> {
+        match s {
+            "kmeans" => Some(Method::KMeans),
+            "kmedian" => Some(Method::KMedian),
+            "leverage" => Some(Method::Leverage { exact: false }),
+            "leverage-exact" => Some(Method::Leverage { exact: true }),
+            "kernel-kmeans" => Some(Method::GaussianKMeans { gamma: -1.0 }),
+            "minibatch" => Some(Method::MiniBatch { batch: 256 }),
+            "l2norm" => Some(Method::L2Norm),
+            _ => {
+                if let Some(p) = s.strip_prefix("lp:") {
+                    p.parse().ok().map(|p| Method::Minkowski { p })
+                } else {
+                    None
+                }
+            }
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            Method::KMeans => "kmeans".into(),
+            Method::KMedian => "kmedian".into(),
+            Method::Leverage { exact: true } => "leverage-exact".into(),
+            Method::Leverage { exact: false } => "leverage".into(),
+            Method::GaussianKMeans { .. } => "kernel-kmeans".into(),
+            Method::Minkowski { p } => format!("lp:{p}"),
+            Method::MiniBatch { .. } => "minibatch".into(),
+            Method::L2Norm => "l2norm".into(),
+        }
+    }
+}
+
+/// PreScore configuration (Algorithm 1 inputs).
+#[derive(Debug, Clone)]
+pub struct PreScoreConfig {
+    pub method: Method,
+    /// Number of clusters; `None` = the paper's default k = d + 1.
+    pub clusters: Option<usize>,
+    /// Number of keys to retain (`s` / the experiments' `top_k`).
+    pub top_k: usize,
+    /// Optional stochastic perturbation σ (Alg. 1 line 1).
+    pub noise_sigma: f32,
+    /// ℓ2-normalize keys before clustering (Assumption 4.1; default true).
+    pub normalize: bool,
+    /// Lloyd iteration cap (paper: I ≤ 10).
+    pub max_iters: usize,
+    pub seed: u64,
+}
+
+impl Default for PreScoreConfig {
+    fn default() -> Self {
+        PreScoreConfig {
+            method: Method::KMeans,
+            clusters: None,
+            top_k: 256,
+            noise_sigma: 0.0,
+            normalize: true,
+            max_iters: 10,
+            seed: 0,
+        }
+    }
+}
+
+/// Result of pre-scoring: the selected indices (ascending) and the score
+/// assigned to every key (higher = more informative), useful for coverage
+/// analyses and for the coordinator's periodic refresh heuristics.
+#[derive(Debug, Clone)]
+pub struct PreScoreResult {
+    pub selected: Vec<usize>,
+    pub scores: Vec<f32>,
+    pub method: Method,
+}
+
+/// Run Algorithm 1 on a key matrix.
+///
+/// Returns the `top_k` selected key indices in ascending order plus the full
+/// score vector. `top_k = 0` conventionally means "no filtering" in the
+/// paper's experiments (the unfiltered high-compute reference point); we
+/// return the identity selection in that case.
+pub fn prescore(keys: &Matrix, cfg: &PreScoreConfig) -> PreScoreResult {
+    let n = keys.rows;
+    let d = keys.cols;
+    let mut rng = Rng::with_stream(cfg.seed, 0x9e3779b97f4a7c15);
+
+    if cfg.top_k == 0 || cfg.top_k >= n {
+        // No filtering: identity selection.
+        return PreScoreResult {
+            selected: (0..n).collect(),
+            scores: vec![1.0; n],
+            method: cfg.method,
+        };
+    }
+
+    // Line 1: optional noise + row-norm regularization.
+    let mut kp = keys.clone();
+    if cfg.noise_sigma > 0.0 {
+        kp.add_noise(cfg.noise_sigma, &mut rng);
+    }
+    if cfg.normalize {
+        kp.l2_normalize_rows(1e-12);
+    }
+
+    let k_clusters = cfg.clusters.unwrap_or(d + 1).max(1).min(n);
+    let s = cfg.top_k.min(n);
+
+    // Scores: higher = more informative. For clustering methods, a key's
+    // informativeness is its *closeness* to its centroid (the paper selects
+    // "the s keys nearest to their centroids"), so score = −distance.
+    let scores: Vec<f32> = match cfg.method {
+        Method::KMeans => {
+            // Best-of-3 restarts: cheap insurance against unlucky seeding
+            // while staying within the paper's O(n·d·k·I) budget.
+            let c = kmeans_best_of(&kp, k_clusters, cfg.max_iters, 3, &mut rng);
+            c.distances_sq(&kp).into_iter().map(|d| -d).collect()
+        }
+        Method::KMedian => {
+            let c = kmedian(&kp, k_clusters, cfg.max_iters, &mut rng);
+            // ℓ1 distance for ranking consistency with the clustering metric.
+            (0..n)
+                .map(|i| {
+                    -crate::linalg::ops::lp_dist_pow(
+                        kp.row(i),
+                        c.centroids.row(c.assignment[i]),
+                        1.0,
+                    )
+                })
+                .collect()
+        }
+        Method::Leverage { exact } => {
+            if exact {
+                leverage::leverage_scores_exact(&kp)
+            } else {
+                leverage::leverage_scores_approx(&kp, 8, 32, &mut rng)
+            }
+        }
+        Method::GaussianKMeans { gamma } => {
+            let c = gaussian_kernel_kmeans(&kp, k_clusters, gamma, cfg.max_iters, &mut rng);
+            let g = if gamma > 0.0 { gamma } else { 1.0 };
+            kernel_distances(&kp, &c.assignment, k_clusters, g)
+                .into_iter()
+                .map(|d| -d)
+                .collect()
+        }
+        Method::Minkowski { p } => {
+            let c = minkowski_kmeans(&kp, k_clusters, p, cfg.max_iters, &mut rng);
+            (0..n)
+                .map(|i| {
+                    -crate::linalg::ops::lp_dist_pow(
+                        kp.row(i),
+                        c.centroids.row(c.assignment[i]),
+                        p,
+                    )
+                })
+                .collect()
+        }
+        Method::MiniBatch { batch } => {
+            let c = minibatch_kmeans(&kp, k_clusters, batch, cfg.max_iters.max(20), &mut rng);
+            c.distances_sq(&kp).into_iter().map(|d| -d).collect()
+        }
+        Method::L2Norm => keys.row_sq_norms(), // note: *unnormalized* norms
+    };
+
+    let mut selected = top_k_indices(&scores, s);
+    selected.sort_unstable();
+    PreScoreResult { selected, scores, method: cfg.method }
+}
+
+/// Convenience: indices NOT selected (complement), ascending.
+pub fn complement(selected: &[usize], n: usize) -> Vec<usize> {
+    let mut mask = vec![false; n];
+    for &i in selected {
+        mask[i] = true;
+    }
+    (0..n).filter(|&i| !mask[i]).collect()
+}
+
+/// Per-cluster balanced selection: pick a size-proportional share of the
+/// budget from each cluster, nearest-to-centroid first. Used by the ViT
+/// substitution experiments where `num_cluster` and `num_sample` are
+/// controlled independently (Table 2).
+pub fn prescore_balanced(
+    keys: &Matrix,
+    num_clusters: usize,
+    num_samples: usize,
+    max_iters: usize,
+    seed: u64,
+) -> PreScoreResult {
+    let n = keys.rows;
+    let mut rng = Rng::with_stream(seed, 0xabcd);
+    if num_samples >= n {
+        return PreScoreResult {
+            selected: (0..n).collect(),
+            scores: vec![1.0; n],
+            method: Method::KMeans,
+        };
+    }
+    let mut kp = keys.clone();
+    kp.l2_normalize_rows(1e-12);
+    let c = kmeans(&kp, num_clusters, max_iters, &mut rng);
+    let dist = c.distances_sq(&kp);
+    let k = c.k();
+    // Budget per cluster proportional to cluster size, ≥1 for non-empty.
+    let sizes = c.sizes();
+    let mut budget = vec![0usize; k];
+    let mut assigned = 0usize;
+    for ci in 0..k {
+        if sizes[ci] > 0 {
+            budget[ci] = ((num_samples * sizes[ci]) / n).max(1).min(sizes[ci]);
+            assigned += budget[ci];
+        }
+    }
+    // Distribute any remaining budget to the largest clusters first.
+    let mut order: Vec<usize> = (0..k).collect();
+    order.sort_by_key(|&ci| std::cmp::Reverse(sizes[ci]));
+    let mut rem = num_samples.saturating_sub(assigned);
+    'outer: while rem > 0 {
+        let mut progressed = false;
+        for &ci in &order {
+            if budget[ci] < sizes[ci] {
+                budget[ci] += 1;
+                rem -= 1;
+                progressed = true;
+                if rem == 0 {
+                    break 'outer;
+                }
+            }
+        }
+        if !progressed {
+            break;
+        }
+    }
+    let mut selected = Vec::with_capacity(num_samples);
+    for ci in 0..k {
+        if budget[ci] == 0 {
+            continue;
+        }
+        let members: Vec<usize> = (0..n).filter(|&i| c.assignment[i] == ci).collect();
+        let member_dists: Vec<f32> = members.iter().map(|&i| dist[i]).collect();
+        for &local in &bottom_k_indices(&member_dists, budget[ci]) {
+            selected.push(members[local]);
+        }
+    }
+    selected.sort_unstable();
+    selected.truncate(num_samples);
+    let scores: Vec<f32> = dist.into_iter().map(|d| -d).collect();
+    PreScoreResult { selected, scores, method: Method::KMeans }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Transformer-like key geometry: `heavy` keys form tight groups around
+    /// the d axis directions (m = heavy/d per direction, as in the planted
+    /// model's S_j sets); the bulk forms an attention-sink-like cloud around
+    /// a shared direction with larger jitter.
+    fn planted_keys(n: usize, d: usize, heavy: usize, rng: &mut Rng) -> Matrix {
+        let mut k = Matrix::zeros(n, d);
+        let base = 1.0 / (d as f32).sqrt();
+        for i in 0..n {
+            if i < heavy {
+                let dir = i % d;
+                for j in 0..d {
+                    k[(i, j)] = rng.gauss32(if j == dir { 1.0 } else { 0.0 }, 0.005);
+                }
+            } else {
+                for j in 0..d {
+                    k[(i, j)] = rng.gauss32(base, 0.02);
+                }
+            }
+        }
+        k
+    }
+
+    #[test]
+    fn method_parse_roundtrip() {
+        for s in
+            ["kmeans", "kmedian", "leverage", "leverage-exact", "kernel-kmeans", "l2norm", "minibatch", "lp:1.5"]
+        {
+            let m = Method::parse(s).unwrap();
+            assert_eq!(Method::parse(&m.name()).unwrap().name(), m.name());
+        }
+        assert!(Method::parse("bogus").is_none());
+    }
+
+    #[test]
+    fn topk_zero_means_no_filtering() {
+        let mut rng = Rng::new(1);
+        let k = Matrix::randn(20, 4, 1.0, &mut rng);
+        let r = prescore(&k, &PreScoreConfig { top_k: 0, ..Default::default() });
+        assert_eq!(r.selected, (0..20).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn kmeans_route_selects_heavy_keys() {
+        let mut rng = Rng::new(2);
+        let (n, d, heavy) = (300, 8, 32); // m = 4 keys per heavy direction
+        let k = planted_keys(n, d, heavy, &mut rng);
+        let r = prescore(
+            &k,
+            &PreScoreConfig { method: Method::KMeans, top_k: heavy, seed: 3, ..Default::default() },
+        );
+        // Most heavy keys should be among the selected (they sit essentially
+        // on their centroids; the bulk cloud is looser).
+        let got: std::collections::HashSet<_> = r.selected.iter().cloned().collect();
+        let hit = (0..heavy).filter(|i| got.contains(i)).count();
+        assert!(hit >= heavy - 4, "recovered {hit}/{heavy}: {:?}", r.selected);
+    }
+
+    #[test]
+    fn leverage_route_selects_heavy_keys() {
+        let mut rng = Rng::new(4);
+        let (n, d, heavy) = (300, 8, 32);
+        let k = planted_keys(n, d, heavy, &mut rng);
+        for exact in [true, false] {
+            let r = prescore(
+                &k,
+                &PreScoreConfig {
+                    method: Method::Leverage { exact },
+                    top_k: heavy,
+                    seed: 5,
+                    ..Default::default()
+                },
+            );
+            let got: std::collections::HashSet<_> = r.selected.iter().cloned().collect();
+            let hit = (0..heavy).filter(|i| got.contains(i)).count();
+            assert!(hit >= heavy - 4, "exact={exact} recovered {hit}/{heavy}");
+        }
+    }
+
+    #[test]
+    fn selected_sorted_and_unique_for_all_methods() {
+        let mut rng = Rng::new(6);
+        let k = Matrix::randn(120, 6, 1.0, &mut rng);
+        for method in [
+            Method::KMeans,
+            Method::KMedian,
+            Method::Leverage { exact: true },
+            Method::Leverage { exact: false },
+            Method::GaussianKMeans { gamma: 1.0 },
+            Method::Minkowski { p: 1.5 },
+            Method::MiniBatch { batch: 32 },
+            Method::L2Norm,
+        ] {
+            let r = prescore(&k, &PreScoreConfig { method, top_k: 40, ..Default::default() });
+            assert_eq!(r.selected.len(), 40, "{method:?}");
+            let mut sorted = r.selected.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted, r.selected, "{method:?} not sorted/unique");
+            assert_eq!(r.scores.len(), 120);
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut rng = Rng::new(7);
+        let k = Matrix::randn(100, 5, 1.0, &mut rng);
+        let cfg = PreScoreConfig { top_k: 30, seed: 42, ..Default::default() };
+        assert_eq!(prescore(&k, &cfg).selected, prescore(&k, &cfg).selected);
+    }
+
+    #[test]
+    fn complement_partitions() {
+        let sel = vec![1, 3, 4];
+        let comp = complement(&sel, 6);
+        assert_eq!(comp, vec![0, 2, 5]);
+    }
+
+    #[test]
+    fn balanced_selection_budget_and_coverage() {
+        let mut rng = Rng::new(8);
+        // three separated blobs
+        let mut data = Matrix::zeros(90, 2);
+        for i in 0..30 {
+            for (b, cx) in [-8.0f32, 0.0, 8.0].iter().enumerate() {
+                data[(b * 30 + i, 0)] = rng.gauss32(*cx, 0.3);
+                data[(b * 30 + i, 1)] = rng.gauss32(0.0, 0.3);
+            }
+        }
+        let r = prescore_balanced(&data, 3, 12, 10, 1);
+        assert_eq!(r.selected.len(), 12);
+        // Every blob should contribute samples.
+        let blob = |i: usize| i / 30;
+        let mut hit = [false; 3];
+        for &i in &r.selected {
+            hit[blob(i)] = true;
+        }
+        assert!(hit.iter().all(|&h| h), "selection misses a blob: {:?}", r.selected);
+    }
+
+    #[test]
+    fn normalization_defeats_appendix_b_outliers() {
+        // Appendix B: heavy-norm noise rows "steal" k-means clusters when
+        // rows are not normalized. With normalize=true the unit-norm basis
+        // rows must be selected.
+        let (n, d) = (64, 8);
+        let mut k = Matrix::zeros(n, d);
+        for i in 0..d / 2 {
+            k[(i, i)] = 1.0; // signal: e_i, unit norm
+        }
+        for i in d / 2..n {
+            k[(i, d / 2)] = 100.0; // noise: huge norm, same direction
+        }
+        let sel_norm = prescore(
+            &k,
+            &PreScoreConfig {
+                method: Method::KMeans,
+                top_k: d / 2,
+                normalize: true,
+                clusters: Some(d + 1),
+                seed: 9,
+                ..Default::default()
+            },
+        );
+        let signal: std::collections::HashSet<usize> = (0..d / 2).collect();
+        let hits_norm = sel_norm.selected.iter().filter(|i| signal.contains(i)).count();
+        assert!(
+            hits_norm >= d / 2 - 1,
+            "normalized prescore missed signal: {:?}",
+            sel_norm.selected
+        );
+    }
+}

@@ -1,0 +1,196 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute on the
+//! request path. Python is never involved here.
+//!
+//! Pattern follows /opt/xla-example/load_hlo:
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `client.compile` → `execute`.
+//!
+//! [`ModelRuntime`] binds one compiled executable to the weight literals it
+//! was lowered against (params are positional, ordered by sorted name — the
+//! contract shared with `python/compile/aot.py`), so the hot path only
+//! converts the token batch.
+
+use crate::model::weights::WeightStore;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// A compiled artifact plus its resident weight literals.
+pub struct ModelRuntime {
+    client: xla::PjRtClient,
+    exe: xla::PjRtLoadedExecutable,
+    weight_literals: Vec<xla::Literal>,
+    /// (batch, seq) the artifact was compiled for.
+    pub batch: usize,
+    pub seq: usize,
+    pub name: String,
+}
+
+/// Output of one serving execution.
+#[derive(Debug, Clone)]
+pub struct ServeOutput {
+    /// Per-token NLL, `[batch][seq-1]`.
+    pub nll: Vec<Vec<f32>>,
+    /// Last-position logits, `[batch][vocab]`.
+    pub last_logits: Vec<Vec<f32>>,
+}
+
+impl ModelRuntime {
+    /// Load an artifact (`model_<variant>_b<B>_n<N>.hlo.txt`) and bind the
+    /// weights from `weights.bin` in the same directory.
+    pub fn load(artifacts_dir: &Path, variant: &str, batch: usize, seq: usize) -> Result<Self> {
+        let path = artifacts_dir.join(format!("model_{variant}_b{batch}_n{seq}.hlo.txt"));
+        let weights = artifacts_dir.join("weights.bin");
+        Self::load_files(&path, &weights, batch, seq)
+    }
+
+    /// Load from explicit file paths.
+    pub fn load_files(hlo_path: &Path, weights_path: &Path, batch: usize, seq: usize) -> Result<Self> {
+        if !hlo_path.exists() {
+            bail!("artifact {} not found — run `make artifacts`", hlo_path.display());
+        }
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo_path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", hlo_path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).context("compiling artifact")?;
+
+        let ws = WeightStore::load(weights_path)?;
+        let mut weight_literals = Vec::with_capacity(ws.len());
+        for name in &ws.order {
+            let t = ws.tensor(name);
+            let lit = xla::Literal::vec1(&t.data);
+            let dims: Vec<i64> = t.dims.iter().map(|&d| d as i64).collect();
+            weight_literals.push(lit.reshape(&dims).context("reshaping weight literal")?);
+        }
+        Ok(ModelRuntime {
+            client,
+            exe,
+            weight_literals,
+            batch,
+            seq,
+            name: hlo_path.file_stem().unwrap().to_string_lossy().into_owned(),
+        })
+    }
+
+    /// Execute on a token batch (`[batch][seq]`, padded by the caller).
+    /// Returns per-token NLLs and last-position logits.
+    pub fn execute(&self, tokens: &[Vec<u32>]) -> Result<ServeOutput> {
+        if tokens.len() != self.batch {
+            bail!("expected batch {}, got {}", self.batch, tokens.len());
+        }
+        let mut flat: Vec<i32> = Vec::with_capacity(self.batch * self.seq);
+        for row in tokens {
+            if row.len() != self.seq {
+                bail!("expected seq {}, got {}", self.seq, row.len());
+            }
+            flat.extend(row.iter().map(|&t| t as i32));
+        }
+        let tok_lit = xla::Literal::vec1(&flat)
+            .reshape(&[self.batch as i64, self.seq as i64])
+            .context("reshaping token literal")?;
+
+        let mut args: Vec<&xla::Literal> = self.weight_literals.iter().collect();
+        args.push(&tok_lit);
+        let result = self.exe.execute::<&xla::Literal>(&args).context("executing artifact")?[0]
+            [0]
+        .to_literal_sync()
+        .context("fetching result")?;
+        // Lowered with return_tuple=True: (nll [B, S-1], last_logits [B, V]).
+        let elems = result.to_tuple().context("destructuring result tuple")?;
+        if elems.len() != 2 {
+            bail!("expected 2 outputs, got {}", elems.len());
+        }
+        let nll_flat = elems[0].to_vec::<f32>()?;
+        let last_flat = elems[1].to_vec::<f32>()?;
+        let per = self.seq - 1;
+        let vocab = last_flat.len() / self.batch;
+        let nll = (0..self.batch).map(|b| nll_flat[b * per..(b + 1) * per].to_vec()).collect();
+        let last_logits =
+            (0..self.batch).map(|b| last_flat[b * vocab..(b + 1) * vocab].to_vec()).collect();
+        Ok(ServeOutput { nll, last_logits })
+    }
+
+    /// Number of PJRT devices (diagnostics).
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+}
+
+/// Registry of compiled artifacts keyed by (variant, batch) — the launcher
+/// compiles each needed shape once and the coordinator picks by bucket.
+pub struct ArtifactRegistry {
+    dir: PathBuf,
+    seq: usize,
+    entries: Vec<((String, usize), ModelRuntime)>,
+}
+
+impl ArtifactRegistry {
+    pub fn new(dir: &Path, seq: usize) -> Self {
+        ArtifactRegistry { dir: dir.to_path_buf(), seq, entries: Vec::new() }
+    }
+
+    /// Load (or return cached) runtime for a variant/batch.
+    pub fn get_or_load(&mut self, variant: &str, batch: usize) -> Result<&ModelRuntime> {
+        if let Some(idx) =
+            self.entries.iter().position(|((v, b), _)| v == variant && *b == batch)
+        {
+            return Ok(&self.entries[idx].1);
+        }
+        let rt = ModelRuntime::load(&self.dir, variant, batch, self.seq)?;
+        self.entries.push(((variant.to_string(), batch), rt));
+        Ok(&self.entries.last().unwrap().1)
+    }
+
+    /// Batch sizes available on disk for a variant (ascending).
+    pub fn available_batches(&self, variant: &str) -> Vec<usize> {
+        let mut out = Vec::new();
+        if let Ok(rd) = std::fs::read_dir(&self.dir) {
+            for e in rd.flatten() {
+                let name = e.file_name().to_string_lossy().into_owned();
+                let prefix = format!("model_{variant}_b");
+                if let Some(rest) = name.strip_prefix(&prefix) {
+                    if let Some(bstr) = rest.split('_').next() {
+                        if let Ok(b) = bstr.parse() {
+                            out.push(b);
+                        }
+                    }
+                }
+            }
+        }
+        out.sort_unstable();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Full execution tests live in rust/tests/integration_runtime.rs (they
+    // need built artifacts); here we cover the pure logic.
+
+    #[test]
+    fn registry_scans_available_batches() {
+        let dir = std::env::temp_dir().join(format!("pre_reg_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        for b in [1usize, 4, 8] {
+            std::fs::write(dir.join(format!("model_exact_b{b}_n256.hlo.txt")), "x").unwrap();
+        }
+        std::fs::write(dir.join("model_prescored_k64_b2_n256.hlo.txt"), "x").unwrap();
+        let reg = ArtifactRegistry::new(&dir, 256);
+        assert_eq!(reg.available_batches("exact"), vec![1, 4, 8]);
+        assert_eq!(reg.available_batches("prescored_k64"), vec![2]);
+        assert!(reg.available_batches("missing").is_empty());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_artifact_is_an_error() {
+        let err = ModelRuntime::load(Path::new("/nonexistent"), "exact", 1, 256);
+        assert!(err.is_err());
+        let msg = format!("{:#}", err.err().unwrap());
+        assert!(msg.contains("make artifacts"), "{msg}");
+    }
+}

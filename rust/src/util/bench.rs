@@ -1,0 +1,205 @@
+//! Benchmark harness (criterion substitute).
+//!
+//! Provides warmed-up, repeated timing with robust statistics (median, mean,
+//! std, min), throughput accounting, and Markdown/aligned-table printers used
+//! by every `benches/bench_*.rs` target to regenerate the paper's tables and
+//! figures as text series.
+
+use std::time::Instant;
+
+/// Result of timing one benchmark case.
+#[derive(Debug, Clone)]
+pub struct Timing {
+    pub name: String,
+    pub samples: Vec<f64>,
+}
+
+impl Timing {
+    pub fn median(&self) -> f64 {
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = s.len();
+        if n == 0 {
+            return f64::NAN;
+        }
+        if n % 2 == 1 {
+            s[n / 2]
+        } else {
+            0.5 * (s[n / 2 - 1] + s[n / 2])
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.samples.iter().sum::<f64>() / self.samples.len().max(1) as f64
+    }
+
+    pub fn std(&self) -> f64 {
+        let m = self.mean();
+        let n = self.samples.len();
+        if n < 2 {
+            return 0.0;
+        }
+        (self.samples.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (n - 1) as f64).sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+}
+
+/// Bench runner with warmup and adaptive sample counts.
+pub struct Bencher {
+    /// Minimum number of timed samples.
+    pub min_samples: usize,
+    /// Maximum number of timed samples.
+    pub max_samples: usize,
+    /// Target total measurement time per case (seconds).
+    pub target_time: f64,
+    /// Warmup iterations before timing.
+    pub warmup: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { min_samples: 5, max_samples: 50, target_time: 1.0, warmup: 2 }
+    }
+}
+
+impl Bencher {
+    /// Quick-profile configuration for CI-style runs.
+    pub fn quick() -> Self {
+        Bencher { min_samples: 3, max_samples: 10, target_time: 0.3, warmup: 1 }
+    }
+
+    /// Time `f`, returning per-call seconds. `f` should perform one full
+    /// logical iteration and return a value (consumed via `black_box`).
+    pub fn time<T, F: FnMut() -> T>(&self, name: &str, mut f: F) -> Timing {
+        for _ in 0..self.warmup {
+            black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.min_samples);
+        let started = Instant::now();
+        loop {
+            let t0 = Instant::now();
+            black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+            let done = samples.len();
+            if done >= self.max_samples {
+                break;
+            }
+            if done >= self.min_samples && started.elapsed().as_secs_f64() > self.target_time {
+                break;
+            }
+        }
+        Timing { name: name.to_string(), samples }
+    }
+}
+
+/// Opaque value sink to stop the optimizer from deleting benchmark bodies.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    // std::hint::black_box is stable since 1.66.
+    std::hint::black_box(x)
+}
+
+/// Aligned plain-text table printer used by all bench targets.
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Render as an aligned monospace table (also valid Markdown-ish).
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for c in 0..ncol {
+                widths[c] = widths[c].max(row[c].len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("\n## {}\n\n", self.title));
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::from("|");
+            for (c, cell) in cells.iter().enumerate() {
+                line.push_str(&format!(" {:<w$} |", cell, w = widths[c]));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        sep.push('\n');
+        out.push_str(&sep);
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Convenience: format a float with fixed decimals.
+pub fn f(v: f64, decimals: usize) -> String {
+    format!("{:.*}", decimals, v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_stats() {
+        let t = Timing { name: "x".into(), samples: vec![1.0, 2.0, 3.0, 4.0, 100.0] };
+        assert_eq!(t.median(), 3.0);
+        assert_eq!(t.min(), 1.0);
+        assert!((t.mean() - 22.0).abs() < 1e-9);
+        assert!(t.std() > 0.0);
+    }
+
+    #[test]
+    fn bencher_runs_and_bounds_samples() {
+        let b = Bencher { min_samples: 3, max_samples: 5, target_time: 0.01, warmup: 1 };
+        let t = b.time("noop", || 1 + 1);
+        assert!(t.samples.len() >= 3 && t.samples.len() <= 5);
+        assert!(t.min() >= 0.0);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("demo", &["a", "column_b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        t.row(vec!["100".into(), "x".into()]);
+        let r = t.render();
+        assert!(r.contains("## demo"));
+        assert!(r.contains("| a   | column_b |"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_row_arity_checked() {
+        let mut t = Table::new("demo", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+}

@@ -1,0 +1,228 @@
+//! Minimal command-line argument parser (clap substitute).
+//!
+//! Supports subcommands, `--flag`, `--key value`, `--key=value`, and
+//! positional arguments, with typed accessors and a generated usage string.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: flags, key-value options, and positionals.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub command: Option<String>,
+    pub flags: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+/// A declared option for usage/help generation.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+/// Declarative CLI: name, about-text, subcommands, options.
+pub struct Cli {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub commands: Vec<(&'static str, &'static str)>,
+    pub opts: Vec<OptSpec>,
+}
+
+impl Cli {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Cli { name, about, commands: Vec::new(), opts: Vec::new() }
+    }
+
+    pub fn command(mut self, name: &'static str, help: &'static str) -> Self {
+        self.commands.push((name, help));
+        self
+    }
+
+    pub fn opt(mut self, name: &'static str, default: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: Some(default), is_flag: false });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: None, is_flag: true });
+        self
+    }
+
+    /// Render a usage/help string.
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {} [COMMAND] [OPTIONS]\n", self.name, self.about, self.name);
+        if !self.commands.is_empty() {
+            s.push_str("\nCOMMANDS:\n");
+            for (c, h) in &self.commands {
+                s.push_str(&format!("  {c:<18} {h}\n"));
+            }
+        }
+        if !self.opts.is_empty() {
+            s.push_str("\nOPTIONS:\n");
+            for o in &self.opts {
+                let lhs = if o.is_flag {
+                    format!("--{}", o.name)
+                } else {
+                    format!("--{} <v>", o.name)
+                };
+                let def = o.default.map(|d| format!(" [default: {d}]")).unwrap_or_default();
+                s.push_str(&format!("  {lhs:<22} {}{def}\n", o.help));
+            }
+        }
+        s
+    }
+
+    /// Parse raw argv (excluding the binary name). If the first token does
+    /// not start with `-` and subcommands are declared, it is the command.
+    pub fn parse(&self, argv: &[String]) -> Result<Args, String> {
+        let mut args = Args::default();
+        let mut it = argv.iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') && !self.commands.is_empty() {
+                let cmd = it.next().unwrap().clone();
+                if !self.commands.iter().any(|(c, _)| *c == cmd) {
+                    return Err(format!("unknown command '{cmd}'\n\n{}", self.usage()));
+                }
+                args.command = Some(cmd);
+            }
+        }
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if stripped == "help" {
+                    return Err(self.usage());
+                }
+                // --key=value form
+                if let Some((k, v)) = stripped.split_once('=') {
+                    self.check_known(k)?;
+                    args.options.insert(k.to_string(), v.to_string());
+                    continue;
+                }
+                let spec = self.opts.iter().find(|o| o.name == stripped);
+                match spec {
+                    Some(o) if o.is_flag => args.flags.push(stripped.to_string()),
+                    Some(_) => {
+                        let v = it
+                            .next()
+                            .ok_or_else(|| format!("option --{stripped} expects a value"))?;
+                        args.options.insert(stripped.to_string(), v.clone());
+                    }
+                    None => {
+                        // Unknown: treat as option if a value follows that is
+                        // not itself an option; error otherwise.
+                        return Err(format!("unknown option '--{stripped}'\n\n{}", self.usage()));
+                    }
+                }
+            } else {
+                args.positional.push(tok.clone());
+            }
+        }
+        // install defaults
+        for o in &self.opts {
+            if let Some(d) = o.default {
+                args.options.entry(o.name.to_string()).or_insert_with(|| d.to_string());
+            }
+        }
+        Ok(args)
+    }
+}
+
+impl Cli {
+    fn check_known(&self, key: &str) -> Result<(), String> {
+        if self.opts.iter().any(|o| o.name == key) {
+            Ok(())
+        } else {
+            Err(format!("unknown option '--{key}'\n\n{}", self.usage()))
+        }
+    }
+}
+
+impl Args {
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize, String> {
+        self.get(name)
+            .ok_or_else(|| format!("missing --{name}"))?
+            .parse()
+            .map_err(|e| format!("--{name}: {e}"))
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64, String> {
+        self.get(name)
+            .ok_or_else(|| format!("missing --{name}"))?
+            .parse()
+            .map_err(|e| format!("--{name}: {e}"))
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<u64, String> {
+        self.get(name)
+            .ok_or_else(|| format!("missing --{name}"))?
+            .parse()
+            .map_err(|e| format!("--{name}: {e}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    fn cli() -> Cli {
+        Cli::new("t", "test")
+            .command("serve", "run server")
+            .command("bench", "run benches")
+            .opt("n", "1024", "sequence length")
+            .opt("method", "kmeans", "prescore method")
+            .flag("verbose", "chatty")
+    }
+
+    #[test]
+    fn parses_command_options_flags() {
+        let a = cli().parse(&v(&["serve", "--n", "2048", "--verbose", "pos1"])).unwrap();
+        assert_eq!(a.command.as_deref(), Some("serve"));
+        assert_eq!(a.get_usize("n").unwrap(), 2048);
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn key_equals_value_form() {
+        let a = cli().parse(&v(&["bench", "--method=leverage"])).unwrap();
+        assert_eq!(a.get("method"), Some("leverage"));
+    }
+
+    #[test]
+    fn defaults_installed() {
+        let a = cli().parse(&v(&["serve"])).unwrap();
+        assert_eq!(a.get_usize("n").unwrap(), 1024);
+        assert_eq!(a.get("method"), Some("kmeans"));
+    }
+
+    #[test]
+    fn unknown_command_and_option_error() {
+        assert!(cli().parse(&v(&["nope"])).is_err());
+        assert!(cli().parse(&v(&["serve", "--bogus", "1"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(cli().parse(&v(&["serve", "--n"])).is_err());
+    }
+
+    #[test]
+    fn usage_mentions_everything() {
+        let u = cli().usage();
+        assert!(u.contains("serve") && u.contains("--method") && u.contains("--verbose"));
+    }
+}

@@ -1,0 +1,59 @@
+//! General-purpose utilities: deterministic RNG, CLI parsing, a bench
+//! harness, and a lightweight property-testing helper.
+//!
+//! The offline build vendors only `xla` and `anyhow`, so the conventional
+//! crates (`rand`, `clap`, `criterion`, `proptest`) are replaced by the
+//! small, purpose-built implementations in this module. Each is documented
+//! with the subset of behaviour it guarantees.
+
+pub mod bench;
+pub mod cli;
+pub mod proptest_lite;
+pub mod rng;
+
+/// Format a float with engineering-style thousands separators for tables.
+pub fn fmt_count(n: usize) -> String {
+    let s = n.to_string();
+    let mut out = String::with_capacity(s.len() + s.len() / 3);
+    for (i, c) in s.chars().enumerate() {
+        if i > 0 && (s.len() - i) % 3 == 0 {
+            out.push(',');
+        }
+        out.push(c);
+    }
+    out
+}
+
+/// Format a duration in adaptive units (ns / µs / ms / s).
+pub fn fmt_duration(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1}ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2}µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2}ms", secs * 1e3)
+    } else {
+        format!("{:.3}s", secs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_count_groups_thousands() {
+        assert_eq!(fmt_count(0), "0");
+        assert_eq!(fmt_count(999), "999");
+        assert_eq!(fmt_count(1000), "1,000");
+        assert_eq!(fmt_count(1234567), "1,234,567");
+    }
+
+    #[test]
+    fn fmt_duration_picks_units() {
+        assert!(fmt_duration(5e-10).ends_with("ns"));
+        assert!(fmt_duration(5e-6).ends_with("µs"));
+        assert!(fmt_duration(5e-3).ends_with("ms"));
+        assert!(fmt_duration(5.0).ends_with('s'));
+    }
+}

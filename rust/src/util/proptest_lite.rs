@@ -1,0 +1,178 @@
+//! Property-based testing helper (proptest substitute).
+//!
+//! `run_property` drives a property over many randomly generated cases; on
+//! failure it performs greedy shrinking (via user-supplied `shrink`) and
+//! reports the minimal failing case with the seed needed to replay it.
+//!
+//! Used by the coordinator invariants tests (routing, batching, KV-cache
+//! state) and the attention/clustering invariants.
+
+use crate::util::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Debug)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink_iters: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 64, seed: 0x5eed, max_shrink_iters: 200 }
+    }
+}
+
+/// Outcome of a single property check.
+pub type CheckResult = Result<(), String>;
+
+/// Run `property` over `cfg.cases` random inputs produced by `gen`.
+/// On failure, repeatedly applies `shrink` (which yields smaller candidate
+/// inputs) while the property still fails, then panics with the minimal
+/// counterexample's Debug rendering.
+pub fn run_property<T, G, P, S>(name: &str, cfg: Config, mut gen: G, mut property: P, shrink: S)
+where
+    T: Clone + std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> CheckResult,
+    S: Fn(&T) -> Vec<T>,
+{
+    let mut rng = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let mut input = gen(&mut rng);
+        let mut failure = match property(&input) {
+            Ok(()) => continue,
+            Err(msg) => msg,
+        };
+        // Greedy shrink.
+        let mut iters = 0;
+        'shrinking: while iters < cfg.max_shrink_iters {
+            for candidate in shrink(&input) {
+                iters += 1;
+                if let Err(msg) = property(&candidate) {
+                    input = candidate;
+                    failure = msg;
+                    continue 'shrinking;
+                }
+                if iters >= cfg.max_shrink_iters {
+                    break;
+                }
+            }
+            break;
+        }
+        panic!(
+            "property '{name}' failed (case {case}, seed {:#x}):\n  input: {:?}\n  error: {}",
+            cfg.seed, input, failure
+        );
+    }
+}
+
+/// Run a property with no shrinking.
+pub fn run_property_noshrink<T, G, P>(name: &str, cfg: Config, gen: G, property: P)
+where
+    T: Clone + std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> CheckResult,
+{
+    run_property(name, cfg, gen, property, |_| Vec::new());
+}
+
+/// Standard shrinker for Vec-shaped inputs: drop halves, then single items.
+pub fn shrink_vec<T: Clone>(v: &[T]) -> Vec<Vec<T>> {
+    let mut out = Vec::new();
+    let n = v.len();
+    if n == 0 {
+        return out;
+    }
+    if n > 1 {
+        out.push(v[..n / 2].to_vec());
+        out.push(v[n / 2..].to_vec());
+    }
+    // remove one element at a time (bounded)
+    for i in 0..n.min(16) {
+        let mut c = v.to_vec();
+        c.remove(i * n / n.min(16).max(1));
+        out.push(c);
+    }
+    out
+}
+
+/// Helper to assert with a formatted message inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        run_property_noshrink(
+            "sum-commutes",
+            Config { cases: 32, ..Default::default() },
+            |r| (r.usize(100), r.usize(100)),
+            |&(a, b)| {
+                if a + b == b + a {
+                    Ok(())
+                } else {
+                    Err("math broke".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "always-fails")]
+    fn failing_property_panics_with_name() {
+        run_property_noshrink(
+            "always-fails",
+            Config { cases: 4, ..Default::default() },
+            |r| r.usize(10),
+            |_| Err("nope".into()),
+        );
+    }
+
+    #[test]
+    fn shrinking_minimizes() {
+        // Property: vec has no element >= 50. Generator makes big vecs; the
+        // shrinker should reduce to something small that still fails.
+        let result = std::panic::catch_unwind(|| {
+            run_property(
+                "no-large-elements",
+                Config { cases: 8, seed: 42, max_shrink_iters: 500 },
+                |r| (0..20).map(|_| r.usize(100)).collect::<Vec<usize>>(),
+                |v| {
+                    if v.iter().all(|&x| x < 50) {
+                        Ok(())
+                    } else {
+                        Err("has large element".into())
+                    }
+                },
+                |v| shrink_vec(v),
+            );
+        });
+        let err = result.expect_err("should fail");
+        let msg = err.downcast_ref::<String>().expect("panic msg");
+        // The minimal counterexample should be a short vector.
+        let open = msg.find("input: [").unwrap();
+        let close = msg[open..].find(']').unwrap() + open;
+        let list = &msg[open + 8..close];
+        let items = list.split(',').count();
+        assert!(items <= 4, "shrunk to {items} items: {msg}");
+    }
+
+    #[test]
+    fn shrink_vec_produces_smaller() {
+        let v: Vec<usize> = (0..10).collect();
+        for c in shrink_vec(&v) {
+            assert!(c.len() < v.len());
+        }
+        assert!(shrink_vec::<usize>(&[]).is_empty());
+    }
+}

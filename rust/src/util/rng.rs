@@ -1,0 +1,380 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! A self-contained PCG64 (XSL-RR 128/64) implementation plus the sampling
+//! helpers the rest of the crate needs (uniform, Gaussian via Box–Muller,
+//! Zipf, Poisson, shuffling, weighted choice). `rand` is not available in the
+//! offline vendor set; PCG64 matches its statistical quality for our use
+//! (synthetic data generation, k-means++ seeding, LSH planes, workload
+//! traces) and is fully reproducible from a `u64` seed.
+
+/// PCG64 XSL-RR generator. 128-bit state, 64-bit output.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    state: u128,
+    inc: u128,
+    /// Cached second Gaussian sample from Box–Muller.
+    gauss_spare: Option<f64>,
+}
+
+const PCG_MULT: u128 = 0x2360ed051fc65da44385df649fccf645;
+
+impl Rng {
+    /// Create a generator from a 64-bit seed (stream id fixed).
+    pub fn new(seed: u64) -> Self {
+        Self::with_stream(seed, 0xda3e39cb94b95bdb)
+    }
+
+    /// Create a generator with an explicit stream id, so independent
+    /// subsystems can derive non-overlapping generators from one seed.
+    pub fn with_stream(seed: u64, stream: u64) -> Self {
+        let mut rng = Rng {
+            state: 0,
+            inc: ((stream as u128) << 1) | 1,
+            gauss_spare: None,
+        };
+        rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(rng.inc);
+        rng.state = rng.state.wrapping_add(seed as u128);
+        rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(rng.inc);
+        rng
+    }
+
+    /// Derive a child generator; children with distinct tags are independent.
+    pub fn fork(&mut self, tag: u64) -> Rng {
+        let seed = self.next_u64() ^ tag.rotate_left(17);
+        Rng::with_stream(seed, tag.wrapping_mul(2).wrapping_add(1))
+    }
+
+    /// Next raw 64-bit output.
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xored.rotate_right(rot)
+    }
+
+    /// Uniform f64 in [0, 1).
+    pub fn f64(&mut self) -> f64 {
+        // 53 random mantissa bits.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in [0, 1).
+    pub fn f32(&mut self) -> f32 {
+        self.f64() as f32
+    }
+
+    /// Uniform integer in [0, n) (n > 0), unbiased via rejection.
+    pub fn usize(&mut self, n: usize) -> usize {
+        assert!(n > 0, "usize(0) is meaningless");
+        let n = n as u64;
+        let zone = u64::MAX - (u64::MAX % n);
+        loop {
+            let v = self.next_u64();
+            if v < zone {
+                return (v % n) as usize;
+            }
+        }
+    }
+
+    /// Uniform integer in [lo, hi).
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo < hi);
+        lo + self.usize(hi - lo)
+    }
+
+    /// Bernoulli(p).
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Standard Gaussian via Box–Muller (with caching of the paired sample).
+    pub fn gauss(&mut self) -> f64 {
+        if let Some(v) = self.gauss_spare.take() {
+            return v;
+        }
+        loop {
+            let u1 = self.f64();
+            let u2 = self.f64();
+            if u1 <= f64::MIN_POSITIVE {
+                continue;
+            }
+            let r = (-2.0 * u1.ln()).sqrt();
+            let theta = 2.0 * std::f64::consts::PI * u2;
+            self.gauss_spare = Some(r * theta.sin());
+            return r * theta.cos();
+        }
+    }
+
+    /// Gaussian with given mean and standard deviation, as f32.
+    pub fn gauss32(&mut self, mean: f32, std: f32) -> f32 {
+        mean + std * self.gauss() as f32
+    }
+
+    /// Fill a slice with i.i.d. N(0, std^2) samples.
+    pub fn fill_gauss(&mut self, out: &mut [f32], std: f32) {
+        for v in out.iter_mut() {
+            *v = self.gauss32(0.0, std);
+        }
+    }
+
+    /// Fill a slice with i.i.d. U[lo, hi) samples.
+    pub fn fill_uniform(&mut self, out: &mut [f32], lo: f32, hi: f32) {
+        for v in out.iter_mut() {
+            *v = lo + (hi - lo) * self.f32();
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.usize(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from [0, n) (k <= n), in random order.
+    /// Uses a partial Fisher–Yates over an index vector (O(n) memory) for
+    /// large k, or rejection sampling for k << n.
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n);
+        if k * 4 < n {
+            // rejection
+            let mut seen = std::collections::HashSet::with_capacity(k * 2);
+            let mut out = Vec::with_capacity(k);
+            while out.len() < k {
+                let v = self.usize(n);
+                if seen.insert(v) {
+                    out.push(v);
+                }
+            }
+            out
+        } else {
+            let mut idx: Vec<usize> = (0..n).collect();
+            for i in 0..k {
+                let j = self.range(i, n);
+                idx.swap(i, j);
+            }
+            idx.truncate(k);
+            idx
+        }
+    }
+
+    /// Weighted index choice proportional to non-negative `weights`.
+    /// Returns None if all weights are zero/non-finite.
+    pub fn weighted_choice(&mut self, weights: &[f64]) -> Option<usize> {
+        let total: f64 = weights.iter().filter(|w| w.is_finite()).sum();
+        if total <= 0.0 {
+            return None;
+        }
+        let mut t = self.f64() * total;
+        for (i, &w) in weights.iter().enumerate() {
+            if !w.is_finite() {
+                continue;
+            }
+            t -= w;
+            if t <= 0.0 {
+                return Some(i);
+            }
+        }
+        // Floating-point slack: return last positive-weight index.
+        weights.iter().rposition(|&w| w > 0.0)
+    }
+
+    /// Zipf-distributed value in [0, n) with exponent `s` (s > 0).
+    /// Inverse-CDF over precomputed normalizer is avoided; we use rejection
+    /// by Devroye's method for simplicity and O(1) memory.
+    pub fn zipf(&mut self, n: usize, s: f64) -> usize {
+        assert!(n > 0);
+        // Simple inverse-transform with on-the-fly harmonic approximation.
+        // For the corpus sizes used here (n <= 65536) accuracy is ample.
+        let hn = harmonic_approx(n as f64, s);
+        let u = self.f64() * hn;
+        // binary search over H(k) ~ monotone
+        let (mut lo, mut hi) = (1usize, n);
+        while lo < hi {
+            let mid = (lo + hi) / 2;
+            if harmonic_approx(mid as f64, s) < u {
+                lo = mid + 1;
+            } else {
+                hi = mid;
+            }
+        }
+        lo - 1
+    }
+
+    /// Poisson(lambda) via Knuth (small lambda) or normal approximation.
+    pub fn poisson(&mut self, lambda: f64) -> usize {
+        if lambda < 30.0 {
+            let l = (-lambda).exp();
+            let mut k = 0usize;
+            let mut p = 1.0;
+            loop {
+                p *= self.f64();
+                if p <= l {
+                    return k;
+                }
+                k += 1;
+            }
+        } else {
+            let v = lambda + lambda.sqrt() * self.gauss();
+            v.max(0.0).round() as usize
+        }
+    }
+
+    /// Exponential(rate) inter-arrival sample.
+    pub fn exponential(&mut self, rate: f64) -> f64 {
+        assert!(rate > 0.0);
+        let u = loop {
+            let u = self.f64();
+            if u > 0.0 {
+                break u;
+            }
+        };
+        -u.ln() / rate
+    }
+}
+
+/// Generalized harmonic number approximation H_{n,s} = sum_{k=1..n} k^{-s},
+/// via Euler–Maclaurin for speed with good accuracy for n >= 1.
+fn harmonic_approx(n: f64, s: f64) -> f64 {
+    if n < 32.0 {
+        let mut h = 0.0;
+        let mut k = 1.0;
+        while k <= n {
+            h += k.powf(-s);
+            k += 1.0;
+        }
+        return h;
+    }
+    let head: f64 = (1..32).map(|k| (k as f64).powf(-s)).sum();
+    let a = 32.0f64;
+    let tail = if (s - 1.0).abs() < 1e-12 {
+        (n / a).ln()
+    } else {
+        (n.powf(1.0 - s) - a.powf(1.0 - s)) / (1.0 - s)
+    };
+    head + tail + 0.5 * (n.powf(-s) + a.powf(-s))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::new(3);
+        for _ in 0..10_000 {
+            let v = r.f64();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn usize_bounds_and_coverage() {
+        let mut r = Rng::new(4);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let v = r.usize(10);
+            assert!(v < 10);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn gauss_moments() {
+        let mut r = Rng::new(5);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.gauss()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn sample_indices_distinct() {
+        let mut r = Rng::new(6);
+        for &(n, k) in &[(100usize, 5usize), (100, 90), (10, 10), (1000, 3)] {
+            let idx = r.sample_indices(n, k);
+            assert_eq!(idx.len(), k);
+            let set: std::collections::HashSet<_> = idx.iter().collect();
+            assert_eq!(set.len(), k);
+            assert!(idx.iter().all(|&i| i < n));
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(8);
+        let mut v: Vec<usize> = (0..50).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn zipf_is_skewed_and_bounded() {
+        let mut r = Rng::new(9);
+        let n = 1000;
+        let mut counts = vec![0usize; n];
+        for _ in 0..20_000 {
+            let v = r.zipf(n, 1.1);
+            assert!(v < n);
+            counts[v] += 1;
+        }
+        // Rank 0 should dominate rank 100 heavily under Zipf(1.1).
+        assert!(counts[0] > counts[100] * 3);
+    }
+
+    #[test]
+    fn poisson_mean_close() {
+        let mut r = Rng::new(10);
+        for &lambda in &[2.0f64, 50.0] {
+            let n = 20_000;
+            let total: usize = (0..n).map(|_| r.poisson(lambda)).sum();
+            let mean = total as f64 / n as f64;
+            assert!((mean - lambda).abs() < lambda * 0.1, "mean {mean} vs {lambda}");
+        }
+    }
+
+    #[test]
+    fn weighted_choice_respects_weights() {
+        let mut r = Rng::new(11);
+        let w = [0.0, 3.0, 1.0];
+        let mut counts = [0usize; 3];
+        for _ in 0..10_000 {
+            counts[r.weighted_choice(&w).unwrap()] += 1;
+        }
+        assert_eq!(counts[0], 0);
+        assert!(counts[1] > counts[2] * 2);
+        assert!(r.weighted_choice(&[0.0, 0.0]).is_none());
+    }
+
+    #[test]
+    fn fork_streams_independent() {
+        let mut root = Rng::new(12);
+        let mut a = root.fork(1);
+        let mut b = root.fork(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+}

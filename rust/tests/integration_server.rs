@@ -1,0 +1,51 @@
+//! Integration: full serving loop (batcher → PJRT → responses).
+
+use prescored::config::ServingConfig;
+use prescored::coordinator::Request;
+use prescored::data::corpus;
+use prescored::server::ScoringServer;
+use std::path::Path;
+
+fn have_artifacts() -> bool {
+    let ok = Path::new("artifacts/model_exact_b4_n256.hlo.txt").exists();
+    if !ok {
+        eprintln!("skipping: artifacts not built");
+    }
+    ok
+}
+
+#[test]
+fn server_roundtrip_scoring_requests() {
+    if !have_artifacts() {
+        return;
+    }
+    let cfg = ServingConfig { variant: "exact".into(), ..Default::default() };
+    let server = ScoringServer::start(cfg).expect("server start");
+    let mut rxs = Vec::new();
+    for i in 0..10u64 {
+        let len = 64 + (i as usize * 17) % 192;
+        let tokens = corpus::generate(512, len, 900 + i);
+        rxs.push((i, len, server.submit(Request::scoring(i, tokens))));
+    }
+    for (id, len, rx) in rxs {
+        let resp = rx.recv().expect("response");
+        assert_eq!(resp.id, id);
+        assert_eq!(resp.nll.len(), len - 1, "request {id}");
+        assert!(resp.nll.iter().all(|v| v.is_finite()));
+        assert!(resp.perplexity() > 1.0);
+        assert!(resp.latency_ms >= 0.0);
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.completed, 10);
+    assert!(stats.batches >= 3, "expected multiple batches, got {}", stats.batches);
+    assert!(stats.throughput_rps > 0.0);
+}
+
+#[test]
+fn server_rejects_unknown_variant() {
+    if !have_artifacts() {
+        return;
+    }
+    let cfg = ServingConfig { variant: "bogus".into(), ..Default::default() };
+    assert!(ScoringServer::start(cfg).is_err());
+}
