@@ -1,16 +1,30 @@
-//! §5.1 complexity ablation — pre-scoring overhead scaling.
+//! §5.1 complexity ablation — pre-scoring overhead scaling, plus the
+//! parallel-engine scaling sweep.
 //!
-//! The paper argues the pre-scoring overhead is ≈ O(n·d) (clustering:
+//! Part 1 (paper): the pre-scoring overhead is ≈ O(n·d) (clustering:
 //! O(n·d·k·I) with k ≪ n; leverage: O(n·d·log d)). This bench measures the
 //! standalone selection cost vs n and reports the empirical scaling
 //! exponent, plus the mini-batch variant (Appendix H future work).
+//!
+//! Part 2 (systems): sweep the work-pool width over `flash_attention` and
+//! the end-to-end `prescored_hyper_attention` pipeline at n=8192, d=64,
+//! verify the parallel outputs against the `threads=1` baseline, and emit a
+//! machine-readable `BENCH_parallel.json` (threads → wall-time seconds) at
+//! the repo root so future PRs can track scaling regressions.
+//!
+//! Knobs: `PALLAS_BENCH_N` overrides the sweep's sequence length.
 
+use prescored::attention::{
+    flash_attention, prescored_hyper_attention, rel_error, AttentionInputs, HyperConfig,
+    PreScoredConfig,
+};
 use prescored::linalg::Matrix;
+use prescored::parallel;
 use prescored::prescore::{prescore, Method, PreScoreConfig};
 use prescored::util::bench::{black_box, f, Bencher, Table};
 use prescored::util::rng::Rng;
 
-fn main() {
+fn overhead_scaling() {
     let d = 64;
     let sizes = [512usize, 1024, 2048, 4096, 8192];
     let b = Bencher { min_samples: 3, max_samples: 6, target_time: 1.0, warmup: 1 };
@@ -47,4 +61,104 @@ fn main() {
         let slope = (last / first).log2() / ((sizes[sizes.len() - 1] as f64 / sizes[0] as f64).log2());
         println!("  {name:<10} {:.2}", slope);
     }
+}
+
+/// JSON helper: `{"1": 1.23, "2": 0.64}` from (threads, value) pairs.
+fn json_map(pairs: &[(usize, f64)]) -> String {
+    let body: Vec<String> =
+        pairs.iter().map(|(t, v)| format!("\"{t}\": {v:.6}")).collect();
+    format!("{{{}}}", body.join(", "))
+}
+
+fn parallel_scaling() {
+    let n: usize = std::env::var("PALLAS_BENCH_N")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(8192);
+    let d = 64usize;
+    println!("\n== parallel engine scaling: n={n} d={d} ==");
+
+    let mut rng = Rng::new(0xbe7c);
+    let q = Matrix::randn(n, d, 1.0, &mut rng);
+    let k = Matrix::randn(n, d, 1.0, &mut rng);
+    let v = Matrix::randn(n, d, 1.0, &mut rng);
+    let inp = AttentionInputs::new(&q, &k, &v);
+    let ps_cfg = PreScoredConfig {
+        prescore: PreScoreConfig { top_k: n / 4, max_iters: 5, seed: 3, ..Default::default() },
+        hyper: HyperConfig { block_size: 64, sample_size: 64, seed: 3, ..Default::default() },
+        ..Default::default()
+    };
+
+    let hw = parallel::num_threads();
+    let mut threads: Vec<usize> = vec![1, 2, 4];
+    if hw > 4 && !threads.contains(&hw) {
+        threads.push(hw);
+    }
+    threads.retain(|&t| t <= hw.max(4));
+
+    let b = Bencher { min_samples: 2, max_samples: 4, target_time: 2.0, warmup: 1 };
+    let flash_base = parallel::with_threads(1, || flash_attention(&inp));
+    let ps_base = parallel::with_threads(1, || prescored_hyper_attention(&inp, &ps_cfg).0);
+
+    let mut flash_times: Vec<(usize, f64)> = Vec::new();
+    let mut ps_times: Vec<(usize, f64)> = Vec::new();
+    let mut flash_errs: Vec<(usize, f64)> = Vec::new();
+    let mut ps_errs: Vec<(usize, f64)> = Vec::new();
+    let mut table =
+        Table::new("Parallel scaling (s)", &["threads", "flash", "prescored+hyper", "err_f", "err_p"]);
+    for &t in &threads {
+        let tf = parallel::with_threads(t, || b.time("flash", || black_box(flash_attention(&inp))))
+            .median();
+        let tp = parallel::with_threads(t, || {
+            b.time("prescored", || black_box(prescored_hyper_attention(&inp, &ps_cfg)))
+        })
+        .median();
+        let ef = rel_error(&parallel::with_threads(t, || flash_attention(&inp)), &flash_base) as f64;
+        let ep = rel_error(
+            &parallel::with_threads(t, || prescored_hyper_attention(&inp, &ps_cfg).0),
+            &ps_base,
+        ) as f64;
+        assert!(ef <= 1e-5, "flash threads={t} diverged from serial: {ef}");
+        assert!(ep <= 1e-5, "prescored threads={t} diverged from serial: {ep}");
+        flash_times.push((t, tf));
+        ps_times.push((t, tp));
+        flash_errs.push((t, ef));
+        ps_errs.push((t, ep));
+        table.row(vec![t.to_string(), f(tf, 4), f(tp, 4), format!("{ef:.2e}"), format!("{ep:.2e}")]);
+    }
+    table.print();
+    let speedup = |times: &[(usize, f64)]| -> f64 {
+        let t1 = times.iter().find(|(t, _)| *t == 1).map(|(_, v)| *v).unwrap_or(f64::NAN);
+        let best = times.iter().map(|(_, v)| *v).fold(f64::INFINITY, f64::min);
+        t1 / best
+    };
+    println!(
+        "best speedup vs threads=1: flash {:.2}x, prescored {:.2}x",
+        speedup(&flash_times),
+        speedup(&ps_times)
+    );
+
+    let json = format!(
+        "{{\n  \"n\": {n},\n  \"d\": {d},\n  \"threads\": [{}],\n  \
+         \"flash_attention_s\": {},\n  \"prescored_hyper_attention_s\": {},\n  \
+         \"rel_err_vs_serial\": {{\"flash\": {}, \"prescored\": {}}},\n  \
+         \"speedup_best\": {{\"flash\": {:.4}, \"prescored\": {:.4}}}\n}}\n",
+        threads.iter().map(|t| t.to_string()).collect::<Vec<_>>().join(", "),
+        json_map(&flash_times),
+        json_map(&ps_times),
+        json_map(&flash_errs),
+        json_map(&ps_errs),
+        speedup(&flash_times),
+        speedup(&ps_times),
+    );
+    let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_parallel.json");
+    match std::fs::write(out, &json) {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => eprintln!("could not write {out}: {e}"),
+    }
+}
+
+fn main() {
+    overhead_scaling();
+    parallel_scaling();
 }

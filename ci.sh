@@ -1,0 +1,31 @@
+#!/usr/bin/env bash
+# CI gate: formatting, lints, tier-1 verify (build + tests).
+#
+# Usage: ./ci.sh [--quick]
+#   --quick   skip fmt/clippy, run tier-1 only
+set -euo pipefail
+cd "$(dirname "$0")"
+
+QUICK=0
+[[ "${1:-}" == "--quick" ]] && QUICK=1
+
+if [[ "$QUICK" == 0 ]]; then
+    if cargo fmt --version >/dev/null 2>&1; then
+        echo "== cargo fmt --check =="
+        cargo fmt --all -- --check
+    else
+        echo "== cargo fmt unavailable — skipping format check =="
+    fi
+    if cargo clippy --version >/dev/null 2>&1; then
+        echo "== cargo clippy -D warnings =="
+        cargo clippy --workspace --all-targets -- -D warnings
+    else
+        echo "== cargo clippy unavailable — skipping lint =="
+    fi
+fi
+
+echo "== tier-1 verify: cargo build --release && cargo test -q =="
+cargo build --release
+cargo test -q
+
+echo "CI OK"

@@ -18,9 +18,26 @@
 use super::AttentionInputs;
 use crate::linalg::ops::{dot, softmax_inplace};
 use crate::linalg::Matrix;
+use crate::parallel;
+
+/// Minimum query count before the backward pass forks the work pool.
+const PAR_MIN_QUERIES: usize = 32;
+
+/// Per-worker backward state: dQ rows are written disjointly (each query
+/// owns its row), so each shard holds only its own contiguous dQ *band*
+/// (`row0..row0 + dq.rows`) and the in-order merge concatenates bands. dK/dV
+/// receive contributions from every query and are accumulated full-size per
+/// worker, added in shard order (deterministic for a fixed thread count).
+struct BackwardShard {
+    row0: usize,
+    dq: Matrix,
+    dk: Matrix,
+    dv: Matrix,
+}
 
 /// Gradients for exact softmax attention given upstream dO.
-/// Returns (dQ, dK, dV).
+/// Returns (dQ, dK, dV). Queries are sharded across the work pool with
+/// worker-local dK/dV accumulators.
 pub fn exact_attention_backward(
     inp: &AttentionInputs,
     dout: &Matrix,
@@ -31,56 +48,84 @@ pub fn exact_attention_backward(
     let scale = inp.effective_scale();
     assert_eq!((dout.rows, dout.cols), (nq, dv_dim));
 
-    let mut dq = Matrix::zeros(nq, d);
-    let mut dk = Matrix::zeros(nk, d);
-    let mut dv = Matrix::zeros(nk, dv_dim);
-
-    let mut p = vec![0.0f32; nk];
-    let mut dp = vec![0.0f32; nk];
-    for i in 0..nq {
-        let qrow = inp.q.row(i);
-        let dorow = dout.row(i);
-        let limit = if inp.causal { (i + 1).min(nk) } else { nk };
-        for j in 0..limit {
-            p[j] = dot(qrow, inp.k.row(j)) * scale;
-        }
-        softmax_inplace(&mut p[..limit]);
-        // dV += pᵀ dO  (per row), dP = dO · Vᵀ
-        for j in 0..limit {
-            let pj = p[j];
-            if pj != 0.0 {
-                let dvrow = dv.row_mut(j);
-                for (dvv, dov) in dvrow.iter_mut().zip(dorow) {
-                    *dvv += pj * dov;
+    let run_range = |mut shard: BackwardShard, range: std::ops::Range<usize>| {
+        shard.row0 = range.start;
+        shard.dq = Matrix::zeros(range.len(), d);
+        let mut p = vec![0.0f32; nk];
+        let mut dp = vec![0.0f32; nk];
+        for i in range {
+            let qrow = inp.q.row(i);
+            let dorow = dout.row(i);
+            let limit = if inp.causal { (i + 1).min(nk) } else { nk };
+            for j in 0..limit {
+                p[j] = dot(qrow, inp.k.row(j)) * scale;
+            }
+            softmax_inplace(&mut p[..limit]);
+            // dV += pᵀ dO  (per row), dP = dO · Vᵀ
+            for j in 0..limit {
+                let pj = p[j];
+                if pj != 0.0 {
+                    let dvrow = shard.dv.row_mut(j);
+                    for (dvv, dov) in dvrow.iter_mut().zip(dorow) {
+                        *dvv += pj * dov;
+                    }
+                }
+                dp[j] = dot(dorow, inp.v.row(j));
+            }
+            // dS = P ∘ (dP − Σ_j dP_j P_j)
+            let inner: f32 = (0..limit).map(|j| dp[j] * p[j]).sum();
+            // dQ_i += Σ_j dS_ij K_j · scale ;  dK_j += dS_ij Q_i · scale
+            let dqrow = shard.dq.row_mut(i - shard.row0);
+            for j in 0..limit {
+                let ds = p[j] * (dp[j] - inner) * scale;
+                if ds == 0.0 {
+                    continue;
+                }
+                let krow = inp.k.row(j);
+                for (dqv, kv) in dqrow.iter_mut().zip(krow) {
+                    *dqv += ds * kv;
+                }
+                let dkrow = shard.dk.row_mut(j);
+                for (dkv, qv) in dkrow.iter_mut().zip(qrow) {
+                    *dkv += ds * qv;
                 }
             }
-            dp[j] = dot(dorow, inp.v.row(j));
         }
-        // dS = P ∘ (dP − Σ_j dP_j P_j)
-        let inner: f32 = (0..limit).map(|j| dp[j] * p[j]).sum();
-        // dQ_i += Σ_j dS_ij K_j · scale ;  dK_j += dS_ij Q_i · scale
-        let dqrow = dq.row_mut(i);
-        for j in 0..limit {
-            let ds = p[j] * (dp[j] - inner) * scale;
-            if ds == 0.0 {
-                continue;
+        shard
+    };
+
+    let make_shard = || BackwardShard {
+        row0: 0,
+        dq: Matrix::zeros(0, d),
+        dk: Matrix::zeros(nk, d),
+        dv: Matrix::zeros(nk, dv_dim),
+    };
+    let shard = if parallel::num_threads() <= 1 || nq < PAR_MIN_QUERIES {
+        run_range(make_shard(), 0..nq)
+    } else {
+        parallel::par_reduce(nq, make_shard, &run_range, |mut a, b| {
+            // Shards merge in range order, so the dQ bands are adjacent:
+            // concatenate them; dK/dV accumulate elementwise.
+            debug_assert_eq!(a.row0 + a.dq.rows, b.row0);
+            a.dq.data.extend_from_slice(&b.dq.data);
+            a.dq.rows += b.dq.rows;
+            for (av, bv) in a.dk.data.iter_mut().zip(&b.dk.data) {
+                *av += bv;
             }
-            let krow = inp.k.row(j);
-            for (dqv, kv) in dqrow.iter_mut().zip(krow) {
-                *dqv += ds * kv;
+            for (av, bv) in a.dv.data.iter_mut().zip(&b.dv.data) {
+                *av += bv;
             }
-            let dkrow = dk.row_mut(j);
-            for (dkv, qv) in dkrow.iter_mut().zip(qrow) {
-                *dkv += ds * qv;
-            }
-        }
-    }
-    (dq, dk, dv)
+            a
+        })
+    };
+    (shard.dq, shard.dk, shard.dv)
 }
 
 /// Backward restricted to per-query support sets: `support[i]` lists the key
 /// indices that query i actually scored (blockwise + residual pairs). The
-/// forward is recomputed on the restricted support (cheap: |support| ≪ n).
+/// forward is recomputed on the restricted support (cheap: |support| ≪ n —
+/// which is also why this path stays serial; the dense backward above is the
+/// pool-sharded one).
 pub fn sparse_attention_backward(
     inp: &AttentionInputs,
     dout: &Matrix,
@@ -201,6 +246,30 @@ mod tests {
     #[test]
     fn gradients_match_finite_differences_causal() {
         finite_diff_check(true);
+    }
+
+    #[test]
+    fn parallel_backward_matches_serial() {
+        let mut rng = Rng::new(17);
+        let (n, d) = (80, 8); // above PAR_MIN_QUERIES so the pool engages
+        let q = Matrix::randn(n, d, 0.6, &mut rng);
+        let k = Matrix::randn(n, d, 0.6, &mut rng);
+        let v = Matrix::randn(n, d, 0.6, &mut rng);
+        let dout = Matrix::randn(n, d, 1.0, &mut rng);
+        for causal in [false, true] {
+            let inp = AttentionInputs::new(&q, &k, &v).causal(causal);
+            let (dq1, dk1, dv1) =
+                crate::parallel::with_threads(1, || exact_attention_backward(&inp, &dout));
+            for t in [2usize, 4, 7] {
+                let (dqt, dkt, dvt) =
+                    crate::parallel::with_threads(t, || exact_attention_backward(&inp, &dout));
+                // dQ rows are disjoint: bit-identical. dK/dV merge shard
+                // partials, so only reassociation drift is allowed.
+                assert_eq!(dq1.data, dqt.data, "dq threads={t} causal={causal}");
+                assert!(dk1.max_abs_diff(&dkt) < 1e-4, "dk threads={t} causal={causal}");
+                assert!(dv1.max_abs_diff(&dvt) < 1e-4, "dv threads={t} causal={causal}");
+            }
+        }
     }
 
     #[test]

@@ -9,23 +9,28 @@
 use super::AttentionInputs;
 use crate::linalg::ops::{dot, softmax_inplace};
 use crate::linalg::Matrix;
+use crate::parallel;
 
-/// Naive exact attention. Materializes the full score matrix — O(n²) memory.
-/// Reference implementation for tests; use [`flash_attention`] at scale.
-pub fn exact_attention(inp: &AttentionInputs) -> Matrix {
-    let (nq, nk) = (inp.q.rows, inp.k.rows);
+/// Minimum query count before the attention loops fork the work pool.
+const PAR_MIN_QUERIES: usize = 16;
+
+/// Per-query attention is a pure function of the query row, so sharding
+/// queries across the pool is bit-identical to the serial loop for any
+/// thread count.
+fn exact_rows(inp: &AttentionInputs, scale: f32, row0: usize, out_chunk: &mut [f32]) {
+    let nk = inp.k.rows;
     let dv = inp.v.cols;
-    let scale = inp.effective_scale();
-    let mut out = Matrix::zeros(nq, dv);
+    let rows = if dv == 0 { 0 } else { out_chunk.len() / dv };
     let mut scores = vec![0.0f32; nk];
-    for i in 0..nq {
+    for local in 0..rows {
+        let i = row0 + local;
         let qrow = inp.q.row(i);
         let limit = if inp.causal { (i + 1).min(nk) } else { nk };
         for j in 0..limit {
             scores[j] = dot(qrow, inp.k.row(j)) * scale;
         }
         softmax_inplace(&mut scores[..limit]);
-        let orow = out.row_mut(i);
+        let orow = &mut out_chunk[local * dv..(local + 1) * dv];
         for j in 0..limit {
             let p = scores[j];
             if p == 0.0 {
@@ -37,26 +42,59 @@ pub fn exact_attention(inp: &AttentionInputs) -> Matrix {
             }
         }
     }
+}
+
+/// Naive exact attention. Materializes per-query score rows — O(n·n_k) work,
+/// O(n_k) memory per worker. Reference implementation for tests; use
+/// [`flash_attention`] at scale. Queries are sharded across the work pool.
+pub fn exact_attention(inp: &AttentionInputs) -> Matrix {
+    let (nq, nk) = (inp.q.rows, inp.k.rows);
+    let dv = inp.v.cols;
+    let scale = inp.effective_scale();
+    let mut out = Matrix::zeros(nq, dv);
+    if dv == 0 || nk == 0 {
+        return out;
+    }
+    if parallel::num_threads() <= 1 || nq < PAR_MIN_QUERIES {
+        exact_rows(inp, scale, 0, &mut out.data);
+    } else {
+        parallel::par_chunks(&mut out.data, dv, |row0, chunk| {
+            exact_rows(inp, scale, row0, chunk);
+        });
+    }
     out
 }
 
 /// Full attention *probability* matrix P = softmax(QKᵀ·scale) — used by the
 /// heavy-coverage analyses (Figs. 4/5, Table 7). O(n²) memory; small inputs.
+/// Rows are independent, so the pool shards them bit-identically.
 pub fn attention_matrix(inp: &AttentionInputs) -> Matrix {
     let (nq, nk) = (inp.q.rows, inp.k.rows);
     let scale = inp.effective_scale();
     let mut p = Matrix::zeros(nq, nk);
-    for i in 0..nq {
-        let qrow = inp.q.row(i);
-        let limit = if inp.causal { (i + 1).min(nk) } else { nk };
-        let row = p.row_mut(i);
-        for j in 0..limit {
-            row[j] = dot(qrow, inp.k.row(j)) * scale;
+    if nk == 0 {
+        return p;
+    }
+    let fill_rows = |row0: usize, chunk: &mut [f32]| {
+        let rows = chunk.len() / nk;
+        for local in 0..rows {
+            let i = row0 + local;
+            let qrow = inp.q.row(i);
+            let limit = if inp.causal { (i + 1).min(nk) } else { nk };
+            let row = &mut chunk[local * nk..(local + 1) * nk];
+            for j in 0..limit {
+                row[j] = dot(qrow, inp.k.row(j)) * scale;
+            }
+            for v in row[limit..].iter_mut() {
+                *v = f32::NEG_INFINITY;
+            }
+            softmax_inplace(row);
         }
-        for v in row[limit..].iter_mut() {
-            *v = f32::NEG_INFINITY;
-        }
-        softmax_inplace(row);
+    };
+    if parallel::num_threads() <= 1 || nq < PAR_MIN_QUERIES {
+        fill_rows(0, &mut p.data);
+    } else {
+        parallel::par_chunks(&mut p.data, nk, fill_rows);
     }
     p
 }
@@ -69,23 +107,53 @@ pub fn flash_attention(inp: &AttentionInputs) -> Matrix {
     flash_attention_blocked(inp, 64, 64)
 }
 
-/// Blocked variant with explicit tile sizes (bench knob).
+/// Blocked variant with explicit tile sizes (bench knob). Query tiles are
+/// independent (the online-softmax state is per query row), so the pool
+/// shards the query range; every shard streams the full K/V once. Results
+/// are bit-identical to the serial loop for any thread count because each
+/// query's accumulation order over K tiles is unchanged.
 pub fn flash_attention_blocked(inp: &AttentionInputs, block_q: usize, block_k: usize) -> Matrix {
     let (nq, nk) = (inp.q.rows, inp.k.rows);
     let dv = inp.v.cols;
     let scale = inp.effective_scale();
     let mut out = Matrix::zeros(nq, dv);
-
+    if nq == 0 || nk == 0 || dv == 0 {
+        return out;
+    }
     let bq = block_q.max(1);
     let bk = block_k.max(1);
+    if parallel::num_threads() <= 1 || nq < PAR_MIN_QUERIES {
+        flash_rows(inp, scale, bq, bk, 0, &mut out.data);
+    } else {
+        parallel::par_chunks(&mut out.data, dv, |row0, chunk| {
+            flash_rows(inp, scale, bq, bk, row0, chunk);
+        });
+    }
+    out
+}
+
+/// Serial flash-attention worker over queries `[row0, row0 + rows)`, writing
+/// into the corresponding band of the output buffer.
+fn flash_rows(
+    inp: &AttentionInputs,
+    scale: f32,
+    bq: usize,
+    bk: usize,
+    row0: usize,
+    out_chunk: &mut [f32],
+) {
+    let nk = inp.k.rows;
+    let dv = inp.v.cols;
+    let rows = out_chunk.len() / dv;
+    let row_end = row0 + rows;
     // Per-query accumulators for the current q-tile.
     let mut m = vec![f32::NEG_INFINITY; bq];
     let mut l = vec![0.0f32; bq];
     let mut acc = vec![0.0f32; bq * dv];
     let mut s = vec![0.0f32; bq * bk];
 
-    for q0 in (0..nq).step_by(bq) {
-        let q1 = (q0 + bq).min(nq);
+    for q0 in (row0..row_end).step_by(bq) {
+        let q1 = (q0 + bq).min(row_end);
         let qb = q1 - q0;
         m[..qb].fill(f32::NEG_INFINITY);
         l[..qb].fill(0.0);
@@ -148,14 +216,14 @@ pub fn flash_attention_blocked(inp: &AttentionInputs, block_q: usize, block_k: u
         // Normalize and write out.
         for qi in 0..qb {
             let inv = if l[qi] > 0.0 { 1.0 / l[qi] } else { 0.0 };
-            let orow = out.row_mut(q0 + qi);
+            let local = q0 - row0 + qi;
+            let orow = &mut out_chunk[local * dv..(local + 1) * dv];
             let arow = &acc[qi * dv..(qi + 1) * dv];
             for (o, a) in orow.iter_mut().zip(arow) {
                 *o = a * inv;
             }
         }
     }
-    out
 }
 
 #[cfg(test)]
@@ -230,6 +298,23 @@ mod tests {
         for &(bq, bk) in &[(1usize, 1usize), (8, 16), (64, 8), (128, 128)] {
             let f = flash_attention_blocked(&inp, bq, bk);
             assert!(rel_error(&f, &base) < 1e-5, "tiles {bq}x{bk}");
+        }
+    }
+
+    #[test]
+    fn parallel_flash_and_exact_match_serial() {
+        for &(n, d, causal) in &[(130usize, 8usize, false), (97, 16, true)] {
+            let (q, k, v) = rand_qkv(n, d, 40 + n as u64);
+            let inp = AttentionInputs::new(&q, &k, &v).causal(causal);
+            let flash1 = crate::parallel::with_threads(1, || flash_attention(&inp));
+            let exact1 = crate::parallel::with_threads(1, || exact_attention(&inp));
+            for t in [2usize, 4, 7] {
+                let flash_t = crate::parallel::with_threads(t, || flash_attention(&inp));
+                let exact_t = crate::parallel::with_threads(t, || exact_attention(&inp));
+                // Per-query math is untouched by sharding: bit-identical.
+                assert_eq!(flash1.data, flash_t.data, "flash n={n} threads={t}");
+                assert_eq!(exact1.data, exact_t.data, "exact n={n} threads={t}");
+            }
         }
     }
 

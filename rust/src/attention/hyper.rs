@@ -25,7 +25,19 @@ use super::AttentionInputs;
 use crate::linalg::ops::dot;
 use crate::linalg::Matrix;
 use crate::lsh::{sorted_blocks, AngularLsh};
+use crate::parallel;
 use crate::util::rng::Rng;
+
+/// Minimum query count before the block-diagonal loop forks the work pool.
+const PAR_MIN_QUERIES: usize = 32;
+
+/// Stream-id salt for per-query residual-sampling RNGs. Each query derives
+/// `Rng::with_stream(cfg.seed, RESIDUAL_STREAM ^ i)`, so its sample sequence
+/// is independent of every other query — which is what makes the bucketed
+/// loop embarrassingly parallel *and* bit-reproducible for any thread count
+/// (a shared sequential RNG would make query i's samples depend on how many
+/// draws queries 0..i made).
+const RESIDUAL_STREAM: u64 = 0x4a5_7700_0000_0000;
 
 /// HyperAttention hyper-parameters.
 #[derive(Debug, Clone)]
@@ -135,98 +147,115 @@ fn hyper_core(
         block_keys.push(kb.block(b).iter().cloned().filter(|&j| is_allowed(j)).collect());
     }
 
-    // Scratch buffers reused across queries (hot path: allocation-free).
-    let mut pair_idx: Vec<usize> = Vec::with_capacity(cfg.block_size + cfg.sample_size + 1);
-    let mut pair_score: Vec<f32> = Vec::with_capacity(cfg.block_size + cfg.sample_size + 1);
-    let mut pair_weight: Vec<f32> = Vec::with_capacity(cfg.block_size + cfg.sample_size + 1);
+    // The per-query body: pure function of (i, shared state, the query's own
+    // RNG stream) — queries are sharded across the pool over disjoint output
+    // bands, bit-identical to the serial order for any thread count.
+    let query_rows = |row0: usize, out_chunk: &mut [f32]| {
+        // Scratch buffers reused across this shard's queries.
+        let cap = cfg.block_size + cfg.sample_size + 1;
+        let mut pair_idx: Vec<usize> = Vec::with_capacity(cap);
+        let mut pair_score: Vec<f32> = Vec::with_capacity(cap);
+        let mut pair_weight: Vec<f32> = Vec::with_capacity(cap);
 
-    // Original sequence position of key-row j (identity unless gathered).
-    let pos = |j: usize| key_pos.map_or(j, |p| p[j]);
+        // Original sequence position of key-row j (identity unless gathered).
+        let pos = |j: usize| key_pos.map_or(j, |p| p[j]);
+        let rows = out_chunk.len() / dv;
 
-    for i in 0..nq {
-        let qrow = inp.q.row(i);
-        pair_idx.clear();
-        pair_score.clear();
-        pair_weight.clear();
+        for local in 0..rows {
+            let i = row0 + local;
+            let qrow = inp.q.row(i);
+            pair_idx.clear();
+            pair_score.clear();
+            pair_weight.clear();
 
-        // (3) blockwise part.
-        let bkeys: &[usize] =
-            block_keys.get(query_block[i]).map(|v| v.as_slice()).unwrap_or(&[]);
-        let in_block = |j: usize| bkeys.contains(&j);
-        for &j in bkeys {
-            if inp.causal && pos(j) > i {
-                continue;
-            }
-            pair_idx.push(j);
-            pair_score.push(dot(qrow, inp.k.row(j)) * scale);
-            pair_weight.push(1.0);
-        }
-        // Causal anchor: guarantee at least one valid pair — the allowed key
-        // with the largest position ≤ i (the self pair in the un-gathered
-        // case) — so early tokens whose block lies in the future stay
-        // defined.
-        if inp.causal && pair_idx.is_empty() {
-            let anchor = (0..inp.k.rows)
-                .filter(|&j| is_allowed(j) && pos(j) <= i)
-                .max_by_key(|&j| pos(j));
-            if let Some(j) = anchor {
+            // (3) blockwise part.
+            let bkeys: &[usize] =
+                block_keys.get(query_block[i]).map(|v| v.as_slice()).unwrap_or(&[]);
+            let in_block = |j: usize| bkeys.contains(&j);
+            for &j in bkeys {
+                if inp.causal && pos(j) > i {
+                    continue;
+                }
                 pair_idx.push(j);
                 pair_score.push(dot(qrow, inp.k.row(j)) * scale);
                 pair_weight.push(1.0);
             }
-        }
-
-        // (4) residual Monte-Carlo part.
-        if cfg.sample_size > 0 && n_allowed > 0 {
-            let block_in_space =
-                if cfg.exclude_block_from_residual { bkeys.len() } else { 0 };
-            let effective = cfg
-                .residual_count_override
-                .unwrap_or_else(|| n_allowed.saturating_sub(block_in_space));
-            if effective > 0 {
-                let w = effective as f32 / cfg.sample_size as f32;
-                let mut drawn = 0usize;
-                let mut attempts = 0usize;
-                let max_attempts = cfg.sample_size * 8 + 16;
-                while drawn < cfg.sample_size && attempts < max_attempts {
-                    attempts += 1;
-                    let j = allowed_indices[rng.usize(n_allowed)];
-                    if cfg.exclude_block_from_residual && in_block(j) {
-                        continue;
-                    }
-                    if inp.causal && pos(j) > i {
-                        continue;
-                    }
+            // Causal anchor: guarantee at least one valid pair — the allowed
+            // key with the largest position ≤ i (the self pair in the
+            // un-gathered case) — so early tokens whose block lies in the
+            // future stay defined.
+            if inp.causal && pair_idx.is_empty() {
+                let anchor = (0..inp.k.rows)
+                    .filter(|&j| is_allowed(j) && pos(j) <= i)
+                    .max_by_key(|&j| pos(j));
+                if let Some(j) = anchor {
                     pair_idx.push(j);
                     pair_score.push(dot(qrow, inp.k.row(j)) * scale);
-                    pair_weight.push(w);
-                    drawn += 1;
+                    pair_weight.push(1.0);
+                }
+            }
+
+            // (4) residual Monte-Carlo part, from this query's own stream.
+            if cfg.sample_size > 0 && n_allowed > 0 {
+                let mut rng = Rng::with_stream(cfg.seed, RESIDUAL_STREAM ^ i as u64);
+                let block_in_space =
+                    if cfg.exclude_block_from_residual { bkeys.len() } else { 0 };
+                let effective = cfg
+                    .residual_count_override
+                    .unwrap_or_else(|| n_allowed.saturating_sub(block_in_space));
+                if effective > 0 {
+                    let w = effective as f32 / cfg.sample_size as f32;
+                    let mut drawn = 0usize;
+                    let mut attempts = 0usize;
+                    let max_attempts = cfg.sample_size * 8 + 16;
+                    while drawn < cfg.sample_size && attempts < max_attempts {
+                        attempts += 1;
+                        let j = allowed_indices[rng.usize(n_allowed)];
+                        if cfg.exclude_block_from_residual && in_block(j) {
+                            continue;
+                        }
+                        if inp.causal && pos(j) > i {
+                            continue;
+                        }
+                        pair_idx.push(j);
+                        pair_score.push(dot(qrow, inp.k.row(j)) * scale);
+                        pair_weight.push(w);
+                        drawn += 1;
+                    }
+                }
+            }
+
+            // Combine with a weighted, numerically-stable softmax.
+            if pair_idx.is_empty() {
+                continue;
+            }
+            let m = pair_score.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut denom = 0.0f32;
+            let orow = &mut out_chunk[local * dv..(local + 1) * dv];
+            orow.fill(0.0);
+            for ((&j, &s), &w) in pair_idx.iter().zip(&pair_score).zip(&pair_weight) {
+                let p = w * (s - m).exp();
+                denom += p;
+                let vrow = inp.v.row(j);
+                for (o, vv) in orow.iter_mut().zip(vrow) {
+                    *o += p * vv;
+                }
+            }
+            if denom > 0.0 {
+                let inv = 1.0 / denom;
+                for o in orow.iter_mut() {
+                    *o *= inv;
                 }
             }
         }
+    };
 
-        // Combine with a weighted, numerically-stable softmax.
-        if pair_idx.is_empty() {
-            continue;
+    if parallel::num_threads() <= 1 || nq < PAR_MIN_QUERIES || dv == 0 {
+        if dv > 0 {
+            query_rows(0, &mut out.data);
         }
-        let m = pair_score.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-        let mut denom = 0.0f32;
-        let orow = out.row_mut(i);
-        orow.fill(0.0);
-        for ((&j, &s), &w) in pair_idx.iter().zip(&pair_score).zip(&pair_weight) {
-            let p = w * (s - m).exp();
-            denom += p;
-            let vrow = inp.v.row(j);
-            for (o, vv) in orow.iter_mut().zip(vrow) {
-                *o += p * vv;
-            }
-        }
-        if denom > 0.0 {
-            let inv = 1.0 / denom;
-            for o in orow.iter_mut() {
-                *o *= inv;
-            }
-        }
+    } else {
+        parallel::par_chunks(&mut out.data, dv, query_rows);
     }
     out
 }
@@ -371,6 +400,23 @@ mod tests {
         let a = hyper_attention(&inp, &cfg, None);
         let b = hyper_attention(&inp, &cfg, None);
         assert_eq!(a.data, b.data);
+    }
+
+    #[test]
+    fn deterministic_across_thread_counts() {
+        // Residual samples come from per-query RNG streams, so the output is
+        // bit-identical for any pool width, causal or not.
+        let (q, k, v) = rand_qkv(192, 8, 14);
+        for causal in [false, true] {
+            let inp = AttentionInputs::new(&q, &k, &v).causal(causal);
+            let cfg =
+                HyperConfig { block_size: 16, sample_size: 16, seed: 15, ..Default::default() };
+            let base = crate::parallel::with_threads(1, || hyper_attention(&inp, &cfg, None));
+            for t in [2usize, 4, 7] {
+                let h = crate::parallel::with_threads(t, || hyper_attention(&inp, &cfg, None));
+                assert_eq!(base.data, h.data, "threads={t} causal={causal}");
+            }
+        }
     }
 
     #[test]

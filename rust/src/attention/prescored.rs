@@ -24,6 +24,7 @@
 use super::hyper::{hyper_attention, HyperConfig};
 use super::AttentionInputs;
 use crate::linalg::Matrix;
+use crate::parallel;
 use crate::prescore::{prescore, PreScoreConfig, PreScoreResult};
 
 /// How pre-scoring couples to the HyperAttention kernel (Appendix F).
@@ -114,12 +115,24 @@ pub fn prescored_hyper_attention(
             for &i in &sel.selected {
                 selected_mask[i] = true;
             }
-            for i in 0..n {
-                if !selected_mask[i] {
-                    kz.row_mut(i).fill(0.0);
-                    vz.row_mut(i).fill(0.0);
+            // Zero-masking is per row — sharded across the pool (matters at
+            // the long contexts the Appendix-F ablation sweeps).
+            let zero_unselected = |m: &mut Matrix| {
+                let cols = m.cols;
+                if cols == 0 {
+                    return;
                 }
-            }
+                parallel::par_chunks(&mut m.data, cols, |row0, chunk| {
+                    let rows = chunk.len() / cols;
+                    for local in 0..rows {
+                        if !selected_mask[row0 + local] {
+                            chunk[local * cols..(local + 1) * cols].fill(0.0);
+                        }
+                    }
+                });
+            };
+            zero_unselected(&mut kz);
+            zero_unselected(&mut vz);
             // (2) residual weighted by global n; (3) no block exclusion.
             let hyper_cfg = HyperConfig {
                 residual_count_override: Some(n),

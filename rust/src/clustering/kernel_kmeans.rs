@@ -15,7 +15,11 @@
 use super::Clustering;
 use crate::linalg::ops::sq_dist;
 use crate::linalg::Matrix;
+use crate::parallel;
 use crate::util::rng::Rng;
+
+/// Minimum point count before the O(n²) kernel loops fork the pool.
+const PAR_MIN_POINTS: usize = 64;
 
 /// Run Gaussian-kernel k-means.
 ///
@@ -33,16 +37,33 @@ pub fn gaussian_kernel_kmeans(
     let n = data.rows;
     let k = k.max(1).min(n);
 
-    // Kernel matrix (symmetric, k(x,x)=1).
+    // Kernel matrix (symmetric, k(x,x)=1). The upper triangle is computed
+    // row-sharded across the pool (each worker owns disjoint rows), then
+    // mirrored serially — an O(n²) copy against the O(n²·d) exp work.
     let gamma = if gamma > 0.0 { gamma } else { median_heuristic(data, rng) };
     let inv2g2 = 1.0 / (2.0 * gamma * gamma);
     let mut ker = Matrix::zeros(n, n);
+    let fill_upper = |i0: usize, chunk: &mut [f32]| {
+        let rows = chunk.len() / n;
+        for local in 0..rows {
+            let i = i0 + local;
+            let row = &mut chunk[local * n..(local + 1) * n];
+            row[i] = 1.0;
+            for j in i + 1..n {
+                row[j] = (-sq_dist(data.row(i), data.row(j)) * inv2g2).exp();
+            }
+        }
+    };
+    if parallel::num_threads() <= 1 || n < PAR_MIN_POINTS {
+        fill_upper(0, &mut ker.data);
+    } else {
+        // Row i costs (n - i) kernel evaluations — weight the shards so the
+        // triangle splits into equal work, not equal row counts.
+        parallel::par_chunks_weighted(&mut ker.data, n, |i| n - i, fill_upper);
+    }
     for i in 0..n {
-        ker[(i, i)] = 1.0;
-        for j in i + 1..n {
-            let v = (-sq_dist(data.row(i), data.row(j)) * inv2g2).exp();
-            ker[(i, j)] = v;
-            ker[(j, i)] = v;
+        for j in 0..i {
+            ker[(i, j)] = ker[(j, i)];
         }
     }
 
@@ -58,8 +79,9 @@ pub fn gaussian_kernel_kmeans(
         for i in 0..n {
             members[assignment[i]].push(i);
         }
-        let mut intra = vec![0.0f64; k]; // Σ_{y,z∈C} k(y,z)
-        for c in 0..k {
+        // Σ_{y,z∈C} k(y,z): O(n²) total — sharded per cluster on the pool.
+        let mut intra = vec![0.0f64; k];
+        let intra_for = |c: usize| {
             let m = &members[c];
             let mut s = 0.0f64;
             for &y in m {
@@ -67,27 +89,54 @@ pub fn gaussian_kernel_kmeans(
                     s += ker[(y, z)] as f64;
                 }
             }
-            intra[c] = s;
+            s
+        };
+        if parallel::num_threads() <= 1 || n < PAR_MIN_POINTS {
+            for (c, slot) in intra.iter_mut().enumerate() {
+                *slot = intra_for(c);
+            }
+        } else {
+            parallel::par_rows(&mut intra, |c0, chunk| {
+                for (local, slot) in chunk.iter_mut().enumerate() {
+                    *slot = intra_for(c0 + local);
+                }
+            });
         }
 
+        // Parallel assignment: per-point feature-space argmin into a scratch
+        // buffer (pool-sharded, pure per point), then a serial pass folds
+        // objective/changed in index order so the result is reproducible for
+        // any thread count.
+        let mut best_of: Vec<(usize, f32)> = vec![(0, 0.0); n];
+        let assign_rows = |i0: usize, chunk: &mut [(usize, f32)]| {
+            for (local, slot) in chunk.iter_mut().enumerate() {
+                let i = i0 + local;
+                let (mut best, mut best_d) = (assignment[i], f32::INFINITY);
+                for c in 0..k {
+                    let m = &members[c];
+                    if m.is_empty() {
+                        continue;
+                    }
+                    let size = m.len() as f64;
+                    let cross: f64 = m.iter().map(|&y| ker[(i, y)] as f64).sum();
+                    let d = 1.0 - 2.0 * cross / size + intra[c] / (size * size);
+                    let d = d as f32;
+                    if d < best_d {
+                        best_d = d;
+                        best = c;
+                    }
+                }
+                *slot = (best, best_d);
+            }
+        };
+        if parallel::num_threads() <= 1 || n < PAR_MIN_POINTS {
+            assign_rows(0, &mut best_of);
+        } else {
+            parallel::par_rows(&mut best_of, assign_rows);
+        }
         let mut changed = false;
         objective = 0.0;
-        for i in 0..n {
-            let (mut best, mut best_d) = (assignment[i], f32::INFINITY);
-            for c in 0..k {
-                let m = &members[c];
-                if m.is_empty() {
-                    continue;
-                }
-                let size = m.len() as f64;
-                let cross: f64 = m.iter().map(|&y| ker[(i, y)] as f64).sum();
-                let d = 1.0 - 2.0 * cross / size + intra[c] / (size * size);
-                let d = d as f32;
-                if d < best_d {
-                    best_d = d;
-                    best = c;
-                }
-            }
+        for (i, &(best, best_d)) in best_of.iter().enumerate() {
             objective += best_d.max(0.0);
             if assignment[i] != best {
                 assignment[i] = best;
@@ -147,15 +196,26 @@ pub fn kernel_distances(
         }
         intra[c] = s;
     }
-    (0..n)
-        .map(|i| {
-            let c = assignment[i];
-            let m = &members[c];
-            let size = m.len() as f64;
-            let cross: f64 = m.iter().map(|&y| kerf(i, y)).sum();
-            (1.0 - 2.0 * cross / size + intra[c] / (size * size)).max(0.0) as f32
-        })
-        .collect()
+    let point_dist = |i: usize| {
+        let c = assignment[i];
+        let m = &members[c];
+        let size = m.len() as f64;
+        let cross: f64 = m.iter().map(|&y| kerf(i, y)).sum();
+        (1.0 - 2.0 * cross / size + intra[c] / (size * size)).max(0.0) as f32
+    };
+    let mut out = vec![0.0f32; n];
+    if parallel::num_threads() <= 1 || n < PAR_MIN_POINTS {
+        for (i, slot) in out.iter_mut().enumerate() {
+            *slot = point_dist(i);
+        }
+    } else {
+        parallel::par_rows(&mut out, |i0, chunk| {
+            for (local, slot) in chunk.iter_mut().enumerate() {
+                *slot = point_dist(i0 + local);
+            }
+        });
+    }
+    out
 }
 
 /// Median pairwise distance over a subsample — standard bandwidth heuristic.

@@ -7,12 +7,19 @@
 use super::Clustering;
 use crate::linalg::ops::sq_dist;
 use crate::linalg::Matrix;
+use crate::parallel;
 use crate::util::rng::Rng;
 
 /// Extended result giving access to per-point distances for selection.
 pub type KMeansResult = Clustering;
 
+/// Minimum `n · k · d` work before the assignment step forks the pool.
+const PAR_MIN_WORK: usize = parallel::DEFAULT_MIN_WORK;
+
 /// k-means++ seeding: first centroid uniform, then proportional to D².
+/// The RNG draws stay serial (sequential by construction); the O(n·d)
+/// distance refresh after each pick is sharded across the pool, which is
+/// bit-identical to the serial loop (pure per-point update).
 pub fn kmeanspp_init(data: &Matrix, k: usize, rng: &mut Rng) -> Matrix {
     let n = data.rows;
     assert!(k >= 1 && n >= 1);
@@ -23,11 +30,23 @@ pub fn kmeanspp_init(data: &Matrix, k: usize, rng: &mut Rng) -> Matrix {
     for c in 1..k.min(n) {
         let pick = rng.weighted_choice(&d2).unwrap_or_else(|| rng.usize(n));
         centroids.row_mut(c).copy_from_slice(data.row(pick));
-        for i in 0..n {
-            let nd = sq_dist(data.row(i), centroids.row(c)) as f64;
-            if nd < d2[i] {
-                d2[i] = nd;
+        let crow = centroids.row(c);
+        if parallel::num_threads() <= 1 || n * data.cols < PAR_MIN_WORK {
+            for i in 0..n {
+                let nd = sq_dist(data.row(i), crow) as f64;
+                if nd < d2[i] {
+                    d2[i] = nd;
+                }
             }
+        } else {
+            parallel::par_rows(&mut d2, |i0, chunk| {
+                for (local, slot) in chunk.iter_mut().enumerate() {
+                    let nd = sq_dist(data.row(i0 + local), crow) as f64;
+                    if nd < *slot {
+                        *slot = nd;
+                    }
+                }
+            });
         }
     }
     centroids
@@ -56,23 +75,39 @@ pub fn kmeans(data: &Matrix, k: usize, max_iters: usize, rng: &mut Rng) -> Clust
         for (c, cs) in cent_sq.iter_mut().enumerate() {
             *cs = crate::linalg::ops::dot(centroids.row(c), centroids.row(c));
         }
-        let mut changed = false;
-        for i in 0..n {
-            let row = data.row(i);
-            let mut best = 0usize;
-            let mut best_d = f32::INFINITY;
-            for c in 0..k {
-                let d = cent_sq[c] - 2.0 * crate::linalg::ops::dot(row, centroids.row(c));
-                if d < best_d {
-                    best_d = d;
-                    best = c;
+        // Parallel assignment: each point's argmin is a pure function of the
+        // centroids, so sharding points across the pool is bit-identical to
+        // the serial loop; the update step below stays serial so the whole
+        // iteration is reproducible for any thread count.
+        let changed_flag = std::sync::atomic::AtomicBool::new(false);
+        let assign_rows = |i0: usize, chunk: &mut [usize]| {
+            let mut local_changed = false;
+            for (local, slot) in chunk.iter_mut().enumerate() {
+                let row = data.row(i0 + local);
+                let mut best = 0usize;
+                let mut best_d = f32::INFINITY;
+                for c in 0..k {
+                    let d = cent_sq[c] - 2.0 * crate::linalg::ops::dot(row, centroids.row(c));
+                    if d < best_d {
+                        best_d = d;
+                        best = c;
+                    }
+                }
+                if *slot != best {
+                    *slot = best;
+                    local_changed = true;
                 }
             }
-            if assignment[i] != best {
-                assignment[i] = best;
-                changed = true;
+            if local_changed {
+                changed_flag.store(true, std::sync::atomic::Ordering::Relaxed);
             }
+        };
+        if parallel::num_threads() <= 1 || n * k * data.cols < PAR_MIN_WORK {
+            assign_rows(0, &mut assignment);
+        } else {
+            parallel::par_rows(&mut assignment, assign_rows);
         }
+        let mut changed = changed_flag.into_inner();
         // Update step.
         let mut counts = vec![0usize; k];
         let mut sums = Matrix::zeros(k, data.cols);
@@ -217,6 +252,27 @@ mod tests {
         let mut r2 = Rng::new(12);
         let multi = kmeans_best_of(&data, 6, 10, 5, &mut r2);
         assert!(multi.objective <= single.objective + 1e-6);
+    }
+
+    #[test]
+    fn parallel_assignment_matches_serial_exactly() {
+        // The assignment step is pure per point and the update step is
+        // serial, so kmeans is bit-reproducible across thread counts.
+        let mut r = Rng::new(31);
+        let data = Matrix::randn(600, 8, 1.0, &mut r); // above the PAR_MIN_WORK gate
+        let run = |t: usize| {
+            crate::parallel::with_threads(t, || {
+                let mut rng = Rng::new(77);
+                kmeans(&data, 9, 10, &mut rng)
+            })
+        };
+        let base = run(1);
+        for t in [2usize, 4, 7] {
+            let c = run(t);
+            assert_eq!(base.assignment, c.assignment, "threads={t}");
+            assert_eq!(base.objective, c.objective, "threads={t}");
+            assert_eq!(base.centroids.data, c.centroids.data, "threads={t}");
+        }
     }
 
     #[test]

@@ -8,6 +8,7 @@
 use super::Clustering;
 use crate::linalg::ops::sq_dist;
 use crate::linalg::Matrix;
+use crate::parallel;
 use crate::util::rng::Rng;
 
 /// Run mini-batch k-means with per-centroid learning rates 1/count.
@@ -46,19 +47,33 @@ pub fn minibatch_kmeans(
         }
     }
 
-    // Final full assignment for the returned clustering.
+    // Final full assignment for the returned clustering. The gradient-step
+    // loop above is inherently sequential (each point moves a centroid), but
+    // this O(n·k·d) pass is pure per point, so it shards across the pool;
+    // the objective folds serially in index order afterwards.
+    let mut best_of: Vec<(usize, f32)> = vec![(0, 0.0); n];
+    let assign_rows = |i0: usize, chunk: &mut [(usize, f32)]| {
+        for (local, slot) in chunk.iter_mut().enumerate() {
+            let row = data.row(i0 + local);
+            let (mut best, mut best_d) = (0usize, f32::INFINITY);
+            for c in 0..k {
+                let d = sq_dist(row, centroids.row(c));
+                if d < best_d {
+                    best_d = d;
+                    best = c;
+                }
+            }
+            *slot = (best, best_d);
+        }
+    };
+    if parallel::num_threads() <= 1 || n * k * data.cols < parallel::DEFAULT_MIN_WORK {
+        assign_rows(0, &mut best_of);
+    } else {
+        parallel::par_rows(&mut best_of, assign_rows);
+    }
     let mut assignment = vec![0usize; n];
     let mut objective = 0.0f32;
-    for i in 0..n {
-        let row = data.row(i);
-        let (mut best, mut best_d) = (0usize, f32::INFINITY);
-        for c in 0..k {
-            let d = sq_dist(row, centroids.row(c));
-            if d < best_d {
-                best_d = d;
-                best = c;
-            }
-        }
+    for (i, &(best, best_d)) in best_of.iter().enumerate() {
         assignment[i] = best;
         objective += best_d;
     }

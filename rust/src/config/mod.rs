@@ -101,6 +101,9 @@ pub struct ServingConfig {
     pub batch_deadline_ms: f64,
     /// Token budget per batch.
     pub max_batch_tokens: usize,
+    /// Executor worker pool size (0 = derive from the parallel pool width /
+    /// `PALLAS_THREADS`, capped).
+    pub executor_workers: usize,
     /// Pre-score method for the coordinator's prescore manager.
     pub prescore_method: String,
     pub prescore_top_k: usize,
@@ -119,6 +122,7 @@ impl Default for ServingConfig {
             max_seq: 256,
             batch_deadline_ms: 5.0,
             max_batch_tokens: 4096,
+            executor_workers: 0,
             prescore_method: "kmeans".into(),
             prescore_top_k: 64,
             prescore_refresh_every: 16,
@@ -137,6 +141,7 @@ impl ServingConfig {
             max_seq: cfg.usize_or("serving", "max_seq", d.max_seq)?,
             batch_deadline_ms: cfg.f64_or("serving", "batch_deadline_ms", d.batch_deadline_ms)?,
             max_batch_tokens: cfg.usize_or("serving", "max_batch_tokens", d.max_batch_tokens)?,
+            executor_workers: cfg.usize_or("serving", "executor_workers", d.executor_workers)?,
             prescore_method: cfg.get_or("prescore", "method", &d.prescore_method).to_string(),
             prescore_top_k: cfg.usize_or("prescore", "top_k", d.prescore_top_k)?,
             prescore_refresh_every: cfg
@@ -188,6 +193,7 @@ fallback_delta = 0.05
         assert!((sc.fallback_delta - 0.05).abs() < 1e-12);
         // defaults fill unspecified keys
         assert_eq!(sc.max_seq, 256);
+        assert_eq!(sc.executor_workers, 0);
     }
 
     #[test]

@@ -69,6 +69,16 @@ impl DynamicBatcher {
         self.queue.len()
     }
 
+    /// Time remaining until the oldest queued request hits the flush
+    /// deadline (zero if already past it; `None` if the queue is empty).
+    /// Lets the serving loop block exactly as long as the batching policy
+    /// allows instead of polling on a fixed interval.
+    pub fn time_to_deadline(&self, now: Instant) -> Option<Duration> {
+        self.queue
+            .front()
+            .map(|r| self.cfg.deadline.saturating_sub(now.saturating_duration_since(r.arrived)))
+    }
+
     /// Max lanes that fit the token budget.
     fn budget_lanes(&self) -> usize {
         (self.cfg.max_batch_tokens / self.cfg.max_seq).max(1)
@@ -157,6 +167,19 @@ mod tests {
         let later = Instant::now() + Duration::from_millis(50);
         let batch = b.poll(later).expect("deadline flush");
         assert_eq!(batch.lanes, 1);
+    }
+
+    #[test]
+    fn time_to_deadline_tracks_oldest() {
+        let mut b = DynamicBatcher::new(cfg());
+        assert!(b.time_to_deadline(Instant::now()).is_none(), "empty queue");
+        b.push(req(0, 100));
+        let now = Instant::now();
+        let remaining = b.time_to_deadline(now).unwrap();
+        assert!(remaining <= Duration::from_millis(5));
+        // Past the deadline: saturates to zero instead of panicking.
+        let later = now + Duration::from_millis(50);
+        assert_eq!(b.time_to_deadline(later).unwrap(), Duration::ZERO);
     }
 
     #[test]

@@ -88,6 +88,22 @@ impl Scheduler {
         }
         None
     }
+
+    /// Pool-aware dispatch: pull up to `free_workers` work items in one call
+    /// so the execution loop can top up every idle executor worker per
+    /// scheduling round. The prefill-priority / starvation-bound policy of
+    /// [`Scheduler::next`] applies item by item, so a round mixes prefill
+    /// and decode exactly as the serial policy would have dispatched them.
+    pub fn next_round(&mut self, free_workers: usize) -> Vec<WorkItem> {
+        let mut round = Vec::with_capacity(free_workers.min(8));
+        for _ in 0..free_workers {
+            match self.next() {
+                Some(item) => round.push(item),
+                None => break,
+            }
+        }
+        round
+    }
 }
 
 #[cfg(test)]
@@ -131,6 +147,28 @@ mod tests {
         assert_eq!(s.next(), Some(WorkItem::Decode(vec![0, 1, 2])));
         assert_eq!(s.next(), Some(WorkItem::Decode(vec![3, 4, 5])));
         assert_eq!(s.next(), Some(WorkItem::Decode(vec![6])));
+    }
+
+    #[test]
+    fn next_round_fills_pool_and_respects_policy() {
+        let cfg = SchedulerConfig { max_prefill_streak: 2, decode_width: 4 };
+        let mut s = Scheduler::new(cfg);
+        s.submit_decode(9);
+        for i in 0..4 {
+            s.submit_prefill(vec![i]);
+        }
+        // 4 free workers: two prefills, then the starvation bound forces the
+        // decode, then prefill resumes.
+        let round = s.next_round(4);
+        assert_eq!(round.len(), 4);
+        assert!(matches!(round[0], WorkItem::Prefill(_)));
+        assert!(matches!(round[1], WorkItem::Prefill(_)));
+        assert_eq!(round[2], WorkItem::Decode(vec![9]));
+        assert!(matches!(round[3], WorkItem::Prefill(_)));
+        // Remaining work drains on the following round; zero workers = noop.
+        assert!(s.next_round(0).is_empty());
+        assert_eq!(s.next_round(8).len(), 1);
+        assert!(s.next_round(8).is_empty());
     }
 
     #[test]

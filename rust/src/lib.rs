@@ -28,6 +28,7 @@ pub mod linalg;
 pub mod lsh;
 pub mod metrics;
 pub mod model;
+pub mod parallel;
 pub mod prescore;
 pub mod runtime;
 pub mod server;

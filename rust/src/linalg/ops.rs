@@ -1,7 +1,19 @@
 //! Matrix operations: blocked matmul, softmax, elementwise helpers,
 //! and selection (argsort / top-k) utilities.
+//!
+//! The matmuls are row-sharded across the [`crate::parallel`] work pool:
+//! each worker owns a disjoint contiguous band of output rows, so no
+//! synchronization is needed, and shard boundaries depend only on the
+//! thread count (deterministic outputs for a fixed pool width). With
+//! `threads = 1` the original serial loops run unchanged — that path is the
+//! Fig. 1 / Table 1 baseline the parallel path is benchmarked against.
 
 use super::matrix::Matrix;
+use crate::parallel;
+
+/// Minimum multiply-accumulate count before a matmul is worth forking the
+/// pool (below this, spawn overhead dominates).
+const PAR_MIN_FLOPS: usize = 1 << 16;
 
 /// Blocked cache-friendly matmul: C = A · B.
 ///
@@ -15,27 +27,80 @@ pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
 }
 
 /// Matmul writing into a preallocated output (hot-path, allocation-free).
+/// Output rows are sharded across the work pool; each worker runs the
+/// register-tiled AXPY micro-kernel over its own band.
 pub fn matmul_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
     assert_eq!(a.cols, b.rows);
     assert_eq!((c.rows, c.cols), (a.rows, b.cols));
     c.data.fill(0.0);
     let (n, k, m) = (a.rows, a.cols, b.cols);
+    if m == 0 || n == 0 {
+        return;
+    }
+    if parallel::num_threads() <= 1 || n * k * m < PAR_MIN_FLOPS {
+        // Serial baseline path (threads = 1): identical to the seed kernel.
+        const BK: usize = 64;
+        for k0 in (0..k).step_by(BK) {
+            let k1 = (k0 + BK).min(k);
+            for i in 0..n {
+                let arow = &a.data[i * k..(i + 1) * k];
+                let crow = &mut c.data[i * m..(i + 1) * m];
+                for kk in k0..k1 {
+                    let av = arow[kk];
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let brow = &b.data[kk * m..(kk + 1) * m];
+                    // contiguous AXPY over the output row — auto-vectorizes
+                    for (cv, bv) in crow.iter_mut().zip(brow.iter()) {
+                        *cv += av * bv;
+                    }
+                }
+            }
+        }
+        return;
+    }
+    parallel::par_chunks(&mut c.data, m, |row0, chunk| {
+        matmul_rows_tiled(a, b, row0, chunk);
+    });
+}
+
+/// Micro-kernel for one band of output rows: k-blocked for cache reuse, with
+/// a 4-wide register-tiled inner AXPY (four A scalars held in registers and
+/// fused into one pass over the output row — 4× fewer C-row traversals than
+/// the scalar AXPY).
+fn matmul_rows_tiled(a: &Matrix, b: &Matrix, row0: usize, c_chunk: &mut [f32]) {
+    let (k, m) = (a.cols, b.cols);
+    let rows = c_chunk.len() / m;
     const BK: usize = 64;
     for k0 in (0..k).step_by(BK) {
         let k1 = (k0 + BK).min(k);
-        for i in 0..n {
-            let arow = &a.data[i * k..(i + 1) * k];
-            let crow = &mut c.data[i * m..(i + 1) * m];
-            for kk in k0..k1 {
+        for i in 0..rows {
+            let arow = a.row(row0 + i);
+            let crow = &mut c_chunk[i * m..(i + 1) * m];
+            let mut kk = k0;
+            while kk + 4 <= k1 {
+                let (a0, a1, a2, a3) = (arow[kk], arow[kk + 1], arow[kk + 2], arow[kk + 3]);
+                if a0 != 0.0 || a1 != 0.0 || a2 != 0.0 || a3 != 0.0 {
+                    let b0 = &b.data[kk * m..(kk + 1) * m];
+                    let b1 = &b.data[(kk + 1) * m..(kk + 2) * m];
+                    let b2 = &b.data[(kk + 2) * m..(kk + 3) * m];
+                    let b3 = &b.data[(kk + 3) * m..(kk + 4) * m];
+                    for j in 0..m {
+                        crow[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
+                    }
+                }
+                kk += 4;
+            }
+            while kk < k1 {
                 let av = arow[kk];
-                if av == 0.0 {
-                    continue;
+                if av != 0.0 {
+                    let brow = &b.data[kk * m..(kk + 1) * m];
+                    for (cv, bv) in crow.iter_mut().zip(brow.iter()) {
+                        *cv += av * bv;
+                    }
                 }
-                let brow = &b.data[kk * m..(kk + 1) * m];
-                // contiguous AXPY over the output row — auto-vectorizes
-                for (cv, bv) in crow.iter_mut().zip(brow.iter()) {
-                    *cv += av * bv;
-                }
+                kk += 1;
             }
         }
     }
@@ -49,18 +114,59 @@ pub fn matmul_nt(a: &Matrix, b: &Matrix) -> Matrix {
     c
 }
 
-/// A · Bᵀ into preallocated output.
+/// A · Bᵀ into preallocated output. Rows of C are sharded across the pool;
+/// each worker computes 4 dot products per pass over an A row (register
+/// tile), falling back to the scalar dot for the ragged tail.
 pub fn matmul_nt_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
     assert_eq!(a.cols, b.cols);
     assert_eq!((c.rows, c.cols), (a.rows, b.rows));
     let d = a.cols;
-    for i in 0..a.rows {
-        let arow = a.row(i);
-        let crow = &mut c.data[i * b.rows..(i + 1) * b.rows];
-        for j in 0..b.rows {
-            crow[j] = dot(arow, &b.data[j * d..(j + 1) * d]);
-        }
+    let nb = b.rows;
+    if a.rows == 0 || nb == 0 {
+        return;
     }
+    if parallel::num_threads() <= 1 || a.rows * nb * d < PAR_MIN_FLOPS {
+        // Serial baseline path (threads = 1): identical to the seed kernel.
+        for i in 0..a.rows {
+            let arow = a.row(i);
+            let crow = &mut c.data[i * nb..(i + 1) * nb];
+            for j in 0..nb {
+                crow[j] = dot(arow, &b.data[j * d..(j + 1) * d]);
+            }
+        }
+        return;
+    }
+    parallel::par_chunks(&mut c.data, nb, |row0, chunk| {
+        let rows = chunk.len() / nb;
+        for i in 0..rows {
+            let arow = a.row(row0 + i);
+            let crow = &mut chunk[i * nb..(i + 1) * nb];
+            let mut j = 0;
+            while j + 4 <= nb {
+                let b0 = &b.data[j * d..(j + 1) * d];
+                let b1 = &b.data[(j + 1) * d..(j + 2) * d];
+                let b2 = &b.data[(j + 2) * d..(j + 3) * d];
+                let b3 = &b.data[(j + 3) * d..(j + 4) * d];
+                let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+                for t in 0..d {
+                    let av = arow[t];
+                    s0 += av * b0[t];
+                    s1 += av * b1[t];
+                    s2 += av * b2[t];
+                    s3 += av * b3[t];
+                }
+                crow[j] = s0;
+                crow[j + 1] = s1;
+                crow[j + 2] = s2;
+                crow[j + 3] = s3;
+                j += 4;
+            }
+            while j < nb {
+                crow[j] = dot(arow, &b.data[j * d..(j + 1) * d]);
+                j += 1;
+            }
+        }
+    });
 }
 
 /// Dot product of two equal-length slices (4-way unrolled).
@@ -265,6 +371,32 @@ mod tests {
         assert_eq!(top_k_indices(&s, 0), Vec::<usize>::new());
         assert_eq!(top_k_indices(&s, 99).len(), 5);
         assert_eq!(bottom_k_indices(&s, 2), vec![0, 4]);
+    }
+
+    #[test]
+    fn parallel_matmul_matches_serial() {
+        let mut r = Rng::new(21);
+        // Sizes above PAR_MIN_FLOPS so the sharded micro-kernel path runs.
+        let a = Matrix::randn(67, 53, 1.0, &mut r);
+        let b = Matrix::randn(53, 41, 1.0, &mut r);
+        let serial = crate::parallel::with_threads(1, || matmul(&a, &b));
+        for t in [2usize, 4, 7] {
+            let par = crate::parallel::with_threads(t, || matmul(&a, &b));
+            // Register-tile reassociation only — tiny elementwise drift.
+            assert!(serial.max_abs_diff(&par) < 1e-3, "threads={t}");
+        }
+    }
+
+    #[test]
+    fn parallel_matmul_nt_matches_serial() {
+        let mut r = Rng::new(22);
+        let a = Matrix::randn(59, 48, 1.0, &mut r);
+        let b = Matrix::randn(37, 48, 1.0, &mut r);
+        let serial = crate::parallel::with_threads(1, || matmul_nt(&a, &b));
+        for t in [2usize, 4, 7] {
+            let par = crate::parallel::with_threads(t, || matmul_nt(&a, &b));
+            assert!(serial.max_abs_diff(&par) < 1e-3, "threads={t}");
+        }
     }
 
     #[test]

@@ -13,7 +13,11 @@
 
 use crate::linalg::ops::dot;
 use crate::linalg::Matrix;
+use crate::parallel;
 use crate::util::rng::Rng;
+
+/// Minimum `rows · bits · dim` work before hashing forks the pool.
+const PAR_MIN_WORK: usize = parallel::DEFAULT_MIN_WORK;
 
 /// Angular LSH: `bits` random Gaussian hyperplanes in dimension `dim`.
 #[derive(Clone, Debug)]
@@ -43,9 +47,20 @@ impl AngularLsh {
         code
     }
 
-    /// Hash every row of a matrix.
+    /// Hash every row of a matrix. Rows are sharded across the work pool —
+    /// each hash is a pure function of its row, so the result is identical
+    /// to the serial map for any thread count.
     pub fn hash_rows(&self, m: &Matrix) -> Vec<u32> {
-        (0..m.rows).map(|i| self.hash(m.row(i))).collect()
+        if parallel::num_threads() <= 1 || m.rows * self.bits * self.dim < PAR_MIN_WORK {
+            return (0..m.rows).map(|i| self.hash(m.row(i))).collect();
+        }
+        let mut codes = vec![0u32; m.rows];
+        parallel::par_rows(&mut codes, |i0, chunk| {
+            for (local, slot) in chunk.iter_mut().enumerate() {
+                *slot = self.hash(m.row(i0 + local));
+            }
+        });
+        codes
     }
 }
 

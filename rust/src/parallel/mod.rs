@@ -1,0 +1,399 @@
+//! Scoped-thread work pool — the crate's parallel execution engine.
+//!
+//! Every hot path (blocked matmul, flash attention, k-means assignment, LSH
+//! hashing, block-diagonal HyperAttention, the serving executor) funnels its
+//! data-parallel loops through this module instead of spawning ad-hoc
+//! threads. The design is deliberately std-only:
+//!
+//! * **Fork-join over `std::thread::scope`** — helpers split an index space
+//!   (or the rows of a row-major buffer) into contiguous near-equal shards
+//!   and run one scoped worker per shard. Scoped threads may borrow from the
+//!   caller's stack, so no `Arc`/cloning is needed on the hot path, and the
+//!   join is implicit at scope exit.
+//! * **`PALLAS_THREADS`-configurable global width** — the pool width is read
+//!   once from the `PALLAS_THREADS` environment variable (falling back to
+//!   `std::thread::available_parallelism`), and can be overridden globally
+//!   with [`set_threads`] or per-call-tree with [`with_threads`] (used by the
+//!   serial-vs-parallel equivalence tests and the scaling benches).
+//! * **Determinism** — shard boundaries depend only on `(len, threads)`, each
+//!   shard's work is a pure function of its indices, and reductions merge
+//!   shard partials in shard order. Outputs are therefore reproducible for a
+//!   fixed thread count, and every helper degrades to the caller's serial
+//!   loop when the width is 1 (`threads=1` *is* the serial baseline path).
+//!
+//! The fork-join cost is a handful of thread spawns per call (~µs), which is
+//! noise against the O(n²·d) / O(n·d·k) loop bodies this module shards; a
+//! persistent queue would only matter for sub-millisecond kernels, which we
+//! deliberately leave serial via the `min_work` gates at the call sites.
+
+use std::cell::Cell;
+use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Default minimum amount of scalar work (flops / element ops) below which
+/// call sites keep their serial loop instead of forking the pool — spawn
+/// overhead dominates under this. Shared by the clustering/LSH gates so a
+/// future retuning lands everywhere at once.
+pub const DEFAULT_MIN_WORK: usize = 1 << 15;
+
+/// Global pool width. 0 = not yet initialized (resolved lazily from the
+/// `PALLAS_THREADS` env var / hardware parallelism on first use).
+static GLOBAL_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    /// Per-thread override installed by [`with_threads`] (0 = none).
+    static THREAD_OVERRIDE: Cell<usize> = Cell::new(0);
+}
+
+fn hardware_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+fn env_threads() -> usize {
+    match std::env::var("PALLAS_THREADS") {
+        Ok(v) => match v.trim().parse::<usize>() {
+            Ok(n) if n > 0 => n,
+            _ => hardware_threads(),
+        },
+        Err(_) => hardware_threads(),
+    }
+}
+
+/// Effective pool width for work issued from the current thread:
+/// [`with_threads`] override if active, else the global width
+/// (`PALLAS_THREADS` env var, else hardware parallelism). Always ≥ 1.
+pub fn num_threads() -> usize {
+    let o = THREAD_OVERRIDE.with(|c| c.get());
+    if o > 0 {
+        return o;
+    }
+    let g = GLOBAL_THREADS.load(Ordering::Relaxed);
+    if g > 0 {
+        return g;
+    }
+    let n = env_threads().max(1);
+    GLOBAL_THREADS.store(n, Ordering::Relaxed);
+    n
+}
+
+/// Set the global pool width (overrides `PALLAS_THREADS`). Clamped to ≥ 1.
+pub fn set_threads(n: usize) {
+    GLOBAL_THREADS.store(n.max(1), Ordering::Relaxed);
+}
+
+/// Run `f` with the pool width pinned to `n` on this thread's call tree.
+/// The previous width is restored afterwards (panic-safe via a drop guard),
+/// and concurrent callers on other threads are unaffected — this is the knob
+/// the serial/parallel equivalence tests and the scaling benches turn.
+pub fn with_threads<R>(n: usize, f: impl FnOnce() -> R) -> R {
+    struct Restore(usize);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            THREAD_OVERRIDE.with(|c| c.set(self.0));
+        }
+    }
+    let prev = THREAD_OVERRIDE.with(|c| c.replace(n.max(1)));
+    let _restore = Restore(prev);
+    f()
+}
+
+/// Partition `0..n` into contiguous shards of `ceil(n / parts)` items (the
+/// last may be ragged). Shard boundaries depend only on `(n, parts)`.
+pub fn split_ranges(n: usize, parts: usize) -> Vec<Range<usize>> {
+    if n == 0 {
+        return Vec::new();
+    }
+    let parts = parts.max(1).min(n);
+    let chunk = n.div_ceil(parts);
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0;
+    while start < n {
+        let end = (start + chunk).min(n);
+        out.push(start..end);
+        start = end;
+    }
+    out
+}
+
+/// Fork-join over an index space: run `f(range)` for each shard of `0..n`
+/// on the pool. `f` must only touch state that is safe to share (`&`-refs,
+/// atomics); use [`par_chunks`] when each shard owns a disjoint slice of an
+/// output buffer. With a pool width of 1 this is exactly `f(0..n)` on the
+/// caller thread — no threads are spawned.
+pub fn par_ranges<F>(n: usize, f: F)
+where
+    F: Fn(Range<usize>) + Sync,
+{
+    if n == 0 {
+        return;
+    }
+    let threads = num_threads().min(n);
+    if threads <= 1 {
+        f(0..n);
+        return;
+    }
+    let ranges = split_ranges(n, threads);
+    std::thread::scope(|s| {
+        let f = &f;
+        for r in ranges {
+            s.spawn(move || f(r));
+        }
+    });
+}
+
+/// Fork-join over the *rows* of a row-major buffer: split `data` (with
+/// `stride` elements per row) into contiguous per-shard sub-slices and run
+/// `f(first_row, shard)` on each. Because the shards are disjoint `&mut`
+/// slices, workers write results directly with no locking; this is the
+/// backbone of the row-sharded matmul, flash attention, and the clustering
+/// assignment steps. Width 1 runs `f(0, data)` inline.
+pub fn par_chunks<T, F>(data: &mut [T], stride: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert!(stride > 0, "par_chunks stride must be > 0");
+    assert_eq!(data.len() % stride, 0, "par_chunks buffer not a whole number of rows");
+    let rows = data.len() / stride;
+    if rows == 0 {
+        return;
+    }
+    let threads = num_threads().min(rows);
+    if threads <= 1 {
+        f(0, data);
+        return;
+    }
+    let chunk_rows = rows.div_ceil(threads);
+    std::thread::scope(|s| {
+        let f = &f;
+        for (ci, chunk) in data.chunks_mut(chunk_rows * stride).enumerate() {
+            s.spawn(move || f(ci * chunk_rows, chunk));
+        }
+    });
+}
+
+/// Convenience alias of [`par_chunks`] for stride-1 buffers ("one row = one
+/// element"): `f(first_index, shard)`.
+pub fn par_rows<T, F>(data: &mut [T], f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    par_chunks(data, 1, f)
+}
+
+/// [`par_chunks`] with a per-row work estimate: shard boundaries are chosen
+/// so each shard carries approximately equal total `weight`, not equal row
+/// counts. Use for triangular/ragged workloads (e.g. an upper-triangle
+/// kernel fill, where row `i` costs `n - i`) that equal-row sharding would
+/// leave load-imbalanced. Boundaries depend only on the weights and the
+/// pool width, so outputs stay deterministic for a fixed thread count.
+pub fn par_chunks_weighted<T, W, F>(data: &mut [T], stride: usize, weight: W, f: F)
+where
+    T: Send,
+    W: Fn(usize) -> usize,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert!(stride > 0, "par_chunks_weighted stride must be > 0");
+    assert_eq!(data.len() % stride, 0, "buffer not a whole number of rows");
+    let rows = data.len() / stride;
+    if rows == 0 {
+        return;
+    }
+    let threads = num_threads().min(rows);
+    if threads <= 1 {
+        f(0, data);
+        return;
+    }
+    // Greedy equal-weight boundaries over the row prefix sums.
+    let total: u64 = (0..rows).map(|i| weight(i) as u64).sum();
+    let target = (total / threads as u64).max(1);
+    let mut bounds: Vec<usize> = Vec::with_capacity(threads + 1);
+    bounds.push(0);
+    let mut acc = 0u64;
+    for i in 0..rows {
+        acc += weight(i) as u64;
+        if acc >= target && bounds.len() < threads && i + 1 < rows {
+            bounds.push(i + 1);
+            acc = 0;
+        }
+    }
+    bounds.push(rows);
+    std::thread::scope(|s| {
+        let f = &f;
+        let mut rest = data;
+        for w in bounds.windows(2) {
+            let (start, end) = (w[0], w[1]);
+            let (head, tail) = rest.split_at_mut((end - start) * stride);
+            rest = tail;
+            s.spawn(move || f(start, head));
+        }
+    });
+}
+
+/// Parallel fold over `0..n` with deterministic merge order: each shard
+/// folds its contiguous range into an accumulator produced by `init`, and
+/// the shard partials are merged left-to-right (shard order) on the caller
+/// thread. Used for the sharded dK/dV accumulators of the attention backward
+/// pass. Width 1 folds serially with no merge.
+pub fn par_reduce<R, I, F, M>(n: usize, init: I, fold: F, mut merge: M) -> R
+where
+    R: Send,
+    I: Fn() -> R + Sync,
+    F: Fn(R, Range<usize>) -> R + Sync,
+    M: FnMut(R, R) -> R,
+{
+    if n == 0 {
+        return init();
+    }
+    let threads = num_threads().min(n);
+    if threads <= 1 {
+        return fold(init(), 0..n);
+    }
+    let ranges = split_ranges(n, threads);
+    let mut parts: Vec<Option<R>> = Vec::new();
+    parts.resize_with(ranges.len(), || None);
+    std::thread::scope(|s| {
+        let init = &init;
+        let fold = &fold;
+        for (slot, r) in parts.iter_mut().zip(ranges) {
+            s.spawn(move || {
+                *slot = Some(fold(init(), r));
+            });
+        }
+    });
+    let mut iter = parts.into_iter().map(|p| p.expect("par_reduce shard missing"));
+    let first = iter.next().expect("par_reduce has at least one shard");
+    iter.fold(first, |acc, p| merge(acc, p))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn split_ranges_covers_exactly() {
+        for &(n, p) in &[(0usize, 4usize), (1, 4), (7, 3), (8, 3), (100, 7), (5, 10)] {
+            let ranges = split_ranges(n, p);
+            let mut next = 0;
+            for r in &ranges {
+                assert_eq!(r.start, next, "n={n} p={p}");
+                assert!(r.end > r.start);
+                next = r.end;
+            }
+            assert_eq!(next, n, "n={n} p={p}");
+            assert!(ranges.len() <= p.max(1));
+        }
+    }
+
+    #[test]
+    fn num_threads_positive_and_overridable() {
+        assert!(num_threads() >= 1);
+        with_threads(3, || assert_eq!(num_threads(), 3));
+        with_threads(1, || {
+            assert_eq!(num_threads(), 1);
+            with_threads(5, || assert_eq!(num_threads(), 5));
+            assert_eq!(num_threads(), 1);
+        });
+        assert!(num_threads() >= 1);
+    }
+
+    #[test]
+    fn par_ranges_visits_every_index_once() {
+        for t in [1usize, 2, 4, 7] {
+            with_threads(t, || {
+                let n = 103;
+                let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+                par_ranges(n, |r| {
+                    for i in r {
+                        hits[i].fetch_add(1, Ordering::Relaxed);
+                    }
+                });
+                assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1), "threads={t}");
+            });
+        }
+    }
+
+    #[test]
+    fn par_chunks_shards_are_disjoint_and_complete() {
+        for t in [1usize, 2, 4, 7] {
+            with_threads(t, || {
+                let rows = 29;
+                let stride = 3;
+                let mut buf = vec![0usize; rows * stride];
+                par_chunks(&mut buf, stride, |first_row, chunk| {
+                    let rows_here = chunk.len() / stride;
+                    for lr in 0..rows_here {
+                        for c in 0..stride {
+                            chunk[lr * stride + c] = (first_row + lr) * 10 + c;
+                        }
+                    }
+                });
+                for r in 0..rows {
+                    for c in 0..stride {
+                        assert_eq!(buf[r * stride + c], r * 10 + c, "threads={t}");
+                    }
+                }
+            });
+        }
+    }
+
+    #[test]
+    fn par_rows_empty_and_single() {
+        let mut empty: Vec<u32> = Vec::new();
+        par_rows(&mut empty, |_, _| panic!("must not run"));
+        let mut one = vec![0u32];
+        par_rows(&mut one, |first, chunk| {
+            assert_eq!(first, 0);
+            chunk[0] = 9;
+        });
+        assert_eq!(one[0], 9);
+    }
+
+    #[test]
+    fn par_chunks_weighted_covers_all_rows() {
+        for t in [1usize, 2, 4, 7] {
+            with_threads(t, || {
+                let rows = 61;
+                let mut buf = vec![0usize; rows];
+                // Triangular weights, like an upper-triangle kernel fill.
+                par_chunks_weighted(&mut buf, 1, |i| rows - i, |first, chunk| {
+                    for (local, slot) in chunk.iter_mut().enumerate() {
+                        *slot = first + local + 1;
+                    }
+                });
+                for (i, &v) in buf.iter().enumerate() {
+                    assert_eq!(v, i + 1, "threads={t}");
+                }
+            });
+        }
+    }
+
+    #[test]
+    fn par_reduce_sums_deterministically() {
+        let n = 1000usize;
+        let expect: u64 = (0..n as u64).sum();
+        for t in [1usize, 2, 4, 7] {
+            let got = with_threads(t, || {
+                par_reduce(
+                    n,
+                    || 0u64,
+                    |acc, r| acc + r.map(|i| i as u64).sum::<u64>(),
+                    |a, b| a + b,
+                )
+            });
+            assert_eq!(got, expect, "threads={t}");
+        }
+    }
+
+    #[test]
+    fn with_threads_restores_on_panic() {
+        let before = num_threads();
+        let result = std::panic::catch_unwind(|| {
+            with_threads(2, || panic!("boom"));
+        });
+        assert!(result.is_err());
+        assert_eq!(num_threads(), before);
+    }
+}

@@ -1,24 +1,46 @@
 //! PJRT runtime: load AOT HLO-text artifacts, compile once, execute on the
 //! request path. Python is never involved here.
 //!
-//! Pattern follows /opt/xla-example/load_hlo:
-//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
-//! `XlaComputation::from_proto` → `client.compile` → `execute`.
+//! The real implementation (behind the `pjrt` cargo feature) follows
+//! /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. [`ModelRuntime`] binds one compiled
+//! executable to the weight literals it was lowered against (params are
+//! positional, ordered by sorted name — the contract shared with
+//! `python/compile/aot.py`), so the hot path only converts the token batch.
 //!
-//! [`ModelRuntime`] binds one compiled executable to the weight literals it
-//! was lowered against (params are positional, ordered by sorted name — the
-//! contract shared with `python/compile/aot.py`), so the hot path only
-//! converts the token batch.
+//! **Default build (no `pjrt` feature):** the `xla` bindings are not part of
+//! the offline image's default dependency set, so this module compiles a
+//! pure-Rust stub with the same API. Artifact discovery
+//! ([`ArtifactRegistry::available_batches`]) works identically; loading an
+//! artifact fails with a clear "rebuild with --features pjrt" error. This
+//! keeps the default `cargo build` free of unresolvable external
+//! dependencies while preserving every call site.
 
+#[cfg(feature = "pjrt")]
 use crate::model::weights::WeightStore;
-use anyhow::{bail, Context, Result};
+#[cfg(feature = "pjrt")]
+use anyhow::Context;
+use anyhow::{bail, Result};
 use std::path::{Path, PathBuf};
 
 /// A compiled artifact plus its resident weight literals.
+#[cfg(feature = "pjrt")]
 pub struct ModelRuntime {
     client: xla::PjRtClient,
     exe: xla::PjRtLoadedExecutable,
     weight_literals: Vec<xla::Literal>,
+    /// (batch, seq) the artifact was compiled for.
+    pub batch: usize,
+    pub seq: usize,
+    pub name: String,
+}
+
+/// Stub runtime (crate built without the `pjrt` feature): same API, loads
+/// always fail with a descriptive error after the same artifact-existence
+/// pre-flight as the real path.
+#[cfg(not(feature = "pjrt"))]
+pub struct ModelRuntime {
     /// (batch, seq) the artifact was compiled for.
     pub batch: usize,
     pub seq: usize,
@@ -42,7 +64,10 @@ impl ModelRuntime {
         let weights = artifacts_dir.join("weights.bin");
         Self::load_files(&path, &weights, batch, seq)
     }
+}
 
+#[cfg(feature = "pjrt")]
+impl ModelRuntime {
     /// Load from explicit file paths.
     pub fn load_files(hlo_path: &Path, weights_path: &Path, batch: usize, seq: usize) -> Result<Self> {
         if !hlo_path.exists() {
@@ -118,8 +143,41 @@ impl ModelRuntime {
     }
 }
 
+#[cfg(not(feature = "pjrt"))]
+impl ModelRuntime {
+    /// Load from explicit file paths. The stub performs the same existence
+    /// pre-flight as the real runtime, then reports that PJRT is disabled.
+    pub fn load_files(
+        hlo_path: &Path,
+        _weights_path: &Path,
+        _batch: usize,
+        _seq: usize,
+    ) -> Result<Self> {
+        if !hlo_path.exists() {
+            bail!("artifact {} not found — run `make artifacts`", hlo_path.display());
+        }
+        bail!(
+            "PJRT runtime disabled: rebuild with `--features pjrt` (plus the vendored `xla` \
+             bindings in rust/Cargo.toml) to execute {}",
+            hlo_path.display()
+        )
+    }
+
+    /// Stub execution — unreachable in practice (loads never succeed), kept
+    /// for API parity.
+    pub fn execute(&self, _tokens: &[Vec<u32>]) -> Result<ServeOutput> {
+        bail!("PJRT runtime disabled (built without the `pjrt` feature)")
+    }
+
+    /// Number of PJRT devices (0: no PJRT in this build).
+    pub fn device_count(&self) -> usize {
+        0
+    }
+}
+
 /// Registry of compiled artifacts keyed by (variant, batch) — the launcher
 /// compiles each needed shape once and the coordinator picks by bucket.
+/// Each server worker owns its own registry (PJRT handles are not `Send`).
 pub struct ArtifactRegistry {
     dir: PathBuf,
     seq: usize,
@@ -192,5 +250,18 @@ mod tests {
         assert!(err.is_err());
         let msg = format!("{:#}", err.err().unwrap());
         assert!(msg.contains("make artifacts"), "{msg}");
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_reports_disabled_pjrt_for_present_artifact() {
+        let dir = std::env::temp_dir().join(format!("pre_stub_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("model_exact_b1_n256.hlo.txt"), "x").unwrap();
+        std::fs::write(dir.join("weights.bin"), "x").unwrap();
+        let err = ModelRuntime::load(&dir, "exact", 1, 256).err().unwrap();
+        let msg = format!("{:#}", err);
+        assert!(msg.contains("pjrt"), "{msg}");
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

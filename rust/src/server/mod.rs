@@ -1,18 +1,27 @@
 //! Thread-based serving loop (tokio substitute — see DESIGN.md).
 //!
-//! A `ScoringServer` owns the dynamic batcher and a PJRT model runtime per
-//! compiled lane bucket; clients submit requests over an mpsc channel and
-//! receive responses over per-request channels. The executor thread runs:
-//! poll batcher → pad batch to the artifact shape → execute → respond.
-//! Python is never on this path.
+//! A `ScoringServer` owns the dynamic batcher and a pool of executor
+//! workers. Clients submit requests over an mpsc channel and receive
+//! responses over per-request channels. One coordinator thread blocks on
+//! the job queue (`recv_timeout` against the batch deadline — no busy-wait
+//! polling), forms batches, and hands them to a worker pool that drains a
+//! shared batch queue; each worker owns its own [`ArtifactRegistry`] because
+//! PJRT handles are not `Send`. Python is never on this path.
+//!
+//! Worker count: `ServingConfig::executor_workers`, with 0 meaning "derive
+//! from the [`crate::parallel`] pool width" (i.e. `PALLAS_THREADS`), capped
+//! so a laptop-sized pool doesn't compile one artifact registry per core.
 
 use crate::config::ServingConfig;
 use crate::coordinator::{Batch, BatcherConfig, DynamicBatcher, Request, Response};
 use crate::metrics::LatencyStats;
+use crate::parallel;
 use crate::runtime::ArtifactRegistry;
 use anyhow::Result;
+use std::collections::HashMap;
 use std::path::Path;
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// A submitted job: the request plus the channel to answer on.
@@ -32,9 +41,30 @@ pub struct ServerStats {
     pub latency_p99_ms: f64,
     pub throughput_rps: f64,
     pub tokens_per_s: f64,
+    /// Executor workers that drained the batch queue.
+    pub workers: usize,
 }
 
-/// The scoring server: single executor thread draining an mpsc queue.
+/// Mutable counters shared between the executor workers.
+#[derive(Default)]
+struct SharedStats {
+    latency: LatencyStats,
+    completed: usize,
+    batches: usize,
+    total_lanes: usize,
+    occupied_lanes: usize,
+    scored_tokens: usize,
+}
+
+/// A batch handed to the worker pool, with the responders for its requests
+/// (aligned with `batch.requests`; `None` if a responder was lost, e.g. a
+/// duplicate request id overwrote it — the batch still executes).
+struct WorkItem {
+    batch: Batch,
+    responders: Vec<Option<Sender<Response>>>,
+}
+
+/// The scoring server: coordinator thread + executor worker pool.
 pub struct ScoringServer {
     jobs_tx: Sender<Job>,
     handle: Option<std::thread::JoinHandle<ServerStats>>,
@@ -44,9 +74,9 @@ impl ScoringServer {
     /// Start the server. `variant` picks the artifact family
     /// ("exact" | "prescored_k64" | ...).
     ///
-    /// PJRT handles are not `Send`, so the registry is constructed *inside*
-    /// the executor thread; artifact availability is pre-flighted here so
-    /// misconfiguration fails fast on the caller.
+    /// PJRT handles are not `Send`, so each worker constructs its registry
+    /// *inside* its own thread; artifact availability is pre-flighted here
+    /// so misconfiguration fails fast on the caller.
     pub fn start(cfg: ServingConfig) -> Result<ScoringServer> {
         let (jobs_tx, jobs_rx): (Sender<Job>, Receiver<Job>) = channel();
         let dir = Path::new(&cfg.artifacts_dir).to_path_buf();
@@ -58,16 +88,7 @@ impl ScoringServer {
                 dir.display()
             );
         }
-        let handle = std::thread::spawn(move || {
-            let mut registry = ArtifactRegistry::new(&dir, cfg.max_seq);
-            // Pre-compile every bucket before accepting traffic.
-            for &b in &buckets {
-                if let Err(e) = registry.get_or_load(&cfg.variant, b) {
-                    eprintln!("failed to compile artifact bucket {b}: {e:#}");
-                }
-            }
-            run_loop(cfg, registry, buckets, jobs_rx)
-        });
+        let handle = std::thread::spawn(move || run_loop(cfg, buckets, jobs_rx));
         Ok(ScoringServer { jobs_tx, handle: Some(handle) })
     }
 
@@ -87,98 +108,139 @@ impl ScoringServer {
     }
 }
 
-fn run_loop(
-    cfg: ServingConfig,
-    mut registry: ArtifactRegistry,
-    buckets: Vec<usize>,
-    jobs_rx: Receiver<Job>,
-) -> ServerStats {
+/// Resolve the executor pool width from config / the global parallel pool.
+fn worker_count(cfg: &ServingConfig) -> usize {
+    if cfg.executor_workers > 0 {
+        return cfg.executor_workers;
+    }
+    parallel::num_threads().clamp(1, 8)
+}
+
+fn run_loop(cfg: ServingConfig, buckets: Vec<usize>, jobs_rx: Receiver<Job>) -> ServerStats {
+    let deadline = Duration::from_secs_f64(cfg.batch_deadline_ms / 1e3);
     let mut batcher = DynamicBatcher::new(BatcherConfig {
-        buckets,
+        buckets: buckets.clone(),
         max_batch_tokens: cfg.max_batch_tokens,
         max_seq: cfg.max_seq,
-        deadline: Duration::from_secs_f64(cfg.batch_deadline_ms / 1e3),
+        deadline,
     });
-    let mut responders: std::collections::HashMap<u64, Sender<Response>> = Default::default();
-    let mut latency = LatencyStats::default();
-    let mut completed = 0usize;
-    let mut batches = 0usize;
-    let mut total_lanes = 0usize;
-    let mut occupied = 0usize;
-    let mut scored_tokens = 0usize;
+    let mut responders: HashMap<u64, Sender<Response>> = Default::default();
+    let shared = Mutex::new(SharedStats::default());
+    let workers = worker_count(&cfg);
+    let (work_tx, work_rx) = channel::<WorkItem>();
+    let work_rx = Arc::new(Mutex::new(work_rx));
     let started = Instant::now();
-    let mut open = true;
+    // The coordinator blocks on `recv_timeout` instead of sleep-polling:
+    // with work queued it sleeps exactly to the oldest request's flush
+    // deadline; idle it parks until the next submission (bounded so the
+    // shutdown drain still makes progress).
+    let idle_wait = Duration::from_millis(50);
+    let min_wait = Duration::from_micros(50);
 
-    while open || batcher.queue_len() > 0 {
-        // Admit pending jobs (non-blocking drain, small wait when idle).
-        loop {
-            match jobs_rx.try_recv() {
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            let work_rx = Arc::clone(&work_rx);
+            let shared = &shared;
+            let cfg = &cfg;
+            let buckets = &buckets;
+            s.spawn(move || {
+                // Per-worker registry (PJRT handles are not Send). Every
+                // bucket is pre-compiled before the worker takes traffic.
+                let mut registry =
+                    ArtifactRegistry::new(Path::new(&cfg.artifacts_dir), cfg.max_seq);
+                for &b in buckets {
+                    if let Err(e) = registry.get_or_load(&cfg.variant, b) {
+                        eprintln!("failed to compile artifact bucket {b}: {e:#}");
+                    }
+                }
+                loop {
+                    // Hold the lock only for the dequeue, never the execute.
+                    let item = {
+                        let rx = work_rx.lock().expect("work queue poisoned");
+                        rx.recv()
+                    };
+                    match item {
+                        Ok(item) => execute_batch(cfg, &mut registry, item, shared),
+                        Err(_) => break, // queue closed: drain complete
+                    }
+                }
+            });
+        }
+
+        let mut open = true;
+        while open || batcher.queue_len() > 0 {
+            // Admit jobs: block until the next flush deadline (or a new
+            // submission, whichever first), then drain whatever else is
+            // already queued.
+            let wait = batcher
+                .time_to_deadline(Instant::now())
+                .map(|d| d.clamp(min_wait, idle_wait))
+                .unwrap_or(idle_wait);
+            match jobs_rx.recv_timeout(wait) {
                 Ok(job) => {
                     responders.insert(job.request.id, job.respond);
                     batcher.push(job.request);
+                    loop {
+                        match jobs_rx.try_recv() {
+                            Ok(job) => {
+                                responders.insert(job.request.id, job.respond);
+                                batcher.push(job.request);
+                            }
+                            Err(std::sync::mpsc::TryRecvError::Empty) => break,
+                            Err(std::sync::mpsc::TryRecvError::Disconnected) => {
+                                open = false;
+                                break;
+                            }
+                        }
+                    }
                 }
-                Err(std::sync::mpsc::TryRecvError::Empty) => break,
-                Err(std::sync::mpsc::TryRecvError::Disconnected) => {
-                    open = false;
-                    break;
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => open = false,
+            }
+            // Ship every batch the policy allows right now.
+            while let Some(batch) = batcher.poll(Instant::now()) {
+                ship(batch, &mut responders, &work_tx);
+            }
+            if !open {
+                for batch in batcher.drain_all() {
+                    ship(batch, &mut responders, &work_tx);
                 }
             }
         }
-        let batch = match batcher.poll(Instant::now()) {
-            Some(b) => b,
-            None => {
-                if !open && batcher.queue_len() > 0 {
-                    // Shutdown: flush remainder.
-                    match batcher.drain_all().into_iter().next() {
-                        Some(b) => b,
-                        None => continue,
-                    }
-                } else if open {
-                    std::thread::sleep(Duration::from_micros(200));
-                    continue;
-                } else {
-                    break;
-                }
-            }
-        };
-        execute_batch(
-            &cfg,
-            &mut registry,
-            batch,
-            &mut responders,
-            &mut latency,
-            &mut completed,
-            &mut scored_tokens,
-        );
-        batches += 1;
-    }
+        // Close the batch queue: workers finish in-flight batches and exit;
+        // the scope joins them before we assemble the final stats.
+        drop(work_tx);
+    });
 
-    // total_lanes/occupied were accumulated inside execute_batch via
-    // closure-free design; recompute occupancy from counters we kept there.
-    total_lanes = total_lanes.max(1);
-    occupied = occupied.max(completed);
+    let stats = shared.into_inner().expect("stats poisoned");
     let elapsed = started.elapsed().as_secs_f64().max(1e-9);
     ServerStats {
-        completed,
-        batches,
-        total_lanes,
-        occupied_lanes: occupied,
-        latency_p50_ms: latency.percentile(50.0),
-        latency_p99_ms: latency.percentile(99.0),
-        throughput_rps: completed as f64 / elapsed,
-        tokens_per_s: scored_tokens as f64 / elapsed,
+        completed: stats.completed,
+        batches: stats.batches,
+        total_lanes: stats.total_lanes.max(1),
+        occupied_lanes: stats.occupied_lanes,
+        latency_p50_ms: stats.latency.percentile(50.0),
+        latency_p99_ms: stats.latency.percentile(99.0),
+        throughput_rps: stats.completed as f64 / elapsed,
+        tokens_per_s: stats.scored_tokens as f64 / elapsed,
+        workers,
     }
+}
+
+/// Pair a formed batch with its responders and enqueue it for the pool.
+fn ship(batch: Batch, responders: &mut HashMap<u64, Sender<Response>>, work_tx: &Sender<WorkItem>) {
+    let txs: Vec<Option<Sender<Response>>> =
+        batch.requests.iter().map(|req| responders.remove(&req.id)).collect();
+    let _ = work_tx.send(WorkItem { batch, responders: txs });
 }
 
 fn execute_batch(
     cfg: &ServingConfig,
     registry: &mut ArtifactRegistry,
-    batch: Batch,
-    responders: &mut std::collections::HashMap<u64, Sender<Response>>,
-    latency: &mut LatencyStats,
-    completed: &mut usize,
-    scored_tokens: &mut usize,
+    item: WorkItem,
+    shared: &Mutex<SharedStats>,
 ) {
+    let WorkItem { batch, responders } = item;
     let lanes = batch.lanes;
     let rt = match registry.get_or_load(&cfg.variant, lanes) {
         Ok(rt) => rt,
@@ -203,14 +265,18 @@ fn execute_batch(
     }
     match rt.execute(&tokens) {
         Ok(out) => {
+            let mut stats = shared.lock().expect("stats poisoned");
+            stats.batches += 1;
+            stats.total_lanes += lanes;
+            stats.occupied_lanes += batch.requests.len();
             for (i, req) in batch.requests.iter().enumerate() {
                 let valid = lens[i].saturating_sub(1);
                 let nll = out.nll[i][..valid].to_vec();
                 let lat = req.arrived.elapsed();
-                latency.record(lat);
-                *completed += 1;
-                *scored_tokens += valid;
-                if let Some(tx) = responders.remove(&req.id) {
+                stats.latency.record(lat);
+                stats.completed += 1;
+                stats.scored_tokens += valid;
+                if let Some(tx) = &responders[i] {
                     let _ = tx.send(Response {
                         id: req.id,
                         nll,
@@ -228,7 +294,31 @@ fn execute_batch(
 
 #[cfg(test)]
 mod tests {
+    use super::*;
+    use crate::config::ServingConfig;
+
     // End-to-end server tests require built artifacts and live in
     // rust/tests/integration_server.rs; unit coverage for the pieces lives
     // in coordinator::*.
+
+    #[test]
+    fn worker_count_respects_config_and_pool() {
+        let pinned = ServingConfig { executor_workers: 3, ..Default::default() };
+        assert_eq!(worker_count(&pinned), 3);
+        let auto = ServingConfig { executor_workers: 0, ..Default::default() };
+        let derived = crate::parallel::with_threads(5, || worker_count(&auto));
+        assert_eq!(derived, 5);
+        let capped = crate::parallel::with_threads(64, || worker_count(&auto));
+        assert_eq!(capped, 8);
+    }
+
+    #[test]
+    fn start_fails_fast_without_artifacts() {
+        let cfg = ServingConfig {
+            artifacts_dir: "/nonexistent-artifacts".into(),
+            ..Default::default()
+        };
+        let err = ScoringServer::start(cfg).err().expect("must fail");
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
 }

@@ -11,6 +11,10 @@ use prescored::runtime::ModelRuntime;
 use std::path::Path;
 
 fn artifacts_dir() -> Option<&'static Path> {
+    if !cfg!(feature = "pjrt") {
+        eprintln!("skipping: built without the pjrt feature (stub runtime)");
+        return None;
+    }
     let dir = Path::new("artifacts");
     if dir.join("weights.bin").exists() && dir.join("model_exact_b1_n256.hlo.txt").exists() {
         Some(dir)

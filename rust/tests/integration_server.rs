@@ -7,6 +7,10 @@ use prescored::server::ScoringServer;
 use std::path::Path;
 
 fn have_artifacts() -> bool {
+    if !cfg!(feature = "pjrt") {
+        eprintln!("skipping: built without the pjrt feature (stub runtime)");
+        return false;
+    }
     let ok = Path::new("artifacts/model_exact_b4_n256.hlo.txt").exists();
     if !ok {
         eprintln!("skipping: artifacts not built");

@@ -1,0 +1,171 @@
+//! Parallel ≡ serial equivalence properties.
+//!
+//! Every pool-sharded hot path must match its `threads = 1` baseline across
+//! random shapes and thread counts (1, 2, 4, 7): matmul / matmul_nt within
+//! register-tile reassociation tolerance, flash/exact attention and the
+//! k-means assignment bit-identically, and the full pre-scored pipeline
+//! bit-identically (per-query RNG streams make residual sampling independent
+//! of the thread count).
+
+use prescored::attention::exact::{exact_attention, flash_attention};
+use prescored::attention::{prescored_hyper_attention, AttentionInputs, PreScoredConfig};
+use prescored::clustering::kmeans;
+use prescored::linalg::ops::{matmul, matmul_nt};
+use prescored::linalg::Matrix;
+use prescored::parallel::with_threads;
+use prescored::prescore::PreScoreConfig;
+use prescored::util::proptest_lite::{run_property_noshrink, Config};
+use prescored::util::rng::Rng;
+
+const THREAD_COUNTS: [usize; 4] = [1, 2, 4, 7];
+
+/// Max elementwise |a - b| normalized by the largest magnitude seen.
+fn max_rel_diff(a: &Matrix, b: &Matrix) -> f32 {
+    let mut max_abs = 0.0f32;
+    let mut max_diff = 0.0f32;
+    for (x, y) in a.data.iter().zip(&b.data) {
+        max_abs = max_abs.max(x.abs()).max(y.abs());
+        max_diff = max_diff.max((x - y).abs());
+    }
+    if max_abs > 0.0 {
+        max_diff / max_abs
+    } else {
+        max_diff
+    }
+}
+
+#[test]
+fn parallel_matmul_equals_serial_across_shapes_and_threads() {
+    run_property_noshrink(
+        "parallel-matmul",
+        Config { cases: 12, ..Default::default() },
+        |r| (r.range(1, 90), r.range(1, 90), r.range(1, 90), r.next_u64()),
+        |&(n, k, m, seed)| {
+            let mut rng = Rng::new(seed);
+            let a = Matrix::randn(n, k, 1.0, &mut rng);
+            let b = Matrix::randn(k, m, 1.0, &mut rng);
+            let base = with_threads(1, || matmul(&a, &b));
+            for &t in &THREAD_COUNTS[1..] {
+                let par = with_threads(t, || matmul(&a, &b));
+                let err = max_rel_diff(&base, &par);
+                if err > 1e-4 {
+                    return Err(format!("matmul {n}x{k}x{m} threads={t} rel diff {err}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn parallel_matmul_nt_equals_serial_across_shapes_and_threads() {
+    run_property_noshrink(
+        "parallel-matmul-nt",
+        Config { cases: 12, ..Default::default() },
+        |r| (r.range(1, 90), r.range(1, 90), r.range(1, 64), r.next_u64()),
+        |&(n, m, d, seed)| {
+            let mut rng = Rng::new(seed);
+            let a = Matrix::randn(n, d, 1.0, &mut rng);
+            let b = Matrix::randn(m, d, 1.0, &mut rng);
+            let base = with_threads(1, || matmul_nt(&a, &b));
+            for &t in &THREAD_COUNTS[1..] {
+                let par = with_threads(t, || matmul_nt(&a, &b));
+                let err = max_rel_diff(&base, &par);
+                if err > 1e-4 {
+                    return Err(format!("matmul_nt {n}x{m} d={d} threads={t} rel diff {err}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn parallel_attention_bitwise_equals_serial() {
+    run_property_noshrink(
+        "parallel-attention",
+        Config { cases: 10, ..Default::default() },
+        |r| (r.range(1, 160), r.range(2, 24), r.bool(0.5), r.next_u64()),
+        |&(n, d, causal, seed)| {
+            let mut rng = Rng::new(seed);
+            let q = Matrix::randn(n, d, 1.0, &mut rng);
+            let k = Matrix::randn(n, d, 1.0, &mut rng);
+            let v = Matrix::randn(n, d, 1.0, &mut rng);
+            let inp = AttentionInputs::new(&q, &k, &v).causal(causal);
+            let flash1 = with_threads(1, || flash_attention(&inp));
+            let exact1 = with_threads(1, || exact_attention(&inp));
+            for &t in &THREAD_COUNTS[1..] {
+                let flash_t = with_threads(t, || flash_attention(&inp));
+                let exact_t = with_threads(t, || exact_attention(&inp));
+                if flash1.data != flash_t.data {
+                    return Err(format!("flash n={n} d={d} causal={causal} threads={t}"));
+                }
+                if exact1.data != exact_t.data {
+                    return Err(format!("exact n={n} d={d} causal={causal} threads={t}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn parallel_kmeans_assignment_bitwise_equals_serial() {
+    run_property_noshrink(
+        "parallel-kmeans",
+        Config { cases: 8, ..Default::default() },
+        |r| (r.range(20, 400), r.range(2, 12), r.range(2, 10), r.next_u64()),
+        |&(n, d, k, seed)| {
+            let mut rng = Rng::new(seed);
+            let data = Matrix::randn(n, d, 1.0, &mut rng);
+            let run = |t: usize| {
+                with_threads(t, || {
+                    let mut kr = Rng::new(seed ^ 0xabc);
+                    kmeans(&data, k, 8, &mut kr)
+                })
+            };
+            let base = run(1);
+            for &t in &THREAD_COUNTS[1..] {
+                let c = run(t);
+                if base.assignment != c.assignment {
+                    return Err(format!("assignment n={n} d={d} k={k} threads={t}"));
+                }
+                if base.centroids.data != c.centroids.data {
+                    return Err(format!("centroids n={n} d={d} k={k} threads={t}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn parallel_prescored_pipeline_bitwise_equals_serial() {
+    run_property_noshrink(
+        "parallel-prescored",
+        Config { cases: 6, ..Default::default() },
+        |r| (r.range(64, 320), r.range(4, 17), r.bool(0.5), r.next_u64()),
+        |&(n, d, causal, seed)| {
+            let mut rng = Rng::new(seed);
+            let q = Matrix::randn(n, d, 1.0, &mut rng);
+            let k = Matrix::randn(n, d, 1.0, &mut rng);
+            let v = Matrix::randn(n, d, 1.0, &mut rng);
+            let inp = AttentionInputs::new(&q, &k, &v).causal(causal);
+            let cfg = PreScoredConfig {
+                prescore: PreScoreConfig { top_k: n / 2, seed: seed ^ 0x51, ..Default::default() },
+                ..Default::default()
+            };
+            let base = with_threads(1, || prescored_hyper_attention(&inp, &cfg));
+            for &t in &THREAD_COUNTS[1..] {
+                let par = with_threads(t, || prescored_hyper_attention(&inp, &cfg));
+                if base.0.data != par.0.data {
+                    return Err(format!("prescored n={n} d={d} causal={causal} threads={t}"));
+                }
+                if base.1.selected != par.1.selected {
+                    return Err(format!("selection n={n} d={d} threads={t}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,183 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! The build image has no crates.io registry, so this path dependency
+//! provides the exact subset the workspace uses: [`Error`] (a context-chain
+//! error), [`Result`], the [`anyhow!`] / [`bail!`] macros, and the
+//! [`Context`] extension trait for `Result` and `Option`. Semantics mirror
+//! real `anyhow` where it matters here:
+//!
+//! * `Display` shows the outermost message; the alternate form (`{:#}`)
+//!   shows the whole chain joined by `": "`, which is what the launcher and
+//!   server log lines rely on.
+//! * Any `std::error::Error` converts into [`Error`] via `?`, capturing its
+//!   `source()` chain.
+
+use std::fmt;
+
+/// A context-chain error: `chain[0]` is the outermost (most recent) context,
+/// the last element is the root cause.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a root message.
+    pub fn new(msg: String) -> Error {
+        Error { chain: vec![msg] }
+    }
+
+    /// Alias of [`Error::new`] taking anything displayable (parity with
+    /// `anyhow::Error::msg`).
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error::new(m.to_string())
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context_msg(mut self, msg: String) -> Error {
+        self.chain.insert(0, msg);
+        self
+    }
+
+    /// The messages from outermost context to root cause.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    /// The root cause message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(|s| s.as_str()).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `Result` defaulting to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from format arguments.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::new(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from format arguments.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Extension trait adding `context` / `with_context` to `Result` and
+/// `Option`, mirroring `anyhow::Context`.
+pub trait Context<T> {
+    /// Wrap the error (or `None`) with a context message.
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    /// Wrap with a lazily-evaluated context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| e.into().context_msg(ctx.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context_msg(f().to_string()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::new(ctx.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::new(f().to_string()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing thing")
+    }
+
+    #[test]
+    fn display_outermost_alternate_chain() {
+        let e: Error = anyhow!("root {}", 7);
+        let e = e.context_msg("outer".into());
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: root 7");
+        assert_eq!(format!("{e:?}"), "outer: root 7");
+    }
+
+    #[test]
+    fn bail_and_question_mark() {
+        fn inner() -> Result<()> {
+            bail!("nope: {}", 42);
+        }
+        fn outer() -> Result<()> {
+            let r: std::result::Result<(), std::io::Error> = Err(io_err());
+            r.context("while reading")?;
+            Ok(())
+        }
+        assert_eq!(format!("{:#}", inner().unwrap_err()), "nope: 42");
+        assert_eq!(format!("{:#}", outer().unwrap_err()), "while reading: missing thing");
+    }
+
+    #[test]
+    fn context_on_option_and_results() {
+        let none: Option<u32> = None;
+        assert_eq!(format!("{}", none.context("empty").unwrap_err()), "empty");
+        let ok: Option<u32> = Some(5);
+        assert_eq!(ok.context("unused").unwrap(), 5);
+        let r: std::result::Result<u32, std::io::Error> = Err(io_err());
+        let e = r.with_context(|| format!("ctx {}", 1)).unwrap_err();
+        assert_eq!(format!("{e:#}"), "ctx 1: missing thing");
+    }
+
+    #[test]
+    fn error_chains_compose() {
+        fn level1() -> Result<()> {
+            bail!("root cause");
+        }
+        fn level2() -> Result<()> {
+            level1().context("level2")?;
+            Ok(())
+        }
+        let e = level2().unwrap_err();
+        assert_eq!(e.root_cause(), "root cause");
+        assert_eq!(e.chain().collect::<Vec<_>>(), vec!["level2", "root cause"]);
+    }
+}
