@@ -6,14 +6,13 @@
 //! at long n (speedup grows with n); pre-scored variants track plain
 //! HyperAttention with a small overhead gap (the O(n·d) pre-scoring cost),
 //! with Lev+Hyper scaling best among the pre-scored ones.
+//!
+//! The kernel sweep is a list of declarative [`AttentionSpec`] strings —
+//! adding a method to the figure means adding a spec, not a match arm.
 
 use prescored::attention::backward::{exact_attention_backward, sparse_attention_backward};
-use prescored::attention::{
-    flash_attention, hyper_attention, prescored_hyper_attention, AttentionInputs, Coupling,
-    HyperConfig, PreScoredConfig,
-};
+use prescored::attention::{flash_attention, AttentionInputs, AttentionSpec};
 use prescored::linalg::Matrix;
-use prescored::prescore::{Method, PreScoreConfig};
 use prescored::util::bench::{black_box, f, Bencher, Table};
 use prescored::util::rng::Rng;
 
@@ -26,13 +25,19 @@ fn qkv(n: usize, d: usize, seed: u64) -> (Matrix, Matrix, Matrix) {
     )
 }
 
-fn prescored_cfg(method: Method, n: usize) -> PreScoredConfig {
-    PreScoredConfig {
-        prescore: PreScoreConfig { method, top_k: n / 4, max_iters: 3, ..Default::default() },
-        hyper: HyperConfig { block_size: 64, sample_size: 16, ..Default::default() },
-        fallback_delta: 0.0,
-        coupling: Coupling::Glm3Corrected,
-    }
+/// The Figure 1 kernel sweep at sequence length n (top_k = n/4, 3 Lloyd
+/// iterations — the paper's speed-benchmark settings).
+fn kernel_specs(n: usize) -> Vec<(&'static str, AttentionSpec)> {
+    let parse = |s: &str| AttentionSpec::parse(s).unwrap();
+    vec![
+        ("hyper", parse("hyper:sample=16")),
+        ("lev+hyper", parse(&format!("prescored:leverage,top_k={},iters=3,sample=16", n / 4))),
+        ("kmeans+hyper", parse(&format!("prescored:kmeans,top_k={},iters=3,sample=16", n / 4))),
+        (
+            "kmedian+hyper",
+            parse(&format!("prescored:kmedian,top_k={},iters=3,sample=16", n / 4)),
+        ),
+    ]
 }
 
 fn main() {
@@ -40,48 +45,32 @@ fn main() {
     let sizes = [512usize, 1024, 2048, 4096];
     let b = Bencher { min_samples: 3, max_samples: 6, target_time: 2.0, warmup: 1 };
 
-    let mut fwd = Table::new(
-        "Figure 1a — forward speedup over FlashAttention (×)",
-        &["n", "hyper", "lev+hyper", "kmeans+hyper", "kmedian+hyper"],
-    );
+    // Column headers follow the spec list, so adding a kernel to the sweep
+    // extends the tables automatically.
+    let mut headers = vec!["n"];
+    let spec_names: Vec<&'static str> =
+        kernel_specs(sizes[0]).into_iter().map(|(name, _)| name).collect();
+    headers.extend(&spec_names);
+    let mut fwd =
+        Table::new("Figure 1a — forward speedup over FlashAttention (×)", &headers);
     let mut bwd = Table::new(
         "Figure 1b — forward+backward speedup over FlashAttention (×)",
-        &["n", "hyper", "lev+hyper", "kmeans+hyper", "kmedian+hyper"],
+        &headers,
     );
 
     for &n in &sizes {
         let (q, k, v) = qkv(n, d, n as u64);
         let inp = AttentionInputs::new(&q, &k, &v);
-        let hyper_cfg = HyperConfig { block_size: 64, sample_size: 16, ..Default::default() };
+        let backends: Vec<_> =
+            kernel_specs(n).into_iter().map(|(name, spec)| (name, spec.build())).collect();
 
         let t_flash = b.time("flash", || black_box(flash_attention(&inp))).median();
-        let t_hyper =
-            b.time("hyper", || black_box(hyper_attention(&inp, &hyper_cfg, None))).median();
-        let t_lev = b
-            .time("lev", || {
-                black_box(prescored_hyper_attention(
-                    &inp,
-                    &prescored_cfg(Method::Leverage { exact: false }, n),
-                ))
-            })
-            .median();
-        let t_km = b
-            .time("kmeans", || {
-                black_box(prescored_hyper_attention(&inp, &prescored_cfg(Method::KMeans, n)))
-            })
-            .median();
-        let t_kmed = b
-            .time("kmedian", || {
-                black_box(prescored_hyper_attention(&inp, &prescored_cfg(Method::KMedian, n)))
-            })
-            .median();
-        fwd.row(vec![
-            n.to_string(),
-            f(t_flash / t_hyper, 2),
-            f(t_flash / t_lev, 2),
-            f(t_flash / t_km, 2),
-            f(t_flash / t_kmed, 2),
-        ]);
+        let mut row = vec![n.to_string()];
+        for (name, backend) in &backends {
+            let t = b.time(name, || black_box(backend.forward(&inp))).median();
+            row.push(f(t_flash / t, 2));
+        }
+        fwd.row(row);
 
         // Forward+backward: flash fwd + exact backward vs hyper fwd +
         // sparse backward over the blockwise support (the "standard
@@ -99,28 +88,18 @@ fn main() {
                 black_box(o)
             })
             .median();
-        let fb = |fwd_fn: &dyn Fn() -> Matrix| -> f64 {
-            b.time("x-fb", || {
-                let o = fwd_fn();
-                black_box(sparse_attention_backward(&inp, &dout, &support));
-                black_box(o)
-            })
-            .median()
-        };
-        let t_hyper_fb = fb(&|| hyper_attention(&inp, &hyper_cfg, None));
-        let t_lev_fb = fb(&|| {
-            prescored_hyper_attention(&inp, &prescored_cfg(Method::Leverage { exact: false }, n)).0
-        });
-        let t_km_fb = fb(&|| prescored_hyper_attention(&inp, &prescored_cfg(Method::KMeans, n)).0);
-        let t_kmed_fb =
-            fb(&|| prescored_hyper_attention(&inp, &prescored_cfg(Method::KMedian, n)).0);
-        bwd.row(vec![
-            n.to_string(),
-            f(t_flash_fb / t_hyper_fb, 2),
-            f(t_flash_fb / t_lev_fb, 2),
-            f(t_flash_fb / t_km_fb, 2),
-            f(t_flash_fb / t_kmed_fb, 2),
-        ]);
+        let mut row = vec![n.to_string()];
+        for (name, backend) in &backends {
+            let t = b
+                .time(name, || {
+                    let o = backend.forward(&inp).out;
+                    black_box(sparse_attention_backward(&inp, &dout, &support));
+                    black_box(o)
+                })
+                .median();
+            row.push(f(t_flash_fb / t, 2));
+        }
+        bwd.row(row);
     }
     fwd.print();
     bwd.print();

@@ -9,7 +9,7 @@
 //! GLM3 coupling; K-means ≼ K-median ≼ Leverage at small k.
 
 use prescored::attention::Coupling;
-use prescored::exp::{eval_docs, ppl_over, prescored_mode};
+use prescored::exp::{eval_docs, ppl_over, prescored_spec};
 use prescored::model::{Transformer, TransformerConfig, WeightStore};
 use prescored::prescore::Method;
 use prescored::util::bench::{f, Table};
@@ -40,9 +40,9 @@ fn main() {
         );
         for &sample in &[16usize, 0] {
             for &k in &top_ks {
-                let mode = prescored_mode(method, k, sample, Coupling::Glm3Corrected, true);
-                let ppl = ppl_over(&model, &mode, &mixed);
-                let ppl_star = ppl_over(&model, &mode, &long);
+                let spec = prescored_spec(method, k, sample, Coupling::Glm3Corrected, true);
+                let ppl = ppl_over(&model, &spec, &mixed);
+                let ppl_star = ppl_over(&model, &spec, &long);
                 t.row(vec![k.to_string(), sample.to_string(), f(ppl, 3), f(ppl_star, 3)]);
             }
         }

@@ -6,7 +6,7 @@
 //! shows the unstable / U-shaped curve; GLM3 is stable and ~monotone.
 
 use prescored::attention::Coupling;
-use prescored::exp::{eval_docs, ppl_over, prescored_mode};
+use prescored::exp::{eval_docs, ppl_over, prescored_spec};
 use prescored::model::{Transformer, TransformerConfig, WeightStore};
 use prescored::prescore::Method;
 use prescored::util::bench::{f, Table};
@@ -30,12 +30,12 @@ fn main() {
     for &k in &[8usize, 32, 64, 128, 192] {
         let glm2 = ppl_over(
             &model,
-            &prescored_mode(Method::KMeans, k, 16, Coupling::Glm2Artifact, true),
+            &prescored_spec(Method::KMeans, k, 16, Coupling::Glm2Artifact, true),
             &docs,
         );
         let glm3 = ppl_over(
             &model,
-            &prescored_mode(Method::KMeans, k, 16, Coupling::Glm3Corrected, true),
+            &prescored_spec(Method::KMeans, k, 16, Coupling::Glm3Corrected, true),
             &docs,
         );
         t.row(vec![k.to_string(), f(glm2, 3), f(glm3, 3)]);

@@ -7,9 +7,9 @@
 //! reference. Shape to reproduce: exact < prescored+opt < prescored
 //! < hyper+opt < hyper.
 
-use prescored::attention::Coupling;
-use prescored::exp::{eval_docs, hyper_mode, ppl_over, prescored_mode};
-use prescored::model::{AttnMode, Transformer, TransformerConfig, WeightStore};
+use prescored::attention::{AttentionSpec, Coupling};
+use prescored::exp::{eval_docs, hyper_spec, ppl_over, prescored_spec};
+use prescored::model::{Transformer, TransformerConfig, WeightStore};
 use prescored::prescore::Method;
 use prescored::util::bench::{f, Table};
 use std::path::Path;
@@ -26,21 +26,23 @@ fn main() {
     let docs = eval_docs(512, 256, 4, true, 20_000);
     let budget = 64; // retained keys for the pre-scored rows
 
-    let rows: Vec<(&str, bool, bool, AttnMode)> = vec![
-        ("FlashAttention", false, false, AttnMode::Flash),
-        ("HyperAttention", false, false, hyper_mode(64, false)),
-        ("HyperAttention", false, true, hyper_mode(64, true)),
+    // Kernel sweep: each row is a declarative spec — no hand-written match
+    // arms; add rows by adding specs.
+    let rows: Vec<(&str, bool, bool, AttentionSpec)> = vec![
+        ("FlashAttention", false, false, AttentionSpec::parse("flash").unwrap()),
+        ("HyperAttention", false, false, hyper_spec(64, false)),
+        ("HyperAttention", false, true, hyper_spec(64, true)),
         (
             "K-means+Hyper",
             true,
             false,
-            prescored_mode(Method::KMeans, budget, 16, Coupling::Glm3Corrected, false),
+            prescored_spec(Method::KMeans, budget, 16, Coupling::Glm3Corrected, false),
         ),
         (
             "K-means+Hyper",
             true,
             true,
-            prescored_mode(Method::KMeans, budget, 16, Coupling::Glm3Corrected, true),
+            prescored_spec(Method::KMeans, budget, 16, Coupling::Glm3Corrected, true),
         ),
     ];
 
@@ -48,8 +50,8 @@ fn main() {
         "Table 1 — pre-scoring vs blockwise optimization (PPL, lower is better)",
         &["Method", "Pre-score", "Blockwise Opt.", "PPL"],
     );
-    for (name, ps, bw, mode) in rows {
-        let ppl = ppl_over(&model, &mode, &docs);
+    for (name, ps, bw, spec) in rows {
+        let ppl = ppl_over(&model, &spec, &docs);
         t.row(vec![name.into(), ps.to_string(), bw.to_string(), f(ppl, 3)]);
     }
     t.print();

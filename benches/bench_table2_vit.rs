@@ -5,12 +5,20 @@
 //! Paper shape: accuracy increases monotonically with num_sample toward the
 //! base model; K-means selection beats leverage-based selection at the same
 //! key budget; the ℓ2-norm baseline collapses.
+//!
+//! Every configuration is a declarative [`AttentionSpec`] string — the grid
+//! is a list of specs, not hand-written match arms.
 
+use prescored::attention::AttentionSpec;
 use prescored::data::images::ImageConfig;
 use prescored::exp::{vit_accuracy, vit_eval_data};
-use prescored::model::{Vit, VitAttnMode, VitConfig, WeightStore};
+use prescored::model::{Vit, VitConfig, WeightStore};
 use prescored::util::bench::{f, Table};
 use std::path::Path;
+
+fn spec(s: &str) -> AttentionSpec {
+    AttentionSpec::parse(s).unwrap()
+}
 
 fn main() {
     let weights = Path::new("artifacts/vit_weights.bin");
@@ -24,7 +32,7 @@ fn main() {
     let img_cfg = ImageConfig::default();
     let data = vit_eval_data(&img_cfg, 300, 77);
 
-    let base = vit_accuracy(&vit, &data, &VitAttnMode::Exact);
+    let base = vit_accuracy(&vit, &data, &spec("exact"));
     let mut t2 = Table::new(
         "Table 2 — zero-shot ViT substitution, K-means pre-scoring (top-1 acc %)",
         &["Configuration", "Acc."],
@@ -36,7 +44,7 @@ fn main() {
         let acc = vit_accuracy(
             &vit,
             &data,
-            &VitAttnMode::KMeansSampled { num_clusters: c, num_samples: s, seed: 3 },
+            &spec(&format!("restricted:balanced,clusters={c},samples={s},seed=3")),
         );
         t2.row(vec![format!("num_cluster={c}, num_sample={s}"), f(acc * 100.0, 2)]);
     }
@@ -48,18 +56,16 @@ fn main() {
     );
     t6.row(vec!["softmax (base)".into(), f(base * 100.0, 2)]);
     for k in [8usize, 16, 32] {
-        let lev = vit_accuracy(&vit, &data, &VitAttnMode::LeverageTopK { k, exact: true });
+        let lev =
+            vit_accuracy(&vit, &data, &spec(&format!("restricted:leverage-exact,top_k={k}")));
         t6.row(vec![format!("LevAttn, top-{k}"), f(lev * 100.0, 2)]);
-        let l2 = vit_accuracy(&vit, &data, &VitAttnMode::L2NormTopK { k });
+        let l2 = vit_accuracy(&vit, &data, &spec(&format!("restricted:l2norm,top_k={k}")));
         t6.row(vec![format!("ℓ2 norm, top-{k}"), f(l2 * 100.0, 2)]);
     }
     // the key head-to-head at the paper's headline budget
-    let km32 = vit_accuracy(
-        &vit,
-        &data,
-        &VitAttnMode::KMeansSampled { num_clusters: 4, num_samples: 32, seed: 3 },
-    );
-    let lev32 = vit_accuracy(&vit, &data, &VitAttnMode::LeverageTopK { k: 32, exact: true });
+    let km32 =
+        vit_accuracy(&vit, &data, &spec("restricted:balanced,clusters=4,samples=32,seed=3"));
+    let lev32 = vit_accuracy(&vit, &data, &spec("restricted:leverage-exact,top_k=32"));
     t6.print();
     println!(
         "\nhead-to-head @ budget 32: kmeans {:.2}% vs leverage {:.2}%  (paper: 84.46% vs 77.17%)",

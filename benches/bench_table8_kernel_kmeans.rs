@@ -2,7 +2,7 @@
 //! (GLM2-era ablation; run here under both couplings for completeness).
 
 use prescored::attention::Coupling;
-use prescored::exp::{eval_docs, ppl_over, prescored_mode};
+use prescored::exp::{eval_docs, ppl_over, prescored_spec};
 use prescored::model::{Transformer, TransformerConfig, WeightStore};
 use prescored::prescore::Method;
 use prescored::util::bench::{f, Table};
@@ -26,9 +26,9 @@ fn main() {
     );
     for &k in &[8usize, 32, 64, 128] {
         let m = Method::GaussianKMeans { gamma: -1.0 };
-        let glm2 = ppl_over(&model, &prescored_mode(m, k, 16, Coupling::Glm2Artifact, true), &docs);
-        let glm3 = ppl_over(&model, &prescored_mode(m, k, 16, Coupling::Glm3Corrected, true), &docs);
-        let nores = ppl_over(&model, &prescored_mode(m, k, 0, Coupling::Glm3Corrected, true), &docs);
+        let glm2 = ppl_over(&model, &prescored_spec(m, k, 16, Coupling::Glm2Artifact, true), &docs);
+        let glm3 = ppl_over(&model, &prescored_spec(m, k, 16, Coupling::Glm3Corrected, true), &docs);
+        let nores = ppl_over(&model, &prescored_spec(m, k, 0, Coupling::Glm3Corrected, true), &docs);
         t.row(vec![k.to_string(), f(glm2, 3), f(glm3, 3), f(nores, 3)]);
     }
     t.print();

@@ -22,6 +22,10 @@ if [[ "$QUICK" == 0 ]]; then
     else
         echo "== cargo clippy unavailable — skipping lint =="
     fi
+    # Examples and benches are not exercised by `cargo test`; build them so
+    # dispatch-surface refactors can't silently break non-test targets.
+    echo "== cargo build --release --examples --benches =="
+    cargo build --release --examples --benches
 fi
 
 echo "== tier-1 verify: cargo build --release && cargo test -q =="

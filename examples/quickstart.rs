@@ -1,15 +1,16 @@
 //! Quickstart: pre-scored attention on random data, compared against exact.
 //!
+//! Kernels are constructed through the unified backend API: a declarative
+//! spec string → [`AttentionSpec::parse`] → `.build()` →
+//! [`prescored::attention::AttentionBackend::forward`], which returns the
+//! output matrix plus unified stats (retained keys, fallback flag).
+//!
 //! ```bash
 //! cargo run --release --example quickstart
 //! ```
 
-use prescored::attention::{
-    exact_attention, prescored_hyper_attention, rel_error, AttentionInputs, Coupling, HyperConfig,
-    PreScoredConfig,
-};
+use prescored::attention::{exact_attention, rel_error, AttentionInputs, AttentionSpec};
 use prescored::linalg::Matrix;
-use prescored::prescore::{Method, PreScoreConfig};
 use prescored::util::rng::Rng;
 
 fn main() {
@@ -40,27 +41,23 @@ fn main() {
     let inp = AttentionInputs::new(&q, &k, &v);
 
     let exact = exact_attention(&inp);
-    println!("{:<28} {:>12} {:>10}", "method", "rel-error", "keys");
-    for (name, top_k, method) in [
-        ("kmeans+hyper (k=64)", 64usize, Method::KMeans),
-        ("kmeans+hyper (k=128)", 128, Method::KMeans),
-        ("leverage+hyper (k=64)", 64, Method::Leverage { exact: false }),
-        ("kmedian+hyper (k=64)", 64, Method::KMedian),
-        ("unfiltered hyper", 0, Method::KMeans),
+    println!("{:<24} {:>50} {:>11} {:>10}", "method", "spec", "rel-error", "keys");
+    for (name, spec_str) in [
+        ("kmeans+hyper (k=64)", "prescored:kmeans,top_k=64,pseed=1,sample=32,seed=1"),
+        ("kmeans+hyper (k=128)", "prescored:kmeans,top_k=128,pseed=1,sample=32,seed=1"),
+        ("leverage+hyper (k=64)", "prescored:leverage,top_k=64,pseed=1,sample=32,seed=1"),
+        ("kmedian+hyper (k=64)", "prescored:kmedian,top_k=64,pseed=1,sample=32,seed=1"),
+        ("unfiltered hyper", "prescored:kmeans,top_k=0,pseed=1,sample=32,seed=1"),
     ] {
-        let cfg = PreScoredConfig {
-            prescore: PreScoreConfig { method, top_k, seed: 1, ..Default::default() },
-            hyper: HyperConfig { block_size: 64, sample_size: 32, seed: 1, ..Default::default() },
-            fallback_delta: 0.0,
-            coupling: Coupling::Glm3Corrected,
-        };
-        let (out, stats) = prescored_hyper_attention(&inp, &cfg);
+        let backend = AttentionSpec::parse(spec_str).expect("valid spec").build();
+        let r = backend.forward(&inp);
         println!(
-            "{:<28} {:>12.4} {:>7}/{}",
+            "{:<24} {:>50} {:>11.4} {:>7}/{}",
             name,
-            rel_error(&out, &exact),
-            stats.selected,
-            stats.total_keys
+            spec_str,
+            rel_error(&r.out, &exact),
+            r.stats.retained_keys,
+            r.stats.total_keys
         );
     }
     println!("\n(lower rel-error at the same key budget = better prioritization)");

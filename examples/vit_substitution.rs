@@ -2,15 +2,18 @@
 //!
 //! Loads the build-time-trained ViT (artifacts/vit_weights.bin) and replaces
 //! its softmax attention with K-means-sampled restricted attention at a few
-//! budgets, reporting retained accuracy.
+//! budgets, reporting retained accuracy. Each configuration is a declarative
+//! attention spec string (`restricted:...`) built through the unified
+//! backend registry.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example vit_substitution
 //! ```
 
+use prescored::attention::AttentionSpec;
 use prescored::data::images::ImageConfig;
 use prescored::exp::{vit_accuracy, vit_eval_data};
-use prescored::model::{Vit, VitAttnMode, VitConfig, WeightStore};
+use prescored::model::{Vit, VitConfig, WeightStore};
 use std::path::Path;
 
 fn main() -> anyhow::Result<()> {
@@ -24,24 +27,27 @@ fn main() -> anyhow::Result<()> {
     let img_cfg = ImageConfig::default();
     let data = vit_eval_data(&img_cfg, 200, 9);
 
-    println!("{:<40} {:>10}", "configuration", "top-1 acc");
-    let base = vit_accuracy(&vit, &data, &VitAttnMode::Exact);
-    println!("{:<40} {:>9.2}%", "base model (softmax attention)", base * 100.0);
+    // The sweep: spec strings, parsed through the single construction path.
+    let mut sweep: Vec<(String, String)> =
+        vec![("base model (softmax attention)".into(), "exact".into())];
     for (clusters, samples) in [(4usize, 8usize), (4, 16), (4, 32), (6, 32)] {
-        let acc = vit_accuracy(
-            &vit,
-            &data,
-            &VitAttnMode::KMeansSampled { num_clusters: clusters, num_samples: samples, seed: 1 },
-        );
-        println!(
-            "{:<40} {:>9.2}%",
+        sweep.push((
             format!("kmeans num_cluster={clusters}, num_sample={samples}"),
-            acc * 100.0
-        );
+            format!("restricted:balanced,clusters={clusters},samples={samples},seed=1"),
+        ));
     }
     for k in [16usize, 32] {
-        let acc = vit_accuracy(&vit, &data, &VitAttnMode::LeverageTopK { k, exact: true });
-        println!("{:<40} {:>9.2}%", format!("leverage top-{k}"), acc * 100.0);
+        sweep.push((
+            format!("leverage top-{k}"),
+            format!("restricted:leverage-exact,top_k={k}"),
+        ));
+    }
+
+    println!("{:<40} {:>10}", "configuration", "top-1 acc");
+    for (label, spec_str) in &sweep {
+        let spec = AttentionSpec::parse(spec_str)?;
+        let acc = vit_accuracy(&vit, &data, &spec);
+        println!("{label:<40} {:>9.2}%", acc * 100.0);
     }
     Ok(())
 }

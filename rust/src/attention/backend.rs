@@ -1,0 +1,864 @@
+//! Unified attention-backend API: one object-safe dispatch surface from the
+//! CLI to the serving coordinator.
+//!
+//! Three layers:
+//!
+//! * [`AttentionBackend`] — the object-safe kernel trait. Every kernel
+//!   (exact, flash, HyperAttention, Pre-Scored HyperAttention, restricted
+//!   exact) is a struct implementing `forward(&AttentionInputs) ->
+//!   AttentionOutput`, where the output carries the matrix plus unified
+//!   [`AttnStats`] (kernel name, retained keys, fallback flag).
+//! * [`AttentionSpec`] — the declarative form. Parses from / serializes to a
+//!   canonical string (`prescored:kmeans,top_k=256,delta=0.05`,
+//!   `hyper:block=64,sample=128`, `flash`, ...) and from the TOML-subset
+//!   [`Config`] (`[attention] spec = "..."`). `parse` → `build` is the
+//!   single construction path for every call site; new kernels land here as
+//!   backends, never as new free-function dispatch arms.
+//! * [`AttnPolicy`] — a built uniform or per-layer list of backends for the
+//!   model forward passes.
+//!
+//! The legacy free functions ([`exact_attention`],
+//! [`super::exact::flash_attention_blocked`], [`hyper_attention`],
+//! [`prescored_hyper_attention`], [`restricted_exact_attention`]) remain the
+//! reference path — `rust/tests/backend_equivalence.rs` asserts the trait
+//! route is bit-identical to them for every backend and thread count.
+//!
+//! ## Spec grammar
+//!
+//! ```text
+//! spec       := kernel [":" args]
+//! kernel     := "exact" | "flash" | "hyper" | "prescored" | "restricted"
+//! args       := field ("," field)*
+//! field      := key "=" value | flag | method          (method first, where required)
+//! ```
+//!
+//! Per kernel (all keys optional; omitted keys take the struct defaults, and
+//! the canonical form emits only non-default keys, so round-trips are
+//! lossless):
+//!
+//! * `exact`
+//! * `flash[:block_q=64,block_k=64]`
+//! * `hyper[:block=64,sample=0,bits=16,seed=0,residual_n=<n>,keep_block_residual]`
+//! * `prescored:<method>[,top_k=256,clusters=<k>,sigma=0,raw,iters=10,pseed=0,
+//!    block=...,sample=...,bits=...,seed=...,residual_n=...,keep_block_residual,
+//!    delta=0,coupling=glm2|glm3]`
+//! * `restricted:balanced[,clusters=8,samples=32,iters=10,seed=0]`
+//! * `restricted:<method>[,top_k=256,clusters=<k>,sigma=0,raw,iters=10,seed=0]`
+//!
+//! `<method>` is any [`Method`] string (`kmeans`, `kmedian`, `leverage`,
+//! `leverage-exact`, `kernel-kmeans[:<gamma>]`, `minibatch[:<batch>]`,
+//! `lp:<p>`, `l2norm`). `raw` disables key ℓ2-normalization;
+//! `keep_block_residual` disables the GLM3 block-residual exclusion; in
+//! `prescored` specs `pseed` seeds Algorithm 1 while `seed` seeds the
+//! HyperAttention LSH/residual RNG.
+
+use super::exact::{exact_attention, flash_attention_blocked};
+use super::hyper::{hyper_attention, HyperConfig};
+use super::prescored::{
+    prescored_hyper_attention, restricted_exact_attention, Coupling, PreScoredConfig,
+};
+use super::AttentionInputs;
+use crate::config::Config;
+use crate::linalg::Matrix;
+use crate::prescore::{prescore, prescore_balanced, Method, PreScoreConfig};
+use anyhow::{anyhow, bail, Context, Result};
+use std::fmt;
+
+/// Unified execution report: what the kernel actually did. Every backend
+/// fills this; the server threads it into per-request responses.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AttnStats {
+    /// Kernel identifier (`"exact"`, `"flash"`, `"hyper"`, `"prescored"`,
+    /// `"restricted-exact"`).
+    pub kernel: &'static str,
+    /// Keys the kernel scored against (= `total_keys` when unfiltered).
+    pub retained_keys: usize,
+    pub total_keys: usize,
+    /// Algorithm 2 line 2: the δ-fallback disabled filtering.
+    pub fallback_used: bool,
+}
+
+impl AttnStats {
+    /// Stats of an unfiltered kernel: every key retained, no fallback.
+    pub fn unfiltered(kernel: &'static str, n_keys: usize) -> AttnStats {
+        AttnStats { kernel, retained_keys: n_keys, total_keys: n_keys, fallback_used: false }
+    }
+}
+
+/// Output of one backend forward pass: the attention matrix plus stats.
+#[derive(Debug, Clone)]
+pub struct AttentionOutput {
+    pub out: Matrix,
+    pub stats: AttnStats,
+}
+
+/// Object-safe attention kernel. Implementations must be pure functions of
+/// `(self, inp, salt)` so one boxed backend can be shared across threads.
+pub trait AttentionBackend: Send + Sync {
+    /// Kernel identifier (matches [`AttnStats::kernel`]).
+    fn kernel_name(&self) -> &'static str;
+
+    /// Forward pass with a seed salt mixed into every internal RNG stream —
+    /// the per-layer/per-head decorrelation the transformer applies.
+    /// Deterministic kernels ignore the salt; `salt = 0` is the identity.
+    fn forward_salted(&self, inp: &AttentionInputs, salt: u64) -> AttentionOutput;
+
+    /// Forward pass (no salt).
+    fn forward(&self, inp: &AttentionInputs) -> AttentionOutput {
+        self.forward_salted(inp, 0)
+    }
+
+    /// The stats this backend will report for an `n_keys`-key input. The
+    /// retention/fallback decision of every backend depends only on the key
+    /// count and the config — not the key values — so serving can report
+    /// truthful per-request stats without re-running the kernel.
+    fn plan(&self, n_keys: usize) -> AttnStats;
+}
+
+/// Naive exact softmax attention ([`exact_attention`]).
+pub struct Exact;
+
+impl AttentionBackend for Exact {
+    fn kernel_name(&self) -> &'static str {
+        "exact"
+    }
+
+    fn forward_salted(&self, inp: &AttentionInputs, _salt: u64) -> AttentionOutput {
+        AttentionOutput { out: exact_attention(inp), stats: self.plan(inp.k.rows) }
+    }
+
+    fn plan(&self, n_keys: usize) -> AttnStats {
+        AttnStats::unfiltered(self.kernel_name(), n_keys)
+    }
+}
+
+/// FlashAttention-style blocked streaming exact attention
+/// ([`super::exact::flash_attention_blocked`]).
+pub struct Flash {
+    pub block_q: usize,
+    pub block_k: usize,
+}
+
+impl Default for Flash {
+    fn default() -> Self {
+        Flash { block_q: 64, block_k: 64 }
+    }
+}
+
+impl AttentionBackend for Flash {
+    fn kernel_name(&self) -> &'static str {
+        "flash"
+    }
+
+    fn forward_salted(&self, inp: &AttentionInputs, _salt: u64) -> AttentionOutput {
+        AttentionOutput {
+            out: flash_attention_blocked(inp, self.block_q, self.block_k),
+            stats: self.plan(inp.k.rows),
+        }
+    }
+
+    fn plan(&self, n_keys: usize) -> AttnStats {
+        AttnStats::unfiltered(self.kernel_name(), n_keys)
+    }
+}
+
+/// HyperAttention over all keys ([`hyper_attention`]).
+pub struct Hyper(pub HyperConfig);
+
+impl AttentionBackend for Hyper {
+    fn kernel_name(&self) -> &'static str {
+        "hyper"
+    }
+
+    fn forward_salted(&self, inp: &AttentionInputs, salt: u64) -> AttentionOutput {
+        let mut cfg = self.0.clone();
+        cfg.seed = cfg.seed.wrapping_add(salt);
+        AttentionOutput { out: hyper_attention(inp, &cfg, None), stats: self.plan(inp.k.rows) }
+    }
+
+    fn plan(&self, n_keys: usize) -> AttnStats {
+        AttnStats::unfiltered(self.kernel_name(), n_keys)
+    }
+}
+
+/// Pre-Scored HyperAttention, Algorithm 2 ([`prescored_hyper_attention`]).
+pub struct PreScored(pub PreScoredConfig);
+
+impl AttentionBackend for PreScored {
+    fn kernel_name(&self) -> &'static str {
+        "prescored"
+    }
+
+    fn forward_salted(&self, inp: &AttentionInputs, salt: u64) -> AttentionOutput {
+        let mut cfg = self.0.clone();
+        cfg.hyper.seed = cfg.hyper.seed.wrapping_add(salt);
+        cfg.prescore.seed = cfg.prescore.seed.wrapping_add(salt);
+        let (out, stats) = prescored_hyper_attention(inp, &cfg);
+        AttentionOutput {
+            out,
+            stats: AttnStats {
+                kernel: self.kernel_name(),
+                retained_keys: stats.selected,
+                total_keys: stats.total_keys,
+                fallback_used: stats.fallback_used,
+            },
+        }
+    }
+
+    fn plan(&self, n_keys: usize) -> AttnStats {
+        // Mirrors prescored_hyper_attention: |S| = top_k clamped to n (0 =
+        // identity selection), fallback iff |S| < δ·n.
+        let top_k = self.0.prescore.top_k;
+        let s = if top_k == 0 || top_k >= n_keys { n_keys } else { top_k };
+        let fallback = (s as f32) < self.0.fallback_delta * n_keys as f32;
+        AttnStats {
+            kernel: self.kernel_name(),
+            retained_keys: if fallback { n_keys } else { s },
+            total_keys: n_keys,
+            fallback_used: fallback,
+        }
+    }
+}
+
+/// How [`RestrictedExact`] picks its key subset.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RestrictedSelector {
+    /// Per-cluster balanced sampling ([`prescore_balanced`]; the ViT
+    /// `num_cluster`/`num_sample` grid of Table 2).
+    Balanced { num_clusters: usize, num_samples: usize, max_iters: usize, seed: u64 },
+    /// Global top-k by an Algorithm 1 score ([`prescore`]; the LevAttention
+    /// and ℓ2-norm baselines of Table 6).
+    Scored(PreScoreConfig),
+}
+
+/// Exact attention restricted to a pre-scored key subset
+/// ([`restricted_exact_attention`]) — the §5.3 zero-shot substitution
+/// operator.
+pub struct RestrictedExact(pub RestrictedSelector);
+
+impl AttentionBackend for RestrictedExact {
+    fn kernel_name(&self) -> &'static str {
+        "restricted-exact"
+    }
+
+    fn forward_salted(&self, inp: &AttentionInputs, salt: u64) -> AttentionOutput {
+        let n = inp.k.rows;
+        let sel = match &self.0 {
+            RestrictedSelector::Balanced { num_clusters, num_samples, max_iters, seed } => {
+                prescore_balanced(
+                    inp.k,
+                    *num_clusters,
+                    *num_samples,
+                    *max_iters,
+                    seed.wrapping_add(salt),
+                )
+            }
+            RestrictedSelector::Scored(cfg) => {
+                let mut cfg = cfg.clone();
+                cfg.seed = cfg.seed.wrapping_add(salt);
+                prescore(inp.k, &cfg)
+            }
+        };
+        let retained = sel.selected.len();
+        AttentionOutput {
+            out: restricted_exact_attention(inp, &sel.selected),
+            stats: AttnStats {
+                kernel: self.kernel_name(),
+                retained_keys: retained,
+                total_keys: n,
+                fallback_used: false,
+            },
+        }
+    }
+
+    fn plan(&self, n_keys: usize) -> AttnStats {
+        let retained = match &self.0 {
+            RestrictedSelector::Balanced { num_samples, .. } => (*num_samples).min(n_keys),
+            RestrictedSelector::Scored(cfg) => {
+                if cfg.top_k == 0 || cfg.top_k >= n_keys {
+                    n_keys
+                } else {
+                    cfg.top_k
+                }
+            }
+        };
+        AttnStats {
+            kernel: self.kernel_name(),
+            retained_keys: retained,
+            total_keys: n_keys,
+            fallback_used: false,
+        }
+    }
+}
+
+/// Declarative attention-kernel specification — the single construction
+/// path: `AttentionSpec::parse(s)?.build()`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum AttentionSpec {
+    Exact,
+    Flash { block_q: usize, block_k: usize },
+    Hyper(HyperConfig),
+    PreScored(PreScoredConfig),
+    Restricted(RestrictedSelector),
+}
+
+/// Default cluster count for `restricted:balanced` specs.
+const BALANCED_CLUSTERS: usize = 8;
+/// Default sample budget for `restricted:balanced` specs.
+const BALANCED_SAMPLES: usize = 32;
+/// Default Lloyd-iteration cap for `restricted:balanced` specs (paper: ≤10).
+const BALANCED_ITERS: usize = 10;
+
+fn parse_usize(key: &str, v: &str) -> Result<usize> {
+    v.parse().with_context(|| format!("attention spec key {key} = {v}"))
+}
+
+fn parse_u64(key: &str, v: &str) -> Result<u64> {
+    v.parse().with_context(|| format!("attention spec key {key} = {v}"))
+}
+
+fn parse_f32(key: &str, v: &str) -> Result<f32> {
+    v.parse().with_context(|| format!("attention spec key {key} = {v}"))
+}
+
+/// Split a `key=value` / bare-flag field.
+fn split_field(field: &str) -> (&str, Option<&str>) {
+    match field.split_once('=') {
+        Some((k, v)) => (k.trim(), Some(v.trim())),
+        None => (field, None),
+    }
+}
+
+/// Apply a HyperAttention key; `Ok(false)` = not a hyper key.
+fn apply_hyper_key(cfg: &mut HyperConfig, key: &str, val: Option<&str>) -> Result<bool> {
+    match (key, val) {
+        ("block", Some(v)) => cfg.block_size = parse_usize(key, v)?,
+        ("sample", Some(v)) => cfg.sample_size = parse_usize(key, v)?,
+        ("bits", Some(v)) => cfg.lsh_bits = parse_usize(key, v)?,
+        ("seed", Some(v)) => cfg.seed = parse_u64(key, v)?,
+        ("residual_n", Some(v)) => cfg.residual_count_override = Some(parse_usize(key, v)?),
+        ("keep_block_residual", None) => cfg.exclude_block_from_residual = false,
+        _ => return Ok(false),
+    }
+    Ok(true)
+}
+
+/// Apply an Algorithm 1 key; `seed_key` names the seed field (`"pseed"` in
+/// `prescored` specs where `seed` belongs to HyperAttention, `"seed"` in
+/// `restricted` specs). `Ok(false)` = not a prescore key.
+fn apply_prescore_key(
+    cfg: &mut PreScoreConfig,
+    key: &str,
+    val: Option<&str>,
+    seed_key: &str,
+) -> Result<bool> {
+    match (key, val) {
+        ("top_k", Some(v)) => cfg.top_k = parse_usize(key, v)?,
+        ("clusters", Some(v)) => cfg.clusters = Some(parse_usize(key, v)?),
+        ("sigma", Some(v)) => cfg.noise_sigma = parse_f32(key, v)?,
+        ("iters", Some(v)) => cfg.max_iters = parse_usize(key, v)?,
+        ("raw", None) => cfg.normalize = false,
+        (k, Some(v)) if k == seed_key => cfg.seed = parse_u64(k, v)?,
+        _ => return Ok(false),
+    }
+    Ok(true)
+}
+
+/// Canonical emission of non-default HyperAttention keys.
+fn hyper_parts(cfg: &HyperConfig, parts: &mut Vec<String>) {
+    let d = HyperConfig::default();
+    if cfg.block_size != d.block_size {
+        parts.push(format!("block={}", cfg.block_size));
+    }
+    if cfg.sample_size != d.sample_size {
+        parts.push(format!("sample={}", cfg.sample_size));
+    }
+    if cfg.lsh_bits != d.lsh_bits {
+        parts.push(format!("bits={}", cfg.lsh_bits));
+    }
+    if cfg.seed != d.seed {
+        parts.push(format!("seed={}", cfg.seed));
+    }
+    if let Some(n) = cfg.residual_count_override {
+        parts.push(format!("residual_n={n}"));
+    }
+    if !cfg.exclude_block_from_residual {
+        parts.push("keep_block_residual".into());
+    }
+}
+
+/// Canonical emission of non-default Algorithm 1 keys (method excluded —
+/// it is the leading positional token).
+fn prescore_parts(cfg: &PreScoreConfig, seed_key: &str, parts: &mut Vec<String>) {
+    let d = PreScoreConfig::default();
+    if cfg.top_k != d.top_k {
+        parts.push(format!("top_k={}", cfg.top_k));
+    }
+    if let Some(c) = cfg.clusters {
+        parts.push(format!("clusters={c}"));
+    }
+    if cfg.noise_sigma != d.noise_sigma {
+        parts.push(format!("sigma={}", cfg.noise_sigma));
+    }
+    if !cfg.normalize {
+        parts.push("raw".into());
+    }
+    if cfg.max_iters != d.max_iters {
+        parts.push(format!("iters={}", cfg.max_iters));
+    }
+    if cfg.seed != d.seed {
+        parts.push(format!("{seed_key}={}", cfg.seed));
+    }
+}
+
+impl AttentionSpec {
+    /// Parse a spec string (see the module docs for the grammar).
+    pub fn parse(s: &str) -> Result<AttentionSpec> {
+        let s = s.trim();
+        let (head, rest) = match s.split_once(':') {
+            Some((h, r)) => (h.trim(), r.trim()),
+            None => (s, ""),
+        };
+        let fields: Vec<&str> =
+            rest.split(',').map(str::trim).filter(|f| !f.is_empty()).collect();
+        match head {
+            "exact" => {
+                if !fields.is_empty() {
+                    bail!("'exact' takes no arguments (got '{s}')");
+                }
+                Ok(AttentionSpec::Exact)
+            }
+            "flash" => {
+                let d = Flash::default();
+                let (mut block_q, mut block_k) = (d.block_q, d.block_k);
+                for f in &fields {
+                    match split_field(f) {
+                        ("block_q", Some(v)) => block_q = parse_usize("block_q", v)?,
+                        ("block_k", Some(v)) => block_k = parse_usize("block_k", v)?,
+                        _ => bail!("unknown key '{f}' in flash spec '{s}'"),
+                    }
+                }
+                Ok(AttentionSpec::Flash { block_q, block_k })
+            }
+            "hyper" => {
+                let mut cfg = HyperConfig::default();
+                for f in &fields {
+                    let (key, val) = split_field(f);
+                    if !apply_hyper_key(&mut cfg, key, val)? {
+                        bail!("unknown key '{f}' in hyper spec '{s}'");
+                    }
+                }
+                Ok(AttentionSpec::Hyper(cfg))
+            }
+            "prescored" => {
+                let Some((&method_tok, rest_fields)) = fields.split_first() else {
+                    bail!("prescored spec needs a method, e.g. 'prescored:kmeans,top_k=64'");
+                };
+                if method_tok.contains('=') {
+                    bail!("prescored spec must start with a method token, got '{method_tok}'");
+                }
+                let method = Method::parse(method_tok)
+                    .ok_or_else(|| anyhow!("unknown prescore method '{method_tok}' in '{s}'"))?;
+                let mut cfg = PreScoredConfig {
+                    prescore: PreScoreConfig { method, ..Default::default() },
+                    ..Default::default()
+                };
+                for f in rest_fields {
+                    let (key, val) = split_field(f);
+                    if apply_prescore_key(&mut cfg.prescore, key, val, "pseed")? {
+                        continue;
+                    }
+                    if apply_hyper_key(&mut cfg.hyper, key, val)? {
+                        continue;
+                    }
+                    match (key, val) {
+                        ("delta", Some(v)) => cfg.fallback_delta = parse_f32("delta", v)?,
+                        ("coupling", Some("glm3")) => cfg.coupling = Coupling::Glm3Corrected,
+                        ("coupling", Some("glm2")) => cfg.coupling = Coupling::Glm2Artifact,
+                        ("coupling", Some(v)) => {
+                            bail!("coupling must be glm2 or glm3, got '{v}'")
+                        }
+                        _ => bail!("unknown key '{f}' in prescored spec '{s}'"),
+                    }
+                }
+                Ok(AttentionSpec::PreScored(cfg))
+            }
+            "restricted" => {
+                let Some((&sel_tok, rest_fields)) = fields.split_first() else {
+                    bail!(
+                        "restricted spec needs a selector, e.g. \
+                         'restricted:balanced,clusters=4,samples=32'"
+                    );
+                };
+                if sel_tok == "balanced" {
+                    let mut num_clusters = BALANCED_CLUSTERS;
+                    let mut num_samples = BALANCED_SAMPLES;
+                    let mut max_iters = BALANCED_ITERS;
+                    let mut seed = 0u64;
+                    for f in rest_fields {
+                        match split_field(f) {
+                            ("clusters", Some(v)) => num_clusters = parse_usize("clusters", v)?,
+                            ("samples", Some(v)) => num_samples = parse_usize("samples", v)?,
+                            ("iters", Some(v)) => max_iters = parse_usize("iters", v)?,
+                            ("seed", Some(v)) => seed = parse_u64("seed", v)?,
+                            _ => bail!("unknown key '{f}' in restricted:balanced spec '{s}'"),
+                        }
+                    }
+                    Ok(AttentionSpec::Restricted(RestrictedSelector::Balanced {
+                        num_clusters,
+                        num_samples,
+                        max_iters,
+                        seed,
+                    }))
+                } else {
+                    if sel_tok.contains('=') {
+                        bail!(
+                            "restricted spec must start with 'balanced' or a method token, \
+                             got '{sel_tok}'"
+                        );
+                    }
+                    let method = Method::parse(sel_tok).ok_or_else(|| {
+                        anyhow!("unknown restricted selector '{sel_tok}' in '{s}'")
+                    })?;
+                    let mut cfg = PreScoreConfig { method, ..Default::default() };
+                    for f in rest_fields {
+                        let (key, val) = split_field(f);
+                        if !apply_prescore_key(&mut cfg, key, val, "seed")? {
+                            bail!("unknown key '{f}' in restricted spec '{s}'");
+                        }
+                    }
+                    Ok(AttentionSpec::Restricted(RestrictedSelector::Scored(cfg)))
+                }
+            }
+            _ => bail!(
+                "unknown attention kernel '{head}' in spec '{s}' \
+                 (expected exact | flash | hyper | prescored | restricted)"
+            ),
+        }
+    }
+
+    /// Flash spec with the default tile sizes (the single source of the
+    /// `flash` defaults, shared by parse, Display, and `AttnMode::Flash`).
+    pub fn flash() -> AttentionSpec {
+        let d = Flash::default();
+        AttentionSpec::Flash { block_q: d.block_q, block_k: d.block_k }
+    }
+
+    /// Read the declarative `[attention] spec = "..."` key from a parsed
+    /// TOML-subset config. `Ok(None)` when the key is absent or empty.
+    pub fn from_config(cfg: &Config) -> Result<Option<AttentionSpec>> {
+        match cfg.get("attention", "spec") {
+            Some(s) if !s.trim().is_empty() => Ok(Some(AttentionSpec::parse(s)?)),
+            _ => Ok(None),
+        }
+    }
+
+    /// Construct the backend — the registry's single build path.
+    pub fn build(&self) -> Box<dyn AttentionBackend> {
+        match self {
+            AttentionSpec::Exact => Box::new(Exact),
+            AttentionSpec::Flash { block_q, block_k } => {
+                Box::new(Flash { block_q: *block_q, block_k: *block_k })
+            }
+            AttentionSpec::Hyper(cfg) => Box::new(Hyper(cfg.clone())),
+            AttentionSpec::PreScored(cfg) => Box::new(PreScored(cfg.clone())),
+            AttentionSpec::Restricted(sel) => Box::new(RestrictedExact(sel.clone())),
+        }
+    }
+
+    /// Kernel identifier of the backend this spec builds.
+    pub fn kernel_name(&self) -> &'static str {
+        match self {
+            AttentionSpec::Exact => "exact",
+            AttentionSpec::Flash { .. } => "flash",
+            AttentionSpec::Hyper(_) => "hyper",
+            AttentionSpec::PreScored(_) => "prescored",
+            AttentionSpec::Restricted(_) => "restricted-exact",
+        }
+    }
+}
+
+impl fmt::Display for AttentionSpec {
+    /// Canonical string form: only non-default keys, fixed order —
+    /// `parse(spec.to_string()) == spec` for every spec.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            AttentionSpec::Exact => write!(f, "exact"),
+            AttentionSpec::Flash { block_q, block_k } => {
+                let d = Flash::default();
+                let mut parts = Vec::new();
+                if *block_q != d.block_q {
+                    parts.push(format!("block_q={block_q}"));
+                }
+                if *block_k != d.block_k {
+                    parts.push(format!("block_k={block_k}"));
+                }
+                if parts.is_empty() {
+                    write!(f, "flash")
+                } else {
+                    write!(f, "flash:{}", parts.join(","))
+                }
+            }
+            AttentionSpec::Hyper(cfg) => {
+                let mut parts = Vec::new();
+                hyper_parts(cfg, &mut parts);
+                if parts.is_empty() {
+                    write!(f, "hyper")
+                } else {
+                    write!(f, "hyper:{}", parts.join(","))
+                }
+            }
+            AttentionSpec::PreScored(cfg) => {
+                let mut parts = vec![cfg.prescore.method.name()];
+                prescore_parts(&cfg.prescore, "pseed", &mut parts);
+                hyper_parts(&cfg.hyper, &mut parts);
+                if cfg.fallback_delta != 0.0 {
+                    parts.push(format!("delta={}", cfg.fallback_delta));
+                }
+                if cfg.coupling == Coupling::Glm2Artifact {
+                    parts.push("coupling=glm2".into());
+                }
+                write!(f, "prescored:{}", parts.join(","))
+            }
+            AttentionSpec::Restricted(RestrictedSelector::Balanced {
+                num_clusters,
+                num_samples,
+                max_iters,
+                seed,
+            }) => {
+                let mut parts = vec!["balanced".to_string()];
+                if *num_clusters != BALANCED_CLUSTERS {
+                    parts.push(format!("clusters={num_clusters}"));
+                }
+                if *num_samples != BALANCED_SAMPLES {
+                    parts.push(format!("samples={num_samples}"));
+                }
+                if *max_iters != BALANCED_ITERS {
+                    parts.push(format!("iters={max_iters}"));
+                }
+                if *seed != 0 {
+                    parts.push(format!("seed={seed}"));
+                }
+                write!(f, "restricted:{}", parts.join(","))
+            }
+            AttentionSpec::Restricted(RestrictedSelector::Scored(cfg)) => {
+                let mut parts = vec![cfg.method.name()];
+                prescore_parts(cfg, "seed", &mut parts);
+                write!(f, "restricted:{}", parts.join(","))
+            }
+        }
+    }
+}
+
+/// A built backend policy for the model forward passes: uniform (one
+/// backend for every layer) or per-layer.
+pub struct AttnPolicy {
+    specs: Vec<AttentionSpec>,
+    backends: Vec<Box<dyn AttentionBackend>>,
+}
+
+impl AttnPolicy {
+    /// One backend for every layer.
+    pub fn uniform(spec: AttentionSpec) -> AttnPolicy {
+        let backends = vec![spec.build()];
+        AttnPolicy { specs: vec![spec], backends }
+    }
+
+    /// One backend per layer (`specs.len()` must equal the model depth;
+    /// the model forward asserts it).
+    pub fn per_layer(specs: Vec<AttentionSpec>) -> AttnPolicy {
+        assert!(!specs.is_empty(), "per-layer policy needs at least one spec");
+        let backends = specs.iter().map(|s| s.build()).collect();
+        AttnPolicy { specs, backends }
+    }
+
+    /// Parse `"spec"` (uniform) or `"spec;spec;..."` (one per layer).
+    pub fn parse(s: &str) -> Result<AttnPolicy> {
+        let specs = s
+            .split(';')
+            .map(str::trim)
+            .filter(|p| !p.is_empty())
+            .map(AttentionSpec::parse)
+            .collect::<Result<Vec<_>>>()?;
+        if specs.is_empty() {
+            bail!("empty attention policy '{s}'");
+        }
+        Ok(if specs.len() == 1 {
+            AttnPolicy::uniform(specs.into_iter().next().unwrap())
+        } else {
+            AttnPolicy::per_layer(specs)
+        })
+    }
+
+    /// The backend for a layer (uniform policies ignore the index).
+    pub fn backend(&self, layer: usize) -> &dyn AttentionBackend {
+        let idx = if self.backends.len() == 1 { 0 } else { layer };
+        self.backends[idx].as_ref()
+    }
+
+    pub fn specs(&self) -> &[AttentionSpec] {
+        &self.specs
+    }
+
+    pub fn is_uniform(&self) -> bool {
+        self.backends.len() == 1
+    }
+
+    /// Number of distinct layer slots (1 for uniform).
+    pub fn num_slots(&self) -> usize {
+        self.backends.len()
+    }
+}
+
+impl fmt::Display for AttnPolicy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let parts: Vec<String> = self.specs.iter().map(|s| s.to_string()).collect();
+        write!(f, "{}", parts.join(";"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::rel_error;
+    use crate::util::rng::Rng;
+
+    fn rand_inp(n: usize, d: usize, seed: u64) -> (Matrix, Matrix, Matrix) {
+        let mut rng = Rng::new(seed);
+        (
+            Matrix::randn(n, d, 1.0, &mut rng),
+            Matrix::randn(n, d, 1.0, &mut rng),
+            Matrix::randn(n, d, 1.0, &mut rng),
+        )
+    }
+
+    #[test]
+    fn canonical_forms_are_fixed_points() {
+        for s in [
+            "exact",
+            "flash",
+            "flash:block_q=32",
+            "hyper",
+            "hyper:block=32,sample=16,bits=8,seed=5",
+            "prescored:kmeans",
+            "prescored:kmeans,top_k=64,delta=0.05",
+            "prescored:lp:1.5,top_k=32,coupling=glm2",
+            "restricted:balanced",
+            "restricted:balanced,clusters=4,samples=16,seed=2",
+            "restricted:l2norm,top_k=8",
+        ] {
+            let spec = AttentionSpec::parse(s).unwrap();
+            let canon = spec.to_string();
+            let respec = AttentionSpec::parse(&canon).unwrap();
+            assert_eq!(spec, respec, "{s} -> {canon}");
+            assert_eq!(respec.to_string(), canon, "canonical form not a fixed point for {s}");
+        }
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        for s in [
+            "bogus",
+            "exact:1",
+            "flash:block=2",
+            "hyper:nope=1",
+            "prescored",
+            "prescored:top_k=3",
+            "prescored:kmeans,coupling=glm9",
+            "restricted",
+            "restricted:kmeans,samples=4",
+            "hyper:block=xyz",
+        ] {
+            assert!(AttentionSpec::parse(s).is_err(), "'{s}' should not parse");
+        }
+    }
+
+    #[test]
+    fn whitespace_tolerant() {
+        let a = AttentionSpec::parse(" hyper: block=32 , sample=8 ").unwrap();
+        let b = AttentionSpec::parse("hyper:block=32,sample=8").unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn from_config_reads_attention_section() {
+        let cfg = Config::parse("[attention]\nspec = \"prescored:kmeans,top_k=32\"\n").unwrap();
+        let spec = AttentionSpec::from_config(&cfg).unwrap().unwrap();
+        assert_eq!(spec.kernel_name(), "prescored");
+        let empty = Config::parse("[serving]\nmax_seq = 64\n").unwrap();
+        assert!(AttentionSpec::from_config(&empty).unwrap().is_none());
+        let bad = Config::parse("[attention]\nspec = \"bogus\"\n").unwrap();
+        assert!(AttentionSpec::from_config(&bad).is_err());
+    }
+
+    #[test]
+    fn built_backends_run_and_report_stats() {
+        let (q, k, v) = rand_inp(48, 8, 1);
+        let inp = AttentionInputs::new(&q, &k, &v);
+        let exact = exact_attention(&inp);
+        for s in [
+            "exact",
+            "flash",
+            "hyper:block=64",
+            "prescored:kmeans,top_k=16,block=16,sample=4",
+            "restricted:balanced,clusters=4,samples=16",
+            "restricted:l2norm,top_k=12",
+        ] {
+            let spec = AttentionSpec::parse(s).unwrap();
+            let backend = spec.build();
+            let r = backend.forward(&inp);
+            assert_eq!((r.out.rows, r.out.cols), (48, 8), "{s}");
+            assert!(r.out.data.iter().all(|x| x.is_finite()), "{s}");
+            assert_eq!(r.stats.total_keys, 48, "{s}");
+            assert!(r.stats.retained_keys <= 48, "{s}");
+            assert_eq!(r.stats.kernel, backend.kernel_name(), "{s}");
+            // plan() must agree with what the kernel actually did.
+            assert_eq!(backend.plan(48), r.stats, "{s}");
+        }
+        // block covers everything and no residual ⇒ hyper is exact.
+        let h = AttentionSpec::parse("hyper:block=64").unwrap().build().forward(&inp);
+        assert!(rel_error(&h.out, &exact) < 1e-5);
+    }
+
+    #[test]
+    fn prescored_plan_reports_fallback() {
+        let spec = AttentionSpec::parse("prescored:kmeans,top_k=4,delta=0.5").unwrap();
+        let backend = spec.build();
+        let plan = backend.plan(64);
+        assert!(plan.fallback_used, "4 < 0.5*64 must fall back");
+        assert_eq!(plan.retained_keys, 64);
+        let ok = backend.plan(6); // 4 >= 0.5*6 ⇒ no fallback
+        assert!(!ok.fallback_used);
+        assert_eq!(ok.retained_keys, 4);
+        // top_k = 0 is the identity selection.
+        let ident = AttentionSpec::parse("prescored:kmeans,top_k=0").unwrap().build().plan(10);
+        assert_eq!(ident.retained_keys, 10);
+    }
+
+    #[test]
+    fn policy_parse_uniform_and_per_layer() {
+        let uni = AttnPolicy::parse("flash").unwrap();
+        assert!(uni.is_uniform());
+        assert_eq!(uni.backend(3).kernel_name(), "flash");
+        let per = AttnPolicy::parse("exact;flash;hyper:block=32").unwrap();
+        assert!(!per.is_uniform());
+        assert_eq!(per.num_slots(), 3);
+        assert_eq!(per.backend(0).kernel_name(), "exact");
+        assert_eq!(per.backend(2).kernel_name(), "hyper");
+        assert_eq!(per.to_string(), "exact;flash;hyper:block=32");
+        assert!(AttnPolicy::parse(" ; ").is_err());
+    }
+
+    #[test]
+    fn salting_decorrelates_hyper_streams() {
+        let (q, k, v) = rand_inp(96, 8, 2);
+        let inp = AttentionInputs::new(&q, &k, &v);
+        let backend =
+            AttentionSpec::parse("hyper:block=16,sample=8,seed=3").unwrap().build();
+        let a = backend.forward_salted(&inp, 0);
+        let b = backend.forward_salted(&inp, 1);
+        assert!(a.out.max_abs_diff(&b.out) > 0.0, "salt must change the RNG stream");
+        let a2 = backend.forward(&inp);
+        assert_eq!(a.out.data, a2.out.data, "salt 0 must be the identity");
+    }
+}

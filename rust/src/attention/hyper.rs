@@ -40,7 +40,7 @@ const PAR_MIN_QUERIES: usize = 32;
 const RESIDUAL_STREAM: u64 = 0x4a5_7700_0000_0000;
 
 /// HyperAttention hyper-parameters.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct HyperConfig {
     /// Block size of the block-diagonal part.
     pub block_size: usize,

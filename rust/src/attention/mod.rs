@@ -1,5 +1,8 @@
 //! Attention implementations.
 //!
+//! Kernel modules (the legacy free functions; also the `threads = 1`-style
+//! reference path the equivalence tests compare against):
+//!
 //! * [`exact`] — naive softmax attention and an IO-aware blocked streaming
 //!   variant with online softmax (the FlashAttention algorithm on CPU; the
 //!   exact baseline of Fig. 1 and Table 1).
@@ -13,13 +16,26 @@
 //!   Appendix-F ablation.
 //! * [`backward`] — gradients (dQ, dK, dV) for the exact and blockwise paths
 //!   (Fig. 1b fwd+bwd speedups).
+//!
+//! Dispatch surface (use this, not per-kernel `match` arms):
+//!
+//! * [`backend`] — the unified [`AttentionBackend`] trait, the declarative
+//!   [`AttentionSpec`] (`AttentionSpec::parse("prescored:kmeans,top_k=64")?
+//!   .build()` is the single construction path for every call site — model,
+//!   ViT, server, CLI, benches), and the per-layer [`AttnPolicy`]. New
+//!   kernels land as backends here; free functions stay the reference
+//!   implementation.
 
+pub mod backend;
 pub mod backward;
 pub mod exact;
 pub mod hyper;
 pub mod polynomial;
 pub mod prescored;
 
+pub use backend::{
+    AttentionBackend, AttentionOutput, AttentionSpec, AttnPolicy, AttnStats, RestrictedSelector,
+};
 pub use exact::{exact_attention, flash_attention};
 pub use hyper::{hyper_attention, HyperConfig};
 pub use prescored::{prescored_hyper_attention, Coupling, PreScoredConfig};

@@ -37,7 +37,7 @@ pub enum Coupling {
 }
 
 /// Algorithm-2 configuration.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct PreScoredConfig {
     pub prescore: PreScoreConfig,
     pub hyper: HyperConfig,

@@ -111,6 +111,14 @@ pub struct ServingConfig {
     pub prescore_refresh_every: usize,
     /// Fallback threshold δ of Algorithm 2.
     pub fallback_delta: f64,
+    /// Declarative attention spec (`[attention] spec = "..."`, e.g.
+    /// `"prescored:kmeans,top_k=64,delta=0.05"`), stored in canonical form.
+    /// Empty = derive from the legacy `variant` + `[prescore]` keys; see
+    /// [`ServingConfig::attention_spec`]. Note the serving artifacts only
+    /// exist for the exact/flash and `prescored:` families — `hyper:` and
+    /// `restricted:` specs drive the pure-Rust substrate (`ppl` CLI,
+    /// benches) and are rejected by `ScoringServer::start`.
+    pub attention_spec: String,
 }
 
 impl Default for ServingConfig {
@@ -127,6 +135,7 @@ impl Default for ServingConfig {
             prescore_top_k: 64,
             prescore_refresh_every: 16,
             fallback_delta: 0.0,
+            attention_spec: String::new(),
         }
     }
 }
@@ -147,11 +156,43 @@ impl ServingConfig {
             prescore_refresh_every: cfg
                 .usize_or("prescore", "refresh_every", d.prescore_refresh_every)?,
             fallback_delta: cfg.f64_or("prescore", "fallback_delta", d.fallback_delta)?,
+            // AttentionSpec::from_config is the single reader of the
+            // `[attention] spec` key; a malformed spec fails config load,
+            // and the stored string is the canonical form.
+            attention_spec: crate::attention::AttentionSpec::from_config(cfg)?
+                .map(|s| s.to_string())
+                .unwrap_or_default(),
         })
     }
 
     pub fn from_file(path: &Path) -> Result<ServingConfig> {
         Self::from_config(&Config::load(path)?)
+    }
+
+    /// The attention backend spec this config serves. An explicit
+    /// `[attention] spec = "..."` wins; otherwise the spec is derived from
+    /// the legacy `variant` + `[prescore]` keys (`prescored_*` variants run
+    /// Algorithm 2, everything else exact attention).
+    pub fn attention_spec(&self) -> Result<crate::attention::AttentionSpec> {
+        use crate::attention::{AttentionSpec, PreScoredConfig};
+        use crate::prescore::{Method, PreScoreConfig};
+        if !self.attention_spec.is_empty() {
+            return AttentionSpec::parse(&self.attention_spec);
+        }
+        if self.variant.starts_with("prescored") {
+            let method = Method::parse(&self.prescore_method).ok_or_else(|| {
+                anyhow::anyhow!("unknown [prescore] method '{}'", self.prescore_method)
+            })?;
+            let prescore =
+                PreScoreConfig { method, top_k: self.prescore_top_k, ..Default::default() };
+            Ok(AttentionSpec::PreScored(PreScoredConfig {
+                prescore,
+                fallback_delta: self.fallback_delta as f32,
+                ..Default::default()
+            }))
+        } else {
+            Ok(AttentionSpec::Exact)
+        }
     }
 }
 
@@ -194,6 +235,40 @@ fallback_delta = 0.05
         // defaults fill unspecified keys
         assert_eq!(sc.max_seq, 256);
         assert_eq!(sc.executor_workers, 0);
+    }
+
+    #[test]
+    fn attention_spec_explicit_wins() {
+        let cfg = Config::parse(
+            "[serving]\nvariant = \"exact\"\n[attention]\nspec = \"hyper:block=32,sample=8\"\n",
+        )
+        .unwrap();
+        let sc = ServingConfig::from_config(&cfg).unwrap();
+        assert_eq!(sc.attention_spec, "hyper:block=32,sample=8");
+        let spec = sc.attention_spec().unwrap();
+        assert_eq!(spec.kernel_name(), "hyper");
+        assert_eq!(spec.to_string(), "hyper:block=32,sample=8");
+        // Malformed specs fail at config load, not first use.
+        let bad = Config::parse("[attention]\nspec = \"bogus\"\n").unwrap();
+        assert!(ServingConfig::from_config(&bad).is_err());
+    }
+
+    #[test]
+    fn attention_spec_derived_from_legacy_keys() {
+        // No [attention] section: prescored_* variants derive Algorithm 2
+        // from the [prescore] keys, everything else serves exact.
+        let sc = ServingConfig::from_config(&Config::parse(SAMPLE).unwrap()).unwrap();
+        let spec = sc.attention_spec().unwrap();
+        assert_eq!(spec.kernel_name(), "prescored");
+        assert_eq!(spec.to_string(), "prescored:kmedian,top_k=128,delta=0.05");
+        let exact = ServingConfig::default().attention_spec().unwrap();
+        assert_eq!(exact.to_string(), "exact");
+        let bad = ServingConfig {
+            variant: "prescored_k64".into(),
+            prescore_method: "bogus".into(),
+            ..Default::default()
+        };
+        assert!(bad.attention_spec().is_err());
     }
 
     #[test]

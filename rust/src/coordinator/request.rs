@@ -50,8 +50,12 @@ pub struct Response {
     pub generated: Vec<u32>,
     /// Time-to-first-result in milliseconds.
     pub latency_ms: f64,
-    /// Number of keys the pre-scorer retained for this request (reporting).
+    /// Attention kernel that served this request (AttnStats::kernel).
+    pub kernel: String,
+    /// Keys the attention backend retained for this request's context
+    /// (= context length when the backend is unfiltered or fell back).
     pub retained_keys: usize,
+    /// Algorithm 2 line 2: the δ-fallback disabled filtering.
     pub fallback_used: bool,
 }
 
@@ -84,6 +88,7 @@ mod tests {
             nll: vec![2f32.ln(); 4],
             generated: vec![],
             latency_ms: 1.0,
+            kernel: "exact".into(),
             retained_keys: 8,
             fallback_used: false,
         };

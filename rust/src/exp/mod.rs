@@ -2,11 +2,11 @@
 //! workload builders and metric loops that regenerate the paper's tables
 //! and figures (see DESIGN.md experiment index).
 
-use crate::attention::{Coupling, HyperConfig, PreScoredConfig};
+use crate::attention::{AttentionSpec, AttnPolicy, Coupling, HyperConfig, PreScoredConfig};
 use crate::data::corpus;
 use crate::data::images::{dataset, to_patches, ImageConfig};
 use crate::metrics::PplAccum;
-use crate::model::{AttnMode, Transformer, Vit, VitAttnMode};
+use crate::model::{Transformer, Vit};
 use crate::prescore::{Method, PreScoreConfig};
 
 /// Evaluation corpus: a mixed-length set of documents. `long_only`
@@ -25,24 +25,25 @@ pub fn eval_docs(vocab: u32, max_len: usize, n: usize, long_only: bool, seed: u6
         .collect()
 }
 
-/// Aggregate PPL of a model/mode over documents.
-pub fn ppl_over(model: &Transformer, mode: &AttnMode, docs: &[Vec<u32>]) -> f64 {
+/// Aggregate PPL of a model/spec over documents.
+pub fn ppl_over(model: &Transformer, spec: &AttentionSpec, docs: &[Vec<u32>]) -> f64 {
+    let policy = AttnPolicy::uniform(spec.clone());
     let mut acc = PplAccum::default();
     for d in docs {
-        acc.add(&model.nll(d, mode));
+        acc.add(&model.nll_policy(d, &policy));
     }
     acc.ppl()
 }
 
-/// Build the paper's standard mode for "<method>+Hyper" with a key budget
+/// Build the paper's standard spec for "<method>+Hyper" with a key budget
 /// and residual sample size, in the requested coupling.
-pub fn prescored_mode(
+pub fn prescored_spec(
     method: Method,
     top_k: usize,
     sample_size: usize,
     coupling: Coupling,
     blockwise_sorted: bool,
-) -> AttnMode {
+) -> AttentionSpec {
     let hyper = HyperConfig {
         block_size: 64,
         lsh_bits: if blockwise_sorted { 16 } else { 1 },
@@ -50,7 +51,7 @@ pub fn prescored_mode(
         seed: 7,
         ..Default::default()
     };
-    AttnMode::PreScored(PreScoredConfig {
+    AttentionSpec::PreScored(PreScoredConfig {
         prescore: PreScoreConfig { method, top_k, seed: 7, ..Default::default() },
         hyper,
         fallback_delta: 0.0,
@@ -58,11 +59,11 @@ pub fn prescored_mode(
     })
 }
 
-/// Plain HyperAttention mode. `blockwise_sorted = false` degrades the LSH to
+/// Plain HyperAttention spec. `blockwise_sorted = false` degrades the LSH to
 /// a single hyperplane — effectively unsorted buckets — our mapping of the
 /// paper's "Blockwise Opt. = False" ablation (Table 1).
-pub fn hyper_mode(sample_size: usize, blockwise_sorted: bool) -> AttnMode {
-    AttnMode::Hyper(HyperConfig {
+pub fn hyper_spec(sample_size: usize, blockwise_sorted: bool) -> AttentionSpec {
+    AttentionSpec::Hyper(HyperConfig {
         block_size: 64,
         lsh_bits: if blockwise_sorted { 16 } else { 1 },
         sample_size,
@@ -79,9 +80,14 @@ pub fn vit_eval_data(img_cfg: &ImageConfig, n: usize, seed: u64) -> Vec<(crate::
         .collect()
 }
 
-/// Accuracy of a ViT under an attention substitution.
-pub fn vit_accuracy(model: &Vit, data: &[(crate::linalg::Matrix, usize)], mode: &VitAttnMode) -> f64 {
-    model.accuracy(data, mode)
+/// Accuracy of a ViT under an attention-substitution spec.
+pub fn vit_accuracy(
+    model: &Vit,
+    data: &[(crate::linalg::Matrix, usize)],
+    spec: &AttentionSpec,
+) -> f64 {
+    let backend = spec.build();
+    model.accuracy_backend(data, backend.as_ref())
 }
 
 #[cfg(test)]
@@ -104,7 +110,22 @@ mod tests {
         let cfg = TransformerConfig { vocab: 64, d_model: 32, n_layers: 1, n_heads: 2, max_seq: 64 };
         let m = Transformer::random(cfg, 1);
         let docs = eval_docs(64, 64, 2, true, 2);
-        let p = ppl_over(&m, &AttnMode::Exact, &docs);
+        let p = ppl_over(&m, &AttentionSpec::Exact, &docs);
         assert!(p.is_finite() && p > 1.0);
+    }
+
+    #[test]
+    fn exp_specs_round_trip_as_strings() {
+        // The helpers hand benches specs; their canonical strings must be
+        // lossless so sweeps can be specified from the CLI too.
+        for spec in [
+            prescored_spec(Method::KMeans, 64, 16, Coupling::Glm3Corrected, true),
+            prescored_spec(Method::KMedian, 8, 0, Coupling::Glm2Artifact, false),
+            hyper_spec(64, true),
+            hyper_spec(16, false),
+        ] {
+            let s = spec.to_string();
+            assert_eq!(AttentionSpec::parse(&s).unwrap(), spec, "{s}");
+        }
     }
 }

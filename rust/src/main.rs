@@ -9,13 +9,13 @@
 //! * `info` — print artifact/registry information.
 
 use anyhow::Result;
-use prescored::attention::{Coupling, HyperConfig, PreScoredConfig};
+use prescored::attention::{AttentionSpec, AttnPolicy};
 use prescored::config::ServingConfig;
 use prescored::coordinator::Request;
 use prescored::data::{corpus, workload};
 use prescored::metrics::PplAccum;
-use prescored::model::{AttnMode, Transformer, TransformerConfig, WeightStore};
-use prescored::prescore::{Method, PreScoreConfig};
+use prescored::model::{Transformer, TransformerConfig, WeightStore};
+use prescored::prescore::Method;
 use prescored::server::ScoringServer;
 use prescored::util::cli::Cli;
 use std::path::Path;
@@ -23,15 +23,17 @@ use std::path::Path;
 fn cli() -> Cli {
     Cli::new("prescored", "Pre-Scored HyperAttention serving stack")
         .command("serve", "serve a synthetic trace through the PJRT artifacts")
-        .command("ppl", "compare attention modes on the pure-rust substrate")
+        .command("ppl", "compare attention specs on the pure-rust substrate")
         .command("info", "print artifact info")
         .opt("artifacts", "artifacts", "artifacts directory")
         .opt("variant", "exact", "artifact variant (exact | prescored_k64)")
         .opt("requests", "64", "number of trace requests (serve)")
         .opt("rate", "50", "request rate per second (serve)")
-        .opt("method", "kmeans", "prescore method (ppl)")
-        .opt("top-k", "64", "retained keys (ppl)")
+        .opt("method", "kmeans", "prescore method for the default sweep (ppl)")
+        .opt("top-k", "64", "retained keys for the default sweep (ppl)")
         .opt("seqs", "4", "eval sequences (ppl)")
+        .opt("specs", "", "';'-separated attention specs to sweep, e.g. \
+             'exact;hyper:block=64;prescored:kmeans,top_k=64' (ppl)")
         .opt("config", "", "serving config file (TOML subset)")
 }
 
@@ -66,7 +68,12 @@ fn cmd_serve(args: &prescored::util::cli::Args) -> Result<()> {
     let n_req = args.get_usize("requests").unwrap_or(64);
     let rate = args.get_f64("rate").unwrap_or(50.0);
 
-    println!("starting server: variant={} artifacts={}", cfg.variant, cfg.artifacts_dir);
+    println!(
+        "starting server: variant={} artifacts={} attention={}",
+        cfg.variant,
+        cfg.artifacts_dir,
+        cfg.attention_spec()?
+    );
     let max_seq = cfg.max_seq;
     let server = ScoringServer::start(cfg)?;
 
@@ -95,9 +102,10 @@ fn cmd_serve(args: &prescored::util::cli::Args) -> Result<()> {
     }
     let stats = server.shutdown();
     println!(
-        "served {} requests in {} batches | ppl {:.3} | p50 {:.1}ms p99 {:.1}ms | {:.1} req/s | {:.0} tok/s",
+        "served {} requests in {} batches [{}] | ppl {:.3} | p50 {:.1}ms p99 {:.1}ms | {:.1} req/s | {:.0} tok/s",
         stats.completed,
         stats.batches,
+        stats.kernel,
         ppl.ppl(),
         stats.latency_p50_ms,
         stats.latency_p99_ms,
@@ -111,35 +119,33 @@ fn cmd_ppl(args: &prescored::util::cli::Args) -> Result<()> {
     let dir = Path::new(args.get("artifacts").unwrap_or("artifacts"));
     let ws = WeightStore::load(&dir.join("weights.bin"))?;
     let model = Transformer::from_weights(&ws, TransformerConfig::default());
-    let method = Method::parse(args.get("method").unwrap_or("kmeans"))
-        .ok_or_else(|| anyhow::anyhow!("unknown method"))?;
-    let top_k = args.get_usize("top-k").unwrap_or(64);
     let n_seqs = args.get_usize("seqs").unwrap_or(4);
 
-    let modes: Vec<(String, AttnMode)> = vec![
-        ("exact".into(), AttnMode::Exact),
-        ("flash".into(), AttnMode::Flash),
-        (
-            "hyper".into(),
-            AttnMode::Hyper(HyperConfig { block_size: 64, sample_size: 64, ..Default::default() }),
-        ),
-        (
-            format!("{}+hyper k={top_k}", method.name()),
-            AttnMode::PreScored(PreScoredConfig {
-                prescore: PreScoreConfig { method, top_k, ..Default::default() },
-                hyper: HyperConfig { block_size: 64, sample_size: 64, ..Default::default() },
-                fallback_delta: 0.0,
-                coupling: Coupling::Glm3Corrected,
-            }),
-        ),
-    ];
-    for (name, mode) in &modes {
+    // Kernel sweep = a list of declarative spec strings; `--specs` overrides
+    // the default exact/flash/hyper/prescored comparison.
+    let spec_arg = args.get("specs").unwrap_or("").trim();
+    let spec_strings: Vec<String> = if spec_arg.is_empty() {
+        let method = Method::parse(args.get("method").unwrap_or("kmeans"))
+            .ok_or_else(|| anyhow::anyhow!("unknown method"))?;
+        let top_k = args.get_usize("top-k").unwrap_or(64);
+        vec![
+            "exact".into(),
+            "flash".into(),
+            "hyper:block=64,sample=64".into(),
+            format!("prescored:{},top_k={top_k},block=64,sample=64", method.name()),
+        ]
+    } else {
+        spec_arg.split(';').map(str::trim).filter(|s| !s.is_empty()).map(String::from).collect()
+    };
+
+    for s in &spec_strings {
+        let policy = AttnPolicy::uniform(AttentionSpec::parse(s)?);
         let mut acc = PplAccum::default();
-        for s in 0..n_seqs {
-            let toks = corpus::generate(512, 256, 40_000 + s as u64);
-            acc.add(&model.nll(&toks, mode));
+        for i in 0..n_seqs {
+            let toks = corpus::generate(512, 256, 40_000 + i as u64);
+            acc.add(&model.nll_policy(&toks, &policy));
         }
-        println!("{name:<24} ppl {:.4}", acc.ppl());
+        println!("{s:<48} ppl {:.4}", acc.ppl());
     }
     Ok(())
 }

@@ -5,9 +5,13 @@
 //! * [`transformer`] — a causal transformer LM numerically mirroring
 //!   `python/compile/model.py`, with *pluggable attention* so the experiment
 //!   benches can sweep every attention variant (exact / flash / hyper /
-//!   pre-scored, both couplings) over the same trained weights.
+//!   pre-scored, both couplings) over the same trained weights. Kernels are
+//!   constructed exclusively via [`crate::attention::AttentionSpec`]; a
+//!   [`crate::attention::AttnPolicy`] selects backends uniformly or
+//!   per-layer.
 //! * [`vit`] — the ViT encoder mirroring `python/compile/vit_model.py` for
-//!   the §5.3 zero-shot attention-substitution experiments.
+//!   the §5.3 zero-shot attention-substitution experiments (its modes lower
+//!   to `restricted:` specs).
 
 pub mod transformer;
 pub mod vit;

@@ -9,10 +9,7 @@
 //! An integration test validates it against the PJRT-executed artifact.
 
 use super::weights::WeightStore;
-use crate::attention::{
-    exact_attention, flash_attention, hyper_attention, prescored_hyper_attention,
-    AttentionInputs, HyperConfig, PreScoredConfig,
-};
+use crate::attention::{AttentionInputs, AttentionSpec, AttnPolicy, HyperConfig, PreScoredConfig};
 use crate::linalg::ops::matmul;
 use crate::linalg::Matrix;
 
@@ -39,7 +36,10 @@ impl TransformerConfig {
     }
 }
 
-/// Which attention implementation runs inside each layer.
+/// Which attention implementation runs inside each layer — a thin,
+/// ergonomic wrapper over [`AttentionSpec`]: every variant lowers to a spec
+/// via [`AttnMode::spec`] and the forward pass constructs the kernel
+/// exclusively through `spec().build()`.
 #[derive(Debug, Clone)]
 pub enum AttnMode {
     /// Naive exact softmax attention.
@@ -50,6 +50,23 @@ pub enum AttnMode {
     Hyper(HyperConfig),
     /// Pre-Scored HyperAttention (Algorithm 2), either coupling.
     PreScored(PreScoredConfig),
+}
+
+impl AttnMode {
+    /// The declarative form of this mode (the single construction path).
+    pub fn spec(&self) -> AttentionSpec {
+        match self {
+            AttnMode::Exact => AttentionSpec::Exact,
+            AttnMode::Flash => AttentionSpec::flash(),
+            AttnMode::Hyper(cfg) => AttentionSpec::Hyper(cfg.clone()),
+            AttnMode::PreScored(cfg) => AttentionSpec::PreScored(cfg.clone()),
+        }
+    }
+
+    /// Uniform per-layer policy for this mode.
+    pub fn policy(&self) -> AttnPolicy {
+        AttnPolicy::uniform(self.spec())
+    }
 }
 
 /// The model: config + loaded weights.
@@ -135,8 +152,20 @@ impl Transformer {
 
     /// Forward pass: logits [n, vocab].
     pub fn forward(&self, tokens: &[u32], mode: &AttnMode) -> Matrix {
+        self.forward_policy(tokens, &mode.policy())
+    }
+
+    /// Forward pass under a uniform or per-layer backend policy (per-layer
+    /// policies must list exactly `n_layers` specs).
+    pub fn forward_policy(&self, tokens: &[u32], policy: &AttnPolicy) -> Matrix {
         let n = tokens.len();
         assert!(n <= self.cfg.max_seq, "sequence longer than max_seq");
+        assert!(
+            policy.is_uniform() || policy.num_slots() == self.cfg.n_layers,
+            "per-layer policy has {} specs for {} layers",
+            policy.num_slots(),
+            self.cfg.n_layers
+        );
         let d = self.cfg.d_model;
         let nh = self.cfg.n_heads;
         let dh = self.cfg.d_head();
@@ -163,7 +192,10 @@ impl Transformer {
                 let k = k_all.slice_cols(c0, c1);
                 let v = v_all.slice_cols(c0, c1);
                 let inp = AttentionInputs::new(&q, &k, &v).causal(true);
-                let out = self.run_attention(&inp, mode, (li * nh + head) as u64);
+                // Per-layer/head seed salt decorrelates the stochastic
+                // kernels' RNG streams (deterministic kernels ignore it).
+                let out =
+                    policy.backend(li).forward_salted(&inp, (li * nh + head) as u64).out;
                 for i in 0..n {
                     att_all.row_mut(i)[c0..c1].copy_from_slice(out.row(i));
                 }
@@ -196,27 +228,14 @@ impl Transformer {
         matmul(&xf, &self.head)
     }
 
-    fn run_attention(&self, inp: &AttentionInputs, mode: &AttnMode, salt: u64) -> Matrix {
-        match mode {
-            AttnMode::Exact => exact_attention(inp),
-            AttnMode::Flash => flash_attention(inp),
-            AttnMode::Hyper(cfg) => {
-                let mut c = cfg.clone();
-                c.seed = c.seed.wrapping_add(salt);
-                hyper_attention(inp, &c, None)
-            }
-            AttnMode::PreScored(cfg) => {
-                let mut c = cfg.clone();
-                c.hyper.seed = c.hyper.seed.wrapping_add(salt);
-                c.prescore.seed = c.prescore.seed.wrapping_add(salt);
-                prescored_hyper_attention(inp, &c).0
-            }
-        }
-    }
-
     /// Per-token next-token negative log-likelihood (length n−1).
     pub fn nll(&self, tokens: &[u32], mode: &AttnMode) -> Vec<f32> {
-        let logits = self.forward(tokens, mode);
+        self.nll_policy(tokens, &mode.policy())
+    }
+
+    /// [`Transformer::nll`] under a backend policy.
+    pub fn nll_policy(&self, tokens: &[u32], policy: &AttnPolicy) -> Vec<f32> {
+        let logits = self.forward_policy(tokens, policy);
         let n = tokens.len();
         let mut out = Vec::with_capacity(n - 1);
         let mut row = vec![0.0f32; self.cfg.vocab];
@@ -231,7 +250,12 @@ impl Transformer {
 
     /// Perplexity = exp(mean nll).
     pub fn perplexity(&self, tokens: &[u32], mode: &AttnMode) -> f64 {
-        let nll = self.nll(tokens, mode);
+        self.perplexity_policy(tokens, &mode.policy())
+    }
+
+    /// [`Transformer::perplexity`] under a backend policy.
+    pub fn perplexity_policy(&self, tokens: &[u32], policy: &AttnPolicy) -> f64 {
+        let nll = self.nll_policy(tokens, policy);
         (nll.iter().map(|&v| v as f64).sum::<f64>() / nll.len() as f64).exp()
     }
 }
@@ -339,6 +363,42 @@ mod tests {
             let ppl = m.perplexity(&tokens, &mode);
             assert!(ppl.is_finite() && ppl > 1.0, "{coupling:?} ppl {ppl}");
         }
+    }
+
+    #[test]
+    fn policy_route_matches_mode_route_bitwise() {
+        let m = Transformer::random(tiny(), 7);
+        let tokens = corpus::generate(64, 32, 6);
+        // Stochastic kernel exercises the per-layer/head seed salting.
+        let mode = AttnMode::PreScored(PreScoredConfig {
+            prescore: PreScoreConfig { method: Method::KMeans, top_k: 8, ..Default::default() },
+            hyper: HyperConfig { block_size: 8, sample_size: 4, ..Default::default() },
+            fallback_delta: 0.0,
+            coupling: Coupling::Glm3Corrected,
+        });
+        let a = m.forward(&tokens, &mode);
+        let b = m.forward_policy(&tokens, &AttnPolicy::uniform(mode.spec()));
+        assert_eq!(a.data, b.data);
+    }
+
+    #[test]
+    fn per_layer_policy_mixes_kernels() {
+        let m = Transformer::random(tiny(), 8); // tiny() has 2 layers
+        let tokens = corpus::generate(64, 32, 7);
+        let policy =
+            AttnPolicy::parse("flash;prescored:kmeans,top_k=8,block=8,sample=4").unwrap();
+        let logits = m.forward_policy(&tokens, &policy);
+        assert_eq!((logits.rows, logits.cols), (32, 64));
+        assert!(logits.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    #[should_panic(expected = "per-layer policy")]
+    fn per_layer_policy_wrong_depth_panics() {
+        let m = Transformer::random(tiny(), 9);
+        let tokens = corpus::generate(64, 8, 8);
+        let policy = AttnPolicy::parse("exact;exact;exact").unwrap();
+        m.forward_policy(&tokens, &policy);
     }
 
     #[test]

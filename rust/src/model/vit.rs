@@ -9,11 +9,10 @@
 
 use super::transformer::{gelu_tanh, layernorm};
 use super::weights::WeightStore;
-use crate::attention::prescored::restricted_exact_attention;
-use crate::attention::{exact_attention, AttentionInputs};
+use crate::attention::{AttentionBackend, AttentionInputs, AttentionSpec, RestrictedSelector};
 use crate::linalg::ops::matmul;
 use crate::linalg::Matrix;
-use crate::prescore::{prescore, prescore_balanced, Method, PreScoreConfig};
+use crate::prescore::{Method, PreScoreConfig};
 
 /// ViT hyper-parameters (must match vit_weights.bin).
 #[derive(Debug, Clone)]
@@ -41,7 +40,10 @@ impl VitConfig {
     }
 }
 
-/// Attention substitution mode for the ViT.
+/// Attention substitution mode for the ViT — a thin wrapper over
+/// [`AttentionSpec`]: every variant lowers to a `restricted:` spec (or
+/// `exact`) via [`VitAttnMode::spec`], and the forward pass constructs the
+/// kernel exclusively through `spec().build()`.
 #[derive(Debug, Clone)]
 pub enum VitAttnMode {
     /// The pretrained model's full softmax attention (baseline row).
@@ -53,6 +55,37 @@ pub enum VitAttnMode {
     LeverageTopK { k: usize, exact: bool },
     /// ℓ2-norm top-k substitution (weak baseline, Table 6).
     L2NormTopK { k: usize },
+}
+
+impl VitAttnMode {
+    /// The declarative form of this mode (the single construction path).
+    pub fn spec(&self) -> AttentionSpec {
+        match self {
+            VitAttnMode::Exact => AttentionSpec::Exact,
+            VitAttnMode::KMeansSampled { num_clusters, num_samples, seed } => {
+                AttentionSpec::Restricted(RestrictedSelector::Balanced {
+                    num_clusters: *num_clusters,
+                    num_samples: *num_samples,
+                    max_iters: 10,
+                    seed: *seed,
+                })
+            }
+            VitAttnMode::LeverageTopK { k, exact } => {
+                AttentionSpec::Restricted(RestrictedSelector::Scored(PreScoreConfig {
+                    method: Method::Leverage { exact: *exact },
+                    top_k: *k,
+                    ..Default::default()
+                }))
+            }
+            VitAttnMode::L2NormTopK { k } => {
+                AttentionSpec::Restricted(RestrictedSelector::Scored(PreScoreConfig {
+                    method: Method::L2Norm,
+                    top_k: *k,
+                    ..Default::default()
+                }))
+            }
+        }
+    }
 }
 
 /// The ViT model.
@@ -142,6 +175,12 @@ impl Vit {
 
     /// Forward: patches [num_patches, patch_dim] → class logits.
     pub fn forward(&self, patches: &Matrix, mode: &VitAttnMode) -> Vec<f32> {
+        let backend = mode.spec().build();
+        self.forward_backend(patches, backend.as_ref())
+    }
+
+    /// Forward under a pre-built attention backend (uniform across layers).
+    pub fn forward_backend(&self, patches: &Matrix, backend: &dyn AttentionBackend) -> Vec<f32> {
         let d = self.cfg.d_model;
         let nh = self.cfg.n_heads;
         let dh = self.cfg.d_head();
@@ -172,7 +211,7 @@ impl Vit {
                 let k = k_all.slice_cols(c0, c1);
                 let v = v_all.slice_cols(c0, c1);
                 let inp = AttentionInputs::new(&q, &k, &v);
-                let out = self.run_attention(&inp, mode);
+                let out = backend.forward(&inp).out;
                 for i in 0..n {
                     att_all.row_mut(i)[c0..c1].copy_from_slice(out.row(i));
                 }
@@ -206,34 +245,15 @@ impl Vit {
         matmul(&cls_row, &self.head).data
     }
 
-    fn run_attention(&self, inp: &AttentionInputs, mode: &VitAttnMode) -> Matrix {
-        match mode {
-            VitAttnMode::Exact => exact_attention(inp),
-            VitAttnMode::KMeansSampled { num_clusters, num_samples, seed } => {
-                let sel = prescore_balanced(inp.k, *num_clusters, *num_samples, 10, *seed);
-                restricted_exact_attention(inp, &sel.selected)
-            }
-            VitAttnMode::LeverageTopK { k, exact } => {
-                let cfg = PreScoreConfig {
-                    method: Method::Leverage { exact: *exact },
-                    top_k: *k,
-                    ..Default::default()
-                };
-                let sel = prescore(inp.k, &cfg);
-                restricted_exact_attention(inp, &sel.selected)
-            }
-            VitAttnMode::L2NormTopK { k } => {
-                let cfg =
-                    PreScoreConfig { method: Method::L2Norm, top_k: *k, ..Default::default() };
-                let sel = prescore(inp.k, &cfg);
-                restricted_exact_attention(inp, &sel.selected)
-            }
-        }
-    }
-
     /// Predicted class.
     pub fn predict(&self, patches: &Matrix, mode: &VitAttnMode) -> usize {
-        let logits = self.forward(patches, mode);
+        let backend = mode.spec().build();
+        self.predict_backend(patches, backend.as_ref())
+    }
+
+    /// Predicted class under a pre-built backend.
+    pub fn predict_backend(&self, patches: &Matrix, backend: &dyn AttentionBackend) -> usize {
+        let logits = self.forward_backend(patches, backend);
         logits
             .iter()
             .enumerate()
@@ -244,7 +264,19 @@ impl Vit {
 
     /// Top-1 accuracy over a labelled dataset of (patches, label).
     pub fn accuracy(&self, data: &[(Matrix, usize)], mode: &VitAttnMode) -> f64 {
-        let correct = data.iter().filter(|(p, l)| self.predict(p, mode) == *l).count();
+        let backend = mode.spec().build();
+        self.accuracy_backend(data, backend.as_ref())
+    }
+
+    /// Top-1 accuracy under a pre-built backend (one kernel construction
+    /// for the whole dataset).
+    pub fn accuracy_backend(
+        &self,
+        data: &[(Matrix, usize)],
+        backend: &dyn AttentionBackend,
+    ) -> f64 {
+        let correct =
+            data.iter().filter(|(p, l)| self.predict_backend(p, backend) == *l).count();
         correct as f64 / data.len() as f64
     }
 }
@@ -324,6 +356,29 @@ mod tests {
         ] {
             let logits = model.forward(&p, &mode);
             assert!(logits.iter().all(|v| v.is_finite()), "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn spec_string_route_matches_mode_route_bitwise() {
+        // mode → spec → canonical string → parse → build must reproduce the
+        // mode route exactly (selection seeds included).
+        let (vc, ic) = tiny_cfg();
+        let model = Vit::random(vc.clone(), 6);
+        let ds = dataset(&ic, 1, 5);
+        let p = to_patches(&ds[0], &ic);
+        for mode in [
+            VitAttnMode::Exact,
+            VitAttnMode::KMeansSampled { num_clusters: 4, num_samples: 8, seed: 5 },
+            VitAttnMode::LeverageTopK { k: 8, exact: true },
+            VitAttnMode::L2NormTopK { k: 8 },
+        ] {
+            let a = model.forward(&p, &mode);
+            let spec = AttentionSpec::parse(&mode.spec().to_string()).unwrap();
+            assert_eq!(spec, mode.spec(), "{mode:?} spec string must be lossless");
+            let backend = spec.build();
+            let b = model.forward_backend(&p, backend.as_ref());
+            assert_eq!(a, b, "{mode:?}");
         }
     }
 

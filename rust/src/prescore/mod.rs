@@ -52,19 +52,32 @@ pub enum Method {
 }
 
 impl Method {
-    /// Parse from a CLI string.
+    /// Gamma of the bare `kernel-kmeans` form (≤ 0 = median heuristic).
+    pub const DEFAULT_KERNEL_GAMMA: f32 = -1.0;
+    /// Batch size of the bare `minibatch` form.
+    pub const DEFAULT_MINIBATCH: usize = 256;
+
+    /// Parse from a CLI/spec string. Parameterized variants accept an
+    /// optional `:<value>` suffix (`kernel-kmeans:<gamma>`,
+    /// `minibatch:<batch>`, `lp:<p>`); the bare forms use the defaults.
     pub fn parse(s: &str) -> Option<Method> {
         match s {
             "kmeans" => Some(Method::KMeans),
             "kmedian" => Some(Method::KMedian),
             "leverage" => Some(Method::Leverage { exact: false }),
             "leverage-exact" => Some(Method::Leverage { exact: true }),
-            "kernel-kmeans" => Some(Method::GaussianKMeans { gamma: -1.0 }),
-            "minibatch" => Some(Method::MiniBatch { batch: 256 }),
+            "kernel-kmeans" => {
+                Some(Method::GaussianKMeans { gamma: Self::DEFAULT_KERNEL_GAMMA })
+            }
+            "minibatch" => Some(Method::MiniBatch { batch: Self::DEFAULT_MINIBATCH }),
             "l2norm" => Some(Method::L2Norm),
             _ => {
                 if let Some(p) = s.strip_prefix("lp:") {
                     p.parse().ok().map(|p| Method::Minkowski { p })
+                } else if let Some(g) = s.strip_prefix("kernel-kmeans:") {
+                    g.parse().ok().map(|gamma| Method::GaussianKMeans { gamma })
+                } else if let Some(b) = s.strip_prefix("minibatch:") {
+                    b.parse().ok().map(|batch| Method::MiniBatch { batch })
                 } else {
                     None
                 }
@@ -72,22 +85,30 @@ impl Method {
         }
     }
 
+    /// Canonical string form; `parse(name(m)) == m` for every variant
+    /// (non-default parameters are emitted as a `:<value>` suffix).
     pub fn name(&self) -> String {
         match self {
             Method::KMeans => "kmeans".into(),
             Method::KMedian => "kmedian".into(),
             Method::Leverage { exact: true } => "leverage-exact".into(),
             Method::Leverage { exact: false } => "leverage".into(),
-            Method::GaussianKMeans { .. } => "kernel-kmeans".into(),
+            Method::GaussianKMeans { gamma } if *gamma == Self::DEFAULT_KERNEL_GAMMA => {
+                "kernel-kmeans".into()
+            }
+            Method::GaussianKMeans { gamma } => format!("kernel-kmeans:{gamma}"),
             Method::Minkowski { p } => format!("lp:{p}"),
-            Method::MiniBatch { .. } => "minibatch".into(),
+            Method::MiniBatch { batch } if *batch == Self::DEFAULT_MINIBATCH => {
+                "minibatch".into()
+            }
+            Method::MiniBatch { batch } => format!("minibatch:{batch}"),
             Method::L2Norm => "l2norm".into(),
         }
     }
 }
 
 /// PreScore configuration (Algorithm 1 inputs).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct PreScoreConfig {
     pub method: Method,
     /// Number of clusters; `None` = the paper's default k = d + 1.
@@ -337,6 +358,33 @@ mod tests {
             assert_eq!(Method::parse(&m.name()).unwrap().name(), m.name());
         }
         assert!(Method::parse("bogus").is_none());
+    }
+
+    #[test]
+    fn method_roundtrip_lossless_for_every_variant() {
+        // parse(name(m)) == m, including the parameterized variants that
+        // used to drop gamma/batch in their canonical form.
+        for m in [
+            Method::KMeans,
+            Method::KMedian,
+            Method::Leverage { exact: true },
+            Method::Leverage { exact: false },
+            Method::GaussianKMeans { gamma: -1.0 },
+            Method::GaussianKMeans { gamma: 0.5 },
+            Method::Minkowski { p: 1.5 },
+            Method::MiniBatch { batch: 256 },
+            Method::MiniBatch { batch: 32 },
+            Method::L2Norm,
+        ] {
+            assert_eq!(Method::parse(&m.name()), Some(m), "lossy round-trip for {m:?}");
+        }
+        assert_eq!(
+            Method::parse("kernel-kmeans:2.25"),
+            Some(Method::GaussianKMeans { gamma: 2.25 })
+        );
+        assert_eq!(Method::parse("minibatch:64"), Some(Method::MiniBatch { batch: 64 }));
+        assert!(Method::parse("minibatch:x").is_none());
+        assert!(Method::parse("kernel-kmeans:").is_none());
     }
 
     #[test]

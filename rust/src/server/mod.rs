@@ -12,6 +12,7 @@
 //! from the [`crate::parallel`] pool width" (i.e. `PALLAS_THREADS`), capped
 //! so a laptop-sized pool doesn't compile one artifact registry per core.
 
+use crate::attention::{AttentionBackend, AttentionSpec};
 use crate::config::ServingConfig;
 use crate::coordinator::{Batch, BatcherConfig, DynamicBatcher, Request, Response};
 use crate::metrics::LatencyStats;
@@ -43,6 +44,9 @@ pub struct ServerStats {
     pub tokens_per_s: f64,
     /// Executor workers that drained the batch queue.
     pub workers: usize,
+    /// Attention kernel the server was configured with
+    /// ([`crate::attention::AttnStats::kernel`]).
+    pub kernel: String,
 }
 
 /// Mutable counters shared between the executor workers.
@@ -79,6 +83,15 @@ impl ScoringServer {
     /// so misconfiguration fails fast on the caller.
     pub fn start(cfg: ServingConfig) -> Result<ScoringServer> {
         let (jobs_tx, jobs_rx): (Sender<Job>, Receiver<Job>) = channel();
+        // Single construction path: [attention] spec (or the legacy-key
+        // derivation) → backend. Misconfiguration fails fast here; the
+        // backend is the source of per-request AttnStats, so the spec —
+        // explicit or derived — must describe the kernel the artifact
+        // variant actually executes (see validate_spec_for_variant), or the
+        // reported stats would describe a kernel that never ran.
+        let spec = cfg.attention_spec()?;
+        validate_spec_for_variant(&spec, &cfg.variant)?;
+        let backend: Box<dyn AttentionBackend> = spec.build();
         let dir = Path::new(&cfg.artifacts_dir).to_path_buf();
         let buckets = ArtifactRegistry::new(&dir, cfg.max_seq).available_batches(&cfg.variant);
         if buckets.is_empty() {
@@ -88,7 +101,7 @@ impl ScoringServer {
                 dir.display()
             );
         }
-        let handle = std::thread::spawn(move || run_loop(cfg, buckets, jobs_rx));
+        let handle = std::thread::spawn(move || run_loop(cfg, buckets, jobs_rx, backend));
         Ok(ScoringServer { jobs_tx, handle: Some(handle) })
     }
 
@@ -108,6 +121,45 @@ impl ScoringServer {
     }
 }
 
+/// Gate the attention spec (explicit `[attention] spec` or the legacy-key
+/// derivation) against the artifact variant that actually executes
+/// requests. Serving artifacts exist for two kernel families only: `exact`
+/// artifacts run exact attention (an `exact` or `flash` spec), and
+/// `prescored_k<K>` artifacts bake in Algorithm 2 with a fixed key budget K
+/// (a `prescored:` spec whose `top_k` matches K). Other spec kernels
+/// (`hyper:`, `restricted:`) run on the pure-Rust substrate (`ppl` CLI,
+/// benches) but have no serving artifact. The δ-threshold and method are
+/// not encoded in the variant name and cannot be cross-checked.
+fn validate_spec_for_variant(spec: &AttentionSpec, variant: &str) -> Result<()> {
+    if let Some(k) =
+        variant.strip_prefix("prescored_k").and_then(|k| k.parse::<usize>().ok())
+    {
+        match spec {
+            AttentionSpec::PreScored(cfg) if cfg.prescore.top_k == k => return Ok(()),
+            AttentionSpec::PreScored(cfg) => anyhow::bail!(
+                "attention spec retains top_k={} but artifact variant '{variant}' bakes \
+                 in k={k} — per-request stats would misreport the retained budget \
+                 (set [attention] spec / [prescore] top_k to match the variant)",
+                cfg.prescore.top_k
+            ),
+            _ => {}
+        }
+    } else if variant.starts_with("prescored") {
+        // Prescored family without a parseable budget: family check only.
+        if matches!(spec, AttentionSpec::PreScored(_)) {
+            return Ok(());
+        }
+    } else if matches!(spec, AttentionSpec::Exact | AttentionSpec::Flash { .. }) {
+        return Ok(());
+    }
+    anyhow::bail!(
+        "attention spec '{spec}' is inconsistent with artifact variant '{variant}': \
+         exact artifacts serve exact/flash specs, prescored_k<K> artifacts serve \
+         prescored specs with the matching top_k; hyper/restricted specs run on the \
+         pure-Rust substrate (ppl CLI, benches) and have no serving artifact"
+    )
+}
+
 /// Resolve the executor pool width from config / the global parallel pool.
 fn worker_count(cfg: &ServingConfig) -> usize {
     if cfg.executor_workers > 0 {
@@ -116,7 +168,12 @@ fn worker_count(cfg: &ServingConfig) -> usize {
     parallel::num_threads().clamp(1, 8)
 }
 
-fn run_loop(cfg: ServingConfig, buckets: Vec<usize>, jobs_rx: Receiver<Job>) -> ServerStats {
+fn run_loop(
+    cfg: ServingConfig,
+    buckets: Vec<usize>,
+    jobs_rx: Receiver<Job>,
+    backend: Box<dyn AttentionBackend>,
+) -> ServerStats {
     let deadline = Duration::from_secs_f64(cfg.batch_deadline_ms / 1e3);
     let mut batcher = DynamicBatcher::new(BatcherConfig {
         buckets: buckets.clone(),
@@ -143,6 +200,7 @@ fn run_loop(cfg: ServingConfig, buckets: Vec<usize>, jobs_rx: Receiver<Job>) -> 
             let shared = &shared;
             let cfg = &cfg;
             let buckets = &buckets;
+            let backend = backend.as_ref();
             s.spawn(move || {
                 // Per-worker registry (PJRT handles are not Send). Every
                 // bucket is pre-compiled before the worker takes traffic.
@@ -160,7 +218,7 @@ fn run_loop(cfg: ServingConfig, buckets: Vec<usize>, jobs_rx: Receiver<Job>) -> 
                         rx.recv()
                     };
                     match item {
-                        Ok(item) => execute_batch(cfg, &mut registry, item, shared),
+                        Ok(item) => execute_batch(cfg, &mut registry, item, shared, backend),
                         Err(_) => break, // queue closed: drain complete
                     }
                 }
@@ -224,6 +282,7 @@ fn run_loop(cfg: ServingConfig, buckets: Vec<usize>, jobs_rx: Receiver<Job>) -> 
         throughput_rps: stats.completed as f64 / elapsed,
         tokens_per_s: stats.scored_tokens as f64 / elapsed,
         workers,
+        kernel: backend.kernel_name().to_string(),
     }
 }
 
@@ -239,6 +298,7 @@ fn execute_batch(
     registry: &mut ArtifactRegistry,
     item: WorkItem,
     shared: &Mutex<SharedStats>,
+    backend: &dyn AttentionBackend,
 ) {
     let WorkItem { batch, responders } = item;
     let lanes = batch.lanes;
@@ -277,13 +337,23 @@ fn execute_batch(
                 stats.completed += 1;
                 stats.scored_tokens += valid;
                 if let Some(tx) = &responders[i] {
+                    // Real per-request stats from the backend this server is
+                    // configured to serve (start() gates explicit specs
+                    // against the artifact variant's family and key budget):
+                    // the retention/fallback decision is a pure function of
+                    // the context length and the backend config, so plan()
+                    // reports what the kernel does for this request's
+                    // context (previously hardcoded to cfg.prescore_top_k /
+                    // false).
+                    let attn = backend.plan(lens[i]);
                     let _ = tx.send(Response {
                         id: req.id,
                         nll,
                         generated: Vec::new(),
                         latency_ms: lat.as_secs_f64() * 1e3,
-                        retained_keys: cfg.prescore_top_k,
-                        fallback_used: false,
+                        kernel: attn.kernel.to_string(),
+                        retained_keys: attn.retained_keys,
+                        fallback_used: attn.fallback_used,
                     });
                 }
             }
@@ -320,5 +390,76 @@ mod tests {
         };
         let err = ScoringServer::start(cfg).err().expect("must fail");
         assert!(format!("{err:#}").contains("make artifacts"));
+    }
+
+    #[test]
+    fn start_fails_fast_on_bad_attention_spec() {
+        // The spec pre-flight runs before the artifact scan, so a malformed
+        // [attention] spec is rejected even without built artifacts.
+        let cfg = ServingConfig {
+            artifacts_dir: "/nonexistent-artifacts".into(),
+            attention_spec: "bogus:kernel".into(),
+            ..Default::default()
+        };
+        let err = ScoringServer::start(cfg).err().expect("must fail");
+        assert!(format!("{err:#}").contains("unknown attention kernel"));
+    }
+
+    #[test]
+    fn start_rejects_spec_variant_mismatch() {
+        // Response stats come from the configured backend; a spec that does
+        // not describe the executing artifact would report stats for a
+        // kernel that never ran.
+        let base = ServingConfig {
+            artifacts_dir: "/nonexistent-artifacts".into(),
+            ..Default::default()
+        };
+        // Wrong family: prescored spec on an exact artifact.
+        let cfg = ServingConfig {
+            variant: "exact".into(),
+            attention_spec: "prescored:kmeans,top_k=8".into(),
+            ..base.clone()
+        };
+        let err = ScoringServer::start(cfg).err().expect("must fail");
+        assert!(format!("{err:#}").contains("inconsistent"), "{err:#}");
+        // Right family, wrong baked-in budget.
+        let cfg = ServingConfig {
+            variant: "prescored_k64".into(),
+            attention_spec: "prescored:kmeans,top_k=8".into(),
+            ..base.clone()
+        };
+        let err = ScoringServer::start(cfg).err().expect("must fail");
+        assert!(format!("{err:#}").contains("bakes in k=64"), "{err:#}");
+        // The gate also covers specs derived from the legacy [prescore]
+        // keys — a [prescore] top_k that contradicts the variant is the
+        // same misreporting bug.
+        let cfg = ServingConfig {
+            variant: "prescored_k64".into(),
+            prescore_top_k: 128,
+            ..base.clone()
+        };
+        let err = ScoringServer::start(cfg).err().expect("must fail");
+        assert!(format!("{err:#}").contains("bakes in k=64"), "{err:#}");
+        // Unservable kernel: hyper has no artifact family at all.
+        let cfg = ServingConfig {
+            variant: "exact".into(),
+            attention_spec: "hyper:block=32".into(),
+            ..base.clone()
+        };
+        let err = ScoringServer::start(cfg).err().expect("must fail");
+        assert!(format!("{err:#}").contains("no serving artifact"), "{err:#}");
+        // Consistent spec/variant pairs pass the gate (and fail later on
+        // the missing artifacts instead).
+        for (variant, spec) in
+            [("prescored_k64", "prescored:kmeans,top_k=64"), ("exact", "flash")]
+        {
+            let cfg = ServingConfig {
+                variant: variant.into(),
+                attention_spec: spec.into(),
+                ..base.clone()
+            };
+            let err = ScoringServer::start(cfg).err().expect("must fail");
+            assert!(format!("{err:#}").contains("make artifacts"), "{variant}/{spec}: {err:#}");
+        }
     }
 }

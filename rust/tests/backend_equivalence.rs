@@ -1,0 +1,227 @@
+//! Properties of the unified attention-backend API:
+//!
+//! 1. every `AttentionSpec` string round-trips losslessly
+//!    (`parse(spec.to_string()) == spec`, and the canonical form is a fixed
+//!    point);
+//! 2. every backend's `forward` is bit-identical to its legacy
+//!    free-function entrypoint across random shapes, causal masking, and
+//!    thread counts 1/2/4.
+
+use prescored::attention::exact::flash_attention_blocked;
+use prescored::attention::prescored::restricted_exact_attention;
+use prescored::attention::{
+    exact_attention, hyper_attention, prescored_hyper_attention, AttentionInputs, AttentionSpec,
+    HyperConfig, PreScoredConfig, RestrictedSelector,
+};
+use prescored::linalg::Matrix;
+use prescored::parallel;
+use prescored::prescore::{prescore, prescore_balanced, Method, PreScoreConfig};
+use prescored::util::rng::Rng;
+
+/// Spec strings covering every kernel and every parameter key.
+const SPEC_STRINGS: &[&str] = &[
+    "exact",
+    "flash",
+    "flash:block_q=32",
+    "flash:block_q=32,block_k=16",
+    "hyper",
+    "hyper:block=16,sample=8,bits=8,seed=9",
+    "hyper:residual_n=500,keep_block_residual",
+    "prescored:kmeans",
+    "prescored:kmeans,top_k=64,delta=0.05",
+    "prescored:kmedian,top_k=16,clusters=9,sigma=0.1,raw,iters=5,pseed=3",
+    "prescored:leverage,top_k=12,block=16,sample=4,seed=5",
+    "prescored:leverage-exact,top_k=12",
+    "prescored:kernel-kmeans:0.5,top_k=32,coupling=glm2",
+    "prescored:minibatch:128,top_k=16",
+    "prescored:lp:1.5,top_k=24,bits=8",
+    "prescored:l2norm,top_k=8,keep_block_residual,residual_n=77",
+    "restricted:balanced",
+    "restricted:balanced,clusters=4,samples=12,iters=5,seed=2",
+    "restricted:leverage-exact,top_k=10",
+    "restricted:l2norm,top_k=10,raw",
+    "restricted:kernel-kmeans:2.5,top_k=6",
+];
+
+#[test]
+fn every_spec_string_round_trips_losslessly() {
+    for s in SPEC_STRINGS {
+        let spec = AttentionSpec::parse(s).unwrap_or_else(|e| panic!("parse '{s}': {e:#}"));
+        let canon = spec.to_string();
+        let reparsed =
+            AttentionSpec::parse(&canon).unwrap_or_else(|e| panic!("reparse '{canon}': {e:#}"));
+        assert_eq!(spec, reparsed, "'{s}' -> '{canon}' lost information");
+        assert_eq!(reparsed.to_string(), canon, "canonical form of '{s}' is not a fixed point");
+    }
+}
+
+#[test]
+fn constructed_specs_round_trip_with_every_field_nondefault() {
+    let specs = vec![
+        AttentionSpec::Flash { block_q: 8, block_k: 128 },
+        AttentionSpec::Hyper(HyperConfig {
+            block_size: 32,
+            lsh_bits: 4,
+            sample_size: 64,
+            seed: 11,
+            residual_count_override: Some(999),
+            exclude_block_from_residual: false,
+        }),
+        AttentionSpec::PreScored(PreScoredConfig {
+            prescore: PreScoreConfig {
+                method: Method::GaussianKMeans { gamma: 0.25 },
+                clusters: Some(7),
+                top_k: 48,
+                noise_sigma: 0.125,
+                normalize: false,
+                max_iters: 4,
+                seed: 13,
+            },
+            hyper: HyperConfig {
+                block_size: 8,
+                lsh_bits: 2,
+                sample_size: 3,
+                seed: 17,
+                residual_count_override: Some(5),
+                exclude_block_from_residual: false,
+            },
+            fallback_delta: 0.375,
+            coupling: prescored::attention::Coupling::Glm2Artifact,
+        }),
+        AttentionSpec::Restricted(RestrictedSelector::Balanced {
+            num_clusters: 3,
+            num_samples: 9,
+            max_iters: 2,
+            seed: 19,
+        }),
+        AttentionSpec::Restricted(RestrictedSelector::Scored(PreScoreConfig {
+            method: Method::MiniBatch { batch: 64 },
+            clusters: Some(5),
+            top_k: 21,
+            noise_sigma: 0.5,
+            normalize: false,
+            max_iters: 6,
+            seed: 23,
+        })),
+    ];
+    for spec in specs {
+        let s = spec.to_string();
+        assert_eq!(AttentionSpec::parse(&s).unwrap(), spec, "'{s}' lost information");
+    }
+}
+
+fn rand_qkv(nq: usize, nk: usize, d: usize, seed: u64) -> (Matrix, Matrix, Matrix) {
+    let mut rng = Rng::new(seed);
+    (
+        Matrix::randn(nq, d, 1.0, &mut rng),
+        Matrix::randn(nk, d, 1.0, &mut rng),
+        Matrix::randn(nk, d, 1.0, &mut rng),
+    )
+}
+
+/// The legacy free-function route for a spec — the reference the trait
+/// route must reproduce bit-for-bit.
+fn legacy_forward(spec: &AttentionSpec, inp: &AttentionInputs) -> Matrix {
+    match spec {
+        AttentionSpec::Exact => exact_attention(inp),
+        AttentionSpec::Flash { block_q, block_k } => {
+            flash_attention_blocked(inp, *block_q, *block_k)
+        }
+        AttentionSpec::Hyper(cfg) => hyper_attention(inp, cfg, None),
+        AttentionSpec::PreScored(cfg) => prescored_hyper_attention(inp, cfg).0,
+        AttentionSpec::Restricted(RestrictedSelector::Balanced {
+            num_clusters,
+            num_samples,
+            max_iters,
+            seed,
+        }) => {
+            let sel = prescore_balanced(inp.k, *num_clusters, *num_samples, *max_iters, *seed);
+            restricted_exact_attention(inp, &sel.selected)
+        }
+        AttentionSpec::Restricted(RestrictedSelector::Scored(cfg)) => {
+            let sel = prescore(inp.k, cfg);
+            restricted_exact_attention(inp, &sel.selected)
+        }
+    }
+}
+
+/// Backend forward must equal the legacy route bit-for-bit at every thread
+/// count, and the legacy route itself must be thread-count invariant.
+fn assert_equivalent(spec_str: &str, inp: &AttentionInputs) {
+    let spec = AttentionSpec::parse(spec_str).unwrap();
+    let backend = spec.build();
+    let reference = parallel::with_threads(1, || legacy_forward(&spec, inp));
+    for threads in [1usize, 2, 4] {
+        let via_trait = parallel::with_threads(threads, || backend.forward(inp));
+        let via_legacy = parallel::with_threads(threads, || legacy_forward(&spec, inp));
+        assert_eq!(
+            via_trait.out.data, via_legacy.data,
+            "{spec_str}: trait route != legacy route at threads={threads}"
+        );
+        assert_eq!(
+            via_legacy.data, reference.data,
+            "{spec_str}: legacy route not thread-invariant at threads={threads}"
+        );
+        assert_eq!(via_trait.stats, backend.plan(inp.k.rows), "{spec_str}: plan() mismatch");
+    }
+}
+
+#[test]
+fn backends_bit_identical_to_legacy_entrypoints() {
+    let equivalence_specs = [
+        "exact",
+        "flash:block_q=32,block_k=16",
+        "hyper:block=16,sample=8,seed=9",
+        "hyper:block=16,sample=8,seed=9,residual_n=500,keep_block_residual",
+        "prescored:kmeans,top_k=16,pseed=3,block=16,sample=4,seed=5",
+        "prescored:leverage,top_k=12,block=16,sample=4",
+        "prescored:kmeans,top_k=4,delta=0.5,block=16,sample=4",
+        "prescored:kmeans,top_k=16,coupling=glm2,block=16,sample=4",
+        "restricted:balanced,clusters=4,samples=12,seed=2",
+        "restricted:l2norm,top_k=10",
+        "restricted:leverage-exact,top_k=10",
+    ];
+    for &(nq, nk, d) in &[(33usize, 33usize, 8usize), (64, 64, 16), (40, 72, 8)] {
+        let (q, k, v) = rand_qkv(nq, nk, d, (nq * 1000 + nk) as u64);
+        let inp = AttentionInputs::new(&q, &k, &v);
+        for s in equivalence_specs {
+            assert_equivalent(s, &inp);
+        }
+    }
+}
+
+#[test]
+fn backends_bit_identical_to_legacy_entrypoints_causal() {
+    // Causal masking (square shapes; the restricted backends are the ViT
+    // operator and run non-causal by construction).
+    let causal_specs = [
+        "exact",
+        "flash:block_q=16,block_k=32",
+        "hyper:block=16,sample=8,seed=21",
+        "prescored:kmeans,top_k=16,pseed=7,block=16,sample=4,seed=7",
+    ];
+    for &(n, d) in &[(65usize, 8usize), (128, 16)] {
+        let (q, k, v) = rand_qkv(n, n, d, 500 + n as u64);
+        let inp = AttentionInputs::new(&q, &k, &v).causal(true);
+        for s in causal_specs {
+            assert_equivalent(s, &inp);
+        }
+    }
+}
+
+#[test]
+fn prescored_fallback_stats_are_truthful() {
+    let (q, k, v) = rand_qkv(48, 48, 8, 99);
+    let inp = AttentionInputs::new(&q, &k, &v);
+    // |S| = 4 < 0.5·48 ⇒ Algorithm 2 falls back to unfiltered hyper.
+    let spec = AttentionSpec::parse("prescored:kmeans,top_k=4,delta=0.5,block=16").unwrap();
+    let r = spec.build().forward(&inp);
+    assert!(r.stats.fallback_used);
+    assert_eq!(r.stats.retained_keys, 48);
+    assert_eq!(r.stats.total_keys, 48);
+    // Same config without the δ-threshold filters for real.
+    let spec = AttentionSpec::parse("prescored:kmeans,top_k=4,block=16").unwrap();
+    let r = spec.build().forward(&inp);
+    assert!(!r.stats.fallback_used);
+    assert_eq!(r.stats.retained_keys, 4);
+}
