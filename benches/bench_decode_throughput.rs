@@ -1,0 +1,193 @@
+//! Decode-path throughput: tokens/sec of the incremental `decode_step`
+//! engine vs context length, thread count, and execution engine.
+//!
+//! The serving claim under test (§3.1 + the ROADMAP north star): with the
+//! prefill selection cached, a decode step for `prescored:*`/`restricted:*`
+//! specs costs selection-sized work, so per-token cost grows *sub-linearly*
+//! in context length, while dense kernels (`flash`) stay O(n) per token —
+//! and on sub-millisecond steps the persistent channel-fed pool beats the
+//! old scoped-thread fork-join engine at the same width (spawn overhead is
+//! the bottleneck there, not compute).
+//!
+//! Emits `BENCH_decode.json` at the repo root:
+//! `tokens_per_s[spec][context][threads]` plus the fork-join-vs-pool
+//! comparison at the largest context.
+//!
+//! Knobs (the CI smoke run shrinks them):
+//! * `PALLAS_DECODE_CONTEXTS` — comma list, default `2048,8192,32768`
+//! * `PALLAS_DECODE_STEPS`    — decode steps per measurement, default 32
+//! * `PALLAS_DECODE_D`       — head dim, default 64
+//! * `PALLAS_DECODE_JSON`    — output path override (the CI smoke run
+//!   points it at a scratch file so real baselines aren't clobbered)
+
+use prescored::attention::AttentionSpec;
+use prescored::linalg::Matrix;
+use prescored::parallel::{self, ExecMode};
+use prescored::util::bench::{black_box, f, Table};
+use prescored::util::rng::Rng;
+use std::time::Instant;
+
+const SPECS: &[&str] = &[
+    "flash",
+    "hyper:block=32,sample=16,seed=3",
+    "prescored:kmeans,top_k=64,refresh=16,block=32,iters=5",
+    "restricted:l2norm,top_k=64",
+];
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn env_contexts() -> Vec<usize> {
+    match std::env::var("PALLAS_DECODE_CONTEXTS") {
+        Ok(v) => v.split(',').filter_map(|s| s.trim().parse().ok()).collect(),
+        Err(_) => vec![2048, 8192, 32768],
+    }
+}
+
+/// Stream `steps` tokens through the decode arm; returns tokens/sec.
+fn decode_tokens_per_s(
+    spec: &AttentionSpec,
+    q: &Matrix,
+    k: &Matrix,
+    v: &Matrix,
+    n0: usize,
+    steps: usize,
+) -> f64 {
+    let backend = spec.build();
+    let mut state = backend
+        .begin_decode(&q.slice_rows(0, n0), &k.slice_rows(0, n0), 0)
+        .expect("bench specs all have decode arms");
+    let mut kc = k.slice_rows(0, n0);
+    let mut vc = v.slice_rows(0, n0);
+    let t0 = Instant::now();
+    for t in n0..n0 + steps {
+        kc.push_row(k.row(t));
+        vc.push_row(v.row(t));
+        black_box(backend.decode_step(&mut state, q.row(t), &kc, &vc, None));
+    }
+    steps as f64 / t0.elapsed().as_secs_f64().max(1e-12)
+}
+
+fn json_escape_key(s: &str) -> String {
+    s.replace('"', "\\\"")
+}
+
+fn main() {
+    let contexts = env_contexts();
+    let steps = env_usize("PALLAS_DECODE_STEPS", 32);
+    let d = env_usize("PALLAS_DECODE_D", 64);
+    let pool_width = parallel::num_threads().max(2);
+    // The persistent pool sizes itself from the *global* width; raise it so
+    // the pool column is genuinely parallel even on narrow/PALLAS_THREADS=1
+    // machines (with_threads below only picks the shard count per run).
+    parallel::set_threads(pool_width);
+    let thread_counts = [1usize, pool_width];
+    println!(
+        "== decode throughput: contexts {contexts:?}, {steps} steps, d={d}, \
+         threads {{1, {pool_width}}} =="
+    );
+
+    // tokens_per_s[spec_idx][ctx_idx][thread_idx]
+    let mut results = vec![vec![vec![0.0f64; thread_counts.len()]; contexts.len()]; SPECS.len()];
+    for (ci, &n0) in contexts.iter().enumerate() {
+        let mut rng = Rng::new(0xdec0de + n0 as u64);
+        let total = n0 + steps;
+        let q = Matrix::randn(total, d, 1.0, &mut rng);
+        let k = Matrix::randn(total, d, 1.0, &mut rng);
+        let v = Matrix::randn(total, d, 1.0, &mut rng);
+        let mut table = Table::new(
+            &format!("Decode tokens/sec @ context {n0}"),
+            &["spec", "threads=1", &format!("threads={pool_width}")],
+        );
+        for (si, spec_str) in SPECS.iter().enumerate() {
+            let spec = AttentionSpec::parse(spec_str).expect("valid spec");
+            let mut row = vec![spec_str.to_string()];
+            for (ti, &t) in thread_counts.iter().enumerate() {
+                let tok_s = parallel::with_threads(t, || {
+                    decode_tokens_per_s(&spec, &q, &k, &v, n0, steps)
+                });
+                results[si][ci][ti] = tok_s;
+                row.push(f(tok_s, 1));
+            }
+            table.row(row);
+        }
+        table.print();
+    }
+
+    // Sub-linearity report: per-token cost growth factor across the sweep
+    // (dense kernels ≈ context ratio; selection-restricted kernels ≪ it).
+    if contexts.len() >= 2 {
+        let first = contexts[0];
+        let last = contexts[contexts.len() - 1];
+        println!(
+            "\nper-token cost growth, context {first} → {last} \
+             (1.0 = flat; {:.0} = linear in context):",
+            last as f64 / first as f64
+        );
+        for (si, spec_str) in SPECS.iter().enumerate() {
+            let growth = results[si][0][0] / results[si][contexts.len() - 1][0].max(1e-12);
+            println!("  {spec_str:<48} {:.2}x", growth);
+        }
+    }
+
+    // Fork-join vs persistent pool on the sharded dense row at the largest
+    // context — the spawn-overhead claim the pool upgrade exists for.
+    let n0 = *contexts.last().expect("at least one context");
+    let mut rng = Rng::new(0xf0f0 + n0 as u64);
+    let total = n0 + steps;
+    let q = Matrix::randn(total, d, 1.0, &mut rng);
+    let k = Matrix::randn(total, d, 1.0, &mut rng);
+    let v = Matrix::randn(total, d, 1.0, &mut rng);
+    let flash = AttentionSpec::parse("flash").unwrap();
+    let prev_mode = parallel::exec_mode();
+    // Same global width (set above) for both engines — only dispatch differs.
+    parallel::set_exec_mode(ExecMode::Persistent);
+    let pool_tok_s = decode_tokens_per_s(&flash, &q, &k, &v, n0, steps);
+    parallel::set_exec_mode(ExecMode::ForkJoin);
+    let forkjoin_tok_s = decode_tokens_per_s(&flash, &q, &k, &v, n0, steps);
+    parallel::set_exec_mode(prev_mode);
+    println!(
+        "\nflash decode @ {n0} ctx, {pool_width} threads: persistent pool {:.1} tok/s vs \
+         fork-join {:.1} tok/s ({:.2}x)",
+        pool_tok_s,
+        forkjoin_tok_s,
+        pool_tok_s / forkjoin_tok_s.max(1e-12)
+    );
+
+    // Machine-readable emission.
+    let mut spec_entries: Vec<String> = Vec::new();
+    for (si, spec_str) in SPECS.iter().enumerate() {
+        let mut ctx_entries: Vec<String> = Vec::new();
+        for (ci, &n0) in contexts.iter().enumerate() {
+            let pairs: Vec<String> = thread_counts
+                .iter()
+                .enumerate()
+                .map(|(ti, &t)| format!("\"{t}\": {:.3}", results[si][ci][ti]))
+                .collect();
+            ctx_entries.push(format!("\"{n0}\": {{{}}}", pairs.join(", ")));
+        }
+        spec_entries.push(format!(
+            "    \"{}\": {{{}}}",
+            json_escape_key(spec_str),
+            ctx_entries.join(", ")
+        ));
+    }
+    let json = format!(
+        "{{\n  \"d\": {d},\n  \"steps\": {steps},\n  \"contexts\": [{}],\n  \
+         \"pool_threads\": {pool_width},\n  \"tokens_per_s\": {{\n{}\n  }},\n  \
+         \"forkjoin_vs_pool\": {{\"spec\": \"flash\", \"context\": {n0}, \
+         \"threads\": {pool_width}, \"forkjoin_tok_s\": {forkjoin_tok_s:.3}, \
+         \"pool_tok_s\": {pool_tok_s:.3}, \"pool_speedup\": {:.4}}}\n}}\n",
+        contexts.iter().map(|c| c.to_string()).collect::<Vec<_>>().join(", "),
+        spec_entries.join(",\n"),
+        pool_tok_s / forkjoin_tok_s.max(1e-12),
+    );
+    let out = std::env::var("PALLAS_DECODE_JSON").unwrap_or_else(|_| {
+        concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_decode.json").to_string()
+    });
+    match std::fs::write(&out, &json) {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => eprintln!("could not write {out}: {e}"),
+    }
+}

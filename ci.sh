@@ -26,6 +26,15 @@ if [[ "$QUICK" == 0 ]]; then
     # dispatch-surface refactors can't silently break non-test targets.
     echo "== cargo build --release --examples --benches =="
     cargo build --release --examples --benches
+
+    # Decode-path smoke: tiny env-gated sizes so the incremental decode
+    # engine and its JSON emitter can't silently rot. The real baseline
+    # (BENCH_decode.json) comes from running the bench without the knobs;
+    # the smoke output goes to a scratch file so it never clobbers one.
+    echo "== bench_decode_throughput (smoke) =="
+    PALLAS_DECODE_CONTEXTS=256,512 PALLAS_DECODE_STEPS=4 PALLAS_DECODE_D=32 \
+    PALLAS_DECODE_JSON="$(mktemp)" \
+        cargo bench --bench bench_decode_throughput
 fi
 
 echo "== tier-1 verify: cargo build --release && cargo test -q =="

@@ -9,9 +9,12 @@
 //! cargo run --release --example quickstart
 //! ```
 
-use prescored::attention::{exact_attention, rel_error, AttentionInputs, AttentionSpec};
+use prescored::attention::{exact_attention, rel_error, AttentionInputs, AttentionSpec, AttnPolicy};
+use prescored::data::corpus;
 use prescored::linalg::Matrix;
+use prescored::model::{Transformer, TransformerConfig};
 use prescored::util::rng::Rng;
+use std::time::Instant;
 
 fn main() {
     let mut rng = Rng::new(0);
@@ -61,4 +64,44 @@ fn main() {
         );
     }
     println!("\n(lower rel-error at the same key budget = better prioritization)");
+
+    decode_demo();
+}
+
+/// The serving fast path in miniature: prefill once, then stream tokens
+/// through each backend's incremental `decode_step` (KV caches + cached
+/// selections advance one row per token — prefill is never re-run).
+fn decode_demo() {
+    let cfg =
+        TransformerConfig { vocab: 128, d_model: 64, n_layers: 2, n_heads: 4, max_seq: 256 };
+    let model = Transformer::random(cfg, 7);
+    let prompt = corpus::generate(128, 192, 11);
+    let n_new = 32usize;
+
+    println!("\n== decode loop: prefill {} tokens once, stream {n_new} ==", prompt.len());
+    println!("{:<52} {:>12} {:>14}", "spec", "tokens/sec", "per-step ms");
+    for spec_str in [
+        "exact",
+        "flash",
+        "prescored:kmeans,top_k=48,refresh=16,block=32",
+        "restricted:l2norm,top_k=48",
+    ] {
+        let policy = AttnPolicy::parse(spec_str).expect("valid spec");
+        let (logits, mut sess) =
+            model.begin_decode(&prompt, &policy).expect("spec has a decode arm");
+        let mut next = prescored::model::transformer::argmax_row(logits.row(logits.rows - 1));
+        let t0 = Instant::now();
+        for _ in 0..n_new {
+            let row = model.decode_token(&mut sess, next, &policy);
+            next = prescored::model::transformer::argmax_row(&row);
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "{:<52} {:>12.1} {:>14.3}",
+            spec_str,
+            n_new as f64 / dt,
+            dt * 1e3 / n_new as f64
+        );
+    }
+    println!("(selection-restricted specs pay |S|-sized work per step, not context-sized)");
 }

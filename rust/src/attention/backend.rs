@@ -41,7 +41,7 @@
 //! * `hyper[:block=64,sample=0,bits=16,seed=0,residual_n=<n>,keep_block_residual]`
 //! * `prescored:<method>[,top_k=256,clusters=<k>,sigma=0,raw,iters=10,pseed=0,
 //!    block=...,sample=...,bits=...,seed=...,residual_n=...,keep_block_residual,
-//!    delta=0,coupling=glm2|glm3]`
+//!    delta=0,coupling=glm2|glm3,refresh=16]`
 //! * `restricted:balanced[,clusters=8,samples=32,iters=10,seed=0]`
 //! * `restricted:<method>[,top_k=256,clusters=<k>,sigma=0,raw,iters=10,seed=0]`
 //!
@@ -50,8 +50,10 @@
 //! `lp:<p>`, `l2norm`). `raw` disables key ℓ2-normalization;
 //! `keep_block_residual` disables the GLM3 block-residual exclusion; in
 //! `prescored` specs `pseed` seeds Algorithm 1 while `seed` seeds the
-//! HyperAttention LSH/residual RNG.
+//! HyperAttention LSH/residual RNG, and `refresh` is the decode-time
+//! selection refresh period (steps; 0 = never, 1 = every step).
 
+use super::decode::{DecodeOutput, DecodeState};
 use super::exact::{exact_attention, flash_attention_blocked};
 use super::hyper::{hyper_attention, HyperConfig};
 use super::prescored::{
@@ -113,6 +115,41 @@ pub trait AttentionBackend: Send + Sync {
     /// count and the config — not the key values — so serving can report
     /// truthful per-request stats without re-running the kernel.
     fn plan(&self, n_keys: usize) -> AttnStats;
+
+    /// Begin incremental (token-by-token) decoding from the per-head
+    /// *prefill* projections `q`/`k` (one row per context token), returning
+    /// the per-sequence [`DecodeState`] that [`decode_step`] advances.
+    /// `salt` is the same per-layer/head seed salt `forward_salted` mixes
+    /// in. Backends without a decode arm return `None` (prefill-only) —
+    /// the default, so new kernels must opt in explicitly; see the
+    /// "Decode path" ROADMAP convention.
+    ///
+    /// [`decode_step`]: AttentionBackend::decode_step
+    fn begin_decode(&self, q: &Matrix, k: &Matrix, salt: u64) -> Option<DecodeState> {
+        let _ = (q, k, salt);
+        None
+    }
+
+    /// One decode step: `q_row` is the newly decoded token's query and
+    /// `k`/`v` hold every key/value so far *including* the new token's row.
+    /// Equivalent to the last row of the corresponding full causal
+    /// `forward` (bitwise where sharding permits, ≤ 1e-5 otherwise; for
+    /// selection-cached kernels, exactly when the refresh period is 1).
+    fn decode_step(
+        &self,
+        state: &mut DecodeState,
+        q_row: &[f32],
+        k: &Matrix,
+        v: &Matrix,
+        scale: Option<f32>,
+    ) -> DecodeOutput {
+        debug_assert_eq!(
+            state.kernel_name(),
+            self.kernel_name(),
+            "decode state/backend kernel mismatch"
+        );
+        state.step(q_row, k, v, scale)
+    }
 }
 
 /// Naive exact softmax attention ([`exact_attention`]).
@@ -129,6 +166,10 @@ impl AttentionBackend for Exact {
 
     fn plan(&self, n_keys: usize) -> AttnStats {
         AttnStats::unfiltered(self.kernel_name(), n_keys)
+    }
+
+    fn begin_decode(&self, _q: &Matrix, _k: &Matrix, _salt: u64) -> Option<DecodeState> {
+        Some(DecodeState::exact())
     }
 }
 
@@ -160,6 +201,10 @@ impl AttentionBackend for Flash {
     fn plan(&self, n_keys: usize) -> AttnStats {
         AttnStats::unfiltered(self.kernel_name(), n_keys)
     }
+
+    fn begin_decode(&self, _q: &Matrix, _k: &Matrix, _salt: u64) -> Option<DecodeState> {
+        Some(DecodeState::flash(self.block_k))
+    }
 }
 
 /// HyperAttention over all keys ([`hyper_attention`]).
@@ -178,6 +223,12 @@ impl AttentionBackend for Hyper {
 
     fn plan(&self, n_keys: usize) -> AttnStats {
         AttnStats::unfiltered(self.kernel_name(), n_keys)
+    }
+
+    fn begin_decode(&self, q: &Matrix, k: &Matrix, salt: u64) -> Option<DecodeState> {
+        let mut cfg = self.0.clone();
+        cfg.seed = cfg.seed.wrapping_add(salt);
+        Some(DecodeState::hyper(cfg, q, k))
     }
 }
 
@@ -203,6 +254,18 @@ impl AttentionBackend for PreScored {
                 fallback_used: stats.fallback_used,
             },
         }
+    }
+
+    fn begin_decode(&self, q: &Matrix, k: &Matrix, salt: u64) -> Option<DecodeState> {
+        // The GLM2 artifact coupling is prefill-only: its zeroed-key bucket
+        // collapse is an ablation of the *full* kernel, not a serving mode.
+        if self.0.coupling == Coupling::Glm2Artifact {
+            return None;
+        }
+        let mut cfg = self.0.clone();
+        cfg.hyper.seed = cfg.hyper.seed.wrapping_add(salt);
+        cfg.prescore.seed = cfg.prescore.seed.wrapping_add(salt);
+        Some(DecodeState::prescored(cfg, q, k))
     }
 
     fn plan(&self, n_keys: usize) -> AttnStats {
@@ -269,6 +332,25 @@ impl AttentionBackend for RestrictedExact {
                 fallback_used: false,
             },
         }
+    }
+
+    fn begin_decode(&self, _q: &Matrix, k: &Matrix, salt: u64) -> Option<DecodeState> {
+        let selector = match &self.0 {
+            RestrictedSelector::Balanced { num_clusters, num_samples, max_iters, seed } => {
+                RestrictedSelector::Balanced {
+                    num_clusters: *num_clusters,
+                    num_samples: *num_samples,
+                    max_iters: *max_iters,
+                    seed: seed.wrapping_add(salt),
+                }
+            }
+            RestrictedSelector::Scored(cfg) => {
+                let mut cfg = cfg.clone();
+                cfg.seed = cfg.seed.wrapping_add(salt);
+                RestrictedSelector::Scored(cfg)
+            }
+        };
+        Some(DecodeState::restricted(selector, k))
     }
 
     fn plan(&self, n_keys: usize) -> AttnStats {
@@ -473,6 +555,9 @@ impl AttentionSpec {
                     }
                     match (key, val) {
                         ("delta", Some(v)) => cfg.fallback_delta = parse_f32("delta", v)?,
+                        ("refresh", Some(v)) => {
+                            cfg.decode_refresh_every = parse_usize("refresh", v)?
+                        }
                         ("coupling", Some("glm3")) => cfg.coupling = Coupling::Glm3Corrected,
                         ("coupling", Some("glm2")) => cfg.coupling = Coupling::Glm2Artifact,
                         ("coupling", Some(v)) => {
@@ -566,6 +651,15 @@ impl AttentionSpec {
         }
     }
 
+    /// Whether the backend this spec builds has a decode arm (everything
+    /// except the GLM2 artifact coupling, which is declared prefill-only).
+    pub fn supports_decode(&self) -> bool {
+        match self {
+            AttentionSpec::PreScored(cfg) => cfg.coupling != Coupling::Glm2Artifact,
+            _ => true,
+        }
+    }
+
     /// Kernel identifier of the backend this spec builds.
     pub fn kernel_name(&self) -> &'static str {
         match self {
@@ -617,6 +711,9 @@ impl fmt::Display for AttentionSpec {
                 }
                 if cfg.coupling == Coupling::Glm2Artifact {
                     parts.push("coupling=glm2".into());
+                }
+                if cfg.decode_refresh_every != super::prescored::DECODE_REFRESH_DEFAULT {
+                    parts.push(format!("refresh={}", cfg.decode_refresh_every));
                 }
                 write!(f, "prescored:{}", parts.join(","))
             }
@@ -742,6 +839,8 @@ mod tests {
             "hyper:block=32,sample=16,bits=8,seed=5",
             "prescored:kmeans",
             "prescored:kmeans,top_k=64,delta=0.05",
+            "prescored:kmeans,top_k=64,refresh=1",
+            "prescored:kmeans,refresh=0",
             "prescored:lp:1.5,top_k=32,coupling=glm2",
             "restricted:balanced",
             "restricted:balanced,clusters=4,samples=16,seed=2",

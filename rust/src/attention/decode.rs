@@ -1,0 +1,822 @@
+//! Incremental decode kernels: single-query attention rows over a growing
+//! KV cache — the token-by-token half of the paper's serving story (§3.1:
+//! pre-scoring runs at prefill; decoding reuses the cached selection or
+//! refreshes it only periodically).
+//!
+//! Each backend's decode arm is *equivalent to the last row of its full
+//! `forward`* over the same (causal) inputs:
+//!
+//! * `Exact` — the two-pass score/softmax/accumulate loop of
+//!   [`super::exact::exact_attention`] for one query: bitwise at width 1,
+//!   ≤ 1e-5 when the key loop is sharded across the pool (the online-softmax
+//!   merge reassociates sums).
+//! * `Flash` — the online-softmax K-tile stream of
+//!   [`super::exact::flash_attention_blocked`] for one query: bitwise at
+//!   width 1.
+//! * `Hyper` — *residual-stream-aware*: the per-query residual RNG streams
+//!   (`RESIDUAL_STREAM ^ i`) make query `i`'s Monte-Carlo samples
+//!   independent of every other query, so a decode step replays exactly the
+//!   sample sequence the full kernel would draw; the blockwise pair set is
+//!   reconstructed from cached LSH codes (keys re-bucketed per step, the
+//!   query's sorted rank maintained in a [`RankSet`]). Bitwise at every
+//!   width (the per-row *attention* work is block+sample-sized and stays
+//!   serial; the key-side re-bucketing is an O(n log n) sort per step —
+//!   sub-quadratic, but sequence-sized; only the selection-restricted
+//!   kernels below are truly selection-sized per step).
+//! * `PreScored` (GLM3) / `RestrictedExact` — *selection-restricted*: attend
+//!   only over the cached selection, mirroring the serving
+//!   [`crate::coordinator::PreScoreManager`] policy — extended with each new
+//!   token (`extend_with_new_token`), re-scored every `refresh` steps
+//!   (`needs_refresh`), with Algorithm 2's δ-fallback preserved. With
+//!   `refresh = 1` every step re-runs Algorithm 1 and the decode row equals
+//!   the full forward's last row exactly; larger periods are the paper's
+//!   cached-selection approximation, with per-step cost proportional to
+//!   |S|, not the context length. The GLM2 artifact coupling is declared
+//!   prefill-only (its zeroed-key bucket collapse has no incremental form
+//!   worth preserving); `begin_decode` returns `None` for it.
+//!
+//! The caller owns the KV cache: `k`/`v` passed to [`DecodeState::step`]
+//! hold every key/value so far *including* the newly decoded token's row.
+
+use super::backend::AttnStats;
+use super::hyper::{hyper_lsh, HyperConfig, RESIDUAL_STREAM};
+use super::prescored::PreScoredConfig;
+use crate::linalg::ops::{dot, softmax_inplace};
+use crate::linalg::Matrix;
+use crate::lsh::{gray_rank, sorted_blocks, AngularLsh};
+use crate::parallel;
+use crate::prescore::{prescore, prescore_balanced};
+use crate::util::rng::Rng;
+
+/// Minimum scalar work before a single-row dense kernel shards its key loop
+/// across the pool (same ballpark as the forward-path gates).
+const PAR_MIN_ROW_WORK: usize = parallel::DEFAULT_MIN_WORK;
+
+/// Decode-time selection refresh default for kernels whose config carries no
+/// explicit period ([`super::backend::RestrictedExact`]); `PreScored` reads
+/// its own `decode_refresh_every`.
+pub const RESTRICTED_REFRESH_DEFAULT: usize = super::prescored::DECODE_REFRESH_DEFAULT;
+
+/// Output of one decode step: the attention row (length = `v.cols`) plus the
+/// same unified stats the forward path reports.
+#[derive(Debug, Clone)]
+pub struct DecodeOutput {
+    pub row: Vec<f32>,
+    pub stats: AttnStats,
+}
+
+/// How [`super::backend::RestrictedExact`] picks its key subset — re-export
+/// target for the decode state (selectors are defined next to the backend).
+pub use super::backend::RestrictedSelector;
+
+// ---------------------------------------------------------------------------
+// RankSet: sorted-order maintenance for the query side of HyperAttention.
+// ---------------------------------------------------------------------------
+
+/// Bucketed (sqrt-decomposed) multiset of `u32` keys with `O(√n)`-ish insert
+/// and rank queries. The full kernel sorts *all* query codes to assign each
+/// query a block; re-sorting per decode step would make every decode step
+/// sequence-sized. The RankSet instead maintains the sorted order of every
+/// query code seen so far, answering "how many previous codes sort ≤ this
+/// one" — exactly the new query's position in [`sorted_blocks`]' order,
+/// because ties break by index and the new query always has the largest
+/// index.
+pub(crate) struct RankSet {
+    /// Globally ordered buckets, each sorted ascending.
+    buckets: Vec<Vec<u32>>,
+    len: usize,
+}
+
+const RANK_BUCKET: usize = 256;
+
+impl RankSet {
+    pub(crate) fn new() -> RankSet {
+        RankSet { buckets: Vec::new(), len: 0 }
+    }
+
+    pub(crate) fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Number of stored keys `<= x`.
+    pub(crate) fn rank_le(&self, x: u32) -> usize {
+        let mut r = 0;
+        for b in &self.buckets {
+            if b[0] > x {
+                break;
+            }
+            if *b.last().expect("rank bucket never empty") <= x {
+                r += b.len();
+            } else {
+                r += b.partition_point(|&v| v <= x);
+                break;
+            }
+        }
+        r
+    }
+
+    pub(crate) fn insert(&mut self, x: u32) {
+        self.len += 1;
+        if self.buckets.is_empty() {
+            self.buckets.push(vec![x]);
+            return;
+        }
+        // Last bucket whose first element is <= x (first bucket otherwise).
+        let mut bi = 0;
+        for (i, b) in self.buckets.iter().enumerate() {
+            if b[0] <= x {
+                bi = i;
+            } else {
+                break;
+            }
+        }
+        let b = &mut self.buckets[bi];
+        let pos = b.partition_point(|&v| v <= x);
+        b.insert(pos, x);
+        if b.len() > 2 * RANK_BUCKET {
+            let tail = b.split_off(b.len() / 2);
+            self.buckets.insert(bi + 1, tail);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dense single-row kernels (Exact / Flash).
+// ---------------------------------------------------------------------------
+
+/// Online-softmax accumulator for one output row; merged across shards in
+/// shard order, so the parallel result is deterministic for a fixed width.
+struct RowPartial {
+    m: f32,
+    l: f32,
+    acc: Vec<f32>,
+}
+
+impl RowPartial {
+    fn new(dv: usize) -> RowPartial {
+        RowPartial { m: f32::NEG_INFINITY, l: 0.0, acc: vec![0.0; dv] }
+    }
+
+    /// Fold in one (score, value-row) pair.
+    fn push(&mut self, s: f32, vrow: &[f32]) {
+        if s > self.m {
+            let c = if self.m == f32::NEG_INFINITY { 0.0 } else { (self.m - s).exp() };
+            self.l *= c;
+            if c != 1.0 {
+                for a in self.acc.iter_mut() {
+                    *a *= c;
+                }
+            }
+            self.m = s;
+        }
+        let p = (s - self.m).exp();
+        self.l += p;
+        for (a, vv) in self.acc.iter_mut().zip(vrow) {
+            *a += p * vv;
+        }
+    }
+
+    /// Fold in one K-tile exactly as the blocked flash kernel does (tile max
+    /// first, then one rescale, then the tile's exponentials in order).
+    fn push_tile(&mut self, scores: &[f32], v: &Matrix, k0: usize) {
+        let tile_max = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        if tile_max == f32::NEG_INFINITY {
+            return;
+        }
+        let new_m = self.m.max(tile_max);
+        let correction =
+            if self.m == f32::NEG_INFINITY { 0.0 } else { (self.m - new_m).exp() };
+        self.l *= correction;
+        if correction != 1.0 {
+            for a in self.acc.iter_mut() {
+                *a *= correction;
+            }
+        }
+        for (kj, &sv) in scores.iter().enumerate() {
+            let p = (sv - new_m).exp();
+            self.l += p;
+            let vrow = v.row(k0 + kj);
+            for (a, vv) in self.acc.iter_mut().zip(vrow) {
+                *a += p * vv;
+            }
+        }
+        self.m = new_m;
+    }
+
+    /// Merge another partial into this one (deterministic given order).
+    fn absorb(mut self, other: RowPartial) -> RowPartial {
+        if other.m == f32::NEG_INFINITY {
+            return self;
+        }
+        if self.m == f32::NEG_INFINITY {
+            return other;
+        }
+        let m = self.m.max(other.m);
+        let cs = (self.m - m).exp();
+        let co = (other.m - m).exp();
+        self.l = self.l * cs + other.l * co;
+        for (a, b) in self.acc.iter_mut().zip(&other.acc) {
+            *a = *a * cs + *b * co;
+        }
+        self.m = m;
+        self
+    }
+
+    fn finish(&self, out: &mut [f32]) {
+        let inv = if self.l > 0.0 { 1.0 / self.l } else { 0.0 };
+        for (o, a) in out.iter_mut().zip(&self.acc) {
+            *o = a * inv;
+        }
+    }
+}
+
+fn use_pool(n: usize, d: usize, dv: usize) -> bool {
+    parallel::num_threads() > 1 && n * (d + dv) >= PAR_MIN_ROW_WORK
+}
+
+/// Exact single-query attention row over keys `0..n`. Width 1 mirrors
+/// [`super::exact::exact_attention`]'s per-query loop bitwise; wider pools
+/// shard the key range with an online-softmax merge (≤ 1e-5).
+fn exact_row(q_row: &[f32], k: &Matrix, v: &Matrix, scale: f32, out: &mut [f32]) {
+    let n = k.rows;
+    let dv = v.cols;
+    if dv == 0 || n == 0 {
+        return;
+    }
+    if !use_pool(n, k.cols, dv) {
+        // Serial path: identical to exact_rows for the final query.
+        let mut scores = vec![0.0f32; n];
+        for j in 0..n {
+            scores[j] = dot(q_row, k.row(j)) * scale;
+        }
+        softmax_inplace(&mut scores);
+        out.fill(0.0);
+        for (j, &p) in scores.iter().enumerate() {
+            if p == 0.0 {
+                continue;
+            }
+            let vrow = v.row(j);
+            for (o, vv) in out.iter_mut().zip(vrow) {
+                *o += p * vv;
+            }
+        }
+        return;
+    }
+    let part = parallel::par_reduce(
+        n,
+        || RowPartial::new(dv),
+        |mut p, range| {
+            for j in range {
+                p.push(dot(q_row, k.row(j)) * scale, v.row(j));
+            }
+            p
+        },
+        |a, b| a.absorb(b),
+    );
+    part.finish(out);
+}
+
+/// Flash single-query attention row: streamed K-tiles of `block_k` with the
+/// online-softmax accumulator of [`super::exact::flash_attention_blocked`].
+/// Width 1 is bitwise-identical to the blocked kernel's last row; wider
+/// pools shard the tile range (≤ 1e-5).
+fn flash_row(q_row: &[f32], k: &Matrix, v: &Matrix, scale: f32, block_k: usize, out: &mut [f32]) {
+    let n = k.rows;
+    let dv = v.cols;
+    if dv == 0 || n == 0 {
+        return;
+    }
+    let bk = block_k.max(1);
+    let tiles = n.div_ceil(bk);
+    let fold = |mut p: RowPartial, range: std::ops::Range<usize>| {
+        let mut srow = vec![0.0f32; bk];
+        for t in range {
+            let k0 = t * bk;
+            let k1 = (k0 + bk).min(n);
+            let kb = k1 - k0;
+            for (kj, s) in srow[..kb].iter_mut().enumerate() {
+                *s = dot(q_row, k.row(k0 + kj)) * scale;
+            }
+            p.push_tile(&srow[..kb], v, k0);
+        }
+        p
+    };
+    if !use_pool(n, k.cols, dv) {
+        fold(RowPartial::new(dv), 0..tiles).finish(out);
+        return;
+    }
+    let part =
+        parallel::par_reduce(tiles, || RowPartial::new(dv), fold, |a, b| a.absorb(b));
+    part.finish(out);
+}
+
+// ---------------------------------------------------------------------------
+// HyperAttention single-row kernel (shared by Hyper and PreScored decode).
+// ---------------------------------------------------------------------------
+
+/// Reproduce the full HyperAttention kernel's output row for the *last*
+/// query, given the cached LSH codes. `sel` maps kernel key-row `j` to its
+/// physical row in `k`/`v` *and* to its original sequence position (the two
+/// coincide, exactly as in [`super::hyper::hyper_attention_subset`]);
+/// `None` means the kernel runs over all rows. `codes` are the LSH codes of
+/// the kernel's key rows; `rank_block` is the query's block index in the
+/// sorted-query order (uncapped — capped against the key block count here).
+#[allow(clippy::too_many_arguments)]
+fn hyper_row(
+    q_row: &[f32],
+    qi: usize,
+    rank_block: usize,
+    k: &Matrix,
+    v: &Matrix,
+    sel: Option<&[usize]>,
+    codes: &[u32],
+    scale: f32,
+    cfg: &HyperConfig,
+    out: &mut [f32],
+) {
+    let nk = codes.len();
+    out.fill(0.0);
+    if nk == 0 || v.cols == 0 {
+        return;
+    }
+    let phys = |j: usize| sel.map_or(j, |s| s[j]);
+    let kb = sorted_blocks(codes, cfg.block_size.max(1));
+    let qblock = rank_block.min(kb.num_blocks().saturating_sub(1));
+    let bkeys: &[usize] = kb.block(qblock);
+
+    let cap = cfg.block_size + cfg.sample_size + 1;
+    let mut pair_idx: Vec<usize> = Vec::with_capacity(cap);
+    let mut pair_score: Vec<f32> = Vec::with_capacity(cap);
+    let mut pair_weight: Vec<f32> = Vec::with_capacity(cap);
+
+    // Blockwise part (decode is causal; positions never exceed qi, so the
+    // filter below mirrors the full kernel's causal check verbatim).
+    for &j in bkeys {
+        if phys(j) > qi {
+            continue;
+        }
+        pair_idx.push(j);
+        pair_score.push(dot(q_row, k.row(phys(j))) * scale);
+        pair_weight.push(1.0);
+    }
+    // Causal anchor (the full kernel's guarantee of at least one pair).
+    if pair_idx.is_empty() {
+        let anchor = (0..nk).filter(|&j| phys(j) <= qi).max_by_key(|&j| phys(j));
+        if let Some(j) = anchor {
+            pair_idx.push(j);
+            pair_score.push(dot(q_row, k.row(phys(j))) * scale);
+            pair_weight.push(1.0);
+        }
+    }
+
+    // Residual Monte-Carlo part from this query's own RNG stream — the
+    // stream id depends only on (seed, qi), so the sample sequence is the
+    // one the full kernel would draw for its last row.
+    if cfg.sample_size > 0 {
+        let mut rng = Rng::with_stream(cfg.seed, RESIDUAL_STREAM ^ qi as u64);
+        let block_in_space = if cfg.exclude_block_from_residual { bkeys.len() } else { 0 };
+        let effective =
+            cfg.residual_count_override.unwrap_or_else(|| nk.saturating_sub(block_in_space));
+        if effective > 0 {
+            let w = effective as f32 / cfg.sample_size as f32;
+            let mut drawn = 0usize;
+            let mut attempts = 0usize;
+            let max_attempts = cfg.sample_size * 8 + 16;
+            while drawn < cfg.sample_size && attempts < max_attempts {
+                attempts += 1;
+                let j = rng.usize(nk);
+                if cfg.exclude_block_from_residual && bkeys.contains(&j) {
+                    continue;
+                }
+                if phys(j) > qi {
+                    continue;
+                }
+                pair_idx.push(j);
+                pair_score.push(dot(q_row, k.row(phys(j))) * scale);
+                pair_weight.push(w);
+                drawn += 1;
+            }
+        }
+    }
+
+    if pair_idx.is_empty() {
+        return;
+    }
+    let m = pair_score.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut denom = 0.0f32;
+    for ((&j, &s), &w) in pair_idx.iter().zip(&pair_score).zip(&pair_weight) {
+        let p = w * (s - m).exp();
+        denom += p;
+        let vrow = v.row(phys(j));
+        for (o, vv) in out.iter_mut().zip(vrow) {
+            *o += p * vv;
+        }
+    }
+    if denom > 0.0 {
+        let inv = 1.0 / denom;
+        for o in out.iter_mut() {
+            *o *= inv;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-sequence decode state.
+// ---------------------------------------------------------------------------
+
+struct HyperState {
+    cfg: HyperConfig,
+    lsh: AngularLsh,
+    /// Gray ranks of every query code seen so far.
+    q_ranks: RankSet,
+    /// LSH codes of every key so far (grows one code per step).
+    k_codes: Vec<u32>,
+}
+
+impl HyperState {
+    fn begin(cfg: HyperConfig, q: &Matrix, k: &Matrix) -> HyperState {
+        let lsh = hyper_lsh(q.cols, &cfg);
+        let mut q_ranks = RankSet::new();
+        for &c in &lsh.hash_rows(q) {
+            q_ranks.insert(gray_rank(c));
+        }
+        let k_codes = lsh.hash_rows(k);
+        HyperState { cfg, lsh, q_ranks, k_codes }
+    }
+
+    /// Hash the step's new key and query; returns the query's (uncapped)
+    /// block index in the sorted-query order.
+    fn observe(&mut self, q_row: &[f32], k: &Matrix) -> usize {
+        let n = k.rows;
+        assert_eq!(
+            self.k_codes.len() + 1,
+            n,
+            "decode_step expects exactly one new key per step"
+        );
+        debug_assert_eq!(self.q_ranks.len(), n - 1, "one query code per context token");
+        self.k_codes.push(self.lsh.hash(k.row(n - 1)));
+        let qc = gray_rank(self.lsh.hash(q_row));
+        let rank = self.q_ranks.rank_le(qc);
+        self.q_ranks.insert(qc);
+        rank / self.cfg.block_size.max(1)
+    }
+}
+
+/// Cached-selection policy state (PreScored / RestrictedExact): the decode
+/// mirror of the serving `PreScoreManager` — extend each step, refresh
+/// periodically, δ-fallback preserved.
+struct SelectionState {
+    selection: Vec<usize>,
+    steps_since_refresh: usize,
+    refresh_every: usize,
+    fallback: bool,
+}
+
+impl SelectionState {
+    fn needs_refresh(&self) -> bool {
+        self.refresh_every > 0 && self.steps_since_refresh >= self.refresh_every
+    }
+
+    /// `extend_with_new_token` (idempotent append of the newest position).
+    fn extend(&mut self, new_pos: usize) {
+        if self.selection.last() != Some(&new_pos) {
+            self.selection.push(new_pos);
+        }
+    }
+}
+
+enum Kind {
+    Exact,
+    Flash { block_k: usize },
+    Hyper(Box<HyperState>),
+    PreScored { cfg: Box<PreScoredConfig>, hyper: Box<HyperState>, sel: SelectionState },
+    Restricted { selector: Box<RestrictedSelector>, sel: SelectionState },
+}
+
+/// Per-sequence, per-(layer·head) incremental decode state. Constructed by
+/// [`super::backend::AttentionBackend::begin_decode`]; advanced one token at
+/// a time by [`DecodeState::step`].
+pub struct DecodeState {
+    kind: Kind,
+}
+
+fn run_selector(selector: &RestrictedSelector, k: &Matrix) -> Vec<usize> {
+    match selector {
+        RestrictedSelector::Balanced { num_clusters, num_samples, max_iters, seed } => {
+            prescore_balanced(k, *num_clusters, *num_samples, *max_iters, *seed).selected
+        }
+        RestrictedSelector::Scored(cfg) => prescore(k, cfg).selected,
+    }
+}
+
+impl DecodeState {
+    pub(crate) fn exact() -> DecodeState {
+        DecodeState { kind: Kind::Exact }
+    }
+
+    pub(crate) fn flash(block_k: usize) -> DecodeState {
+        DecodeState { kind: Kind::Flash { block_k } }
+    }
+
+    /// `cfg` must already carry the caller's seed salt (the backend applies
+    /// it in `begin_decode`, mirroring `forward_salted`).
+    pub(crate) fn hyper(cfg: HyperConfig, q: &Matrix, k: &Matrix) -> DecodeState {
+        DecodeState { kind: Kind::Hyper(Box::new(HyperState::begin(cfg, q, k))) }
+    }
+
+    pub(crate) fn prescored(cfg: PreScoredConfig, q: &Matrix, k: &Matrix) -> DecodeState {
+        let hyper = HyperState::begin(cfg.hyper.clone(), q, k);
+        let n = k.rows;
+        let selection = prescore(k, &cfg.prescore).selected;
+        let fallback = (selection.len() as f32) < cfg.fallback_delta * n as f32;
+        let sel = SelectionState {
+            selection,
+            steps_since_refresh: 0,
+            refresh_every: cfg.decode_refresh_every,
+            fallback,
+        };
+        DecodeState {
+            kind: Kind::PreScored { cfg: Box::new(cfg), hyper: Box::new(hyper), sel },
+        }
+    }
+
+    pub(crate) fn restricted(selector: RestrictedSelector, k: &Matrix) -> DecodeState {
+        let sel = SelectionState {
+            selection: run_selector(&selector, k),
+            steps_since_refresh: 0,
+            refresh_every: RESTRICTED_REFRESH_DEFAULT,
+            fallback: false,
+        };
+        DecodeState { kind: Kind::Restricted { selector: Box::new(selector), sel } }
+    }
+
+    /// Kernel this state decodes for (matches `AttnStats::kernel`).
+    pub fn kernel_name(&self) -> &'static str {
+        match &self.kind {
+            Kind::Exact => "exact",
+            Kind::Flash { .. } => "flash",
+            Kind::Hyper(_) => "hyper",
+            Kind::PreScored { .. } => "prescored",
+            Kind::Restricted { .. } => "restricted-exact",
+        }
+    }
+
+    /// Override the selection refresh period (steps; 0 = never). No-op for
+    /// kernels without a cached selection. Serving threads its
+    /// `[prescore] refresh_every` through here; the equivalence tests pin 1.
+    pub fn set_refresh_every(&mut self, every: usize) {
+        match &mut self.kind {
+            Kind::PreScored { sel, .. } | Kind::Restricted { sel, .. } => {
+                sel.refresh_every = every;
+            }
+            _ => {}
+        }
+    }
+
+    /// Whether the last step (or prefill) tripped Algorithm 2's δ-fallback.
+    pub fn fallback_used(&self) -> bool {
+        match &self.kind {
+            Kind::PreScored { sel, .. } => sel.fallback,
+            _ => false,
+        }
+    }
+
+    /// The cached key selection, if this kernel keeps one.
+    pub fn selection(&self) -> Option<&[usize]> {
+        match &self.kind {
+            Kind::PreScored { sel, .. } | Kind::Restricted { sel, .. } => {
+                Some(sel.selection.as_slice())
+            }
+            _ => None,
+        }
+    }
+
+    /// One decode step. `q_row` is the new token's query; `k`/`v` hold every
+    /// key/value so far *including* the new token's row (`k.rows` = previous
+    /// context + 1). Causal by construction: the new token is the last
+    /// position. `scale` as in [`super::AttentionInputs`] (`None` =
+    /// 1/√d).
+    pub fn step(
+        &mut self,
+        q_row: &[f32],
+        k: &Matrix,
+        v: &Matrix,
+        scale: Option<f32>,
+    ) -> DecodeOutput {
+        let n = k.rows;
+        assert!(n > 0, "decode_step needs at least the new token's key");
+        assert_eq!(q_row.len(), k.cols, "query/key dim mismatch");
+        assert_eq!(k.rows, v.rows, "K/V length mismatch");
+        let scale = scale.unwrap_or(1.0 / (q_row.len() as f32).sqrt());
+        let mut row = vec![0.0f32; v.cols];
+        let stats = match &mut self.kind {
+            Kind::Exact => {
+                exact_row(q_row, k, v, scale, &mut row);
+                AttnStats::unfiltered("exact", n)
+            }
+            Kind::Flash { block_k } => {
+                flash_row(q_row, k, v, scale, *block_k, &mut row);
+                AttnStats::unfiltered("flash", n)
+            }
+            Kind::Hyper(hs) => {
+                let rank_block = hs.observe(q_row, k);
+                hyper_row(
+                    q_row,
+                    n - 1,
+                    rank_block,
+                    k,
+                    v,
+                    None,
+                    &hs.k_codes,
+                    scale,
+                    &hs.cfg,
+                    &mut row,
+                );
+                AttnStats::unfiltered("hyper", n)
+            }
+            Kind::PreScored { cfg, hyper, sel } => {
+                let rank_block = hyper.observe(q_row, k);
+                sel.steps_since_refresh += 1;
+                if sel.needs_refresh() {
+                    sel.selection = prescore(k, &cfg.prescore).selected;
+                    sel.steps_since_refresh = 0;
+                } else {
+                    sel.extend(n - 1);
+                }
+                let s_len = sel.selection.len();
+                sel.fallback = (s_len as f32) < cfg.fallback_delta * n as f32;
+                if sel.fallback || s_len >= n {
+                    // Unfiltered HyperAttention (Algorithm 2 line 2 / the
+                    // top_k = 0 identity selection), hyper config verbatim.
+                    hyper_row(
+                        q_row,
+                        n - 1,
+                        rank_block,
+                        k,
+                        v,
+                        None,
+                        &hyper.k_codes,
+                        scale,
+                        &cfg.hyper,
+                        &mut row,
+                    );
+                    AttnStats {
+                        kernel: "prescored",
+                        retained_keys: n,
+                        total_keys: n,
+                        fallback_used: sel.fallback,
+                    }
+                } else {
+                    // GLM3 coupling: subset geometry, |S|-weighted residual,
+                    // block-residual exclusion (the forced overrides of
+                    // prescored_hyper_attention's corrected branch).
+                    let hyper_cfg = HyperConfig {
+                        residual_count_override: None,
+                        exclude_block_from_residual: true,
+                        ..cfg.hyper.clone()
+                    };
+                    let codes: Vec<u32> =
+                        sel.selection.iter().map(|&j| hyper.k_codes[j]).collect();
+                    hyper_row(
+                        q_row,
+                        n - 1,
+                        rank_block,
+                        k,
+                        v,
+                        Some(&sel.selection),
+                        &codes,
+                        scale,
+                        &hyper_cfg,
+                        &mut row,
+                    );
+                    AttnStats {
+                        kernel: "prescored",
+                        retained_keys: s_len,
+                        total_keys: n,
+                        fallback_used: false,
+                    }
+                }
+            }
+            Kind::Restricted { selector, sel } => {
+                sel.steps_since_refresh += 1;
+                if sel.needs_refresh() {
+                    sel.selection = run_selector(selector, k);
+                    sel.steps_since_refresh = 0;
+                } else {
+                    sel.extend(n - 1);
+                }
+                // Exact attention over K[S], V[S] in selection order —
+                // the last row of restricted_exact_attention (non-causal
+                // over the gathered subset; every position is past).
+                let s = &sel.selection;
+                let mut scores = vec![0.0f32; s.len()];
+                for (si, &j) in s.iter().enumerate() {
+                    scores[si] = dot(q_row, k.row(j)) * scale;
+                }
+                softmax_inplace(&mut scores);
+                for (si, &j) in s.iter().enumerate() {
+                    let p = scores[si];
+                    if p == 0.0 {
+                        continue;
+                    }
+                    let vrow = v.row(j);
+                    for (o, vv) in row.iter_mut().zip(vrow) {
+                        *o += p * vv;
+                    }
+                }
+                AttnStats {
+                    kernel: "restricted-exact",
+                    retained_keys: s.len().min(n),
+                    total_keys: n,
+                    fallback_used: false,
+                }
+            }
+        };
+        DecodeOutput { row, stats }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::exact::exact_attention;
+    use crate::attention::AttentionInputs;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn rankset_matches_naive_rank() {
+        let mut rng = Rng::new(7);
+        let mut rs = RankSet::new();
+        let mut all: Vec<u32> = Vec::new();
+        for step in 0..2000 {
+            let x = (rng.usize(50) as u32) * 17 + (step % 3) as u32;
+            let naive = all.iter().filter(|&&v| v <= x).count();
+            assert_eq!(rs.rank_le(x), naive, "step {step}");
+            rs.insert(x);
+            all.push(x);
+            assert_eq!(rs.len(), all.len());
+        }
+    }
+
+    #[test]
+    fn exact_row_matches_forward_last_row() {
+        let mut rng = Rng::new(3);
+        let n = 37;
+        let d = 8;
+        let q = Matrix::randn(n, d, 1.0, &mut rng);
+        let k = Matrix::randn(n, d, 1.0, &mut rng);
+        let v = Matrix::randn(n, d, 1.0, &mut rng);
+        let inp = AttentionInputs::new(&q, &k, &v).causal(true);
+        let full = crate::parallel::with_threads(1, || exact_attention(&inp));
+        let mut row = vec![0.0f32; d];
+        crate::parallel::with_threads(1, || {
+            exact_row(q.row(n - 1), &k, &v, inp.effective_scale(), &mut row)
+        });
+        assert_eq!(full.row(n - 1), row.as_slice(), "serial decode row must be bitwise");
+    }
+
+    #[test]
+    fn flash_row_matches_blocked_forward() {
+        let mut rng = Rng::new(4);
+        let n = 53;
+        let d = 8;
+        let q = Matrix::randn(n, d, 1.0, &mut rng);
+        let k = Matrix::randn(n, d, 1.0, &mut rng);
+        let v = Matrix::randn(n, d, 1.0, &mut rng);
+        let inp = AttentionInputs::new(&q, &k, &v).causal(true);
+        let full = crate::parallel::with_threads(1, || {
+            crate::attention::exact::flash_attention_blocked(&inp, 64, 16)
+        });
+        let mut row = vec![0.0f32; d];
+        crate::parallel::with_threads(1, || {
+            flash_row(q.row(n - 1), &k, &v, inp.effective_scale(), 16, &mut row)
+        });
+        assert_eq!(full.row(n - 1), row.as_slice());
+    }
+
+    #[test]
+    fn parallel_dense_rows_close_to_serial() {
+        let mut rng = Rng::new(5);
+        let n = 1024;
+        let d = 32;
+        let q_row: Vec<f32> = (0..d).map(|_| rng.gauss32(0.0, 1.0)).collect();
+        let k = Matrix::randn(n, d, 1.0, &mut rng);
+        let v = Matrix::randn(n, d, 1.0, &mut rng);
+        let mut serial = vec![0.0f32; d];
+        crate::parallel::with_threads(1, || exact_row(&q_row, &k, &v, 0.2, &mut serial));
+        for t in [2usize, 4] {
+            let mut par = vec![0.0f32; d];
+            crate::parallel::with_threads(t, || exact_row(&q_row, &k, &v, 0.2, &mut par));
+            let err: f32 = serial
+                .iter()
+                .zip(&par)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0, f32::max);
+            assert!(err < 1e-5, "threads={t} err={err}");
+            // Deterministic for a fixed width.
+            let mut again = vec![0.0f32; d];
+            crate::parallel::with_threads(t, || exact_row(&q_row, &k, &v, 0.2, &mut again));
+            assert_eq!(par, again, "threads={t}");
+        }
+    }
+}

@@ -37,7 +37,15 @@ const PAR_MIN_QUERIES: usize = 32;
 /// loop embarrassingly parallel *and* bit-reproducible for any thread count
 /// (a shared sequential RNG would make query i's samples depend on how many
 /// draws queries 0..i made).
-const RESIDUAL_STREAM: u64 = 0x4a5_7700_0000_0000;
+pub(crate) const RESIDUAL_STREAM: u64 = 0x4a5_7700_0000_0000;
+
+/// Build the angular LSH exactly as [`hyper_attention`] does — shared with
+/// the decode path (`super::decode`) so a decode step reconstructs the same
+/// hyperplanes, and therefore the same codes, as the full kernel.
+pub(crate) fn hyper_lsh(dim: usize, cfg: &HyperConfig) -> AngularLsh {
+    let mut rng = Rng::with_stream(cfg.seed, 0x4a5);
+    AngularLsh::new(dim, cfg.lsh_bits.clamp(1, 32), &mut rng)
+}
 
 /// HyperAttention hyper-parameters.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -111,8 +119,7 @@ fn hyper_core(
     let (nq, nk) = (inp.q.rows, inp.k.rows);
     let dv = inp.v.cols;
     let scale = inp.effective_scale();
-    let mut rng = Rng::with_stream(cfg.seed, 0x4a5);
-    let lsh = AngularLsh::new(inp.q.cols, cfg.lsh_bits.clamp(1, 32), &mut rng);
+    let lsh = hyper_lsh(inp.q.cols, cfg);
 
     if let Some(a) = allowed {
         assert_eq!(a.len(), nk, "allowed mask length");

@@ -16,6 +16,9 @@
 //!   Appendix-F ablation.
 //! * [`backward`] — gradients (dQ, dK, dV) for the exact and blockwise paths
 //!   (Fig. 1b fwd+bwd speedups).
+//! * [`decode`] — incremental single-query decode kernels + per-sequence
+//!   [`DecodeState`]: every backend's decode arm reproduces the last row of
+//!   its full forward over the growing KV cache (the serving fast path).
 //!
 //! Dispatch surface (use this, not per-kernel `match` arms):
 //!
@@ -28,6 +31,7 @@
 
 pub mod backend;
 pub mod backward;
+pub mod decode;
 pub mod exact;
 pub mod hyper;
 pub mod polynomial;
@@ -36,6 +40,7 @@ pub mod prescored;
 pub use backend::{
     AttentionBackend, AttentionOutput, AttentionSpec, AttnPolicy, AttnStats, RestrictedSelector,
 };
+pub use decode::{DecodeOutput, DecodeState};
 pub use exact::{exact_attention, flash_attention};
 pub use hyper::{hyper_attention, HyperConfig};
 pub use prescored::{prescored_hyper_attention, Coupling, PreScoredConfig};

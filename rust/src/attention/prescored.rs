@@ -36,6 +36,11 @@ pub enum Coupling {
     Glm2Artifact,
 }
 
+/// Default decode-time selection refresh period (§3.1: "reuse this
+/// selection or update it only periodically"). Shared with the serving
+/// coordinator's [`crate::coordinator::PreScoreManagerConfig`] default.
+pub const DECODE_REFRESH_DEFAULT: usize = 16;
+
 /// Algorithm-2 configuration.
 #[derive(Debug, Clone, PartialEq)]
 pub struct PreScoredConfig {
@@ -44,6 +49,11 @@ pub struct PreScoredConfig {
     /// Fallback threshold δ: if |S| < δ·n, run unfiltered HyperAttention.
     pub fallback_delta: f32,
     pub coupling: Coupling,
+    /// Decode path: re-run Algorithm 1 every R decode steps (0 = never;
+    /// 1 = every step, which makes decode exactly reproduce the full
+    /// forward). Between refreshes the cached selection is extended with
+    /// each new token. Ignored by the prefill `forward` path.
+    pub decode_refresh_every: usize,
 }
 
 impl Default for PreScoredConfig {
@@ -53,6 +63,7 @@ impl Default for PreScoredConfig {
             hyper: HyperConfig::default(),
             fallback_delta: 0.0,
             coupling: Coupling::Glm3Corrected,
+            decode_refresh_every: DECODE_REFRESH_DEFAULT,
         }
     }
 }
@@ -210,6 +221,7 @@ mod tests {
             hyper: HyperConfig { block_size: 32, sample_size: sample, seed: 7, ..Default::default() },
             fallback_delta: 0.0,
             coupling,
+            ..Default::default()
         }
     }
 

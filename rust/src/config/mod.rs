@@ -104,6 +104,11 @@ pub struct ServingConfig {
     /// Executor worker pool size (0 = derive from the parallel pool width /
     /// `PALLAS_THREADS`, capped).
     pub executor_workers: usize,
+    /// KV-cache pages available to the decode engine (page size
+    /// [`crate::coordinator::kv_cache::BLOCK_SIZE`] tokens).
+    pub kv_blocks: usize,
+    /// Cap on tokens generated per request through the decode path.
+    pub decode_max_new: usize,
     /// Pre-score method for the coordinator's prescore manager.
     pub prescore_method: String,
     pub prescore_top_k: usize,
@@ -131,6 +136,8 @@ impl Default for ServingConfig {
             batch_deadline_ms: 5.0,
             max_batch_tokens: 4096,
             executor_workers: 0,
+            kv_blocks: 512,
+            decode_max_new: 64,
             prescore_method: "kmeans".into(),
             prescore_top_k: 64,
             prescore_refresh_every: 16,
@@ -151,6 +158,8 @@ impl ServingConfig {
             batch_deadline_ms: cfg.f64_or("serving", "batch_deadline_ms", d.batch_deadline_ms)?,
             max_batch_tokens: cfg.usize_or("serving", "max_batch_tokens", d.max_batch_tokens)?,
             executor_workers: cfg.usize_or("serving", "executor_workers", d.executor_workers)?,
+            kv_blocks: cfg.usize_or("serving", "kv_blocks", d.kv_blocks)?,
+            decode_max_new: cfg.usize_or("serving", "decode_max_new", d.decode_max_new)?,
             prescore_method: cfg.get_or("prescore", "method", &d.prescore_method).to_string(),
             prescore_top_k: cfg.usize_or("prescore", "top_k", d.prescore_top_k)?,
             prescore_refresh_every: cfg
@@ -188,6 +197,7 @@ impl ServingConfig {
             Ok(AttentionSpec::PreScored(PreScoredConfig {
                 prescore,
                 fallback_delta: self.fallback_delta as f32,
+                decode_refresh_every: self.prescore_refresh_every,
                 ..Default::default()
             }))
         } else {

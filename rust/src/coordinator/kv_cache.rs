@@ -2,9 +2,16 @@
 //!
 //! Pages of `BLOCK_SIZE` token slots are allocated from a fixed pool with
 //! ref-counting (shared prefixes can share pages). The manager also owns the
-//! per-(sequence, layer) *key-selection sets* produced by the pre-score
-//! manager — the paper's cached prefill selection — so eviction of a
-//! sequence releases both its KV pages and its selections atomically.
+//! per-(sequence, selection-slot) *key-selection sets* produced by the
+//! pre-score manager — the paper's cached prefill selection — so eviction of
+//! a sequence releases both its KV pages and its selections atomically.
+//!
+//! The serving decode engine (`server::DecodeEngine`) drives this manager:
+//! `admit` at prefill, `append_token` per decode step (page growth gates
+//! token streaming), `set_selections` at every selection refresh, and
+//! `evict` at completion. The "layer" count is a *slot* count — the engine
+//! uses one slot per layer·head so the cached selections mirror the
+//! per-head `DecodeState`s exactly.
 
 use std::collections::HashMap;
 

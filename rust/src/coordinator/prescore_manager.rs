@@ -34,6 +34,23 @@ impl Default for PreScoreManagerConfig {
     }
 }
 
+impl PreScoreManagerConfig {
+    /// Build from the serving config's legacy `[prescore]` keys — the
+    /// decode engine's refresh policy source.
+    pub fn from_serving(cfg: &crate::config::ServingConfig) -> anyhow::Result<Self> {
+        let method = Method::parse(&cfg.prescore_method).ok_or_else(|| {
+            anyhow::anyhow!("unknown [prescore] method '{}'", cfg.prescore_method)
+        })?;
+        Ok(PreScoreManagerConfig {
+            method,
+            top_k: cfg.prescore_top_k,
+            refresh_every: cfg.prescore_refresh_every,
+            fallback_delta: cfg.fallback_delta as f32,
+            seed: 0,
+        })
+    }
+}
+
 /// Outcome of a selection decision for one layer.
 #[derive(Debug, Clone)]
 pub struct SelectionDecision {

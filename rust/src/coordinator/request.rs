@@ -57,6 +57,12 @@ pub struct Response {
     pub retained_keys: usize,
     /// Algorithm 2 line 2: the δ-fallback disabled filtering.
     pub fallback_used: bool,
+    /// Tokens produced through the incremental decode path (0 for
+    /// scoring-only requests served by the prefill/artifact path).
+    pub decode_steps: usize,
+    /// Total wall time spent inside decode steps for this request (ms) —
+    /// per-step p50/p99 across requests lives in `ServerStats`.
+    pub decode_ms: f64,
 }
 
 impl Response {
@@ -91,6 +97,8 @@ mod tests {
             kernel: "exact".into(),
             retained_keys: 8,
             fallback_used: false,
+            decode_steps: 0,
+            decode_ms: 0.0,
         };
         assert!((resp.perplexity() - 2.0).abs() < 1e-5);
     }

@@ -56,6 +56,7 @@ pub fn prescored_spec(
         hyper,
         fallback_delta: 0.0,
         coupling,
+        ..Default::default()
     })
 }
 

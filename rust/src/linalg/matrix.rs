@@ -56,6 +56,14 @@ impl Matrix {
         &mut self.data[i * c..(i + 1) * c]
     }
 
+    /// Append one row (length must equal `cols`) — the KV-cache growth
+    /// primitive of the decode path.
+    pub fn push_row(&mut self, row: &[f32]) {
+        assert_eq!(row.len(), self.cols, "push_row width mismatch");
+        self.data.extend_from_slice(row);
+        self.rows += 1;
+    }
+
     /// Gather a subset of rows into a new matrix (the K[S] / V[S] operation
     /// of Algorithm 2).
     pub fn gather_rows(&self, idx: &[usize]) -> Matrix {

@@ -17,6 +17,6 @@ pub mod transformer;
 pub mod vit;
 pub mod weights;
 
-pub use transformer::{AttnMode, Transformer, TransformerConfig};
+pub use transformer::{AttnMode, DecodeSession, Transformer, TransformerConfig};
 pub use vit::{Vit, VitAttnMode, VitConfig};
 pub use weights::WeightStore;

@@ -9,9 +9,12 @@
 //! An integration test validates it against the PJRT-executed artifact.
 
 use super::weights::WeightStore;
-use crate::attention::{AttentionInputs, AttentionSpec, AttnPolicy, HyperConfig, PreScoredConfig};
+use crate::attention::{
+    AttentionInputs, AttentionSpec, AttnPolicy, DecodeState, HyperConfig, PreScoredConfig,
+};
 use crate::linalg::ops::matmul;
 use crate::linalg::Matrix;
+use anyhow::{bail, Result};
 
 /// Static model hyper-parameters (must match the trained weights).
 #[derive(Debug, Clone)]
@@ -158,6 +161,18 @@ impl Transformer {
     /// Forward pass under a uniform or per-layer backend policy (per-layer
     /// policies must list exactly `n_layers` specs).
     pub fn forward_policy(&self, tokens: &[u32], policy: &AttnPolicy) -> Matrix {
+        self.forward_inner(tokens, policy, None)
+    }
+
+    /// Shared forward body. When `capture` is set, each layer·head's K/V
+    /// projections and attention decode state are collected for a
+    /// [`DecodeSession`] — the computation itself is unchanged.
+    fn forward_inner(
+        &self,
+        tokens: &[u32],
+        policy: &AttnPolicy,
+        mut capture: Option<&mut SessionCapture>,
+    ) -> Matrix {
         let n = tokens.len();
         assert!(n <= self.cfg.max_seq, "sequence longer than max_seq");
         assert!(
@@ -194,10 +209,14 @@ impl Transformer {
                 let inp = AttentionInputs::new(&q, &k, &v).causal(true);
                 // Per-layer/head seed salt decorrelates the stochastic
                 // kernels' RNG streams (deterministic kernels ignore it).
-                let out =
-                    policy.backend(li).forward_salted(&inp, (li * nh + head) as u64).out;
+                let salt = (li * nh + head) as u64;
+                let out = policy.backend(li).forward_salted(&inp, salt).out;
                 for i in 0..n {
                     att_all.row_mut(i)[c0..c1].copy_from_slice(out.row(i));
+                }
+                if let Some(cap) = capture.as_deref_mut() {
+                    cap.states.push(policy.backend(li).begin_decode(&q, &k, salt));
+                    cap.kv.push(HeadKv { k, v });
                 }
             }
             let proj = matmul(&att_all, &lw.wo);
@@ -235,17 +254,7 @@ impl Transformer {
 
     /// [`Transformer::nll`] under a backend policy.
     pub fn nll_policy(&self, tokens: &[u32], policy: &AttnPolicy) -> Vec<f32> {
-        let logits = self.forward_policy(tokens, policy);
-        let n = tokens.len();
-        let mut out = Vec::with_capacity(n - 1);
-        let mut row = vec![0.0f32; self.cfg.vocab];
-        for i in 0..n - 1 {
-            row.copy_from_slice(logits.row(i));
-            let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-            let lse = m + row.iter().map(|v| (v - m).exp()).sum::<f32>().ln();
-            out.push(lse - logits[(i, tokens[i + 1] as usize)]);
-        }
-        out
+        nll_from_logits(&self.forward_policy(tokens, policy), tokens)
     }
 
     /// Perplexity = exp(mean nll).
@@ -258,6 +267,220 @@ impl Transformer {
         let nll = self.nll_policy(tokens, policy);
         (nll.iter().map(|&v| v as f64).sum::<f64>() / nll.len() as f64).exp()
     }
+
+    /// Prefill for incremental decoding: run the full forward once, capture
+    /// every layer·head's K/V cache and attention [`DecodeState`], and
+    /// return the prefill logits plus the session [`decode_token`] advances.
+    /// Fails if any backend in the policy is prefill-only (no decode arm).
+    ///
+    /// [`decode_token`]: Transformer::decode_token
+    pub fn begin_decode(
+        &self,
+        tokens: &[u32],
+        policy: &AttnPolicy,
+    ) -> Result<(Matrix, DecodeSession)> {
+        assert!(!tokens.is_empty(), "begin_decode needs a non-empty prefill");
+        let nh = self.cfg.n_heads;
+        let mut cap = SessionCapture {
+            kv: Vec::with_capacity(self.cfg.n_layers * nh),
+            states: Vec::with_capacity(self.cfg.n_layers * nh),
+        };
+        let logits = self.forward_inner(tokens, policy, Some(&mut cap));
+        let mut attn = Vec::with_capacity(cap.states.len());
+        for (idx, st) in cap.states.into_iter().enumerate() {
+            match st {
+                Some(s) => attn.push(s),
+                None => bail!(
+                    "attention backend '{}' (layer {}) is prefill-only: it has no \
+                     decode arm (see the ROADMAP decode convention)",
+                    policy.backend(idx / nh).kernel_name(),
+                    idx / nh
+                ),
+            }
+        }
+        Ok((logits, DecodeSession { kv: cap.kv, attn, pos: tokens.len() }))
+    }
+
+    /// One incremental decode step: append `token`, advance every
+    /// layer·head KV cache by one row, and compute the next-token logits
+    /// through the backends' `decode_step` — equivalent to
+    /// `forward(context + [token])`'s last logits row without re-running
+    /// prefill (bitwise at pool width 1, ≤ 1e-5 under sharding; for
+    /// selection-cached kernels, exactly when their refresh period is 1).
+    pub fn decode_token(
+        &self,
+        sess: &mut DecodeSession,
+        token: u32,
+        policy: &AttnPolicy,
+    ) -> Vec<f32> {
+        let n0 = sess.pos;
+        assert!(n0 < self.cfg.max_seq, "decode_token past max_seq");
+        let d = self.cfg.d_model;
+        let nh = self.cfg.n_heads;
+        let dh = self.cfg.d_head();
+        let mut x = Matrix::zeros(1, d);
+        {
+            let (erow, prow) = (self.embed.row(token as usize), self.pos.row(n0));
+            let xrow = x.row_mut(0);
+            for c in 0..d {
+                xrow[c] = erow[c] + prow[c];
+            }
+        }
+        for (li, lw) in self.layers.iter().enumerate() {
+            // Attention block (single row; projections are row-independent,
+            // so these 1×d matmuls match the full forward's last row).
+            let h = layernorm(&x, &lw.ln1.0, &lw.ln1.1);
+            let q_all = matmul(&h, &lw.wq);
+            let k_all = matmul(&h, &lw.wk);
+            let v_all = matmul(&h, &lw.wv);
+            let mut att_all = Matrix::zeros(1, d);
+            for head in 0..nh {
+                let (c0, c1) = (head * dh, (head + 1) * dh);
+                let idx = li * nh + head;
+                let kv = &mut sess.kv[idx];
+                kv.k.push_row(&k_all.row(0)[c0..c1]);
+                kv.v.push_row(&v_all.row(0)[c0..c1]);
+                let out = policy.backend(li).decode_step(
+                    &mut sess.attn[idx],
+                    &q_all.row(0)[c0..c1],
+                    &kv.k,
+                    &kv.v,
+                    None,
+                );
+                att_all.row_mut(0)[c0..c1].copy_from_slice(&out.row);
+            }
+            let proj = matmul(&att_all, &lw.wo);
+            for (xv, pv) in x.data.iter_mut().zip(&proj.data) {
+                *xv += pv;
+            }
+            // MLP block.
+            let h2 = layernorm(&x, &lw.ln2.0, &lw.ln2.1);
+            let mut mid = matmul(&h2, &lw.w1);
+            {
+                let row = mid.row_mut(0);
+                for (c, v) in row.iter_mut().enumerate() {
+                    *v = gelu_tanh(*v + lw.b1[c]);
+                }
+            }
+            let mut out = matmul(&mid, &lw.w2);
+            {
+                let row = out.row_mut(0);
+                for (c, v) in row.iter_mut().enumerate() {
+                    *v += lw.b2[c];
+                }
+            }
+            for (xv, ov) in x.data.iter_mut().zip(&out.data) {
+                *xv += ov;
+            }
+        }
+        sess.pos = n0 + 1;
+        let xf = layernorm(&x, &self.ln_f.0, &self.ln_f.1);
+        matmul(&xf, &self.head).data
+    }
+
+    /// Greedy generation through the decode path: prefill once, then stream
+    /// up to `n_new` tokens (stopping early at `max_seq`).
+    pub fn generate_greedy(
+        &self,
+        tokens: &[u32],
+        n_new: usize,
+        policy: &AttnPolicy,
+    ) -> Result<Vec<u32>> {
+        let (logits, mut sess) = self.begin_decode(tokens, policy)?;
+        let mut next = argmax_row(logits.row(logits.rows - 1));
+        let mut out = Vec::with_capacity(n_new);
+        for _ in 0..n_new {
+            if sess.pos >= self.cfg.max_seq {
+                break;
+            }
+            out.push(next);
+            let row = self.decode_token(&mut sess, next, policy);
+            next = argmax_row(&row);
+        }
+        Ok(out)
+    }
+}
+
+/// Per layer·head KV cache of one decode session (rows = tokens so far).
+struct HeadKv {
+    k: Matrix,
+    v: Matrix,
+}
+
+/// Prefill capture buffer for [`Transformer::begin_decode`].
+struct SessionCapture {
+    kv: Vec<HeadKv>,
+    states: Vec<Option<DecodeState>>,
+}
+
+/// Per-sequence incremental decode state: every layer·head's K/V cache plus
+/// its attention [`DecodeState`]. Owned by the caller (the serving engine
+/// stores one per live sequence, keyed by the KV-cache manager).
+pub struct DecodeSession {
+    kv: Vec<HeadKv>,
+    attn: Vec<DecodeState>,
+    pos: usize,
+}
+
+impl DecodeSession {
+    /// Tokens in the context so far (prefill + decoded).
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    /// The attention decode states (layer-major, `n_layers · n_heads`).
+    pub fn states(&self) -> &[DecodeState] {
+        &self.attn
+    }
+
+    /// Override the selection refresh period on every layer·head state
+    /// (serving threads `[prescore] refresh_every` through here).
+    pub fn set_refresh_every(&mut self, every: usize) {
+        for st in &mut self.attn {
+            st.set_refresh_every(every);
+        }
+    }
+
+    /// Smallest retained-selection size across layer·head states, if any
+    /// kernel keeps a selection (serving reports it as `retained_keys`).
+    pub fn min_retained(&self) -> Option<usize> {
+        self.attn.iter().filter_map(|s| s.selection().map(|sel| sel.len())).min()
+    }
+
+    /// Approximate resident size of the KV caches in f32 elements.
+    pub fn kv_elems(&self) -> usize {
+        self.kv.iter().map(|hk| hk.k.data.len() + hk.v.data.len()).sum()
+    }
+}
+
+/// Per-token next-token negative log-likelihood (length n−1) from
+/// precomputed logits — shared by [`Transformer::nll_policy`] and the
+/// serving prefill path, which already holds the logits from
+/// [`Transformer::begin_decode`].
+pub fn nll_from_logits(logits: &Matrix, tokens: &[u32]) -> Vec<f32> {
+    let n = tokens.len();
+    let mut out = Vec::with_capacity(n.saturating_sub(1));
+    let mut row = vec![0.0f32; logits.cols];
+    for i in 0..n.saturating_sub(1) {
+        row.copy_from_slice(logits.row(i));
+        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let lse = m + row.iter().map(|v| (v - m).exp()).sum::<f32>().ln();
+        out.push(lse - logits[(i, tokens[i + 1] as usize)]);
+    }
+    out
+}
+
+/// Index of the largest value (first one wins ties) — greedy decoding.
+pub fn argmax_row(row: &[f32]) -> u32 {
+    let mut best = 0usize;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &v) in row.iter().enumerate() {
+        if v > bv {
+            bv = v;
+            best = i;
+        }
+    }
+    best as u32
 }
 
 /// LayerNorm over rows (eps = 1e-5, matching jax).
@@ -359,6 +582,7 @@ mod tests {
                 hyper: HyperConfig { block_size: 8, sample_size: 4, ..Default::default() },
                 fallback_delta: 0.0,
                 coupling,
+                ..Default::default()
             });
             let ppl = m.perplexity(&tokens, &mode);
             assert!(ppl.is_finite() && ppl > 1.0, "{coupling:?} ppl {ppl}");
@@ -375,6 +599,7 @@ mod tests {
             hyper: HyperConfig { block_size: 8, sample_size: 4, ..Default::default() },
             fallback_delta: 0.0,
             coupling: Coupling::Glm3Corrected,
+            ..Default::default()
         });
         let a = m.forward(&tokens, &mode);
         let b = m.forward_policy(&tokens, &AttnPolicy::uniform(mode.spec()));

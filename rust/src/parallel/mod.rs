@@ -1,37 +1,54 @@
-//! Scoped-thread work pool — the crate's parallel execution engine.
+//! Persistent channel-fed work pool — the crate's parallel execution engine.
 //!
 //! Every hot path (blocked matmul, flash attention, k-means assignment, LSH
-//! hashing, block-diagonal HyperAttention, the serving executor) funnels its
-//! data-parallel loops through this module instead of spawning ad-hoc
-//! threads. The design is deliberately std-only:
+//! hashing, block-diagonal HyperAttention, the serving executor, the decode
+//! engine) funnels its data-parallel loops through this module instead of
+//! spawning ad-hoc threads. The design is deliberately std-only:
 //!
-//! * **Fork-join over `std::thread::scope`** — helpers split an index space
-//!   (or the rows of a row-major buffer) into contiguous near-equal shards
-//!   and run one scoped worker per shard. Scoped threads may borrow from the
-//!   caller's stack, so no `Arc`/cloning is needed on the hot path, and the
-//!   join is implicit at scope exit.
+//! * **Persistent worker pool** — a lazily-initialized set of long-lived
+//!   workers drains a shared job queue (`Mutex<VecDeque>` + condvar — an
+//!   in-process channel). Helpers split an index space (or the rows of a
+//!   row-major buffer) into contiguous near-equal shards, enqueue one job
+//!   per shard, and *help-wait*: the calling thread executes queued jobs
+//!   itself until its own shards complete. Help-waiting makes nested
+//!   parallelism deadlock-free (a blocked caller always makes progress) and
+//!   means correctness never depends on workers existing — a pool mid-rebuild
+//!   degrades to caller-executed shards, never to lost work. Shard closures
+//!   borrow from the caller's stack exactly as the old scoped-thread
+//!   fork-join did; the completion latch is awaited before the call returns,
+//!   which is what makes the lifetime erasure sound.
 //! * **`PALLAS_THREADS`-configurable global width** — the pool width is read
 //!   once from the `PALLAS_THREADS` environment variable (falling back to
 //!   `std::thread::available_parallelism`), and can be overridden globally
-//!   with [`set_threads`] or per-call-tree with [`with_threads`] (used by the
-//!   serial-vs-parallel equivalence tests and the scaling benches).
+//!   with [`set_threads`] — which tears the pool down so the next parallel
+//!   call rebuilds it at the new width — or per-call-tree with
+//!   [`with_threads`] (used by the equivalence tests and the scaling
+//!   benches; the override changes the *shard count*, while the worker set
+//!   stays the global pool's).
 //! * **Determinism** — shard boundaries depend only on `(len, threads)`, each
 //!   shard's work is a pure function of its indices, and reductions merge
 //!   shard partials in shard order. Outputs are therefore reproducible for a
-//!   fixed thread count, and every helper degrades to the caller's serial
-//!   loop when the width is 1 (`threads=1` *is* the serial baseline path).
+//!   fixed thread count — including across [`set_threads`] pool rebuilds —
+//!   and every helper degrades to the caller's serial loop when the width is
+//!   1 (`threads=1` *is* the serial baseline path).
 //!
-//! The fork-join cost is a handful of thread spawns per call (~µs), which is
-//! noise against the O(n²·d) / O(n·d·k) loop bodies this module shards; a
-//! persistent queue would only matter for sub-millisecond kernels, which we
-//! deliberately leave serial via the `min_work` gates at the call sites.
+//! The old scoped-thread fork-join execution survives as
+//! [`ExecMode::ForkJoin`] (`PALLAS_POOL=fork` or [`set_exec_mode`]): it is
+//! the spawn-overhead baseline that `bench_decode_throughput` compares the
+//! persistent pool against. Fork-join pays a handful of thread spawns per
+//! call (~tens of µs) — noise under O(n²·d) prefill kernels, dominant under
+//! the sub-millisecond single-row decode kernels the pool exists for.
 
 use std::cell::Cell;
+use std::collections::VecDeque;
 use std::ops::Range;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
 
 /// Default minimum amount of scalar work (flops / element ops) below which
-/// call sites keep their serial loop instead of forking the pool — spawn
+/// call sites keep their serial loop instead of forking the pool — dispatch
 /// overhead dominates under this. Shared by the clustering/LSH gates so a
 /// future retuning lands everywhere at once.
 pub const DEFAULT_MIN_WORK: usize = 1 << 15;
@@ -77,14 +94,23 @@ pub fn num_threads() -> usize {
 }
 
 /// Set the global pool width (overrides `PALLAS_THREADS`). Clamped to ≥ 1.
+/// Tears down the persistent pool; the next parallel call lazily rebuilds it
+/// at the new width. In-flight calls on other threads complete safely (their
+/// help-waiting callers finish any shards the retiring workers leave
+/// behind), and outputs for a given width are identical before and after the
+/// rebuild.
 pub fn set_threads(n: usize) {
     GLOBAL_THREADS.store(n.max(1), Ordering::Relaxed);
+    Pool::teardown();
 }
 
 /// Run `f` with the pool width pinned to `n` on this thread's call tree.
 /// The previous width is restored afterwards (panic-safe via a drop guard),
 /// and concurrent callers on other threads are unaffected — this is the knob
-/// the serial/parallel equivalence tests and the scaling benches turn.
+/// the serial/parallel equivalence tests and the scaling benches turn. The
+/// override changes shard *boundaries* (and therefore which outputs are
+/// produced); the persistent workers executing the shards remain the global
+/// pool's.
 pub fn with_threads<R>(n: usize, f: impl FnOnce() -> R) -> R {
     struct Restore(usize);
     impl Drop for Restore {
@@ -95,6 +121,305 @@ pub fn with_threads<R>(n: usize, f: impl FnOnce() -> R) -> R {
     let prev = THREAD_OVERRIDE.with(|c| c.replace(n.max(1)));
     let _restore = Restore(prev);
     f()
+}
+
+// ---------------------------------------------------------------------------
+// Execution engine: persistent pool (default) or scoped-thread fork-join.
+// ---------------------------------------------------------------------------
+
+/// How shards are executed. The persistent pool is the default; fork-join is
+/// kept as the spawn-overhead baseline (`PALLAS_POOL=fork`) that the decode
+/// benches compare against.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Lazy-init persistent worker pool fed over a shared queue.
+    Persistent,
+    /// One scoped thread spawned per shard, joined at scope exit (the
+    /// pre-pool engine).
+    ForkJoin,
+}
+
+/// 0 = unresolved (consult `PALLAS_POOL`), 1 = persistent, 2 = fork-join.
+static EXEC_MODE: AtomicUsize = AtomicUsize::new(0);
+
+fn env_exec_mode() -> ExecMode {
+    match std::env::var("PALLAS_POOL") {
+        Ok(v) => match v.trim().to_ascii_lowercase().as_str() {
+            "fork" | "forkjoin" | "fork-join" => ExecMode::ForkJoin,
+            _ => ExecMode::Persistent,
+        },
+        Err(_) => ExecMode::Persistent,
+    }
+}
+
+/// The execution engine shards currently run on.
+pub fn exec_mode() -> ExecMode {
+    match EXEC_MODE.load(Ordering::Relaxed) {
+        1 => ExecMode::Persistent,
+        2 => ExecMode::ForkJoin,
+        _ => {
+            let m = env_exec_mode();
+            EXEC_MODE.store(if m == ExecMode::ForkJoin { 2 } else { 1 }, Ordering::Relaxed);
+            m
+        }
+    }
+}
+
+/// Select the execution engine (overrides `PALLAS_POOL`). Outputs are
+/// engine-independent — only dispatch overhead changes — which is exactly
+/// what the fork-join-vs-pool decode bench measures.
+pub fn set_exec_mode(mode: ExecMode) {
+    EXEC_MODE.store(if mode == ExecMode::ForkJoin { 2 } else { 1 }, Ordering::Relaxed);
+    if mode == ExecMode::ForkJoin {
+        Pool::teardown();
+    }
+}
+
+/// Completion latch for one helper call: counts outstanding shards and holds
+/// the first panic payload so it can be re-thrown on the calling thread.
+struct Latch {
+    remaining: Mutex<usize>,
+    done: Condvar,
+    panic: Mutex<Option<Box<dyn std::any::Any + Send + 'static>>>,
+}
+
+impl Latch {
+    fn new(count: usize) -> Latch {
+        Latch { remaining: Mutex::new(count), done: Condvar::new(), panic: Mutex::new(None) }
+    }
+
+    fn complete(&self, panic: Option<Box<dyn std::any::Any + Send + 'static>>) {
+        if let Some(p) = panic {
+            let mut slot = self.panic.lock().expect("latch panic slot poisoned");
+            if slot.is_none() {
+                *slot = Some(p);
+            }
+        }
+        let mut rem = self.remaining.lock().expect("latch poisoned");
+        *rem -= 1;
+        if *rem == 0 {
+            self.done.notify_all();
+        }
+    }
+}
+
+/// One queued shard: a lifetime-erased closure plus the latch it reports to.
+/// Soundness: the enqueuing call blocks on the latch before returning, so
+/// the borrows inside `task` (and the latch pointer itself) outlive every
+/// point at which the job can run.
+struct Job {
+    task: Box<dyn FnOnce() + Send + 'static>,
+    latch: *const Latch,
+}
+
+// The raw latch pointer crosses threads; validity is guaranteed by the
+// latch-before-return protocol above.
+unsafe impl Send for Job {}
+
+impl Job {
+    /// Run the shard (catching panics) and report completion.
+    fn run(self) {
+        let latch = self.latch;
+        let result = catch_unwind(AssertUnwindSafe(self.task));
+        // Safety: the enqueuing caller is still inside `wait`, keeping the
+        // latch alive until this exact call counts it down.
+        unsafe { (*latch).complete(result.err()) }
+    }
+
+    /// Run on the *caller's* thread with any `with_threads` override
+    /// suppressed, so a shard behaves identically whether a pool worker or
+    /// the help-waiting caller executes it (fork-join shards always ran on
+    /// fresh threads and saw the global width). `run` never unwinds, so a
+    /// plain save/restore suffices.
+    fn run_neutral(self) {
+        let prev = THREAD_OVERRIDE.with(|c| c.replace(0));
+        self.run();
+        THREAD_OVERRIDE.with(|c| c.set(prev));
+    }
+}
+
+/// Shared state of the persistent pool: the job queue (an in-process
+/// channel) plus the liveness flag workers watch.
+struct PoolShared {
+    queue: Mutex<VecDeque<Job>>,
+    work: Condvar,
+    /// Flipped false on teardown; parked workers wake and exit. Queued jobs
+    /// are still drained first (by workers or by help-waiting callers).
+    live: Mutex<bool>,
+    width: usize,
+}
+
+impl PoolShared {
+    fn pop(&self) -> Option<Job> {
+        self.queue.lock().expect("pool queue poisoned").pop_front()
+    }
+}
+
+/// The process-global pool handle.
+struct Pool;
+
+static POOL: Mutex<Option<Arc<PoolShared>>> = Mutex::new(None);
+
+impl Pool {
+    /// The live pool for the current global width, building it on first use.
+    /// Returns `None` when the global width is 1 (serial: no workers).
+    fn get() -> Option<Arc<PoolShared>> {
+        // Global width only — a `with_threads` override changes shard
+        // counts, never the persistent worker set.
+        let width = {
+            let g = GLOBAL_THREADS.load(Ordering::Relaxed);
+            if g > 0 {
+                g
+            } else {
+                let n = env_threads().max(1);
+                GLOBAL_THREADS.store(n, Ordering::Relaxed);
+                n
+            }
+        };
+        if width <= 1 {
+            return None;
+        }
+        let mut slot = POOL.lock().expect("pool slot poisoned");
+        if let Some(pool) = slot.as_ref() {
+            if pool.width == width {
+                return Some(Arc::clone(pool));
+            }
+            Self::retire(pool);
+        }
+        let shared = Arc::new(PoolShared {
+            queue: Mutex::new(VecDeque::new()),
+            work: Condvar::new(),
+            live: Mutex::new(true),
+            width,
+        });
+        // width - 1 workers: the help-waiting caller is the width'th lane.
+        for i in 0..width - 1 {
+            let pool = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name(format!("pallas-pool-{i}"))
+                .spawn(move || worker_loop(pool))
+                .expect("spawning pool worker");
+        }
+        *slot = Some(Arc::clone(&shared));
+        Some(shared)
+    }
+
+    /// Tear down the current pool (if any); next use rebuilds lazily.
+    fn teardown() {
+        let mut slot = POOL.lock().expect("pool slot poisoned");
+        if let Some(pool) = slot.take() {
+            Self::retire(&pool);
+        }
+    }
+
+    fn retire(pool: &Arc<PoolShared>) {
+        *pool.live.lock().expect("pool live flag poisoned") = false;
+        pool.work.notify_all();
+    }
+}
+
+/// Body of one persistent worker: drain jobs; park when idle; exit when the
+/// pool is retired (after the queue is empty — queued work is never
+/// abandoned by an exiting worker).
+fn worker_loop(pool: Arc<PoolShared>) {
+    loop {
+        let job = {
+            let mut queue = pool.queue.lock().expect("pool queue poisoned");
+            loop {
+                if let Some(job) = queue.pop_front() {
+                    break Some(job);
+                }
+                if !*pool.live.lock().expect("pool live flag poisoned") {
+                    break None;
+                }
+                // Park until a push or teardown; bounded so a teardown
+                // racing the liveness check above cannot strand the worker.
+                let (q, _) = pool
+                    .work
+                    .wait_timeout(queue, Duration::from_millis(50))
+                    .expect("pool queue poisoned");
+                queue = q;
+            }
+        };
+        match job {
+            Some(job) => job.run(),
+            None => return,
+        }
+    }
+}
+
+/// Execute one closure per shard and return when all have completed; the
+/// engine-dispatch core every helper lowers to. Panics in shards are
+/// re-thrown here (first one wins) after all shards finish, so borrowed
+/// stack data is never abandoned mid-use.
+fn run_shards(shards: Vec<Box<dyn FnOnce() + Send + '_>>) {
+    match shards.len() {
+        0 => return,
+        1 => {
+            let mut shards = shards;
+            (shards.pop().unwrap())();
+            return;
+        }
+        _ => {}
+    }
+    if exec_mode() == ExecMode::ForkJoin {
+        std::thread::scope(|s| {
+            for shard in shards {
+                s.spawn(shard);
+            }
+        });
+        return;
+    }
+    let pool = Pool::get();
+    let latch = Latch::new(shards.len());
+    match pool {
+        Some(pool) => {
+            {
+                let mut queue = pool.queue.lock().expect("pool queue poisoned");
+                for shard in shards {
+                    // Safety: `latch` is awaited below before this frame
+                    // (and the borrows inside `shard`) can die.
+                    let task: Box<dyn FnOnce() + Send + 'static> =
+                        unsafe { std::mem::transmute(shard) };
+                    queue.push_back(Job { task, latch: &latch });
+                }
+            }
+            pool.work.notify_all();
+            // Help-wait: run queued jobs (ours or a nested call's) until our
+            // shards are all accounted for.
+            loop {
+                {
+                    let rem = latch.remaining.lock().expect("latch poisoned");
+                    if *rem == 0 {
+                        break;
+                    }
+                }
+                if let Some(job) = pool.pop() {
+                    job.run_neutral();
+                    continue;
+                }
+                let rem = latch.remaining.lock().expect("latch poisoned");
+                if *rem == 0 {
+                    break;
+                }
+                // Timed so nested work enqueued after the pop above is
+                // noticed promptly even if every worker is busy.
+                let _ = latch.done.wait_timeout(rem, Duration::from_micros(200));
+            }
+        }
+        None => {
+            // Global width 1 (with a larger with_threads override): shard
+            // boundaries still follow the override; execution is serial.
+            for shard in shards {
+                let task: Box<dyn FnOnce() + Send + 'static> =
+                    unsafe { std::mem::transmute(shard) };
+                Job { task, latch: &latch }.run_neutral();
+            }
+        }
+    }
+    if let Some(p) = latch.panic.lock().expect("latch panic slot poisoned").take() {
+        resume_unwind(p);
+    }
 }
 
 /// Partition `0..n` into contiguous shards of `ceil(n / parts)` items (the
@@ -115,11 +440,10 @@ pub fn split_ranges(n: usize, parts: usize) -> Vec<Range<usize>> {
     out
 }
 
-/// Fork-join over an index space: run `f(range)` for each shard of `0..n`
-/// on the pool. `f` must only touch state that is safe to share (`&`-refs,
-/// atomics); use [`par_chunks`] when each shard owns a disjoint slice of an
-/// output buffer. With a pool width of 1 this is exactly `f(0..n)` on the
-/// caller thread — no threads are spawned.
+/// Run `f(range)` for each shard of `0..n` on the pool. `f` must only touch
+/// state that is safe to share (`&`-refs, atomics); use [`par_chunks`] when
+/// each shard owns a disjoint slice of an output buffer. With a pool width
+/// of 1 this is exactly `f(0..n)` on the caller thread — no dispatch.
 pub fn par_ranges<F>(n: usize, f: F)
 where
     F: Fn(Range<usize>) + Sync,
@@ -132,17 +456,16 @@ where
         f(0..n);
         return;
     }
-    let ranges = split_ranges(n, threads);
-    std::thread::scope(|s| {
-        let f = &f;
-        for r in ranges {
-            s.spawn(move || f(r));
-        }
-    });
+    let f = &f;
+    let shards: Vec<Box<dyn FnOnce() + Send + '_>> = split_ranges(n, threads)
+        .into_iter()
+        .map(|r| Box::new(move || f(r)) as Box<dyn FnOnce() + Send + '_>)
+        .collect();
+    run_shards(shards);
 }
 
-/// Fork-join over the *rows* of a row-major buffer: split `data` (with
-/// `stride` elements per row) into contiguous per-shard sub-slices and run
+/// Shard the *rows* of a row-major buffer: split `data` (with `stride`
+/// elements per row) into contiguous per-shard sub-slices and run
 /// `f(first_row, shard)` on each. Because the shards are disjoint `&mut`
 /// slices, workers write results directly with no locking; this is the
 /// backbone of the row-sharded matmul, flash attention, and the clustering
@@ -164,12 +487,15 @@ where
         return;
     }
     let chunk_rows = rows.div_ceil(threads);
-    std::thread::scope(|s| {
-        let f = &f;
-        for (ci, chunk) in data.chunks_mut(chunk_rows * stride).enumerate() {
-            s.spawn(move || f(ci * chunk_rows, chunk));
-        }
-    });
+    let f = &f;
+    let shards: Vec<Box<dyn FnOnce() + Send + '_>> = data
+        .chunks_mut(chunk_rows * stride)
+        .enumerate()
+        .map(|(ci, chunk)| {
+            Box::new(move || f(ci * chunk_rows, chunk)) as Box<dyn FnOnce() + Send + '_>
+        })
+        .collect();
+    run_shards(shards);
 }
 
 /// Convenience alias of [`par_chunks`] for stride-1 buffers ("one row = one
@@ -219,23 +545,24 @@ where
         }
     }
     bounds.push(rows);
-    std::thread::scope(|s| {
-        let f = &f;
-        let mut rest = data;
-        for w in bounds.windows(2) {
-            let (start, end) = (w[0], w[1]);
-            let (head, tail) = rest.split_at_mut((end - start) * stride);
-            rest = tail;
-            s.spawn(move || f(start, head));
-        }
-    });
+    let f = &f;
+    let mut shards: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(bounds.len() - 1);
+    let mut rest = data;
+    for w in bounds.windows(2) {
+        let (start, end) = (w[0], w[1]);
+        let (head, tail) = rest.split_at_mut((end - start) * stride);
+        rest = tail;
+        shards.push(Box::new(move || f(start, head)));
+    }
+    run_shards(shards);
 }
 
 /// Parallel fold over `0..n` with deterministic merge order: each shard
 /// folds its contiguous range into an accumulator produced by `init`, and
 /// the shard partials are merged left-to-right (shard order) on the caller
 /// thread. Used for the sharded dK/dV accumulators of the attention backward
-/// pass. Width 1 folds serially with no merge.
+/// pass and the sharded single-row decode kernels. Width 1 folds serially
+/// with no merge.
 pub fn par_reduce<R, I, F, M>(n: usize, init: I, fold: F, mut merge: M) -> R
 where
     R: Send,
@@ -253,15 +580,20 @@ where
     let ranges = split_ranges(n, threads);
     let mut parts: Vec<Option<R>> = Vec::new();
     parts.resize_with(ranges.len(), || None);
-    std::thread::scope(|s| {
+    {
         let init = &init;
         let fold = &fold;
-        for (slot, r) in parts.iter_mut().zip(ranges) {
-            s.spawn(move || {
-                *slot = Some(fold(init(), r));
-            });
-        }
-    });
+        let shards: Vec<Box<dyn FnOnce() + Send + '_>> = parts
+            .iter_mut()
+            .zip(ranges)
+            .map(|(slot, r)| {
+                Box::new(move || {
+                    *slot = Some(fold(init(), r));
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        run_shards(shards);
+    }
     let mut iter = parts.into_iter().map(|p| p.expect("par_reduce shard missing"));
     let first = iter.next().expect("par_reduce has at least one shard");
     iter.fold(first, |acc, p| merge(acc, p))
@@ -395,5 +727,90 @@ mod tests {
         });
         assert!(result.is_err());
         assert_eq!(num_threads(), before);
+    }
+
+    #[test]
+    fn shard_panic_propagates_and_pool_survives() {
+        let result = std::panic::catch_unwind(|| {
+            with_threads(4, || {
+                par_ranges(64, |r| {
+                    if r.contains(&40) {
+                        panic!("shard boom");
+                    }
+                });
+            });
+        });
+        assert!(result.is_err(), "shard panic must reach the caller");
+        // The pool must keep working after a shard panic.
+        with_threads(4, || {
+            let hits: Vec<AtomicU64> = (0..32).map(|_| AtomicU64::new(0)).collect();
+            par_ranges(32, |r| {
+                for i in r {
+                    hits[i].fetch_add(1, Ordering::Relaxed);
+                }
+            });
+            assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+        });
+    }
+
+    #[test]
+    fn nested_parallelism_completes() {
+        // A shard that itself fans out must not deadlock the pool (the
+        // help-waiting caller drains nested jobs).
+        for t in [2usize, 4] {
+            with_threads(t, || {
+                let total = AtomicU64::new(0);
+                par_ranges(8, |outer| {
+                    for _ in outer {
+                        par_ranges(16, |inner| {
+                            total.fetch_add(inner.len() as u64, Ordering::Relaxed);
+                        });
+                    }
+                });
+                assert_eq!(total.load(Ordering::Relaxed), 8 * 16, "threads={t}");
+            });
+        }
+    }
+
+    #[test]
+    fn set_threads_rebuild_is_deterministic() {
+        // Same width before and after a rebuild ⇒ identical outputs.
+        let run = || {
+            with_threads(4, || {
+                par_reduce(
+                    257,
+                    || 0.0f64,
+                    |acc, r| acc + r.map(|i| (i as f64).sqrt()).sum::<f64>(),
+                    |a, b| a + b,
+                )
+            })
+        };
+        let before = run();
+        let saved = num_threads();
+        set_threads(2);
+        set_threads(saved);
+        let after = run();
+        assert_eq!(before.to_bits(), after.to_bits());
+    }
+
+    #[test]
+    fn fork_join_mode_matches_pool() {
+        let run = || {
+            with_threads(4, || {
+                let mut buf = vec![0usize; 100];
+                par_rows(&mut buf, |first, chunk| {
+                    for (local, slot) in chunk.iter_mut().enumerate() {
+                        *slot = (first + local) * 3;
+                    }
+                });
+                buf
+            })
+        };
+        let pool = run();
+        let prev = exec_mode();
+        set_exec_mode(ExecMode::ForkJoin);
+        let fj = run();
+        set_exec_mode(prev);
+        assert_eq!(pool, fj);
     }
 }

@@ -1,28 +1,53 @@
 //! Thread-based serving loop (tokio substitute — see DESIGN.md).
 //!
-//! A `ScoringServer` owns the dynamic batcher and a pool of executor
-//! workers. Clients submit requests over an mpsc channel and receive
+//! A `ScoringServer` owns the dynamic batcher, a pool of executor workers,
+//! and — when a trained `weights.bin` is present — a pure-Rust **decode
+//! engine**. Clients submit requests over an mpsc channel and receive
 //! responses over per-request channels. One coordinator thread blocks on
 //! the job queue (`recv_timeout` against the batch deadline — no busy-wait
-//! polling), forms batches, and hands them to a worker pool that drains a
-//! shared batch queue; each worker owns its own [`ArtifactRegistry`] because
+//! polling), forms batches, and feeds a shared work queue that the executor
+//! workers drain; each worker owns its own [`ArtifactRegistry`] because
 //! PJRT handles are not `Send`. Python is never on this path.
+//!
+//! Two request classes flow through the same worker pool:
+//!
+//! * **Scoring** (`generate == 0`) — dynamic batches executed against the
+//!   AOT artifacts (or, when no artifact is loadable but the substrate
+//!   model is, scored by the pure-Rust transformer).
+//! * **Generation** (`generate > 0`) — routed to the decode engine: one
+//!   prefill on the transformer substrate captures per-layer/head KV caches
+//!   and attention [`crate::attention::DecodeState`]s, then the
+//!   prefill/decode [`Scheduler`] dispatches decode *rounds*
+//!   ([`Scheduler::next_round`]) that step each sequence through the
+//!   backends' `decode_step` against the block-allocated
+//!   [`KvCacheManager`] — prefill is never re-run, so a decode step costs
+//!   selection-sized work for `prescored:`/`restricted:` specs instead of
+//!   O(n²). Workers re-pump the scheduler after every round, so decode
+//!   throughput is not gated on the coordinator's batching deadline, and
+//!   the scheduler's starvation bound (observable via
+//!   [`ServerStats::decode_rounds`] and the per-step percentiles) keeps
+//!   decode latency bounded under prefill pressure.
 //!
 //! Worker count: `ServingConfig::executor_workers`, with 0 meaning "derive
 //! from the [`crate::parallel`] pool width" (i.e. `PALLAS_THREADS`), capped
 //! so a laptop-sized pool doesn't compile one artifact registry per core.
 
-use crate::attention::{AttentionBackend, AttentionSpec};
+use crate::attention::{AttentionBackend, AttentionSpec, AttnPolicy};
 use crate::config::ServingConfig;
-use crate::coordinator::{Batch, BatcherConfig, DynamicBatcher, Request, Response};
+use crate::coordinator::{
+    Batch, BatcherConfig, DynamicBatcher, KvCacheManager, PreScoreManager,
+    PreScoreManagerConfig, Request, Response, Scheduler, SchedulerConfig, WorkItem,
+};
 use crate::metrics::LatencyStats;
+use crate::model::transformer::{argmax_row, nll_from_logits};
+use crate::model::{DecodeSession, Transformer, TransformerConfig, WeightStore};
 use crate::parallel;
 use crate::runtime::ArtifactRegistry;
 use anyhow::Result;
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::path::Path;
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 /// A submitted job: the request plus the channel to answer on.
@@ -42,30 +67,336 @@ pub struct ServerStats {
     pub latency_p99_ms: f64,
     pub throughput_rps: f64,
     pub tokens_per_s: f64,
-    /// Executor workers that drained the batch queue.
+    /// Executor workers that drained the work queue.
     pub workers: usize,
     /// Attention kernel the server was configured with
     /// ([`crate::attention::AttnStats::kernel`]).
     pub kernel: String,
+    /// Prefill executions (scoring batches + decode-engine prefills).
+    pub prefills: usize,
+    /// Decode rounds dispatched by the scheduler.
+    pub decode_rounds: usize,
+    /// Individual decode steps executed across all sequences.
+    pub decode_steps: usize,
+    /// Per-decode-step wall time percentiles (ms) — the starvation-bound
+    /// observability the scheduler's policy is judged by.
+    pub decode_step_p50_ms: f64,
+    pub decode_step_p99_ms: f64,
 }
 
 /// Mutable counters shared between the executor workers.
 #[derive(Default)]
 struct SharedStats {
     latency: LatencyStats,
+    decode_step_latency: LatencyStats,
     completed: usize,
     batches: usize,
     total_lanes: usize,
     occupied_lanes: usize,
     scored_tokens: usize,
+    prefills: usize,
+    decode_rounds: usize,
+    decode_steps: usize,
 }
 
-/// A batch handed to the worker pool, with the responders for its requests
-/// (aligned with `batch.requests`; `None` if a responder was lost, e.g. a
-/// duplicate request id overwrote it — the batch still executes).
-struct WorkItem {
-    batch: Batch,
-    responders: Vec<Option<Sender<Response>>>,
+/// Work drained by the executor pool.
+enum Work {
+    /// Artifact-scored batch with the responders for its requests (aligned
+    /// with `batch.requests`; `None` if a responder was lost, e.g. a
+    /// duplicate request id overwrote it — the batch still executes).
+    Score { batch: Batch, responders: Vec<Option<Sender<Response>>> },
+    /// A prefill/decode round from the decode engine's scheduler.
+    Gen(WorkItem),
+}
+
+/// Shared work queue (in-process channel) feeding the executor workers.
+/// Workers both consume from and (for decode-round re-pumping) produce into
+/// it, so it is a mutex/condvar queue rather than an mpsc channel — close()
+/// plus an emptiness/engine-idle predicate replaces sender counting.
+struct WorkQueue {
+    state: Mutex<(VecDeque<Work>, bool)>,
+    cv: Condvar,
+}
+
+impl WorkQueue {
+    fn new() -> WorkQueue {
+        WorkQueue { state: Mutex::new((VecDeque::new(), false)), cv: Condvar::new() }
+    }
+
+    fn push(&self, w: Work) {
+        let mut g = self.state.lock().expect("work queue poisoned");
+        g.0.push_back(w);
+        self.cv.notify_one();
+    }
+
+    fn close(&self) {
+        let mut g = self.state.lock().expect("work queue poisoned");
+        g.1 = true;
+        self.cv.notify_all();
+    }
+
+    /// Blocking pop. Returns `None` once the queue is closed, empty, and
+    /// `drained()` reports no in-flight engine work (a finishing decode
+    /// round may still re-pump new items after close). `drained()` takes
+    /// the engine mutex, so it is evaluated *outside* the queue lock —
+    /// pushes never stall behind it.
+    fn pop<F: Fn() -> bool>(&self, drained: F) -> Option<Work> {
+        loop {
+            let closed = {
+                let mut g = self.state.lock().expect("work queue poisoned");
+                loop {
+                    if let Some(w) = g.0.pop_front() {
+                        return Some(w);
+                    }
+                    if g.1 {
+                        break true;
+                    }
+                    let (ng, _) = self
+                        .cv
+                        .wait_timeout(g, Duration::from_millis(25))
+                        .expect("work queue poisoned");
+                    g = ng;
+                }
+            };
+            debug_assert!(closed);
+            if drained() {
+                // Re-check under the lock: a decode round finishing between
+                // the checks may have re-pumped one last item.
+                let g = self.state.lock().expect("work queue poisoned");
+                if g.0.is_empty() {
+                    return None;
+                }
+                continue;
+            }
+            // Closed but engine still streaming: pace the re-check.
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+}
+
+/// One live generation sequence inside the decode engine.
+struct GenSession {
+    sess: DecodeSession,
+    respond: Option<Sender<Response>>,
+    arrived: Instant,
+    /// Prefill NLL (scored from the prefill logits — no extra forward).
+    nll: Vec<f32>,
+    target_new: usize,
+    generated: Vec<u32>,
+    next_token: u32,
+    decode_ms: f64,
+}
+
+/// Pure-Rust decode engine: prefill once on the transformer substrate, then
+/// stream tokens through the attention backends' `decode_step` against the
+/// block-allocated KV cache. The engine is a single mutex-guarded state
+/// machine (sessions step sequentially within a round); the decode kernels
+/// themselves shard across the persistent [`crate::parallel`] pool.
+struct DecodeEngine {
+    model: Transformer,
+    policy: AttnPolicy,
+    manager: PreScoreManager,
+    kv: KvCacheManager,
+    scheduler: Scheduler,
+    /// Admitted but not yet prefilled.
+    pending: HashMap<u64, Job>,
+    /// Prefilled, streaming tokens.
+    sessions: HashMap<u64, GenSession>,
+    max_new: usize,
+    kernel: &'static str,
+}
+
+impl DecodeEngine {
+    fn new(model: Transformer, cfg: &ServingConfig, spec: &AttentionSpec) -> DecodeEngine {
+        let mut manager_cfg = PreScoreManagerConfig::from_serving(cfg).unwrap_or_else(|e| {
+            // A bad [prescore] method must not silently change the decode
+            // refresh cadence — keep the configured period on fallback.
+            eprintln!("decode engine: {e:#}; using default prescore policy");
+            PreScoreManagerConfig {
+                refresh_every: cfg.prescore_refresh_every,
+                ..Default::default()
+            }
+        });
+        // One refresh policy end to end: `prescored:` specs own their period
+        // (explicit `refresh=` or the legacy-key derivation); for every
+        // other kernel the legacy `[prescore] refresh_every` applies. The
+        // manager drives both the states (set_refresh_every at prefill) and
+        // the KV-cache selection-mirror cadence, so they can never drift.
+        if let AttentionSpec::PreScored(ps) = spec {
+            manager_cfg.refresh_every = ps.decode_refresh_every;
+            manager_cfg.top_k = ps.prescore.top_k;
+            manager_cfg.fallback_delta = ps.fallback_delta;
+        }
+        let slots = model.cfg.n_layers * model.cfg.n_heads;
+        DecodeEngine {
+            kv: KvCacheManager::new(cfg.kv_blocks, slots),
+            manager: PreScoreManager::new(manager_cfg),
+            scheduler: Scheduler::new(SchedulerConfig::default()),
+            policy: AttnPolicy::uniform(spec.clone()),
+            pending: HashMap::new(),
+            sessions: HashMap::new(),
+            max_new: cfg.decode_max_new,
+            kernel: spec.kernel_name(),
+            model,
+        }
+    }
+
+    /// Anything admitted or streaming (work may still be in flight even
+    /// when the scheduler queues are momentarily empty).
+    fn active(&self) -> bool {
+        !self.pending.is_empty() || !self.sessions.is_empty()
+    }
+
+    fn admit(&mut self, job: Job) {
+        let id = job.request.id;
+        self.pending.insert(id, job);
+        self.scheduler.submit_prefill(vec![id]);
+    }
+
+    fn next_round(&mut self, free_workers: usize) -> Vec<WorkItem> {
+        self.scheduler.next_round(free_workers)
+    }
+
+    /// Per-layer·head selections snapshot for the KV-cache manager.
+    fn selections_snapshot(sess: &DecodeSession) -> Vec<Vec<usize>> {
+        sess.states()
+            .iter()
+            .map(|s| s.selection().map(|x| x.to_vec()).unwrap_or_default())
+            .collect()
+    }
+
+    fn run_prefill(&mut self, id: u64, shared: &Mutex<SharedStats>) {
+        let Some(job) = self.pending.remove(&id) else { return };
+        if self.sessions.contains_key(&id) {
+            // Duplicate request id while the first is still streaming: the
+            // newer responder is dropped (same policy as the scoring path's
+            // responder map).
+            return;
+        }
+        let mut tokens = job.request.tokens.clone();
+        tokens.truncate(self.model.cfg.max_seq);
+        if tokens.is_empty() {
+            return; // responder dropped → caller observes disconnect
+        }
+        let need_pages = tokens.len().div_ceil(crate::coordinator::kv_cache::BLOCK_SIZE).max(1);
+        if need_pages > self.kv.capacity() {
+            eprintln!(
+                "request {id} needs {need_pages} kv pages but the pool holds {} — dropping",
+                self.kv.capacity()
+            );
+            return;
+        }
+        if self.kv.admit(id, tokens.len()).is_none() {
+            // Pool momentarily exhausted by live sequences: requeue the
+            // prefill — pages free as sequences finish, and the scheduler's
+            // prefill-priority keeps retrying at the pump cadence.
+            self.pending.insert(id, job);
+            self.scheduler.submit_prefill(vec![id]);
+            return;
+        }
+        let Job { request, respond } = job;
+        match self.model.begin_decode(&tokens, &self.policy) {
+            Ok((logits, mut sess)) => {
+                sess.set_refresh_every(self.manager.cfg.refresh_every);
+                let nll = nll_from_logits(&logits, &tokens);
+                let next_token = argmax_row(logits.row(logits.rows - 1));
+                self.kv.set_selections(id, Self::selections_snapshot(&sess));
+                shared.lock().expect("stats poisoned").prefills += 1;
+                self.sessions.insert(
+                    id,
+                    GenSession {
+                        sess,
+                        respond,
+                        arrived: request.arrived,
+                        nll,
+                        target_new: request.generate.min(self.max_new),
+                        generated: Vec::new(),
+                        next_token,
+                        decode_ms: 0.0,
+                    },
+                );
+                self.scheduler.submit_decode(id);
+            }
+            Err(e) => {
+                eprintln!("decode prefill failed for request {id}: {e:#}");
+                self.kv.evict(id);
+            }
+        }
+    }
+
+    /// One decode round: a single token step for each scheduled sequence.
+    fn run_decode(&mut self, ids: &[u64], shared: &Mutex<SharedStats>) {
+        let max_seq = self.model.cfg.max_seq;
+        let mut step_ms: Vec<f64> = Vec::with_capacity(ids.len());
+        for &id in ids {
+            let done = {
+                let Some(s) = self.sessions.get_mut(&id) else { continue };
+                if s.generated.len() >= s.target_new || s.sess.pos() >= max_seq {
+                    true
+                } else if self.kv.append_token(id).is_none() {
+                    eprintln!("kv cache exhausted for sequence {id}; finishing early");
+                    true
+                } else {
+                    let t0 = Instant::now();
+                    let token = s.next_token;
+                    s.generated.push(token);
+                    let row = self.model.decode_token(&mut s.sess, token, &self.policy);
+                    s.next_token = argmax_row(&row);
+                    let ms = t0.elapsed().as_secs_f64() * 1e3;
+                    s.decode_ms += ms;
+                    step_ms.push(ms);
+                    // Keep the cache's selection view fresh at the refresh
+                    // cadence (the states refresh themselves; this mirrors
+                    // the result into the kv manager's selection sets).
+                    if self.manager.needs_refresh(self.kv.steps_since_refresh(id)) {
+                        let snap = Self::selections_snapshot(&s.sess);
+                        self.kv.set_selections(id, snap);
+                    }
+                    s.generated.len() >= s.target_new || s.sess.pos() >= max_seq
+                }
+            };
+            if done {
+                self.finish(id, shared);
+            } else {
+                self.scheduler.submit_decode(id);
+            }
+        }
+        let mut st = shared.lock().expect("stats poisoned");
+        st.decode_rounds += 1;
+        for ms in step_ms {
+            st.decode_step_latency.record_ms(ms);
+            st.decode_steps += 1;
+        }
+    }
+
+    fn finish(&mut self, id: u64, shared: &Mutex<SharedStats>) {
+        let Some(s) = self.sessions.remove(&id) else { return };
+        self.kv.evict(id);
+        let lat = s.arrived.elapsed();
+        let context = s.sess.pos();
+        let retained = s.sess.min_retained().unwrap_or(context);
+        let fallback = s.sess.states().iter().any(|st| st.fallback_used());
+        {
+            let mut st = shared.lock().expect("stats poisoned");
+            st.latency.record(lat);
+            st.completed += 1;
+            st.scored_tokens += s.nll.len() + s.generated.len();
+        }
+        if let Some(tx) = s.respond {
+            let decode_steps = s.generated.len();
+            let _ = tx.send(Response {
+                id,
+                nll: s.nll,
+                generated: s.generated,
+                latency_ms: lat.as_secs_f64() * 1e3,
+                kernel: self.kernel.to_string(),
+                retained_keys: retained,
+                fallback_used: fallback,
+                decode_steps,
+                decode_ms: s.decode_ms,
+            });
+        }
+    }
 }
 
 /// The scoring server: coordinator thread + executor worker pool.
@@ -80,8 +411,23 @@ impl ScoringServer {
     ///
     /// PJRT handles are not `Send`, so each worker constructs its registry
     /// *inside* its own thread; artifact availability is pre-flighted here
-    /// so misconfiguration fails fast on the caller.
+    /// so misconfiguration fails fast on the caller. When the artifacts
+    /// directory holds a trained `weights.bin`, the pure-Rust decode engine
+    /// is enabled for generation requests (and as the scoring fallback when
+    /// no artifact is loadable).
     pub fn start(cfg: ServingConfig) -> Result<ScoringServer> {
+        let model = load_substrate_model(&cfg);
+        Self::start_inner(cfg, model)
+    }
+
+    /// Start with an explicit substrate model (tests / embedded use): the
+    /// decode engine runs on `model`, and artifacts are optional — with no
+    /// artifacts, scoring requests are served by the substrate too.
+    pub fn start_with_model(cfg: ServingConfig, model: Transformer) -> Result<ScoringServer> {
+        Self::start_inner(cfg, Some(model))
+    }
+
+    fn start_inner(cfg: ServingConfig, model: Option<Transformer>) -> Result<ScoringServer> {
         let (jobs_tx, jobs_rx): (Sender<Job>, Receiver<Job>) = channel();
         // Single construction path: [attention] spec (or the legacy-key
         // derivation) → backend. Misconfiguration fails fast here; the
@@ -90,18 +436,23 @@ impl ScoringServer {
         // variant actually executes (see validate_spec_for_variant), or the
         // reported stats would describe a kernel that never ran.
         let spec = cfg.attention_spec()?;
-        validate_spec_for_variant(&spec, &cfg.variant)?;
-        let backend: Box<dyn AttentionBackend> = spec.build();
         let dir = Path::new(&cfg.artifacts_dir).to_path_buf();
         let buckets = ArtifactRegistry::new(&dir, cfg.max_seq).available_batches(&cfg.variant);
-        if buckets.is_empty() {
+        // Substrate-only serving (model, no artifacts) runs any spec; once
+        // artifacts execute requests the spec must describe them.
+        if !(buckets.is_empty() && model.is_some()) {
+            validate_spec_for_variant(&spec, &cfg.variant)?;
+        }
+        if buckets.is_empty() && model.is_none() {
             anyhow::bail!(
                 "no artifacts for variant '{}' in {} — run `make artifacts`",
                 cfg.variant,
                 dir.display()
             );
         }
-        let handle = std::thread::spawn(move || run_loop(cfg, buckets, jobs_rx, backend));
+        let backend: Box<dyn AttentionBackend> = spec.build();
+        let handle =
+            std::thread::spawn(move || run_loop(cfg, buckets, jobs_rx, backend, spec, model));
         Ok(ScoringServer { jobs_tx, handle: Some(handle) })
     }
 
@@ -121,6 +472,21 @@ impl ScoringServer {
     }
 }
 
+/// Load the pure-Rust substrate model from `weights.bin` if present.
+fn load_substrate_model(cfg: &ServingConfig) -> Option<Transformer> {
+    let path = Path::new(&cfg.artifacts_dir).join("weights.bin");
+    if !path.exists() {
+        return None;
+    }
+    match WeightStore::load(&path) {
+        Ok(ws) => Some(Transformer::from_weights(&ws, TransformerConfig::default())),
+        Err(e) => {
+            eprintln!("failed to load substrate weights {}: {e:#}", path.display());
+            None
+        }
+    }
+}
+
 /// Gate the attention spec (explicit `[attention] spec` or the legacy-key
 /// derivation) against the artifact variant that actually executes
 /// requests. Serving artifacts exist for two kernel families only: `exact`
@@ -128,8 +494,9 @@ impl ScoringServer {
 /// `prescored_k<K>` artifacts bake in Algorithm 2 with a fixed key budget K
 /// (a `prescored:` spec whose `top_k` matches K). Other spec kernels
 /// (`hyper:`, `restricted:`) run on the pure-Rust substrate (`ppl` CLI,
-/// benches) but have no serving artifact. The δ-threshold and method are
-/// not encoded in the variant name and cannot be cross-checked.
+/// benches, the substrate-only server mode) but have no serving artifact.
+/// The δ-threshold and method are not encoded in the variant name and
+/// cannot be cross-checked.
 fn validate_spec_for_variant(spec: &AttentionSpec, variant: &str) -> Result<()> {
     if let Some(k) =
         variant.strip_prefix("prescored_k").and_then(|k| k.parse::<usize>().ok())
@@ -173,34 +540,43 @@ fn run_loop(
     buckets: Vec<usize>,
     jobs_rx: Receiver<Job>,
     backend: Box<dyn AttentionBackend>,
+    spec: AttentionSpec,
+    model: Option<Transformer>,
 ) -> ServerStats {
     let deadline = Duration::from_secs_f64(cfg.batch_deadline_ms / 1e3);
+    // Substrate-only mode has no compiled lane buckets; batch up to the
+    // configured batch size on the model path instead.
+    let lane_buckets =
+        if buckets.is_empty() { vec![cfg.batch_size.max(1)] } else { buckets.clone() };
     let mut batcher = DynamicBatcher::new(BatcherConfig {
-        buckets: buckets.clone(),
+        buckets: lane_buckets,
         max_batch_tokens: cfg.max_batch_tokens,
         max_seq: cfg.max_seq,
         deadline,
     });
+    let engine: Option<Mutex<DecodeEngine>> =
+        model.map(|m| Mutex::new(DecodeEngine::new(m, &cfg, &spec)));
     let mut responders: HashMap<u64, Sender<Response>> = Default::default();
     let shared = Mutex::new(SharedStats::default());
     let workers = worker_count(&cfg);
-    let (work_tx, work_rx) = channel::<WorkItem>();
-    let work_rx = Arc::new(Mutex::new(work_rx));
+    let queue = WorkQueue::new();
     let started = Instant::now();
     // The coordinator blocks on `recv_timeout` instead of sleep-polling:
     // with work queued it sleeps exactly to the oldest request's flush
     // deadline; idle it parks until the next submission (bounded so the
-    // shutdown drain still makes progress).
+    // shutdown drain still makes progress). Decode rounds are re-pumped by
+    // the workers themselves, so decode cadence never waits on this loop.
     let idle_wait = Duration::from_millis(50);
     let min_wait = Duration::from_micros(50);
 
     std::thread::scope(|s| {
         for _ in 0..workers {
-            let work_rx = Arc::clone(&work_rx);
+            let queue = &queue;
             let shared = &shared;
             let cfg = &cfg;
             let buckets = &buckets;
             let backend = backend.as_ref();
+            let engine = engine.as_ref();
             s.spawn(move || {
                 // Per-worker registry (PJRT handles are not Send). Every
                 // bucket is pre-compiled before the worker takes traffic.
@@ -211,22 +587,42 @@ fn run_loop(
                         eprintln!("failed to compile artifact bucket {b}: {e:#}");
                     }
                 }
-                loop {
-                    // Hold the lock only for the dequeue, never the execute.
-                    let item = {
-                        let rx = work_rx.lock().expect("work queue poisoned");
-                        rx.recv()
-                    };
-                    match item {
-                        Ok(item) => execute_batch(cfg, &mut registry, item, shared, backend),
-                        Err(_) => break, // queue closed: drain complete
+                let drained =
+                    || engine.map_or(true, |e| !e.lock().expect("engine poisoned").active());
+                while let Some(work) = queue.pop(&drained) {
+                    match work {
+                        Work::Score { batch, responders } => execute_batch(
+                            cfg,
+                            &mut registry,
+                            batch,
+                            responders,
+                            shared,
+                            backend,
+                            engine,
+                        ),
+                        Work::Gen(item) => {
+                            let eng = engine.expect("gen work without engine");
+                            execute_gen(item, eng, shared);
+                            // Re-pump: keep decode rounds flowing without
+                            // waiting for the coordinator's next wake.
+                            let follow =
+                                eng.lock().expect("engine poisoned").next_round(1);
+                            for it in follow {
+                                queue.push(Work::Gen(it));
+                            }
+                        }
                     }
                 }
             });
         }
 
+        let engine_active = || {
+            engine
+                .as_ref()
+                .map_or(false, |e| e.lock().expect("engine poisoned").active())
+        };
         let mut open = true;
-        while open || batcher.queue_len() > 0 {
+        while open || batcher.queue_len() > 0 || engine_active() {
             // Admit jobs: block until the next flush deadline (or a new
             // submission, whichever first), then drain whatever else is
             // already queued.
@@ -234,40 +630,73 @@ fn run_loop(
                 .time_to_deadline(Instant::now())
                 .map(|d| d.clamp(min_wait, idle_wait))
                 .unwrap_or(idle_wait);
-            match jobs_rx.recv_timeout(wait) {
-                Ok(job) => {
-                    responders.insert(job.request.id, job.respond);
-                    batcher.push(job.request);
-                    loop {
-                        match jobs_rx.try_recv() {
-                            Ok(job) => {
-                                responders.insert(job.request.id, job.respond);
-                                batcher.push(job.request);
-                            }
-                            Err(std::sync::mpsc::TryRecvError::Empty) => break,
-                            Err(std::sync::mpsc::TryRecvError::Disconnected) => {
-                                open = false;
-                                break;
+            let route = |job: Job,
+                             responders: &mut HashMap<u64, Sender<Response>>,
+                             batcher: &mut DynamicBatcher| {
+                if job.request.generate > 0 {
+                    match engine.as_ref() {
+                        Some(e) => e.lock().expect("engine poisoned").admit(job),
+                        None => {
+                            // Fail explicitly (dropped responder) rather than
+                            // silently serving a generation request as
+                            // scoring-only.
+                            eprintln!(
+                                "request {} asks for {} generated tokens but this \
+                                 server has no substrate model (weights.bin) — \
+                                 dropping",
+                                job.request.id, job.request.generate
+                            );
+                        }
+                    }
+                    return;
+                }
+                responders.insert(job.request.id, job.respond);
+                batcher.push(job.request);
+            };
+            if open {
+                match jobs_rx.recv_timeout(wait) {
+                    Ok(job) => {
+                        route(job, &mut responders, &mut batcher);
+                        loop {
+                            match jobs_rx.try_recv() {
+                                Ok(job) => route(job, &mut responders, &mut batcher),
+                                Err(std::sync::mpsc::TryRecvError::Empty) => break,
+                                Err(std::sync::mpsc::TryRecvError::Disconnected) => {
+                                    open = false;
+                                    break;
+                                }
                             }
                         }
                     }
+                    Err(RecvTimeoutError::Timeout) => {}
+                    Err(RecvTimeoutError::Disconnected) => open = false,
                 }
-                Err(RecvTimeoutError::Timeout) => {}
-                Err(RecvTimeoutError::Disconnected) => open = false,
+            } else {
+                // Shutdown drain: no new jobs can arrive; pace the loop
+                // while in-flight decode sequences finish.
+                std::thread::sleep(Duration::from_millis(2));
             }
             // Ship every batch the policy allows right now.
             while let Some(batch) = batcher.poll(Instant::now()) {
-                ship(batch, &mut responders, &work_tx);
+                ship(batch, &mut responders, &queue);
             }
             if !open {
                 for batch in batcher.drain_all() {
-                    ship(batch, &mut responders, &work_tx);
+                    ship(batch, &mut responders, &queue);
+                }
+            }
+            // Seed engine rounds (workers keep them flowing afterwards).
+            if let Some(e) = engine.as_ref() {
+                let round = e.lock().expect("engine poisoned").next_round(workers);
+                for it in round {
+                    queue.push(Work::Gen(it));
                 }
             }
         }
-        // Close the batch queue: workers finish in-flight batches and exit;
-        // the scope joins them before we assemble the final stats.
-        drop(work_tx);
+        // Close the work queue: workers finish in-flight work (including
+        // decode rounds still re-pumping) and exit; the scope joins them
+        // before we assemble the final stats.
+        queue.close();
     });
 
     let stats = shared.into_inner().expect("stats poisoned");
@@ -283,29 +712,54 @@ fn run_loop(
         tokens_per_s: stats.scored_tokens as f64 / elapsed,
         workers,
         kernel: backend.kernel_name().to_string(),
+        prefills: stats.prefills,
+        decode_rounds: stats.decode_rounds,
+        decode_steps: stats.decode_steps,
+        decode_step_p50_ms: stats.decode_step_latency.percentile(50.0),
+        decode_step_p99_ms: stats.decode_step_latency.percentile(99.0),
     }
 }
 
 /// Pair a formed batch with its responders and enqueue it for the pool.
-fn ship(batch: Batch, responders: &mut HashMap<u64, Sender<Response>>, work_tx: &Sender<WorkItem>) {
+fn ship(batch: Batch, responders: &mut HashMap<u64, Sender<Response>>, queue: &WorkQueue) {
     let txs: Vec<Option<Sender<Response>>> =
         batch.requests.iter().map(|req| responders.remove(&req.id)).collect();
-    let _ = work_tx.send(WorkItem { batch, responders: txs });
+    queue.push(Work::Score { batch, responders: txs });
+}
+
+/// Execute one engine work item (prefill batch or decode round).
+fn execute_gen(item: WorkItem, engine: &Mutex<DecodeEngine>, shared: &Mutex<SharedStats>) {
+    let mut eng = engine.lock().expect("engine poisoned");
+    match item {
+        WorkItem::Prefill(ids) => {
+            for id in ids {
+                eng.run_prefill(id, shared);
+            }
+        }
+        WorkItem::Decode(ids) => eng.run_decode(&ids, shared),
+    }
 }
 
 fn execute_batch(
     cfg: &ServingConfig,
     registry: &mut ArtifactRegistry,
-    item: WorkItem,
+    batch: Batch,
+    responders: Vec<Option<Sender<Response>>>,
     shared: &Mutex<SharedStats>,
     backend: &dyn AttentionBackend,
+    engine: Option<&Mutex<DecodeEngine>>,
 ) {
-    let WorkItem { batch, responders } = item;
     let lanes = batch.lanes;
     let rt = match registry.get_or_load(&cfg.variant, lanes) {
         Ok(rt) => rt,
         Err(e) => {
-            eprintln!("artifact load failure: {e:#}");
+            // No loadable artifact: score on the substrate model if the
+            // decode engine carries one, otherwise drop (client observes a
+            // disconnected responder).
+            match engine {
+                Some(engine) => substrate_score(batch, responders, shared, backend, engine),
+                None => eprintln!("artifact load failure: {e:#}"),
+            }
             return;
         }
     };
@@ -327,6 +781,7 @@ fn execute_batch(
         Ok(out) => {
             let mut stats = shared.lock().expect("stats poisoned");
             stats.batches += 1;
+            stats.prefills += 1;
             stats.total_lanes += lanes;
             stats.occupied_lanes += batch.requests.len();
             for (i, req) in batch.requests.iter().enumerate() {
@@ -354,6 +809,8 @@ fn execute_batch(
                         kernel: attn.kernel.to_string(),
                         retained_keys: attn.retained_keys,
                         fallback_used: attn.fallback_used,
+                        decode_steps: 0,
+                        decode_ms: 0.0,
                     });
                 }
             }
@@ -362,14 +819,64 @@ fn execute_batch(
     }
 }
 
+/// Scoring fallback on the pure-Rust substrate (no artifact required): full
+/// forward + NLL per request under the engine's policy.
+fn substrate_score(
+    batch: Batch,
+    responders: Vec<Option<Sender<Response>>>,
+    shared: &Mutex<SharedStats>,
+    backend: &dyn AttentionBackend,
+    engine: &Mutex<DecodeEngine>,
+) {
+    let mut results: Vec<Vec<f32>> = Vec::with_capacity(batch.requests.len());
+    {
+        let eng = engine.lock().expect("engine poisoned");
+        let max_seq = eng.model.cfg.max_seq;
+        for req in &batch.requests {
+            let mut toks = req.tokens.clone();
+            toks.truncate(max_seq);
+            results.push(if toks.len() < 2 {
+                Vec::new()
+            } else {
+                eng.model.nll_policy(&toks, &eng.policy)
+            });
+        }
+    }
+    let mut stats = shared.lock().expect("stats poisoned");
+    stats.batches += 1;
+    stats.prefills += 1;
+    stats.total_lanes += batch.lanes;
+    stats.occupied_lanes += batch.requests.len();
+    for (i, req) in batch.requests.iter().enumerate() {
+        let lat = req.arrived.elapsed();
+        stats.latency.record(lat);
+        stats.completed += 1;
+        stats.scored_tokens += results[i].len();
+        if let Some(tx) = &responders[i] {
+            let attn = backend.plan(req.tokens.len());
+            let _ = tx.send(Response {
+                id: req.id,
+                nll: results[i].clone(),
+                generated: Vec::new(),
+                latency_ms: lat.as_secs_f64() * 1e3,
+                kernel: attn.kernel.to_string(),
+                retained_keys: attn.retained_keys,
+                fallback_used: attn.fallback_used,
+                decode_steps: 0,
+                decode_ms: 0.0,
+            });
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::config::ServingConfig;
 
-    // End-to-end server tests require built artifacts and live in
-    // rust/tests/integration_server.rs; unit coverage for the pieces lives
-    // in coordinator::*.
+    // End-to-end server tests (substrate scoring + the decode engine on a
+    // random model) live in rust/tests/integration_server.rs; unit coverage
+    // for the pieces lives in coordinator::*.
 
     #[test]
     fn worker_count_respects_config_and_pool() {

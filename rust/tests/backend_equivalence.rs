@@ -87,6 +87,7 @@ fn constructed_specs_round_trip_with_every_field_nondefault() {
             },
             fallback_delta: 0.375,
             coupling: prescored::attention::Coupling::Glm2Artifact,
+            decode_refresh_every: 7,
         }),
         AttentionSpec::Restricted(RestrictedSelector::Balanced {
             num_clusters: 3,

@@ -1,0 +1,266 @@
+//! Decode-path equivalence properties: for every spec, N incremental decode
+//! steps reproduce the last rows of the corresponding full causal `forward`
+//! (bitwise where sharding permits, ≤ 1e-5 otherwise), at pool widths
+//! 1/2/4, plus persistent-pool determinism across `set_threads` rebuilds
+//! and the cached-selection (periodic-refresh) serving semantics.
+
+use prescored::attention::{AttentionInputs, AttentionSpec, AttnPolicy};
+use prescored::data::corpus;
+use prescored::linalg::Matrix;
+use prescored::model::{Transformer, TransformerConfig};
+use prescored::parallel::{self, with_threads};
+use prescored::util::rng::Rng;
+
+const SALT: u64 = 5;
+
+fn rand_qkv(n: usize, d: usize, seed: u64) -> (Matrix, Matrix, Matrix) {
+    let mut rng = Rng::new(seed);
+    (
+        Matrix::randn(n, d, 1.0, &mut rng),
+        Matrix::randn(n, d, 1.0, &mut rng),
+        Matrix::randn(n, d, 1.0, &mut rng),
+    )
+}
+
+fn max_abs(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+/// Drive `spec`'s decode arm over a growing context and compare every step
+/// against the last row of the full causal forward. `bitwise` asserts exact
+/// equality (serial decode kernels / width-independent forwards); otherwise
+/// ≤ 1e-5 absolute.
+fn check_decode_matches_forward(spec_str: &str, n0: usize, steps: usize, d: usize, bitwise: bool) {
+    let spec = AttentionSpec::parse(spec_str).expect("spec parses");
+    let backend = spec.build();
+    let n_total = n0 + steps;
+    let (q, k, v) = rand_qkv(n_total, d, 0xD0 + n0 as u64);
+
+    let q0 = q.slice_rows(0, n0);
+    let k0 = k.slice_rows(0, n0);
+    let v0 = v.slice_rows(0, n0);
+    let mut state = backend
+        .begin_decode(&q0, &k0, SALT)
+        .unwrap_or_else(|| panic!("{spec_str} must have a decode arm"));
+    // Full-forward equivalence mode: re-run the selector every step (the
+    // prescored specs under test set refresh=1 in the spec string; the
+    // restricted ones use the state override — both APIs covered).
+    state.set_refresh_every(1);
+
+    let mut kc = k0.clone();
+    let mut vc = v0;
+    for t in n0..n_total {
+        kc.push_row(k.row(t));
+        vc.push_row(v.row(t));
+        let out = backend.decode_step(&mut state, q.row(t), &kc, &vc, None);
+        assert_eq!(out.row.len(), d, "{spec_str} step {t}");
+        assert_eq!(out.stats.total_keys, t + 1, "{spec_str} step {t}");
+        assert!(out.stats.retained_keys <= t + 1, "{spec_str} step {t}");
+
+        let qf = q.slice_rows(0, t + 1);
+        let kf = k.slice_rows(0, t + 1);
+        let vf = v.slice_rows(0, t + 1);
+        let inp = AttentionInputs::new(&qf, &kf, &vf).causal(true);
+        let full = backend.forward_salted(&inp, SALT).out;
+        let full_row = full.row(t);
+        if bitwise {
+            assert_eq!(full_row, out.row.as_slice(), "{spec_str} step {t} not bitwise");
+        } else {
+            // Repo convention: relative ℓ2 ≤ 1e-5 (the sharded online-
+            // softmax merge reassociates a handful of partial sums).
+            let num: f32 =
+                full_row.iter().zip(&out.row).map(|(a, b)| (a - b) * (a - b)).sum::<f32>().sqrt();
+            let den: f32 = full_row.iter().map(|x| x * x).sum::<f32>().sqrt();
+            let err = num / den.max(1e-12);
+            assert!(err <= 1e-5, "{spec_str} step {t} rel err {err}");
+        }
+    }
+}
+
+/// Specs whose decode rows are serial (block/selection-sized work): bitwise
+/// at every pool width, because the forwards are width-bit-identical too.
+const SERIAL_DECODE_SPECS: &[&str] = &[
+    "hyper:block=16,sample=8,bits=6,seed=3",
+    "hyper:block=8",
+    "prescored:kmeans,top_k=24,refresh=1,block=16,sample=4,pseed=5,seed=5",
+    "prescored:kmeans,top_k=16,refresh=1,delta=0.9", // δ-fallback every step
+    "prescored:kmeans,top_k=0,refresh=1",            // identity selection
+    "prescored:l2norm,top_k=20,refresh=1",
+    "restricted:balanced,clusters=4,samples=16,iters=3,seed=2",
+    "restricted:l2norm,top_k=12",
+];
+
+/// Dense single-row kernels: bitwise at width 1 (they mirror the serial
+/// per-query loops); the sharded key loop reassociates sums at width > 1.
+const DENSE_SPECS: &[&str] = &["exact", "flash:block_q=16,block_k=8"];
+
+#[test]
+fn decode_matches_forward_serial_kernels_all_widths() {
+    for &t in &[1usize, 2, 4] {
+        with_threads(t, || {
+            for spec in SERIAL_DECODE_SPECS {
+                check_decode_matches_forward(spec, 48, 12, 8, true);
+            }
+        });
+    }
+}
+
+#[test]
+fn decode_matches_forward_dense_kernels() {
+    with_threads(1, || {
+        for spec in DENSE_SPECS {
+            check_decode_matches_forward(spec, 48, 12, 8, true);
+        }
+    });
+    for &t in &[2usize, 4] {
+        with_threads(t, || {
+            for spec in DENSE_SPECS {
+                // Context small enough that the decode row stays serial →
+                // still bitwise; the sharded path is covered below.
+                check_decode_matches_forward(spec, 48, 12, 8, true);
+            }
+        });
+    }
+}
+
+#[test]
+fn sharded_dense_decode_row_within_tolerance() {
+    // Context large enough that the single-row kernels fork the pool
+    // (n·(d+dv) ≥ the min-work gate): ≤ 1e-5 vs the serial forward row.
+    for &t in &[2usize, 4] {
+        with_threads(t, || {
+            for spec in DENSE_SPECS {
+                check_decode_matches_forward(spec, 1200, 2, 16, false);
+            }
+        });
+    }
+}
+
+#[test]
+fn glm2_coupling_is_prefill_only() {
+    let spec = AttentionSpec::parse("prescored:kmeans,top_k=8,coupling=glm2").unwrap();
+    assert!(!spec.supports_decode());
+    let (q, k, _) = rand_qkv(16, 4, 1);
+    assert!(spec.build().begin_decode(&q, &k, 0).is_none());
+    assert!(AttentionSpec::parse("prescored:kmeans,top_k=8").unwrap().supports_decode());
+}
+
+#[test]
+fn cached_selection_extends_between_refreshes() {
+    // refresh=0 (never): the prefill selection is only extended with each
+    // new token — the paper's cached-selection decode regime. Per-step
+    // retained size is selection-sized, not sequence-sized.
+    let spec = AttentionSpec::parse("prescored:kmeans,top_k=16,refresh=0,block=8").unwrap();
+    let backend = spec.build();
+    let (q, k, v) = rand_qkv(72, 8, 7);
+    let n0 = 64;
+    let mut state = backend
+        .begin_decode(&q.slice_rows(0, n0), &k.slice_rows(0, n0), 0)
+        .expect("decode arm");
+    assert_eq!(state.selection().expect("selection cached").len(), 16);
+    let mut kc = k.slice_rows(0, n0);
+    let mut vc = v.slice_rows(0, n0);
+    for (step, t) in (n0..72).enumerate() {
+        kc.push_row(k.row(t));
+        vc.push_row(v.row(t));
+        let out = backend.decode_step(&mut state, q.row(t), &kc, &vc, None);
+        // extend_with_new_token semantics: one new position per step.
+        assert_eq!(out.stats.retained_keys, 16 + step + 1, "step {step}");
+        assert_eq!(out.stats.total_keys, t + 1);
+        assert!(!out.stats.fallback_used);
+        assert_eq!(state.selection().unwrap().len(), 16 + step + 1);
+        assert!(out.row.iter().all(|x| x.is_finite()));
+    }
+}
+
+#[test]
+fn persistent_pool_determinism_across_set_threads_rebuilds() {
+    // Same width ⇒ identical decode outputs before and after the pool is
+    // torn down and rebuilt by set_threads (the decode engine's pool is a
+    // long-lived process resource; rebuilds must not perturb results).
+    let (q, k, v) = rand_qkv(2048, 16, 11);
+    let spec = AttentionSpec::parse("exact").unwrap();
+    let backend = spec.build();
+    let run = || {
+        with_threads(4, || {
+            let mut state = backend
+                .begin_decode(&q.slice_rows(0, 2047), &k.slice_rows(0, 2047), 0)
+                .unwrap();
+            backend.decode_step(&mut state, q.row(2047), &k, &v, None).row
+        })
+    };
+    let before = run();
+    let saved = parallel::num_threads();
+    parallel::set_threads(2);
+    parallel::set_threads(saved);
+    let after = run();
+    assert_eq!(before, after, "pool rebuild changed sharded decode output");
+}
+
+#[test]
+fn transformer_decode_matches_forward() {
+    let tcfg =
+        TransformerConfig { vocab: 64, d_model: 32, n_layers: 2, n_heads: 2, max_seq: 48 };
+    let model = Transformer::random(tcfg, 9);
+    let tokens = corpus::generate(64, 40, 3);
+    let prefix = 28usize;
+
+    // Width 1: every projection, activation, and attention row mirrors the
+    // full forward's serial per-row math — logits are bitwise identical.
+    for spec in ["exact", "flash", "prescored:kmeans,top_k=12,refresh=1,block=8,sample=4"] {
+        let policy = AttnPolicy::parse(spec).unwrap();
+        with_threads(1, || {
+            let (logits0, mut sess) =
+                model.begin_decode(&tokens[..prefix], &policy).expect("decode session");
+            let full0 = model.forward_policy(&tokens[..prefix], &policy);
+            assert_eq!(logits0.data, full0.data, "{spec} prefill logits");
+            for i in prefix..tokens.len() {
+                let row = model.decode_token(&mut sess, tokens[i], &policy);
+                assert_eq!(sess.pos(), i + 1);
+                let full = model.forward_policy(&tokens[..i + 1], &policy);
+                assert_eq!(full.row(i), row.as_slice(), "{spec} token {i} not bitwise");
+            }
+        });
+    }
+
+    // Width 2/4: the forward's parallel matmul micro-kernel reassociates
+    // float sums, so decode (serial 1-row projections) agrees to tolerance
+    // for the deterministic kernels.
+    for &t in &[2usize, 4] {
+        for spec in ["exact", "flash"] {
+            let policy = AttnPolicy::parse(spec).unwrap();
+            with_threads(t, || {
+                let (_, mut sess) =
+                    model.begin_decode(&tokens[..prefix], &policy).expect("decode session");
+                for i in prefix..tokens.len() {
+                    let row = model.decode_token(&mut sess, tokens[i], &policy);
+                    let full = model.forward_policy(&tokens[..i + 1], &policy);
+                    let err = max_abs(full.row(i), &row);
+                    assert!(err <= 1e-3, "{spec} threads={t} token {i} err {err}");
+                }
+            });
+        }
+    }
+}
+
+#[test]
+fn transformer_greedy_generation_is_deterministic() {
+    let tcfg =
+        TransformerConfig { vocab: 64, d_model: 32, n_layers: 2, n_heads: 2, max_seq: 64 };
+    let model = Transformer::random(tcfg, 13);
+    let tokens = corpus::generate(64, 24, 5);
+    let policy = AttnPolicy::parse("prescored:kmeans,top_k=12,block=8,sample=4").unwrap();
+    // Pinned width: the pool-rebuild test in this binary flips the global
+    // width; determinism here is a per-width property.
+    with_threads(2, || {
+        let a = model.generate_greedy(&tokens, 16, &policy).unwrap();
+        let b = model.generate_greedy(&tokens, 16, &policy).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 16);
+        assert!(a.iter().all(|&t| (t as usize) < 64));
+        // The decode path respects max_seq: generation stops at the window.
+        let long = corpus::generate(64, 62, 6);
+        let clipped = model.generate_greedy(&long, 16, &policy).unwrap();
+        assert_eq!(clipped.len(), 2, "62 + 2 = max_seq");
+    });
+}

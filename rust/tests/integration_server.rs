@@ -1,8 +1,12 @@
-//! Integration: full serving loop (batcher → PJRT → responses).
+//! Integration: full serving loop (batcher → PJRT → responses), plus the
+//! artifact-free substrate mode (scoring + the incremental decode engine on
+//! the pure-Rust transformer).
 
+use prescored::attention::AttnPolicy;
 use prescored::config::ServingConfig;
 use prescored::coordinator::Request;
 use prescored::data::corpus;
+use prescored::model::{Transformer, TransformerConfig};
 use prescored::server::ScoringServer;
 use std::path::Path;
 
@@ -52,4 +56,119 @@ fn server_rejects_unknown_variant() {
     }
     let cfg = ServingConfig { variant: "bogus".into(), ..Default::default() };
     assert!(ScoringServer::start(cfg).is_err());
+}
+
+fn tiny_model(seed: u64) -> (TransformerConfig, Transformer) {
+    let tcfg =
+        TransformerConfig { vocab: 64, d_model: 32, n_layers: 2, n_heads: 2, max_seq: 64 };
+    let model = Transformer::random(tcfg.clone(), seed);
+    (tcfg, model)
+}
+
+const SPEC: &str = "prescored:kmeans,top_k=12,block=16,sample=4";
+
+fn substrate_cfg() -> ServingConfig {
+    ServingConfig {
+        artifacts_dir: "/nonexistent-artifacts".into(),
+        variant: "exact".into(),
+        max_seq: 64,
+        attention_spec: SPEC.into(),
+        ..Default::default()
+    }
+}
+
+#[test]
+fn substrate_server_scores_without_artifacts() {
+    let (_, model) = tiny_model(42);
+    let reference = tiny_model(42).1; // identical weights (same seed)
+    let policy = AttnPolicy::parse(SPEC).unwrap();
+    let server = ScoringServer::start_with_model(substrate_cfg(), model).expect("start");
+    let mut expected = Vec::new();
+    let mut rxs = Vec::new();
+    for i in 0..6u64 {
+        let len = 16 + (i as usize * 7) % 40;
+        let tokens = corpus::generate(64, len, 500 + i);
+        expected.push(reference.nll_policy(&tokens, &policy));
+        rxs.push((i, server.submit(Request::scoring(i, tokens))));
+    }
+    for (id, rx) in rxs {
+        let resp = rx.recv().expect("response");
+        assert_eq!(resp.id, id);
+        assert_eq!(resp.nll, expected[id as usize], "request {id}");
+        assert_eq!(resp.kernel, "prescored");
+        assert_eq!(resp.decode_steps, 0);
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.completed, 6);
+    assert!(stats.prefills >= 1);
+}
+
+#[test]
+fn substrate_server_streams_decode_tokens() {
+    let (_, model) = tiny_model(43);
+    let reference = tiny_model(43).1;
+    let policy = AttnPolicy::parse(SPEC).unwrap();
+    let server = ScoringServer::start_with_model(substrate_cfg(), model).expect("start");
+    let n_req = 5u64;
+    let n_new = 8usize;
+    let mut rxs = Vec::new();
+    let mut expected = Vec::new();
+    for i in 0..n_req {
+        let tokens = corpus::generate(64, 24 + (i as usize * 5) % 16, 700 + i);
+        expected.push(
+            reference.generate_greedy(&tokens, n_new, &policy).expect("greedy reference"),
+        );
+        let mut req = Request::scoring(i, tokens);
+        req.generate = n_new;
+        rxs.push((i, server.submit(req)));
+    }
+    for (id, rx) in rxs {
+        let resp = rx.recv().expect("gen response");
+        assert_eq!(resp.id, id);
+        // The decode engine's token stream must match the model-level
+        // greedy decode loop exactly (same spec, same refresh policy).
+        assert_eq!(resp.generated, expected[id as usize], "request {id}");
+        assert_eq!(resp.decode_steps, n_new);
+        assert!(resp.decode_ms >= 0.0);
+        assert_eq!(resp.kernel, "prescored");
+        assert!(!resp.nll.is_empty(), "prefill NLL must be scored");
+        assert!(resp.nll.iter().all(|v| v.is_finite()));
+        assert!(resp.retained_keys > 0);
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.completed, n_req as usize);
+    assert_eq!(stats.decode_steps, n_req as usize * n_new);
+    assert!(stats.decode_rounds >= n_new, "one step per sequence per round");
+    assert!(stats.prefills >= n_req as usize);
+    assert!(stats.decode_step_p50_ms >= 0.0);
+    assert!(stats.decode_step_p99_ms >= stats.decode_step_p50_ms);
+}
+
+#[test]
+fn substrate_server_mixes_scoring_and_decode() {
+    let (_, model) = tiny_model(44);
+    let server = ScoringServer::start_with_model(substrate_cfg(), model).expect("start");
+    let mut rxs = Vec::new();
+    for i in 0..8u64 {
+        let mut req = Request::scoring(i, corpus::generate(64, 20, 900 + i));
+        if i % 2 == 0 {
+            req.generate = 4;
+        }
+        rxs.push((i, server.submit(req)));
+    }
+    for (id, rx) in rxs {
+        let resp = rx.recv().expect("response");
+        assert_eq!(resp.id, id);
+        if id % 2 == 0 {
+            assert_eq!(resp.decode_steps, 4, "request {id}");
+            assert_eq!(resp.generated.len(), 4);
+        } else {
+            assert_eq!(resp.decode_steps, 0);
+            assert!(resp.generated.is_empty());
+            assert_eq!(resp.nll.len(), 19);
+        }
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.completed, 8);
+    assert_eq!(stats.decode_steps, 16);
 }
