@@ -1,0 +1,164 @@
+//! Shared-prefix cache: cold vs warm prefill latency × shared-prefix
+//! fraction × threads.
+//!
+//! The serving claim under test (the prefix-cache PR's tentpole): a warm
+//! hit on an L-token prefix reconstructs the session from cached KV +
+//! pre-score artifacts and runs the forward only over the n−L suffix —
+//! O(suffix) work — while a cold prefill pays the full O(n²) causal
+//! attention. The warm/cold ratio should therefore fall roughly like
+//! 1 − f² for shared fraction f.
+//!
+//! Emits `BENCH_prefix.json` at the repo root:
+//! `ms[threads][frac] = {cold_ms, warm_ms, speedup}`.
+//!
+//! Knobs (the CI smoke run shrinks them):
+//! * `PALLAS_PREFIX_CONTEXT` — context length, default 1024
+//! * `PALLAS_PREFIX_FRACS`   — comma list of shared fractions, default
+//!   `0.25,0.5,0.75,0.9`
+//! * `PALLAS_PREFIX_D`       — d_model, default 64
+//! * `PALLAS_PREFIX_REPS`    — timing repetitions, default 3
+//! * `PALLAS_PREFIX_JSON`    — output path override (CI smoke points it at
+//!   a scratch file so real baselines aren't clobbered)
+//! * `PALLAS_PREFIX_ASSERT`  — when `1`, exit non-zero unless the warm hit
+//!   beats cold at the largest shared fraction (the CI gate)
+
+use prescored::attention::AttnPolicy;
+use prescored::model::{DecodeSession, Transformer, TransformerConfig};
+use prescored::parallel;
+use prescored::util::bench::{black_box, f};
+use prescored::util::rng::Rng;
+use std::time::Instant;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn env_fracs() -> Vec<f64> {
+    match std::env::var("PALLAS_PREFIX_FRACS") {
+        Ok(v) => v.split(',').filter_map(|s| s.trim().parse().ok()).collect(),
+        Err(_) => vec![0.25, 0.5, 0.75, 0.9],
+    }
+}
+
+/// Median wall-clock ms of `reps` runs of `f`.
+fn time_ms<T>(reps: usize, mut body: impl FnMut() -> T) -> f64 {
+    let mut samples: Vec<f64> = (0..reps.max(1))
+        .map(|_| {
+            let t0 = Instant::now();
+            black_box(body());
+            t0.elapsed().as_secs_f64() * 1e3
+        })
+        .collect();
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples[samples.len() / 2]
+}
+
+fn main() {
+    let context = env_usize("PALLAS_PREFIX_CONTEXT", 1024);
+    let d_model = env_usize("PALLAS_PREFIX_D", 64);
+    let reps = env_usize("PALLAS_PREFIX_REPS", 3);
+    let fracs = env_fracs();
+    let assert_win = std::env::var("PALLAS_PREFIX_ASSERT").map_or(false, |v| v == "1");
+    let json_path =
+        std::env::var("PALLAS_PREFIX_JSON").unwrap_or_else(|_| "BENCH_prefix.json".into());
+
+    let pool_width = parallel::num_threads().max(2);
+    parallel::set_threads(pool_width);
+    let thread_counts = [1usize, pool_width];
+
+    let tcfg = TransformerConfig {
+        vocab: 256,
+        d_model,
+        n_layers: 2,
+        n_heads: 2,
+        max_seq: context,
+    };
+    let model = Transformer::random(tcfg, 0xbe9c);
+    // Flash: the suffix-stable spec the serving engine serves partial warm
+    // hits for (rank/selection kernels dedup at full length instead).
+    let policy = AttnPolicy::parse("flash").unwrap();
+    let mut rng = Rng::new(0x9efc);
+    let tokens: Vec<u32> = (0..context).map(|_| rng.usize(256) as u32).collect();
+
+    println!(
+        "== prefix cache: cold vs warm prefill @ context {context}, d_model {d_model}, \
+         threads {{1, {pool_width}}} =="
+    );
+
+    // results[thread_idx][frac_idx] = (cold_ms, warm_ms)
+    let mut results = vec![vec![(0.0f64, 0.0f64); fracs.len()]; thread_counts.len()];
+    for (ti, &threads) in thread_counts.iter().enumerate() {
+        parallel::with_threads(threads, || {
+            let cold_ms = time_ms(reps, || {
+                model.begin_decode(&tokens, &policy).expect("cold prefill")
+            });
+            for (fi, &frac) in fracs.iter().enumerate() {
+                let prefix_len = ((context as f64 * frac) as usize).clamp(1, context - 1);
+                // The donor prefill is what a previous request already paid;
+                // the warm path clones the snapshot (the cache's
+                // copy-on-write branch) and resumes over the suffix — both
+                // sides of that are timed.
+                let (_, donor) =
+                    model.begin_decode(&tokens[..prefix_len], &policy).expect("donor");
+                let kv = donor.export_kv();
+                let states = donor.clone_states();
+                let warm_ms = time_ms(reps, || {
+                    let mut sess =
+                        DecodeSession::from_cache(kv.clone(), states.clone(), prefix_len);
+                    model.resume_decode(&mut sess, &tokens[prefix_len..], &policy)
+                });
+                results[ti][fi] = (cold_ms, warm_ms);
+                println!(
+                    "threads {threads:>2} | shared {:>5}% | cold {:>9} ms | warm {:>9} ms | \
+                     speedup {:>6}x",
+                    f(frac * 100.0, 0),
+                    f(cold_ms, 2),
+                    f(warm_ms, 2),
+                    f(cold_ms / warm_ms.max(1e-9), 2),
+                );
+            }
+        });
+    }
+
+    // JSON emission.
+    let mut json = String::from("{\n");
+    json.push_str(&format!("  \"context\": {context},\n  \"d_model\": {d_model},\n"));
+    json.push_str("  \"spec\": \"flash\",\n  \"ms\": {\n");
+    for (ti, &threads) in thread_counts.iter().enumerate() {
+        json.push_str(&format!("    \"{threads}\": {{\n"));
+        for (fi, &frac) in fracs.iter().enumerate() {
+            let (cold, warm) = results[ti][fi];
+            json.push_str(&format!(
+                "      \"{frac}\": {{\"cold_ms\": {cold:.4}, \"warm_ms\": {warm:.4}, \
+                 \"speedup\": {:.4}}}{}\n",
+                cold / warm.max(1e-9),
+                if fi + 1 < fracs.len() { "," } else { "" }
+            ));
+        }
+        json.push_str(&format!(
+            "    }}{}\n",
+            if ti + 1 < thread_counts.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  }\n}\n");
+    std::fs::write(&json_path, json).expect("writing BENCH_prefix.json");
+    println!("wrote {json_path}");
+
+    if assert_win {
+        // CI gate: at the largest shared fraction, the warm hit must beat
+        // the cold prefill at every thread count.
+        let last = fracs.len() - 1;
+        for (ti, &threads) in thread_counts.iter().enumerate() {
+            let (cold, warm) = results[ti][last];
+            if warm >= cold {
+                eprintln!(
+                    "PREFIX CACHE REGRESSION: warm {warm:.3} ms >= cold {cold:.3} ms at \
+                     shared fraction {} (threads {threads})",
+                    fracs[last]
+                );
+                std::process::exit(1);
+            }
+        }
+        println!("warm-beats-cold assertion passed");
+    }
+}

@@ -35,6 +35,16 @@ if [[ "$QUICK" == 0 ]]; then
     PALLAS_DECODE_CONTEXTS=256,512 PALLAS_DECODE_STEPS=4 PALLAS_DECODE_D=32 \
     PALLAS_DECODE_JSON="$(mktemp)" \
         cargo bench --bench bench_decode_throughput
+
+    # Prefix-cache smoke: env-shrunk cold-vs-warm prefill on a shared-prefix
+    # workload. PALLAS_PREFIX_ASSERT=1 makes the bench exit non-zero if the
+    # warm hit does not beat the cold prefill at the largest shared
+    # fraction — the cache's reason to exist is a CI invariant.
+    echo "== bench_prefix_cache (smoke) =="
+    PALLAS_PREFIX_CONTEXT=256 PALLAS_PREFIX_D=32 PALLAS_PREFIX_REPS=3 \
+    PALLAS_PREFIX_FRACS=0.5,0.9 PALLAS_PREFIX_ASSERT=1 \
+    PALLAS_PREFIX_JSON="$(mktemp)" \
+        cargo bench --bench bench_prefix_cache
 fi
 
 echo "== tier-1 verify: cargo build --release && cargo test -q =="

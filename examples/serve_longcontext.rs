@@ -1,22 +1,109 @@
 //! END-TO-END DRIVER: the full three-layer stack on a real small workload.
 //!
-//! Loads the build-time-trained tiny LM (JAX → HLO text → PJRT), starts the
-//! serving coordinator (router + dynamic batcher + executor thread), replays
-//! a Poisson workload trace of long-context scoring requests against both
-//! the exact and the pre-scored artifact, and reports
-//! latency / throughput / perplexity. Results are recorded in
-//! EXPERIMENTS.md §E2E.
+//! Two demos:
+//!
+//! 1. **Shared-prefix cache** (pure-Rust substrate, no artifacts needed):
+//!    N requests over one long shared document prefix — the first request
+//!    prefills cold and plants the prefix (KV pages + pre-score artifacts)
+//!    in the radix tree; every later request walks the tree, branches
+//!    copy-on-write off the cached node, and prefills only its own
+//!    question suffix. Per-request latency and the server's prefix-cache
+//!    hit/miss/evict accounting are printed.
+//! 2. **PJRT artifact replay** (requires `make artifacts`): the original
+//!    Poisson long-context scoring trace against the exact and pre-scored
+//!    artifacts.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example serve_longcontext
+//! cargo run --release --example serve_longcontext             # demo 1 (8k prefix)
+//! cargo run --release --example serve_longcontext 4 2048      # 4 requests, 2k prefix
+//! make artifacts && cargo run --release --example serve_longcontext  # both demos
 //! ```
 
 use prescored::config::ServingConfig;
+use prescored::coordinator::kv_cache::BLOCK_SIZE;
 use prescored::coordinator::Request;
 use prescored::data::{corpus, workload};
 use prescored::metrics::PplAccum;
+use prescored::model::{Transformer, TransformerConfig};
 use prescored::server::ScoringServer;
 
+/// Demo 1: N requests sharing a long document prefix through the
+/// shared-prefix cache.
+fn run_prefix_demo(n_req: usize, prefix_tokens: usize) -> anyhow::Result<()> {
+    let question_tokens = 64usize;
+    let n_new = 16usize;
+    let max_seq = prefix_tokens + question_tokens + n_new + 16;
+    let tcfg = TransformerConfig {
+        vocab: 512,
+        d_model: 32,
+        n_layers: 2,
+        n_heads: 2,
+        max_seq,
+    };
+    let model = Transformer::random(tcfg, 7);
+    let seq_pages = max_seq.div_ceil(BLOCK_SIZE) + 1;
+    let cfg = ServingConfig {
+        artifacts_dir: "/nonexistent-artifacts".into(),
+        max_seq,
+        // flash is suffix-stable → partial warm hits; enough KV pages for a
+        // few concurrent long sessions, and a prefix pool that holds the
+        // document.
+        attention_spec: "flash".into(),
+        kv_blocks: seq_pages * 4,
+        prefix_cache_blocks: seq_pages * 2,
+        prefix_min_tokens: 64,
+        decode_max_new: n_new,
+        ..Default::default()
+    };
+    println!(
+        "== shared-prefix cache: {n_req} requests over one {prefix_tokens}-token document =="
+    );
+    let server = ScoringServer::start_with_model(cfg, model)?;
+    let document = corpus::generate(512, prefix_tokens, 1234);
+    // Prime: one request over the bare document plants the prefix (KV pages
+    // + per-layer·head artifacts) at an artifact boundary in the radix tree.
+    let t0 = std::time::Instant::now();
+    let mut prime = Request::scoring(0, document.clone());
+    prime.generate = 1;
+    server.submit(prime).recv()?;
+    println!(
+        "prime    : {prefix_tokens} prefill tokens | {:8.1} ms | cold (plants the prefix)",
+        t0.elapsed().as_secs_f64() * 1e3
+    );
+    for i in 1..=n_req as u64 {
+        let mut tokens = document.clone();
+        tokens.extend_from_slice(&corpus::generate(512, question_tokens, 5000 + i));
+        let mut req = Request::scoring(i, tokens);
+        req.generate = n_new;
+        let resp = server.submit(req).recv()?;
+        println!(
+            "request {i}: {} prefill tokens | {:8.1} ms | {} generated | warm \
+             ({prefix_tokens} tokens from the cache, {question_tokens} prefilled)",
+            prefix_tokens + question_tokens,
+            resp.latency_ms,
+            resp.generated.len(),
+        );
+    }
+    let stats = server.shutdown();
+    println!(
+        "cache: {} hits / {} misses | {} prefill tokens served from cache | \
+         {} insertions, {} evictions | {} nodes holding {} tokens",
+        stats.prefix_hits,
+        stats.prefix_misses,
+        stats.prefix_hit_tokens,
+        stats.prefix_insertions,
+        stats.prefix_evictions,
+        stats.prefix_nodes,
+        stats.prefix_cached_tokens,
+    );
+    println!(
+        "decode: {} steps, p50 {:.2} ms | prefills {}\n",
+        stats.decode_steps, stats.decode_step_p50_ms, stats.prefills
+    );
+    Ok(())
+}
+
+/// Demo 2: the original artifact replay (scoring trace via PJRT).
 fn run_variant(variant: &str, n_req: usize) -> anyhow::Result<()> {
     let cfg = ServingConfig {
         variant: variant.to_string(),
@@ -62,13 +149,18 @@ fn run_variant(variant: &str, n_req: usize) -> anyhow::Result<()> {
 }
 
 fn main() -> anyhow::Result<()> {
+    let n_req = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(4);
+    let prefix_tokens =
+        std::env::args().nth(2).and_then(|s| s.parse().ok()).unwrap_or(8192);
+    run_prefix_demo(n_req, prefix_tokens)?;
+
     println!("== E2E: serving long-context scoring requests through PJRT artifacts ==");
-    let n_req = std::env::args()
-        .nth(1)
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(32);
-    run_variant("exact", n_req)?;
-    run_variant("prescored_k64", n_req)?;
+    let replay_req = n_req.max(8) * 4;
+    for variant in ["exact", "prescored_k64"] {
+        if let Err(e) = run_variant(variant, replay_req) {
+            println!("{variant:<16} | skipped ({e:#})");
+        }
+    }
     println!("\n(prescored_k64 restricts every attention layer to 64 pre-scored keys)");
     Ok(())
 }

@@ -53,16 +53,17 @@
 //! HyperAttention LSH/residual RNG, and `refresh` is the decode-time
 //! selection refresh period (steps; 0 = never, 1 = every step).
 
-use super::decode::{DecodeOutput, DecodeState};
+use super::decode::{run_selector, DecodeArtifacts, DecodeOutput, DecodeState};
 use super::exact::{exact_attention, flash_attention_blocked};
-use super::hyper::{hyper_attention, HyperConfig};
+use super::hyper::{hyper_attention, hyper_core_coded, hyper_lsh, HyperConfig};
 use super::prescored::{
     prescored_hyper_attention, restricted_exact_attention, Coupling, PreScoredConfig,
 };
 use super::AttentionInputs;
 use crate::config::Config;
 use crate::linalg::Matrix;
-use crate::prescore::{prescore, prescore_balanced, Method, PreScoreConfig};
+use crate::lsh::gray_rank;
+use crate::prescore::{prescore, Method, PreScoreConfig};
 use anyhow::{anyhow, bail, Context, Result};
 use std::fmt;
 
@@ -130,6 +131,41 @@ pub trait AttentionBackend: Send + Sync {
         None
     }
 
+    /// Combined forward + decode-state capture — the prefill path of the
+    /// decode engine. Semantically identical to `forward_salted` followed by
+    /// `begin_decode`, but kernels that compute pre-score/LSH artifacts
+    /// override it to build the decode state from the SAME artifacts the
+    /// forward just computed, so prefill pays the selection/hashing cost
+    /// once (the `PrefixCapture` plumbing; see the ROADMAP "Prefix &
+    /// artifact cache" section). Overrides MUST keep the forward output
+    /// bitwise identical to `forward_salted` and the state behaviorally
+    /// identical to `begin_decode`'s.
+    fn forward_decode(
+        &self,
+        inp: &AttentionInputs,
+        salt: u64,
+    ) -> (AttentionOutput, Option<DecodeState>) {
+        let out = self.forward_salted(inp, salt);
+        let state = self.begin_decode(inp.q, inp.k, salt);
+        (out, state)
+    }
+
+    /// Rebuild a decode state from persisted [`DecodeArtifacts`] (the
+    /// prefix cache's restart path). `dim` is the per-head key dimension,
+    /// `salt` the same per-layer/head salt the forward mixed in. Must
+    /// produce a state behaviorally identical to the one `begin_decode`
+    /// captured for the same prefix. Backends without a decode arm return
+    /// `None` (the default).
+    fn restore_decode(
+        &self,
+        salt: u64,
+        dim: usize,
+        artifacts: &DecodeArtifacts,
+    ) -> Option<DecodeState> {
+        let _ = (salt, dim, artifacts);
+        None
+    }
+
     /// One decode step: `q_row` is the newly decoded token's query and
     /// `k`/`v` hold every key/value so far *including* the new token's row.
     /// Equivalent to the last row of the corresponding full causal
@@ -171,6 +207,15 @@ impl AttentionBackend for Exact {
     fn begin_decode(&self, _q: &Matrix, _k: &Matrix, _salt: u64) -> Option<DecodeState> {
         Some(DecodeState::exact())
     }
+
+    fn restore_decode(
+        &self,
+        _salt: u64,
+        _dim: usize,
+        _artifacts: &DecodeArtifacts,
+    ) -> Option<DecodeState> {
+        Some(DecodeState::exact())
+    }
 }
 
 /// FlashAttention-style blocked streaming exact attention
@@ -205,6 +250,15 @@ impl AttentionBackend for Flash {
     fn begin_decode(&self, _q: &Matrix, _k: &Matrix, _salt: u64) -> Option<DecodeState> {
         Some(DecodeState::flash(self.block_k))
     }
+
+    fn restore_decode(
+        &self,
+        _salt: u64,
+        _dim: usize,
+        _artifacts: &DecodeArtifacts,
+    ) -> Option<DecodeState> {
+        Some(DecodeState::flash(self.block_k))
+    }
 }
 
 /// HyperAttention over all keys ([`hyper_attention`]).
@@ -229,6 +283,42 @@ impl AttentionBackend for Hyper {
         let mut cfg = self.0.clone();
         cfg.seed = cfg.seed.wrapping_add(salt);
         Some(DecodeState::hyper(cfg, q, k))
+    }
+
+    fn forward_decode(
+        &self,
+        inp: &AttentionInputs,
+        salt: u64,
+    ) -> (AttentionOutput, Option<DecodeState>) {
+        let mut cfg = self.0.clone();
+        cfg.seed = cfg.seed.wrapping_add(salt);
+        // Hash once; the forward and the decode state share the codes.
+        let lsh = hyper_lsh(inp.q.cols, &cfg);
+        let q_codes = lsh.hash_rows(inp.q);
+        let k_codes = lsh.hash_rows(inp.k);
+        let out = hyper_core_coded(inp, &cfg, None, None, &q_codes, &k_codes);
+        let gray: Vec<u32> = q_codes.iter().map(|&c| gray_rank(c)).collect();
+        let state = DecodeState::hyper_from_parts(cfg, inp.q.cols, &gray, k_codes);
+        (
+            AttentionOutput { out, stats: self.plan(inp.k.rows) },
+            Some(state),
+        )
+    }
+
+    fn restore_decode(
+        &self,
+        salt: u64,
+        dim: usize,
+        artifacts: &DecodeArtifacts,
+    ) -> Option<DecodeState> {
+        let mut cfg = self.0.clone();
+        cfg.seed = cfg.seed.wrapping_add(salt);
+        Some(DecodeState::hyper_from_parts(
+            cfg,
+            dim,
+            &artifacts.q_ranks,
+            artifacts.k_codes.clone(),
+        ))
     }
 }
 
@@ -268,6 +358,93 @@ impl AttentionBackend for PreScored {
         Some(DecodeState::prescored(cfg, q, k))
     }
 
+    fn forward_decode(
+        &self,
+        inp: &AttentionInputs,
+        salt: u64,
+    ) -> (AttentionOutput, Option<DecodeState>) {
+        if self.0.coupling == Coupling::Glm2Artifact {
+            // Prefill-only: no decode state, no artifacts worth sharing.
+            return (self.forward_salted(inp, salt), None);
+        }
+        let mut cfg = self.0.clone();
+        cfg.hyper.seed = cfg.hyper.seed.wrapping_add(salt);
+        cfg.prescore.seed = cfg.prescore.seed.wrapping_add(salt);
+        let n = inp.k.rows;
+        // Algorithm 1 + LSH hashing run ONCE; both the forward and the
+        // decode state consume the results (begin_decode used to redo both).
+        let sel = prescore(inp.k, &cfg.prescore);
+        let s_len = sel.selected.len();
+        let fallback = (s_len as f32) < cfg.fallback_delta * n as f32;
+        let lsh = hyper_lsh(inp.q.cols, &cfg.hyper);
+        let q_codes = lsh.hash_rows(inp.q);
+        let k_codes = lsh.hash_rows(inp.k);
+        let out = if fallback || s_len == n {
+            // Algorithm 2 line 2 / the top_k = 0 identity selection:
+            // unfiltered HyperAttention, hyper config verbatim.
+            hyper_core_coded(inp, &cfg.hyper, None, None, &q_codes, &k_codes)
+        } else {
+            // Algorithm 2 line 5 (GLM3): HyperAttention(Q, K[S], V[S]) with
+            // the corrected-coupling overrides, on the gathered subset —
+            // subset codes are per-row hashes, so gathering the full codes
+            // reproduces hyper_attention_subset bitwise.
+            let hyper_cfg = HyperConfig {
+                residual_count_override: None,
+                exclude_block_from_residual: true,
+                ..cfg.hyper.clone()
+            };
+            let ks = inp.k.gather_rows(&sel.selected);
+            let vs = inp.v.gather_rows(&sel.selected);
+            let sub_codes: Vec<u32> = sel.selected.iter().map(|&j| k_codes[j]).collect();
+            let gathered = AttentionInputs {
+                q: inp.q,
+                k: &ks,
+                v: &vs,
+                causal: inp.causal,
+                scale: inp.scale,
+            };
+            hyper_core_coded(&gathered, &hyper_cfg, None, Some(&sel.selected), &q_codes, &sub_codes)
+        };
+        let stats = AttnStats {
+            kernel: self.kernel_name(),
+            retained_keys: if fallback || s_len == n { n } else { s_len },
+            total_keys: n,
+            fallback_used: fallback,
+        };
+        let gray: Vec<u32> = q_codes.iter().map(|&c| gray_rank(c)).collect();
+        let state = DecodeState::prescored_from_parts(
+            cfg,
+            inp.q.cols,
+            &gray,
+            k_codes,
+            sel.selected,
+            fallback,
+        );
+        (AttentionOutput { out, stats }, Some(state))
+    }
+
+    fn restore_decode(
+        &self,
+        salt: u64,
+        dim: usize,
+        artifacts: &DecodeArtifacts,
+    ) -> Option<DecodeState> {
+        if self.0.coupling == Coupling::Glm2Artifact {
+            return None;
+        }
+        let mut cfg = self.0.clone();
+        cfg.hyper.seed = cfg.hyper.seed.wrapping_add(salt);
+        cfg.prescore.seed = cfg.prescore.seed.wrapping_add(salt);
+        Some(DecodeState::prescored_from_parts(
+            cfg,
+            dim,
+            &artifacts.q_ranks,
+            artifacts.k_codes.clone(),
+            artifacts.selection.clone(),
+            artifacts.fallback,
+        ))
+    }
+
     fn plan(&self, n_keys: usize) -> AttnStats {
         // Mirrors prescored_hyper_attention: |S| = top_k clamped to n (0 =
         // identity selection), fallback iff |S| < δ·n.
@@ -286,7 +463,7 @@ impl AttentionBackend for PreScored {
 /// How [`RestrictedExact`] picks its key subset.
 #[derive(Debug, Clone, PartialEq)]
 pub enum RestrictedSelector {
-    /// Per-cluster balanced sampling ([`prescore_balanced`]; the ViT
+    /// Per-cluster balanced sampling ([`crate::prescore::prescore_balanced`]; the ViT
     /// `num_cluster`/`num_sample` grid of Table 2).
     Balanced { num_clusters: usize, num_samples: usize, max_iters: usize, seed: u64 },
     /// Global top-k by an Algorithm 1 score ([`prescore`]; the LevAttention
@@ -299,43 +476,10 @@ pub enum RestrictedSelector {
 /// operator.
 pub struct RestrictedExact(pub RestrictedSelector);
 
-impl AttentionBackend for RestrictedExact {
-    fn kernel_name(&self) -> &'static str {
-        "restricted-exact"
-    }
-
-    fn forward_salted(&self, inp: &AttentionInputs, salt: u64) -> AttentionOutput {
-        let n = inp.k.rows;
-        let sel = match &self.0 {
-            RestrictedSelector::Balanced { num_clusters, num_samples, max_iters, seed } => {
-                prescore_balanced(
-                    inp.k,
-                    *num_clusters,
-                    *num_samples,
-                    *max_iters,
-                    seed.wrapping_add(salt),
-                )
-            }
-            RestrictedSelector::Scored(cfg) => {
-                let mut cfg = cfg.clone();
-                cfg.seed = cfg.seed.wrapping_add(salt);
-                prescore(inp.k, &cfg)
-            }
-        };
-        let retained = sel.selected.len();
-        AttentionOutput {
-            out: restricted_exact_attention(inp, &sel.selected),
-            stats: AttnStats {
-                kernel: self.kernel_name(),
-                retained_keys: retained,
-                total_keys: n,
-                fallback_used: false,
-            },
-        }
-    }
-
-    fn begin_decode(&self, _q: &Matrix, k: &Matrix, salt: u64) -> Option<DecodeState> {
-        let selector = match &self.0 {
+impl RestrictedExact {
+    /// The selector with the per-layer/head seed salt mixed in.
+    fn salted_selector(&self, salt: u64) -> RestrictedSelector {
+        match &self.0 {
             RestrictedSelector::Balanced { num_clusters, num_samples, max_iters, seed } => {
                 RestrictedSelector::Balanced {
                     num_clusters: *num_clusters,
@@ -349,8 +493,73 @@ impl AttentionBackend for RestrictedExact {
                 cfg.seed = cfg.seed.wrapping_add(salt);
                 RestrictedSelector::Scored(cfg)
             }
+        }
+    }
+
+    /// Run the (salted) selector on a key matrix — same dispatch the
+    /// decode/replay path uses, so the two can never diverge.
+    fn select(&self, k: &Matrix, salt: u64) -> Vec<usize> {
+        run_selector(&self.salted_selector(salt), k)
+    }
+}
+
+impl AttentionBackend for RestrictedExact {
+    fn kernel_name(&self) -> &'static str {
+        "restricted-exact"
+    }
+
+    fn forward_salted(&self, inp: &AttentionInputs, salt: u64) -> AttentionOutput {
+        let n = inp.k.rows;
+        let selected = self.select(inp.k, salt);
+        let retained = selected.len();
+        AttentionOutput {
+            out: restricted_exact_attention(inp, &selected),
+            stats: AttnStats {
+                kernel: self.kernel_name(),
+                retained_keys: retained,
+                total_keys: n,
+                fallback_used: false,
+            },
+        }
+    }
+
+    fn begin_decode(&self, _q: &Matrix, k: &Matrix, salt: u64) -> Option<DecodeState> {
+        Some(DecodeState::restricted(self.salted_selector(salt), k))
+    }
+
+    fn forward_decode(
+        &self,
+        inp: &AttentionInputs,
+        salt: u64,
+    ) -> (AttentionOutput, Option<DecodeState>) {
+        // Run the selector once; forward and decode state share the
+        // selection (begin_decode used to re-cluster the keys).
+        let n = inp.k.rows;
+        let selected = self.select(inp.k, salt);
+        let retained = selected.len();
+        let out = AttentionOutput {
+            out: restricted_exact_attention(inp, &selected),
+            stats: AttnStats {
+                kernel: self.kernel_name(),
+                retained_keys: retained,
+                total_keys: n,
+                fallback_used: false,
+            },
         };
-        Some(DecodeState::restricted(selector, k))
+        let state = DecodeState::restricted_from_selection(self.salted_selector(salt), selected);
+        (out, Some(state))
+    }
+
+    fn restore_decode(
+        &self,
+        salt: u64,
+        _dim: usize,
+        artifacts: &DecodeArtifacts,
+    ) -> Option<DecodeState> {
+        Some(DecodeState::restricted_from_selection(
+            self.salted_selector(salt),
+            artifacts.selection.clone(),
+        ))
     }
 
     fn plan(&self, n_keys: usize) -> AttnStats {
@@ -658,6 +867,36 @@ impl AttentionSpec {
             AttentionSpec::PreScored(cfg) => cfg.coupling != Coupling::Glm2Artifact,
             _ => true,
         }
+    }
+
+    /// Whether this spec's prefill artifacts (KV rows, LSH codes, query
+    /// ranks, selections) are reusable across requests sharing a token
+    /// prefix — the shared-prefix cache convention: a kernel is cacheable
+    /// iff it has a decode arm whose [`DecodeState::replay`] reproduces the
+    /// cold forward's suffix rows over the same inputs. Every current
+    /// decode-capable kernel qualifies; new kernels must either keep this
+    /// property or override here (see the ROADMAP "Prefix & artifact cache"
+    /// section).
+    pub fn prefix_cacheable(&self) -> bool {
+        self.supports_decode()
+    }
+
+    /// Whether a *prefix* of a longer forward is length-stable for this
+    /// kernel: row `i`'s output (and therefore every downstream layer's K/V
+    /// row `i`) is identical whether the forward ran over `i+1` tokens or
+    /// any longer context. True for the causal dense kernels (exact/flash):
+    /// row `i` sees keys `≤ i` only. False for HyperAttention (a query's
+    /// block assignment is its rank among ALL query codes, so future tokens
+    /// shift it), for PreScored (Algorithm 1 clusters the full key set),
+    /// and for RestrictedExact (non-causal over the selected subset).
+    ///
+    /// The shared-prefix cache serves **partial** hits (cached prefix +
+    /// un-cached suffix, bitwise-cold via `resume_decode`) only for
+    /// suffix-stable specs; for the others it still serves **full-length**
+    /// hits — identical request tokens — which are bitwise-cold for every
+    /// kernel by determinism.
+    pub fn suffix_stable(&self) -> bool {
+        matches!(self, AttentionSpec::Exact | AttentionSpec::Flash { .. })
     }
 
     /// Kernel identifier of the backend this spec builds.

@@ -39,14 +39,13 @@
 //! hold every key/value so far *including* the newly decoded token's row.
 
 use super::backend::AttnStats;
-use super::hyper::{hyper_lsh, HyperConfig, RESIDUAL_STREAM};
+use super::hyper::{hyper_lsh, hyper_query_row, HyperConfig, HyperRowScratch};
 use super::prescored::PreScoredConfig;
 use crate::linalg::ops::{dot, softmax_inplace};
 use crate::linalg::Matrix;
 use crate::lsh::{gray_rank, sorted_blocks, AngularLsh};
 use crate::parallel;
 use crate::prescore::{prescore, prescore_balanced};
-use crate::util::rng::Rng;
 
 /// Minimum scalar work before a single-row dense kernel shards its key loop
 /// across the pool (same ballpark as the forward-path gates).
@@ -81,6 +80,7 @@ pub use super::backend::RestrictedSelector;
 /// one" — exactly the new query's position in [`sorted_blocks`]' order,
 /// because ties break by index and the new query always has the largest
 /// index.
+#[derive(Clone)]
 pub(crate) struct RankSet {
     /// Globally ordered buckets, each sorted ascending.
     buckets: Vec<Vec<u32>>,
@@ -137,6 +137,16 @@ impl RankSet {
             let tail = b.split_off(b.len() / 2);
             self.buckets.insert(bi + 1, tail);
         }
+    }
+
+    /// Every stored key, ascending (the persistable multiset — rebuilding a
+    /// RankSet by inserting these answers identical rank queries).
+    pub(crate) fn values(&self) -> Vec<u32> {
+        let mut out = Vec::with_capacity(self.len);
+        for b in &self.buckets {
+            out.extend_from_slice(b);
+        }
+        out
     }
 }
 
@@ -234,11 +244,12 @@ fn use_pool(n: usize, d: usize, dv: usize) -> bool {
     parallel::num_threads() > 1 && n * (d + dv) >= PAR_MIN_ROW_WORK
 }
 
-/// Exact single-query attention row over keys `0..n`. Width 1 mirrors
-/// [`super::exact::exact_attention`]'s per-query loop bitwise; wider pools
-/// shard the key range with an online-softmax merge (≤ 1e-5).
-fn exact_row(q_row: &[f32], k: &Matrix, v: &Matrix, scale: f32, out: &mut [f32]) {
-    let n = k.rows;
+/// Exact single-query attention row over keys `0..n_keys` (a prefix of `k`;
+/// the replay path limits it below `k.rows` for causal inner rows). Width 1
+/// mirrors [`super::exact::exact_attention`]'s per-query loop bitwise; wider
+/// pools shard the key range with an online-softmax merge (≤ 1e-5).
+fn exact_row(q_row: &[f32], k: &Matrix, v: &Matrix, scale: f32, n_keys: usize, out: &mut [f32]) {
+    let n = n_keys.min(k.rows);
     let dv = v.cols;
     if dv == 0 || n == 0 {
         return;
@@ -276,12 +287,22 @@ fn exact_row(q_row: &[f32], k: &Matrix, v: &Matrix, scale: f32, out: &mut [f32])
     part.finish(out);
 }
 
-/// Flash single-query attention row: streamed K-tiles of `block_k` with the
-/// online-softmax accumulator of [`super::exact::flash_attention_blocked`].
-/// Width 1 is bitwise-identical to the blocked kernel's last row; wider
-/// pools shard the tile range (≤ 1e-5).
-fn flash_row(q_row: &[f32], k: &Matrix, v: &Matrix, scale: f32, block_k: usize, out: &mut [f32]) {
-    let n = k.rows;
+/// Flash single-query attention row over keys `0..n_keys`: streamed K-tiles
+/// of `block_k` with the online-softmax accumulator of
+/// [`super::exact::flash_attention_blocked`]. Width 1 is bitwise-identical
+/// to the blocked kernel's corresponding row; wider pools shard the tile
+/// range (≤ 1e-5).
+#[allow(clippy::too_many_arguments)]
+fn flash_row(
+    q_row: &[f32],
+    k: &Matrix,
+    v: &Matrix,
+    scale: f32,
+    block_k: usize,
+    n_keys: usize,
+    out: &mut [f32],
+) {
+    let n = n_keys.min(k.rows);
     let dv = v.cols;
     if dv == 0 || n == 0 {
         return;
@@ -339,91 +360,24 @@ fn hyper_row(
     if nk == 0 || v.cols == 0 {
         return;
     }
-    let phys = |j: usize| sel.map_or(j, |s| s[j]);
     let kb = sorted_blocks(codes, cfg.block_size.max(1));
     let qblock = rank_block.min(kb.num_blocks().saturating_sub(1));
     let bkeys: &[usize] = kb.block(qblock);
-
-    let cap = cfg.block_size + cfg.sample_size + 1;
-    let mut pair_idx: Vec<usize> = Vec::with_capacity(cap);
-    let mut pair_score: Vec<f32> = Vec::with_capacity(cap);
-    let mut pair_weight: Vec<f32> = Vec::with_capacity(cap);
-
-    // Blockwise part (decode is causal; positions never exceed qi, so the
-    // filter below mirrors the full kernel's causal check verbatim).
-    for &j in bkeys {
-        if phys(j) > qi {
-            continue;
-        }
-        pair_idx.push(j);
-        pair_score.push(dot(q_row, k.row(phys(j))) * scale);
-        pair_weight.push(1.0);
-    }
-    // Causal anchor (the full kernel's guarantee of at least one pair).
-    if pair_idx.is_empty() {
-        let anchor = (0..nk).filter(|&j| phys(j) <= qi).max_by_key(|&j| phys(j));
-        if let Some(j) = anchor {
-            pair_idx.push(j);
-            pair_score.push(dot(q_row, k.row(phys(j))) * scale);
-            pair_weight.push(1.0);
-        }
-    }
-
-    // Residual Monte-Carlo part from this query's own RNG stream — the
-    // stream id depends only on (seed, qi), so the sample sequence is the
-    // one the full kernel would draw for its last row.
-    if cfg.sample_size > 0 {
-        let mut rng = Rng::with_stream(cfg.seed, RESIDUAL_STREAM ^ qi as u64);
-        let block_in_space = if cfg.exclude_block_from_residual { bkeys.len() } else { 0 };
-        let effective =
-            cfg.residual_count_override.unwrap_or_else(|| nk.saturating_sub(block_in_space));
-        if effective > 0 {
-            let w = effective as f32 / cfg.sample_size as f32;
-            let mut drawn = 0usize;
-            let mut attempts = 0usize;
-            let max_attempts = cfg.sample_size * 8 + 16;
-            while drawn < cfg.sample_size && attempts < max_attempts {
-                attempts += 1;
-                let j = rng.usize(nk);
-                if cfg.exclude_block_from_residual && bkeys.contains(&j) {
-                    continue;
-                }
-                if phys(j) > qi {
-                    continue;
-                }
-                pair_idx.push(j);
-                pair_score.push(dot(q_row, k.row(phys(j))) * scale);
-                pair_weight.push(w);
-                drawn += 1;
-            }
-        }
-    }
-
-    if pair_idx.is_empty() {
-        return;
-    }
-    let m = pair_score.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-    let mut denom = 0.0f32;
-    for ((&j, &s), &w) in pair_idx.iter().zip(&pair_score).zip(&pair_weight) {
-        let p = w * (s - m).exp();
-        denom += p;
-        let vrow = v.row(phys(j));
-        for (o, vv) in out.iter_mut().zip(vrow) {
-            *o += p * vv;
-        }
-    }
-    if denom > 0.0 {
-        let inv = 1.0 / denom;
-        for o in out.iter_mut() {
-            *o *= inv;
-        }
-    }
+    let mut scratch = HyperRowScratch::new(cfg);
+    // Decode is causal; `sel` maps the kernel key-row both to its physical
+    // row in `k`/`v` and to its sequence position (the two coincide, exactly
+    // as in hyper_attention_subset). The body is the full kernel's
+    // per-query function, so decode and forward pin one implementation.
+    hyper_query_row(
+        q_row, qi, true, bkeys, k, v, sel, sel, None, nk, cfg, scale, &mut scratch, out,
+    );
 }
 
 // ---------------------------------------------------------------------------
 // Per-sequence decode state.
 // ---------------------------------------------------------------------------
 
+#[derive(Clone)]
 struct HyperState {
     cfg: HyperConfig,
     lsh: AngularLsh,
@@ -436,11 +390,22 @@ struct HyperState {
 impl HyperState {
     fn begin(cfg: HyperConfig, q: &Matrix, k: &Matrix) -> HyperState {
         let lsh = hyper_lsh(q.cols, &cfg);
-        let mut q_ranks = RankSet::new();
-        for &c in &lsh.hash_rows(q) {
-            q_ranks.insert(gray_rank(c));
-        }
+        let q_codes = lsh.hash_rows(q);
+        let gray: Vec<u32> = q_codes.iter().map(|&c| gray_rank(c)).collect();
         let k_codes = lsh.hash_rows(k);
+        Self::from_parts(cfg, q.cols, &gray, k_codes)
+    }
+
+    /// Rebuild from already-computed artifacts: the gray ranks of the query
+    /// codes (any order — the RankSet is a multiset) and the key codes. The
+    /// LSH hyperplanes are reconstructed from the seed, so future steps hash
+    /// identically to a state built by [`HyperState::begin`].
+    fn from_parts(cfg: HyperConfig, dim: usize, q_gray: &[u32], k_codes: Vec<u32>) -> HyperState {
+        let lsh = hyper_lsh(dim, &cfg);
+        let mut q_ranks = RankSet::new();
+        for &g in q_gray {
+            q_ranks.insert(g);
+        }
         HyperState { cfg, lsh, q_ranks, k_codes }
     }
 
@@ -460,11 +425,50 @@ impl HyperState {
         self.q_ranks.insert(qc);
         rank / self.cfg.block_size.max(1)
     }
+
+    /// Replay-time observation of a whole suffix at once: hash the suffix's
+    /// new keys and queries, and return each suffix query's (uncapped) block
+    /// index in the *full* sorted-query order — i.e. the block the full
+    /// kernel over all `k.rows` tokens would assign it. For suffix query `i`
+    /// (absolute position `n0 + i`) that rank counts every cached query code
+    /// `≤ g_i` (cached indices are all smaller, so ties count) plus the
+    /// suffix peers `(g_j, j) < (g_i, i)` — exactly the query's position in
+    /// `sorted_blocks`' `(gray_rank, index)` order.
+    fn observe_suffix(&mut self, q_suffix: &Matrix, k: &Matrix) -> Vec<usize> {
+        let m = q_suffix.rows;
+        let n = k.rows;
+        assert_eq!(self.k_codes.len() + m, n, "replay expects exactly the suffix's new keys");
+        debug_assert_eq!(self.q_ranks.len(), n - m, "one query code per cached token");
+        for i in (n - m)..n {
+            self.k_codes.push(self.lsh.hash(k.row(i)));
+        }
+        let gray: Vec<u32> = (0..m).map(|i| gray_rank(self.lsh.hash(q_suffix.row(i)))).collect();
+        let bs = self.cfg.block_size.max(1);
+        // A suffix query's rank among its peers under the (gray, index)
+        // order is exactly its position in the sorted order — one sort
+        // instead of an O(m²) pairwise count.
+        let mut order: Vec<usize> = (0..m).collect();
+        order.sort_by_key(|&i| (gray[i], i));
+        let mut peer_rank = vec![0usize; m];
+        for (pos, &i) in order.iter().enumerate() {
+            peer_rank[i] = pos;
+        }
+        let mut blocks = Vec::with_capacity(m);
+        for i in 0..m {
+            let rank = self.q_ranks.rank_le(gray[i]) + peer_rank[i];
+            blocks.push(rank / bs);
+        }
+        for &g in &gray {
+            self.q_ranks.insert(g);
+        }
+        blocks
+    }
 }
 
 /// Cached-selection policy state (PreScored / RestrictedExact): the decode
 /// mirror of the serving `PreScoreManager` — extend each step, refresh
 /// periodically, δ-fallback preserved.
+#[derive(Clone)]
 struct SelectionState {
     selection: Vec<usize>,
     steps_since_refresh: usize,
@@ -485,6 +489,7 @@ impl SelectionState {
     }
 }
 
+#[derive(Clone)]
 enum Kind {
     Exact,
     Flash { block_k: usize },
@@ -495,12 +500,63 @@ enum Kind {
 
 /// Per-sequence, per-(layer·head) incremental decode state. Constructed by
 /// [`super::backend::AttentionBackend::begin_decode`]; advanced one token at
-/// a time by [`DecodeState::step`].
+/// a time by [`DecodeState::step`], or by a whole prefix-cache suffix at
+/// once by [`DecodeState::replay`]. `Clone` is what lets the shared-prefix
+/// cache branch sessions copy-on-write off one cached state.
+#[derive(Clone)]
 pub struct DecodeState {
     kind: Kind,
 }
 
-fn run_selector(selector: &RestrictedSelector, k: &Matrix) -> Vec<usize> {
+/// The prefix-reusable artifact data of one decode state in a
+/// backend-independent form — what `cache::persist` writes to disk. A state
+/// is rebuilt from these via
+/// [`super::backend::AttentionBackend::restore_decode`] (the backend
+/// supplies the config/seed half; this carries only the data half).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct DecodeArtifacts {
+    /// LSH codes of every key in the prefix (Hyper / PreScored).
+    pub k_codes: Vec<u32>,
+    /// Gray-rank multiset of the prefix's query codes (Hyper / PreScored).
+    pub q_ranks: Vec<u32>,
+    /// Cached key selection (PreScored / Restricted).
+    pub selection: Vec<usize>,
+    /// Algorithm 2 δ-fallback state at the prefix boundary (PreScored).
+    pub fallback: bool,
+}
+
+/// One query row of selection-restricted exact attention: softmax over
+/// `K[S]`, `V[S]` in selection order — any row of
+/// [`super::prescored::restricted_exact_attention`] (the kernel is
+/// non-causal over the gathered subset). Shared by the decode step and the
+/// prefix-cache suffix replay.
+fn restricted_row(
+    q_row: &[f32],
+    k: &Matrix,
+    v: &Matrix,
+    scale: f32,
+    selection: &[usize],
+    out: &mut [f32],
+) {
+    out.fill(0.0);
+    let mut scores = vec![0.0f32; selection.len()];
+    for (si, &j) in selection.iter().enumerate() {
+        scores[si] = dot(q_row, k.row(j)) * scale;
+    }
+    softmax_inplace(&mut scores);
+    for (si, &j) in selection.iter().enumerate() {
+        let p = scores[si];
+        if p == 0.0 {
+            continue;
+        }
+        let vrow = v.row(j);
+        for (o, vv) in out.iter_mut().zip(vrow) {
+            *o += p * vv;
+        }
+    }
+}
+
+pub(crate) fn run_selector(selector: &RestrictedSelector, k: &Matrix) -> Vec<usize> {
     match selector {
         RestrictedSelector::Balanced { num_clusters, num_samples, max_iters, seed } => {
             prescore_balanced(k, *num_clusters, *num_samples, *max_iters, *seed).selected
@@ -541,13 +597,80 @@ impl DecodeState {
     }
 
     pub(crate) fn restricted(selector: RestrictedSelector, k: &Matrix) -> DecodeState {
+        let selection = run_selector(&selector, k);
+        Self::restricted_from_selection(selector, selection)
+    }
+
+    /// Restricted state from an already-computed selection (the capture /
+    /// restore paths — the forward just ran the selector; don't run it
+    /// again).
+    pub(crate) fn restricted_from_selection(
+        selector: RestrictedSelector,
+        selection: Vec<usize>,
+    ) -> DecodeState {
         let sel = SelectionState {
-            selection: run_selector(&selector, k),
+            selection,
             steps_since_refresh: 0,
             refresh_every: RESTRICTED_REFRESH_DEFAULT,
             fallback: false,
         };
         DecodeState { kind: Kind::Restricted { selector: Box::new(selector), sel } }
+    }
+
+    /// Hyper state from already-computed artifacts (`cfg` salted; `q_gray`
+    /// are gray ranks of the prefix's query codes, `k_codes` its key codes).
+    pub(crate) fn hyper_from_parts(
+        cfg: HyperConfig,
+        dim: usize,
+        q_gray: &[u32],
+        k_codes: Vec<u32>,
+    ) -> DecodeState {
+        DecodeState {
+            kind: Kind::Hyper(Box::new(HyperState::from_parts(cfg, dim, q_gray, k_codes))),
+        }
+    }
+
+    /// PreScored (GLM3) state from already-computed artifacts.
+    pub(crate) fn prescored_from_parts(
+        cfg: PreScoredConfig,
+        dim: usize,
+        q_gray: &[u32],
+        k_codes: Vec<u32>,
+        selection: Vec<usize>,
+        fallback: bool,
+    ) -> DecodeState {
+        let hyper = HyperState::from_parts(cfg.hyper.clone(), dim, q_gray, k_codes);
+        let sel = SelectionState {
+            selection,
+            steps_since_refresh: 0,
+            refresh_every: cfg.decode_refresh_every,
+            fallback,
+        };
+        DecodeState {
+            kind: Kind::PreScored { cfg: Box::new(cfg), hyper: Box::new(hyper), sel },
+        }
+    }
+
+    /// Export the prefix-reusable artifact data (see [`DecodeArtifacts`]).
+    pub fn export_artifacts(&self) -> DecodeArtifacts {
+        match &self.kind {
+            Kind::Exact | Kind::Flash { .. } => DecodeArtifacts::default(),
+            Kind::Hyper(hs) => DecodeArtifacts {
+                k_codes: hs.k_codes.clone(),
+                q_ranks: hs.q_ranks.values(),
+                ..Default::default()
+            },
+            Kind::PreScored { hyper, sel, .. } => DecodeArtifacts {
+                k_codes: hyper.k_codes.clone(),
+                q_ranks: hyper.q_ranks.values(),
+                selection: sel.selection.clone(),
+                fallback: sel.fallback,
+            },
+            Kind::Restricted { sel, .. } => DecodeArtifacts {
+                selection: sel.selection.clone(),
+                ..Default::default()
+            },
+        }
     }
 
     /// Kernel this state decodes for (matches `AttnStats::kernel`).
@@ -611,11 +734,11 @@ impl DecodeState {
         let mut row = vec![0.0f32; v.cols];
         let stats = match &mut self.kind {
             Kind::Exact => {
-                exact_row(q_row, k, v, scale, &mut row);
+                exact_row(q_row, k, v, scale, n, &mut row);
                 AttnStats::unfiltered("exact", n)
             }
             Kind::Flash { block_k } => {
-                flash_row(q_row, k, v, scale, *block_k, &mut row);
+                flash_row(q_row, k, v, scale, *block_k, n, &mut row);
                 AttnStats::unfiltered("flash", n)
             }
             Kind::Hyper(hs) => {
@@ -708,31 +831,180 @@ impl DecodeState {
                 // Exact attention over K[S], V[S] in selection order —
                 // the last row of restricted_exact_attention (non-causal
                 // over the gathered subset; every position is past).
-                let s = &sel.selection;
-                let mut scores = vec![0.0f32; s.len()];
-                for (si, &j) in s.iter().enumerate() {
-                    scores[si] = dot(q_row, k.row(j)) * scale;
-                }
-                softmax_inplace(&mut scores);
-                for (si, &j) in s.iter().enumerate() {
-                    let p = scores[si];
-                    if p == 0.0 {
-                        continue;
-                    }
-                    let vrow = v.row(j);
-                    for (o, vv) in row.iter_mut().zip(vrow) {
-                        *o += p * vv;
-                    }
-                }
+                restricted_row(q_row, k, v, scale, &sel.selection, &mut row);
                 AttnStats {
                     kernel: "restricted-exact",
-                    retained_keys: s.len().min(n),
+                    retained_keys: sel.selection.len().min(n),
                     total_keys: n,
                     fallback_used: false,
                 }
             }
         };
         DecodeOutput { row, stats }
+    }
+
+    /// Replay a whole cached-prefix *suffix* at once — the prefix-cache warm
+    /// path. `q_suffix` holds the suffix queries (one row per un-cached
+    /// token, absolute positions `n0..n` where `n0 = k.rows − q_suffix.rows`),
+    /// and `k`/`v` hold every key/value of the full context *including* the
+    /// suffix rows. Returns the `m × v.cols` attention rows equal to rows
+    /// `n0..n` of the full causal forward over all `n` tokens (bitwise where
+    /// the kernel's sharding permits — the same guarantee [`step`] gives for
+    /// the last row), and advances the state to position `n` exactly as a
+    /// cold `begin_decode` over `n` tokens would: Hyper replays the cold
+    /// query-block assignment (cached query ranks + suffix peers), and the
+    /// selection kernels re-run Algorithm 1 over the *full* key set — which
+    /// is precisely what the cold prefill does, so no extra work and no
+    /// divergence. Only the suffix rows pay attention/hashing cost; the
+    /// cached `n0` rows are never recomputed.
+    ///
+    /// [`step`]: DecodeState::step
+    pub fn replay(
+        &mut self,
+        q_suffix: &Matrix,
+        k: &Matrix,
+        v: &Matrix,
+        scale: Option<f32>,
+    ) -> Matrix {
+        let n = k.rows;
+        let m = q_suffix.rows;
+        assert!(m <= n, "suffix longer than the full context");
+        assert_eq!(k.rows, v.rows, "K/V length mismatch");
+        let n0 = n - m;
+        let dv = v.cols;
+        let mut out = Matrix::zeros(m, dv);
+        if m == 0 {
+            return out;
+        }
+        assert_eq!(q_suffix.cols, k.cols, "query/key dim mismatch");
+        let scale = scale.unwrap_or(1.0 / (q_suffix.cols as f32).sqrt());
+        match &mut self.kind {
+            Kind::Exact => {
+                for local in 0..m {
+                    let limit = n0 + local + 1; // causal: keys 0..=position
+                    exact_row(q_suffix.row(local), k, v, scale, limit, out.row_mut(local));
+                }
+            }
+            Kind::Flash { block_k } => {
+                for local in 0..m {
+                    let limit = n0 + local + 1;
+                    flash_row(
+                        q_suffix.row(local),
+                        k,
+                        v,
+                        scale,
+                        *block_k,
+                        limit,
+                        out.row_mut(local),
+                    );
+                }
+            }
+            Kind::Hyper(hs) => {
+                let blocks = hs.observe_suffix(q_suffix, k);
+                // One key-side bucket sort for the whole suffix (the decode
+                // step pays it per token).
+                let kb = sorted_blocks(&hs.k_codes, hs.cfg.block_size.max(1));
+                let mut scratch = HyperRowScratch::new(&hs.cfg);
+                for local in 0..m {
+                    let qblock = blocks[local].min(kb.num_blocks().saturating_sub(1));
+                    hyper_query_row(
+                        q_suffix.row(local),
+                        n0 + local,
+                        true,
+                        kb.block(qblock),
+                        k,
+                        v,
+                        None,
+                        None,
+                        None,
+                        n,
+                        &hs.cfg,
+                        scale,
+                        &mut scratch,
+                        out.row_mut(local),
+                    );
+                }
+            }
+            Kind::PreScored { cfg, hyper, sel } => {
+                let blocks = hyper.observe_suffix(q_suffix, k);
+                // The cold forward runs Algorithm 1 over the full key set at
+                // prefill; this refresh reproduces it exactly (and resets
+                // the refresh clock, as a cold prefill would).
+                sel.selection = prescore(k, &cfg.prescore).selected;
+                sel.steps_since_refresh = 0;
+                let s_len = sel.selection.len();
+                sel.fallback = (s_len as f32) < cfg.fallback_delta * n as f32;
+                if sel.fallback || s_len >= n {
+                    let kb = sorted_blocks(&hyper.k_codes, cfg.hyper.block_size.max(1));
+                    let mut scratch = HyperRowScratch::new(&cfg.hyper);
+                    for local in 0..m {
+                        let qblock = blocks[local].min(kb.num_blocks().saturating_sub(1));
+                        hyper_query_row(
+                            q_suffix.row(local),
+                            n0 + local,
+                            true,
+                            kb.block(qblock),
+                            k,
+                            v,
+                            None,
+                            None,
+                            None,
+                            n,
+                            &cfg.hyper,
+                            scale,
+                            &mut scratch,
+                            out.row_mut(local),
+                        );
+                    }
+                } else {
+                    // GLM3 coupling over the gathered subset, as in the
+                    // cold prescored_hyper_attention.
+                    let hyper_cfg = HyperConfig {
+                        residual_count_override: None,
+                        exclude_block_from_residual: true,
+                        ..cfg.hyper.clone()
+                    };
+                    let codes: Vec<u32> =
+                        sel.selection.iter().map(|&j| hyper.k_codes[j]).collect();
+                    let kb = sorted_blocks(&codes, hyper_cfg.block_size.max(1));
+                    let mut scratch = HyperRowScratch::new(&hyper_cfg);
+                    for local in 0..m {
+                        let qblock = blocks[local].min(kb.num_blocks().saturating_sub(1));
+                        hyper_query_row(
+                            q_suffix.row(local),
+                            n0 + local,
+                            true,
+                            kb.block(qblock),
+                            k,
+                            v,
+                            Some(&sel.selection),
+                            Some(&sel.selection),
+                            None,
+                            codes.len(),
+                            &hyper_cfg,
+                            scale,
+                            &mut scratch,
+                            out.row_mut(local),
+                        );
+                    }
+                }
+            }
+            Kind::Restricted { selector, sel } => {
+                sel.selection = run_selector(selector, k);
+                sel.steps_since_refresh = 0;
+                for local in 0..m {
+                    restricted_row(
+                        q_suffix.row(local),
+                        k,
+                        v,
+                        scale,
+                        &sel.selection,
+                        out.row_mut(local),
+                    );
+                }
+            }
+        }
+        out
     }
 }
 
@@ -770,7 +1042,7 @@ mod tests {
         let full = crate::parallel::with_threads(1, || exact_attention(&inp));
         let mut row = vec![0.0f32; d];
         crate::parallel::with_threads(1, || {
-            exact_row(q.row(n - 1), &k, &v, inp.effective_scale(), &mut row)
+            exact_row(q.row(n - 1), &k, &v, inp.effective_scale(), n, &mut row)
         });
         assert_eq!(full.row(n - 1), row.as_slice(), "serial decode row must be bitwise");
     }
@@ -789,7 +1061,7 @@ mod tests {
         });
         let mut row = vec![0.0f32; d];
         crate::parallel::with_threads(1, || {
-            flash_row(q.row(n - 1), &k, &v, inp.effective_scale(), 16, &mut row)
+            flash_row(q.row(n - 1), &k, &v, inp.effective_scale(), 16, n, &mut row)
         });
         assert_eq!(full.row(n - 1), row.as_slice());
     }
@@ -803,10 +1075,10 @@ mod tests {
         let k = Matrix::randn(n, d, 1.0, &mut rng);
         let v = Matrix::randn(n, d, 1.0, &mut rng);
         let mut serial = vec![0.0f32; d];
-        crate::parallel::with_threads(1, || exact_row(&q_row, &k, &v, 0.2, &mut serial));
+        crate::parallel::with_threads(1, || exact_row(&q_row, &k, &v, 0.2, n, &mut serial));
         for t in [2usize, 4] {
             let mut par = vec![0.0f32; d];
-            crate::parallel::with_threads(t, || exact_row(&q_row, &k, &v, 0.2, &mut par));
+            crate::parallel::with_threads(t, || exact_row(&q_row, &k, &v, 0.2, n, &mut par));
             let err: f32 = serial
                 .iter()
                 .zip(&par)
@@ -815,7 +1087,7 @@ mod tests {
             assert!(err < 1e-5, "threads={t} err={err}");
             // Deterministic for a fixed width.
             let mut again = vec![0.0f32; d];
-            crate::parallel::with_threads(t, || exact_row(&q_row, &k, &v, 0.2, &mut again));
+            crate::parallel::with_threads(t, || exact_row(&q_row, &k, &v, 0.2, n, &mut again));
             assert_eq!(par, again, "threads={t}");
         }
     }

@@ -108,18 +108,175 @@ pub fn hyper_attention(inp: &AttentionInputs, cfg: &HyperConfig, allowed: Option
     hyper_core(inp, cfg, allowed, None)
 }
 
+/// Scratch buffers for [`hyper_query_row`], reused across a shard's queries.
+pub(crate) struct HyperRowScratch {
+    idx: Vec<usize>,
+    score: Vec<f32>,
+    weight: Vec<f32>,
+}
+
+impl HyperRowScratch {
+    pub(crate) fn new(cfg: &HyperConfig) -> HyperRowScratch {
+        let cap = cfg.block_size + cfg.sample_size + 1;
+        HyperRowScratch {
+            idx: Vec::with_capacity(cap),
+            score: Vec::with_capacity(cap),
+            weight: Vec::with_capacity(cap),
+        }
+    }
+}
+
+/// The per-query HyperAttention body — blockwise pairs, causal anchor,
+/// per-query-stream residual Monte-Carlo sampling, weighted softmax — shared
+/// by the full kernel's sharded query loop ([`hyper_core_coded`]) and the
+/// decode/replay path (`crate::attention::decode`), so the equivalence tests
+/// pin one implementation rather than a hand-kept mirror.
+///
+/// Key-row index `j` ranges over `0..nk` (the kernel's key set). `key_rows`
+/// maps `j` to its physical row in `k`/`v` (`None` = identity: `k`/`v` ARE
+/// the kernel key set, as in the full kernel where subsets are gathered
+/// first). `key_pos` maps `j` to its original sequence position for causal
+/// masking (`None` = identity). `space` is the residual sample space as a
+/// list of key-row indices (`None` = all of `0..nk`; the RNG draw sequence
+/// of an identity list is identical to `None`).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn hyper_query_row(
+    qrow: &[f32],
+    qi: usize,
+    causal: bool,
+    bkeys: &[usize],
+    k: &Matrix,
+    v: &Matrix,
+    key_rows: Option<&[usize]>,
+    key_pos: Option<&[usize]>,
+    space: Option<&[usize]>,
+    nk: usize,
+    cfg: &HyperConfig,
+    scale: f32,
+    scratch: &mut HyperRowScratch,
+    out: &mut [f32],
+) {
+    out.fill(0.0);
+    if nk == 0 || out.is_empty() {
+        return;
+    }
+    let phys = |j: usize| key_rows.map_or(j, |s| s[j]);
+    let pos = |j: usize| key_pos.map_or(j, |s| s[j]);
+    scratch.idx.clear();
+    scratch.score.clear();
+    scratch.weight.clear();
+
+    // (3) blockwise part.
+    for &j in bkeys {
+        if causal && pos(j) > qi {
+            continue;
+        }
+        scratch.idx.push(j);
+        scratch.score.push(dot(qrow, k.row(phys(j))) * scale);
+        scratch.weight.push(1.0);
+    }
+    // Causal anchor: guarantee at least one valid pair — the key with the
+    // largest position ≤ qi (the self pair in the un-gathered case) — so
+    // early tokens whose block lies in the future stay defined.
+    if causal && scratch.idx.is_empty() {
+        let anchor = match space {
+            Some(sp) => sp.iter().cloned().filter(|&j| pos(j) <= qi).max_by_key(|&j| pos(j)),
+            None => (0..nk).filter(|&j| pos(j) <= qi).max_by_key(|&j| pos(j)),
+        };
+        if let Some(j) = anchor {
+            scratch.idx.push(j);
+            scratch.score.push(dot(qrow, k.row(phys(j))) * scale);
+            scratch.weight.push(1.0);
+        }
+    }
+
+    // (4) residual Monte-Carlo part, from this query's own stream.
+    let n_space = space.map_or(nk, |s| s.len());
+    if cfg.sample_size > 0 && n_space > 0 {
+        let mut rng = Rng::with_stream(cfg.seed, RESIDUAL_STREAM ^ qi as u64);
+        let block_in_space = if cfg.exclude_block_from_residual { bkeys.len() } else { 0 };
+        let effective =
+            cfg.residual_count_override.unwrap_or_else(|| n_space.saturating_sub(block_in_space));
+        if effective > 0 {
+            let w = effective as f32 / cfg.sample_size as f32;
+            let mut drawn = 0usize;
+            let mut attempts = 0usize;
+            let max_attempts = cfg.sample_size * 8 + 16;
+            while drawn < cfg.sample_size && attempts < max_attempts {
+                attempts += 1;
+                let j = match space {
+                    Some(sp) => sp[rng.usize(sp.len())],
+                    None => rng.usize(nk),
+                };
+                if cfg.exclude_block_from_residual && bkeys.contains(&j) {
+                    continue;
+                }
+                if causal && pos(j) > qi {
+                    continue;
+                }
+                scratch.idx.push(j);
+                scratch.score.push(dot(qrow, k.row(phys(j))) * scale);
+                scratch.weight.push(w);
+                drawn += 1;
+            }
+        }
+    }
+
+    // Combine with a weighted, numerically-stable softmax.
+    if scratch.idx.is_empty() {
+        return;
+    }
+    let m = scratch.score.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut denom = 0.0f32;
+    for ((&j, &s), &w) in scratch.idx.iter().zip(&scratch.score).zip(&scratch.weight) {
+        let p = w * (s - m).exp();
+        denom += p;
+        let vrow = v.row(phys(j));
+        for (o, vv) in out.iter_mut().zip(vrow) {
+            *o += p * vv;
+        }
+    }
+    if denom > 0.0 {
+        let inv = 1.0 / denom;
+        for o in out.iter_mut() {
+            *o *= inv;
+        }
+    }
+}
+
 /// Core HyperAttention. `key_pos` maps key-row index → original sequence
 /// position (for causal masking of gathered subsets); `None` = identity.
+/// Hashes queries and keys, then defers to [`hyper_core_coded`].
 fn hyper_core(
     inp: &AttentionInputs,
     cfg: &HyperConfig,
     allowed: Option<&[bool]>,
     key_pos: Option<&[usize]>,
 ) -> Matrix {
+    let lsh = hyper_lsh(inp.q.cols, cfg);
+    let q_codes = lsh.hash_rows(inp.q);
+    let k_codes = lsh.hash_rows(inp.k);
+    hyper_core_coded(inp, cfg, allowed, key_pos, &q_codes, &k_codes)
+}
+
+/// [`hyper_core`] with precomputed LSH codes — the prefill-capture path
+/// reuses the codes it already hashed for the decode state, so a captured
+/// forward pays the hashing cost once. Codes MUST be the ones
+/// `hyper_lsh(cfg)` produces for these rows; the result is then bitwise
+/// identical to [`hyper_core`].
+pub(crate) fn hyper_core_coded(
+    inp: &AttentionInputs,
+    cfg: &HyperConfig,
+    allowed: Option<&[bool]>,
+    key_pos: Option<&[usize]>,
+    q_codes: &[u32],
+    k_codes: &[u32],
+) -> Matrix {
     let (nq, nk) = (inp.q.rows, inp.k.rows);
     let dv = inp.v.cols;
     let scale = inp.effective_scale();
-    let lsh = hyper_lsh(inp.q.cols, cfg);
+    debug_assert_eq!(q_codes.len(), nq, "one code per query row");
+    debug_assert_eq!(k_codes.len(), nk, "one code per key row");
 
     if let Some(a) = allowed {
         assert_eq!(a.len(), nk, "allowed mask length");
@@ -133,11 +290,9 @@ fn hyper_core(
         return out;
     }
 
-    // (1)+(2): hash and bucket-sort queries and keys.
-    let q_codes = lsh.hash_rows(inp.q);
-    let k_codes = lsh.hash_rows(inp.k);
-    let qb = sorted_blocks(&q_codes, cfg.block_size.max(1));
-    let kb = sorted_blocks(&k_codes, cfg.block_size.max(1));
+    // (1)+(2): bucket-sort queries and keys by their (precomputed) codes.
+    let qb = sorted_blocks(q_codes, cfg.block_size.max(1));
+    let kb = sorted_blocks(k_codes, cfg.block_size.max(1));
     let nblocks = qb.num_blocks().max(kb.num_blocks());
 
     // Map each query to the key-block it is aligned with.
@@ -156,104 +311,32 @@ fn hyper_core(
 
     // The per-query body: pure function of (i, shared state, the query's own
     // RNG stream) — queries are sharded across the pool over disjoint output
-    // bands, bit-identical to the serial order for any thread count.
+    // bands, bit-identical to the serial order for any thread count. The
+    // body itself is [`hyper_query_row`], shared with the decode path.
     let query_rows = |row0: usize, out_chunk: &mut [f32]| {
         // Scratch buffers reused across this shard's queries.
-        let cap = cfg.block_size + cfg.sample_size + 1;
-        let mut pair_idx: Vec<usize> = Vec::with_capacity(cap);
-        let mut pair_score: Vec<f32> = Vec::with_capacity(cap);
-        let mut pair_weight: Vec<f32> = Vec::with_capacity(cap);
-
-        // Original sequence position of key-row j (identity unless gathered).
-        let pos = |j: usize| key_pos.map_or(j, |p| p[j]);
+        let mut scratch = HyperRowScratch::new(cfg);
         let rows = out_chunk.len() / dv;
-
         for local in 0..rows {
             let i = row0 + local;
-            let qrow = inp.q.row(i);
-            pair_idx.clear();
-            pair_score.clear();
-            pair_weight.clear();
-
-            // (3) blockwise part.
             let bkeys: &[usize] =
                 block_keys.get(query_block[i]).map(|v| v.as_slice()).unwrap_or(&[]);
-            let in_block = |j: usize| bkeys.contains(&j);
-            for &j in bkeys {
-                if inp.causal && pos(j) > i {
-                    continue;
-                }
-                pair_idx.push(j);
-                pair_score.push(dot(qrow, inp.k.row(j)) * scale);
-                pair_weight.push(1.0);
-            }
-            // Causal anchor: guarantee at least one valid pair — the allowed
-            // key with the largest position ≤ i (the self pair in the
-            // un-gathered case) — so early tokens whose block lies in the
-            // future stay defined.
-            if inp.causal && pair_idx.is_empty() {
-                let anchor = (0..inp.k.rows)
-                    .filter(|&j| is_allowed(j) && pos(j) <= i)
-                    .max_by_key(|&j| pos(j));
-                if let Some(j) = anchor {
-                    pair_idx.push(j);
-                    pair_score.push(dot(qrow, inp.k.row(j)) * scale);
-                    pair_weight.push(1.0);
-                }
-            }
-
-            // (4) residual Monte-Carlo part, from this query's own stream.
-            if cfg.sample_size > 0 && n_allowed > 0 {
-                let mut rng = Rng::with_stream(cfg.seed, RESIDUAL_STREAM ^ i as u64);
-                let block_in_space =
-                    if cfg.exclude_block_from_residual { bkeys.len() } else { 0 };
-                let effective = cfg
-                    .residual_count_override
-                    .unwrap_or_else(|| n_allowed.saturating_sub(block_in_space));
-                if effective > 0 {
-                    let w = effective as f32 / cfg.sample_size as f32;
-                    let mut drawn = 0usize;
-                    let mut attempts = 0usize;
-                    let max_attempts = cfg.sample_size * 8 + 16;
-                    while drawn < cfg.sample_size && attempts < max_attempts {
-                        attempts += 1;
-                        let j = allowed_indices[rng.usize(n_allowed)];
-                        if cfg.exclude_block_from_residual && in_block(j) {
-                            continue;
-                        }
-                        if inp.causal && pos(j) > i {
-                            continue;
-                        }
-                        pair_idx.push(j);
-                        pair_score.push(dot(qrow, inp.k.row(j)) * scale);
-                        pair_weight.push(w);
-                        drawn += 1;
-                    }
-                }
-            }
-
-            // Combine with a weighted, numerically-stable softmax.
-            if pair_idx.is_empty() {
-                continue;
-            }
-            let m = pair_score.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-            let mut denom = 0.0f32;
-            let orow = &mut out_chunk[local * dv..(local + 1) * dv];
-            orow.fill(0.0);
-            for ((&j, &s), &w) in pair_idx.iter().zip(&pair_score).zip(&pair_weight) {
-                let p = w * (s - m).exp();
-                denom += p;
-                let vrow = inp.v.row(j);
-                for (o, vv) in orow.iter_mut().zip(vrow) {
-                    *o += p * vv;
-                }
-            }
-            if denom > 0.0 {
-                let inv = 1.0 / denom;
-                for o in orow.iter_mut() {
-                    *o *= inv;
-                }
-            }
+            hyper_query_row(
+                inp.q.row(i),
+                i,
+                inp.causal,
+                bkeys,
+                inp.k,
+                inp.v,
+                None,
+                key_pos,
+                Some(&allowed_indices),
+                nk,
+                cfg,
+                scale,
+                &mut scratch,
+                &mut out_chunk[local * dv..(local + 1) * dv],
+            );
         }
     };
 

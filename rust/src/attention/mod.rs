@@ -40,7 +40,7 @@ pub mod prescored;
 pub use backend::{
     AttentionBackend, AttentionOutput, AttentionSpec, AttnPolicy, AttnStats, RestrictedSelector,
 };
-pub use decode::{DecodeOutput, DecodeState};
+pub use decode::{DecodeArtifacts, DecodeOutput, DecodeState};
 pub use exact::{exact_attention, flash_attention};
 pub use hyper::{hyper_attention, HyperConfig};
 pub use prescored::{prescored_hyper_attention, Coupling, PreScoredConfig};

@@ -1,0 +1,936 @@
+//! Shared-prefix cache: a radix tree over token ids whose nodes own
+//! ref-counted KV page runs **plus the per-layer·head pre-score artifacts**
+//! for the prefix ending at each node — the paper's query-independent
+//! importance prior made a first-class, reusable serving object.
+//!
+//! Two requests sharing a prompt prefix share the same keys, hence the same
+//! clustering/leverage selections, LSH codes, and KV projections. The cache
+//! stores, per radix node:
+//!
+//! * the node's token-id edge and its segment of per layer·head K/V rows
+//!   (charged against a fixed [`BlockAllocator`] page pool, page size
+//!   [`crate::coordinator::kv_cache::BLOCK_SIZE`] tokens — the same
+//!   allocator the live-sequence
+//!   [`crate::coordinator::KvCacheManager`] uses);
+//! * at *artifact boundaries* (positions where a prefill ended), the full
+//!   per layer·head [`DecodeState`] snapshot — pre-score selections, LSH key
+//!   codes, query-rank sets — plus the prefix NLL and the boundary logits
+//!   row, which is everything a warm prefill needs to resume.
+//!
+//! Sessions branch off shared nodes **copy-on-write**: a hit takes `Arc`
+//! handles on the chain's immutable segments ([`PrefixHit`]) and
+//! materializes its own KV copy outside the engine lock
+//! ([`PrefixHit::assemble_kv`]), so eviction can never corrupt a live
+//! session; the hit additionally pins its node ([`PrefixCache::release`]
+//! unpins) so hot prefixes survive LRU pressure. Eviction walks unpinned
+//! leaf subtrees in LRU order when the page pool is exhausted. Segments
+//! record their donor insert: suffix-stable kernels compose segments from
+//! different donors freely (prefix rows are length-invariant), while
+//! full-only kernels are served only single-donor chains — mixed chains
+//! would splice rows from forwards of different context lengths.
+//! [`cache::persist`](persist) serializes the artifact store to a
+//! versioned binary file so it survives restarts.
+//!
+//! Only specs whose artifacts are prefix-reusable may be cached — see
+//! [`crate::attention::AttentionSpec::prefix_cacheable`] and the ROADMAP
+//! "Prefix & artifact cache" convention.
+
+pub mod persist;
+
+use crate::attention::DecodeState;
+use crate::coordinator::kv_cache::{pages_for, BlockAllocator, BlockId};
+use crate::linalg::Matrix;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+/// Configuration for the shared-prefix cache (`[cache]` config block).
+#[derive(Debug, Clone)]
+pub struct PrefixCacheConfig {
+    /// Page budget (pages of [`crate::coordinator::kv_cache::BLOCK_SIZE`]
+    /// tokens). 0 disables the cache.
+    pub blocks: usize,
+    /// Shortest prefix worth caching (and the minimum un-cached extension
+    /// worth re-snapshotting).
+    pub min_tokens: usize,
+    /// Where to persist the artifact store across restarts (`None` = don't).
+    pub persist_path: Option<PathBuf>,
+}
+
+impl Default for PrefixCacheConfig {
+    fn default() -> Self {
+        PrefixCacheConfig { blocks: 256, min_tokens: 16, persist_path: None }
+    }
+}
+
+/// Hit/miss/evict accounting, surfaced through `ServerStats`.
+#[derive(Debug, Clone, Default)]
+pub struct CacheStats {
+    pub hits: usize,
+    pub misses: usize,
+    pub insertions: usize,
+    pub evictions: usize,
+    /// Total prefix tokens served from the cache (prefill work avoided).
+    pub hit_tokens: usize,
+    /// Live radix nodes (root excluded).
+    pub nodes: usize,
+    /// Tokens resident across all cached segments.
+    pub cached_tokens: usize,
+    pub pages_in_use: usize,
+    pub pages_capacity: usize,
+}
+
+/// One layer·head's segment of cached K/V rows.
+#[derive(Clone)]
+pub struct SegmentKv {
+    pub k: Matrix,
+    pub v: Matrix,
+}
+
+/// What the engine hands the cache after a prefill: per layer·head KV rows
+/// from `kv_from` to the prefix end, the full-prefix decode states, the
+/// prefix NLL (entries `0..len−1`), and the boundary logits row (row
+/// `len−1`). A cold prefill snapshots everything (`kv_from = 0`); a warm
+/// hit snapshots only the rows it actually computed (`kv_from = hit.len`)
+/// — the cached rows already live in the tree, so the warm path never
+/// re-clones O(prefix) KV data just to insert an O(suffix) leaf.
+#[derive(Clone)]
+pub struct PrefixSnapshot {
+    /// Absolute position of `kv`'s first row.
+    pub kv_from: usize,
+    /// Per layer·head K/V rows for positions `kv_from..len`.
+    pub kv: Vec<(Matrix, Matrix)>,
+    pub states: Vec<DecodeState>,
+    pub nll: Vec<f32>,
+    pub last_logits: Vec<f32>,
+}
+
+/// A warm lookup result: the chain's KV segments as shared `Arc` handles
+/// (copy-on-write at the refcount level — cloning them under the engine
+/// lock is O(chain·slots); the row materialization via
+/// [`PrefixHit::assemble_kv`] happens in the caller's lock-free compute
+/// phase), the decode states cloned out, and the pin handle to release when
+/// the session finishes. Eviction only drops the tree's own `Arc`s, so an
+/// outstanding hit keeps its segment data alive.
+pub struct PrefixHit {
+    /// Pinned artifact node; pass to [`PrefixCache::release`] when done.
+    pub node: usize,
+    /// Cached prefix length in tokens.
+    pub len: usize,
+    /// Chain-ordered (root-down) per-node, per-slot KV segments.
+    pub segments: Vec<Vec<Arc<SegmentKv>>>,
+    /// Shared handle on the boundary's decode states; take an owned copy
+    /// for a session with `hit.states.as_ref().clone()` — outside the
+    /// engine lock, like [`PrefixHit::assemble_kv`].
+    pub states: Arc<Vec<DecodeState>>,
+    /// NLL entries `0..len−1` of the cached prefix.
+    pub nll: Vec<f32>,
+    /// Logits row at position `len−1` (seeds the first suffix NLL entry and
+    /// the next-token argmax on a full-length hit).
+    pub last_logits: Vec<f32>,
+}
+
+impl PrefixHit {
+    /// Materialize the per layer·head `(K, V)` matrices for positions
+    /// `0..len` by concatenating the chain segments. O(prefix) copies — run
+    /// it outside the engine lock.
+    pub fn assemble_kv(&self) -> Vec<(Matrix, Matrix)> {
+        materialize_segments(&self.segments)
+    }
+}
+
+/// Concatenate chain-ordered per-slot segments into full `(K, V)` matrices
+/// — one reservation and one contiguous memcpy per segment (this is the
+/// warm path's dominant copy; don't grow row by row).
+fn materialize_segments(segments: &[Vec<Arc<SegmentKv>>]) -> Vec<(Matrix, Matrix)> {
+    let slots = segments.first().map(|n| n.len()).unwrap_or(0);
+    let mut kv = Vec::with_capacity(slots);
+    for s in 0..slots {
+        let first = &segments[0][s];
+        let total_rows: usize = segments.iter().map(|n| n[s].k.rows).sum();
+        let mut k = Matrix::zeros(0, first.k.cols);
+        let mut v = Matrix::zeros(0, first.v.cols);
+        k.data.reserve_exact(total_rows * k.cols);
+        v.data.reserve_exact(total_rows * v.cols);
+        for node_segs in segments {
+            let seg = &node_segs[s];
+            k.data.extend_from_slice(&seg.k.data);
+            k.rows += seg.k.rows;
+            v.data.extend_from_slice(&seg.v.data);
+            v.rows += seg.v.rows;
+        }
+        kv.push((k, v));
+    }
+    kv
+}
+
+/// Artifacts stored at a node whose end position was a prefill boundary.
+/// The states sit behind `Arc` for the same reason the KV segments do: a
+/// hit clones a refcount under the engine lock; the owned copy the session
+/// mutates is made in the caller's lock-free phase.
+struct NodeArt {
+    states: Arc<Vec<DecodeState>>,
+    last_logits: Vec<f32>,
+    /// Insert that produced this snapshot (see `Node::donor`).
+    donor: u64,
+}
+
+struct Node {
+    parent: usize,
+    /// Token-id edge from the parent.
+    tokens: Vec<u32>,
+    /// Per layer·head K/V rows for this segment (`tokens.len()` rows each),
+    /// behind `Arc` so hits share them copy-on-write.
+    kv: Vec<Arc<SegmentKv>>,
+    /// Insert that computed this segment's rows. For suffix-stable kernels
+    /// prefix rows are length-invariant, so segments from different inserts
+    /// compose freely; for full-only kernels they do NOT (hyper block
+    /// ranks, prescore selections, and restricted subsets all depend on the
+    /// donor's full context), so a full-length hit additionally requires
+    /// every chain segment to come from the artifact's own donor.
+    donor: u64,
+    /// NLL entries fully determined inside this segment: absolute entries
+    /// `max(start,1)−1 .. start+len−1` (entry `i` needs token `i+1`).
+    nll: Vec<f32>,
+    /// Full-prefix artifact snapshot at this node's end position, if a
+    /// prefill ever ended exactly here.
+    art: Option<NodeArt>,
+    /// First-token → child node id.
+    children: HashMap<u32, usize>,
+    /// Live-session pins (each outstanding [`PrefixHit`] holds one).
+    pins: usize,
+    /// LRU stamp (monotone lookup/insert clock).
+    last_used: u64,
+    /// Pages charged against the allocator for this segment.
+    blocks: Vec<BlockId>,
+}
+
+fn common_prefix(a: &[u32], b: &[u32]) -> usize {
+    let n = a.len().min(b.len());
+    let mut i = 0;
+    while i < n && a[i] == b[i] {
+        i += 1;
+    }
+    i
+}
+
+/// The shared-prefix cache. Owned by the serving decode engine (behind its
+/// mutex); all methods are `&mut self`.
+pub struct PrefixCache {
+    cfg: PrefixCacheConfig,
+    nodes: Vec<Option<Node>>,
+    free_ids: Vec<usize>,
+    alloc: BlockAllocator,
+    clock: u64,
+    /// Monotone insert id for segment provenance (see `Node::donor`).
+    next_donor: u64,
+    hits: usize,
+    misses: usize,
+    insertions: usize,
+    evictions: usize,
+    hit_tokens: usize,
+}
+
+impl PrefixCache {
+    pub fn new(cfg: PrefixCacheConfig) -> PrefixCache {
+        let root = Node {
+            parent: 0,
+            tokens: Vec::new(),
+            kv: Vec::new(),
+            donor: 0,
+            nll: Vec::new(),
+            art: None,
+            children: HashMap::new(),
+            pins: 0,
+            last_used: 0,
+            blocks: Vec::new(),
+        };
+        let alloc = BlockAllocator::new(cfg.blocks);
+        PrefixCache {
+            cfg,
+            nodes: vec![Some(root)],
+            free_ids: Vec::new(),
+            alloc,
+            clock: 0,
+            next_donor: 0,
+            hits: 0,
+            misses: 0,
+            insertions: 0,
+            evictions: 0,
+            hit_tokens: 0,
+        }
+    }
+
+    pub fn config(&self) -> &PrefixCacheConfig {
+        &self.cfg
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.cfg.blocks > 0
+    }
+
+    fn node(&self, id: usize) -> &Node {
+        self.nodes[id].as_ref().expect("dangling prefix-cache node id")
+    }
+
+    fn node_mut(&mut self, id: usize) -> &mut Node {
+        self.nodes[id].as_mut().expect("dangling prefix-cache node id")
+    }
+
+    fn alloc_node(&mut self, node: Node) -> usize {
+        match self.free_ids.pop() {
+            Some(id) => {
+                self.nodes[id] = Some(node);
+                id
+            }
+            None => {
+                self.nodes.push(Some(node));
+                self.nodes.len() - 1
+            }
+        }
+    }
+
+    /// Root-exclusive path from the root down to `node`.
+    fn chain(&self, node: usize) -> Vec<usize> {
+        let mut chain = Vec::new();
+        let mut p = node;
+        while p != 0 {
+            chain.push(p);
+            p = self.node(p).parent;
+        }
+        chain.reverse();
+        chain
+    }
+
+    /// Clone the `Arc` handles of every chain node's per-slot segments
+    /// (cheap — the copy-on-write branch point) plus the concatenated NLL.
+    fn chain_segments(&self, chain: &[usize]) -> (Vec<Vec<Arc<SegmentKv>>>, Vec<f32>) {
+        let mut segments = Vec::with_capacity(chain.len());
+        let mut nll = Vec::new();
+        for &nid in chain {
+            segments.push(self.node(nid).kv.clone());
+            nll.extend_from_slice(&self.node(nid).nll);
+        }
+        (segments, nll)
+    }
+
+    /// Longest cached prefix of `tokens` ending at an artifact boundary.
+    /// With `full_only`, only a boundary at exactly `tokens.len()` counts —
+    /// the mode for kernels whose prefixes are not length-stable (see
+    /// [`crate::attention::AttentionSpec::suffix_stable`]): identical
+    /// requests dedup, partial overlaps recompute. A hit pins its node
+    /// until [`PrefixCache::release`].
+    pub fn lookup(&mut self, tokens: &[u32], full_only: bool) -> Option<PrefixHit> {
+        if !self.enabled() {
+            return None;
+        }
+        self.clock += 1;
+        let mut cur = 0usize;
+        let mut matched = 0usize;
+        let mut best: Option<(usize, usize)> = None;
+        while matched < tokens.len() {
+            let Some(&child) = self.node(cur).children.get(&tokens[matched]) else { break };
+            let edge = &self.node(child).tokens;
+            let rem = tokens.len() - matched;
+            if edge.len() > rem || edge[..] != tokens[matched..matched + edge.len()] {
+                break; // partial edge → no artifact boundary inside it
+            }
+            matched += edge.len();
+            cur = child;
+            if self.node(cur).art.is_some() && (!full_only || matched == tokens.len()) {
+                best = Some((cur, matched));
+            }
+        }
+        let Some((node, len)) = best else {
+            self.misses += 1;
+            return None;
+        };
+        let chain = self.chain(node);
+        if full_only {
+            // Full-only kernels: prefix rows are NOT length-invariant, so
+            // segments computed by other inserts (splits/extensions of this
+            // chain) cannot be composed with this artifact's states — the
+            // hit is only sound when the whole chain came from the
+            // artifact's own donor prefill.
+            let donor = self.node(node).art.as_ref().expect("artifact boundary lost").donor;
+            if chain.iter().any(|&nid| self.node(nid).donor != donor) {
+                self.misses += 1;
+                return None;
+            }
+        }
+        let (segments, nll) = self.chain_segments(&chain);
+        let art = self.node(node).art.as_ref().expect("artifact boundary lost");
+        let states = Arc::clone(&art.states);
+        let last_logits = art.last_logits.clone();
+        let clock = self.clock;
+        for &nid in &chain {
+            self.node_mut(nid).last_used = clock;
+        }
+        self.node_mut(node).pins += 1;
+        self.hits += 1;
+        self.hit_tokens += len;
+        Some(PrefixHit { node, len, segments, states, nll, last_logits })
+    }
+
+    /// Unpin a node returned by a [`PrefixHit`] (session finished).
+    pub fn release(&mut self, node: usize) {
+        if let Some(Some(n)) = self.nodes.get_mut(node) {
+            n.pins = n.pins.saturating_sub(1);
+        }
+    }
+
+    /// Whether a prefill over `tokens`, of which `cached` leading tokens
+    /// came from the cache, is worth snapshotting (the engine asks before
+    /// paying the clone cost): the un-cached extension must itself reach
+    /// `min_tokens`, so per-request 1-token-novel suffixes don't churn
+    /// leaves and pages — and in `unique_chain` mode (non-suffix-stable
+    /// policies) an insert whose token family is already owned by another
+    /// donor would be skipped by [`PrefixCache::insert`] anyway, so the
+    /// snapshot clone is refused up front.
+    pub fn wants_insert(&self, tokens: &[u32], cached: usize, unique_chain: bool) -> bool {
+        let total = tokens.len();
+        if !(self.enabled() && total > cached && total - cached >= self.cfg.min_tokens) {
+            return false;
+        }
+        !(unique_chain && self.node(0).children.contains_key(&tokens[0]))
+    }
+
+    /// Insert (or extend/split toward) the prefix `tokens`, consuming its
+    /// snapshot (the one terminal branch moves the artifacts instead of
+    /// re-cloning them). With `unique_chain` (non-suffix-stable serving
+    /// policies), an insert that would thread through or split another
+    /// donor's nodes is skipped outright: the resulting mixed chain could
+    /// never be served (see `lookup`'s provenance check), so storing it
+    /// would only waste pages and churn the LRU. Returns false when
+    /// nothing was inserted (budget exhausted, or skipped as above).
+    pub fn insert(&mut self, tokens: &[u32], snap: PrefixSnapshot, unique_chain: bool) -> bool {
+        if !self.enabled() || tokens.len() < self.cfg.min_tokens.max(1) {
+            return false;
+        }
+        assert_eq!(
+            snap.nll.len(),
+            tokens.len() - 1,
+            "snapshot NLL must cover entries 0..len-1"
+        );
+        assert!(!snap.states.is_empty(), "snapshot without decode states");
+        assert_eq!(snap.kv.len(), snap.states.len(), "snapshot KV/state slot mismatch");
+        debug_assert!(
+            snap.kv.iter().all(|(k, v)| {
+                k.rows == tokens.len() - snap.kv_from && v.rows == k.rows
+            }),
+            "snapshot KV must cover rows kv_from..len"
+        );
+        self.clock += 1;
+        if unique_chain && self.node(0).children.contains_key(&tokens[0]) {
+            // Another donor already owns this token family; composing with
+            // its segments is unsound for full-only kernels.
+            return false;
+        }
+        self.next_donor += 1;
+        let donor = self.next_donor;
+        let mut cur = 0usize;
+        let mut matched = 0usize;
+        loop {
+            if matched == tokens.len() {
+                // Boundary at an existing node: adopt the artifacts if the
+                // node has none (identical by determinism if it does).
+                let clock = self.clock;
+                let node = self.node_mut(cur);
+                node.last_used = clock;
+                if node.art.is_none() {
+                    node.art = Some(NodeArt {
+                        states: Arc::new(snap.states),
+                        last_logits: snap.last_logits,
+                        donor,
+                    });
+                    self.insertions += 1;
+                }
+                return true;
+            }
+            let next_tok = tokens[matched];
+            let Some(&child) = self.node(cur).children.get(&next_tok) else {
+                return self.attach_leaf(cur, tokens, matched, snap, donor);
+            };
+            let cp = common_prefix(&self.node(child).tokens, &tokens[matched..]);
+            if cp == self.node(child).tokens.len() {
+                matched += cp;
+                cur = child;
+                let clock = self.clock;
+                self.node_mut(cur).last_used = clock;
+                continue;
+            }
+            // Diverges (or ends) inside the edge: split, then either the
+            // boundary is exactly the split point or the rest attaches
+            // below it.
+            let Some(left) = self.split(cur, child, matched, cp) else { return false };
+            if matched + cp == tokens.len() {
+                let clock = self.clock;
+                let node = self.node_mut(left);
+                node.last_used = clock;
+                node.art = Some(NodeArt {
+                    states: Arc::new(snap.states),
+                    last_logits: snap.last_logits,
+                    donor,
+                });
+                self.insertions += 1;
+                return true;
+            }
+            return self.attach_leaf(left, tokens, matched + cp, snap, donor);
+        }
+    }
+
+    /// Create a new leaf under `parent` holding `tokens[start..]` with the
+    /// snapshot's artifacts at its end.
+    fn attach_leaf(
+        &mut self,
+        parent: usize,
+        tokens: &[u32],
+        start: usize,
+        snap: PrefixSnapshot,
+        donor: u64,
+    ) -> bool {
+        let total = tokens.len();
+        if start < snap.kv_from {
+            // The attach point regressed below the rows the snapshot
+            // carries (the donor's hit node was evicted/split by a
+            // concurrent insert between lookup and this insert) — skip the
+            // fill rather than store an incomplete segment.
+            return false;
+        }
+        let seg_len = total - start;
+        let need = pages_for(seg_len);
+        if !self.ensure_free(need, Some(parent)) {
+            return false;
+        }
+        let blocks: Vec<BlockId> =
+            (0..need).map(|_| self.alloc.alloc().expect("ensure_free lied")).collect();
+        let (lo, hi) = (start - snap.kv_from, total - snap.kv_from);
+        let kv: Vec<Arc<SegmentKv>> = snap
+            .kv
+            .into_iter()
+            .map(|(k, v)| {
+                // A warm suffix-only snapshot usually covers exactly this
+                // segment: move the matrices instead of re-slicing them.
+                let seg = if lo == 0 && hi == k.rows {
+                    SegmentKv { k, v }
+                } else {
+                    SegmentKv { k: k.slice_rows(lo, hi), v: v.slice_rows(lo, hi) }
+                };
+                Arc::new(seg)
+            })
+            .collect();
+        let nll_lo = start.max(1) - 1;
+        let node = Node {
+            parent,
+            tokens: tokens[start..].to_vec(),
+            kv,
+            donor,
+            nll: snap.nll[nll_lo..total - 1].to_vec(),
+            art: Some(NodeArt {
+                states: Arc::new(snap.states),
+                last_logits: snap.last_logits,
+                donor,
+            }),
+            children: HashMap::new(),
+            pins: 0,
+            last_used: self.clock,
+            blocks,
+        };
+        let id = self.alloc_node(node);
+        self.node_mut(parent).children.insert(tokens[start], id);
+        self.insertions += 1;
+        true
+    }
+
+    /// Split `child` (starting at absolute position `abs_start`) after `cp`
+    /// edge tokens. The LEFT half gets a fresh id; `child` keeps its id for
+    /// the right half — so its artifacts, children, and any outstanding pin
+    /// handles stay valid. Returns the left node's id.
+    fn split(
+        &mut self,
+        parent: usize,
+        child: usize,
+        abs_start: usize,
+        cp: usize,
+    ) -> Option<usize> {
+        let clen = self.node(child).tokens.len();
+        debug_assert!(cp > 0 && cp < clen, "split point must be inside the edge");
+        // Page rounding can cost at most one extra page; reserve it before
+        // touching the node so eviction never runs with the tree mid-edit.
+        let extra = pages_for(cp) + pages_for(clen - cp) - pages_for(clen);
+        if !self.ensure_free(extra, Some(child)) {
+            return None;
+        }
+        let mut node = self.nodes[child].take().expect("dangling prefix-cache node id");
+        for b in node.blocks.drain(..) {
+            self.alloc.release(b);
+        }
+        let right_tokens = node.tokens.split_off(cp);
+        let left_tokens = std::mem::take(&mut node.tokens);
+        let left_kv: Vec<Arc<SegmentKv>> = node
+            .kv
+            .iter()
+            .map(|seg| {
+                Arc::new(SegmentKv { k: seg.k.slice_rows(0, cp), v: seg.v.slice_rows(0, cp) })
+            })
+            .collect();
+        let right_kv: Vec<Arc<SegmentKv>> = node
+            .kv
+            .iter()
+            .map(|seg| {
+                Arc::new(SegmentKv {
+                    k: seg.k.slice_rows(cp, clen),
+                    v: seg.v.slice_rows(cp, clen),
+                })
+            })
+            .collect();
+        // Entry i needs token i+1, so the left half keeps cp entries — one
+        // fewer when it includes position 0 (entry −1 doesn't exist).
+        let left_count = if abs_start == 0 { cp - 1 } else { cp };
+        let right_nll = node.nll.split_off(left_count.min(node.nll.len()));
+        let left_nll = std::mem::take(&mut node.nll);
+        let left = Node {
+            parent: node.parent,
+            tokens: left_tokens,
+            kv: left_kv,
+            donor: node.donor, // both halves keep the original rows' donor
+            nll: left_nll,
+            art: None, // no prefill ever ended at the split point
+            children: HashMap::new(),
+            pins: 0,
+            last_used: node.last_used,
+            blocks: (0..pages_for(cp))
+                .map(|_| self.alloc.alloc().expect("ensure_free lied"))
+                .collect(),
+        };
+        node.kv = right_kv;
+        node.nll = right_nll;
+        node.blocks = (0..pages_for(clen - cp))
+            .map(|_| self.alloc.alloc().expect("ensure_free lied"))
+            .collect();
+        node.tokens = right_tokens;
+        let left_first = left.tokens[0];
+        let right_first = node.tokens[0];
+        let left_id = self.alloc_node(left);
+        node.parent = left_id;
+        self.nodes[child] = Some(node);
+        self.node_mut(left_id).children.insert(right_first, child);
+        self.node_mut(parent).children.insert(left_first, left_id);
+        Some(left_id)
+    }
+
+    /// Evict unpinned LRU leaf subtrees until `need` pages are free (or
+    /// report failure). `exclude` is never evicted (the node the caller is
+    /// mid-operation on).
+    fn ensure_free(&mut self, need: usize, exclude: Option<usize>) -> bool {
+        if need > self.alloc.capacity() {
+            return false;
+        }
+        while self.alloc.free_blocks() < need {
+            let mut victim: Option<(usize, u64)> = None;
+            for id in 1..self.nodes.len() {
+                if Some(id) == exclude {
+                    continue;
+                }
+                let Some(n) = self.nodes[id].as_ref() else { continue };
+                if !n.children.is_empty() || n.pins > 0 {
+                    continue;
+                }
+                if victim.map_or(true, |(_, lu)| n.last_used < lu) {
+                    victim = Some((id, n.last_used));
+                }
+            }
+            let Some((vid, _)) = victim else { return false };
+            self.evict(vid);
+        }
+        true
+    }
+
+    fn evict(&mut self, id: usize) {
+        let node = self.nodes[id].take().expect("evicting a dangling node");
+        for b in node.blocks {
+            self.alloc.release(b);
+        }
+        let first = node.tokens.first().copied();
+        if let Some(Some(parent)) = self.nodes.get_mut(node.parent) {
+            if let Some(f) = first {
+                parent.children.remove(&f);
+            }
+        }
+        self.free_ids.push(id);
+        self.evictions += 1;
+    }
+
+    /// Every cached prefix with artifacts, root-down (ancestors before
+    /// descendants) — the persist writer's input. With `uniform_only`,
+    /// prefixes whose chain mixes segments from several donor inserts are
+    /// skipped: for full-only kernels those chains are not servable (see
+    /// `lookup`'s provenance check), and re-inserting them on reload under
+    /// a single donor would launder the mix into a "valid" entry.
+    pub(crate) fn export_prefixes(&self, uniform_only: bool) -> Vec<(Vec<u32>, PrefixSnapshot)> {
+        let mut out = Vec::new();
+        // DFS preorder from the root.
+        let mut stack: Vec<usize> = self.node(0).children.values().copied().collect();
+        stack.sort_unstable();
+        let mut order = Vec::new();
+        while let Some(id) = stack.pop() {
+            order.push(id);
+            let mut kids: Vec<usize> = self.node(id).children.values().copied().collect();
+            kids.sort_unstable();
+            stack.extend(kids);
+        }
+        // `order` is preorder-ish; sufficient because insert() handles any
+        // ancestor/descendant arrival order — but keep ancestors first so a
+        // reload reproduces the same tree shape.
+        order.sort_by_key(|&id| self.chain(id).len());
+        for id in order {
+            let Some(art) = self.node(id).art.as_ref() else { continue };
+            let chain = self.chain(id);
+            if uniform_only && chain.iter().any(|&nid| self.node(nid).donor != art.donor) {
+                continue;
+            }
+            let mut tokens = Vec::new();
+            for &nid in &chain {
+                tokens.extend_from_slice(&self.node(nid).tokens);
+            }
+            let (segments, nll) = self.chain_segments(&chain);
+            out.push((
+                tokens,
+                PrefixSnapshot {
+                    kv_from: 0,
+                    kv: materialize_segments(&segments),
+                    states: art.states.as_ref().clone(),
+                    nll,
+                    last_logits: art.last_logits.clone(),
+                },
+            ));
+        }
+        out
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        let mut nodes = 0usize;
+        let mut cached_tokens = 0usize;
+        for id in 1..self.nodes.len() {
+            if let Some(n) = self.nodes[id].as_ref() {
+                nodes += 1;
+                cached_tokens += n.tokens.len();
+            }
+        }
+        CacheStats {
+            hits: self.hits,
+            misses: self.misses,
+            insertions: self.insertions,
+            evictions: self.evictions,
+            hit_tokens: self.hit_tokens,
+            nodes,
+            cached_tokens,
+            pages_in_use: self.alloc.capacity() - self.alloc.free_blocks(),
+            pages_capacity: self.alloc.capacity(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::AttentionSpec;
+    use crate::util::rng::Rng;
+
+    /// A snapshot whose KV rows encode (slot, position) so assembly bugs
+    /// show up as value mismatches.
+    fn snapshot(tokens: &[u32], slots: usize, d: usize) -> PrefixSnapshot {
+        let n = tokens.len();
+        let mut kv = Vec::new();
+        let mut states = Vec::new();
+        let backend = AttentionSpec::parse("exact").unwrap().build();
+        let mut rng = Rng::new(7);
+        for s in 0..slots {
+            let mut k = Matrix::zeros(n, d);
+            let mut v = Matrix::zeros(n, d);
+            for i in 0..n {
+                for c in 0..d {
+                    k[(i, c)] = (s * 1000 + i) as f32 + c as f32 * 0.001;
+                    v[(i, c)] = -(k[(i, c)]);
+                }
+            }
+            states.push(backend.begin_decode(&k, &k, s as u64).unwrap());
+            kv.push((k, v));
+        }
+        let nll: Vec<f32> = (0..n - 1).map(|i| i as f32 * 0.5).collect();
+        let last_logits: Vec<f32> = (0..d).map(|_| rng.gauss32(0.0, 1.0)).collect();
+        PrefixSnapshot { kv_from: 0, kv, states, nll, last_logits }
+    }
+
+    fn toks(seed: u64, n: usize) -> Vec<u32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.usize(50) as u32).collect()
+    }
+
+    fn cache(blocks: usize, min_tokens: usize) -> PrefixCache {
+        PrefixCache::new(PrefixCacheConfig { blocks, min_tokens, persist_path: None })
+    }
+
+    #[test]
+    fn miss_then_hit_roundtrip() {
+        let mut c = cache(64, 4);
+        let t = toks(1, 24);
+        assert!(c.lookup(&t, false).is_none());
+        let snap = snapshot(&t, 2, 4);
+        assert!(c.insert(&t, snap.clone(), false));
+        let hit = c.lookup(&t, false).expect("hit after insert");
+        assert_eq!(hit.len, 24);
+        assert_eq!(hit.nll, snap.nll);
+        assert_eq!(hit.last_logits, snap.last_logits);
+        let hkv = hit.assemble_kv();
+        for s in 0..2 {
+            assert_eq!(hkv[s].0.data, snap.kv[s].0.data, "slot {s} K");
+            assert_eq!(hkv[s].1.data, snap.kv[s].1.data, "slot {s} V");
+        }
+        let st = c.stats();
+        assert_eq!((st.hits, st.misses, st.insertions), (1, 1, 1));
+        c.release(hit.node);
+    }
+
+    #[test]
+    fn shared_prefix_splits_and_both_boundaries_hit() {
+        let mut c = cache(128, 4);
+        let mut a = toks(2, 32);
+        let mut b = a[..20].to_vec();
+        a.push(1);
+        b.extend_from_slice(&[7, 7, 7, 7]);
+        let snap_a = snapshot(&a, 2, 4);
+        let snap_b = snapshot(&b, 2, 4);
+        assert!(c.insert(&a, snap_a.clone(), false));
+        assert!(c.insert(&b, snap_b.clone(), false)); // splits a's edge at 20
+        let ha = c.lookup(&a, false).expect("a still cached");
+        assert_eq!(ha.len, a.len());
+        assert_eq!(ha.nll, snap_a.nll);
+        let akv = ha.assemble_kv();
+        for s in 0..2 {
+            assert_eq!(akv[s].0.data, snap_a.kv[s].0.data, "slot {s} after split");
+        }
+        let hb = c.lookup(&b, false).expect("b cached");
+        assert_eq!(hb.len, b.len());
+        assert_eq!(hb.nll, snap_b.nll);
+        c.release(ha.node);
+        c.release(hb.node);
+    }
+
+    #[test]
+    fn partial_hit_uses_deepest_boundary() {
+        let mut c = cache(128, 4);
+        let a = toks(3, 16);
+        assert!(c.insert(&a, snapshot(&a, 1, 4), false));
+        // A longer request sharing the whole of `a` as prefix hits at 16.
+        let mut longer = a.clone();
+        longer.extend_from_slice(&[9, 9, 9]);
+        let hit = c.lookup(&longer, false).expect("prefix boundary hit");
+        assert_eq!(hit.len, 16);
+        c.release(hit.node);
+        // A shorter request (no boundary at its length) misses.
+        assert!(c.lookup(&a[..10], false).is_none());
+    }
+
+    #[test]
+    fn shorter_prefix_insert_splits_existing_edge() {
+        let mut c = cache(128, 4);
+        let a = toks(4, 30);
+        assert!(c.insert(&a, snapshot(&a, 1, 4), false));
+        let b = a[..12].to_vec();
+        let snap_b = snapshot(&b, 1, 4);
+        assert!(c.insert(&b, snap_b.clone(), false));
+        let hb = c.lookup(&b, false).expect("boundary created by split");
+        assert_eq!(hb.len, 12);
+        assert_eq!(hb.nll, snap_b.nll);
+        c.release(hb.node);
+        let ha = c.lookup(&a, false).expect("long prefix survives the split");
+        assert_eq!(ha.len, 30);
+        c.release(ha.node);
+    }
+
+    #[test]
+    fn full_only_refuses_mixed_donor_chains() {
+        // Non-suffix-stable kernels may only be served chains produced by
+        // ONE donor prefill: request A caches T[..20]; request B = T[..32]
+        // extends it with a leaf computed by a DIFFERENT forward (32-token
+        // context). A full-length lookup of B must refuse the mixed chain
+        // (A's rows came from a 20-token forward), while A's own uniform
+        // chain still hits, and suffix-stable (partial-mode) lookups are
+        // unaffected.
+        let mut c = cache(128, 4);
+        let b = toks(40, 32);
+        let a = b[..20].to_vec();
+        assert!(c.insert(&a, snapshot(&a, 1, 4), false));
+        assert!(c.insert(&b, snapshot(&b, 1, 4), false));
+        assert!(c.lookup(&a, true).is_some(), "uniform chain serves full-only");
+        assert!(c.lookup(&b, true).is_none(), "mixed-donor chain refused");
+        assert!(c.lookup(&b, false).is_some(), "suffix-stable mode may compose");
+        // Mixed chains must not be persisted for full-only policies either
+        // (a reload would launder them into single-donor entries).
+        assert_eq!(c.export_prefixes(true).len(), 1);
+        assert_eq!(c.export_prefixes(false).len(), 2);
+        // With unique_chain (how full-only engines insert), the extension
+        // is skipped outright instead of stored unservably.
+        let mut c2 = cache(128, 4);
+        assert!(c2.insert(&a, snapshot(&a, 1, 4), true));
+        assert!(!c2.insert(&b, snapshot(&b, 1, 4), true), "mixed chain skipped");
+        assert!(c2.lookup(&a, true).is_some());
+    }
+
+    #[test]
+    fn eviction_frees_pages_and_respects_pins() {
+        // 4 pages of 16 tokens: two 32-token prefixes fill the pool.
+        let mut c = cache(4, 4);
+        let a = toks(5, 32);
+        let b = toks(6, 32);
+        let d = toks(7, 32);
+        assert!(c.insert(&a, snapshot(&a, 1, 2), false));
+        let pin = c.lookup(&a, false).unwrap();
+        assert!(c.insert(&b, snapshot(&b, 1, 2), false));
+        // Pool is full; inserting `d` must evict `b` (LRU, unpinned), not
+        // the pinned `a`.
+        assert!(c.insert(&d, snapshot(&d, 1, 2), false));
+        assert!(c.lookup(&b, false).is_none(), "unpinned LRU prefix evicted");
+        let still = c.lookup(&a, false).expect("pinned prefix survives pressure");
+        assert_eq!(still.len, 32);
+        assert_eq!(still.assemble_kv()[0].0.rows, 32);
+        c.release(still.node);
+        c.release(pin.node);
+        assert!(c.stats().evictions >= 1);
+    }
+
+    #[test]
+    fn insert_fails_cleanly_when_everything_pinned() {
+        let mut c = cache(2, 4);
+        let a = toks(8, 32);
+        assert!(c.insert(&a, snapshot(&a, 1, 2), false));
+        let pin = c.lookup(&a, false).unwrap();
+        let b = toks(9, 32);
+        assert!(!c.insert(&b, snapshot(&b, 1, 2), false), "no evictable pages");
+        c.release(pin.node);
+        assert!(c.insert(&b, snapshot(&b, 1, 2), false), "evictable after release");
+    }
+
+    #[test]
+    fn disabled_and_min_tokens_gates() {
+        let mut off = cache(0, 4);
+        let t = toks(10, 24);
+        assert!(!off.insert(&t, snapshot(&t, 1, 2), false));
+        assert!(off.lookup(&t, false).is_none());
+        let mut c = cache(16, 8);
+        assert!(!c.insert(&t[..4], snapshot(&t[..4], 1, 2), false), "below min_tokens");
+        assert!(c.wants_insert(&t[..16], 0, false));
+        assert!(!c.wants_insert(&t[..16], 16, false), "fully cached needs no snapshot");
+        assert!(!c.wants_insert(&t[..4], 0, false), "below min_tokens");
+        assert!(!c.wants_insert(&t[..20], 16, false), "4-token extension below min_tokens");
+        assert!(c.wants_insert(&t, 16, false), "8-token extension reaches min_tokens");
+        // unique_chain mode: a family already owned by another donor is
+        // refused before the engine pays the snapshot clone.
+        assert!(c.insert(&t[..16], snapshot(&t[..16], 1, 2), true));
+        assert!(!c.wants_insert(&t, 0, true), "family owned by another donor");
+        let mut other = t.clone();
+        other[0] = other[0].wrapping_add(1) % 50;
+        assert!(c.wants_insert(&other, 0, true), "fresh family accepted");
+    }
+}

@@ -1,0 +1,384 @@
+//! Versioned binary serialization for the shared-prefix artifact store —
+//! pre-score selections, LSH key codes, query-rank multisets, KV rows, and
+//! prefix NLLs survive server restarts.
+//!
+//! Little-endian layout (all integers u32 unless noted):
+//!
+//! ```text
+//! magic = 0x43584650 ("PFXC"), version = 1
+//! policy_len, policy utf-8        (canonical AttnPolicy string — reload
+//!                                  refuses a store built under another
+//!                                  policy: artifacts are policy-specific)
+//! n_heads, slots, d_head, logits_w (model geometry cross-check: heads per
+//!                                  layer, layer·head slot count, per-head
+//!                                  key dim, logits/vocab width — a store
+//!                                  from a model with different depth/width
+//!                                  must refuse to load, not panic a warm
+//!                                  prefill later)
+//! count                           (number of cached prefixes)
+//! per prefix:
+//!   tokens_len, u32×tokens_len
+//!   nll_len, f32×nll_len
+//!   logits_len, f32×logits_len
+//!   per slot (slots×):
+//!     k_rows, k_cols, f32×(k_rows·k_cols)
+//!     v_rows, v_cols, f32×(v_rows·v_cols)
+//!     codes_len, u32×codes_len          (LSH key codes)
+//!     ranks_len, u32×ranks_len          (query-code gray-rank multiset)
+//!     sel_len, u32×sel_len              (cached key selection)
+//!     fallback u8
+//! ```
+//!
+//! Configs/seeds are NOT serialized: the loader rebuilds each
+//! [`crate::attention::DecodeState`] through the policy's backends
+//! ([`crate::attention::AttentionBackend::restore_decode`] with the same
+//! per-slot salt the forward used), so the file carries only the data half
+//! of the artifacts and cannot drift from the serving configuration.
+
+use super::{PrefixCache, PrefixSnapshot};
+use crate::attention::{AttnPolicy, DecodeArtifacts, DecodeState};
+use crate::linalg::Matrix;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+pub const MAGIC: u32 = 0x4358_4650; // "PFXC" little-endian
+pub const VERSION: u32 = 1;
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32s(buf: &mut Vec<u8>, vs: &[u32]) {
+    put_u32(buf, vs.len() as u32);
+    for &v in vs {
+        put_u32(buf, v);
+    }
+}
+
+fn put_f32s(buf: &mut Vec<u8>, vs: &[f32]) {
+    put_u32(buf, vs.len() as u32);
+    for &v in vs {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+fn put_matrix(buf: &mut Vec<u8>, m: &Matrix) {
+    put_u32(buf, m.rows as u32);
+    put_u32(buf, m.cols as u32);
+    for &v in &m.data {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn u32(&mut self) -> Result<u32> {
+        if self.off + 4 > self.buf.len() {
+            bail!("truncated prefix-cache file at offset {}", self.off);
+        }
+        let v = u32::from_le_bytes(self.buf[self.off..self.off + 4].try_into().unwrap());
+        self.off += 4;
+        Ok(v)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        if self.off >= self.buf.len() {
+            bail!("truncated prefix-cache file at offset {}", self.off);
+        }
+        let v = self.buf[self.off];
+        self.off += 1;
+        Ok(v)
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.u32()?.to_le_bytes()))
+    }
+
+    fn u32s(&mut self) -> Result<Vec<u32>> {
+        let n = self.u32()? as usize;
+        self.check_remaining(n, 4)?;
+        (0..n).map(|_| self.u32()).collect()
+    }
+
+    fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.u32()? as usize;
+        self.check_remaining(n, 4)?;
+        (0..n).map(|_| self.f32()).collect()
+    }
+
+    fn matrix(&mut self) -> Result<Matrix> {
+        let rows = self.u32()? as usize;
+        let cols = self.u32()? as usize;
+        self.check_remaining(rows.saturating_mul(cols), 4)?;
+        let mut data = Vec::with_capacity(rows * cols);
+        for _ in 0..rows * cols {
+            data.push(self.f32()?);
+        }
+        Ok(Matrix::from_vec(rows, cols, data))
+    }
+
+    fn string(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        if self.off + n > self.buf.len() {
+            bail!("truncated prefix-cache string at offset {}", self.off);
+        }
+        let s = std::str::from_utf8(&self.buf[self.off..self.off + n])
+            .context("prefix-cache string not utf-8")?
+            .to_string();
+        self.off += n;
+        Ok(s)
+    }
+
+    /// Guard huge length prefixes from a corrupt file before allocating.
+    fn check_remaining(&self, items: usize, item_size: usize) -> Result<()> {
+        if items.saturating_mul(item_size) > self.buf.len() - self.off {
+            bail!("prefix-cache length prefix exceeds file size at offset {}", self.off);
+        }
+        Ok(())
+    }
+}
+
+/// Serialize every cached prefix (with artifacts) of `cache` to `path`.
+/// `uniform_only` must be true for non-suffix-stable serving policies: it
+/// skips prefixes assembled from several donor prefills, which `lookup`
+/// refuses to serve for those kernels and which a reload must not launder
+/// into single-donor entries.
+pub fn save(
+    cache: &PrefixCache,
+    policy: &AttnPolicy,
+    n_heads: usize,
+    uniform_only: bool,
+    path: &Path,
+) -> Result<()> {
+    let prefixes = cache.export_prefixes(uniform_only);
+    let mut buf = Vec::new();
+    put_u32(&mut buf, MAGIC);
+    put_u32(&mut buf, VERSION);
+    let pol = policy.to_string();
+    put_u32(&mut buf, pol.len() as u32);
+    buf.extend_from_slice(pol.as_bytes());
+    put_u32(&mut buf, n_heads as u32);
+    let slots = prefixes.first().map(|(_, s)| s.states.len()).unwrap_or(0);
+    let d_head = prefixes.first().map(|(_, s)| s.kv[0].0.cols).unwrap_or(0);
+    let logits_w = prefixes.first().map(|(_, s)| s.last_logits.len()).unwrap_or(0);
+    put_u32(&mut buf, slots as u32);
+    put_u32(&mut buf, d_head as u32);
+    put_u32(&mut buf, logits_w as u32);
+    put_u32(&mut buf, prefixes.len() as u32);
+    for (tokens, snap) in &prefixes {
+        put_u32s(&mut buf, tokens);
+        put_f32s(&mut buf, &snap.nll);
+        put_f32s(&mut buf, &snap.last_logits);
+        for (slot, (k, v)) in snap.kv.iter().enumerate() {
+            put_matrix(&mut buf, k);
+            put_matrix(&mut buf, v);
+            let art: DecodeArtifacts = snap.states[slot].export_artifacts();
+            put_u32s(&mut buf, &art.k_codes);
+            put_u32s(&mut buf, &art.q_ranks);
+            let sel: Vec<u32> = art.selection.iter().map(|&s| s as u32).collect();
+            put_u32s(&mut buf, &sel);
+            buf.push(art.fallback as u8);
+        }
+    }
+    std::fs::write(path, &buf)
+        .with_context(|| format!("writing prefix cache {}", path.display()))?;
+    Ok(())
+}
+
+/// Load a persisted artifact store into `cache`, rebuilding decode states
+/// through `policy`'s backends. `slots`/`d_head`/`vocab` are the serving
+/// model's layer·head count, per-head key dim, and logits width — a store
+/// written under a model of different depth or width refuses to load here
+/// rather than panicking a warm prefill later. Returns the number of
+/// prefixes restored (insertions still respect the cache's page budget).
+/// Fails on any magic/version/policy/geometry mismatch — the caller should
+/// warn and continue with an empty cache.
+#[allow(clippy::too_many_arguments)]
+pub fn load(
+    cache: &mut PrefixCache,
+    policy: &AttnPolicy,
+    n_heads: usize,
+    slots: usize,
+    d_head: usize,
+    vocab: usize,
+    path: &Path,
+) -> Result<usize> {
+    let buf = std::fs::read(path)
+        .with_context(|| format!("reading prefix cache {}", path.display()))?;
+    let mut r = Reader { buf: &buf, off: 0 };
+    let magic = r.u32()?;
+    if magic != MAGIC {
+        bail!("bad prefix-cache magic {magic:#x}");
+    }
+    let version = r.u32()?;
+    if version != VERSION {
+        bail!("unsupported prefix-cache version {version}");
+    }
+    let pol = r.string()?;
+    let want = policy.to_string();
+    if pol != want {
+        bail!("prefix cache was built for policy '{pol}', server runs '{want}'");
+    }
+    let file_heads = r.u32()? as usize;
+    if file_heads != n_heads {
+        bail!("prefix cache has {file_heads} heads per layer, model has {n_heads}");
+    }
+    let file_slots = r.u32()? as usize;
+    let file_d_head = r.u32()? as usize;
+    let file_logits = r.u32()? as usize;
+    let count = r.u32()? as usize;
+    if count > 0 {
+        if file_slots != slots {
+            bail!("prefix cache has {file_slots} layer·head slots, model has {slots}");
+        }
+        if file_d_head != d_head {
+            bail!("prefix cache has d_head {file_d_head}, model has {d_head}");
+        }
+        if file_logits != vocab {
+            bail!("prefix cache has logits width {file_logits}, model vocab is {vocab}");
+        }
+    }
+    let slots = file_slots;
+    // Non-suffix-stable policies only serve single-donor chains; reload
+    // their prefixes with the same exclusivity the engine inserts with.
+    let unique_chain = !policy.specs().iter().all(|sp| sp.suffix_stable());
+    let mut restored = 0usize;
+    for _ in 0..count {
+        let tokens = r.u32s()?;
+        let nll = r.f32s()?;
+        let last_logits = r.f32s()?;
+        if last_logits.len() != file_logits {
+            bail!("prefix-cache logits row width {} != header {file_logits}", last_logits.len());
+        }
+        let mut kv: Vec<(Matrix, Matrix)> = Vec::with_capacity(slots);
+        let mut states: Vec<DecodeState> = Vec::with_capacity(slots);
+        for slot in 0..slots {
+            let k = r.matrix()?;
+            let v = r.matrix()?;
+            if k.cols != file_d_head {
+                bail!("prefix-cache KV dim {} != header d_head {file_d_head}", k.cols);
+            }
+            let k_codes = r.u32s()?;
+            let q_ranks = r.u32s()?;
+            let selection: Vec<usize> = r.u32s()?.into_iter().map(|s| s as usize).collect();
+            let fallback = r.u8()? != 0;
+            let art = DecodeArtifacts { k_codes, q_ranks, selection, fallback };
+            let layer = slot / n_heads;
+            let dim = k.cols;
+            let state = policy
+                .backend(layer)
+                .restore_decode(slot as u64, dim, &art)
+                .with_context(|| {
+                    format!("backend for layer {layer} cannot restore a decode state")
+                })?;
+            kv.push((k, v));
+            states.push(state);
+        }
+        let snap = PrefixSnapshot { kv_from: 0, kv, states, nll, last_logits };
+        if cache.insert(&tokens, snap, unique_chain) {
+            restored += 1;
+        }
+    }
+    Ok(restored)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::PrefixCacheConfig;
+    use crate::util::rng::Rng;
+
+    fn sample_cache(spec: &str) -> (PrefixCache, AttnPolicy, Vec<u32>) {
+        let policy = AttnPolicy::parse(spec).unwrap();
+        let mut cache = PrefixCache::new(PrefixCacheConfig {
+            blocks: 64,
+            min_tokens: 4,
+            persist_path: None,
+        });
+        let mut rng = Rng::new(11);
+        let n = 24;
+        let d = 8;
+        let tokens: Vec<u32> = (0..n).map(|_| rng.usize(40) as u32).collect();
+        let q = Matrix::randn(n, d, 1.0, &mut rng);
+        let k = Matrix::randn(n, d, 1.0, &mut rng);
+        let v = Matrix::randn(n, d, 1.0, &mut rng);
+        let slots = 2; // pretend 1 layer × 2 heads
+        let mut kv = Vec::new();
+        let mut states = Vec::new();
+        for s in 0..slots {
+            states.push(policy.backend(0).begin_decode(&q, &k, s as u64).unwrap());
+            kv.push((k.clone(), v.clone()));
+        }
+        let nll: Vec<f32> = (0..n - 1).map(|i| i as f32).collect();
+        let snap = PrefixSnapshot { kv_from: 0, kv, states, nll, last_logits: vec![0.5; 16] };
+        assert!(cache.insert(&tokens, snap, false));
+        (cache, policy, tokens)
+    }
+
+    #[test]
+    fn roundtrip_restores_artifacts_losslessly() {
+        for spec in
+            ["exact", "hyper:block=8,sample=4,seed=3", "prescored:kmeans,top_k=8,block=8"]
+        {
+            let (cache, policy, tokens) = sample_cache(spec);
+            let dir = std::env::temp_dir()
+                .join(format!("pfxc_test_{}_{}", std::process::id(), spec.len()));
+            let _ = std::fs::remove_file(&dir);
+            save(&cache, &policy, 2, true, &dir).unwrap();
+            let mut fresh = PrefixCache::new(PrefixCacheConfig {
+                blocks: 64,
+                min_tokens: 4,
+                persist_path: None,
+            });
+            let restored = load(&mut fresh, &policy, 2, 2, 8, 16, &dir).unwrap();
+            assert_eq!(restored, 1, "{spec}");
+            let hit = fresh.lookup(&tokens, false).expect("restored prefix hits");
+            let mut orig = cache;
+            let ohit = orig.lookup(&tokens, false).unwrap();
+            assert_eq!(hit.len, ohit.len, "{spec}");
+            assert_eq!(hit.nll, ohit.nll, "{spec}");
+            assert_eq!(hit.last_logits, ohit.last_logits, "{spec}");
+            let hkv = hit.assemble_kv();
+            let okv = ohit.assemble_kv();
+            for s in 0..2 {
+                assert_eq!(hkv[s].0.data, okv[s].0.data, "{spec} slot {s} K");
+                assert_eq!(hkv[s].1.data, okv[s].1.data, "{spec} slot {s} V");
+                // Artifact data (codes, ranks, selections) round-trips
+                // exactly — the states rebuild from it.
+                assert_eq!(
+                    hit.states[s].export_artifacts(),
+                    ohit.states[s].export_artifacts(),
+                    "{spec} slot {s} artifacts"
+                );
+            }
+            let _ = std::fs::remove_file(&dir);
+        }
+    }
+
+    #[test]
+    fn load_rejects_mismatches() {
+        let (cache, policy, _) = sample_cache("exact");
+        let path = std::env::temp_dir().join(format!("pfxc_mismatch_{}", std::process::id()));
+        save(&cache, &policy, 2, true, &path).unwrap();
+        let mut fresh = PrefixCache::new(PrefixCacheConfig::default());
+        // Wrong policy.
+        let other = AttnPolicy::parse("flash").unwrap();
+        assert!(load(&mut fresh, &other, 2, 2, 8, 16, &path).is_err());
+        // Wrong head count.
+        assert!(load(&mut fresh, &policy, 4, 2, 8, 16, &path).is_err());
+        // Wrong model geometry: slot count, key dim, logits width.
+        assert!(load(&mut fresh, &policy, 2, 4, 8, 16, &path).is_err());
+        assert!(load(&mut fresh, &policy, 2, 2, 4, 16, &path).is_err());
+        assert!(load(&mut fresh, &policy, 2, 2, 8, 32, &path).is_err());
+        // Corrupt magic.
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[0] ^= 0xff;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(load(&mut fresh, &policy, 2, 2, 8, 16, &path).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+}

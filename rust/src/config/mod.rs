@@ -116,6 +116,15 @@ pub struct ServingConfig {
     pub prescore_refresh_every: usize,
     /// Fallback threshold δ of Algorithm 2.
     pub fallback_delta: f64,
+    /// Shared-prefix cache page budget (`[cache] prefix_cache_blocks`,
+    /// pages of [`crate::coordinator::kv_cache::BLOCK_SIZE`] tokens; 0
+    /// disables the cache).
+    pub prefix_cache_blocks: usize,
+    /// Shortest prefix worth caching (`[cache] prefix_min_tokens`).
+    pub prefix_min_tokens: usize,
+    /// Persist the prefix-cache artifact store here across restarts
+    /// (`[cache] persist_path`; empty = don't persist).
+    pub prefix_persist_path: String,
     /// Declarative attention spec (`[attention] spec = "..."`, e.g.
     /// `"prescored:kmeans,top_k=64,delta=0.05"`), stored in canonical form.
     /// Empty = derive from the legacy `variant` + `[prescore]` keys; see
@@ -138,6 +147,9 @@ impl Default for ServingConfig {
             executor_workers: 0,
             kv_blocks: 512,
             decode_max_new: 64,
+            prefix_cache_blocks: 256,
+            prefix_min_tokens: 16,
+            prefix_persist_path: String::new(),
             prescore_method: "kmeans".into(),
             prescore_top_k: 64,
             prescore_refresh_every: 16,
@@ -160,6 +172,12 @@ impl ServingConfig {
             executor_workers: cfg.usize_or("serving", "executor_workers", d.executor_workers)?,
             kv_blocks: cfg.usize_or("serving", "kv_blocks", d.kv_blocks)?,
             decode_max_new: cfg.usize_or("serving", "decode_max_new", d.decode_max_new)?,
+            prefix_cache_blocks: cfg
+                .usize_or("cache", "prefix_cache_blocks", d.prefix_cache_blocks)?,
+            prefix_min_tokens: cfg.usize_or("cache", "prefix_min_tokens", d.prefix_min_tokens)?,
+            prefix_persist_path: cfg
+                .get_or("cache", "persist_path", &d.prefix_persist_path)
+                .to_string(),
             prescore_method: cfg.get_or("prescore", "method", &d.prescore_method).to_string(),
             prescore_top_k: cfg.usize_or("prescore", "top_k", d.prescore_top_k)?,
             prescore_refresh_every: cfg
@@ -279,6 +297,22 @@ fallback_delta = 0.05
             ..Default::default()
         };
         assert!(bad.attention_spec().is_err());
+    }
+
+    #[test]
+    fn cache_block_parsed() {
+        let cfg = Config::parse(
+            "[cache]\nprefix_cache_blocks = 64\nprefix_min_tokens = 8\npersist_path = \"/tmp/pfx.bin\"\n",
+        )
+        .unwrap();
+        let sc = ServingConfig::from_config(&cfg).unwrap();
+        assert_eq!(sc.prefix_cache_blocks, 64);
+        assert_eq!(sc.prefix_min_tokens, 8);
+        assert_eq!(sc.prefix_persist_path, "/tmp/pfx.bin");
+        let d = ServingConfig::default();
+        assert_eq!(d.prefix_cache_blocks, 256);
+        assert_eq!(d.prefix_min_tokens, 16);
+        assert!(d.prefix_persist_path.is_empty());
     }
 
     #[test]

@@ -17,6 +17,14 @@ use std::collections::HashMap;
 
 pub const BLOCK_SIZE: usize = 16;
 
+/// Pages a run of `tokens` tokens occupies — the single rounding rule shared
+/// by the KV manager's admission, the server's capacity pre-check, and the
+/// prefix cache's page accounting (divergence between them would let a
+/// pre-check pass while the allocation fails, or skew eviction budgets).
+pub fn pages_for(tokens: usize) -> usize {
+    tokens.div_ceil(BLOCK_SIZE).max(1)
+}
+
 /// A page of KV storage (identified by index into the pool).
 pub type BlockId = usize;
 
@@ -94,7 +102,7 @@ impl KvCacheManager {
     /// leaving no partial allocation behind.
     pub fn admit(&mut self, seq_id: u64, tokens: usize) -> Option<()> {
         assert!(!self.seqs.contains_key(&seq_id), "sequence {seq_id} already admitted");
-        let need = tokens.div_ceil(BLOCK_SIZE).max(1);
+        let need = pages_for(tokens);
         if self.alloc.free_blocks() < need {
             return None;
         }

@@ -19,6 +19,7 @@
 //! mapping every table and figure of the paper to a bench target.
 
 pub mod attention;
+pub mod cache;
 pub mod clustering;
 pub mod config;
 pub mod coordinator;

@@ -4,24 +4,74 @@
 //! orthonormal columns, the leverage score of row i is ||Q_i||². This is the
 //! reference implementation against which the sketched approximation in
 //! `prescore::leverage` is validated.
+//!
+//! The reflector applications (the O(n·d²) hot loop of the
+//! `leverage-exact` pre-scoring path) work on a *transposed* copy so that
+//! matrix columns are contiguous rows, and the per-column updates — which
+//! are independent given the reflector — shard across the
+//! [`crate::parallel`] pool. Each column's arithmetic is identical to the
+//! serial order, so the factorization is bit-identical for any thread count;
+//! `threads = 1` (or small panels below [`PAR_MIN_WORK`]) runs the plain
+//! serial loop.
 
 use super::matrix::Matrix;
+use crate::parallel;
+
+/// Minimum `(columns · column-length)` panel size before a reflector
+/// application forks the pool.
+const PAR_MIN_WORK: usize = parallel::DEFAULT_MIN_WORK;
+
+/// Apply the reflector `v` (acting on entries `k..n`) to the columns stored
+/// as rows `first_row..` of the transposed chunk. One row of `chunk` = one
+/// column of the original matrix; columns are independent, so sharding them
+/// is bit-identical to the serial loop.
+fn apply_reflector(v: &[f32], vnorm2: f32, k: usize, n: usize, chunk: &mut [f32]) {
+    let rows = chunk.len() / n;
+    for local in 0..rows {
+        let col = &mut chunk[local * n..(local + 1) * n];
+        let mut dotv = 0.0f32;
+        for i in k..n {
+            dotv += v[i - k] * col[i];
+        }
+        let scale = 2.0 * dotv / vnorm2;
+        for i in k..n {
+            col[i] -= scale * v[i - k];
+        }
+    }
+}
+
+/// Shard `apply_reflector` over the columns (= transposed rows) of
+/// `t[row0..rows]` when the panel is big enough; serial otherwise.
+fn apply_panel(t: &mut Matrix, row0: usize, v: &[f32], vnorm2: f32, k: usize) {
+    let n = t.cols;
+    let rows = t.rows;
+    if rows <= row0 {
+        return;
+    }
+    let panel = &mut t.data[row0 * n..rows * n];
+    if parallel::num_threads() > 1 && (rows - row0) * (n - k) >= PAR_MIN_WORK {
+        parallel::par_chunks(panel, n, |_r0, chunk| apply_reflector(v, vnorm2, k, n, chunk));
+    } else {
+        apply_reflector(v, vnorm2, k, n, panel);
+    }
+}
 
 /// Thin Householder QR: returns (Q, R) with Q: n×d (orthonormal columns),
 /// R: d×d upper-triangular, for an n×d input with n >= d.
 pub fn householder_qr(a: &Matrix) -> (Matrix, Matrix) {
     let (n, d) = (a.rows, a.cols);
     assert!(n >= d, "householder_qr requires n >= d (got {n}x{d})");
-    let mut r = a.clone(); // will be reduced in place to upper-triangular
+    // Transposed working copy: row j of `rt` is column j of R.
+    let mut rt = a.transpose(); // d × n
     // Store Householder vectors to accumulate Q afterwards.
     let mut vs: Vec<Vec<f32>> = Vec::with_capacity(d);
 
     for k in 0..d {
-        // Compute the norm of column k below the diagonal.
+        // Norm of column k below the diagonal (row k of rt from entry k).
+        let col_k = rt.row(k);
         let mut norm2 = 0.0f32;
-        for i in k..n {
-            let v = r[(i, k)];
-            norm2 += v * v;
+        for &x in &col_k[k..n] {
+            norm2 += x * x;
         }
         let norm = norm2.sqrt();
         let mut v = vec![0.0f32; n - k];
@@ -29,42 +79,33 @@ pub fn householder_qr(a: &Matrix) -> (Matrix, Matrix) {
             vs.push(v); // zero reflector (column already zero)
             continue;
         }
-        let alpha = if r[(k, k)] >= 0.0 { -norm } else { norm };
-        for i in k..n {
-            v[i - k] = r[(i, k)];
-        }
+        let alpha = if col_k[k] >= 0.0 { -norm } else { norm };
+        v.copy_from_slice(&col_k[k..n]);
         v[0] -= alpha;
         let vnorm2: f32 = v.iter().map(|x| x * x).sum();
         if vnorm2 <= f32::MIN_POSITIVE {
             vs.push(vec![0.0; n - k]);
             continue;
         }
-        // Apply reflector H = I - 2 v vᵀ / (vᵀv) to R[k.., k..].
-        for j in k..d {
-            let mut dotv = 0.0f32;
-            for i in k..n {
-                dotv += v[i - k] * r[(i, j)];
-            }
-            let scale = 2.0 * dotv / vnorm2;
-            for i in k..n {
-                r[(i, j)] -= scale * v[i - k];
-            }
-        }
+        // Apply H = I - 2 v vᵀ / (vᵀv) to columns k..d (rows k..d of rt).
+        apply_panel(&mut rt, k, &v, vnorm2, k);
         vs.push(v);
     }
 
-    // Zero out strictly-lower part of R and truncate to d×d.
+    // Zero out strictly-lower part of R and truncate to d×d
+    // (r[(i, j)] = rt[(j, i)]).
     let mut r_out = Matrix::zeros(d, d);
     for i in 0..d {
         for j in i..d {
-            r_out[(i, j)] = r[(i, j)];
+            r_out[(i, j)] = rt[(j, i)];
         }
     }
 
-    // Accumulate Q = H_0 H_1 ... H_{d-1} applied to the first d columns of I.
-    let mut q = Matrix::zeros(n, d);
+    // Accumulate Q = H_0 H_1 ... H_{d-1} applied to the first d columns of
+    // I, again transposed (row j of qt = column j of Q).
+    let mut qt = Matrix::zeros(d, n);
     for i in 0..d {
-        q[(i, i)] = 1.0;
+        qt[(i, i)] = 1.0;
     }
     for k in (0..d).rev() {
         let v = &vs[k];
@@ -72,18 +113,9 @@ pub fn householder_qr(a: &Matrix) -> (Matrix, Matrix) {
         if vnorm2 <= f32::MIN_POSITIVE {
             continue;
         }
-        for j in 0..d {
-            let mut dotv = 0.0f32;
-            for i in k..n {
-                dotv += v[i - k] * q[(i, j)];
-            }
-            let scale = 2.0 * dotv / vnorm2;
-            for i in k..n {
-                q[(i, j)] -= scale * v[i - k];
-            }
-        }
+        apply_panel(&mut qt, 0, v, vnorm2, k);
     }
-    (q, r_out)
+    (qt.transpose(), r_out)
 }
 
 /// Solve R x = b for upper-triangular R (back substitution). Rows with
@@ -161,6 +193,24 @@ mod tests {
         assert!((x[2] - 2.0).abs() < 1e-6);
         assert!((x[1] - 8.0 / 3.0).abs() < 1e-6);
         assert!((x[0] - (5.0 - 8.0 / 3.0) / 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn bit_identical_across_thread_counts() {
+        // Column updates are independent given the reflector, and each
+        // column's arithmetic order is unchanged by sharding — so the
+        // factorization must be bitwise identical at any width, including
+        // sizes above the parallel gate.
+        let mut rng = Rng::new(9);
+        for &(n, d) in &[(64usize, 12usize), (1024, 48)] {
+            let a = Matrix::randn(n, d, 1.0, &mut rng);
+            let (q1, r1) = crate::parallel::with_threads(1, || householder_qr(&a));
+            for t in [2usize, 4] {
+                let (qt, rt) = crate::parallel::with_threads(t, || householder_qr(&a));
+                assert_eq!(q1.data, qt.data, "Q differs at threads={t} ({n}x{d})");
+                assert_eq!(r1.data, rt.data, "R differs at threads={t} ({n}x{d})");
+            }
+        }
     }
 
     #[test]

@@ -210,12 +210,22 @@ impl Transformer {
                 // Per-layer/head seed salt decorrelates the stochastic
                 // kernels' RNG streams (deterministic kernels ignore it).
                 let salt = (li * nh + head) as u64;
-                let out = policy.backend(li).forward_salted(&inp, salt).out;
+                let out = if let Some(cap) = capture.as_deref_mut() {
+                    // Combined forward + decode capture: the backend builds
+                    // the decode state from the same pre-score/LSH artifacts
+                    // the forward computes, so prefill pays the selection
+                    // cost once (forward output bitwise-identical to the
+                    // plain forward_salted path).
+                    let (o, st) = policy.backend(li).forward_decode(&inp, salt);
+                    cap.states.push(st);
+                    o.out
+                } else {
+                    policy.backend(li).forward_salted(&inp, salt).out
+                };
                 for i in 0..n {
                     att_all.row_mut(i)[c0..c1].copy_from_slice(out.row(i));
                 }
                 if let Some(cap) = capture.as_deref_mut() {
-                    cap.states.push(policy.backend(li).begin_decode(&q, &k, salt));
                     cap.kv.push(HeadKv { k, v });
                 }
             }
@@ -378,6 +388,106 @@ impl Transformer {
         matmul(&xf, &self.head).data
     }
 
+    /// Resume a decode session from a shared-prefix cache hit: the session
+    /// covers the first `sess.pos()` tokens (KV caches + attention decode
+    /// states cloned out of the cache), and only the `suffix` tokens are
+    /// pushed through the layers — all at once, layer-synchronously, via
+    /// [`crate::attention::DecodeState::replay`]. Returns the logits rows
+    /// for positions `pos..pos+suffix.len()` at O(suffix) forward cost: the
+    /// cached prefix rows are never re-embedded, re-projected, re-attended,
+    /// or re-hashed.
+    ///
+    /// For *suffix-stable* policies
+    /// ([`crate::attention::AttentionSpec::suffix_stable`]: exact/flash,
+    /// whose causal prefix rows are length-invariant) the returned rows
+    /// equal the corresponding rows of a cold [`Transformer::begin_decode`]
+    /// over the full token sequence — bitwise when every matmul lands on
+    /// the same serial/tiled path in both runs (always at width 1). For
+    /// rank/selection kernels the result is the valid incremental
+    /// continuation of the cached session (decode semantics); the serving
+    /// engine therefore only resumes those from full-length hits.
+    pub fn resume_decode(
+        &self,
+        sess: &mut DecodeSession,
+        suffix: &[u32],
+        policy: &AttnPolicy,
+    ) -> Matrix {
+        let n0 = sess.pos;
+        let m = suffix.len();
+        assert!(n0 + m <= self.cfg.max_seq, "resume_decode past max_seq");
+        assert!(
+            policy.is_uniform() || policy.num_slots() == self.cfg.n_layers,
+            "per-layer policy has {} specs for {} layers",
+            policy.num_slots(),
+            self.cfg.n_layers
+        );
+        let d = self.cfg.d_model;
+        let nh = self.cfg.n_heads;
+        let dh = self.cfg.d_head();
+        assert_eq!(sess.kv.len(), self.cfg.n_layers * nh, "session/model shape mismatch");
+        if m == 0 {
+            return Matrix::zeros(0, self.cfg.vocab);
+        }
+        let mut x = Matrix::zeros(m, d);
+        for (i, &t) in suffix.iter().enumerate() {
+            let (erow, prow) = (self.embed.row(t as usize), self.pos.row(n0 + i));
+            let xrow = x.row_mut(i);
+            for c in 0..d {
+                xrow[c] = erow[c] + prow[c];
+            }
+        }
+        for (li, lw) in self.layers.iter().enumerate() {
+            // Attention block (suffix rows only; projections and layernorm
+            // are row-independent, so these m×d matmuls match the full
+            // forward's corresponding rows).
+            let h = layernorm(&x, &lw.ln1.0, &lw.ln1.1);
+            let q_all = matmul(&h, &lw.wq);
+            let k_all = matmul(&h, &lw.wk);
+            let v_all = matmul(&h, &lw.wv);
+            let mut att_all = Matrix::zeros(m, d);
+            for head in 0..nh {
+                let (c0, c1) = (head * dh, (head + 1) * dh);
+                let idx = li * nh + head;
+                let kv = &mut sess.kv[idx];
+                for r in 0..m {
+                    kv.k.push_row(&k_all.row(r)[c0..c1]);
+                    kv.v.push_row(&v_all.row(r)[c0..c1]);
+                }
+                let qh = q_all.slice_cols(c0, c1);
+                let out = sess.attn[idx].replay(&qh, &kv.k, &kv.v, None);
+                for r in 0..m {
+                    att_all.row_mut(r)[c0..c1].copy_from_slice(out.row(r));
+                }
+            }
+            let proj = matmul(&att_all, &lw.wo);
+            for (xv, pv) in x.data.iter_mut().zip(&proj.data) {
+                *xv += pv;
+            }
+            // MLP block.
+            let h2 = layernorm(&x, &lw.ln2.0, &lw.ln2.1);
+            let mut mid = matmul(&h2, &lw.w1);
+            for i in 0..m {
+                let row = mid.row_mut(i);
+                for (c, v) in row.iter_mut().enumerate() {
+                    *v = gelu_tanh(*v + lw.b1[c]);
+                }
+            }
+            let mut out = matmul(&mid, &lw.w2);
+            for i in 0..m {
+                let row = out.row_mut(i);
+                for (c, v) in row.iter_mut().enumerate() {
+                    *v += lw.b2[c];
+                }
+            }
+            for (xv, ov) in x.data.iter_mut().zip(&out.data) {
+                *xv += ov;
+            }
+        }
+        sess.pos = n0 + m;
+        let xf = layernorm(&x, &self.ln_f.0, &self.ln_f.1);
+        matmul(&xf, &self.head)
+    }
+
     /// Greedy generation through the decode path: prefill once, then stream
     /// up to `n_new` tokens (stopping early at `max_seq`).
     pub fn generate_greedy(
@@ -423,6 +533,44 @@ pub struct DecodeSession {
 }
 
 impl DecodeSession {
+    /// Rebuild a session from prefix-cache data: per layer·head `(K, V)`
+    /// caches (each with `pos` rows) and the attention decode states at
+    /// position `pos`. The caller (the serving engine) clones these out of
+    /// the shared cache — sessions branch copy-on-write, so cache eviction
+    /// can never corrupt a live session.
+    pub fn from_cache(
+        kv: Vec<(Matrix, Matrix)>,
+        states: Vec<DecodeState>,
+        pos: usize,
+    ) -> DecodeSession {
+        assert_eq!(kv.len(), states.len(), "KV/state slot mismatch");
+        DecodeSession {
+            kv: kv.into_iter().map(|(k, v)| HeadKv { k, v }).collect(),
+            attn: states,
+            pos,
+        }
+    }
+
+    /// Clone the per layer·head `(K, V)` caches (the prefix-cache snapshot).
+    pub fn export_kv(&self) -> Vec<(Matrix, Matrix)> {
+        self.kv.iter().map(|hk| (hk.k.clone(), hk.v.clone())).collect()
+    }
+
+    /// Clone only the KV rows from position `from` on — the warm-prefill
+    /// snapshot path, where the rows before `from` already live in the
+    /// prefix cache and need no re-clone.
+    pub fn export_kv_suffix(&self, from: usize) -> Vec<(Matrix, Matrix)> {
+        self.kv
+            .iter()
+            .map(|hk| (hk.k.slice_rows(from, hk.k.rows), hk.v.slice_rows(from, hk.v.rows)))
+            .collect()
+    }
+
+    /// Clone the per layer·head attention decode states.
+    pub fn clone_states(&self) -> Vec<DecodeState> {
+        self.attn.to_vec()
+    }
+
     /// Tokens in the context so far (prefill + decoded).
     pub fn pos(&self) -> usize {
         self.pos
@@ -460,14 +608,19 @@ impl DecodeSession {
 pub fn nll_from_logits(logits: &Matrix, tokens: &[u32]) -> Vec<f32> {
     let n = tokens.len();
     let mut out = Vec::with_capacity(n.saturating_sub(1));
-    let mut row = vec![0.0f32; logits.cols];
     for i in 0..n.saturating_sub(1) {
-        row.copy_from_slice(logits.row(i));
-        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-        let lse = m + row.iter().map(|v| (v - m).exp()).sum::<f32>().ln();
-        out.push(lse - logits[(i, tokens[i + 1] as usize)]);
+        out.push(nll_entry(logits.row(i), tokens[i + 1]));
     }
     out
+}
+
+/// One NLL entry: `logsumexp(row) − row[next]` — shared by
+/// [`nll_from_logits`] and the serving warm-prefill path, which stitches the
+/// cache's boundary logits row to the first un-cached token.
+pub fn nll_entry(row: &[f32], next_token: u32) -> f32 {
+    let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let lse = m + row.iter().map(|v| (v - m).exp()).sum::<f32>().ln();
+    lse - row[next_token as usize]
 }
 
 /// Index of the largest value (first one wins ties) — greedy decoding.

@@ -33,21 +33,22 @@
 //! so a laptop-sized pool doesn't compile one artifact registry per core.
 
 use crate::attention::{AttentionBackend, AttentionSpec, AttnPolicy};
+use crate::cache::{CacheStats, PrefixCache, PrefixCacheConfig, PrefixHit, PrefixSnapshot};
 use crate::config::ServingConfig;
 use crate::coordinator::{
     Batch, BatcherConfig, DynamicBatcher, KvCacheManager, PreScoreManager,
     PreScoreManagerConfig, Request, Response, Scheduler, SchedulerConfig, WorkItem,
 };
 use crate::metrics::LatencyStats;
-use crate::model::transformer::{argmax_row, nll_from_logits};
+use crate::model::transformer::{argmax_row, nll_entry, nll_from_logits};
 use crate::model::{DecodeSession, Transformer, TransformerConfig, WeightStore};
 use crate::parallel;
 use crate::runtime::ArtifactRegistry;
 use anyhow::Result;
 use std::collections::{HashMap, VecDeque};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 /// A submitted job: the request plus the channel to answer on.
@@ -82,6 +83,17 @@ pub struct ServerStats {
     /// observability the scheduler's policy is judged by.
     pub decode_step_p50_ms: f64,
     pub decode_step_p99_ms: f64,
+    /// Shared-prefix cache accounting (all zero when the cache is disabled
+    /// or the spec is not prefix-cacheable). `prefix_hit_tokens` counts
+    /// prefill tokens served from the cache — forward/pre-scoring work the
+    /// warm path never performed.
+    pub prefix_hits: usize,
+    pub prefix_misses: usize,
+    pub prefix_hit_tokens: usize,
+    pub prefix_insertions: usize,
+    pub prefix_evictions: usize,
+    pub prefix_nodes: usize,
+    pub prefix_cached_tokens: usize,
 }
 
 /// Mutable counters shared between the executor workers.
@@ -185,6 +197,43 @@ struct GenSession {
     generated: Vec<u32>,
     next_token: u32,
     decode_ms: f64,
+    /// Pinned prefix-cache node this session branched from (released on
+    /// finish so LRU eviction can reclaim cold prefixes).
+    cache_pin: Option<usize>,
+}
+
+/// Everything a prefill needs, cloned out of the engine under its lock so
+/// the (long) forward runs lock-free: the immutable model/policy handles,
+/// the request, and the prefix-cache hit if any.
+struct PrefillPrep {
+    id: u64,
+    tokens: Vec<u32>,
+    respond: Option<Sender<Response>>,
+    arrived: Instant,
+    generate: usize,
+    hit: Option<PrefixHit>,
+    model: Arc<Transformer>,
+    policy: Arc<AttnPolicy>,
+    /// Snapshot the (extended) prefix into the cache afterwards?
+    want_snapshot: bool,
+}
+
+/// Result of the lock-free prefill compute, applied back under the lock.
+struct PrefillOutcome {
+    id: u64,
+    respond: Option<Sender<Response>>,
+    arrived: Instant,
+    generate: usize,
+    result: Result<PrefillDone>,
+}
+
+struct PrefillDone {
+    sess: DecodeSession,
+    nll: Vec<f32>,
+    next_token: u32,
+    snapshot: Option<(Vec<u32>, PrefixSnapshot)>,
+    /// Pinned cache node of the warm hit this prefill branched from.
+    cache_pin: Option<usize>,
 }
 
 /// Pure-Rust decode engine: prefill once on the transformer substrate, then
@@ -193,13 +242,28 @@ struct GenSession {
 /// machine (sessions step sequentially within a round); the decode kernels
 /// themselves shard across the persistent [`crate::parallel`] pool.
 struct DecodeEngine {
-    model: Transformer,
-    policy: AttnPolicy,
+    /// Immutable model/policy behind `Arc` so prefills and substrate scoring
+    /// clone a handle out of a brief lock and run the forward lock-free —
+    /// a long scoring forward can no longer stall decode rounds.
+    model: Arc<Transformer>,
+    policy: Arc<AttnPolicy>,
     manager: PreScoreManager,
     kv: KvCacheManager,
     scheduler: Scheduler,
+    /// Shared-prefix cache (None when disabled or the spec's artifacts are
+    /// not prefix-reusable).
+    cache: Option<PrefixCache>,
+    /// Partial-prefix hits allowed? Only for suffix-stable kernels
+    /// (exact/flash); rank/selection kernels dedup at full length only —
+    /// see `AttentionSpec::suffix_stable`.
+    suffix_stable: bool,
     /// Admitted but not yet prefilled.
     pending: HashMap<u64, Job>,
+    /// Request ids whose prefill is computing outside the lock. Keeps
+    /// `active()` truthful for the shutdown drain AND guards the duplicate
+    /// check: a re-submitted id must not reach `kv.admit` (which asserts
+    /// single admission) while the first prefill is mid-flight.
+    in_flight: std::collections::HashSet<u64>,
     /// Prefilled, streaming tokens.
     sessions: HashMap<u64, GenSession>,
     max_new: usize,
@@ -228,12 +292,59 @@ impl DecodeEngine {
             manager_cfg.fallback_delta = ps.fallback_delta;
         }
         let slots = model.cfg.n_layers * model.cfg.n_heads;
+        let model = Arc::new(model);
+        let policy = Arc::new(AttnPolicy::uniform(spec.clone()));
+        let cache = if cfg.prefix_cache_blocks > 0 && spec.prefix_cacheable() {
+            let persist_path = if cfg.prefix_persist_path.is_empty() {
+                None
+            } else {
+                Some(PathBuf::from(&cfg.prefix_persist_path))
+            };
+            let mut cache = PrefixCache::new(PrefixCacheConfig {
+                blocks: cfg.prefix_cache_blocks,
+                min_tokens: cfg.prefix_min_tokens,
+                persist_path,
+            });
+            if let Some(p) = cache.config().persist_path.clone() {
+                if p.exists() {
+                    match crate::cache::persist::load(
+                        &mut cache,
+                        &policy,
+                        model.cfg.n_heads,
+                        slots,
+                        model.cfg.d_head(),
+                        model.cfg.vocab,
+                        &p,
+                    ) {
+                        Ok(n) => eprintln!(
+                            "prefix cache: restored {n} prefixes from {}",
+                            p.display()
+                        ),
+                        Err(e) => eprintln!(
+                            "prefix cache: ignoring {}: {e:#}",
+                            p.display()
+                        ),
+                    }
+                }
+            }
+            Some(cache)
+        } else {
+            if cfg.prefix_cache_blocks > 0 {
+                eprintln!(
+                    "prefix cache disabled: spec '{spec}' has no prefix-reusable artifacts"
+                );
+            }
+            None
+        };
         DecodeEngine {
             kv: KvCacheManager::new(cfg.kv_blocks, slots),
             manager: PreScoreManager::new(manager_cfg),
             scheduler: Scheduler::new(SchedulerConfig::default()),
-            policy: AttnPolicy::uniform(spec.clone()),
+            policy,
+            cache,
+            suffix_stable: spec.suffix_stable(),
             pending: HashMap::new(),
+            in_flight: std::collections::HashSet::new(),
             sessions: HashMap::new(),
             max_new: cfg.decode_max_new,
             kernel: spec.kernel_name(),
@@ -241,10 +352,10 @@ impl DecodeEngine {
         }
     }
 
-    /// Anything admitted or streaming (work may still be in flight even
-    /// when the scheduler queues are momentarily empty).
+    /// Anything admitted, mid-prefill, or streaming (work may still be in
+    /// flight even when the scheduler queues are momentarily empty).
     fn active(&self) -> bool {
-        !self.pending.is_empty() || !self.sessions.is_empty()
+        !self.pending.is_empty() || !self.in_flight.is_empty() || !self.sessions.is_empty()
     }
 
     fn admit(&mut self, job: Job) {
@@ -265,26 +376,31 @@ impl DecodeEngine {
             .collect()
     }
 
-    fn run_prefill(&mut self, id: u64, shared: &Mutex<SharedStats>) {
-        let Some(job) = self.pending.remove(&id) else { return };
-        if self.sessions.contains_key(&id) {
-            // Duplicate request id while the first is still streaming: the
-            // newer responder is dropped (same policy as the scoring path's
-            // responder map).
-            return;
+    /// Phase 1 of a prefill, under the engine lock: admission checks, KV
+    /// page reservation, and the prefix-cache walk. Returns the lock-free
+    /// compute's input (`None` = dropped, duplicate, or requeued).
+    fn prepare_prefill(&mut self, id: u64) -> Option<PrefillPrep> {
+        let job = self.pending.remove(&id)?;
+        if self.sessions.contains_key(&id) || self.in_flight.contains(&id) {
+            // Duplicate request id while the first is still streaming (or
+            // still computing its prefill outside the lock): the newer
+            // responder is dropped (same policy as the scoring path's
+            // responder map). The in-flight check matters because
+            // `kv.admit` asserts single admission.
+            return None;
         }
         let mut tokens = job.request.tokens.clone();
         tokens.truncate(self.model.cfg.max_seq);
         if tokens.is_empty() {
-            return; // responder dropped → caller observes disconnect
+            return None; // responder dropped → caller observes disconnect
         }
-        let need_pages = tokens.len().div_ceil(crate::coordinator::kv_cache::BLOCK_SIZE).max(1);
+        let need_pages = crate::coordinator::kv_cache::pages_for(tokens.len());
         if need_pages > self.kv.capacity() {
             eprintln!(
                 "request {id} needs {need_pages} kv pages but the pool holds {} — dropping",
                 self.kv.capacity()
             );
-            return;
+            return None;
         }
         if self.kv.admit(id, tokens.len()).is_none() {
             // Pool momentarily exhausted by live sequences: requeue the
@@ -292,14 +408,47 @@ impl DecodeEngine {
             // prefill-priority keeps retrying at the pump cadence.
             self.pending.insert(id, job);
             self.scheduler.submit_prefill(vec![id]);
-            return;
+            return None;
         }
+        // Walk the shared-prefix tree; a hit clones the cached KV/artifacts
+        // out (copy-on-write branch) and pins the node until finish().
+        // Non-suffix-stable kernels only dedup full-length matches.
+        let full_only = !self.suffix_stable;
+        let hit = self.cache.as_mut().and_then(|c| c.lookup(&tokens, full_only));
+        let cached = hit.as_ref().map_or(0, |h| h.len);
+        let want_snapshot = self
+            .cache
+            .as_ref()
+            .map_or(false, |c| c.wants_insert(&tokens, cached, full_only));
+        self.in_flight.insert(id);
         let Job { request, respond } = job;
-        match self.model.begin_decode(&tokens, &self.policy) {
-            Ok((logits, mut sess)) => {
+        Some(PrefillPrep {
+            id,
+            tokens,
+            respond: Some(respond),
+            arrived: request.arrived,
+            generate: request.generate,
+            hit,
+            model: Arc::clone(&self.model),
+            policy: Arc::clone(&self.policy),
+            want_snapshot,
+        })
+    }
+
+    /// Phase 3, back under the lock: install the session, mirror the
+    /// selections into the KV manager, and snapshot the prefix into the
+    /// cache.
+    fn complete_prefill(&mut self, outcome: PrefillOutcome, shared: &Mutex<SharedStats>) {
+        let PrefillOutcome { id, respond, arrived, generate, result } = outcome;
+        self.in_flight.remove(&id);
+        match result {
+            Ok(done) => {
+                let PrefillDone { mut sess, nll, next_token, snapshot, cache_pin } = done;
                 sess.set_refresh_every(self.manager.cfg.refresh_every);
-                let nll = nll_from_logits(&logits, &tokens);
-                let next_token = argmax_row(logits.row(logits.rows - 1));
+                let unique_chain = !self.suffix_stable;
+                if let (Some(cache), Some((tokens, snap))) = (self.cache.as_mut(), snapshot) {
+                    cache.insert(&tokens, snap, unique_chain);
+                }
                 self.kv.set_selections(id, Self::selections_snapshot(&sess));
                 shared.lock().expect("stats poisoned").prefills += 1;
                 self.sessions.insert(
@@ -307,12 +456,13 @@ impl DecodeEngine {
                     GenSession {
                         sess,
                         respond,
-                        arrived: request.arrived,
+                        arrived,
                         nll,
-                        target_new: request.generate.min(self.max_new),
+                        target_new: generate.min(self.max_new),
                         generated: Vec::new(),
                         next_token,
                         decode_ms: 0.0,
+                        cache_pin,
                     },
                 );
                 self.scheduler.submit_decode(id);
@@ -321,6 +471,28 @@ impl DecodeEngine {
                 eprintln!("decode prefill failed for request {id}: {e:#}");
                 self.kv.evict(id);
             }
+        }
+    }
+
+    fn cache_stats(&self) -> CacheStats {
+        self.cache.as_ref().map(|c| c.stats()).unwrap_or_default()
+    }
+
+    /// Persist the artifact store on shutdown (no-op without a path).
+    fn save_cache(&self) {
+        let Some(cache) = self.cache.as_ref() else { return };
+        let Some(path) = cache.config().persist_path.clone() else { return };
+        // Non-suffix-stable policies must not persist mixed-donor chains
+        // (lookup refuses them; a reload would launder the mix).
+        let uniform_only = !self.suffix_stable;
+        if let Err(e) = crate::cache::persist::save(
+            cache,
+            &self.policy,
+            self.model.cfg.n_heads,
+            uniform_only,
+            &path,
+        ) {
+            eprintln!("prefix cache persist failed: {e:#}");
         }
     }
 
@@ -372,6 +544,9 @@ impl DecodeEngine {
     fn finish(&mut self, id: u64, shared: &Mutex<SharedStats>) {
         let Some(s) = self.sessions.remove(&id) else { return };
         self.kv.evict(id);
+        if let (Some(pin), Some(cache)) = (s.cache_pin, self.cache.as_mut()) {
+            cache.release(pin);
+        }
         let lat = s.arrived.elapsed();
         let context = s.sess.pos();
         let retained = s.sess.min_retained().unwrap_or(context);
@@ -699,6 +874,16 @@ fn run_loop(
         queue.close();
     });
 
+    // Final prefix-cache accounting + persistence (the engine is exclusively
+    // ours again once the scope has joined every worker).
+    let prefix = match engine {
+        Some(e) => {
+            let eng = e.into_inner().expect("engine poisoned");
+            eng.save_cache();
+            eng.cache_stats()
+        }
+        None => CacheStats::default(),
+    };
     let stats = shared.into_inner().expect("stats poisoned");
     let elapsed = started.elapsed().as_secs_f64().max(1e-9);
     ServerStats {
@@ -717,6 +902,13 @@ fn run_loop(
         decode_steps: stats.decode_steps,
         decode_step_p50_ms: stats.decode_step_latency.percentile(50.0),
         decode_step_p99_ms: stats.decode_step_latency.percentile(99.0),
+        prefix_hits: prefix.hits,
+        prefix_misses: prefix.misses,
+        prefix_hit_tokens: prefix.hit_tokens,
+        prefix_insertions: prefix.insertions,
+        prefix_evictions: prefix.evictions,
+        prefix_nodes: prefix.nodes,
+        prefix_cached_tokens: prefix.cached_tokens,
     }
 }
 
@@ -727,16 +919,99 @@ fn ship(batch: Batch, responders: &mut HashMap<u64, Sender<Response>>, queue: &W
     queue.push(Work::Score { batch, responders: txs });
 }
 
-/// Execute one engine work item (prefill batch or decode round).
+/// Phase 2 of a prefill — the forward itself, run WITHOUT the engine lock
+/// (model/policy are `Arc` handles) so decode rounds keep flowing while a
+/// long prefill computes.
+///
+/// Warm path: rebuild the session from the cache hit, stitch the boundary
+/// NLL entry from the cached logits row, and push only the un-cached suffix
+/// through `resume_decode` — O(suffix) forward work, bitwise-identical
+/// logits/NLL to the cold path. Cold path: full `begin_decode`.
+fn prefill_compute(prep: PrefillPrep) -> PrefillOutcome {
+    let PrefillPrep { id, tokens, respond, arrived, generate, hit, model, policy, want_snapshot } =
+        prep;
+    let result = (|| -> Result<PrefillDone> {
+        match hit {
+            Some(h) => {
+                let warm = h.len;
+                let cache_pin = Some(h.node);
+                // O(prefix) materialization (KV rows AND the owned decode
+                // states) happens HERE, outside the engine lock — the
+                // lock-held lookup only cloned Arc handles.
+                let kv = h.assemble_kv();
+                let states = h.states.as_ref().clone();
+                let mut sess = DecodeSession::from_cache(kv, states, warm);
+                let mut nll = h.nll;
+                let mut last = h.last_logits;
+                if tokens.len() > warm {
+                    // Boundary entry: cached logits row at warm−1 scores the
+                    // first un-cached token.
+                    nll.push(nll_entry(&last, tokens[warm]));
+                    let suffix_logits = model.resume_decode(&mut sess, &tokens[warm..], &policy);
+                    let m = suffix_logits.rows;
+                    for r in 0..m.saturating_sub(1) {
+                        nll.push(nll_entry(suffix_logits.row(r), tokens[warm + r + 1]));
+                    }
+                    last = suffix_logits.row(m - 1).to_vec();
+                }
+                let next_token = argmax_row(&last);
+                let snapshot = want_snapshot.then(|| {
+                    // The cached rows already live in the tree: snapshot
+                    // only the suffix the warm path computed (O(suffix)
+                    // clone, matching the warm path's cost contract).
+                    (
+                        tokens.clone(),
+                        PrefixSnapshot {
+                            kv_from: warm,
+                            kv: sess.export_kv_suffix(warm),
+                            states: sess.clone_states(),
+                            nll: nll.clone(),
+                            last_logits: last.clone(),
+                        },
+                    )
+                });
+                Ok(PrefillDone { sess, nll, next_token, snapshot, cache_pin })
+            }
+            None => {
+                let (logits, sess) = model.begin_decode(&tokens, &policy)?;
+                let nll = nll_from_logits(&logits, &tokens);
+                let last = logits.row(logits.rows - 1);
+                let next_token = argmax_row(last);
+                let snapshot = want_snapshot.then(|| {
+                    (
+                        tokens.clone(),
+                        PrefixSnapshot {
+                            kv_from: 0,
+                            kv: sess.export_kv(),
+                            states: sess.clone_states(),
+                            nll: nll.clone(),
+                            last_logits: last.to_vec(),
+                        },
+                    )
+                });
+                Ok(PrefillDone { sess, nll, next_token, snapshot, cache_pin: None })
+            }
+        }
+    })();
+    PrefillOutcome { id, respond, arrived, generate, result }
+}
+
+/// Execute one engine work item (prefill batch or decode round). Prefills
+/// hold the engine lock only for their admission and installation phases —
+/// the forward runs lock-free between them.
 fn execute_gen(item: WorkItem, engine: &Mutex<DecodeEngine>, shared: &Mutex<SharedStats>) {
-    let mut eng = engine.lock().expect("engine poisoned");
     match item {
         WorkItem::Prefill(ids) => {
             for id in ids {
-                eng.run_prefill(id, shared);
+                let prep = engine.lock().expect("engine poisoned").prepare_prefill(id);
+                let Some(prep) = prep else { continue };
+                let outcome = prefill_compute(prep);
+                engine.lock().expect("engine poisoned").complete_prefill(outcome, shared);
             }
         }
-        WorkItem::Decode(ids) => eng.run_decode(&ids, shared),
+        WorkItem::Decode(ids) => {
+            engine.lock().expect("engine poisoned").run_decode(&ids, shared)
+        }
     }
 }
 
@@ -828,19 +1103,23 @@ fn substrate_score(
     backend: &dyn AttentionBackend,
     engine: &Mutex<DecodeEngine>,
 ) {
-    let mut results: Vec<Vec<f32>> = Vec::with_capacity(batch.requests.len());
-    {
+    // Clone the immutable model/policy handles out of a brief lock and run
+    // the (long) scoring forwards lock-free — substrate scoring can no
+    // longer stall decode rounds behind the engine mutex.
+    let (model, policy) = {
         let eng = engine.lock().expect("engine poisoned");
-        let max_seq = eng.model.cfg.max_seq;
-        for req in &batch.requests {
-            let mut toks = req.tokens.clone();
-            toks.truncate(max_seq);
-            results.push(if toks.len() < 2 {
-                Vec::new()
-            } else {
-                eng.model.nll_policy(&toks, &eng.policy)
-            });
-        }
+        (Arc::clone(&eng.model), Arc::clone(&eng.policy))
+    };
+    let max_seq = model.cfg.max_seq;
+    let mut results: Vec<Vec<f32>> = Vec::with_capacity(batch.requests.len());
+    for req in &batch.requests {
+        let mut toks = req.tokens.clone();
+        toks.truncate(max_seq);
+        results.push(if toks.len() < 2 {
+            Vec::new()
+        } else {
+            model.nll_policy(&toks, &policy)
+        });
     }
     let mut stats = shared.lock().expect("stats poisoned");
     stats.batches += 1;

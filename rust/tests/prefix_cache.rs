@@ -1,0 +1,365 @@
+//! Shared-prefix cache properties (tentpole of the prefix-cache PR).
+//!
+//! Layered guarantees, each pinned here:
+//!
+//! 1. **Kernel level** — [`DecodeState::replay`] reproduces the suffix rows
+//!    of the full causal forward bitwise for EVERY cacheable spec at pool
+//!    widths 1/2/4 (the state carries the full-context codes/ranks/
+//!    selections, so even rank-dependent kernels match).
+//! 2. **Transformer level** — for suffix-stable policies (exact/flash,
+//!    causal length-invariant prefixes) a warm `resume_decode` off a cached
+//!    prefix is bitwise-identical to the cold full prefill, and branched
+//!    decode streams stay bitwise-cold. Sizes are chosen so every matmul
+//!    stays on the serial path at any width (below the parallel gates), so
+//!    the bitwise claim holds at widths 1/2/4.
+//! 3. **Server level** — warm partial hits (flash) and full-length dedup
+//!    hits (prescored) answer bitwise-identically to cold runs, with
+//!    `ServerStats` prefix accounting proving the cached tokens were never
+//!    re-prefilled; eviction under page pressure never corrupts live
+//!    sessions; persist/load serves warm across a restart.
+
+use prescored::attention::{AttentionInputs, AttentionSpec, AttnPolicy};
+use prescored::config::ServingConfig;
+use prescored::coordinator::Request;
+use prescored::linalg::Matrix;
+use prescored::model::transformer::argmax_row;
+use prescored::model::{DecodeSession, Transformer, TransformerConfig};
+use prescored::parallel::with_threads;
+use prescored::server::ScoringServer;
+use prescored::util::rng::Rng;
+
+/// Tiny enough that every transformer matmul stays below the parallel
+/// min-flops gate for contexts ≤ 64 — the whole forward is serial at any
+/// pool width, so warm/cold comparisons are bitwise at widths 1/2/4.
+fn gate_safe_model(seed: u64) -> Transformer {
+    let tcfg = TransformerConfig { vocab: 32, d_model: 16, n_layers: 2, n_heads: 2, max_seq: 64 };
+    Transformer::random(tcfg, seed)
+}
+
+fn tokens(seed: u64, n: usize, vocab: usize) -> Vec<u32> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.usize(vocab) as u32).collect()
+}
+
+const SALT: u64 = 3;
+
+/// Kernel-level: state captured over the prefix + `replay` over the suffix
+/// equals rows `L..n` of the full causal forward, bitwise, for every
+/// cacheable spec family at widths 1/2/4.
+#[test]
+fn replay_matches_full_forward_suffix_rows_all_kernels() {
+    let specs = [
+        "exact",
+        "flash:block_q=16,block_k=8",
+        "hyper:block=16,sample=8,bits=6,seed=3",
+        "prescored:kmeans,top_k=24,block=16,sample=4,pseed=5,seed=5",
+        "prescored:kmeans,top_k=16,delta=0.9", // δ-fallback path
+        "prescored:l2norm,top_k=20",
+        "restricted:balanced,clusters=4,samples=16,iters=3,seed=2",
+        "restricted:l2norm,top_k=12",
+    ];
+    let n0 = 44usize;
+    let m = 16usize;
+    let d = 8usize;
+    let n = n0 + m;
+    let mut rng = Rng::new(0xCAC4E);
+    let q = Matrix::randn(n, d, 1.0, &mut rng);
+    let k = Matrix::randn(n, d, 1.0, &mut rng);
+    let v = Matrix::randn(n, d, 1.0, &mut rng);
+    for spec_str in specs {
+        let backend = AttentionSpec::parse(spec_str).unwrap().build();
+        for width in [1usize, 2, 4] {
+            with_threads(width, || {
+                let q0 = q.slice_rows(0, n0);
+                let k0 = k.slice_rows(0, n0);
+                let mut state = backend
+                    .begin_decode(&q0, &k0, SALT)
+                    .unwrap_or_else(|| panic!("{spec_str} must have a decode arm"));
+                let q_suffix = q.slice_rows(n0, n);
+                let out = state.replay(&q_suffix, &k, &v, None);
+                let inp = AttentionInputs::new(&q, &k, &v).causal(true);
+                let full = backend.forward_salted(&inp, SALT).out;
+                assert_eq!(out.rows, m, "{spec_str}");
+                for r in 0..m {
+                    assert_eq!(
+                        out.row(r),
+                        full.row(n0 + r),
+                        "{spec_str} width {width}: replay row {r} != forward row {}",
+                        n0 + r
+                    );
+                }
+            });
+        }
+    }
+}
+
+/// Kernel-level: the capture path (`forward_decode`, which shares one
+/// Algorithm 1 / LSH pass between forward and state) is bitwise-identical
+/// to `forward_salted` + `begin_decode` — output AND subsequent decode
+/// behavior.
+#[test]
+fn forward_decode_capture_is_bitwise_equivalent() {
+    let specs = [
+        "exact",
+        "flash",
+        "hyper:block=16,sample=8,seed=7",
+        "prescored:kmeans,top_k=16,block=16,sample=4",
+        "restricted:l2norm,top_k=12",
+    ];
+    let n = 40usize;
+    let d = 8usize;
+    let mut rng = Rng::new(0xF00D);
+    let q = Matrix::randn(n, d, 1.0, &mut rng);
+    let k = Matrix::randn(n, d, 1.0, &mut rng);
+    let v = Matrix::randn(n, d, 1.0, &mut rng);
+    let inp = AttentionInputs::new(&q, &k, &v).causal(true);
+    for spec_str in specs {
+        let backend = AttentionSpec::parse(spec_str).unwrap().build();
+        let plain = backend.forward_salted(&inp, SALT);
+        let (captured, state) = backend.forward_decode(&inp, SALT);
+        assert_eq!(plain.out.data, captured.out.data, "{spec_str} forward output");
+        assert_eq!(plain.stats, captured.stats, "{spec_str} stats");
+        let mut st_cap = state.expect("decode arm");
+        let mut st_cold = backend.begin_decode(&q, &k, SALT).expect("decode arm");
+        // One decode step from each state must agree bitwise.
+        let mut kc = k.clone();
+        let mut vc = v.clone();
+        let mut rng2 = Rng::new(1);
+        let q_new: Vec<f32> = (0..d).map(|_| rng2.gauss32(0.0, 1.0)).collect();
+        kc.push_row(&vec![0.25; d]);
+        vc.push_row(&vec![-0.5; d]);
+        let a = backend.decode_step(&mut st_cap, &q_new, &kc, &vc, None);
+        let b = backend.decode_step(&mut st_cold, &q_new, &kc, &vc, None);
+        assert_eq!(a.row, b.row, "{spec_str} captured state diverged");
+        assert_eq!(a.stats, b.stats, "{spec_str} captured stats diverged");
+    }
+}
+
+/// Transformer-level: warm resume off a cached prefix is bitwise-cold for
+/// the suffix-stable policies, at widths 1/2/4, including the branched
+/// decode stream.
+#[test]
+fn warm_resume_bitwise_identical_to_cold_prefill() {
+    let model = gate_safe_model(50);
+    let toks = tokens(51, 48, 32);
+    let prefix_len = 28;
+    let n_new = 6;
+    for spec in ["exact", "flash:block_q=16,block_k=16"] {
+        let policy = AttnPolicy::parse(spec).unwrap();
+        for width in [1usize, 2, 4] {
+            with_threads(width, || {
+                // Cold: one full prefill.
+                let (cold_logits, mut cold_sess) =
+                    model.begin_decode(&toks, &policy).expect("cold prefill");
+                // Donor: prefill the shared prefix only; snapshot it the way
+                // the cache does (clone KV + states); branch a fresh session
+                // off the snapshot and resume over the suffix.
+                let (prefix_logits, donor) =
+                    model.begin_decode(&toks[..prefix_len], &policy).expect("prefix prefill");
+                // Causal length-stability: the donor's rows ARE the cold
+                // rows (this is what makes the prefix reusable at all).
+                for r in 0..prefix_len {
+                    assert_eq!(
+                        prefix_logits.row(r),
+                        cold_logits.row(r),
+                        "{spec} width {width}: prefix row {r} not length-stable"
+                    );
+                }
+                let mut warm_sess = DecodeSession::from_cache(
+                    donor.export_kv(),
+                    donor.clone_states(),
+                    prefix_len,
+                );
+                let suffix_logits =
+                    model.resume_decode(&mut warm_sess, &toks[prefix_len..], &policy);
+                assert_eq!(suffix_logits.rows, toks.len() - prefix_len, "{spec}");
+                for r in 0..suffix_logits.rows {
+                    assert_eq!(
+                        suffix_logits.row(r),
+                        cold_logits.row(prefix_len + r),
+                        "{spec} width {width}: warm suffix row {r} differs from cold"
+                    );
+                }
+                // Branched decode: both sessions stream bitwise-equal rows.
+                let mut next = argmax_row(cold_logits.row(cold_logits.rows - 1));
+                for step in 0..n_new {
+                    let cold_row = model.decode_token(&mut cold_sess, next, &policy);
+                    let warm_row = model.decode_token(&mut warm_sess, next, &policy);
+                    assert_eq!(
+                        cold_row, warm_row,
+                        "{spec} width {width}: decode step {step} diverged"
+                    );
+                    next = argmax_row(&cold_row);
+                }
+            });
+        }
+    }
+}
+
+/// Two sessions branched off the SAME cached prefix (copy-on-write) evolve
+/// independently, each bitwise-cold.
+#[test]
+fn two_branches_from_one_prefix_are_independent_and_cold_exact() {
+    let model = gate_safe_model(60);
+    let prefix = tokens(61, 24, 32);
+    let policy = AttnPolicy::parse("flash:block_q=16,block_k=16").unwrap();
+    let (_, donor) = model.begin_decode(&prefix, &policy).expect("donor prefill");
+    let mut suffix_a = tokens(62, 10, 32);
+    let mut suffix_b = tokens(63, 14, 32);
+    suffix_a[0] = 1;
+    suffix_b[0] = 2; // diverge immediately after the shared prefix
+    for (suffix, tag) in [(&suffix_a, "a"), (&suffix_b, "b")] {
+        let full: Vec<u32> = prefix.iter().chain(suffix.iter()).cloned().collect();
+        let (cold_logits, _) = model.begin_decode(&full, &policy).expect("cold");
+        let mut branch =
+            DecodeSession::from_cache(donor.export_kv(), donor.clone_states(), prefix.len());
+        let warm = model.resume_decode(&mut branch, suffix, &policy);
+        for r in 0..warm.rows {
+            assert_eq!(
+                warm.row(r),
+                cold_logits.row(prefix.len() + r),
+                "branch {tag}: suffix row {r} differs"
+            );
+        }
+    }
+}
+
+fn cache_cfg(spec: &str, blocks: usize, persist: &str) -> ServingConfig {
+    ServingConfig {
+        artifacts_dir: "/nonexistent-artifacts".into(),
+        variant: "exact".into(),
+        max_seq: 64,
+        attention_spec: spec.into(),
+        prefix_cache_blocks: blocks,
+        prefix_min_tokens: 8,
+        prefix_persist_path: persist.into(),
+        ..Default::default()
+    }
+}
+
+fn gen_request(id: u64, toks: Vec<u32>, n_new: usize) -> Request {
+    let mut req = Request::scoring(id, toks);
+    req.generate = n_new;
+    req
+}
+
+const FLASH_SPEC: &str = "flash:block_q=16,block_k=16";
+const PRESCORED_SPEC: &str = "prescored:kmeans,top_k=12,block=16,sample=4";
+
+/// Server-level partial hit (suffix-stable spec): a request extending a
+/// cached prefix is served warm — stats prove the cached tokens were never
+/// re-prefilled — with NLL and token stream bitwise equal to the no-cache
+/// reference.
+#[test]
+fn server_warm_partial_hit_matches_cold_and_counts_saved_tokens() {
+    let model = gate_safe_model(70);
+    let reference = gate_safe_model(70);
+    let policy = AttnPolicy::parse(FLASH_SPEC).unwrap();
+    let prefix = tokens(71, 20, 32);
+    let mut extended = prefix.clone();
+    extended.extend_from_slice(&tokens(72, 12, 32));
+    let n_new = 5;
+
+    let server =
+        ScoringServer::start_with_model(cache_cfg(FLASH_SPEC, 256, ""), model).expect("start");
+    // Request 1 plants the prefix; request 2 (same prefix + suffix) hits it.
+    let r1 = server.submit(gen_request(1, prefix.clone(), n_new)).recv().expect("response 1");
+    let r2 = server.submit(gen_request(2, extended.clone(), n_new)).recv().expect("response 2");
+    let stats = server.shutdown();
+
+    assert_eq!(r1.nll, reference.nll_policy(&prefix, &policy), "cold request nll");
+    assert_eq!(r2.nll, reference.nll_policy(&extended, &policy), "warm request nll");
+    assert_eq!(
+        r2.generated,
+        reference.generate_greedy(&extended, n_new, &policy).unwrap(),
+        "warm decode stream"
+    );
+    assert!(stats.prefix_hits >= 1, "second request must hit: {stats:?}");
+    assert!(
+        stats.prefix_hit_tokens >= prefix.len(),
+        "the cached prefix tokens were never re-prefilled: {stats:?}"
+    );
+    assert!(stats.prefix_insertions >= 1);
+    assert!(stats.prefix_nodes >= 1);
+}
+
+/// Server-level full-length dedup hit (rank/selection spec): identical
+/// repeated requests — the second is served entirely from the cache and
+/// answers bitwise-identically.
+#[test]
+fn server_full_length_hit_identical_response() {
+    let model = gate_safe_model(75);
+    let toks = tokens(76, 26, 32);
+    let n_new = 4;
+    let server = ScoringServer::start_with_model(cache_cfg(PRESCORED_SPEC, 256, ""), model)
+        .expect("start");
+    let r1 = server.submit(gen_request(1, toks.clone(), n_new)).recv().expect("r1");
+    let r2 = server.submit(gen_request(2, toks.clone(), n_new)).recv().expect("r2");
+    let stats = server.shutdown();
+    assert_eq!(r1.nll, r2.nll);
+    assert_eq!(r1.generated, r2.generated);
+    assert!(stats.prefix_hits >= 1, "{stats:?}");
+    assert!(stats.prefix_hit_tokens >= toks.len(), "{stats:?}");
+    // A prescored spec must NOT serve partial hits (rank/selection kernels
+    // are not length-stable) — only the full-length dedup counted above.
+    assert_eq!(stats.prefix_hits, 1, "{stats:?}");
+}
+
+/// Eviction under page pressure: a pool of 2 pages holds one 32-token
+/// prefix; distinct sequential requests churn the cache, with one repeat
+/// mixed in. Every response stays bitwise equal to the cache-disabled
+/// server, and evictions happen.
+#[test]
+fn server_eviction_pressure_never_corrupts_sessions() {
+    let warm_model = gate_safe_model(80);
+    let cold_model = gate_safe_model(80);
+    let server = ScoringServer::start_with_model(cache_cfg(FLASH_SPEC, 2, ""), warm_model)
+        .expect("warm server");
+    let baseline = ScoringServer::start_with_model(cache_cfg(FLASH_SPEC, 0, ""), cold_model)
+        .expect("baseline server");
+    let n_new = 4;
+    for i in 0..6u64 {
+        // Paired seeds: each even request inserts a fresh 32-token prefix
+        // (evicting the previous one — the pool holds exactly one), and the
+        // following odd request repeats it while resident → a warm hit.
+        let toks = tokens(90 + i / 2, 32, 32);
+        let warm =
+            server.submit(gen_request(i, toks.clone(), n_new)).recv().expect("warm response");
+        let cold = baseline.submit(gen_request(i, toks, n_new)).recv().expect("cold response");
+        assert_eq!(warm.nll, cold.nll, "request {i} nll under eviction churn");
+        assert_eq!(warm.generated, cold.generated, "request {i} stream under churn");
+    }
+    let stats = server.shutdown();
+    let base_stats = baseline.shutdown();
+    assert!(stats.prefix_evictions >= 1, "pool of 2 pages must churn: {stats:?}");
+    assert!(stats.prefix_hits >= 1, "resident repeats must hit: {stats:?}");
+    assert_eq!(base_stats.prefix_hits + base_stats.prefix_misses, 0, "cache disabled");
+}
+
+/// Persist/load across a restart: the second server instance answers the
+/// same request from the warm path, bitwise identically.
+#[test]
+fn server_persist_roundtrip_serves_warm_after_restart() {
+    let path = std::env::temp_dir().join(format!("prefix_cache_it_{}.bin", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+    let toks = tokens(101, 24, 32);
+    let n_new = 4;
+    let cfg = cache_cfg(PRESCORED_SPEC, 256, path.to_str().unwrap());
+
+    let server1 = ScoringServer::start_with_model(cfg.clone(), gate_safe_model(100))
+        .expect("server 1");
+    let r1 = server1.submit(gen_request(1, toks.clone(), n_new)).recv().expect("r1");
+    let s1 = server1.shutdown(); // saves the artifact store
+    assert!(path.exists(), "persist file written on shutdown");
+    assert_eq!(s1.prefix_insertions, 1);
+
+    let server2 = ScoringServer::start_with_model(cfg.clone(), gate_safe_model(100))
+        .expect("server 2");
+    let r2 = server2.submit(gen_request(2, toks.clone(), n_new)).recv().expect("r2");
+    let s2 = server2.shutdown();
+    assert_eq!(r1.nll, r2.nll, "restarted warm nll");
+    assert_eq!(r1.generated, r2.generated, "restarted warm stream");
+    assert!(s2.prefix_hits >= 1, "restored store must serve the hit: {s2:?}");
+    assert!(s2.prefix_hit_tokens >= toks.len(), "{s2:?}");
+    let _ = std::fs::remove_file(&path);
+}
