@@ -23,7 +23,7 @@
 use prescored::attention::AttentionSpec;
 use prescored::linalg::Matrix;
 use prescored::parallel::{self, ExecMode};
-use prescored::util::bench::{black_box, f, Table};
+use prescored::util::bench::{black_box, env_list, env_usize, f, Table};
 use prescored::util::rng::Rng;
 use std::time::Instant;
 
@@ -34,15 +34,8 @@ const SPECS: &[&str] = &[
     "restricted:l2norm,top_k=64",
 ];
 
-fn env_usize(key: &str, default: usize) -> usize {
-    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
-}
-
 fn env_contexts() -> Vec<usize> {
-    match std::env::var("PALLAS_DECODE_CONTEXTS") {
-        Ok(v) => v.split(',').filter_map(|s| s.trim().parse().ok()).collect(),
-        Err(_) => vec![2048, 8192, 32768],
-    }
+    env_list("PALLAS_DECODE_CONTEXTS", &[2048usize, 8192, 32768])
 }
 
 /// Stream `steps` tokens through the decode arm; returns tokens/sec.

@@ -8,7 +8,7 @@
 //! the GLM2 coupling and ~monotone-decreasing-then-flat in the corrected
 //! GLM3 coupling; K-means ≼ K-median ≼ Leverage at small k.
 
-use prescored::attention::Coupling;
+use prescored::attention::{AttentionSpec, Coupling, PreScoreMode};
 use prescored::exp::{eval_docs, ppl_over, prescored_spec};
 use prescored::model::{Transformer, TransformerConfig, WeightStore};
 use prescored::prescore::Method;
@@ -48,6 +48,36 @@ fn main() {
         }
         t.print();
     }
+    // Accuracy cost of prefix-stable streaming pre-scoring (mode=stream):
+    // same K-means budget, but the selection comes from the incremental
+    // centroid fold instead of a per-forward full re-cluster. The gap to
+    // the full-recluster column is the price paid for suffix stability
+    // (O(suffix) warm prefix-cache hits + O(|new|·k) decode refreshes).
+    let mut t = Table::new(
+        "Fig. 2 addendum — streaming vs full re-cluster pre-scoring (K-means, PPL by top-k)",
+        &["Top K", "PPL full", "PPL stream", "PPL* full", "PPL* stream"],
+    );
+    for &k in &top_ks[1..] {
+        // k = 0 is the unfiltered reference; the modes coincide there.
+        let full = prescored_spec(Method::KMeans, k, 16, Coupling::Glm3Corrected, true);
+        let stream = match &full {
+            AttentionSpec::PreScored(cfg) => {
+                let mut cfg = cfg.clone();
+                cfg.mode = PreScoreMode::Stream;
+                AttentionSpec::PreScored(cfg)
+            }
+            _ => unreachable!("prescored_spec builds a PreScored spec"),
+        };
+        t.row(vec![
+            k.to_string(),
+            f(ppl_over(&model, &full, &mixed), 3),
+            f(ppl_over(&model, &stream, &mixed), 3),
+            f(ppl_over(&model, &full, &long), 3),
+            f(ppl_over(&model, &stream, &long), 3),
+        ]);
+    }
+    t.print();
+
     println!("\npaper shape: k=0 (unfiltered) is the high-compute reference; curves flatten");
     println!("after a few dozen keys (denoising); residual sampling helps at small k.");
 }

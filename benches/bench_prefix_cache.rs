@@ -25,39 +25,14 @@
 use prescored::attention::AttnPolicy;
 use prescored::model::{DecodeSession, Transformer, TransformerConfig};
 use prescored::parallel;
-use prescored::util::bench::{black_box, f};
+use prescored::util::bench::{env_list, env_usize, f, median_ms};
 use prescored::util::rng::Rng;
-use std::time::Instant;
-
-fn env_usize(key: &str, default: usize) -> usize {
-    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
-}
-
-fn env_fracs() -> Vec<f64> {
-    match std::env::var("PALLAS_PREFIX_FRACS") {
-        Ok(v) => v.split(',').filter_map(|s| s.trim().parse().ok()).collect(),
-        Err(_) => vec![0.25, 0.5, 0.75, 0.9],
-    }
-}
-
-/// Median wall-clock ms of `reps` runs of `f`.
-fn time_ms<T>(reps: usize, mut body: impl FnMut() -> T) -> f64 {
-    let mut samples: Vec<f64> = (0..reps.max(1))
-        .map(|_| {
-            let t0 = Instant::now();
-            black_box(body());
-            t0.elapsed().as_secs_f64() * 1e3
-        })
-        .collect();
-    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    samples[samples.len() / 2]
-}
 
 fn main() {
     let context = env_usize("PALLAS_PREFIX_CONTEXT", 1024);
     let d_model = env_usize("PALLAS_PREFIX_D", 64);
     let reps = env_usize("PALLAS_PREFIX_REPS", 3);
-    let fracs = env_fracs();
+    let fracs = env_list("PALLAS_PREFIX_FRACS", &[0.25, 0.5, 0.75, 0.9]);
     let assert_win = std::env::var("PALLAS_PREFIX_ASSERT").map_or(false, |v| v == "1");
     let json_path =
         std::env::var("PALLAS_PREFIX_JSON").unwrap_or_else(|_| "BENCH_prefix.json".into());
@@ -89,7 +64,7 @@ fn main() {
     let mut results = vec![vec![(0.0f64, 0.0f64); fracs.len()]; thread_counts.len()];
     for (ti, &threads) in thread_counts.iter().enumerate() {
         parallel::with_threads(threads, || {
-            let cold_ms = time_ms(reps, || {
+            let cold_ms = median_ms(reps, || {
                 model.begin_decode(&tokens, &policy).expect("cold prefill")
             });
             for (fi, &frac) in fracs.iter().enumerate() {
@@ -102,7 +77,7 @@ fn main() {
                     model.begin_decode(&tokens[..prefix_len], &policy).expect("donor");
                 let kv = donor.export_kv();
                 let states = donor.clone_states();
-                let warm_ms = time_ms(reps, || {
+                let warm_ms = median_ms(reps, || {
                     let mut sess =
                         DecodeSession::from_cache(kv.clone(), states.clone(), prefix_len);
                     model.resume_decode(&mut sess, &tokens[prefix_len..], &policy)

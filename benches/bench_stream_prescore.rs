@@ -1,0 +1,211 @@
+//! Streaming pre-scoring: decode-refresh cost (full re-cluster vs stream
+//! fold+merge) × context × threads, plus warm-hit prefill latency for the
+//! `prescored:...,mode=stream` spec.
+//!
+//! The tentpole claims under test:
+//!
+//! 1. A stream-mode selection refresh folds only the keys seen since the
+//!    last refresh — O(|new|·k·d) — while a full-mode refresh re-runs
+//!    Algorithm 1 over all n keys — O(n·d·k·I). The per-refresh cost must
+//!    therefore be (a) much cheaper and (b) flat in the context length,
+//!    which the emitted table makes visible per context.
+//! 2. Because stream mode is suffix-stable, the prefix cache serves it
+//!    O(suffix) partial warm hits: warm resume beats the cold prefill.
+//!
+//! Emits `BENCH_stream.json` at the repo root.
+//!
+//! Knobs (the CI smoke run shrinks them):
+//! * `PALLAS_STREAM_CONTEXTS`     — comma list, default `1024,4096,16384`
+//! * `PALLAS_STREAM_D`            — key dim / d_model, default 64
+//! * `PALLAS_STREAM_TOPK`         — selection budget, default 64
+//! * `PALLAS_STREAM_REFRESH`      — keys folded per refresh, default 16
+//! * `PALLAS_STREAM_REPS`         — timing repetitions, default 5
+//! * `PALLAS_STREAM_WARM_CONTEXT` — transformer warm-hit context, default
+//!   512 (0 skips the warm section)
+//! * `PALLAS_STREAM_FRACS`        — shared-prefix fractions, default `0.5,0.9`
+//! * `PALLAS_STREAM_JSON`         — output path override
+//! * `PALLAS_STREAM_ASSERT`       — when `1`, exit non-zero unless the
+//!   stream refresh beats the full re-cluster at every context and thread
+//!   count (the CI gate)
+
+use prescored::attention::AttnPolicy;
+use prescored::linalg::Matrix;
+use prescored::model::{DecodeSession, Transformer, TransformerConfig};
+use prescored::parallel;
+use prescored::prescore::{prescore, PreScoreConfig, StreamPrescorer};
+use prescored::util::bench::{black_box, env_list, env_usize, f, median_ms};
+use prescored::util::rng::Rng;
+use std::time::Instant;
+
+fn main() {
+    let contexts: Vec<usize> =
+        env_list("PALLAS_STREAM_CONTEXTS", &[1024usize, 4096, 16384]);
+    let d = env_usize("PALLAS_STREAM_D", 64);
+    let top_k = env_usize("PALLAS_STREAM_TOPK", 64);
+    let refresh = env_usize("PALLAS_STREAM_REFRESH", 16);
+    let reps = env_usize("PALLAS_STREAM_REPS", 5);
+    let warm_context = env_usize("PALLAS_STREAM_WARM_CONTEXT", 512);
+    let fracs = env_list("PALLAS_STREAM_FRACS", &[0.5, 0.9]);
+    let assert_win = std::env::var("PALLAS_STREAM_ASSERT").map_or(false, |v| v == "1");
+    let json_path =
+        std::env::var("PALLAS_STREAM_JSON").unwrap_or_else(|_| "BENCH_stream.json".into());
+
+    let pool_width = parallel::num_threads().max(2);
+    parallel::set_threads(pool_width);
+    let thread_counts = [1usize, pool_width];
+    let cfg = PreScoreConfig { top_k, seed: 7, ..Default::default() };
+
+    println!(
+        "== stream pre-scoring: refresh cost (full re-cluster vs stream fold) @ d {d}, \
+         top_k {top_k}, {refresh} new keys/refresh, threads {{1, {pool_width}}} =="
+    );
+
+    // refresh_ms[thread_idx][ctx_idx] = (full_ms, stream_ms)
+    let mut refresh_ms = vec![vec![(0.0f64, 0.0f64); contexts.len()]; thread_counts.len()];
+    let mut regression = false;
+    let bursts = (reps * 4).max(8);
+    for (ti, &threads) in thread_counts.iter().enumerate() {
+        parallel::with_threads(threads, || {
+            for (ci, &n) in contexts.iter().enumerate() {
+                let mut rng = Rng::new(0x57e0 + n as u64);
+                let keys = Matrix::randn(n + refresh * bursts, d, 1.0, &mut rng);
+                // Full-mode refresh: Algorithm 1 over all n+R keys.
+                let full_ms = median_ms(reps, || {
+                    prescore(&keys.slice_rows(0, n + refresh), &cfg).selected.len()
+                });
+                // Stream refresh: the state already covers the first n keys;
+                // a refresh folds the R new ones and merges the selection.
+                // Timed as `bursts` consecutive refreshes over one state
+                // (clone outside the timer), so per-refresh cost carries no
+                // state-copy overhead and amortizes timer noise.
+                let mut seeded = StreamPrescorer::new(cfg.clone(), d);
+                seeded.fold_to(&keys.slice_rows(0, n));
+                let stream_ms = {
+                    let mut p = seeded.clone();
+                    let t0 = Instant::now();
+                    p.fold_to(&keys);
+                    let total = t0.elapsed().as_secs_f64() * 1e3;
+                    black_box(p.selection().len());
+                    total / bursts as f64
+                };
+                refresh_ms[ti][ci] = (full_ms, stream_ms);
+                if stream_ms >= full_ms {
+                    regression = true;
+                }
+                println!(
+                    "threads {threads:>2} | context {n:>6} | full {:>10} ms | stream {:>8} ms \
+                     | speedup {:>8}x",
+                    f(full_ms, 3),
+                    f(stream_ms, 3),
+                    f(full_ms / stream_ms.max(1e-9), 1),
+                );
+            }
+        });
+    }
+
+    // Warm-hit prefill: stream spec through the transformer + prefix-cache
+    // resume path (cold full prefill vs snapshot-clone + suffix replay).
+    let spec = format!("prescored:kmeans,top_k={top_k},block=32,sample=8,mode=stream");
+    let mut warm_results = vec![vec![(0.0f64, 0.0f64); fracs.len()]; thread_counts.len()];
+    if warm_context > 0 {
+        println!("\n== warm-hit prefill for '{spec}' @ context {warm_context} ==");
+        let tcfg = TransformerConfig {
+            vocab: 256,
+            d_model: d,
+            n_layers: 2,
+            n_heads: 2,
+            max_seq: warm_context,
+        };
+        let model = Transformer::random(tcfg, 0xbe9d);
+        let policy = AttnPolicy::parse(&spec).expect("stream spec parses");
+        let mut rng = Rng::new(0x9efd);
+        let tokens: Vec<u32> = (0..warm_context).map(|_| rng.usize(256) as u32).collect();
+        for (ti, &threads) in thread_counts.iter().enumerate() {
+            parallel::with_threads(threads, || {
+                let cold_ms = median_ms(reps, || {
+                    model.begin_decode(&tokens, &policy).expect("cold prefill")
+                });
+                for (fi, &frac) in fracs.iter().enumerate() {
+                    let prefix_len =
+                        ((warm_context as f64 * frac) as usize).clamp(1, warm_context - 1);
+                    let (_, donor) =
+                        model.begin_decode(&tokens[..prefix_len], &policy).expect("donor");
+                    let kv = donor.export_kv();
+                    let states = donor.clone_states();
+                    let warm_ms = median_ms(reps, || {
+                        let mut sess =
+                            DecodeSession::from_cache(kv.clone(), states.clone(), prefix_len);
+                        model.resume_decode(&mut sess, &tokens[prefix_len..], &policy)
+                    });
+                    warm_results[ti][fi] = (cold_ms, warm_ms);
+                    println!(
+                        "threads {threads:>2} | shared {:>5}% | cold {:>9} ms | warm {:>9} ms \
+                         | speedup {:>6}x",
+                        f(frac * 100.0, 0),
+                        f(cold_ms, 2),
+                        f(warm_ms, 2),
+                        f(cold_ms / warm_ms.max(1e-9), 2),
+                    );
+                }
+            });
+        }
+    }
+
+    // JSON emission.
+    let mut json = String::from("{\n");
+    json.push_str(&format!(
+        "  \"d\": {d},\n  \"top_k\": {top_k},\n  \"refresh\": {refresh},\n"
+    ));
+    json.push_str(&format!("  \"spec\": \"{spec}\",\n  \"refresh_ms\": {{\n"));
+    for (ti, &threads) in thread_counts.iter().enumerate() {
+        json.push_str(&format!("    \"{threads}\": {{\n"));
+        for (ci, &n) in contexts.iter().enumerate() {
+            let (full, stream) = refresh_ms[ti][ci];
+            json.push_str(&format!(
+                "      \"{n}\": {{\"full_ms\": {full:.5}, \"stream_ms\": {stream:.5}, \
+                 \"speedup\": {:.3}}}{}\n",
+                full / stream.max(1e-9),
+                if ci + 1 < contexts.len() { "," } else { "" }
+            ));
+        }
+        json.push_str(&format!(
+            "    }}{}\n",
+            if ti + 1 < thread_counts.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  },\n  \"warm\": {\n");
+    // Skipped warm section (warm_context = 0) emits an empty object, not
+    // zero-filled rows a consumer would read as a measured regression.
+    if warm_context > 0 {
+        for (ti, &threads) in thread_counts.iter().enumerate() {
+            json.push_str(&format!("    \"{threads}\": {{\n"));
+            for (fi, &frac) in fracs.iter().enumerate() {
+                let (cold, warm) = warm_results[ti][fi];
+                json.push_str(&format!(
+                    "      \"{frac}\": {{\"cold_ms\": {cold:.4}, \"warm_ms\": {warm:.4}, \
+                     \"speedup\": {:.4}}}{}\n",
+                    cold / warm.max(1e-9),
+                    if fi + 1 < fracs.len() { "," } else { "" }
+                ));
+            }
+            json.push_str(&format!(
+                "    }}{}\n",
+                if ti + 1 < thread_counts.len() { "," } else { "" }
+            ));
+        }
+    }
+    json.push_str("  }\n}\n");
+    std::fs::write(&json_path, json).expect("writing BENCH_stream.json");
+    println!("wrote {json_path}");
+
+    if assert_win {
+        if regression {
+            eprintln!(
+                "STREAM REFRESH REGRESSION: stream fold+merge did not beat the full \
+                 re-cluster at some context/thread count (see table above)"
+            );
+            std::process::exit(1);
+        }
+        println!("stream-beats-full-recluster assertion passed");
+    }
+}

@@ -45,6 +45,17 @@ if [[ "$QUICK" == 0 ]]; then
     PALLAS_PREFIX_FRACS=0.5,0.9 PALLAS_PREFIX_ASSERT=1 \
     PALLAS_PREFIX_JSON="$(mktemp)" \
         cargo bench --bench bench_prefix_cache
+
+    # Streaming pre-scoring smoke: env-shrunk refresh-cost A/B (full
+    # re-cluster vs stream fold+merge) + stream-spec warm prefill.
+    # PALLAS_STREAM_ASSERT=1 fails the build if a stream refresh ever stops
+    # beating the full re-cluster — the O(|new|·k) refresh contract is a CI
+    # invariant.
+    echo "== bench_stream_prescore (smoke) =="
+    PALLAS_STREAM_CONTEXTS=512,2048 PALLAS_STREAM_D=32 PALLAS_STREAM_TOPK=32 \
+    PALLAS_STREAM_REPS=3 PALLAS_STREAM_WARM_CONTEXT=256 PALLAS_STREAM_ASSERT=1 \
+    PALLAS_STREAM_JSON="$(mktemp)" \
+        cargo bench --bench bench_stream_prescore
 fi
 
 echo "== tier-1 verify: cargo build --release && cargo test -q =="

@@ -41,9 +41,10 @@
 //! * `hyper[:block=64,sample=0,bits=16,seed=0,residual_n=<n>,keep_block_residual]`
 //! * `prescored:<method>[,top_k=256,clusters=<k>,sigma=0,raw,iters=10,pseed=0,
 //!    block=...,sample=...,bits=...,seed=...,residual_n=...,keep_block_residual,
-//!    delta=0,coupling=glm2|glm3,refresh=16]`
-//! * `restricted:balanced[,clusters=8,samples=32,iters=10,seed=0]`
-//! * `restricted:<method>[,top_k=256,clusters=<k>,sigma=0,raw,iters=10,seed=0]`
+//!    delta=0,coupling=glm2|glm3,mode=full|stream,refresh=16]`
+//! * `restricted:balanced[,clusters=8,samples=32,iters=10,seed=0,refresh=16]`
+//! * `restricted:<method>[,top_k=256,clusters=<k>,sigma=0,raw,iters=10,seed=0,
+//!    refresh=16]`
 //!
 //! `<method>` is any [`Method`] string (`kmeans`, `kmedian`, `leverage`,
 //! `leverage-exact`, `kernel-kmeans[:<gamma>]`, `minibatch[:<batch>]`,
@@ -51,19 +52,30 @@
 //! `keep_block_residual` disables the GLM3 block-residual exclusion; in
 //! `prescored` specs `pseed` seeds Algorithm 1 while `seed` seeds the
 //! HyperAttention LSH/residual RNG, and `refresh` is the decode-time
-//! selection refresh period (steps; 0 = never, 1 = every step).
+//! selection refresh period (steps; 0 = never, 1 = every step) for both the
+//! `prescored` and `restricted` families. `mode=stream` selects the
+//! prefix-stable streaming variant of Algorithm 1 (causal-only, GLM3-only,
+//! σ=0, methods with a streaming fold: `kmeans` | `minibatch[:<batch>]` |
+//! `l2norm`): the prefix keys are clustered once and later keys fold into
+//! an incremental centroid state, which makes the kernel suffix-stable
+//! ([`AttentionSpec::suffix_stable`]) and its decode refresh
+//! O(|new keys|·k) instead of a full re-cluster.
 
-use super::decode::{run_selector, DecodeArtifacts, DecodeOutput, DecodeState};
+use super::decode::{
+    run_selector, stream_prescored_forward, DecodeArtifacts, DecodeOutput, DecodeState,
+    RESTRICTED_REFRESH_DEFAULT,
+};
 use super::exact::{exact_attention, flash_attention_blocked};
 use super::hyper::{hyper_attention, hyper_core_coded, hyper_lsh, HyperConfig};
 use super::prescored::{
-    prescored_hyper_attention, restricted_exact_attention, Coupling, PreScoredConfig,
+    prescored_hyper_attention, restricted_exact_attention, Coupling, PreScoreMode,
+    PreScoredConfig,
 };
 use super::AttentionInputs;
 use crate::config::Config;
 use crate::linalg::Matrix;
 use crate::lsh::gray_rank;
-use crate::prescore::{prescore, Method, PreScoreConfig};
+use crate::prescore::{prescore, Method, PreScoreConfig, StreamPrescorer};
 use anyhow::{anyhow, bail, Context, Result};
 use std::fmt;
 
@@ -370,6 +382,18 @@ impl AttentionBackend for PreScored {
         let mut cfg = self.0.clone();
         cfg.hyper.seed = cfg.hyper.seed.wrapping_add(salt);
         cfg.prescore.seed = cfg.prescore.seed.wrapping_add(salt);
+        if cfg.mode == PreScoreMode::Stream {
+            // The streaming recurrence produces the forward rows and the
+            // end state in one pass by construction.
+            let (out, stats, state) = stream_prescored_forward(&cfg, inp);
+            let stats = AttnStats {
+                kernel: self.kernel_name(),
+                retained_keys: stats.selected,
+                total_keys: stats.total_keys,
+                fallback_used: stats.fallback_used,
+            };
+            return (AttentionOutput { out, stats }, Some(state));
+        }
         let n = inp.k.rows;
         // Algorithm 1 + LSH hashing run ONCE; both the forward and the
         // decode state consume the results (begin_decode used to redo both).
@@ -388,11 +412,7 @@ impl AttentionBackend for PreScored {
             // the corrected-coupling overrides, on the gathered subset —
             // subset codes are per-row hashes, so gathering the full codes
             // reproduces hyper_attention_subset bitwise.
-            let hyper_cfg = HyperConfig {
-                residual_count_override: None,
-                exclude_block_from_residual: true,
-                ..cfg.hyper.clone()
-            };
+            let hyper_cfg = cfg.glm3_hyper_cfg();
             let ks = inp.k.gather_rows(&sel.selected);
             let vs = inp.v.gather_rows(&sel.selected);
             let sub_codes: Vec<u32> = sel.selected.iter().map(|&j| k_codes[j]).collect();
@@ -419,6 +439,7 @@ impl AttentionBackend for PreScored {
             k_codes,
             sel.selected,
             fallback,
+            None,
         );
         (AttentionOutput { out, stats }, Some(state))
     }
@@ -435,6 +456,21 @@ impl AttentionBackend for PreScored {
         let mut cfg = self.0.clone();
         cfg.hyper.seed = cfg.hyper.seed.wrapping_add(salt);
         cfg.prescore.seed = cfg.prescore.seed.wrapping_add(salt);
+        // Stream mode additionally rebuilds the incremental pre-scorer from
+        // the persisted centroid state (config/seed half resupplied here, so
+        // the store can't drift from the serving config). A store without
+        // stream artifacts cannot restore a stream-mode state.
+        let stream = if cfg.mode == PreScoreMode::Stream {
+            let art = artifacts.stream.as_ref()?;
+            Some(Box::new(StreamPrescorer::restore(
+                cfg.prescore.clone(),
+                dim,
+                &artifacts.selection,
+                art,
+            )?))
+        } else {
+            None
+        };
         Some(DecodeState::prescored_from_parts(
             cfg,
             dim,
@@ -442,6 +478,7 @@ impl AttentionBackend for PreScored {
             artifacts.k_codes.clone(),
             artifacts.selection.clone(),
             artifacts.fallback,
+            stream,
         ))
     }
 
@@ -474,12 +511,18 @@ pub enum RestrictedSelector {
 /// Exact attention restricted to a pre-scored key subset
 /// ([`restricted_exact_attention`]) — the §5.3 zero-shot substitution
 /// operator.
-pub struct RestrictedExact(pub RestrictedSelector);
+pub struct RestrictedExact {
+    pub selector: RestrictedSelector,
+    /// Decode-time selection refresh period (`refresh=` spec key; steps,
+    /// 0 = never). Historically hardcoded to [`RESTRICTED_REFRESH_DEFAULT`]
+    /// for every non-serving caller — now threaded from the spec.
+    pub refresh: usize,
+}
 
 impl RestrictedExact {
     /// The selector with the per-layer/head seed salt mixed in.
     fn salted_selector(&self, salt: u64) -> RestrictedSelector {
-        match &self.0 {
+        match &self.selector {
             RestrictedSelector::Balanced { num_clusters, num_samples, max_iters, seed } => {
                 RestrictedSelector::Balanced {
                     num_clusters: *num_clusters,
@@ -524,7 +567,7 @@ impl AttentionBackend for RestrictedExact {
     }
 
     fn begin_decode(&self, _q: &Matrix, k: &Matrix, salt: u64) -> Option<DecodeState> {
-        Some(DecodeState::restricted(self.salted_selector(salt), k))
+        Some(DecodeState::restricted(self.salted_selector(salt), k, self.refresh))
     }
 
     fn forward_decode(
@@ -546,7 +589,8 @@ impl AttentionBackend for RestrictedExact {
                 fallback_used: false,
             },
         };
-        let state = DecodeState::restricted_from_selection(self.salted_selector(salt), selected);
+        let state =
+            DecodeState::restricted_from_selection(self.salted_selector(salt), selected, self.refresh);
         (out, Some(state))
     }
 
@@ -559,11 +603,12 @@ impl AttentionBackend for RestrictedExact {
         Some(DecodeState::restricted_from_selection(
             self.salted_selector(salt),
             artifacts.selection.clone(),
+            self.refresh,
         ))
     }
 
     fn plan(&self, n_keys: usize) -> AttnStats {
-        let retained = match &self.0 {
+        let retained = match &self.selector {
             RestrictedSelector::Balanced { num_samples, .. } => (*num_samples).min(n_keys),
             RestrictedSelector::Scored(cfg) => {
                 if cfg.top_k == 0 || cfg.top_k >= n_keys {
@@ -590,7 +635,12 @@ pub enum AttentionSpec {
     Flash { block_q: usize, block_k: usize },
     Hyper(HyperConfig),
     PreScored(PreScoredConfig),
-    Restricted(RestrictedSelector),
+    Restricted {
+        selector: RestrictedSelector,
+        /// Decode-time selection refresh period (`refresh=` key; steps,
+        /// 0 = never).
+        refresh: usize,
+    },
 }
 
 /// Default cluster count for `restricted:balanced` specs.
@@ -772,7 +822,32 @@ impl AttentionSpec {
                         ("coupling", Some(v)) => {
                             bail!("coupling must be glm2 or glm3, got '{v}'")
                         }
+                        ("mode", Some("full")) => cfg.mode = PreScoreMode::Full,
+                        ("mode", Some("stream")) => cfg.mode = PreScoreMode::Stream,
+                        ("mode", Some(v)) => {
+                            bail!("mode must be full or stream, got '{v}'")
+                        }
                         _ => bail!("unknown key '{f}' in prescored spec '{s}'"),
+                    }
+                }
+                if cfg.mode == PreScoreMode::Stream {
+                    // The streaming variant needs a cheap incremental fold
+                    // (methods without one can't be prefix-stable), the GLM3
+                    // coupling (GLM2's zeroed-key collapse is a full-kernel
+                    // ablation), and no per-forward noise (an RNG draw per
+                    // key matrix is not length-invariant).
+                    if !StreamPrescorer::supports(cfg.prescore.method) {
+                        bail!(
+                            "mode=stream requires a streaming-foldable method \
+                             (kmeans | minibatch | l2norm), got '{}' in '{s}'",
+                            cfg.prescore.method.name()
+                        );
+                    }
+                    if cfg.coupling == Coupling::Glm2Artifact {
+                        bail!("mode=stream requires coupling=glm3 (got glm2 in '{s}')");
+                    }
+                    if cfg.prescore.noise_sigma != 0.0 {
+                        bail!("mode=stream does not support sigma (got '{s}')");
                     }
                 }
                 Ok(AttentionSpec::PreScored(cfg))
@@ -789,21 +864,26 @@ impl AttentionSpec {
                     let mut num_samples = BALANCED_SAMPLES;
                     let mut max_iters = BALANCED_ITERS;
                     let mut seed = 0u64;
+                    let mut refresh = RESTRICTED_REFRESH_DEFAULT;
                     for f in rest_fields {
                         match split_field(f) {
                             ("clusters", Some(v)) => num_clusters = parse_usize("clusters", v)?,
                             ("samples", Some(v)) => num_samples = parse_usize("samples", v)?,
                             ("iters", Some(v)) => max_iters = parse_usize("iters", v)?,
                             ("seed", Some(v)) => seed = parse_u64("seed", v)?,
+                            ("refresh", Some(v)) => refresh = parse_usize("refresh", v)?,
                             _ => bail!("unknown key '{f}' in restricted:balanced spec '{s}'"),
                         }
                     }
-                    Ok(AttentionSpec::Restricted(RestrictedSelector::Balanced {
-                        num_clusters,
-                        num_samples,
-                        max_iters,
-                        seed,
-                    }))
+                    Ok(AttentionSpec::Restricted {
+                        selector: RestrictedSelector::Balanced {
+                            num_clusters,
+                            num_samples,
+                            max_iters,
+                            seed,
+                        },
+                        refresh,
+                    })
                 } else {
                     if sel_tok.contains('=') {
                         bail!(
@@ -815,13 +895,21 @@ impl AttentionSpec {
                         anyhow!("unknown restricted selector '{sel_tok}' in '{s}'")
                     })?;
                     let mut cfg = PreScoreConfig { method, ..Default::default() };
+                    let mut refresh = RESTRICTED_REFRESH_DEFAULT;
                     for f in rest_fields {
                         let (key, val) = split_field(f);
-                        if !apply_prescore_key(&mut cfg, key, val, "seed")? {
-                            bail!("unknown key '{f}' in restricted spec '{s}'");
+                        if apply_prescore_key(&mut cfg, key, val, "seed")? {
+                            continue;
+                        }
+                        match (key, val) {
+                            ("refresh", Some(v)) => refresh = parse_usize("refresh", v)?,
+                            _ => bail!("unknown key '{f}' in restricted spec '{s}'"),
                         }
                     }
-                    Ok(AttentionSpec::Restricted(RestrictedSelector::Scored(cfg)))
+                    Ok(AttentionSpec::Restricted {
+                        selector: RestrictedSelector::Scored(cfg),
+                        refresh,
+                    })
                 }
             }
             _ => bail!(
@@ -856,7 +944,9 @@ impl AttentionSpec {
             }
             AttentionSpec::Hyper(cfg) => Box::new(Hyper(cfg.clone())),
             AttentionSpec::PreScored(cfg) => Box::new(PreScored(cfg.clone())),
-            AttentionSpec::Restricted(sel) => Box::new(RestrictedExact(sel.clone())),
+            AttentionSpec::Restricted { selector, refresh } => {
+                Box::new(RestrictedExact { selector: selector.clone(), refresh: *refresh })
+            }
         }
     }
 
@@ -885,10 +975,14 @@ impl AttentionSpec {
     /// kernel: row `i`'s output (and therefore every downstream layer's K/V
     /// row `i`) is identical whether the forward ran over `i+1` tokens or
     /// any longer context. True for the causal dense kernels (exact/flash):
-    /// row `i` sees keys `≤ i` only. False for HyperAttention (a query's
-    /// block assignment is its rank among ALL query codes, so future tokens
-    /// shift it), for PreScored (Algorithm 1 clusters the full key set),
-    /// and for RestrictedExact (non-causal over the selected subset).
+    /// row `i` sees keys `≤ i` only. Also true for PreScored in
+    /// `mode=stream`, whose row `i` is by construction a function of tokens
+    /// `0..=i` only: the selection comes from folding keys `0..=i` into the
+    /// incremental pre-scorer and the query's block rank is taken among
+    /// queries `≤ i`. False for HyperAttention (a query's block assignment
+    /// is its rank among ALL query codes, so future tokens shift it), for
+    /// full-mode PreScored (Algorithm 1 clusters the full key set), and for
+    /// RestrictedExact (non-causal over the selected subset).
     ///
     /// The shared-prefix cache serves **partial** hits (cached prefix +
     /// un-cached suffix, bitwise-cold via `resume_decode`) only for
@@ -896,7 +990,11 @@ impl AttentionSpec {
     /// hits — identical request tokens — which are bitwise-cold for every
     /// kernel by determinism.
     pub fn suffix_stable(&self) -> bool {
-        matches!(self, AttentionSpec::Exact | AttentionSpec::Flash { .. })
+        match self {
+            AttentionSpec::Exact | AttentionSpec::Flash { .. } => true,
+            AttentionSpec::PreScored(cfg) => cfg.mode == PreScoreMode::Stream,
+            _ => false,
+        }
     }
 
     /// Kernel identifier of the backend this spec builds.
@@ -906,7 +1004,7 @@ impl AttentionSpec {
             AttentionSpec::Flash { .. } => "flash",
             AttentionSpec::Hyper(_) => "hyper",
             AttentionSpec::PreScored(_) => "prescored",
-            AttentionSpec::Restricted(_) => "restricted-exact",
+            AttentionSpec::Restricted { .. } => "restricted-exact",
         }
     }
 }
@@ -951,17 +1049,19 @@ impl fmt::Display for AttentionSpec {
                 if cfg.coupling == Coupling::Glm2Artifact {
                     parts.push("coupling=glm2".into());
                 }
+                if cfg.mode == PreScoreMode::Stream {
+                    parts.push("mode=stream".into());
+                }
                 if cfg.decode_refresh_every != super::prescored::DECODE_REFRESH_DEFAULT {
                     parts.push(format!("refresh={}", cfg.decode_refresh_every));
                 }
                 write!(f, "prescored:{}", parts.join(","))
             }
-            AttentionSpec::Restricted(RestrictedSelector::Balanced {
-                num_clusters,
-                num_samples,
-                max_iters,
-                seed,
-            }) => {
+            AttentionSpec::Restricted {
+                selector:
+                    RestrictedSelector::Balanced { num_clusters, num_samples, max_iters, seed },
+                refresh,
+            } => {
                 let mut parts = vec!["balanced".to_string()];
                 if *num_clusters != BALANCED_CLUSTERS {
                     parts.push(format!("clusters={num_clusters}"));
@@ -975,11 +1075,17 @@ impl fmt::Display for AttentionSpec {
                 if *seed != 0 {
                     parts.push(format!("seed={seed}"));
                 }
+                if *refresh != RESTRICTED_REFRESH_DEFAULT {
+                    parts.push(format!("refresh={refresh}"));
+                }
                 write!(f, "restricted:{}", parts.join(","))
             }
-            AttentionSpec::Restricted(RestrictedSelector::Scored(cfg)) => {
+            AttentionSpec::Restricted { selector: RestrictedSelector::Scored(cfg), refresh } => {
                 let mut parts = vec![cfg.method.name()];
                 prescore_parts(cfg, "seed", &mut parts);
+                if *refresh != RESTRICTED_REFRESH_DEFAULT {
+                    parts.push(format!("refresh={refresh}"));
+                }
                 write!(f, "restricted:{}", parts.join(","))
             }
         }
@@ -1081,9 +1187,15 @@ mod tests {
             "prescored:kmeans,top_k=64,refresh=1",
             "prescored:kmeans,refresh=0",
             "prescored:lp:1.5,top_k=32,coupling=glm2",
+            "prescored:kmeans,top_k=32,mode=stream",
+            "prescored:minibatch:64,top_k=16,mode=stream,refresh=4",
+            "prescored:l2norm,mode=stream",
             "restricted:balanced",
             "restricted:balanced,clusters=4,samples=16,seed=2",
+            "restricted:balanced,refresh=0",
             "restricted:l2norm,top_k=8",
+            "restricted:l2norm,top_k=8,refresh=4",
+            "restricted:leverage,top_k=6,refresh=1",
         ] {
             let spec = AttentionSpec::parse(s).unwrap();
             let canon = spec.to_string();
@@ -1103,12 +1215,41 @@ mod tests {
             "prescored",
             "prescored:top_k=3",
             "prescored:kmeans,coupling=glm9",
+            "prescored:kmeans,mode=bogus",
+            "prescored:kmedian,mode=stream",          // no streaming fold
+            "prescored:leverage,mode=stream",         // no streaming fold
+            "prescored:kmeans,mode=stream,coupling=glm2", // GLM3 only
+            "prescored:kmeans,sigma=0.5,mode=stream", // noise not length-invariant
             "restricted",
             "restricted:kmeans,samples=4",
+            "restricted:balanced,refresh=x",
             "hyper:block=xyz",
         ] {
             assert!(AttentionSpec::parse(s).is_err(), "'{s}' should not parse");
         }
+    }
+
+    #[test]
+    fn stream_mode_flags_and_restricted_refresh_thread_through() {
+        use crate::attention::decode::RESTRICTED_REFRESH_DEFAULT;
+        // mode=stream flips suffix stability (and keeps cacheability).
+        let full = AttentionSpec::parse("prescored:kmeans,top_k=16").unwrap();
+        assert!(!full.suffix_stable());
+        let stream = AttentionSpec::parse("prescored:kmeans,top_k=16,mode=stream").unwrap();
+        assert!(stream.suffix_stable());
+        assert!(stream.prefix_cacheable());
+        assert!(stream.supports_decode());
+        let AttentionSpec::PreScored(cfg) = &stream else { panic!() };
+        assert_eq!(cfg.mode, super::PreScoreMode::Stream);
+        // restricted refresh= is lossless and lands in the spec; omitted it
+        // keeps the historical default (previously hardcoded at the decode
+        // state, unreachable from the spec grammar).
+        let r = AttentionSpec::parse("restricted:l2norm,top_k=8,refresh=3").unwrap();
+        let AttentionSpec::Restricted { refresh, .. } = &r else { panic!() };
+        assert_eq!(*refresh, 3);
+        let d = AttentionSpec::parse("restricted:l2norm,top_k=8").unwrap();
+        let AttentionSpec::Restricted { refresh, .. } = &d else { panic!() };
+        assert_eq!(*refresh, RESTRICTED_REFRESH_DEFAULT);
     }
 
     #[test]

@@ -34,18 +34,26 @@
 //!   |S|, not the context length. The GLM2 artifact coupling is declared
 //!   prefill-only (its zeroed-key bucket collapse has no incremental form
 //!   worth preserving); `begin_decode` returns `None` for it.
+//! * `PreScored` in **`mode=stream`** replaces the full re-score with the
+//!   incremental [`StreamPrescorer`]: the whole kernel is the decode
+//!   recurrence (see the "Streaming pre-scored kernel" section below), a
+//!   refresh folds only the keys seen since the last one — O(|new|·k·d),
+//!   context-independent — and prefix rows are length-invariant, which is
+//!   what lets the shared-prefix cache serve partial warm hits for a
+//!   sparse selection kernel.
 //!
 //! The caller owns the KV cache: `k`/`v` passed to [`DecodeState::step`]
 //! hold every key/value so far *including* the newly decoded token's row.
 
 use super::backend::AttnStats;
 use super::hyper::{hyper_lsh, hyper_query_row, HyperConfig, HyperRowScratch};
-use super::prescored::PreScoredConfig;
+use super::prescored::{PreScoreMode, PreScoredConfig, PreScoredStats};
+use super::AttentionInputs;
 use crate::linalg::ops::{dot, softmax_inplace};
 use crate::linalg::Matrix;
 use crate::lsh::{gray_rank, sorted_blocks, AngularLsh};
 use crate::parallel;
-use crate::prescore::{prescore, prescore_balanced};
+use crate::prescore::{prescore, prescore_balanced, StreamArtifacts, StreamPrescorer};
 
 /// Minimum scalar work before a single-row dense kernel shards its key loop
 /// across the pool (same ballpark as the forward-path gates).
@@ -419,7 +427,16 @@ impl HyperState {
             "decode_step expects exactly one new key per step"
         );
         debug_assert_eq!(self.q_ranks.len(), n - 1, "one query code per context token");
-        self.k_codes.push(self.lsh.hash(k.row(n - 1)));
+        self.observe_one(q_row, k.row(n - 1))
+    }
+
+    /// Hash one new (query, key) row pair; returns the query's (uncapped)
+    /// block index by its rank among the queries seen *so far* — the causal
+    /// rank the streaming kernel assigns every row (and the rank the full
+    /// kernel assigns its last row, which is why the decode step matches
+    /// the forward's final row exactly).
+    fn observe_one(&mut self, q_row: &[f32], k_row: &[f32]) -> usize {
+        self.k_codes.push(self.lsh.hash(k_row));
         let qc = gray_rank(self.lsh.hash(q_row));
         let rank = self.q_ranks.rank_le(qc);
         self.q_ranks.insert(qc);
@@ -494,7 +511,15 @@ enum Kind {
     Exact,
     Flash { block_k: usize },
     Hyper(Box<HyperState>),
-    PreScored { cfg: Box<PreScoredConfig>, hyper: Box<HyperState>, sel: SelectionState },
+    PreScored {
+        cfg: Box<PreScoredConfig>,
+        hyper: Box<HyperState>,
+        sel: SelectionState,
+        /// `Some` iff `cfg.mode == PreScoreMode::Stream`: the incremental
+        /// pre-scorer whose fold+merge replaces the full re-cluster at
+        /// refresh time.
+        stream: Option<Box<StreamPrescorer>>,
+    },
     Restricted { selector: Box<RestrictedSelector>, sel: SelectionState },
 }
 
@@ -513,7 +538,7 @@ pub struct DecodeState {
 /// is rebuilt from these via
 /// [`super::backend::AttentionBackend::restore_decode`] (the backend
 /// supplies the config/seed half; this carries only the data half).
-#[derive(Debug, Clone, Default, PartialEq, Eq)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct DecodeArtifacts {
     /// LSH codes of every key in the prefix (Hyper / PreScored).
     pub k_codes: Vec<u32>,
@@ -523,6 +548,9 @@ pub struct DecodeArtifacts {
     pub selection: Vec<usize>,
     /// Algorithm 2 δ-fallback state at the prefix boundary (PreScored).
     pub fallback: bool,
+    /// Streaming pre-scorer state (PreScored `mode=stream` only): centroid
+    /// sums/counts/score mass + aligned selection scores.
+    pub stream: Option<StreamArtifacts>,
 }
 
 /// One query row of selection-restricted exact attention: softmax over
@@ -565,6 +593,129 @@ pub(crate) fn run_selector(selector: &RestrictedSelector, k: &Matrix) -> Vec<usi
     }
 }
 
+// ---------------------------------------------------------------------------
+// Streaming pre-scored kernel (`prescored:...,mode=stream`).
+//
+// The kernel IS the decode recurrence run over the whole sequence: for each
+// position i, hash key/query i (the query's rank is taken among queries
+// ≤ i), fold key i into the incremental pre-scorer, and attend over the
+// selection as of key i. Every row therefore depends only on tokens 0..=i —
+// the forward's prefix rows are length-invariant (`suffix_stable`), a
+// decode step with refresh=1 reproduces the forward's last row exactly, and
+// `DecodeState::replay` reproduces the forward's suffix rows bitwise.
+// All per-row work is serial, so outputs are identical at any pool width.
+// ---------------------------------------------------------------------------
+
+/// One streaming-mode attention row over the selection as of key `i`.
+/// Mirrors the cached-selection branches of [`DecodeState::step`]: the
+/// δ-fallback / identity selection runs the unfiltered kernel over keys
+/// `0..=i` with the hyper config verbatim; otherwise the GLM3 coupling over
+/// the gathered selection.
+#[allow(clippy::too_many_arguments)]
+fn stream_attend_row(
+    cfg: &PreScoredConfig,
+    hyper: &HyperState,
+    sel: &[usize],
+    fallback: bool,
+    i: usize,
+    rank_block: usize,
+    q_row: &[f32],
+    k: &Matrix,
+    v: &Matrix,
+    scale: f32,
+    out: &mut [f32],
+) {
+    let s_len = sel.len();
+    if fallback || s_len >= i + 1 {
+        hyper_row(
+            q_row,
+            i,
+            rank_block,
+            k,
+            v,
+            None,
+            &hyper.k_codes[..i + 1],
+            scale,
+            &cfg.hyper,
+            out,
+        );
+    } else {
+        let hyper_cfg = cfg.glm3_hyper_cfg();
+        let codes: Vec<u32> = sel.iter().map(|&j| hyper.k_codes[j]).collect();
+        hyper_row(q_row, i, rank_block, k, v, Some(sel), &codes, scale, &hyper_cfg, out);
+    }
+}
+
+/// Run the streaming recurrence over rows `0..k.rows`, emitting attention
+/// rows when `emit` is provided (the forward path) and skipping them when
+/// not (`begin_decode`, which only needs the end state). Returns the hyper
+/// state, the pre-scorer, and the final row's δ-fallback flag.
+fn stream_prescored_build(
+    cfg: &PreScoredConfig,
+    q: &Matrix,
+    k: &Matrix,
+    mut emit: Option<(&Matrix, f32, &mut Matrix)>,
+) -> (Box<HyperState>, Box<StreamPrescorer>, bool) {
+    debug_assert_eq!(cfg.mode, PreScoreMode::Stream);
+    debug_assert_eq!(cfg.coupling, super::prescored::Coupling::Glm3Corrected);
+    let n = k.rows;
+    let mut hyper = HyperState::from_parts(cfg.hyper.clone(), q.cols, &[], Vec::new());
+    let mut pres = StreamPrescorer::new(cfg.prescore.clone(), k.cols);
+    let mut fallback = false;
+    for i in 0..n {
+        let rank_block = hyper.observe_one(q.row(i), k.row(i));
+        pres.fold(k.row(i));
+        let sel = pres.selection();
+        fallback = (sel.len() as f32) < cfg.fallback_delta * (i + 1) as f32;
+        if let Some((v, scale, out)) = emit.as_mut() {
+            stream_attend_row(
+                cfg,
+                &hyper,
+                sel,
+                fallback,
+                i,
+                rank_block,
+                q.row(i),
+                k,
+                *v,
+                *scale,
+                out.row_mut(i),
+            );
+        }
+    }
+    (Box::new(hyper), Box::new(pres), fallback)
+}
+
+/// Full streaming-mode forward: the causal recurrence over every row, plus
+/// the decode state it ends in (shared with the prefill capture path so the
+/// forward and the state always come from ONE pass). Causal-only — the
+/// streaming kernel is the decode/serving arm of Algorithm 2, and a
+/// non-causal "stream" has no defined row order.
+pub(crate) fn stream_prescored_forward(
+    cfg: &PreScoredConfig,
+    inp: &AttentionInputs,
+) -> (Matrix, PreScoredStats, DecodeState) {
+    assert!(
+        inp.causal,
+        "prescored mode=stream is causal-only (decode/serving kernel); \
+         use mode=full for non-causal inputs"
+    );
+    assert_eq!(inp.q.rows, inp.k.rows, "stream mode expects one query per key");
+    let n = inp.k.rows;
+    let scale = inp.effective_scale();
+    let mut out = Matrix::zeros(n, inp.v.cols);
+    let (hyper, pres, fallback) =
+        stream_prescored_build(cfg, inp.q, inp.k, Some((inp.v, scale, &mut out)));
+    let s_len = pres.selection().len();
+    let stats = PreScoredStats {
+        selected: if fallback || s_len >= n { n } else { s_len },
+        total_keys: n,
+        fallback_used: fallback,
+    };
+    let state = DecodeState::from_stream_parts(cfg.clone(), hyper, pres, fallback);
+    (out, stats, state)
+}
+
 impl DecodeState {
     pub(crate) fn exact() -> DecodeState {
         DecodeState { kind: Kind::Exact }
@@ -581,6 +732,12 @@ impl DecodeState {
     }
 
     pub(crate) fn prescored(cfg: PreScoredConfig, q: &Matrix, k: &Matrix) -> DecodeState {
+        if cfg.mode == PreScoreMode::Stream {
+            // Streaming variant: replay the causal recurrence over the
+            // prefix (fold + hash only — no attention rows computed).
+            let (hyper, pres, fallback) = stream_prescored_build(&cfg, q, k, None);
+            return Self::from_stream_parts(cfg, hyper, pres, fallback);
+        }
         let hyper = HyperState::begin(cfg.hyper.clone(), q, k);
         let n = k.rows;
         let selection = prescore(k, &cfg.prescore).selected;
@@ -592,26 +749,52 @@ impl DecodeState {
             fallback,
         };
         DecodeState {
-            kind: Kind::PreScored { cfg: Box::new(cfg), hyper: Box::new(hyper), sel },
+            kind: Kind::PreScored { cfg: Box::new(cfg), hyper: Box::new(hyper), sel, stream: None },
         }
     }
 
-    pub(crate) fn restricted(selector: RestrictedSelector, k: &Matrix) -> DecodeState {
+    /// PreScored stream state from the recurrence's end products (shared by
+    /// the prefill builders and `stream_prescored_forward`).
+    pub(crate) fn from_stream_parts(
+        cfg: PreScoredConfig,
+        hyper: Box<HyperState>,
+        pres: Box<StreamPrescorer>,
+        fallback: bool,
+    ) -> DecodeState {
+        debug_assert_eq!(cfg.mode, PreScoreMode::Stream);
+        let sel = SelectionState {
+            selection: pres.selection().to_vec(),
+            steps_since_refresh: 0,
+            refresh_every: cfg.decode_refresh_every,
+            fallback,
+        };
+        DecodeState {
+            kind: Kind::PreScored { cfg: Box::new(cfg), hyper, sel, stream: Some(pres) },
+        }
+    }
+
+    pub(crate) fn restricted(
+        selector: RestrictedSelector,
+        k: &Matrix,
+        refresh_every: usize,
+    ) -> DecodeState {
         let selection = run_selector(&selector, k);
-        Self::restricted_from_selection(selector, selection)
+        Self::restricted_from_selection(selector, selection, refresh_every)
     }
 
     /// Restricted state from an already-computed selection (the capture /
     /// restore paths — the forward just ran the selector; don't run it
-    /// again).
+    /// again). `refresh_every` comes from the spec's `refresh=` key
+    /// ([`RESTRICTED_REFRESH_DEFAULT`] when omitted).
     pub(crate) fn restricted_from_selection(
         selector: RestrictedSelector,
         selection: Vec<usize>,
+        refresh_every: usize,
     ) -> DecodeState {
         let sel = SelectionState {
             selection,
             steps_since_refresh: 0,
-            refresh_every: RESTRICTED_REFRESH_DEFAULT,
+            refresh_every,
             fallback: false,
         };
         DecodeState { kind: Kind::Restricted { selector: Box::new(selector), sel } }
@@ -630,7 +813,9 @@ impl DecodeState {
         }
     }
 
-    /// PreScored (GLM3) state from already-computed artifacts.
+    /// PreScored (GLM3) state from already-computed artifacts. `stream`
+    /// must be `Some` exactly when `cfg.mode == Stream` (the restore path
+    /// rebuilds it from [`DecodeArtifacts::stream`]).
     pub(crate) fn prescored_from_parts(
         cfg: PreScoredConfig,
         dim: usize,
@@ -638,7 +823,13 @@ impl DecodeState {
         k_codes: Vec<u32>,
         selection: Vec<usize>,
         fallback: bool,
+        stream: Option<Box<StreamPrescorer>>,
     ) -> DecodeState {
+        debug_assert_eq!(
+            stream.is_some(),
+            cfg.mode == PreScoreMode::Stream,
+            "stream prescorer presence must match the config mode"
+        );
         let hyper = HyperState::from_parts(cfg.hyper.clone(), dim, q_gray, k_codes);
         let sel = SelectionState {
             selection,
@@ -647,7 +838,7 @@ impl DecodeState {
             fallback,
         };
         DecodeState {
-            kind: Kind::PreScored { cfg: Box::new(cfg), hyper: Box::new(hyper), sel },
+            kind: Kind::PreScored { cfg: Box::new(cfg), hyper: Box::new(hyper), sel, stream },
         }
     }
 
@@ -660,11 +851,12 @@ impl DecodeState {
                 q_ranks: hs.q_ranks.values(),
                 ..Default::default()
             },
-            Kind::PreScored { hyper, sel, .. } => DecodeArtifacts {
+            Kind::PreScored { hyper, sel, stream, .. } => DecodeArtifacts {
                 k_codes: hyper.k_codes.clone(),
                 q_ranks: hyper.q_ranks.values(),
                 selection: sel.selection.clone(),
                 fallback: sel.fallback,
+                stream: stream.as_ref().map(|p| p.export()),
             },
             Kind::Restricted { sel, .. } => DecodeArtifacts {
                 selection: sel.selection.clone(),
@@ -757,11 +949,22 @@ impl DecodeState {
                 );
                 AttnStats::unfiltered("hyper", n)
             }
-            Kind::PreScored { cfg, hyper, sel } => {
+            Kind::PreScored { cfg, hyper, sel, stream } => {
                 let rank_block = hyper.observe(q_row, k);
                 sel.steps_since_refresh += 1;
                 if sel.needs_refresh() {
-                    sel.selection = prescore(k, &cfg.prescore).selected;
+                    match stream.as_deref_mut() {
+                        // Streaming refresh: fold only the keys seen since
+                        // the last refresh into the centroid state and merge
+                        // them into the top-k — O(|new keys|·k) work,
+                        // independent of the context length. Never re-runs
+                        // Algorithm 1 over all n keys.
+                        Some(pres) => {
+                            pres.fold_to(k);
+                            sel.selection = pres.selection().to_vec();
+                        }
+                        None => sel.selection = prescore(k, &cfg.prescore).selected,
+                    }
                     sel.steps_since_refresh = 0;
                 } else {
                     sel.extend(n - 1);
@@ -793,11 +996,7 @@ impl DecodeState {
                     // GLM3 coupling: subset geometry, |S|-weighted residual,
                     // block-residual exclusion (the forced overrides of
                     // prescored_hyper_attention's corrected branch).
-                    let hyper_cfg = HyperConfig {
-                        residual_count_override: None,
-                        exclude_block_from_residual: true,
-                        ..cfg.hyper.clone()
-                    };
+                    let hyper_cfg = cfg.glm3_hyper_cfg();
                     let codes: Vec<u32> =
                         sel.selection.iter().map(|&j| hyper.k_codes[j]).collect();
                     hyper_row(
@@ -925,7 +1124,37 @@ impl DecodeState {
                     );
                 }
             }
-            Kind::PreScored { cfg, hyper, sel } => {
+            Kind::PreScored { cfg, hyper, sel, stream: Some(pres) } => {
+                // Streaming replay: run the causal recurrence over exactly
+                // the suffix rows — fold each new key, rank each new query
+                // among its predecessors, attend over the selection as of
+                // that row. Identical, row for row, to what the cold stream
+                // forward computes for positions n0..n (and it resets the
+                // refresh clock exactly as a cold prefill would).
+                for local in 0..m {
+                    let i = n0 + local;
+                    let rank_block = hyper.observe_one(q_suffix.row(local), k.row(i));
+                    pres.fold(k.row(i));
+                    let sl = pres.selection();
+                    sel.fallback = (sl.len() as f32) < cfg.fallback_delta * (i + 1) as f32;
+                    stream_attend_row(
+                        cfg,
+                        hyper,
+                        sl,
+                        sel.fallback,
+                        i,
+                        rank_block,
+                        q_suffix.row(local),
+                        k,
+                        v,
+                        scale,
+                        out.row_mut(local),
+                    );
+                }
+                sel.selection = pres.selection().to_vec();
+                sel.steps_since_refresh = 0;
+            }
+            Kind::PreScored { cfg, hyper, sel, stream: None } => {
                 let blocks = hyper.observe_suffix(q_suffix, k);
                 // The cold forward runs Algorithm 1 over the full key set at
                 // prefill; this refresh reproduces it exactly (and resets
@@ -959,11 +1188,7 @@ impl DecodeState {
                 } else {
                     // GLM3 coupling over the gathered subset, as in the
                     // cold prescored_hyper_attention.
-                    let hyper_cfg = HyperConfig {
-                        residual_count_override: None,
-                        exclude_block_from_residual: true,
-                        ..cfg.hyper.clone()
-                    };
+                    let hyper_cfg = cfg.glm3_hyper_cfg();
                     let codes: Vec<u32> =
                         sel.selection.iter().map(|&j| hyper.k_codes[j]).collect();
                     let kb = sorted_blocks(&codes, hyper_cfg.block_size.max(1));

@@ -43,7 +43,7 @@ pub use backend::{
 pub use decode::{DecodeArtifacts, DecodeOutput, DecodeState};
 pub use exact::{exact_attention, flash_attention};
 pub use hyper::{hyper_attention, HyperConfig};
-pub use prescored::{prescored_hyper_attention, Coupling, PreScoredConfig};
+pub use prescored::{prescored_hyper_attention, Coupling, PreScoreMode, PreScoredConfig};
 
 use crate::linalg::Matrix;
 

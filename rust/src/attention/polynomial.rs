@@ -10,6 +10,11 @@
 use super::AttentionInputs;
 use crate::linalg::ops::dot;
 use crate::linalg::Matrix;
+use crate::parallel;
+
+/// Minimum `n_q · n_k` work before the row loops fork the pool (same
+/// ballpark as the other O(n²) analysis paths).
+const PAR_MIN_WORK: usize = parallel::DEFAULT_MIN_WORK;
 
 /// Degree-r polynomial attention output: D⁻¹ A V with A_ij = (q_i·k_j)^r
 /// (r even; odd r uses |q·k|^r to keep weights non-negative).
@@ -18,44 +23,87 @@ pub fn polynomial_attention(inp: &AttentionInputs, r: u32) -> Matrix {
     crate::linalg::ops::matmul(&p, inp.v)
 }
 
-/// Row-normalized polynomial attention matrix.
+/// Row-normalized polynomial attention matrix. Each output row is a pure
+/// function of `(q_i, K)`, so rows shard across the pool bit-identically to
+/// the serial loop (`threads = 1` keeps the untouched serial path).
 pub fn polynomial_attention_matrix(inp: &AttentionInputs, r: u32) -> Matrix {
     let (nq, nk) = (inp.q.rows, inp.k.rows);
     let mut a = Matrix::zeros(nq, nk);
-    for i in 0..nq {
-        let qrow = inp.q.row(i);
-        let limit = if inp.causal { (i + 1).min(nk) } else { nk };
-        let arow = a.row_mut(i);
-        let mut sum = 0.0f32;
-        for j in 0..limit {
-            let s = dot(qrow, inp.k.row(j));
-            let w = if r % 2 == 0 { s.powi(r as i32) } else { s.abs().powi(r as i32) };
-            arow[j] = w;
-            sum += w;
-        }
-        if sum > 0.0 {
-            let inv = 1.0 / sum;
-            for v in arow[..limit].iter_mut() {
-                *v *= inv;
+    if nq == 0 || nk == 0 {
+        return a;
+    }
+    let causal = inp.causal;
+    let fill_rows = |i0: usize, chunk: &mut [f32]| {
+        let rows = chunk.len() / nk;
+        for local in 0..rows {
+            let i = i0 + local;
+            let qrow = inp.q.row(i);
+            let limit = if causal { (i + 1).min(nk) } else { nk };
+            let arow = &mut chunk[local * nk..(local + 1) * nk];
+            let mut sum = 0.0f32;
+            for (j, slot) in arow[..limit].iter_mut().enumerate() {
+                let s = dot(qrow, inp.k.row(j));
+                let w = if r % 2 == 0 { s.powi(r as i32) } else { s.abs().powi(r as i32) };
+                *slot = w;
+                sum += w;
+            }
+            if sum > 0.0 {
+                let inv = 1.0 / sum;
+                for v in arow[..limit].iter_mut() {
+                    *v *= inv;
+                }
             }
         }
+    };
+    if parallel::num_threads() <= 1 || nq * nk < PAR_MIN_WORK {
+        fill_rows(0, &mut a.data);
+    } else if causal {
+        // Triangular fill: row i scores i+1 keys, so shard by work, not by
+        // row count (boundaries are deterministic for a fixed width and
+        // rows are pure per-query functions — still bit-identical).
+        parallel::par_chunks_weighted(&mut a.data, nk, |i| (i + 1).min(nk), fill_rows);
+    } else {
+        parallel::par_chunks(&mut a.data, nk, fill_rows);
     }
     a
 }
 
 /// Maximum attention weight each key receives over all queries — the
 /// "heaviness" of a key under polynomial attention. LevAttention's guarantee:
-/// max-weight ≥ ε ⇒ the key's leverage score is ≥ poly(ε).
+/// max-weight ≥ ε ⇒ the key's leverage score is ≥ poly(ε). Sharded over
+/// query rows with an elementwise-max merge (exact, so the result is
+/// bit-identical at any pool width).
 pub fn key_max_weights(attn: &Matrix) -> Vec<f32> {
-    let mut w = vec![0.0f32; attn.cols];
-    for i in 0..attn.rows {
-        for (j, &v) in attn.row(i).iter().enumerate() {
-            if v > w[j] {
-                w[j] = v;
+    let nk = attn.cols;
+    if attn.rows == 0 || nk == 0 {
+        return vec![0.0; nk];
+    }
+    let fold = |mut w: Vec<f32>, range: std::ops::Range<usize>| {
+        for i in range {
+            for (slot, &v) in w.iter_mut().zip(attn.row(i)) {
+                if v > *slot {
+                    *slot = v;
+                }
             }
         }
+        w
+    };
+    if parallel::num_threads() <= 1 || attn.rows * nk < PAR_MIN_WORK {
+        return fold(vec![0.0f32; nk], 0..attn.rows);
     }
-    w
+    parallel::par_reduce(
+        attn.rows,
+        || vec![0.0f32; nk],
+        fold,
+        |mut a, b| {
+            for (slot, v) in a.iter_mut().zip(b) {
+                if v > *slot {
+                    *slot = v;
+                }
+            }
+            a
+        },
+    )
 }
 
 #[cfg(test)]

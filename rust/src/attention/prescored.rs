@@ -36,6 +36,26 @@ pub enum Coupling {
     Glm2Artifact,
 }
 
+/// How Algorithm 1 runs inside the kernel (`mode=` spec key).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PreScoreMode {
+    /// Cluster the **full** key set per forward (the paper's Algorithm 1 as
+    /// written). Prefix rows depend on the whole context, so the kernel is
+    /// not suffix-stable and decode refreshes re-run Algorithm 1 over all n
+    /// keys.
+    Full,
+    /// *Streaming* pre-scoring: keys are processed in sequence order — the
+    /// prefix keys are batch-clustered once, later keys fold into the
+    /// incremental [`crate::prescore::StreamPrescorer`] state, and row `i`
+    /// attends over the selection as of key `i` with the query's rank taken
+    /// among queries `≤ i`. Every prefix row is length-invariant
+    /// (`AttentionSpec::suffix_stable`), decode refreshes cost
+    /// O(|new keys|·k) instead of a full re-cluster, and the prefix cache
+    /// serves O(suffix) partial warm hits. Causal-only (the serving/decode
+    /// kernel); GLM3 coupling only.
+    Stream,
+}
+
 /// Default decode-time selection refresh period (§3.1: "reuse this
 /// selection or update it only periodically"). Shared with the serving
 /// coordinator's [`crate::coordinator::PreScoreManagerConfig`] default.
@@ -49,10 +69,15 @@ pub struct PreScoredConfig {
     /// Fallback threshold δ: if |S| < δ·n, run unfiltered HyperAttention.
     pub fallback_delta: f32,
     pub coupling: Coupling,
-    /// Decode path: re-run Algorithm 1 every R decode steps (0 = never;
-    /// 1 = every step, which makes decode exactly reproduce the full
-    /// forward). Between refreshes the cached selection is extended with
-    /// each new token. Ignored by the prefill `forward` path.
+    /// Full re-cluster per forward, or prefix-stable streaming (`mode=`).
+    pub mode: PreScoreMode,
+    /// Decode path: refresh the cached selection every R decode steps
+    /// (0 = never; 1 = every step, which makes decode exactly reproduce the
+    /// full forward). Between refreshes the cached selection is extended
+    /// with each new token. A refresh re-runs Algorithm 1 over all n keys
+    /// in [`PreScoreMode::Full`], or folds only the keys seen since the
+    /// last refresh in [`PreScoreMode::Stream`]. Ignored by the prefill
+    /// `forward` path.
     pub decode_refresh_every: usize,
 }
 
@@ -63,7 +88,25 @@ impl Default for PreScoredConfig {
             hyper: HyperConfig::default(),
             fallback_delta: 0.0,
             coupling: Coupling::Glm3Corrected,
+            mode: PreScoreMode::Full,
             decode_refresh_every: DECODE_REFRESH_DEFAULT,
+        }
+    }
+}
+
+impl PreScoredConfig {
+    /// The corrected-coupling (GLM3) HyperAttention overrides applied to
+    /// every selection-restricted kernel invocation: residual samples
+    /// weighted by the effective retained count (ii) and blockwise keys
+    /// excluded from the residual path (iii). Single-sourced here because
+    /// the forward, decode-step, replay, and streaming paths are pinned
+    /// bitwise-equal by the equivalence tests — a drift between their
+    /// copies would fail those tests in a confusing way.
+    pub fn glm3_hyper_cfg(&self) -> HyperConfig {
+        HyperConfig {
+            residual_count_override: None,
+            exclude_block_from_residual: true,
+            ..self.hyper.clone()
         }
     }
 }
@@ -83,6 +126,13 @@ pub fn prescored_hyper_attention(
     cfg: &PreScoredConfig,
 ) -> (Matrix, PreScoredStats) {
     let n = inp.k.rows;
+
+    if cfg.mode == PreScoreMode::Stream {
+        // Prefix-stable streaming variant: the causal decode recurrence run
+        // over the whole sequence (see `attention::decode`).
+        let (out, stats, _state) = super::decode::stream_prescored_forward(cfg, inp);
+        return (out, stats);
+    }
 
     // Line 1: PreScore.
     let sel: PreScoreResult = prescore(inp.k, &cfg.prescore);
@@ -109,11 +159,7 @@ pub fn prescored_hyper_attention(
             // (i: bias-mask, geometry preserved), residual samples are
             // weighted by the effective retained count (ii) and exclude
             // blockwise keys (iii) — the HyperConfig defaults.
-            let hyper_cfg = HyperConfig {
-                residual_count_override: None,
-                exclude_block_from_residual: true,
-                ..cfg.hyper.clone()
-            };
+            let hyper_cfg = cfg.glm3_hyper_cfg();
             (super::hyper::hyper_attention_subset(inp, &hyper_cfg, &sel.selected), stats)
         }
         Coupling::Glm2Artifact => {

@@ -14,8 +14,10 @@
 //!   [`crate::coordinator::KvCacheManager`] uses);
 //! * at *artifact boundaries* (positions where a prefill ended), the full
 //!   per layer·head [`DecodeState`] snapshot — pre-score selections, LSH key
-//!   codes, query-rank sets — plus the prefix NLL and the boundary logits
-//!   row, which is everything a warm prefill needs to resume.
+//!   codes, query-rank sets, and (for `prescored:...,mode=stream`) the
+//!   incremental clustering state (centroids, counts, score mass) — plus
+//!   the prefix NLL and the boundary logits row, which is everything a warm
+//!   prefill needs to resume.
 //!
 //! Sessions branch off shared nodes **copy-on-write**: a hit takes `Arc`
 //! handles on the chain's immutable segments ([`PrefixHit`]) and

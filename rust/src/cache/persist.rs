@@ -5,7 +5,7 @@
 //! Little-endian layout (all integers u32 unless noted):
 //!
 //! ```text
-//! magic = 0x43584650 ("PFXC"), version = 1
+//! magic = 0x43584650 ("PFXC"), version = 2
 //! policy_len, policy utf-8        (canonical AttnPolicy string — reload
 //!                                  refuses a store built under another
 //!                                  policy: artifacts are policy-specific)
@@ -27,6 +27,17 @@
 //!     ranks_len, u32×ranks_len          (query-code gray-rank multiset)
 //!     sel_len, u32×sel_len              (cached key selection)
 //!     fallback u8
+//!     has_stream u8                     (v2: streaming pre-scorer state)
+//!     if has_stream:
+//!       scorer u8                       (0 warmup | 1 clustered | 2 norms)
+//!       warmup_len, f32×warmup_len      (buffered raw rows, warmup only)
+//!       cent_len, f32×cent_len          (flat k×d centroids, clustered)
+//!       sums_len, f32×sums_len          (flat k×d running sums, clustered)
+//!       counts_len, u32×counts_len
+//!       mass_len, f32×mass_len
+//!       since_recenter u32
+//!       scores_len, f32×scores_len      (aligned with the selection)
+//!       folded u32
 //! ```
 //!
 //! Configs/seeds are NOT serialized: the loader rebuilds each
@@ -38,11 +49,12 @@
 use super::{PrefixCache, PrefixSnapshot};
 use crate::attention::{AttnPolicy, DecodeArtifacts, DecodeState};
 use crate::linalg::Matrix;
+use crate::prescore::StreamArtifacts;
 use anyhow::{bail, Context, Result};
 use std::path::Path;
 
 pub const MAGIC: u32 = 0x4358_4650; // "PFXC" little-endian
-pub const VERSION: u32 = 1;
+pub const VERSION: u32 = 2;
 
 fn put_u32(buf: &mut Vec<u8>, v: u32) {
     buf.extend_from_slice(&v.to_le_bytes());
@@ -182,6 +194,21 @@ pub fn save(
             let sel: Vec<u32> = art.selection.iter().map(|&s| s as u32).collect();
             put_u32s(&mut buf, &sel);
             buf.push(art.fallback as u8);
+            match &art.stream {
+                None => buf.push(0),
+                Some(st) => {
+                    buf.push(1);
+                    buf.push(st.scorer);
+                    put_f32s(&mut buf, &st.warmup);
+                    put_f32s(&mut buf, &st.centroids);
+                    put_f32s(&mut buf, &st.sums);
+                    put_u32s(&mut buf, &st.counts);
+                    put_f32s(&mut buf, &st.score_mass);
+                    put_u32(&mut buf, st.since_recenter);
+                    put_f32s(&mut buf, &st.sel_scores);
+                    put_u32(&mut buf, st.folded);
+                }
+            }
         }
     }
     std::fs::write(path, &buf)
@@ -266,7 +293,22 @@ pub fn load(
             let q_ranks = r.u32s()?;
             let selection: Vec<usize> = r.u32s()?.into_iter().map(|s| s as usize).collect();
             let fallback = r.u8()? != 0;
-            let art = DecodeArtifacts { k_codes, q_ranks, selection, fallback };
+            let stream = match r.u8()? {
+                0 => None,
+                1 => Some(StreamArtifacts {
+                    scorer: r.u8()?,
+                    warmup: r.f32s()?,
+                    centroids: r.f32s()?,
+                    sums: r.f32s()?,
+                    counts: r.u32s()?,
+                    score_mass: r.f32s()?,
+                    since_recenter: r.u32()?,
+                    sel_scores: r.f32s()?,
+                    folded: r.u32()?,
+                }),
+                other => bail!("bad stream-artifact tag {other} at offset {}", r.off),
+            };
+            let art = DecodeArtifacts { k_codes, q_ranks, selection, fallback, stream };
             let layer = slot / n_heads;
             let dim = k.cols;
             let state = policy
@@ -321,9 +363,12 @@ mod tests {
 
     #[test]
     fn roundtrip_restores_artifacts_losslessly() {
-        for spec in
-            ["exact", "hyper:block=8,sample=4,seed=3", "prescored:kmeans,top_k=8,block=8"]
-        {
+        for spec in [
+            "exact",
+            "hyper:block=8,sample=4,seed=3",
+            "prescored:kmeans,top_k=8,block=8",
+            "prescored:kmeans,top_k=8,block=8,mode=stream",
+        ] {
             let (cache, policy, tokens) = sample_cache(spec);
             let dir = std::env::temp_dir()
                 .join(format!("pfxc_test_{}_{}", std::process::id(), spec.len()));

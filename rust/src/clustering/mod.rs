@@ -7,18 +7,23 @@
 //! * [`kernel_kmeans`] — Gaussian-kernel k-means (Appendix I).
 //! * [`minibatch`] — mini-batch k-means, the hardware-friendly variant the
 //!   paper's Appendix H lists as future work.
+//! * [`stream`] — incremental centroid state (fold one key at a time off a
+//!   batch-clustered seed, periodic cheap re-centering) for the
+//!   prefix-stable `prescored:...,mode=stream` kernel.
 
 pub mod kernel_kmeans;
 pub mod kmeans;
 pub mod kmedian;
 pub mod minibatch;
 pub mod minkowski;
+pub mod stream;
 
 pub use kernel_kmeans::gaussian_kernel_kmeans;
 pub use kmeans::{kmeans, kmeans_best_of, KMeansResult};
 pub use kmedian::kmedian;
 pub use minibatch::minibatch_kmeans;
 pub use minkowski::minkowski_kmeans;
+pub use stream::{StreamClustering, STREAM_RECENTER_EVERY};
 
 use crate::linalg::Matrix;
 

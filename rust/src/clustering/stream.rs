@@ -1,0 +1,285 @@
+//! Streaming (incremental) clustering state — the substrate of prefix-stable
+//! pre-scoring (`prescored:...,mode=stream`).
+//!
+//! A [`StreamClustering`] is seeded from a batch clustering of the *prefix*
+//! keys (the paper's prefill clustering) and then folds later keys in one at
+//! a time: each fold assigns the key to its nearest **frozen** centroid in
+//! O(k·d), accumulates the key into the cluster's running coordinate sums /
+//! counts / score mass, and — every [`STREAM_RECENTER_EVERY`] folds — cheaply
+//! re-centers every centroid to its running mean (the Multipole-style
+//! "maintain centroid summaries under streaming prefill" move; see
+//! PAPERS.md arXiv:2509.10406, and Tactic's incremental key folding,
+//! arXiv:2502.12216).
+//!
+//! Everything here is a deterministic function of the *sequence of folded
+//! keys* (no RNG after seeding, serial arithmetic only), which is what makes
+//! a kernel built on it length-invariant over prefixes: folding keys
+//! `0..n` then `n..m` lands in exactly the same state as folding `0..m`,
+//! bit for bit, at any pool width.
+
+use super::Clustering;
+use crate::linalg::ops::sq_dist;
+use crate::linalg::Matrix;
+
+/// Folds between cheap re-centerings (centroid ← running mean). Position-
+/// based, so the re-center schedule — and therefore every downstream score —
+/// depends only on how many keys have been folded, never on where a prefill
+/// boundary fell.
+pub const STREAM_RECENTER_EVERY: usize = 64;
+
+/// Incremental centroid state: frozen assignment centroids plus the running
+/// per-cluster sums/counts/score-mass that re-centering and observability
+/// read. `Clone` is what lets decode sessions branch copy-on-write off one
+/// cached state.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StreamClustering {
+    /// Assignment centroids (k × d), frozen between re-centerings.
+    centroids: Matrix,
+    /// Running per-cluster coordinate sums (k × d) over every key ever
+    /// folded (seed batch included) — the re-centering source.
+    sums: Matrix,
+    /// Keys folded into each cluster (seed batch included).
+    counts: Vec<usize>,
+    /// Per-cluster accumulated score mass: Σ −‖x−µ‖² of its keys, scored
+    /// against the centroid that was frozen when each key arrived.
+    score_mass: Vec<f32>,
+    /// Folds since the last re-centering.
+    since_recenter: usize,
+    /// Re-center after this many folds (0 = centroids frozen forever).
+    recenter_every: usize,
+}
+
+impl StreamClustering {
+    /// Seed from a batch clustering of the prefix keys (`data` is the matrix
+    /// the clustering ran on — normalized keys for the k-means routes).
+    pub fn from_clustering(
+        c: &Clustering,
+        data: &Matrix,
+        recenter_every: usize,
+    ) -> StreamClustering {
+        let k = c.k();
+        let d = c.centroids.cols;
+        let mut sums = Matrix::zeros(k, d);
+        let mut counts = vec![0usize; k];
+        let mut score_mass = vec![0.0f32; k];
+        for i in 0..data.rows {
+            let a = c.assignment[i];
+            counts[a] += 1;
+            score_mass[a] -= sq_dist(data.row(i), c.centroids.row(a));
+            let srow = sums.row_mut(a);
+            for (s, x) in srow.iter_mut().zip(data.row(i)) {
+                *s += x;
+            }
+        }
+        StreamClustering {
+            centroids: c.centroids.clone(),
+            sums,
+            counts,
+            score_mass,
+            since_recenter: 0,
+            recenter_every,
+        }
+    }
+
+    /// Fold one key row: assign to the nearest frozen centroid (ties break
+    /// to the lowest cluster index), accumulate it, and return
+    /// `(cluster, score)` with `score = −‖x−µ‖²` — the same
+    /// closeness-to-centroid score Algorithm 1 ranks by. O(k·d).
+    pub fn fold_key(&mut self, row: &[f32]) -> (usize, f32) {
+        debug_assert_eq!(row.len(), self.centroids.cols, "fold_key dim mismatch");
+        let k = self.centroids.rows;
+        let mut best = 0usize;
+        let mut best_d = f32::INFINITY;
+        for c in 0..k {
+            let d = sq_dist(row, self.centroids.row(c));
+            if d < best_d {
+                best_d = d;
+                best = c;
+            }
+        }
+        self.counts[best] += 1;
+        self.score_mass[best] -= best_d;
+        let srow = self.sums.row_mut(best);
+        for (s, x) in srow.iter_mut().zip(row) {
+            *s += x;
+        }
+        self.since_recenter += 1;
+        if self.recenter_every > 0 && self.since_recenter >= self.recenter_every {
+            self.recenter();
+        }
+        (best, -best_d)
+    }
+
+    /// Cheap re-centering: every centroid snaps to its running mean (empty
+    /// clusters keep their frozen position). O(k·d) — no pass over the keys.
+    fn recenter(&mut self) {
+        for c in 0..self.centroids.rows {
+            if self.counts[c] == 0 {
+                continue;
+            }
+            let inv = 1.0 / self.counts[c] as f32;
+            let crow = self.centroids.row_mut(c);
+            for (cv, sv) in crow.iter_mut().zip(self.sums.row(c)) {
+                *cv = sv * inv;
+            }
+        }
+        self.since_recenter = 0;
+    }
+
+    pub fn k(&self) -> usize {
+        self.centroids.rows
+    }
+
+    pub fn dim(&self) -> usize {
+        self.centroids.cols
+    }
+
+    pub fn counts(&self) -> &[usize] {
+        &self.counts
+    }
+
+    pub fn score_mass(&self) -> &[f32] {
+        &self.score_mass
+    }
+
+    /// Raw parts for persistence: `(centroids, sums, counts, score_mass,
+    /// since_recenter, recenter_every)`.
+    #[allow(clippy::type_complexity)]
+    pub fn to_parts(&self) -> (&Matrix, &Matrix, &[usize], &[f32], usize, usize) {
+        (
+            &self.centroids,
+            &self.sums,
+            &self.counts,
+            &self.score_mass,
+            self.since_recenter,
+            self.recenter_every,
+        )
+    }
+
+    /// Rebuild from persisted parts (the restore path). Returns `None` on a
+    /// shape mismatch rather than panicking a warm prefill later.
+    pub fn from_parts(
+        centroids: Matrix,
+        sums: Matrix,
+        counts: Vec<usize>,
+        score_mass: Vec<f32>,
+        since_recenter: usize,
+        recenter_every: usize,
+    ) -> Option<StreamClustering> {
+        let k = centroids.rows;
+        if sums.rows != k
+            || sums.cols != centroids.cols
+            || counts.len() != k
+            || score_mass.len() != k
+        {
+            return None;
+        }
+        Some(StreamClustering {
+            centroids,
+            sums,
+            counts,
+            score_mass,
+            since_recenter,
+            recenter_every,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clustering::kmeans;
+    use crate::util::rng::Rng;
+
+    fn seeded(n: usize, d: usize, k: usize, seed: u64) -> (StreamClustering, Matrix) {
+        let mut rng = Rng::new(seed);
+        let data = Matrix::randn(n, d, 1.0, &mut rng);
+        let c = kmeans(&data, k, 10, &mut rng);
+        (StreamClustering::from_clustering(&c, &data, STREAM_RECENTER_EVERY), data)
+    }
+
+    #[test]
+    fn seed_counts_match_clustering_sizes() {
+        let mut rng = Rng::new(1);
+        let data = Matrix::randn(120, 6, 1.0, &mut rng);
+        let c = kmeans(&data, 5, 10, &mut rng);
+        let sc = StreamClustering::from_clustering(&c, &data, 0);
+        assert_eq!(sc.counts(), c.sizes().as_slice());
+        assert_eq!(sc.k(), 5);
+        // Score mass is −Σ distances² per cluster: totals must match the
+        // clustering objective.
+        let total: f32 = sc.score_mass().iter().sum();
+        assert!((total + c.objective).abs() < 1e-3 * c.objective.max(1.0));
+    }
+
+    #[test]
+    fn fold_assigns_nearest_and_accumulates() {
+        let (mut sc, _) = seeded(60, 4, 3, 2);
+        let before: usize = sc.counts().iter().sum();
+        let row = vec![0.25f32; 4];
+        let (cl, score) = sc.fold_key(&row);
+        assert!(cl < 3);
+        assert!(score <= 0.0);
+        assert_eq!(sc.counts().iter().sum::<usize>(), before + 1);
+    }
+
+    #[test]
+    fn folding_is_prefix_stable() {
+        // Folding a, then b ≡ folding the concatenation — bit for bit.
+        let (sc0, _) = seeded(50, 4, 4, 3);
+        let mut rng = Rng::new(4);
+        let extra = Matrix::randn(2 * STREAM_RECENTER_EVERY + 7, 4, 1.0, &mut rng);
+        let mut one = sc0.clone();
+        for i in 0..extra.rows {
+            one.fold_key(extra.row(i));
+        }
+        let mut two = sc0.clone();
+        for i in 0..extra.rows / 2 {
+            two.fold_key(extra.row(i));
+        }
+        for i in extra.rows / 2..extra.rows {
+            two.fold_key(extra.row(i));
+        }
+        assert_eq!(one, two);
+    }
+
+    #[test]
+    fn recenter_moves_centroids_toward_running_mean() {
+        let (mut sc, _) = seeded(40, 3, 2, 5);
+        let frozen = sc.centroids.clone();
+        // Fold a burst of identical far-away keys; after the re-center the
+        // nearest centroid must have moved toward them.
+        let far = vec![10.0f32, 10.0, 10.0];
+        for _ in 0..STREAM_RECENTER_EVERY {
+            sc.fold_key(&far);
+        }
+        assert!(sc.centroids.max_abs_diff(&frozen) > 0.1, "re-center never fired");
+    }
+
+    #[test]
+    fn parts_roundtrip() {
+        let (mut sc, _) = seeded(30, 4, 3, 6);
+        sc.fold_key(&[0.5; 4]);
+        let (c, s, n, m, sr, re) = sc.to_parts();
+        let back = StreamClustering::from_parts(
+            c.clone(),
+            s.clone(),
+            n.to_vec(),
+            m.to_vec(),
+            sr,
+            re,
+        )
+        .expect("parts round-trip");
+        assert_eq!(back, sc);
+        // Shape mismatches refuse to build.
+        assert!(StreamClustering::from_parts(
+            Matrix::zeros(3, 4),
+            Matrix::zeros(2, 4),
+            vec![0; 3],
+            vec![0.0; 3],
+            0,
+            0
+        )
+        .is_none());
+    }
+}

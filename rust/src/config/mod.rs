@@ -112,6 +112,10 @@ pub struct ServingConfig {
     /// Pre-score method for the coordinator's prescore manager.
     pub prescore_method: String,
     pub prescore_top_k: usize,
+    /// Algorithm 1 execution mode for derived `prescored_*` specs:
+    /// `"full"` (re-cluster the whole key set) or `"stream"` (prefix-stable
+    /// streaming pre-scoring — `[prescore] mode = "stream"`).
+    pub prescore_mode: String,
     /// Refresh the cached selection every R decode steps.
     pub prescore_refresh_every: usize,
     /// Fallback threshold δ of Algorithm 2.
@@ -152,6 +156,7 @@ impl Default for ServingConfig {
             prefix_persist_path: String::new(),
             prescore_method: "kmeans".into(),
             prescore_top_k: 64,
+            prescore_mode: "full".into(),
             prescore_refresh_every: 16,
             fallback_delta: 0.0,
             attention_spec: String::new(),
@@ -180,6 +185,7 @@ impl ServingConfig {
                 .to_string(),
             prescore_method: cfg.get_or("prescore", "method", &d.prescore_method).to_string(),
             prescore_top_k: cfg.usize_or("prescore", "top_k", d.prescore_top_k)?,
+            prescore_mode: cfg.get_or("prescore", "mode", &d.prescore_mode).to_string(),
             prescore_refresh_every: cfg
                 .usize_or("prescore", "refresh_every", d.prescore_refresh_every)?,
             fallback_delta: cfg.f64_or("prescore", "fallback_delta", d.fallback_delta)?,
@@ -201,7 +207,7 @@ impl ServingConfig {
     /// the legacy `variant` + `[prescore]` keys (`prescored_*` variants run
     /// Algorithm 2, everything else exact attention).
     pub fn attention_spec(&self) -> Result<crate::attention::AttentionSpec> {
-        use crate::attention::{AttentionSpec, PreScoredConfig};
+        use crate::attention::{AttentionSpec, PreScoreMode, PreScoredConfig};
         use crate::prescore::{Method, PreScoreConfig};
         if !self.attention_spec.is_empty() {
             return AttentionSpec::parse(&self.attention_spec);
@@ -210,14 +216,25 @@ impl ServingConfig {
             let method = Method::parse(&self.prescore_method).ok_or_else(|| {
                 anyhow::anyhow!("unknown [prescore] method '{}'", self.prescore_method)
             })?;
+            let mode = match self.prescore_mode.as_str() {
+                "" | "full" => PreScoreMode::Full,
+                "stream" => PreScoreMode::Stream,
+                other => {
+                    anyhow::bail!("[prescore] mode must be full or stream, got '{other}'")
+                }
+            };
             let prescore =
                 PreScoreConfig { method, top_k: self.prescore_top_k, ..Default::default() };
-            Ok(AttentionSpec::PreScored(PreScoredConfig {
+            let spec = AttentionSpec::PreScored(PreScoredConfig {
                 prescore,
                 fallback_delta: self.fallback_delta as f32,
+                mode,
                 decode_refresh_every: self.prescore_refresh_every,
                 ..Default::default()
-            }))
+            });
+            // Round through the grammar so mode/method combinations obey
+            // the same validation an explicit [attention] spec gets.
+            AttentionSpec::parse(&spec.to_string())
         } else {
             Ok(AttentionSpec::Exact)
         }
@@ -297,6 +314,34 @@ fallback_delta = 0.05
             ..Default::default()
         };
         assert!(bad.attention_spec().is_err());
+    }
+
+    #[test]
+    fn prescore_mode_derives_stream_spec() {
+        let cfg = Config::parse(
+            "[serving]\nvariant = \"prescored_k32\"\n[prescore]\nmethod = \"kmeans\"\n\
+             top_k = 32\nmode = \"stream\"\n",
+        )
+        .unwrap();
+        let sc = ServingConfig::from_config(&cfg).unwrap();
+        assert_eq!(sc.prescore_mode, "stream");
+        let spec = sc.attention_spec().unwrap();
+        assert!(spec.suffix_stable(), "stream derivation must be suffix-stable");
+        assert_eq!(spec.to_string(), "prescored:kmeans,top_k=32,mode=stream");
+        // Unknown modes and non-streamable methods fail the derivation.
+        let bad = ServingConfig {
+            variant: "prescored_k32".into(),
+            prescore_mode: "sideways".into(),
+            ..Default::default()
+        };
+        assert!(bad.attention_spec().is_err());
+        let bad_method = ServingConfig {
+            variant: "prescored_k32".into(),
+            prescore_method: "kmedian".into(),
+            prescore_mode: "stream".into(),
+            ..Default::default()
+        };
+        assert!(bad_method.attention_spec().is_err());
     }
 
     #[test]

@@ -398,8 +398,9 @@ impl Transformer {
     /// or re-hashed.
     ///
     /// For *suffix-stable* policies
-    /// ([`crate::attention::AttentionSpec::suffix_stable`]: exact/flash,
-    /// whose causal prefix rows are length-invariant) the returned rows
+    /// ([`crate::attention::AttentionSpec::suffix_stable`]: exact/flash and
+    /// `prescored:...,mode=stream`, whose causal prefix rows are
+    /// length-invariant) the returned rows
     /// equal the corresponding rows of a cold [`Transformer::begin_decode`]
     /// over the full token sequence — bitwise when every matmul lands on
     /// the same serial/tiled path in both runs (always at width 1). For

@@ -9,6 +9,7 @@
 
 use super::transformer::{gelu_tanh, layernorm};
 use super::weights::WeightStore;
+use crate::attention::decode::RESTRICTED_REFRESH_DEFAULT;
 use crate::attention::{AttentionBackend, AttentionInputs, AttentionSpec, RestrictedSelector};
 use crate::linalg::ops::matmul;
 use crate::linalg::Matrix;
@@ -63,27 +64,32 @@ impl VitAttnMode {
         match self {
             VitAttnMode::Exact => AttentionSpec::Exact,
             VitAttnMode::KMeansSampled { num_clusters, num_samples, seed } => {
-                AttentionSpec::Restricted(RestrictedSelector::Balanced {
-                    num_clusters: *num_clusters,
-                    num_samples: *num_samples,
-                    max_iters: 10,
-                    seed: *seed,
-                })
+                AttentionSpec::Restricted {
+                    selector: RestrictedSelector::Balanced {
+                        num_clusters: *num_clusters,
+                        num_samples: *num_samples,
+                        max_iters: 10,
+                        seed: *seed,
+                    },
+                    refresh: RESTRICTED_REFRESH_DEFAULT,
+                }
             }
-            VitAttnMode::LeverageTopK { k, exact } => {
-                AttentionSpec::Restricted(RestrictedSelector::Scored(PreScoreConfig {
+            VitAttnMode::LeverageTopK { k, exact } => AttentionSpec::Restricted {
+                selector: RestrictedSelector::Scored(PreScoreConfig {
                     method: Method::Leverage { exact: *exact },
                     top_k: *k,
                     ..Default::default()
-                }))
-            }
-            VitAttnMode::L2NormTopK { k } => {
-                AttentionSpec::Restricted(RestrictedSelector::Scored(PreScoreConfig {
+                }),
+                refresh: RESTRICTED_REFRESH_DEFAULT,
+            },
+            VitAttnMode::L2NormTopK { k } => AttentionSpec::Restricted {
+                selector: RestrictedSelector::Scored(PreScoreConfig {
                     method: Method::L2Norm,
                     top_k: *k,
                     ..Default::default()
-                }))
-            }
+                }),
+                refresh: RESTRICTED_REFRESH_DEFAULT,
+            },
         }
     }
 }

@@ -21,6 +21,9 @@
 //! * Clustering runs a fixed small number of Lloyd iterations (I ≤ 10).
 
 pub mod leverage;
+pub mod stream;
+
+pub use stream::{StreamArtifacts, StreamPrescorer};
 
 use crate::clustering::{
     gaussian_kernel_kmeans, kernel_kmeans::kernel_distances, kmeans, kmeans_best_of, kmedian,
@@ -148,6 +151,38 @@ pub struct PreScoreResult {
     pub method: Method,
 }
 
+/// RNG stream id of Algorithm 1's clustering randomness — shared with the
+/// streaming seed clustering ([`stream::StreamPrescorer`]) so both draw the
+/// same sequence for the same config.
+pub(crate) const PRESCORE_RNG_STREAM: u64 = 0x9e3779b97f4a7c15;
+
+/// Algorithm 1's cluster count: `clusters` override, or the paper's default
+/// k = d + 1, clamped to the point count.
+pub(crate) fn prescore_cluster_count(clusters: Option<usize>, d: usize, n: usize) -> usize {
+    clusters.unwrap_or(d + 1).max(1).min(n)
+}
+
+/// The ℓ2-centroid clustering route of Algorithm 1 (k-means with best-of-3
+/// restarts; mini-batch with its iteration floor) — single-sourced so the
+/// batch path below and the streaming seed clustering can never drift.
+pub(crate) fn l2_cluster_route(
+    kp: &Matrix,
+    method: Method,
+    k_clusters: usize,
+    max_iters: usize,
+    rng: &mut Rng,
+) -> crate::clustering::Clustering {
+    match method {
+        // Best-of-3 restarts: cheap insurance against unlucky seeding
+        // while staying within the paper's O(n·d·k·I) budget.
+        Method::KMeans => kmeans_best_of(kp, k_clusters, max_iters, 3, rng),
+        Method::MiniBatch { batch } => {
+            minibatch_kmeans(kp, k_clusters, batch, max_iters.max(20), rng)
+        }
+        other => unreachable!("l2_cluster_route on non-ℓ2-centroid method {other:?}"),
+    }
+}
+
 /// Run Algorithm 1 on a key matrix.
 ///
 /// Returns the `top_k` selected key indices in ascending order plus the full
@@ -157,7 +192,7 @@ pub struct PreScoreResult {
 pub fn prescore(keys: &Matrix, cfg: &PreScoreConfig) -> PreScoreResult {
     let n = keys.rows;
     let d = keys.cols;
-    let mut rng = Rng::with_stream(cfg.seed, 0x9e3779b97f4a7c15);
+    let mut rng = Rng::with_stream(cfg.seed, PRESCORE_RNG_STREAM);
 
     if cfg.top_k == 0 || cfg.top_k >= n {
         // No filtering: identity selection.
@@ -177,17 +212,15 @@ pub fn prescore(keys: &Matrix, cfg: &PreScoreConfig) -> PreScoreResult {
         kp.l2_normalize_rows(1e-12);
     }
 
-    let k_clusters = cfg.clusters.unwrap_or(d + 1).max(1).min(n);
+    let k_clusters = prescore_cluster_count(cfg.clusters, d, n);
     let s = cfg.top_k.min(n);
 
     // Scores: higher = more informative. For clustering methods, a key's
     // informativeness is its *closeness* to its centroid (the paper selects
     // "the s keys nearest to their centroids"), so score = −distance.
     let scores: Vec<f32> = match cfg.method {
-        Method::KMeans => {
-            // Best-of-3 restarts: cheap insurance against unlucky seeding
-            // while staying within the paper's O(n·d·k·I) budget.
-            let c = kmeans_best_of(&kp, k_clusters, cfg.max_iters, 3, &mut rng);
+        Method::KMeans | Method::MiniBatch { .. } => {
+            let c = l2_cluster_route(&kp, cfg.method, k_clusters, cfg.max_iters, &mut rng);
             c.distances_sq(&kp).into_iter().map(|d| -d).collect()
         }
         Method::KMedian => {
@@ -229,10 +262,6 @@ pub fn prescore(keys: &Matrix, cfg: &PreScoreConfig) -> PreScoreResult {
                     )
                 })
                 .collect()
-        }
-        Method::MiniBatch { batch } => {
-            let c = minibatch_kmeans(&kp, k_clusters, batch, cfg.max_iters.max(20), &mut rng);
-            c.distances_sq(&kp).into_iter().map(|d| -d).collect()
         }
         Method::L2Norm => keys.row_sq_norms(), // note: *unnormalized* norms
     };
@@ -276,36 +305,8 @@ pub fn prescore_balanced(
     let c = kmeans(&kp, num_clusters, max_iters, &mut rng);
     let dist = c.distances_sq(&kp);
     let k = c.k();
-    // Budget per cluster proportional to cluster size, ≥1 for non-empty.
     let sizes = c.sizes();
-    let mut budget = vec![0usize; k];
-    let mut assigned = 0usize;
-    for ci in 0..k {
-        if sizes[ci] > 0 {
-            budget[ci] = ((num_samples * sizes[ci]) / n).max(1).min(sizes[ci]);
-            assigned += budget[ci];
-        }
-    }
-    // Distribute any remaining budget to the largest clusters first.
-    let mut order: Vec<usize> = (0..k).collect();
-    order.sort_by_key(|&ci| std::cmp::Reverse(sizes[ci]));
-    let mut rem = num_samples.saturating_sub(assigned);
-    'outer: while rem > 0 {
-        let mut progressed = false;
-        for &ci in &order {
-            if budget[ci] < sizes[ci] {
-                budget[ci] += 1;
-                rem -= 1;
-                progressed = true;
-                if rem == 0 {
-                    break 'outer;
-                }
-            }
-        }
-        if !progressed {
-            break;
-        }
-    }
+    let budget = proportional_budgets(&sizes, num_samples);
     let mut selected = Vec::with_capacity(num_samples);
     for ci in 0..k {
         if budget[ci] == 0 {
@@ -318,9 +319,63 @@ pub fn prescore_balanced(
         }
     }
     selected.sort_unstable();
-    selected.truncate(num_samples);
+    debug_assert_eq!(selected.len(), num_samples.min(n), "budget apportionment drifted");
     let scores: Vec<f32> = dist.into_iter().map(|d| -d).collect();
     PreScoreResult { selected, scores, method: Method::KMeans }
+}
+
+/// Size-proportional sample apportionment with deterministic largest-
+/// remainder rounding. The returned budgets sum to **exactly**
+/// `min(num_samples, Σ sizes)` and never exceed a cluster's size.
+///
+/// (The previous per-cluster `.max(1)` floor made the assigned total
+/// overshoot `num_samples` whenever there were more non-empty clusters than
+/// samples — the sampling budget then silently exceeded the contract and a
+/// final index-ordered truncation dropped whole clusters' picks.) Rounding
+/// goes to the largest fractional remainder first, ties broken toward the
+/// larger cluster and then the lower index, so the split is a pure function
+/// of `(sizes, num_samples)`.
+pub fn proportional_budgets(sizes: &[usize], num_samples: usize) -> Vec<usize> {
+    let k = sizes.len();
+    let n: usize = sizes.iter().sum();
+    let mut budget = vec![0usize; k];
+    let total = num_samples.min(n);
+    if total == 0 {
+        return budget;
+    }
+    // Floor of the exact proportional share (capped at the cluster size —
+    // only binding when num_samples > n, where the cap makes the floors sum
+    // to n = total already).
+    let mut assigned = 0usize;
+    for ci in 0..k {
+        budget[ci] = ((num_samples * sizes[ci]) / n).min(sizes[ci]);
+        assigned += budget[ci];
+    }
+    // Largest-remainder pass over clusters with spare capacity.
+    let mut order: Vec<usize> = (0..k).collect();
+    order.sort_by(|&a, &b| {
+        let ra = (num_samples * sizes[a]) % n;
+        let rb = (num_samples * sizes[b]) % n;
+        rb.cmp(&ra).then(sizes[b].cmp(&sizes[a])).then(a.cmp(&b))
+    });
+    let mut rem = total - assigned;
+    while rem > 0 {
+        let mut progressed = false;
+        for &ci in &order {
+            if rem == 0 {
+                break;
+            }
+            if budget[ci] < sizes[ci] {
+                budget[ci] += 1;
+                rem -= 1;
+                progressed = true;
+            }
+        }
+        if !progressed {
+            break; // unreachable: Σ budget < total ≤ Σ sizes ⇒ spare room
+        }
+    }
+    budget
 }
 
 #[cfg(test)]
@@ -469,6 +524,70 @@ mod tests {
         let sel = vec![1, 3, 4];
         let comp = complement(&sel, 6);
         assert_eq!(comp, vec![0, 2, 5]);
+    }
+
+    #[test]
+    fn proportional_budgets_exact_total_over_adversarial_splits() {
+        use crate::util::proptest_lite::{run_property_noshrink, Config};
+        use crate::util::rng::Rng;
+        run_property_noshrink(
+            "proportional-budgets",
+            Config { cases: 60, ..Default::default() },
+            |r| {
+                let k = r.range(1, 40);
+                // Adversarial shape: mostly tiny clusters (the .max(1)
+                // overshoot regime), a few large, some empty.
+                let mut rng = Rng::new(r.next_u64());
+                let sizes: Vec<usize> = (0..k)
+                    .map(|_| match rng.usize(4) {
+                        0 => 0,
+                        1 => 1,
+                        2 => rng.usize(3),
+                        _ => rng.usize(50),
+                    })
+                    .collect();
+                let ns = rng.usize(60);
+                (sizes, ns)
+            },
+            |(sizes, ns)| {
+                let n: usize = sizes.iter().sum();
+                let b = proportional_budgets(sizes, *ns);
+                let total: usize = b.iter().sum();
+                if total != (*ns).min(n) {
+                    return Err(format!(
+                        "sizes {sizes:?} ns {ns}: total {total} != {}",
+                        (*ns).min(n)
+                    ));
+                }
+                for (ci, (&bi, &si)) in b.iter().zip(sizes.iter()).enumerate() {
+                    if bi > si {
+                        return Err(format!("cluster {ci}: budget {bi} > size {si}"));
+                    }
+                }
+                if b != proportional_budgets(sizes, *ns) {
+                    return Err("non-deterministic".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn many_tiny_clusters_no_longer_overshoot() {
+        // Regression for the `.max(1)` floor: 20 singleton clusters with a
+        // budget of 5 used to assign 20 before the remainder pass.
+        let b = proportional_budgets(&[1; 20], 5);
+        assert_eq!(b.iter().sum::<usize>(), 5);
+        assert!(b.iter().all(|&x| x <= 1));
+        // End to end: more clusters than samples still draws exactly the
+        // requested count (no silent overshoot, no index-biased truncation).
+        let mut rng = Rng::new(12);
+        let data = Matrix::randn(48, 4, 1.0, &mut rng);
+        let r = prescore_balanced(&data, 25, 8, 10, 3);
+        assert_eq!(r.selected.len(), 8, "{:?}", r.selected);
+        let mut uniq = r.selected.clone();
+        uniq.dedup();
+        assert_eq!(uniq, r.selected, "sorted unique");
     }
 
     #[test]

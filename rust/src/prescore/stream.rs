@@ -1,0 +1,506 @@
+//! Streaming pre-scorer: Algorithm 1 made *prefix-stable*.
+//!
+//! The batch [`prescore`](super::prescore) clusters the **full** key set, so
+//! every key's score — and therefore every attention row — depends on the
+//! whole context; that is exactly why the full-cluster PreScored kernel is
+//! not suffix-stable and the prefix cache can only serve it full-length
+//! hits. The [`StreamPrescorer`] instead processes keys **in sequence
+//! order**:
+//!
+//! 1. *Warmup* — while `n ≤ top_k` the selection is the identity (the same
+//!    "no filtering" convention batch prescore uses) and the raw rows are
+//!    buffered.
+//! 2. *Seed* — the first time `n = top_k + 1`, the buffered prefix keys are
+//!    batch-clustered exactly like the prefill clustering (same method
+//!    route, same RNG stream as [`prescore`](super::prescore)), scored, and
+//!    the top-k selection is drawn from those scores. The clustering
+//!    becomes a [`StreamClustering`].
+//! 3. *Fold* — every later key is folded into the stream state in O(k·d)
+//!    (nearest frozen centroid, running-mean re-centering) and *merged*
+//!    into the selection: it enters iff its score beats the current
+//!    minimum, evicting that minimum — an O(|S|) selection merge, never a
+//!    re-cluster over all n keys.
+//!
+//! Every step is a deterministic serial function of the key sequence, so a
+//! kernel that derives row `i`'s selection from the state after folding key
+//! `i` has length-invariant prefix rows — the `mode=stream` suffix-stability
+//! contract (see `AttentionSpec::suffix_stable`).
+//!
+//! Supported methods: `kmeans`, `minibatch` (ℓ2 centroid folding) and
+//! `l2norm` (trivially streaming — a key's score is its own squared norm).
+//! Metrics without an ℓ2 centroid-mean update (k-median, ℓp, kernel
+//! k-means) and the leverage routes have no cheap fold; the spec parser
+//! rejects them in stream mode.
+
+use super::{Method, PreScoreConfig};
+use crate::clustering::{StreamClustering, STREAM_RECENTER_EVERY};
+use crate::linalg::ops::top_k_indices;
+use crate::linalg::Matrix;
+use crate::util::rng::Rng;
+
+/// Identity-phase placeholder score (mirrors batch prescore's `vec![1.0]`
+/// identity scores); replaced wholesale when the seed clustering runs.
+const WARMUP_SCORE: f32 = 1.0;
+
+/// How the prescorer scores keys after (or instead of) the warmup phase.
+#[derive(Debug, Clone, PartialEq)]
+enum Scorer {
+    /// Identity warmup: raw rows buffered (flat, `d` per row) until the
+    /// budget is first exceeded.
+    Warmup(Vec<f32>),
+    /// Centroid-stream scoring (`kmeans` / `minibatch` seeds).
+    Clustered(StreamClustering),
+    /// ℓ2-norm scoring — stateless.
+    Norms,
+}
+
+/// The persistable data half of a [`StreamPrescorer`] (configs/seeds are
+/// NOT here — the restore path resupplies them, so a store can never drift
+/// from the serving config). Selection *indices* live in
+/// [`crate::attention::DecodeArtifacts::selection`]; this carries the
+/// aligned scores plus the clustering state.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct StreamArtifacts {
+    /// 0 = warmup, 1 = clustered, 2 = norms (`Scorer` tag).
+    pub scorer: u8,
+    /// Buffered raw rows (flat) — warmup only.
+    pub warmup: Vec<f32>,
+    /// Clustered state: centroids then sums, both flat k×d — clustered only.
+    pub centroids: Vec<f32>,
+    pub sums: Vec<f32>,
+    pub counts: Vec<u32>,
+    pub score_mass: Vec<f32>,
+    pub since_recenter: u32,
+    /// Scores aligned with the exported selection.
+    pub sel_scores: Vec<f32>,
+    /// Keys folded so far (= context positions covered).
+    pub folded: u32,
+}
+
+/// Streaming replacement for `prescore`: one instance per layer·head decode
+/// state, folded forward one key at a time.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StreamPrescorer {
+    cfg: PreScoreConfig,
+    d: usize,
+    scorer: Scorer,
+    /// Current selection, ascending positions.
+    selection: Vec<usize>,
+    /// Scores aligned with `selection`.
+    sel_scores: Vec<f32>,
+    /// Keys folded so far.
+    folded: usize,
+}
+
+impl StreamPrescorer {
+    /// Whether `method` has a streaming fold (the spec parser gates
+    /// `mode=stream` on this).
+    pub fn supports(method: Method) -> bool {
+        matches!(
+            method,
+            Method::KMeans | Method::MiniBatch { .. } | Method::L2Norm
+        )
+    }
+
+    /// Fresh state over a `d`-dimensional key stream. Panics on an
+    /// unsupported method — the spec parser is the guard.
+    pub fn new(cfg: PreScoreConfig, d: usize) -> StreamPrescorer {
+        assert!(
+            Self::supports(cfg.method),
+            "prescore method {:?} has no streaming fold (mode=stream supports \
+             kmeans | minibatch | l2norm)",
+            cfg.method
+        );
+        StreamPrescorer {
+            cfg,
+            d,
+            scorer: Scorer::Warmup(Vec::new()),
+            selection: Vec::new(),
+            sel_scores: Vec::new(),
+            folded: 0,
+        }
+    }
+
+    /// Keys folded so far.
+    pub fn len(&self) -> usize {
+        self.folded
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.folded == 0
+    }
+
+    /// Current selection (ascending). Identity during warmup; exactly
+    /// `top_k` once seeded (for `top_k > 0`).
+    pub fn selection(&self) -> &[usize] {
+        &self.selection
+    }
+
+    /// Fold the next key row (sequence order). O(k·d + |S|).
+    pub fn fold(&mut self, row: &[f32]) {
+        debug_assert_eq!(row.len(), self.d, "fold dim mismatch");
+        let pos = self.folded;
+        self.folded += 1;
+        let top_k = self.cfg.top_k;
+        if top_k == 0 {
+            // The paper's "no filtering" convention: identity selection.
+            self.selection.push(pos);
+            self.sel_scores.push(WARMUP_SCORE);
+            return;
+        }
+        let score = match &mut self.scorer {
+            Scorer::Warmup(buf) => {
+                buf.extend_from_slice(row);
+                self.selection.push(pos);
+                self.sel_scores.push(WARMUP_SCORE);
+                if self.folded == top_k + 1 {
+                    self.seed();
+                }
+                return;
+            }
+            Scorer::Clustered(sc) => {
+                if self.cfg.normalize {
+                    let mut r = row.to_vec();
+                    normalize_row(&mut r);
+                    sc.fold_key(&r).1
+                } else {
+                    sc.fold_key(row).1
+                }
+            }
+            Scorer::Norms => row.iter().map(|x| x * x).sum(),
+        };
+        self.merge(pos, score);
+    }
+
+    /// Fold every not-yet-folded key of `k` (rows `len()..k.rows`) — the
+    /// decode-refresh / replay helper. O(|new keys|·k·d), independent of the
+    /// prefix length.
+    pub fn fold_to(&mut self, k: &Matrix) {
+        for pos in self.folded..k.rows {
+            self.fold(k.row(pos));
+        }
+    }
+
+    /// First crossing of the budget: batch-cluster the buffered prefix keys
+    /// exactly as the prefill clustering would (same method route and RNG
+    /// stream as [`super::prescore`]), score them, and keep the top-k.
+    fn seed(&mut self) {
+        let Scorer::Warmup(buf) = &self.scorer else {
+            unreachable!("seed() outside warmup")
+        };
+        let n = self.folded;
+        debug_assert_eq!(buf.len(), n * self.d, "warmup buffer out of sync");
+        let raw = Matrix::from_vec(n, self.d, buf.clone());
+        let (next, scores) = match self.cfg.method {
+            Method::L2Norm => (Scorer::Norms, raw.row_sq_norms()),
+            method => {
+                let mut kp = raw;
+                if self.cfg.normalize {
+                    kp.l2_normalize_rows(1e-12);
+                }
+                // Exactly the batch prescore() route: same cluster count,
+                // same RNG stream, same per-method clustering call — all
+                // single-sourced in prescore/mod.rs so they cannot drift.
+                let k_clusters = super::prescore_cluster_count(self.cfg.clusters, self.d, n);
+                let mut rng = Rng::with_stream(self.cfg.seed, super::PRESCORE_RNG_STREAM);
+                let c =
+                    super::l2_cluster_route(&kp, method, k_clusters, self.cfg.max_iters, &mut rng);
+                let scores: Vec<f32> =
+                    c.distances_sq(&kp).into_iter().map(|d| -d).collect();
+                (
+                    Scorer::Clustered(StreamClustering::from_clustering(
+                        &c,
+                        &kp,
+                        STREAM_RECENTER_EVERY,
+                    )),
+                    scores,
+                )
+            }
+        };
+        let mut selection = top_k_indices(&scores, self.cfg.top_k);
+        selection.sort_unstable();
+        self.sel_scores = selection.iter().map(|&i| scores[i]).collect();
+        self.selection = selection;
+        self.scorer = next;
+    }
+
+    /// Selection merge: the new key enters iff its score beats the current
+    /// minimum (strictly — ties keep the incumbent), evicting the earliest
+    /// position among the minima. Keeps `selection` ascending because the
+    /// new position is always the largest.
+    fn merge(&mut self, pos: usize, score: f32) {
+        if self.selection.len() < self.cfg.top_k {
+            self.selection.push(pos);
+            self.sel_scores.push(score);
+            return;
+        }
+        let mut mi = 0usize;
+        for i in 1..self.sel_scores.len() {
+            if self.sel_scores[i] < self.sel_scores[mi] {
+                mi = i;
+            }
+        }
+        if score > self.sel_scores[mi] {
+            self.selection.remove(mi);
+            self.sel_scores.remove(mi);
+            self.selection.push(pos);
+            self.sel_scores.push(score);
+        }
+    }
+
+    /// Export the persistable data half (pair with the selection indices the
+    /// decode artifacts already carry).
+    pub fn export(&self) -> StreamArtifacts {
+        let mut art = StreamArtifacts {
+            sel_scores: self.sel_scores.clone(),
+            folded: self.folded as u32,
+            ..Default::default()
+        };
+        match &self.scorer {
+            Scorer::Warmup(buf) => {
+                art.scorer = 0;
+                art.warmup = buf.clone();
+            }
+            Scorer::Clustered(sc) => {
+                art.scorer = 1;
+                let (centroids, sums, counts, mass, since, _) = sc.to_parts();
+                art.centroids = centroids.data.clone();
+                art.sums = sums.data.clone();
+                art.counts = counts.iter().map(|&c| c as u32).collect();
+                art.score_mass = mass.to_vec();
+                art.since_recenter = since as u32;
+            }
+            Scorer::Norms => art.scorer = 2,
+        }
+        art
+    }
+
+    /// Rebuild from persisted artifacts + the selection the decode
+    /// artifacts carry. `None` on any shape/tag mismatch (the persist
+    /// loader surfaces it as a restore failure).
+    pub fn restore(
+        cfg: PreScoreConfig,
+        d: usize,
+        selection: &[usize],
+        art: &StreamArtifacts,
+    ) -> Option<StreamPrescorer> {
+        if !Self::supports(cfg.method) || art.sel_scores.len() != selection.len() {
+            return None;
+        }
+        let scorer = match art.scorer {
+            0 => {
+                // Warmup buffers one raw row per folded key — except under
+                // top_k = 0, where folds are identity-only and buffer
+                // nothing. A store whose buffer disagrees with its fold
+                // count, or that claims a warmup past the seed boundary
+                // (seeding fires at exactly top_k + 1 folds, so a warmup
+                // state with folded > top_k could never have been exported
+                // and would never seed), must be refused here, not
+                // mis-serve or panic later.
+                let expected = if cfg.top_k == 0 { 0 } else { art.folded as usize * d };
+                if art.warmup.len() != expected {
+                    return None;
+                }
+                if cfg.top_k != 0 && art.folded as usize > cfg.top_k {
+                    return None;
+                }
+                Scorer::Warmup(art.warmup.clone())
+            }
+            1 => {
+                // A clustered state with no centroids can never have been
+                // exported (seeding clamps k ≥ 1); folding into it would
+                // panic, so refuse the store here. Every companion array
+                // must agree on k BEFORE the Matrix constructors run —
+                // `Matrix::from_vec` asserts, and a corrupt store must be
+                // refused, not panic the load.
+                if d == 0 || art.centroids.is_empty() || art.centroids.len() % d != 0 {
+                    return None;
+                }
+                let k = art.centroids.len() / d;
+                if art.sums.len() != art.centroids.len()
+                    || art.counts.len() != k
+                    || art.score_mass.len() != k
+                {
+                    return None;
+                }
+                Scorer::Clustered(StreamClustering::from_parts(
+                    Matrix::from_vec(k, d, art.centroids.clone()),
+                    Matrix::from_vec(k, d, art.sums.clone()),
+                    art.counts.iter().map(|&c| c as usize).collect(),
+                    art.score_mass.clone(),
+                    art.since_recenter as usize,
+                    STREAM_RECENTER_EVERY,
+                )?)
+            }
+            2 => Scorer::Norms,
+            _ => return None,
+        };
+        Some(StreamPrescorer {
+            cfg,
+            d,
+            scorer,
+            selection: selection.to_vec(),
+            sel_scores: art.sel_scores.clone(),
+            folded: art.folded as usize,
+        })
+    }
+}
+
+/// ℓ2-normalize one row in place — elementwise identical to
+/// [`Matrix::l2_normalize_rows`] with `eps = 1e-12`, so a key folded
+/// incrementally is normalized exactly as the batch path would normalize it.
+fn normalize_row(row: &mut [f32]) {
+    let norm = row.iter().map(|x| x * x).sum::<f32>().sqrt();
+    if norm > 1e-12 {
+        let inv = 1.0 / norm;
+        for v in row.iter_mut() {
+            *v *= inv;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn cfg(top_k: usize) -> PreScoreConfig {
+        PreScoreConfig { top_k, seed: 7, ..Default::default() }
+    }
+
+    fn keys(n: usize, d: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        Matrix::randn(n, d, 1.0, &mut rng)
+    }
+
+    #[test]
+    fn warmup_is_identity_then_seeds_to_budget() {
+        let k = keys(40, 6, 1);
+        let mut p = StreamPrescorer::new(cfg(12), 6);
+        for i in 0..12 {
+            p.fold(k.row(i));
+            assert_eq!(p.selection(), (0..=i).collect::<Vec<_>>().as_slice());
+        }
+        p.fold(k.row(12)); // crosses the budget → seed clustering fires
+        assert_eq!(p.selection().len(), 12);
+        for i in 13..40 {
+            p.fold(k.row(i));
+            assert_eq!(p.selection().len(), 12, "selection stays at top_k");
+        }
+        let sel = p.selection();
+        assert!(sel.windows(2).all(|w| w[0] < w[1]), "ascending: {sel:?}");
+        assert!(sel.iter().all(|&j| j < 40));
+    }
+
+    #[test]
+    fn top_k_zero_is_identity_forever() {
+        let k = keys(30, 4, 2);
+        let mut p = StreamPrescorer::new(cfg(0), 4);
+        p.fold_to(&k);
+        assert_eq!(p.selection(), (0..30).collect::<Vec<_>>().as_slice());
+    }
+
+    #[test]
+    fn folding_is_prefix_stable() {
+        // fold_to in one go ≡ two gos ≡ per-row — bitwise.
+        let k = keys(90, 5, 3);
+        for method in [Method::KMeans, Method::MiniBatch { batch: 16 }, Method::L2Norm] {
+            let c = PreScoreConfig { method, ..cfg(16) };
+            let mut a = StreamPrescorer::new(c.clone(), 5);
+            a.fold_to(&k);
+            let mut b = StreamPrescorer::new(c.clone(), 5);
+            b.fold_to(&k.slice_rows(0, 37));
+            b.fold_to(&k);
+            assert_eq!(a, b, "{method:?}");
+        }
+    }
+
+    #[test]
+    fn seed_clustering_matches_batch_prescore_selection() {
+        // At the seed boundary (n = top_k + 1) the streamed state has run
+        // exactly the prefill clustering, so its selection must equal batch
+        // prescore's over the same keys — pins the shared cluster route
+        // (count formula, RNG stream, per-method call) against drift.
+        let k = keys(40, 6, 9);
+        for method in [Method::KMeans, Method::MiniBatch { batch: 16 }] {
+            let c = PreScoreConfig { method, ..cfg(12) };
+            let mut p = StreamPrescorer::new(c.clone(), 6);
+            p.fold_to(&k.slice_rows(0, 13)); // crosses the budget → seeds
+            let batch = super::super::prescore(&k.slice_rows(0, 13), &c);
+            assert_eq!(p.selection(), batch.selected.as_slice(), "{method:?}");
+        }
+    }
+
+    #[test]
+    fn l2norm_stream_matches_batch_selection() {
+        // ℓ2-norm scores are per-key, so the streamed top-k equals batch
+        // prescore's selection exactly.
+        let k = keys(64, 4, 4);
+        let c = PreScoreConfig { method: Method::L2Norm, ..cfg(10) };
+        let mut p = StreamPrescorer::new(c.clone(), 4);
+        p.fold_to(&k);
+        let batch = super::super::prescore(&k, &c);
+        assert_eq!(p.selection(), batch.selected.as_slice());
+    }
+
+    #[test]
+    fn merge_evicts_minimum_only_on_strict_beat() {
+        let c = PreScoreConfig { method: Method::L2Norm, ..cfg(2) };
+        let mut p = StreamPrescorer::new(c, 1);
+        // rows are 1-d; score = x².
+        p.fold(&[3.0]); // warmup
+        p.fold(&[1.0]); // warmup
+        p.fold(&[2.0]); // seeds over {9,1,4} → keep {0,2}
+        assert_eq!(p.selection(), &[0, 2]);
+        p.fold(&[2.0]); // score 4 == min 4 → tie keeps incumbent
+        assert_eq!(p.selection(), &[0, 2]);
+        p.fold(&[5.0]); // 25 > 4 → evict pos 2
+        assert_eq!(p.selection(), &[0, 4]);
+    }
+
+    #[test]
+    fn export_restore_roundtrip_all_phases() {
+        let k = keys(50, 6, 5);
+        for (method, upto) in [
+            (Method::KMeans, 8usize),  // warmup phase (top_k=16 below)
+            (Method::KMeans, 50),      // clustered phase
+            (Method::L2Norm, 50),      // norms phase
+        ] {
+            let c = PreScoreConfig { method, ..cfg(16) };
+            let mut p = StreamPrescorer::new(c.clone(), 6);
+            p.fold_to(&k.slice_rows(0, upto));
+            let art = p.export();
+            let back = StreamPrescorer::restore(c.clone(), 6, p.selection(), &art)
+                .expect("restore");
+            assert_eq!(back, p, "{method:?} upto {upto}");
+            // Restored state keeps folding identically.
+            let mut cont = back;
+            let mut orig = p;
+            cont.fold(&[0.5; 6]);
+            orig.fold(&[0.5; 6]);
+            assert_eq!(cont, orig);
+        }
+        // Mismatched selection/scores refuse to restore.
+        let c = cfg(4);
+        let p = StreamPrescorer::new(c.clone(), 6);
+        let art = p.export();
+        assert!(StreamPrescorer::restore(c, 6, &[0, 1], &art).is_none());
+        // A warmup buffer inconsistent with the fold count is refused at
+        // restore time (it would otherwise panic a later seed()).
+        let c = cfg(16);
+        let mut p = StreamPrescorer::new(c.clone(), 6);
+        p.fold_to(&k.slice_rows(0, 4));
+        let mut art = p.export();
+        art.warmup.truncate(6); // one row left for four folded keys
+        assert!(StreamPrescorer::restore(c, 6, p.selection(), &art).is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "no streaming fold")]
+    fn unsupported_method_panics() {
+        StreamPrescorer::new(
+            PreScoreConfig { method: Method::KMedian, ..cfg(8) },
+            4,
+        );
+    }
+}

@@ -254,8 +254,10 @@ struct DecodeEngine {
     /// not prefix-reusable).
     cache: Option<PrefixCache>,
     /// Partial-prefix hits allowed? Only for suffix-stable kernels
-    /// (exact/flash); rank/selection kernels dedup at full length only —
-    /// see `AttentionSpec::suffix_stable`.
+    /// (exact/flash, and `prescored:...,mode=stream` whose streaming
+    /// selection makes prefix rows length-invariant); the remaining
+    /// rank/selection kernels dedup at full length only — see
+    /// `AttentionSpec::suffix_stable`.
     suffix_stable: bool,
     /// Admitted but not yet prefilled.
     pending: HashMap<u64, Job>,
@@ -281,15 +283,31 @@ impl DecodeEngine {
                 ..Default::default()
             }
         });
-        // One refresh policy end to end: `prescored:` specs own their period
-        // (explicit `refresh=` or the legacy-key derivation); for every
-        // other kernel the legacy `[prescore] refresh_every` applies. The
+        // One refresh policy end to end: selection-cached specs own their
+        // period (`prescored:` via `refresh=` / the legacy-key derivation,
+        // `restricted:` via its `refresh=` key); the legacy
+        // `[prescore] refresh_every` only applies to specs without one. The
         // manager drives both the states (set_refresh_every at prefill) and
         // the KV-cache selection-mirror cadence, so they can never drift.
-        if let AttentionSpec::PreScored(ps) = spec {
-            manager_cfg.refresh_every = ps.decode_refresh_every;
-            manager_cfg.top_k = ps.prescore.top_k;
-            manager_cfg.fallback_delta = ps.fallback_delta;
+        match spec {
+            AttentionSpec::PreScored(ps) => {
+                manager_cfg.refresh_every = ps.decode_refresh_every;
+                manager_cfg.top_k = ps.prescore.top_k;
+                manager_cfg.fallback_delta = ps.fallback_delta;
+            }
+            AttentionSpec::Restricted { refresh, .. }
+                if *refresh != crate::attention::decode::RESTRICTED_REFRESH_DEFAULT =>
+            {
+                // Previously set_refresh_every stomped the spec's period
+                // with the legacy key at prefill — the serving half of the
+                // "refresh unreachable from the restricted grammar" bug.
+                // Only a non-default `refresh=` wins: an omitted key is
+                // indistinguishable from the default, and existing configs
+                // that steer restricted cadence via `[prescore]
+                // refresh_every` must keep working.
+                manager_cfg.refresh_every = *refresh;
+            }
+            _ => {}
         }
         let slots = model.cfg.n_layers * model.cfg.n_heads;
         let model = Arc::new(model);
@@ -673,6 +691,20 @@ fn load_substrate_model(cfg: &ServingConfig) -> Option<Transformer> {
 /// The δ-threshold and method are not encoded in the variant name and
 /// cannot be cross-checked.
 fn validate_spec_for_variant(spec: &AttentionSpec, variant: &str) -> Result<()> {
+    use crate::attention::PreScoreMode;
+    // Streaming pre-scoring is a substrate-only kernel: the prescored_k<K>
+    // artifacts bake in the full-recluster Algorithm 2, so a stream spec
+    // would misdescribe what executes (substrate-only servers skip this
+    // gate entirely and serve stream specs end to end).
+    if let AttentionSpec::PreScored(cfg) = spec {
+        if cfg.mode == PreScoreMode::Stream && variant.starts_with("prescored") {
+            anyhow::bail!(
+                "attention spec '{spec}' uses mode=stream, which has no serving \
+                 artifact — prescored_k<K> artifacts bake in the full re-cluster; \
+                 stream specs run on the pure-Rust substrate (weights.bin) only"
+            );
+        }
+    }
     if let Some(k) =
         variant.strip_prefix("prescored_k").and_then(|k| k.parse::<usize>().ok())
     {
@@ -1234,6 +1266,15 @@ mod tests {
         };
         let err = ScoringServer::start(cfg).err().expect("must fail");
         assert!(format!("{err:#}").contains("no serving artifact"), "{err:#}");
+        // Streaming pre-scoring is substrate-only: the prescored artifacts
+        // bake in the full re-cluster.
+        let cfg = ServingConfig {
+            variant: "prescored_k64".into(),
+            attention_spec: "prescored:kmeans,top_k=64,mode=stream".into(),
+            ..base.clone()
+        };
+        let err = ScoringServer::start(cfg).err().expect("must fail");
+        assert!(format!("{err:#}").contains("mode=stream"), "{err:#}");
         // Consistent spec/variant pairs pass the gate (and fail later on
         // the missing artifacts instead).
         for (variant, spec) in

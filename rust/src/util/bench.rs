@@ -160,6 +160,34 @@ impl Table {
     }
 }
 
+/// Read a `usize` knob from the environment (`default` when unset or
+/// unparsable) — shared by the env-shrinkable bench targets.
+pub fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// Read a comma-separated list knob from the environment (`default` when
+/// unset; unparsable entries are skipped).
+pub fn env_list<T: std::str::FromStr + Clone>(key: &str, default: &[T]) -> Vec<T> {
+    match std::env::var(key) {
+        Ok(v) => v.split(',').filter_map(|s| s.trim().parse().ok()).collect(),
+        Err(_) => default.to_vec(),
+    }
+}
+
+/// Median wall-clock milliseconds of `reps` runs of `body` (at least one).
+pub fn median_ms<T>(reps: usize, mut body: impl FnMut() -> T) -> f64 {
+    let mut samples: Vec<f64> = (0..reps.max(1))
+        .map(|_| {
+            let t0 = std::time::Instant::now();
+            black_box(body());
+            t0.elapsed().as_secs_f64() * 1e3
+        })
+        .collect();
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples[samples.len() / 2]
+}
+
 /// Convenience: format a float with fixed decimals.
 pub fn f(v: f64, decimals: usize) -> String {
     format!("{:.*}", decimals, v)

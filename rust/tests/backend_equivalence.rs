@@ -9,9 +9,10 @@
 
 use prescored::attention::exact::flash_attention_blocked;
 use prescored::attention::prescored::restricted_exact_attention;
+use prescored::attention::decode::RESTRICTED_REFRESH_DEFAULT;
 use prescored::attention::{
     exact_attention, hyper_attention, prescored_hyper_attention, AttentionInputs, AttentionSpec,
-    HyperConfig, PreScoredConfig, RestrictedSelector,
+    HyperConfig, PreScoreMode, PreScoredConfig, RestrictedSelector,
 };
 use prescored::linalg::Matrix;
 use prescored::parallel;
@@ -36,10 +37,15 @@ const SPEC_STRINGS: &[&str] = &[
     "prescored:minibatch:128,top_k=16",
     "prescored:lp:1.5,top_k=24,bits=8",
     "prescored:l2norm,top_k=8,keep_block_residual,residual_n=77",
+    "prescored:kmeans,top_k=24,mode=stream",
+    "prescored:minibatch:32,top_k=12,mode=stream,refresh=2",
+    "prescored:l2norm,top_k=16,mode=stream,refresh=0",
     "restricted:balanced",
     "restricted:balanced,clusters=4,samples=12,iters=5,seed=2",
+    "restricted:balanced,refresh=3",
     "restricted:leverage-exact,top_k=10",
     "restricted:l2norm,top_k=10,raw",
+    "restricted:l2norm,top_k=10,refresh=0",
     "restricted:kernel-kmeans:2.5,top_k=6",
 ];
 
@@ -87,23 +93,46 @@ fn constructed_specs_round_trip_with_every_field_nondefault() {
             },
             fallback_delta: 0.375,
             coupling: prescored::attention::Coupling::Glm2Artifact,
+            mode: PreScoreMode::Full,
             decode_refresh_every: 7,
         }),
-        AttentionSpec::Restricted(RestrictedSelector::Balanced {
-            num_clusters: 3,
-            num_samples: 9,
-            max_iters: 2,
-            seed: 19,
+        AttentionSpec::PreScored(PreScoredConfig {
+            prescore: PreScoreConfig {
+                method: Method::MiniBatch { batch: 48 },
+                clusters: Some(6),
+                top_k: 18,
+                noise_sigma: 0.0, // stream mode: no per-forward noise
+                normalize: false,
+                max_iters: 5,
+                seed: 29,
+            },
+            hyper: HyperConfig { block_size: 16, sample_size: 2, ..Default::default() },
+            fallback_delta: 0.25,
+            coupling: prescored::attention::Coupling::Glm3Corrected,
+            mode: PreScoreMode::Stream,
+            decode_refresh_every: 3,
         }),
-        AttentionSpec::Restricted(RestrictedSelector::Scored(PreScoreConfig {
-            method: Method::MiniBatch { batch: 64 },
-            clusters: Some(5),
-            top_k: 21,
-            noise_sigma: 0.5,
-            normalize: false,
-            max_iters: 6,
-            seed: 23,
-        })),
+        AttentionSpec::Restricted {
+            selector: RestrictedSelector::Balanced {
+                num_clusters: 3,
+                num_samples: 9,
+                max_iters: 2,
+                seed: 19,
+            },
+            refresh: 5,
+        },
+        AttentionSpec::Restricted {
+            selector: RestrictedSelector::Scored(PreScoreConfig {
+                method: Method::MiniBatch { batch: 64 },
+                clusters: Some(5),
+                top_k: 21,
+                noise_sigma: 0.5,
+                normalize: false,
+                max_iters: 6,
+                seed: 23,
+            }),
+            refresh: 0,
+        },
     ];
     for spec in specs {
         let s = spec.to_string();
@@ -130,16 +159,14 @@ fn legacy_forward(spec: &AttentionSpec, inp: &AttentionInputs) -> Matrix {
         }
         AttentionSpec::Hyper(cfg) => hyper_attention(inp, cfg, None),
         AttentionSpec::PreScored(cfg) => prescored_hyper_attention(inp, cfg).0,
-        AttentionSpec::Restricted(RestrictedSelector::Balanced {
-            num_clusters,
-            num_samples,
-            max_iters,
-            seed,
-        }) => {
+        AttentionSpec::Restricted {
+            selector: RestrictedSelector::Balanced { num_clusters, num_samples, max_iters, seed },
+            ..
+        } => {
             let sel = prescore_balanced(inp.k, *num_clusters, *num_samples, *max_iters, *seed);
             restricted_exact_attention(inp, &sel.selected)
         }
-        AttentionSpec::Restricted(RestrictedSelector::Scored(cfg)) => {
+        AttentionSpec::Restricted { selector: RestrictedSelector::Scored(cfg), .. } => {
             let sel = prescore(inp.k, cfg);
             restricted_exact_attention(inp, &sel.selected)
         }
@@ -200,6 +227,10 @@ fn backends_bit_identical_to_legacy_entrypoints_causal() {
         "flash:block_q=16,block_k=32",
         "hyper:block=16,sample=8,seed=21",
         "prescored:kmeans,top_k=16,pseed=7,block=16,sample=4,seed=7",
+        // Stream mode is causal-only; the free function delegates to the
+        // same recurrence, so this pins thread-invariance + plan() truth.
+        "prescored:kmeans,top_k=16,pseed=7,block=16,sample=4,seed=7,mode=stream",
+        "prescored:l2norm,top_k=20,block=16,mode=stream",
     ];
     for &(n, d) in &[(65usize, 8usize), (128, 16)] {
         let (q, k, v) = rand_qkv(n, n, d, 500 + n as u64);
@@ -208,6 +239,19 @@ fn backends_bit_identical_to_legacy_entrypoints_causal() {
             assert_equivalent(s, &inp);
         }
     }
+}
+
+#[test]
+fn restricted_default_refresh_is_not_emitted() {
+    // Omitted `refresh=` keeps the historical default and stays out of the
+    // canonical form (lossless round-trips for every non-default value are
+    // covered by SPEC_STRINGS above).
+    let spec = AttentionSpec::parse("restricted:l2norm,top_k=10").unwrap();
+    let AttentionSpec::Restricted { refresh, .. } = &spec else {
+        panic!("not a restricted spec")
+    };
+    assert_eq!(*refresh, RESTRICTED_REFRESH_DEFAULT);
+    assert_eq!(spec.to_string(), "restricted:l2norm,top_k=10");
 }
 
 #[test]

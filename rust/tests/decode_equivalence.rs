@@ -86,6 +86,12 @@ const SERIAL_DECODE_SPECS: &[&str] = &[
     "prescored:kmeans,top_k=16,refresh=1,delta=0.9", // δ-fallback every step
     "prescored:kmeans,top_k=0,refresh=1",            // identity selection
     "prescored:l2norm,top_k=20,refresh=1",
+    // Streaming pre-scoring: the forward IS the decode recurrence, so a
+    // refresh=1 step reproduces its last row exactly at every width.
+    "prescored:kmeans,top_k=24,refresh=1,block=16,sample=4,pseed=5,seed=5,mode=stream",
+    "prescored:kmeans,top_k=16,refresh=1,delta=0.9,mode=stream",
+    "prescored:kmeans,top_k=0,refresh=1,mode=stream",
+    "prescored:l2norm,top_k=20,refresh=1,mode=stream",
     "restricted:balanced,clusters=4,samples=16,iters=3,seed=2",
     "restricted:l2norm,top_k=12",
 ];
@@ -170,6 +176,136 @@ fn cached_selection_extends_between_refreshes() {
         assert!(!out.stats.fallback_used);
         assert_eq!(state.selection().unwrap().len(), 16 + step + 1);
         assert!(out.row.iter().all(|x| x.is_finite()));
+    }
+}
+
+/// Satellite: refresh-cadence semantics across every selection-cached
+/// kernel — `refresh=R` fires on exactly every R-th decode step (the
+/// selection snaps back to its base size), and extends by exactly one
+/// position on every other step. Covers the new `restricted:` `refresh=`
+/// spec key (previously unreachable from the grammar — every non-serving
+/// caller got the hardcoded default) and the stream-mode fold+merge
+/// refresh.
+#[test]
+fn refresh_cadence_fires_on_exactly_every_rth_step() {
+    // (spec, base): base = selection size right after a refresh.
+    let cases = [
+        ("prescored:kmeans,top_k=16,refresh=3,block=8", 16usize),
+        ("prescored:kmeans,top_k=16,refresh=3,block=8,mode=stream", 16),
+        ("restricted:l2norm,top_k=12,refresh=3", 12),
+        ("restricted:balanced,clusters=4,samples=16,iters=3,seed=2,refresh=3", 16),
+    ];
+    let n0 = 56usize;
+    let steps = 12usize;
+    let (q, k, v) = rand_qkv(n0 + steps, 8, 21);
+    for (spec_str, base) in cases {
+        let backend = AttentionSpec::parse(spec_str).unwrap().build();
+        let mut state = backend
+            .begin_decode(&q.slice_rows(0, n0), &k.slice_rows(0, n0), SALT)
+            .expect("decode arm");
+        let mut kc = k.slice_rows(0, n0);
+        let mut vc = v.slice_rows(0, n0);
+        for (step, t) in (n0..n0 + steps).enumerate() {
+            let step1 = step + 1; // decode steps are 1-based from the prefill
+            kc.push_row(k.row(t));
+            vc.push_row(v.row(t));
+            let out = backend.decode_step(&mut state, q.row(t), &kc, &vc, None);
+            assert!(out.row.iter().all(|x| x.is_finite()), "{spec_str} step {step1}");
+            let expect = if step1 % 3 == 0 { base } else { base + step1 % 3 };
+            assert_eq!(
+                state.selection().expect("cached selection").len(),
+                expect,
+                "{spec_str}: selection size wrong at step {step1} (refresh must fire \
+                 on exactly every 3rd step)"
+            );
+        }
+    }
+}
+
+/// Satellite: `refresh=0` never re-scores — the selection only ever extends,
+/// for every selection-cached kernel family (including the restricted specs,
+/// whose grammar previously could not express it).
+#[test]
+fn refresh_zero_never_rescores_any_kernel() {
+    let specs = [
+        "prescored:kmeans,top_k=16,refresh=0,block=8",
+        "prescored:kmeans,top_k=16,refresh=0,block=8,mode=stream",
+        "restricted:l2norm,top_k=12,refresh=0",
+        "restricted:balanced,clusters=4,samples=16,iters=3,seed=2,refresh=0",
+    ];
+    let n0 = 48usize;
+    let steps = 20usize;
+    let (q, k, v) = rand_qkv(n0 + steps, 8, 22);
+    for spec_str in specs {
+        let backend = AttentionSpec::parse(spec_str).unwrap().build();
+        let mut state = backend
+            .begin_decode(&q.slice_rows(0, n0), &k.slice_rows(0, n0), SALT)
+            .expect("decode arm");
+        let base = state.selection().expect("cached selection").len();
+        let mut kc = k.slice_rows(0, n0);
+        let mut vc = v.slice_rows(0, n0);
+        for (step, t) in (n0..n0 + steps).enumerate() {
+            kc.push_row(k.row(t));
+            vc.push_row(v.row(t));
+            backend.decode_step(&mut state, q.row(t), &kc, &vc, None);
+            assert_eq!(
+                state.selection().unwrap().len(),
+                base + step + 1,
+                "{spec_str}: refresh=0 must only extend"
+            );
+        }
+    }
+}
+
+/// Satellite: a warm resume from the prefix cache resets the refresh clock
+/// identically to a cold prefill — after `replay`, subsequent decode steps
+/// (rows, stats, selections) are bitwise-equal to a cold session's at the
+/// same refresh cadence.
+#[test]
+fn warm_resume_resets_refresh_clock_like_cold_prefill() {
+    let specs = [
+        "prescored:kmeans,top_k=16,refresh=2,block=8,pseed=3,seed=3",
+        "prescored:kmeans,top_k=16,refresh=2,block=8,pseed=3,seed=3,mode=stream",
+        "restricted:l2norm,top_k=12,refresh=2",
+    ];
+    let n0 = 40usize;
+    let n = 64usize;
+    let steps = 6usize;
+    let (q, k, v) = rand_qkv(n + steps, 8, 33);
+    for spec_str in specs {
+        let backend = AttentionSpec::parse(spec_str).unwrap().build();
+        let mut cold = backend
+            .begin_decode(&q.slice_rows(0, n), &k.slice_rows(0, n), SALT)
+            .expect("decode arm");
+        let mut warm = backend
+            .begin_decode(&q.slice_rows(0, n0), &k.slice_rows(0, n0), SALT)
+            .expect("decode arm");
+        let _ = warm.replay(
+            &q.slice_rows(n0, n),
+            &k.slice_rows(0, n),
+            &v.slice_rows(0, n),
+            None,
+        );
+        assert_eq!(
+            cold.selection().map(|s| s.to_vec()),
+            warm.selection().map(|s| s.to_vec()),
+            "{spec_str}: post-replay selection differs from cold prefill"
+        );
+        let mut kc = k.slice_rows(0, n);
+        let mut vc = v.slice_rows(0, n);
+        for (step, t) in (n..n + steps).enumerate() {
+            kc.push_row(k.row(t));
+            vc.push_row(v.row(t));
+            let a = backend.decode_step(&mut cold, q.row(t), &kc, &vc, None);
+            let b = backend.decode_step(&mut warm, q.row(t), &kc, &vc, None);
+            assert_eq!(a.row, b.row, "{spec_str} step {step}: warm clock drifted");
+            assert_eq!(a.stats, b.stats, "{spec_str} step {step}");
+            assert_eq!(
+                cold.selection().map(|s| s.to_vec()),
+                warm.selection().map(|s| s.to_vec()),
+                "{spec_str} step {step}"
+            );
+        }
     }
 }
 

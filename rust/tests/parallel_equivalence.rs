@@ -8,6 +8,7 @@
 //! of the thread count).
 
 use prescored::attention::exact::{exact_attention, flash_attention};
+use prescored::attention::polynomial::{key_max_weights, polynomial_attention_matrix};
 use prescored::attention::{prescored_hyper_attention, AttentionInputs, PreScoredConfig};
 use prescored::clustering::kmeans;
 use prescored::linalg::ops::{matmul, matmul_nt};
@@ -102,6 +103,39 @@ fn parallel_attention_bitwise_equals_serial() {
                 }
                 if exact1.data != exact_t.data {
                     return Err(format!("exact n={n} d={d} causal={causal} threads={t}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn parallel_polynomial_attention_bitwise_equals_serial() {
+    // Rows are pure per-query functions and the key-max merge is exact, so
+    // both the matrix and the heaviness vector are width-bit-identical.
+    // Shapes straddle the min-work gate (serial short-circuit and sharded
+    // path both covered).
+    run_property_noshrink(
+        "parallel-polynomial",
+        Config { cases: 8, ..Default::default() },
+        |r| (r.range(1, 320), r.range(2, 16), r.bool(0.5), 2 + r.range(0, 3) as u32, r.next_u64()),
+        |&(n, d, causal, deg, seed)| {
+            let mut rng = Rng::new(seed);
+            let q = Matrix::randn(n, d, 1.0, &mut rng);
+            let k = Matrix::randn(n, d, 1.0, &mut rng);
+            let v = Matrix::randn(n, d, 1.0, &mut rng);
+            let inp = AttentionInputs::new(&q, &k, &v).causal(causal);
+            let base = with_threads(1, || polynomial_attention_matrix(&inp, deg));
+            let base_w = with_threads(1, || key_max_weights(&base));
+            for &t in &THREAD_COUNTS[1..] {
+                let par = with_threads(t, || polynomial_attention_matrix(&inp, deg));
+                if base.data != par.data {
+                    return Err(format!("matrix n={n} d={d} causal={causal} r={deg} threads={t}"));
+                }
+                let w = with_threads(t, || key_max_weights(&par));
+                if base_w != w {
+                    return Err(format!("weights n={n} d={d} r={deg} threads={t}"));
                 }
             }
             Ok(())

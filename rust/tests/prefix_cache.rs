@@ -55,6 +55,11 @@ fn replay_matches_full_forward_suffix_rows_all_kernels() {
         "prescored:kmeans,top_k=24,block=16,sample=4,pseed=5,seed=5",
         "prescored:kmeans,top_k=16,delta=0.9", // δ-fallback path
         "prescored:l2norm,top_k=20",
+        // Streaming pre-scoring: replay continues the fold-by-fold
+        // recurrence, reproducing the cold stream forward's suffix rows.
+        "prescored:kmeans,top_k=24,block=16,sample=4,pseed=5,seed=5,mode=stream",
+        "prescored:kmeans,top_k=16,delta=0.9,mode=stream",
+        "prescored:l2norm,top_k=20,mode=stream",
         "restricted:balanced,clusters=4,samples=16,iters=3,seed=2",
         "restricted:l2norm,top_k=12",
     ];
@@ -104,6 +109,7 @@ fn forward_decode_capture_is_bitwise_equivalent() {
         "flash",
         "hyper:block=16,sample=8,seed=7",
         "prescored:kmeans,top_k=16,block=16,sample=4",
+        "prescored:kmeans,top_k=16,block=16,sample=4,mode=stream",
         "restricted:l2norm,top_k=12",
     ];
     let n = 40usize;
@@ -135,6 +141,48 @@ fn forward_decode_capture_is_bitwise_equivalent() {
     }
 }
 
+/// Tentpole acceptance: `mode=stream` reports `suffix_stable() == true` and
+/// its forward's prefix rows really are length-invariant — a forward over a
+/// prefix equals the corresponding leading rows of a longer forward,
+/// bitwise, at widths 1/2/4 (full-mode PreScored fails exactly this, which
+/// is why it only ever dedups at full length).
+#[test]
+fn stream_mode_prefix_rows_are_length_invariant() {
+    let spec_str = "prescored:kmeans,top_k=20,block=16,sample=4,pseed=3,seed=3,mode=stream";
+    let spec = AttentionSpec::parse(spec_str).unwrap();
+    assert!(spec.suffix_stable(), "mode=stream must be suffix-stable");
+    assert!(spec.prefix_cacheable());
+    assert!(
+        !AttentionSpec::parse("prescored:kmeans,top_k=20").unwrap().suffix_stable(),
+        "full-mode PreScored must stay full-length-only"
+    );
+    let backend = spec.build();
+    let (n, n0, d) = (72usize, 40usize, 8usize);
+    let mut rng = Rng::new(0x57AB1E);
+    let q = Matrix::randn(n, d, 1.0, &mut rng);
+    let k = Matrix::randn(n, d, 1.0, &mut rng);
+    let v = Matrix::randn(n, d, 1.0, &mut rng);
+    for width in [1usize, 2, 4] {
+        with_threads(width, || {
+            let full = backend
+                .forward_salted(&AttentionInputs::new(&q, &k, &v).causal(true), SALT)
+                .out;
+            let (q0, k0, v0) =
+                (q.slice_rows(0, n0), k.slice_rows(0, n0), v.slice_rows(0, n0));
+            let short = backend
+                .forward_salted(&AttentionInputs::new(&q0, &k0, &v0).causal(true), SALT)
+                .out;
+            for r in 0..n0 {
+                assert_eq!(
+                    short.row(r),
+                    full.row(r),
+                    "width {width}: stream prefix row {r} depends on the future"
+                );
+            }
+        });
+    }
+}
+
 /// Transformer-level: warm resume off a cached prefix is bitwise-cold for
 /// the suffix-stable policies, at widths 1/2/4, including the branched
 /// decode stream.
@@ -144,7 +192,11 @@ fn warm_resume_bitwise_identical_to_cold_prefill() {
     let toks = tokens(51, 48, 32);
     let prefix_len = 28;
     let n_new = 6;
-    for spec in ["exact", "flash:block_q=16,block_k=16"] {
+    for spec in [
+        "exact",
+        "flash:block_q=16,block_k=16",
+        "prescored:kmeans,top_k=12,block=16,sample=4,mode=stream",
+    ] {
         let policy = AttnPolicy::parse(spec).unwrap();
         for width in [1usize, 2, 4] {
             with_threads(width, || {
@@ -281,6 +333,43 @@ fn server_warm_partial_hit_matches_cold_and_counts_saved_tokens() {
     );
     assert!(stats.prefix_insertions >= 1);
     assert!(stats.prefix_nodes >= 1);
+}
+
+/// Tentpole, server level: `mode=stream` extends O(suffix) partial warm
+/// hits to a *sparse selection* kernel — a request extending a cached
+/// prefix is served warm (stats prove the cached tokens were never
+/// re-prefilled) with NLL and token stream bitwise equal to the no-cache
+/// reference. Full-mode prescored (the test below) still only dedups at
+/// full length.
+#[test]
+fn server_stream_prescored_gets_partial_warm_hits() {
+    const STREAM_SPEC: &str = "prescored:kmeans,top_k=12,block=16,sample=4,mode=stream";
+    let model = gate_safe_model(73);
+    let reference = gate_safe_model(73);
+    let policy = AttnPolicy::parse(STREAM_SPEC).unwrap();
+    let prefix = tokens(74, 20, 32);
+    let mut extended = prefix.clone();
+    extended.extend_from_slice(&tokens(77, 12, 32));
+    let n_new = 5;
+
+    let server = ScoringServer::start_with_model(cache_cfg(STREAM_SPEC, 256, ""), model)
+        .expect("start");
+    let r1 = server.submit(gen_request(1, prefix.clone(), n_new)).recv().expect("response 1");
+    let r2 = server.submit(gen_request(2, extended.clone(), n_new)).recv().expect("response 2");
+    let stats = server.shutdown();
+
+    assert_eq!(r1.nll, reference.nll_policy(&prefix, &policy), "cold request nll");
+    assert_eq!(r2.nll, reference.nll_policy(&extended, &policy), "warm request nll");
+    assert_eq!(
+        r2.generated,
+        reference.generate_greedy(&extended, n_new, &policy).unwrap(),
+        "warm decode stream"
+    );
+    assert!(stats.prefix_hits >= 1, "extension must hit the cached prefix: {stats:?}");
+    assert!(
+        stats.prefix_hit_tokens >= prefix.len(),
+        "the cached prefix tokens were never re-prefilled: {stats:?}"
+    );
 }
 
 /// Server-level full-length dedup hit (rank/selection spec): identical
