@@ -1,0 +1,216 @@
+//! Degradation-ladder quality/throughput tradeoff vs outright rejection.
+//!
+//! The load-shedding claim under test (the fault-tolerance PR's tentpole):
+//! under a page pool too small for the offered load, *degrading* admissions
+//! down the ladder (smaller top_k → staler refresh → l2norm → shorter
+//! answers) completes strictly more tokens than *rejecting* the overflow —
+//! while reporting the served spec truthfully. Each run pins the shedder to
+//! one rung (`shed_pin_rung`) and offers the identical request burst; the
+//! reject baseline runs the same burst with `shed_mode = "reject"`.
+//!
+//! Emits `BENCH_shed.json` at the repo root: per rung {spec, completed,
+//! completed_tokens, tokens_per_s, ppl, p50_ms, p99_ms, degraded} plus the
+//! reject baseline (with its refusal count).
+//!
+//! Knobs (the CI smoke run shrinks them):
+//! * `PALLAS_SHED_REQUESTS` — offered burst size, default 12
+//! * `PALLAS_SHED_CONTEXT`  — prompt length, default 48
+//! * `PALLAS_SHED_NEW`      — decode budget per request, default 16
+//! * `PALLAS_SHED_JSON`     — output path override
+//! * `PALLAS_SHED_ASSERT`   — when `1`, exit non-zero unless every rung
+//!   completes at least as many tokens as the reject baseline (the CI gate)
+
+use prescored::attention::AttentionSpec;
+use prescored::config::ServingConfig;
+use prescored::coordinator::{Request, ServerError};
+use prescored::data::corpus;
+use prescored::model::{Transformer, TransformerConfig};
+use prescored::server::shed::build_ladder;
+use prescored::server::ScoringServer;
+use prescored::util::bench::{env_usize, f};
+use std::time::Instant;
+
+const SPEC: &str = "prescored:kmeans,top_k=32,block=16,sample=4";
+
+struct RunResult {
+    label: String,
+    spec: String,
+    completed: usize,
+    completed_tokens: usize,
+    tokens_per_s: f64,
+    ppl: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+    degraded: usize,
+    rejected: usize,
+}
+
+fn run_once(
+    label: &str,
+    cfg: ServingConfig,
+    n_req: u64,
+    context: usize,
+    n_new: usize,
+) -> RunResult {
+    let tcfg =
+        TransformerConfig { vocab: 256, d_model: 64, n_layers: 2, n_heads: 2, max_seq: 128 };
+    let model = Transformer::random(tcfg, 0x5ed);
+    let server = ScoringServer::start_with_model(cfg, model).expect("server start");
+    let started = Instant::now();
+    let mut rxs = Vec::new();
+    for i in 0..n_req {
+        let mut req = Request::scoring(i, corpus::generate(256, context, 7000 + i));
+        req.generate = n_new;
+        rxs.push(server.submit(req));
+    }
+    let mut completed = 0usize;
+    let mut completed_tokens = 0usize;
+    let mut served_spec = String::new();
+    let mut ppl_sum = 0.0f64;
+    let mut rejected = 0usize;
+    for rx in rxs {
+        let resp = rx.recv().expect("response");
+        match &resp.error {
+            None => {
+                completed += 1;
+                completed_tokens += resp.generated.len();
+                ppl_sum += resp.perplexity();
+                served_spec = resp.spec.clone();
+            }
+            Some(ServerError::Capacity(_)) => rejected += 1,
+            Some(other) => panic!("unexpected failure under load: {other:?}"),
+        }
+    }
+    let elapsed = started.elapsed().as_secs_f64().max(1e-9);
+    let stats = server.shutdown();
+    assert_eq!(
+        stats.kv_pages_acquired, stats.kv_pages_released,
+        "{label}: page accounting must balance under pressure"
+    );
+    RunResult {
+        label: label.to_string(),
+        spec: served_spec,
+        completed,
+        completed_tokens,
+        tokens_per_s: completed_tokens as f64 / elapsed,
+        ppl: if completed > 0 { ppl_sum / completed as f64 } else { 0.0 },
+        p50_ms: stats.latency_p50_ms,
+        p99_ms: stats.latency_p99_ms,
+        degraded: stats.degraded,
+        rejected,
+    }
+}
+
+fn main() {
+    let n_req = env_usize("PALLAS_SHED_REQUESTS", 12) as u64;
+    let context = env_usize("PALLAS_SHED_CONTEXT", 48);
+    let n_new = env_usize("PALLAS_SHED_NEW", 16);
+    let assert_win = std::env::var("PALLAS_SHED_ASSERT").map_or(false, |v| v == "1");
+    let json_path =
+        std::env::var("PALLAS_SHED_JSON").unwrap_or_else(|_| "BENCH_shed.json".into());
+
+    // A pool sized for ~one session at a time: pages_for(context + n_new)
+    // with 16-token pages. The burst therefore *must* shed.
+    let kv_blocks = (context + n_new).div_ceil(16);
+    let base_cfg = || ServingConfig {
+        artifacts_dir: "/nonexistent-artifacts".into(),
+        variant: "exact".into(),
+        max_seq: 128,
+        attention_spec: SPEC.into(),
+        kv_blocks,
+        decode_max_new: n_new,
+        prefix_cache_blocks: 0,
+        ..Default::default()
+    };
+    let spec = AttentionSpec::parse(SPEC).expect("spec");
+    let ladder = build_ladder(&spec, n_new, 16, ServingConfig::default().shed_min_top_k);
+
+    println!(
+        "== degrade-vs-reject under pressure: {n_req} requests × ({context} ctx + {n_new} \
+         new), kv pool {kv_blocks} pages, {} rungs ==",
+        ladder.len()
+    );
+
+    let mut runs: Vec<RunResult> = Vec::new();
+    for (r, rung) in ladder.iter().enumerate() {
+        let mut cfg = base_cfg();
+        cfg.shed_pin_rung = Some(r);
+        let res = run_once(&format!("rung {r}"), cfg, n_req, context, n_new);
+        println!(
+            "rung {r} [{}] | completed {:>3}/{n_req} | tokens {:>4} | ppl {:>8} | p50 {:>8} \
+             ms | p99 {:>8} ms",
+            rung.spec_str,
+            res.completed,
+            res.completed_tokens,
+            f(res.ppl, 3),
+            f(res.p50_ms, 2),
+            f(res.p99_ms, 2),
+        );
+        runs.push(res);
+    }
+    let mut cfg = base_cfg();
+    cfg.shed_mode = "reject".into();
+    cfg.shed_pin_rung = Some(0);
+    let reject = run_once("reject", cfg, n_req, context, n_new);
+    println!(
+        "reject [{}] | completed {:>3}/{n_req} | tokens {:>4} | refused {:>3} | ppl {:>8} | \
+         p50 {:>8} ms | p99 {:>8} ms",
+        SPEC,
+        reject.completed,
+        reject.completed_tokens,
+        reject.rejected,
+        f(reject.ppl, 3),
+        f(reject.p50_ms, 2),
+        f(reject.p99_ms, 2),
+    );
+
+    let entry = |r: &RunResult| {
+        format!(
+            "{{\"label\": \"{}\", \"spec\": \"{}\", \"completed\": {}, \
+             \"completed_tokens\": {}, \"tokens_per_s\": {:.4}, \"ppl\": {:.4}, \
+             \"p50_ms\": {:.4}, \"p99_ms\": {:.4}, \"degraded\": {}, \"rejected\": {}}}",
+            r.label,
+            r.spec,
+            r.completed,
+            r.completed_tokens,
+            r.tokens_per_s,
+            r.ppl,
+            r.p50_ms,
+            r.p99_ms,
+            r.degraded,
+            r.rejected,
+        )
+    };
+    let mut json = String::from("{\n");
+    json.push_str(&format!(
+        "  \"offered_requests\": {n_req},\n  \"context\": {context},\n  \"n_new\": \
+         {n_new},\n  \"kv_blocks\": {kv_blocks},\n"
+    ));
+    json.push_str("  \"rungs\": [\n");
+    for (i, r) in runs.iter().enumerate() {
+        json.push_str(&format!(
+            "    {}{}\n",
+            entry(r),
+            if i + 1 < runs.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ],\n");
+    json.push_str(&format!("  \"reject\": {}\n}}\n", entry(&reject)));
+    std::fs::write(&json_path, json).expect("writing BENCH_shed.json");
+    println!("wrote {json_path}");
+
+    if assert_win {
+        // CI gate: degrade-don't-reject must never complete fewer tokens
+        // than refusing the overflow outright, at any rung.
+        for r in &runs {
+            if r.completed_tokens < reject.completed_tokens {
+                eprintln!(
+                    "SHED REGRESSION: {} completed {} tokens < reject baseline {}",
+                    r.label, r.completed_tokens, reject.completed_tokens
+                );
+                std::process::exit(1);
+            }
+        }
+        println!("degrade-beats-reject assertion passed");
+    }
+}

@@ -9,6 +9,25 @@ cd "$(dirname "$0")"
 QUICK=0
 [[ "${1:-}" == "--quick" ]] && QUICK=1
 
+# Unwrap/expect lint gate for the serving + cache hot paths: every
+# `.unwrap()` / `.expect(` outside `#[cfg(test)]` must carry a trailing
+# `// unwrap-ok: <reason>` marker, or the panic it hides belongs in the
+# typed ServerError surface instead.
+echo "== unwrap/expect gate (rust/src/server, rust/src/cache) =="
+if ! awk '
+    FNR == 1 { in_tests = 0 }
+    /#\[cfg\(test\)\]/ { in_tests = 1 }
+    in_tests { next }
+    (/\.unwrap\(\)/ || /\.expect\(/) && !/unwrap-ok/ {
+        printf "%s:%d: unmarked unwrap/expect on a serving hot path:\n    %s\n", FILENAME, FNR, $0
+        bad = 1
+    }
+    END { exit bad }
+' rust/src/server/*.rs rust/src/cache/*.rs; then
+    echo "unwrap/expect gate FAILED — convert to a typed error or mark '// unwrap-ok: <reason>'"
+    exit 1
+fi
+
 if [[ "$QUICK" == 0 ]]; then
     if cargo fmt --version >/dev/null 2>&1; then
         echo "== cargo fmt --check =="
@@ -56,6 +75,25 @@ if [[ "$QUICK" == 0 ]]; then
     PALLAS_STREAM_REPS=3 PALLAS_STREAM_WARM_CONTEXT=256 PALLAS_STREAM_ASSERT=1 \
     PALLAS_STREAM_JSON="$(mktemp)" \
         cargo bench --bench bench_stream_prescore
+
+    # Degrade-vs-reject smoke: env-shrunk ladder sweep under a starved KV
+    # pool. PALLAS_SHED_ASSERT=1 fails the build if any ladder rung ever
+    # completes fewer tokens than refusing the overflow outright — the
+    # degrade-don't-reject contract is a CI invariant.
+    echo "== bench_shed_quality (smoke) =="
+    PALLAS_SHED_REQUESTS=8 PALLAS_SHED_CONTEXT=32 PALLAS_SHED_NEW=8 \
+    PALLAS_SHED_ASSERT=1 PALLAS_SHED_JSON="$(mktemp)" \
+        cargo bench --bench bench_shed_quality
+
+    # Chaos smoke: three fixed seeded fault schedules through the mixed
+    # scoring + generation workload. The suite asserts no process panic,
+    # a typed response per request, and balanced page/pin accounting.
+    echo "== fault-injection chaos smoke (seeds 101 202 303) =="
+    for seed in 101 202 303; do
+        echo "-- chaos seed $seed --"
+        PALLAS_FAULT_PLAN=chaos PALLAS_FAULT_SEED=$seed \
+            cargo test --release --test fault_injection chaos_env_schedule -- --nocapture
+    done
 fi
 
 echo "== tier-1 verify: cargo build --release && cargo test -q =="

@@ -18,6 +18,20 @@
 //! cargo run --release --example serve_longcontext 4 2048      # 4 requests, 2k prefix
 //! make artifacts && cargo run --release --example serve_longcontext  # both demos
 //! ```
+//!
+//! **Fault-tolerance surface** (see ROADMAP.md "Failure model"): give a
+//! request a wall-clock budget with `Request::with_deadline(ms)` (expired
+//! requests fail typed as `DeadlineExceeded` at the next safe point), and
+//! abandon one from any thread with `server.cancel(id)` — its KV pages and
+//! prefix-cache pins are released, and the response carries
+//! `ServerError::Cancelled` plus any partial tokens. Under pressure the
+//! `[serving]` watermark keys (`shed_high_watermark` / `shed_low_watermark`
+//! on KV-pool occupancy, `shed_queue_high` / `shed_queue_low` on prefill
+//! queue depth) admit requests down a degradation ladder instead of
+//! rejecting them; responses say so truthfully (`Response::degraded` + the
+//! served spec string), and `shed_mode = "reject"` restores refusal
+//! semantics. Every failure is a typed `Response::error`, never a dropped
+//! channel.
 
 use prescored::config::ServingConfig;
 use prescored::coordinator::kv_cache::BLOCK_SIZE;

@@ -80,6 +80,11 @@ pub struct CacheStats {
     pub cached_tokens: usize,
     pub pages_in_use: usize,
     pub pages_capacity: usize,
+    /// Lifetime pin handles taken by lookups / released by sessions. The
+    /// fault suite asserts acquired == released after teardown — a leaked
+    /// pin would make its subtree unevictable forever.
+    pub pins_acquired: usize,
+    pub pins_released: usize,
 }
 
 /// One layer·head's segment of cached K/V rows.
@@ -231,6 +236,8 @@ pub struct PrefixCache {
     insertions: usize,
     evictions: usize,
     hit_tokens: usize,
+    pins_acquired: usize,
+    pins_released: usize,
 }
 
 impl PrefixCache {
@@ -260,6 +267,8 @@ impl PrefixCache {
             insertions: 0,
             evictions: 0,
             hit_tokens: 0,
+            pins_acquired: 0,
+            pins_released: 0,
         }
     }
 
@@ -272,11 +281,11 @@ impl PrefixCache {
     }
 
     fn node(&self, id: usize) -> &Node {
-        self.nodes[id].as_ref().expect("dangling prefix-cache node id")
+        self.nodes[id].as_ref().expect("dangling prefix-cache node id") // unwrap-ok: tree invariant
     }
 
     fn node_mut(&mut self, id: usize) -> &mut Node {
-        self.nodes[id].as_mut().expect("dangling prefix-cache node id")
+        self.nodes[id].as_mut().expect("dangling prefix-cache node id") // unwrap-ok: tree invariant
     }
 
     fn alloc_node(&mut self, node: Node) -> usize {
@@ -354,14 +363,14 @@ impl PrefixCache {
             // chain) cannot be composed with this artifact's states — the
             // hit is only sound when the whole chain came from the
             // artifact's own donor prefill.
-            let donor = self.node(node).art.as_ref().expect("artifact boundary lost").donor;
+            let donor = self.node(node).art.as_ref().expect("artifact boundary lost").donor; // unwrap-ok: best requires art
             if chain.iter().any(|&nid| self.node(nid).donor != donor) {
                 self.misses += 1;
                 return None;
             }
         }
         let (segments, nll) = self.chain_segments(&chain);
-        let art = self.node(node).art.as_ref().expect("artifact boundary lost");
+        let art = self.node(node).art.as_ref().expect("artifact boundary lost"); // unwrap-ok: best requires art
         let states = Arc::clone(&art.states);
         let last_logits = art.last_logits.clone();
         let clock = self.clock;
@@ -369,15 +378,22 @@ impl PrefixCache {
             self.node_mut(nid).last_used = clock;
         }
         self.node_mut(node).pins += 1;
+        self.pins_acquired += 1;
         self.hits += 1;
         self.hit_tokens += len;
         Some(PrefixHit { node, len, segments, states, nll, last_logits })
     }
 
-    /// Unpin a node returned by a [`PrefixHit`] (session finished).
+    /// Unpin a node returned by a [`PrefixHit`] (session finished). Safe
+    /// against a node evicted out from under a stale handle and against
+    /// double release — the teardown paths (cancel, deadline, panic) call
+    /// it exactly once, and the pin counters let tests prove it.
     pub fn release(&mut self, node: usize) {
         if let Some(Some(n)) = self.nodes.get_mut(node) {
-            n.pins = n.pins.saturating_sub(1);
+            if n.pins > 0 {
+                n.pins -= 1;
+                self.pins_released += 1;
+            }
         }
     }
 
@@ -423,6 +439,13 @@ impl PrefixCache {
             "snapshot KV must cover rows kv_from..len"
         );
         self.clock += 1;
+        if crate::fault::fires(crate::fault::FaultPoint::EvictStorm, self.clock) {
+            // Chaos hook: a burst of cache pressure right before the
+            // insert. Storms only drop reusable artifacts — they must
+            // never change any request's output (the chaos suite asserts
+            // bitwise-identical responses under storm schedules).
+            self.evict_storm();
+        }
         if unique_chain && self.node(0).children.contains_key(&tokens[0]) {
             // Another donor already owns this token family; composing with
             // its segments is unsound for full-only kernels.
@@ -505,7 +528,7 @@ impl PrefixCache {
             return false;
         }
         let blocks: Vec<BlockId> =
-            (0..need).map(|_| self.alloc.alloc().expect("ensure_free lied")).collect();
+            (0..need).map(|_| self.alloc.alloc().expect("ensure_free lied")).collect(); // unwrap-ok: reserved above
         let (lo, hi) = (start - snap.kv_from, total - snap.kv_from);
         let kv: Vec<Arc<SegmentKv>> = snap
             .kv
@@ -563,7 +586,7 @@ impl PrefixCache {
         if !self.ensure_free(extra, Some(child)) {
             return None;
         }
-        let mut node = self.nodes[child].take().expect("dangling prefix-cache node id");
+        let mut node = self.nodes[child].take().expect("dangling prefix-cache node id"); // unwrap-ok: tree invariant
         for b in node.blocks.drain(..) {
             self.alloc.release(b);
         }
@@ -602,13 +625,13 @@ impl PrefixCache {
             pins: 0,
             last_used: node.last_used,
             blocks: (0..pages_for(cp))
-                .map(|_| self.alloc.alloc().expect("ensure_free lied"))
+                .map(|_| self.alloc.alloc().expect("ensure_free lied")) // unwrap-ok: reserved above
                 .collect(),
         };
         node.kv = right_kv;
         node.nll = right_nll;
         node.blocks = (0..pages_for(clen - cp))
-            .map(|_| self.alloc.alloc().expect("ensure_free lied"))
+            .map(|_| self.alloc.alloc().expect("ensure_free lied")) // unwrap-ok: reserved above
             .collect();
         node.tokens = right_tokens;
         let left_first = left.tokens[0];
@@ -648,8 +671,46 @@ impl PrefixCache {
         true
     }
 
+    /// One-way page-budget transfer to the live-sequence KV pool: evict
+    /// unpinned LRU subtrees until (up to) `need` pages are free, then
+    /// permanently withdraw the freed pages from this cache's allocator.
+    /// Returns the pages actually withdrawn — the caller grows its own
+    /// pool by exactly that much (`KvCacheManager::grow`), so the global
+    /// page budget is conserved. Used by admission control: a prefill
+    /// that fails KV reservation retries once after shedding, and only
+    /// degrades/rejects if the cache had nothing evictable either.
+    pub fn shed_pages(&mut self, need: usize) -> usize {
+        if !self.enabled() || need == 0 {
+            return 0;
+        }
+        // Best-effort: ensure_free may fail when pins hold everything —
+        // withdraw whatever did come free.
+        let _ = self.ensure_free(need.min(self.alloc.capacity()), None);
+        self.alloc.withdraw(need)
+    }
+
+    /// Fault-injection helper: evict every unpinned subtree (leaves first,
+    /// cascading to ancestors as they become leaves).
+    fn evict_storm(&mut self) {
+        loop {
+            let victims: Vec<usize> = (1..self.nodes.len())
+                .filter(|&id| {
+                    self.nodes[id]
+                        .as_ref()
+                        .map_or(false, |n| n.children.is_empty() && n.pins == 0)
+                })
+                .collect();
+            if victims.is_empty() {
+                return;
+            }
+            for v in victims {
+                self.evict(v);
+            }
+        }
+    }
+
     fn evict(&mut self, id: usize) {
-        let node = self.nodes[id].take().expect("evicting a dangling node");
+        let node = self.nodes[id].take().expect("evicting a dangling node"); // unwrap-ok: callers pass live ids
         for b in node.blocks {
             self.alloc.release(b);
         }
@@ -729,6 +790,8 @@ impl PrefixCache {
             cached_tokens,
             pages_in_use: self.alloc.capacity() - self.alloc.free_blocks(),
             pages_capacity: self.alloc.capacity(),
+            pins_acquired: self.pins_acquired,
+            pins_released: self.pins_released,
         }
     }
 }
@@ -912,6 +975,59 @@ mod tests {
         assert!(!c.insert(&b, snapshot(&b, 1, 2), false), "no evictable pages");
         c.release(pin.node);
         assert!(c.insert(&b, snapshot(&b, 1, 2), false), "evictable after release");
+    }
+
+    #[test]
+    fn pin_accounting_balances() {
+        let mut c = cache(64, 4);
+        let t = toks(20, 24);
+        assert!(c.insert(&t, snapshot(&t, 1, 4), false));
+        let h1 = c.lookup(&t, false).unwrap();
+        let h2 = c.lookup(&t, false).unwrap();
+        let st = c.stats();
+        assert_eq!((st.pins_acquired, st.pins_released), (2, 0));
+        c.release(h1.node);
+        c.release(h2.node);
+        c.release(h2.node); // double release: must not over-count
+        let st = c.stats();
+        assert_eq!(st.pins_acquired, st.pins_released);
+    }
+
+    #[test]
+    fn shed_pages_transfers_budget_from_unpinned_subtrees() {
+        let mut c = cache(4, 4);
+        let a = toks(21, 32);
+        let b = toks(22, 32);
+        assert!(c.insert(&a, snapshot(&a, 1, 2), false));
+        assert!(c.insert(&b, snapshot(&b, 1, 2), false));
+        let pin = c.lookup(&a, false).unwrap();
+        assert_eq!(c.stats().pages_in_use, 4);
+        // Shedding 2 pages must evict the unpinned `b`, never pinned `a`.
+        assert_eq!(c.shed_pages(2), 2);
+        assert_eq!(c.stats().pages_capacity, 2, "withdrawn pages leave the pool");
+        assert!(c.lookup(&b, false).is_none(), "unpinned subtree shed");
+        assert_eq!(c.lookup(&a, false).map(|h| h.len), Some(32), "pinned prefix intact");
+        // Everything pinned → nothing to shed.
+        assert_eq!(c.shed_pages(8), 0);
+        c.release(pin.node);
+        let mut off = cache(0, 4);
+        assert_eq!(off.shed_pages(4), 0, "disabled cache sheds nothing");
+    }
+
+    #[test]
+    fn evict_storm_clears_unpinned_and_outputs_survive() {
+        let mut c = cache(64, 4);
+        let a = toks(23, 24);
+        assert!(c.insert(&a, snapshot(&a, 1, 4), false));
+        let pin = c.lookup(&a, false).unwrap();
+        let b = toks(24, 24);
+        assert!(c.insert(&b, snapshot(&b, 1, 4), false));
+        c.evict_storm();
+        assert!(c.lookup(&b, false).is_none(), "unpinned subtree gone");
+        let hit = c.lookup(&a, false).expect("pinned chain survives the storm");
+        assert_eq!(hit.nll, pin.nll, "surviving artifacts are unchanged");
+        c.release(hit.node);
+        c.release(pin.node);
     }
 
     #[test]

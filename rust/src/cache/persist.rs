@@ -5,7 +5,7 @@
 //! Little-endian layout (all integers u32 unless noted):
 //!
 //! ```text
-//! magic = 0x43584650 ("PFXC"), version = 2
+//! magic = 0x43584650 ("PFXC"), version = 3
 //! policy_len, policy utf-8        (canonical AttnPolicy string — reload
 //!                                  refuses a store built under another
 //!                                  policy: artifacts are policy-specific)
@@ -38,6 +38,13 @@
 //!       since_recenter u32
 //!       scores_len, f32×scores_len      (aligned with the selection)
 //!       folded u32
+//! crc32                                 (v3: CRC-32 of every preceding
+//!                                        byte — load refuses truncated or
+//!                                        bit-flipped stores up front, and
+//!                                        every section read is still
+//!                                        length-checked so a hostile
+//!                                        length prefix can never panic or
+//!                                        OOM the loader)
 //! ```
 //!
 //! Configs/seeds are NOT serialized: the loader rebuilds each
@@ -54,7 +61,21 @@ use anyhow::{bail, Context, Result};
 use std::path::Path;
 
 pub const MAGIC: u32 = 0x4358_4650; // "PFXC" little-endian
-pub const VERSION: u32 = 2;
+pub const VERSION: u32 = 3;
+
+/// Bitwise CRC-32 (IEEE 802.3 polynomial, reflected). A few MB of store is
+/// far from the hot path, so the table-free form keeps this dependency-free.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut crc: u32 = 0xffff_ffff;
+    for &b in bytes {
+        crc ^= u32::from(b);
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xedb8_8320 & mask);
+        }
+    }
+    !crc
+}
 
 fn put_u32(buf: &mut Vec<u8>, v: u32) {
     buf.extend_from_slice(&v.to_le_bytes());
@@ -92,7 +113,7 @@ impl<'a> Reader<'a> {
         if self.off + 4 > self.buf.len() {
             bail!("truncated prefix-cache file at offset {}", self.off);
         }
-        let v = u32::from_le_bytes(self.buf[self.off..self.off + 4].try_into().unwrap());
+        let v = u32::from_le_bytes(self.buf[self.off..self.off + 4].try_into().unwrap()); // unwrap-ok: length checked
         self.off += 4;
         Ok(v)
     }
@@ -211,6 +232,14 @@ pub fn save(
             }
         }
     }
+    let checksum = crc32(&buf);
+    put_u32(&mut buf, checksum);
+    if crate::fault::fires(crate::fault::FaultPoint::PersistCorrupt, buf.len() as u64) {
+        // Chaos hook: corrupt one body byte AFTER the checksum is sealed —
+        // the next load must refuse the file cleanly, never panic.
+        let idx = buf.len() / 2;
+        buf[idx] ^= 0x40;
+    }
     std::fs::write(path, &buf)
         .with_context(|| format!("writing prefix cache {}", path.display()))?;
     Ok(())
@@ -236,7 +265,11 @@ pub fn load(
 ) -> Result<usize> {
     let buf = std::fs::read(path)
         .with_context(|| format!("reading prefix cache {}", path.display()))?;
-    let mut r = Reader { buf: &buf, off: 0 };
+    if buf.len() < 12 {
+        bail!("prefix-cache file too short ({} bytes)", buf.len());
+    }
+    let (body, tail) = buf.split_at(buf.len() - 4);
+    let mut r = Reader { buf: body, off: 0 };
     let magic = r.u32()?;
     if magic != MAGIC {
         bail!("bad prefix-cache magic {magic:#x}");
@@ -244,6 +277,18 @@ pub fn load(
     let version = r.u32()?;
     if version != VERSION {
         bail!("unsupported prefix-cache version {version}");
+    }
+    // Whole-file integrity before trusting any length prefix: a truncated
+    // or bit-flipped store fails here with a clean error. (The per-section
+    // guards below still make the parse allocation-safe on its own, in
+    // case of a deliberately re-checksummed hostile file.)
+    let stored = u32::from_le_bytes(tail.try_into().expect("split_at(len-4) tail")); // unwrap-ok: 4-byte slice
+    let actual = crc32(body);
+    if stored != actual {
+        bail!(
+            "prefix-cache checksum mismatch ({actual:#010x} != stored {stored:#010x}) — \
+             truncated or corrupted store"
+        );
     }
     let pol = r.string()?;
     let want = policy.to_string();
@@ -425,5 +470,101 @@ mod tests {
         std::fs::write(&path, &bytes).unwrap();
         assert!(load(&mut fresh, &policy, 2, 2, 8, 16, &path).is_err());
         let _ = std::fs::remove_file(&path);
+    }
+
+    /// Re-seal a tampered body under a fresh checksum so the parse guards
+    /// (not the CRC) are what the hostile-input tests exercise.
+    fn reseal(bytes: &mut Vec<u8>) {
+        let body_len = bytes.len() - 4;
+        let crc = crc32(&bytes[..body_len]);
+        bytes[body_len..].copy_from_slice(&crc.to_le_bytes());
+    }
+
+    fn try_load(bytes: &[u8], policy: &AttnPolicy, tag: &str) -> Result<usize> {
+        let path =
+            std::env::temp_dir().join(format!("pfxc_hostile_{}_{tag}", std::process::id()));
+        std::fs::write(&path, bytes).unwrap();
+        let mut fresh = PrefixCache::new(PrefixCacheConfig {
+            blocks: 64,
+            min_tokens: 4,
+            persist_path: None,
+        });
+        let out = load(&mut fresh, policy, 2, 2, 8, 16, &path);
+        let _ = std::fs::remove_file(&path);
+        out
+    }
+
+    #[test]
+    fn load_rejects_truncation_at_every_boundary() {
+        // The stream spec exercises the richest layout (every section kind).
+        let (cache, policy, _) = sample_cache("prescored:kmeans,top_k=8,block=8,mode=stream");
+        let path = std::env::temp_dir().join(format!("pfxc_trunc_{}", std::process::id()));
+        save(&cache, &policy, 2, true, &path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert!(try_load(&bytes, &policy, "full").is_ok(), "untruncated store loads");
+        // Every header boundary, plus ~100 sampled interior cuts. The CRC
+        // tail is garbage (or missing) at every cut, so each must fail with
+        // a clean error — the assert also proves none of them panic.
+        let step = (bytes.len() / 97).max(1);
+        let cuts: Vec<usize> =
+            (0..bytes.len().min(33)).chain((0..bytes.len()).step_by(step)).collect();
+        for cut in cuts {
+            let truncated = bytes[..cut].to_vec();
+            assert!(
+                try_load(&truncated, &policy, "cut").is_err(),
+                "truncation at {cut}/{} must be rejected",
+                bytes.len()
+            );
+        }
+    }
+
+    #[test]
+    fn load_rejects_seeded_bit_flips() {
+        let (cache, policy, _) = sample_cache("prescored:kmeans,top_k=8,block=8,mode=stream");
+        let path = std::env::temp_dir().join(format!("pfxc_flip_{}", std::process::id()));
+        save(&cache, &policy, 2, true, &path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        let mut rng = Rng::new(0xfa17);
+        for i in 0..200 {
+            let mut flipped = bytes.clone();
+            let pos = rng.usize(flipped.len());
+            flipped[pos] ^= 1 << rng.usize(8);
+            // CRC-32 detects every single-bit flip, including in the
+            // trailer itself.
+            assert!(
+                try_load(&flipped, &policy, "flip").is_err(),
+                "bit flip #{i} at byte {pos} must be rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn load_survives_hostile_length_prefixes() {
+        let (cache, policy, _) = sample_cache("exact");
+        let path = std::env::temp_dir().join(format!("pfxc_len_{}", std::process::id()));
+        save(&cache, &policy, 2, true, &path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        let pol_len =
+            u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
+        let count_off = 28 + pol_len;
+        // A re-sealed store claiming 4 billion prefixes / tokens: the
+        // length-checked section reads must refuse it cleanly — no panic,
+        // and crucially no attempt to allocate anywhere near the claim.
+        for off in [count_off, count_off + 4] {
+            let mut hostile = bytes.clone();
+            hostile[off..off + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+            reseal(&mut hostile);
+            assert!(
+                try_load(&hostile, &policy, "len").is_err(),
+                "hostile length at offset {off} must be rejected"
+            );
+        }
+        // Degenerate stores below the fixed header size.
+        for n in 0..12 {
+            assert!(try_load(&bytes[..n], &policy, "tiny").is_err());
+        }
     }
 }

@@ -109,6 +109,26 @@ pub struct ServingConfig {
     pub kv_blocks: usize,
     /// Cap on tokens generated per request through the decode path.
     pub decode_max_new: usize,
+    /// Load-shedding trigger: KV page-pool occupancy fraction above which
+    /// admission starts stepping requests down the degradation ladder
+    /// (`[serving] shed_high_watermark`; set > 1.0 to disable).
+    pub shed_high_watermark: f64,
+    /// Occupancy fraction below which the shedder steps back up toward the
+    /// configured spec (hysteresis; must be <= the high watermark).
+    pub shed_low_watermark: f64,
+    /// Pending-prefill queue depth that also triggers degradation.
+    pub shed_queue_high: usize,
+    /// Queue depth at or below which the shedder steps back up.
+    pub shed_queue_low: usize,
+    /// Floor for degraded `top_k` — the ladder never selects fewer keys.
+    pub shed_min_top_k: usize,
+    /// `"degrade"` (serve every admitted request, possibly down-ladder) or
+    /// `"reject"` (classic admission control: over-capacity requests get
+    /// `ServerError::Capacity`). The shed-quality bench compares the two.
+    pub shed_mode: String,
+    /// Testing hook (`[serving] shed_pin_rung`): pin the ladder to one rung
+    /// regardless of load. `None` = adaptive.
+    pub shed_pin_rung: Option<usize>,
     /// Pre-score method for the coordinator's prescore manager.
     pub prescore_method: String,
     pub prescore_top_k: usize,
@@ -151,6 +171,13 @@ impl Default for ServingConfig {
             executor_workers: 0,
             kv_blocks: 512,
             decode_max_new: 64,
+            shed_high_watermark: 0.85,
+            shed_low_watermark: 0.5,
+            shed_queue_high: 8,
+            shed_queue_low: 1,
+            shed_min_top_k: 8,
+            shed_mode: "degrade".into(),
+            shed_pin_rung: None,
             prefix_cache_blocks: 256,
             prefix_min_tokens: 16,
             prefix_persist_path: String::new(),
@@ -167,6 +194,24 @@ impl Default for ServingConfig {
 impl ServingConfig {
     pub fn from_config(cfg: &Config) -> Result<ServingConfig> {
         let d = ServingConfig::default();
+        let shed_mode = cfg.get_or("serving", "shed_mode", &d.shed_mode).to_string();
+        if shed_mode != "degrade" && shed_mode != "reject" {
+            bail!("[serving] shed_mode must be degrade or reject, got '{shed_mode}'");
+        }
+        let shed_high = cfg.f64_or("serving", "shed_high_watermark", d.shed_high_watermark)?;
+        let shed_low = cfg.f64_or("serving", "shed_low_watermark", d.shed_low_watermark)?;
+        if shed_low > shed_high {
+            bail!(
+                "[serving] shed_low_watermark ({shed_low}) must not exceed \
+                 shed_high_watermark ({shed_high})"
+            );
+        }
+        let shed_pin_rung = match cfg.get("serving", "shed_pin_rung") {
+            None => None,
+            Some(v) => Some(
+                v.parse::<usize>().with_context(|| format!("[serving] shed_pin_rung = {v}"))?,
+            ),
+        };
         Ok(ServingConfig {
             artifacts_dir: cfg.get_or("serving", "artifacts_dir", &d.artifacts_dir).to_string(),
             variant: cfg.get_or("serving", "variant", &d.variant).to_string(),
@@ -177,6 +222,13 @@ impl ServingConfig {
             executor_workers: cfg.usize_or("serving", "executor_workers", d.executor_workers)?,
             kv_blocks: cfg.usize_or("serving", "kv_blocks", d.kv_blocks)?,
             decode_max_new: cfg.usize_or("serving", "decode_max_new", d.decode_max_new)?,
+            shed_high_watermark: shed_high,
+            shed_low_watermark: shed_low,
+            shed_queue_high: cfg.usize_or("serving", "shed_queue_high", d.shed_queue_high)?,
+            shed_queue_low: cfg.usize_or("serving", "shed_queue_low", d.shed_queue_low)?,
+            shed_min_top_k: cfg.usize_or("serving", "shed_min_top_k", d.shed_min_top_k)?,
+            shed_mode,
+            shed_pin_rung,
             prefix_cache_blocks: cfg
                 .usize_or("cache", "prefix_cache_blocks", d.prefix_cache_blocks)?,
             prefix_min_tokens: cfg.usize_or("cache", "prefix_min_tokens", d.prefix_min_tokens)?,
@@ -358,6 +410,39 @@ fallback_delta = 0.05
         assert_eq!(d.prefix_cache_blocks, 256);
         assert_eq!(d.prefix_min_tokens, 16);
         assert!(d.prefix_persist_path.is_empty());
+    }
+
+    #[test]
+    fn shed_keys_parsed_and_validated() {
+        let cfg = Config::parse(
+            "[serving]\nshed_high_watermark = 0.9\nshed_low_watermark = 0.4\n\
+             shed_queue_high = 12\nshed_queue_low = 2\nshed_min_top_k = 4\n\
+             shed_mode = \"reject\"\nshed_pin_rung = 2\n",
+        )
+        .unwrap();
+        let sc = ServingConfig::from_config(&cfg).unwrap();
+        assert!((sc.shed_high_watermark - 0.9).abs() < 1e-12);
+        assert!((sc.shed_low_watermark - 0.4).abs() < 1e-12);
+        assert_eq!(sc.shed_queue_high, 12);
+        assert_eq!(sc.shed_queue_low, 2);
+        assert_eq!(sc.shed_min_top_k, 4);
+        assert_eq!(sc.shed_mode, "reject");
+        assert_eq!(sc.shed_pin_rung, Some(2));
+        // Defaults: degrade mode, adaptive rung.
+        let d = ServingConfig::default();
+        assert_eq!(d.shed_mode, "degrade");
+        assert_eq!(d.shed_pin_rung, None);
+        assert!(d.shed_low_watermark <= d.shed_high_watermark);
+        // Validation: unknown mode, inverted watermarks, bad rung.
+        let bad = Config::parse("[serving]\nshed_mode = \"panic\"\n").unwrap();
+        assert!(ServingConfig::from_config(&bad).is_err());
+        let bad = Config::parse(
+            "[serving]\nshed_high_watermark = 0.3\nshed_low_watermark = 0.8\n",
+        )
+        .unwrap();
+        assert!(ServingConfig::from_config(&bad).is_err());
+        let bad = Config::parse("[serving]\nshed_pin_rung = two\n").unwrap();
+        assert!(ServingConfig::from_config(&bad).is_err());
     }
 
     #[test]

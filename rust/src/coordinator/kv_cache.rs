@@ -32,15 +32,49 @@ pub type BlockId = usize;
 pub struct BlockAllocator {
     refcounts: Vec<u32>,
     free: Vec<BlockId>,
+    /// Blocks permanently removed from this pool by `withdraw` (their ids
+    /// stay tombstoned so live block ids never dangle).
+    withdrawn: usize,
 }
 
 impl BlockAllocator {
     pub fn new(num_blocks: usize) -> Self {
-        BlockAllocator { refcounts: vec![0; num_blocks], free: (0..num_blocks).rev().collect() }
+        BlockAllocator {
+            refcounts: vec![0; num_blocks],
+            free: (0..num_blocks).rev().collect(),
+            withdrawn: 0,
+        }
     }
 
     pub fn capacity(&self) -> usize {
-        self.refcounts.len()
+        self.refcounts.len() - self.withdrawn
+    }
+
+    /// Grow the pool by `n` fresh blocks (budget transferred in from
+    /// another pool — see `withdraw`).
+    pub fn add_blocks(&mut self, n: usize) {
+        for _ in 0..n {
+            let id = self.refcounts.len();
+            self.refcounts.push(0);
+            self.free.push(id);
+        }
+    }
+
+    /// Permanently remove up to `n` free blocks from this pool, returning
+    /// how many were withdrawn. The removed ids are tombstoned (refcount
+    /// pinned above zero, never pushed back to the free list) so existing
+    /// `BlockId`s remain valid. This is the one-way page-budget transfer
+    /// the admission path uses: prefix-cache pages shed under pressure are
+    /// withdrawn here and re-added to the KV pool via `add_blocks`.
+    pub fn withdraw(&mut self, n: usize) -> usize {
+        let take = n.min(self.free.len());
+        for _ in 0..take {
+            let id = self.free.pop().expect("free list length checked above");
+            debug_assert_eq!(self.refcounts[id], 0);
+            self.refcounts[id] = u32::MAX; // tombstone: never freed again
+        }
+        self.withdrawn += take;
+        take
     }
 
     pub fn free_blocks(&self) -> usize {
@@ -90,11 +124,24 @@ pub struct KvCacheManager {
     alloc: BlockAllocator,
     seqs: HashMap<u64, SeqEntry>,
     num_layers: usize,
+    /// Lifetime page-accounting: every page handed to a sequence is
+    /// counted here, and every page returned by `evict` in
+    /// `pages_released`. The serving layer's fault tests assert
+    /// acquired == released once all sequences are torn down — the
+    /// no-leak invariant that survives cancellations and worker panics.
+    pages_acquired: usize,
+    pages_released: usize,
 }
 
 impl KvCacheManager {
     pub fn new(num_blocks: usize, num_layers: usize) -> Self {
-        KvCacheManager { alloc: BlockAllocator::new(num_blocks), seqs: HashMap::new(), num_layers }
+        KvCacheManager {
+            alloc: BlockAllocator::new(num_blocks),
+            seqs: HashMap::new(),
+            num_layers,
+            pages_acquired: 0,
+            pages_released: 0,
+        }
     }
 
     /// Admit a sequence with `tokens` context tokens; allocates
@@ -107,6 +154,7 @@ impl KvCacheManager {
             return None;
         }
         let blocks: Vec<BlockId> = (0..need).map(|_| self.alloc.alloc().unwrap()).collect();
+        self.pages_acquired += need;
         self.seqs.insert(
             seq_id,
             SeqEntry {
@@ -128,6 +176,7 @@ impl KvCacheManager {
         };
         if needs_block {
             let blk = self.alloc.alloc()?;
+            self.pages_acquired += 1;
             self.seqs.get_mut(&seq_id).unwrap().blocks.push(blk);
         }
         let e = self.seqs.get_mut(&seq_id).unwrap();
@@ -152,13 +201,32 @@ impl KvCacheManager {
         self.seqs.get(&seq_id).map(|e| e.steps_since_refresh).unwrap_or(0)
     }
 
-    /// Release a sequence: frees its pages and selections.
+    /// Release a sequence: frees its pages and selections. Safe to call
+    /// for an unknown id (cancellation/panic cleanup paths call it
+    /// defensively).
     pub fn evict(&mut self, seq_id: u64) {
         if let Some(e) = self.seqs.remove(&seq_id) {
+            self.pages_released += e.blocks.len();
             for b in e.blocks {
                 self.alloc.release(b);
             }
         }
+    }
+
+    /// Grow the pool by `n` pages (budget reclaimed from the prefix cache
+    /// under admission pressure — see `cache::PrefixCache::shed_pages`).
+    pub fn grow(&mut self, n: usize) {
+        self.alloc.add_blocks(n);
+    }
+
+    /// Lifetime pages handed to sequences (admission + decode growth).
+    pub fn pages_acquired(&self) -> usize {
+        self.pages_acquired
+    }
+
+    /// Lifetime pages returned by eviction.
+    pub fn pages_released(&self) -> usize {
+        self.pages_released
     }
 
     pub fn tokens(&self, seq_id: u64) -> usize {
@@ -205,6 +273,57 @@ mod tests {
         let b = a.alloc().unwrap();
         a.release(b);
         a.release(b);
+    }
+
+    #[test]
+    fn withdraw_and_add_blocks_transfer_budget() {
+        let mut a = BlockAllocator::new(4);
+        let held = a.alloc().unwrap();
+        assert_eq!(a.withdraw(10), 3, "only free blocks can leave");
+        assert_eq!(a.capacity(), 1);
+        assert_eq!(a.free_blocks(), 0);
+        assert!(a.alloc().is_none());
+        // The surviving allocation still releases cleanly.
+        a.release(held);
+        assert_eq!(a.free_blocks(), 1);
+        let mut b = BlockAllocator::new(2);
+        b.add_blocks(3);
+        assert_eq!(b.capacity(), 5);
+        assert_eq!(b.free_blocks(), 5);
+        let ids: Vec<_> = (0..5).map(|_| b.alloc().unwrap()).collect();
+        for id in ids {
+            b.release(id);
+        }
+        assert_eq!(b.free_blocks(), 5);
+    }
+
+    #[test]
+    fn manager_page_accounting_balances() {
+        let mut kv = KvCacheManager::new(8, 1);
+        kv.admit(1, 33).unwrap(); // 3 pages
+        kv.admit(2, 16).unwrap(); // 1 page
+        for _ in 0..17 {
+            kv.append_token(1).unwrap(); // crosses two boundaries → +2
+        }
+        assert_eq!(kv.pages_acquired(), 6);
+        assert_eq!(kv.pages_released(), 0);
+        kv.evict(1);
+        kv.evict(2);
+        kv.evict(99); // unknown id: no-op, no double count
+        assert_eq!(kv.pages_released(), kv.pages_acquired());
+        assert_eq!(kv.free_blocks(), kv.capacity());
+    }
+
+    #[test]
+    fn grow_admits_after_exhaustion() {
+        let mut kv = KvCacheManager::new(2, 1);
+        assert!(kv.admit(1, 40).is_none()); // needs 3 > 2
+        kv.grow(2);
+        assert!(kv.admit(1, 40).is_some()); // 3 <= 4 now
+        assert_eq!(kv.capacity(), 4);
+        kv.evict(1);
+        assert_eq!(kv.free_blocks(), 4);
+        assert_eq!(kv.pages_acquired(), kv.pages_released());
     }
 
     #[test]

@@ -23,5 +23,5 @@ pub mod scheduler;
 pub use batcher::{Batch, BatcherConfig, DynamicBatcher};
 pub use kv_cache::{BlockAllocator, KvCacheManager};
 pub use prescore_manager::{PreScoreManager, PreScoreManagerConfig};
-pub use request::{Request, RequestId, RequestState, Response};
+pub use request::{Request, RequestId, RequestState, Response, ServerError};
 pub use scheduler::{Scheduler, SchedulerConfig, WorkItem};

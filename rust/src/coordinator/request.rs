@@ -1,6 +1,7 @@
 //! Request/response types and lifecycle.
 
-use std::time::Instant;
+use std::fmt;
+use std::time::{Duration, Instant};
 
 pub type RequestId = u64;
 
@@ -28,17 +29,84 @@ pub struct Request {
     pub generate: usize,
     pub arrived: Instant,
     pub state: RequestState,
+    /// Wall-clock budget from `arrived`, in milliseconds (0 = no deadline).
+    /// An expired request is failed with [`ServerError::DeadlineExceeded`]
+    /// and its KV pages / prefix pins are released.
+    pub deadline_ms: u64,
 }
 
 impl Request {
     pub fn scoring(id: RequestId, tokens: Vec<u32>) -> Self {
-        Request { id, tokens, generate: 0, arrived: Instant::now(), state: RequestState::Queued }
+        Request {
+            id,
+            tokens,
+            generate: 0,
+            arrived: Instant::now(),
+            state: RequestState::Queued,
+            deadline_ms: 0,
+        }
+    }
+
+    /// Builder: attach a deadline (milliseconds from arrival).
+    pub fn with_deadline(mut self, deadline_ms: u64) -> Self {
+        self.deadline_ms = deadline_ms;
+        self
+    }
+
+    /// The absolute deadline, if one was set.
+    pub fn deadline(&self) -> Option<Instant> {
+        (self.deadline_ms > 0)
+            .then(|| self.arrived + Duration::from_millis(self.deadline_ms))
+    }
+
+    /// Has the deadline passed?
+    pub fn expired(&self) -> bool {
+        self.deadline().map_or(false, |d| Instant::now() >= d)
     }
 
     pub fn num_tokens(&self) -> usize {
         self.tokens.len()
     }
 }
+
+/// Typed failure classes threaded into [`Response::error`]. A failed
+/// request gets a response (never a silently dropped channel), and the
+/// class tells the client whether to retry (Capacity), fix the request
+/// (Invalid/Unsupported), or treat it as served-as-asked (Cancelled /
+/// DeadlineExceeded).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServerError {
+    /// Cancelled via `ScoringServer::cancel` before completion.
+    Cancelled,
+    /// The request's `deadline_ms` elapsed before completion.
+    DeadlineExceeded,
+    /// Admission refused: the request cannot fit, or load-shedding runs in
+    /// reject mode and the pool is saturated.
+    Capacity(String),
+    /// Malformed request (e.g. an empty token stream).
+    Invalid(String),
+    /// This server cannot serve the request class (e.g. generation without
+    /// a substrate model).
+    Unsupported(String),
+    /// A worker panicked or an internal component failed. The request is
+    /// dead; the server keeps serving.
+    Internal(String),
+}
+
+impl fmt::Display for ServerError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServerError::Cancelled => write!(f, "cancelled"),
+            ServerError::DeadlineExceeded => write!(f, "deadline exceeded"),
+            ServerError::Capacity(m) => write!(f, "over capacity: {m}"),
+            ServerError::Invalid(m) => write!(f, "invalid request: {m}"),
+            ServerError::Unsupported(m) => write!(f, "unsupported: {m}"),
+            ServerError::Internal(m) => write!(f, "internal error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for ServerError {}
 
 /// The response returned to the client.
 #[derive(Debug, Clone)]
@@ -63,6 +131,15 @@ pub struct Response {
     /// Total wall time spent inside decode steps for this request (ms) —
     /// per-step p50/p99 across requests lives in `ServerStats`.
     pub decode_ms: f64,
+    /// Load-shedding served this request down the degradation ladder:
+    /// `spec` names the spec that actually ran (truthful degradation — the
+    /// client is never silently served a sparser budget).
+    pub degraded: bool,
+    /// Attention spec string this request was actually served under.
+    pub spec: String,
+    /// Why the request failed, if it did. `None` = served successfully.
+    /// A faulted decode still reports its partial `generated`/`nll`.
+    pub error: Option<ServerError>,
 }
 
 impl Response {
@@ -72,6 +149,29 @@ impl Response {
             return f64::NAN;
         }
         (self.nll.iter().map(|&v| v as f64).sum::<f64>() / self.nll.len() as f64).exp()
+    }
+
+    /// A typed failure response with no payload.
+    pub fn failure(id: RequestId, latency_ms: f64, spec: String, error: ServerError) -> Response {
+        Response {
+            id,
+            nll: Vec::new(),
+            generated: Vec::new(),
+            latency_ms,
+            kernel: String::new(),
+            retained_keys: 0,
+            fallback_used: false,
+            decode_steps: 0,
+            decode_ms: 0.0,
+            degraded: false,
+            spec,
+            error: Some(error),
+        }
+    }
+
+    /// Did the request complete successfully?
+    pub fn is_ok(&self) -> bool {
+        self.error.is_none()
     }
 }
 
@@ -99,7 +199,34 @@ mod tests {
             fallback_used: false,
             decode_steps: 0,
             decode_ms: 0.0,
+            degraded: false,
+            spec: "exact".into(),
+            error: None,
         };
         assert!((resp.perplexity() - 2.0).abs() < 1e-5);
+        assert!(resp.is_ok());
+    }
+
+    #[test]
+    fn deadline_helpers() {
+        let r = Request::scoring(1, vec![1, 2]);
+        assert_eq!(r.deadline(), None);
+        assert!(!r.expired());
+        let r = Request::scoring(2, vec![1, 2]).with_deadline(60_000);
+        assert!(r.deadline().is_some());
+        assert!(!r.expired(), "a minute-long deadline cannot have passed");
+        let mut r = Request::scoring(3, vec![1, 2]).with_deadline(1);
+        r.arrived = Instant::now() - Duration::from_millis(5);
+        assert!(r.expired());
+    }
+
+    #[test]
+    fn failure_response_is_typed() {
+        let resp =
+            Response::failure(9, 1.5, "exact".into(), ServerError::Capacity("full".into()));
+        assert!(!resp.is_ok());
+        assert_eq!(resp.error, Some(ServerError::Capacity("full".into())));
+        assert!(resp.nll.is_empty() && resp.generated.is_empty());
+        assert!(format!("{}", resp.error.unwrap()).contains("over capacity"));
     }
 }

@@ -1,0 +1,327 @@
+//! Deterministic fault injection for the serving stack.
+//!
+//! A [`FaultPlan`] maps named injection points to per-mille firing rates.
+//! Whether a given (point, key) pair fires is a pure function of the plan's
+//! seed — no RNG state, no ordering dependence — so a chaos run is exactly
+//! reproducible from `PALLAS_FAULT_SEED` alone, and a test can *predict*
+//! which request ids will be faulted and assert that every other response
+//! is bitwise identical to a fault-free run.
+//!
+//! The hooks are zero-cost when disabled: every `fires()` call starts with
+//! one relaxed atomic load of a process-global flag and returns immediately
+//! in production. Plans are installed explicitly ([`install`]) by the chaos
+//! suite, or from the environment ([`install_from_env`], read by
+//! `ScoringServer::start*`) when `PALLAS_FAULT_PLAN` is set.
+//!
+//! Injection points cover the failure classes the fault-tolerance layer is
+//! built for: KV page-pool exhaustion at admission, prefix-cache eviction
+//! storms, worker/decode-step panics, slow decode steps, and persist-file
+//! corruption.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+
+/// A named injection point in the serving stack.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultPoint {
+    /// Force `KvCacheManager::admit` to report pool exhaustion (once per
+    /// request id — the engine retries through the shed-and-retry path).
+    KvAdmit,
+    /// Force a prefix-cache eviction storm (every unpinned subtree) at an
+    /// insert.
+    EvictStorm,
+    /// Panic inside a scoring worker's batch execution.
+    WorkerPanic,
+    /// Panic inside a decode step (after the page append, before compute).
+    DecodePanic,
+    /// Sleep before a decode step (deadline/starvation pressure).
+    SlowDecode,
+    /// Flip one byte of a persisted artifact store after its checksum is
+    /// computed (the loader must reject the file cleanly).
+    PersistCorrupt,
+}
+
+/// All injection points, in `FaultPlan::rates` order.
+pub const ALL_POINTS: [FaultPoint; 6] = [
+    FaultPoint::KvAdmit,
+    FaultPoint::EvictStorm,
+    FaultPoint::WorkerPanic,
+    FaultPoint::DecodePanic,
+    FaultPoint::SlowDecode,
+    FaultPoint::PersistCorrupt,
+];
+
+impl FaultPoint {
+    fn index(self) -> usize {
+        match self {
+            FaultPoint::KvAdmit => 0,
+            FaultPoint::EvictStorm => 1,
+            FaultPoint::WorkerPanic => 2,
+            FaultPoint::DecodePanic => 3,
+            FaultPoint::SlowDecode => 4,
+            FaultPoint::PersistCorrupt => 5,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultPoint::KvAdmit => "kv_admit",
+            FaultPoint::EvictStorm => "evict_storm",
+            FaultPoint::WorkerPanic => "worker_panic",
+            FaultPoint::DecodePanic => "decode_panic",
+            FaultPoint::SlowDecode => "slow_decode",
+            FaultPoint::PersistCorrupt => "persist_corrupt",
+        }
+    }
+
+    pub fn parse(name: &str) -> Option<FaultPoint> {
+        ALL_POINTS.iter().copied().find(|p| p.name() == name)
+    }
+}
+
+/// SplitMix64 — the repo's standard seed-expansion hash (see prescore's
+/// noise RNG): one round is enough to decorrelate (seed, point, key).
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    let mut z = x;
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// A seeded fault schedule: per-mille firing rate per injection point.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    pub seed: u64,
+    /// Rate out of 1000 per point (0 = never, >= 1000 = always), indexed by
+    /// `FaultPoint::index`.
+    rates: [u16; ALL_POINTS.len()],
+    /// Injected delay for `SlowDecode` (milliseconds).
+    pub slow_ms: u64,
+}
+
+impl FaultPlan {
+    pub fn new(seed: u64) -> FaultPlan {
+        FaultPlan { seed, rates: [0; ALL_POINTS.len()], slow_ms: 5 }
+    }
+
+    /// Builder: set one point's per-mille rate.
+    pub fn with_rate(mut self, point: FaultPoint, per_mille: u16) -> FaultPlan {
+        self.rates[point.index()] = per_mille;
+        self
+    }
+
+    pub fn rate(&self, point: FaultPoint) -> u16 {
+        self.rates[point.index()]
+    }
+
+    /// A moderate-rate mixed schedule derived purely from the seed — the
+    /// ci.sh chaos smoke runs three of these under fixed
+    /// `PALLAS_FAULT_SEED`s.
+    pub fn chaos(seed: u64) -> FaultPlan {
+        let mut plan = FaultPlan::new(seed);
+        for (i, _) in ALL_POINTS.iter().enumerate() {
+            let h = splitmix64(seed ^ (i as u64 + 1).wrapping_mul(0xa5a5_a5a5));
+            plan.rates[i] = (50 + h % 200) as u16;
+        }
+        plan
+    }
+
+    /// Deterministic firing decision for (point, key). `key` is whatever
+    /// stable identifier the call site has — a request id, a cache clock, a
+    /// buffer length.
+    pub fn would_fire(&self, point: FaultPoint, key: u64) -> bool {
+        let r = self.rates[point.index()];
+        if r == 0 {
+            return false;
+        }
+        if r >= 1000 {
+            return true;
+        }
+        let salt = (point.index() as u64 + 1).wrapping_mul(0x2545_f491_4f6c_dd1d);
+        splitmix64(self.seed ^ salt ^ key.wrapping_mul(0x9e37_79b9_7f4a_7c15)) % 1000
+            < u64::from(r)
+    }
+
+    /// Parse a schedule spec: comma-separated `point=per_mille` entries,
+    /// e.g. `"kv_admit=300,worker_panic=50,slow_decode=1000"`. An optional
+    /// `slow_ms=N` entry sets the injected delay.
+    pub fn parse(spec: &str, seed: u64) -> Result<FaultPlan, String> {
+        let mut plan = FaultPlan::new(seed);
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (key, val) = part
+                .split_once('=')
+                .ok_or_else(|| format!("fault plan entry '{part}' is not point=rate"))?;
+            let val: u64 =
+                val.trim().parse().map_err(|_| format!("fault rate '{val}' is not a number"))?;
+            if key.trim() == "slow_ms" {
+                plan.slow_ms = val;
+                continue;
+            }
+            let point = FaultPoint::parse(key.trim())
+                .ok_or_else(|| format!("unknown fault point '{key}'"))?;
+            plan.rates[point.index()] = val.min(1000) as u16;
+        }
+        Ok(plan)
+    }
+
+    /// Build a plan from `PALLAS_FAULT_PLAN` (+ `PALLAS_FAULT_SEED`).
+    /// `PALLAS_FAULT_PLAN=chaos` selects the seed-derived mixed schedule.
+    pub fn from_env() -> Option<FaultPlan> {
+        let spec = std::env::var("PALLAS_FAULT_PLAN").ok()?;
+        if spec.trim().is_empty() {
+            return None;
+        }
+        let seed = std::env::var("PALLAS_FAULT_SEED")
+            .ok()
+            .and_then(|s| s.trim().parse().ok())
+            .unwrap_or(0);
+        if spec.trim() == "chaos" {
+            return Some(FaultPlan::chaos(seed));
+        }
+        match FaultPlan::parse(&spec, seed) {
+            Ok(plan) => Some(plan),
+            Err(e) => {
+                eprintln!("ignoring PALLAS_FAULT_PLAN: {e}");
+                None
+            }
+        }
+    }
+}
+
+static ACTIVE: AtomicBool = AtomicBool::new(false);
+static PLAN: Mutex<Option<FaultPlan>> = Mutex::new(None);
+
+/// Install a plan process-wide (chaos tests; `install_from_env` for the
+/// env-driven path). Replaces any previous plan.
+pub fn install(plan: FaultPlan) {
+    let mut g = PLAN.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    *g = Some(plan);
+    ACTIVE.store(true, Ordering::SeqCst);
+}
+
+/// Remove the installed plan; all hooks return to their zero-cost path.
+pub fn clear() {
+    ACTIVE.store(false, Ordering::SeqCst);
+    let mut g = PLAN.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    *g = None;
+}
+
+pub fn enabled() -> bool {
+    ACTIVE.load(Ordering::Relaxed)
+}
+
+/// Install from the environment if `PALLAS_FAULT_PLAN` is set. Returns
+/// whether a plan is now active. Called by `ScoringServer::start*` so a
+/// live server can be chaos-tested without code changes.
+pub fn install_from_env() -> bool {
+    if let Some(plan) = FaultPlan::from_env() {
+        install(plan);
+    }
+    enabled()
+}
+
+/// The hook: does `point` fire for `key` under the installed plan?
+/// One relaxed atomic load when no plan is installed.
+pub fn fires(point: FaultPoint, key: u64) -> bool {
+    if !ACTIVE.load(Ordering::Relaxed) {
+        return false;
+    }
+    let g = PLAN.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    g.as_ref().map_or(false, |p| p.would_fire(point, key))
+}
+
+/// Sleep `slow_ms` if `point` fires for `key` (SlowDecode-style delays).
+pub fn maybe_slow(point: FaultPoint, key: u64) {
+    if !ACTIVE.load(Ordering::Relaxed) {
+        return;
+    }
+    let ms = {
+        let g = PLAN.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        match g.as_ref() {
+            Some(p) if p.would_fire(point, key) => p.slow_ms,
+            _ => return,
+        }
+    };
+    if ms > 0 {
+        std::thread::sleep(std::time::Duration::from_millis(ms));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// install/clear touch process globals; serialize the tests that do.
+    static GUARD: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn disabled_hooks_never_fire() {
+        let _g = GUARD.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        clear();
+        assert!(!enabled());
+        for p in ALL_POINTS {
+            assert!(!fires(p, 42));
+        }
+    }
+
+    #[test]
+    fn firing_is_deterministic_and_seed_sensitive() {
+        let a = FaultPlan::new(7).with_rate(FaultPoint::KvAdmit, 500);
+        let b = FaultPlan::new(8).with_rate(FaultPoint::KvAdmit, 500);
+        let fire_a: Vec<bool> = (0..64).map(|k| a.would_fire(FaultPoint::KvAdmit, k)).collect();
+        let again: Vec<bool> = (0..64).map(|k| a.would_fire(FaultPoint::KvAdmit, k)).collect();
+        assert_eq!(fire_a, again, "same plan, same keys → same decisions");
+        let fire_b: Vec<bool> = (0..64).map(|k| b.would_fire(FaultPoint::KvAdmit, k)).collect();
+        assert_ne!(fire_a, fire_b, "different seeds must disagree somewhere");
+        let hits = fire_a.iter().filter(|&&f| f).count();
+        assert!((10..=54).contains(&hits), "rate 500/1000 over 64 keys, got {hits}");
+    }
+
+    #[test]
+    fn points_are_independent() {
+        let plan = FaultPlan::new(3)
+            .with_rate(FaultPoint::KvAdmit, 1000)
+            .with_rate(FaultPoint::DecodePanic, 0);
+        assert!(plan.would_fire(FaultPoint::KvAdmit, 5));
+        assert!(!plan.would_fire(FaultPoint::DecodePanic, 5));
+        assert!(!plan.would_fire(FaultPoint::WorkerPanic, 5), "unset point stays silent");
+    }
+
+    #[test]
+    fn parse_roundtrips_names() {
+        let plan = FaultPlan::parse("kv_admit=300, worker_panic=50,slow_ms=9", 11).unwrap();
+        assert_eq!(plan.rate(FaultPoint::KvAdmit), 300);
+        assert_eq!(plan.rate(FaultPoint::WorkerPanic), 50);
+        assert_eq!(plan.rate(FaultPoint::EvictStorm), 0);
+        assert_eq!(plan.slow_ms, 9);
+        assert_eq!(plan.seed, 11);
+        assert!(FaultPlan::parse("bogus=1", 0).is_err());
+        assert!(FaultPlan::parse("kv_admit", 0).is_err());
+        for p in ALL_POINTS {
+            assert_eq!(FaultPoint::parse(p.name()), Some(p));
+        }
+    }
+
+    #[test]
+    fn chaos_plan_covers_every_point() {
+        let plan = FaultPlan::chaos(1);
+        for p in ALL_POINTS {
+            let r = plan.rate(p);
+            assert!((50..250).contains(&r), "{}: rate {r} outside the chaos band", p.name());
+        }
+        assert_eq!(plan, FaultPlan::chaos(1), "chaos schedule is a pure function of the seed");
+        assert_ne!(plan, FaultPlan::chaos(2));
+    }
+
+    #[test]
+    fn install_clear_roundtrip() {
+        let _g = GUARD.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        install(FaultPlan::new(1).with_rate(FaultPoint::SlowDecode, 1000));
+        assert!(enabled());
+        assert!(fires(FaultPoint::SlowDecode, 0));
+        assert!(!fires(FaultPoint::KvAdmit, 0));
+        clear();
+        assert!(!fires(FaultPoint::SlowDecode, 0));
+    }
+}

@@ -25,6 +25,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod exp;
+pub mod fault;
 pub mod linalg;
 pub mod lsh;
 pub mod metrics;

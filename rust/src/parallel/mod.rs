@@ -53,6 +53,16 @@ use std::time::Duration;
 /// future retuning lands everywhere at once.
 pub const DEFAULT_MIN_WORK: usize = 1 << 15;
 
+/// Poison-tolerant lock. Shard panics are caught in [`Job::run`] and
+/// re-thrown on the *calling* thread, so a poisoned pool mutex only means
+/// "some holder panicked between two single-item operations" — the queue and
+/// latch state stay consistent, and cascading `PoisonError` panics through
+/// every other parallel call on the process would turn one caught failure
+/// into total loss of the pool.
+fn plock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
 /// Global pool width. 0 = not yet initialized (resolved lazily from the
 /// `PALLAS_THREADS` env var / hardware parallelism on first use).
 static GLOBAL_THREADS: AtomicUsize = AtomicUsize::new(0);
@@ -190,12 +200,12 @@ impl Latch {
 
     fn complete(&self, panic: Option<Box<dyn std::any::Any + Send + 'static>>) {
         if let Some(p) = panic {
-            let mut slot = self.panic.lock().expect("latch panic slot poisoned");
+            let mut slot = plock(&self.panic);
             if slot.is_none() {
                 *slot = Some(p);
             }
         }
-        let mut rem = self.remaining.lock().expect("latch poisoned");
+        let mut rem = plock(&self.remaining);
         *rem -= 1;
         if *rem == 0 {
             self.done.notify_all();
@@ -251,7 +261,7 @@ struct PoolShared {
 
 impl PoolShared {
     fn pop(&self) -> Option<Job> {
-        self.queue.lock().expect("pool queue poisoned").pop_front()
+        plock(&self.queue).pop_front()
     }
 }
 
@@ -279,7 +289,7 @@ impl Pool {
         if width <= 1 {
             return None;
         }
-        let mut slot = POOL.lock().expect("pool slot poisoned");
+        let mut slot = plock(&POOL);
         if let Some(pool) = slot.as_ref() {
             if pool.width == width {
                 return Some(Arc::clone(pool));
@@ -293,11 +303,21 @@ impl Pool {
             width,
         });
         // width - 1 workers: the help-waiting caller is the width'th lane.
+        // Each worker runs under a respawn supervisor: shard panics are
+        // caught per-job inside `Job::run`, so an unwind escaping
+        // `worker_loop` means the loop plumbing itself failed — restart the
+        // lane rather than silently shrinking the pool until teardown.
         for i in 0..width - 1 {
             let pool = Arc::clone(&shared);
             std::thread::Builder::new()
                 .name(format!("pallas-pool-{i}"))
-                .spawn(move || worker_loop(pool))
+                .spawn(move || loop {
+                    let p = Arc::clone(&pool);
+                    if catch_unwind(AssertUnwindSafe(|| worker_loop(p))).is_ok() {
+                        return; // clean exit: pool retired
+                    }
+                    eprintln!("pallas-pool-{i}: worker loop panicked; restarting");
+                })
                 .expect("spawning pool worker");
         }
         *slot = Some(Arc::clone(&shared));
@@ -306,14 +326,14 @@ impl Pool {
 
     /// Tear down the current pool (if any); next use rebuilds lazily.
     fn teardown() {
-        let mut slot = POOL.lock().expect("pool slot poisoned");
+        let mut slot = plock(&POOL);
         if let Some(pool) = slot.take() {
             Self::retire(&pool);
         }
     }
 
     fn retire(pool: &Arc<PoolShared>) {
-        *pool.live.lock().expect("pool live flag poisoned") = false;
+        *plock(&pool.live) = false;
         pool.work.notify_all();
     }
 }
@@ -324,12 +344,12 @@ impl Pool {
 fn worker_loop(pool: Arc<PoolShared>) {
     loop {
         let job = {
-            let mut queue = pool.queue.lock().expect("pool queue poisoned");
+            let mut queue = plock(&pool.queue);
             loop {
                 if let Some(job) = queue.pop_front() {
                     break Some(job);
                 }
-                if !*pool.live.lock().expect("pool live flag poisoned") {
+                if !*plock(&pool.live) {
                     break None;
                 }
                 // Park until a push or teardown; bounded so a teardown
@@ -337,7 +357,7 @@ fn worker_loop(pool: Arc<PoolShared>) {
                 let (q, _) = pool
                     .work
                     .wait_timeout(queue, Duration::from_millis(50))
-                    .expect("pool queue poisoned");
+                    .unwrap_or_else(std::sync::PoisonError::into_inner);
                 queue = q;
             }
         };
@@ -375,7 +395,7 @@ fn run_shards(shards: Vec<Box<dyn FnOnce() + Send + '_>>) {
     match pool {
         Some(pool) => {
             {
-                let mut queue = pool.queue.lock().expect("pool queue poisoned");
+                let mut queue = plock(&pool.queue);
                 for shard in shards {
                     // Safety: `latch` is awaited below before this frame
                     // (and the borrows inside `shard`) can die.
@@ -389,7 +409,7 @@ fn run_shards(shards: Vec<Box<dyn FnOnce() + Send + '_>>) {
             // shards are all accounted for.
             loop {
                 {
-                    let rem = latch.remaining.lock().expect("latch poisoned");
+                    let rem = plock(&latch.remaining);
                     if *rem == 0 {
                         break;
                     }
@@ -398,7 +418,7 @@ fn run_shards(shards: Vec<Box<dyn FnOnce() + Send + '_>>) {
                     job.run_neutral();
                     continue;
                 }
-                let rem = latch.remaining.lock().expect("latch poisoned");
+                let rem = plock(&latch.remaining);
                 if *rem == 0 {
                     break;
                 }
@@ -417,7 +437,7 @@ fn run_shards(shards: Vec<Box<dyn FnOnce() + Send + '_>>) {
             }
         }
     }
-    if let Some(p) = latch.panic.lock().expect("latch panic slot poisoned").take() {
+    if let Some(p) = plock(&latch.panic).take() {
         resume_unwind(p);
     }
 }
@@ -751,6 +771,18 @@ mod tests {
             });
             assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
         });
+    }
+
+    #[test]
+    fn plock_recovers_poisoned_mutex() {
+        let m = Mutex::new(41);
+        let _ = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            let _g = m.lock().unwrap();
+            panic!("poison it");
+        }));
+        assert!(m.lock().is_err(), "mutex is poisoned");
+        *plock(&m) += 1;
+        assert_eq!(*plock(&m), 42, "plock serves the inner value regardless");
     }
 
     #[test]

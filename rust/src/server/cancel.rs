@@ -1,0 +1,127 @@
+//! Cooperative cancellation for in-flight requests.
+//!
+//! A [`CancelToken`] is a shared flag checked at the serving stack's safe
+//! points — prefill-prepare, between decode rounds, inside the decode step
+//! loop — never mid-kernel, so a cancelled request's teardown always sees a
+//! consistent KV/pin state. The [`CancelRegistry`] maps request ids to
+//! tokens: `ScoringServer::submit` registers, `ScoringServer::cancel` trips
+//! the flag from any thread, and the engine removes the entry when the
+//! request reaches a terminal state (cancelling a finished request is a
+//! no-op that returns `false`).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// A shared cancellation flag. Cloning shares the flag.
+#[derive(Clone, Debug, Default)]
+pub struct CancelToken(Arc<AtomicBool>);
+
+impl CancelToken {
+    pub fn new() -> CancelToken {
+        CancelToken::default()
+    }
+
+    /// Trip the flag. Idempotent.
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::SeqCst);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(Ordering::SeqCst)
+    }
+}
+
+/// Request-id → token map shared between the client handle and the serving
+/// threads.
+#[derive(Default)]
+pub struct CancelRegistry {
+    tokens: Mutex<HashMap<u64, CancelToken>>,
+}
+
+impl CancelRegistry {
+    pub fn new() -> CancelRegistry {
+        CancelRegistry::default()
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, HashMap<u64, CancelToken>> {
+        // A panicking holder leaves the map fully usable (single-item ops).
+        self.tokens.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
+    /// The token for `id`, creating one if the request is new.
+    pub fn register(&self, id: u64) -> CancelToken {
+        self.lock().entry(id).or_default().clone()
+    }
+
+    /// The token for `id`, if the request is still live.
+    pub fn get(&self, id: u64) -> Option<CancelToken> {
+        self.lock().get(&id).cloned()
+    }
+
+    /// Trip `id`'s token. Returns `false` when the request is unknown or
+    /// already finished — cancellation of a completed request is a no-op.
+    pub fn cancel(&self, id: u64) -> bool {
+        match self.lock().get(&id) {
+            Some(t) => {
+                t.cancel();
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Drop `id`'s entry (terminal state reached).
+    pub fn remove(&self, id: u64) {
+        self.lock().remove(&id);
+    }
+
+    /// Number of live (registered, not yet terminal) requests.
+    pub fn len(&self) -> usize {
+        self.lock().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lock().is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn token_trips_once_and_shares_state() {
+        let t = CancelToken::new();
+        assert!(!t.is_cancelled());
+        let u = t.clone();
+        u.cancel();
+        assert!(t.is_cancelled(), "clones share the flag");
+        t.cancel();
+        assert!(t.is_cancelled(), "idempotent");
+    }
+
+    #[test]
+    fn registry_lifecycle() {
+        let reg = CancelRegistry::new();
+        assert!(!reg.cancel(7), "cancelling an unknown id is a no-op");
+        let t = reg.register(7);
+        assert_eq!(reg.len(), 1);
+        assert!(reg.cancel(7));
+        assert!(t.is_cancelled(), "registry cancel reaches the held token");
+        assert!(reg.get(7).is_some());
+        reg.remove(7);
+        assert!(reg.get(7).is_none());
+        assert!(!reg.cancel(7), "post-completion cancel reports false");
+        assert!(reg.is_empty());
+    }
+
+    #[test]
+    fn register_is_stable_across_calls() {
+        let reg = CancelRegistry::new();
+        let a = reg.register(3);
+        let b = reg.register(3);
+        b.cancel();
+        assert!(a.is_cancelled(), "same id → same underlying token");
+    }
+}

@@ -31,25 +31,60 @@
 //! Worker count: `ServingConfig::executor_workers`, with 0 meaning "derive
 //! from the [`crate::parallel`] pool width" (i.e. `PALLAS_THREADS`), capped
 //! so a laptop-sized pool doesn't compile one artifact registry per core.
+//!
+//! **Fault tolerance.** Every request reaches a terminal state with a typed
+//! [`Response`] (never a silently dropped channel): deadlines
+//! (`Request::deadline_ms`) and cancellation ([`ScoringServer::cancel`])
+//! are observed at the safe points — admission, the prefill→decode
+//! boundary, and between decode rounds — and tear down with their KV pages
+//! and prefix pins released. Worker panics are caught at the work-item
+//! boundary ([`std::panic::catch_unwind`]), fail only the requests in the
+//! panicked item with [`crate::coordinator::ServerError::Internal`], and
+//! the worker keeps draining the queue. Under pool pressure admission
+//! degrades down the [`shed`] ladder instead of rejecting (truthfully
+//! reported via `Response::degraded`/`spec`), after first retrying a failed
+//! page reservation against budget reclaimed from unpinned prefix-cache
+//! subtrees. The [`crate::fault`] hooks make all of it deterministically
+//! testable.
+
+pub mod cancel;
+pub mod shed;
 
 use crate::attention::{AttentionBackend, AttentionSpec, AttnPolicy};
 use crate::cache::{CacheStats, PrefixCache, PrefixCacheConfig, PrefixHit, PrefixSnapshot};
 use crate::config::ServingConfig;
 use crate::coordinator::{
     Batch, BatcherConfig, DynamicBatcher, KvCacheManager, PreScoreManager,
-    PreScoreManagerConfig, Request, Response, Scheduler, SchedulerConfig, WorkItem,
+    PreScoreManagerConfig, Request, Response, Scheduler, SchedulerConfig, ServerError,
+    WorkItem,
 };
+use crate::fault::FaultPoint;
 use crate::metrics::LatencyStats;
 use crate::model::transformer::{argmax_row, nll_entry, nll_from_logits};
 use crate::model::{DecodeSession, Transformer, TransformerConfig, WeightStore};
 use crate::parallel;
 use crate::runtime::ArtifactRegistry;
 use anyhow::Result;
+use cancel::{CancelRegistry, CancelToken};
+use shed::{build_ladder, LoadShedder, Rung};
 use std::collections::{HashMap, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::{Path, PathBuf};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
+
+/// Poison-tolerant lock: a worker panic is already accounted (and the
+/// request failed with a typed error) at the `catch_unwind` boundary — the
+/// shared structures stay serviceable instead of cascading
+/// `PoisonError` panics through every other request on the server.
+fn plock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+fn ms_since(t: Instant) -> f64 {
+    t.elapsed().as_secs_f64() * 1e3
+}
 
 /// A submitted job: the request plus the channel to answer on.
 pub struct Job {
@@ -58,7 +93,7 @@ pub struct Job {
 }
 
 /// Server statistics snapshot.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct ServerStats {
     pub completed: usize,
     pub batches: usize,
@@ -94,6 +129,33 @@ pub struct ServerStats {
     pub prefix_evictions: usize,
     pub prefix_nodes: usize,
     pub prefix_cached_tokens: usize,
+    /// Requests that reached a terminal state via `ScoringServer::cancel`.
+    pub cancelled: usize,
+    /// Requests failed because their `deadline_ms` elapsed.
+    pub expired: usize,
+    /// Completed requests served below the configured spec (down-ladder).
+    pub degraded: usize,
+    /// Admissions refused outright (`shed_mode = "reject"` under pressure).
+    pub shed_rejects: usize,
+    /// Requests failed with `ServerError::Internal` (panics, artifact
+    /// failures) — the server survived each of them.
+    pub internal_errors: usize,
+    /// Worker panics caught at the work-item boundary.
+    pub worker_panics: usize,
+    /// KV page accounting over the server's lifetime. Teardown correctness
+    /// invariant (asserted by the chaos/cancellation suites): once the
+    /// server drains, `kv_pages_acquired == kv_pages_released` — no faulted,
+    /// cancelled, or expired request leaks pool pages.
+    pub kv_pages_acquired: usize,
+    pub kv_pages_released: usize,
+    /// Pages transferred from unpinned prefix-cache subtrees to the KV pool
+    /// by the admission retry path.
+    pub kv_pages_reclaimed: usize,
+    /// Prefix-cache pin accounting (same balance invariant as pages).
+    pub prefix_pins_acquired: usize,
+    pub prefix_pins_released: usize,
+    /// Last observed degradation-ladder rung (0 = full quality).
+    pub shed_level: usize,
 }
 
 /// Mutable counters shared between the executor workers.
@@ -109,6 +171,28 @@ struct SharedStats {
     prefills: usize,
     decode_rounds: usize,
     decode_steps: usize,
+    cancelled: usize,
+    expired: usize,
+    degraded: usize,
+    shed_rejects: usize,
+    internal_errors: usize,
+    worker_panics: usize,
+    kv_pages_reclaimed: usize,
+    shed_level: usize,
+}
+
+impl SharedStats {
+    /// Account a terminal failure by class (success accounting stays at the
+    /// call sites, which also record latency/tokens).
+    fn record_failure(&mut self, err: &ServerError) {
+        match err {
+            ServerError::Cancelled => self.cancelled += 1,
+            ServerError::DeadlineExceeded => self.expired += 1,
+            ServerError::Capacity(_) => self.shed_rejects += 1,
+            ServerError::Internal(_) => self.internal_errors += 1,
+            ServerError::Invalid(_) | ServerError::Unsupported(_) => {}
+        }
+    }
 }
 
 /// Work drained by the executor pool.
@@ -136,13 +220,13 @@ impl WorkQueue {
     }
 
     fn push(&self, w: Work) {
-        let mut g = self.state.lock().expect("work queue poisoned");
+        let mut g = plock(&self.state);
         g.0.push_back(w);
         self.cv.notify_one();
     }
 
     fn close(&self) {
-        let mut g = self.state.lock().expect("work queue poisoned");
+        let mut g = plock(&self.state);
         g.1 = true;
         self.cv.notify_all();
     }
@@ -155,7 +239,7 @@ impl WorkQueue {
     fn pop<F: Fn() -> bool>(&self, drained: F) -> Option<Work> {
         loop {
             let closed = {
-                let mut g = self.state.lock().expect("work queue poisoned");
+                let mut g = plock(&self.state);
                 loop {
                     if let Some(w) = g.0.pop_front() {
                         return Some(w);
@@ -166,7 +250,7 @@ impl WorkQueue {
                     let (ng, _) = self
                         .cv
                         .wait_timeout(g, Duration::from_millis(25))
-                        .expect("work queue poisoned");
+                        .unwrap_or_else(std::sync::PoisonError::into_inner);
                     g = ng;
                 }
             };
@@ -174,7 +258,7 @@ impl WorkQueue {
             if drained() {
                 // Re-check under the lock: a decode round finishing between
                 // the checks may have re-pumped one last item.
-                let g = self.state.lock().expect("work queue poisoned");
+                let g = plock(&self.state);
                 if g.0.is_empty() {
                     return None;
                 }
@@ -200,6 +284,29 @@ struct GenSession {
     /// Pinned prefix-cache node this session branched from (released on
     /// finish so LRU eviction can reclaim cold prefixes).
     cache_pin: Option<usize>,
+    /// Checked between decode rounds (a safe point): a tripped token ends
+    /// the session with `ServerError::Cancelled` and releases its pages.
+    cancel: CancelToken,
+    /// Absolute deadline, if the request set one.
+    deadline: Option<Instant>,
+    /// Degradation-ladder rung this session was admitted at (0 = full).
+    rung: usize,
+    /// The rung's policy — decode steps run under the spec the request was
+    /// truthfully admitted at, not necessarily the configured one.
+    policy: Arc<AttnPolicy>,
+}
+
+/// Teardown bookkeeping for a prefill computing outside the engine lock:
+/// enough to answer the client and release every resource if the request is
+/// cancelled, expires, or its worker panics mid-forward.
+struct InFlightInfo {
+    respond: Option<Sender<Response>>,
+    arrived: Instant,
+    /// Prefix-cache node pinned by the admission-time lookup.
+    pin: Option<usize>,
+    rung: usize,
+    cancel: CancelToken,
+    deadline: Option<Instant>,
 }
 
 /// Everything a prefill needs, cloned out of the engine under its lock so
@@ -261,19 +368,38 @@ struct DecodeEngine {
     suffix_stable: bool,
     /// Admitted but not yet prefilled.
     pending: HashMap<u64, Job>,
-    /// Request ids whose prefill is computing outside the lock. Keeps
-    /// `active()` truthful for the shutdown drain AND guards the duplicate
-    /// check: a re-submitted id must not reach `kv.admit` (which asserts
-    /// single admission) while the first prefill is mid-flight.
-    in_flight: std::collections::HashSet<u64>,
+    /// Requests whose prefill is computing outside the lock, with the
+    /// bookkeeping to tear them down from any thread. Keeps `active()`
+    /// truthful for the shutdown drain AND guards the duplicate check: a
+    /// re-submitted id must not reach `kv.admit` (which asserts single
+    /// admission) while the first prefill is mid-flight.
+    in_flight: HashMap<u64, InFlightInfo>,
     /// Prefilled, streaming tokens.
     sessions: HashMap<u64, GenSession>,
-    max_new: usize,
     kernel: &'static str,
+    /// The degradation ladder (rung 0 = the configured spec at full
+    /// budget) and the watermark tracker that picks the admission rung.
+    rungs: Vec<Rung>,
+    shedder: LoadShedder,
+    /// `shed_mode = "reject"`: refuse over-capacity admissions with
+    /// `ServerError::Capacity` instead of requeueing/degrading.
+    shed_reject: bool,
+    /// Shared request-id → cancel-token map (the server handle trips the
+    /// tokens; the engine observes them at safe points).
+    cancels: Arc<CancelRegistry>,
+    /// Ids whose admission already took one injected `KvAdmit` fault — the
+    /// fault fires once per request so the reclaim-retry path is exercised
+    /// without livelocking the requeue loop.
+    faulted_admits: std::collections::HashSet<u64>,
 }
 
 impl DecodeEngine {
-    fn new(model: Transformer, cfg: &ServingConfig, spec: &AttentionSpec) -> DecodeEngine {
+    fn new(
+        model: Transformer,
+        cfg: &ServingConfig,
+        spec: &AttentionSpec,
+        cancels: Arc<CancelRegistry>,
+    ) -> DecodeEngine {
         let mut manager_cfg = PreScoreManagerConfig::from_serving(cfg).unwrap_or_else(|e| {
             // A bad [prescore] method must not silently change the decode
             // refresh cadence — keep the configured period on fallback.
@@ -354,6 +480,16 @@ impl DecodeEngine {
             }
             None
         };
+        let rungs =
+            build_ladder(spec, cfg.decode_max_new, manager_cfg.refresh_every, cfg.shed_min_top_k);
+        let shedder = LoadShedder::new(
+            cfg.shed_high_watermark,
+            cfg.shed_low_watermark,
+            cfg.shed_queue_high,
+            cfg.shed_queue_low,
+            rungs.len().saturating_sub(1),
+            cfg.shed_pin_rung,
+        );
         DecodeEngine {
             kv: KvCacheManager::new(cfg.kv_blocks, slots),
             manager: PreScoreManager::new(manager_cfg),
@@ -362,11 +498,15 @@ impl DecodeEngine {
             cache,
             suffix_stable: spec.suffix_stable(),
             pending: HashMap::new(),
-            in_flight: std::collections::HashSet::new(),
+            in_flight: HashMap::new(),
             sessions: HashMap::new(),
-            max_new: cfg.decode_max_new,
             kernel: spec.kernel_name(),
             model,
+            rungs,
+            shedder,
+            shed_reject: cfg.shed_mode == "reject",
+            cancels,
+            faulted_admits: std::collections::HashSet::new(),
         }
     }
 
@@ -394,12 +534,34 @@ impl DecodeEngine {
             .collect()
     }
 
-    /// Phase 1 of a prefill, under the engine lock: admission checks, KV
-    /// page reservation, and the prefix-cache walk. Returns the lock-free
-    /// compute's input (`None` = dropped, duplicate, or requeued).
-    fn prepare_prefill(&mut self, id: u64) -> Option<PrefillPrep> {
+    /// Fail `id` at admission time: drop its cancel-token entry, account
+    /// the failure class, and answer the client with a typed response.
+    fn refuse(
+        &mut self,
+        id: u64,
+        respond: Sender<Response>,
+        arrived: Instant,
+        err: ServerError,
+        shared: &Mutex<SharedStats>,
+    ) {
+        self.cancels.remove(id);
+        plock(shared).record_failure(&err);
+        let _ = respond.send(Response::failure(
+            id,
+            ms_since(arrived),
+            self.rungs[0].spec_str.clone(),
+            err,
+        ));
+    }
+
+    /// Phase 1 of a prefill, under the engine lock: admission checks (the
+    /// first cancellation/deadline safe point), the shedding decision, KV
+    /// page reservation with one reclaim-retry, and the prefix-cache walk.
+    /// Returns the lock-free compute's input (`None` = answered with a
+    /// typed failure, duplicate, or requeued).
+    fn prepare_prefill(&mut self, id: u64, shared: &Mutex<SharedStats>) -> Option<PrefillPrep> {
         let job = self.pending.remove(&id)?;
-        if self.sessions.contains_key(&id) || self.in_flight.contains(&id) {
+        if self.sessions.contains_key(&id) || self.in_flight.contains_key(&id) {
             // Duplicate request id while the first is still streaming (or
             // still computing its prefill outside the lock): the newer
             // responder is dropped (same policy as the scoring path's
@@ -407,68 +569,157 @@ impl DecodeEngine {
             // `kv.admit` asserts single admission.
             return None;
         }
+        let arrived = job.request.arrived;
+        let cancel = self.cancels.register(id);
+        if cancel.is_cancelled() {
+            let Job { respond, .. } = job;
+            self.refuse(id, respond, arrived, ServerError::Cancelled, shared);
+            return None;
+        }
+        if job.request.expired() {
+            let Job { respond, .. } = job;
+            self.refuse(id, respond, arrived, ServerError::DeadlineExceeded, shared);
+            return None;
+        }
         let mut tokens = job.request.tokens.clone();
         tokens.truncate(self.model.cfg.max_seq);
         if tokens.is_empty() {
-            return None; // responder dropped → caller observes disconnect
-        }
-        let need_pages = crate::coordinator::kv_cache::pages_for(tokens.len());
-        if need_pages > self.kv.capacity() {
-            eprintln!(
-                "request {id} needs {need_pages} kv pages but the pool holds {} — dropping",
-                self.kv.capacity()
-            );
+            let Job { respond, .. } = job;
+            let err = ServerError::Invalid("empty token stream".into());
+            self.refuse(id, respond, arrived, err, shared);
             return None;
         }
-        if self.kv.admit(id, tokens.len()).is_none() {
-            // Pool momentarily exhausted by live sequences: requeue the
-            // prefill — pages free as sequences finish, and the scheduler's
-            // prefill-priority keeps retrying at the pump cadence.
-            self.pending.insert(id, job);
-            self.scheduler.submit_prefill(vec![id]);
+        // Shedding decision: fold pool occupancy + queue depth into the
+        // ladder position this request is admitted at.
+        let cap = self.kv.capacity();
+        let occupancy = 1.0 - self.kv.free_blocks() as f64 / cap.max(1) as f64;
+        let rung = self.shedder.observe(occupancy, self.pending.len() + 1);
+        plock(shared).shed_level = rung;
+        let need_pages = crate::coordinator::kv_cache::pages_for(tokens.len());
+        if need_pages > cap {
+            let Job { respond, .. } = job;
+            let err = ServerError::Capacity(format!(
+                "request needs {need_pages} kv pages but the pool holds {cap}"
+            ));
+            self.refuse(id, respond, arrived, err, shared);
+            return None;
+        }
+        // Injected `KvAdmit` fault: pretend the reservation failed so the
+        // reclaim-retry path below runs — at most once per id, so the
+        // requeue loop cannot livelock on a deterministically-refiring
+        // fault.
+        let fault_admit =
+            crate::fault::fires(FaultPoint::KvAdmit, id) && self.faulted_admits.insert(id);
+        let mut admitted = if fault_admit { None } else { self.kv.admit(id, tokens.len()) };
+        if admitted.is_none() {
+            // Before shedding, retry once against budget reclaimed from
+            // unpinned prefix-cache subtrees (LRU victims first).
+            let freed = self.cache.as_mut().map_or(0, |c| c.shed_pages(need_pages));
+            if freed > 0 {
+                self.kv.grow(freed);
+                plock(shared).kv_pages_reclaimed += freed;
+            }
+            admitted = self.kv.admit(id, tokens.len());
+        }
+        if admitted.is_none() {
+            if self.shed_reject {
+                let Job { respond, .. } = job;
+                let err = ServerError::Capacity("kv page pool exhausted".into());
+                self.refuse(id, respond, arrived, err, shared);
+            } else {
+                // Degrade mode: requeue — pages free as sequences finish,
+                // the scheduler's prefill-priority keeps retrying at the
+                // pump cadence, and the next attempt re-observes the
+                // shedder (likely landing on a deeper rung).
+                self.pending.insert(id, job);
+                self.scheduler.submit_prefill(vec![id]);
+            }
             return None;
         }
         // Walk the shared-prefix tree; a hit clones the cached KV/artifacts
-        // out (copy-on-write branch) and pins the node until finish().
-        // Non-suffix-stable kernels only dedup full-length matches.
+        // out (copy-on-write branch) and pins the node until conclude().
+        // Non-suffix-stable kernels only dedup full-length matches. Rung 0
+        // only: cached artifacts were computed under the base policy, and a
+        // degraded request runs a different one.
         let full_only = !self.suffix_stable;
-        let hit = self.cache.as_mut().and_then(|c| c.lookup(&tokens, full_only));
+        let hit = if rung == 0 {
+            self.cache.as_mut().and_then(|c| c.lookup(&tokens, full_only))
+        } else {
+            None
+        };
         let cached = hit.as_ref().map_or(0, |h| h.len);
-        let want_snapshot = self
-            .cache
-            .as_ref()
-            .map_or(false, |c| c.wants_insert(&tokens, cached, full_only));
-        self.in_flight.insert(id);
+        let want_snapshot = rung == 0
+            && self
+                .cache
+                .as_ref()
+                .map_or(false, |c| c.wants_insert(&tokens, cached, full_only));
         let Job { request, respond } = job;
+        self.in_flight.insert(
+            id,
+            InFlightInfo {
+                respond: Some(respond.clone()),
+                arrived,
+                pin: hit.as_ref().map(|h| h.node),
+                rung,
+                cancel,
+                deadline: request.deadline(),
+            },
+        );
         Some(PrefillPrep {
             id,
             tokens,
             respond: Some(respond),
-            arrived: request.arrived,
+            arrived,
             generate: request.generate,
             hit,
             model: Arc::clone(&self.model),
-            policy: Arc::clone(&self.policy),
+            policy: Arc::clone(&self.rungs[rung].policy),
             want_snapshot,
         })
     }
 
-    /// Phase 3, back under the lock: install the session, mirror the
-    /// selections into the KV manager, and snapshot the prefix into the
-    /// cache.
+    /// Phase 3, back under the lock: observe the prefill→decode safe point
+    /// (cancellation/deadline verdicts tear down here with every resource
+    /// released), then install the session, mirror the selections into the
+    /// KV manager, and snapshot the prefix into the cache.
     fn complete_prefill(&mut self, outcome: PrefillOutcome, shared: &Mutex<SharedStats>) {
         let PrefillOutcome { id, respond, arrived, generate, result } = outcome;
-        self.in_flight.remove(&id);
+        let Some(info) = self.in_flight.remove(&id) else { return };
         match result {
             Ok(done) => {
                 let PrefillDone { mut sess, nll, next_token, snapshot, cache_pin } = done;
-                sess.set_refresh_every(self.manager.cfg.refresh_every);
+                let verdict = if info.cancel.is_cancelled() {
+                    Some(ServerError::Cancelled)
+                } else if info.deadline.map_or(false, |d| Instant::now() >= d) {
+                    Some(ServerError::DeadlineExceeded)
+                } else {
+                    None
+                };
+                if let Some(err) = verdict {
+                    self.kv.evict(id);
+                    if let (Some(pin), Some(cache)) = (cache_pin, self.cache.as_mut()) {
+                        cache.release(pin);
+                    }
+                    self.cancels.remove(id);
+                    self.faulted_admits.remove(&id);
+                    plock(shared).record_failure(&err);
+                    if let Some(tx) = respond {
+                        let _ = tx.send(Response::failure(
+                            id,
+                            ms_since(arrived),
+                            self.rungs[info.rung].spec_str.clone(),
+                            err,
+                        ));
+                    }
+                    return;
+                }
+                sess.set_refresh_every(self.rungs[info.rung].refresh_every);
                 let unique_chain = !self.suffix_stable;
                 if let (Some(cache), Some((tokens, snap))) = (self.cache.as_mut(), snapshot) {
                     cache.insert(&tokens, snap, unique_chain);
                 }
                 self.kv.set_selections(id, Self::selections_snapshot(&sess));
-                shared.lock().expect("stats poisoned").prefills += 1;
+                plock(shared).prefills += 1;
                 self.sessions.insert(
                     id,
                     GenSession {
@@ -476,20 +727,82 @@ impl DecodeEngine {
                         respond,
                         arrived,
                         nll,
-                        target_new: generate.min(self.max_new),
+                        target_new: generate.min(self.rungs[info.rung].max_new),
                         generated: Vec::new(),
                         next_token,
                         decode_ms: 0.0,
                         cache_pin,
+                        cancel: info.cancel,
+                        deadline: info.deadline,
+                        rung: info.rung,
+                        policy: Arc::clone(&self.rungs[info.rung].policy),
                     },
                 );
                 self.scheduler.submit_decode(id);
             }
             Err(e) => {
-                eprintln!("decode prefill failed for request {id}: {e:#}");
                 self.kv.evict(id);
+                if let (Some(pin), Some(cache)) = (info.pin, self.cache.as_mut()) {
+                    cache.release(pin);
+                }
+                self.cancels.remove(id);
+                self.faulted_admits.remove(&id);
+                let err = ServerError::Internal(format!("prefill failed: {e:#}"));
+                plock(shared).record_failure(&err);
+                if let Some(tx) = respond {
+                    let _ = tx.send(Response::failure(
+                        id,
+                        ms_since(arrived),
+                        self.rungs[info.rung].spec_str.clone(),
+                        err,
+                    ));
+                }
             }
         }
+    }
+
+    /// Force `id` — whatever its phase — to a terminal `Internal` failure:
+    /// the recovery path after a worker panic is caught mid-item. Called
+    /// with the engine lock held; locks `shared` inside (engine → shared is
+    /// the lock order everywhere).
+    fn fail_request(&mut self, id: u64, shared: &Mutex<SharedStats>) {
+        if self.sessions.contains_key(&id) {
+            let err = ServerError::Internal("decode worker panicked".into());
+            self.conclude(id, Some(err), shared);
+            return;
+        }
+        if let Some(info) = self.in_flight.remove(&id) {
+            self.kv.evict(id);
+            if let (Some(pin), Some(cache)) = (info.pin, self.cache.as_mut()) {
+                cache.release(pin);
+            }
+            self.cancels.remove(id);
+            self.faulted_admits.remove(&id);
+            let err = ServerError::Internal("prefill worker panicked".into());
+            plock(shared).record_failure(&err);
+            if let Some(tx) = info.respond {
+                let _ = tx.send(Response::failure(
+                    id,
+                    ms_since(info.arrived),
+                    self.rungs[info.rung].spec_str.clone(),
+                    err,
+                ));
+            }
+            return;
+        }
+        if let Some(job) = self.pending.remove(&id) {
+            self.cancels.remove(id);
+            let err = ServerError::Internal("worker panicked before prefill".into());
+            plock(shared).record_failure(&err);
+            let _ = job.respond.send(Response::failure(
+                id,
+                ms_since(job.request.arrived),
+                self.rungs[0].spec_str.clone(),
+                err,
+            ));
+        }
+        // Unknown id: already terminal (e.g. concluded inside the panicked
+        // round before the panic) — nothing to release.
     }
 
     fn cache_stats(&self) -> CacheStats {
@@ -515,43 +828,45 @@ impl DecodeEngine {
     }
 
     /// One decode round: a single token step for each scheduled sequence.
+    /// The between-rounds safe point — cancellation/deadline verdicts land
+    /// here — and the panic boundary: a step that panics (injected or real)
+    /// fails only its own session with a typed error.
     fn run_decode(&mut self, ids: &[u64], shared: &Mutex<SharedStats>) {
         let max_seq = self.model.cfg.max_seq;
         let mut step_ms: Vec<f64> = Vec::with_capacity(ids.len());
         for &id in ids {
-            let done = {
-                let Some(s) = self.sessions.get_mut(&id) else { continue };
-                if s.generated.len() >= s.target_new || s.sess.pos() >= max_seq {
-                    true
-                } else if self.kv.append_token(id).is_none() {
-                    eprintln!("kv cache exhausted for sequence {id}; finishing early");
-                    true
-                } else {
-                    let t0 = Instant::now();
-                    let token = s.next_token;
-                    s.generated.push(token);
-                    let row = self.model.decode_token(&mut s.sess, token, &self.policy);
-                    s.next_token = argmax_row(&row);
-                    let ms = t0.elapsed().as_secs_f64() * 1e3;
-                    s.decode_ms += ms;
-                    step_ms.push(ms);
-                    // Keep the cache's selection view fresh at the refresh
-                    // cadence (the states refresh themselves; this mirrors
-                    // the result into the kv manager's selection sets).
-                    if self.manager.needs_refresh(self.kv.steps_since_refresh(id)) {
-                        let snap = Self::selections_snapshot(&s.sess);
-                        self.kv.set_selections(id, snap);
-                    }
-                    s.generated.len() >= s.target_new || s.sess.pos() >= max_seq
+            let verdict = match self.sessions.get(&id) {
+                None => continue,
+                Some(s) if s.cancel.is_cancelled() => Some(ServerError::Cancelled),
+                Some(s) if s.deadline.map_or(false, |d| Instant::now() >= d) => {
+                    Some(ServerError::DeadlineExceeded)
                 }
+                Some(_) => None,
             };
-            if done {
-                self.finish(id, shared);
-            } else {
-                self.scheduler.submit_decode(id);
+            if let Some(err) = verdict {
+                self.conclude(id, Some(err), shared);
+                continue;
+            }
+            crate::fault::maybe_slow(FaultPoint::SlowDecode, id);
+            match catch_unwind(AssertUnwindSafe(|| self.step_session(id, max_seq))) {
+                Ok((done, ms)) => {
+                    if let Some(ms) = ms {
+                        step_ms.push(ms);
+                    }
+                    if done {
+                        self.conclude(id, None, shared);
+                    } else {
+                        self.scheduler.submit_decode(id);
+                    }
+                }
+                Err(_) => {
+                    plock(shared).worker_panics += 1;
+                    let err = ServerError::Internal("decode step panicked".into());
+                    self.conclude(id, Some(err), shared);
+                }
             }
         }
-        let mut st = shared.lock().expect("stats poisoned");
+        let mut st = plock(shared);
         st.decode_rounds += 1;
         for ms in step_ms {
             st.decode_step_latency.record_ms(ms);
@@ -559,21 +874,69 @@ impl DecodeEngine {
         }
     }
 
-    fn finish(&mut self, id: u64, shared: &Mutex<SharedStats>) {
+    /// One token step for `id`. Returns (finished, step wall time). Runs
+    /// inside the round's `catch_unwind`, so a panic here is scoped to this
+    /// session; `conclude` (outside) releases its resources either way.
+    fn step_session(&mut self, id: u64, max_seq: usize) -> (bool, Option<f64>) {
+        let Some(s) = self.sessions.get_mut(&id) else { return (true, None) };
+        if s.generated.len() >= s.target_new || s.sess.pos() >= max_seq {
+            return (true, None);
+        }
+        if self.kv.append_token(id).is_none() {
+            eprintln!("kv cache exhausted for sequence {id}; finishing early");
+            return (true, None);
+        }
+        if crate::fault::fires(FaultPoint::DecodePanic, id) {
+            panic!("injected decode-step panic for request {id}");
+        }
+        let t0 = Instant::now();
+        let token = s.next_token;
+        s.generated.push(token);
+        // The rung's policy, not the engine's base one: degraded sessions
+        // step under the spec they were truthfully admitted at.
+        let row = self.model.decode_token(&mut s.sess, token, &s.policy);
+        s.next_token = argmax_row(&row);
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        s.decode_ms += ms;
+        // Keep the cache's selection view fresh at the refresh cadence (the
+        // states refresh themselves; this mirrors the result into the kv
+        // manager's selection sets).
+        if self.manager.needs_refresh(self.kv.steps_since_refresh(id)) {
+            let snap = Self::selections_snapshot(&s.sess);
+            self.kv.set_selections(id, snap);
+        }
+        (s.generated.len() >= s.target_new || s.sess.pos() >= max_seq, Some(ms))
+    }
+
+    /// Terminal state for a streaming session: release its KV pages and
+    /// prefix pin, account the outcome, answer the client. `error = None`
+    /// is success; a cancelled/expired/faulted session still reports its
+    /// partial `generated`/`nll` payload.
+    fn conclude(&mut self, id: u64, error: Option<ServerError>, shared: &Mutex<SharedStats>) {
         let Some(s) = self.sessions.remove(&id) else { return };
         self.kv.evict(id);
         if let (Some(pin), Some(cache)) = (s.cache_pin, self.cache.as_mut()) {
             cache.release(pin);
         }
+        self.cancels.remove(id);
+        self.faulted_admits.remove(&id);
         let lat = s.arrived.elapsed();
         let context = s.sess.pos();
         let retained = s.sess.min_retained().unwrap_or(context);
         let fallback = s.sess.states().iter().any(|st| st.fallback_used());
         {
-            let mut st = shared.lock().expect("stats poisoned");
-            st.latency.record(lat);
-            st.completed += 1;
-            st.scored_tokens += s.nll.len() + s.generated.len();
+            let mut st = plock(shared);
+            match &error {
+                None => {
+                    st.latency.record(lat);
+                    st.completed += 1;
+                    st.scored_tokens += s.nll.len() + s.generated.len();
+                    if s.rung > 0 {
+                        st.degraded += 1;
+                    }
+                }
+                Some(err) => st.record_failure(err),
+            }
         }
         if let Some(tx) = s.respond {
             let decode_steps = s.generated.len();
@@ -587,6 +950,9 @@ impl DecodeEngine {
                 fallback_used: fallback,
                 decode_steps,
                 decode_ms: s.decode_ms,
+                degraded: s.rung > 0,
+                spec: self.rungs[s.rung].spec_str.clone(),
+                error,
             });
         }
     }
@@ -595,6 +961,8 @@ impl DecodeEngine {
 /// The scoring server: coordinator thread + executor worker pool.
 pub struct ScoringServer {
     jobs_tx: Sender<Job>,
+    /// Request-id → cancel-token map shared with the serving threads.
+    cancels: Arc<CancelRegistry>,
     handle: Option<std::thread::JoinHandle<ServerStats>>,
 }
 
@@ -644,24 +1012,55 @@ impl ScoringServer {
             );
         }
         let backend: Box<dyn AttentionBackend> = spec.build();
-        let handle =
-            std::thread::spawn(move || run_loop(cfg, buckets, jobs_rx, backend, spec, model));
-        Ok(ScoringServer { jobs_tx, handle: Some(handle) })
+        // Arm the deterministic fault hooks if the environment asks for
+        // them (PALLAS_FAULT_PLAN / PALLAS_FAULT_SEED); no-op otherwise.
+        crate::fault::install_from_env();
+        let cancels = Arc::new(CancelRegistry::new());
+        let loop_cancels = Arc::clone(&cancels);
+        let handle = std::thread::spawn(move || {
+            run_loop(cfg, buckets, jobs_rx, backend, spec, model, loop_cancels)
+        });
+        Ok(ScoringServer { jobs_tx, cancels, handle: Some(handle) })
     }
 
-    /// Submit a request; returns the channel the response arrives on.
+    /// Submit a request; returns the channel the response arrives on. A
+    /// submit that races shutdown gets a typed `Internal` failure on that
+    /// channel instead of a panic.
     pub fn submit(&self, request: Request) -> Receiver<Response> {
         let (tx, rx) = channel();
-        self.jobs_tx
-            .send(Job { request, respond: tx })
-            .expect("server thread gone");
+        self.cancels.register(request.id);
+        if let Err(e) = self.jobs_tx.send(Job { request, respond: tx }) {
+            let Job { request, respond } = e.0;
+            self.cancels.remove(request.id);
+            let _ = respond.send(Response::failure(
+                request.id,
+                ms_since(request.arrived),
+                String::new(),
+                ServerError::Internal("server is shut down".into()),
+            ));
+        }
         rx
+    }
+
+    /// Cancel an in-flight request from any thread. The request reaches a
+    /// terminal `ServerError::Cancelled` response at the next safe point
+    /// (admission, the prefill→decode boundary, or between decode rounds)
+    /// with its KV pages and prefix pins released. Returns `false` when the
+    /// id is unknown or already finished — a post-completion no-op.
+    pub fn cancel(&self, id: u64) -> bool {
+        self.cancels.cancel(id)
     }
 
     /// Stop the server (drains the queue) and return final statistics.
     pub fn shutdown(mut self) -> ServerStats {
         drop(self.jobs_tx);
-        self.handle.take().unwrap().join().expect("server thread panicked")
+        match self.handle.take() {
+            Some(h) => h.join().unwrap_or_else(|_| {
+                eprintln!("server coordinator thread panicked; reporting empty stats");
+                ServerStats::default()
+            }),
+            None => ServerStats::default(),
+        }
     }
 }
 
@@ -749,6 +1148,7 @@ fn run_loop(
     backend: Box<dyn AttentionBackend>,
     spec: AttentionSpec,
     model: Option<Transformer>,
+    cancels: Arc<CancelRegistry>,
 ) -> ServerStats {
     let deadline = Duration::from_secs_f64(cfg.batch_deadline_ms / 1e3);
     // Substrate-only mode has no compiled lane buckets; batch up to the
@@ -761,8 +1161,11 @@ fn run_loop(
         max_seq: cfg.max_seq,
         deadline,
     });
+    // Canonical spec string for Response::spec on the scoring path (the
+    // decode engine reports per-rung strings instead).
+    let spec_str = spec.to_string();
     let engine: Option<Mutex<DecodeEngine>> =
-        model.map(|m| Mutex::new(DecodeEngine::new(m, &cfg, &spec)));
+        model.map(|m| Mutex::new(DecodeEngine::new(m, &cfg, &spec, Arc::clone(&cancels))));
     let mut responders: HashMap<u64, Sender<Response>> = Default::default();
     let shared = Mutex::new(SharedStats::default());
     let workers = worker_count(&cfg);
@@ -784,6 +1187,8 @@ fn run_loop(
             let buckets = &buckets;
             let backend = backend.as_ref();
             let engine = engine.as_ref();
+            let cancels = &cancels;
+            let spec_str = &spec_str;
             s.spawn(move || {
                 // Per-worker registry (PJRT handles are not Send). Every
                 // bucket is pre-compiled before the worker takes traffic.
@@ -794,26 +1199,75 @@ fn run_loop(
                         eprintln!("failed to compile artifact bucket {b}: {e:#}");
                     }
                 }
-                let drained =
-                    || engine.map_or(true, |e| !e.lock().expect("engine poisoned").active());
+                let drained = || engine.map_or(true, |e| !plock(e).active());
                 while let Some(work) = queue.pop(&drained) {
                     match work {
-                        Work::Score { batch, responders } => execute_batch(
-                            cfg,
-                            &mut registry,
-                            batch,
-                            responders,
-                            shared,
-                            backend,
-                            engine,
-                        ),
+                        Work::Score { batch, responders } => {
+                            // Panic isolation: keep enough (id, arrived,
+                            // responder clone) to fail exactly this batch's
+                            // requests if the execution panics; the worker
+                            // rejoins the drain loop either way.
+                            let fallback: Vec<(u64, Instant, Option<Sender<Response>>)> = batch
+                                .requests
+                                .iter()
+                                .zip(&responders)
+                                .map(|(r, tx)| (r.id, r.arrived, tx.clone()))
+                                .collect();
+                            let res = catch_unwind(AssertUnwindSafe(|| {
+                                execute_batch(
+                                    cfg,
+                                    &mut registry,
+                                    batch,
+                                    responders,
+                                    shared,
+                                    backend,
+                                    engine,
+                                    cancels,
+                                    spec_str,
+                                )
+                            }));
+                            if res.is_err() {
+                                {
+                                    let mut st = plock(shared);
+                                    st.worker_panics += 1;
+                                    st.internal_errors += fallback.len();
+                                }
+                                for (id, arrived, tx) in fallback {
+                                    cancels.remove(id);
+                                    if let Some(tx) = tx {
+                                        let _ = tx.send(Response::failure(
+                                            id,
+                                            ms_since(arrived),
+                                            spec_str.clone(),
+                                            ServerError::Internal(
+                                                "scoring worker panicked".into(),
+                                            ),
+                                        ));
+                                    }
+                                }
+                            }
+                        }
                         Work::Gen(item) => {
-                            let eng = engine.expect("gen work without engine");
-                            execute_gen(item, eng, shared);
+                            let Some(eng) = engine else { continue };
+                            let ids: Vec<u64> = match &item {
+                                WorkItem::Prefill(ids) | WorkItem::Decode(ids) => ids.clone(),
+                            };
+                            // Decode-step panics are already scoped inside
+                            // run_decode; this boundary catches the rest of
+                            // the item (notably the lock-free prefill
+                            // forward) and fails only its requests.
+                            let res =
+                                catch_unwind(AssertUnwindSafe(|| execute_gen(item, eng, shared)));
+                            if res.is_err() {
+                                plock(shared).worker_panics += 1;
+                                let mut g = plock(eng);
+                                for id in ids {
+                                    g.fail_request(id, shared);
+                                }
+                            }
                             // Re-pump: keep decode rounds flowing without
                             // waiting for the coordinator's next wake.
-                            let follow =
-                                eng.lock().expect("engine poisoned").next_round(1);
+                            let follow = plock(eng).next_round(1);
                             for it in follow {
                                 queue.push(Work::Gen(it));
                             }
@@ -823,11 +1277,7 @@ fn run_loop(
             });
         }
 
-        let engine_active = || {
-            engine
-                .as_ref()
-                .map_or(false, |e| e.lock().expect("engine poisoned").active())
-        };
+        let engine_active = || engine.as_ref().map_or(false, |e| plock(e).active());
         let mut open = true;
         while open || batcher.queue_len() > 0 || engine_active() {
             // Admit jobs: block until the next flush deadline (or a new
@@ -842,17 +1292,21 @@ fn run_loop(
                              batcher: &mut DynamicBatcher| {
                 if job.request.generate > 0 {
                     match engine.as_ref() {
-                        Some(e) => e.lock().expect("engine poisoned").admit(job),
+                        Some(e) => plock(e).admit(job),
                         None => {
-                            // Fail explicitly (dropped responder) rather than
-                            // silently serving a generation request as
-                            // scoring-only.
-                            eprintln!(
-                                "request {} asks for {} generated tokens but this \
-                                 server has no substrate model (weights.bin) — \
-                                 dropping",
-                                job.request.id, job.request.generate
-                            );
+                            // Typed failure rather than silently serving a
+                            // generation request as scoring-only (or a
+                            // dropped channel the client can't classify).
+                            cancels.remove(job.request.id);
+                            let _ = job.respond.send(Response::failure(
+                                job.request.id,
+                                ms_since(job.request.arrived),
+                                spec_str.clone(),
+                                ServerError::Unsupported(
+                                    "generation requires a substrate model (weights.bin)"
+                                        .into(),
+                                ),
+                            ));
                         }
                     }
                     return;
@@ -885,16 +1339,16 @@ fn run_loop(
             }
             // Ship every batch the policy allows right now.
             while let Some(batch) = batcher.poll(Instant::now()) {
-                ship(batch, &mut responders, &queue);
+                ship(batch, &mut responders, &queue, &cancels, &shared, &spec_str);
             }
             if !open {
                 for batch in batcher.drain_all() {
-                    ship(batch, &mut responders, &queue);
+                    ship(batch, &mut responders, &queue, &cancels, &shared, &spec_str);
                 }
             }
             // Seed engine rounds (workers keep them flowing afterwards).
             if let Some(e) = engine.as_ref() {
-                let round = e.lock().expect("engine poisoned").next_round(workers);
+                let round = plock(e).next_round(workers);
                 for it in round {
                     queue.push(Work::Gen(it));
                 }
@@ -907,16 +1361,17 @@ fn run_loop(
     });
 
     // Final prefix-cache accounting + persistence (the engine is exclusively
-    // ours again once the scope has joined every worker).
-    let prefix = match engine {
+    // ours again once the scope has joined every worker). `into_inner` is
+    // poison-tolerant: a caught panic must not cost the final stats.
+    let (prefix, kv_acquired, kv_released) = match engine {
         Some(e) => {
-            let eng = e.into_inner().expect("engine poisoned");
+            let eng = e.into_inner().unwrap_or_else(std::sync::PoisonError::into_inner);
             eng.save_cache();
-            eng.cache_stats()
+            (eng.cache_stats(), eng.kv.pages_acquired(), eng.kv.pages_released())
         }
-        None => CacheStats::default(),
+        None => (CacheStats::default(), 0, 0),
     };
-    let stats = shared.into_inner().expect("stats poisoned");
+    let stats = shared.into_inner().unwrap_or_else(std::sync::PoisonError::into_inner);
     let elapsed = started.elapsed().as_secs_f64().max(1e-9);
     ServerStats {
         completed: stats.completed,
@@ -941,13 +1396,63 @@ fn run_loop(
         prefix_evictions: prefix.evictions,
         prefix_nodes: prefix.nodes,
         prefix_cached_tokens: prefix.cached_tokens,
+        cancelled: stats.cancelled,
+        expired: stats.expired,
+        degraded: stats.degraded,
+        shed_rejects: stats.shed_rejects,
+        internal_errors: stats.internal_errors,
+        worker_panics: stats.worker_panics,
+        kv_pages_acquired: kv_acquired,
+        kv_pages_released: kv_released,
+        kv_pages_reclaimed: stats.kv_pages_reclaimed,
+        prefix_pins_acquired: prefix.pins_acquired,
+        prefix_pins_released: prefix.pins_released,
+        shed_level: stats.shed_level,
     }
 }
 
 /// Pair a formed batch with its responders and enqueue it for the pool.
-fn ship(batch: Batch, responders: &mut HashMap<u64, Sender<Response>>, queue: &WorkQueue) {
-    let txs: Vec<Option<Sender<Response>>> =
-        batch.requests.iter().map(|req| responders.remove(&req.id)).collect();
+/// Ship time is the scoring path's safe point: cancelled/expired requests
+/// are answered with a typed failure here (their lane still executes — the
+/// batch shape is already formed — but the result is discarded).
+fn ship(
+    batch: Batch,
+    responders: &mut HashMap<u64, Sender<Response>>,
+    queue: &WorkQueue,
+    cancels: &CancelRegistry,
+    shared: &Mutex<SharedStats>,
+    spec_str: &str,
+) {
+    let txs: Vec<Option<Sender<Response>>> = batch
+        .requests
+        .iter()
+        .map(|req| {
+            let tx = responders.remove(&req.id);
+            let verdict = if cancels.get(req.id).map_or(false, |t| t.is_cancelled()) {
+                Some(ServerError::Cancelled)
+            } else if req.expired() {
+                Some(ServerError::DeadlineExceeded)
+            } else {
+                None
+            };
+            match verdict {
+                Some(err) => {
+                    cancels.remove(req.id);
+                    plock(shared).record_failure(&err);
+                    if let Some(tx) = tx {
+                        let _ = tx.send(Response::failure(
+                            req.id,
+                            ms_since(req.arrived),
+                            spec_str.to_string(),
+                            err,
+                        ));
+                    }
+                    None
+                }
+                None => tx,
+            }
+        })
+        .collect();
     queue.push(Work::Score { batch, responders: txs });
 }
 
@@ -1035,15 +1540,13 @@ fn execute_gen(item: WorkItem, engine: &Mutex<DecodeEngine>, shared: &Mutex<Shar
     match item {
         WorkItem::Prefill(ids) => {
             for id in ids {
-                let prep = engine.lock().expect("engine poisoned").prepare_prefill(id);
+                let prep = plock(engine).prepare_prefill(id, shared);
                 let Some(prep) = prep else { continue };
                 let outcome = prefill_compute(prep);
-                engine.lock().expect("engine poisoned").complete_prefill(outcome, shared);
+                plock(engine).complete_prefill(outcome, shared);
             }
         }
-        WorkItem::Decode(ids) => {
-            engine.lock().expect("engine poisoned").run_decode(&ids, shared)
-        }
+        WorkItem::Decode(ids) => plock(engine).run_decode(&ids, shared),
     }
 }
 
@@ -1055,17 +1558,40 @@ fn execute_batch(
     shared: &Mutex<SharedStats>,
     backend: &dyn AttentionBackend,
     engine: Option<&Mutex<DecodeEngine>>,
+    cancels: &CancelRegistry,
+    spec_str: &str,
 ) {
+    // Injected `WorkerPanic` fault: dies here, inside the worker's
+    // catch_unwind, exercising the batch-wide typed-failure recovery.
+    if batch.requests.iter().any(|r| crate::fault::fires(FaultPoint::WorkerPanic, r.id)) {
+        panic!("injected scoring-worker panic");
+    }
     let lanes = batch.lanes;
     let rt = match registry.get_or_load(&cfg.variant, lanes) {
         Ok(rt) => rt,
         Err(e) => {
             // No loadable artifact: score on the substrate model if the
-            // decode engine carries one, otherwise drop (client observes a
-            // disconnected responder).
+            // decode engine carries one, otherwise fail the batch with a
+            // typed error (never a silently dropped channel).
             match engine {
-                Some(engine) => substrate_score(batch, responders, shared, backend, engine),
-                None => eprintln!("artifact load failure: {e:#}"),
+                Some(engine) => substrate_score(
+                    batch, responders, shared, backend, engine, cancels, spec_str,
+                ),
+                None => {
+                    let msg = format!("artifact load failed: {e:#}");
+                    plock(shared).internal_errors += batch.requests.len();
+                    for (req, tx) in batch.requests.iter().zip(&responders) {
+                        cancels.remove(req.id);
+                        if let Some(tx) = tx {
+                            let _ = tx.send(Response::failure(
+                                req.id,
+                                ms_since(req.arrived),
+                                spec_str.to_string(),
+                                ServerError::Internal(msg.clone()),
+                            ));
+                        }
+                    }
+                }
             }
             return;
         }
@@ -1086,7 +1612,7 @@ fn execute_batch(
     }
     match rt.execute(&tokens) {
         Ok(out) => {
-            let mut stats = shared.lock().expect("stats poisoned");
+            let mut stats = plock(shared);
             stats.batches += 1;
             stats.prefills += 1;
             stats.total_lanes += lanes;
@@ -1095,10 +1621,13 @@ fn execute_batch(
                 let valid = lens[i].saturating_sub(1);
                 let nll = out.nll[i][..valid].to_vec();
                 let lat = req.arrived.elapsed();
-                stats.latency.record(lat);
-                stats.completed += 1;
-                stats.scored_tokens += valid;
+                cancels.remove(req.id);
+                // Ship-time verdicts (cancelled/expired) already answered
+                // and accounted this lane; don't count it as a completion.
                 if let Some(tx) = &responders[i] {
+                    stats.latency.record(lat);
+                    stats.completed += 1;
+                    stats.scored_tokens += valid;
                     // Real per-request stats from the backend this server is
                     // configured to serve (start() gates explicit specs
                     // against the artifact variant's family and key budget):
@@ -1118,11 +1647,28 @@ fn execute_batch(
                         fallback_used: attn.fallback_used,
                         decode_steps: 0,
                         decode_ms: 0.0,
+                        degraded: false,
+                        spec: spec_str.to_string(),
+                        error: None,
                     });
                 }
             }
         }
-        Err(e) => eprintln!("execute failure: {e:#}"),
+        Err(e) => {
+            let msg = format!("artifact execution failed: {e:#}");
+            plock(shared).internal_errors += batch.requests.len();
+            for (req, tx) in batch.requests.iter().zip(&responders) {
+                cancels.remove(req.id);
+                if let Some(tx) = tx {
+                    let _ = tx.send(Response::failure(
+                        req.id,
+                        ms_since(req.arrived),
+                        spec_str.to_string(),
+                        ServerError::Internal(msg.clone()),
+                    ));
+                }
+            }
+        }
     }
 }
 
@@ -1134,12 +1680,14 @@ fn substrate_score(
     shared: &Mutex<SharedStats>,
     backend: &dyn AttentionBackend,
     engine: &Mutex<DecodeEngine>,
+    cancels: &CancelRegistry,
+    spec_str: &str,
 ) {
     // Clone the immutable model/policy handles out of a brief lock and run
     // the (long) scoring forwards lock-free — substrate scoring can no
     // longer stall decode rounds behind the engine mutex.
     let (model, policy) = {
-        let eng = engine.lock().expect("engine poisoned");
+        let eng = plock(engine);
         (Arc::clone(&eng.model), Arc::clone(&eng.policy))
     };
     let max_seq = model.cfg.max_seq;
@@ -1153,17 +1701,21 @@ fn substrate_score(
             model.nll_policy(&toks, &policy)
         });
     }
-    let mut stats = shared.lock().expect("stats poisoned");
+    let mut stats = plock(shared);
     stats.batches += 1;
     stats.prefills += 1;
     stats.total_lanes += batch.lanes;
     stats.occupied_lanes += batch.requests.len();
     for (i, req) in batch.requests.iter().enumerate() {
         let lat = req.arrived.elapsed();
-        stats.latency.record(lat);
-        stats.completed += 1;
-        stats.scored_tokens += results[i].len();
+        cancels.remove(req.id);
+        // A `None` responder was already answered at ship time (cancelled
+        // or expired) — its lane ran because the batch shape was formed,
+        // but it is not a completion.
         if let Some(tx) = &responders[i] {
+            stats.latency.record(lat);
+            stats.completed += 1;
+            stats.scored_tokens += results[i].len();
             let attn = backend.plan(req.tokens.len());
             let _ = tx.send(Response {
                 id: req.id,
@@ -1175,6 +1727,9 @@ fn substrate_score(
                 fallback_used: attn.fallback_used,
                 decode_steps: 0,
                 decode_ms: 0.0,
+                degraded: false,
+                spec: spec_str.to_string(),
+                error: None,
             });
         }
     }

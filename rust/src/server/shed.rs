@@ -1,0 +1,232 @@
+//! Degrade-don't-reject load shedding.
+//!
+//! Under pressure (KV page-pool occupancy or prefill queue depth above the
+//! configured watermarks) admission steps new requests down a *degradation
+//! ladder* instead of rejecting them: each rung trades a little quality or
+//! length for throughput, in order of increasing severity —
+//!
+//! 1. the configured spec (no degradation);
+//! 2. half the pre-score `top_k` (floored at `shed_min_top_k`) — fewer
+//!    retained keys per step;
+//! 3. double the decode refresh period — staler selections, fewer
+//!    Algorithm-1 re-runs;
+//! 4. `l2norm` scoring — the cheapest pre-scorer (no clustering at all;
+//!    still streaming-foldable, so `mode=stream` specs stay valid);
+//! 5. half the decode token budget — shorter answers, bounded pool hold.
+//!
+//! Degradation is *truthful*: the response carries `degraded: true` and the
+//! spec string that actually served it. Hysteresis (low watermarks strictly
+//! below the high ones) keeps the ladder from oscillating, and once load
+//! drains the server walks back to the configured spec without a restart.
+//! Non-prescored specs have no quality knobs to turn, so their ladder is
+//! just [full, half decode budget].
+
+use crate::attention::{AttentionSpec, AttnPolicy};
+use crate::prescore::Method;
+use std::sync::Arc;
+
+/// One rung of the degradation ladder: a fully-built serving configuration
+/// the admission path can swap in per request.
+pub struct Rung {
+    pub spec: AttentionSpec,
+    /// Canonical spec string, reported in `Response::spec`.
+    pub spec_str: String,
+    /// Built policy (uniform over layers, like the server's base policy).
+    pub policy: Arc<AttnPolicy>,
+    /// Decode token budget under this rung.
+    pub max_new: usize,
+    /// Selection refresh period under this rung (0 = never).
+    pub refresh_every: usize,
+}
+
+fn rung(spec: AttentionSpec, max_new: usize, fallback_refresh: usize) -> Rung {
+    // PreScored rungs own their refresh period (the ladder doubles it);
+    // every other family inherits the engine's resolved period — including
+    // `restricted:`, whose default-refresh specs defer to the legacy
+    // `[prescore] refresh_every` key (see DecodeEngine::new).
+    let refresh_every = match &spec {
+        AttentionSpec::PreScored(cfg) => cfg.decode_refresh_every,
+        _ => fallback_refresh,
+    };
+    let spec_str = spec.to_string();
+    let policy = Arc::new(AttnPolicy::uniform(spec.clone()));
+    Rung { spec, spec_str, policy, max_new, refresh_every }
+}
+
+/// Build the ladder for `base`. Rung 0 is always the configured spec at
+/// full budget; consecutive rungs that change nothing are dropped.
+pub fn build_ladder(
+    base: &AttentionSpec,
+    base_max_new: usize,
+    base_refresh: usize,
+    min_top_k: usize,
+) -> Vec<Rung> {
+    let mut ladder = vec![rung(base.clone(), base_max_new, base_refresh)];
+    let mut push = |ladder: &mut Vec<Rung>, r: Rung| {
+        let last = ladder.last().expect("ladder starts non-empty"); // unwrap-ok: rung 0 above
+        if last.spec != r.spec || last.max_new != r.max_new {
+            ladder.push(r);
+        }
+    };
+    if let AttentionSpec::PreScored(base_cfg) = base {
+        let mut cfg = base_cfg.clone();
+        cfg.prescore.top_k = (cfg.prescore.top_k / 2).max(min_top_k.max(1));
+        push(&mut ladder, rung(AttentionSpec::PreScored(cfg.clone()), base_max_new, base_refresh));
+        if cfg.decode_refresh_every != 0 {
+            cfg.decode_refresh_every *= 2;
+        }
+        push(&mut ladder, rung(AttentionSpec::PreScored(cfg.clone()), base_max_new, base_refresh));
+        // l2norm needs no clustering and is streaming-foldable, so the
+        // swap is legal for both full and stream modes.
+        cfg.prescore.method = Method::L2Norm;
+        push(&mut ladder, rung(AttentionSpec::PreScored(cfg.clone()), base_max_new, base_refresh));
+        let short = (base_max_new / 2).max(1);
+        push(&mut ladder, rung(AttentionSpec::PreScored(cfg), short, base_refresh));
+    } else {
+        let short = (base_max_new / 2).max(1);
+        push(&mut ladder, rung(base.clone(), short, base_refresh));
+    }
+    ladder
+}
+
+/// Watermark-driven ladder position with hysteresis: one step down the
+/// ladder per pressured observation, one step back up per observation with
+/// slack. `pin` (the `shed_pin_rung` testing hook) freezes the level.
+pub struct LoadShedder {
+    high_occ: f64,
+    low_occ: f64,
+    high_queue: usize,
+    low_queue: usize,
+    max_level: usize,
+    pin: Option<usize>,
+    level: usize,
+}
+
+impl LoadShedder {
+    pub fn new(
+        high_occ: f64,
+        low_occ: f64,
+        high_queue: usize,
+        low_queue: usize,
+        max_level: usize,
+        pin: Option<usize>,
+    ) -> LoadShedder {
+        LoadShedder { high_occ, low_occ, high_queue, low_queue, max_level, pin, level: 0 }
+    }
+
+    /// Fold one admission-time observation (KV pool occupancy in [0, 1],
+    /// pending prefill depth) and return the rung to serve at.
+    pub fn observe(&mut self, occupancy: f64, queue_depth: usize) -> usize {
+        if let Some(p) = self.pin {
+            self.level = p.min(self.max_level);
+            return self.level;
+        }
+        if occupancy >= self.high_occ || queue_depth >= self.high_queue {
+            self.level = (self.level + 1).min(self.max_level);
+        } else if occupancy <= self.low_occ && queue_depth <= self.low_queue {
+            self.level = self.level.saturating_sub(1);
+        }
+        // Between the watermarks: hold position (hysteresis band).
+        self.level
+    }
+
+    pub fn level(&self) -> usize {
+        self.level
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ladder_rungs_roundtrip_the_spec_grammar() {
+        for base in [
+            "prescored:kmeans,top_k=64,block=16,sample=8",
+            "prescored:kmeans,top_k=64,delta=0.05,mode=stream",
+            "prescored:minibatch,top_k=32,refresh=8",
+            "exact",
+            "flash:block_q=16",
+        ] {
+            let spec = AttentionSpec::parse(base).unwrap();
+            let ladder = build_ladder(&spec, 64, 16, 8);
+            assert_eq!(ladder[0].spec, spec, "rung 0 is the configured spec");
+            assert_eq!(ladder[0].max_new, 64);
+            for r in &ladder {
+                let reparsed = AttentionSpec::parse(&r.spec_str)
+                    .unwrap_or_else(|e| panic!("rung '{}' of {base}: {e}", r.spec_str));
+                assert_eq!(reparsed, r.spec, "canonical form roundtrips");
+                assert!(r.max_new >= 1);
+            }
+        }
+    }
+
+    #[test]
+    fn prescored_ladder_degrades_monotonically() {
+        let spec = AttentionSpec::parse("prescored:kmeans,top_k=64,mode=stream").unwrap();
+        let ladder = build_ladder(&spec, 64, 16, 8);
+        assert!(ladder.len() >= 4, "prescored specs get a real ladder");
+        let top_k = |r: &Rung| match &r.spec {
+            AttentionSpec::PreScored(c) => c.prescore.top_k,
+            _ => unreachable!(),
+        };
+        for w in ladder.windows(2) {
+            assert!(top_k(&w[1]) <= top_k(&w[0]), "top_k never grows down-ladder");
+            assert!(w[1].max_new <= w[0].max_new);
+        }
+        assert!(top_k(ladder.last().unwrap()) >= 8, "min_top_k floor holds");
+        let last = ladder.last().unwrap();
+        match &last.spec {
+            AttentionSpec::PreScored(c) => {
+                assert_eq!(c.prescore.method, Method::L2Norm);
+                assert!(c.mode == crate::attention::PreScoreMode::Stream, "mode preserved");
+            }
+            other => panic!("ladder changed kernel family: {other:?}"),
+        }
+        assert_eq!(last.max_new, 32);
+        // Already-minimal specs collapse to a short ladder, not a panic.
+        let tiny = AttentionSpec::parse("prescored:l2norm,top_k=8,refresh=0").unwrap();
+        let l = build_ladder(&tiny, 1, 0, 8);
+        assert!(!l.is_empty());
+        for r in &l {
+            assert_eq!(r.max_new, 1);
+            assert_eq!(r.refresh_every, 0, "refresh=never stays never");
+        }
+    }
+
+    #[test]
+    fn non_prescored_ladder_only_shortens() {
+        let ladder = build_ladder(&AttentionSpec::Exact, 64, 16, 8);
+        assert_eq!(ladder.len(), 2);
+        assert_eq!(ladder[0].spec_str, "exact");
+        assert_eq!(ladder[1].spec_str, "exact");
+        assert_eq!(ladder[1].max_new, 32);
+        assert_eq!(ladder[1].refresh_every, 16, "fallback refresh threads through");
+    }
+
+    #[test]
+    fn shedder_hysteresis() {
+        let mut s = LoadShedder::new(0.85, 0.5, 8, 1, 4, None);
+        assert_eq!(s.observe(0.2, 0), 0, "idle holds rung 0");
+        assert_eq!(s.observe(0.9, 0), 1, "occupancy pressure steps down");
+        assert_eq!(s.observe(0.2, 9), 2, "queue pressure steps down");
+        assert_eq!(s.observe(0.7, 4), 2, "between watermarks holds (hysteresis)");
+        assert_eq!(s.observe(0.95, 20), 3);
+        assert_eq!(s.observe(0.95, 20), 4);
+        assert_eq!(s.observe(0.95, 20), 4, "clamped at the last rung");
+        assert_eq!(s.observe(0.3, 0), 3, "slack steps back up");
+        for _ in 0..10 {
+            s.observe(0.1, 0);
+        }
+        assert_eq!(s.level(), 0, "full recovery without restart");
+    }
+
+    #[test]
+    fn shedder_pin_overrides_load() {
+        let mut s = LoadShedder::new(0.85, 0.5, 8, 1, 4, Some(2));
+        assert_eq!(s.observe(0.0, 0), 2);
+        assert_eq!(s.observe(1.0, 100), 2);
+        let mut over = LoadShedder::new(0.85, 0.5, 8, 1, 1, Some(9));
+        assert_eq!(over.observe(0.0, 0), 1, "pin clamps to the ladder length");
+    }
+}

@@ -1,0 +1,306 @@
+//! Cancellation, deadlines, and truthful degradation — the client-visible
+//! half of the fault-tolerance contract.
+//!
+//! Cancellation is cooperative: `ScoringServer::cancel` trips a token that
+//! the engine observes at its safe points (admission, the prefill→decode
+//! boundary, between decode rounds). These tests race cancels against each
+//! of those points at executor widths 1/2/4 and assert the invariants that
+//! must hold regardless of which point wins: a typed
+//! `ServerError::Cancelled` response, zero leaked KV pages or prefix pins,
+//! and survivors bitwise identical to an uncancelled run. The injected
+//! `SlowDecode` fault stretches decode wall time so "mid-decode" is a state
+//! the test can actually hit deterministically.
+
+use prescored::attention::{AttentionSpec, AttnPolicy};
+use prescored::config::ServingConfig;
+use prescored::coordinator::{Request, ServerError};
+use prescored::data::corpus;
+use prescored::fault::{self, FaultPlan, FaultPoint};
+use prescored::model::{Transformer, TransformerConfig};
+use prescored::server::shed::build_ladder;
+use prescored::server::ScoringServer;
+use std::sync::Mutex;
+use std::time::Duration;
+
+static GUARD: Mutex<()> = Mutex::new(());
+
+struct FaultGuard;
+
+impl Drop for FaultGuard {
+    fn drop(&mut self) {
+        fault::clear();
+    }
+}
+
+/// Arm a decode-step slowdown so in-flight sessions stay in-flight long
+/// enough for a cancel to race them deterministically.
+fn slow_decode(ms: u64) -> FaultGuard {
+    let mut plan = FaultPlan::new(0).with_rate(FaultPoint::SlowDecode, 1000);
+    plan.slow_ms = ms;
+    fault::install(plan);
+    FaultGuard
+}
+
+fn tiny_model(seed: u64) -> Transformer {
+    let tcfg =
+        TransformerConfig { vocab: 64, d_model: 32, n_layers: 2, n_heads: 2, max_seq: 64 };
+    Transformer::random(tcfg, seed)
+}
+
+const SPEC: &str = "prescored:kmeans,top_k=12,block=16,sample=4";
+
+fn substrate_cfg() -> ServingConfig {
+    ServingConfig {
+        artifacts_dir: "/nonexistent-artifacts".into(),
+        variant: "exact".into(),
+        max_seq: 64,
+        attention_spec: SPEC.into(),
+        ..Default::default()
+    }
+}
+
+/// Cancel half the in-flight generation requests mid-decode, at executor
+/// widths 1, 2, and 4: cancelled requests get a typed partial response,
+/// survivors are bitwise identical to the uncancelled reference, and a
+/// post-completion cancel is a `false` no-op.
+#[test]
+fn cancel_mid_decode_at_widths() {
+    let _g = GUARD.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    let _fault = slow_decode(2);
+    let policy = AttnPolicy::parse(SPEC).unwrap();
+    for width in [1usize, 2, 4] {
+        let model = tiny_model(50);
+        let reference = tiny_model(50);
+        let mut cfg = substrate_cfg();
+        cfg.executor_workers = width;
+        let server = ScoringServer::start_with_model(cfg, model).expect("start");
+
+        let n_req = 6u64;
+        let n_new = 16usize; // ≥ 32 ms of injected decode sleep per session
+        let mut expected = Vec::new();
+        let mut rxs = Vec::new();
+        for i in 0..n_req {
+            let tokens = corpus::generate(64, 20 + (i as usize * 3) % 10, 40 + i);
+            expected.push(
+                reference.generate_greedy(&tokens, n_new, &policy).expect("greedy reference"),
+            );
+            let mut req = Request::scoring(i, tokens);
+            req.generate = n_new;
+            rxs.push((i, server.submit(req)));
+        }
+        // Let decode start, then cancel the odd ids mid-stream.
+        std::thread::sleep(Duration::from_millis(8));
+        for i in (1..n_req).step_by(2) {
+            assert!(server.cancel(i), "width {width}: request {i} is still live");
+        }
+        for (id, rx) in rxs {
+            let resp = rx.recv().expect("response");
+            assert_eq!(resp.id, id);
+            if id % 2 == 1 {
+                assert!(
+                    matches!(resp.error, Some(ServerError::Cancelled)),
+                    "width {width}, request {id}: expected Cancelled, got {:?}",
+                    resp.error
+                );
+                assert!(
+                    resp.generated.len() < n_new,
+                    "width {width}, request {id}: cancel must land before completion"
+                );
+                assert_eq!(resp.decode_steps, resp.generated.len(), "partials are truthful");
+            } else {
+                assert!(resp.error.is_none(), "width {width}, request {id}: {:?}", resp.error);
+                assert_eq!(
+                    resp.generated, expected[id as usize],
+                    "width {width}, request {id}: survivors are bitwise intact"
+                );
+                // Terminal state already reached: cancelling now is a no-op.
+                assert!(!server.cancel(id), "post-completion cancel must report false");
+            }
+        }
+        let stats = server.shutdown();
+        assert_eq!(stats.cancelled, 3, "width {width}");
+        assert_eq!(stats.completed, 3, "width {width}");
+        assert_eq!(
+            stats.kv_pages_acquired, stats.kv_pages_released,
+            "width {width}: cancelled sessions must not leak KV pages"
+        );
+        assert_eq!(stats.prefix_pins_acquired, stats.prefix_pins_released, "width {width}");
+    }
+}
+
+/// Cancel immediately after submit: the token trips before the engine's
+/// admission safe point, so the request is refused there — no KV pages are
+/// ever acquired for it, and the teardown still balances.
+#[test]
+fn cancel_during_admission() {
+    let _g = GUARD.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    let _fault = slow_decode(2);
+    let model = tiny_model(51);
+    let mut cfg = substrate_cfg();
+    cfg.executor_workers = 1;
+    let server = ScoringServer::start_with_model(cfg, model).expect("start");
+
+    let n_req = 8u64;
+    let mut rxs = Vec::new();
+    for i in 0..n_req {
+        let mut req = Request::scoring(i, corpus::generate(64, 24, 80 + i));
+        req.generate = 16;
+        let rx = server.submit(req);
+        assert!(server.cancel(i), "request {i} registered at submit");
+        rxs.push((i, rx));
+    }
+    for (id, rx) in rxs {
+        let resp = rx.recv().expect("response");
+        assert_eq!(resp.id, id);
+        assert!(
+            matches!(resp.error, Some(ServerError::Cancelled)),
+            "request {id}: expected Cancelled, got {:?}",
+            resp.error
+        );
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.cancelled, n_req as usize);
+    assert_eq!(stats.completed, 0);
+    assert_eq!(stats.kv_pages_acquired, stats.kv_pages_released);
+    assert_eq!(stats.prefix_pins_acquired, stats.prefix_pins_released);
+}
+
+/// Scoring-path cancellation races batch formation: whichever side wins,
+/// the response is typed and the terminal accounting is exact.
+#[test]
+fn cancel_scoring_request_race() {
+    let _g = GUARD.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    let model = tiny_model(52);
+    let server = ScoringServer::start_with_model(substrate_cfg(), model).expect("start");
+    let n_req = 8u64;
+    let mut rxs = Vec::new();
+    for i in 0..n_req {
+        let rx = server.submit(Request::scoring(i, corpus::generate(64, 20, 120 + i)));
+        server.cancel(i);
+        rxs.push((i, rx));
+    }
+    let mut cancelled = 0usize;
+    for (id, rx) in rxs {
+        let resp = rx.recv().expect("response");
+        assert_eq!(resp.id, id);
+        match resp.error {
+            Some(ServerError::Cancelled) => cancelled += 1,
+            None => assert!(!resp.nll.is_empty(), "request {id}"),
+            other => panic!("request {id}: unexpected error {other:?}"),
+        }
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.cancelled, cancelled);
+    assert_eq!(stats.completed + cancelled, n_req as usize);
+    assert_eq!(stats.kv_pages_acquired, stats.kv_pages_released);
+}
+
+/// Deadlines: an expired request fails with `DeadlineExceeded` at the next
+/// safe point and releases everything; a generous deadline never triggers.
+#[test]
+fn deadlines_expire_and_release() {
+    let _g = GUARD.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    let _fault = slow_decode(2);
+    let model = tiny_model(53);
+    let reference = tiny_model(53);
+    let policy = AttnPolicy::parse(SPEC).unwrap();
+    let server = ScoringServer::start_with_model(substrate_cfg(), model).expect("start");
+
+    // Id 0: 1 ms deadline against ≥ 32 ms of injected decode sleep — must
+    // expire. Id 1: 10 s deadline — must complete bitwise.
+    let n_new = 16usize;
+    let toks0 = corpus::generate(64, 24, 200);
+    let toks1 = corpus::generate(64, 24, 201);
+    let expected = reference.generate_greedy(&toks1, n_new, &policy).expect("reference");
+    let mut req0 = Request::scoring(0, toks0).with_deadline(1);
+    req0.generate = n_new;
+    let mut req1 = Request::scoring(1, toks1).with_deadline(10_000);
+    req1.generate = n_new;
+    let rx0 = server.submit(req0);
+    let rx1 = server.submit(req1);
+
+    let resp0 = rx0.recv().expect("response 0");
+    assert!(
+        matches!(resp0.error, Some(ServerError::DeadlineExceeded)),
+        "expected DeadlineExceeded, got {:?}",
+        resp0.error
+    );
+    assert!(resp0.generated.len() < n_new, "an expired request never completes");
+    let resp1 = rx1.recv().expect("response 1");
+    assert!(resp1.error.is_none(), "{:?}", resp1.error);
+    assert_eq!(resp1.generated, expected, "a generous deadline changes nothing");
+
+    let stats = server.shutdown();
+    assert_eq!(stats.expired, 1);
+    assert_eq!(stats.completed, 1);
+    assert_eq!(stats.kv_pages_acquired, stats.kv_pages_released);
+    assert_eq!(stats.prefix_pins_acquired, stats.prefix_pins_released);
+}
+
+/// Truthful degradation: with the shedder pinned one rung down, every
+/// generation response says so (`degraded: true` + the rung's spec string)
+/// — and the stream bitwise-matches the model run under that *claimed*
+/// spec. A fresh unpinned server under light load serves the configured
+/// spec again: recovery needs no code change, just drained pressure.
+#[test]
+fn degradation_is_truthful_and_recovery_restores_the_spec() {
+    let _g = GUARD.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    let base = AttentionSpec::parse(SPEC).unwrap();
+    let ladder = build_ladder(&base, 64, 16, 8);
+    assert!(ladder.len() > 1, "prescored specs degrade");
+    let rung1_spec = ladder[1].spec_str.clone();
+    assert_ne!(rung1_spec, base.to_string());
+    let rung1_policy = AttnPolicy::parse(&rung1_spec).unwrap();
+    let base_policy = AttnPolicy::parse(SPEC).unwrap();
+    let n_new = 6usize;
+
+    // Pinned one rung down: truthful degraded responses.
+    let model = tiny_model(54);
+    let reference = tiny_model(54);
+    let mut cfg = substrate_cfg();
+    cfg.shed_pin_rung = Some(1);
+    let server = ScoringServer::start_with_model(cfg, model).expect("start");
+    let mut rxs = Vec::new();
+    let mut expected = Vec::new();
+    for i in 0..4u64 {
+        let tokens = corpus::generate(64, 24 + (i as usize * 5) % 12, 400 + i);
+        expected.push(
+            reference.generate_greedy(&tokens, n_new, &rung1_policy).expect("rung-1 reference"),
+        );
+        let mut req = Request::scoring(i, tokens);
+        req.generate = n_new;
+        rxs.push((i, server.submit(req)));
+    }
+    for (id, rx) in rxs {
+        let resp = rx.recv().expect("response");
+        assert!(resp.error.is_none(), "request {id}: {:?}", resp.error);
+        assert!(resp.degraded, "request {id}: degradation must be declared");
+        assert_eq!(resp.spec, rung1_spec, "request {id}: the served spec is named");
+        assert_eq!(
+            resp.generated, expected[id as usize],
+            "request {id}: the stream matches the spec the response claims"
+        );
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.degraded, 4);
+    assert_eq!(stats.completed, 4);
+    assert_eq!(stats.shed_level, 1);
+    assert_eq!(stats.kv_pages_acquired, stats.kv_pages_released);
+
+    // Unpinned under light load: the configured spec is back, no restart
+    // tricks required.
+    let model = tiny_model(54);
+    let reference = tiny_model(54);
+    let server = ScoringServer::start_with_model(substrate_cfg(), model).expect("start");
+    let tokens = corpus::generate(64, 24, 500);
+    let expected = reference.generate_greedy(&tokens, n_new, &base_policy).expect("reference");
+    let mut req = Request::scoring(0, tokens);
+    req.generate = n_new;
+    let resp = server.submit(req).recv().expect("response");
+    assert!(!resp.degraded, "light load serves the configured spec");
+    assert_eq!(resp.spec, base.to_string());
+    assert_eq!(resp.generated, expected);
+    let stats = server.shutdown();
+    assert_eq!(stats.degraded, 0);
+    assert_eq!(stats.shed_level, 0);
+}

@@ -1,0 +1,324 @@
+//! Deterministic fault-injection (chaos) suite for the serving stack.
+//!
+//! Every schedule here is a seeded [`FaultPlan`]: which requests fault is a
+//! pure function of (seed, injection point, request id), so the tests
+//! predict the faulted set up front and assert exact outcomes — no process
+//! panic ever escapes, every faulted request gets a typed
+//! `ServerError::Internal`, resource accounting balances to zero, and
+//! requests the schedule spares are **bitwise identical** to a fault-free
+//! run of the same model.
+//!
+//! The tests in this file share one process (one test binary), and the
+//! fault plan is a process-global — `GUARD` serializes them and
+//! `FaultGuard` clears the plan even when an assertion panics mid-test.
+
+use prescored::attention::{AttentionSpec, AttnPolicy};
+use prescored::config::ServingConfig;
+use prescored::coordinator::{Request, ServerError};
+use prescored::data::corpus;
+use prescored::fault::{self, FaultPlan, FaultPoint};
+use prescored::model::{Transformer, TransformerConfig};
+use prescored::server::ScoringServer;
+use std::sync::Mutex;
+
+static GUARD: Mutex<()> = Mutex::new(());
+
+/// Clears the process-global fault plan on drop, so a panicking test can't
+/// leak its schedule into the next one.
+struct FaultGuard;
+
+impl Drop for FaultGuard {
+    fn drop(&mut self) {
+        fault::clear();
+    }
+}
+
+fn arm(plan: FaultPlan) -> FaultGuard {
+    fault::install(plan);
+    FaultGuard
+}
+
+fn tiny_model(seed: u64) -> Transformer {
+    let tcfg =
+        TransformerConfig { vocab: 64, d_model: 32, n_layers: 2, n_heads: 2, max_seq: 64 };
+    Transformer::random(tcfg, seed)
+}
+
+const SPEC: &str = "prescored:kmeans,top_k=12,block=16,sample=4";
+
+fn canonical_spec() -> String {
+    AttentionSpec::parse(SPEC).unwrap().to_string()
+}
+
+fn chaos_cfg() -> ServingConfig {
+    ServingConfig {
+        artifacts_dir: "/nonexistent-artifacts".into(),
+        variant: "exact".into(),
+        max_seq: 64,
+        attention_spec: SPEC.into(),
+        ..Default::default()
+    }
+}
+
+/// Pin the shedder to rung 0 (watermarks unreachable) so bitwise tests run
+/// the configured spec for every request.
+fn no_shedding(cfg: &mut ServingConfig) {
+    cfg.shed_high_watermark = 2.0;
+    cfg.shed_queue_high = usize::MAX;
+}
+
+/// Decode-step panics: the schedule's victims fail with a typed internal
+/// error (the server survives every panic), the spared requests' token
+/// streams are bitwise identical to the model-level greedy reference, and
+/// KV page / prefix pin accounting balances to zero.
+#[test]
+fn chaos_decode_with_panics() {
+    let _g = GUARD.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    let mut plan = FaultPlan::new(9001)
+        .with_rate(FaultPoint::DecodePanic, 500)
+        .with_rate(FaultPoint::SlowDecode, 200)
+        .with_rate(FaultPoint::KvAdmit, 300);
+    plan.slow_ms = 1;
+    let _fault = arm(plan.clone());
+
+    let model = tiny_model(42);
+    let reference = tiny_model(42);
+    let policy = AttnPolicy::parse(SPEC).unwrap();
+    let mut cfg = chaos_cfg();
+    no_shedding(&mut cfg);
+    // No prefix cache: the KvAdmit fault then exercises the bare
+    // reclaim-retry path (nothing to reclaim → immediate clean retry).
+    cfg.prefix_cache_blocks = 0;
+    let server = ScoringServer::start_with_model(cfg, model).expect("start");
+
+    let n_req = 16u64;
+    let n_new = 6usize;
+    // The faulted set is a pure function of the plan — predict it up front.
+    let faulted: Vec<bool> =
+        (0..n_req).map(|i| plan.would_fire(FaultPoint::DecodePanic, i)).collect();
+    let n_faulted = faulted.iter().filter(|&&f| f).count();
+    assert!(n_faulted > 0, "seed 9001 must fault at least one request");
+    assert!(n_faulted < n_req as usize, "…and spare at least one");
+
+    let mut expected = Vec::new();
+    let mut rxs = Vec::new();
+    for i in 0..n_req {
+        let tokens = corpus::generate(64, 20 + (i as usize * 3) % 12, 100 + i);
+        expected.push(if faulted[i as usize] {
+            Vec::new()
+        } else {
+            reference.generate_greedy(&tokens, n_new, &policy).expect("greedy reference")
+        });
+        let mut req = Request::scoring(i, tokens);
+        req.generate = n_new;
+        rxs.push((i, server.submit(req)));
+    }
+    let canon = canonical_spec();
+    for (id, rx) in rxs {
+        let resp = rx.recv().expect("every request gets a response");
+        assert_eq!(resp.id, id);
+        assert_eq!(resp.spec, canon, "request {id}: spec reporting is truthful");
+        assert!(!resp.degraded, "request {id}: shedding disabled");
+        if faulted[id as usize] {
+            assert!(
+                matches!(resp.error, Some(ServerError::Internal(_))),
+                "request {id}: expected a typed internal error, got {:?}",
+                resp.error
+            );
+            assert!(
+                resp.generated.is_empty(),
+                "request {id}: the panic fires before the first token lands"
+            );
+        } else {
+            assert!(resp.error.is_none(), "request {id}: {:?}", resp.error);
+            assert_eq!(
+                resp.generated, expected[id as usize],
+                "request {id}: survivors are bitwise intact under chaos"
+            );
+            assert_eq!(resp.decode_steps, n_new);
+        }
+    }
+    let survivors = n_req as usize - n_faulted;
+    let stats = server.shutdown();
+    assert_eq!(stats.completed, survivors);
+    assert_eq!(stats.internal_errors, n_faulted);
+    assert_eq!(stats.worker_panics, n_faulted, "one caught panic per faulted session");
+    assert_eq!(stats.decode_steps, survivors * n_new);
+    assert_eq!(stats.cancelled, 0);
+    assert_eq!(stats.expired, 0);
+    assert_eq!(stats.degraded, 0);
+    assert_eq!(
+        stats.kv_pages_acquired, stats.kv_pages_released,
+        "faulted sessions must not leak KV pages"
+    );
+    assert_eq!(stats.prefix_pins_acquired, stats.prefix_pins_released);
+}
+
+/// Scoring-worker panics: with one-request batches the blast radius is a
+/// single request, so the faulted set is exactly predictable — victims get
+/// typed failures, survivors bitwise-match the model-level NLL reference,
+/// and the worker rejoins the pool after every caught panic.
+#[test]
+fn chaos_scoring_with_worker_panics() {
+    let _g = GUARD.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    let plan = FaultPlan::new(4242).with_rate(FaultPoint::WorkerPanic, 500);
+    let _fault = arm(plan.clone());
+
+    let model = tiny_model(43);
+    let reference = tiny_model(43);
+    let policy = AttnPolicy::parse(SPEC).unwrap();
+    let mut cfg = chaos_cfg();
+    no_shedding(&mut cfg);
+    cfg.batch_size = 1; // one request per batch → per-request fault prediction
+    let server = ScoringServer::start_with_model(cfg, model).expect("start");
+
+    let n_req = 12u64;
+    let faulted: Vec<bool> =
+        (0..n_req).map(|i| plan.would_fire(FaultPoint::WorkerPanic, i)).collect();
+    let n_faulted = faulted.iter().filter(|&&f| f).count();
+    assert!(n_faulted > 0, "seed 4242 must fault at least one batch");
+    assert!(n_faulted < n_req as usize, "…and spare at least one");
+
+    let mut expected = Vec::new();
+    let mut rxs = Vec::new();
+    for i in 0..n_req {
+        let tokens = corpus::generate(64, 16 + (i as usize * 5) % 24, 600 + i);
+        expected.push(reference.nll_policy(&tokens, &policy));
+        rxs.push((i, server.submit(Request::scoring(i, tokens))));
+    }
+    let canon = canonical_spec();
+    for (id, rx) in rxs {
+        let resp = rx.recv().expect("every request gets a response");
+        assert_eq!(resp.id, id);
+        assert_eq!(resp.spec, canon);
+        if faulted[id as usize] {
+            assert!(
+                matches!(resp.error, Some(ServerError::Internal(_))),
+                "request {id}: expected a typed internal error, got {:?}",
+                resp.error
+            );
+            assert!(resp.nll.is_empty());
+        } else {
+            assert!(resp.error.is_none(), "request {id}: {:?}", resp.error);
+            assert_eq!(resp.nll, expected[id as usize], "request {id}: bitwise NLL");
+        }
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.completed, n_req as usize - n_faulted);
+    assert_eq!(stats.internal_errors, n_faulted);
+    assert_eq!(stats.worker_panics, n_faulted);
+    assert_eq!(stats.batches, n_req as usize - n_faulted, "faulted batches never execute");
+    assert_eq!(stats.kv_pages_acquired, stats.kv_pages_released);
+    assert_eq!(stats.prefix_pins_acquired, stats.prefix_pins_released);
+}
+
+/// Admission pressure + eviction storms: a tiny KV pool forces the
+/// requeue-until-pages-free path, every admission first fails through the
+/// injected `KvAdmit` fault (exercising reclaim-then-retry exactly once per
+/// id), and every prefix-cache insert triggers a full eviction storm. All
+/// of it is invisible to clients: every request completes bitwise-identical
+/// to the reference and accounting balances.
+#[test]
+fn chaos_eviction_storm_and_admit_pressure() {
+    let _g = GUARD.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    let plan = FaultPlan::new(77)
+        .with_rate(FaultPoint::KvAdmit, 1000)
+        .with_rate(FaultPoint::EvictStorm, 1000);
+    let _fault = arm(plan);
+
+    let model = tiny_model(44);
+    let reference = tiny_model(44);
+    let policy = AttnPolicy::parse(SPEC).unwrap();
+    let mut cfg = chaos_cfg();
+    no_shedding(&mut cfg);
+    cfg.kv_blocks = 6; // ~2 concurrent sessions → admissions must requeue
+    cfg.prefix_cache_blocks = 32;
+    cfg.prefix_min_tokens = 16;
+    let server = ScoringServer::start_with_model(cfg, model).expect("start");
+
+    let n_req = 8u64;
+    let n_new = 4usize;
+    let prefix = corpus::generate(64, 16, 7);
+    let mut expected = Vec::new();
+    let mut rxs = Vec::new();
+    for i in 0..n_req {
+        let mut tokens = prefix.clone();
+        tokens.extend(corpus::generate(64, 8 + (i as usize) % 8, 300 + i));
+        expected
+            .push(reference.generate_greedy(&tokens, n_new, &policy).expect("greedy reference"));
+        let mut req = Request::scoring(i, tokens);
+        req.generate = n_new;
+        rxs.push((i, server.submit(req)));
+    }
+    for (id, rx) in rxs {
+        let resp = rx.recv().expect("every request gets a response");
+        assert_eq!(resp.id, id);
+        assert!(resp.error.is_none(), "request {id}: {:?}", resp.error);
+        assert!(!resp.degraded);
+        assert_eq!(
+            resp.generated, expected[id as usize],
+            "request {id}: storms and admit pressure never change the stream"
+        );
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.completed, n_req as usize);
+    assert_eq!(stats.internal_errors, 0);
+    assert_eq!(stats.worker_panics, 0);
+    assert_eq!(stats.kv_pages_acquired, stats.kv_pages_released);
+    assert_eq!(stats.prefix_pins_acquired, stats.prefix_pins_released);
+}
+
+/// The ci.sh chaos smoke: a mixed scoring + generation workload under the
+/// seeded `FaultPlan::chaos` schedule (all points armed at moderate rates).
+/// The seed comes from `PALLAS_FAULT_SEED` (ci.sh runs 101/202/303). Batch
+/// composition is timing-dependent, so outcomes per request are not
+/// predicted — the contract is: no process panic, a typed response for
+/// every request, and balanced accounting.
+#[test]
+fn chaos_env_schedule() {
+    let _g = GUARD.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    let seed = std::env::var("PALLAS_FAULT_SEED")
+        .ok()
+        .and_then(|s| s.trim().parse().ok())
+        .unwrap_or(1u64);
+    let _fault = arm(FaultPlan::chaos(seed));
+
+    let model = tiny_model(45);
+    let mut cfg = chaos_cfg();
+    cfg.executor_workers = 2;
+    let server = ScoringServer::start_with_model(cfg, model).expect("start");
+
+    let n_req = 16u64;
+    let mut rxs = Vec::new();
+    for i in 0..n_req {
+        let mut req = Request::scoring(i, corpus::generate(64, 18 + (i as usize * 7) % 30, i));
+        if i % 2 == 0 {
+            req.generate = 4;
+        }
+        rxs.push((i, server.submit(req)));
+    }
+    for (id, rx) in rxs {
+        let resp = rx.recv().expect("every request gets a response under chaos");
+        assert_eq!(resp.id, id);
+        assert!(!resp.spec.is_empty(), "request {id}: served spec is always reported");
+        match &resp.error {
+            None => {
+                if id % 2 == 0 {
+                    assert!(!resp.generated.is_empty(), "request {id}");
+                } else {
+                    assert!(!resp.nll.is_empty(), "request {id}");
+                }
+            }
+            Some(ServerError::Internal(_)) => {}
+            Some(other) => panic!("request {id}: unexpected error class {other:?}"),
+        }
+    }
+    let stats = server.shutdown();
+    assert_eq!(
+        stats.completed + stats.internal_errors + stats.shed_rejects,
+        n_req as usize,
+        "every request reaches exactly one terminal state"
+    );
+    assert_eq!(stats.kv_pages_acquired, stats.kv_pages_released, "no leaked KV pages");
+    assert_eq!(stats.prefix_pins_acquired, stats.prefix_pins_released, "no leaked pins");
+}
