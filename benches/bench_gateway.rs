@@ -1,0 +1,201 @@
+//! Gateway serving bench: streamed tokens/sec and time-to-first-token
+//! (TTFT) through the full wire path — TCP connect, HTTP POST, SSE stream —
+//! as concurrent client count grows.
+//!
+//! The serving claim under test: continuous batching means aggregate
+//! streamed throughput does not collapse as clients pile on — decode
+//! rounds interleave many sessions across executor workers, so 32
+//! concurrent SSE streams move at least as many tokens/sec as one.
+//!
+//! Emits `BENCH_gateway.json` at the repo root: `ttft_ms_p50` and
+//! `tokens_per_s` keyed by client count.
+//!
+//! Knobs (the CI smoke run shrinks them):
+//! * `PALLAS_GATEWAY_CLIENTS` — comma list, default `1,8,32`
+//! * `PALLAS_GATEWAY_CONTEXT` — context tokens per request, default 32
+//! * `PALLAS_GATEWAY_NEW`     — generated tokens per request, default 16
+//! * `PALLAS_GATEWAY_JSON`    — output path override (CI smoke points it
+//!   at a scratch file so real baselines aren't clobbered)
+//! * `PALLAS_GATEWAY_ASSERT`  — when `1`, exit non-zero unless throughput
+//!   at the largest client count ≥ throughput at the smallest
+
+use prescored::config::ServingConfig;
+use prescored::gateway::{Gateway, GatewayConfig};
+use prescored::model::{Transformer, TransformerConfig};
+use prescored::server::ScoringServer;
+use prescored::util::bench::{env_list, env_usize, f, Table};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::{Duration, Instant};
+
+const SPEC: &str = "prescored:kmeans,top_k=12,block=16,sample=4";
+
+fn start_gateway(max_seq: usize, kv_blocks: usize, workers: usize) -> Gateway {
+    let tcfg = TransformerConfig {
+        vocab: 64,
+        d_model: 32,
+        n_layers: 2,
+        n_heads: 2,
+        max_seq,
+    };
+    let cfg = ServingConfig {
+        artifacts_dir: "/nonexistent-artifacts".into(),
+        variant: "exact".into(),
+        max_seq,
+        attention_spec: SPEC.into(),
+        executor_workers: workers,
+        kv_blocks,
+        ..Default::default()
+    };
+    let server = ScoringServer::start_with_model(cfg, Transformer::random(tcfg, 61))
+        .expect("server start");
+    Gateway::start(GatewayConfig::default(), server).expect("gateway start")
+}
+
+/// One wire client: POST a generate request, stream the SSE response, and
+/// return (ttft, token events, saw done). Contexts are generated
+/// server-side via the `corpus_len` wire field.
+fn run_client(addr: SocketAddr, context: usize, n_new: usize, seed: usize) -> (f64, usize, bool) {
+    let body = format!(
+        "{{\"corpus_len\": {context}, \"corpus_seed\": {seed}, \"generate\": {n_new}}}"
+    );
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream.set_read_timeout(Some(Duration::from_secs(60))).expect("timeout");
+    let t0 = Instant::now();
+    stream
+        .write_all(
+            format!(
+                "POST /v1/generate HTTP/1.1\r\nHost: gw\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n{body}",
+                body.len()
+            )
+            .as_bytes(),
+        )
+        .expect("write request");
+
+    let mut raw: Vec<u8> = Vec::with_capacity(4096);
+    let mut chunk = [0u8; 4096];
+    let mut ttft_ms = f64::NAN;
+    let mut scanned = 0usize;
+    let mut tokens = 0usize;
+    let mut done = false;
+    loop {
+        let n = match stream.read(&mut chunk) {
+            Ok(0) => break,
+            Ok(n) => n,
+            Err(_) => break,
+        };
+        raw.extend_from_slice(&chunk[..n]);
+        // Count event markers in the newly arrived window (re-scan a few
+        // bytes of overlap so a marker split across reads still counts).
+        let start = scanned.saturating_sub(16);
+        let window = &raw[start..];
+        let fresh_tokens = count_occurrences(window, b"event: token")
+            - count_occurrences(&raw[start..scanned], b"event: token");
+        if fresh_tokens > 0 && tokens == 0 {
+            ttft_ms = t0.elapsed().as_secs_f64() * 1e3;
+        }
+        tokens += fresh_tokens;
+        if count_occurrences(window, b"event: done")
+            > count_occurrences(&raw[start..scanned], b"event: done")
+        {
+            done = true;
+        }
+        scanned = raw.len();
+    }
+    (ttft_ms, tokens, done)
+}
+
+fn count_occurrences(haystack: &[u8], needle: &[u8]) -> usize {
+    if haystack.len() < needle.len() {
+        return 0;
+    }
+    haystack.windows(needle.len()).filter(|w| w == &needle).count()
+}
+
+fn main() {
+    let clients_axis = env_list("PALLAS_GATEWAY_CLIENTS", &[1usize, 8, 32]);
+    let context = env_usize("PALLAS_GATEWAY_CONTEXT", 32);
+    let n_new = env_usize("PALLAS_GATEWAY_NEW", 16);
+    let assert_scaling = std::env::var("PALLAS_GATEWAY_ASSERT").map_or(false, |v| v == "1");
+    let json_path =
+        std::env::var("PALLAS_GATEWAY_JSON").unwrap_or_else(|_| "BENCH_gateway.json".into());
+
+    let max_seq = context + n_new + 8;
+    let max_clients = clients_axis.iter().copied().max().unwrap_or(1);
+    let pages = (context + n_new) / 16 + 2;
+    let kv_blocks = (max_clients * pages).max(512);
+    println!(
+        "== gateway streaming: clients {clients_axis:?}, context {context}, {n_new} new =="
+    );
+
+    let mut table =
+        Table::new("gateway streaming", &["clients", "ttft p50 (ms)", "tokens/s"]);
+    let mut results: Vec<(usize, f64, f64)> = Vec::new();
+    for &n_clients in &clients_axis {
+        // Fresh server + gateway per concurrency level: stats and KV state
+        // start clean, so levels are comparable.
+        let gw = start_gateway(max_seq, kv_blocks, 4);
+        let addr = gw.addr();
+        let t0 = Instant::now();
+        let handles: Vec<_> = (0..n_clients)
+            .map(|i| {
+                std::thread::spawn(move || run_client(addr, context, n_new, i))
+            })
+            .collect();
+        let mut ttfts = Vec::new();
+        let mut total_tokens = 0usize;
+        for h in handles {
+            let (ttft, tokens, done) = h.join().expect("client thread");
+            assert!(done, "stream must end with a done event");
+            assert_eq!(tokens, n_new, "every client streams every token");
+            ttfts.push(ttft);
+            total_tokens += tokens;
+        }
+        let wall_s = t0.elapsed().as_secs_f64().max(1e-12);
+        let stats = gw.shutdown();
+        assert_eq!(stats.completed, n_clients, "all streams complete");
+        assert_eq!(
+            stats.kv_pages_acquired, stats.kv_pages_released,
+            "bench run must balance page accounting"
+        );
+        ttfts.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        let ttft_p50 = ttfts[ttfts.len() / 2];
+        let tokens_per_s = total_tokens as f64 / wall_s;
+        table.row(vec![n_clients.to_string(), f(ttft_p50, 2), f(tokens_per_s, 1)]);
+        results.push((n_clients, ttft_p50, tokens_per_s));
+    }
+    table.print();
+
+    // JSON emission.
+    let mut fields = Vec::new();
+    for (clients, ttft, tps) in &results {
+        fields.push(format!(
+            "    \"{clients}\": {{\"ttft_ms_p50\": {ttft:.3}, \"tokens_per_s\": {tps:.1}}}"
+        ));
+    }
+    let json = format!(
+        "{{\n  \"context\": {context},\n  \"new_tokens\": {n_new},\n  \"by_clients\": {{\n{}\n  }}\n}}\n",
+        fields.join(",\n")
+    );
+    std::fs::write(&json_path, json).expect("writing BENCH_gateway.json");
+    println!("wrote {json_path}");
+
+    if assert_scaling {
+        let (c0, _, tps0) = results[0];
+        let (c1, _, tps1) = results[results.len() - 1];
+        if results.len() < 2 {
+            println!("PALLAS_GATEWAY_ASSERT: need at least two client counts");
+        } else if tps1 < tps0 {
+            eprintln!(
+                "ASSERT FAILED: {c1}-client throughput {tps1:.1} tok/s fell below \
+                 {c0}-client throughput {tps0:.1} tok/s — continuous batching must \
+                 not collapse under concurrency"
+            );
+            std::process::exit(1);
+        } else {
+            println!(
+                "assert ok: {c1}-client {tps1:.1} tok/s >= {c0}-client {tps0:.1} tok/s"
+            );
+        }
+    }
+}

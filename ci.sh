@@ -13,7 +13,7 @@ QUICK=0
 # `.unwrap()` / `.expect(` outside `#[cfg(test)]` must carry a trailing
 # `// unwrap-ok: <reason>` marker, or the panic it hides belongs in the
 # typed ServerError surface instead.
-echo "== unwrap/expect gate (rust/src/server, rust/src/cache) =="
+echo "== unwrap/expect gate (rust/src/server, rust/src/cache, rust/src/gateway) =="
 if ! awk '
     FNR == 1 { in_tests = 0 }
     /#\[cfg\(test\)\]/ { in_tests = 1 }
@@ -23,7 +23,7 @@ if ! awk '
         bad = 1
     }
     END { exit bad }
-' rust/src/server/*.rs rust/src/cache/*.rs; then
+' rust/src/server/*.rs rust/src/cache/*.rs rust/src/gateway/*.rs; then
     echo "unwrap/expect gate FAILED — convert to a typed error or mark '// unwrap-ok: <reason>'"
     exit 1
 fi
@@ -84,6 +84,23 @@ if [[ "$QUICK" == 0 ]]; then
     PALLAS_SHED_REQUESTS=8 PALLAS_SHED_CONTEXT=32 PALLAS_SHED_NEW=8 \
     PALLAS_SHED_ASSERT=1 PALLAS_SHED_JSON="$(mktemp)" \
         cargo bench --bench bench_shed_quality
+
+    # Gateway wire smoke: boot the HTTP/SSE front door on an ephemeral
+    # port, stream one generation over a real TCP socket, and assert >= 1
+    # SSE token event plus a clean `done` terminal — the wire path from
+    # POST to cancel-safe stream teardown is a CI invariant.
+    echo "== gateway wire smoke =="
+    cargo test --release --test gateway \
+        sse_stream_delivers_tokens_incrementally_and_done -- --nocapture
+
+    # Gateway streaming smoke: env-shrunk concurrency sweep.
+    # PALLAS_GATEWAY_ASSERT=1 fails the build if aggregate streamed
+    # throughput collapses as clients pile on — continuous batching is a CI
+    # invariant.
+    echo "== bench_gateway (smoke) =="
+    PALLAS_GATEWAY_CLIENTS=1,4 PALLAS_GATEWAY_CONTEXT=24 PALLAS_GATEWAY_NEW=4 \
+    PALLAS_GATEWAY_ASSERT=1 PALLAS_GATEWAY_JSON="$(mktemp)" \
+        cargo bench --bench bench_gateway
 
     # Chaos smoke: three fixed seeded fault schedules through the mixed
     # scoring + generation workload. The suite asserts no process panic,

@@ -17,7 +17,37 @@
 //! cargo run --release --example serve_longcontext             # demo 1 (8k prefix)
 //! cargo run --release --example serve_longcontext 4 2048      # 4 requests, 2k prefix
 //! make artifacts && cargo run --release --example serve_longcontext  # both demos
+//! cargo run --release --example serve_longcontext gateway 8080  # HTTP/SSE front door
 //! ```
+//!
+//! **Gateway quickstart** (`gateway [port]` mode): the HTTP/SSE front door
+//! from `prescored::gateway` on top of the same substrate server. Stream a
+//! generation over Server-Sent Events with plain curl (`-N` disables
+//! buffering so tokens render as they land):
+//!
+//! ```bash
+//! # stream 16 tokens over a server-side 64-token synthetic context
+//! curl -N -X POST http://127.0.0.1:8080/v1/generate \
+//!      -H 'X-Pallas-Tenant: demo' \
+//!      -d '{"corpus_len": 64, "generate": 16, "deadline_ms": 5000}'
+//! # → event: token        (one per decode step, as it lands)
+//! #   data: {"id":1,"tokens":[17],"total":1}
+//! #   ...
+//! #   event: done         (truthful served-spec / degraded / stats fields)
+//! #   data: {"id":1,"generated":16,"spec":"prescored:...","degraded":false,...}
+//!
+//! # explicit token ids work too, and per-tenant quotas answer 429 +
+//! # Retry-After when X-Pallas-Tenant exceeds its in-flight budget
+//! curl -N -X POST http://127.0.0.1:8080/v1/generate -d '{"tokens": [1,2,3], "generate": 8}'
+//!
+//! # live stats: global terminal counters + per-tenant breakdown + the
+//! # gateway admission ledger
+//! curl http://127.0.0.1:8080/v1/stats
+//! ```
+//!
+//! Disconnecting mid-stream (Ctrl-C on curl) cancels the request server-side
+//! at the next safe point and releases its KV pages — watch `cancelled`
+//! tick up in `/v1/stats`.
 //!
 //! **Fault-tolerance surface** (see ROADMAP.md "Failure model"): give a
 //! request a wall-clock budget with `Request::with_deadline(ms)` (expired
@@ -37,6 +67,7 @@ use prescored::config::ServingConfig;
 use prescored::coordinator::kv_cache::BLOCK_SIZE;
 use prescored::coordinator::Request;
 use prescored::data::{corpus, workload};
+use prescored::gateway::{Gateway, GatewayConfig};
 use prescored::metrics::PplAccum;
 use prescored::model::{Transformer, TransformerConfig};
 use prescored::server::ScoringServer;
@@ -117,6 +148,51 @@ fn run_prefix_demo(n_req: usize, prefix_tokens: usize) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `gateway [port]` mode: boot a substrate server behind the HTTP/SSE front
+/// door and serve until killed. Pair it with the curl quickstart in the
+/// module doc.
+fn run_gateway(port: u16) -> anyhow::Result<()> {
+    let max_seq = 4096;
+    let tcfg = TransformerConfig {
+        vocab: 512,
+        d_model: 32,
+        n_layers: 2,
+        n_heads: 2,
+        max_seq,
+    };
+    let cfg = ServingConfig {
+        artifacts_dir: "/nonexistent-artifacts".into(),
+        max_seq,
+        attention_spec: "prescored:kmeans,top_k=64,block=16,sample=8".into(),
+        executor_workers: 4,
+        kv_blocks: max_seq.div_ceil(BLOCK_SIZE) * 8,
+        ..Default::default()
+    };
+    let server = ScoringServer::start_with_model(cfg, Transformer::random(tcfg, 7))?;
+    let gw_cfg = GatewayConfig {
+        addr: format!("127.0.0.1:{port}"),
+        max_in_flight_per_tenant: 16,
+        max_generate: 256,
+        corpus_vocab: 512,
+        ..Default::default()
+    };
+    let gw = Gateway::start(gw_cfg, server)?;
+    let addr = gw.addr();
+    println!("== gateway: HTTP/SSE front door on http://{addr} ==");
+    println!("stream a generation (SSE, one `token` event per decode round):");
+    println!(
+        "  curl -N -X POST http://{addr}/v1/generate \\\n       \
+         -H 'X-Pallas-Tenant: demo' \\\n       \
+         -d '{{\"corpus_len\": 64, \"generate\": 16, \"deadline_ms\": 5000}}'"
+    );
+    println!("inspect live serving stats:");
+    println!("  curl http://{addr}/v1/stats");
+    println!("Ctrl-C to stop.");
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
 /// Demo 2: the original artifact replay (scoring trace via PJRT).
 fn run_variant(variant: &str, n_req: usize) -> anyhow::Result<()> {
     let cfg = ServingConfig {
@@ -163,6 +239,10 @@ fn run_variant(variant: &str, n_req: usize) -> anyhow::Result<()> {
 }
 
 fn main() -> anyhow::Result<()> {
+    if std::env::args().nth(1).as_deref() == Some("gateway") {
+        let port = std::env::args().nth(2).and_then(|s| s.parse().ok()).unwrap_or(8080);
+        return run_gateway(port);
+    }
     let n_req = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(4);
     let prefix_tokens =
         std::env::args().nth(2).and_then(|s| s.parse().ok()).unwrap_or(8192);

@@ -33,6 +33,10 @@ pub struct Request {
     /// An expired request is failed with [`ServerError::DeadlineExceeded`]
     /// and its KV pages / prefix pins are released.
     pub deadline_ms: u64,
+    /// Fairness/accounting key (empty = anonymous). The scheduler orders
+    /// work deficit-round-robin across tenants, and `ServerStats::tenants`
+    /// breaks the terminal counters down per tenant.
+    pub tenant: String,
 }
 
 impl Request {
@@ -44,12 +48,20 @@ impl Request {
             arrived: Instant::now(),
             state: RequestState::Queued,
             deadline_ms: 0,
+            tenant: String::new(),
         }
     }
 
     /// Builder: attach a deadline (milliseconds from arrival).
     pub fn with_deadline(mut self, deadline_ms: u64) -> Self {
         self.deadline_ms = deadline_ms;
+        self
+    }
+
+    /// Builder: tag the request with a tenant key for fair scheduling and
+    /// per-tenant stats.
+    pub fn with_tenant(mut self, tenant: &str) -> Self {
+        self.tenant = tenant.to_string();
         self
     }
 

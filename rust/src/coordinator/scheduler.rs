@@ -1,10 +1,21 @@
-//! Prefill/decode scheduler with a decode-starvation bound.
+//! Prefill/decode scheduler with a decode-starvation bound and per-tenant
+//! deficit-round-robin lanes.
 //!
 //! Prefill work is throughput-critical (it fills lanes), decode work is
 //! latency-critical (it extends live sequences). The policy is
 //! prefill-priority with a starvation bound: after `max_prefill_streak`
 //! consecutive prefill dispatches with decode work pending, a decode round
 //! is forced.
+//!
+//! Work is submitted into *lanes* (one per tenant; the engine maps tenant
+//! keys to lane indices, lane 0 is the anonymous default). Within the
+//! prefill/decode class, lanes are served deficit-round-robin: each
+//! non-empty lane earns one credit per scheduler visit and a batch is
+//! dispatched once the lane's deficit covers the batch size, so a tenant
+//! queueing many requests cannot head-of-line-block a tenant queueing one.
+//! Decode rounds take at most one sequence per lane per sweep, so a round
+//! of width `w` mixes up to `w` distinct tenants. With a single active lane
+//! the scheduler behaves exactly like the plain FIFO policy.
 
 use std::collections::VecDeque;
 
@@ -33,56 +44,161 @@ impl Default for SchedulerConfig {
     }
 }
 
+/// One tenant's queues plus its DRR credit.
+#[derive(Debug, Default)]
+struct Lane {
+    prefill: VecDeque<Vec<u64>>,
+    decode: VecDeque<u64>,
+    deficit: usize,
+}
+
 /// The scheduler state.
 pub struct Scheduler {
     cfg: SchedulerConfig,
-    prefill_q: VecDeque<Vec<u64>>,
-    decode_q: VecDeque<u64>,
+    lanes: Vec<Lane>,
+    /// DRR cursors: the lane index each class visits first on its next pop.
+    prefill_rr: usize,
+    decode_rr: usize,
     prefill_streak: usize,
+    pending_prefill_batches: usize,
+    pending_decode_ids: usize,
 }
 
 impl Scheduler {
     pub fn new(cfg: SchedulerConfig) -> Self {
-        Scheduler { cfg, prefill_q: VecDeque::new(), decode_q: VecDeque::new(), prefill_streak: 0 }
+        Scheduler {
+            cfg,
+            lanes: Vec::new(),
+            prefill_rr: 0,
+            decode_rr: 0,
+            prefill_streak: 0,
+            pending_prefill_batches: 0,
+            pending_decode_ids: 0,
+        }
     }
 
-    /// Enqueue a prefill batch (ids grouped by the dynamic batcher).
+    fn ensure_lane(&mut self, lane: usize) {
+        while self.lanes.len() <= lane {
+            self.lanes.push(Lane::default());
+        }
+    }
+
+    /// Enqueue a prefill batch (ids grouped by the dynamic batcher) into the
+    /// anonymous lane.
     pub fn submit_prefill(&mut self, ids: Vec<u64>) {
-        self.prefill_q.push_back(ids);
+        self.submit_prefill_for(0, ids);
     }
 
-    /// Enqueue a sequence for decoding.
+    /// Enqueue a prefill batch into a tenant lane.
+    pub fn submit_prefill_for(&mut self, lane: usize, ids: Vec<u64>) {
+        self.ensure_lane(lane);
+        self.pending_prefill_batches += 1;
+        self.lanes[lane].prefill.push_back(ids);
+    }
+
+    /// Enqueue a sequence for decoding into the anonymous lane.
     pub fn submit_decode(&mut self, seq_id: u64) {
-        self.decode_q.push_back(seq_id);
+        self.submit_decode_for(0, seq_id);
     }
 
+    /// Enqueue a sequence for decoding into a tenant lane.
+    pub fn submit_decode_for(&mut self, lane: usize, seq_id: u64) {
+        self.ensure_lane(lane);
+        self.pending_decode_ids += 1;
+        self.lanes[lane].decode.push_back(seq_id);
+    }
+
+    /// Queued prefill batches across all lanes.
     pub fn pending_prefill(&self) -> usize {
-        self.prefill_q.len()
+        self.pending_prefill_batches
     }
 
+    /// Queued decode sequence ids across all lanes.
     pub fn pending_decode(&self) -> usize {
-        self.decode_q.len()
+        self.pending_decode_ids
+    }
+
+    /// Pop the next prefill batch deficit-round-robin across lanes. Each
+    /// sweep grants every non-empty lane one credit; a lane's head batch is
+    /// served once its deficit covers the batch size, so big-batch tenants
+    /// wait proportionally longer. Terminates because every sweep over a
+    /// non-empty scheduler strictly grows some eligible lane's deficit.
+    fn pop_prefill(&mut self) -> Option<Vec<u64>> {
+        if self.pending_prefill_batches == 0 {
+            return None;
+        }
+        let n = self.lanes.len();
+        loop {
+            for step in 0..n {
+                let i = (self.prefill_rr + step) % n;
+                let lane = &mut self.lanes[i];
+                let Some(head) = lane.prefill.front() else {
+                    lane.deficit = 0;
+                    continue;
+                };
+                lane.deficit += 1;
+                let cost = head.len().max(1);
+                if lane.deficit >= cost {
+                    lane.deficit -= cost;
+                    if lane.prefill.len() == 1 {
+                        lane.deficit = 0;
+                    }
+                    self.prefill_rr = (i + 1) % n;
+                    self.pending_prefill_batches -= 1;
+                    return lane.prefill.pop_front();
+                }
+            }
+        }
+    }
+
+    /// Assemble one decode round: sweep the lanes round-robin, taking one
+    /// sequence per non-empty lane per sweep, until `decode_width` ids are
+    /// collected or the queues drain.
+    fn pop_decode_round(&mut self) -> Vec<u64> {
+        let width = self.cfg.decode_width.min(self.pending_decode_ids);
+        let mut ids = Vec::with_capacity(width);
+        let n = self.lanes.len();
+        'outer: while ids.len() < width {
+            let mut any = false;
+            for step in 0..n {
+                let i = (self.decode_rr + step) % n;
+                let Some(id) = self.lanes[i].decode.pop_front() else {
+                    continue;
+                };
+                any = true;
+                ids.push(id);
+                self.pending_decode_ids -= 1;
+                if ids.len() >= width {
+                    self.decode_rr = (i + 1) % n;
+                    break 'outer;
+                }
+            }
+            if !any {
+                break;
+            }
+        }
+        ids
     }
 
     /// Next work item under prefill-priority + starvation bound.
     pub fn next(&mut self) -> Option<WorkItem> {
-        let decode_waiting = !self.decode_q.is_empty();
+        let decode_waiting = self.pending_decode_ids > 0;
         let force_decode = decode_waiting && self.prefill_streak >= self.cfg.max_prefill_streak;
         if !force_decode {
-            if let Some(ids) = self.prefill_q.pop_front() {
+            if let Some(ids) = self.pop_prefill() {
                 self.prefill_streak += 1;
                 return Some(WorkItem::Prefill(ids));
             }
         }
         if decode_waiting {
             self.prefill_streak = 0;
-            let take = self.cfg.decode_width.min(self.decode_q.len());
-            let ids: Vec<u64> = self.decode_q.drain(..take).collect();
-            return Some(WorkItem::Decode(ids));
+            return Some(WorkItem::Decode(self.pop_decode_round()));
         }
-        // Nothing to do (or forced decode with empty decode queue — cannot
-        // happen given decode_waiting guard).
-        if let Some(ids) = self.prefill_q.pop_front() {
+        // Forced decode path never reaches here (decode_waiting guard), so
+        // this trailing pop only serves the force_decode && !decode_waiting
+        // corner, which is unreachable — kept for symmetry with `next`'s
+        // original shape.
+        if let Some(ids) = self.pop_prefill() {
             self.prefill_streak += 1;
             return Some(WorkItem::Prefill(ids));
         }
@@ -172,13 +288,64 @@ mod tests {
     }
 
     #[test]
+    fn decode_round_interleaves_lanes() {
+        let cfg = SchedulerConfig { max_prefill_streak: 1, decode_width: 4 };
+        let mut s = Scheduler::new(cfg);
+        // Lane 0 floods, lane 1 queues two.
+        for i in 0..6 {
+            s.submit_decode_for(0, i);
+        }
+        s.submit_decode_for(1, 100);
+        s.submit_decode_for(1, 101);
+        // One id per lane per sweep: lane 1 appears in every round until it
+        // drains, despite being outnumbered 3:1.
+        assert_eq!(s.next(), Some(WorkItem::Decode(vec![0, 100, 1, 101])));
+        assert_eq!(s.next(), Some(WorkItem::Decode(vec![2, 3, 4, 5])));
+        assert_eq!(s.next(), None);
+        assert_eq!(s.pending_decode(), 0);
+    }
+
+    #[test]
+    fn prefill_drr_prevents_head_of_line_blocking() {
+        let cfg = SchedulerConfig { max_prefill_streak: 100, decode_width: 4 };
+        let mut s = Scheduler::new(cfg);
+        // Tenant 0 queues four singleton batches before tenant 1's arrives.
+        for i in 0..4 {
+            s.submit_prefill_for(0, vec![i]);
+        }
+        s.submit_prefill_for(1, vec![50]);
+        let mut order = Vec::new();
+        while let Some(WorkItem::Prefill(ids)) = s.next() {
+            order.push(ids[0]);
+        }
+        let pos = order.iter().position(|&id| id == 50);
+        // Tenant 1's lone batch is served within the first sweep, not after
+        // tenant 0's whole backlog.
+        assert!(pos.is_some_and(|p| p <= 1), "tenant 1 starved: order {order:?}");
+        assert_eq!(order.len(), 5, "no batch lost");
+    }
+
+    #[test]
+    fn single_lane_keeps_fifo_order() {
+        let cfg = SchedulerConfig { max_prefill_streak: 100, decode_width: 8 };
+        let mut s = Scheduler::new(cfg);
+        for i in 0..5 {
+            s.submit_prefill(vec![i, i + 10]);
+        }
+        for i in 0..5 {
+            assert_eq!(s.next(), Some(WorkItem::Prefill(vec![i, i + 10])));
+        }
+        assert_eq!(s.next(), None);
+    }
+
+    #[test]
     fn property_nothing_lost_and_starvation_bounded() {
         run_property_noshrink(
             "scheduler-invariants",
             Config { cases: 40, ..Default::default() },
             |r| {
                 (0..r.range(1, 80))
-                    .map(|i| (r.bool(0.5), i as u64))
+                    .map(|i| (r.bool(0.5), r.range(0, 3), i as u64))
                     .collect::<Vec<_>>()
             },
             |ops| {
@@ -186,12 +353,12 @@ mod tests {
                 let mut s = Scheduler::new(cfg);
                 let mut submitted_p = 0usize;
                 let mut submitted_d = 0usize;
-                for &(is_prefill, id) in ops {
+                for &(is_prefill, lane, id) in ops {
                     if is_prefill {
-                        s.submit_prefill(vec![id]);
+                        s.submit_prefill_for(lane, vec![id]);
                         submitted_p += 1;
                     } else {
-                        s.submit_decode(id);
+                        s.submit_decode_for(lane, id);
                         submitted_d += 1;
                     }
                 }

@@ -15,8 +15,9 @@
 //!
 //! Injection points cover the failure classes the fault-tolerance layer is
 //! built for: KV page-pool exhaustion at admission, prefix-cache eviction
-//! storms, worker/decode-step panics, slow decode steps, and persist-file
-//! corruption.
+//! storms, worker/decode-step panics, slow decode steps, persist-file
+//! corruption, and gateway stream failures (mid-stream socket drops, slow
+//! client reads).
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Mutex;
@@ -39,16 +40,25 @@ pub enum FaultPoint {
     /// Flip one byte of a persisted artifact store after its checksum is
     /// computed (the loader must reject the file cleanly).
     PersistCorrupt,
+    /// Treat the next SSE write for this stream as a failed socket write
+    /// (client vanished mid-stream) — the gateway must cancel the request
+    /// and release its pages/pins.
+    GatewayDrop,
+    /// Sleep before an SSE write (a slow-reading client); decode rounds must
+    /// keep making progress for everyone else.
+    SlowClient,
 }
 
 /// All injection points, in `FaultPlan::rates` order.
-pub const ALL_POINTS: [FaultPoint; 6] = [
+pub const ALL_POINTS: [FaultPoint; 8] = [
     FaultPoint::KvAdmit,
     FaultPoint::EvictStorm,
     FaultPoint::WorkerPanic,
     FaultPoint::DecodePanic,
     FaultPoint::SlowDecode,
     FaultPoint::PersistCorrupt,
+    FaultPoint::GatewayDrop,
+    FaultPoint::SlowClient,
 ];
 
 impl FaultPoint {
@@ -60,6 +70,8 @@ impl FaultPoint {
             FaultPoint::DecodePanic => 3,
             FaultPoint::SlowDecode => 4,
             FaultPoint::PersistCorrupt => 5,
+            FaultPoint::GatewayDrop => 6,
+            FaultPoint::SlowClient => 7,
         }
     }
 
@@ -71,6 +83,8 @@ impl FaultPoint {
             FaultPoint::DecodePanic => "decode_panic",
             FaultPoint::SlowDecode => "slow_decode",
             FaultPoint::PersistCorrupt => "persist_corrupt",
+            FaultPoint::GatewayDrop => "gateway_drop",
+            FaultPoint::SlowClient => "slow_client",
         }
     }
 

@@ -1,0 +1,212 @@
+//! Minimal HTTP/1.1 + SSE plumbing over blocking `TcpStream`s.
+//!
+//! The gateway only needs two request shapes (`POST /v1/generate`,
+//! `GET /v1/stats`), so this is a single-request-per-connection parser:
+//! read the header block (capped), honor `Content-Length` (capped), answer,
+//! close. SSE responses are written incrementally with
+//! [`write_sse_event`]; a failed write there is the disconnect signal the
+//! gateway turns into `ScoringServer::cancel`.
+
+use std::collections::HashMap;
+use std::io::{self, Read, Write};
+use std::net::TcpStream;
+
+/// Header-block size cap: a client that cannot say what it wants in 16 KiB
+/// is not speaking this protocol.
+const MAX_HEADER_BYTES: usize = 16 * 1024;
+
+/// A parsed HTTP request line + headers + body.
+#[derive(Debug)]
+pub struct HttpRequest {
+    pub method: String,
+    pub path: String,
+    /// Header names lowercased at parse time.
+    pub headers: HashMap<String, String>,
+    pub body: Vec<u8>,
+}
+
+impl HttpRequest {
+    /// Case-insensitive header lookup.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers.get(&name.to_ascii_lowercase()).map(String::as_str)
+    }
+}
+
+/// Read one HTTP/1.1 request. `Ok(None)` means the client closed cleanly
+/// before sending anything; protocol violations surface as
+/// `io::ErrorKind::InvalidData`.
+pub fn read_request(
+    stream: &mut TcpStream,
+    max_body: usize,
+) -> io::Result<Option<HttpRequest>> {
+    let mut buf: Vec<u8> = Vec::with_capacity(1024);
+    let mut chunk = [0u8; 1024];
+    // Read until the blank line that ends the header block.
+    let header_end = loop {
+        if let Some(end) = find_header_end(&buf) {
+            break end;
+        }
+        if buf.len() > MAX_HEADER_BYTES {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                "header block exceeds 16 KiB",
+            ));
+        }
+        let n = stream.read(&mut chunk)?;
+        if n == 0 {
+            if buf.is_empty() {
+                return Ok(None); // clean EOF before any bytes
+            }
+            return Err(io::Error::new(
+                io::ErrorKind::UnexpectedEof,
+                "connection closed mid-headers",
+            ));
+        }
+        buf.extend_from_slice(&chunk[..n]);
+    };
+
+    let header_text = std::str::from_utf8(&buf[..header_end])
+        .map_err(|_| io::Error::new(io::ErrorKind::InvalidData, "non-utf8 headers"))?;
+    let mut lines = header_text.split("\r\n");
+    let request_line = lines.next().unwrap_or_default();
+    let mut parts = request_line.split_whitespace();
+    let (Some(method), Some(path)) = (parts.next(), parts.next()) else {
+        return Err(io::Error::new(io::ErrorKind::InvalidData, "malformed request line"));
+    };
+    let mut headers = HashMap::new();
+    for line in lines {
+        if let Some((name, value)) = line.split_once(':') {
+            headers.insert(name.trim().to_ascii_lowercase(), value.trim().to_string());
+        }
+    }
+
+    // Body: whatever followed the header block plus the remainder per
+    // Content-Length.
+    let content_length: usize = headers
+        .get("content-length")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0);
+    if content_length > max_body {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("body of {content_length} bytes exceeds the {max_body}-byte cap"),
+        ));
+    }
+    let mut body = buf[header_end + 4..].to_vec();
+    while body.len() < content_length {
+        let n = stream.read(&mut chunk)?;
+        if n == 0 {
+            return Err(io::Error::new(
+                io::ErrorKind::UnexpectedEof,
+                "connection closed mid-body",
+            ));
+        }
+        body.extend_from_slice(&chunk[..n]);
+    }
+    body.truncate(content_length);
+
+    Ok(Some(HttpRequest {
+        method: method.to_string(),
+        path: path.to_string(),
+        headers,
+        body,
+    }))
+}
+
+fn find_header_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+/// Write a complete JSON response with status line and standard headers.
+/// `extra_headers` lets error paths attach e.g. `Retry-After`.
+pub fn write_json_response(
+    stream: &mut TcpStream,
+    status: u16,
+    reason: &str,
+    extra_headers: &[(&str, String)],
+    body: &str,
+) -> io::Result<()> {
+    let mut head = format!(
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n",
+        body.len()
+    );
+    for (name, value) in extra_headers {
+        head.push_str(&format!("{name}: {value}\r\n"));
+    }
+    head.push_str("\r\n");
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}
+
+/// Start an SSE response: status line + streaming headers. Events follow
+/// via [`write_sse_event`].
+pub fn write_sse_preamble(stream: &mut TcpStream) -> io::Result<()> {
+    stream.write_all(
+        b"HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\nCache-Control: no-cache\r\nConnection: close\r\n\r\n",
+    )?;
+    stream.flush()
+}
+
+/// Write one SSE event (`event: <name>\ndata: <payload>\n\n`) and flush so
+/// the client sees it immediately — incremental delivery is the point. The
+/// `Err` from a closed socket is the gateway's disconnect signal.
+pub fn write_sse_event(stream: &mut TcpStream, event: &str, data: &str) -> io::Result<()> {
+    stream.write_all(format!("event: {event}\ndata: {data}\n\n").as_bytes())?;
+    stream.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    /// Round-trip a request through a real socket pair.
+    fn roundtrip(raw: &[u8]) -> io::Result<Option<HttpRequest>> {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let raw = raw.to_vec();
+        let client = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.write_all(&raw).unwrap();
+        });
+        let (mut server_side, _) = listener.accept().unwrap();
+        let parsed = read_request(&mut server_side, 1024 * 1024);
+        client.join().unwrap();
+        parsed
+    }
+
+    #[test]
+    fn parses_post_with_body() {
+        let req = roundtrip(
+            b"POST /v1/generate HTTP/1.1\r\nHost: x\r\nX-Pallas-Tenant: acme\r\nContent-Length: 11\r\n\r\nhello world",
+        )
+        .unwrap()
+        .unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/generate");
+        assert_eq!(req.header("x-pallas-tenant"), Some("acme"));
+        assert_eq!(req.header("X-PALLAS-TENANT"), Some("acme"));
+        assert_eq!(req.body, b"hello world");
+    }
+
+    #[test]
+    fn clean_eof_is_none() {
+        let parsed = roundtrip(b"").unwrap();
+        assert!(parsed.is_none());
+    }
+
+    #[test]
+    fn oversized_body_is_rejected() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.write_all(b"POST / HTTP/1.1\r\nContent-Length: 999999\r\n\r\n").unwrap();
+        });
+        let (mut server_side, _) = listener.accept().unwrap();
+        let err = read_request(&mut server_side, 1024).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        client.join().unwrap();
+    }
+}

@@ -1,0 +1,530 @@
+//! HTTP/SSE front door for the scoring server.
+//!
+//! A std-only (threads + `TcpListener`, no async runtime) HTTP/1.1 server
+//! that makes the serving stack reachable over the wire:
+//!
+//! - `POST /v1/generate` — JSON request → SSE stream. One `token` event
+//!   per decode step (delivered as the step lands, before generation
+//!   completes — continuous batching means concurrent streams interleave),
+//!   then a terminal `done` event carrying the truthful
+//!   served-spec/degraded/stats fields from [`Response`], or a structured
+//!   `error` event for typed failures. Every request terminates exactly
+//!   once, on the wire as in the engine.
+//! - `GET /v1/stats` — [`ServerStats`] plus per-tenant admission holdings
+//!   as JSON.
+//!
+//! The wire maps onto the existing contracts rather than adding new ones:
+//! a failed SSE write (client disconnect) → [`ScoringServer::cancel`] (KV
+//! pages and prefix pins release at the next safe point); request
+//! `deadline_ms` → [`Request::with_deadline`]; `ServerError::Capacity`
+//! (admission refusal under `shed_mode = "reject"`) → HTTP 429 with
+//! `Retry-After`. Per-tenant admission is the gateway's own layer: the
+//! `X-Pallas-Tenant` header keys [`tenant::TenantGovernor`] quotas
+//! (in-flight streams, estimated KV pages) at the door, and the same key
+//! rides [`Request::tenant`] into the scheduler's deficit-round-robin
+//! lanes so admitted tenants also make fair *progress*.
+//!
+//! Request body fields: `tokens` (array of token ids) or
+//! `corpus_len`/`corpus_seed` (server-side synthetic context, so tests and
+//! demos don't ship kilobytes of tokens), `generate` (token count, clamped
+//! to the gateway cap), `deadline_ms` (optional).
+
+pub mod http;
+pub mod json;
+pub mod tenant;
+
+use crate::coordinator::kv_cache::pages_for;
+use crate::coordinator::{Request, Response, ServerError};
+use crate::data::corpus;
+use crate::fault::FaultPoint;
+use crate::server::{ScoringServer, ServerStats, StreamEvent};
+use anyhow::{Context, Result};
+use json::Json;
+use std::io;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::Receiver;
+use std::sync::Arc;
+use std::time::Duration;
+use tenant::{TenantGovernor, TenantQuota};
+
+/// How long the gateway waits for a stream's terminal [`Response`] after
+/// the event channel closes. The engine delivers terminals at safe points;
+/// this cap only guards against a wedged coordinator.
+const TERMINAL_WAIT: Duration = Duration::from_secs(30);
+
+/// Gateway tuning. `Default` binds an ephemeral localhost port with
+/// permissive-but-bounded quotas — tests override per scenario.
+#[derive(Debug, Clone)]
+pub struct GatewayConfig {
+    /// Bind address (`"127.0.0.1:0"` = ephemeral port).
+    pub addr: String,
+    /// Per-tenant concurrent-stream quota (0 = unlimited).
+    pub max_in_flight_per_tenant: usize,
+    /// Per-tenant estimated-KV-page quota (0 = unlimited).
+    pub max_kv_pages_per_tenant: usize,
+    /// `Retry-After` hint attached to 429 responses, in milliseconds
+    /// (rounded up to whole seconds on the wire).
+    pub retry_after_ms: u64,
+    /// Request body size cap.
+    pub max_body_bytes: usize,
+    /// Cap on tokens generated per request (the wire `generate` field is
+    /// clamped to this).
+    pub max_generate: usize,
+    /// Vocabulary for server-side `corpus_len` contexts — must stay within
+    /// the substrate model's vocab.
+    pub corpus_vocab: u32,
+}
+
+impl Default for GatewayConfig {
+    fn default() -> GatewayConfig {
+        GatewayConfig {
+            addr: "127.0.0.1:0".into(),
+            max_in_flight_per_tenant: 64,
+            max_kv_pages_per_tenant: 0,
+            retry_after_ms: 1000,
+            max_body_bytes: 1024 * 1024,
+            max_generate: 64,
+            corpus_vocab: 64,
+        }
+    }
+}
+
+/// State shared between the accept loop and per-connection threads.
+struct GwShared {
+    server: ScoringServer,
+    governor: TenantGovernor,
+    cfg: GatewayConfig,
+    next_id: AtomicU64,
+    stop: AtomicBool,
+}
+
+/// A running gateway. Dropping it leaks the accept thread; call
+/// [`Gateway::shutdown`] for an orderly stop.
+pub struct Gateway {
+    addr: SocketAddr,
+    shared: Arc<GwShared>,
+    accept: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Gateway {
+    /// Bind and start serving on top of an already-started server.
+    pub fn start(cfg: GatewayConfig, server: ScoringServer) -> Result<Gateway> {
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("gateway bind {}", cfg.addr))?;
+        let addr = listener.local_addr().context("gateway local_addr")?;
+        let quota = TenantQuota {
+            max_in_flight: cfg.max_in_flight_per_tenant,
+            max_kv_pages: cfg.max_kv_pages_per_tenant,
+        };
+        let shared = Arc::new(GwShared {
+            server,
+            governor: TenantGovernor::new(quota),
+            cfg,
+            next_id: AtomicU64::new(1),
+            stop: AtomicBool::new(false),
+        });
+        let accept_shared = Arc::clone(&shared);
+        let accept = std::thread::spawn(move || accept_loop(&listener, &accept_shared));
+        Ok(Gateway { addr, shared, accept: Some(accept) })
+    }
+
+    /// The bound address (resolves ephemeral ports for clients).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Live server statistics (same snapshot `/v1/stats` serves).
+    pub fn stats(&self) -> ServerStats {
+        self.shared.server.stats()
+    }
+
+    /// Stop accepting, wait for in-flight connections to finish, shut the
+    /// server down, and return its final stats.
+    pub fn shutdown(mut self) -> ServerStats {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        // Unblock the accept loop with a throwaway connection.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(handle) = self.accept.take() {
+            let _ = handle.join();
+        }
+        // Connection threads hold Arc clones; wait for them to drain.
+        let mut shared = self.shared;
+        loop {
+            match Arc::try_unwrap(shared) {
+                Ok(gw) => return gw.server.shutdown(),
+                Err(still_shared) => {
+                    shared = still_shared;
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+            }
+        }
+    }
+}
+
+fn accept_loop(listener: &TcpListener, shared: &Arc<GwShared>) {
+    for stream in listener.incoming() {
+        if shared.stop.load(Ordering::SeqCst) {
+            break;
+        }
+        match stream {
+            Ok(conn) => {
+                let conn_shared = Arc::clone(shared);
+                std::thread::spawn(move || handle_conn(&conn_shared, conn));
+            }
+            Err(e) => {
+                eprintln!("gateway accept error: {e}");
+            }
+        }
+    }
+}
+
+fn handle_conn(shared: &Arc<GwShared>, mut stream: TcpStream) {
+    let request = match http::read_request(&mut stream, shared.cfg.max_body_bytes) {
+        Ok(Some(r)) => r,
+        Ok(None) => return, // clean close before any bytes
+        Err(e) => {
+            let _ = http::write_json_response(
+                &mut stream,
+                400,
+                "Bad Request",
+                &[],
+                &error_body("invalid", &e.to_string()),
+            );
+            return;
+        }
+    };
+    match (request.method.as_str(), request.path.as_str()) {
+        ("POST", "/v1/generate") => handle_generate(shared, stream, &request),
+        ("GET", "/v1/stats") => handle_stats(shared, &mut stream),
+        _ => {
+            let _ = http::write_json_response(
+                &mut stream,
+                404,
+                "Not Found",
+                &[],
+                &error_body("invalid", "unknown route"),
+            );
+        }
+    }
+}
+
+/// `POST /v1/generate`: parse, admit, submit, stream.
+fn handle_generate(shared: &Arc<GwShared>, mut stream: TcpStream, req: &http::HttpRequest) {
+    let parsed = match parse_generate_body(&shared.cfg, &req.body) {
+        Ok(p) => p,
+        Err(message) => {
+            let _ = http::write_json_response(
+                &mut stream,
+                400,
+                "Bad Request",
+                &[],
+                &error_body("invalid", &message),
+            );
+            return;
+        }
+    };
+    let tenant =
+        req.header("x-pallas-tenant").unwrap_or("anon").to_string();
+
+    // Per-tenant admission *before* the request touches the server: an
+    // over-quota tenant is refused at the door with a retry hint, exactly
+    // like a shed-mode Capacity refusal.
+    let pages = pages_for(parsed.tokens.len() + parsed.generate);
+    if let Err(reason) = shared.governor.try_admit(&tenant, pages) {
+        write_429(&mut stream, &shared.cfg, &reason);
+        return;
+    }
+
+    let id = shared.next_id.fetch_add(1, Ordering::Relaxed);
+    let mut request = Request::scoring(id, parsed.tokens).with_tenant(&tenant);
+    request.generate = parsed.generate;
+    if parsed.deadline_ms > 0 {
+        request = request.with_deadline(parsed.deadline_ms);
+    }
+    let (events, terminal) = shared.server.submit_streaming(request);
+    serve_stream(shared, &mut stream, id, &tenant, &events, &terminal);
+    shared.governor.release(&tenant, pages);
+}
+
+struct GenerateParams {
+    tokens: Vec<u32>,
+    generate: usize,
+    deadline_ms: u64,
+}
+
+fn parse_generate_body(cfg: &GatewayConfig, body: &[u8]) -> Result<GenerateParams, String> {
+    let text = std::str::from_utf8(body).map_err(|_| "body is not utf-8".to_string())?;
+    let value = Json::parse(text).map_err(|e| format!("bad JSON: {e}"))?;
+    let tokens: Vec<u32> = if let Some(arr) = value.get("tokens").and_then(Json::as_array) {
+        let mut out = Vec::with_capacity(arr.len());
+        for item in arr {
+            let Some(t) = item.as_usize().filter(|&t| t <= u32::MAX as usize) else {
+                return Err("tokens must be non-negative integers < 2^32".into());
+            };
+            out.push(t as u32);
+        }
+        out
+    } else if let Some(len) = value.get("corpus_len").and_then(Json::as_usize) {
+        let seed =
+            value.get("corpus_seed").and_then(Json::as_usize).unwrap_or(0) as u64;
+        corpus::generate(cfg.corpus_vocab, len, seed)
+    } else {
+        return Err("need \"tokens\" (array) or \"corpus_len\" (int)".into());
+    };
+    if tokens.is_empty() {
+        return Err("empty context".into());
+    }
+    let generate = value
+        .get("generate")
+        .and_then(Json::as_usize)
+        .unwrap_or(8)
+        .clamp(1, cfg.max_generate.max(1));
+    let deadline_ms =
+        value.get("deadline_ms").and_then(Json::as_usize).unwrap_or(0) as u64;
+    Ok(GenerateParams { tokens, generate, deadline_ms })
+}
+
+/// Pump the event channel onto the SSE socket, then deliver the terminal.
+/// Every path consumes the terminal response (or times out trying), so the
+/// engine's exactly-once contract extends to the wire.
+fn serve_stream(
+    shared: &Arc<GwShared>,
+    stream: &mut TcpStream,
+    id: u64,
+    tenant: &str,
+    events: &Receiver<StreamEvent>,
+    terminal: &Receiver<Response>,
+) {
+    let mut headers_written = false;
+    while let Ok(event) = events.recv() {
+        if !headers_written {
+            if http::write_sse_preamble(stream).is_err() {
+                client_gone(shared, id, tenant, events, terminal);
+                return;
+            }
+            headers_written = true;
+        }
+        // Fault hooks: a slow-reading client backs up here (the engine
+        // keeps decoding — events buffer in the channel), and an injected
+        // gateway drop behaves exactly like a failed socket write.
+        crate::fault::maybe_slow(FaultPoint::SlowClient, id);
+        let wrote = if crate::fault::fires(FaultPoint::GatewayDrop, id) {
+            Err(io::Error::new(io::ErrorKind::BrokenPipe, "injected gateway drop"))
+        } else {
+            http::write_sse_event(stream, "token", &token_event(&event))
+        };
+        if wrote.is_err() {
+            client_gone(shared, id, tenant, events, terminal);
+            return;
+        }
+    }
+
+    let response = recv_terminal(terminal, id);
+    // Failures that precede any stream output map to HTTP status codes;
+    // once SSE bytes are on the wire, failures become structured events.
+    match &response.error {
+        Some(ServerError::Capacity(reason)) if !headers_written => {
+            write_429(stream, &shared.cfg, reason);
+        }
+        Some(ServerError::Invalid(reason)) if !headers_written => {
+            let _ = http::write_json_response(
+                stream,
+                400,
+                "Bad Request",
+                &[],
+                &error_body("invalid", reason),
+            );
+        }
+        Some(ServerError::Unsupported(reason)) if !headers_written => {
+            let _ = http::write_json_response(
+                stream,
+                501,
+                "Not Implemented",
+                &[],
+                &error_body("unsupported", reason),
+            );
+        }
+        _ => {
+            if !headers_written && http::write_sse_preamble(stream).is_err() {
+                // Terminal already consumed; the client just never hears it.
+                shared.governor.note_disconnect(tenant);
+                return;
+            }
+            let result = match &response.error {
+                Some(err) => http::write_sse_event(
+                    stream,
+                    "error",
+                    &error_event(&response, err),
+                ),
+                None => http::write_sse_event(stream, "done", &done_event(&response)),
+            };
+            if result.is_err() {
+                shared.governor.note_disconnect(tenant);
+            }
+        }
+    }
+}
+
+/// The client's socket died mid-stream: cancel the request (pages/pins
+/// release at the next safe point), then drain both channels so the
+/// session's terminal is consumed exactly once.
+fn client_gone(
+    shared: &Arc<GwShared>,
+    id: u64,
+    tenant: &str,
+    events: &Receiver<StreamEvent>,
+    terminal: &Receiver<Response>,
+) {
+    shared.server.cancel(id);
+    shared.governor.note_disconnect(tenant);
+    while events.recv().is_ok() {}
+    let _ = recv_terminal(terminal, id);
+}
+
+/// Wait for the terminal response, synthesizing an `Internal` failure if
+/// the coordinator never delivers one (it always should).
+fn recv_terminal(terminal: &Receiver<Response>, id: u64) -> Response {
+    terminal.recv_timeout(TERMINAL_WAIT).unwrap_or_else(|_| {
+        Response::failure(
+            id,
+            0.0,
+            String::new(),
+            ServerError::Internal("stream terminal lost".into()),
+        )
+    })
+}
+
+fn write_429(stream: &mut TcpStream, cfg: &GatewayConfig, reason: &str) {
+    let retry_secs = cfg.retry_after_ms.div_ceil(1000).max(1);
+    let body = json::obj(vec![
+        ("error", json::s("capacity")),
+        ("message", json::s(reason)),
+        ("retry_after_ms", json::n(cfg.retry_after_ms as f64)),
+    ])
+    .dump();
+    let _ = http::write_json_response(
+        stream,
+        429,
+        "Too Many Requests",
+        &[("Retry-After", retry_secs.to_string())],
+        &body,
+    );
+}
+
+fn error_body(class: &str, message: &str) -> String {
+    json::obj(vec![("error", json::s(class)), ("message", json::s(message))]).dump()
+}
+
+/// `token` event payload: this step's tokens plus the running total.
+fn token_event(event: &StreamEvent) -> String {
+    json::obj(vec![
+        ("id", json::n(event.id as f64)),
+        (
+            "tokens",
+            Json::Arr(event.tokens.iter().map(|&t| json::n(t as f64)).collect()),
+        ),
+        ("total", json::n(event.total as f64)),
+    ])
+    .dump()
+}
+
+/// `done` event payload: the terminal [`Response`]'s truthful fields,
+/// including the full token stream for end-to-end verification.
+fn done_event(response: &Response) -> String {
+    json::obj(vec![
+        ("id", json::n(response.id as f64)),
+        ("generated", json::n(response.generated.len() as f64)),
+        (
+            "tokens",
+            Json::Arr(response.generated.iter().map(|&t| json::n(t as f64)).collect()),
+        ),
+        ("spec", json::s(&response.spec)),
+        ("degraded", Json::Bool(response.degraded)),
+        ("kernel", json::s(&response.kernel)),
+        ("decode_steps", json::n(response.decode_steps as f64)),
+        ("decode_ms", json::n(response.decode_ms)),
+        ("latency_ms", json::n(response.latency_ms)),
+        ("ppl", json::n(response.perplexity())),
+    ])
+    .dump()
+}
+
+/// `error` event payload: typed class + message + how far the stream got.
+fn error_event(response: &Response, err: &ServerError) -> String {
+    json::obj(vec![
+        ("id", json::n(response.id as f64)),
+        ("class", json::s(error_class(err))),
+        ("message", json::s(&err.to_string())),
+        ("generated", json::n(response.generated.len() as f64)),
+    ])
+    .dump()
+}
+
+fn error_class(err: &ServerError) -> &'static str {
+    match err {
+        ServerError::Cancelled => "cancelled",
+        ServerError::DeadlineExceeded => "deadline_exceeded",
+        ServerError::Capacity(_) => "capacity",
+        ServerError::Invalid(_) => "invalid",
+        ServerError::Unsupported(_) => "unsupported",
+        ServerError::Internal(_) => "internal",
+    }
+}
+
+/// `GET /v1/stats`: the server snapshot plus gateway admission holdings.
+fn handle_stats(shared: &Arc<GwShared>, stream: &mut TcpStream) {
+    let stats = shared.server.stats();
+    let tenants = Json::Arr(
+        stats
+            .tenants
+            .iter()
+            .map(|t| {
+                json::obj(vec![
+                    ("tenant", json::s(&t.tenant)),
+                    ("requests", json::n(t.requests as f64)),
+                    ("streamed_tokens", json::n(t.streamed_tokens as f64)),
+                    ("sheds", json::n(t.sheds as f64)),
+                    ("cancels", json::n(t.cancels as f64)),
+                ])
+            })
+            .collect(),
+    );
+    let admission = Json::Arr(
+        shared
+            .governor
+            .snapshot()
+            .iter()
+            .map(|a| {
+                json::obj(vec![
+                    ("tenant", json::s(&a.tenant)),
+                    ("in_flight", json::n(a.in_flight as f64)),
+                    ("kv_pages", json::n(a.kv_pages as f64)),
+                    ("disconnects", json::n(a.disconnects as f64)),
+                ])
+            })
+            .collect(),
+    );
+    let body = json::obj(vec![
+        ("completed", json::n(stats.completed as f64)),
+        ("cancelled", json::n(stats.cancelled as f64)),
+        ("expired", json::n(stats.expired as f64)),
+        ("shed_rejects", json::n(stats.shed_rejects as f64)),
+        ("internal_errors", json::n(stats.internal_errors as f64)),
+        ("degraded", json::n(stats.degraded as f64)),
+        ("streamed_tokens", json::n(stats.streamed_tokens as f64)),
+        ("decode_rounds", json::n(stats.decode_rounds as f64)),
+        ("decode_steps", json::n(stats.decode_steps as f64)),
+        ("kv_pages_acquired", json::n(stats.kv_pages_acquired as f64)),
+        ("kv_pages_released", json::n(stats.kv_pages_released as f64)),
+        ("prefix_pins_acquired", json::n(stats.prefix_pins_acquired as f64)),
+        ("prefix_pins_released", json::n(stats.prefix_pins_released as f64)),
+        ("shed_level", json::n(stats.shed_level as f64)),
+        ("workers", json::n(stats.workers as f64)),
+        ("kernel", json::s(&stats.kernel)),
+        ("tenants", tenants),
+        ("admission", admission),
+    ])
+    .dump();
+    let _ = http::write_json_response(stream, 200, "OK", &[], &body);
+}

@@ -1,0 +1,164 @@
+//! Per-tenant admission quotas for the gateway.
+//!
+//! Fair *ordering* lives in the scheduler (deficit-round-robin lanes keyed
+//! by `Request::tenant`); this layer enforces fair *admission*: a tenant
+//! may not hold more than `max_in_flight` streams or `max_kv_pages`
+//! estimated KV pages at once. Over-quota requests are refused at the door
+//! with HTTP 429 + `Retry-After` — before they consume scheduler or KV
+//! resources — so one greedy tenant cannot crowd out the pool.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// Admission limits applied to every tenant (including the anonymous one).
+#[derive(Debug, Clone, Copy)]
+pub struct TenantQuota {
+    /// Concurrent streams a tenant may hold (0 = unlimited).
+    pub max_in_flight: usize,
+    /// Estimated KV pages a tenant's live streams may pin (0 = unlimited).
+    pub max_kv_pages: usize,
+}
+
+/// Live per-tenant holdings.
+#[derive(Debug, Default, Clone)]
+struct TenantLedger {
+    in_flight: usize,
+    kv_pages: usize,
+    /// Client disconnects observed on this tenant's streams (for
+    /// `/v1/stats` visibility; the server's cancel counters are the source
+    /// of truth for the terminal outcome).
+    disconnects: usize,
+}
+
+/// A tenant's admission snapshot for `/v1/stats`.
+#[derive(Debug, Clone)]
+pub struct TenantAdmission {
+    pub tenant: String,
+    pub in_flight: usize,
+    pub kv_pages: usize,
+    pub disconnects: usize,
+}
+
+/// Tracks per-tenant holdings and enforces [`TenantQuota`].
+pub struct TenantGovernor {
+    quota: TenantQuota,
+    state: Mutex<HashMap<String, TenantLedger>>,
+}
+
+impl TenantGovernor {
+    pub fn new(quota: TenantQuota) -> TenantGovernor {
+        TenantGovernor { quota, state: Mutex::new(HashMap::new()) }
+    }
+
+    /// Try to admit one stream holding `pages` estimated KV pages.
+    /// `Err(reason)` means over quota — nothing is charged.
+    pub fn try_admit(&self, tenant: &str, pages: usize) -> Result<(), String> {
+        let mut state = lock_state(&self.state);
+        let ledger = state.entry(tenant.to_string()).or_default();
+        if self.quota.max_in_flight > 0 && ledger.in_flight >= self.quota.max_in_flight {
+            return Err(format!(
+                "tenant '{tenant}' at in-flight quota ({}/{})",
+                ledger.in_flight, self.quota.max_in_flight
+            ));
+        }
+        if self.quota.max_kv_pages > 0 && ledger.kv_pages + pages > self.quota.max_kv_pages {
+            return Err(format!(
+                "tenant '{tenant}' at KV-page quota ({} held + {pages} wanted > {})",
+                ledger.kv_pages, self.quota.max_kv_pages
+            ));
+        }
+        ledger.in_flight += 1;
+        ledger.kv_pages += pages;
+        Ok(())
+    }
+
+    /// Release a stream admitted with `pages` (call exactly once per
+    /// successful `try_admit`, on any terminal outcome).
+    pub fn release(&self, tenant: &str, pages: usize) {
+        let mut state = lock_state(&self.state);
+        let ledger = state.entry(tenant.to_string()).or_default();
+        ledger.in_flight = ledger.in_flight.saturating_sub(1);
+        ledger.kv_pages = ledger.kv_pages.saturating_sub(pages);
+    }
+
+    /// Record a client disconnect on one of this tenant's streams.
+    pub fn note_disconnect(&self, tenant: &str) {
+        lock_state(&self.state).entry(tenant.to_string()).or_default().disconnects += 1;
+    }
+
+    /// Current holdings, sorted by tenant key (deterministic stats output).
+    pub fn snapshot(&self) -> Vec<TenantAdmission> {
+        let state = lock_state(&self.state);
+        let mut rows: Vec<TenantAdmission> = state
+            .iter()
+            .map(|(tenant, l)| TenantAdmission {
+                tenant: tenant.clone(),
+                in_flight: l.in_flight,
+                kv_pages: l.kv_pages,
+                disconnects: l.disconnects,
+            })
+            .collect();
+        rows.sort_by(|a, b| a.tenant.cmp(&b.tenant));
+        rows
+    }
+}
+
+/// Poison-tolerant lock: a panicked holder leaves counters stale, not the
+/// gateway wedged.
+fn lock_state<'a>(
+    m: &'a Mutex<HashMap<String, TenantLedger>>,
+) -> std::sync::MutexGuard<'a, HashMap<String, TenantLedger>> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn in_flight_quota_refuses_then_recovers() {
+        let gov = TenantGovernor::new(TenantQuota { max_in_flight: 2, max_kv_pages: 0 });
+        assert!(gov.try_admit("a", 1).is_ok());
+        assert!(gov.try_admit("a", 1).is_ok());
+        let err = gov.try_admit("a", 1).unwrap_err();
+        assert!(err.contains("in-flight quota"), "{err}");
+        // Another tenant is unaffected.
+        assert!(gov.try_admit("b", 1).is_ok());
+        gov.release("a", 1);
+        assert!(gov.try_admit("a", 1).is_ok());
+    }
+
+    #[test]
+    fn kv_page_quota_counts_pages_not_streams() {
+        let gov = TenantGovernor::new(TenantQuota { max_in_flight: 0, max_kv_pages: 10 });
+        assert!(gov.try_admit("a", 6).is_ok());
+        let err = gov.try_admit("a", 6).unwrap_err();
+        assert!(err.contains("KV-page quota"), "{err}");
+        assert!(gov.try_admit("a", 4).is_ok());
+        gov.release("a", 6);
+        gov.release("a", 4);
+        let snap = gov.snapshot();
+        assert_eq!(snap.len(), 1);
+        assert_eq!((snap[0].in_flight, snap[0].kv_pages), (0, 0));
+    }
+
+    #[test]
+    fn zero_quota_means_unlimited() {
+        let gov = TenantGovernor::new(TenantQuota { max_in_flight: 0, max_kv_pages: 0 });
+        for _ in 0..100 {
+            assert!(gov.try_admit("a", 1000).is_ok());
+        }
+    }
+
+    #[test]
+    fn snapshot_is_sorted_and_tracks_disconnects() {
+        let gov = TenantGovernor::new(TenantQuota { max_in_flight: 0, max_kv_pages: 0 });
+        gov.try_admit("zeta", 1).unwrap();
+        gov.try_admit("alpha", 2).unwrap();
+        gov.note_disconnect("zeta");
+        let snap = gov.snapshot();
+        assert_eq!(snap[0].tenant, "alpha");
+        assert_eq!(snap[1].tenant, "zeta");
+        assert_eq!(snap[1].disconnects, 1);
+    }
+}

@@ -26,6 +26,7 @@ pub mod coordinator;
 pub mod data;
 pub mod exp;
 pub mod fault;
+pub mod gateway;
 pub mod linalg;
 pub mod lsh;
 pub mod metrics;

@@ -26,7 +26,15 @@
 //!   throughput is not gated on the coordinator's batching deadline, and
 //!   the scheduler's starvation bound (observable via
 //!   [`ServerStats::decode_rounds`] and the per-step percentiles) keeps
-//!   decode latency bounded under prefill pressure.
+//!   decode latency bounded under prefill pressure. Decode rounds are
+//!   **worker-split**: the engine mutex is held only for round assembly
+//!   (`prepare_decode`) and result application (`complete_decode`); the
+//!   token steps themselves run lock-free, so rounds on different workers
+//!   overlap instead of serializing behind one engine mutex. Requests are
+//!   scheduled into per-tenant deficit-round-robin lanes
+//!   (`Request::tenant`), and [`ScoringServer::submit_streaming`] delivers
+//!   each step's token as it lands — the [`crate::gateway`] HTTP/SSE front
+//!   door builds on both.
 //!
 //! Worker count: `ServingConfig::executor_workers`, with 0 meaning "derive
 //! from the [`crate::parallel`] pool width" (i.e. `PALLAS_THREADS`), capped
@@ -90,6 +98,23 @@ fn ms_since(t: Instant) -> f64 {
 pub struct Job {
     pub request: Request,
     pub respond: Sender<Response>,
+    /// Per-step token stream for [`ScoringServer::submit_streaming`]
+    /// clients (`None` = unary submit). Dropped at the terminal response.
+    pub stream: Option<Sender<StreamEvent>>,
+}
+
+/// One decode step's incremental output, delivered on the event channel of
+/// [`ScoringServer::submit_streaming`] as the step lands — before the
+/// sequence (or the round) finishes. The terminal [`Response`] still
+/// arrives on the response channel and remains the single source of truth
+/// for served-spec/degraded/error fields.
+#[derive(Debug, Clone)]
+pub struct StreamEvent {
+    pub id: u64,
+    /// Tokens this step produced (currently always one).
+    pub tokens: Vec<u32>,
+    /// Total tokens generated so far, including `tokens`.
+    pub total: usize,
 }
 
 /// Server statistics snapshot.
@@ -156,6 +181,31 @@ pub struct ServerStats {
     pub prefix_pins_released: usize,
     /// Last observed degradation-ladder rung (0 = full quality).
     pub shed_level: usize,
+    /// Tokens produced by decode sessions (streamed to `submit_streaming`
+    /// clients as they land), including the partial output of cancelled /
+    /// expired / faulted sessions.
+    pub streamed_tokens: usize,
+    /// Per-tenant terminal accounting, sorted by tenant key. Balance
+    /// invariant: Σ tenants.requests == completed + cancelled + expired +
+    /// shed_rejects + internal_errors (Invalid/Unsupported refusals are
+    /// counted on neither side).
+    pub tenants: Vec<TenantStats>,
+}
+
+/// Per-tenant slice of the terminal counters (the gateway's fairness and
+/// accounting surface; the empty key is the anonymous tenant).
+#[derive(Debug, Clone, Default)]
+pub struct TenantStats {
+    pub tenant: String,
+    /// Requests that reached a terminal state for this tenant.
+    pub requests: usize,
+    /// Generated tokens streamed for this tenant (partial output included).
+    pub streamed_tokens: usize,
+    /// Capacity refusals (shed rejects + quota rejections surfaced as
+    /// `ServerError::Capacity`).
+    pub sheds: usize,
+    /// Terminal cancellations.
+    pub cancels: usize,
 }
 
 /// Mutable counters shared between the executor workers.
@@ -179,17 +229,52 @@ struct SharedStats {
     worker_panics: usize,
     kv_pages_reclaimed: usize,
     shed_level: usize,
+    streamed_tokens: usize,
+    tenants: HashMap<String, TenantCounters>,
+}
+
+/// Mutable per-tenant counters behind `SharedStats.tenants` (exported as
+/// [`TenantStats`] in snapshots).
+#[derive(Debug, Clone, Default)]
+struct TenantCounters {
+    requests: usize,
+    streamed_tokens: usize,
+    sheds: usize,
+    cancels: usize,
 }
 
 impl SharedStats {
-    /// Account a terminal failure by class (success accounting stays at the
-    /// call sites, which also record latency/tokens).
-    fn record_failure(&mut self, err: &ServerError) {
+    fn tenant_mut(&mut self, tenant: &str) -> &mut TenantCounters {
+        self.tenants.entry(tenant.to_string()).or_default()
+    }
+
+    /// Account a terminal failure by class, globally and on the tenant's
+    /// slice (success accounting stays at the call sites, which also record
+    /// latency/tokens). Every arm that bumps a global terminal counter also
+    /// bumps the tenant's `requests` — the balance invariant on
+    /// [`ServerStats::tenants`] depends on it.
+    fn record_failure(&mut self, tenant: &str, err: &ServerError) {
         match err {
-            ServerError::Cancelled => self.cancelled += 1,
-            ServerError::DeadlineExceeded => self.expired += 1,
-            ServerError::Capacity(_) => self.shed_rejects += 1,
-            ServerError::Internal(_) => self.internal_errors += 1,
+            ServerError::Cancelled => {
+                self.cancelled += 1;
+                let t = self.tenant_mut(tenant);
+                t.requests += 1;
+                t.cancels += 1;
+            }
+            ServerError::DeadlineExceeded => {
+                self.expired += 1;
+                self.tenant_mut(tenant).requests += 1;
+            }
+            ServerError::Capacity(_) => {
+                self.shed_rejects += 1;
+                let t = self.tenant_mut(tenant);
+                t.requests += 1;
+                t.sheds += 1;
+            }
+            ServerError::Internal(_) => {
+                self.internal_errors += 1;
+                self.tenant_mut(tenant).requests += 1;
+            }
             ServerError::Invalid(_) | ServerError::Unsupported(_) => {}
         }
     }
@@ -294,11 +379,19 @@ struct GenSession {
     /// The rung's policy — decode steps run under the spec the request was
     /// truthfully admitted at, not necessarily the configured one.
     policy: Arc<AttnPolicy>,
+    /// Per-step token stream (`submit_streaming`); dropped with the session
+    /// at conclude, which disconnects the event channel.
+    stream: Option<Sender<StreamEvent>>,
+    /// Fairness/accounting key from the request (empty = anonymous).
+    tenant: String,
+    /// Scheduler lane (stable per tenant) this session decodes in.
+    lane: usize,
 }
 
-/// Teardown bookkeeping for a prefill computing outside the engine lock:
-/// enough to answer the client and release every resource if the request is
-/// cancelled, expires, or its worker panics mid-forward.
+/// Teardown bookkeeping for a request computing outside the engine lock
+/// (a prefill forward, or a decode step checked out of `sessions`): enough
+/// to answer the client and release every resource if the request is
+/// cancelled, expires, or its worker panics mid-compute.
 struct InFlightInfo {
     respond: Option<Sender<Response>>,
     arrived: Instant,
@@ -307,6 +400,11 @@ struct InFlightInfo {
     rung: usize,
     cancel: CancelToken,
     deadline: Option<Instant>,
+    /// Event stream to hand to the session once the prefill installs
+    /// (`None` for checked-out decode steps — the session carries its own).
+    stream: Option<Sender<StreamEvent>>,
+    tenant: String,
+    lane: usize,
 }
 
 /// Everything a prefill needs, cloned out of the engine under its lock so
@@ -341,6 +439,39 @@ struct PrefillDone {
     snapshot: Option<(Vec<u32>, PrefixSnapshot)>,
     /// Pinned cache node of the warm hit this prefill branched from.
     cache_pin: Option<usize>,
+}
+
+/// A decode step checked out of the engine for lock-free compute: the
+/// session itself plus the immutable model handle. While a step is out,
+/// `DecodeEngine::checked_out` keeps the teardown bookkeeping.
+struct DecodeStep {
+    id: u64,
+    sess: GenSession,
+    model: Arc<Transformer>,
+    /// Mirror the refreshed selections into the KV manager afterwards?
+    refresh: bool,
+}
+
+/// What one lock-free decode step produced.
+struct StepCompute {
+    finished: bool,
+    /// Step wall time (`None` only on the unreachable empty-slot guard).
+    step_ms: Option<f64>,
+    refresh_snap: Option<Vec<Vec<usize>>>,
+}
+
+enum StepResult {
+    Stepped(StepCompute),
+    Panicked,
+}
+
+/// Phase-2 result handed back to `complete_decode`. The session survives
+/// even a panicked step, so the terminal response still reports its
+/// partial tokens.
+struct DecodeStepDone {
+    id: u64,
+    sess: Option<GenSession>,
+    result: StepResult,
 }
 
 /// Pure-Rust decode engine: prefill once on the transformer substrate, then
@@ -391,6 +522,14 @@ struct DecodeEngine {
     /// fault fires once per request so the reclaim-retry path is exercised
     /// without livelocking the requeue loop.
     faulted_admits: std::collections::HashSet<u64>,
+    /// Sessions checked out of `sessions` while their decode step computes
+    /// outside the engine lock (the worker-split path): enough bookkeeping
+    /// to tear one down from `fail_request` if its worker dies mid-step,
+    /// and what keeps `active()` truthful while the maps are empty.
+    checked_out: HashMap<u64, InFlightInfo>,
+    /// Tenant key → scheduler lane index (first-seen order; the DRR lanes
+    /// give each tenant a fair share of prefill and decode dispatch).
+    tenant_lanes: HashMap<String, usize>,
 }
 
 impl DecodeEngine {
@@ -507,19 +646,36 @@ impl DecodeEngine {
             shed_reject: cfg.shed_mode == "reject",
             cancels,
             faulted_admits: std::collections::HashSet::new(),
+            checked_out: HashMap::new(),
+            tenant_lanes: HashMap::new(),
         }
     }
 
-    /// Anything admitted, mid-prefill, or streaming (work may still be in
-    /// flight even when the scheduler queues are momentarily empty).
+    /// Anything admitted, mid-prefill, streaming, or checked out for a
+    /// lock-free decode step (work may still be in flight even when the
+    /// scheduler queues are momentarily empty).
     fn active(&self) -> bool {
-        !self.pending.is_empty() || !self.in_flight.is_empty() || !self.sessions.is_empty()
+        !self.pending.is_empty()
+            || !self.in_flight.is_empty()
+            || !self.sessions.is_empty()
+            || !self.checked_out.is_empty()
+    }
+
+    /// Stable scheduler lane for a tenant key (created on first sight).
+    fn lane_for(&mut self, tenant: &str) -> usize {
+        if let Some(&lane) = self.tenant_lanes.get(tenant) {
+            return lane;
+        }
+        let lane = self.tenant_lanes.len();
+        self.tenant_lanes.insert(tenant.to_string(), lane);
+        lane
     }
 
     fn admit(&mut self, job: Job) {
         let id = job.request.id;
+        let lane = self.lane_for(&job.request.tenant);
         self.pending.insert(id, job);
-        self.scheduler.submit_prefill(vec![id]);
+        self.scheduler.submit_prefill_for(lane, vec![id]);
     }
 
     fn next_round(&mut self, free_workers: usize) -> Vec<WorkItem> {
@@ -541,11 +697,12 @@ impl DecodeEngine {
         id: u64,
         respond: Sender<Response>,
         arrived: Instant,
+        tenant: &str,
         err: ServerError,
         shared: &Mutex<SharedStats>,
     ) {
         self.cancels.remove(id);
-        plock(shared).record_failure(&err);
+        plock(shared).record_failure(tenant, &err);
         let _ = respond.send(Response::failure(
             id,
             ms_since(arrived),
@@ -572,21 +729,22 @@ impl DecodeEngine {
         let arrived = job.request.arrived;
         let cancel = self.cancels.register(id);
         if cancel.is_cancelled() {
-            let Job { respond, .. } = job;
-            self.refuse(id, respond, arrived, ServerError::Cancelled, shared);
+            let Job { request, respond, .. } = job;
+            self.refuse(id, respond, arrived, &request.tenant, ServerError::Cancelled, shared);
             return None;
         }
         if job.request.expired() {
-            let Job { respond, .. } = job;
-            self.refuse(id, respond, arrived, ServerError::DeadlineExceeded, shared);
+            let Job { request, respond, .. } = job;
+            let err = ServerError::DeadlineExceeded;
+            self.refuse(id, respond, arrived, &request.tenant, err, shared);
             return None;
         }
         let mut tokens = job.request.tokens.clone();
         tokens.truncate(self.model.cfg.max_seq);
         if tokens.is_empty() {
-            let Job { respond, .. } = job;
+            let Job { request, respond, .. } = job;
             let err = ServerError::Invalid("empty token stream".into());
-            self.refuse(id, respond, arrived, err, shared);
+            self.refuse(id, respond, arrived, &request.tenant, err, shared);
             return None;
         }
         // Shedding decision: fold pool occupancy + queue depth into the
@@ -597,11 +755,11 @@ impl DecodeEngine {
         plock(shared).shed_level = rung;
         let need_pages = crate::coordinator::kv_cache::pages_for(tokens.len());
         if need_pages > cap {
-            let Job { respond, .. } = job;
+            let Job { request, respond, .. } = job;
             let err = ServerError::Capacity(format!(
                 "request needs {need_pages} kv pages but the pool holds {cap}"
             ));
-            self.refuse(id, respond, arrived, err, shared);
+            self.refuse(id, respond, arrived, &request.tenant, err, shared);
             return None;
         }
         // Injected `KvAdmit` fault: pretend the reservation failed so the
@@ -623,16 +781,17 @@ impl DecodeEngine {
         }
         if admitted.is_none() {
             if self.shed_reject {
-                let Job { respond, .. } = job;
+                let Job { request, respond, .. } = job;
                 let err = ServerError::Capacity("kv page pool exhausted".into());
-                self.refuse(id, respond, arrived, err, shared);
+                self.refuse(id, respond, arrived, &request.tenant, err, shared);
             } else {
                 // Degrade mode: requeue — pages free as sequences finish,
                 // the scheduler's prefill-priority keeps retrying at the
                 // pump cadence, and the next attempt re-observes the
                 // shedder (likely landing on a deeper rung).
+                let lane = self.lane_for(&job.request.tenant);
                 self.pending.insert(id, job);
-                self.scheduler.submit_prefill(vec![id]);
+                self.scheduler.submit_prefill_for(lane, vec![id]);
             }
             return None;
         }
@@ -653,7 +812,8 @@ impl DecodeEngine {
                 .cache
                 .as_ref()
                 .map_or(false, |c| c.wants_insert(&tokens, cached, full_only));
-        let Job { request, respond } = job;
+        let lane = self.lane_for(&job.request.tenant);
+        let Job { request, respond, stream } = job;
         self.in_flight.insert(
             id,
             InFlightInfo {
@@ -663,6 +823,9 @@ impl DecodeEngine {
                 rung,
                 cancel,
                 deadline: request.deadline(),
+                stream,
+                tenant: request.tenant.clone(),
+                lane,
             },
         );
         Some(PrefillPrep {
@@ -702,7 +865,7 @@ impl DecodeEngine {
                     }
                     self.cancels.remove(id);
                     self.faulted_admits.remove(&id);
-                    plock(shared).record_failure(&err);
+                    plock(shared).record_failure(&info.tenant, &err);
                     if let Some(tx) = respond {
                         let _ = tx.send(Response::failure(
                             id,
@@ -720,6 +883,7 @@ impl DecodeEngine {
                 }
                 self.kv.set_selections(id, Self::selections_snapshot(&sess));
                 plock(shared).prefills += 1;
+                let lane = info.lane;
                 self.sessions.insert(
                     id,
                     GenSession {
@@ -736,9 +900,12 @@ impl DecodeEngine {
                         deadline: info.deadline,
                         rung: info.rung,
                         policy: Arc::clone(&self.rungs[info.rung].policy),
+                        stream: info.stream,
+                        tenant: info.tenant,
+                        lane,
                     },
                 );
-                self.scheduler.submit_decode(id);
+                self.scheduler.submit_decode_for(lane, id);
             }
             Err(e) => {
                 self.kv.evict(id);
@@ -748,7 +915,7 @@ impl DecodeEngine {
                 self.cancels.remove(id);
                 self.faulted_admits.remove(&id);
                 let err = ServerError::Internal(format!("prefill failed: {e:#}"));
-                plock(shared).record_failure(&err);
+                plock(shared).record_failure(&info.tenant, &err);
                 if let Some(tx) = respond {
                     let _ = tx.send(Response::failure(
                         id,
@@ -771,6 +938,28 @@ impl DecodeEngine {
             self.conclude(id, Some(err), shared);
             return;
         }
+        // Checked out for a lock-free decode step when the worker died: the
+        // session itself is gone with the worker's stack, but the teardown
+        // bookkeeping (responder clone, pin, rung) survives here.
+        if let Some(info) = self.checked_out.remove(&id) {
+            self.kv.evict(id);
+            if let (Some(pin), Some(cache)) = (info.pin, self.cache.as_mut()) {
+                cache.release(pin);
+            }
+            self.cancels.remove(id);
+            self.faulted_admits.remove(&id);
+            let err = ServerError::Internal("decode worker panicked".into());
+            plock(shared).record_failure(&info.tenant, &err);
+            if let Some(tx) = info.respond {
+                let _ = tx.send(Response::failure(
+                    id,
+                    ms_since(info.arrived),
+                    self.rungs[info.rung].spec_str.clone(),
+                    err,
+                ));
+            }
+            return;
+        }
         if let Some(info) = self.in_flight.remove(&id) {
             self.kv.evict(id);
             if let (Some(pin), Some(cache)) = (info.pin, self.cache.as_mut()) {
@@ -779,7 +968,7 @@ impl DecodeEngine {
             self.cancels.remove(id);
             self.faulted_admits.remove(&id);
             let err = ServerError::Internal("prefill worker panicked".into());
-            plock(shared).record_failure(&err);
+            plock(shared).record_failure(&info.tenant, &err);
             if let Some(tx) = info.respond {
                 let _ = tx.send(Response::failure(
                     id,
@@ -793,7 +982,7 @@ impl DecodeEngine {
         if let Some(job) = self.pending.remove(&id) {
             self.cancels.remove(id);
             let err = ServerError::Internal("worker panicked before prefill".into());
-            plock(shared).record_failure(&err);
+            plock(shared).record_failure(&job.request.tenant, &err);
             let _ = job.respond.send(Response::failure(
                 id,
                 ms_since(job.request.arrived),
@@ -827,13 +1016,16 @@ impl DecodeEngine {
         }
     }
 
-    /// One decode round: a single token step for each scheduled sequence.
-    /// The between-rounds safe point — cancellation/deadline verdicts land
-    /// here — and the panic boundary: a step that panics (injected or real)
-    /// fails only its own session with a typed error.
-    fn run_decode(&mut self, ids: &[u64], shared: &Mutex<SharedStats>) {
+    /// Phase 1 of a decode round, under the engine lock: observe the
+    /// between-rounds safe point (cancellation/deadline verdicts conclude
+    /// here with every resource released), reserve each survivor's next KV
+    /// slot, and check the sessions out for lock-free compute — the lock is
+    /// held only for this round assembly, so rounds on different workers
+    /// overlap in the compute phase. Checked-out ids park their teardown
+    /// bookkeeping in `checked_out` (see `fail_request`).
+    fn prepare_decode(&mut self, ids: &[u64], shared: &Mutex<SharedStats>) -> Vec<DecodeStep> {
         let max_seq = self.model.cfg.max_seq;
-        let mut step_ms: Vec<f64> = Vec::with_capacity(ids.len());
+        let mut steps = Vec::with_capacity(ids.len());
         for &id in ids {
             let verdict = match self.sessions.get(&id) {
                 None => continue,
@@ -847,22 +1039,67 @@ impl DecodeEngine {
                 self.conclude(id, Some(err), shared);
                 continue;
             }
-            crate::fault::maybe_slow(FaultPoint::SlowDecode, id);
-            match catch_unwind(AssertUnwindSafe(|| self.step_session(id, max_seq))) {
-                Ok((done, ms)) => {
-                    if let Some(ms) = ms {
+            let Some(s) = self.sessions.get(&id) else { continue };
+            if s.generated.len() >= s.target_new || s.sess.pos() >= max_seq {
+                self.conclude(id, None, shared);
+                continue;
+            }
+            if self.kv.append_token(id).is_none() {
+                eprintln!("kv cache exhausted for sequence {id}; finishing early");
+                self.conclude(id, None, shared);
+                continue;
+            }
+            // Same counter state as the pre-split engine: append has run,
+            // the step has not — the refresh lands with this step's result.
+            let refresh = self.manager.needs_refresh(self.kv.steps_since_refresh(id));
+            let Some(sess) = self.sessions.remove(&id) else { continue };
+            self.checked_out.insert(
+                id,
+                InFlightInfo {
+                    respond: sess.respond.clone(),
+                    arrived: sess.arrived,
+                    pin: sess.cache_pin,
+                    rung: sess.rung,
+                    cancel: sess.cancel.clone(),
+                    deadline: sess.deadline,
+                    stream: None,
+                    tenant: sess.tenant.clone(),
+                    lane: sess.lane,
+                },
+            );
+            steps.push(DecodeStep { id, sess, model: Arc::clone(&self.model), refresh });
+        }
+        steps
+    }
+
+    /// Phase 3, back under the lock: reinstall the sessions, mirror any
+    /// refreshed selections into the KV manager, conclude finished and
+    /// panicked sequences, and reschedule the rest into their tenant lanes.
+    fn complete_decode(&mut self, done: Vec<DecodeStepDone>, shared: &Mutex<SharedStats>) {
+        let mut step_ms: Vec<f64> = Vec::with_capacity(done.len());
+        for d in done {
+            self.checked_out.remove(&d.id);
+            let Some(sess) = d.sess else { continue };
+            let lane = sess.lane;
+            self.sessions.insert(d.id, sess);
+            match d.result {
+                StepResult::Stepped(c) => {
+                    if let Some(snap) = c.refresh_snap {
+                        self.kv.set_selections(d.id, snap);
+                    }
+                    if let Some(ms) = c.step_ms {
                         step_ms.push(ms);
                     }
-                    if done {
-                        self.conclude(id, None, shared);
+                    if c.finished {
+                        self.conclude(d.id, None, shared);
                     } else {
-                        self.scheduler.submit_decode(id);
+                        self.scheduler.submit_decode_for(lane, d.id);
                     }
                 }
-                Err(_) => {
+                StepResult::Panicked => {
                     plock(shared).worker_panics += 1;
                     let err = ServerError::Internal("decode step panicked".into());
-                    self.conclude(id, Some(err), shared);
+                    self.conclude(d.id, Some(err), shared);
                 }
             }
         }
@@ -872,40 +1109,6 @@ impl DecodeEngine {
             st.decode_step_latency.record_ms(ms);
             st.decode_steps += 1;
         }
-    }
-
-    /// One token step for `id`. Returns (finished, step wall time). Runs
-    /// inside the round's `catch_unwind`, so a panic here is scoped to this
-    /// session; `conclude` (outside) releases its resources either way.
-    fn step_session(&mut self, id: u64, max_seq: usize) -> (bool, Option<f64>) {
-        let Some(s) = self.sessions.get_mut(&id) else { return (true, None) };
-        if s.generated.len() >= s.target_new || s.sess.pos() >= max_seq {
-            return (true, None);
-        }
-        if self.kv.append_token(id).is_none() {
-            eprintln!("kv cache exhausted for sequence {id}; finishing early");
-            return (true, None);
-        }
-        if crate::fault::fires(FaultPoint::DecodePanic, id) {
-            panic!("injected decode-step panic for request {id}");
-        }
-        let t0 = Instant::now();
-        let token = s.next_token;
-        s.generated.push(token);
-        // The rung's policy, not the engine's base one: degraded sessions
-        // step under the spec they were truthfully admitted at.
-        let row = self.model.decode_token(&mut s.sess, token, &s.policy);
-        s.next_token = argmax_row(&row);
-        let ms = t0.elapsed().as_secs_f64() * 1e3;
-        s.decode_ms += ms;
-        // Keep the cache's selection view fresh at the refresh cadence (the
-        // states refresh themselves; this mirrors the result into the kv
-        // manager's selection sets).
-        if self.manager.needs_refresh(self.kv.steps_since_refresh(id)) {
-            let snap = Self::selections_snapshot(&s.sess);
-            self.kv.set_selections(id, snap);
-        }
-        (s.generated.len() >= s.target_new || s.sess.pos() >= max_seq, Some(ms))
     }
 
     /// Terminal state for a streaming session: release its KV pages and
@@ -926,16 +1129,22 @@ impl DecodeEngine {
         let fallback = s.sess.states().iter().any(|st| st.fallback_used());
         {
             let mut st = plock(shared);
+            // Streamed-token accounting covers partial output too: a
+            // cancelled/expired/faulted session already pushed its tokens
+            // to the stream.
+            st.streamed_tokens += s.generated.len();
+            st.tenant_mut(&s.tenant).streamed_tokens += s.generated.len();
             match &error {
                 None => {
                     st.latency.record(lat);
                     st.completed += 1;
                     st.scored_tokens += s.nll.len() + s.generated.len();
+                    st.tenant_mut(&s.tenant).requests += 1;
                     if s.rung > 0 {
                         st.degraded += 1;
                     }
                 }
-                Some(err) => st.record_failure(err),
+                Some(err) => st.record_failure(&s.tenant, err),
             }
         }
         if let Some(tx) = s.respond {
@@ -958,11 +1167,27 @@ impl DecodeEngine {
     }
 }
 
+/// The shared handles a live stats snapshot reads from: the counter block,
+/// the (optional) engine for KV/prefix accounting, and the static facts
+/// (worker count, kernel, start instant). One copy lives in the server
+/// handle, one in the run loop — `snapshot_stats` works from either side
+/// while the server is serving.
+#[derive(Clone)]
+struct StatsSources {
+    shared: Arc<Mutex<SharedStats>>,
+    engine: Option<Arc<Mutex<DecodeEngine>>>,
+    workers: usize,
+    kernel: String,
+    started: Instant,
+}
+
 /// The scoring server: coordinator thread + executor worker pool.
 pub struct ScoringServer {
     jobs_tx: Sender<Job>,
     /// Request-id → cancel-token map shared with the serving threads.
     cancels: Arc<CancelRegistry>,
+    /// Live-stats handles shared with the run loop ([`ScoringServer::stats`]).
+    stats_src: StatsSources,
     handle: Option<std::thread::JoinHandle<ServerStats>>,
 }
 
@@ -1017,10 +1242,20 @@ impl ScoringServer {
         crate::fault::install_from_env();
         let cancels = Arc::new(CancelRegistry::new());
         let loop_cancels = Arc::clone(&cancels);
+        let engine = model
+            .map(|m| Arc::new(Mutex::new(DecodeEngine::new(m, &cfg, &spec, Arc::clone(&cancels)))));
+        let stats_src = StatsSources {
+            shared: Arc::new(Mutex::new(SharedStats::default())),
+            engine,
+            workers: worker_count(&cfg),
+            kernel: backend.kernel_name().to_string(),
+            started: Instant::now(),
+        };
+        let loop_src = stats_src.clone();
         let handle = std::thread::spawn(move || {
-            run_loop(cfg, buckets, jobs_rx, backend, spec, model, loop_cancels)
+            run_loop(cfg, buckets, jobs_rx, backend, spec, loop_src, loop_cancels)
         });
-        Ok(ScoringServer { jobs_tx, cancels, handle: Some(handle) })
+        Ok(ScoringServer { jobs_tx, cancels, stats_src, handle: Some(handle) })
     }
 
     /// Submit a request; returns the channel the response arrives on. A
@@ -1029,8 +1264,8 @@ impl ScoringServer {
     pub fn submit(&self, request: Request) -> Receiver<Response> {
         let (tx, rx) = channel();
         self.cancels.register(request.id);
-        if let Err(e) = self.jobs_tx.send(Job { request, respond: tx }) {
-            let Job { request, respond } = e.0;
+        if let Err(e) = self.jobs_tx.send(Job { request, respond: tx, stream: None }) {
+            let Job { request, respond, .. } = e.0;
             self.cancels.remove(request.id);
             let _ = respond.send(Response::failure(
                 request.id,
@@ -1040,6 +1275,41 @@ impl ScoringServer {
             ));
         }
         rx
+    }
+
+    /// Submit a generation request with a per-step token stream: a
+    /// [`StreamEvent`] arrives on the first channel as each decode step
+    /// lands (the first one before generation completes), and the terminal
+    /// [`Response`] — success or typed failure, exactly once — arrives on
+    /// the second. The event channel disconnects when the session reaches
+    /// its terminal state, so `recv() == Err` on the event channel means
+    /// the terminal response is available or imminent.
+    pub fn submit_streaming(
+        &self,
+        request: Request,
+    ) -> (Receiver<StreamEvent>, Receiver<Response>) {
+        let (ev_tx, ev_rx) = channel();
+        let (tx, rx) = channel();
+        self.cancels.register(request.id);
+        if let Err(e) = self.jobs_tx.send(Job { request, respond: tx, stream: Some(ev_tx) }) {
+            let Job { request, respond, .. } = e.0;
+            self.cancels.remove(request.id);
+            let _ = respond.send(Response::failure(
+                request.id,
+                ms_since(request.arrived),
+                String::new(),
+                ServerError::Internal("server is shut down".into()),
+            ));
+        }
+        (ev_rx, rx)
+    }
+
+    /// Live statistics snapshot (the gateway's `/v1/stats`). Counters are
+    /// monotone; a snapshot taken mid-flight reflects the work that has
+    /// reached a terminal state so far. The final `shutdown()` stats are
+    /// the same snapshot taken after the queue drains.
+    pub fn stats(&self) -> ServerStats {
+        snapshot_stats(&self.stats_src)
     }
 
     /// Cancel an in-flight request from any thread. The request reaches a
@@ -1147,7 +1417,7 @@ fn run_loop(
     jobs_rx: Receiver<Job>,
     backend: Box<dyn AttentionBackend>,
     spec: AttentionSpec,
-    model: Option<Transformer>,
+    src: StatsSources,
     cancels: Arc<CancelRegistry>,
 ) -> ServerStats {
     let deadline = Duration::from_secs_f64(cfg.batch_deadline_ms / 1e3);
@@ -1164,13 +1434,13 @@ fn run_loop(
     // Canonical spec string for Response::spec on the scoring path (the
     // decode engine reports per-rung strings instead).
     let spec_str = spec.to_string();
-    let engine: Option<Mutex<DecodeEngine>> =
-        model.map(|m| Mutex::new(DecodeEngine::new(m, &cfg, &spec, Arc::clone(&cancels))));
+    // The engine and counter block are shared with the server handle (live
+    // `stats()` snapshots); the run loop borrows through the same Arcs.
+    let engine: Option<&Mutex<DecodeEngine>> = src.engine.as_deref();
+    let shared: &Mutex<SharedStats> = &src.shared;
     let mut responders: HashMap<u64, Sender<Response>> = Default::default();
-    let shared = Mutex::new(SharedStats::default());
-    let workers = worker_count(&cfg);
+    let workers = src.workers;
     let queue = WorkQueue::new();
-    let started = Instant::now();
     // The coordinator blocks on `recv_timeout` instead of sleep-polling:
     // with work queued it sleeps exactly to the oldest request's flush
     // deadline; idle it parks until the next submission (bounded so the
@@ -1182,11 +1452,11 @@ fn run_loop(
     std::thread::scope(|s| {
         for _ in 0..workers {
             let queue = &queue;
-            let shared = &shared;
+            let shared = shared;
             let cfg = &cfg;
             let buckets = &buckets;
             let backend = backend.as_ref();
-            let engine = engine.as_ref();
+            let engine = engine;
             let cancels = &cancels;
             let spec_str = &spec_str;
             s.spawn(move || {
@@ -1207,12 +1477,15 @@ fn run_loop(
                             // responder clone) to fail exactly this batch's
                             // requests if the execution panics; the worker
                             // rejoins the drain loop either way.
-                            let fallback: Vec<(u64, Instant, Option<Sender<Response>>)> = batch
-                                .requests
-                                .iter()
-                                .zip(&responders)
-                                .map(|(r, tx)| (r.id, r.arrived, tx.clone()))
-                                .collect();
+                            let fallback: Vec<(u64, Instant, String, Option<Sender<Response>>)> =
+                                batch
+                                    .requests
+                                    .iter()
+                                    .zip(&responders)
+                                    .map(|(r, tx)| {
+                                        (r.id, r.arrived, r.tenant.clone(), tx.clone())
+                                    })
+                                    .collect();
                             let res = catch_unwind(AssertUnwindSafe(|| {
                                 execute_batch(
                                     cfg,
@@ -1230,9 +1503,12 @@ fn run_loop(
                                 {
                                     let mut st = plock(shared);
                                     st.worker_panics += 1;
-                                    st.internal_errors += fallback.len();
+                                    for (_, _, tenant, _) in &fallback {
+                                        st.internal_errors += 1;
+                                        st.tenant_mut(tenant).requests += 1;
+                                    }
                                 }
-                                for (id, arrived, tx) in fallback {
+                                for (id, arrived, _tenant, tx) in fallback {
                                     cancels.remove(id);
                                     if let Some(tx) = tx {
                                         let _ = tx.send(Response::failure(
@@ -1277,7 +1553,7 @@ fn run_loop(
             });
         }
 
-        let engine_active = || engine.as_ref().map_or(false, |e| plock(e).active());
+        let engine_active = || engine.map_or(false, |e| plock(e).active());
         let mut open = true;
         while open || batcher.queue_len() > 0 || engine_active() {
             // Admit jobs: block until the next flush deadline (or a new
@@ -1291,7 +1567,7 @@ fn run_loop(
                              responders: &mut HashMap<u64, Sender<Response>>,
                              batcher: &mut DynamicBatcher| {
                 if job.request.generate > 0 {
-                    match engine.as_ref() {
+                    match engine {
                         Some(e) => plock(e).admit(job),
                         None => {
                             // Typed failure rather than silently serving a
@@ -1347,7 +1623,7 @@ fn run_loop(
                 }
             }
             // Seed engine rounds (workers keep them flowing afterwards).
-            if let Some(e) = engine.as_ref() {
+            if let Some(e) = engine {
                 let round = plock(e).next_round(workers);
                 for it in round {
                     queue.push(Work::Gen(it));
@@ -1360,19 +1636,43 @@ fn run_loop(
         queue.close();
     });
 
-    // Final prefix-cache accounting + persistence (the engine is exclusively
-    // ours again once the scope has joined every worker). `into_inner` is
-    // poison-tolerant: a caught panic must not cost the final stats.
-    let (prefix, kv_acquired, kv_released) = match engine {
+    // Final prefix-cache persistence + the terminal stats snapshot. The
+    // engine/counter handles stay shared with `ScoringServer::stats`, so
+    // this is the same (lock-based) snapshot a live reader takes — just
+    // after the scope has joined every worker, when the engine is
+    // quiescent.
+    if let Some(e) = engine {
+        plock(e).save_cache();
+    }
+    snapshot_stats(&src)
+}
+
+/// Assemble a [`ServerStats`] from the live handles. Safe to call from any
+/// thread while the server runs: the engine lock is taken and released for
+/// the KV/prefix numbers *before* the counter lock (engine → shared is the
+/// process-wide lock order, and the two are never held together here).
+fn snapshot_stats(src: &StatsSources) -> ServerStats {
+    let (prefix, kv_acquired, kv_released) = match src.engine.as_deref() {
         Some(e) => {
-            let eng = e.into_inner().unwrap_or_else(std::sync::PoisonError::into_inner);
-            eng.save_cache();
+            let eng = plock(e);
             (eng.cache_stats(), eng.kv.pages_acquired(), eng.kv.pages_released())
         }
         None => (CacheStats::default(), 0, 0),
     };
-    let stats = shared.into_inner().unwrap_or_else(std::sync::PoisonError::into_inner);
-    let elapsed = started.elapsed().as_secs_f64().max(1e-9);
+    let elapsed = src.started.elapsed().as_secs_f64().max(1e-9);
+    let stats = plock(&src.shared);
+    let mut tenants: Vec<TenantStats> = stats
+        .tenants
+        .iter()
+        .map(|(tenant, c)| TenantStats {
+            tenant: tenant.clone(),
+            requests: c.requests,
+            streamed_tokens: c.streamed_tokens,
+            sheds: c.sheds,
+            cancels: c.cancels,
+        })
+        .collect();
+    tenants.sort_by(|a, b| a.tenant.cmp(&b.tenant));
     ServerStats {
         completed: stats.completed,
         batches: stats.batches,
@@ -1382,8 +1682,8 @@ fn run_loop(
         latency_p99_ms: stats.latency.percentile(99.0),
         throughput_rps: stats.completed as f64 / elapsed,
         tokens_per_s: stats.scored_tokens as f64 / elapsed,
-        workers,
-        kernel: backend.kernel_name().to_string(),
+        workers: src.workers,
+        kernel: src.kernel.clone(),
         prefills: stats.prefills,
         decode_rounds: stats.decode_rounds,
         decode_steps: stats.decode_steps,
@@ -1408,6 +1708,8 @@ fn run_loop(
         prefix_pins_acquired: prefix.pins_acquired,
         prefix_pins_released: prefix.pins_released,
         shed_level: stats.shed_level,
+        streamed_tokens: stats.streamed_tokens,
+        tenants,
     }
 }
 
@@ -1438,7 +1740,7 @@ fn ship(
             match verdict {
                 Some(err) => {
                     cancels.remove(req.id);
-                    plock(shared).record_failure(&err);
+                    plock(shared).record_failure(&req.tenant, &err);
                     if let Some(tx) = tx {
                         let _ = tx.send(Response::failure(
                             req.id,
@@ -1533,9 +1835,10 @@ fn prefill_compute(prep: PrefillPrep) -> PrefillOutcome {
     PrefillOutcome { id, respond, arrived, generate, result }
 }
 
-/// Execute one engine work item (prefill batch or decode round). Prefills
-/// hold the engine lock only for their admission and installation phases —
-/// the forward runs lock-free between them.
+/// Execute one engine work item (prefill batch or decode round). Both
+/// classes hold the engine lock only for their assembly and installation
+/// phases — the forward / token steps run lock-free between them, so items
+/// on different workers genuinely overlap.
 fn execute_gen(item: WorkItem, engine: &Mutex<DecodeEngine>, shared: &Mutex<SharedStats>) {
     match item {
         WorkItem::Prefill(ids) => {
@@ -1546,7 +1849,60 @@ fn execute_gen(item: WorkItem, engine: &Mutex<DecodeEngine>, shared: &Mutex<Shar
                 plock(engine).complete_prefill(outcome, shared);
             }
         }
-        WorkItem::Decode(ids) => plock(engine).run_decode(&ids, shared),
+        WorkItem::Decode(ids) => run_decode_round(&ids, engine, shared),
+    }
+}
+
+/// One decode round through the three-phase worker-split engine: assemble
+/// under the lock, step every scheduled session lock-free, apply the
+/// results under the lock. Within the round the steps run sequentially on
+/// this worker (matching the pre-split per-round semantics); across
+/// workers, rounds overlap in the middle phase instead of serializing
+/// behind the engine mutex.
+fn run_decode_round(ids: &[u64], engine: &Mutex<DecodeEngine>, shared: &Mutex<SharedStats>) {
+    let steps = plock(engine).prepare_decode(ids, shared);
+    let done: Vec<DecodeStepDone> = steps.into_iter().map(decode_step_compute).collect();
+    plock(engine).complete_decode(done, shared);
+}
+
+/// Phase 2 of a decode round: one token step, WITHOUT the engine lock.
+/// Panics (injected or real) are caught per step; the session survives
+/// with its partial tokens for the terminal response. Streaming clients
+/// get their `StreamEvent` here, as the step lands.
+fn decode_step_compute(step: DecodeStep) -> DecodeStepDone {
+    let DecodeStep { id, sess, model, refresh } = step;
+    crate::fault::maybe_slow(FaultPoint::SlowDecode, id);
+    let mut slot = Some(sess);
+    let result = catch_unwind(AssertUnwindSafe(|| {
+        let Some(s) = slot.as_mut() else {
+            return StepCompute { finished: true, step_ms: None, refresh_snap: None };
+        };
+        if crate::fault::fires(FaultPoint::DecodePanic, id) {
+            panic!("injected decode-step panic for request {id}");
+        }
+        let t0 = Instant::now();
+        let token = s.next_token;
+        s.generated.push(token);
+        // The rung's policy, not the engine's base one: degraded sessions
+        // step under the spec they were truthfully admitted at.
+        let row = model.decode_token(&mut s.sess, token, &s.policy);
+        s.next_token = argmax_row(&row);
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        s.decode_ms += ms;
+        if let Some(tx) = &s.stream {
+            let _ = tx.send(StreamEvent { id, tokens: vec![token], total: s.generated.len() });
+        }
+        let finished =
+            s.generated.len() >= s.target_new || s.sess.pos() >= model.cfg.max_seq;
+        // Keep the cache's selection view fresh at the refresh cadence (the
+        // states refresh themselves; complete_decode mirrors this snapshot
+        // into the kv manager's selection sets).
+        let refresh_snap = refresh.then(|| DecodeEngine::selections_snapshot(&s.sess));
+        StepCompute { finished, step_ms: Some(ms), refresh_snap }
+    }));
+    match result {
+        Ok(c) => DecodeStepDone { id, sess: slot, result: StepResult::Stepped(c) },
+        Err(_) => DecodeStepDone { id, sess: slot, result: StepResult::Panicked },
     }
 }
 
@@ -1579,7 +1935,13 @@ fn execute_batch(
                 ),
                 None => {
                     let msg = format!("artifact load failed: {e:#}");
-                    plock(shared).internal_errors += batch.requests.len();
+                    {
+                        let mut st = plock(shared);
+                        for req in &batch.requests {
+                            st.internal_errors += 1;
+                            st.tenant_mut(&req.tenant).requests += 1;
+                        }
+                    }
                     for (req, tx) in batch.requests.iter().zip(&responders) {
                         cancels.remove(req.id);
                         if let Some(tx) = tx {
@@ -1628,6 +1990,7 @@ fn execute_batch(
                     stats.latency.record(lat);
                     stats.completed += 1;
                     stats.scored_tokens += valid;
+                    stats.tenant_mut(&req.tenant).requests += 1;
                     // Real per-request stats from the backend this server is
                     // configured to serve (start() gates explicit specs
                     // against the artifact variant's family and key budget):
@@ -1656,7 +2019,13 @@ fn execute_batch(
         }
         Err(e) => {
             let msg = format!("artifact execution failed: {e:#}");
-            plock(shared).internal_errors += batch.requests.len();
+            {
+                let mut st = plock(shared);
+                for req in &batch.requests {
+                    st.internal_errors += 1;
+                    st.tenant_mut(&req.tenant).requests += 1;
+                }
+            }
             for (req, tx) in batch.requests.iter().zip(&responders) {
                 cancels.remove(req.id);
                 if let Some(tx) = tx {
@@ -1716,6 +2085,7 @@ fn substrate_score(
             stats.latency.record(lat);
             stats.completed += 1;
             stats.scored_tokens += results[i].len();
+            stats.tenant_mut(&req.tenant).requests += 1;
             let attn = backend.plan(req.tokens.len());
             let _ = tx.send(Response {
                 id: req.id,

@@ -5,10 +5,13 @@
 //! and the cached-selection (periodic-refresh) serving semantics.
 
 use prescored::attention::{AttentionInputs, AttentionSpec, AttnPolicy};
+use prescored::config::ServingConfig;
+use prescored::coordinator::Request;
 use prescored::data::corpus;
 use prescored::linalg::Matrix;
 use prescored::model::{Transformer, TransformerConfig};
 use prescored::parallel::{self, with_threads};
+use prescored::server::ScoringServer;
 use prescored::util::rng::Rng;
 
 const SALT: u64 = 5;
@@ -399,4 +402,75 @@ fn transformer_greedy_generation_is_deterministic() {
         let clipped = model.generate_greedy(&long, 16, &policy).unwrap();
         assert_eq!(clipped.len(), 2, "62 + 2 = max_seq");
     });
+}
+
+/// Satellite: the worker-split decode engine (rounds assembled under the
+/// engine mutex, token steps computed lock-free on executor workers, with
+/// rounds on different workers overlapping) produces token streams bitwise
+/// identical to the single-mutex path at executor widths 1/2/4. Width 1 IS
+/// the single-mutex schedule — one worker serializes every round — so
+/// equality across widths, and against the model-level greedy reference,
+/// pins the refactor to the PR 6 semantics.
+#[test]
+fn worker_split_decode_bitwise_identical_across_widths() {
+    let spec = "prescored:kmeans,top_k=12,block=16,sample=4";
+    let policy = AttnPolicy::parse(spec).unwrap();
+    let reference = Transformer::random(
+        TransformerConfig { vocab: 64, d_model: 32, n_layers: 2, n_heads: 2, max_seq: 64 },
+        60,
+    );
+    let n_req = 6u64;
+    let n_new = 10usize;
+    let contexts: Vec<Vec<u32>> =
+        (0..n_req).map(|i| corpus::generate(64, 18 + (i as usize * 5) % 14, 900 + i)).collect();
+    let expected: Vec<Vec<u32>> = contexts
+        .iter()
+        .map(|t| reference.generate_greedy(t, n_new, &policy).expect("greedy reference"))
+        .collect();
+
+    let mut streams_by_width = Vec::new();
+    for &width in &[1usize, 2, 4] {
+        let model = Transformer::random(
+            TransformerConfig { vocab: 64, d_model: 32, n_layers: 2, n_heads: 2, max_seq: 64 },
+            60,
+        );
+        let cfg = ServingConfig {
+            artifacts_dir: "/nonexistent-artifacts".into(),
+            variant: "exact".into(),
+            max_seq: 64,
+            attention_spec: spec.into(),
+            executor_workers: width,
+            ..Default::default()
+        };
+        let server = ScoringServer::start_with_model(cfg, model).expect("start");
+        let rxs: Vec<_> = contexts
+            .iter()
+            .enumerate()
+            .map(|(i, tokens)| {
+                let mut req = Request::scoring(i as u64, tokens.clone());
+                req.generate = n_new;
+                server.submit(req)
+            })
+            .collect();
+        let mut streams = Vec::new();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let resp = rx.recv().expect("response");
+            assert!(resp.error.is_none(), "width {width} request {i}: {:?}", resp.error);
+            assert_eq!(resp.decode_steps, n_new, "width {width} request {i}");
+            streams.push(resp.generated);
+        }
+        let stats = server.shutdown();
+        assert_eq!(stats.completed, n_req as usize, "width {width}");
+        assert_eq!(
+            stats.kv_pages_acquired, stats.kv_pages_released,
+            "width {width}: worker-split rounds must balance page accounting"
+        );
+        assert_eq!(
+            streams, expected,
+            "width {width}: worker-split decode diverged from the greedy reference"
+        );
+        streams_by_width.push(streams);
+    }
+    assert_eq!(streams_by_width[0], streams_by_width[1], "widths 1 and 2 disagree");
+    assert_eq!(streams_by_width[0], streams_by_width[2], "widths 1 and 4 disagree");
 }

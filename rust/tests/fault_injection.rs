@@ -17,9 +17,14 @@ use prescored::config::ServingConfig;
 use prescored::coordinator::{Request, ServerError};
 use prescored::data::corpus;
 use prescored::fault::{self, FaultPlan, FaultPoint};
+use prescored::gateway::{Gateway, GatewayConfig};
 use prescored::model::{Transformer, TransformerConfig};
 use prescored::server::ScoringServer;
-use std::sync::Mutex;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 static GUARD: Mutex<()> = Mutex::new(());
 
@@ -321,4 +326,151 @@ fn chaos_env_schedule() {
     );
     assert_eq!(stats.kv_pages_acquired, stats.kv_pages_released, "no leaked KV pages");
     assert_eq!(stats.prefix_pins_acquired, stats.prefix_pins_released, "no leaked pins");
+}
+
+/// POST a generate request to the gateway and read the whole SSE response
+/// to EOF (the gateway closes the socket after the terminal event). The
+/// raw text is enough to see which terminal the stream reached.
+fn gw_generate(addr: SocketAddr, tokens: &[u32], generate: usize) -> String {
+    let body = format!("{{\"tokens\": {tokens:?}, \"generate\": {generate}}}");
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream.set_read_timeout(Some(Duration::from_secs(30))).expect("timeout");
+    stream
+        .write_all(
+            format!(
+                "POST /v1/generate HTTP/1.1\r\nHost: gw\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n{body}",
+                body.len()
+            )
+            .as_bytes(),
+        )
+        .expect("write request");
+    let mut raw = Vec::new();
+    let _ = stream.read_to_end(&mut raw);
+    String::from_utf8_lossy(&raw).into_owned()
+}
+
+fn start_gateway(cfg: ServingConfig, seed: u64) -> Gateway {
+    let server = ScoringServer::start_with_model(cfg, tiny_model(seed)).expect("server start");
+    Gateway::start(GatewayConfig::default(), server).expect("gateway start")
+}
+
+/// Injected mid-stream socket drops (`GatewayDrop`): the schedule's victims
+/// behave exactly like clients whose connection died — the gateway cancels
+/// them, their KV pages and prefix pins release, and the spared streams
+/// run to a clean `done` event (a dropped stream never stalls the decode
+/// rounds the survivors share).
+#[test]
+fn chaos_gateway_drops_release_pages_and_never_stall() {
+    let _g = GUARD.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    let mut plan = FaultPlan::new(606)
+        .with_rate(FaultPoint::GatewayDrop, 500)
+        .with_rate(FaultPoint::SlowDecode, 1000);
+    plan.slow_ms = 10; // keep victims in flight past their injected drop
+    let _fault = arm(plan.clone());
+
+    let n_req = 6u64;
+    let n_new = 8usize;
+    // Gateway request ids are 1..=n_req (assignment order is racy under
+    // concurrent clients, but the id *set* is fixed, so counts are exact).
+    let n_dropped =
+        (1..=n_req).filter(|&id| plan.would_fire(FaultPoint::GatewayDrop, id)).count();
+    assert!(n_dropped > 0, "seed 606 must drop at least one stream");
+    assert!(n_dropped < n_req as usize, "…and spare at least one");
+
+    let mut cfg = chaos_cfg();
+    no_shedding(&mut cfg);
+    cfg.executor_workers = 2;
+    let gw = start_gateway(cfg, 46);
+    let addr = gw.addr();
+
+    let clients: Vec<_> = (0..n_req)
+        .map(|i| {
+            let tokens = corpus::generate(64, 18 + (i as usize * 3) % 10, 700 + i);
+            std::thread::spawn(move || gw_generate(addr, &tokens, n_new))
+        })
+        .collect();
+    let mut done_streams = 0usize;
+    for client in clients {
+        let raw = client.join().expect("client thread");
+        assert!(raw.starts_with("HTTP/1.1 200"), "every stream starts: {raw:.40}");
+        assert!(!raw.contains("event: error"), "drops cancel silently, not as errors");
+        if raw.contains("event: done") {
+            done_streams += 1;
+        }
+    }
+    assert_eq!(done_streams, n_req as usize - n_dropped, "spared streams all finish");
+
+    let stats = gw.shutdown();
+    assert_eq!(stats.completed, n_req as usize - n_dropped);
+    assert_eq!(stats.cancelled, n_dropped, "every injected drop became a cancel");
+    assert_eq!(stats.worker_panics, 0);
+    assert!(
+        stats.streamed_tokens < n_req as usize * n_new,
+        "dropped streams stop early ({} tokens)",
+        stats.streamed_tokens
+    );
+    assert_eq!(
+        stats.kv_pages_acquired, stats.kv_pages_released,
+        "dropped streams must not leak KV pages"
+    );
+    assert_eq!(stats.prefix_pins_acquired, stats.prefix_pins_released);
+    assert_eq!(stats.tenants.len(), 1, "all streams ran as the anonymous tenant");
+    assert_eq!(stats.tenants[0].cancels, n_dropped);
+}
+
+/// Slow client reads (`SlowClient`): SSE writes sleep, but decode never
+/// waits on them — events buffer in the per-stream channel, so the engine
+/// finishes every session while the slowed sockets are still draining.
+#[test]
+fn chaos_slow_clients_never_stall_decode() {
+    let _g = GUARD.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    let mut plan = FaultPlan::new(707).with_rate(FaultPoint::SlowClient, 1000);
+    plan.slow_ms = 30; // ≥ 240 ms of wire time per stream
+    let _fault = arm(plan);
+
+    let mut cfg = chaos_cfg();
+    no_shedding(&mut cfg);
+    cfg.executor_workers = 2;
+    let gw = start_gateway(cfg, 47);
+    let addr = gw.addr();
+
+    let n_req = 4u64;
+    let n_new = 8usize;
+    let drained = Arc::new(AtomicUsize::new(0));
+    let clients: Vec<_> = (0..n_req)
+        .map(|i| {
+            let tokens = corpus::generate(64, 18 + (i as usize * 5) % 12, 800 + i);
+            let drained = Arc::clone(&drained);
+            std::thread::spawn(move || {
+                let raw = gw_generate(addr, &tokens, n_new);
+                drained.fetch_add(1, Ordering::SeqCst);
+                raw
+            })
+        })
+        .collect();
+
+    // The engine must reach every terminal while the slowed sockets are
+    // still streaming: that is the "decode never waits on a client read"
+    // claim, observed rather than assumed.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while gw.stats().completed < n_req as usize {
+        assert!(Instant::now() < deadline, "decode stalled behind slow clients");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert!(
+        drained.load(Ordering::SeqCst) < n_req as usize,
+        "decode outpaced the slowed wire: sessions finished with clients mid-drain"
+    );
+
+    for client in clients {
+        let raw = client.join().expect("client thread");
+        assert!(raw.contains("event: done"), "slow readers still get a clean done: {raw:.60}");
+        assert!(!raw.contains("event: error"));
+    }
+    let stats = gw.shutdown();
+    assert_eq!(stats.completed, n_req as usize);
+    assert_eq!(stats.cancelled, 0);
+    assert_eq!(stats.streamed_tokens, n_req as usize * n_new);
+    assert_eq!(stats.kv_pages_acquired, stats.kv_pages_released);
+    assert_eq!(stats.prefix_pins_acquired, stats.prefix_pins_released);
 }

@@ -1,0 +1,544 @@
+//! Wire-semantics tests for the HTTP/SSE gateway: real TCP clients against
+//! a real [`Gateway`] on an ephemeral port.
+//!
+//! The contract under test is the wire projection of the serving stack's
+//! failure model: tokens stream incrementally (first event before the
+//! generation completes), a client disconnect cancels the request with
+//! balanced KV/pin accounting, a wire deadline produces a structured
+//! `deadline_exceeded` event carrying the truthful partial output, refusals
+//! (tenant quota at the gateway door, `Capacity` from the server) map to
+//! HTTP 429 + `Retry-After`, and two tenants at 2× offered load both make
+//! progress through the scheduler's deficit-round-robin lanes.
+
+use prescored::attention::AttnPolicy;
+use prescored::config::ServingConfig;
+use prescored::data::corpus;
+use prescored::fault::{self, FaultPlan, FaultPoint};
+use prescored::gateway::json::Json;
+use prescored::gateway::{Gateway, GatewayConfig};
+use prescored::model::{Transformer, TransformerConfig};
+use prescored::server::ScoringServer;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+static GUARD: Mutex<()> = Mutex::new(());
+
+struct FaultGuard;
+
+impl Drop for FaultGuard {
+    fn drop(&mut self) {
+        fault::clear();
+    }
+}
+
+/// Stretch decode steps so streams stay in flight long enough for the wire
+/// races (disconnect, deadline, quota contention) to be deterministic.
+fn slow_decode(ms: u64) -> FaultGuard {
+    let mut plan = FaultPlan::new(0).with_rate(FaultPoint::SlowDecode, 1000);
+    plan.slow_ms = ms;
+    fault::install(plan);
+    FaultGuard
+}
+
+fn tiny_model(seed: u64) -> Transformer {
+    let tcfg =
+        TransformerConfig { vocab: 64, d_model: 32, n_layers: 2, n_heads: 2, max_seq: 64 };
+    Transformer::random(tcfg, seed)
+}
+
+const SPEC: &str = "prescored:kmeans,top_k=12,block=16,sample=4";
+
+fn substrate_cfg() -> ServingConfig {
+    ServingConfig {
+        artifacts_dir: "/nonexistent-artifacts".into(),
+        variant: "exact".into(),
+        max_seq: 64,
+        attention_spec: SPEC.into(),
+        ..Default::default()
+    }
+}
+
+fn start_gateway(cfg: ServingConfig, gw_cfg: GatewayConfig, seed: u64) -> Gateway {
+    let server = ScoringServer::start_with_model(cfg, tiny_model(seed)).expect("server start");
+    Gateway::start(gw_cfg, server).expect("gateway start")
+}
+
+/// A hand-rolled SSE client over a blocking socket.
+struct SseClient {
+    stream: TcpStream,
+    buf: Vec<u8>,
+}
+
+impl SseClient {
+    /// POST `/v1/generate` and return the client with the request on the
+    /// wire (headers not yet read).
+    fn post_generate(addr: SocketAddr, body: &str, tenant: Option<&str>) -> SseClient {
+        let stream = TcpStream::connect(addr).expect("connect");
+        stream.set_read_timeout(Some(Duration::from_secs(30))).expect("timeout");
+        let mut head = format!(
+            "POST /v1/generate HTTP/1.1\r\nHost: gw\r\nContent-Type: application/json\r\nContent-Length: {}\r\n",
+            body.len()
+        );
+        if let Some(t) = tenant {
+            head.push_str(&format!("X-Pallas-Tenant: {t}\r\n"));
+        }
+        head.push_str("\r\n");
+        let mut client = SseClient { stream, buf: Vec::new() };
+        client.stream.write_all(head.as_bytes()).expect("write head");
+        client.stream.write_all(body.as_bytes()).expect("write body");
+        client
+    }
+
+    fn fill(&mut self) -> usize {
+        let mut tmp = [0u8; 4096];
+        match self.stream.read(&mut tmp) {
+            Ok(n) => {
+                self.buf.extend_from_slice(&tmp[..n]);
+                n
+            }
+            Err(_) => 0,
+        }
+    }
+
+    fn find(&self, delim: &[u8]) -> Option<usize> {
+        self.buf.windows(delim.len()).position(|w| w == delim)
+    }
+
+    /// Read the HTTP status line + headers; returns (status, raw headers).
+    fn read_headers(&mut self) -> (u16, String) {
+        loop {
+            if let Some(idx) = self.find(b"\r\n\r\n") {
+                let head = String::from_utf8(self.buf[..idx].to_vec()).expect("utf8 headers");
+                self.buf.drain(..idx + 4);
+                let status: u16 = head
+                    .split_whitespace()
+                    .nth(1)
+                    .and_then(|s| s.parse().ok())
+                    .unwrap_or_else(|| panic!("bad status line in {head:?}"));
+                return (status, head);
+            }
+            assert!(self.fill() > 0, "connection closed before headers completed");
+        }
+    }
+
+    /// Next SSE event as (name, parsed data); `None` at stream end.
+    fn next_event(&mut self) -> Option<(String, Json)> {
+        loop {
+            if let Some(idx) = self.find(b"\n\n") {
+                let chunk = String::from_utf8(self.buf[..idx].to_vec()).expect("utf8 event");
+                self.buf.drain(..idx + 2);
+                let mut name = String::new();
+                let mut data = String::new();
+                for line in chunk.lines() {
+                    if let Some(v) = line.strip_prefix("event: ") {
+                        name = v.to_string();
+                    } else if let Some(v) = line.strip_prefix("data: ") {
+                        data = v.to_string();
+                    }
+                }
+                return Some((name, Json::parse(&data).expect("event payload parses")));
+            }
+            if self.fill() == 0 {
+                return None;
+            }
+        }
+    }
+}
+
+/// Blocking GET; returns (status, raw headers, body text).
+fn http_get(addr: SocketAddr, path: &str) -> (u16, String, String) {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream.set_read_timeout(Some(Duration::from_secs(30))).expect("timeout");
+    stream
+        .write_all(format!("GET {path} HTTP/1.1\r\nHost: gw\r\n\r\n").as_bytes())
+        .expect("write");
+    let mut raw = Vec::new();
+    let _ = stream.read_to_end(&mut raw);
+    let text = String::from_utf8(raw).expect("utf8 response");
+    let (head, body) = text.split_once("\r\n\r\n").expect("header/body split");
+    let status: u16 =
+        head.split_whitespace().nth(1).and_then(|s| s.parse().ok()).expect("status");
+    (status, head.to_string(), body.to_string())
+}
+
+fn event_tokens(data: &Json) -> Vec<u32> {
+    data.get("tokens")
+        .and_then(Json::as_array)
+        .expect("tokens array")
+        .iter()
+        .map(|t| t.as_usize().expect("token int") as u32)
+        .collect()
+}
+
+fn body_json(tokens: &[u32], generate: usize) -> String {
+    format!("{{\"tokens\": {tokens:?}, \"generate\": {generate}}}")
+}
+
+/// Wait until `pred(stats)` holds (the engine reaches terminals at safe
+/// points, so wire-observed outcomes land asynchronously).
+fn wait_for(gw: &Gateway, what: &str, pred: impl Fn(&prescored::server::ServerStats) -> bool) {
+    let deadline = Instant::now() + Duration::from_secs(15);
+    while Instant::now() < deadline {
+        if pred(&gw.stats()) {
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    panic!("timed out waiting for {what}");
+}
+
+/// Acceptance-criteria core: tokens arrive incrementally over SSE (first
+/// event observed while the generation is still in flight), the stream is
+/// bitwise identical to the in-process greedy reference, and the terminal
+/// `done` event reports the truthful served spec.
+#[test]
+fn sse_stream_delivers_tokens_incrementally_and_done() {
+    let _g = GUARD.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    let _f = slow_decode(10);
+    let policy = AttnPolicy::parse(SPEC).expect("policy");
+    let reference = tiny_model(70);
+    let mut cfg = substrate_cfg();
+    cfg.executor_workers = 2;
+    let gw = start_gateway(cfg, GatewayConfig::default(), 70);
+
+    let n_new = 8usize;
+    let tokens = corpus::generate(64, 24, 7);
+    let expected = reference.generate_greedy(&tokens, n_new, &policy).expect("reference");
+
+    let mut sse = SseClient::post_generate(gw.addr(), &body_json(&tokens, n_new), None);
+    let (status, _) = sse.read_headers();
+    assert_eq!(status, 200);
+
+    let (name, first) = sse.next_event().expect("first event");
+    assert_eq!(name, "token", "first event is a token event");
+    // Incremental delivery: the first event is on the wire while the
+    // remaining (slowed) decode steps are still pending.
+    assert_eq!(
+        gw.stats().completed,
+        0,
+        "first token event must arrive before the generation completes"
+    );
+
+    let mut streamed = event_tokens(&first);
+    let mut token_events = 1usize;
+    let mut done: Option<Json> = None;
+    while let Some((name, data)) = sse.next_event() {
+        match name.as_str() {
+            "token" => {
+                token_events += 1;
+                streamed.extend(event_tokens(&data));
+            }
+            "done" => {
+                done = Some(data);
+                break;
+            }
+            other => panic!("unexpected event '{other}'"),
+        }
+    }
+    let done = done.expect("done event");
+    assert_eq!(token_events, n_new, "one token event per decode step");
+    assert_eq!(streamed, expected, "streamed tokens are bitwise the greedy reference");
+    assert_eq!(event_tokens(&done), expected, "done event repeats the full stream");
+    assert_eq!(done.get("generated").and_then(Json::as_usize), Some(n_new));
+    let served_spec = done.get("spec").and_then(Json::as_str).expect("spec field");
+    assert!(
+        served_spec.starts_with("prescored:") && served_spec.contains("top_k=12"),
+        "truthful served spec (canonical form): {served_spec}"
+    );
+    assert_eq!(done.get("degraded").and_then(Json::as_bool), Some(false));
+    assert!(sse.next_event().is_none(), "stream closes after the terminal event");
+
+    let stats = gw.shutdown();
+    assert_eq!(stats.completed, 1);
+    assert_eq!(stats.streamed_tokens, n_new);
+    assert_eq!(stats.kv_pages_acquired, stats.kv_pages_released);
+    assert_eq!(stats.tenants.len(), 1);
+    assert_eq!(stats.tenants[0].tenant, "anon");
+    assert_eq!(stats.tenants[0].requests, 1);
+    assert_eq!(stats.tenants[0].streamed_tokens, n_new);
+}
+
+/// Acceptance-criteria core: a client that disconnects mid-stream turns
+/// into `ScoringServer::cancel` — the request reaches a terminal Cancelled
+/// state and every KV page and prefix pin is released.
+#[test]
+fn disconnect_mid_stream_cancels_with_balanced_accounting() {
+    let _g = GUARD.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    let _f = slow_decode(15);
+    let mut cfg = substrate_cfg();
+    cfg.executor_workers = 2;
+    let gw = start_gateway(cfg, GatewayConfig::default(), 71);
+
+    let n_new = 32usize;
+    let tokens = corpus::generate(64, 20, 9);
+    let mut sse = SseClient::post_generate(gw.addr(), &body_json(&tokens, n_new), Some("acme"));
+    let (status, _) = sse.read_headers();
+    assert_eq!(status, 200);
+    for _ in 0..2 {
+        let (name, _) = sse.next_event().expect("early token event");
+        assert_eq!(name, "token");
+    }
+    drop(sse); // closes the socket mid-stream
+
+    // The gateway notices on its next SSE write and cancels; the engine
+    // reaches the Cancelled terminal at its next safe point.
+    wait_for(&gw, "disconnect-driven cancellation", |s| s.cancelled == 1);
+
+    let stats = gw.shutdown();
+    assert_eq!(stats.cancelled, 1);
+    assert_eq!(stats.completed, 0);
+    assert!(
+        stats.streamed_tokens < n_new,
+        "cancel must land before the stream completes ({} tokens)",
+        stats.streamed_tokens
+    );
+    assert_eq!(
+        stats.kv_pages_acquired, stats.kv_pages_released,
+        "dropped stream must not leak KV pages"
+    );
+    assert_eq!(stats.prefix_pins_acquired, stats.prefix_pins_released);
+    assert_eq!(stats.tenants.len(), 1);
+    assert_eq!(stats.tenants[0].tenant, "acme");
+    assert_eq!(stats.tenants[0].requests, 1);
+    assert_eq!(stats.tenants[0].cancels, 1);
+}
+
+/// A wire `deadline_ms` rides `Request::with_deadline`: the stream delivers
+/// whatever was generated before expiry, then a structured
+/// `deadline_exceeded` error event whose `generated` count matches the
+/// token events on the wire.
+#[test]
+fn wire_deadline_produces_error_event_with_partial_tokens() {
+    let _g = GUARD.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    let _f = slow_decode(30);
+    let mut cfg = substrate_cfg();
+    cfg.executor_workers = 1;
+    let gw = start_gateway(cfg, GatewayConfig::default(), 72);
+
+    let n_new = 32usize;
+    let tokens = corpus::generate(64, 20, 11);
+    let body = format!(
+        "{{\"tokens\": {tokens:?}, \"generate\": {n_new}, \"deadline_ms\": 150}}"
+    );
+    let mut sse = SseClient::post_generate(gw.addr(), &body, None);
+    let (status, _) = sse.read_headers();
+    assert_eq!(status, 200);
+
+    let mut token_events = 0usize;
+    let mut error: Option<Json> = None;
+    while let Some((name, data)) = sse.next_event() {
+        match name.as_str() {
+            "token" => token_events += 1,
+            "error" => {
+                error = Some(data);
+                break;
+            }
+            other => panic!("unexpected event '{other}'"),
+        }
+    }
+    let error = error.expect("error event");
+    assert_eq!(error.get("class").and_then(Json::as_str), Some("deadline_exceeded"));
+    let generated = error.get("generated").and_then(Json::as_usize).expect("generated");
+    assert!(generated < n_new, "deadline must cut the stream short");
+    assert_eq!(generated, token_events, "partial output on the wire is truthful");
+
+    let stats = gw.shutdown();
+    assert_eq!(stats.expired, 1);
+    assert_eq!(stats.kv_pages_acquired, stats.kv_pages_released);
+}
+
+/// Refusals map to HTTP 429 + `Retry-After`: at the gateway door when a
+/// tenant exceeds its in-flight quota, and from the server when admission
+/// refuses with `ServerError::Capacity` (request larger than the KV pool).
+#[test]
+fn over_quota_and_capacity_refusals_return_429() {
+    let _g = GUARD.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    let _f = slow_decode(15);
+
+    // Part 1: per-tenant in-flight quota at the gateway door.
+    let mut cfg = substrate_cfg();
+    cfg.executor_workers = 2;
+    let gw_cfg = GatewayConfig { max_in_flight_per_tenant: 1, ..GatewayConfig::default() };
+    let gw = start_gateway(cfg, gw_cfg, 73);
+    let tokens = corpus::generate(64, 20, 13);
+
+    let mut holder = SseClient::post_generate(gw.addr(), &body_json(&tokens, 16), Some("acme"));
+    let (status, _) = holder.read_headers();
+    assert_eq!(status, 200);
+    let _ = holder.next_event().expect("holder is streaming");
+
+    // Same tenant, second stream: refused at the door.
+    let mut refused =
+        SseClient::post_generate(gw.addr(), &body_json(&tokens, 16), Some("acme"));
+    let (status, head) = refused.read_headers();
+    assert_eq!(status, 429, "over-quota tenant gets 429");
+    assert!(head.contains("Retry-After:"), "429 carries Retry-After: {head}");
+
+    // A different tenant is not affected by acme's quota.
+    let mut other = SseClient::post_generate(gw.addr(), &body_json(&tokens, 4), Some("zeta"));
+    let (status, _) = other.read_headers();
+    assert_eq!(status, 200, "quota is per-tenant");
+    while other.next_event().is_some() {}
+
+    // Drain the holder; its release frees the quota slot.
+    while holder.next_event().is_some() {}
+    let mut again = SseClient::post_generate(gw.addr(), &body_json(&tokens, 4), Some("acme"));
+    let (status, _) = again.read_headers();
+    assert_eq!(status, 200, "quota slot frees when the stream terminates");
+    while again.next_event().is_some() {}
+    let stats = gw.shutdown();
+    assert_eq!(stats.completed, 3);
+    assert_eq!(stats.kv_pages_acquired, stats.kv_pages_released);
+
+    // Part 2: server-side Capacity (context larger than the whole KV pool)
+    // surfaces as 429 + Retry-After before any SSE bytes.
+    let mut small = substrate_cfg();
+    small.executor_workers = 1;
+    small.kv_blocks = 2; // 32-token pool
+    let gw = start_gateway(small, GatewayConfig::default(), 74);
+    let big = corpus::generate(64, 40, 17); // needs 3 pages
+    let mut refused = SseClient::post_generate(gw.addr(), &body_json(&big, 4), Some("acme"));
+    let (status, head) = refused.read_headers();
+    assert_eq!(status, 429, "server Capacity maps to 429");
+    assert!(head.contains("Retry-After:"), "{head}");
+    let stats = gw.shutdown();
+    assert_eq!(stats.shed_rejects, 1);
+    assert_eq!(stats.tenants.len(), 1);
+    assert_eq!(stats.tenants[0].sheds, 1);
+}
+
+/// Two tenants at 2× offered load: deficit-round-robin lanes keep both
+/// streaming — every request completes and the per-tenant token counts
+/// come out equal.
+#[test]
+fn two_tenant_fairness_neither_starves() {
+    let _g = GUARD.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    let _f = slow_decode(3);
+    let mut cfg = substrate_cfg();
+    cfg.executor_workers = 2;
+    let gw = start_gateway(cfg, GatewayConfig::default(), 75);
+    let addr = gw.addr();
+
+    let n_new = 12usize;
+    let per_tenant = 4usize;
+    let mut clients = Vec::new();
+    for (t, tenant) in ["a", "b"].into_iter().enumerate() {
+        for i in 0..per_tenant {
+            let tokens = corpus::generate(64, 16 + (t * per_tenant + i) % 6, 100 + i as u64);
+            let body = body_json(&tokens, n_new);
+            let tenant = tenant.to_string();
+            clients.push(std::thread::spawn(move || {
+                let mut sse = SseClient::post_generate(addr, &body, Some(&tenant));
+                let (status, _) = sse.read_headers();
+                assert_eq!(status, 200, "tenant {tenant} stream {i} admitted");
+                let mut tokens = 0usize;
+                let mut saw_done = false;
+                while let Some((name, _)) = sse.next_event() {
+                    match name.as_str() {
+                        "token" => tokens += 1,
+                        "done" => saw_done = true,
+                        other => panic!("unexpected event '{other}'"),
+                    }
+                }
+                assert!(saw_done, "tenant {tenant} stream {i} must finish");
+                assert_eq!(tokens, n_new, "tenant {tenant} stream {i} gets every token");
+            }));
+        }
+    }
+    for c in clients {
+        c.join().expect("client thread");
+    }
+
+    let stats = gw.shutdown();
+    assert_eq!(stats.completed, 2 * per_tenant);
+    assert_eq!(stats.cancelled + stats.expired + stats.internal_errors, 0);
+    assert_eq!(stats.tenants.len(), 2);
+    for t in &stats.tenants {
+        assert_eq!(t.requests, per_tenant, "tenant {} completed all its requests", t.tenant);
+        assert_eq!(
+            t.streamed_tokens,
+            per_tenant * n_new,
+            "tenant {} streamed every token",
+            t.tenant
+        );
+    }
+    assert_eq!(stats.kv_pages_acquired, stats.kv_pages_released);
+}
+
+/// `GET /v1/stats` over the wire: per-tenant counters balance with the
+/// global terminal counters (Σ tenants.requests == completed + cancelled +
+/// expired + shed_rejects + internal_errors) and per-tenant streamed
+/// tokens sum to the global figure.
+#[test]
+fn stats_endpoint_tenant_counters_balance_with_globals() {
+    let _g = GUARD.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    let _f = slow_decode(10);
+    let mut cfg = substrate_cfg();
+    cfg.executor_workers = 2;
+    let gw = start_gateway(cfg, GatewayConfig::default(), 76);
+    let addr = gw.addr();
+
+    // Two completions for tenant a, one for tenant b.
+    for (tenant, seed) in [("a", 30u64), ("a", 31), ("b", 32)] {
+        let tokens = corpus::generate(64, 18, seed);
+        let mut sse = SseClient::post_generate(addr, &body_json(&tokens, 4), Some(tenant));
+        let (status, _) = sse.read_headers();
+        assert_eq!(status, 200);
+        while sse.next_event().is_some() {}
+    }
+    // One disconnect-cancel for tenant b.
+    let tokens = corpus::generate(64, 18, 33);
+    let mut dropped = SseClient::post_generate(addr, &body_json(&tokens, 32), Some("b"));
+    let (status, _) = dropped.read_headers();
+    assert_eq!(status, 200);
+    let _ = dropped.next_event().expect("one event before the drop");
+    drop(dropped);
+    wait_for(&gw, "cancel after disconnect", |s| s.cancelled == 1);
+    // The gateway releases its admission ledger right after consuming the
+    // terminal; give that handful of instructions a moment to land.
+    std::thread::sleep(Duration::from_millis(200));
+
+    let (status, _, body) = http_get(addr, "/v1/stats");
+    assert_eq!(status, 200);
+    let stats = Json::parse(&body).expect("stats JSON parses");
+    let get = |k: &str| stats.get(k).and_then(Json::as_usize).expect("numeric field");
+    let tenants = stats.get("tenants").and_then(Json::as_array).expect("tenants array");
+    let tenant_requests: usize = tenants
+        .iter()
+        .map(|t| t.get("requests").and_then(Json::as_usize).expect("requests"))
+        .sum();
+    let tenant_streamed: usize = tenants
+        .iter()
+        .map(|t| t.get("streamed_tokens").and_then(Json::as_usize).expect("streamed"))
+        .sum();
+    let terminals = get("completed")
+        + get("cancelled")
+        + get("expired")
+        + get("shed_rejects")
+        + get("internal_errors");
+    assert_eq!(
+        tenant_requests, terminals,
+        "per-tenant requests balance with the global terminal counters"
+    );
+    assert_eq!(tenant_streamed, get("streamed_tokens"), "streamed tokens balance");
+    assert_eq!(get("completed"), 3);
+    assert_eq!(get("cancelled"), 1);
+    // The admission ledger drained: nothing in flight once terminals land.
+    let admission = stats.get("admission").and_then(Json::as_array).expect("admission");
+    let in_flight: usize = admission
+        .iter()
+        .map(|a| a.get("in_flight").and_then(Json::as_usize).expect("in_flight"))
+        .sum();
+    assert_eq!(in_flight, 0, "admission holdings release at stream end");
+    let b_row = tenants
+        .iter()
+        .find(|t| t.get("tenant").and_then(Json::as_str) == Some("b"))
+        .expect("tenant b row");
+    assert_eq!(b_row.get("cancels").and_then(Json::as_usize), Some(1));
+
+    let stats = gw.shutdown();
+    assert_eq!(stats.kv_pages_acquired, stats.kv_pages_released);
+    assert_eq!(stats.prefix_pins_acquired, stats.prefix_pins_released);
+}
