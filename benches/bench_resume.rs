@@ -1,0 +1,253 @@
+//! Resume-vs-cold bench: the wire cost of finishing an interrupted stream
+//! via `Last-Event-ID` resume, against recomputing the whole request from
+//! scratch.
+//!
+//! The serving claim under test: a resumed session costs O(remaining
+//! decode) — the parked session's KV pages are still pinned, so the
+//! continuation runs no second prefill — which must beat a cold request
+//! that pays prefill + full decode. If resuming were ever slower than
+//! recomputing, the whole session-lifecycle layer would be dead weight.
+//!
+//! Emits `BENCH_resume.json` at the repo root: p50 wall time for the cold
+//! full request and for the disconnect-and-resume completion, plus the
+//! speedup ratio.
+//!
+//! Knobs (the CI smoke run shrinks them):
+//! * `PALLAS_RESUME_CONTEXT` — context tokens per request, default 192
+//! * `PALLAS_RESUME_NEW`     — generated tokens per request, default 16
+//! * `PALLAS_RESUME_REPS`    — repetitions per scenario, default 3
+//! * `PALLAS_RESUME_JSON`    — output path override (CI smoke points it at
+//!   a scratch file so real baselines aren't clobbered)
+//! * `PALLAS_RESUME_ASSERT`  — when `1`, exit non-zero unless the resume
+//!   completion beats the cold recompute
+
+use prescored::config::ServingConfig;
+use prescored::gateway::{Gateway, GatewayConfig};
+use prescored::model::{Transformer, TransformerConfig};
+use prescored::server::ScoringServer;
+use prescored::util::bench::{env_usize, f, Table};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::{Duration, Instant};
+
+const SPEC: &str = "prescored:kmeans,top_k=12,block=16,sample=4";
+
+fn start_gateway(max_seq: usize, kv_blocks: usize) -> Gateway {
+    let tcfg = TransformerConfig {
+        vocab: 64,
+        d_model: 32,
+        n_layers: 2,
+        n_heads: 2,
+        max_seq,
+    };
+    let cfg = ServingConfig {
+        artifacts_dir: "/nonexistent-artifacts".into(),
+        variant: "exact".into(),
+        max_seq,
+        attention_spec: SPEC.into(),
+        executor_workers: 2,
+        kv_blocks,
+        ..Default::default()
+    };
+    let server = ScoringServer::start_with_model(cfg, Transformer::random(tcfg, 67))
+        .expect("server start");
+    Gateway::start(GatewayConfig::default(), server).expect("gateway start")
+}
+
+/// A minimal SSE reader: POST, then count `event: token` markers.
+struct Stream {
+    sock: TcpStream,
+    buf: Vec<u8>,
+}
+
+impl Stream {
+    fn post(addr: SocketAddr, body: &str, last_event_id: Option<&str>) -> Stream {
+        let sock = TcpStream::connect(addr).expect("connect");
+        sock.set_read_timeout(Some(Duration::from_secs(60))).expect("timeout");
+        let mut head = format!(
+            "POST /v1/generate HTTP/1.1\r\nHost: gw\r\nContent-Type: application/json\r\nContent-Length: {}\r\n",
+            body.len()
+        );
+        if let Some(cursor) = last_event_id {
+            head.push_str(&format!("Last-Event-ID: {cursor}\r\n"));
+        }
+        head.push_str("\r\n");
+        let mut s = Stream { sock, buf: Vec::new() };
+        s.sock.write_all(head.as_bytes()).expect("write head");
+        s.sock.write_all(body.as_bytes()).expect("write body");
+        s
+    }
+
+    fn fill(&mut self) -> usize {
+        let mut chunk = [0u8; 4096];
+        match self.sock.read(&mut chunk) {
+            Ok(n) => {
+                self.buf.extend_from_slice(&chunk[..n]);
+                n
+            }
+            Err(_) => 0,
+        }
+    }
+
+    /// HTTP status + the `X-Pallas-Session` header value (if present).
+    fn read_headers(&mut self) -> (u16, Option<String>) {
+        loop {
+            if let Some(idx) = self.buf.windows(4).position(|w| w == b"\r\n\r\n") {
+                let head =
+                    String::from_utf8(self.buf[..idx].to_vec()).expect("utf8 headers");
+                self.buf.drain(..idx + 4);
+                let status: u16 = head
+                    .split_whitespace()
+                    .nth(1)
+                    .and_then(|s| s.parse().ok())
+                    .expect("status line");
+                let sid = head.lines().find_map(|l| {
+                    let (name, value) = l.split_once(':')?;
+                    name.eq_ignore_ascii_case("x-pallas-session")
+                        .then(|| value.trim().to_string())
+                });
+                return (status, sid);
+            }
+            assert!(self.fill() > 0, "connection closed before headers");
+        }
+    }
+
+    fn count(&self, needle: &[u8]) -> usize {
+        if self.buf.len() < needle.len() {
+            return 0;
+        }
+        self.buf.windows(needle.len()).filter(|w| w == &needle).count()
+    }
+
+    /// Block until at least `n` token events are buffered.
+    fn wait_tokens(&mut self, n: usize) {
+        while self.count(b"event: token") < n {
+            assert!(self.fill() > 0, "stream ended before {n} token events");
+        }
+    }
+
+    /// Read to stream end; returns (token events seen, saw done).
+    fn drain(&mut self) -> (usize, bool) {
+        while self.fill() > 0 {}
+        (self.count(b"event: token"), self.count(b"event: done") > 0)
+    }
+}
+
+fn percentile_50(samples: &mut [f64]) -> f64 {
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    samples[samples.len() / 2]
+}
+
+fn main() {
+    let context = env_usize("PALLAS_RESUME_CONTEXT", 192);
+    let n_new = env_usize("PALLAS_RESUME_NEW", 16);
+    let reps = env_usize("PALLAS_RESUME_REPS", 3);
+    let assert_beat = std::env::var("PALLAS_RESUME_ASSERT").map_or(false, |v| v == "1");
+    let json_path =
+        std::env::var("PALLAS_RESUME_JSON").unwrap_or_else(|_| "BENCH_resume.json".into());
+
+    let cut = (n_new / 2).max(1);
+    let max_seq = context + n_new + 8;
+    let kv_blocks = (((context + n_new) / 16 + 4) * 4).max(256);
+    println!(
+        "== resume vs cold: context {context}, {n_new} new, disconnect after {cut}, {reps} reps =="
+    );
+
+    let gw = start_gateway(max_seq, kv_blocks);
+    let addr = gw.addr();
+
+    let mut cold_ms = Vec::new();
+    let mut resume_ms = Vec::new();
+    for rep in 0..reps {
+        // Cold: a fresh context (unique corpus seed — never cached) paying
+        // prefill + full decode.
+        let body = format!(
+            "{{\"corpus_len\": {context}, \"corpus_seed\": {}, \"generate\": {n_new}}}",
+            1000 + rep
+        );
+        let t0 = Instant::now();
+        let mut cold = Stream::post(addr, &body, None);
+        let (status, _) = cold.read_headers();
+        assert_eq!(status, 200, "cold request admitted");
+        let (tokens, done) = cold.drain();
+        cold_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+        assert!(done, "cold stream must finish");
+        assert_eq!(tokens, n_new, "cold stream must deliver every token");
+
+        // Interrupted: stream `cut` tokens, vanish, wait for the park, then
+        // time the resume completion (reconnect + remaining decode).
+        let body = format!(
+            "{{\"corpus_len\": {context}, \"corpus_seed\": {}, \"generate\": {n_new}}}",
+            2000 + rep
+        );
+        let mut victim = Stream::post(addr, &body, None);
+        let (status, sid) = victim.read_headers();
+        assert_eq!(status, 200, "victim request admitted");
+        let sid = sid.expect("session header");
+        victim.wait_tokens(cut);
+        let before = gw.stats();
+        drop(victim);
+        // The gateway parks (or finishes) the session at its next write;
+        // wait for the attachment to end before timing the resume.
+        let parked_deadline = Instant::now() + Duration::from_secs(30);
+        loop {
+            let s = gw.stats();
+            if s.sessions_parked > before.sessions_parked || s.completed > before.completed {
+                break;
+            }
+            assert!(Instant::now() < parked_deadline, "session never parked");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let t0 = Instant::now();
+        let mut resumed = loop {
+            let mut r = Stream::post(addr, "", Some(&format!("{sid}:{cut}")));
+            let (status, _) = r.read_headers();
+            match status {
+                200 => break r,
+                409 => std::thread::sleep(Duration::from_millis(2)),
+                other => panic!("resume refused with {other}"),
+            }
+        };
+        let (tokens, done) = resumed.drain();
+        resume_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+        assert!(done, "resumed stream must finish");
+        assert!(
+            tokens >= n_new - cut,
+            "resume must deliver the remaining tokens ({tokens} < {})",
+            n_new - cut
+        );
+    }
+
+    let stats = gw.shutdown();
+    assert_eq!(
+        stats.kv_pages_acquired, stats.kv_pages_released,
+        "bench run must balance page accounting"
+    );
+
+    let cold_p50 = percentile_50(&mut cold_ms);
+    let resume_p50 = percentile_50(&mut resume_ms);
+    let speedup = cold_p50 / resume_p50.max(1e-9);
+    let mut table = Table::new("resume vs cold", &["scenario", "wall p50 (ms)"]);
+    table.row(vec!["cold full request".into(), f(cold_p50, 2)]);
+    table.row(vec!["disconnect + resume".into(), f(resume_p50, 2)]);
+    table.print();
+    println!("speedup: {speedup:.2}x");
+
+    let json = format!(
+        "{{\n  \"context\": {context},\n  \"new_tokens\": {n_new},\n  \"cut\": {cut},\n  \"cold_ms_p50\": {cold_p50:.3},\n  \"resume_ms_p50\": {resume_p50:.3},\n  \"speedup\": {speedup:.3}\n}}\n"
+    );
+    std::fs::write(&json_path, json).expect("writing BENCH_resume.json");
+    println!("wrote {json_path}");
+
+    if assert_beat {
+        if resume_p50 >= cold_p50 {
+            eprintln!(
+                "ASSERT FAILED: resume completion {resume_p50:.2} ms is not faster than \
+                 cold recompute {cold_p50:.2} ms — a resumed session must cost only the \
+                 remaining decode, never a second prefill"
+            );
+            std::process::exit(1);
+        }
+        println!("assert ok: resume {resume_p50:.2} ms < cold {cold_p50:.2} ms");
+    }
+}

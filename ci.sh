@@ -102,6 +102,22 @@ if [[ "$QUICK" == 0 ]]; then
     PALLAS_GATEWAY_ASSERT=1 PALLAS_GATEWAY_JSON="$(mktemp)" \
         cargo bench --bench bench_gateway
 
+    # Resume wire smoke: disconnect mid-stream at every cut point and
+    # reconnect with Last-Event-ID — the combined stream must be bitwise
+    # identical to the uninterrupted reference.
+    echo "== resume wire smoke =="
+    cargo test --release --test resume \
+        resume_at_every_cut_is_bitwise_identical -- --nocapture
+
+    # Resume-vs-cold smoke: env-shrunk interrupted-stream completion.
+    # PALLAS_RESUME_ASSERT=1 fails the build if resuming a parked session
+    # ever stops beating a cold recompute — O(remaining decode) resumption
+    # is a CI invariant.
+    echo "== bench_resume (smoke) =="
+    PALLAS_RESUME_CONTEXT=96 PALLAS_RESUME_NEW=8 PALLAS_RESUME_REPS=3 \
+    PALLAS_RESUME_ASSERT=1 PALLAS_RESUME_JSON="$(mktemp)" \
+        cargo bench --bench bench_resume
+
     # Chaos smoke: three fixed seeded fault schedules through the mixed
     # scoring + generation workload. The suite asserts no process panic,
     # a typed response per request, and balanced page/pin accounting.

@@ -41,13 +41,53 @@
 //! curl -N -X POST http://127.0.0.1:8080/v1/generate -d '{"tokens": [1,2,3], "generate": 8}'
 //!
 //! # live stats: global terminal counters + per-tenant breakdown + the
-//! # gateway admission ledger
+//! # gateway admission ledger + session lifecycle counters
 //! curl http://127.0.0.1:8080/v1/stats
+//! # liveness / readiness probes (readyz flips to 503 while draining)
+//! curl http://127.0.0.1:8080/healthz
+//! curl http://127.0.0.1:8080/readyz
 //! ```
 //!
-//! Disconnecting mid-stream (Ctrl-C on curl) cancels the request server-side
-//! at the next safe point and releases its KV pages — watch `cancelled`
-//! tick up in `/v1/stats`.
+//! **Disconnect and resume.** Every stream is a server-issued session: the
+//! response carries an `X-Pallas-Session` header and every `token` event an
+//! `id: <session>:<seq>` cursor. Ctrl-C curl mid-stream — the session
+//! *parks* (decode pauses, pages stay pinned) — then reconnect with the
+//! last cursor you saw and the stream continues bitwise identically, no
+//! recompute:
+//!
+//! ```bash
+//! # first attempt: note the X-Pallas-Session response header and the id:
+//! # lines on each event, then Ctrl-C after a few tokens
+//! curl -Ni -X POST http://127.0.0.1:8080/v1/generate \
+//!      -d '{"corpus_len": 64, "generate": 32}'
+//! # → X-Pallas-Session: 1a2b3c4d5e6f7081-1
+//! #   event: token
+//! #   id: 1a2b3c4d5e6f7081-1:3
+//! #   data: {"id":1,"tokens":[17],"total":3}
+//! #   ^C
+//!
+//! # reconnect at the cursor: buffered tokens replay (marked
+//! # "replayed":true), then the live stream continues to `done`
+//! curl -N -X POST http://127.0.0.1:8080/v1/generate \
+//!      -H 'Last-Event-ID: 1a2b3c4d5e6f7081-1:3'
+//! ```
+//!
+//! Sessions nobody resumes are reclaimed after `session_linger_ms`
+//! (`cancelled` ticks up in `/v1/stats`; pages release with balanced
+//! accounting). A stale cursor that fell out of the bounded replay window
+//! (`session_replay_tokens`) is refused with HTTP 410; an unknown session
+//! with 404; a session another client still holds with 409.
+//!
+//! **Drain and restart.** Stop the process and the gateway drains: new
+//! requests get 503 + `Retry-After` (and `/readyz` flips), in-flight
+//! streams finish or park, and — when `[cache] persist_path` is set —
+//! parked sessions are persisted alongside the prefix cache. A restarted
+//! process on the same store re-registers them (`sessions_recovered` in
+//! `/v1/stats`), and the same `Last-Event-ID` reconnect works across the
+//! restart: the context re-admits under a fresh request id, prefills warm
+//! from the restored cache (no second cold prefill), and greedy decode
+//! fast-forwards below the high-water mark so the continuation stays
+//! bitwise identical.
 //!
 //! **Fault-tolerance surface** (see ROADMAP.md "Failure model"): give a
 //! request a wall-clock budget with `Request::with_deadline(ms)` (expired
@@ -185,8 +225,15 @@ fn run_gateway(port: u16) -> anyhow::Result<()> {
          -H 'X-Pallas-Tenant: demo' \\\n       \
          -d '{{\"corpus_len\": 64, \"generate\": 16, \"deadline_ms\": 5000}}'"
     );
-    println!("inspect live serving stats:");
+    println!("inspect live serving stats / probes:");
     println!("  curl http://{addr}/v1/stats");
+    println!("  curl http://{addr}/healthz   # liveness");
+    println!("  curl http://{addr}/readyz    # 503 while draining");
+    println!("resume an interrupted stream (Ctrl-C curl mid-stream, then):");
+    println!(
+        "  curl -N -X POST http://{addr}/v1/generate \\\n       \
+         -H 'Last-Event-ID: <X-Pallas-Session header>:<last id: seq>'"
+    );
     println!("Ctrl-C to stop.");
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));

@@ -5,7 +5,7 @@
 //! Little-endian layout (all integers u32 unless noted):
 //!
 //! ```text
-//! magic = 0x43584650 ("PFXC"), version = 3
+//! magic = 0x43584650 ("PFXC"), version = 4
 //! policy_len, policy utf-8        (canonical AttnPolicy string — reload
 //!                                  refuses a store built under another
 //!                                  policy: artifacts are policy-specific)
@@ -38,6 +38,13 @@
 //!       since_recenter u32
 //!       scores_len, f32×scores_len      (aligned with the selection)
 //!       folded u32
+//! n_sessions                            (v4: parked-session records for
+//! per session:                           crash-recovered resumption)
+//!   sid_len, sid utf-8
+//!   tenant_len, tenant utf-8
+//!   context_len, u32×context_len
+//!   target, base, total
+//!   emitted_len, u32×emitted_len        (replay-buffer tail, oldest first)
 //! crc32                                 (v3: CRC-32 of every preceding
 //!                                        byte — load refuses truncated or
 //!                                        bit-flipped stores up front, and
@@ -61,7 +68,28 @@ use anyhow::{bail, Context, Result};
 use std::path::Path;
 
 pub const MAGIC: u32 = 0x4358_4650; // "PFXC" little-endian
-pub const VERSION: u32 = 3;
+pub const VERSION: u32 = 4;
+
+/// A parked streaming session, persisted at drain so a client reconnecting
+/// after a restart can resume: the server re-admits `context` (warm through
+/// the restored prefix cache), replays the buffered `emitted` tail, and
+/// fast-forwards regenerated sequence numbers up to `total`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SessionRecord {
+    /// Server-issued session id the client echoes in `Last-Event-ID`.
+    pub sid: String,
+    pub tenant: String,
+    /// Full request context tokens.
+    pub context: Vec<u32>,
+    /// Tokens the original request asked to generate.
+    pub target: u32,
+    /// Sequence number (1-based) of the first buffered emitted token.
+    pub base: u32,
+    /// High-water sequence number (tokens emitted before the park).
+    pub total: u32,
+    /// Replay-buffer contents, oldest first (`base` numbers the first).
+    pub emitted: Vec<u32>,
+}
 
 /// Bitwise CRC-32 (IEEE 802.3 polynomial, reflected). A few MB of store is
 /// far from the hot path, so the table-free form keeps this dependency-free.
@@ -79,6 +107,11 @@ pub fn crc32(bytes: &[u8]) -> u32 {
 
 fn put_u32(buf: &mut Vec<u8>, v: u32) {
     buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    put_u32(buf, s.len() as u32);
+    buf.extend_from_slice(s.as_bytes());
 }
 
 fn put_u32s(buf: &mut Vec<u8>, vs: &[u32]) {
@@ -175,16 +208,18 @@ impl<'a> Reader<'a> {
     }
 }
 
-/// Serialize every cached prefix (with artifacts) of `cache` to `path`.
-/// `uniform_only` must be true for non-suffix-stable serving policies: it
-/// skips prefixes assembled from several donor prefills, which `lookup`
-/// refuses to serve for those kernels and which a reload must not launder
-/// into single-donor entries.
+/// Serialize every cached prefix (with artifacts) of `cache` to `path`,
+/// plus `sessions` — the parked-session records a drain wants to survive a
+/// restart. `uniform_only` must be true for non-suffix-stable serving
+/// policies: it skips prefixes assembled from several donor prefills, which
+/// `lookup` refuses to serve for those kernels and which a reload must not
+/// launder into single-donor entries.
 pub fn save(
     cache: &PrefixCache,
     policy: &AttnPolicy,
     n_heads: usize,
     uniform_only: bool,
+    sessions: &[SessionRecord],
     path: &Path,
 ) -> Result<()> {
     let prefixes = cache.export_prefixes(uniform_only);
@@ -232,6 +267,16 @@ pub fn save(
             }
         }
     }
+    put_u32(&mut buf, sessions.len() as u32);
+    for s in sessions {
+        put_str(&mut buf, &s.sid);
+        put_str(&mut buf, &s.tenant);
+        put_u32s(&mut buf, &s.context);
+        put_u32(&mut buf, s.target);
+        put_u32(&mut buf, s.base);
+        put_u32(&mut buf, s.total);
+        put_u32s(&mut buf, &s.emitted);
+    }
     let checksum = crc32(&buf);
     put_u32(&mut buf, checksum);
     if crate::fault::fires(crate::fault::FaultPoint::PersistCorrupt, buf.len() as u64) {
@@ -250,9 +295,10 @@ pub fn save(
 /// model's layer·head count, per-head key dim, and logits width — a store
 /// written under a model of different depth or width refuses to load here
 /// rather than panicking a warm prefill later. Returns the number of
-/// prefixes restored (insertions still respect the cache's page budget).
-/// Fails on any magic/version/policy/geometry mismatch — the caller should
-/// warn and continue with an empty cache.
+/// prefixes restored (insertions still respect the cache's page budget)
+/// plus the parked-session records persisted at drain. Fails on any
+/// magic/version/policy/geometry mismatch — the caller should warn and
+/// continue with an empty cache.
 #[allow(clippy::too_many_arguments)]
 pub fn load(
     cache: &mut PrefixCache,
@@ -262,7 +308,7 @@ pub fn load(
     d_head: usize,
     vocab: usize,
     path: &Path,
-) -> Result<usize> {
+) -> Result<(usize, Vec<SessionRecord>)> {
     let buf = std::fs::read(path)
         .with_context(|| format!("reading prefix cache {}", path.display()))?;
     if buf.len() < 12 {
@@ -275,8 +321,15 @@ pub fn load(
         bail!("bad prefix-cache magic {magic:#x}");
     }
     let version = r.u32()?;
-    if version != VERSION {
-        bail!("unsupported prefix-cache version {version}");
+    if version < VERSION {
+        bail!(
+            "prefix-cache store is version {version}, this build reads version {VERSION} \
+             (older stores predate the CRC-sealed session-record section) — delete the \
+             store and let the server rebuild it"
+        );
+    }
+    if version > VERSION {
+        bail!("unsupported prefix-cache version {version} (this build reads {VERSION})");
     }
     // Whole-file integrity before trusting any length prefix: a truncated
     // or bit-flipped store fails here with a clean error. (The per-section
@@ -370,7 +423,21 @@ pub fn load(
             restored += 1;
         }
     }
-    Ok(restored)
+    let n_sessions = r.u32()? as usize;
+    r.check_remaining(n_sessions, 4 * 7)?;
+    let mut sessions = Vec::with_capacity(n_sessions);
+    for _ in 0..n_sessions {
+        sessions.push(SessionRecord {
+            sid: r.string()?,
+            tenant: r.string()?,
+            context: r.u32s()?,
+            target: r.u32()?,
+            base: r.u32()?,
+            total: r.u32()?,
+            emitted: r.u32s()?,
+        });
+    }
+    Ok((restored, sessions))
 }
 
 #[cfg(test)]
@@ -406,6 +473,29 @@ mod tests {
         (cache, policy, tokens)
     }
 
+    fn sample_sessions() -> Vec<SessionRecord> {
+        vec![
+            SessionRecord {
+                sid: "deadbeef-1".into(),
+                tenant: "acme".into(),
+                context: vec![1, 2, 3, 4],
+                target: 16,
+                base: 3,
+                total: 6,
+                emitted: vec![10, 11, 12, 13],
+            },
+            SessionRecord {
+                sid: "deadbeef-2".into(),
+                tenant: String::new(),
+                context: vec![],
+                target: 1,
+                base: 1,
+                total: 0,
+                emitted: vec![],
+            },
+        ]
+    }
+
     #[test]
     fn roundtrip_restores_artifacts_losslessly() {
         for spec in [
@@ -418,14 +508,15 @@ mod tests {
             let dir = std::env::temp_dir()
                 .join(format!("pfxc_test_{}_{}", std::process::id(), spec.len()));
             let _ = std::fs::remove_file(&dir);
-            save(&cache, &policy, 2, true, &dir).unwrap();
+            save(&cache, &policy, 2, true, &[], &dir).unwrap();
             let mut fresh = PrefixCache::new(PrefixCacheConfig {
                 blocks: 64,
                 min_tokens: 4,
                 persist_path: None,
             });
-            let restored = load(&mut fresh, &policy, 2, 2, 8, 16, &dir).unwrap();
+            let (restored, sessions) = load(&mut fresh, &policy, 2, 2, 8, 16, &dir).unwrap();
             assert_eq!(restored, 1, "{spec}");
+            assert!(sessions.is_empty(), "{spec}");
             let hit = fresh.lookup(&tokens, false).expect("restored prefix hits");
             let mut orig = cache;
             let ohit = orig.lookup(&tokens, false).unwrap();
@@ -453,7 +544,7 @@ mod tests {
     fn load_rejects_mismatches() {
         let (cache, policy, _) = sample_cache("exact");
         let path = std::env::temp_dir().join(format!("pfxc_mismatch_{}", std::process::id()));
-        save(&cache, &policy, 2, true, &path).unwrap();
+        save(&cache, &policy, 2, true, &[], &path).unwrap();
         let mut fresh = PrefixCache::new(PrefixCacheConfig::default());
         // Wrong policy.
         let other = AttnPolicy::parse("flash").unwrap();
@@ -489,7 +580,7 @@ mod tests {
             min_tokens: 4,
             persist_path: None,
         });
-        let out = load(&mut fresh, policy, 2, 2, 8, 16, &path);
+        let out = load(&mut fresh, policy, 2, 2, 8, 16, &path).map(|(n, _)| n);
         let _ = std::fs::remove_file(&path);
         out
     }
@@ -499,7 +590,7 @@ mod tests {
         // The stream spec exercises the richest layout (every section kind).
         let (cache, policy, _) = sample_cache("prescored:kmeans,top_k=8,block=8,mode=stream");
         let path = std::env::temp_dir().join(format!("pfxc_trunc_{}", std::process::id()));
-        save(&cache, &policy, 2, true, &path).unwrap();
+        save(&cache, &policy, 2, true, &sample_sessions(), &path).unwrap();
         let bytes = std::fs::read(&path).unwrap();
         let _ = std::fs::remove_file(&path);
         assert!(try_load(&bytes, &policy, "full").is_ok(), "untruncated store loads");
@@ -523,7 +614,7 @@ mod tests {
     fn load_rejects_seeded_bit_flips() {
         let (cache, policy, _) = sample_cache("prescored:kmeans,top_k=8,block=8,mode=stream");
         let path = std::env::temp_dir().join(format!("pfxc_flip_{}", std::process::id()));
-        save(&cache, &policy, 2, true, &path).unwrap();
+        save(&cache, &policy, 2, true, &sample_sessions(), &path).unwrap();
         let bytes = std::fs::read(&path).unwrap();
         let _ = std::fs::remove_file(&path);
         let mut rng = Rng::new(0xfa17);
@@ -544,7 +635,7 @@ mod tests {
     fn load_survives_hostile_length_prefixes() {
         let (cache, policy, _) = sample_cache("exact");
         let path = std::env::temp_dir().join(format!("pfxc_len_{}", std::process::id()));
-        save(&cache, &policy, 2, true, &path).unwrap();
+        save(&cache, &policy, 2, true, &[], &path).unwrap();
         let bytes = std::fs::read(&path).unwrap();
         let _ = std::fs::remove_file(&path);
         let pol_len =
@@ -565,6 +656,109 @@ mod tests {
         // Degenerate stores below the fixed header size.
         for n in 0..12 {
             assert!(try_load(&bytes[..n], &policy, "tiny").is_err());
+        }
+    }
+
+    #[test]
+    fn session_records_roundtrip() {
+        let (cache, policy, _) = sample_cache("exact");
+        let path = std::env::temp_dir().join(format!("pfxc_sess_{}", std::process::id()));
+        let want = sample_sessions();
+        save(&cache, &policy, 2, true, &want, &path).unwrap();
+        let mut fresh = PrefixCache::new(PrefixCacheConfig {
+            blocks: 64,
+            min_tokens: 4,
+            persist_path: None,
+        });
+        let (restored, got) = load(&mut fresh, &policy, 2, 2, 8, 16, &path).unwrap();
+        assert_eq!(restored, 1);
+        assert_eq!(got, want, "session records survive the store bitwise");
+        // A hostile session count must refuse cleanly, like every other
+        // length prefix.
+        let mut bytes = std::fs::read(&path).unwrap();
+        let n_off = bytes.len() - 4 - want.iter().map(record_wire_len).sum::<usize>() - 4;
+        bytes[n_off..n_off + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+        reseal(&mut bytes);
+        assert!(try_load(&bytes, &policy, "sess_len").is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    fn record_wire_len(s: &SessionRecord) -> usize {
+        4 + s.sid.len() + 4 + s.tenant.len() + 4 + 4 * s.context.len() + 12 + 4
+            + 4 * s.emitted.len()
+    }
+
+    #[test]
+    fn old_store_versions_are_refused_typed() {
+        let (cache, policy, _) = sample_cache("exact");
+        let path = std::env::temp_dir().join(format!("pfxc_v3_{}", std::process::id()));
+        save(&cache, &policy, 2, true, &[], &path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        // Rewind the header to version 3 and re-seal: the refusal must be
+        // the typed version message, not a parse error deep in the file.
+        bytes[4..8].copy_from_slice(&3u32.to_le_bytes());
+        reseal(&mut bytes);
+        let p2 = std::env::temp_dir().join(format!("pfxc_v3b_{}", std::process::id()));
+        std::fs::write(&p2, &bytes).unwrap();
+        let mut fresh = PrefixCache::new(PrefixCacheConfig::default());
+        let err = load(&mut fresh, &policy, 2, 2, 8, 16, &p2).unwrap_err();
+        let _ = std::fs::remove_file(&p2);
+        assert!(
+            err.to_string().contains("version 3"),
+            "refusal must name the old version, got: {err:#}"
+        );
+        // And a store claiming a future version is refused too.
+        bytes[4..8].copy_from_slice(&99u32.to_le_bytes());
+        reseal(&mut bytes);
+        assert!(try_load(&bytes, &policy, "v99").is_err());
+    }
+
+    #[test]
+    fn load_rejects_paired_bit_flips_xor_would_miss() {
+        // Two flips at the same bit position in different 32-bit words
+        // cancel under a XOR-of-words checksum — the class of corruption
+        // the CRC-32 upgrade exists to catch. Prove the pairs are XOR-
+        // invisible, then prove the loader still refuses them.
+        let (cache, policy, _) = sample_cache("prescored:kmeans,top_k=8,block=8,mode=stream");
+        let path = std::env::temp_dir().join(format!("pfxc_pair_{}", std::process::id()));
+        save(&cache, &policy, 2, true, &sample_sessions(), &path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        let xor_words = |b: &[u8]| -> u32 {
+            b.chunks(4)
+                .map(|c| {
+                    let mut w = [0u8; 4];
+                    w[..c.len()].copy_from_slice(c);
+                    u32::from_le_bytes(w)
+                })
+                .fold(0, |a, w| a ^ w)
+        };
+        let body_len = bytes.len() - 4;
+        let n_words = body_len / 4;
+        let mut rng = Rng::new(0x9a17);
+        for i in 0..100 {
+            let wa = rng.usize(n_words);
+            let wb = {
+                let mut w = rng.usize(n_words);
+                while w == wa {
+                    w = rng.usize(n_words);
+                }
+                w
+            };
+            let bit = rng.usize(32);
+            let mut flipped = bytes.clone();
+            flipped[wa * 4 + bit / 8] ^= 1 << (bit % 8);
+            flipped[wb * 4 + bit / 8] ^= 1 << (bit % 8);
+            assert_eq!(
+                xor_words(&flipped[..body_len]),
+                xor_words(&bytes[..body_len]),
+                "pair #{i} must be invisible to a XOR-of-words checksum"
+            );
+            assert!(
+                try_load(&flipped, &policy, "pair").is_err(),
+                "paired flip #{i} (words {wa}/{wb}, bit {bit}) must be rejected"
+            );
         }
     }
 }

@@ -109,6 +109,14 @@ pub struct ServingConfig {
     pub kv_blocks: usize,
     /// Cap on tokens generated per request through the decode path.
     pub decode_max_new: usize,
+    /// How long a parked (client-disconnected) streaming session lingers —
+    /// pages pinned, resumable via `Last-Event-ID` — before the cancel path
+    /// reclaims it (`[serving] session_linger_ms`).
+    pub session_linger_ms: u64,
+    /// Per-session replay-buffer capacity in tokens (`[serving]
+    /// session_replay_tokens`): a reconnect whose cursor has fallen out of
+    /// the window is refused with a typed replay-lost error.
+    pub session_replay_tokens: usize,
     /// Load-shedding trigger: KV page-pool occupancy fraction above which
     /// admission starts stepping requests down the degradation ladder
     /// (`[serving] shed_high_watermark`; set > 1.0 to disable).
@@ -171,6 +179,8 @@ impl Default for ServingConfig {
             executor_workers: 0,
             kv_blocks: 512,
             decode_max_new: 64,
+            session_linger_ms: 2000,
+            session_replay_tokens: 512,
             shed_high_watermark: 0.85,
             shed_low_watermark: 0.5,
             shed_queue_high: 8,
@@ -222,6 +232,11 @@ impl ServingConfig {
             executor_workers: cfg.usize_or("serving", "executor_workers", d.executor_workers)?,
             kv_blocks: cfg.usize_or("serving", "kv_blocks", d.kv_blocks)?,
             decode_max_new: cfg.usize_or("serving", "decode_max_new", d.decode_max_new)?,
+            session_linger_ms: cfg
+                .usize_or("serving", "session_linger_ms", d.session_linger_ms as usize)?
+                as u64,
+            session_replay_tokens: cfg
+                .usize_or("serving", "session_replay_tokens", d.session_replay_tokens)?,
             shed_high_watermark: shed_high,
             shed_low_watermark: shed_low,
             shed_queue_high: cfg.usize_or("serving", "shed_queue_high", d.shed_queue_high)?,
@@ -442,6 +457,22 @@ fallback_delta = 0.05
         .unwrap();
         assert!(ServingConfig::from_config(&bad).is_err());
         let bad = Config::parse("[serving]\nshed_pin_rung = two\n").unwrap();
+        assert!(ServingConfig::from_config(&bad).is_err());
+    }
+
+    #[test]
+    fn session_keys_parsed_with_defaults() {
+        let cfg = Config::parse(
+            "[serving]\nsession_linger_ms = 750\nsession_replay_tokens = 32\n",
+        )
+        .unwrap();
+        let sc = ServingConfig::from_config(&cfg).unwrap();
+        assert_eq!(sc.session_linger_ms, 750);
+        assert_eq!(sc.session_replay_tokens, 32);
+        let d = ServingConfig::default();
+        assert_eq!(d.session_linger_ms, 2000);
+        assert_eq!(d.session_replay_tokens, 512);
+        let bad = Config::parse("[serving]\nsession_linger_ms = soon\n").unwrap();
         assert!(ServingConfig::from_config(&bad).is_err());
     }
 

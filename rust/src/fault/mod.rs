@@ -16,8 +16,9 @@
 //! Injection points cover the failure classes the fault-tolerance layer is
 //! built for: KV page-pool exhaustion at admission, prefix-cache eviction
 //! storms, worker/decode-step panics, slow decode steps, persist-file
-//! corruption, and gateway stream failures (mid-stream socket drops, slow
-//! client reads).
+//! corruption, gateway stream failures (mid-stream socket drops, slow
+//! client reads), and session-lifecycle hazards (replay-buffer overflow,
+//! forced parked-session expiry).
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Mutex;
@@ -47,10 +48,19 @@ pub enum FaultPoint {
     /// Sleep before an SSE write (a slow-reading client); decode rounds must
     /// keep making progress for everyone else.
     SlowClient,
+    /// Shrink a session's replay buffer to one token at the next emit, so a
+    /// reconnecting client's cursor falls out of the window and the resume
+    /// is refused with a typed `ReplayLost` (HTTP 410) instead of silently
+    /// skipping tokens.
+    ReplayOverflow,
+    /// Force-expire a parked session at the next lifecycle sweep regardless
+    /// of `session_linger_ms` — the reclaim must release its pages/pins
+    /// with balanced accounting, exactly like a linger timeout.
+    SessionExpire,
 }
 
 /// All injection points, in `FaultPlan::rates` order.
-pub const ALL_POINTS: [FaultPoint; 8] = [
+pub const ALL_POINTS: [FaultPoint; 10] = [
     FaultPoint::KvAdmit,
     FaultPoint::EvictStorm,
     FaultPoint::WorkerPanic,
@@ -59,6 +69,8 @@ pub const ALL_POINTS: [FaultPoint; 8] = [
     FaultPoint::PersistCorrupt,
     FaultPoint::GatewayDrop,
     FaultPoint::SlowClient,
+    FaultPoint::ReplayOverflow,
+    FaultPoint::SessionExpire,
 ];
 
 impl FaultPoint {
@@ -72,6 +84,8 @@ impl FaultPoint {
             FaultPoint::PersistCorrupt => 5,
             FaultPoint::GatewayDrop => 6,
             FaultPoint::SlowClient => 7,
+            FaultPoint::ReplayOverflow => 8,
+            FaultPoint::SessionExpire => 9,
         }
     }
 
@@ -85,6 +99,8 @@ impl FaultPoint {
             FaultPoint::PersistCorrupt => "persist_corrupt",
             FaultPoint::GatewayDrop => "gateway_drop",
             FaultPoint::SlowClient => "slow_client",
+            FaultPoint::ReplayOverflow => "replay_overflow",
+            FaultPoint::SessionExpire => "session_expire",
         }
     }
 
@@ -95,7 +111,9 @@ impl FaultPoint {
 
 /// SplitMix64 — the repo's standard seed-expansion hash (see prescore's
 /// noise RNG): one round is enough to decorrelate (seed, point, key).
-fn splitmix64(mut x: u64) -> u64 {
+/// Public so the session hub can derive a process-unique boot id the same
+/// way.
+pub fn splitmix64(mut x: u64) -> u64 {
     x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
     let mut z = x;
     z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);

@@ -1,11 +1,17 @@
 //! Minimal HTTP/1.1 + SSE plumbing over blocking `TcpStream`s.
 //!
-//! The gateway only needs two request shapes (`POST /v1/generate`,
-//! `GET /v1/stats`), so this is a single-request-per-connection parser:
-//! read the header block (capped), honor `Content-Length` (capped), answer,
-//! close. SSE responses are written incrementally with
-//! [`write_sse_event`]; a failed write there is the disconnect signal the
-//! gateway turns into `ScoringServer::cancel`.
+//! The gateway speaks a handful of request shapes (`POST /v1/generate`,
+//! `GET /v1/stats`, `GET /healthz`, `GET /readyz`): read the header block
+//! (capped), honor `Content-Length` (capped), answer. Non-streaming
+//! responses honor HTTP/1.1 keep-alive (the connection loop lives in the
+//! gateway; [`write_json_response`] takes the verdict), so health probes
+//! and stat pollers reuse one socket instead of burning a thread+socket
+//! per poll. Requests are handled strictly sequentially per connection —
+//! pipelining is not supported ([`read_request`] discards any bytes past
+//! `Content-Length`), which standard probes/clients never do. SSE
+//! responses are written incrementally with [`write_sse_event`] /
+//! [`write_sse_event_id`] and always close; a failed write there is the
+//! disconnect signal the gateway turns into a session park.
 
 use std::collections::HashMap;
 use std::io::{self, Read, Write};
@@ -119,15 +125,20 @@ fn find_header_end(buf: &[u8]) -> Option<usize> {
 
 /// Write a complete JSON response with status line and standard headers.
 /// `extra_headers` lets error paths attach e.g. `Retry-After`.
+/// `keep_alive` reflects the connection verdict the gateway's per-socket
+/// loop already made (HTTP/1.1 default keep-alive unless the client sent
+/// `Connection: close`); the header tells the client which it got.
 pub fn write_json_response(
     stream: &mut TcpStream,
     status: u16,
     reason: &str,
     extra_headers: &[(&str, String)],
+    keep_alive: bool,
     body: &str,
 ) -> io::Result<()> {
+    let conn = if keep_alive { "keep-alive" } else { "close" };
     let mut head = format!(
-        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n",
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: {conn}\r\n",
         body.len()
     );
     for (name, value) in extra_headers {
@@ -139,12 +150,22 @@ pub fn write_json_response(
     stream.flush()
 }
 
-/// Start an SSE response: status line + streaming headers. Events follow
-/// via [`write_sse_event`].
-pub fn write_sse_preamble(stream: &mut TcpStream) -> io::Result<()> {
-    stream.write_all(
-        b"HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\nCache-Control: no-cache\r\nConnection: close\r\n\r\n",
-    )?;
+/// Start an SSE response: status line + streaming headers (always
+/// `Connection: close` — a stream occupies its socket until the terminal
+/// event). `extra_headers` carries e.g. `X-Pallas-Session`. Events follow
+/// via [`write_sse_event`] / [`write_sse_event_id`].
+pub fn write_sse_preamble(
+    stream: &mut TcpStream,
+    extra_headers: &[(&str, String)],
+) -> io::Result<()> {
+    let mut head = String::from(
+        "HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\nCache-Control: no-cache\r\nConnection: close\r\n",
+    );
+    for (name, value) in extra_headers {
+        head.push_str(&format!("{name}: {value}\r\n"));
+    }
+    head.push_str("\r\n");
+    stream.write_all(head.as_bytes())?;
     stream.flush()
 }
 
@@ -153,6 +174,19 @@ pub fn write_sse_preamble(stream: &mut TcpStream) -> io::Result<()> {
 /// `Err` from a closed socket is the gateway's disconnect signal.
 pub fn write_sse_event(stream: &mut TcpStream, event: &str, data: &str) -> io::Result<()> {
     stream.write_all(format!("event: {event}\ndata: {data}\n\n").as_bytes())?;
+    stream.flush()
+}
+
+/// Like [`write_sse_event`] but with an `id:` field — the per-event cursor
+/// (`<session-id>:<seq>`) an EventSource-style client echoes back in
+/// `Last-Event-ID` to resume after a disconnect.
+pub fn write_sse_event_id(
+    stream: &mut TcpStream,
+    event: &str,
+    id: &str,
+    data: &str,
+) -> io::Result<()> {
+    stream.write_all(format!("event: {event}\nid: {id}\ndata: {data}\n\n").as_bytes())?;
     stream.flush()
 }
 

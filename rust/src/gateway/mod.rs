@@ -12,10 +12,22 @@
 //!   once, on the wire as in the engine.
 //! - `GET /v1/stats` — [`ServerStats`] plus per-tenant admission holdings
 //!   as JSON.
+//! - `GET /healthz` / `GET /readyz` — liveness (always 200) and readiness
+//!   (503 + `Retry-After` while draining or with no KV-pool headroom).
 //!
-//! The wire maps onto the existing contracts rather than adding new ones:
-//! a failed SSE write (client disconnect) → [`ScoringServer::cancel`] (KV
-//! pages and prefix pins release at the next safe point); request
+//! **Resumable streams.** Every stream is a server-issued *session*
+//! ([`crate::server::session::SessionHub`]): the SSE preamble carries
+//! `X-Pallas-Session`, every `token` event carries `id: <session>:<seq>`,
+//! and a client that reconnects to `POST /v1/generate` with
+//! `Last-Event-ID: <session>:<seq>` gets the buffered suffix replayed and
+//! the stream continued — bitwise identical to the uninterrupted run, no
+//! second prefill. A failed SSE write (client disconnect) therefore
+//! *parks* the session (decode pauses, pages pinned, resumable for
+//! `session_linger_ms`) instead of cancelling it; the cancel path still
+//! reclaims sessions nobody resumes. Resumes bypass the tenant governor —
+//! the quota was charged at original admission and released at disconnect.
+//!
+//! The rest of the wire maps onto the existing contracts: request
 //! `deadline_ms` → [`Request::with_deadline`]; `ServerError::Capacity`
 //! (admission refusal under `shed_mode = "reject"`) → HTTP 429 with
 //! `Retry-After`. Per-tenant admission is the gateway's own layer: the
@@ -23,6 +35,13 @@
 //! (in-flight streams, estimated KV pages) at the door, and the same key
 //! rides [`Request::tenant`] into the scheduler's deficit-round-robin
 //! lanes so admitted tenants also make fair *progress*.
+//!
+//! **Graceful drain.** [`Gateway::shutdown`] first enters drain mode: new
+//! work is refused with 503 + `Retry-After` (and `/readyz` flips), while
+//! in-flight streams get `drain_grace_ms` to finish or park; then the
+//! accept loop stops and the server shuts down — which persists parked
+//! sessions and the prefix cache through `cache::persist`, so a restarted
+//! process serves their resumes warm.
 //!
 //! Request body fields: `tokens` (array of token ids) or
 //! `corpus_len`/`corpus_seed` (server-side synthetic context, so tests and
@@ -37,6 +56,7 @@ use crate::coordinator::kv_cache::pages_for;
 use crate::coordinator::{Request, Response, ServerError};
 use crate::data::corpus;
 use crate::fault::FaultPoint;
+use crate::server::session::ResumeError;
 use crate::server::{ScoringServer, ServerStats, StreamEvent};
 use anyhow::{Context, Result};
 use json::Json;
@@ -45,13 +65,18 @@ use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::Receiver;
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 use tenant::{TenantGovernor, TenantQuota};
 
 /// How long the gateway waits for a stream's terminal [`Response`] after
 /// the event channel closes. The engine delivers terminals at safe points;
 /// this cap only guards against a wedged coordinator.
 const TERMINAL_WAIT: Duration = Duration::from_secs(30);
+
+/// Idle read timeout on keep-alive sockets: a client that parks a
+/// connection without a request in flight gets this long before the
+/// gateway reclaims the thread.
+const KEEP_ALIVE_IDLE: Duration = Duration::from_secs(5);
 
 /// Gateway tuning. `Default` binds an ephemeral localhost port with
 /// permissive-but-bounded quotas — tests override per scenario.
@@ -74,6 +99,9 @@ pub struct GatewayConfig {
     /// Vocabulary for server-side `corpus_len` contexts — must stay within
     /// the substrate model's vocab.
     pub corpus_vocab: u32,
+    /// How long [`Gateway::shutdown`]'s drain mode waits for in-flight
+    /// connections to finish or park before stopping the accept loop.
+    pub drain_grace_ms: u64,
 }
 
 impl Default for GatewayConfig {
@@ -86,6 +114,7 @@ impl Default for GatewayConfig {
             max_body_bytes: 1024 * 1024,
             max_generate: 64,
             corpus_vocab: 64,
+            drain_grace_ms: 5000,
         }
     }
 }
@@ -97,6 +126,11 @@ struct GwShared {
     cfg: GatewayConfig,
     next_id: AtomicU64,
     stop: AtomicBool,
+    /// Drain mode: `/v1/generate` refuses with 503 + `Retry-After`,
+    /// `/readyz` flips, in-flight streams finish or park.
+    draining: AtomicBool,
+    /// Live connection threads (the drain grace waits on this).
+    conns: AtomicU64,
 }
 
 /// A running gateway. Dropping it leaks the accept thread; call
@@ -123,6 +157,8 @@ impl Gateway {
             cfg,
             next_id: AtomicU64::new(1),
             stop: AtomicBool::new(false),
+            draining: AtomicBool::new(false),
+            conns: AtomicU64::new(0),
         });
         let accept_shared = Arc::clone(&shared);
         let accept = std::thread::spawn(move || accept_loop(&listener, &accept_shared));
@@ -139,9 +175,20 @@ impl Gateway {
         self.shared.server.stats()
     }
 
-    /// Stop accepting, wait for in-flight connections to finish, shut the
-    /// server down, and return its final stats.
+    /// Graceful drain, then stop: refuse new work with 503 + `Retry-After`
+    /// (`/readyz` flips to not-ready), give in-flight streams
+    /// `drain_grace_ms` to finish or park, stop the accept loop, and shut
+    /// the server down — which detaches parked sessions into persistable
+    /// records and writes them with the prefix cache through
+    /// `cache::persist`, so a restarted process serves their resumes warm.
+    /// Returns the server's final stats.
     pub fn shutdown(mut self) -> ServerStats {
+        self.shared.draining.store(true, Ordering::SeqCst);
+        let grace = Duration::from_millis(self.shared.cfg.drain_grace_ms);
+        let t0 = Instant::now();
+        while self.shared.conns.load(Ordering::SeqCst) > 0 && t0.elapsed() < grace {
+            std::thread::sleep(Duration::from_millis(5));
+        }
         self.shared.stop.store(true, Ordering::SeqCst);
         // Unblock the accept loop with a throwaway connection.
         let _ = TcpStream::connect(self.addr);
@@ -170,7 +217,11 @@ fn accept_loop(listener: &TcpListener, shared: &Arc<GwShared>) {
         match stream {
             Ok(conn) => {
                 let conn_shared = Arc::clone(shared);
-                std::thread::spawn(move || handle_conn(&conn_shared, conn));
+                conn_shared.conns.fetch_add(1, Ordering::SeqCst);
+                std::thread::spawn(move || {
+                    handle_conn(&conn_shared, conn);
+                    conn_shared.conns.fetch_sub(1, Ordering::SeqCst);
+                });
             }
             Err(e) => {
                 eprintln!("gateway accept error: {e}");
@@ -179,38 +230,118 @@ fn accept_loop(listener: &TcpListener, shared: &Arc<GwShared>) {
     }
 }
 
+/// Per-connection loop: non-streaming requests honor HTTP/1.1 keep-alive
+/// (sequential requests on one socket — health probes and stat pollers
+/// stop burning a thread+socket per poll), bounded by [`KEEP_ALIVE_IDLE`];
+/// a stream takes the socket over and closes it at its terminal event.
 fn handle_conn(shared: &Arc<GwShared>, mut stream: TcpStream) {
-    let request = match http::read_request(&mut stream, shared.cfg.max_body_bytes) {
-        Ok(Some(r)) => r,
-        Ok(None) => return, // clean close before any bytes
-        Err(e) => {
-            let _ = http::write_json_response(
-                &mut stream,
-                400,
-                "Bad Request",
-                &[],
-                &error_body("invalid", &e.to_string()),
-            );
-            return;
+    let _ = stream.set_read_timeout(Some(KEEP_ALIVE_IDLE));
+    loop {
+        let request = match http::read_request(&mut stream, shared.cfg.max_body_bytes) {
+            Ok(Some(r)) => r,
+            Ok(None) => return, // clean close before any bytes
+            Err(e) => {
+                if matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut) {
+                    return; // idle keep-alive socket reclaimed
+                }
+                let _ = http::write_json_response(
+                    &mut stream,
+                    400,
+                    "Bad Request",
+                    &[],
+                    false,
+                    &error_body("invalid", &e.to_string()),
+                );
+                return;
+            }
+        };
+        // HTTP/1.1 default: keep-alive unless the client says close.
+        let keep_alive = !request
+            .header("connection")
+            .map_or(false, |v| v.eq_ignore_ascii_case("close"));
+        match (request.method.as_str(), request.path.as_str()) {
+            ("POST", "/v1/generate") => {
+                // Streaming: the SSE response owns the socket to its end.
+                handle_generate(shared, stream, &request);
+                return;
+            }
+            ("GET", "/v1/stats") => handle_stats(shared, &mut stream, keep_alive),
+            ("GET", "/healthz") => handle_healthz(&mut stream, keep_alive),
+            ("GET", "/readyz") => handle_readyz(shared, &mut stream, keep_alive),
+            _ => {
+                let _ = http::write_json_response(
+                    &mut stream,
+                    404,
+                    "Not Found",
+                    &[],
+                    keep_alive,
+                    &error_body("invalid", "unknown route"),
+                );
+            }
         }
-    };
-    match (request.method.as_str(), request.path.as_str()) {
-        ("POST", "/v1/generate") => handle_generate(shared, stream, &request),
-        ("GET", "/v1/stats") => handle_stats(shared, &mut stream),
-        _ => {
-            let _ = http::write_json_response(
-                &mut stream,
-                404,
-                "Not Found",
-                &[],
-                &error_body("invalid", "unknown route"),
-            );
+        if !keep_alive {
+            return;
         }
     }
 }
 
-/// `POST /v1/generate`: parse, admit, submit, stream.
+/// `GET /healthz`: liveness — the process is up and answering.
+fn handle_healthz(stream: &mut TcpStream, keep_alive: bool) {
+    let body = json::obj(vec![("status", json::s("ok"))]).dump();
+    let _ = http::write_json_response(stream, 200, "OK", &[], keep_alive, &body);
+}
+
+/// `GET /readyz`: readiness — 503 + `Retry-After` while draining or with
+/// zero KV-pool headroom, 200 otherwise. The body reports both inputs so
+/// probes can tell the cases apart.
+fn handle_readyz(shared: &Arc<GwShared>, stream: &mut TcpStream, keep_alive: bool) {
+    let draining = shared.draining.load(Ordering::SeqCst);
+    let stats = shared.server.stats();
+    let headroom = stats.kv_capacity_pages == 0 || stats.kv_free_pages > 0;
+    let ready = !draining && headroom;
+    let body = json::obj(vec![
+        ("ready", Json::Bool(ready)),
+        ("draining", Json::Bool(draining)),
+        ("kv_free_pages", json::n(stats.kv_free_pages as f64)),
+        ("kv_capacity_pages", json::n(stats.kv_capacity_pages as f64)),
+    ])
+    .dump();
+    if ready {
+        let _ = http::write_json_response(stream, 200, "OK", &[], keep_alive, &body);
+    } else {
+        let retry_secs = shared.cfg.retry_after_ms.div_ceil(1000).max(1);
+        let _ = http::write_json_response(
+            stream,
+            503,
+            "Service Unavailable",
+            &[("Retry-After", retry_secs.to_string())],
+            keep_alive,
+            &body,
+        );
+    }
+}
+
+/// `POST /v1/generate`: parse, admit, submit, stream — or, with a
+/// `Last-Event-ID` header, resume an existing session at its cursor.
 fn handle_generate(shared: &Arc<GwShared>, mut stream: TcpStream, req: &http::HttpRequest) {
+    if shared.draining.load(Ordering::SeqCst) {
+        let retry_secs = shared.cfg.retry_after_ms.div_ceil(1000).max(1);
+        let _ = http::write_json_response(
+            &mut stream,
+            503,
+            "Service Unavailable",
+            &[("Retry-After", retry_secs.to_string())],
+            false,
+            &error_body("draining", "gateway is draining; retry against the next incarnation"),
+        );
+        return;
+    }
+    if let Some(cursor) = req.header("last-event-id") {
+        let cursor = cursor.to_string();
+        let tenant = req.header("x-pallas-tenant").unwrap_or("anon").to_string();
+        handle_resume(shared, stream, &cursor, &tenant);
+        return;
+    }
     let parsed = match parse_generate_body(&shared.cfg, &req.body) {
         Ok(p) => p,
         Err(message) => {
@@ -219,6 +350,7 @@ fn handle_generate(shared: &Arc<GwShared>, mut stream: TcpStream, req: &http::Ht
                 400,
                 "Bad Request",
                 &[],
+                false,
                 &error_body("invalid", &message),
             );
             return;
@@ -229,7 +361,9 @@ fn handle_generate(shared: &Arc<GwShared>, mut stream: TcpStream, req: &http::Ht
 
     // Per-tenant admission *before* the request touches the server: an
     // over-quota tenant is refused at the door with a retry hint, exactly
-    // like a shed-mode Capacity refusal.
+    // like a shed-mode Capacity refusal. The quota rides the session: it
+    // releases when this attachment ends (terminal or disconnect) — a
+    // later resume does not re-enter the governor.
     let pages = pages_for(parsed.tokens.len() + parsed.generate);
     if let Err(reason) = shared.governor.try_admit(&tenant, pages) {
         write_429(&mut stream, &shared.cfg, &reason);
@@ -242,9 +376,65 @@ fn handle_generate(shared: &Arc<GwShared>, mut stream: TcpStream, req: &http::Ht
     if parsed.deadline_ms > 0 {
         request = request.with_deadline(parsed.deadline_ms);
     }
-    let (events, terminal) = shared.server.submit_streaming(request);
-    serve_stream(shared, &mut stream, id, &tenant, &events, &terminal);
+    let (sid, events, terminal) = shared.server.open_session(request);
+    serve_session(shared, &mut stream, &sid, &tenant, &[], None, &events, &terminal);
     shared.governor.release(&tenant, pages);
+}
+
+/// `POST /v1/generate` with `Last-Event-ID: <session>:<seq>`: re-attach at
+/// the cursor, replay the buffered suffix, continue live. Refusals map to
+/// HTTP statuses before any SSE bytes: unknown session → 404, replay
+/// window lost → 410, already attached → 409, cursor past high water →
+/// 400.
+fn handle_resume(shared: &Arc<GwShared>, mut stream: TcpStream, cursor: &str, tenant: &str) {
+    let parsed = cursor
+        .rsplit_once(':')
+        .and_then(|(sid, seq)| seq.trim().parse::<usize>().ok().map(|s| (sid, s)));
+    let Some((sid, after)) = parsed else {
+        let _ = http::write_json_response(
+            &mut stream,
+            400,
+            "Bad Request",
+            &[],
+            false,
+            &error_body("invalid", "Last-Event-ID must be <session-id>:<seq>"),
+        );
+        return;
+    };
+    let new_id = shared.next_id.fetch_add(1, Ordering::Relaxed);
+    match shared.server.resume_session(sid, after, new_id) {
+        Ok(ticket) => {
+            // Reconnect-race pressure: a delay here lets a second resume
+            // attempt observe the Busy refusal window.
+            crate::fault::maybe_slow(FaultPoint::SlowClient, new_id);
+            serve_session(
+                shared,
+                &mut stream,
+                &ticket.session_id,
+                tenant,
+                &ticket.replay,
+                ticket.done,
+                &ticket.events,
+                &ticket.terminal,
+            );
+        }
+        Err(err) => {
+            let (status, reason, class) = match &err {
+                ResumeError::Unknown => (404, "Not Found", "unknown_session"),
+                ResumeError::ReplayLost { .. } => (410, "Gone", "replay_lost"),
+                ResumeError::Busy => (409, "Conflict", "session_busy"),
+                ResumeError::BadCursor { .. } => (400, "Bad Request", "bad_cursor"),
+            };
+            let _ = http::write_json_response(
+                &mut stream,
+                status,
+                reason,
+                &[],
+                false,
+                &error_body(class, &err.to_string()),
+            );
+        }
+    }
 }
 
 struct GenerateParams {
@@ -285,22 +475,50 @@ fn parse_generate_body(cfg: &GatewayConfig, body: &[u8]) -> Result<GenerateParam
     Ok(GenerateParams { tokens, generate, deadline_ms })
 }
 
-/// Pump the event channel onto the SSE socket, then deliver the terminal.
-/// Every path consumes the terminal response (or times out trying), so the
-/// engine's exactly-once contract extends to the wire.
-fn serve_stream(
+/// Pump a session onto the SSE socket: replay the buffered suffix first
+/// (on resume), then live events, then the terminal. The preamble is
+/// written lazily so failures that precede any output still map to HTTP
+/// status codes; once SSE bytes are on the wire, failures become
+/// structured events. A failed write *parks* the session — the client may
+/// come back with `Last-Event-ID` — rather than cancelling it.
+fn serve_session(
     shared: &Arc<GwShared>,
     stream: &mut TcpStream,
-    id: u64,
+    sid: &str,
     tenant: &str,
+    replay: &[(usize, u32)],
+    done: Option<Response>,
     events: &Receiver<StreamEvent>,
     terminal: &Receiver<Response>,
 ) {
     let mut headers_written = false;
+    let session_header = [("X-Pallas-Session", sid.to_string())];
+    for &(seq, token) in replay {
+        if !headers_written {
+            if http::write_sse_preamble(stream, &session_header).is_err() {
+                session_gone(shared, sid, tenant, events);
+                return;
+            }
+            headers_written = true;
+        }
+        let id_field = format!("{sid}:{seq}");
+        if http::write_sse_event_id(stream, "token", &id_field, &replay_event(seq, token))
+            .is_err()
+        {
+            session_gone(shared, sid, tenant, events);
+            return;
+        }
+    }
+    // A session that already finished while parked: the stored terminal is
+    // everything that's left (the hub forgot the session on handout).
+    if let Some(response) = done {
+        deliver_terminal(shared, stream, tenant, &session_header, headers_written, &response);
+        return;
+    }
     while let Ok(event) = events.recv() {
         if !headers_written {
-            if http::write_sse_preamble(stream).is_err() {
-                client_gone(shared, id, tenant, events, terminal);
+            if http::write_sse_preamble(stream, &session_header).is_err() {
+                session_gone(shared, sid, tenant, events);
                 return;
             }
             headers_written = true;
@@ -308,21 +526,23 @@ fn serve_stream(
         // Fault hooks: a slow-reading client backs up here (the engine
         // keeps decoding — events buffer in the channel), and an injected
         // gateway drop behaves exactly like a failed socket write.
-        crate::fault::maybe_slow(FaultPoint::SlowClient, id);
-        let wrote = if crate::fault::fires(FaultPoint::GatewayDrop, id) {
+        crate::fault::maybe_slow(FaultPoint::SlowClient, event.id);
+        let wrote = if crate::fault::fires(FaultPoint::GatewayDrop, event.id) {
             Err(io::Error::new(io::ErrorKind::BrokenPipe, "injected gateway drop"))
         } else {
-            http::write_sse_event(stream, "token", &token_event(&event))
+            let id_field = format!("{sid}:{}", event.total);
+            http::write_sse_event_id(stream, "token", &id_field, &token_event(&event))
         };
         if wrote.is_err() {
-            client_gone(shared, id, tenant, events, terminal);
+            session_gone(shared, sid, tenant, events);
             return;
         }
     }
 
-    let response = recv_terminal(terminal, id);
-    // Failures that precede any stream output map to HTTP status codes;
-    // once SSE bytes are on the wire, failures become structured events.
+    // Event channel closed ⇒ the hub delivered the terminal (attached
+    // sessions never park server-side); recv_terminal only times out if the
+    // coordinator wedged.
+    let response = recv_terminal(terminal);
     match &response.error {
         Some(ServerError::Capacity(reason)) if !headers_written => {
             write_429(stream, &shared.cfg, reason);
@@ -333,6 +553,7 @@ fn serve_stream(
                 400,
                 "Bad Request",
                 &[],
+                false,
                 &error_body("invalid", reason),
             );
         }
@@ -346,48 +567,58 @@ fn serve_stream(
             );
         }
         _ => {
-            if !headers_written && http::write_sse_preamble(stream).is_err() {
-                // Terminal already consumed; the client just never hears it.
-                shared.governor.note_disconnect(tenant);
-                return;
-            }
-            let result = match &response.error {
-                Some(err) => http::write_sse_event(
-                    stream,
-                    "error",
-                    &error_event(&response, err),
-                ),
-                None => http::write_sse_event(stream, "done", &done_event(&response)),
-            };
-            if result.is_err() {
-                shared.governor.note_disconnect(tenant);
-            }
+            deliver_terminal(shared, stream, tenant, &session_header, headers_written, &response);
         }
     }
 }
 
-/// The client's socket died mid-stream: cancel the request (pages/pins
-/// release at the next safe point), then drain both channels so the
-/// session's terminal is consumed exactly once.
-fn client_gone(
+/// Write the terminal `done`/`error` SSE event (opening the stream first if
+/// nothing was written yet).
+fn deliver_terminal(
     shared: &Arc<GwShared>,
-    id: u64,
+    stream: &mut TcpStream,
+    tenant: &str,
+    session_header: &[(&str, String)],
+    headers_written: bool,
+    response: &Response,
+) {
+    if !headers_written && http::write_sse_preamble(stream, session_header).is_err() {
+        // Terminal already consumed; the client just never hears it.
+        shared.governor.note_disconnect(tenant);
+        return;
+    }
+    let result = match &response.error {
+        Some(err) => http::write_sse_event(stream, "error", &error_event(response, err)),
+        None => http::write_sse_event(stream, "done", &done_event(response)),
+    };
+    if result.is_err() {
+        shared.governor.note_disconnect(tenant);
+    }
+}
+
+/// The client's socket died mid-stream: *park* the session (decode pauses,
+/// pages stay pinned, resumable for `session_linger_ms` — the expiry sweep
+/// reclaims it if nobody comes back), then drain the event channel so a
+/// hub-side finish isn't blocked. The terminal stays with the hub for a
+/// late resume; it is not consumed here.
+fn session_gone(
+    shared: &Arc<GwShared>,
+    sid: &str,
     tenant: &str,
     events: &Receiver<StreamEvent>,
-    terminal: &Receiver<Response>,
 ) {
-    shared.server.cancel(id);
+    // `false` = the session already finished or expired; nothing to park.
+    let _ = shared.server.park_session(sid);
     shared.governor.note_disconnect(tenant);
     while events.recv().is_ok() {}
-    let _ = recv_terminal(terminal, id);
 }
 
 /// Wait for the terminal response, synthesizing an `Internal` failure if
 /// the coordinator never delivers one (it always should).
-fn recv_terminal(terminal: &Receiver<Response>, id: u64) -> Response {
+fn recv_terminal(terminal: &Receiver<Response>) -> Response {
     terminal.recv_timeout(TERMINAL_WAIT).unwrap_or_else(|_| {
         Response::failure(
-            id,
+            0,
             0.0,
             String::new(),
             ServerError::Internal("stream terminal lost".into()),
@@ -408,12 +639,25 @@ fn write_429(stream: &mut TcpStream, cfg: &GatewayConfig, reason: &str) {
         429,
         "Too Many Requests",
         &[("Retry-After", retry_secs.to_string())],
+        false,
         &body,
     );
 }
 
 fn error_body(class: &str, message: &str) -> String {
     json::obj(vec![("error", json::s(class)), ("message", json::s(message))]).dump()
+}
+
+/// `token` event payload for a replayed token: same shape as a live event
+/// (one token, `total` = its 1-based seq) plus a `replayed` marker, so the
+/// resumed byte stream carries the same token sequence as the original.
+fn replay_event(seq: usize, token: u32) -> String {
+    json::obj(vec![
+        ("tokens", Json::Arr(vec![json::n(token as f64)])),
+        ("total", json::n(seq as f64)),
+        ("replayed", Json::Bool(true)),
+    ])
+    .dump()
 }
 
 /// `token` event payload: this step's tokens plus the running total.
@@ -473,7 +717,7 @@ fn error_class(err: &ServerError) -> &'static str {
 }
 
 /// `GET /v1/stats`: the server snapshot plus gateway admission holdings.
-fn handle_stats(shared: &Arc<GwShared>, stream: &mut TcpStream) {
+fn handle_stats(shared: &Arc<GwShared>, stream: &mut TcpStream, keep_alive: bool) {
     let stats = shared.server.stats();
     let tenants = Json::Arr(
         stats
@@ -522,9 +766,17 @@ fn handle_stats(shared: &Arc<GwShared>, stream: &mut TcpStream) {
         ("shed_level", json::n(stats.shed_level as f64)),
         ("workers", json::n(stats.workers as f64)),
         ("kernel", json::s(&stats.kernel)),
+        ("sessions_live", json::n(stats.sessions_live as f64)),
+        ("sessions_parked", json::n(stats.sessions_parked as f64)),
+        ("sessions_resumed", json::n(stats.sessions_resumed as f64)),
+        ("sessions_expired", json::n(stats.sessions_expired as f64)),
+        ("sessions_persisted", json::n(stats.sessions_persisted as f64)),
+        ("sessions_recovered", json::n(stats.sessions_recovered as f64)),
+        ("kv_free_pages", json::n(stats.kv_free_pages as f64)),
+        ("kv_capacity_pages", json::n(stats.kv_capacity_pages as f64)),
         ("tenants", tenants),
         ("admission", admission),
     ])
     .dump();
-    let _ = http::write_json_response(stream, 200, "OK", &[], &body);
+    let _ = http::write_json_response(stream, 200, "OK", &[], keep_alive, &body);
 }

@@ -56,6 +56,7 @@
 //! testable.
 
 pub mod cancel;
+pub mod session;
 pub mod shed;
 
 use crate::attention::{AttentionBackend, AttentionSpec, AttnPolicy};
@@ -74,6 +75,7 @@ use crate::parallel;
 use crate::runtime::ArtifactRegistry;
 use anyhow::Result;
 use cancel::{CancelRegistry, CancelToken};
+use session::{ResumeError, SessionCounters, SessionHub};
 use shed::{build_ladder, LoadShedder, Rung};
 use std::collections::{HashMap, VecDeque};
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -101,6 +103,10 @@ pub struct Job {
     /// Per-step token stream for [`ScoringServer::submit_streaming`]
     /// clients (`None` = unary submit). Dropped at the terminal response.
     pub stream: Option<Sender<StreamEvent>>,
+    /// Resumable session (opened through [`ScoringServer::open_session`]):
+    /// tokens and the terminal route through the [`SessionHub`] instead of
+    /// the direct channels above.
+    pub session: bool,
 }
 
 /// One decode step's incremental output, delivered on the event channel of
@@ -115,6 +121,19 @@ pub struct StreamEvent {
     pub tokens: Vec<u32>,
     /// Total tokens generated so far, including `tokens`.
     pub total: usize,
+}
+
+/// What [`ScoringServer::resume_session`] hands the gateway: the buffered
+/// suffix to replay (sequence-numbered), the live receivers for this
+/// attachment, and — when the session already finished — the stored
+/// terminal (no live continuation follows; replay and close).
+pub struct SessionTicket {
+    pub session_id: String,
+    /// Buffered `(seq, token)` pairs strictly after the resume cursor.
+    pub replay: Vec<(usize, u32)>,
+    pub events: Receiver<StreamEvent>,
+    pub terminal: Receiver<Response>,
+    pub done: Option<Response>,
 }
 
 /// Server statistics snapshot.
@@ -185,6 +204,19 @@ pub struct ServerStats {
     /// clients as they land), including the partial output of cancelled /
     /// expired / faulted sessions.
     pub streamed_tokens: usize,
+    /// Resumable-session lifecycle counters (see [`SessionCounters`]):
+    /// entries currently held, cumulative parks, resumes, linger expiries,
+    /// drain persists, and restart recoveries.
+    pub sessions_live: usize,
+    pub sessions_parked: u64,
+    pub sessions_resumed: u64,
+    pub sessions_expired: u64,
+    pub sessions_persisted: u64,
+    pub sessions_recovered: u64,
+    /// KV-pool headroom for the gateway's readiness probe: free pages and
+    /// total pool capacity (both 0 without a decode engine).
+    pub kv_free_pages: usize,
+    pub kv_capacity_pages: usize,
     /// Per-tenant terminal accounting, sorted by tenant key. Balance
     /// invariant: Σ tenants.requests == completed + cancelled + expired +
     /// shed_rejects + internal_errors (Invalid/Unsupported refusals are
@@ -382,6 +414,9 @@ struct GenSession {
     /// Per-step token stream (`submit_streaming`); dropped with the session
     /// at conclude, which disconnects the event channel.
     stream: Option<Sender<StreamEvent>>,
+    /// Resumable sessions emit through the hub (sequence-numbered, with a
+    /// replay buffer) instead of the direct `stream` channel.
+    hub: Option<Arc<SessionHub>>,
     /// Fairness/accounting key from the request (empty = anonymous).
     tenant: String,
     /// Scheduler lane (stable per tenant) this session decodes in.
@@ -403,6 +438,8 @@ struct InFlightInfo {
     /// Event stream to hand to the session once the prefill installs
     /// (`None` for checked-out decode steps — the session carries its own).
     stream: Option<Sender<StreamEvent>>,
+    /// Routes this request's tokens/terminal through the [`SessionHub`].
+    session: bool,
     tenant: String,
     lane: usize,
 }
@@ -530,6 +567,16 @@ struct DecodeEngine {
     /// Tenant key → scheduler lane index (first-seen order; the DRR lanes
     /// give each tenant a fair share of prefill and decode dispatch).
     tenant_lanes: HashMap<String, usize>,
+    /// Resumable-session registry shared with the server handle and the
+    /// gateway. The engine emits/finishes through it; parked sessions step
+    /// out of `sessions` into `parked` (pages stay pinned) until a resume
+    /// wakes them or the linger expiry reclaims them.
+    hub: Arc<SessionHub>,
+    /// Sessions paused because their client vanished: removed from decode
+    /// scheduling but holding their KV pages and prefix pin, keyed by
+    /// engine request id. `active()` counts them — a parked session is
+    /// in-flight work until it resumes, expires, or the drain persists it.
+    parked: HashMap<u64, GenSession>,
 }
 
 impl DecodeEngine {
@@ -538,6 +585,7 @@ impl DecodeEngine {
         cfg: &ServingConfig,
         spec: &AttentionSpec,
         cancels: Arc<CancelRegistry>,
+        hub: Arc<SessionHub>,
     ) -> DecodeEngine {
         let mut manager_cfg = PreScoreManagerConfig::from_serving(cfg).unwrap_or_else(|e| {
             // A bad [prescore] method must not silently change the decode
@@ -599,10 +647,15 @@ impl DecodeEngine {
                         model.cfg.vocab,
                         &p,
                     ) {
-                        Ok(n) => eprintln!(
-                            "prefix cache: restored {n} prefixes from {}",
-                            p.display()
-                        ),
+                        Ok((n, sessions)) => {
+                            let ns = sessions.len();
+                            hub.restore(sessions);
+                            eprintln!(
+                                "prefix cache: restored {n} prefixes and {ns} parked \
+                                 sessions from {}",
+                                p.display()
+                            );
+                        }
                         Err(e) => eprintln!(
                             "prefix cache: ignoring {}: {e:#}",
                             p.display()
@@ -648,6 +701,8 @@ impl DecodeEngine {
             faulted_admits: std::collections::HashSet::new(),
             checked_out: HashMap::new(),
             tenant_lanes: HashMap::new(),
+            hub,
+            parked: HashMap::new(),
         }
     }
 
@@ -659,6 +714,7 @@ impl DecodeEngine {
             || !self.in_flight.is_empty()
             || !self.sessions.is_empty()
             || !self.checked_out.is_empty()
+            || !self.parked.is_empty()
     }
 
     /// Stable scheduler lane for a tenant key (created on first sight).
@@ -703,12 +759,13 @@ impl DecodeEngine {
     ) {
         self.cancels.remove(id);
         plock(shared).record_failure(tenant, &err);
-        let _ = respond.send(Response::failure(
-            id,
-            ms_since(arrived),
-            self.rungs[0].spec_str.clone(),
-            err,
-        ));
+        let resp =
+            Response::failure(id, ms_since(arrived), self.rungs[0].spec_str.clone(), err);
+        // Session requests answer through the hub (which owns exactly-once
+        // terminal delivery); everyone else on the direct channel.
+        if !self.hub.finish(id, &resp) {
+            let _ = respond.send(resp);
+        }
     }
 
     /// Phase 1 of a prefill, under the engine lock: admission checks (the
@@ -813,7 +870,7 @@ impl DecodeEngine {
                 .as_ref()
                 .map_or(false, |c| c.wants_insert(&tokens, cached, full_only));
         let lane = self.lane_for(&job.request.tenant);
-        let Job { request, respond, stream } = job;
+        let Job { request, respond, stream, session } = job;
         self.in_flight.insert(
             id,
             InFlightInfo {
@@ -824,6 +881,7 @@ impl DecodeEngine {
                 cancel,
                 deadline: request.deadline(),
                 stream,
+                session,
                 tenant: request.tenant.clone(),
                 lane,
             },
@@ -866,13 +924,16 @@ impl DecodeEngine {
                     self.cancels.remove(id);
                     self.faulted_admits.remove(&id);
                     plock(shared).record_failure(&info.tenant, &err);
-                    if let Some(tx) = respond {
-                        let _ = tx.send(Response::failure(
-                            id,
-                            ms_since(arrived),
-                            self.rungs[info.rung].spec_str.clone(),
-                            err,
-                        ));
+                    let resp = Response::failure(
+                        id,
+                        ms_since(arrived),
+                        self.rungs[info.rung].spec_str.clone(),
+                        err,
+                    );
+                    if !self.hub.finish(id, &resp) {
+                        if let Some(tx) = respond {
+                            let _ = tx.send(resp);
+                        }
                     }
                     return;
                 }
@@ -884,6 +945,7 @@ impl DecodeEngine {
                 self.kv.set_selections(id, Self::selections_snapshot(&sess));
                 plock(shared).prefills += 1;
                 let lane = info.lane;
+                let hub = info.session.then(|| Arc::clone(&self.hub));
                 self.sessions.insert(
                     id,
                     GenSession {
@@ -901,11 +963,20 @@ impl DecodeEngine {
                         rung: info.rung,
                         policy: Arc::clone(&self.rungs[info.rung].policy),
                         stream: info.stream,
+                        hub,
                         tenant: info.tenant,
                         lane,
                     },
                 );
-                self.scheduler.submit_decode_for(lane, id);
+                if self.hub.park_requested(id) {
+                    // The client vanished during the prefill: pause before
+                    // the first decode step, pages pinned, resumable.
+                    if let Some(s) = self.sessions.remove(&id) {
+                        self.parked.insert(id, s);
+                    }
+                } else {
+                    self.scheduler.submit_decode_for(lane, id);
+                }
             }
             Err(e) => {
                 self.kv.evict(id);
@@ -916,13 +987,16 @@ impl DecodeEngine {
                 self.faulted_admits.remove(&id);
                 let err = ServerError::Internal(format!("prefill failed: {e:#}"));
                 plock(shared).record_failure(&info.tenant, &err);
-                if let Some(tx) = respond {
-                    let _ = tx.send(Response::failure(
-                        id,
-                        ms_since(arrived),
-                        self.rungs[info.rung].spec_str.clone(),
-                        err,
-                    ));
+                let resp = Response::failure(
+                    id,
+                    ms_since(arrived),
+                    self.rungs[info.rung].spec_str.clone(),
+                    err,
+                );
+                if !self.hub.finish(id, &resp) {
+                    if let Some(tx) = respond {
+                        let _ = tx.send(resp);
+                    }
                 }
             }
         }
@@ -933,7 +1007,7 @@ impl DecodeEngine {
     /// with the engine lock held; locks `shared` inside (engine → shared is
     /// the lock order everywhere).
     fn fail_request(&mut self, id: u64, shared: &Mutex<SharedStats>) {
-        if self.sessions.contains_key(&id) {
+        if self.sessions.contains_key(&id) || self.parked.contains_key(&id) {
             let err = ServerError::Internal("decode worker panicked".into());
             self.conclude(id, Some(err), shared);
             return;
@@ -950,13 +1024,16 @@ impl DecodeEngine {
             self.faulted_admits.remove(&id);
             let err = ServerError::Internal("decode worker panicked".into());
             plock(shared).record_failure(&info.tenant, &err);
-            if let Some(tx) = info.respond {
-                let _ = tx.send(Response::failure(
-                    id,
-                    ms_since(info.arrived),
-                    self.rungs[info.rung].spec_str.clone(),
-                    err,
-                ));
+            let resp = Response::failure(
+                id,
+                ms_since(info.arrived),
+                self.rungs[info.rung].spec_str.clone(),
+                err,
+            );
+            if !self.hub.finish(id, &resp) {
+                if let Some(tx) = info.respond {
+                    let _ = tx.send(resp);
+                }
             }
             return;
         }
@@ -969,13 +1046,16 @@ impl DecodeEngine {
             self.faulted_admits.remove(&id);
             let err = ServerError::Internal("prefill worker panicked".into());
             plock(shared).record_failure(&info.tenant, &err);
-            if let Some(tx) = info.respond {
-                let _ = tx.send(Response::failure(
-                    id,
-                    ms_since(info.arrived),
-                    self.rungs[info.rung].spec_str.clone(),
-                    err,
-                ));
+            let resp = Response::failure(
+                id,
+                ms_since(info.arrived),
+                self.rungs[info.rung].spec_str.clone(),
+                err,
+            );
+            if !self.hub.finish(id, &resp) {
+                if let Some(tx) = info.respond {
+                    let _ = tx.send(resp);
+                }
             }
             return;
         }
@@ -983,12 +1063,15 @@ impl DecodeEngine {
             self.cancels.remove(id);
             let err = ServerError::Internal("worker panicked before prefill".into());
             plock(shared).record_failure(&job.request.tenant, &err);
-            let _ = job.respond.send(Response::failure(
+            let resp = Response::failure(
                 id,
                 ms_since(job.request.arrived),
                 self.rungs[0].spec_str.clone(),
                 err,
-            ));
+            );
+            if !self.hub.finish(id, &resp) {
+                let _ = job.respond.send(resp);
+            }
         }
         // Unknown id: already terminal (e.g. concluded inside the panicked
         // round before the panic) — nothing to release.
@@ -1010,6 +1093,7 @@ impl DecodeEngine {
             &self.policy,
             self.model.cfg.n_heads,
             uniform_only,
+            &self.hub.records(),
             &path,
         ) {
             eprintln!("prefix cache persist failed: {e:#}");
@@ -1044,6 +1128,15 @@ impl DecodeEngine {
                 self.conclude(id, None, shared);
                 continue;
             }
+            if s.hub.is_some() && self.hub.park_requested(id) {
+                // Client vanished: pause this session at the between-rounds
+                // safe point — no KV append, no step, pages stay pinned —
+                // until a resume wakes it or the linger expiry reclaims it.
+                if let Some(s) = self.sessions.remove(&id) {
+                    self.parked.insert(id, s);
+                }
+                continue;
+            }
             if self.kv.append_token(id).is_none() {
                 eprintln!("kv cache exhausted for sequence {id}; finishing early");
                 self.conclude(id, None, shared);
@@ -1063,6 +1156,7 @@ impl DecodeEngine {
                     cancel: sess.cancel.clone(),
                     deadline: sess.deadline,
                     stream: None,
+                    session: sess.hub.is_some(),
                     tenant: sess.tenant.clone(),
                     lane: sess.lane,
                 },
@@ -1092,6 +1186,17 @@ impl DecodeEngine {
                     }
                     if c.finished {
                         self.conclude(d.id, None, shared);
+                    } else if self
+                        .sessions
+                        .get(&d.id)
+                        .map_or(false, |s| s.hub.is_some())
+                        && self.hub.park_requested(d.id)
+                    {
+                        // Pause instead of rescheduling: the step that just
+                        // landed is buffered in the hub for replay.
+                        if let Some(s) = self.sessions.remove(&d.id) {
+                            self.parked.insert(d.id, s);
+                        }
                     } else {
                         self.scheduler.submit_decode_for(lane, d.id);
                     }
@@ -1116,7 +1221,9 @@ impl DecodeEngine {
     /// is success; a cancelled/expired/faulted session still reports its
     /// partial `generated`/`nll` payload.
     fn conclude(&mut self, id: u64, error: Option<ServerError>, shared: &Mutex<SharedStats>) {
-        let Some(s) = self.sessions.remove(&id) else { return };
+        let Some(s) = self.sessions.remove(&id).or_else(|| self.parked.remove(&id)) else {
+            return;
+        };
         self.kv.evict(id);
         if let (Some(pin), Some(cache)) = (s.cache_pin, self.cache.as_mut()) {
             cache.release(pin);
@@ -1147,22 +1254,73 @@ impl DecodeEngine {
                 Some(err) => st.record_failure(&s.tenant, err),
             }
         }
-        if let Some(tx) = s.respond {
-            let decode_steps = s.generated.len();
-            let _ = tx.send(Response {
-                id,
-                nll: s.nll,
-                generated: s.generated,
-                latency_ms: lat.as_secs_f64() * 1e3,
-                kernel: self.kernel.to_string(),
-                retained_keys: retained,
-                fallback_used: fallback,
-                decode_steps,
-                decode_ms: s.decode_ms,
-                degraded: s.rung > 0,
-                spec: self.rungs[s.rung].spec_str.clone(),
-                error,
-            });
+        let decode_steps = s.generated.len();
+        let resp = Response {
+            id,
+            nll: s.nll,
+            generated: s.generated,
+            latency_ms: lat.as_secs_f64() * 1e3,
+            kernel: self.kernel.to_string(),
+            retained_keys: retained,
+            fallback_used: fallback,
+            decode_steps,
+            decode_ms: s.decode_ms,
+            degraded: s.rung > 0,
+            spec: self.rungs[s.rung].spec_str.clone(),
+            error,
+        };
+        // Session terminals route through the hub (exactly once, stored for
+        // late resumes); a detached-for-persist or non-session id falls back
+        // to the direct response channel.
+        if !self.hub.finish(id, &resp) {
+            if let Some(tx) = s.respond {
+                let _ = tx.send(resp);
+            }
+        }
+    }
+
+    /// Wake `id` after a resume re-attached its session: a parked session
+    /// rejoins decode scheduling; an id still live in any phase (racing the
+    /// park at a safe point) needs no wake. Returns whether the id is live
+    /// in this engine at all — `false` means the caller must re-admit.
+    fn wake_or_live(&mut self, id: u64) -> bool {
+        if let Some(s) = self.parked.remove(&id) {
+            let lane = s.lane;
+            self.sessions.insert(id, s);
+            self.scheduler.submit_decode_for(lane, id);
+            return true;
+        }
+        self.sessions.contains_key(&id)
+            || self.in_flight.contains_key(&id)
+            || self.pending.contains_key(&id)
+            || self.checked_out.contains_key(&id)
+    }
+
+    /// Lifecycle sweep: conclude sessions whose linger window elapsed while
+    /// parked (Cancelled — the PR 6 reclaim path, pages/pins released) and
+    /// GC expired detached entries. Ids the hub no longer tracks but the
+    /// engine still runs (a park/finish race) get their cancel token
+    /// tripped so the next safe point concludes them.
+    fn expire_sessions(&mut self, shared: &Mutex<SharedStats>) {
+        for id in self.hub.take_expired() {
+            if self.parked.contains_key(&id) || self.sessions.contains_key(&id) {
+                self.conclude(id, Some(ServerError::Cancelled), shared);
+            } else {
+                self.cancels.cancel(id);
+            }
+        }
+    }
+
+    /// Shutdown-drain step: detach every parked session for persistence
+    /// (the hub keeps it as a resumable record for `save_cache`), then run
+    /// the normal teardown so its pages and pins release with balanced
+    /// accounting. The terminal is Cancelled — the client is gone; a future
+    /// incarnation serves the resume from the persisted record instead.
+    fn drain_parked(&mut self, shared: &Mutex<SharedStats>) {
+        let ids: Vec<u64> = self.parked.keys().copied().collect();
+        for id in ids {
+            self.hub.detach_for_persist(id);
+            self.conclude(id, Some(ServerError::Cancelled), shared);
         }
     }
 }
@@ -1176,6 +1334,7 @@ impl DecodeEngine {
 struct StatsSources {
     shared: Arc<Mutex<SharedStats>>,
     engine: Option<Arc<Mutex<DecodeEngine>>>,
+    hub: Arc<SessionHub>,
     workers: usize,
     kernel: String,
     started: Instant,
@@ -1188,6 +1347,8 @@ pub struct ScoringServer {
     cancels: Arc<CancelRegistry>,
     /// Live-stats handles shared with the run loop ([`ScoringServer::stats`]).
     stats_src: StatsSources,
+    /// Resumable-session registry shared with the decode engine.
+    hub: Arc<SessionHub>,
     handle: Option<std::thread::JoinHandle<ServerStats>>,
 }
 
@@ -1242,11 +1403,21 @@ impl ScoringServer {
         crate::fault::install_from_env();
         let cancels = Arc::new(CancelRegistry::new());
         let loop_cancels = Arc::clone(&cancels);
-        let engine = model
-            .map(|m| Arc::new(Mutex::new(DecodeEngine::new(m, &cfg, &spec, Arc::clone(&cancels)))));
+        let hub =
+            Arc::new(SessionHub::new(cfg.session_linger_ms, cfg.session_replay_tokens));
+        let engine = model.map(|m| {
+            Arc::new(Mutex::new(DecodeEngine::new(
+                m,
+                &cfg,
+                &spec,
+                Arc::clone(&cancels),
+                Arc::clone(&hub),
+            )))
+        });
         let stats_src = StatsSources {
             shared: Arc::new(Mutex::new(SharedStats::default())),
             engine,
+            hub: Arc::clone(&hub),
             workers: worker_count(&cfg),
             kernel: backend.kernel_name().to_string(),
             started: Instant::now(),
@@ -1255,7 +1426,7 @@ impl ScoringServer {
         let handle = std::thread::spawn(move || {
             run_loop(cfg, buckets, jobs_rx, backend, spec, loop_src, loop_cancels)
         });
-        Ok(ScoringServer { jobs_tx, cancels, stats_src, handle: Some(handle) })
+        Ok(ScoringServer { jobs_tx, cancels, stats_src, hub, handle: Some(handle) })
     }
 
     /// Submit a request; returns the channel the response arrives on. A
@@ -1264,7 +1435,9 @@ impl ScoringServer {
     pub fn submit(&self, request: Request) -> Receiver<Response> {
         let (tx, rx) = channel();
         self.cancels.register(request.id);
-        if let Err(e) = self.jobs_tx.send(Job { request, respond: tx, stream: None }) {
+        if let Err(e) =
+            self.jobs_tx.send(Job { request, respond: tx, stream: None, session: false })
+        {
             let Job { request, respond, .. } = e.0;
             self.cancels.remove(request.id);
             let _ = respond.send(Response::failure(
@@ -1291,7 +1464,10 @@ impl ScoringServer {
         let (ev_tx, ev_rx) = channel();
         let (tx, rx) = channel();
         self.cancels.register(request.id);
-        if let Err(e) = self.jobs_tx.send(Job { request, respond: tx, stream: Some(ev_tx) }) {
+        if let Err(e) = self
+            .jobs_tx
+            .send(Job { request, respond: tx, stream: Some(ev_tx), session: false })
+        {
             let Job { request, respond, .. } = e.0;
             self.cancels.remove(request.id);
             let _ = respond.send(Response::failure(
@@ -1302,6 +1478,121 @@ impl ScoringServer {
             ));
         }
         (ev_rx, rx)
+    }
+
+    /// Open a **resumable** streaming session: like `submit_streaming`, but
+    /// tokens and the terminal route through the [`SessionHub`] — sequence-
+    /// numbered, replay-buffered, and parked (not cancelled) when the
+    /// client vanishes. Returns the server-issued session id a client
+    /// echoes back in `Last-Event-ID`, plus the event/terminal receivers
+    /// for this attachment.
+    pub fn open_session(
+        &self,
+        request: Request,
+    ) -> (String, Receiver<StreamEvent>, Receiver<Response>) {
+        let (ev_tx, ev_rx) = channel();
+        let (term_tx, term_rx) = channel();
+        let id = request.id;
+        let arrived = request.arrived;
+        let sid = self.hub.open(
+            id,
+            &request.tenant,
+            request.tokens.clone(),
+            request.generate,
+            ev_tx,
+            term_tx,
+        );
+        self.cancels.register(id);
+        // The hub owns the only live terminal channel; the Job's respond
+        // sender deliberately goes nowhere (see `conclude`'s finish-first
+        // delivery) so a session can never receive two terminals.
+        let (dangle, _nobody) = channel();
+        if self
+            .jobs_tx
+            .send(Job { request, respond: dangle, stream: None, session: true })
+            .is_err()
+        {
+            self.cancels.remove(id);
+            let resp = Response::failure(
+                id,
+                ms_since(arrived),
+                String::new(),
+                ServerError::Internal("server is shut down".into()),
+            );
+            self.hub.finish(id, &resp);
+        }
+        (sid, ev_rx, term_rx)
+    }
+
+    /// The client of `sid` vanished: park the session. Decode pauses at the
+    /// next safe point with KV pages and prefix pins held; the entry stays
+    /// resumable for `session_linger_ms` before the cancel path reclaims
+    /// it. Returns `false` for unknown or already-finished sessions.
+    pub fn park_session(&self, sid: &str) -> bool {
+        self.hub.park(sid).is_some()
+    }
+
+    /// Re-attach a client to `sid` at cursor `after` (the sequence number
+    /// from `Last-Event-ID`; 0 = from the start). On success the ticket
+    /// carries the buffered `(seq, token)` suffix to replay and the live
+    /// event/terminal receivers. A parked session wakes in place; a
+    /// session restored from a persisted store re-admits its context under
+    /// `new_id` — warm through the prefix cache, fast-forwarded by the
+    /// hub's high-water suppression, bitwise identical under greedy decode.
+    pub fn resume_session(
+        &self,
+        sid: &str,
+        after: usize,
+        new_id: u64,
+    ) -> Result<SessionTicket, ResumeError> {
+        let (ev_tx, ev_rx) = channel();
+        let (term_tx, term_rx) = channel();
+        let out = self.hub.attach_for_resume(sid, after, ev_tx, term_tx)?;
+        let ticket = |done: Option<Response>| SessionTicket {
+            session_id: sid.to_string(),
+            replay: out.replay.clone(),
+            events: ev_rx,
+            terminal: term_rx,
+            done,
+        };
+        if out.done.is_some() {
+            // Already finished: replay + stored terminal, engine untouched.
+            return Ok(ticket(out.done.clone()));
+        }
+        let live = out.engine_bound
+            && self
+                .stats_src
+                .engine
+                .as_deref()
+                .map_or(false, |e| plock(e).wake_or_live(out.request_id));
+        if !live {
+            // Restored from a persisted store (or the engine already tore
+            // the old id down): re-admit the full context under a fresh id.
+            // The prefill is warm through the restored prefix cache and the
+            // regenerated prefix is suppressed below the high-water mark.
+            self.hub.rekey(sid, new_id);
+            self.cancels.register(new_id);
+            let mut request = Request::scoring(new_id, out.context.clone())
+                .with_tenant(&out.tenant);
+            request.generate = out.target;
+            let arrived = request.arrived;
+            let (dangle, _nobody) = channel();
+            if self
+                .jobs_tx
+                .send(Job { request, respond: dangle, stream: None, session: true })
+                .is_err()
+            {
+                self.cancels.remove(new_id);
+                let resp = Response::failure(
+                    new_id,
+                    ms_since(arrived),
+                    String::new(),
+                    ServerError::Internal("server is shut down".into()),
+                );
+                self.hub.finish(new_id, &resp);
+            }
+        }
+        Ok(ticket(None))
     }
 
     /// Live statistics snapshot (the gateway's `/v1/stats`). Counters are
@@ -1438,6 +1729,7 @@ fn run_loop(
     // `stats()` snapshots); the run loop borrows through the same Arcs.
     let engine: Option<&Mutex<DecodeEngine>> = src.engine.as_deref();
     let shared: &Mutex<SharedStats> = &src.shared;
+    let hub: &SessionHub = &src.hub;
     let mut responders: HashMap<u64, Sender<Response>> = Default::default();
     let workers = src.workers;
     let queue = WorkQueue::new();
@@ -1574,7 +1866,7 @@ fn run_loop(
                             // generation request as scoring-only (or a
                             // dropped channel the client can't classify).
                             cancels.remove(job.request.id);
-                            let _ = job.respond.send(Response::failure(
+                            let resp = Response::failure(
                                 job.request.id,
                                 ms_since(job.request.arrived),
                                 spec_str.clone(),
@@ -1582,7 +1874,10 @@ fn run_loop(
                                     "generation requires a substrate model (weights.bin)"
                                         .into(),
                                 ),
-                            ));
+                            );
+                            if !hub.finish(job.request.id, &resp) {
+                                let _ = job.respond.send(resp);
+                            }
                         }
                     }
                     return;
@@ -1609,8 +1904,13 @@ fn run_loop(
                     Err(RecvTimeoutError::Disconnected) => open = false,
                 }
             } else {
-                // Shutdown drain: no new jobs can arrive; pace the loop
-                // while in-flight decode sequences finish.
+                // Shutdown drain: no new jobs can arrive; parked sessions
+                // detach into persistable records (their pages release with
+                // balanced accounting) and the loop paces while in-flight
+                // decode sequences finish.
+                if let Some(e) = engine {
+                    plock(e).drain_parked(shared);
+                }
                 std::thread::sleep(Duration::from_millis(2));
             }
             // Ship every batch the policy allows right now.
@@ -1622,9 +1922,14 @@ fn run_loop(
                     ship(batch, &mut responders, &queue, &cancels, &shared, &spec_str);
                 }
             }
-            // Seed engine rounds (workers keep them flowing afterwards).
+            // Session-lifecycle sweep (parked entries past their linger
+            // window reclaim through the cancel path), then seed engine
+            // rounds (workers keep them flowing afterwards).
             if let Some(e) = engine {
-                let round = plock(e).next_round(workers);
+                let mut g = plock(e);
+                g.expire_sessions(shared);
+                let round = g.next_round(workers);
+                drop(g);
                 for it in round {
                     queue.push(Work::Gen(it));
                 }
@@ -1652,13 +1957,22 @@ fn run_loop(
 /// the KV/prefix numbers *before* the counter lock (engine → shared is the
 /// process-wide lock order, and the two are never held together here).
 fn snapshot_stats(src: &StatsSources) -> ServerStats {
-    let (prefix, kv_acquired, kv_released) = match src.engine.as_deref() {
+    let (prefix, kv_acquired, kv_released, kv_free, kv_cap) = match src.engine.as_deref() {
         Some(e) => {
             let eng = plock(e);
-            (eng.cache_stats(), eng.kv.pages_acquired(), eng.kv.pages_released())
+            (
+                eng.cache_stats(),
+                eng.kv.pages_acquired(),
+                eng.kv.pages_released(),
+                eng.kv.free_blocks(),
+                eng.kv.capacity(),
+            )
         }
-        None => (CacheStats::default(), 0, 0),
+        None => (CacheStats::default(), 0, 0, 0, 0),
     };
+    // Hub counters after the engine lock is released (the hub has its own
+    // lock; never held together with the engine's here).
+    let sessions: SessionCounters = src.hub.counters();
     let elapsed = src.started.elapsed().as_secs_f64().max(1e-9);
     let stats = plock(&src.shared);
     let mut tenants: Vec<TenantStats> = stats
@@ -1709,6 +2023,14 @@ fn snapshot_stats(src: &StatsSources) -> ServerStats {
         prefix_pins_released: prefix.pins_released,
         shed_level: stats.shed_level,
         streamed_tokens: stats.streamed_tokens,
+        sessions_live: sessions.live,
+        sessions_parked: sessions.parked,
+        sessions_resumed: sessions.resumed,
+        sessions_expired: sessions.expired,
+        sessions_persisted: sessions.persisted,
+        sessions_recovered: sessions.recovered,
+        kv_free_pages: kv_free,
+        kv_capacity_pages: kv_cap,
         tenants,
     }
 }
@@ -1889,7 +2211,12 @@ fn decode_step_compute(step: DecodeStep) -> DecodeStepDone {
         s.next_token = argmax_row(&row);
         let ms = t0.elapsed().as_secs_f64() * 1e3;
         s.decode_ms += ms;
-        if let Some(tx) = &s.stream {
+        if let Some(hub) = &s.hub {
+            // Sequence-numbered through the hub: buffered for replay,
+            // suppressed below the high-water mark on a fast-forwarding
+            // re-admit, forwarded live when a client is attached.
+            hub.emit(id, s.generated.len(), token);
+        } else if let Some(tx) = &s.stream {
             let _ = tx.send(StreamEvent { id, tokens: vec![token], total: s.generated.len() });
         }
         let finished =

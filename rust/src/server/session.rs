@@ -1,0 +1,663 @@
+//! Per-session lifecycle for resumable SSE streams.
+//!
+//! Every streaming request admitted through the gateway gets a
+//! [`SessionHub`] entry: a server-issued session id, a bounded replay
+//! buffer of emitted tokens (sequence-numbered from 1), and an attachment
+//! state tracking whether a client is currently connected. The hub is the
+//! single routing point between the decode engine (which emits tokens by
+//! engine request id) and the wire (which addresses sessions by the opaque
+//! session id a client echoes back in `Last-Event-ID`).
+//!
+//! Lifecycle: [`SessionHub::open`] (admitted, client attached) →
+//! [`SessionHub::park`] (client vanished: decode pauses, KV pages stay
+//! pinned, the entry lingers for `session_linger_ms`) → either
+//! [`SessionHub::attach_for_resume`] (client reconnected: replay the
+//! buffered suffix, continue decoding) or expiry
+//! ([`SessionHub::take_expired`] feeds the engine's cancel path, which
+//! reclaims pages/pins with balanced accounting). [`SessionHub::finish`]
+//! records the terminal exactly once; a late resume of a finished session
+//! replays the buffered tail plus the stored terminal without touching the
+//! engine. Across a restart, [`SessionHub::records`] /
+//! [`SessionHub::restore`] round-trip unfinished detached sessions through
+//! the versioned `cache::persist` store; restored entries are not
+//! engine-bound, so a resume re-admits the context (warm via the persisted
+//! prefix cache — no second cold prefill) and fast-forwards: [`SessionHub::emit`]
+//! suppresses regenerated sequence numbers at or below the high-water
+//! mark, which greedy decode makes bitwise identical to the original
+//! stream.
+//!
+//! Lock order: the engine mutex may be held while calling into the hub;
+//! hub methods never call back into the engine.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::mpsc::Sender;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use super::StreamEvent;
+use crate::cache::persist::SessionRecord;
+use crate::coordinator::Response;
+use crate::fault::{self, FaultPoint};
+
+/// Where a session's client currently is.
+enum Attach {
+    /// A client is connected: tokens forward live, the terminal goes out on
+    /// `terminal` exactly once.
+    Attached { events: Sender<StreamEvent>, terminal: Sender<Response> },
+    /// The client vanished mid-stream; decode is paused and the entry
+    /// expires `linger` after `since` unless a resume re-attaches.
+    Parked { since: Instant },
+    /// No client and no engine work pending (finished, persisted, or
+    /// restored from a store). Resumable until the linger GC collects it.
+    Detached { since: Instant },
+}
+
+struct SessionEntry {
+    /// Engine request id currently producing for this session. Stale (and
+    /// `engine_bound == false`) for entries restored from a persisted store.
+    request_id: u64,
+    /// Whether `request_id` names a live registration in *this* process's
+    /// engine. Restored entries are unbound: resume must re-admit.
+    engine_bound: bool,
+    tenant: String,
+    /// Full request context — kept so an unbound resume can re-admit.
+    context: Vec<u32>,
+    /// Total tokens the original request asked to generate.
+    target: usize,
+    /// Replay window: the most recent emitted tokens, oldest first.
+    emitted: VecDeque<u32>,
+    /// Sequence number (1-based) of `emitted.front()`.
+    base: usize,
+    /// High-water sequence number: count of tokens ever emitted.
+    total: usize,
+    /// Terminal response, recorded exactly once by `finish`.
+    finished: Option<Response>,
+    attach: Attach,
+}
+
+/// Why a resume attempt was refused (the gateway maps these to HTTP
+/// statuses: Unknown → 404, ReplayLost → 410, Busy → 409, BadCursor → 400).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ResumeError {
+    /// No such session id (never existed, expired, or GC'd).
+    Unknown,
+    /// Another client is still attached to this session.
+    Busy,
+    /// The cursor is ahead of anything the server ever emitted.
+    BadCursor { high_water: usize },
+    /// The replay buffer no longer reaches back to the cursor: the oldest
+    /// buffered sequence number is `window_start`.
+    ReplayLost { window_start: usize },
+}
+
+impl std::fmt::Display for ResumeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ResumeError::Unknown => write!(f, "unknown session"),
+            ResumeError::Busy => write!(f, "session already attached"),
+            ResumeError::BadCursor { high_water } => {
+                write!(f, "cursor past high water {high_water}")
+            }
+            ResumeError::ReplayLost { window_start } => {
+                write!(f, "replay window starts at {window_start}")
+            }
+        }
+    }
+}
+
+/// What a successful [`SessionHub::attach_for_resume`] hands back: the
+/// buffered `(seq, token)` suffix to replay, plus what the server layer
+/// needs to wake (engine-bound) or re-admit (restored) the session.
+pub struct Resumption {
+    pub request_id: u64,
+    pub engine_bound: bool,
+    pub tenant: String,
+    pub context: Vec<u32>,
+    pub target: usize,
+    /// Buffered tokens with sequence numbers strictly after the cursor.
+    pub replay: Vec<(usize, u32)>,
+    /// Present when the session already finished: the stored terminal.
+    /// No channels were installed; the caller replays and closes.
+    pub done: Option<Response>,
+}
+
+/// Session counters for `ServerStats` / the gateway stats endpoint.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SessionCounters {
+    /// Entries currently held (attached + parked + detached-but-resumable).
+    pub live: usize,
+    /// Cumulative attached → parked transitions.
+    pub parked: u64,
+    /// Cumulative successful re-attaches.
+    pub resumed: u64,
+    /// Cumulative parked entries reclaimed by linger expiry (or the
+    /// `session_expire` fault point).
+    pub expired: u64,
+    /// Cumulative entries detached for persistence at drain.
+    pub persisted: u64,
+    /// Cumulative entries restored from a persisted store.
+    pub recovered: u64,
+}
+
+struct HubInner {
+    by_sid: HashMap<String, SessionEntry>,
+    /// Engine request id → session id, for `emit`/`finish` routing. Only
+    /// engine-bound entries appear here.
+    by_req: HashMap<u64, String>,
+    next: u64,
+    parked: u64,
+    resumed: u64,
+    expired: u64,
+    persisted: u64,
+    recovered: u64,
+}
+
+/// The session registry shared by the engine, the run loop, and the
+/// gateway-facing `ScoringServer` session API.
+pub struct SessionHub {
+    inner: Mutex<HubInner>,
+    /// Process-unique prefix for session ids, so ids from a previous
+    /// incarnation can't collide with (or be confused for) this one's.
+    boot: u64,
+    linger: Duration,
+    replay_cap: usize,
+}
+
+impl SessionHub {
+    pub fn new(linger_ms: u64, replay_tokens: usize) -> SessionHub {
+        let nanos = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(0);
+        let boot = crate::fault::splitmix64(nanos ^ (u64::from(std::process::id()) << 32));
+        SessionHub {
+            inner: Mutex::new(HubInner {
+                by_sid: HashMap::new(),
+                by_req: HashMap::new(),
+                next: 0,
+                parked: 0,
+                resumed: 0,
+                expired: 0,
+                persisted: 0,
+                recovered: 0,
+            }),
+            boot,
+            linger: Duration::from_millis(linger_ms),
+            replay_cap: replay_tokens.max(1),
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, HubInner> {
+        // Hub ops are single-entry map edits; a panicking holder leaves the
+        // maps usable.
+        self.inner.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
+    /// Register a new streaming session and return its server-issued id.
+    pub fn open(
+        &self,
+        request_id: u64,
+        tenant: &str,
+        context: Vec<u32>,
+        target: usize,
+        events: Sender<StreamEvent>,
+        terminal: Sender<Response>,
+    ) -> String {
+        let mut g = self.lock();
+        g.next += 1;
+        let sid = format!("{:016x}-{:x}", self.boot, g.next);
+        g.by_req.insert(request_id, sid.clone());
+        g.by_sid.insert(
+            sid.clone(),
+            SessionEntry {
+                request_id,
+                engine_bound: true,
+                tenant: tenant.to_string(),
+                context,
+                target,
+                emitted: VecDeque::new(),
+                base: 1,
+                total: 0,
+                finished: None,
+                attach: Attach::Attached { events, terminal },
+            },
+        );
+        sid
+    }
+
+    /// Record one emitted token for `request_id` at sequence number `seq`
+    /// (1-based) and forward it to the attached client, if any. Sequence
+    /// numbers at or below the high-water mark are suppressed — that is the
+    /// fast-forward path when a restored session regenerates its prefix.
+    /// Returns whether the request id routes to a session.
+    pub fn emit(&self, request_id: u64, seq: usize, token: u32) -> bool {
+        let mut g = self.lock();
+        let Some(sid) = g.by_req.get(&request_id).cloned() else {
+            return false;
+        };
+        let Some(e) = g.by_sid.get_mut(&sid) else {
+            return false;
+        };
+        if seq <= e.total {
+            // Regenerated position (greedy decode replays deterministically);
+            // the client already has it — from the live stream or the buffer.
+            return true;
+        }
+        e.total = seq;
+        e.emitted.push_back(token);
+        // The overflow fault shrinks the window to one token so chaos runs
+        // exercise the ReplayLost refusal without a 512-token stream.
+        let cap = if fault::fires(FaultPoint::ReplayOverflow, request_id) {
+            1
+        } else {
+            self.replay_cap
+        };
+        while e.emitted.len() > cap {
+            e.emitted.pop_front();
+            e.base += 1;
+        }
+        if let Attach::Attached { events, .. } = &e.attach {
+            // A dead receiver is handled by the gateway's disconnect path
+            // (park), not here — emit never mutates attachment.
+            let _ = events.send(StreamEvent {
+                id: request_id,
+                tokens: vec![token],
+                total: seq,
+            });
+        }
+        true
+    }
+
+    /// Record `request_id`'s terminal. Sends it to the attached client (if
+    /// any), stores it for late resumes, detaches, and unbinds the request
+    /// id. Returns `false` when the id routes to no session — the caller
+    /// owns terminal delivery in that case.
+    pub fn finish(&self, request_id: u64, resp: &Response) -> bool {
+        let mut g = self.lock();
+        let Some(sid) = g.by_req.remove(&request_id) else {
+            return false;
+        };
+        let Some(e) = g.by_sid.get_mut(&sid) else {
+            return false;
+        };
+        if let Attach::Attached { terminal, .. } = &e.attach {
+            let _ = terminal.send(resp.clone());
+        }
+        e.finished = Some(resp.clone());
+        e.engine_bound = false;
+        // Dropping the senders disconnects the event channel — that is how
+        // an attached gateway loop learns the stream is over.
+        e.attach = Attach::Detached { since: Instant::now() };
+        true
+    }
+
+    /// The client vanished: park the session (decode pauses at the next
+    /// safe point; the entry lingers, resumable). Returns the engine
+    /// request id, or `None` when the session is unknown or already
+    /// finished (nothing to park).
+    pub fn park(&self, sid: &str) -> Option<u64> {
+        let mut g = self.lock();
+        let e = g.by_sid.get_mut(sid)?;
+        if e.finished.is_some() {
+            return None;
+        }
+        if matches!(e.attach, Attach::Attached { .. }) {
+            e.attach = Attach::Parked { since: Instant::now() };
+            g.parked += 1;
+        }
+        g.by_sid.get(sid).map(|e| e.request_id)
+    }
+
+    /// Whether the engine should pause decoding `request_id` (its session
+    /// is parked). Safe to call lock-free relative to the engine.
+    pub fn park_requested(&self, request_id: u64) -> bool {
+        let g = self.lock();
+        g.by_req
+            .get(&request_id)
+            .and_then(|sid| g.by_sid.get(sid))
+            .is_some_and(|e| matches!(e.attach, Attach::Parked { .. }))
+    }
+
+    /// Re-attach a client at cursor `after` (= last sequence number it
+    /// received; 0 = from the start). On success the buffered suffix comes
+    /// back for replay and — unless the session already finished — the
+    /// channels are installed for live continuation.
+    pub fn attach_for_resume(
+        &self,
+        sid: &str,
+        after: usize,
+        events: Sender<StreamEvent>,
+        terminal: Sender<Response>,
+    ) -> Result<Resumption, ResumeError> {
+        let mut g = self.lock();
+        let Some(e) = g.by_sid.get_mut(sid) else {
+            return Err(ResumeError::Unknown);
+        };
+        if matches!(e.attach, Attach::Attached { .. }) {
+            return Err(ResumeError::Busy);
+        }
+        if after > e.total {
+            return Err(ResumeError::BadCursor { high_water: e.total });
+        }
+        if after + 1 < e.base {
+            return Err(ResumeError::ReplayLost { window_start: e.base });
+        }
+        let skip = after + 1 - e.base;
+        let base = e.base;
+        let replay: Vec<(usize, u32)> =
+            e.emitted.iter().enumerate().skip(skip).map(|(i, &t)| (base + i, t)).collect();
+        let done = e.finished.clone();
+        if done.is_none() {
+            e.attach = Attach::Attached { events, terminal };
+        }
+        let out = Resumption {
+            request_id: e.request_id,
+            engine_bound: e.engine_bound,
+            tenant: e.tenant.clone(),
+            context: e.context.clone(),
+            target: e.target,
+            replay,
+            done,
+        };
+        if out.done.is_none() {
+            g.resumed += 1;
+        }
+        Ok(out)
+    }
+
+    /// Rebind a session to a fresh engine request id (the re-admit path for
+    /// restored sessions). The new id routes `emit`/`finish` from now on.
+    pub fn rekey(&self, sid: &str, new_id: u64) {
+        let mut g = self.lock();
+        let Some(e) = g.by_sid.get_mut(sid) else {
+            return;
+        };
+        let old = e.request_id;
+        e.request_id = new_id;
+        e.engine_bound = true;
+        g.by_req.remove(&old);
+        g.by_req.insert(new_id, sid.to_string());
+    }
+
+    /// Detach a parked session ahead of drain persistence: unbind the
+    /// request id so the engine's subsequent teardown terminal does NOT
+    /// finish the entry — it survives as a clean resumable record for
+    /// [`SessionHub::records`]. Returns whether the id routed to a session.
+    pub fn detach_for_persist(&self, request_id: u64) -> bool {
+        let mut g = self.lock();
+        let Some(sid) = g.by_req.remove(&request_id) else {
+            return false;
+        };
+        let Some(e) = g.by_sid.get_mut(&sid) else {
+            return false;
+        };
+        e.engine_bound = false;
+        e.attach = Attach::Detached { since: Instant::now() };
+        g.persisted += 1;
+        true
+    }
+
+    /// Collect expired sessions: parked entries past the linger window (or
+    /// force-expired by the `session_expire` fault point) are removed and
+    /// their engine request ids returned so the caller can run the cancel
+    /// path; detached entries past the linger window are GC'd in place.
+    pub fn take_expired(&self) -> Vec<u64> {
+        let mut g = self.lock();
+        let linger = self.linger;
+        let mut reclaim = Vec::new();
+        let mut drop_sids = Vec::new();
+        for (sid, e) in &g.by_sid {
+            match e.attach {
+                Attach::Parked { since } => {
+                    if since.elapsed() >= linger
+                        || fault::fires(FaultPoint::SessionExpire, e.request_id)
+                    {
+                        reclaim.push(e.request_id);
+                        drop_sids.push(sid.clone());
+                    }
+                }
+                Attach::Detached { since } => {
+                    if since.elapsed() >= linger {
+                        drop_sids.push(sid.clone());
+                    }
+                }
+                Attach::Attached { .. } => {}
+            }
+        }
+        g.expired += reclaim.len() as u64;
+        for sid in drop_sids {
+            if let Some(e) = g.by_sid.remove(&sid) {
+                g.by_req.remove(&e.request_id);
+            }
+        }
+        reclaim
+    }
+
+    /// Unfinished, detached sessions as persistable records (sorted by id
+    /// for a deterministic store).
+    pub fn records(&self) -> Vec<SessionRecord> {
+        let g = self.lock();
+        let mut out: Vec<SessionRecord> = g
+            .by_sid
+            .iter()
+            .filter(|(_, e)| e.finished.is_none() && matches!(e.attach, Attach::Detached { .. }))
+            .map(|(sid, e)| SessionRecord {
+                sid: sid.clone(),
+                tenant: e.tenant.clone(),
+                context: e.context.clone(),
+                target: e.target as u32,
+                base: e.base as u32,
+                total: e.total as u32,
+                emitted: e.emitted.iter().copied().collect(),
+            })
+            .collect();
+        out.sort_by(|a, b| a.sid.cmp(&b.sid));
+        out
+    }
+
+    /// Re-register sessions from a persisted store. Restored entries are
+    /// detached and NOT engine-bound — a resume re-admits their context
+    /// (warm through the restored prefix cache) and fast-forwards.
+    pub fn restore(&self, records: Vec<SessionRecord>) {
+        let mut g = self.lock();
+        for r in records {
+            g.recovered += 1;
+            g.by_sid.insert(
+                r.sid,
+                SessionEntry {
+                    request_id: 0,
+                    engine_bound: false,
+                    tenant: r.tenant,
+                    context: r.context,
+                    target: r.target as usize,
+                    emitted: r.emitted.into_iter().collect(),
+                    base: r.base as usize,
+                    total: r.total as usize,
+                    finished: None,
+                    attach: Attach::Detached { since: Instant::now() },
+                },
+            );
+        }
+    }
+
+    pub fn counters(&self) -> SessionCounters {
+        let g = self.lock();
+        SessionCounters {
+            live: g.by_sid.len(),
+            parked: g.parked,
+            resumed: g.resumed,
+            expired: g.expired,
+            persisted: g.persisted,
+            recovered: g.recovered,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::ServerError;
+    use std::sync::mpsc::channel;
+
+    fn resp(id: u64) -> Response {
+        Response::failure(id, 0.0, "test".into(), ServerError::Cancelled)
+    }
+
+    fn hub(linger_ms: u64, cap: usize) -> SessionHub {
+        SessionHub::new(linger_ms, cap)
+    }
+
+    #[test]
+    fn open_emit_forward_and_buffer() {
+        let h = hub(10_000, 8);
+        let (etx, erx) = channel();
+        let (ttx, _trx) = channel();
+        let sid = h.open(7, "t", vec![1, 2], 4, etx, ttx);
+        assert!(h.emit(7, 1, 10));
+        assert!(h.emit(7, 2, 11));
+        let ev = erx.recv().unwrap();
+        assert_eq!((ev.id, ev.total, ev.tokens.clone()), (7, 1, vec![10]));
+        assert_eq!(erx.recv().unwrap().total, 2);
+        assert!(!h.emit(99, 1, 0), "unknown id routes nowhere");
+        assert_eq!(h.counters().live, 1);
+        assert!(!sid.is_empty());
+    }
+
+    #[test]
+    fn replay_window_trims_and_reports_loss() {
+        let h = hub(10_000, 2);
+        let (etx, _erx) = channel();
+        let (ttx, _trx) = channel();
+        let sid = h.open(1, "t", vec![], 8, etx, ttx);
+        for (seq, tok) in [(1usize, 100u32), (2, 101), (3, 102), (4, 103)] {
+            h.emit(1, seq, tok);
+        }
+        assert_eq!(h.park(&sid), Some(1));
+        // Window now holds seqs 3..=4; cursor 1 is unreachable.
+        let (e2, _r2) = channel();
+        let (t2, _u2) = channel();
+        match h.attach_for_resume(&sid, 1, e2, t2) {
+            Err(ResumeError::ReplayLost { window_start }) => assert_eq!(window_start, 3),
+            other => panic!("expected ReplayLost, got {:?}", other.err()),
+        }
+        let (e3, _r3) = channel();
+        let (t3, _u3) = channel();
+        let out = h.attach_for_resume(&sid, 2, e3, t3).expect("cursor 2 is in-window");
+        assert_eq!(out.replay, vec![(3, 102), (4, 103)]);
+    }
+
+    #[test]
+    fn suppression_fast_forwards_below_high_water() {
+        let h = hub(10_000, 8);
+        let (etx, erx) = channel();
+        let (ttx, _trx) = channel();
+        let sid = h.open(5, "t", vec![], 8, etx, ttx);
+        h.emit(5, 1, 10);
+        h.emit(5, 2, 11);
+        assert_eq!(h.park(&sid), Some(5));
+        let (e2, r2) = channel();
+        let (t2, _u2) = channel();
+        let out = h.attach_for_resume(&sid, 2, e2, t2).expect("resume");
+        assert!(out.replay.is_empty(), "cursor at high water → nothing to replay");
+        // A restored-style regeneration replays seqs 1..=2 — suppressed —
+        // then continues with fresh ones.
+        h.rekey(&sid, 50);
+        assert!(h.emit(50, 1, 10));
+        assert!(h.emit(50, 2, 11));
+        assert!(h.emit(50, 3, 12));
+        let ev = r2.recv().unwrap();
+        assert_eq!((ev.total, ev.tokens.clone()), (3, vec![12]), "only the fresh token lands");
+    }
+
+    #[test]
+    fn finish_is_exactly_once_and_survives_for_late_resume() {
+        let h = hub(10_000, 8);
+        let (etx, _erx) = channel();
+        let (ttx, trx) = channel();
+        let sid = h.open(3, "t", vec![], 2, etx, ttx);
+        h.emit(3, 1, 42);
+        assert!(h.finish(3, &resp(3)));
+        assert!(trx.recv().is_ok(), "attached client gets the terminal");
+        assert!(!h.finish(3, &resp(3)), "request id is unbound after finish");
+        assert_eq!(h.park(&sid), None, "finished sessions don't park");
+        let (e2, _r2) = channel();
+        let (t2, u2) = channel();
+        let out = h.attach_for_resume(&sid, 0, e2, t2).expect("late resume");
+        assert_eq!(out.replay, vec![(1, 42)]);
+        assert!(out.done.is_some(), "stored terminal rides along");
+        drop(u2);
+    }
+
+    #[test]
+    fn park_expire_reclaims_and_forgets() {
+        let h = hub(0, 8);
+        let (etx, _erx) = channel();
+        let (ttx, _trx) = channel();
+        let sid = h.open(9, "t", vec![], 4, etx, ttx);
+        assert!(h.take_expired().is_empty(), "attached sessions never expire");
+        assert_eq!(h.park(&sid), Some(9));
+        let reclaimed = h.take_expired();
+        assert_eq!(reclaimed, vec![9]);
+        let (e2, _r2) = channel();
+        let (t2, _u2) = channel();
+        assert!(matches!(
+            h.attach_for_resume(&sid, 0, e2, t2),
+            Err(ResumeError::Unknown)
+        ));
+        let c = h.counters();
+        assert_eq!((c.live, c.expired), (0, 1));
+    }
+
+    #[test]
+    fn busy_and_bad_cursor_refusals() {
+        let h = hub(10_000, 8);
+        let (etx, _erx) = channel();
+        let (ttx, _trx) = channel();
+        let sid = h.open(2, "t", vec![], 4, etx, ttx);
+        h.emit(2, 1, 7);
+        let (e2, _r2) = channel();
+        let (t2, _u2) = channel();
+        assert!(matches!(h.attach_for_resume(&sid, 0, e2, t2), Err(ResumeError::Busy)));
+        h.park(&sid);
+        let (e3, _r3) = channel();
+        let (t3, _u3) = channel();
+        match h.attach_for_resume(&sid, 5, e3, t3) {
+            Err(ResumeError::BadCursor { high_water }) => assert_eq!(high_water, 1),
+            other => panic!("expected BadCursor, got {:?}", other.err()),
+        }
+    }
+
+    #[test]
+    fn records_restore_roundtrip() {
+        let h = hub(10_000, 8);
+        let (etx, _erx) = channel();
+        let (ttx, _trx) = channel();
+        let sid = h.open(4, "acme", vec![1, 2, 3], 6, etx, ttx);
+        h.emit(4, 1, 20);
+        h.emit(4, 2, 21);
+        h.park(&sid);
+        assert!(h.records().is_empty(), "parked-but-bound entries are not persisted");
+        assert!(h.detach_for_persist(4));
+        let recs = h.records();
+        assert_eq!(recs.len(), 1);
+        assert_eq!(recs[0].sid, sid);
+        assert_eq!(recs[0].emitted, vec![20, 21]);
+        assert_eq!((recs[0].base, recs[0].total, recs[0].target), (1, 2, 6));
+
+        let h2 = hub(10_000, 8);
+        h2.restore(recs);
+        let (e2, r2) = channel();
+        let (t2, _u2) = channel();
+        let out = h2.attach_for_resume(&sid, 0, e2, t2).expect("restored resume");
+        assert!(!out.engine_bound, "restored sessions must re-admit");
+        assert_eq!(out.replay, vec![(1, 20), (2, 21)]);
+        assert_eq!(out.context, vec![1, 2, 3]);
+        // Re-admit under a fresh id; regeneration fast-forwards.
+        h2.rekey(&sid, 77);
+        h2.emit(77, 1, 20);
+        h2.emit(77, 2, 21);
+        h2.emit(77, 3, 22);
+        assert_eq!(r2.recv().unwrap().tokens, vec![22]);
+        assert_eq!(h2.counters().recovered, 1);
+    }
+}

@@ -355,10 +355,11 @@ fn start_gateway(cfg: ServingConfig, seed: u64) -> Gateway {
 }
 
 /// Injected mid-stream socket drops (`GatewayDrop`): the schedule's victims
-/// behave exactly like clients whose connection died — the gateway cancels
-/// them, their KV pages and prefix pins release, and the spared streams
-/// run to a clean `done` event (a dropped stream never stalls the decode
-/// rounds the survivors share).
+/// behave exactly like clients whose connection died — the gateway *parks*
+/// their sessions (resumable, pages pinned), nobody resumes them, and the
+/// shutdown drain reclaims every one as a Cancelled terminal with balanced
+/// page/pin accounting. The spared streams run to a clean `done` event (a
+/// dropped stream never stalls the decode rounds the survivors share).
 #[test]
 fn chaos_gateway_drops_release_pages_and_never_stall() {
     let _g = GUARD.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
@@ -416,6 +417,100 @@ fn chaos_gateway_drops_release_pages_and_never_stall() {
     assert_eq!(stats.prefix_pins_acquired, stats.prefix_pins_released);
     assert_eq!(stats.tenants.len(), 1, "all streams ran as the anonymous tenant");
     assert_eq!(stats.tenants[0].cancels, n_dropped);
+}
+
+/// Session-lifecycle chaos (`SessionExpire` + `ReplayOverflow`): dropped
+/// streams park, and the armed `SessionExpire` point force-expires every
+/// parked session at the next lifecycle sweep — no `session_linger_ms`
+/// wait — so the reclaim path runs exactly as a linger timeout would:
+/// Cancelled terminal, balanced page/pin accounting, and the expired
+/// session id is *forgotten* (a late resume gets a typed 404, never a
+/// zombie). `ReplayOverflow` rides along, shrinking every victim's replay
+/// window at emit time, which must not disturb any of the above.
+#[test]
+fn chaos_forced_expiry_reclaims_parked_sessions() {
+    let _g = GUARD.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    let mut plan = FaultPlan::new(808)
+        .with_rate(FaultPoint::GatewayDrop, 500)
+        .with_rate(FaultPoint::SessionExpire, 1000)
+        .with_rate(FaultPoint::ReplayOverflow, 1000)
+        .with_rate(FaultPoint::SlowDecode, 1000);
+    plan.slow_ms = 10;
+    let _fault = arm(plan.clone());
+
+    let n_req = 6u64;
+    let n_new = 8usize;
+    let n_dropped =
+        (1..=n_req).filter(|&id| plan.would_fire(FaultPoint::GatewayDrop, id)).count();
+    assert!(n_dropped > 0, "seed 808 must drop at least one stream");
+    assert!(n_dropped < n_req as usize, "…and spare at least one");
+
+    let mut cfg = chaos_cfg();
+    no_shedding(&mut cfg);
+    cfg.executor_workers = 2;
+    let gw = start_gateway(cfg, 48);
+    let addr = gw.addr();
+
+    let clients: Vec<_> = (0..n_req)
+        .map(|i| {
+            let tokens = corpus::generate(64, 18 + (i as usize * 3) % 10, 900 + i);
+            std::thread::spawn(move || gw_generate(addr, &tokens, n_new))
+        })
+        .collect();
+    let mut victim_sid = None;
+    for client in clients {
+        let raw = client.join().expect("client thread");
+        assert!(raw.starts_with("HTTP/1.1 200"), "every stream starts: {raw:.40}");
+        if !raw.contains("event: done") {
+            // A dropped stream; remember its session id for the 404 probe.
+            victim_sid = raw.lines().find_map(|l| {
+                let (name, value) = l.split_once(':')?;
+                name.eq_ignore_ascii_case("x-pallas-session")
+                    .then(|| value.trim().to_string())
+            });
+        }
+    }
+    let victim_sid = victim_sid.expect("at least one dropped stream with a session header");
+
+    // Forced expiry: the sweep reclaims every parked victim without waiting
+    // out the 2 s default linger.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while gw.stats().cancelled < n_dropped {
+        assert!(Instant::now() < deadline, "forced expiry never reclaimed the parked set");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    // An expired session is forgotten, not undead: resuming it is a typed
+    // 404 refusal.
+    let mut probe = TcpStream::connect(addr).expect("connect");
+    probe.set_read_timeout(Some(Duration::from_secs(30))).expect("timeout");
+    probe
+        .write_all(
+            format!(
+                "POST /v1/generate HTTP/1.1\r\nHost: gw\r\nLast-Event-ID: {victim_sid}:1\r\nContent-Length: 0\r\n\r\n"
+            )
+            .as_bytes(),
+        )
+        .expect("write resume probe");
+    let mut raw = Vec::new();
+    let _ = probe.read_to_end(&mut raw);
+    let raw = String::from_utf8_lossy(&raw);
+    assert!(raw.starts_with("HTTP/1.1 404"), "expired session resume: {raw:.60}");
+
+    let stats = gw.shutdown();
+    assert_eq!(stats.completed, n_req as usize - n_dropped);
+    assert_eq!(stats.cancelled, n_dropped, "every forced expiry became a cancel");
+    assert!(
+        stats.sessions_expired >= n_dropped as u64,
+        "expiries counted: {}",
+        stats.sessions_expired
+    );
+    assert_eq!(
+        stats.kv_pages_acquired, stats.kv_pages_released,
+        "expired sessions must not leak KV pages"
+    );
+    assert_eq!(stats.prefix_pins_acquired, stats.prefix_pins_released);
+    assert_eq!(stats.worker_panics, 0);
 }
 
 /// Slow client reads (`SlowClient`): SSE writes sleep, but decode never

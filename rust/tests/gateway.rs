@@ -147,12 +147,16 @@ impl SseClient {
     }
 }
 
-/// Blocking GET; returns (status, raw headers, body text).
+/// Blocking GET; returns (status, raw headers, body text). Sends
+/// `Connection: close` so reading to EOF terminates promptly — the
+/// keep-alive path has its own test.
 fn http_get(addr: SocketAddr, path: &str) -> (u16, String, String) {
     let mut stream = TcpStream::connect(addr).expect("connect");
     stream.set_read_timeout(Some(Duration::from_secs(30))).expect("timeout");
     stream
-        .write_all(format!("GET {path} HTTP/1.1\r\nHost: gw\r\n\r\n").as_bytes())
+        .write_all(
+            format!("GET {path} HTTP/1.1\r\nHost: gw\r\nConnection: close\r\n\r\n").as_bytes(),
+        )
         .expect("write");
     let mut raw = Vec::new();
     let _ = stream.read_to_end(&mut raw);
@@ -161,6 +165,35 @@ fn http_get(addr: SocketAddr, path: &str) -> (u16, String, String) {
     let status: u16 =
         head.split_whitespace().nth(1).and_then(|s| s.parse().ok()).expect("status");
     (status, head.to_string(), body.to_string())
+}
+
+/// Read one `Content-Length`-framed HTTP response off a keep-alive socket.
+fn read_framed_response(stream: &mut TcpStream) -> (u16, String, String) {
+    let mut buf = Vec::new();
+    let mut tmp = [0u8; 1024];
+    let header_end = loop {
+        if let Some(idx) = buf.windows(4).position(|w| w == b"\r\n\r\n") {
+            break idx;
+        }
+        let n = stream.read(&mut tmp).expect("read headers");
+        assert!(n > 0, "connection closed before headers completed");
+        buf.extend_from_slice(&tmp[..n]);
+    };
+    let head = String::from_utf8(buf[..header_end].to_vec()).expect("utf8 headers");
+    let status: u16 =
+        head.split_whitespace().nth(1).and_then(|s| s.parse().ok()).expect("status");
+    let content_length: usize = head
+        .lines()
+        .find_map(|l| l.to_ascii_lowercase().strip_prefix("content-length:").map(str::trim).map(String::from))
+        .and_then(|v| v.parse().ok())
+        .expect("Content-Length header");
+    let mut body = buf[header_end + 4..].to_vec();
+    while body.len() < content_length {
+        let n = stream.read(&mut tmp).expect("read body");
+        assert!(n > 0, "connection closed mid-body");
+        body.extend_from_slice(&tmp[..n]);
+    }
+    (status, head, String::from_utf8(body).expect("utf8 body"))
 }
 
 fn event_tokens(data: &Json) -> Vec<u32> {
@@ -541,4 +574,104 @@ fn stats_endpoint_tenant_counters_balance_with_globals() {
     let stats = gw.shutdown();
     assert_eq!(stats.kv_pages_acquired, stats.kv_pages_released);
     assert_eq!(stats.prefix_pins_acquired, stats.prefix_pins_released);
+}
+
+/// `GET /healthz` is liveness (always 200); `GET /readyz` is readiness —
+/// 200 with headroom while serving, 503 + `Retry-After` while draining.
+#[test]
+fn healthz_and_readyz_report_liveness_and_readiness() {
+    let _g = GUARD.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    let _f = slow_decode(20);
+    let mut cfg = substrate_cfg();
+    cfg.executor_workers = 2;
+    let gw = start_gateway(cfg, GatewayConfig::default(), 77);
+    let addr = gw.addr();
+
+    let (status, _, body) = http_get(addr, "/healthz");
+    assert_eq!(status, 200);
+    assert!(body.contains("\"ok\""), "healthz body: {body}");
+
+    let (status, _, body) = http_get(addr, "/readyz");
+    assert_eq!(status, 200, "idle gateway is ready: {body}");
+    let ready = Json::parse(&body).expect("readyz JSON");
+    assert_eq!(ready.get("ready").and_then(Json::as_bool), Some(true));
+    assert_eq!(ready.get("draining").and_then(Json::as_bool), Some(false));
+    assert!(
+        ready.get("kv_capacity_pages").and_then(Json::as_usize).expect("capacity") > 0,
+        "readyz reports pool capacity"
+    );
+
+    // Hold a stream in flight so shutdown's drain grace stays open, then
+    // probe the draining gateway: readyz flips to 503 and new generates are
+    // refused with Retry-After while the in-flight stream still finishes.
+    let tokens = corpus::generate(64, 16, 21);
+    let mut holder = SseClient::post_generate(addr, &body_json(&tokens, 16), None);
+    let (status, _) = holder.read_headers();
+    assert_eq!(status, 200);
+    let _ = holder.next_event().expect("holder streaming");
+
+    let shutdown = std::thread::spawn(move || gw.shutdown());
+    std::thread::sleep(Duration::from_millis(60)); // let drain mode latch
+
+    let (status, head, body) = http_get(addr, "/readyz");
+    assert_eq!(status, 503, "draining gateway is not ready: {body}");
+    assert!(head.contains("Retry-After:"), "{head}");
+    let ready = Json::parse(&body).expect("readyz JSON");
+    assert_eq!(ready.get("draining").and_then(Json::as_bool), Some(true));
+
+    let mut refused = SseClient::post_generate(addr, &body_json(&tokens, 4), None);
+    let (status, head) = refused.read_headers();
+    assert_eq!(status, 503, "drain mode refuses new generates");
+    assert!(head.contains("Retry-After:"), "{head}");
+
+    // The in-flight stream drains to completion, not cancellation.
+    let mut saw_done = false;
+    while let Some((name, _)) = holder.next_event() {
+        if name == "done" {
+            saw_done = true;
+        }
+    }
+    assert!(saw_done, "in-flight stream finishes during drain");
+    let stats = shutdown.join().expect("shutdown thread");
+    assert_eq!(stats.completed, 1);
+    assert_eq!(stats.cancelled, 0);
+    assert_eq!(stats.kv_pages_acquired, stats.kv_pages_released);
+}
+
+/// HTTP/1.1 keep-alive: sequential non-streaming requests reuse one
+/// socket; `Connection: close` ends it.
+#[test]
+fn keep_alive_serves_sequential_requests_on_one_socket() {
+    let _g = GUARD.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    let cfg = substrate_cfg();
+    let gw = start_gateway(cfg, GatewayConfig::default(), 78);
+
+    let mut stream = TcpStream::connect(gw.addr()).expect("connect");
+    stream.set_read_timeout(Some(Duration::from_secs(30))).expect("timeout");
+    for i in 0..3 {
+        stream
+            .write_all(b"GET /healthz HTTP/1.1\r\nHost: gw\r\n\r\n")
+            .expect("write probe");
+        let (status, head, body) = read_framed_response(&mut stream);
+        assert_eq!(status, 200, "probe {i} on the shared socket");
+        assert!(
+            head.to_ascii_lowercase().contains("connection: keep-alive"),
+            "keep-alive advertised: {head}"
+        );
+        assert!(body.contains("\"ok\""));
+    }
+    // /v1/stats shares the same socket, then Connection: close ends it.
+    stream
+        .write_all(b"GET /v1/stats HTTP/1.1\r\nHost: gw\r\nConnection: close\r\n\r\n")
+        .expect("write stats");
+    let (status, head, body) = read_framed_response(&mut stream);
+    assert_eq!(status, 200);
+    assert!(head.to_ascii_lowercase().contains("connection: close"), "{head}");
+    assert!(Json::parse(&body).is_ok(), "stats body parses");
+    let mut rest = Vec::new();
+    stream.read_to_end(&mut rest).expect("server closes after Connection: close");
+    assert!(rest.is_empty(), "no bytes after the final response");
+
+    let stats = gw.shutdown();
+    assert_eq!(stats.completed, 0);
 }

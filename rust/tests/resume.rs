@@ -1,0 +1,465 @@
+//! Resumable-stream tests: Last-Event-ID replay, parked-session lifecycle,
+//! and crash-recovered sessions — real TCP clients against a real
+//! [`Gateway`].
+//!
+//! The contract under test is the tentpole invariant: a client that
+//! disconnects mid-stream and reconnects with `Last-Event-ID` receives the
+//! full token sequence **bitwise identical** to the uninterrupted stream —
+//! at every possible cut point, at every decode width, and across a
+//! drain/restart cycle served from the persisted store. Sessions nobody
+//! resumes expire after `session_linger_ms` with balanced page/pin
+//! accounting, and a cursor that fell out of the bounded replay window is
+//! refused with a typed 410 instead of a silently gappy stream.
+
+use prescored::attention::AttnPolicy;
+use prescored::config::ServingConfig;
+use prescored::data::corpus;
+use prescored::fault::{self, FaultPlan, FaultPoint};
+use prescored::gateway::json::Json;
+use prescored::gateway::{Gateway, GatewayConfig};
+use prescored::model::{Transformer, TransformerConfig};
+use prescored::server::ScoringServer;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+static GUARD: Mutex<()> = Mutex::new(());
+
+struct FaultGuard;
+
+impl Drop for FaultGuard {
+    fn drop(&mut self) {
+        fault::clear();
+    }
+}
+
+/// Stretch decode steps so disconnect/park/resume races land mid-stream.
+fn slow_decode(ms: u64) -> FaultGuard {
+    let mut plan = FaultPlan::new(0).with_rate(FaultPoint::SlowDecode, 1000);
+    plan.slow_ms = ms;
+    fault::install(plan);
+    FaultGuard
+}
+
+fn tiny_model(seed: u64) -> Transformer {
+    let tcfg =
+        TransformerConfig { vocab: 64, d_model: 32, n_layers: 2, n_heads: 2, max_seq: 64 };
+    Transformer::random(tcfg, seed)
+}
+
+const SPEC: &str = "prescored:kmeans,top_k=12,block=16,sample=4";
+
+fn substrate_cfg() -> ServingConfig {
+    ServingConfig {
+        artifacts_dir: "/nonexistent-artifacts".into(),
+        variant: "exact".into(),
+        max_seq: 64,
+        attention_spec: SPEC.into(),
+        ..Default::default()
+    }
+}
+
+fn start_gateway(cfg: ServingConfig, gw_cfg: GatewayConfig, seed: u64) -> Gateway {
+    let server = ScoringServer::start_with_model(cfg, tiny_model(seed)).expect("server start");
+    Gateway::start(gw_cfg, server).expect("gateway start")
+}
+
+/// A hand-rolled SSE client over a blocking socket.
+struct SseClient {
+    stream: TcpStream,
+    buf: Vec<u8>,
+}
+
+impl SseClient {
+    /// POST `/v1/generate`; `last_event_id` turns the request into a
+    /// resume. Returns with the request on the wire, headers unread.
+    fn post_generate(addr: SocketAddr, body: &str, last_event_id: Option<&str>) -> SseClient {
+        let stream = TcpStream::connect(addr).expect("connect");
+        stream.set_read_timeout(Some(Duration::from_secs(30))).expect("timeout");
+        let mut head = format!(
+            "POST /v1/generate HTTP/1.1\r\nHost: gw\r\nContent-Type: application/json\r\nContent-Length: {}\r\n",
+            body.len()
+        );
+        if let Some(cursor) = last_event_id {
+            head.push_str(&format!("Last-Event-ID: {cursor}\r\n"));
+        }
+        head.push_str("\r\n");
+        let mut client = SseClient { stream, buf: Vec::new() };
+        client.stream.write_all(head.as_bytes()).expect("write head");
+        client.stream.write_all(body.as_bytes()).expect("write body");
+        client
+    }
+
+    fn fill(&mut self) -> usize {
+        let mut tmp = [0u8; 4096];
+        match self.stream.read(&mut tmp) {
+            Ok(n) => {
+                self.buf.extend_from_slice(&tmp[..n]);
+                n
+            }
+            Err(_) => 0,
+        }
+    }
+
+    fn find(&self, delim: &[u8]) -> Option<usize> {
+        self.buf.windows(delim.len()).position(|w| w == delim)
+    }
+
+    /// Read the HTTP status line + headers; returns (status, raw headers).
+    fn read_headers(&mut self) -> (u16, String) {
+        loop {
+            if let Some(idx) = self.find(b"\r\n\r\n") {
+                let head = String::from_utf8(self.buf[..idx].to_vec()).expect("utf8 headers");
+                self.buf.drain(..idx + 4);
+                let status: u16 = head
+                    .split_whitespace()
+                    .nth(1)
+                    .and_then(|s| s.parse().ok())
+                    .unwrap_or_else(|| panic!("bad status line in {head:?}"));
+                return (status, head);
+            }
+            assert!(self.fill() > 0, "connection closed before headers completed");
+        }
+    }
+
+    /// Next SSE event as (name, parsed data); `None` at stream end.
+    fn next_event(&mut self) -> Option<(String, Json)> {
+        loop {
+            if let Some(idx) = self.find(b"\n\n") {
+                let chunk = String::from_utf8(self.buf[..idx].to_vec()).expect("utf8 event");
+                self.buf.drain(..idx + 2);
+                let mut name = String::new();
+                let mut data = String::new();
+                for line in chunk.lines() {
+                    if let Some(v) = line.strip_prefix("event: ") {
+                        name = v.to_string();
+                    } else if let Some(v) = line.strip_prefix("data: ") {
+                        data = v.to_string();
+                    }
+                }
+                return Some((name, Json::parse(&data).expect("event payload parses")));
+            }
+            if self.fill() == 0 {
+                return None;
+            }
+        }
+    }
+}
+
+/// The session id the gateway issued, from the `X-Pallas-Session` header.
+fn session_id(head: &str) -> String {
+    head.lines()
+        .find_map(|l| {
+            let (name, value) = l.split_once(':')?;
+            name.eq_ignore_ascii_case("x-pallas-session").then(|| value.trim().to_string())
+        })
+        .unwrap_or_else(|| panic!("no X-Pallas-Session header in {head:?}"))
+}
+
+fn event_tokens(data: &Json) -> Vec<u32> {
+    data.get("tokens")
+        .and_then(Json::as_array)
+        .expect("tokens array")
+        .iter()
+        .map(|t| t.as_usize().expect("token int") as u32)
+        .collect()
+}
+
+fn body_json(tokens: &[u32], generate: usize) -> String {
+    format!("{{\"tokens\": {tokens:?}, \"generate\": {generate}}}")
+}
+
+/// Reconnect with `Last-Event-ID: <cursor>`, retrying 409 Conflict — the
+/// gateway only notices the old socket's death at its next SSE write, so a
+/// prompt reconnect can race the park. Returns the client with a 200 and
+/// its headers consumed.
+fn resume(addr: SocketAddr, cursor: &str) -> SseClient {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let mut client = SseClient::post_generate(addr, "", Some(cursor));
+        let (status, head) = client.read_headers();
+        match status {
+            200 => return client,
+            409 if Instant::now() < deadline => {
+                std::thread::sleep(Duration::from_millis(20));
+            }
+            other => panic!("resume {cursor}: status {other}, headers {head:?}"),
+        }
+    }
+}
+
+/// Collect token events until the terminal; returns (tokens, done payload).
+fn drain_stream(sse: &mut SseClient) -> (Vec<u32>, Json) {
+    let mut tokens = Vec::new();
+    loop {
+        let (name, data) = sse.next_event().expect("event before terminal");
+        match name.as_str() {
+            "token" => tokens.extend(event_tokens(&data)),
+            "done" => return (tokens, data),
+            other => panic!("unexpected event '{other}'"),
+        }
+    }
+}
+
+/// Wait until `pred(stats)` holds.
+fn wait_for(gw: &Gateway, what: &str, pred: impl Fn(&prescored::server::ServerStats) -> bool) {
+    let deadline = Instant::now() + Duration::from_secs(15);
+    while Instant::now() < deadline {
+        if pred(&gw.stats()) {
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    panic!("timed out waiting for {what}");
+}
+
+/// Tentpole equivalence: for decode widths 1/2/4, disconnecting after
+/// every possible event index and resuming with `Last-Event-ID` yields a
+/// combined token sequence bitwise identical to the in-process greedy
+/// reference — replayed suffix plus live continuation, no gaps, no
+/// duplicates.
+#[test]
+fn resume_at_every_cut_is_bitwise_identical() {
+    let _g = GUARD.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    let _f = slow_decode(10);
+    let policy = AttnPolicy::parse(SPEC).expect("policy");
+    let n_new = 6usize;
+    let tokens = corpus::generate(64, 24, 41);
+    let expected = tiny_model(90).generate_greedy(&tokens, n_new, &policy).expect("reference");
+
+    for workers in [1usize, 2, 4] {
+        let mut cfg = substrate_cfg();
+        cfg.executor_workers = workers;
+        let gw = start_gateway(cfg, GatewayConfig::default(), 90);
+        let addr = gw.addr();
+
+        for cut in 1..n_new {
+            let mut sse = SseClient::post_generate(addr, &body_json(&tokens, n_new), None);
+            let (status, head) = sse.read_headers();
+            assert_eq!(status, 200, "width {workers} cut {cut}");
+            let sid = session_id(&head);
+
+            let mut streamed = Vec::new();
+            for _ in 0..cut {
+                let (name, data) = sse.next_event().expect("pre-cut event");
+                assert_eq!(name, "token");
+                streamed.extend(event_tokens(&data));
+            }
+            drop(sse); // the disconnect
+
+            let mut resumed = resume(addr, &format!("{sid}:{cut}"));
+            let (rest, done) = drain_stream(&mut resumed);
+            streamed.extend(rest);
+            assert_eq!(
+                streamed, expected,
+                "width {workers} cut {cut}: resumed stream must be bitwise identical"
+            );
+            assert_eq!(
+                event_tokens(&done),
+                expected,
+                "width {workers} cut {cut}: done event repeats the full stream"
+            );
+        }
+
+        let stats = gw.shutdown();
+        assert_eq!(stats.completed, n_new - 1, "width {workers}: one completion per cut");
+        assert_eq!(stats.cancelled, 0, "width {workers}: resumes, not cancels");
+        assert_eq!(stats.kv_pages_acquired, stats.kv_pages_released, "width {workers}");
+        assert_eq!(stats.prefix_pins_acquired, stats.prefix_pins_released, "width {workers}");
+        assert!(
+            stats.sessions_resumed >= (n_new - 1) as u64,
+            "width {workers}: every cut resumed ({} resumes)",
+            stats.sessions_resumed
+        );
+    }
+}
+
+/// A parked session nobody resumes expires after `session_linger_ms`: the
+/// engine reclaims it through the cancel path with balanced page/pin
+/// accounting and an exactly-once Cancelled terminal.
+#[test]
+fn parked_session_expiry_releases_pages_with_balanced_accounting() {
+    let _g = GUARD.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    let _f = slow_decode(15);
+    let mut cfg = substrate_cfg();
+    cfg.executor_workers = 2;
+    cfg.session_linger_ms = 300;
+    let gw = start_gateway(cfg, GatewayConfig::default(), 91);
+
+    let tokens = corpus::generate(64, 20, 43);
+    let mut sse = SseClient::post_generate(gw.addr(), &body_json(&tokens, 32), None);
+    let (status, _) = sse.read_headers();
+    assert_eq!(status, 200);
+    for _ in 0..2 {
+        let (name, _) = sse.next_event().expect("early event");
+        assert_eq!(name, "token");
+    }
+    drop(sse);
+
+    // Park first (decode pauses, pages pinned), then the linger elapses and
+    // the expiry sweep concludes the session as Cancelled.
+    wait_for(&gw, "parked session", |s| s.sessions_parked >= 1);
+    wait_for(&gw, "linger expiry reclaim", |s| s.cancelled == 1);
+
+    let stats = gw.shutdown();
+    assert_eq!(stats.completed, 0);
+    assert_eq!(stats.cancelled, 1);
+    assert!(stats.sessions_expired >= 1, "expiry counted: {}", stats.sessions_expired);
+    assert!(
+        stats.streamed_tokens < 32,
+        "park must pause decode before completion ({} tokens)",
+        stats.streamed_tokens
+    );
+    assert_eq!(
+        stats.kv_pages_acquired, stats.kv_pages_released,
+        "expired session must not leak KV pages"
+    );
+    assert_eq!(stats.prefix_pins_acquired, stats.prefix_pins_released);
+}
+
+/// Crash recovery: disconnect mid-stream, drain the gateway (parked
+/// session + prefix cache persist), restart on the same store, resume with
+/// the old cursor — the combined stream is bitwise the uninterrupted
+/// reference and the re-admitted prefill is served warm (no second cold
+/// prefill).
+#[test]
+fn resume_survives_drain_and_restart_via_persisted_store() {
+    let _g = GUARD.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    let _f = slow_decode(15);
+    let path = std::env::temp_dir().join(format!("resume_persist_{}.bin", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+
+    let policy = AttnPolicy::parse(SPEC).expect("policy");
+    let n_new = 8usize;
+    let tokens = corpus::generate(64, 24, 47);
+    let expected = tiny_model(92).generate_greedy(&tokens, n_new, &policy).expect("reference");
+
+    let mut cfg = substrate_cfg();
+    cfg.executor_workers = 2;
+    cfg.prefix_persist_path = path.to_str().expect("utf8 path").to_string();
+
+    // Incarnation 1: stream a few tokens, vanish, drain.
+    let gw1 = start_gateway(cfg.clone(), GatewayConfig::default(), 92);
+    let mut sse = SseClient::post_generate(gw1.addr(), &body_json(&tokens, n_new), None);
+    let (status, head) = sse.read_headers();
+    assert_eq!(status, 200);
+    let sid = session_id(&head);
+    let cut = 3usize;
+    let mut streamed = Vec::new();
+    for _ in 0..cut {
+        let (name, data) = sse.next_event().expect("pre-crash event");
+        assert_eq!(name, "token");
+        streamed.extend(event_tokens(&data));
+    }
+    drop(sse);
+    wait_for(&gw1, "session parked before drain", |s| s.sessions_parked >= 1);
+    let s1 = gw1.shutdown();
+    assert!(s1.sessions_persisted >= 1, "drain persists the parked session: {s1:?}");
+    assert!(path.exists(), "persist file written on drain");
+
+    // Incarnation 2: same store, same weights. The parked session comes
+    // back as a recoverable record; the old cursor still works.
+    let gw2 = start_gateway(cfg, GatewayConfig::default(), 92);
+    assert!(
+        gw2.stats().sessions_recovered >= 1,
+        "restart re-registers persisted sessions: {:?}",
+        gw2.stats().sessions_recovered
+    );
+    let mut resumed = resume(gw2.addr(), &format!("{sid}:{cut}"));
+    let (rest, done) = drain_stream(&mut resumed);
+    streamed.extend(rest);
+    assert_eq!(streamed, expected, "cross-restart resume is bitwise identical");
+    assert_eq!(event_tokens(&done), expected);
+
+    let s2 = gw2.shutdown();
+    assert_eq!(s2.completed, 1);
+    assert!(
+        s2.prefix_hits >= 1,
+        "re-admitted context must prefill warm from the restored store: {s2:?}"
+    );
+    assert_eq!(s2.kv_pages_acquired, s2.kv_pages_released);
+    assert_eq!(s2.prefix_pins_acquired, s2.prefix_pins_released);
+    let _ = std::fs::remove_file(&path);
+}
+
+/// A cursor that fell out of the bounded replay window is refused with a
+/// typed 410 Gone — never a silently gappy stream.
+#[test]
+fn stale_cursor_beyond_replay_window_returns_410() {
+    let _g = GUARD.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    let mut cfg = substrate_cfg();
+    cfg.executor_workers = 2;
+    cfg.session_replay_tokens = 2; // keep only the last two tokens
+    let gw = start_gateway(cfg, GatewayConfig::default(), 93);
+
+    let tokens = corpus::generate(64, 20, 53);
+    let mut sse = SseClient::post_generate(gw.addr(), &body_json(&tokens, 8), None);
+    let (status, head) = sse.read_headers();
+    assert_eq!(status, 200);
+    let sid = session_id(&head);
+    let (_, _done) = drain_stream(&mut sse); // run to completion: buffer holds seqs 7..=8
+
+    let mut stale = SseClient::post_generate(gw.addr(), "", Some(&format!("{sid}:1")));
+    let (status, _) = stale.read_headers();
+    assert_eq!(status, 410, "cursor below the trimmed window is Gone");
+
+    // The surviving window still serves: resume at 6 replays 7 and 8.
+    let mut ok = SseClient::post_generate(gw.addr(), "", Some(&format!("{sid}:6")));
+    let (status, _) = ok.read_headers();
+    assert_eq!(status, 200);
+    let (tail, _) = drain_stream(&mut ok);
+    assert_eq!(tail.len(), 2, "replay window retains exactly session_replay_tokens");
+
+    let stats = gw.shutdown();
+    assert_eq!(stats.completed, 1);
+    assert_eq!(stats.kv_pages_acquired, stats.kv_pages_released);
+}
+
+/// Resume refusals map to typed HTTP statuses before any SSE bytes:
+/// unknown session → 404, still-attached session → 409, cursor past the
+/// high-water mark → 400, malformed cursor → 400.
+#[test]
+fn resume_refusals_map_to_http_statuses() {
+    let _g = GUARD.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    let _f = slow_decode(15);
+    let mut cfg = substrate_cfg();
+    cfg.executor_workers = 2;
+    let gw = start_gateway(cfg, GatewayConfig::default(), 94);
+    let addr = gw.addr();
+
+    let mut unknown = SseClient::post_generate(addr, "", Some("deadbeefdeadbeef-1:3"));
+    let (status, _) = unknown.read_headers();
+    assert_eq!(status, 404, "unknown session");
+
+    let mut malformed = SseClient::post_generate(addr, "", Some("no-colon-or-number"));
+    let (status, _) = malformed.read_headers();
+    assert_eq!(status, 400, "malformed cursor");
+
+    let tokens = corpus::generate(64, 20, 59);
+    let mut holder = SseClient::post_generate(addr, &body_json(&tokens, 32), None);
+    let (status, head) = holder.read_headers();
+    assert_eq!(status, 200);
+    let sid = session_id(&head);
+    let (name, _) = holder.next_event().expect("holder streaming");
+    assert_eq!(name, "token");
+
+    // The holder is still attached: a second client is refused, and the
+    // holder's stream is untouched.
+    let mut busy = SseClient::post_generate(addr, "", Some(&format!("{sid}:1")));
+    let (status, _) = busy.read_headers();
+    assert_eq!(status, 409, "attached session is Busy");
+
+    drop(holder);
+    wait_for(&gw, "park after disconnect", |s| s.sessions_parked >= 1);
+    let mut ahead = SseClient::post_generate(addr, "", Some(&format!("{sid}:999")));
+    let (status, _) = ahead.read_headers();
+    assert_eq!(status, 400, "cursor past the high-water mark");
+
+    // Clean up: a real resume finishes the stream.
+    let mut resumed = resume(addr, &format!("{sid}:1"));
+    let _ = drain_stream(&mut resumed);
+    let stats = gw.shutdown();
+    assert_eq!(stats.completed, 1);
+    assert_eq!(stats.kv_pages_acquired, stats.kv_pages_released);
+}
