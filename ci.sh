@@ -118,6 +118,16 @@ if [[ "$QUICK" == 0 ]]; then
     PALLAS_RESUME_ASSERT=1 PALLAS_RESUME_JSON="$(mktemp)" \
         cargo bench --bench bench_resume
 
+    # Tiered-KV smoke: env-shrunk capacity × dtype sweep plus warm-disk
+    # vs cold latency. PALLAS_TIER_ASSERT=1 fails the build if int8 stops
+    # caching >= 2x the f32 tokens at an equal page pool, if a warm-disk
+    # re-admit stops beating a cold prefill, or if the quantized NLL
+    # deltas drift past their pinned budgets.
+    echo "== bench_kv_tier (smoke) =="
+    PALLAS_TIER_CONTEXT=128 PALLAS_TIER_PROMPTS=12 PALLAS_TIER_REPS=3 \
+    PALLAS_TIER_ASSERT=1 PALLAS_TIER_JSON="$(mktemp)" \
+        cargo bench --bench bench_kv_tier
+
     # Chaos smoke: three fixed seeded fault schedules through the mixed
     # scoring + generation workload. The suite asserts no process panic,
     # a typed response per request, and balanced page/pin accounting.

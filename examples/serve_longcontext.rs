@@ -1,6 +1,6 @@
 //! END-TO-END DRIVER: the full three-layer stack on a real small workload.
 //!
-//! Two demos:
+//! Three demos:
 //!
 //! 1. **Shared-prefix cache** (pure-Rust substrate, no artifacts needed):
 //!    N requests over one long shared document prefix — the first request
@@ -9,7 +9,14 @@
 //!    copy-on-write off the cached node, and prefills only its own
 //!    question suffix. Per-request latency and the server's prefix-cache
 //!    hit/miss/evict accounting are printed.
-//! 2. **PJRT artifact replay** (requires `make artifacts`): the original
+//! 2. **Tiered KV memory under pressure**: cached pages stored as int8
+//!    (`[cache] kv_dtype` — 4× the tokens per page) over a pool sized for
+//!    roughly one document. Planting a second document evicts the first
+//!    through the disk-spill tier (`[cache] spill_path`); asking about the
+//!    first document again re-admits its subtree from disk — warm-disk,
+//!    cheaper than a cold prefill — and `tier_spills` / `tier_readmits` /
+//!    `tier_bytes` account for every hop.
+//! 3. **PJRT artifact replay** (requires `make artifacts`): the original
 //!    Poisson long-context scoring trace against the exact and pre-scored
 //!    artifacts.
 //!
@@ -105,7 +112,7 @@
 
 use prescored::config::ServingConfig;
 use prescored::coordinator::kv_cache::BLOCK_SIZE;
-use prescored::coordinator::Request;
+use prescored::coordinator::{KvDtype, Request};
 use prescored::data::{corpus, workload};
 use prescored::gateway::{Gateway, GatewayConfig};
 use prescored::metrics::PplAccum;
@@ -184,6 +191,88 @@ fn run_prefix_demo(n_req: usize, prefix_tokens: usize) -> anyhow::Result<()> {
     println!(
         "decode: {} steps, p50 {:.2} ms | prefills {}\n",
         stats.decode_steps, stats.decode_step_p50_ms, stats.prefills
+    );
+    Ok(())
+}
+
+/// Demo 2: memory pressure through the tiered KV cache — quantized pages,
+/// disk spill on eviction, warm re-admit on the next radix hit.
+fn run_tier_demo(prefix_tokens: usize) -> anyhow::Result<()> {
+    let question_tokens = 64usize;
+    let n_new = 8usize;
+    let max_seq = prefix_tokens + question_tokens + n_new + 16;
+    let tcfg = TransformerConfig {
+        vocab: 512,
+        d_model: 32,
+        n_layers: 2,
+        n_heads: 2,
+        max_seq,
+    };
+    let model = Transformer::random(tcfg, 7);
+    let spill =
+        std::env::temp_dir().join(format!("serve_longcontext_{}.spill", std::process::id()));
+    // int8 pages pack 64 tokens instead of f32's 16, and the prefix pool
+    // holds roughly ONE document chain — planting a second document forces
+    // the first one out through the disk tier.
+    let cfg = ServingConfig {
+        artifacts_dir: "/nonexistent-artifacts".into(),
+        max_seq,
+        attention_spec: "flash".into(),
+        kv_blocks: max_seq.div_ceil(BLOCK_SIZE) * 4,
+        prefix_cache_blocks: KvDtype::Int8.pages_for(max_seq) + 1,
+        prefix_min_tokens: 64,
+        decode_max_new: n_new,
+        kv_dtype: "int8".into(),
+        prefix_spill_path: spill.display().to_string(),
+        ..Default::default()
+    };
+    println!(
+        "== tiered KV memory: int8 pages, one-document pool, spill to {} ==",
+        spill.display()
+    );
+    let server = ScoringServer::start_with_model(cfg, model)?;
+    let doc_a = corpus::generate(512, prefix_tokens, 1234);
+    let doc_b = corpus::generate(512, prefix_tokens, 4321);
+    let ask = |id: u64, doc: &[u32], label: &str| -> anyhow::Result<f64> {
+        let mut tokens = doc.to_vec();
+        tokens.extend_from_slice(&corpus::generate(512, question_tokens, 9000 + id));
+        let mut req = Request::scoring(id, tokens);
+        req.generate = n_new;
+        let resp = server.submit(req).recv()?;
+        println!(
+            "request {id}: doc {label} + question | {:8.1} ms | {} generated",
+            resp.latency_ms,
+            resp.generated.len()
+        );
+        Ok(resp.latency_ms)
+    };
+    // 1. Plant document A (cold prefill → quantized pages in RAM).
+    let mut prime = Request::scoring(0, doc_a.clone());
+    prime.generate = 1;
+    let t0 = std::time::Instant::now();
+    server.submit(prime).recv()?;
+    let cold_ms = t0.elapsed().as_secs_f64() * 1e3;
+    println!("prime    : doc A planted cold      | {cold_ms:8.1} ms | (int8 pages, hot RAM)");
+    // 2. Hot-RAM warm hit on A.
+    let hot_ms = ask(1, &doc_a, "A (hot RAM)")?;
+    // 3. Memory pressure: planting doc B evicts A's subtree → disk spill.
+    let mut pressure = Request::scoring(2, doc_b.clone());
+    pressure.generate = 1;
+    server.submit(pressure).recv()?;
+    println!("pressure : doc B planted — pool full, doc A spills to the disk tier");
+    // 4. Ask about A again: radix miss in RAM, warm re-admit from disk.
+    let warm_disk_ms = ask(3, &doc_a, "A (warm disk re-admit)")?;
+    let stats = server.shutdown();
+    let _ = std::fs::remove_file(&spill);
+    println!(
+        "tier: {} spills, {} re-admits, {} bytes through the spill file | \
+         hot {:.1} ms vs warm-disk {:.1} ms (both beat the {:.1} ms cold prefill)\n",
+        stats.tier_spills,
+        stats.tier_readmits,
+        stats.tier_bytes,
+        hot_ms,
+        warm_disk_ms,
+        cold_ms,
     );
     Ok(())
 }
@@ -294,6 +383,7 @@ fn main() -> anyhow::Result<()> {
     let prefix_tokens =
         std::env::args().nth(2).and_then(|s| s.parse().ok()).unwrap_or(8192);
     run_prefix_demo(n_req, prefix_tokens)?;
+    run_tier_demo(prefix_tokens.min(1024))?;
 
     println!("== E2E: serving long-context scoring requests through PJRT artifacts ==");
     let replay_req = n_req.max(8) * 4;

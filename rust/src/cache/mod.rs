@@ -38,9 +38,11 @@
 //! "Prefix & artifact cache" convention.
 
 pub mod persist;
+pub mod tier;
 
-use crate::attention::DecodeState;
-use crate::coordinator::kv_cache::{pages_for, BlockAllocator, BlockId};
+use crate::attention::{AttnPolicy, DecodeArtifacts, DecodeState};
+use crate::coordinator::kv_cache::{BlockAllocator, BlockId};
+use crate::coordinator::kv_quant::{KvDtype, KvStore};
 use crate::linalg::Matrix;
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -57,11 +59,26 @@ pub struct PrefixCacheConfig {
     pub min_tokens: usize,
     /// Where to persist the artifact store across restarts (`None` = don't).
     pub persist_path: Option<PathBuf>,
+    /// Storage dtype for cached KV rows (`[cache] kv_dtype`). Narrower
+    /// dtypes pack proportionally more tokens per page
+    /// ([`KvDtype::tokens_per_page`]), so an int8 cache pins ~4× the
+    /// prompts of an f32 cache in the same pool.
+    pub kv_dtype: KvDtype,
+    /// Disk-spill file for LRU-evicted subtrees (`[cache] spill_path`;
+    /// `None` = evictions free their artifacts outright). The warm tier
+    /// does not survive restarts — that is the persist store's job.
+    pub spill_path: Option<PathBuf>,
 }
 
 impl Default for PrefixCacheConfig {
     fn default() -> Self {
-        PrefixCacheConfig { blocks: 256, min_tokens: 16, persist_path: None }
+        PrefixCacheConfig {
+            blocks: 256,
+            min_tokens: 16,
+            persist_path: None,
+            kv_dtype: KvDtype::F32,
+            spill_path: None,
+        }
     }
 }
 
@@ -85,13 +102,20 @@ pub struct CacheStats {
     /// pin would make its subtree unevictable forever.
     pub pins_acquired: usize,
     pub pins_released: usize,
+    /// Disk-tier accounting: evicted subtrees spilled to the warm tier,
+    /// spilled prefixes re-admitted on a later lookup, and bytes currently
+    /// resident in the spill file's index.
+    pub tier_spills: usize,
+    pub tier_readmits: usize,
+    pub tier_bytes: usize,
 }
 
-/// One layer·head's segment of cached K/V rows.
+/// One layer·head's segment of cached K/V rows, stored at the cache's
+/// configured dtype ([`PrefixCacheConfig::kv_dtype`]).
 #[derive(Clone)]
 pub struct SegmentKv {
-    pub k: Matrix,
-    pub v: Matrix,
+    pub k: KvStore,
+    pub v: KvStore,
 }
 
 /// What the engine hands the cache after a prefill: per layer·head KV rows
@@ -105,8 +129,11 @@ pub struct SegmentKv {
 pub struct PrefixSnapshot {
     /// Absolute position of `kv`'s first row.
     pub kv_from: usize,
-    /// Per layer·head K/V rows for positions `kv_from..len`.
-    pub kv: Vec<(Matrix, Matrix)>,
+    /// Per layer·head K/V rows for positions `kv_from..len`, already packed
+    /// at the cache's dtype ([`KvStore::from_matrix`]). Rows are quantized
+    /// exactly once, here at capture — splits, persist round-trips, and
+    /// disk-tier spills all move the packed bytes losslessly afterwards.
+    pub kv: Vec<(KvStore, KvStore)>,
     pub states: Vec<DecodeState>,
     pub nll: Vec<f32>,
     pub last_logits: Vec<f32>,
@@ -154,21 +181,31 @@ fn materialize_segments(segments: &[Vec<Arc<SegmentKv>>]) -> Vec<(Matrix, Matrix
     let mut kv = Vec::with_capacity(slots);
     for s in 0..slots {
         let first = &segments[0][s];
-        let total_rows: usize = segments.iter().map(|n| n[s].k.rows).sum();
-        let mut k = Matrix::zeros(0, first.k.cols);
-        let mut v = Matrix::zeros(0, first.v.cols);
+        let total_rows: usize = segments.iter().map(|n| n[s].k.rows()).sum();
+        let mut k = Matrix::zeros(0, first.k.cols());
+        let mut v = Matrix::zeros(0, first.v.cols());
         k.data.reserve_exact(total_rows * k.cols);
         v.data.reserve_exact(total_rows * v.cols);
         for node_segs in segments {
             let seg = &node_segs[s];
-            k.data.extend_from_slice(&seg.k.data);
-            k.rows += seg.k.rows;
-            v.data.extend_from_slice(&seg.v.data);
-            v.rows += seg.v.rows;
+            append_store(&mut k, &seg.k);
+            append_store(&mut v, &seg.v);
         }
         kv.push((k, v));
     }
     kv
+}
+
+/// Append a stored segment's rows to an f32 matrix: a straight memcpy for
+/// f32 segments, a dequantize for packed ones. Dequantization is
+/// deterministic over the packed bytes, so any slice/concat/spill history
+/// materializes the same bits.
+fn append_store(dst: &mut Matrix, src: &KvStore) {
+    match src {
+        KvStore::F32(m) => dst.data.extend_from_slice(&m.data),
+        KvStore::Quant(q) => dst.data.extend_from_slice(&q.dequantize().data),
+    }
+    dst.rows += src.rows();
 }
 
 /// Artifacts stored at a node whose end position was a prefill boundary.
@@ -231,6 +268,19 @@ pub struct PrefixCache {
     clock: u64,
     /// Monotone insert id for segment provenance (see `Node::donor`).
     next_donor: u64,
+    /// Warm disk tier: LRU-evicted subtrees spill here instead of being
+    /// freed, and `lookup` re-admits them on a radix hit (hot RAM / warm
+    /// disk / cold recompute).
+    tier: Option<tier::TierStore>,
+    /// How a re-admit rebuilds decode states from spilled artifacts: the
+    /// serving policy plus heads-per-layer (slot → layer mapping). Set by
+    /// the engine via [`PrefixCache::set_restorer`]; until then spilled
+    /// entries stay on disk.
+    restorer: Option<(Arc<AttnPolicy>, usize)>,
+    /// Whether spill/re-admit must refuse mixed-donor chains (non-suffix-
+    /// stable serving policies) — mirrors the persist writer's
+    /// `uniform_only` so the disk tier cannot launder unservable chains.
+    spill_uniform_only: bool,
     hits: usize,
     misses: usize,
     insertions: usize,
@@ -255,6 +305,19 @@ impl PrefixCache {
             blocks: Vec::new(),
         };
         let alloc = BlockAllocator::new(cfg.blocks);
+        let tier = match (cfg.blocks > 0).then_some(cfg.spill_path.as_ref()).flatten() {
+            None => None,
+            Some(path) => match tier::TierStore::open(path.clone()) {
+                Ok(t) => Some(t),
+                Err(err) => {
+                    eprintln!(
+                        "[cache] disk tier disabled ({}): {err:#}",
+                        path.display()
+                    );
+                    None
+                }
+            },
+        };
         PrefixCache {
             cfg,
             nodes: vec![Some(root)],
@@ -262,6 +325,9 @@ impl PrefixCache {
             alloc,
             clock: 0,
             next_donor: 0,
+            tier,
+            restorer: None,
+            spill_uniform_only: false,
             hits: 0,
             misses: 0,
             insertions: 0,
@@ -274,6 +340,18 @@ impl PrefixCache {
 
     pub fn config(&self) -> &PrefixCacheConfig {
         &self.cfg
+    }
+
+    /// Arm the disk tier's re-admit path: spilled entries rebuild their
+    /// decode states through `policy`'s backends
+    /// ([`crate::attention::AttentionBackend::restore_decode`]), with
+    /// `n_heads` mapping layer·head slots back to layers. Also derives
+    /// whether spills must stay donor-uniform (non-suffix-stable policies
+    /// serve only single-donor chains). Until this is called, evictions
+    /// still spill but lookups cannot re-admit.
+    pub fn set_restorer(&mut self, policy: Arc<AttnPolicy>, n_heads: usize) {
+        self.spill_uniform_only = !policy.specs().iter().all(|sp| sp.suffix_stable());
+        self.restorer = Some((policy, n_heads));
     }
 
     pub fn enabled(&self) -> bool {
@@ -336,6 +414,38 @@ impl PrefixCache {
             return None;
         }
         self.clock += 1;
+        let mut best = self.walk(tokens, full_only);
+        // Warm-disk probe: when the tier holds a strictly longer spilled
+        // prefix of this request, re-admit it (hot again) and re-walk the
+        // tree. A failed re-admit just keeps the RAM answer — the request
+        // degrades to a partial hit or cold recompute, never an error.
+        if self.try_readmit(tokens, full_only, best.map_or(0, |(_, len)| len)) {
+            best = self.walk(tokens, full_only);
+        }
+        let Some((node, len)) = best else {
+            self.misses += 1;
+            return None;
+        };
+        let chain = self.chain(node);
+        let (segments, nll) = self.chain_segments(&chain);
+        let art = self.node(node).art.as_ref().expect("artifact boundary lost"); // unwrap-ok: walk requires art
+        let states = Arc::clone(&art.states);
+        let last_logits = art.last_logits.clone();
+        let clock = self.clock;
+        for &nid in &chain {
+            self.node_mut(nid).last_used = clock;
+        }
+        self.node_mut(node).pins += 1;
+        self.pins_acquired += 1;
+        self.hits += 1;
+        self.hit_tokens += len;
+        Some(PrefixHit { node, len, segments, states, nll, last_logits })
+    }
+
+    /// Radix walk: the deepest artifact boundary serving `tokens`, with the
+    /// `full_only` donor-uniformity check applied. Read-only — `lookup`
+    /// does the pinning, counters, and LRU touches.
+    fn walk(&self, tokens: &[u32], full_only: bool) -> Option<(usize, usize)> {
         let mut cur = 0usize;
         let mut matched = 0usize;
         let mut best: Option<(usize, usize)> = None;
@@ -352,11 +462,7 @@ impl PrefixCache {
                 best = Some((cur, matched));
             }
         }
-        let Some((node, len)) = best else {
-            self.misses += 1;
-            return None;
-        };
-        let chain = self.chain(node);
+        let (node, len) = best?;
         if full_only {
             // Full-only kernels: prefix rows are NOT length-invariant, so
             // segments computed by other inserts (splits/extensions of this
@@ -364,24 +470,61 @@ impl PrefixCache {
             // hit is only sound when the whole chain came from the
             // artifact's own donor prefill.
             let donor = self.node(node).art.as_ref().expect("artifact boundary lost").donor; // unwrap-ok: best requires art
-            if chain.iter().any(|&nid| self.node(nid).donor != donor) {
-                self.misses += 1;
+            if self.chain(node).iter().any(|&nid| self.node(nid).donor != donor) {
                 return None;
             }
         }
-        let (segments, nll) = self.chain_segments(&chain);
-        let art = self.node(node).art.as_ref().expect("artifact boundary lost"); // unwrap-ok: best requires art
-        let states = Arc::clone(&art.states);
-        let last_logits = art.last_logits.clone();
-        let clock = self.clock;
-        for &nid in &chain {
-            self.node_mut(nid).last_used = clock;
+        Some((node, len))
+    }
+
+    /// Probe the disk tier for a spilled prefix of `tokens` strictly longer
+    /// than the `have` tokens RAM already serves, and re-insert it through
+    /// the normal `insert` path (page budget and donor rules apply). The
+    /// index entry is consumed up front, so a poisoned record is attempted
+    /// exactly once; every failure path — no tier, no restorer, corrupt
+    /// record, unrestorable states, insert refusal — returns false and the
+    /// caller degrades to the RAM answer or a cold recompute, never an
+    /// error. Returns whether the tree changed.
+    fn try_readmit(&mut self, tokens: &[u32], full_only: bool, have: usize) -> bool {
+        let Some((policy, n_heads)) = self.restorer.clone() else { return false };
+        let Some(key) = self.tier.as_ref().and_then(|t| t.probe(tokens, full_only)) else {
+            return false;
+        };
+        if key.len() <= have {
+            return false;
         }
-        self.node_mut(node).pins += 1;
-        self.pins_acquired += 1;
-        self.hits += 1;
-        self.hit_tokens += len;
-        Some(PrefixHit { node, len, segments, states, nll, last_logits })
+        let Some(entry) = self.tier.as_mut().and_then(|t| t.take(&key)) else { return false };
+        let mut states = Vec::with_capacity(entry.kv.len());
+        for (slot, (k, _)) in entry.kv.iter().enumerate() {
+            let layer = slot / n_heads.max(1);
+            match policy.backend(layer).restore_decode(slot as u64, k.cols(), &entry.arts[slot])
+            {
+                Some(st) => states.push(st),
+                None => {
+                    eprintln!(
+                        "[cache] tier re-admit dropped ({}-token prefix): layer {layer}'s \
+                         backend cannot restore a decode state",
+                        key.len()
+                    );
+                    return false;
+                }
+            }
+        }
+        let snap = PrefixSnapshot {
+            kv_from: 0,
+            kv: entry.kv,
+            states,
+            nll: entry.nll,
+            last_logits: entry.last_logits,
+        };
+        if self.insert(&key, snap, self.spill_uniform_only) {
+            if let Some(t) = self.tier.as_mut() {
+                t.note_readmit();
+            }
+            true
+        } else {
+            false
+        }
     }
 
     /// Unpin a node returned by a [`PrefixHit`] (session finished). Safe
@@ -434,9 +577,15 @@ impl PrefixCache {
         assert_eq!(snap.kv.len(), snap.states.len(), "snapshot KV/state slot mismatch");
         debug_assert!(
             snap.kv.iter().all(|(k, v)| {
-                k.rows == tokens.len() - snap.kv_from && v.rows == k.rows
+                k.rows() == tokens.len() - snap.kv_from && v.rows() == k.rows()
             }),
             "snapshot KV must cover rows kv_from..len"
+        );
+        debug_assert!(
+            snap.kv.iter().all(|(k, v)| {
+                k.dtype() == self.cfg.kv_dtype && v.dtype() == self.cfg.kv_dtype
+            }),
+            "snapshot KV must be packed at the cache's kv_dtype"
         );
         self.clock += 1;
         if crate::fault::fires(crate::fault::FaultPoint::EvictStorm, self.clock) {
@@ -523,7 +672,9 @@ impl PrefixCache {
             return false;
         }
         let seg_len = total - start;
-        let need = pages_for(seg_len);
+        // Pages are charged at the packed width: narrower dtypes fit more
+        // tokens per page, which is the capacity win the tier exists for.
+        let need = self.cfg.kv_dtype.pages_for(seg_len);
         if !self.ensure_free(need, Some(parent)) {
             return false;
         }
@@ -535,8 +686,10 @@ impl PrefixCache {
             .into_iter()
             .map(|(k, v)| {
                 // A warm suffix-only snapshot usually covers exactly this
-                // segment: move the matrices instead of re-slicing them.
-                let seg = if lo == 0 && hi == k.rows {
+                // segment: move the stores instead of re-slicing them.
+                // Slicing is lossless under both representations (packed
+                // bytes move, grids untouched).
+                let seg = if lo == 0 && hi == k.rows() {
                     SegmentKv { k, v }
                 } else {
                     SegmentKv { k: k.slice_rows(lo, hi), v: v.slice_rows(lo, hi) }
@@ -580,9 +733,10 @@ impl PrefixCache {
     ) -> Option<usize> {
         let clen = self.node(child).tokens.len();
         debug_assert!(cp > 0 && cp < clen, "split point must be inside the edge");
+        let dt = self.cfg.kv_dtype;
         // Page rounding can cost at most one extra page; reserve it before
         // touching the node so eviction never runs with the tree mid-edit.
-        let extra = pages_for(cp) + pages_for(clen - cp) - pages_for(clen);
+        let extra = dt.pages_for(cp) + dt.pages_for(clen - cp) - dt.pages_for(clen);
         if !self.ensure_free(extra, Some(child)) {
             return None;
         }
@@ -624,13 +778,13 @@ impl PrefixCache {
             children: HashMap::new(),
             pins: 0,
             last_used: node.last_used,
-            blocks: (0..pages_for(cp))
+            blocks: (0..dt.pages_for(cp))
                 .map(|_| self.alloc.alloc().expect("ensure_free lied")) // unwrap-ok: reserved above
                 .collect(),
         };
         node.kv = right_kv;
         node.nll = right_nll;
-        node.blocks = (0..pages_for(clen - cp))
+        node.blocks = (0..dt.pages_for(clen - cp))
             .map(|_| self.alloc.alloc().expect("ensure_free lied")) // unwrap-ok: reserved above
             .collect();
         node.tokens = right_tokens;
@@ -710,6 +864,7 @@ impl PrefixCache {
     }
 
     fn evict(&mut self, id: usize) {
+        self.spill_on_evict(id);
         let node = self.nodes[id].take().expect("evicting a dangling node"); // unwrap-ok: callers pass live ids
         for b in node.blocks {
             self.alloc.release(b);
@@ -722,6 +877,62 @@ impl PrefixCache {
         }
         self.free_ids.push(id);
         self.evictions += 1;
+    }
+
+    /// Concatenate the chain's stored segments per slot — lossless under
+    /// both representations (packed bytes are moved, never re-quantized),
+    /// which is what makes a spill → re-admit round trip bitwise identical
+    /// to the hot-RAM hit it replaces.
+    fn chain_kvstores(&self, chain: &[usize]) -> Vec<(KvStore, KvStore)> {
+        let slots = self.node(chain[0]).kv.len();
+        (0..slots)
+            .map(|s| {
+                let first = &self.node(chain[0]).kv[s];
+                let mut k = first.k.clone();
+                let mut v = first.v.clone();
+                for &nid in &chain[1..] {
+                    let seg = &self.node(nid).kv[s];
+                    k = k.concat(&seg.k);
+                    v = v.concat(&seg.v);
+                }
+                (k, v)
+            })
+            .collect()
+    }
+
+    /// Disk-tier hook: before an artifact-bearing node is evicted, append
+    /// its full-prefix entry (chain tokens, packed KV, exported artifacts)
+    /// to the spill file so a later lookup re-admits the warm entry instead
+    /// of recomputing the prefill. Mixed-donor chains are skipped under
+    /// full-only policies — spilling them would launder an unservable chain
+    /// into a single-donor entry on re-admit, exactly what the persist
+    /// writer's `uniform_only` prevents.
+    fn spill_on_evict(&mut self, id: usize) {
+        if self.tier.is_none() || self.node(id).art.is_none() {
+            return;
+        }
+        let chain = self.chain(id);
+        let donor = self.node(id).art.as_ref().expect("checked above").donor; // unwrap-ok: checked above
+        if self.spill_uniform_only && chain.iter().any(|&nid| self.node(nid).donor != donor) {
+            return;
+        }
+        let mut tokens = Vec::new();
+        for &nid in &chain {
+            tokens.extend_from_slice(&self.node(nid).tokens);
+        }
+        if tokens.len() < self.cfg.min_tokens.max(1) {
+            return; // a re-admit could never insert it anyway
+        }
+        let kv = self.chain_kvstores(&chain);
+        let (_, nll) = self.chain_segments(&chain);
+        let art = self.node(id).art.as_ref().expect("checked above"); // unwrap-ok: checked above
+        let arts: Vec<DecodeArtifacts> =
+            art.states.iter().map(|s| s.export_artifacts()).collect();
+        let entry =
+            tier::SpillEntry { kv, arts, nll, last_logits: art.last_logits.clone() };
+        if let Some(t) = self.tier.as_mut() {
+            t.spill(&tokens, &entry);
+        }
     }
 
     /// Every cached prefix with artifacts, root-down (ancestors before
@@ -756,12 +967,12 @@ impl PrefixCache {
             for &nid in &chain {
                 tokens.extend_from_slice(&self.node(nid).tokens);
             }
-            let (segments, nll) = self.chain_segments(&chain);
+            let (_, nll) = self.chain_segments(&chain);
             out.push((
                 tokens,
                 PrefixSnapshot {
                     kv_from: 0,
-                    kv: materialize_segments(&segments),
+                    kv: self.chain_kvstores(&chain),
                     states: art.states.as_ref().clone(),
                     nll,
                     last_logits: art.last_logits.clone(),
@@ -780,6 +991,8 @@ impl PrefixCache {
                 cached_tokens += n.tokens.len();
             }
         }
+        let (tier_spills, tier_readmits, tier_bytes) =
+            self.tier.as_ref().map_or((0, 0, 0), |t| t.counters());
         CacheStats {
             hits: self.hits,
             misses: self.misses,
@@ -792,6 +1005,9 @@ impl PrefixCache {
             pages_capacity: self.alloc.capacity(),
             pins_acquired: self.pins_acquired,
             pins_released: self.pins_released,
+            tier_spills,
+            tier_readmits,
+            tier_bytes,
         }
     }
 }
@@ -805,6 +1021,15 @@ mod tests {
     /// A snapshot whose KV rows encode (slot, position) so assembly bugs
     /// show up as value mismatches.
     fn snapshot(tokens: &[u32], slots: usize, d: usize) -> PrefixSnapshot {
+        snapshot_dtype(tokens, slots, d, KvDtype::F32)
+    }
+
+    fn snapshot_dtype(
+        tokens: &[u32],
+        slots: usize,
+        d: usize,
+        dtype: KvDtype,
+    ) -> PrefixSnapshot {
         let n = tokens.len();
         let mut kv = Vec::new();
         let mut states = Vec::new();
@@ -819,8 +1044,15 @@ mod tests {
                     v[(i, c)] = -(k[(i, c)]);
                 }
             }
+            // Mirror the engine: live rows are fake-quantized onto the
+            // dtype's grid, so packing them for the cache is lossless.
+            crate::coordinator::kv_quant::fake_quant_matrix(&mut k, dtype);
+            crate::coordinator::kv_quant::fake_quant_matrix(&mut v, dtype);
             states.push(backend.begin_decode(&k, &k, s as u64).unwrap());
-            kv.push((k, v));
+            kv.push((
+                KvStore::from_matrix(k, dtype),
+                KvStore::from_matrix(v, dtype),
+            ));
         }
         let nll: Vec<f32> = (0..n - 1).map(|i| i as f32 * 0.5).collect();
         let last_logits: Vec<f32> = (0..d).map(|_| rng.gauss32(0.0, 1.0)).collect();
@@ -833,7 +1065,21 @@ mod tests {
     }
 
     fn cache(blocks: usize, min_tokens: usize) -> PrefixCache {
-        PrefixCache::new(PrefixCacheConfig { blocks, min_tokens, persist_path: None })
+        PrefixCache::new(PrefixCacheConfig { blocks, min_tokens, ..Default::default() })
+    }
+
+    /// A cache with the disk tier armed: spill file at `spill`, re-admit
+    /// through a uniform `exact` policy (1 head per layer).
+    fn tier_cache(blocks: usize, dtype: KvDtype, spill: &std::path::Path) -> PrefixCache {
+        let mut c = PrefixCache::new(PrefixCacheConfig {
+            blocks,
+            min_tokens: 4,
+            kv_dtype: dtype,
+            spill_path: Some(spill.to_path_buf()),
+            ..Default::default()
+        });
+        c.set_restorer(Arc::new(AttnPolicy::parse("exact").unwrap()), 1);
+        c
     }
 
     #[test]
@@ -849,8 +1095,8 @@ mod tests {
         assert_eq!(hit.last_logits, snap.last_logits);
         let hkv = hit.assemble_kv();
         for s in 0..2 {
-            assert_eq!(hkv[s].0.data, snap.kv[s].0.data, "slot {s} K");
-            assert_eq!(hkv[s].1.data, snap.kv[s].1.data, "slot {s} V");
+            assert_eq!(hkv[s].0.data, snap.kv[s].0.to_matrix().data, "slot {s} K");
+            assert_eq!(hkv[s].1.data, snap.kv[s].1.to_matrix().data, "slot {s} V");
         }
         let st = c.stats();
         assert_eq!((st.hits, st.misses, st.insertions), (1, 1, 1));
@@ -873,7 +1119,11 @@ mod tests {
         assert_eq!(ha.nll, snap_a.nll);
         let akv = ha.assemble_kv();
         for s in 0..2 {
-            assert_eq!(akv[s].0.data, snap_a.kv[s].0.data, "slot {s} after split");
+            assert_eq!(
+                akv[s].0.data,
+                snap_a.kv[s].0.to_matrix().data,
+                "slot {s} after split"
+            );
         }
         let hb = c.lookup(&b, false).expect("b cached");
         assert_eq!(hb.len, b.len());
@@ -1050,5 +1300,101 @@ mod tests {
         let mut other = t.clone();
         other[0] = other[0].wrapping_add(1) % 50;
         assert!(c.wants_insert(&other, 0, true), "fresh family accepted");
+    }
+
+    #[test]
+    fn quantized_cache_packs_more_tokens_per_page() {
+        // One page: 16 f32 tokens, but 64 int8 tokens — the capacity win.
+        let t = toks(30, 64);
+        let mut f32c = cache(1, 4);
+        assert!(!f32c.insert(&t, snapshot(&t, 1, 4), false), "64 tokens need 4 f32 pages");
+        let mut i8c = PrefixCache::new(PrefixCacheConfig {
+            blocks: 1,
+            min_tokens: 4,
+            kv_dtype: KvDtype::Int8,
+            ..Default::default()
+        });
+        let snap = snapshot_dtype(&t, 1, 4, KvDtype::Int8);
+        assert!(i8c.insert(&t, snap.clone(), false), "one int8 page holds 64 tokens");
+        let st = i8c.stats();
+        assert_eq!((st.pages_in_use, st.cached_tokens), (1, 64));
+        // The hit dequantizes bitwise to the captured (fake-quantized) rows.
+        let hit = i8c.lookup(&t, false).expect("quantized hit");
+        assert_eq!(hit.assemble_kv()[0].0.data, snap.kv[0].0.to_matrix().data);
+        i8c.release(hit.node);
+    }
+
+    #[test]
+    fn evicted_subtrees_spill_and_readmit_bitwise() {
+        for dtype in [KvDtype::F32, KvDtype::Int8] {
+            let spill = std::env::temp_dir().join(format!(
+                "pfx_tier_{}_{}.spill",
+                std::process::id(),
+                dtype.as_str()
+            ));
+            let _ = std::fs::remove_file(&spill);
+            // Pool fits exactly two 32-token prefixes at this dtype.
+            let mut c = tier_cache(2 * dtype.pages_for(32), dtype, &spill);
+            let a = toks(31, 32);
+            let b = toks(32, 32);
+            let d = toks(33, 32);
+            assert!(c.insert(&a, snapshot_dtype(&a, 1, 4, dtype), false));
+            let first = c.lookup(&a, false).expect("hot hit");
+            let (kv1, nll1, logits1) = (first.assemble_kv(), first.nll.clone(), first.last_logits.clone());
+            c.release(first.node);
+            assert!(c.insert(&b, snapshot_dtype(&b, 1, 4, dtype), false));
+            // Pool full: inserting `d` evicts LRU `a` — which now spills to
+            // disk instead of vanishing.
+            assert!(c.insert(&d, snapshot_dtype(&d, 1, 4, dtype), false));
+            assert!(c.stats().tier_spills >= 1, "eviction spilled");
+            assert!(c.stats().tier_bytes > 0);
+            // Warm re-admit: the lookup pulls `a` back from disk (evicting
+            // another LRU subtree for room) and serves it bitwise
+            // identically to the hot hit it replaces.
+            let again = c.lookup(&a, false).expect("warm re-admit hit");
+            assert_eq!(again.len, 32, "{}", dtype.as_str());
+            assert_eq!(again.nll, nll1);
+            assert_eq!(again.last_logits, logits1);
+            let kv2 = again.assemble_kv();
+            assert_eq!(kv2[0].0.data, kv1[0].0.data, "{} K bitwise", dtype.as_str());
+            assert_eq!(kv2[0].1.data, kv1[0].1.data, "{} V bitwise", dtype.as_str());
+            c.release(again.node);
+            let st = c.stats();
+            assert_eq!(st.tier_readmits, 1);
+            assert!(st.tier_spills >= 2, "re-admit pressure spilled the next victim");
+            assert_eq!(st.pins_acquired, st.pins_released);
+            let _ = std::fs::remove_file(&spill);
+        }
+    }
+
+    #[test]
+    fn corrupt_spill_degrades_to_miss_not_error() {
+        let spill = std::env::temp_dir()
+            .join(format!("pfx_tier_corrupt_{}.spill", std::process::id()));
+        let _ = std::fs::remove_file(&spill);
+        let mut c = tier_cache(4, KvDtype::F32, &spill);
+        let a = toks(34, 32);
+        let b = toks(35, 32);
+        let d = toks(36, 32);
+        assert!(c.insert(&a, snapshot(&a, 1, 4), false));
+        assert!(c.insert(&b, snapshot(&b, 1, 4), false));
+        assert!(c.insert(&d, snapshot(&d, 1, 4), false)); // evicts + spills `a`
+        assert_eq!(c.stats().tier_spills, 1);
+        // Poison the spilled record on disk: the CRC-guarded decode must
+        // drop it and the lookup degrades to a plain miss (cold recompute
+        // upstream), never an error or panic.
+        let mut bytes = std::fs::read(&spill).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        std::fs::write(&spill, &bytes).unwrap();
+        assert!(c.lookup(&a, false).is_none(), "poisoned record → miss");
+        assert_eq!(c.stats().tier_readmits, 0);
+        assert_eq!(c.stats().tier_bytes, 0, "poisoned entry consumed, not retried");
+        assert!(c.lookup(&a, false).is_none(), "no retry of a consumed entry");
+        // The RAM tier still serves normally.
+        let hit = c.lookup(&d, false).expect("RAM entries unaffected");
+        c.release(hit.node);
+        assert_eq!(c.stats().pins_acquired, c.stats().pins_released);
+        let _ = std::fs::remove_file(&spill);
     }
 }

@@ -5,7 +5,7 @@
 //! Little-endian layout (all integers u32 unless noted):
 //!
 //! ```text
-//! magic = 0x43584650 ("PFXC"), version = 4
+//! magic = 0x43584650 ("PFXC"), version = 5
 //! policy_len, policy utf-8        (canonical AttnPolicy string — reload
 //!                                  refuses a store built under another
 //!                                  policy: artifacts are policy-specific)
@@ -15,14 +15,23 @@
 //!                                  from a model with different depth/width
 //!                                  must refuse to load, not panic a warm
 //!                                  prefill later)
+//! kv_dtype                        (v5: storage dtype tag for the KV
+//!                                  sections — a store packed at another
+//!                                  width than the serving `[cache]
+//!                                  kv_dtype` refuses to load, keeping page
+//!                                  accounting consistent)
 //! count                           (number of cached prefixes)
 //! per prefix:
 //!   tokens_len, u32×tokens_len
 //!   nll_len, f32×nll_len
 //!   logits_len, f32×logits_len
 //!   per slot (slots×):
-//!     k_rows, k_cols, f32×(k_rows·k_cols)
-//!     v_rows, v_cols, f32×(v_rows·v_cols)
+//!     K kvstore, V kvstore              (v5: dtype, rows, cols, scale
+//!                                        vector, packed payload bytes —
+//!                                        f32 payloads are LE f32 rows,
+//!                                        f16/int8 payloads are the packed
+//!                                        `QuantKv` bytes verbatim, so a
+//!                                        reload dequantizes bitwise)
 //!     codes_len, u32×codes_len          (LSH key codes)
 //!     ranks_len, u32×ranks_len          (query-code gray-rank multiset)
 //!     sel_len, u32×sel_len              (cached key selection)
@@ -62,13 +71,14 @@
 
 use super::{PrefixCache, PrefixSnapshot};
 use crate::attention::{AttnPolicy, DecodeArtifacts, DecodeState};
+use crate::coordinator::kv_quant::{KvDtype, KvStore, QuantKv, QuantPage, PAGE_ROWS};
 use crate::linalg::Matrix;
 use crate::prescore::StreamArtifacts;
 use anyhow::{bail, Context, Result};
 use std::path::Path;
 
 pub const MAGIC: u32 = 0x4358_4650; // "PFXC" little-endian
-pub const VERSION: u32 = 4;
+pub const VERSION: u32 = 5;
 
 /// A parked streaming session, persisted at drain so a client reconnecting
 /// after a restart can resume: the server re-admits `context` (warm through
@@ -105,7 +115,7 @@ pub fn crc32(bytes: &[u8]) -> u32 {
     !crc
 }
 
-fn put_u32(buf: &mut Vec<u8>, v: u32) {
+pub(crate) fn put_u32(buf: &mut Vec<u8>, v: u32) {
     buf.extend_from_slice(&v.to_le_bytes());
 }
 
@@ -114,35 +124,84 @@ fn put_str(buf: &mut Vec<u8>, s: &str) {
     buf.extend_from_slice(s.as_bytes());
 }
 
-fn put_u32s(buf: &mut Vec<u8>, vs: &[u32]) {
+pub(crate) fn put_u32s(buf: &mut Vec<u8>, vs: &[u32]) {
     put_u32(buf, vs.len() as u32);
     for &v in vs {
         put_u32(buf, v);
     }
 }
 
-fn put_f32s(buf: &mut Vec<u8>, vs: &[f32]) {
+pub(crate) fn put_f32s(buf: &mut Vec<u8>, vs: &[f32]) {
     put_u32(buf, vs.len() as u32);
     for &v in vs {
         buf.extend_from_slice(&v.to_le_bytes());
     }
 }
 
-fn put_matrix(buf: &mut Vec<u8>, m: &Matrix) {
-    put_u32(buf, m.rows as u32);
-    put_u32(buf, m.cols as u32);
-    for &v in &m.data {
-        buf.extend_from_slice(&v.to_le_bytes());
+/// Serialize one cached KV matrix at its packed width: dtype tag, rows,
+/// cols, the page-concatenated per-row scale vector (empty for f32/f16),
+/// then the payload bytes (LE f32 rows, f16 bits, or int8 codes).
+pub(crate) fn put_kvstore(buf: &mut Vec<u8>, s: &KvStore) {
+    put_u32(buf, s.dtype().tag());
+    put_u32(buf, s.rows() as u32);
+    put_u32(buf, s.cols() as u32);
+    match s {
+        KvStore::F32(m) => {
+            put_u32(buf, 0); // no scales
+            put_u32(buf, (m.data.len() * 4) as u32);
+            for &v in &m.data {
+                buf.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        KvStore::Quant(q) => {
+            let scales: Vec<f32> =
+                q.pages().iter().flat_map(|p| p.scales.iter().copied()).collect();
+            put_f32s(buf, &scales);
+            put_u32(buf, q.byte_len() as u32);
+            for p in q.pages() {
+                buf.extend_from_slice(&p.data);
+            }
+        }
     }
 }
 
-struct Reader<'a> {
+/// Serialize one slot's decode artifacts (codes, ranks, selection,
+/// fallback, optional streaming-scorer state). Shared by the persist store
+/// and the disk-tier spill records so the two formats cannot drift.
+pub(crate) fn put_artifacts(buf: &mut Vec<u8>, art: &DecodeArtifacts) {
+    put_u32s(buf, &art.k_codes);
+    put_u32s(buf, &art.q_ranks);
+    let sel: Vec<u32> = art.selection.iter().map(|&s| s as u32).collect();
+    put_u32s(buf, &sel);
+    buf.push(art.fallback as u8);
+    match &art.stream {
+        None => buf.push(0),
+        Some(st) => {
+            buf.push(1);
+            buf.push(st.scorer);
+            put_f32s(buf, &st.warmup);
+            put_f32s(buf, &st.centroids);
+            put_f32s(buf, &st.sums);
+            put_u32s(buf, &st.counts);
+            put_f32s(buf, &st.score_mass);
+            put_u32(buf, st.since_recenter);
+            put_f32s(buf, &st.sel_scores);
+            put_u32(buf, st.folded);
+        }
+    }
+}
+
+pub(crate) struct Reader<'a> {
     buf: &'a [u8],
     off: usize,
 }
 
 impl<'a> Reader<'a> {
-    fn u32(&mut self) -> Result<u32> {
+    pub(crate) fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, off: 0 }
+    }
+
+    pub(crate) fn u32(&mut self) -> Result<u32> {
         if self.off + 4 > self.buf.len() {
             bail!("truncated prefix-cache file at offset {}", self.off);
         }
@@ -151,7 +210,7 @@ impl<'a> Reader<'a> {
         Ok(v)
     }
 
-    fn u8(&mut self) -> Result<u8> {
+    pub(crate) fn u8(&mut self) -> Result<u8> {
         if self.off >= self.buf.len() {
             bail!("truncated prefix-cache file at offset {}", self.off);
         }
@@ -164,30 +223,74 @@ impl<'a> Reader<'a> {
         Ok(f32::from_le_bytes(self.u32()?.to_le_bytes()))
     }
 
-    fn u32s(&mut self) -> Result<Vec<u32>> {
+    pub(crate) fn u32s(&mut self) -> Result<Vec<u32>> {
         let n = self.u32()? as usize;
         self.check_remaining(n, 4)?;
         (0..n).map(|_| self.u32()).collect()
     }
 
-    fn f32s(&mut self) -> Result<Vec<f32>> {
+    pub(crate) fn f32s(&mut self) -> Result<Vec<f32>> {
         let n = self.u32()? as usize;
         self.check_remaining(n, 4)?;
         (0..n).map(|_| self.f32()).collect()
     }
 
-    fn matrix(&mut self) -> Result<Matrix> {
+    /// Decode one KV section written by [`put_kvstore`]. Pages are rebuilt
+    /// at [`PAGE_ROWS`] rows; int8 scales are per-row in row order, so the
+    /// regrouping is grid-neutral and the dequantized values are bitwise
+    /// identical to the store that was saved.
+    pub(crate) fn kvstore(&mut self) -> Result<KvStore> {
+        let dtype = KvDtype::from_tag(self.u32()?)?;
         let rows = self.u32()? as usize;
         let cols = self.u32()? as usize;
-        self.check_remaining(rows.saturating_mul(cols), 4)?;
-        let mut data = Vec::with_capacity(rows * cols);
-        for _ in 0..rows * cols {
-            data.push(self.f32()?);
+        let scales = self.f32s()?;
+        let n = self.u32()? as usize;
+        self.check_remaining(n, 1)?;
+        if n != rows.saturating_mul(cols).saturating_mul(dtype.bytes_per_elem()) {
+            bail!(
+                "kv section has {n} payload bytes for {rows}×{cols} {} at offset {}",
+                dtype.as_str(),
+                self.off
+            );
         }
-        Ok(Matrix::from_vec(rows, cols, data))
+        let bytes = &self.buf[self.off..self.off + n];
+        self.off += n;
+        if dtype == KvDtype::F32 {
+            if !scales.is_empty() {
+                bail!("f32 kv section carries {} scales", scales.len());
+            }
+            let data: Vec<f32> = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().expect("4-byte chunk"))) // unwrap-ok: chunks_exact(4)
+                .collect();
+            return Ok(KvStore::F32(Matrix::from_vec(rows, cols, data)));
+        }
+        let want_scales = if dtype == KvDtype::Int8 { rows } else { 0 };
+        if scales.len() != want_scales {
+            bail!(
+                "kv section has {} scales for {rows} {} rows (expected {want_scales})",
+                scales.len(),
+                dtype.as_str()
+            );
+        }
+        let elem = dtype.bytes_per_elem();
+        let mut pages = Vec::with_capacity(rows.div_ceil(PAGE_ROWS));
+        let mut r0 = 0;
+        while r0 < rows {
+            let r1 = (r0 + PAGE_ROWS).min(rows);
+            let pscales =
+                if dtype == KvDtype::Int8 { scales[r0..r1].to_vec() } else { Vec::new() };
+            pages.push(QuantPage {
+                scales: pscales,
+                rows: r1 - r0,
+                data: bytes[r0 * cols * elem..r1 * cols * elem].to_vec(),
+            });
+            r0 = r1;
+        }
+        Ok(KvStore::Quant(QuantKv::from_pages(dtype, cols, pages)?))
     }
 
-    fn string(&mut self) -> Result<String> {
+    pub(crate) fn string(&mut self) -> Result<String> {
         let n = self.u32()? as usize;
         if self.off + n > self.buf.len() {
             bail!("truncated prefix-cache string at offset {}", self.off);
@@ -200,12 +303,36 @@ impl<'a> Reader<'a> {
     }
 
     /// Guard huge length prefixes from a corrupt file before allocating.
-    fn check_remaining(&self, items: usize, item_size: usize) -> Result<()> {
+    pub(crate) fn check_remaining(&self, items: usize, item_size: usize) -> Result<()> {
         if items.saturating_mul(item_size) > self.buf.len() - self.off {
             bail!("prefix-cache length prefix exceeds file size at offset {}", self.off);
         }
         Ok(())
     }
+}
+
+/// Decode one slot's artifacts written by [`put_artifacts`].
+pub(crate) fn read_artifacts(r: &mut Reader) -> Result<DecodeArtifacts> {
+    let k_codes = r.u32s()?;
+    let q_ranks = r.u32s()?;
+    let selection: Vec<usize> = r.u32s()?.into_iter().map(|s| s as usize).collect();
+    let fallback = r.u8()? != 0;
+    let stream = match r.u8()? {
+        0 => None,
+        1 => Some(StreamArtifacts {
+            scorer: r.u8()?,
+            warmup: r.f32s()?,
+            centroids: r.f32s()?,
+            sums: r.f32s()?,
+            counts: r.u32s()?,
+            score_mass: r.f32s()?,
+            since_recenter: r.u32()?,
+            sel_scores: r.f32s()?,
+            folded: r.u32()?,
+        }),
+        other => bail!("bad stream-artifact tag {other} at offset {}", r.off),
+    };
+    Ok(DecodeArtifacts { k_codes, q_ranks, selection, fallback, stream })
 }
 
 /// Serialize every cached prefix (with artifacts) of `cache` to `path`,
@@ -231,40 +358,21 @@ pub fn save(
     buf.extend_from_slice(pol.as_bytes());
     put_u32(&mut buf, n_heads as u32);
     let slots = prefixes.first().map(|(_, s)| s.states.len()).unwrap_or(0);
-    let d_head = prefixes.first().map(|(_, s)| s.kv[0].0.cols).unwrap_or(0);
+    let d_head = prefixes.first().map(|(_, s)| s.kv[0].0.cols()).unwrap_or(0);
     let logits_w = prefixes.first().map(|(_, s)| s.last_logits.len()).unwrap_or(0);
     put_u32(&mut buf, slots as u32);
     put_u32(&mut buf, d_head as u32);
     put_u32(&mut buf, logits_w as u32);
+    put_u32(&mut buf, cache.config().kv_dtype.tag());
     put_u32(&mut buf, prefixes.len() as u32);
     for (tokens, snap) in &prefixes {
         put_u32s(&mut buf, tokens);
         put_f32s(&mut buf, &snap.nll);
         put_f32s(&mut buf, &snap.last_logits);
         for (slot, (k, v)) in snap.kv.iter().enumerate() {
-            put_matrix(&mut buf, k);
-            put_matrix(&mut buf, v);
-            let art: DecodeArtifacts = snap.states[slot].export_artifacts();
-            put_u32s(&mut buf, &art.k_codes);
-            put_u32s(&mut buf, &art.q_ranks);
-            let sel: Vec<u32> = art.selection.iter().map(|&s| s as u32).collect();
-            put_u32s(&mut buf, &sel);
-            buf.push(art.fallback as u8);
-            match &art.stream {
-                None => buf.push(0),
-                Some(st) => {
-                    buf.push(1);
-                    buf.push(st.scorer);
-                    put_f32s(&mut buf, &st.warmup);
-                    put_f32s(&mut buf, &st.centroids);
-                    put_f32s(&mut buf, &st.sums);
-                    put_u32s(&mut buf, &st.counts);
-                    put_f32s(&mut buf, &st.score_mass);
-                    put_u32(&mut buf, st.since_recenter);
-                    put_f32s(&mut buf, &st.sel_scores);
-                    put_u32(&mut buf, st.folded);
-                }
-            }
+            put_kvstore(&mut buf, k);
+            put_kvstore(&mut buf, v);
+            put_artifacts(&mut buf, &snap.states[slot].export_artifacts());
         }
     }
     put_u32(&mut buf, sessions.len() as u32);
@@ -324,8 +432,8 @@ pub fn load(
     if version < VERSION {
         bail!(
             "prefix-cache store is version {version}, this build reads version {VERSION} \
-             (older stores predate the CRC-sealed session-record section) — delete the \
-             store and let the server rebuild it"
+             (older stores predate the dtype-tagged KV sections) — delete the store and \
+             let the server rebuild it"
         );
     }
     if version > VERSION {
@@ -355,6 +463,16 @@ pub fn load(
     let file_slots = r.u32()? as usize;
     let file_d_head = r.u32()? as usize;
     let file_logits = r.u32()? as usize;
+    let file_dtype = KvDtype::from_tag(r.u32()?)?;
+    if file_dtype != cache.config().kv_dtype {
+        bail!(
+            "prefix cache stores KV at {}, server [cache] kv_dtype is {} — page \
+             accounting and attend grids would disagree; delete the store or match the \
+             config",
+            file_dtype.as_str(),
+            cache.config().kv_dtype.as_str()
+        );
+    }
     let count = r.u32()? as usize;
     if count > 0 {
         if file_slots != slots {
@@ -379,36 +497,24 @@ pub fn load(
         if last_logits.len() != file_logits {
             bail!("prefix-cache logits row width {} != header {file_logits}", last_logits.len());
         }
-        let mut kv: Vec<(Matrix, Matrix)> = Vec::with_capacity(slots);
+        let mut kv: Vec<(KvStore, KvStore)> = Vec::with_capacity(slots);
         let mut states: Vec<DecodeState> = Vec::with_capacity(slots);
         for slot in 0..slots {
-            let k = r.matrix()?;
-            let v = r.matrix()?;
-            if k.cols != file_d_head {
-                bail!("prefix-cache KV dim {} != header d_head {file_d_head}", k.cols);
+            let k = r.kvstore()?;
+            let v = r.kvstore()?;
+            if k.cols() != file_d_head {
+                bail!("prefix-cache KV dim {} != header d_head {file_d_head}", k.cols());
             }
-            let k_codes = r.u32s()?;
-            let q_ranks = r.u32s()?;
-            let selection: Vec<usize> = r.u32s()?.into_iter().map(|s| s as usize).collect();
-            let fallback = r.u8()? != 0;
-            let stream = match r.u8()? {
-                0 => None,
-                1 => Some(StreamArtifacts {
-                    scorer: r.u8()?,
-                    warmup: r.f32s()?,
-                    centroids: r.f32s()?,
-                    sums: r.f32s()?,
-                    counts: r.u32s()?,
-                    score_mass: r.f32s()?,
-                    since_recenter: r.u32()?,
-                    sel_scores: r.f32s()?,
-                    folded: r.u32()?,
-                }),
-                other => bail!("bad stream-artifact tag {other} at offset {}", r.off),
-            };
-            let art = DecodeArtifacts { k_codes, q_ranks, selection, fallback, stream };
+            if k.dtype() != file_dtype || v.dtype() != file_dtype {
+                bail!(
+                    "kv section dtype {} != header kv_dtype {}",
+                    k.dtype().as_str(),
+                    file_dtype.as_str()
+                );
+            }
+            let art = read_artifacts(&mut r)?;
             let layer = slot / n_heads;
-            let dim = k.cols;
+            let dim = k.cols();
             let state = policy
                 .backend(layer)
                 .restore_decode(slot as u64, dim, &art)
@@ -447,25 +553,37 @@ mod tests {
     use crate::util::rng::Rng;
 
     fn sample_cache(spec: &str) -> (PrefixCache, AttnPolicy, Vec<u32>) {
+        sample_cache_dtype(spec, KvDtype::F32)
+    }
+
+    fn sample_cache_dtype(spec: &str, dtype: KvDtype) -> (PrefixCache, AttnPolicy, Vec<u32>) {
         let policy = AttnPolicy::parse(spec).unwrap();
         let mut cache = PrefixCache::new(PrefixCacheConfig {
             blocks: 64,
             min_tokens: 4,
-            persist_path: None,
+            kv_dtype: dtype,
+            ..Default::default()
         });
         let mut rng = Rng::new(11);
         let n = 24;
         let d = 8;
         let tokens: Vec<u32> = (0..n).map(|_| rng.usize(40) as u32).collect();
         let q = Matrix::randn(n, d, 1.0, &mut rng);
-        let k = Matrix::randn(n, d, 1.0, &mut rng);
-        let v = Matrix::randn(n, d, 1.0, &mut rng);
+        let mut k = Matrix::randn(n, d, 1.0, &mut rng);
+        let mut v = Matrix::randn(n, d, 1.0, &mut rng);
+        // Mirror the engine: live rows are fake-quantized onto the dtype's
+        // grid, so packing them for the cache is lossless.
+        crate::coordinator::kv_quant::fake_quant_matrix(&mut k, dtype);
+        crate::coordinator::kv_quant::fake_quant_matrix(&mut v, dtype);
         let slots = 2; // pretend 1 layer × 2 heads
         let mut kv = Vec::new();
         let mut states = Vec::new();
         for s in 0..slots {
             states.push(policy.backend(0).begin_decode(&q, &k, s as u64).unwrap());
-            kv.push((k.clone(), v.clone()));
+            kv.push((
+                KvStore::from_matrix(k.clone(), dtype),
+                KvStore::from_matrix(v.clone(), dtype),
+            ));
         }
         let nll: Vec<f32> = (0..n - 1).map(|i| i as f32).collect();
         let snap = PrefixSnapshot { kv_from: 0, kv, states, nll, last_logits: vec![0.5; 16] };
@@ -512,7 +630,7 @@ mod tests {
             let mut fresh = PrefixCache::new(PrefixCacheConfig {
                 blocks: 64,
                 min_tokens: 4,
-                persist_path: None,
+                ..Default::default()
             });
             let (restored, sessions) = load(&mut fresh, &policy, 2, 2, 8, 16, &dir).unwrap();
             assert_eq!(restored, 1, "{spec}");
@@ -578,7 +696,7 @@ mod tests {
         let mut fresh = PrefixCache::new(PrefixCacheConfig {
             blocks: 64,
             min_tokens: 4,
-            persist_path: None,
+            ..Default::default()
         });
         let out = load(&mut fresh, policy, 2, 2, 8, 16, &path).map(|(n, _)| n);
         let _ = std::fs::remove_file(&path);
@@ -640,7 +758,9 @@ mod tests {
         let _ = std::fs::remove_file(&path);
         let pol_len =
             u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
-        let count_off = 28 + pol_len;
+        // Header: magic, version, policy, heads, slots, d_head, logits_w,
+        // kv_dtype — count sits 32 bytes past the policy string.
+        let count_off = 32 + pol_len;
         // A re-sealed store claiming 4 billion prefixes / tokens: the
         // length-checked section reads must refuse it cleanly — no panic,
         // and crucially no attempt to allocate anywhere near the claim.
@@ -668,7 +788,7 @@ mod tests {
         let mut fresh = PrefixCache::new(PrefixCacheConfig {
             blocks: 64,
             min_tokens: 4,
-            persist_path: None,
+            ..Default::default()
         });
         let (restored, got) = load(&mut fresh, &policy, 2, 2, 8, 16, &path).unwrap();
         assert_eq!(restored, 1);
@@ -759,6 +879,43 @@ mod tests {
                 try_load(&flipped, &policy, "pair").is_err(),
                 "paired flip #{i} (words {wa}/{wb}, bit {bit}) must be rejected"
             );
+        }
+    }
+
+    #[test]
+    fn quantized_stores_roundtrip_bitwise_and_refuse_other_dtypes() {
+        for dtype in [KvDtype::F16, KvDtype::Int8] {
+            let (cache, policy, tokens) = sample_cache_dtype("exact", dtype);
+            let path = std::env::temp_dir()
+                .join(format!("pfxc_q_{}_{}", std::process::id(), dtype.as_str()));
+            save(&cache, &policy, 2, true, &[], &path).unwrap();
+            let mut fresh = PrefixCache::new(PrefixCacheConfig {
+                blocks: 64,
+                min_tokens: 4,
+                kv_dtype: dtype,
+                ..Default::default()
+            });
+            let (restored, _) = load(&mut fresh, &policy, 2, 2, 8, 16, &path).unwrap();
+            assert_eq!(restored, 1, "{}", dtype.as_str());
+            let hit = fresh.lookup(&tokens, false).expect("restored prefix hits");
+            let mut orig = cache;
+            let ohit = orig.lookup(&tokens, false).unwrap();
+            let (hkv, okv) = (hit.assemble_kv(), ohit.assemble_kv());
+            for s in 0..2 {
+                // Packed bytes survive the file verbatim, so the reload
+                // dequantizes bitwise-identically to the original cache.
+                assert_eq!(hkv[s].0.data, okv[s].0.data, "{} slot {s} K", dtype.as_str());
+                assert_eq!(hkv[s].1.data, okv[s].1.data, "{} slot {s} V", dtype.as_str());
+            }
+            // A server running another [cache] kv_dtype refuses up front.
+            let mut other = PrefixCache::new(PrefixCacheConfig {
+                blocks: 64,
+                min_tokens: 4,
+                ..Default::default()
+            });
+            let err = load(&mut other, &policy, 2, 2, 8, 16, &path).unwrap_err();
+            assert!(err.to_string().contains("kv_dtype"), "{err:#}");
+            let _ = std::fs::remove_file(&path);
         }
     }
 }

@@ -1,0 +1,398 @@
+//! Warm disk tier for the shared-prefix cache: LRU-evicted subtrees spill
+//! their full-prefix entries (chain tokens, packed KV, exported artifacts)
+//! to an append-only file instead of being freed, and a later radix hit
+//! re-admits them — the memory hierarchy the tiered KV design names **hot
+//! RAM / warm disk / cold recompute**.
+//!
+//! Records reuse the [`persist`](super::persist) VERSION 5 section format
+//! (same `put_kvstore`/`put_artifacts` encoders, same CRC-32 trailer), so
+//! the two on-disk layouts cannot drift: one record is
+//!
+//! ```text
+//! magic, version = 5
+//! tokens_len, u32×tokens_len          (the full prefix — also the index key)
+//! nll_len, f32×nll_len
+//! logits_len, f32×logits_len
+//! slots
+//! per slot: K kvstore, V kvstore, artifacts
+//! crc32                               (of every preceding record byte)
+//! ```
+//!
+//! The spill file is truncated at open: the warm tier is an in-session
+//! overflow area, not durable state — surviving restarts is the persist
+//! store's job. The in-memory index maps prefix tokens → byte range;
+//! [`TierStore::take`] consumes the index entry *before* decoding, so a
+//! poisoned record is attempted exactly once and every failure path
+//! degrades to a cold recompute upstream, never a request error.
+//!
+//! Packed KV bytes are spilled verbatim and re-admitted verbatim
+//! ([`KvStore`] slices/concats losslessly), which is what makes a warm-disk
+//! hit bitwise identical to the hot-RAM hit it replaces.
+
+use super::persist::{
+    crc32, put_artifacts, put_f32s, put_kvstore, put_u32, put_u32s, read_artifacts, Reader,
+    MAGIC, VERSION,
+};
+use crate::attention::DecodeArtifacts;
+use crate::coordinator::kv_quant::KvStore;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::PathBuf;
+
+/// Everything a re-admit needs to rebuild a [`super::PrefixSnapshot`]: the
+/// per-slot packed KV, the exported decode artifacts (states rebuild
+/// through the serving policy's `restore_decode`), the prefix NLL, and the
+/// boundary logits row.
+pub struct SpillEntry {
+    pub kv: Vec<(KvStore, KvStore)>,
+    pub arts: Vec<DecodeArtifacts>,
+    pub nll: Vec<f32>,
+    pub last_logits: Vec<f32>,
+}
+
+/// Byte range of one record in the spill file.
+struct SpillRef {
+    offset: u64,
+    len: usize,
+}
+
+/// The warm tier: an append-only spill file plus its in-memory prefix
+/// index and the counters `ServerStats` surfaces.
+pub struct TierStore {
+    path: PathBuf,
+    index: HashMap<Vec<u32>, SpillRef>,
+    file_len: u64,
+    /// Monotone spill counter — the fault-injection key for `TierSpill`.
+    seq: u64,
+    spills: usize,
+    readmits: usize,
+    /// Bytes currently resident in the index (consumed/replaced records
+    /// are subtracted even though append-only storage never reclaims them
+    /// mid-session).
+    bytes: usize,
+}
+
+impl TierStore {
+    /// Create (truncating) the spill file. The warm tier starts empty every
+    /// session — see the module docs for why.
+    pub fn open(path: PathBuf) -> Result<TierStore> {
+        std::fs::File::create(&path)
+            .with_context(|| format!("creating spill file {}", path.display()))?;
+        Ok(TierStore {
+            path,
+            index: HashMap::new(),
+            file_len: 0,
+            seq: 0,
+            spills: 0,
+            readmits: 0,
+            bytes: 0,
+        })
+    }
+
+    /// The longest spilled prefix of `tokens` (exact length only under
+    /// `full_only`, mirroring the radix walk's boundary rule).
+    pub fn probe(&self, tokens: &[u32], full_only: bool) -> Option<Vec<u32>> {
+        self.index
+            .keys()
+            .filter(|k| {
+                if full_only {
+                    k.len() == tokens.len()
+                } else {
+                    k.len() <= tokens.len()
+                }
+            })
+            .filter(|k| k[..] == tokens[..k.len()])
+            .max_by_key(|k| k.len())
+            .cloned()
+    }
+
+    /// Append one record and index it. Best-effort: an I/O failure logs and
+    /// returns false (the eviction proceeds as a plain free). Re-spilling
+    /// an indexed prefix replaces its entry.
+    pub fn spill(&mut self, tokens: &[u32], entry: &SpillEntry) -> bool {
+        let mut buf = encode_record(tokens, entry);
+        self.seq += 1;
+        if crate::fault::fires(crate::fault::FaultPoint::TierSpill, self.seq) {
+            // Chaos hook: corrupt one record byte AFTER the checksum is
+            // sealed — the eventual re-admit must drop the record cleanly
+            // and the request degrade to cold recompute, never error.
+            let idx = buf.len() / 2;
+            buf[idx] ^= 0x40;
+        }
+        let res = std::fs::OpenOptions::new()
+            .append(true)
+            .open(&self.path)
+            .and_then(|mut f| f.write_all(&buf));
+        if let Err(err) = res {
+            eprintln!("[cache] tier spill failed ({}): {err}", self.path.display());
+            return false;
+        }
+        let fresh = SpillRef { offset: self.file_len, len: buf.len() };
+        if let Some(old) = self.index.insert(tokens.to_vec(), fresh) {
+            self.bytes -= old.len;
+        }
+        self.file_len += buf.len() as u64;
+        self.bytes += buf.len();
+        self.spills += 1;
+        true
+    }
+
+    /// Remove `key`'s record from the index and decode it. `None` on any
+    /// read or validation failure (already logged) — the caller degrades to
+    /// whatever RAM can serve. The index entry is gone either way, so a
+    /// poisoned record cannot be retried.
+    pub fn take(&mut self, key: &[u32]) -> Option<SpillEntry> {
+        let r = self.index.remove(key)?;
+        self.bytes -= r.len;
+        crate::fault::maybe_slow(crate::fault::FaultPoint::TierLoad, r.offset);
+        let bytes = match self.read_range(r.offset, r.len) {
+            Ok(b) => b,
+            Err(err) => {
+                eprintln!("[cache] tier read failed ({}): {err:#}", self.path.display());
+                return None;
+            }
+        };
+        match decode_record(&bytes, key) {
+            Ok(entry) => Some(entry),
+            Err(err) => {
+                eprintln!(
+                    "[cache] dropping spilled {}-token prefix: {err:#}",
+                    key.len()
+                );
+                None
+            }
+        }
+    }
+
+    fn read_range(&self, offset: u64, len: usize) -> Result<Vec<u8>> {
+        let mut f = std::fs::File::open(&self.path)
+            .with_context(|| format!("opening spill file {}", self.path.display()))?;
+        f.seek(SeekFrom::Start(offset)).context("seeking spill record")?;
+        let mut buf = vec![0u8; len];
+        f.read_exact(&mut buf).context("reading spill record")?;
+        Ok(buf)
+    }
+
+    /// Count a successful re-admit (the cache calls this only once the
+    /// restored snapshot actually re-entered the tree).
+    pub fn note_readmit(&mut self) {
+        self.readmits += 1;
+    }
+
+    /// `(spills, readmits, resident bytes)` for `CacheStats`.
+    pub fn counters(&self) -> (usize, usize, usize) {
+        (self.spills, self.readmits, self.bytes)
+    }
+}
+
+fn encode_record(tokens: &[u32], entry: &SpillEntry) -> Vec<u8> {
+    let mut buf = Vec::new();
+    put_u32(&mut buf, MAGIC);
+    put_u32(&mut buf, VERSION);
+    put_u32s(&mut buf, tokens);
+    put_f32s(&mut buf, &entry.nll);
+    put_f32s(&mut buf, &entry.last_logits);
+    put_u32(&mut buf, entry.kv.len() as u32);
+    for (slot, (k, v)) in entry.kv.iter().enumerate() {
+        put_kvstore(&mut buf, k);
+        put_kvstore(&mut buf, v);
+        put_artifacts(&mut buf, &entry.arts[slot]);
+    }
+    let crc = crc32(&buf);
+    put_u32(&mut buf, crc);
+    buf
+}
+
+/// Decode and validate one record. Every length is guarded and the whole
+/// record is CRC-checked first, so truncated, bit-flipped, or old-version
+/// spill data fails with a typed error — the invariants `insert` asserts
+/// (NLL coverage, KV row counts, non-empty slots) are *checked* here so
+/// corrupt disk state can never panic the cache.
+fn decode_record(bytes: &[u8], key: &[u32]) -> Result<SpillEntry> {
+    if bytes.len() < 12 {
+        bail!("spill record too short ({} bytes)", bytes.len());
+    }
+    let (body, tail) = bytes.split_at(bytes.len() - 4);
+    let stored = u32::from_le_bytes(tail.try_into().expect("split_at(len-4) tail")); // unwrap-ok: 4-byte slice
+    let actual = crc32(body);
+    if stored != actual {
+        bail!("spill record checksum mismatch ({actual:#010x} != stored {stored:#010x})");
+    }
+    let mut r = Reader::new(body);
+    let magic = r.u32()?;
+    if magic != MAGIC {
+        bail!("bad spill record magic {magic:#x}");
+    }
+    let version = r.u32()?;
+    if version != VERSION {
+        bail!("spill record is version {version}, this build reads version {VERSION}");
+    }
+    let tokens = r.u32s()?;
+    if tokens[..] != *key {
+        bail!("spill record tokens disagree with the index key");
+    }
+    let nll = r.f32s()?;
+    if nll.len() + 1 != tokens.len() {
+        bail!("spill record has {} NLL entries for {} tokens", nll.len(), tokens.len());
+    }
+    let last_logits = r.f32s()?;
+    let slots = r.u32()? as usize;
+    r.check_remaining(slots, 4)?;
+    if slots == 0 {
+        bail!("spill record has no layer·head slots");
+    }
+    let mut kv = Vec::with_capacity(slots);
+    let mut arts = Vec::with_capacity(slots);
+    for _ in 0..slots {
+        let k = r.kvstore()?;
+        let v = r.kvstore()?;
+        if k.rows() != tokens.len() || v.rows() != tokens.len() {
+            bail!(
+                "spill record KV covers {}/{} rows for {} tokens",
+                k.rows(),
+                v.rows(),
+                tokens.len()
+            );
+        }
+        arts.push(read_artifacts(&mut r)?);
+        kv.push((k, v));
+    }
+    Ok(SpillEntry { kv, arts, nll, last_logits })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::kv_quant::KvDtype;
+    use crate::linalg::Matrix;
+    use crate::util::rng::Rng;
+
+    fn toks(seed: u64, n: usize) -> Vec<u32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.usize(50) as u32).collect()
+    }
+
+    fn entry(n: usize, d: usize, dtype: KvDtype) -> SpillEntry {
+        let mut rng = Rng::new(9);
+        let k = Matrix::randn(n, d, 1.0, &mut rng);
+        let v = Matrix::randn(n, d, 1.0, &mut rng);
+        SpillEntry {
+            kv: vec![(
+                KvStore::from_matrix(k, dtype),
+                KvStore::from_matrix(v, dtype),
+            )],
+            arts: vec![DecodeArtifacts {
+                k_codes: vec![1, 2, 3],
+                q_ranks: vec![7],
+                selection: vec![0, 2, 5],
+                fallback: false,
+                stream: None,
+            }],
+            nll: (0..n - 1).map(|i| i as f32 * 0.25).collect(),
+            last_logits: vec![0.5; 8],
+        }
+    }
+
+    fn temp(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("tier_{}_{tag}.spill", std::process::id()))
+    }
+
+    #[test]
+    fn spill_probe_take_roundtrip_bitwise() {
+        for dtype in [KvDtype::F32, KvDtype::F16, KvDtype::Int8] {
+            let path = temp(dtype.as_str());
+            let mut t = TierStore::open(path.clone()).unwrap();
+            let key = toks(1, 32);
+            let e = entry(32, 4, dtype);
+            assert!(t.spill(&key, &e));
+            let (spills, readmits, bytes) = t.counters();
+            assert_eq!((spills, readmits), (1, 0));
+            assert!(bytes > 0);
+            // A longer request probes down to the spilled prefix.
+            let mut longer = key.clone();
+            longer.extend_from_slice(&[9, 9]);
+            assert_eq!(t.probe(&longer, false), Some(key.clone()));
+            assert_eq!(t.probe(&longer, true), None, "full_only needs exact length");
+            assert_eq!(t.probe(&key, true), Some(key.clone()));
+            assert_eq!(t.probe(&key[..16], false), None, "shorter request no match");
+            let got = t.take(&key).expect("record decodes");
+            assert_eq!(got.kv[0].0.to_matrix().data, e.kv[0].0.to_matrix().data);
+            assert_eq!(got.kv[0].1.to_matrix().data, e.kv[0].1.to_matrix().data);
+            assert_eq!(got.arts, e.arts);
+            assert_eq!(got.nll, e.nll);
+            assert_eq!(got.last_logits, e.last_logits);
+            assert_eq!(t.counters().2, 0, "taken record leaves the index");
+            assert!(t.take(&key).is_none(), "consumed entries don't retry");
+            let _ = std::fs::remove_file(&path);
+        }
+    }
+
+    #[test]
+    fn probe_prefers_longest_prefix_and_respill_replaces() {
+        let path = temp("longest");
+        let mut t = TierStore::open(path.clone()).unwrap();
+        let long = toks(2, 32);
+        let short = long[..16].to_vec();
+        assert!(t.spill(&short, &entry(16, 4, KvDtype::F32)));
+        assert!(t.spill(&long, &entry(32, 4, KvDtype::F32)));
+        assert_eq!(t.probe(&long, false), Some(long.clone()));
+        // Re-spilling an indexed prefix replaces its entry, not double-counts.
+        let bytes_before = t.counters().2;
+        assert!(t.spill(&long, &entry(32, 4, KvDtype::F32)));
+        assert_eq!(t.counters().2, bytes_before, "replacement keeps resident bytes");
+        assert!(t.take(&long).is_some(), "replacement record decodes");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    fn reseal(bytes: &mut [u8]) {
+        let body_len = bytes.len() - 4;
+        let crc = crc32(&bytes[..body_len]);
+        bytes[body_len..].copy_from_slice(&crc.to_le_bytes());
+    }
+
+    #[test]
+    fn records_refuse_old_versions_corruption_and_truncation_typed() {
+        let key = toks(3, 24);
+        let e = entry(24, 4, KvDtype::Int8);
+        let buf = encode_record(&key, &e);
+        assert!(decode_record(&buf, &key).is_ok());
+        // A v4-era record (pre dtype-tagged sections) refuses by version,
+        // not a parse error deep in the payload.
+        let mut v4 = buf.clone();
+        v4[4..8].copy_from_slice(&4u32.to_le_bytes());
+        reseal(&mut v4);
+        let err = decode_record(&v4, &key).unwrap_err();
+        assert!(err.to_string().contains("version 4"), "{err:#}");
+        // Any bit flip is caught by the CRC before parsing.
+        let mut flip = buf.clone();
+        flip[buf.len() / 3] ^= 0x10;
+        let err = decode_record(&flip, &key).unwrap_err();
+        assert!(err.to_string().contains("checksum"), "{err:#}");
+        // Truncation at every byte boundary fails cleanly — no panic, no
+        // huge allocation.
+        for cut in 0..buf.len() {
+            assert!(decode_record(&buf[..cut], &key).is_err(), "cut at {cut}");
+        }
+        // An index key that disagrees with the stored tokens is refused.
+        let mut other = key.clone();
+        other[0] ^= 1;
+        let err = decode_record(&buf, &other).unwrap_err();
+        assert!(err.to_string().contains("index key"), "{err:#}");
+    }
+
+    #[test]
+    fn take_survives_on_disk_corruption() {
+        let path = temp("corrupt");
+        let mut t = TierStore::open(path.clone()).unwrap();
+        let key = toks(4, 32);
+        assert!(t.spill(&key, &entry(32, 4, KvDtype::F32)));
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(t.take(&key).is_none(), "poisoned record dropped, not panicked");
+        assert_eq!(t.counters().2, 0, "index entry consumed");
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -157,6 +157,16 @@ pub struct ServingConfig {
     /// Persist the prefix-cache artifact store here across restarts
     /// (`[cache] persist_path`; empty = don't persist).
     pub prefix_persist_path: String,
+    /// Storage dtype for cached KV rows (`[cache] kv_dtype = "f32" | "f16"
+    /// | "int8"`). Narrower dtypes pack proportionally more tokens per
+    /// cache page (f16 2×, int8 4×) under a pinned mean-relative ℓ2 bound
+    /// vs f32 — see [`crate::coordinator::kv_quant`].
+    pub kv_dtype: String,
+    /// Disk-spill tier for LRU-evicted prefix-cache subtrees (`[cache]
+    /// spill_path`; empty = evictions free their pages as before). Spilled
+    /// subtrees re-admit on a radix hit: hot RAM / warm disk / cold
+    /// recompute.
+    pub prefix_spill_path: String,
     /// Declarative attention spec (`[attention] spec = "..."`, e.g.
     /// `"prescored:kmeans,top_k=64,delta=0.05"`), stored in canonical form.
     /// Empty = derive from the legacy `variant` + `[prescore]` keys; see
@@ -191,6 +201,8 @@ impl Default for ServingConfig {
             prefix_cache_blocks: 256,
             prefix_min_tokens: 16,
             prefix_persist_path: String::new(),
+            kv_dtype: "f32".into(),
+            prefix_spill_path: String::new(),
             prescore_method: "kmeans".into(),
             prescore_top_k: 64,
             prescore_mode: "full".into(),
@@ -222,6 +234,10 @@ impl ServingConfig {
                 v.parse::<usize>().with_context(|| format!("[serving] shed_pin_rung = {v}"))?,
             ),
         };
+        let kv_dtype = cfg.get_or("cache", "kv_dtype", &d.kv_dtype).to_string();
+        // Validate eagerly: a typo'd dtype fails config load, not first use.
+        crate::coordinator::kv_quant::KvDtype::parse(&kv_dtype)
+            .with_context(|| format!("[cache] kv_dtype = {kv_dtype}"))?;
         Ok(ServingConfig {
             artifacts_dir: cfg.get_or("serving", "artifacts_dir", &d.artifacts_dir).to_string(),
             variant: cfg.get_or("serving", "variant", &d.variant).to_string(),
@@ -249,6 +265,10 @@ impl ServingConfig {
             prefix_min_tokens: cfg.usize_or("cache", "prefix_min_tokens", d.prefix_min_tokens)?,
             prefix_persist_path: cfg
                 .get_or("cache", "persist_path", &d.prefix_persist_path)
+                .to_string(),
+            kv_dtype,
+            prefix_spill_path: cfg
+                .get_or("cache", "spill_path", &d.prefix_spill_path)
                 .to_string(),
             prescore_method: cfg.get_or("prescore", "method", &d.prescore_method).to_string(),
             prescore_top_k: cfg.usize_or("prescore", "top_k", d.prescore_top_k)?,
@@ -425,6 +445,24 @@ fallback_delta = 0.05
         assert_eq!(d.prefix_cache_blocks, 256);
         assert_eq!(d.prefix_min_tokens, 16);
         assert!(d.prefix_persist_path.is_empty());
+    }
+
+    #[test]
+    fn tier_keys_parsed_and_dtype_validated() {
+        let cfg = Config::parse(
+            "[cache]\nkv_dtype = \"int8\"\nspill_path = \"/tmp/spill.bin\"\n",
+        )
+        .unwrap();
+        let sc = ServingConfig::from_config(&cfg).unwrap();
+        assert_eq!(sc.kv_dtype, "int8");
+        assert_eq!(sc.prefix_spill_path, "/tmp/spill.bin");
+        let d = ServingConfig::default();
+        assert_eq!(d.kv_dtype, "f32");
+        assert!(d.prefix_spill_path.is_empty());
+        // A typo'd dtype fails config load with the offending key named.
+        let bad = Config::parse("[cache]\nkv_dtype = \"f64\"\n").unwrap();
+        let err = ServingConfig::from_config(&bad).unwrap_err();
+        assert!(format!("{err:#}").contains("kv_dtype"), "{err:#}");
     }
 
     #[test]

@@ -10,18 +10,23 @@
 //!   padded-shape buckets matching the compiled artifact batch sizes;
 //! * [`kv_cache`] — block-allocated KV store with ref-counting (page size
 //!   16) that also owns the per-(sequence, layer) key-selection sets;
+//! * [`kv_quant`] — quantized KV storage (`kv_dtype = f16|int8`): fake-quant
+//!   grids for live sessions, lossless-slicing packed pages for the
+//!   prefix-cache and disk tiers;
 //! * [`prescore_manager`] — Algorithm 1 at prefill, cached selection with
 //!   periodic refresh during decode, Algorithm 2's δ-fallback;
 //! * [`scheduler`] — prefill/decode queues with a decode-starvation bound.
 
 pub mod batcher;
 pub mod kv_cache;
+pub mod kv_quant;
 pub mod prescore_manager;
 pub mod request;
 pub mod scheduler;
 
 pub use batcher::{Batch, BatcherConfig, DynamicBatcher};
 pub use kv_cache::{BlockAllocator, KvCacheManager};
+pub use kv_quant::{KvDtype, KvStore, QuantKv};
 pub use prescore_manager::{PreScoreManager, PreScoreManagerConfig};
 pub use request::{Request, RequestId, RequestState, Response, ServerError};
 pub use scheduler::{Scheduler, SchedulerConfig, WorkItem};

@@ -17,8 +17,9 @@
 //! built for: KV page-pool exhaustion at admission, prefix-cache eviction
 //! storms, worker/decode-step panics, slow decode steps, persist-file
 //! corruption, gateway stream failures (mid-stream socket drops, slow
-//! client reads), and session-lifecycle hazards (replay-buffer overflow,
-//! forced parked-session expiry).
+//! client reads), session-lifecycle hazards (replay-buffer overflow,
+//! forced parked-session expiry), and disk-tier spill-file I/O (corrupted
+//! spill writes, slow re-admit reads).
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Mutex;
@@ -57,10 +58,17 @@ pub enum FaultPoint {
     /// of `session_linger_ms` — the reclaim must release its pages/pins
     /// with balanced accounting, exactly like a linger timeout.
     SessionExpire,
+    /// Corrupt a disk-tier spill write: flip one byte of the spill section
+    /// after its checksum is computed, so the eventual re-admit must reject
+    /// it and fall back to cold recompute (never a request error).
+    TierSpill,
+    /// Slow a disk-tier re-admit read (spinning-rust latency): the warm hit
+    /// still lands, just late — decode progress elsewhere must not stall.
+    TierLoad,
 }
 
 /// All injection points, in `FaultPlan::rates` order.
-pub const ALL_POINTS: [FaultPoint; 10] = [
+pub const ALL_POINTS: [FaultPoint; 12] = [
     FaultPoint::KvAdmit,
     FaultPoint::EvictStorm,
     FaultPoint::WorkerPanic,
@@ -71,6 +79,8 @@ pub const ALL_POINTS: [FaultPoint; 10] = [
     FaultPoint::SlowClient,
     FaultPoint::ReplayOverflow,
     FaultPoint::SessionExpire,
+    FaultPoint::TierSpill,
+    FaultPoint::TierLoad,
 ];
 
 impl FaultPoint {
@@ -86,6 +96,8 @@ impl FaultPoint {
             FaultPoint::SlowClient => 7,
             FaultPoint::ReplayOverflow => 8,
             FaultPoint::SessionExpire => 9,
+            FaultPoint::TierSpill => 10,
+            FaultPoint::TierLoad => 11,
         }
     }
 
@@ -101,6 +113,8 @@ impl FaultPoint {
             FaultPoint::SlowClient => "slow_client",
             FaultPoint::ReplayOverflow => "replay_overflow",
             FaultPoint::SessionExpire => "session_expire",
+            FaultPoint::TierSpill => "tier_spill",
+            FaultPoint::TierLoad => "tier_load",
         }
     }
 

@@ -73,11 +73,6 @@ use tenant::{TenantGovernor, TenantQuota};
 /// this cap only guards against a wedged coordinator.
 const TERMINAL_WAIT: Duration = Duration::from_secs(30);
 
-/// Idle read timeout on keep-alive sockets: a client that parks a
-/// connection without a request in flight gets this long before the
-/// gateway reclaims the thread.
-const KEEP_ALIVE_IDLE: Duration = Duration::from_secs(5);
-
 /// Gateway tuning. `Default` binds an ephemeral localhost port with
 /// permissive-but-bounded quotas — tests override per scenario.
 #[derive(Debug, Clone)]
@@ -102,6 +97,11 @@ pub struct GatewayConfig {
     /// How long [`Gateway::shutdown`]'s drain mode waits for in-flight
     /// connections to finish or park before stopping the accept loop.
     pub drain_grace_ms: u64,
+    /// Idle read timeout on keep-alive sockets, in milliseconds: a client
+    /// that parks a connection without a request in flight gets this long
+    /// before the gateway reclaims the thread (connections with a request
+    /// mid-flight are unaffected).
+    pub keepalive_idle_ms: u64,
 }
 
 impl Default for GatewayConfig {
@@ -115,6 +115,7 @@ impl Default for GatewayConfig {
             max_generate: 64,
             corpus_vocab: 64,
             drain_grace_ms: 5000,
+            keepalive_idle_ms: 5000,
         }
     }
 }
@@ -232,10 +233,12 @@ fn accept_loop(listener: &TcpListener, shared: &Arc<GwShared>) {
 
 /// Per-connection loop: non-streaming requests honor HTTP/1.1 keep-alive
 /// (sequential requests on one socket — health probes and stat pollers
-/// stop burning a thread+socket per poll), bounded by [`KEEP_ALIVE_IDLE`];
-/// a stream takes the socket over and closes it at its terminal event.
+/// stop burning a thread+socket per poll), bounded by the configured
+/// [`GatewayConfig::keepalive_idle_ms`]; a stream takes the socket over
+/// and closes it at its terminal event.
 fn handle_conn(shared: &Arc<GwShared>, mut stream: TcpStream) {
-    let _ = stream.set_read_timeout(Some(KEEP_ALIVE_IDLE));
+    let idle = Duration::from_millis(shared.cfg.keepalive_idle_ms.max(1));
+    let _ = stream.set_read_timeout(Some(idle));
     loop {
         let request = match http::read_request(&mut stream, shared.cfg.max_body_bytes) {
             Ok(Some(r)) => r,
@@ -763,6 +766,9 @@ fn handle_stats(shared: &Arc<GwShared>, stream: &mut TcpStream, keep_alive: bool
         ("kv_pages_released", json::n(stats.kv_pages_released as f64)),
         ("prefix_pins_acquired", json::n(stats.prefix_pins_acquired as f64)),
         ("prefix_pins_released", json::n(stats.prefix_pins_released as f64)),
+        ("tier_spills", json::n(stats.tier_spills as f64)),
+        ("tier_readmits", json::n(stats.tier_readmits as f64)),
+        ("tier_bytes", json::n(stats.tier_bytes as f64)),
         ("shed_level", json::n(stats.shed_level as f64)),
         ("workers", json::n(stats.workers as f64)),
         ("kernel", json::s(&stats.kernel)),

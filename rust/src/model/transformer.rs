@@ -12,6 +12,7 @@ use super::weights::WeightStore;
 use crate::attention::{
     AttentionInputs, AttentionSpec, AttnPolicy, DecodeState, HyperConfig, PreScoredConfig,
 };
+use crate::coordinator::kv_quant::{self, KvDtype};
 use crate::linalg::ops::matmul;
 use crate::linalg::Matrix;
 use anyhow::{bail, Result};
@@ -226,6 +227,16 @@ impl Transformer {
                     att_all.row_mut(i)[c0..c1].copy_from_slice(out.row(i));
                 }
                 if let Some(cap) = capture.as_deref_mut() {
+                    // Session KV rows are snapped onto the configured dtype
+                    // grid *at capture* (no-op for f32): every later
+                    // consumer — decode steps, cache snapshots, disk spills
+                    // — sees the same quantized values, so tier re-admits
+                    // stay bitwise. Prefill logits above stay
+                    // full-precision; quantization enters only at
+                    // row-storage time.
+                    let (mut k, mut v) = (k, v);
+                    kv_quant::fake_quant_matrix(&mut k, cap.dtype);
+                    kv_quant::fake_quant_matrix(&mut v, cap.dtype);
                     cap.kv.push(HeadKv { k, v });
                 }
             }
@@ -289,11 +300,27 @@ impl Transformer {
         tokens: &[u32],
         policy: &AttnPolicy,
     ) -> Result<(Matrix, DecodeSession)> {
+        self.begin_decode_dtype(tokens, policy, KvDtype::F32)
+    }
+
+    /// [`Transformer::begin_decode`] with the session KV rows stored on the
+    /// `dtype` grid ([`kv_quant::fake_quant_matrix`] at capture). The
+    /// prefill logits are always full-precision — quantization only enters
+    /// where rows are *stored*, so `[cache] kv_dtype` trades cached-KV
+    /// memory (and the relaxed ℓ2 contract on later attends) without
+    /// touching prompt scoring.
+    pub fn begin_decode_dtype(
+        &self,
+        tokens: &[u32],
+        policy: &AttnPolicy,
+        dtype: KvDtype,
+    ) -> Result<(Matrix, DecodeSession)> {
         assert!(!tokens.is_empty(), "begin_decode needs a non-empty prefill");
         let nh = self.cfg.n_heads;
         let mut cap = SessionCapture {
             kv: Vec::with_capacity(self.cfg.n_layers * nh),
             states: Vec::with_capacity(self.cfg.n_layers * nh),
+            dtype,
         };
         let logits = self.forward_inner(tokens, policy, Some(&mut cap));
         let mut attn = Vec::with_capacity(cap.states.len());
@@ -308,7 +335,7 @@ impl Transformer {
                 ),
             }
         }
-        Ok((logits, DecodeSession { kv: cap.kv, attn, pos: tokens.len() }))
+        Ok((logits, DecodeSession { kv: cap.kv, attn, pos: tokens.len(), dtype }))
     }
 
     /// One incremental decode step: append `token`, advance every
@@ -328,6 +355,7 @@ impl Transformer {
         let d = self.cfg.d_model;
         let nh = self.cfg.n_heads;
         let dh = self.cfg.d_head();
+        let dtype = sess.dtype;
         let mut x = Matrix::zeros(1, d);
         {
             let (erow, prow) = (self.embed.row(token as usize), self.pos.row(n0));
@@ -348,8 +376,8 @@ impl Transformer {
                 let (c0, c1) = (head * dh, (head + 1) * dh);
                 let idx = li * nh + head;
                 let kv = &mut sess.kv[idx];
-                kv.k.push_row(&k_all.row(0)[c0..c1]);
-                kv.v.push_row(&v_all.row(0)[c0..c1]);
+                push_kv_row(&mut kv.k, &k_all.row(0)[c0..c1], dtype);
+                push_kv_row(&mut kv.v, &v_all.row(0)[c0..c1], dtype);
                 let out = policy.backend(li).decode_step(
                     &mut sess.attn[idx],
                     &q_all.row(0)[c0..c1],
@@ -425,6 +453,7 @@ impl Transformer {
         let d = self.cfg.d_model;
         let nh = self.cfg.n_heads;
         let dh = self.cfg.d_head();
+        let dtype = sess.dtype;
         assert_eq!(sess.kv.len(), self.cfg.n_layers * nh, "session/model shape mismatch");
         if m == 0 {
             return Matrix::zeros(0, self.cfg.vocab);
@@ -451,8 +480,8 @@ impl Transformer {
                 let idx = li * nh + head;
                 let kv = &mut sess.kv[idx];
                 for r in 0..m {
-                    kv.k.push_row(&k_all.row(r)[c0..c1]);
-                    kv.v.push_row(&v_all.row(r)[c0..c1]);
+                    push_kv_row(&mut kv.k, &k_all.row(r)[c0..c1], dtype);
+                    push_kv_row(&mut kv.v, &v_all.row(r)[c0..c1], dtype);
                 }
                 let qh = q_all.slice_cols(c0, c1);
                 let out = sess.attn[idx].replay(&qh, &kv.k, &kv.v, None);
@@ -518,10 +547,25 @@ struct HeadKv {
     v: Matrix,
 }
 
+/// Append one KV row to a session cache, snapped onto the session's dtype
+/// grid — the single point where quantization enters the live decode path
+/// (mirrors the prefill-capture branch of `forward_inner`).
+fn push_kv_row(m: &mut Matrix, row: &[f32], dtype: KvDtype) {
+    if dtype == KvDtype::F32 {
+        m.push_row(row);
+    } else {
+        let mut snapped = row.to_vec();
+        kv_quant::fake_quant_row(&mut snapped, dtype);
+        m.push_row(&snapped);
+    }
+}
+
 /// Prefill capture buffer for [`Transformer::begin_decode`].
 struct SessionCapture {
     kv: Vec<HeadKv>,
     states: Vec<Option<DecodeState>>,
+    /// Storage grid for captured KV rows (f32 ⇒ bitwise legacy behavior).
+    dtype: KvDtype,
 }
 
 /// Per-sequence incremental decode state: every layer·head's K/V cache plus
@@ -531,6 +575,10 @@ pub struct DecodeSession {
     kv: Vec<HeadKv>,
     attn: Vec<DecodeState>,
     pos: usize,
+    /// Storage grid for KV rows appended by decode/resume steps. Cached
+    /// rows arriving through [`DecodeSession::from_cache`] are already on
+    /// this grid (they were snapped at their original capture).
+    dtype: KvDtype,
 }
 
 impl DecodeSession {
@@ -538,17 +586,31 @@ impl DecodeSession {
     /// caches (each with `pos` rows) and the attention decode states at
     /// position `pos`. The caller (the serving engine) clones these out of
     /// the shared cache — sessions branch copy-on-write, so cache eviction
-    /// can never corrupt a live session.
+    /// can never corrupt a live session. KV rows appended from here on stay
+    /// on the f32 grid; quantized serving resumes via
+    /// [`DecodeSession::from_cache_dtype`].
     pub fn from_cache(
         kv: Vec<(Matrix, Matrix)>,
         states: Vec<DecodeState>,
         pos: usize,
+    ) -> DecodeSession {
+        DecodeSession::from_cache_dtype(kv, states, pos, KvDtype::F32)
+    }
+
+    /// [`DecodeSession::from_cache`] with new KV rows snapped onto the
+    /// `dtype` grid, matching the `begin_decode_dtype` capture path.
+    pub fn from_cache_dtype(
+        kv: Vec<(Matrix, Matrix)>,
+        states: Vec<DecodeState>,
+        pos: usize,
+        dtype: KvDtype,
     ) -> DecodeSession {
         assert_eq!(kv.len(), states.len(), "KV/state slot mismatch");
         DecodeSession {
             kv: kv.into_iter().map(|(k, v)| HeadKv { k, v }).collect(),
             attn: states,
             pos,
+            dtype,
         }
     }
 
@@ -778,6 +840,25 @@ mod tests {
         let tokens = corpus::generate(64, 8, 8);
         let policy = AttnPolicy::parse("exact;exact;exact").unwrap();
         m.forward_policy(&tokens, &policy);
+    }
+
+    #[test]
+    fn quantized_session_keeps_prefill_logits_full_precision() {
+        let m = Transformer::random(tiny(), 10);
+        let tokens = corpus::generate(64, 24, 9);
+        let policy = AttnPolicy::parse("exact").unwrap();
+        let (l32, mut s32) = m.begin_decode(&tokens, &policy).unwrap();
+        let (l8, mut s8) = m.begin_decode_dtype(&tokens, &policy, KvDtype::Int8).unwrap();
+        // Quantization enters at row-*storage* time, so prompt scoring is
+        // bitwise independent of the configured KV dtype...
+        assert_eq!(l32.data, l8.data, "prefill logits must not see the storage grid");
+        // ...while decode attends over the snapped rows: close, not equal.
+        let a = m.decode_token(&mut s32, 5, &policy);
+        let b = m.decode_token(&mut s8, 5, &policy);
+        assert!(b.iter().all(|v| v.is_finite()));
+        let diff = a.iter().zip(&b).map(|(x, y)| (x - y).abs()).fold(0f32, f32::max);
+        assert!(diff > 0.0, "int8 grid should perturb decode");
+        assert!(diff < 1.0, "int8 decode drifted {diff}");
     }
 
     #[test]

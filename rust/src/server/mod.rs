@@ -63,11 +63,12 @@ use crate::attention::{AttentionBackend, AttentionSpec, AttnPolicy};
 use crate::cache::{CacheStats, PrefixCache, PrefixCacheConfig, PrefixHit, PrefixSnapshot};
 use crate::config::ServingConfig;
 use crate::coordinator::{
-    Batch, BatcherConfig, DynamicBatcher, KvCacheManager, PreScoreManager,
+    Batch, BatcherConfig, DynamicBatcher, KvCacheManager, KvDtype, KvStore, PreScoreManager,
     PreScoreManagerConfig, Request, Response, Scheduler, SchedulerConfig, ServerError,
     WorkItem,
 };
 use crate::fault::FaultPoint;
+use crate::linalg::Matrix;
 use crate::metrics::LatencyStats;
 use crate::model::transformer::{argmax_row, nll_entry, nll_from_logits};
 use crate::model::{DecodeSession, Transformer, TransformerConfig, WeightStore};
@@ -173,6 +174,13 @@ pub struct ServerStats {
     pub prefix_evictions: usize,
     pub prefix_nodes: usize,
     pub prefix_cached_tokens: usize,
+    /// Warm disk tier ([`crate::cache::tier`]): subtrees spilled on
+    /// eviction, spilled prefixes re-admitted on a radix hit, and bytes
+    /// currently resident in the spill index (all zero without a
+    /// `[cache] spill_path`).
+    pub tier_spills: usize,
+    pub tier_readmits: usize,
+    pub tier_bytes: usize,
     /// Requests that reached a terminal state via `ScoringServer::cancel`.
     pub cancelled: usize,
     /// Requests failed because their `deadline_ms` elapsed.
@@ -458,6 +466,8 @@ struct PrefillPrep {
     policy: Arc<AttnPolicy>,
     /// Snapshot the (extended) prefix into the cache afterwards?
     want_snapshot: bool,
+    /// Storage grid for captured/snapshotted KV rows.
+    kv_dtype: KvDtype,
 }
 
 /// Result of the lock-free prefill compute, applied back under the lock.
@@ -534,6 +544,10 @@ struct DecodeEngine {
     /// rank/selection kernels dedup at full length only — see
     /// `AttentionSpec::suffix_stable`.
     suffix_stable: bool,
+    /// Storage grid for session/cache KV rows (`[cache] kv_dtype`): f16 and
+    /// int8 snap captured rows via fake-quant mirrors and pack cached pages
+    /// 2×/4× denser; f32 keeps the bitwise legacy behavior.
+    kv_dtype: KvDtype,
     /// Admitted but not yet prefilled.
     pending: HashMap<u64, Job>,
     /// Requests whose prefill is computing outside the lock, with the
@@ -625,17 +639,31 @@ impl DecodeEngine {
         let slots = model.cfg.n_layers * model.cfg.n_heads;
         let model = Arc::new(model);
         let policy = Arc::new(AttnPolicy::uniform(spec.clone()));
+        // `ServingConfig` validates the dtype string eagerly, so this parse
+        // only falls back for hand-built configs that skipped validation.
+        let kv_dtype = KvDtype::parse(&cfg.kv_dtype).unwrap_or_else(|e| {
+            eprintln!("decode engine: {e:#}; storing KV as f32");
+            KvDtype::F32
+        });
         let cache = if cfg.prefix_cache_blocks > 0 && spec.prefix_cacheable() {
             let persist_path = if cfg.prefix_persist_path.is_empty() {
                 None
             } else {
                 Some(PathBuf::from(&cfg.prefix_persist_path))
             };
+            let spill_path = if cfg.prefix_spill_path.is_empty() {
+                None
+            } else {
+                Some(PathBuf::from(&cfg.prefix_spill_path))
+            };
             let mut cache = PrefixCache::new(PrefixCacheConfig {
                 blocks: cfg.prefix_cache_blocks,
                 min_tokens: cfg.prefix_min_tokens,
                 persist_path,
+                kv_dtype,
+                spill_path,
             });
+            cache.set_restorer(Arc::clone(&policy), model.cfg.n_heads);
             if let Some(p) = cache.config().persist_path.clone() {
                 if p.exists() {
                     match crate::cache::persist::load(
@@ -689,6 +717,7 @@ impl DecodeEngine {
             policy,
             cache,
             suffix_stable: spec.suffix_stable(),
+            kv_dtype,
             pending: HashMap::new(),
             in_flight: HashMap::new(),
             sessions: HashMap::new(),
@@ -896,6 +925,7 @@ impl DecodeEngine {
             model: Arc::clone(&self.model),
             policy: Arc::clone(&self.rungs[rung].policy),
             want_snapshot,
+            kv_dtype: self.kv_dtype,
         })
     }
 
@@ -2010,6 +2040,9 @@ fn snapshot_stats(src: &StatsSources) -> ServerStats {
         prefix_evictions: prefix.evictions,
         prefix_nodes: prefix.nodes,
         prefix_cached_tokens: prefix.cached_tokens,
+        tier_spills: prefix.tier_spills,
+        tier_readmits: prefix.tier_readmits,
+        tier_bytes: prefix.tier_bytes,
         cancelled: stats.cancelled,
         expired: stats.expired,
         degraded: stats.degraded,
@@ -2089,8 +2122,26 @@ fn ship(
 /// through `resume_decode` — O(suffix) forward work, bitwise-identical
 /// logits/NLL to the cold path. Cold path: full `begin_decode`.
 fn prefill_compute(prep: PrefillPrep) -> PrefillOutcome {
-    let PrefillPrep { id, tokens, respond, arrived, generate, hit, model, policy, want_snapshot } =
-        prep;
+    let PrefillPrep {
+        id,
+        tokens,
+        respond,
+        arrived,
+        generate,
+        hit,
+        model,
+        policy,
+        want_snapshot,
+        kv_dtype,
+    } = prep;
+    // Session KV rows live on the configured dtype grid (snapped once at
+    // capture); snapshots pack them losslessly into [`KvStore`] pages, so
+    // warm hits — RAM or disk-tier — reproduce the capture bitwise.
+    let pack = |kv: Vec<(Matrix, Matrix)>| -> Vec<(KvStore, KvStore)> {
+        kv.into_iter()
+            .map(|(k, v)| (KvStore::from_matrix(k, kv_dtype), KvStore::from_matrix(v, kv_dtype)))
+            .collect()
+    };
     let result = (|| -> Result<PrefillDone> {
         match hit {
             Some(h) => {
@@ -2101,7 +2152,7 @@ fn prefill_compute(prep: PrefillPrep) -> PrefillOutcome {
                 // lock-held lookup only cloned Arc handles.
                 let kv = h.assemble_kv();
                 let states = h.states.as_ref().clone();
-                let mut sess = DecodeSession::from_cache(kv, states, warm);
+                let mut sess = DecodeSession::from_cache_dtype(kv, states, warm, kv_dtype);
                 let mut nll = h.nll;
                 let mut last = h.last_logits;
                 if tokens.len() > warm {
@@ -2124,7 +2175,7 @@ fn prefill_compute(prep: PrefillPrep) -> PrefillOutcome {
                         tokens.clone(),
                         PrefixSnapshot {
                             kv_from: warm,
-                            kv: sess.export_kv_suffix(warm),
+                            kv: pack(sess.export_kv_suffix(warm)),
                             states: sess.clone_states(),
                             nll: nll.clone(),
                             last_logits: last.clone(),
@@ -2134,7 +2185,7 @@ fn prefill_compute(prep: PrefillPrep) -> PrefillOutcome {
                 Ok(PrefillDone { sess, nll, next_token, snapshot, cache_pin })
             }
             None => {
-                let (logits, sess) = model.begin_decode(&tokens, &policy)?;
+                let (logits, sess) = model.begin_decode_dtype(&tokens, &policy, kv_dtype)?;
                 let nll = nll_from_logits(&logits, &tokens);
                 let last = logits.row(logits.rows - 1);
                 let next_token = argmax_row(last);
@@ -2143,7 +2194,7 @@ fn prefill_compute(prep: PrefillPrep) -> PrefillOutcome {
                         tokens.clone(),
                         PrefixSnapshot {
                             kv_from: 0,
-                            kv: sess.export_kv(),
+                            kv: pack(sess.export_kv()),
                             states: sess.clone_states(),
                             nll: nll.clone(),
                             last_logits: last.to_vec(),

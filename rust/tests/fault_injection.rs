@@ -513,6 +513,85 @@ fn chaos_forced_expiry_reclaims_parked_sessions() {
     assert_eq!(stats.worker_panics, 0);
 }
 
+/// Disk-tier chaos (`TierSpill` + `TierLoad`): spill records corrupted in
+/// flight fail their checksum at re-admit time and degrade to cold
+/// recompute — never a request error — with balanced page/pin accounting;
+/// slow tier reads delay a warm re-admit but the readmitted stream stays
+/// bitwise identical to a cold run.
+#[test]
+fn chaos_tier_faults_degrade_to_cold_recompute() {
+    let _g = GUARD.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    let reference = tiny_model(49);
+    let policy = AttnPolicy::parse("exact").unwrap();
+    let n_new = 4usize;
+
+    // Three distinct 32-token prompts; the 4-page prefix pool holds two, so
+    // the third insert evicts (and spills) the first. The fourth request
+    // extends the first prompt, forcing the warm path through the tier.
+    let prompts: Vec<Vec<u32>> =
+        (0..3).map(|i| corpus::generate(64, 32, 950 + i as u64)).collect();
+    let mut extended = prompts[0].clone();
+    extended.extend(corpus::generate(64, 2, 990));
+    let schedule: Vec<&[u32]> =
+        vec![&prompts[0], &prompts[1], &prompts[2], &extended];
+    let expected: Vec<Vec<u32>> = schedule
+        .iter()
+        .map(|t| reference.generate_greedy(t, n_new, &policy).expect("greedy reference"))
+        .collect();
+
+    let run = |plan: FaultPlan, spill: &std::path::Path, seed_tag: u64| {
+        let _fault = arm(plan);
+        let mut cfg = chaos_cfg();
+        no_shedding(&mut cfg);
+        cfg.attention_spec = "exact".into();
+        cfg.executor_workers = 1;
+        cfg.prefix_cache_blocks = 4;
+        cfg.prefix_min_tokens = 16;
+        cfg.prefix_spill_path = spill.display().to_string();
+        let server = ScoringServer::start_with_model(cfg, tiny_model(49)).expect("start");
+        // Sequential submission keeps insert/evict order deterministic.
+        for (i, tokens) in schedule.iter().enumerate() {
+            let mut req = Request::scoring(seed_tag * 100 + i as u64, tokens.to_vec());
+            req.generate = n_new;
+            let resp = server.submit(req).recv().expect("response");
+            assert!(resp.error.is_none(), "request {i}: tier faults must stay invisible");
+            assert_eq!(
+                resp.generated, expected[i],
+                "request {i}: output is bitwise the cold reference"
+            );
+        }
+        server.shutdown()
+    };
+
+    // Part 1: every spill record is corrupted in flight — the re-admit
+    // fails its CRC, drops the record, and the request recomputes cold.
+    let spill_a =
+        std::env::temp_dir().join(format!("chaos_tier_a_{}.spill", std::process::id()));
+    let stats = run(FaultPlan::new(1313).with_rate(FaultPoint::TierSpill, 1000), &spill_a, 1);
+    assert!(stats.tier_spills >= 1, "the eviction must have spilled");
+    assert_eq!(stats.tier_readmits, 0, "corrupted records never re-admit");
+    assert_eq!(stats.internal_errors, 0);
+    assert_eq!(stats.worker_panics, 0);
+    assert_eq!(stats.kv_pages_acquired, stats.kv_pages_released);
+    assert_eq!(stats.prefix_pins_acquired, stats.prefix_pins_released);
+    let _ = std::fs::remove_file(&spill_a);
+
+    // Part 2: clean spills, slow tier reads — the warm re-admit happens
+    // (late) and the stream is still bitwise identical.
+    let spill_b =
+        std::env::temp_dir().join(format!("chaos_tier_b_{}.spill", std::process::id()));
+    let mut plan = FaultPlan::new(1414).with_rate(FaultPoint::TierLoad, 1000);
+    plan.slow_ms = 20;
+    let stats = run(plan, &spill_b, 2);
+    assert!(stats.tier_spills >= 1, "the eviction must have spilled");
+    assert!(stats.tier_readmits >= 1, "the extended prompt re-admits from disk");
+    assert_eq!(stats.internal_errors, 0);
+    assert_eq!(stats.worker_panics, 0);
+    assert_eq!(stats.kv_pages_acquired, stats.kv_pages_released);
+    assert_eq!(stats.prefix_pins_acquired, stats.prefix_pins_released);
+    let _ = std::fs::remove_file(&spill_b);
+}
+
 /// Slow client reads (`SlowClient`): SSE writes sleep, but decode never
 /// waits on them — events buffer in the per-stream channel, so the engine
 /// finishes every session while the slowed sockets are still draining.

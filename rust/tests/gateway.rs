@@ -675,3 +675,68 @@ fn keep_alive_serves_sequential_requests_on_one_socket() {
     let stats = gw.shutdown();
     assert_eq!(stats.completed, 0);
 }
+
+/// `GatewayConfig::keepalive_idle_ms` bounds how long a parked keep-alive
+/// socket holds its connection thread: requests spaced inside the budget
+/// keep the socket alive, a socket idle past the budget is closed by the
+/// gateway (clean EOF, no bytes), and `Connection: close` still ends the
+/// socket immediately without waiting out the idle window.
+#[test]
+fn keepalive_idle_timeout_is_configurable() {
+    let _g = GUARD.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    let cfg = substrate_cfg();
+    let gw_cfg = GatewayConfig { keepalive_idle_ms: 300, ..GatewayConfig::default() };
+    let gw = start_gateway(cfg, gw_cfg, 79);
+
+    // Pauses inside the idle budget don't cost the connection.
+    let mut stream = TcpStream::connect(gw.addr()).expect("connect");
+    stream.set_read_timeout(Some(Duration::from_secs(30))).expect("timeout");
+    for i in 0..2 {
+        stream
+            .write_all(b"GET /healthz HTTP/1.1\r\nHost: gw\r\n\r\n")
+            .expect("write probe");
+        let (status, head, _) = read_framed_response(&mut stream);
+        assert_eq!(status, 200, "probe {i} inside the idle budget");
+        assert!(head.to_ascii_lowercase().contains("connection: keep-alive"), "{head}");
+        std::thread::sleep(Duration::from_millis(50));
+    }
+
+    // Parked past the budget: the gateway closes the socket from its side —
+    // a clean EOF with no trailing bytes, after roughly the configured idle
+    // window (not the old hardcoded 5 s).
+    let parked = Instant::now();
+    let mut rest = Vec::new();
+    stream.read_to_end(&mut rest).expect("gateway closes the idle socket");
+    let waited = parked.elapsed();
+    assert!(rest.is_empty(), "idle reclaim sends no bytes");
+    assert!(
+        waited >= Duration::from_millis(150),
+        "socket closed {waited:?} after parking — before the idle budget"
+    );
+    assert!(
+        waited < Duration::from_millis(3000),
+        "socket closed {waited:?} after parking — idle budget not honored"
+    );
+
+    // A fresh socket is served normally after the reclaim, and
+    // `Connection: close` ends it immediately, well inside the idle window.
+    let mut stream = TcpStream::connect(gw.addr()).expect("connect");
+    stream.set_read_timeout(Some(Duration::from_secs(30))).expect("timeout");
+    stream
+        .write_all(b"GET /healthz HTTP/1.1\r\nHost: gw\r\nConnection: close\r\n\r\n")
+        .expect("write probe");
+    let start = Instant::now();
+    let (status, head, _) = read_framed_response(&mut stream);
+    assert_eq!(status, 200);
+    assert!(head.to_ascii_lowercase().contains("connection: close"), "{head}");
+    let mut rest = Vec::new();
+    stream.read_to_end(&mut rest).expect("server closes after Connection: close");
+    assert!(rest.is_empty());
+    assert!(
+        start.elapsed() < Duration::from_millis(250),
+        "Connection: close must not wait out the idle window"
+    );
+
+    let stats = gw.shutdown();
+    assert_eq!(stats.completed, 0);
+}
