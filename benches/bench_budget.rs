@@ -1,0 +1,188 @@
+//! Key-budget policy comparison — attention-mass (`mass=p`) vs fixed-k at
+//! the *same average realized budget*, on the Fig. 2 PPL harness.
+//!
+//! For each mass target p the bench first runs the mass spec over the eval
+//! docs and reads back the per layer·head realized selection sizes (the
+//! decode-session states' retained selections), then rounds their mean to
+//! pick the matched fixed top-k. Both specs therefore spend the same number
+//! of keys on average; the only difference is *where* the mass policy puts
+//! them — more keys on heads whose pre-scores are flat, fewer on peaked
+//! heads. Dispersion of realized k across heads is reported alongside the
+//! two perplexities: zero dispersion means the policies coincide (identical
+//! score-order prefixes), and any spread is budget the mass policy moved
+//! between heads.
+//!
+//! Docs are full-length only (the paper's PPL* column) so the comparison is
+//! pure cross-head adaptivity, not sequence-length adaptivity.
+//!
+//! Emits `BENCH_budget.json` at the repo root. Env knobs:
+//!
+//! * `PALLAS_BUDGET_DOCS`    — number of eval documents (default 3)
+//! * `PALLAS_BUDGET_CONTEXT` — document length in tokens (default 256)
+//! * `PALLAS_BUDGET_SAMPLE`  — residual sample size (default 16)
+//! * `PALLAS_BUDGET_MASS`    — comma list of mass targets (default
+//!   `0.5,0.7,0.85,0.95`)
+//! * `PALLAS_BUDGET_JSON`    — output path override
+//! * `PALLAS_BUDGET_ASSERT`  — when `1`, exit non-zero unless the mass
+//!   policy's PPL is ≤ the matched fixed policy's at every target
+//! * `PALLAS_BUDGET_TOL`     — relative slack for the assert (default 0)
+
+use prescored::attention::{AttentionSpec, AttnPolicy, Coupling};
+use prescored::exp::{eval_docs, ppl_over, prescored_spec};
+use prescored::model::{Transformer, TransformerConfig, WeightStore};
+use prescored::prescore::{KeyBudget, Method};
+use prescored::util::bench::{env_list, env_usize, f, Table};
+use std::path::Path;
+
+/// The paper's standard K-means+Hyper spec with the budget swapped for an
+/// attention-mass target.
+fn mass_spec(p: f32, sample: usize) -> AttentionSpec {
+    match prescored_spec(Method::KMeans, 0, sample, Coupling::Glm3Corrected, true) {
+        AttentionSpec::PreScored(mut cfg) => {
+            cfg.prescore.budget = KeyBudget::Mass(p);
+            AttentionSpec::PreScored(cfg)
+        }
+        _ => unreachable!("prescored_spec builds a PreScored spec"),
+    }
+}
+
+/// Realized selection size of every layer·head state after prefilling `doc`.
+fn realized_lens(model: &Transformer, spec: &AttentionSpec, doc: &[u32]) -> Vec<usize> {
+    let policy = AttnPolicy::uniform(spec.clone());
+    let (_, sess) = model.begin_decode(doc, &policy).expect("prescored spec supports decode");
+    sess.states().iter().filter_map(|s| s.selection().map(|sel| sel.len())).collect()
+}
+
+struct TargetResult {
+    mass: f32,
+    avg_realized: f64,
+    fixed_k: usize,
+    k_min: usize,
+    k_max: usize,
+    k_std: f64,
+    ppl_mass: f64,
+    ppl_fixed: f64,
+}
+
+fn main() {
+    let n_docs = env_usize("PALLAS_BUDGET_DOCS", 3);
+    let context = env_usize("PALLAS_BUDGET_CONTEXT", 256);
+    let sample = env_usize("PALLAS_BUDGET_SAMPLE", 16);
+    let masses = env_list::<f32>("PALLAS_BUDGET_MASS", &[0.5, 0.7, 0.85, 0.95]);
+    let assert_win = std::env::var("PALLAS_BUDGET_ASSERT").map_or(false, |v| v == "1");
+    let tol: f64 = std::env::var("PALLAS_BUDGET_TOL")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0.0);
+    let json_path =
+        std::env::var("PALLAS_BUDGET_JSON").unwrap_or_else(|_| "BENCH_budget.json".into());
+
+    let dir = Path::new("artifacts");
+    let model = if dir.join("weights.bin").exists() {
+        let ws = WeightStore::load(&dir.join("weights.bin")).unwrap();
+        Transformer::from_weights(&ws, TransformerConfig::default())
+    } else {
+        eprintln!("artifacts missing — using random weights");
+        Transformer::random(TransformerConfig::default(), 1)
+    };
+    let docs = eval_docs(512, context, n_docs, true, 33_000);
+
+    let mut t = Table::new(
+        "Key-budget policy — mass=p vs fixed-k at equal average realized budget (PPL*)",
+        &["Mass p", "Avg k", "Fixed k", "k min", "k max", "k std", "PPL mass", "PPL fixed"],
+    );
+    let mut results: Vec<TargetResult> = Vec::new();
+    for &p in &masses {
+        let mspec = mass_spec(p, sample);
+        // Average realized budget across every doc × layer·head state, and
+        // cross-head dispersion at the first (full-length) doc.
+        let mut all: Vec<usize> = Vec::new();
+        for d in &docs {
+            all.extend(realized_lens(&model, &mspec, d));
+        }
+        assert!(!all.is_empty(), "mass spec retained no selections");
+        let avg = all.iter().sum::<usize>() as f64 / all.len() as f64;
+        let head_lens = realized_lens(&model, &mspec, &docs[0]);
+        let k_min = *head_lens.iter().min().expect("non-empty");
+        let k_max = *head_lens.iter().max().expect("non-empty");
+        let hmean = head_lens.iter().sum::<usize>() as f64 / head_lens.len() as f64;
+        let k_std = (head_lens.iter().map(|&k| (k as f64 - hmean).powi(2)).sum::<f64>()
+            / head_lens.len() as f64)
+            .sqrt();
+
+        let fixed_k = (avg.round() as usize).max(1);
+        let fspec = prescored_spec(Method::KMeans, fixed_k, sample, Coupling::Glm3Corrected, true);
+        let ppl_mass = ppl_over(&model, &mspec, &docs);
+        let ppl_fixed = ppl_over(&model, &fspec, &docs);
+
+        t.row(vec![
+            f(p as f64, 2),
+            f(avg, 1),
+            fixed_k.to_string(),
+            k_min.to_string(),
+            k_max.to_string(),
+            f(k_std, 2),
+            f(ppl_mass, 3),
+            f(ppl_fixed, 3),
+        ]);
+        results.push(TargetResult {
+            mass: p,
+            avg_realized: avg,
+            fixed_k,
+            k_min,
+            k_max,
+            k_std,
+            ppl_mass,
+            ppl_fixed,
+        });
+    }
+    t.print();
+
+    let entry = |r: &TargetResult| {
+        format!(
+            "{{\"mass\": {:.4}, \"avg_realized_k\": {:.2}, \"fixed_k\": {}, \"k_min\": {}, \
+             \"k_max\": {}, \"k_std\": {:.3}, \"ppl_mass\": {:.4}, \"ppl_fixed\": {:.4}}}",
+            r.mass, r.avg_realized, r.fixed_k, r.k_min, r.k_max, r.k_std, r.ppl_mass, r.ppl_fixed,
+        )
+    };
+    let mut json = String::from("{\n");
+    json.push_str(&format!(
+        "  \"docs\": {n_docs},\n  \"context\": {context},\n  \"sample\": {sample},\n"
+    ));
+    json.push_str("  \"targets\": [\n");
+    for (i, r) in results.iter().enumerate() {
+        json.push_str(&format!(
+            "    {}{}\n",
+            entry(r),
+            if i + 1 < results.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    std::fs::write(&json_path, json).expect("writing BENCH_budget.json");
+    println!("wrote {json_path}");
+
+    if assert_win {
+        // CI gate: at the same average spend, adaptive allocation must not
+        // lose to uniform allocation. Zero cross-head dispersion makes the
+        // two selections identical (both are score-order prefixes), so the
+        // comparison can tie but a regression means the mass resolver is
+        // placing budget on the wrong heads.
+        for r in &results {
+            if r.ppl_mass > r.ppl_fixed * (1.0 + tol) {
+                eprintln!(
+                    "BUDGET ASSERT FAILED: mass={} ppl {} > fixed_k={} ppl {} (tol {})",
+                    f(r.mass as f64, 2),
+                    f(r.ppl_mass, 4),
+                    r.fixed_k,
+                    f(r.ppl_fixed, 4),
+                    tol,
+                );
+                std::process::exit(1);
+            }
+        }
+        println!(
+            "budget assert passed: mass PPL ≤ fixed PPL at equal average budget on all {} targets",
+            results.len()
+        );
+    }
+}

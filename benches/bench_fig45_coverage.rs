@@ -14,7 +14,7 @@ use prescored::data::images::{dataset, to_patches, ImageConfig};
 use prescored::linalg::ops::matmul;
 use prescored::metrics::{heavy_columns_coverage, heavy_coverage};
 use prescored::model::{Vit, VitConfig, WeightStore};
-use prescored::prescore::{prescore, prescore_balanced, Method, PreScoreConfig};
+use prescored::prescore::{prescore, prescore_balanced, KeyBudget, Method, PreScoreConfig};
 use prescored::util::bench::{f, Table};
 use prescored::util::rng::Rng;
 use std::path::Path;
@@ -79,7 +79,7 @@ fn main() {
                             k,
                             &PreScoreConfig {
                                 method: Method::KMedian,
-                                top_k: s,
+                                budget: KeyBudget::Fixed(s),
                                 ..Default::default()
                             },
                         )
@@ -108,7 +108,7 @@ fn main() {
                 } else {
                     prescore(
                         k,
-                        &PreScoreConfig { method: Method::KMedian, top_k: s, ..Default::default() },
+                        &PreScoreConfig { method: Method::KMedian, budget: KeyBudget::Fixed(s), ..Default::default() },
                     )
                     .selected
                 };

@@ -20,7 +20,7 @@ use prescored::attention::{
 };
 use prescored::linalg::Matrix;
 use prescored::parallel;
-use prescored::prescore::{prescore, Method, PreScoreConfig};
+use prescored::prescore::{prescore, KeyBudget, Method, PreScoreConfig};
 use prescored::util::bench::{black_box, f, Bencher, Table};
 use prescored::util::rng::Rng;
 
@@ -45,7 +45,12 @@ fn overhead_scaling() {
         let k = Matrix::randn(n, d, 1.0, &mut rng);
         let mut row = vec![n.to_string()];
         for (mi, (_, m)) in methods.iter().enumerate() {
-            let cfg = PreScoreConfig { method: *m, top_k: n / 4, max_iters: 5, ..Default::default() };
+            let cfg = PreScoreConfig {
+                method: *m,
+                budget: KeyBudget::Fixed(n / 4),
+                max_iters: 5,
+                ..Default::default()
+            };
             let tm = b.time("ps", || black_box(prescore(&k, &cfg))).median();
             times[mi].push(tm);
             row.push(f(tm * 1e3, 2));
@@ -84,7 +89,12 @@ fn parallel_scaling() {
     let v = Matrix::randn(n, d, 1.0, &mut rng);
     let inp = AttentionInputs::new(&q, &k, &v);
     let ps_cfg = PreScoredConfig {
-        prescore: PreScoreConfig { top_k: n / 4, max_iters: 5, seed: 3, ..Default::default() },
+        prescore: PreScoreConfig {
+            budget: KeyBudget::Fixed(n / 4),
+            max_iters: 5,
+            seed: 3,
+            ..Default::default()
+        },
         hyper: HyperConfig { block_size: 64, sample_size: 64, seed: 3, ..Default::default() },
         ..Default::default()
     };

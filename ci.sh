@@ -128,6 +128,16 @@ if [[ "$QUICK" == 0 ]]; then
     PALLAS_TIER_ASSERT=1 PALLAS_TIER_JSON="$(mktemp)" \
         cargo bench --bench bench_kv_tier
 
+    # Key-budget smoke: env-shrunk mass-vs-fixed PPL comparison at equal
+    # average realized budget. PALLAS_BUDGET_ASSERT=1 fails the build if the
+    # attention-mass policy ever loses to the matched fixed top-k — adaptive
+    # per-head allocation paying for itself is a CI invariant.
+    echo "== bench_budget (smoke) =="
+    PALLAS_BUDGET_DOCS=2 PALLAS_BUDGET_CONTEXT=96 PALLAS_BUDGET_SAMPLE=4 \
+    PALLAS_BUDGET_MASS=0.7,0.9 PALLAS_BUDGET_ASSERT=1 \
+    PALLAS_BUDGET_JSON="$(mktemp)" \
+        cargo bench --bench bench_budget
+
     # Chaos smoke: three fixed seeded fault schedules through the mixed
     # scoring + generation workload. The suite asserts no process panic,
     # a typed response per request, and balanced page/pin accounting.

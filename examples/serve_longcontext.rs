@@ -16,14 +16,21 @@
 //!    first document again re-admits its subtree from disk — warm-disk,
 //!    cheaper than a cold prefill — and `tier_spills` / `tier_readmits` /
 //!    `tier_bytes` account for every hop.
-//! 3. **PJRT artifact replay** (requires `make artifacts`): the original
+//! 3. **Attention-mass key budget** (`mass=0.95`): every layer·head keeps
+//!    the smallest score-order prefix covering 95% of its pre-score mass
+//!    instead of one global top-k — the per layer·head realized budgets are
+//!    printed from a direct prefill, then the same spec runs through the
+//!    serving stack and the realized-budget telemetry (`realized_keys_*`,
+//!    rung occupancy) is reported per response and in aggregate.
+//! 4. **PJRT artifact replay** (requires `make artifacts`): the original
 //!    Poisson long-context scoring trace against the exact and pre-scored
 //!    artifacts.
 //!
 //! ```bash
-//! cargo run --release --example serve_longcontext             # demo 1 (8k prefix)
+//! cargo run --release --example serve_longcontext             # demos 1–3 (8k prefix)
 //! cargo run --release --example serve_longcontext 4 2048      # 4 requests, 2k prefix
-//! make artifacts && cargo run --release --example serve_longcontext  # both demos
+//! make artifacts && cargo run --release --example serve_longcontext  # all demos
+//! cargo run --release --example serve_longcontext budget        # demo 3 only
 //! cargo run --release --example serve_longcontext gateway 8080  # HTTP/SSE front door
 //! ```
 //!
@@ -110,6 +117,7 @@
 //! semantics. Every failure is a typed `Response::error`, never a dropped
 //! channel.
 
+use prescored::attention::{AttentionSpec, AttnPolicy};
 use prescored::config::ServingConfig;
 use prescored::coordinator::kv_cache::BLOCK_SIZE;
 use prescored::coordinator::{KvDtype, Request};
@@ -277,6 +285,81 @@ fn run_tier_demo(prefix_tokens: usize) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Demo 3: the attention-mass key budget (`mass=0.95`) — every layer·head
+/// keeps the smallest score-order prefix covering 95% of its pre-score
+/// mass, so the realized budget *varies per head* instead of being one
+/// global top-k. Prints the per layer·head realized selection sizes from a
+/// direct prefill, then serves two requests of different lengths through
+/// the substrate server and prints the realized-budget telemetry the
+/// serving layer reports (`realized_keys_*` per response and in the
+/// aggregate stats, plus shed-rung occupancy).
+fn run_budget_demo() -> anyhow::Result<()> {
+    let context = 256usize;
+    let n_new = 8usize;
+    let spec_str = "prescored:kmeans,mass=0.95,block=16,sample=4,mode=stream";
+    let tcfg = TransformerConfig {
+        vocab: 512,
+        d_model: 32,
+        n_layers: 2,
+        n_heads: 2,
+        max_seq: context + n_new + 16,
+    };
+    let model = Transformer::random(tcfg.clone(), 7);
+    println!("== attention-mass key budget: {spec_str} ==");
+    // Direct prefill: read each layer·head's realized selection off the
+    // decode-session states.
+    let spec = AttentionSpec::parse(spec_str)?;
+    let policy = AttnPolicy::uniform(spec);
+    let tokens = corpus::generate(512, context, 1234);
+    let (_, sess) = model.begin_decode(&tokens, &policy)?;
+    let lens: Vec<usize> =
+        sess.states().iter().filter_map(|s| s.selection().map(|sel| sel.len())).collect();
+    for (i, chunk) in lens.chunks(tcfg.n_heads).enumerate() {
+        let row: Vec<String> = chunk.iter().map(|k| format!("{k:>4}")).collect();
+        println!("layer {i}: realized k per head = [{}] / {context} keys", row.join(", "));
+    }
+    let mean = lens.iter().sum::<usize>() as f64 / lens.len().max(1) as f64;
+    println!(
+        "mass=0.95 resolved to {:.1} keys on average (min {}, max {}) — the spread is \
+         budget moved between peaked and flat heads",
+        mean,
+        lens.iter().min().copied().unwrap_or(0),
+        lens.iter().max().copied().unwrap_or(0),
+    );
+    // Same spec through the serving stack: per-response and aggregate
+    // realized-budget telemetry.
+    let cfg = ServingConfig {
+        artifacts_dir: "/nonexistent-artifacts".into(),
+        max_seq: context + n_new + 16,
+        attention_spec: spec_str.into(),
+        kv_blocks: (context + n_new).div_ceil(BLOCK_SIZE) * 4,
+        decode_max_new: n_new,
+        ..Default::default()
+    };
+    let server = ScoringServer::start_with_model(cfg, Transformer::random(tcfg, 7))?;
+    for (id, len) in [(1u64, context), (2, context / 2)] {
+        let mut req = Request::scoring(id, corpus::generate(512, len, 4000 + id));
+        req.generate = n_new;
+        let resp = server.submit(req).recv()?;
+        println!(
+            "request {id}: {len} ctx | {} generated | realized keys mean {:.1}, p50 {}, p99 {}",
+            resp.generated.len(),
+            resp.realized_keys_mean,
+            resp.realized_keys_p50,
+            resp.realized_keys_p99,
+        );
+    }
+    let stats = server.shutdown();
+    println!(
+        "serving: realized keys mean {:.1}, p50 {:.0}, p99 {:.0} | rung occupancy {:?}\n",
+        stats.realized_keys_mean,
+        stats.realized_keys_p50,
+        stats.realized_keys_p99,
+        stats.rung_served,
+    );
+    Ok(())
+}
+
 /// `gateway [port]` mode: boot a substrate server behind the HTTP/SSE front
 /// door and serve until killed. Pair it with the curl quickstart in the
 /// module doc.
@@ -329,7 +412,7 @@ fn run_gateway(port: u16) -> anyhow::Result<()> {
     }
 }
 
-/// Demo 2: the original artifact replay (scoring trace via PJRT).
+/// Demo 4: the original artifact replay (scoring trace via PJRT).
 fn run_variant(variant: &str, n_req: usize) -> anyhow::Result<()> {
     let cfg = ServingConfig {
         variant: variant.to_string(),
@@ -379,11 +462,15 @@ fn main() -> anyhow::Result<()> {
         let port = std::env::args().nth(2).and_then(|s| s.parse().ok()).unwrap_or(8080);
         return run_gateway(port);
     }
+    if std::env::args().nth(1).as_deref() == Some("budget") {
+        return run_budget_demo();
+    }
     let n_req = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(4);
     let prefix_tokens =
         std::env::args().nth(2).and_then(|s| s.parse().ok()).unwrap_or(8192);
     run_prefix_demo(n_req, prefix_tokens)?;
     run_tier_demo(prefix_tokens.min(1024))?;
+    run_budget_demo()?;
 
     println!("== E2E: serving long-context scoring requests through PJRT artifacts ==");
     let replay_req = n_req.max(8) * 4;

@@ -39,12 +39,12 @@
 //! * `exact`
 //! * `flash[:block_q=64,block_k=64]`
 //! * `hyper[:block=64,sample=0,bits=16,seed=0,residual_n=<n>,keep_block_residual]`
-//! * `prescored:<method>[,top_k=256,clusters=<k>,sigma=0,raw,iters=10,pseed=0,
-//!    block=...,sample=...,bits=...,seed=...,residual_n=...,keep_block_residual,
-//!    delta=0,coupling=glm2|glm3,mode=full|stream,refresh=16]`
+//! * `prescored:<method>[,top_k=256|mass=<p>,clusters=<k>,sigma=0,raw,iters=10,
+//!    pseed=0,block=...,sample=...,bits=...,seed=...,residual_n=...,
+//!    keep_block_residual,delta=0,coupling=glm2|glm3,mode=full|stream,refresh=16]`
 //! * `restricted:balanced[,clusters=8,samples=32,iters=10,seed=0,refresh=16]`
-//! * `restricted:<method>[,top_k=256,clusters=<k>,sigma=0,raw,iters=10,seed=0,
-//!    refresh=16]`
+//! * `restricted:<method>[,top_k=256|mass=<p>,clusters=<k>,sigma=0,raw,iters=10,
+//!    seed=0,refresh=16]`
 //!
 //! `<method>` is any [`Method`] string (`kmeans`, `kmedian`, `leverage`,
 //! `leverage-exact`, `kernel-kmeans[:<gamma>]`, `minibatch[:<batch>]`,
@@ -60,6 +60,13 @@
 //! an incremental centroid state, which makes the kernel suffix-stable
 //! ([`AttentionSpec::suffix_stable`]) and its decode refresh
 //! O(|new keys|·k) instead of a full re-cluster.
+//!
+//! The key budget takes exactly one of two forms ([`KeyBudget`]): `top_k=<k>`
+//! (fixed count; `top_k=0` = unrestricted) or `mass=<p>` with p ∈ (0, 1] (keep
+//! the fewest highest-scoring keys whose normalized score mass reaches `p`;
+//! `mass=1.0` = unrestricted). The two keys are mutually exclusive within a
+//! spec — both set the same budget field, so a string naming both has no
+//! canonical form and is rejected at parse time.
 
 use super::decode::{
     run_selector, stream_prescored_forward, DecodeArtifacts, DecodeOutput, DecodeState,
@@ -75,7 +82,7 @@ use super::AttentionInputs;
 use crate::config::Config;
 use crate::linalg::Matrix;
 use crate::lsh::gray_rank;
-use crate::prescore::{prescore, Method, PreScoreConfig, StreamPrescorer};
+use crate::prescore::{prescore, KeyBudget, Method, PreScoreConfig, StreamPrescorer};
 use anyhow::{anyhow, bail, Context, Result};
 use std::fmt;
 
@@ -483,10 +490,12 @@ impl AttentionBackend for PreScored {
     }
 
     fn plan(&self, n_keys: usize) -> AttnStats {
-        // Mirrors prescored_hyper_attention: |S| = top_k clamped to n (0 =
-        // identity selection), fallback iff |S| < δ·n.
-        let top_k = self.0.prescore.top_k;
-        let s = if top_k == 0 || top_k >= n_keys { n_keys } else { top_k };
+        // Mirrors prescored_hyper_attention for fixed budgets: |S| = top_k
+        // clamped to n (0 = identity selection), fallback iff |S| < δ·n.
+        // Mass budgets depend on the realized score distribution, so plan
+        // reports the flat-prior estimate ⌈p·n⌉ (clamped to floor/cap) —
+        // forward stats carry the realized count.
+        let s = self.0.prescore.budget.plan_keys(n_keys);
         let fallback = (s as f32) < self.0.fallback_delta * n_keys as f32;
         AttnStats {
             kernel: self.kernel_name(),
@@ -610,13 +619,7 @@ impl AttentionBackend for RestrictedExact {
     fn plan(&self, n_keys: usize) -> AttnStats {
         let retained = match &self.selector {
             RestrictedSelector::Balanced { num_samples, .. } => (*num_samples).min(n_keys),
-            RestrictedSelector::Scored(cfg) => {
-                if cfg.top_k == 0 || cfg.top_k >= n_keys {
-                    n_keys
-                } else {
-                    cfg.top_k
-                }
-            }
+            RestrictedSelector::Scored(cfg) => cfg.budget.plan_keys(n_keys),
         };
         AttnStats {
             kernel: self.kernel_name(),
@@ -686,15 +689,34 @@ fn apply_hyper_key(cfg: &mut HyperConfig, key: &str, val: Option<&str>) -> Resul
 
 /// Apply an Algorithm 1 key; `seed_key` names the seed field (`"pseed"` in
 /// `prescored` specs where `seed` belongs to HyperAttention, `"seed"` in
-/// `restricted` specs). `Ok(false)` = not a prescore key.
+/// `restricted` specs). `budget_seen` enforces the `top_k=`/`mass=`
+/// exclusivity rule — the two keys write the same [`KeyBudget`] field, so a
+/// spec naming both has no canonical form and is rejected. `Ok(false)` =
+/// not a prescore key.
 fn apply_prescore_key(
     cfg: &mut PreScoreConfig,
     key: &str,
     val: Option<&str>,
     seed_key: &str,
+    budget_seen: &mut bool,
 ) -> Result<bool> {
     match (key, val) {
-        ("top_k", Some(v)) => cfg.top_k = parse_usize(key, v)?,
+        ("top_k", Some(v)) => {
+            if std::mem::replace(budget_seen, true) {
+                bail!("top_k= and mass= are mutually exclusive (both set the key budget)");
+            }
+            cfg.budget = KeyBudget::Fixed(parse_usize(key, v)?);
+        }
+        ("mass", Some(v)) => {
+            if std::mem::replace(budget_seen, true) {
+                bail!("top_k= and mass= are mutually exclusive (both set the key budget)");
+            }
+            let p = parse_f32(key, v)?;
+            if !(p > 0.0 && p <= 1.0) {
+                bail!("mass must be in (0, 1], got {v}");
+            }
+            cfg.budget = KeyBudget::Mass(p);
+        }
         ("clusters", Some(v)) => cfg.clusters = Some(parse_usize(key, v)?),
         ("sigma", Some(v)) => cfg.noise_sigma = parse_f32(key, v)?,
         ("iters", Some(v)) => cfg.max_iters = parse_usize(key, v)?,
@@ -732,8 +754,8 @@ fn hyper_parts(cfg: &HyperConfig, parts: &mut Vec<String>) {
 /// it is the leading positional token).
 fn prescore_parts(cfg: &PreScoreConfig, seed_key: &str, parts: &mut Vec<String>) {
     let d = PreScoreConfig::default();
-    if cfg.top_k != d.top_k {
-        parts.push(format!("top_k={}", cfg.top_k));
+    if cfg.budget != d.budget {
+        parts.push(cfg.budget.spec_key());
     }
     if let Some(c) = cfg.clusters {
         parts.push(format!("clusters={c}"));
@@ -804,9 +826,10 @@ impl AttentionSpec {
                     prescore: PreScoreConfig { method, ..Default::default() },
                     ..Default::default()
                 };
+                let mut budget_seen = false;
                 for f in rest_fields {
                     let (key, val) = split_field(f);
-                    if apply_prescore_key(&mut cfg.prescore, key, val, "pseed")? {
+                    if apply_prescore_key(&mut cfg.prescore, key, val, "pseed", &mut budget_seen)? {
                         continue;
                     }
                     if apply_hyper_key(&mut cfg.hyper, key, val)? {
@@ -896,9 +919,10 @@ impl AttentionSpec {
                     })?;
                     let mut cfg = PreScoreConfig { method, ..Default::default() };
                     let mut refresh = RESTRICTED_REFRESH_DEFAULT;
+                    let mut budget_seen = false;
                     for f in rest_fields {
                         let (key, val) = split_field(f);
-                        if apply_prescore_key(&mut cfg, key, val, "seed")? {
+                        if apply_prescore_key(&mut cfg, key, val, "seed", &mut budget_seen)? {
                             continue;
                         }
                         match (key, val) {

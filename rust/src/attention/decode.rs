@@ -603,20 +603,30 @@ pub(crate) fn run_selector(selector: &RestrictedSelector, k: &Matrix) -> Vec<usi
 // the forward's prefix rows are length-invariant (`suffix_stable`), a
 // decode step with refresh=1 reproduces the forward's last row exactly, and
 // `DecodeState::replay` reproduces the forward's suffix rows bitwise.
-// All per-row work is serial, so outputs are identical at any pool width.
+// The forward runs as two passes — a serial fold pass (hash + centroid
+// state are order-dependent) recording per-row snapshots, then a
+// pool-sharded attend pass over the frozen snapshots — and each row's
+// arithmetic is unchanged, so outputs are identical at any pool width.
 // ---------------------------------------------------------------------------
 
+/// Whether row `i` attends restricted: `Some(sel)` gathers the GLM3
+/// coupling over the selection, `None` runs the unfiltered kernel (the
+/// δ-fallback, or a selection that already covers the whole prefix). The
+/// decision is hoisted out of [`stream_attend_row`] so the two-pass prefill
+/// can freeze it in its per-row snapshots.
+fn stream_row_restriction<'a>(sel: &'a [usize], fallback: bool, i: usize) -> Option<&'a [usize]> {
+    (!fallback && sel.len() < i + 1).then_some(sel)
+}
+
 /// One streaming-mode attention row over the selection as of key `i`.
-/// Mirrors the cached-selection branches of [`DecodeState::step`]: the
-/// δ-fallback / identity selection runs the unfiltered kernel over keys
-/// `0..=i` with the hyper config verbatim; otherwise the GLM3 coupling over
-/// the gathered selection.
+/// Mirrors the cached-selection branches of [`DecodeState::step`]: `None`
+/// runs the unfiltered kernel over keys `0..=i` with the hyper config
+/// verbatim; `Some(sel)` the GLM3 coupling over the gathered selection.
 #[allow(clippy::too_many_arguments)]
 fn stream_attend_row(
     cfg: &PreScoredConfig,
     hyper: &HyperState,
-    sel: &[usize],
-    fallback: bool,
+    sel: Option<&[usize]>,
     i: usize,
     rank_block: usize,
     q_row: &[f32],
@@ -625,9 +635,8 @@ fn stream_attend_row(
     scale: f32,
     out: &mut [f32],
 ) {
-    let s_len = sel.len();
-    if fallback || s_len >= i + 1 {
-        hyper_row(
+    match sel {
+        None => hyper_row(
             q_row,
             i,
             rank_block,
@@ -638,23 +647,42 @@ fn stream_attend_row(
             scale,
             &cfg.hyper,
             out,
-        );
-    } else {
-        let hyper_cfg = cfg.glm3_hyper_cfg();
-        let codes: Vec<u32> = sel.iter().map(|&j| hyper.k_codes[j]).collect();
-        hyper_row(q_row, i, rank_block, k, v, Some(sel), &codes, scale, &hyper_cfg, out);
+        ),
+        Some(sel) => {
+            let hyper_cfg = cfg.glm3_hyper_cfg();
+            let codes: Vec<u32> = sel.iter().map(|&j| hyper.k_codes[j]).collect();
+            hyper_row(q_row, i, rank_block, k, v, Some(sel), &codes, scale, &hyper_cfg, out);
+        }
     }
+}
+
+/// Per-row snapshot from the serial fold pass: everything the attend pass
+/// needs to reproduce row `i` exactly as the one-pass recurrence would
+/// (`sel = None` rows attend unfiltered and need no selection copy).
+struct StreamRowSnap {
+    rank_block: usize,
+    sel: Option<Vec<usize>>,
 }
 
 /// Run the streaming recurrence over rows `0..k.rows`, emitting attention
 /// rows when `emit` is provided (the forward path) and skipping them when
 /// not (`begin_decode`, which only needs the end state). Returns the hyper
 /// state, the pre-scorer, and the final row's δ-fallback flag.
+///
+/// Two passes: the fold pass is inherently serial (the LSH rank and the
+/// centroid fold at row `i` depend on rows `0..i`), so it runs on the
+/// caller thread and records a per-row [`StreamRowSnap`]; the attend pass
+/// only *reads* the frozen codes/snapshots and shards rows across the pool.
+/// Each row's arithmetic is the same serial kernel either way, so the
+/// output is bitwise identical at any pool width
+/// (tests/parallel_equivalence.rs pins widths 1/2/4). The snapshots cost
+/// O(Σ|Sᵢ|) extra memory for restricted rows — the price of restoring
+/// width scaling to what used to be a fully serial forward.
 fn stream_prescored_build(
     cfg: &PreScoredConfig,
     q: &Matrix,
     k: &Matrix,
-    mut emit: Option<(&Matrix, f32, &mut Matrix)>,
+    emit: Option<(&Matrix, f32, &mut Matrix)>,
 ) -> (Box<HyperState>, Box<StreamPrescorer>, bool) {
     debug_assert_eq!(cfg.mode, PreScoreMode::Stream);
     debug_assert_eq!(cfg.coupling, super::prescored::Coupling::Glm3Corrected);
@@ -662,26 +690,44 @@ fn stream_prescored_build(
     let mut hyper = HyperState::from_parts(cfg.hyper.clone(), q.cols, &[], Vec::new());
     let mut pres = StreamPrescorer::new(cfg.prescore.clone(), k.cols);
     let mut fallback = false;
+    let record = emit.is_some();
+    let mut snaps: Vec<StreamRowSnap> = Vec::with_capacity(if record { n } else { 0 });
     for i in 0..n {
         let rank_block = hyper.observe_one(q.row(i), k.row(i));
         pres.fold(k.row(i));
         let sel = pres.selection();
         fallback = (sel.len() as f32) < cfg.fallback_delta * (i + 1) as f32;
-        if let Some((v, scale, out)) = emit.as_mut() {
-            stream_attend_row(
-                cfg,
-                &hyper,
-                sel,
-                fallback,
-                i,
-                rank_block,
-                q.row(i),
-                k,
-                *v,
-                *scale,
-                out.row_mut(i),
-            );
+        if record {
+            let sel = stream_row_restriction(sel, fallback, i).map(|s| s.to_vec());
+            snaps.push(StreamRowSnap { rank_block, sel });
         }
+    }
+    if let Some((v, scale, out)) = emit {
+        let cols = out.cols;
+        // Row `i` attends over `i + 1` keys (or |Sᵢ|, still ∝ prefix), so
+        // weighted sharding keeps the triangular workload balanced.
+        parallel::par_chunks_weighted(
+            &mut out.data,
+            cols,
+            |i| i + 1,
+            |first, shard| {
+                for (r, out_row) in shard.chunks_mut(cols).enumerate() {
+                    let i = first + r;
+                    stream_attend_row(
+                        cfg,
+                        &hyper,
+                        snaps[i].sel.as_deref(),
+                        i,
+                        snaps[i].rank_block,
+                        q.row(i),
+                        k,
+                        v,
+                        scale,
+                        out_row,
+                    );
+                }
+            },
+        );
     }
     (Box::new(hyper), Box::new(pres), fallback)
 }
@@ -1140,8 +1186,7 @@ impl DecodeState {
                     stream_attend_row(
                         cfg,
                         hyper,
-                        sl,
-                        sel.fallback,
+                        stream_row_restriction(sl, sel.fallback, i),
                         i,
                         rank_block,
                         q_suffix.row(local),

@@ -229,7 +229,7 @@ mod tests {
     use super::*;
     use crate::attention::exact::exact_attention;
     use crate::attention::rel_error;
-    use crate::prescore::Method;
+    use crate::prescore::{KeyBudget, Method};
     use crate::util::rng::Rng;
 
     /// Keys with planted heavy groups (m = heavy/d per axis direction) over
@@ -263,7 +263,12 @@ mod tests {
 
     fn cfg(top_k: usize, sample: usize, coupling: Coupling) -> PreScoredConfig {
         PreScoredConfig {
-            prescore: PreScoreConfig { method: Method::KMeans, top_k, seed: 7, ..Default::default() },
+            prescore: PreScoreConfig {
+                method: Method::KMeans,
+                budget: KeyBudget::Fixed(top_k),
+                seed: 7,
+                ..Default::default()
+            },
             hyper: HyperConfig { block_size: 32, sample_size: sample, seed: 7, ..Default::default() },
             fallback_delta: 0.0,
             coupling,

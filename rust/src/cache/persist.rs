@@ -47,6 +47,8 @@
 //!       since_recenter u32
 //!       scores_len, f32×scores_len      (aligned with the selection)
 //!       folded u32
+//!       score_min f32                   (v6: mass-budget running state —
+//!       score_total f32                  min/Σ of fold-time scores)
 //! n_sessions                            (v4: parked-session records for
 //! per session:                           crash-recovered resumption)
 //!   sid_len, sid utf-8
@@ -78,7 +80,7 @@ use anyhow::{bail, Context, Result};
 use std::path::Path;
 
 pub const MAGIC: u32 = 0x4358_4650; // "PFXC" little-endian
-pub const VERSION: u32 = 5;
+pub const VERSION: u32 = 6;
 
 /// A parked streaming session, persisted at drain so a client reconnecting
 /// after a restart can resume: the server re-admits `context` (warm through
@@ -187,6 +189,8 @@ pub(crate) fn put_artifacts(buf: &mut Vec<u8>, art: &DecodeArtifacts) {
             put_u32(buf, st.since_recenter);
             put_f32s(buf, &st.sel_scores);
             put_u32(buf, st.folded);
+            buf.extend_from_slice(&st.score_min.to_le_bytes());
+            buf.extend_from_slice(&st.score_total.to_le_bytes());
         }
     }
 }
@@ -329,6 +333,8 @@ pub(crate) fn read_artifacts(r: &mut Reader) -> Result<DecodeArtifacts> {
             since_recenter: r.u32()?,
             sel_scores: r.f32s()?,
             folded: r.u32()?,
+            score_min: r.f32()?,
+            score_total: r.f32()?,
         }),
         other => bail!("bad stream-artifact tag {other} at offset {}", r.off),
     };

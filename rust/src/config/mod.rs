@@ -140,6 +140,11 @@ pub struct ServingConfig {
     /// Pre-score method for the coordinator's prescore manager.
     pub prescore_method: String,
     pub prescore_top_k: usize,
+    /// Attention-mass budget target (`[prescore] mass`, p in (0, 1]).
+    /// Nonzero wins over `prescore_top_k` when deriving the spec — the two
+    /// keys are mutually exclusive forms of the same
+    /// [`crate::prescore::KeyBudget`].
+    pub prescore_mass: f64,
     /// Algorithm 1 execution mode for derived `prescored_*` specs:
     /// `"full"` (re-cluster the whole key set) or `"stream"` (prefix-stable
     /// streaming pre-scoring — `[prescore] mode = "stream"`).
@@ -205,6 +210,7 @@ impl Default for ServingConfig {
             prefix_spill_path: String::new(),
             prescore_method: "kmeans".into(),
             prescore_top_k: 64,
+            prescore_mass: 0.0,
             prescore_mode: "full".into(),
             prescore_refresh_every: 16,
             fallback_delta: 0.0,
@@ -272,6 +278,13 @@ impl ServingConfig {
                 .to_string(),
             prescore_method: cfg.get_or("prescore", "method", &d.prescore_method).to_string(),
             prescore_top_k: cfg.usize_or("prescore", "top_k", d.prescore_top_k)?,
+            prescore_mass: {
+                let p = cfg.f64_or("prescore", "mass", d.prescore_mass)?;
+                if p != 0.0 && !(p > 0.0 && p <= 1.0) {
+                    bail!("[prescore] mass must be in (0, 1], got {p}");
+                }
+                p
+            },
             prescore_mode: cfg.get_or("prescore", "mode", &d.prescore_mode).to_string(),
             prescore_refresh_every: cfg
                 .usize_or("prescore", "refresh_every", d.prescore_refresh_every)?,
@@ -295,7 +308,7 @@ impl ServingConfig {
     /// Algorithm 2, everything else exact attention).
     pub fn attention_spec(&self) -> Result<crate::attention::AttentionSpec> {
         use crate::attention::{AttentionSpec, PreScoreMode, PreScoredConfig};
-        use crate::prescore::{Method, PreScoreConfig};
+        use crate::prescore::{KeyBudget, Method, PreScoreConfig};
         if !self.attention_spec.is_empty() {
             return AttentionSpec::parse(&self.attention_spec);
         }
@@ -310,8 +323,12 @@ impl ServingConfig {
                     anyhow::bail!("[prescore] mode must be full or stream, got '{other}'")
                 }
             };
-            let prescore =
-                PreScoreConfig { method, top_k: self.prescore_top_k, ..Default::default() };
+            let budget = if self.prescore_mass > 0.0 {
+                KeyBudget::Mass(self.prescore_mass as f32)
+            } else {
+                KeyBudget::Fixed(self.prescore_top_k)
+            };
+            let prescore = PreScoreConfig { method, budget, ..Default::default() };
             let spec = AttentionSpec::PreScored(PreScoredConfig {
                 prescore,
                 fallback_delta: self.fallback_delta as f32,
@@ -429,6 +446,26 @@ fallback_delta = 0.05
             ..Default::default()
         };
         assert!(bad_method.attention_spec().is_err());
+    }
+
+    #[test]
+    fn prescore_mass_derives_mass_spec() {
+        let cfg = Config::parse(
+            "[serving]\nvariant = \"prescored_mass\"\n[prescore]\nmethod = \"kmeans\"\n\
+             mass = 0.9\n",
+        )
+        .unwrap();
+        let sc = ServingConfig::from_config(&cfg).unwrap();
+        assert!((sc.prescore_mass - 0.9).abs() < 1e-12);
+        let spec = sc.attention_spec().unwrap();
+        assert_eq!(spec.to_string(), "prescored:kmeans,mass=0.9");
+        // mass = 0 (the default) keeps the fixed-k derivation.
+        let fixed = ServingConfig { variant: "prescored_k64".into(), ..Default::default() };
+        assert_eq!(fixed.attention_spec().unwrap().to_string(), "prescored:kmeans,top_k=64");
+        // Out-of-range mass fails config load with the key named.
+        let bad = Config::parse("[prescore]\nmass = 1.5\n").unwrap();
+        let err = ServingConfig::from_config(&bad).unwrap_err();
+        assert!(format!("{err:#}").contains("mass"), "{err:#}");
     }
 
     #[test]

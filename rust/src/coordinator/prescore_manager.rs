@@ -7,13 +7,13 @@
 //! step."
 
 use crate::linalg::Matrix;
-use crate::prescore::{prescore, Method, PreScoreConfig, PreScoreResult};
+use crate::prescore::{prescore, KeyBudget, Method, PreScoreConfig, PreScoreResult};
 
 /// Policy configuration.
 #[derive(Debug, Clone)]
 pub struct PreScoreManagerConfig {
     pub method: Method,
-    pub top_k: usize,
+    pub budget: KeyBudget,
     /// Refresh the cached selection every R decode steps (0 = never).
     pub refresh_every: usize,
     /// Algorithm 2 fallback threshold δ: selection below δ·n disables
@@ -26,7 +26,7 @@ impl Default for PreScoreManagerConfig {
     fn default() -> Self {
         PreScoreManagerConfig {
             method: Method::KMeans,
-            top_k: 64,
+            budget: KeyBudget::Fixed(64),
             refresh_every: 16,
             fallback_delta: 0.0,
             seed: 0,
@@ -43,7 +43,11 @@ impl PreScoreManagerConfig {
         })?;
         Ok(PreScoreManagerConfig {
             method,
-            top_k: cfg.prescore_top_k,
+            budget: if cfg.prescore_mass > 0.0 {
+                KeyBudget::Mass(cfg.prescore_mass as f32)
+            } else {
+                KeyBudget::Fixed(cfg.prescore_top_k)
+            },
             refresh_every: cfg.prescore_refresh_every,
             fallback_delta: cfg.fallback_delta as f32,
             seed: 0,
@@ -74,7 +78,7 @@ impl PreScoreManager {
         let n = keys.rows;
         let ps_cfg = PreScoreConfig {
             method: self.cfg.method,
-            top_k: self.cfg.top_k,
+            budget: self.cfg.budget,
             seed: self.cfg.seed.wrapping_add(layer as u64),
             ..Default::default()
         };
@@ -113,7 +117,7 @@ mod tests {
 
     #[test]
     fn select_returns_budget() {
-        let m = PreScoreManager::new(PreScoreManagerConfig { top_k: 16, ..Default::default() });
+        let m = PreScoreManager::new(PreScoreManagerConfig { budget: KeyBudget::Fixed(16), ..Default::default() });
         let k = keys(128, 8, 1);
         let d = m.select(&k, 0);
         assert_eq!(d.selected.len(), 16);
@@ -123,7 +127,7 @@ mod tests {
     #[test]
     fn fallback_triggers() {
         let m = PreScoreManager::new(PreScoreManagerConfig {
-            top_k: 4,
+            budget: KeyBudget::Fixed(4),
             fallback_delta: 0.5, // 4 < 0.5·128
             ..Default::default()
         });
@@ -145,7 +149,7 @@ mod tests {
 
     #[test]
     fn per_layer_seeds_differ() {
-        let m = PreScoreManager::new(PreScoreManagerConfig { top_k: 8, ..Default::default() });
+        let m = PreScoreManager::new(PreScoreManagerConfig { budget: KeyBudget::Fixed(8), ..Default::default() });
         let k = keys(256, 8, 3);
         let d0 = m.select(&k, 0);
         let d0b = m.select(&k, 0);

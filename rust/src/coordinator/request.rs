@@ -135,6 +135,14 @@ pub struct Response {
     /// Keys the attention backend retained for this request's context
     /// (= context length when the backend is unfiltered or fell back).
     pub retained_keys: usize,
+    /// Realized key budget across this request's layer·head selection
+    /// states: mean / p50 / p99 of the per-state retained-key counts at the
+    /// terminal step. Fixed budgets realize their `top_k`; `mass=` budgets
+    /// realize whatever the score distribution demanded. All equal to
+    /// `retained_keys` for kernels without per-state selections.
+    pub realized_keys_mean: f64,
+    pub realized_keys_p50: usize,
+    pub realized_keys_p99: usize,
     /// Algorithm 2 line 2: the δ-fallback disabled filtering.
     pub fallback_used: bool,
     /// Tokens produced through the incremental decode path (0 for
@@ -172,6 +180,9 @@ impl Response {
             latency_ms,
             kernel: String::new(),
             retained_keys: 0,
+            realized_keys_mean: 0.0,
+            realized_keys_p50: 0,
+            realized_keys_p99: 0,
             fallback_used: false,
             decode_steps: 0,
             decode_ms: 0.0,
@@ -208,6 +219,9 @@ mod tests {
             latency_ms: 1.0,
             kernel: "exact".into(),
             retained_keys: 8,
+            realized_keys_mean: 8.0,
+            realized_keys_p50: 8,
+            realized_keys_p99: 8,
             fallback_used: false,
             decode_steps: 0,
             decode_ms: 0.0,

@@ -7,7 +7,7 @@ use crate::data::corpus;
 use crate::data::images::{dataset, to_patches, ImageConfig};
 use crate::metrics::PplAccum;
 use crate::model::{Transformer, Vit};
-use crate::prescore::{Method, PreScoreConfig};
+use crate::prescore::{KeyBudget, Method, PreScoreConfig};
 
 /// Evaluation corpus: a mixed-length set of documents. `long_only`
 /// restricts to full-length sequences — the paper's PPL* column
@@ -52,7 +52,12 @@ pub fn prescored_spec(
         ..Default::default()
     };
     AttentionSpec::PreScored(PreScoredConfig {
-        prescore: PreScoreConfig { method, top_k, seed: 7, ..Default::default() },
+        prescore: PreScoreConfig {
+            method,
+            budget: KeyBudget::Fixed(top_k),
+            seed: 7,
+            ..Default::default()
+        },
         hyper,
         fallback_delta: 0.0,
         coupling,

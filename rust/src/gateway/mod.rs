@@ -780,6 +780,16 @@ fn handle_stats(shared: &Arc<GwShared>, stream: &mut TcpStream, keep_alive: bool
         ("sessions_recovered", json::n(stats.sessions_recovered as f64)),
         ("kv_free_pages", json::n(stats.kv_free_pages as f64)),
         ("kv_capacity_pages", json::n(stats.kv_capacity_pages as f64)),
+        // Realized key-budget distribution (the observable half of a
+        // `mass=` budget) and per-rung shed occupancy — index = ladder
+        // rung, 0 = full quality.
+        ("realized_keys_mean", json::n(stats.realized_keys_mean)),
+        ("realized_keys_p50", json::n(stats.realized_keys_p50)),
+        ("realized_keys_p99", json::n(stats.realized_keys_p99)),
+        (
+            "shed_rungs",
+            Json::Arr(stats.rung_served.iter().map(|&c| json::n(c as f64)).collect()),
+        ),
         ("tenants", tenants),
         ("admission", admission),
     ])

@@ -727,7 +727,7 @@ mod tests {
     use super::*;
     use crate::attention::Coupling;
     use crate::data::corpus;
-    use crate::prescore::{Method, PreScoreConfig};
+    use crate::prescore::{KeyBudget, Method, PreScoreConfig};
 
     fn tiny() -> TransformerConfig {
         TransformerConfig { vocab: 64, d_model: 32, n_layers: 2, n_heads: 2, max_seq: 32 }
@@ -794,7 +794,11 @@ mod tests {
         let tokens = corpus::generate(64, 32, 5);
         for coupling in [Coupling::Glm3Corrected, Coupling::Glm2Artifact] {
             let mode = AttnMode::PreScored(PreScoredConfig {
-                prescore: PreScoreConfig { method: Method::KMeans, top_k: 8, ..Default::default() },
+                prescore: PreScoreConfig {
+                    method: Method::KMeans,
+                    budget: KeyBudget::Fixed(8),
+                    ..Default::default()
+                },
                 hyper: HyperConfig { block_size: 8, sample_size: 4, ..Default::default() },
                 fallback_delta: 0.0,
                 coupling,
@@ -811,7 +815,11 @@ mod tests {
         let tokens = corpus::generate(64, 32, 6);
         // Stochastic kernel exercises the per-layer/head seed salting.
         let mode = AttnMode::PreScored(PreScoredConfig {
-            prescore: PreScoreConfig { method: Method::KMeans, top_k: 8, ..Default::default() },
+            prescore: PreScoreConfig {
+                    method: Method::KMeans,
+                    budget: KeyBudget::Fixed(8),
+                    ..Default::default()
+                },
             hyper: HyperConfig { block_size: 8, sample_size: 4, ..Default::default() },
             fallback_delta: 0.0,
             coupling: Coupling::Glm3Corrected,

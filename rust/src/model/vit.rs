@@ -13,7 +13,7 @@ use crate::attention::decode::RESTRICTED_REFRESH_DEFAULT;
 use crate::attention::{AttentionBackend, AttentionInputs, AttentionSpec, RestrictedSelector};
 use crate::linalg::ops::matmul;
 use crate::linalg::Matrix;
-use crate::prescore::{Method, PreScoreConfig};
+use crate::prescore::{KeyBudget, Method, PreScoreConfig};
 
 /// ViT hyper-parameters (must match vit_weights.bin).
 #[derive(Debug, Clone)]
@@ -77,7 +77,7 @@ impl VitAttnMode {
             VitAttnMode::LeverageTopK { k, exact } => AttentionSpec::Restricted {
                 selector: RestrictedSelector::Scored(PreScoreConfig {
                     method: Method::Leverage { exact: *exact },
-                    top_k: *k,
+                    budget: KeyBudget::Fixed(*k),
                     ..Default::default()
                 }),
                 refresh: RESTRICTED_REFRESH_DEFAULT,
@@ -85,7 +85,7 @@ impl VitAttnMode {
             VitAttnMode::L2NormTopK { k } => AttentionSpec::Restricted {
                 selector: RestrictedSelector::Scored(PreScoreConfig {
                     method: Method::L2Norm,
-                    top_k: *k,
+                    budget: KeyBudget::Fixed(*k),
                     ..Default::default()
                 }),
                 refresh: RESTRICTED_REFRESH_DEFAULT,

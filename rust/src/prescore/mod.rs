@@ -110,14 +110,196 @@ impl Method {
     }
 }
 
+/// Key-retention budget policy — the single budget type threaded through
+/// grammar, kernels, streaming folds, decode refresh, shedding, and stats.
+///
+/// * `Fixed(k)`: retain exactly `k` keys (the paper's experiments;
+///   `Fixed(0)` conventionally means "no filtering").
+/// * `Mass(p)`: retain the smallest prefix of keys, in score order, whose
+///   cumulative *normalized score mass* reaches `p ∈ (0, 1]` (the Tactic
+///   observation: heads with flat score distributions need more keys and
+///   peaked heads fewer, so the spec-level knob is a mass target, not a
+///   count). Scores are shifted by the per-head minimum before
+///   normalization so the convention works uniformly for the clustering
+///   methods (score = −distance ≤ 0) and the norm/leverage methods
+///   (score ≥ 0). `Mass(1.0)` is the identity selection, bitwise equal to
+///   `Fixed(0)`. The realized k is clamped to
+///   `[MASS_FLOOR_KEYS, MASS_CAP_KEYS]` (and to n).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum KeyBudget {
+    Fixed(usize),
+    Mass(f32),
+}
+
+impl KeyBudget {
+    /// `shed_min_top_k`-style floor on a mass-resolved budget: a peaked
+    /// distribution never starves a head below this many keys.
+    pub const MASS_FLOOR_KEYS: usize = 8;
+    /// Hard cap on a mass-resolved budget: a pathologically flat
+    /// distribution cannot blow the interaction budget back up to O(n).
+    pub const MASS_CAP_KEYS: usize = 4096;
+    /// Degradation ladder step for `Mass` budgets (see [`Self::degrade`]).
+    pub const MASS_DEGRADE_STEP: f32 = 0.1;
+    /// Degradation ladder floor for `Mass` budgets.
+    pub const MASS_DEGRADE_MIN: f32 = 0.5;
+
+    /// The fixed key count, if this is a `Fixed` budget.
+    pub fn fixed_k(&self) -> Option<usize> {
+        match *self {
+            KeyBudget::Fixed(k) => Some(k),
+            KeyBudget::Mass(_) => None,
+        }
+    }
+
+    /// Does this budget never restrict, at any context length?
+    /// (`Fixed(0)` / `Mass(p ≥ 1)` — the unfiltered reference points.)
+    pub fn never_restricts(&self) -> bool {
+        match *self {
+            KeyBudget::Fixed(k) => k == 0,
+            KeyBudget::Mass(p) => p >= 1.0,
+        }
+    }
+
+    /// Is the budget a no-op at context length `n`? `Fixed` keeps its
+    /// historical `k == 0 || k >= n` convention; `Mass` is also identity
+    /// while `n` is at or below the floor (the resolved budget would be
+    /// clamped up to all of `n` anyway, so skipping the clustering pass is
+    /// bitwise-equivalent and cheaper).
+    pub fn is_unrestricted(&self, n: usize) -> bool {
+        match *self {
+            KeyBudget::Fixed(k) => k == 0 || k >= n,
+            KeyBudget::Mass(p) => p >= 1.0 || n <= Self::MASS_FLOOR_KEYS,
+        }
+    }
+
+    /// Streaming warmup length: how many keys the stream pre-scorer buffers
+    /// as identity before seeding its clustering. `Mass` budgets seed at
+    /// the floor — the earliest point a restriction can bind.
+    pub fn warmup_keys(&self) -> usize {
+        match *self {
+            KeyBudget::Fixed(k) => k,
+            KeyBudget::Mass(_) => Self::MASS_FLOOR_KEYS,
+        }
+    }
+
+    /// Deterministic *estimate* of the retained-key count at context length
+    /// `n`, for planning (`AttentionBackend::plan`) before any scores
+    /// exist. Exact for `Fixed`; for `Mass` it is the flat-distribution
+    /// prior `ceil(p·n)` under the same floor/cap clamps — the realized,
+    /// data-dependent count is reported by the forward/decode stats.
+    pub fn plan_keys(&self, n: usize) -> usize {
+        match *self {
+            KeyBudget::Fixed(k) => {
+                if k == 0 || k >= n {
+                    n
+                } else {
+                    k
+                }
+            }
+            KeyBudget::Mass(p) => {
+                if p >= 1.0 || n <= Self::MASS_FLOOR_KEYS {
+                    n
+                } else {
+                    let est = ((p as f64) * n as f64).ceil() as usize;
+                    est.clamp(Self::MASS_FLOOR_KEYS.min(n).max(1), Self::MASS_CAP_KEYS.min(n))
+                }
+            }
+        }
+    }
+
+    /// Resolve the realized key count against a full score vector (higher
+    /// score = more informative). For `Mass(p)`: sort scores descending,
+    /// shift by the minimum, and take the smallest prefix whose share of
+    /// the total shifted mass reaches `p`, clamped to the floor/cap. The
+    /// result is monotone in `p` by construction.
+    pub fn resolve(&self, scores: &[f32]) -> usize {
+        let n = scores.len();
+        match *self {
+            KeyBudget::Fixed(k) => {
+                if k == 0 || k >= n {
+                    n
+                } else {
+                    k
+                }
+            }
+            KeyBudget::Mass(p) => {
+                if p >= 1.0 || n <= Self::MASS_FLOOR_KEYS {
+                    return n;
+                }
+                let floor = Self::MASS_FLOOR_KEYS.min(n).max(1);
+                let cap = Self::MASS_CAP_KEYS.min(n);
+                let mut sorted = scores.to_vec();
+                sorted.sort_unstable_by(|a, b| {
+                    b.partial_cmp(a).unwrap_or(std::cmp::Ordering::Equal)
+                });
+                let lo = sorted[n - 1] as f64;
+                let total: f64 = sorted.iter().map(|&s| s as f64 - lo).sum();
+                if total <= 0.0 {
+                    // Flat distribution: every key carries equal mass.
+                    return (((p as f64) * n as f64).ceil() as usize).clamp(floor, cap);
+                }
+                let target = p as f64 * total;
+                let mut cum = 0.0f64;
+                let mut m = n;
+                for (i, &s) in sorted.iter().enumerate() {
+                    cum += s as f64 - lo;
+                    if cum >= target {
+                        m = i + 1;
+                        break;
+                    }
+                }
+                m.clamp(floor, cap)
+            }
+        }
+    }
+
+    /// One rung down the degradation ladder (the shed ladder's "half the
+    /// budget" move, generalized): halve a fixed k (floored at
+    /// `min_top_k`), or step a mass target down by [`Self::MASS_DEGRADE_STEP`]
+    /// (floored at [`Self::MASS_DEGRADE_MIN`]). Reaches a fixed point, so
+    /// the ladder's rung dedup terminates for both forms.
+    pub fn degrade(&self, min_top_k: usize) -> KeyBudget {
+        match *self {
+            KeyBudget::Fixed(k) => KeyBudget::Fixed((k / 2).max(min_top_k.max(1))),
+            KeyBudget::Mass(p) => {
+                // Snap to a 1e-3 grid so repeated f32 subtraction cannot
+                // smear the canonical spec string (0.95 → 0.85, not
+                // 0.84999996...); never grow an already-low target.
+                let next = ((p as f64 - Self::MASS_DEGRADE_STEP as f64)
+                    .max(Self::MASS_DEGRADE_MIN as f64)
+                    * 1000.0)
+                    .round()
+                    / 1000.0;
+                KeyBudget::Mass((next as f32).min(p))
+            }
+        }
+    }
+
+    /// The spec-grammar key/value pair for this budget (`top_k=<k>` /
+    /// `mass=<p>`) — used by canonical emission and diagnostics.
+    pub fn spec_key(&self) -> String {
+        match *self {
+            KeyBudget::Fixed(k) => format!("top_k={k}"),
+            KeyBudget::Mass(p) => format!("mass={p}"),
+        }
+    }
+}
+
+impl std::fmt::Display for KeyBudget {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.spec_key())
+    }
+}
+
 /// PreScore configuration (Algorithm 1 inputs).
 #[derive(Debug, Clone, PartialEq)]
 pub struct PreScoreConfig {
     pub method: Method,
     /// Number of clusters; `None` = the paper's default k = d + 1.
     pub clusters: Option<usize>,
-    /// Number of keys to retain (`s` / the experiments' `top_k`).
-    pub top_k: usize,
+    /// Key-retention budget (`s` / the experiments' `top_k`, or an
+    /// attention-mass target — see [`KeyBudget`]).
+    pub budget: KeyBudget,
     /// Optional stochastic perturbation σ (Alg. 1 line 1).
     pub noise_sigma: f32,
     /// ℓ2-normalize keys before clustering (Assumption 4.1; default true).
@@ -132,7 +314,7 @@ impl Default for PreScoreConfig {
         PreScoreConfig {
             method: Method::KMeans,
             clusters: None,
-            top_k: 256,
+            budget: KeyBudget::Fixed(256),
             noise_sigma: 0.0,
             normalize: true,
             max_iters: 10,
@@ -185,16 +367,18 @@ pub(crate) fn l2_cluster_route(
 
 /// Run Algorithm 1 on a key matrix.
 ///
-/// Returns the `top_k` selected key indices in ascending order plus the full
-/// score vector. `top_k = 0` conventionally means "no filtering" in the
-/// paper's experiments (the unfiltered high-compute reference point); we
-/// return the identity selection in that case.
+/// Returns the selected key indices in ascending order plus the full score
+/// vector. A `Fixed(k)` budget retains the top `k`; a `Mass(p)` budget
+/// resolves the realized count from the score distribution
+/// ([`KeyBudget::resolve`]). `Fixed(0)` / `Mass(1.0)` conventionally mean
+/// "no filtering" (the unfiltered high-compute reference point); we return
+/// the identity selection in that case.
 pub fn prescore(keys: &Matrix, cfg: &PreScoreConfig) -> PreScoreResult {
     let n = keys.rows;
     let d = keys.cols;
     let mut rng = Rng::with_stream(cfg.seed, PRESCORE_RNG_STREAM);
 
-    if cfg.top_k == 0 || cfg.top_k >= n {
+    if cfg.budget.is_unrestricted(n) {
         // No filtering: identity selection.
         return PreScoreResult {
             selected: (0..n).collect(),
@@ -213,7 +397,6 @@ pub fn prescore(keys: &Matrix, cfg: &PreScoreConfig) -> PreScoreResult {
     }
 
     let k_clusters = prescore_cluster_count(cfg.clusters, d, n);
-    let s = cfg.top_k.min(n);
 
     // Scores: higher = more informative. For clustering methods, a key's
     // informativeness is its *closeness* to its centroid (the paper selects
@@ -266,6 +449,9 @@ pub fn prescore(keys: &Matrix, cfg: &PreScoreConfig) -> PreScoreResult {
         Method::L2Norm => keys.row_sq_norms(), // note: *unnormalized* norms
     };
 
+    // Fixed budgets retain exactly k; mass budgets resolve the realized
+    // count against the score distribution (monotone in p, floored/capped).
+    let s = cfg.budget.resolve(&scores).min(n);
     let mut selected = top_k_indices(&scores, s);
     selected.sort_unstable();
     PreScoreResult { selected, scores, method: cfg.method }
@@ -446,7 +632,7 @@ mod tests {
     fn topk_zero_means_no_filtering() {
         let mut rng = Rng::new(1);
         let k = Matrix::randn(20, 4, 1.0, &mut rng);
-        let r = prescore(&k, &PreScoreConfig { top_k: 0, ..Default::default() });
+        let r = prescore(&k, &PreScoreConfig { budget: KeyBudget::Fixed(0), ..Default::default() });
         assert_eq!(r.selected, (0..20).collect::<Vec<_>>());
     }
 
@@ -457,7 +643,7 @@ mod tests {
         let k = planted_keys(n, d, heavy, &mut rng);
         let r = prescore(
             &k,
-            &PreScoreConfig { method: Method::KMeans, top_k: heavy, seed: 3, ..Default::default() },
+            &PreScoreConfig { method: Method::KMeans, budget: KeyBudget::Fixed(heavy), seed: 3, ..Default::default() },
         );
         // Most heavy keys should be among the selected (they sit essentially
         // on their centroids; the bulk cloud is looser).
@@ -476,7 +662,7 @@ mod tests {
                 &k,
                 &PreScoreConfig {
                     method: Method::Leverage { exact },
-                    top_k: heavy,
+                    budget: KeyBudget::Fixed(heavy),
                     seed: 5,
                     ..Default::default()
                 },
@@ -501,7 +687,7 @@ mod tests {
             Method::MiniBatch { batch: 32 },
             Method::L2Norm,
         ] {
-            let r = prescore(&k, &PreScoreConfig { method, top_k: 40, ..Default::default() });
+            let r = prescore(&k, &PreScoreConfig { method, budget: KeyBudget::Fixed(40), ..Default::default() });
             assert_eq!(r.selected.len(), 40, "{method:?}");
             let mut sorted = r.selected.clone();
             sorted.sort_unstable();
@@ -515,7 +701,7 @@ mod tests {
     fn deterministic_given_seed() {
         let mut rng = Rng::new(7);
         let k = Matrix::randn(100, 5, 1.0, &mut rng);
-        let cfg = PreScoreConfig { top_k: 30, seed: 42, ..Default::default() };
+        let cfg = PreScoreConfig { budget: KeyBudget::Fixed(30), seed: 42, ..Default::default() };
         assert_eq!(prescore(&k, &cfg).selected, prescore(&k, &cfg).selected);
     }
 
@@ -629,7 +815,7 @@ mod tests {
             &k,
             &PreScoreConfig {
                 method: Method::KMeans,
-                top_k: d / 2,
+                budget: KeyBudget::Fixed(d / 2),
                 normalize: true,
                 clusters: Some(d + 1),
                 seed: 9,

@@ -7,19 +7,27 @@
 //! hits. The [`StreamPrescorer`] instead processes keys **in sequence
 //! order**:
 //!
-//! 1. *Warmup* — while `n ≤ top_k` the selection is the identity (the same
+//! 1. *Warmup* — while `n ≤ warmup_keys` (the fixed `top_k`, or the mass
+//!    floor for `Mass` budgets) the selection is the identity (the same
 //!    "no filtering" convention batch prescore uses) and the raw rows are
 //!    buffered.
-//! 2. *Seed* — the first time `n = top_k + 1`, the buffered prefix keys are
-//!    batch-clustered exactly like the prefill clustering (same method
-//!    route, same RNG stream as [`prescore`](super::prescore)), scored, and
-//!    the top-k selection is drawn from those scores. The clustering
-//!    becomes a [`StreamClustering`].
+//! 2. *Seed* — the first time `n = warmup_keys + 1`, the buffered prefix
+//!    keys are batch-clustered exactly like the prefill clustering (same
+//!    method route, same RNG stream as [`prescore`](super::prescore)),
+//!    scored, and the budget-resolved selection is drawn from those scores
+//!    ([`KeyBudget::resolve`] — exactly k for `Fixed(k)`, the realized
+//!    mass-target count for `Mass(p)`). The clustering becomes a
+//!    [`StreamClustering`].
 //! 3. *Fold* — every later key is folded into the stream state in O(k·d)
 //!    (nearest frozen centroid, running-mean re-centering) and *merged*
-//!    into the selection: it enters iff its score beats the current
-//!    minimum, evicting that minimum — an O(|S|) selection merge, never a
-//!    re-cluster over all n keys.
+//!    into the selection. `Fixed(k)`: it enters iff its score beats the
+//!    current minimum, evicting that minimum — an O(|S|) selection merge,
+//!    never a re-cluster over all n keys. `Mass(p)`: the pool grows while
+//!    its share of the total score mass is below `p` and sheds its weakest
+//!    members while the target still holds without them — the total comes
+//!    from the per-cluster score mass [`StreamClustering`] already tracks
+//!    (plus a running min/total for the norm scorer), so each step stays
+//!    O(k + |S|) with no re-sort over all keys.
 //!
 //! Every step is a deterministic serial function of the key sequence, so a
 //! kernel that derives row `i`'s selection from the state after folding key
@@ -32,7 +40,7 @@
 //! k-means) and the leverage routes have no cheap fold; the spec parser
 //! rejects them in stream mode.
 
-use super::{Method, PreScoreConfig};
+use super::{KeyBudget, Method, PreScoreConfig};
 use crate::clustering::{StreamClustering, STREAM_RECENTER_EVERY};
 use crate::linalg::ops::top_k_indices;
 use crate::linalg::Matrix;
@@ -75,6 +83,12 @@ pub struct StreamArtifacts {
     pub sel_scores: Vec<f32>,
     /// Keys folded so far (= context positions covered).
     pub folded: u32,
+    /// Minimum score observed over every folded key (mass-budget shift
+    /// point; see [`KeyBudget`]). `0` while warming up.
+    pub score_min: f32,
+    /// Running Σ of fold-time scores (the norm scorer's mass total; the
+    /// clustered scorer re-derives its total from `score_mass`).
+    pub score_total: f32,
 }
 
 /// Streaming replacement for `prescore`: one instance per layer·head decode
@@ -90,6 +104,11 @@ pub struct StreamPrescorer {
     sel_scores: Vec<f32>,
     /// Keys folded so far.
     folded: usize,
+    /// Minimum score over every folded key (mass-budget shift point).
+    score_min: f32,
+    /// Running Σ of fold-time scores (used by the norm scorer; the
+    /// clustered scorer reuses [`StreamClustering::score_mass`]).
+    score_total: f32,
 }
 
 impl StreamPrescorer {
@@ -118,6 +137,8 @@ impl StreamPrescorer {
             selection: Vec::new(),
             sel_scores: Vec::new(),
             folded: 0,
+            score_min: 0.0,
+            score_total: 0.0,
         }
     }
 
@@ -131,7 +152,8 @@ impl StreamPrescorer {
     }
 
     /// Current selection (ascending). Identity during warmup; exactly
-    /// `top_k` once seeded (for `top_k > 0`).
+    /// `top_k` once seeded for `Fixed(top_k > 0)`, the mass-resolved count
+    /// for `Mass(p < 1)`.
     pub fn selection(&self) -> &[usize] {
         &self.selection
     }
@@ -141,8 +163,7 @@ impl StreamPrescorer {
         debug_assert_eq!(row.len(), self.d, "fold dim mismatch");
         let pos = self.folded;
         self.folded += 1;
-        let top_k = self.cfg.top_k;
-        if top_k == 0 {
+        if self.cfg.budget.never_restricts() {
             // The paper's "no filtering" convention: identity selection.
             self.selection.push(pos);
             self.sel_scores.push(WARMUP_SCORE);
@@ -153,7 +174,7 @@ impl StreamPrescorer {
                 buf.extend_from_slice(row);
                 self.selection.push(pos);
                 self.sel_scores.push(WARMUP_SCORE);
-                if self.folded == top_k + 1 {
+                if self.folded == self.cfg.budget.warmup_keys() + 1 {
                     self.seed();
                 }
                 return;
@@ -169,6 +190,10 @@ impl StreamPrescorer {
             }
             Scorer::Norms => row.iter().map(|x| x * x).sum(),
         };
+        // Mass-budget aggregates cover every folded key, the new one
+        // included, so they update before the selection merge.
+        self.score_min = self.score_min.min(score);
+        self.score_total += score;
         self.merge(pos, score);
     }
 
@@ -181,9 +206,12 @@ impl StreamPrescorer {
         }
     }
 
-    /// First crossing of the budget: batch-cluster the buffered prefix keys
-    /// exactly as the prefill clustering would (same method route and RNG
-    /// stream as [`super::prescore`]), score them, and keep the top-k.
+    /// First crossing of the warmup boundary: batch-cluster the buffered
+    /// prefix keys exactly as the prefill clustering would (same method
+    /// route and RNG stream as [`super::prescore`]), score them, and keep
+    /// the budget-resolved top scores ([`KeyBudget::resolve`] — shared with
+    /// batch prescore, so the seed selection matches the batch selection
+    /// over the same prefix for both budget forms).
     fn seed(&mut self) {
         let Scorer::Warmup(buf) = &self.scorer else {
             unreachable!("seed() outside warmup")
@@ -217,19 +245,45 @@ impl StreamPrescorer {
                 )
             }
         };
-        let mut selection = top_k_indices(&scores, self.cfg.top_k);
+        self.score_min = scores.iter().copied().fold(f32::INFINITY, f32::min);
+        self.score_total = scores.iter().sum();
+        let s = self.cfg.budget.resolve(&scores);
+        let mut selection = top_k_indices(&scores, s);
         selection.sort_unstable();
         self.sel_scores = selection.iter().map(|&i| scores[i]).collect();
         self.selection = selection;
         self.scorer = next;
     }
 
-    /// Selection merge: the new key enters iff its score beats the current
-    /// minimum (strictly — ties keep the incumbent), evicting the earliest
-    /// position among the minima. Keeps `selection` ascending because the
-    /// new position is always the largest.
+    /// Total score mass over every folded key. For the clustered scorer
+    /// this reuses the per-cluster score mass [`StreamClustering`] already
+    /// tracks (each `fold_key` adds its fold-time score to its cluster's
+    /// bucket, and the seed pass charges the prefix), so resolving a mass
+    /// budget per step is O(k) — no pass over unselected keys. The norm
+    /// scorer keeps a running total instead.
+    fn total_score(&self) -> f64 {
+        match &self.scorer {
+            Scorer::Clustered(sc) => sc.score_mass().iter().map(|&m| m as f64).sum(),
+            Scorer::Norms => self.score_total as f64,
+            Scorer::Warmup(_) => 0.0,
+        }
+    }
+
+    /// Selection merge, post-seed. `Fixed(k)`: the new key enters iff its
+    /// score beats the current minimum (strictly — ties keep the
+    /// incumbent), evicting the earliest position among the minima.
+    /// `Mass(p)`: admit/shed toward the mass target instead. Both keep
+    /// `selection` ascending because the new position is always the largest
+    /// and evictions preserve order.
     fn merge(&mut self, pos: usize, score: f32) {
-        if self.selection.len() < self.cfg.top_k {
+        let cap = match self.cfg.budget {
+            KeyBudget::Fixed(top_k) => top_k,
+            KeyBudget::Mass(p) => {
+                self.merge_mass(pos, score, p);
+                return;
+            }
+        };
+        if self.selection.len() < cap {
             self.selection.push(pos);
             self.sel_scores.push(score);
             return;
@@ -248,12 +302,81 @@ impl StreamPrescorer {
         }
     }
 
+    /// Mass-budget pool maintenance, O(k + |S|) per fold: the pool *grows*
+    /// (admits the new key unconditionally) while its share of the total
+    /// shifted score mass is below the target `p`, otherwise the new key
+    /// must strictly beat the pool minimum exactly as under a fixed budget;
+    /// it then *sheds* weakest-first while the target still holds without
+    /// the shed key. Floor and cap match [`KeyBudget::resolve`], so the
+    /// pool tracks the batch resolution of the same target.
+    fn merge_mass(&mut self, pos: usize, score: f32, p: f32) {
+        let n = self.folded;
+        let floor = KeyBudget::MASS_FLOOR_KEYS.min(n).max(1);
+        let cap = KeyBudget::MASS_CAP_KEYS.min(n);
+        let lo = self.score_min as f64;
+        let total = (self.total_score() - n as f64 * lo).max(0.0);
+        // Degenerate flat distribution (every score equal): fall back to
+        // the batch convention's count target ceil(p·n).
+        let flat_want = if total <= 0.0 {
+            Some((((p as f64) * n as f64).ceil() as usize).clamp(floor, cap))
+        } else {
+            None
+        };
+        let target = p as f64 * total;
+        let pool_mass =
+            |sel: &[f32]| sel.iter().map(|&s| s as f64 - lo).sum::<f64>();
+        let under_target = match flat_want {
+            Some(want) => self.selection.len() < want,
+            None => pool_mass(&self.sel_scores) < target,
+        };
+        if self.selection.len() < floor || (self.selection.len() < cap && under_target) {
+            self.selection.push(pos);
+            self.sel_scores.push(score);
+        } else {
+            let mut mi = 0usize;
+            for i in 1..self.sel_scores.len() {
+                if self.sel_scores[i] < self.sel_scores[mi] {
+                    mi = i;
+                }
+            }
+            if score > self.sel_scores[mi] {
+                self.selection.remove(mi);
+                self.sel_scores.remove(mi);
+                self.selection.push(pos);
+                self.sel_scores.push(score);
+            }
+        }
+        while self.selection.len() > floor {
+            let mut mi = 0usize;
+            for i in 1..self.sel_scores.len() {
+                if self.sel_scores[i] < self.sel_scores[mi] {
+                    mi = i;
+                }
+            }
+            let shed = match flat_want {
+                Some(want) => self.selection.len() > want,
+                None => {
+                    pool_mass(&self.sel_scores) - (self.sel_scores[mi] as f64 - lo)
+                        >= target
+                }
+            };
+            if self.selection.len() > cap || shed {
+                self.selection.remove(mi);
+                self.sel_scores.remove(mi);
+            } else {
+                break;
+            }
+        }
+    }
+
     /// Export the persistable data half (pair with the selection indices the
     /// decode artifacts already carry).
     pub fn export(&self) -> StreamArtifacts {
         let mut art = StreamArtifacts {
             sel_scores: self.sel_scores.clone(),
             folded: self.folded as u32,
+            score_min: self.score_min,
+            score_total: self.score_total,
             ..Default::default()
         };
         match &self.scorer {
@@ -290,18 +413,25 @@ impl StreamPrescorer {
         let scorer = match art.scorer {
             0 => {
                 // Warmup buffers one raw row per folded key — except under
-                // top_k = 0, where folds are identity-only and buffer
-                // nothing. A store whose buffer disagrees with its fold
-                // count, or that claims a warmup past the seed boundary
-                // (seeding fires at exactly top_k + 1 folds, so a warmup
-                // state with folded > top_k could never have been exported
-                // and would never seed), must be refused here, not
-                // mis-serve or panic later.
-                let expected = if cfg.top_k == 0 { 0 } else { art.folded as usize * d };
+                // a never-restricting budget (Fixed(0) / Mass(1.0)), where
+                // folds are identity-only and buffer nothing. A store whose
+                // buffer disagrees with its fold count, or that claims a
+                // warmup past the seed boundary (seeding fires at exactly
+                // warmup_keys + 1 folds, so a warmup state with folded >
+                // warmup_keys could never have been exported and would
+                // never seed), must be refused here, not mis-serve or panic
+                // later.
+                let expected = if cfg.budget.never_restricts() {
+                    0
+                } else {
+                    art.folded as usize * d
+                };
                 if art.warmup.len() != expected {
                     return None;
                 }
-                if cfg.top_k != 0 && art.folded as usize > cfg.top_k {
+                if !cfg.budget.never_restricts()
+                    && art.folded as usize > cfg.budget.warmup_keys()
+                {
                     return None;
                 }
                 Scorer::Warmup(art.warmup.clone())
@@ -342,6 +472,8 @@ impl StreamPrescorer {
             selection: selection.to_vec(),
             sel_scores: art.sel_scores.clone(),
             folded: art.folded as usize,
+            score_min: art.score_min,
+            score_total: art.score_total,
         })
     }
 }
@@ -365,7 +497,11 @@ mod tests {
     use crate::util::rng::Rng;
 
     fn cfg(top_k: usize) -> PreScoreConfig {
-        PreScoreConfig { top_k, seed: 7, ..Default::default() }
+        PreScoreConfig { budget: KeyBudget::Fixed(top_k), seed: 7, ..Default::default() }
+    }
+
+    fn mass_cfg(p: f32) -> PreScoreConfig {
+        PreScoreConfig { budget: KeyBudget::Mass(p), seed: 7, ..Default::default() }
     }
 
     fn keys(n: usize, d: usize, seed: u64) -> Matrix {
@@ -493,6 +629,92 @@ mod tests {
         let mut art = p.export();
         art.warmup.truncate(6); // one row left for four folded keys
         assert!(StreamPrescorer::restore(c, 6, p.selection(), &art).is_none());
+    }
+
+    #[test]
+    fn mass_one_is_identity_forever() {
+        // Mass(1.0) routes through the same never-restricts branch as
+        // Fixed(0): bitwise-identical identity state, never seeds.
+        let k = keys(30, 4, 2);
+        let mut full = StreamPrescorer::new(mass_cfg(1.0), 4);
+        let mut zero = StreamPrescorer::new(cfg(0), 4);
+        full.fold_to(&k);
+        zero.fold_to(&k);
+        assert_eq!(full.selection(), (0..30).collect::<Vec<_>>().as_slice());
+        assert_eq!(full.selection(), zero.selection());
+        assert_eq!(full.export(), zero.export());
+    }
+
+    #[test]
+    fn mass_folding_is_prefix_stable() {
+        let k = keys(90, 5, 3);
+        for method in [Method::KMeans, Method::MiniBatch { batch: 16 }, Method::L2Norm] {
+            let c = PreScoreConfig { method, ..mass_cfg(0.7) };
+            let mut a = StreamPrescorer::new(c.clone(), 5);
+            a.fold_to(&k);
+            let mut b = StreamPrescorer::new(c.clone(), 5);
+            b.fold_to(&k.slice_rows(0, 37));
+            b.fold_to(&k);
+            assert_eq!(a, b, "{method:?}");
+        }
+    }
+
+    #[test]
+    fn mass_seed_matches_batch_prescore_selection() {
+        // At the seed boundary the stream resolves the mass budget through
+        // the same KeyBudget::resolve over the same batch scores, so the
+        // seed selection equals batch prescore's over the same prefix.
+        let upto = KeyBudget::MASS_FLOOR_KEYS + 1;
+        let k = keys(40, 6, 9);
+        for method in [Method::KMeans, Method::L2Norm] {
+            let c = PreScoreConfig { method, ..mass_cfg(0.8) };
+            let mut p = StreamPrescorer::new(c.clone(), 6);
+            p.fold_to(&k.slice_rows(0, upto)); // crosses the floor → seeds
+            let batch = super::super::prescore(&k.slice_rows(0, upto), &c);
+            assert_eq!(p.selection(), batch.selected.as_slice(), "{method:?}");
+        }
+    }
+
+    #[test]
+    fn mass_pool_respects_floor_and_grows_with_target() {
+        let k = keys(120, 6, 11);
+        let mut sizes = Vec::new();
+        for p in [0.25f32, 0.95] {
+            let mut s = StreamPrescorer::new(mass_cfg(p), 6);
+            s.fold_to(&k);
+            let sel = s.selection();
+            assert!(sel.len() >= KeyBudget::MASS_FLOOR_KEYS, "floor holds at p={p}");
+            assert!(sel.len() <= 120);
+            assert!(sel.windows(2).all(|w| w[0] < w[1]), "ascending: {sel:?}");
+            sizes.push(sel.len());
+        }
+        // The stream pool is path-dependent, so only the wide-gap ordering
+        // is asserted here; exact monotonicity in p is pinned on the batch
+        // resolver (rust/tests/budget.rs).
+        assert!(sizes[0] <= sizes[1], "p=0.25 retains no more than p=0.95: {sizes:?}");
+    }
+
+    #[test]
+    fn mass_export_restore_roundtrip() {
+        let k = keys(50, 6, 5);
+        for (method, upto) in [
+            (Method::KMeans, 4usize), // warmup phase (floor = 8)
+            (Method::KMeans, 50),     // clustered phase
+            (Method::L2Norm, 50),     // norms phase
+        ] {
+            let c = PreScoreConfig { method, ..mass_cfg(0.75) };
+            let mut p = StreamPrescorer::new(c.clone(), 6);
+            p.fold_to(&k.slice_rows(0, upto));
+            let art = p.export();
+            let back = StreamPrescorer::restore(c.clone(), 6, p.selection(), &art)
+                .expect("restore");
+            assert_eq!(back, p, "{method:?} upto {upto}");
+            let mut cont = back;
+            let mut orig = p;
+            cont.fold(&[0.5; 6]);
+            orig.fold(&[0.5; 6]);
+            assert_eq!(cont, orig, "mass aggregates survive the round-trip");
+        }
     }
 
     #[test]

@@ -225,6 +225,19 @@ pub struct ServerStats {
     /// total pool capacity (both 0 without a decode engine).
     pub kv_free_pages: usize,
     pub kv_capacity_pages: usize,
+    /// Realized key-budget distribution over completed requests: each
+    /// request contributes the mean retained-key count across its layer·head
+    /// selection states. Fixed budgets realize their `top_k`; `mass=`
+    /// budgets realize whatever the score distribution demanded, so these
+    /// are the observable half of [`crate::prescore::KeyBudget`]. All zero
+    /// for non-selecting kernels.
+    pub realized_keys_mean: f64,
+    pub realized_keys_p50: f64,
+    pub realized_keys_p99: f64,
+    /// Admissions served at each degradation-ladder rung (index = rung,
+    /// 0 = full quality) — per-rung occupancy alongside the instantaneous
+    /// `shed_level`.
+    pub rung_served: Vec<usize>,
     /// Per-tenant terminal accounting, sorted by tenant key. Balance
     /// invariant: Σ tenants.requests == completed + cancelled + expired +
     /// shed_rejects + internal_errors (Invalid/Unsupported refusals are
@@ -270,6 +283,8 @@ struct SharedStats {
     kv_pages_reclaimed: usize,
     shed_level: usize,
     streamed_tokens: usize,
+    realized_keys: LatencyStats,
+    rung_served: Vec<usize>,
     tenants: HashMap<String, TenantCounters>,
 }
 
@@ -619,7 +634,7 @@ impl DecodeEngine {
         match spec {
             AttentionSpec::PreScored(ps) => {
                 manager_cfg.refresh_every = ps.decode_refresh_every;
-                manager_cfg.top_k = ps.prescore.top_k;
+                manager_cfg.budget = ps.prescore.budget;
                 manager_cfg.fallback_delta = ps.fallback_delta;
             }
             AttentionSpec::Restricted { refresh, .. }
@@ -838,7 +853,14 @@ impl DecodeEngine {
         let cap = self.kv.capacity();
         let occupancy = 1.0 - self.kv.free_blocks() as f64 / cap.max(1) as f64;
         let rung = self.shedder.observe(occupancy, self.pending.len() + 1);
-        plock(shared).shed_level = rung;
+        {
+            let mut st = plock(shared);
+            st.shed_level = rung;
+            if st.rung_served.len() <= rung {
+                st.rung_served.resize(rung + 1, 0);
+            }
+            st.rung_served[rung] += 1;
+        }
         let need_pages = crate::coordinator::kv_cache::pages_for(tokens.len());
         if need_pages > cap {
             let Job { request, respond, .. } = job;
@@ -1264,6 +1286,16 @@ impl DecodeEngine {
         let context = s.sess.pos();
         let retained = s.sess.min_retained().unwrap_or(context);
         let fallback = s.sess.states().iter().any(|st| st.fallback_used());
+        // Realized key budget at the terminal step, per layer·head state —
+        // the observable half of a `mass=` budget (fixed budgets realize
+        // their top_k, so this is a constant for them).
+        let realized: Vec<usize> = s
+            .sess
+            .states()
+            .iter()
+            .filter_map(|st| st.selection().map(|sel| sel.len()))
+            .collect();
+        let (rmean, rp50, rp99) = realized_summary(&realized, context);
         {
             let mut st = plock(shared);
             // Streamed-token accounting covers partial output too: a
@@ -1274,6 +1306,7 @@ impl DecodeEngine {
             match &error {
                 None => {
                     st.latency.record(lat);
+                    st.realized_keys.record_ms(rmean);
                     st.completed += 1;
                     st.scored_tokens += s.nll.len() + s.generated.len();
                     st.tenant_mut(&s.tenant).requests += 1;
@@ -1292,6 +1325,9 @@ impl DecodeEngine {
             latency_ms: lat.as_secs_f64() * 1e3,
             kernel: self.kernel.to_string(),
             retained_keys: retained,
+            realized_keys_mean: rmean,
+            realized_keys_p50: rp50,
+            realized_keys_p99: rp99,
             fallback_used: fallback,
             decode_steps,
             decode_ms: s.decode_ms,
@@ -1699,12 +1735,19 @@ fn validate_spec_for_variant(spec: &AttentionSpec, variant: &str) -> Result<()> 
         variant.strip_prefix("prescored_k").and_then(|k| k.parse::<usize>().ok())
     {
         match spec {
-            AttentionSpec::PreScored(cfg) if cfg.prescore.top_k == k => return Ok(()),
+            AttentionSpec::PreScored(cfg)
+                if cfg.prescore.budget == crate::prescore::KeyBudget::Fixed(k) =>
+            {
+                return Ok(())
+            }
+            // A mass budget (or any other fixed k) mismatches a baked-in
+            // prescored_k<K> artifact: its realized k is data-dependent,
+            // never the artifact's constant.
             AttentionSpec::PreScored(cfg) => anyhow::bail!(
-                "attention spec retains top_k={} but artifact variant '{variant}' bakes \
+                "attention spec retains {} but artifact variant '{variant}' bakes \
                  in k={k} — per-request stats would misreport the retained budget \
                  (set [attention] spec / [prescore] top_k to match the variant)",
-                cfg.prescore.top_k
+                cfg.prescore.budget
             ),
             _ => {}
         }
@@ -2064,8 +2107,26 @@ fn snapshot_stats(src: &StatsSources) -> ServerStats {
         sessions_recovered: sessions.recovered,
         kv_free_pages: kv_free,
         kv_capacity_pages: kv_cap,
+        realized_keys_mean: stats.realized_keys.mean(),
+        realized_keys_p50: stats.realized_keys.percentile(50.0),
+        realized_keys_p99: stats.realized_keys.percentile(99.0),
+        rung_served: stats.rung_served.clone(),
         tenants,
     }
+}
+
+/// Summarize a request's per-state realized key counts as (mean, p50, p99).
+/// Kernels without per-state selections report the full context uniformly —
+/// the same convention `Response::retained_keys` uses.
+fn realized_summary(counts: &[usize], context: usize) -> (f64, usize, usize) {
+    if counts.is_empty() {
+        return (context as f64, context, context);
+    }
+    let mut sorted = counts.to_vec();
+    sorted.sort_unstable();
+    let mean = sorted.iter().sum::<usize>() as f64 / sorted.len() as f64;
+    let at = |p: f64| sorted[((p * (sorted.len() - 1) as f64).round() as usize).min(sorted.len() - 1)];
+    (mean, at(0.50), at(0.99))
 }
 
 /// Pair a formed batch with its responders and enqueue it for the pool.
@@ -2378,6 +2439,7 @@ fn execute_batch(
                     // context (previously hardcoded to cfg.prescore_top_k /
                     // false).
                     let attn = backend.plan(lens[i]);
+                    stats.realized_keys.record_ms(attn.retained_keys as f64);
                     let _ = tx.send(Response {
                         id: req.id,
                         nll,
@@ -2385,6 +2447,9 @@ fn execute_batch(
                         latency_ms: lat.as_secs_f64() * 1e3,
                         kernel: attn.kernel.to_string(),
                         retained_keys: attn.retained_keys,
+                        realized_keys_mean: attn.retained_keys as f64,
+                        realized_keys_p50: attn.retained_keys,
+                        realized_keys_p99: attn.retained_keys,
                         fallback_used: attn.fallback_used,
                         decode_steps: 0,
                         decode_ms: 0.0,
@@ -2465,6 +2530,7 @@ fn substrate_score(
             stats.scored_tokens += results[i].len();
             stats.tenant_mut(&req.tenant).requests += 1;
             let attn = backend.plan(req.tokens.len());
+            stats.realized_keys.record_ms(attn.retained_keys as f64);
             let _ = tx.send(Response {
                 id: req.id,
                 nll: results[i].clone(),
@@ -2472,6 +2538,9 @@ fn substrate_score(
                 latency_ms: lat.as_secs_f64() * 1e3,
                 kernel: attn.kernel.to_string(),
                 retained_keys: attn.retained_keys,
+                realized_keys_mean: attn.retained_keys as f64,
+                realized_keys_p50: attn.retained_keys,
+                realized_keys_p99: attn.retained_keys,
                 fallback_used: attn.fallback_used,
                 decode_steps: 0,
                 decode_ms: 0.0,

@@ -6,8 +6,9 @@
 //! length for throughput, in order of increasing severity —
 //!
 //! 1. the configured spec (no degradation);
-//! 2. half the pre-score `top_k` (floored at `shed_min_top_k`) — fewer
-//!    retained keys per step;
+//! 2. a degraded key budget ([`crate::prescore::KeyBudget::degrade`]: half
+//!    the fixed `top_k` floored at `shed_min_top_k`, or the attention-mass
+//!    target stepped down) — fewer retained keys per step;
 //! 3. double the decode refresh period — staler selections, fewer
 //!    Algorithm-1 re-runs;
 //! 4. `l2norm` scoring — the cheapest pre-scorer (no clustering at all;
@@ -70,7 +71,7 @@ pub fn build_ladder(
     };
     if let AttentionSpec::PreScored(base_cfg) = base {
         let mut cfg = base_cfg.clone();
-        cfg.prescore.top_k = (cfg.prescore.top_k / 2).max(min_top_k.max(1));
+        cfg.prescore.budget = cfg.prescore.budget.degrade(min_top_k);
         push(&mut ladder, rung(AttentionSpec::PreScored(cfg.clone()), base_max_new, base_refresh));
         if cfg.decode_refresh_every != 0 {
             cfg.decode_refresh_every *= 2;
@@ -167,7 +168,9 @@ mod tests {
         let ladder = build_ladder(&spec, 64, 16, 8);
         assert!(ladder.len() >= 4, "prescored specs get a real ladder");
         let top_k = |r: &Rung| match &r.spec {
-            AttentionSpec::PreScored(c) => c.prescore.top_k,
+            AttentionSpec::PreScored(c) => {
+                c.prescore.budget.fixed_k().expect("fixed-budget ladder") // unwrap-ok: test spec
+            }
             _ => unreachable!(),
         };
         for w in ladder.windows(2) {
@@ -191,6 +194,30 @@ mod tests {
         for r in &l {
             assert_eq!(r.max_new, 1);
             assert_eq!(r.refresh_every, 0, "refresh=never stays never");
+        }
+    }
+
+    #[test]
+    fn mass_budget_ladder_steps_target_down() {
+        use crate::prescore::KeyBudget;
+        let spec = AttentionSpec::parse("prescored:kmeans,mass=0.9,mode=stream").unwrap();
+        let ladder = build_ladder(&spec, 64, 16, 8);
+        assert!(ladder.len() >= 4, "mass specs get the full ladder");
+        let mass = |r: &Rung| match &r.spec {
+            AttentionSpec::PreScored(c) => match c.prescore.budget {
+                KeyBudget::Mass(p) => p,
+                other => panic!("ladder switched budget form: {other:?}"),
+            },
+            _ => unreachable!(),
+        };
+        for w in ladder.windows(2) {
+            assert!(mass(&w[1]) <= mass(&w[0]), "mass target never grows down-ladder");
+        }
+        assert!(mass(ladder.last().unwrap()) >= KeyBudget::MASS_DEGRADE_MIN);
+        // Truthful reporting: every rung's spec string round-trips the
+        // grammar, so a degraded mass target is observable over the wire.
+        for r in &ladder {
+            assert_eq!(AttentionSpec::parse(&r.spec_str).unwrap(), r.spec, "{}", r.spec_str);
         }
     }
 

@@ -16,7 +16,7 @@ use prescored::attention::{
 };
 use prescored::linalg::Matrix;
 use prescored::parallel;
-use prescored::prescore::{prescore, prescore_balanced, Method, PreScoreConfig};
+use prescored::prescore::{prescore, prescore_balanced, KeyBudget, Method, PreScoreConfig};
 use prescored::util::rng::Rng;
 
 /// Spec strings covering every kernel and every parameter key.
@@ -40,12 +40,20 @@ const SPEC_STRINGS: &[&str] = &[
     "prescored:kmeans,top_k=24,mode=stream",
     "prescored:minibatch:32,top_k=12,mode=stream,refresh=2",
     "prescored:l2norm,top_k=16,mode=stream,refresh=0",
+    // Mass budgets: `mass=<p>` is the lossless alternative to `top_k=`
+    // (mutually exclusive keys; see the budget suite in tests/budget.rs).
+    "prescored:kmeans,mass=0.95",
+    "prescored:kmeans,mass=0.8,block=16,sample=4,mode=stream",
+    "prescored:l2norm,mass=0.6,refresh=4",
+    "prescored:minibatch:32,mass=0.5,mode=stream",
+    "prescored:kmeans,mass=1",
     "restricted:balanced",
     "restricted:balanced,clusters=4,samples=12,iters=5,seed=2",
     "restricted:balanced,refresh=3",
     "restricted:leverage-exact,top_k=10",
     "restricted:l2norm,top_k=10,raw",
     "restricted:l2norm,top_k=10,refresh=0",
+    "restricted:l2norm,mass=0.75",
     "restricted:kernel-kmeans:2.5,top_k=6",
 ];
 
@@ -77,7 +85,7 @@ fn constructed_specs_round_trip_with_every_field_nondefault() {
             prescore: PreScoreConfig {
                 method: Method::GaussianKMeans { gamma: 0.25 },
                 clusters: Some(7),
-                top_k: 48,
+                budget: KeyBudget::Fixed(48),
                 noise_sigma: 0.125,
                 normalize: false,
                 max_iters: 4,
@@ -100,7 +108,7 @@ fn constructed_specs_round_trip_with_every_field_nondefault() {
             prescore: PreScoreConfig {
                 method: Method::MiniBatch { batch: 48 },
                 clusters: Some(6),
-                top_k: 18,
+                budget: KeyBudget::Fixed(18),
                 noise_sigma: 0.0, // stream mode: no per-forward noise
                 normalize: false,
                 max_iters: 5,
@@ -111,6 +119,22 @@ fn constructed_specs_round_trip_with_every_field_nondefault() {
             coupling: prescored::attention::Coupling::Glm3Corrected,
             mode: PreScoreMode::Stream,
             decode_refresh_every: 3,
+        }),
+        AttentionSpec::PreScored(PreScoredConfig {
+            prescore: PreScoreConfig {
+                method: Method::KMeans,
+                clusters: None,
+                budget: KeyBudget::Mass(0.85),
+                noise_sigma: 0.0,
+                normalize: true,
+                max_iters: 10,
+                seed: 31,
+            },
+            hyper: HyperConfig { block_size: 16, sample_size: 4, ..Default::default() },
+            fallback_delta: 0.0,
+            coupling: prescored::attention::Coupling::Glm3Corrected,
+            mode: PreScoreMode::Stream,
+            decode_refresh_every: 2,
         }),
         AttentionSpec::Restricted {
             selector: RestrictedSelector::Balanced {
@@ -125,7 +149,7 @@ fn constructed_specs_round_trip_with_every_field_nondefault() {
             selector: RestrictedSelector::Scored(PreScoreConfig {
                 method: Method::MiniBatch { batch: 64 },
                 clusters: Some(5),
-                top_k: 21,
+                budget: KeyBudget::Fixed(21),
                 noise_sigma: 0.5,
                 normalize: false,
                 max_iters: 6,

@@ -1,0 +1,422 @@
+//! Unified KeyBudget properties (tentpole of the budget-policy PR).
+//!
+//! Layered guarantees, each pinned here:
+//!
+//! 1. **Grammar** — `mass=<p>` round-trips losslessly through the spec
+//!    grammar in both families; `top_k=` / `mass=` are mutually exclusive
+//!    (both set the same budget field) and out-of-range targets are
+//!    rejected at parse time.
+//! 2. **Resolution** — the realized key count of `KeyBudget::resolve` is
+//!    monotone in `p`, floored/capped, and falls back to the flat-prior
+//!    count on degenerate (flat) score distributions; `Fixed` keeps its
+//!    k == n boundary conventions exactly.
+//! 3. **Kernels** — `Mass(1.0)` is bitwise-identical to the unrestricted
+//!    `Fixed(0)` selection (forward AND stream fold); mass-budget decode
+//!    reproduces the full causal forward bitwise at pool widths 1/2/4,
+//!    and a warm `replay` resumes the fold identically to a cold prefill.
+//! 4. **Serving** — a `mode=stream,mass=` spec gets partial warm hits from
+//!    the prefix cache, survives a persist/restart round-trip (the v6
+//!    artifact format carries the mass-budget running state), and reports
+//!    realized per-request key budgets in the response.
+
+use prescored::attention::{AttentionInputs, AttentionSpec, AttnPolicy};
+use prescored::config::ServingConfig;
+use prescored::coordinator::Request;
+use prescored::linalg::Matrix;
+use prescored::model::{Transformer, TransformerConfig};
+use prescored::parallel::with_threads;
+use prescored::prescore::{prescore, KeyBudget, PreScoreConfig};
+use prescored::server::ScoringServer;
+use prescored::util::rng::Rng;
+
+const SALT: u64 = 5;
+
+fn rand_qkv(n: usize, d: usize, seed: u64) -> (Matrix, Matrix, Matrix) {
+    let mut rng = Rng::new(seed);
+    (
+        Matrix::randn(n, d, 1.0, &mut rng),
+        Matrix::randn(n, d, 1.0, &mut rng),
+        Matrix::randn(n, d, 1.0, &mut rng),
+    )
+}
+
+// ---------------------------------------------------------------- grammar
+
+#[test]
+fn mass_specs_roundtrip_losslessly() {
+    // Already-canonical strings: parse → emit is the identity, so a mass
+    // target survives config files, shed-rung reporting, and the gateway
+    // wire format without drift.
+    for s in [
+        "prescored:kmeans,mass=0.95",
+        "prescored:kmeans,mass=0.95,mode=stream",
+        "prescored:kmeans,mass=0.8,block=16,sample=4,mode=stream,refresh=4",
+        "prescored:l2norm,mass=0.6",
+        "prescored:minibatch:64,mass=0.5,mode=stream",
+        "prescored:kmeans,mass=1",
+        "prescored:kmedian,mass=0.75,clusters=9",
+        "restricted:l2norm,mass=0.75",
+        "restricted:leverage,mass=0.9,refresh=4",
+    ] {
+        let spec = AttentionSpec::parse(s).unwrap();
+        assert_eq!(spec.to_string(), s, "canonical mass form is a fixed point");
+        assert_eq!(AttentionSpec::parse(&spec.to_string()).unwrap(), spec, "{s}");
+    }
+    // The parsed budget is the exact f32 the string names.
+    match AttentionSpec::parse("prescored:kmeans,mass=0.95").unwrap() {
+        AttentionSpec::PreScored(cfg) => {
+            assert_eq!(cfg.prescore.budget, KeyBudget::Mass(0.95));
+        }
+        other => panic!("wrong family: {other:?}"),
+    }
+}
+
+#[test]
+fn top_k_and_mass_are_mutually_exclusive() {
+    for s in [
+        "prescored:kmeans,top_k=64,mass=0.9",
+        "prescored:kmeans,mass=0.9,top_k=64",
+        "prescored:kmeans,mass=0.9,mass=0.8", // double-set is also ambiguous
+        "prescored:kmeans,top_k=64,top_k=32",
+        "restricted:l2norm,top_k=8,mass=0.5",
+    ] {
+        let err = AttentionSpec::parse(s).expect_err(s).to_string();
+        assert!(err.contains("mutually exclusive"), "'{s}': {err}");
+    }
+    // Out-of-range targets have no meaning as a mass share.
+    for s in [
+        "prescored:kmeans,mass=0",
+        "prescored:kmeans,mass=1.5",
+        "prescored:kmeans,mass=-0.5",
+    ] {
+        let err = AttentionSpec::parse(s).expect_err(s).to_string();
+        assert!(err.contains("mass"), "'{s}': {err}");
+    }
+}
+
+// -------------------------------------------------------------- resolution
+
+#[test]
+fn resolve_is_monotone_in_p_with_floor_and_cap() {
+    let mut rng = Rng::new(0xB0D6E7);
+    let n = 600usize;
+    let scores: Vec<f32> = (0..n).map(|_| rng.gauss32(0.0, 1.0)).collect();
+    let grid = [0.05f32, 0.1, 0.2, 0.3, 0.5, 0.7, 0.8, 0.9, 0.95, 0.99, 1.0];
+    let mut prev = 0usize;
+    for &p in &grid {
+        let m = KeyBudget::Mass(p).resolve(&scores);
+        assert!(m >= prev, "realized k not monotone: p={p} gave {m} < {prev}");
+        assert!(m >= KeyBudget::MASS_FLOOR_KEYS, "floor violated at p={p}");
+        assert!(m <= n);
+        prev = m;
+    }
+    assert_eq!(KeyBudget::Mass(1.0).resolve(&scores), n, "p=1 is the identity");
+    // A peaked distribution resolves to far fewer keys than a flat one at
+    // the same target — the whole point of a mass budget.
+    let mut peaked = vec![0.0f32; n];
+    peaked[0] = 1000.0;
+    peaked[1] = 900.0;
+    assert_eq!(
+        KeyBudget::Mass(0.9).resolve(&peaked),
+        KeyBudget::MASS_FLOOR_KEYS,
+        "peaked scores clamp up to the floor only"
+    );
+    // Degenerate flat distribution: every key carries equal mass, so the
+    // resolved count is the flat-prior ceil(p·n) — matching plan_keys.
+    let flat = vec![2.5f32; n];
+    for &p in &[0.25f32, 0.5, 0.9] {
+        assert_eq!(
+            KeyBudget::Mass(p).resolve(&flat),
+            KeyBudget::Mass(p).plan_keys(n),
+            "flat scores must resolve to the plan estimate at p={p}"
+        );
+    }
+    // The cap binds on huge flat contexts.
+    let huge = vec![1.0f32; KeyBudget::MASS_CAP_KEYS * 2];
+    assert_eq!(KeyBudget::Mass(0.99).resolve(&huge), KeyBudget::MASS_CAP_KEYS);
+}
+
+#[test]
+fn fixed_budget_boundary_at_k_eq_n() {
+    let mut rng = Rng::new(0xB0D6E8);
+    let k = Matrix::randn(32, 6, 1.0, &mut rng);
+    let sel_len = |budget: KeyBudget| {
+        prescore(&k, &PreScoreConfig { budget, seed: 3, ..Default::default() })
+            .selected
+            .len()
+    };
+    assert_eq!(sel_len(KeyBudget::Fixed(31)), 31, "k = n-1 restricts");
+    assert_eq!(sel_len(KeyBudget::Fixed(32)), 32, "k = n is the identity");
+    assert_eq!(sel_len(KeyBudget::Fixed(33)), 32, "k = n+1 clamps to n");
+    assert_eq!(sel_len(KeyBudget::Fixed(0)), 32, "k = 0 is the identity");
+    // The k ≥ n identities are the *identity selection*, not merely n keys.
+    let id = prescore(&k, &PreScoreConfig { budget: KeyBudget::Fixed(32), ..Default::default() });
+    assert_eq!(id.selected, (0..32).collect::<Vec<_>>());
+    // plan_keys agrees with the realized count at every boundary.
+    for kk in [0usize, 31, 32, 33] {
+        assert_eq!(KeyBudget::Fixed(kk).plan_keys(32), sel_len(KeyBudget::Fixed(kk)), "k={kk}");
+    }
+}
+
+// ----------------------------------------------------------------- kernels
+
+/// `Mass(1.0)` and `Fixed(0)` are the same unrestricted reference point —
+/// bitwise, through the full forward of both kernel families and modes.
+#[test]
+fn mass_one_forward_bitwise_equals_unrestricted() {
+    let (q, k, v) = rand_qkv(48, 8, 0xA11);
+    let inp = AttentionInputs::new(&q, &k, &v).causal(true);
+    for (mass_spec, fixed_spec) in [
+        ("prescored:kmeans,mass=1,block=16,sample=4,pseed=5,seed=5",
+         "prescored:kmeans,top_k=0,block=16,sample=4,pseed=5,seed=5"),
+        ("prescored:kmeans,mass=1,mode=stream", "prescored:kmeans,top_k=0,mode=stream"),
+        ("restricted:l2norm,mass=1", "restricted:l2norm,top_k=0"),
+    ] {
+        let a = AttentionSpec::parse(mass_spec).unwrap().build();
+        let b = AttentionSpec::parse(fixed_spec).unwrap().build();
+        let fa = a.forward_salted(&inp, SALT);
+        let fb = b.forward_salted(&inp, SALT);
+        assert_eq!(fa.out.data, fb.out.data, "{mass_spec} != {fixed_spec}");
+        assert_eq!(fa.stats.retained_keys, fb.stats.retained_keys, "{mass_spec}");
+        assert_eq!(a.plan(48).retained_keys, 48, "{mass_spec} plan is the identity");
+    }
+}
+
+/// Mass-budget decode reproduces the last row of the full causal forward
+/// bitwise at every pool width — the decode-refresh re-resolution of the
+/// realized k goes through the same `KeyBudget::resolve` as the forward.
+/// (Mirrors `decode_equivalence.rs`; the mass matrix lives here.)
+fn check_decode_matches_forward(spec_str: &str, n0: usize, steps: usize, d: usize) {
+    let spec = AttentionSpec::parse(spec_str).expect("spec parses");
+    let backend = spec.build();
+    let n_total = n0 + steps;
+    let (q, k, v) = rand_qkv(n_total, d, 0xDB + n0 as u64);
+    let mut state = backend
+        .begin_decode(&q.slice_rows(0, n0), &k.slice_rows(0, n0), SALT)
+        .unwrap_or_else(|| panic!("{spec_str} must have a decode arm"));
+    state.set_refresh_every(1);
+    let mut kc = k.slice_rows(0, n0);
+    let mut vc = v.slice_rows(0, n0);
+    for t in n0..n_total {
+        kc.push_row(k.row(t));
+        vc.push_row(v.row(t));
+        let out = backend.decode_step(&mut state, q.row(t), &kc, &vc, None);
+        assert_eq!(out.stats.total_keys, t + 1, "{spec_str} step {t}");
+        assert!(out.stats.retained_keys <= t + 1, "{spec_str} step {t}");
+        let qf = q.slice_rows(0, t + 1);
+        let kf = k.slice_rows(0, t + 1);
+        let vf = v.slice_rows(0, t + 1);
+        let inp = AttentionInputs::new(&qf, &kf, &vf).causal(true);
+        let full = backend.forward_salted(&inp, SALT).out;
+        assert_eq!(full.row(t), out.row.as_slice(), "{spec_str} step {t} not bitwise");
+    }
+}
+
+const MASS_DECODE_SPECS: &[&str] = &[
+    "prescored:kmeans,mass=0.8,refresh=1,block=16,sample=4,pseed=5,seed=5",
+    "prescored:kmeans,mass=0.8,refresh=1,block=16,sample=4,pseed=5,seed=5,mode=stream",
+    "prescored:kmeans,mass=0.6,refresh=1,mode=stream",
+    "prescored:l2norm,mass=0.6,refresh=1",
+    "prescored:l2norm,mass=0.6,refresh=1,mode=stream",
+    "prescored:kmeans,mass=1,refresh=1", // identity budget
+    "restricted:l2norm,mass=0.7",
+];
+
+#[test]
+fn mass_decode_matches_forward_all_widths() {
+    for &t in &[1usize, 2, 4] {
+        with_threads(t, || {
+            for spec in MASS_DECODE_SPECS {
+                check_decode_matches_forward(spec, 48, 12, 8);
+            }
+        });
+    }
+}
+
+/// A warm `replay` off a shorter prefix resumes the mass-budget fold (and
+/// its refresh clock) identically to a cold full prefill — rows, stats,
+/// selections, realized k.
+#[test]
+fn mass_warm_replay_equals_cold_prefill() {
+    let specs = [
+        "prescored:kmeans,mass=0.8,refresh=2,block=8,pseed=3,seed=3,mode=stream",
+        "prescored:l2norm,mass=0.6,refresh=2,mode=stream",
+        "prescored:kmeans,mass=0.75,refresh=2,block=8,pseed=3,seed=3",
+    ];
+    let n0 = 40usize;
+    let n = 64usize;
+    let steps = 6usize;
+    let (q, k, v) = rand_qkv(n + steps, 8, 0x3A);
+    for spec_str in specs {
+        let backend = AttentionSpec::parse(spec_str).unwrap().build();
+        let mut cold = backend
+            .begin_decode(&q.slice_rows(0, n), &k.slice_rows(0, n), SALT)
+            .expect("decode arm");
+        let mut warm = backend
+            .begin_decode(&q.slice_rows(0, n0), &k.slice_rows(0, n0), SALT)
+            .expect("decode arm");
+        let _ = warm.replay(
+            &q.slice_rows(n0, n),
+            &k.slice_rows(0, n),
+            &v.slice_rows(0, n),
+            None,
+        );
+        assert_eq!(
+            cold.selection().map(|s| s.to_vec()),
+            warm.selection().map(|s| s.to_vec()),
+            "{spec_str}: post-replay realized selection differs from cold"
+        );
+        let mut kc = k.slice_rows(0, n);
+        let mut vc = v.slice_rows(0, n);
+        for (step, t) in (n..n + steps).enumerate() {
+            kc.push_row(k.row(t));
+            vc.push_row(v.row(t));
+            let a = backend.decode_step(&mut cold, q.row(t), &kc, &vc, None);
+            let b = backend.decode_step(&mut warm, q.row(t), &kc, &vc, None);
+            assert_eq!(a.row, b.row, "{spec_str} step {step}: warm fold drifted");
+            assert_eq!(a.stats, b.stats, "{spec_str} step {step}");
+            assert_eq!(
+                cold.selection().map(|s| s.to_vec()),
+                warm.selection().map(|s| s.to_vec()),
+                "{spec_str} step {step}"
+            );
+        }
+    }
+}
+
+// ----------------------------------------------------------------- serving
+
+/// Tiny enough that every transformer matmul stays below the parallel
+/// min-flops gate for contexts ≤ 64 — warm/cold comparisons are bitwise.
+fn gate_safe_model(seed: u64) -> Transformer {
+    let tcfg = TransformerConfig { vocab: 32, d_model: 16, n_layers: 2, n_heads: 2, max_seq: 64 };
+    Transformer::random(tcfg, seed)
+}
+
+fn tokens(seed: u64, n: usize, vocab: usize) -> Vec<u32> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.usize(vocab) as u32).collect()
+}
+
+fn cache_cfg(spec: &str, blocks: usize, persist: &str) -> ServingConfig {
+    ServingConfig {
+        artifacts_dir: "/nonexistent-artifacts".into(),
+        variant: "exact".into(),
+        max_seq: 64,
+        attention_spec: spec.into(),
+        prefix_cache_blocks: blocks,
+        prefix_min_tokens: 8,
+        prefix_persist_path: persist.into(),
+        ..Default::default()
+    }
+}
+
+fn gen_request(id: u64, toks: Vec<u32>, n_new: usize) -> Request {
+    let mut req = Request::scoring(id, toks);
+    req.generate = n_new;
+    req
+}
+
+const STREAM_MASS_SPEC: &str = "prescored:kmeans,mass=0.85,block=16,sample=4,mode=stream";
+
+/// A `mode=stream,mass=` spec is suffix-stable, so the prefix cache serves
+/// it partial warm hits — bitwise equal to the no-cache reference — and the
+/// response reports the realized (data-dependent) key budget.
+#[test]
+fn server_stream_mass_spec_gets_partial_warm_hits() {
+    let model = gate_safe_model(73);
+    let reference = gate_safe_model(73);
+    let spec = AttentionSpec::parse(STREAM_MASS_SPEC).unwrap();
+    assert!(spec.suffix_stable(), "stream mass specs must stay suffix-stable");
+    assert!(spec.prefix_cacheable());
+    let policy = AttnPolicy::parse(STREAM_MASS_SPEC).unwrap();
+    let prefix = tokens(74, 20, 32);
+    let mut extended = prefix.clone();
+    extended.extend_from_slice(&tokens(77, 12, 32));
+    let n_new = 5;
+
+    let server = ScoringServer::start_with_model(cache_cfg(STREAM_MASS_SPEC, 256, ""), model)
+        .expect("start");
+    let r1 = server.submit(gen_request(1, prefix.clone(), n_new)).recv().expect("response 1");
+    let r2 = server.submit(gen_request(2, extended.clone(), n_new)).recv().expect("response 2");
+    let stats = server.shutdown();
+
+    assert_eq!(r1.nll, reference.nll_policy(&prefix, &policy), "cold request nll");
+    assert_eq!(r2.nll, reference.nll_policy(&extended, &policy), "warm request nll");
+    assert_eq!(
+        r2.generated,
+        reference.generate_greedy(&extended, n_new, &policy).unwrap(),
+        "warm decode stream"
+    );
+    assert!(stats.prefix_hits >= 1, "extension must hit the cached prefix: {stats:?}");
+    assert!(
+        stats.prefix_hit_tokens >= prefix.len(),
+        "the cached prefix tokens were never re-prefilled: {stats:?}"
+    );
+    // Realized-budget reporting: per-request and aggregated, bounded by the
+    // terminal context length.
+    for (tag, r, len) in [("r1", &r1, prefix.len()), ("r2", &r2, extended.len())] {
+        assert!(r.realized_keys_mean > 0.0, "{tag}");
+        assert!(r.realized_keys_p50 >= 1 && r.realized_keys_p50 <= len + n_new, "{tag}");
+        assert!(r.realized_keys_p99 >= r.realized_keys_p50, "{tag}");
+    }
+    assert!(stats.realized_keys_mean > 0.0, "server-level realized budget aggregates");
+    assert!(stats.realized_keys_p99 as usize <= extended.len() + n_new);
+    assert!(!stats.rung_served.is_empty(), "rung occupancy counters populated");
+    assert_eq!(stats.rung_served.iter().sum::<usize>(), 2, "one rung observation per request");
+}
+
+/// Persist/load across a restart for a stream mass spec: the v6 artifact
+/// format round-trips the mass-budget running state (`score_min` /
+/// `score_total`), so the restored fold serves the repeat bitwise warm.
+#[test]
+fn server_persist_roundtrip_stream_mass_spec() {
+    let path = std::env::temp_dir().join(format!("budget_persist_{}.bin", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+    let toks = tokens(101, 24, 32);
+    let n_new = 4;
+    let cfg = cache_cfg(STREAM_MASS_SPEC, 256, path.to_str().unwrap());
+
+    let server1 =
+        ScoringServer::start_with_model(cfg.clone(), gate_safe_model(100)).expect("server 1");
+    let r1 = server1.submit(gen_request(1, toks.clone(), n_new)).recv().expect("r1");
+    let s1 = server1.shutdown();
+    assert!(path.exists(), "persist file written on shutdown");
+    assert!(s1.prefix_insertions >= 1);
+
+    let server2 =
+        ScoringServer::start_with_model(cfg.clone(), gate_safe_model(100)).expect("server 2");
+    let r2 = server2.submit(gen_request(2, toks.clone(), n_new)).recv().expect("r2");
+    let s2 = server2.shutdown();
+    assert_eq!(r1.nll, r2.nll, "restarted warm nll");
+    assert_eq!(r1.generated, r2.generated, "restarted warm stream");
+    assert_eq!(
+        (r1.realized_keys_mean, r1.realized_keys_p50, r1.realized_keys_p99),
+        (r2.realized_keys_mean, r2.realized_keys_p50, r2.realized_keys_p99),
+        "restored mass fold realizes the same budget"
+    );
+    assert!(s2.prefix_hits >= 1, "restored store must serve the hit: {s2:?}");
+    let _ = std::fs::remove_file(&path);
+}
+
+/// The serving config derives a mass budget from `[prescore] mass`, the
+/// decode engine re-resolves it per refresh, and a fixed-spec server still
+/// reports `realized_keys == top_k` once the context exceeds it — the
+/// reporting convention the dashboards key on.
+#[test]
+fn fixed_spec_realized_keys_match_top_k() {
+    let model = gate_safe_model(81);
+    let spec = "prescored:kmeans,top_k=12,block=16,sample=4";
+    let server =
+        ScoringServer::start_with_model(cache_cfg(spec, 0, ""), model).expect("start");
+    let toks = tokens(82, 26, 32);
+    let r = server.submit(gen_request(1, toks, 3)).recv().expect("response");
+    let stats = server.shutdown();
+    assert!(r.error.is_none(), "{:?}", r.error);
+    // Selection-cached decode extends by one per generated token: the
+    // realized count is top_k + generated, uniform across layer·heads.
+    assert_eq!(r.realized_keys_p50, 12 + 3);
+    assert_eq!(r.realized_keys_p99, 12 + 3);
+    assert!((r.realized_keys_mean - 15.0).abs() < 1e-9);
+    assert!(stats.realized_keys_mean > 0.0);
+}

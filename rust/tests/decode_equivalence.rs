@@ -95,6 +95,12 @@ const SERIAL_DECODE_SPECS: &[&str] = &[
     "prescored:kmeans,top_k=16,refresh=1,delta=0.9,mode=stream",
     "prescored:kmeans,top_k=0,refresh=1,mode=stream",
     "prescored:l2norm,top_k=20,refresh=1,mode=stream",
+    // Mass budgets: the realized k is re-resolved from the live score
+    // distribution at every refresh, so decode == forward pins that the
+    // refresh resolution matches the forward's (the full mass matrix,
+    // including warm replay, lives in tests/budget.rs).
+    "prescored:kmeans,mass=0.8,refresh=1,block=16,sample=4,pseed=5,seed=5",
+    "prescored:l2norm,mass=0.6,refresh=1,mode=stream",
     "restricted:balanced,clusters=4,samples=16,iters=3,seed=2",
     "restricted:l2norm,top_k=12",
 ];

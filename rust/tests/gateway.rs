@@ -576,6 +576,54 @@ fn stats_endpoint_tenant_counters_balance_with_globals() {
     assert_eq!(stats.prefix_pins_acquired, stats.prefix_pins_released);
 }
 
+/// `GET /v1/stats` carries the realized key-budget summary
+/// (`realized_keys_mean/p50/p99` — the observable half of a `mass=` budget)
+/// and the shed-ladder rung-occupancy counters (`shed_rungs[i]` = requests
+/// admitted at rung i, summing to the admitted-request count).
+#[test]
+fn stats_endpoint_reports_realized_budget_and_rung_occupancy() {
+    let _g = GUARD.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    let mut cfg = substrate_cfg();
+    cfg.attention_spec = "prescored:kmeans,mass=0.85,block=16,sample=4,mode=stream".into();
+    let gw = start_gateway(cfg, GatewayConfig::default(), 78);
+    let addr = gw.addr();
+
+    let n_req = 2usize;
+    let n_new = 4usize;
+    for seed in 0..n_req as u64 {
+        let tokens = corpus::generate(64, 20, 40 + seed);
+        let mut sse = SseClient::post_generate(addr, &body_json(&tokens, n_new), None);
+        let (status, _) = sse.read_headers();
+        assert_eq!(status, 200);
+        while sse.next_event().is_some() {}
+    }
+    wait_for(&gw, "completions", |s| s.completed == n_req);
+
+    let (status, _, body) = http_get(addr, "/v1/stats");
+    assert_eq!(status, 200);
+    let stats = Json::parse(&body).expect("stats JSON parses");
+    let num = |k: &str| stats.get(k).and_then(Json::as_f64).expect(k);
+    let mean = num("realized_keys_mean");
+    let p50 = num("realized_keys_p50");
+    let p99 = num("realized_keys_p99");
+    assert!(mean > 0.0, "realized budget observed over the wire: {body}");
+    assert!(p50 >= 1.0 && p50 <= (20 + n_new) as f64, "p50 bounded by context: {p50}");
+    assert!(p99 >= p50, "percentiles ordered: p50={p50} p99={p99}");
+    let rungs = stats.get("shed_rungs").and_then(Json::as_array).expect("shed_rungs array");
+    assert!(!rungs.is_empty(), "rung occupancy present: {body}");
+    let served: usize =
+        rungs.iter().map(|r| r.as_usize().expect("rung counter")).sum();
+    assert_eq!(served, n_req, "every admitted request lands on exactly one rung");
+    assert_eq!(
+        rungs[0].as_usize(),
+        Some(n_req),
+        "an unloaded gateway serves everything at rung 0"
+    );
+
+    let stats = gw.shutdown();
+    assert_eq!(stats.kv_pages_acquired, stats.kv_pages_released);
+}
+
 /// `GET /healthz` is liveness (always 200); `GET /readyz` is readiness —
 /// 200 with headroom while serving, 503 + `Retry-After` while draining.
 #[test]

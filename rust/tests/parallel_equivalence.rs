@@ -9,12 +9,14 @@
 
 use prescored::attention::exact::{exact_attention, flash_attention};
 use prescored::attention::polynomial::{key_max_weights, polynomial_attention_matrix};
-use prescored::attention::{prescored_hyper_attention, AttentionInputs, PreScoredConfig};
+use prescored::attention::{
+    prescored_hyper_attention, AttentionInputs, AttentionSpec, PreScoredConfig,
+};
 use prescored::clustering::kmeans;
 use prescored::linalg::ops::{matmul, matmul_nt};
 use prescored::linalg::Matrix;
 use prescored::parallel::with_threads;
-use prescored::prescore::PreScoreConfig;
+use prescored::prescore::{KeyBudget, PreScoreConfig};
 use prescored::util::proptest_lite::{run_property_noshrink, Config};
 use prescored::util::rng::Rng;
 
@@ -173,6 +175,41 @@ fn parallel_kmeans_assignment_bitwise_equals_serial() {
     );
 }
 
+/// Two-pass stream-mode prefill: the serial fold pass (order-dependent LSH
+/// ranks + centroid folds) records per-row selection/rank snapshots, and the
+/// attend pass shards rows across the pool against those frozen snapshots —
+/// so the forward is bit-identical at every width, for both budget forms,
+/// including δ-fallback rows (snapshot `None` → unfiltered row).
+#[test]
+fn stream_prescored_prefill_bitwise_equals_serial() {
+    let specs = [
+        "prescored:kmeans,top_k=24,block=16,sample=4,pseed=5,seed=5,mode=stream",
+        "prescored:kmeans,mass=0.8,block=16,sample=4,pseed=5,seed=5,mode=stream",
+        "prescored:l2norm,top_k=20,mode=stream",
+        "prescored:l2norm,mass=0.6,mode=stream",
+        "prescored:kmeans,top_k=16,delta=0.9,mode=stream", // δ-fallback rows
+    ];
+    let mut rng = Rng::new(0x57AB);
+    for &(n, d) in &[(96usize, 8usize), (200, 12)] {
+        let q = Matrix::randn(n, d, 1.0, &mut rng);
+        let k = Matrix::randn(n, d, 1.0, &mut rng);
+        let v = Matrix::randn(n, d, 1.0, &mut rng);
+        let inp = AttentionInputs::new(&q, &k, &v).causal(true);
+        for spec_str in specs {
+            let backend = AttentionSpec::parse(spec_str).unwrap().build();
+            let base = with_threads(1, || backend.forward_salted(&inp, 5));
+            for &t in &THREAD_COUNTS[1..] {
+                let par = with_threads(t, || backend.forward_salted(&inp, 5));
+                assert_eq!(
+                    base.out.data, par.out.data,
+                    "{spec_str} n={n}: stream prefill not bitwise at threads={t}"
+                );
+                assert_eq!(base.stats, par.stats, "{spec_str} n={n} threads={t}");
+            }
+        }
+    }
+}
+
 #[test]
 fn parallel_prescored_pipeline_bitwise_equals_serial() {
     run_property_noshrink(
@@ -186,7 +223,11 @@ fn parallel_prescored_pipeline_bitwise_equals_serial() {
             let v = Matrix::randn(n, d, 1.0, &mut rng);
             let inp = AttentionInputs::new(&q, &k, &v).causal(causal);
             let cfg = PreScoredConfig {
-                prescore: PreScoreConfig { top_k: n / 2, seed: seed ^ 0x51, ..Default::default() },
+                prescore: PreScoreConfig {
+                    budget: KeyBudget::Fixed(n / 2),
+                    seed: seed ^ 0x51,
+                    ..Default::default()
+                },
                 ..Default::default()
             };
             let base = with_threads(1, || prescored_hyper_attention(&inp, &cfg));
